@@ -1,0 +1,40 @@
+//! Bench behind Figure 3: dense FA-2 analogue vs original MoBA vs
+//! FlashMoBA forward latency across sequence lengths (B=128, k=8, d=64 —
+//! the paper's efficiency configuration).
+//!
+//! `cargo bench --bench fig3_latency` — the full sweep with memory
+//! accounting and backward timings lives in `flash-moba bench fig3`.
+
+use flash_moba::attention::dense::flash_attention;
+use flash_moba::attention::flash_moba::{flash_moba_forward, FlashMobaConfig};
+use flash_moba::attention::moba_naive::moba_naive_forward;
+use flash_moba::attention::testutil::qkv;
+use flash_moba::attention::MobaShape;
+use flash_moba::util::bench::Bench;
+
+fn main() {
+    let d = 64;
+    let (block, topk) = (128, 8);
+    let mut b = Bench::new().samples(5);
+    for n in [2048usize, 4096, 8192] {
+        let shape = MobaShape::new(n, d, block, topk);
+        let (q, k, v) = qkv(n as u64, n, d);
+
+        b.bench(&format!("fig3/dense_fa2/n{n}"), || {
+            flash_attention(&q, &k, &v, n, d, 64, 64);
+        });
+        if n <= 4096 {
+            b.bench(&format!("fig3/moba_original/n{n}"), || {
+                moba_naive_forward(&q, &k, &v, shape);
+            });
+        }
+        b.bench(&format!("fig3/flash_moba/n{n}"), || {
+            flash_moba_forward(&q, &k, &v, shape, FlashMobaConfig::default());
+        });
+    }
+    for n in [4096usize, 8192] {
+        if let Some(r) = b.ratio(&format!("fig3/dense_fa2/n{n}"), &format!("fig3/flash_moba/n{n}")) {
+            println!("speedup flash_moba vs dense @ n={n}: {r:.2}x");
+        }
+    }
+}

@@ -1,0 +1,47 @@
+//! Bench behind Figure 4: per-stage cost of the original MoBA pipeline
+//! vs FlashMoBA's fused stages (N fixed, B=128, k=8).
+
+use flash_moba::attention::centroid::centroids;
+use flash_moba::attention::flash_moba::{flash_moba_forward, FlashMobaConfig};
+use flash_moba::attention::moba_naive::moba_naive_forward;
+use flash_moba::attention::testutil::qkv;
+use flash_moba::attention::topk::{naive_topk, tiled_topk};
+use flash_moba::attention::varlen::build_varlen;
+use flash_moba::attention::MobaShape;
+use flash_moba::util::bench::Bench;
+
+fn main() {
+    let (n, d, block, topk) = (8192usize, 64usize, 128usize, 8usize);
+    let shape = MobaShape::new(n, d, block, topk);
+    let (q, k, v) = qkv(99, n, d);
+    let cents = centroids(&k, n, d, block);
+
+    let mut b = Bench::new().samples(5);
+
+    // original pipeline stages
+    b.bench("fig4/orig/gating_full_matrix", || {
+        naive_topk(&q, &cents, n, d, block, topk);
+    });
+    let (idx, _) = naive_topk(&q, &cents, n, d, block, topk);
+    b.bench("fig4/orig/reindex", || {
+        build_varlen(&idx, n, topk, shape.n_blocks());
+    });
+    b.bench("fig4/orig/full_pipeline", || {
+        moba_naive_forward(&q, &k, &v, shape);
+    });
+
+    // flash pipeline stages
+    b.bench("fig4/flash/tiled_topk", || {
+        tiled_topk(&q, &cents, n, d, block, topk, 64);
+    });
+    b.bench("fig4/flash/full_pipeline", || {
+        flash_moba_forward(&q, &k, &v, shape, FlashMobaConfig::default());
+    });
+
+    if let Some(r) = b.ratio("fig4/orig/full_pipeline", "fig4/flash/full_pipeline") {
+        println!("FlashMoBA end-to-end speedup vs original MoBA: {r:.2}x");
+    }
+    if let Some(r) = b.ratio("fig4/orig/gating_full_matrix", "fig4/flash/tiled_topk") {
+        println!("Flash TopK speedup vs materializing gating: {r:.2}x");
+    }
+}

@@ -1,0 +1,37 @@
+//! PJRT request-path bench: latency of executing the AOT attention
+//! artifacts (the serving hot path) — dense vs MoBA Pallas kernels.
+//!
+//! Requires `make artifacts` to have run; skips gracefully otherwise so
+//! `cargo bench` stays green on a fresh checkout.
+
+use flash_moba::attention::testutil::Rng;
+use flash_moba::runtime::{Runtime, Tensor};
+use flash_moba::util::bench::Bench;
+
+fn main() {
+    let dir = std::env::var("FLASH_MOBA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let rt = match Runtime::load(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping runtime_exec bench (no artifacts): {e}");
+            return;
+        }
+    };
+    let mut b = Bench::new().samples(5);
+    for name in ["attn_moba_n1024", "attn_dense_n1024", "attn_moba_n2048"] {
+        let exe = match rt.get(name) {
+            Ok(e) => e,
+            Err(_) => continue,
+        };
+        let spec = exe.spec().clone();
+        let mut rng = Rng::new(3);
+        let inputs: Vec<Tensor> = spec
+            .inputs
+            .iter()
+            .map(|s| Tensor::f32(rng.normal_vec(s.numel()), &s.shape).unwrap())
+            .collect();
+        b.bench(&format!("runtime/{name}"), || {
+            exe.run(&inputs).unwrap();
+        });
+    }
+}

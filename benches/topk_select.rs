@@ -1,0 +1,29 @@
+//! Top-k selection microbench: materializing (original) vs streaming
+//! tiled (Flash TopK) across block counts — the §4.1 "top-k and gating
+//! overhead" claim in isolation.
+
+use flash_moba::attention::centroid::centroids;
+use flash_moba::attention::testutil::qkv;
+use flash_moba::attention::topk::{naive_topk, tiled_topk};
+use flash_moba::util::bench::Bench;
+
+fn main() {
+    let d = 64;
+    let mut bench = Bench::new().samples(5);
+    for (n, block, k) in [(4096usize, 128usize, 8usize), (8192, 128, 8), (8192, 64, 8)] {
+        let (q, kk, _) = qkv(7 + n as u64, n, d);
+        let cents = centroids(&kk, n, d, block);
+        bench.bench(&format!("topk/naive_full_matrix/n{n}_b{block}"), || {
+            naive_topk(&q, &cents, n, d, block, k);
+        });
+        bench.bench(&format!("topk/flash_tiled/n{n}_b{block}"), || {
+            tiled_topk(&q, &cents, n, d, block, k, 64);
+        });
+        if let Some(r) = bench.ratio(
+            &format!("topk/naive_full_matrix/n{n}_b{block}"),
+            &format!("topk/flash_tiled/n{n}_b{block}"),
+        ) {
+            println!("tiled topk speedup @ n={n} B={block}: {r:.2}x");
+        }
+    }
+}

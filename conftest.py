@@ -1,0 +1,7 @@
+"""Repo-root pytest config: make `pytest python/tests/` work from the
+repository root by putting the python/ package dir on sys.path."""
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).parent / "python"))

@@ -1,0 +1,64 @@
+//! Needle-in-a-haystack sweep (paper Table 3's workload) over block
+//! sizes and context lengths using a trained checkpoint, plus the SNR
+//! model's prediction for the same sweep — theory and measurement side
+//! by side.
+//!
+//! ```sh
+//! cargo run --release --example niah_sweep -- [ckpt.bin] [variant]
+//! ```
+//! Without a checkpoint it uses init params (near-chance accuracy, but
+//! the predicted column still shows the paper's shape).
+
+use flash_moba::data::corpus::{Corpus, CorpusConfig};
+use flash_moba::data::niah::NiahVariant;
+use flash_moba::eval::Evaluator;
+use flash_moba::runtime::Runtime;
+use flash_moba::snr::{simulate_retrieval, McConfig};
+use flash_moba::train::Trainer;
+
+fn main() -> flash_moba::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let ckpt = args.get(1).cloned();
+    let variant = args.get(2).cloned().unwrap_or_else(|| "tiny-moba32".to_string());
+
+    let dir = std::env::var("FLASH_MOBA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let rt = Runtime::load(&dir)?;
+    let spec = rt.manifest().variant(&variant)?.clone();
+    let params = match &ckpt {
+        Some(p) => Trainer::load_checkpoint(&rt, &variant, std::path::Path::new(p))?,
+        None => {
+            println!("(no checkpoint given — evaluating untrained params)");
+            rt.load_init_params(&variant)?
+        }
+    };
+    let _corpus = Corpus::new(CorpusConfig { vocab: spec.vocab_size, ..Default::default() });
+    let mut ev = Evaluator::new(&rt, &variant, params)?;
+
+    println!(
+        "{:<10} {:>6} {:>10} {:>12}",
+        "task", "ctx", "measured%", "SNR-pred%"
+    );
+    for task in NiahVariant::all() {
+        for &len in &spec.eval_seqs.clone() {
+            let acc = ev.niah_accuracy(task, len, 25)?;
+            // SNR-model prediction for a trained router at this geometry
+            let mc = simulate_retrieval(McConfig {
+                d: spec.head_dim,
+                block: spec.moba_block,
+                n_blocks: (len / spec.moba_block).max(2),
+                topk: spec.moba_topk,
+                delta_mu: 1.4, // calibrated post-training separation
+                trials: 2000,
+                ..Default::default()
+            });
+            println!(
+                "{:<10} {:>6} {:>9.0}% {:>11.0}%",
+                task.label(),
+                len,
+                acc,
+                100.0 * mc.success_rate
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,8 @@
+fn main() {
+    for f in ["artifacts/attn_dense_n1024.hlo.txt", "artifacts/attn_moba_n1024.hlo.txt"] {
+        match xla::HloModuleProto::from_text_file(f) {
+            Ok(_) => println!("{f}: OK"),
+            Err(e) => println!("{f}: ERR {e}"),
+        }
+    }
+}

@@ -1,0 +1,70 @@
+//! SNR model explorer: interactively sweep the paper's Eq. 3 — how block
+//! size, head dim, clustering (kconv's mechanism) and context length
+//! move retrieval accuracy, with closed-form and Monte-Carlo side by
+//! side.
+//!
+//! ```sh
+//! cargo run --release --example snr_explorer -- [delta_mu] [d]
+//! ```
+
+use flash_moba::snr::{simulate_retrieval, theory, McConfig};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let delta_mu: f64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(1.0);
+    let d: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(64);
+
+    println!("== SNR = Δμ_eff · √(d/2B)   (Δμ={delta_mu}, d={d}) ==\n");
+    println!("{:>5} {:>8} {:>12} {:>14} {:>14}", "B", "SNR", "p_fail", "top8/64 (th)", "top8/64 (MC)");
+    for b in [32usize, 64, 128, 256, 512, 1024] {
+        let snr = theory::snr(delta_mu, d, b);
+        let mc = simulate_retrieval(McConfig {
+            d,
+            block: b,
+            delta_mu,
+            n_blocks: 64,
+            topk: 8,
+            trials: 3000,
+            ..Default::default()
+        });
+        println!(
+            "{b:>5} {snr:>8.3} {:>12.5} {:>13.1}% {:>13.1}%",
+            theory::p_fail(snr),
+            100.0 * theory::topk_success_prob(snr, 64, 8),
+            100.0 * mc.success_rate,
+        );
+    }
+
+    println!("\n== clustering multiplier (B=128, k=8, Δμ={delta_mu}) ==\n");
+    println!("{:>3} {:>10} {:>8} {:>12}", "m", "μ_cluster", "SNR", "top-k (MC)");
+    for (m, gain) in [(1usize, 0.0f64), (2, 0.25), (4, 0.25), (8, 0.25)] {
+        let dmu_eff = theory::delta_mu_eff(delta_mu, m, gain, 0.0);
+        let mc = simulate_retrieval(McConfig {
+            d,
+            block: 128,
+            delta_mu,
+            m,
+            cluster_gain: gain,
+            n_blocks: 64,
+            topk: 8,
+            trials: 3000,
+            ..Default::default()
+        });
+        println!(
+            "{m:>3} {gain:>10.2} {:>8.3} {:>11.1}%",
+            theory::snr(dmu_eff, d, 128),
+            100.0 * mc.success_rate
+        );
+    }
+
+    println!("\n== reliability criterion: need SNR > Φ⁻¹(1 − k/n) ==\n");
+    for (n_tokens, b, k) in [(8192usize, 512usize, 2usize), (8192, 128, 8), (65536, 128, 8)] {
+        let n_blocks = n_tokens / b;
+        let need = theory::normal_icdf(1.0 - (k as f64 / n_blocks as f64).min(0.5));
+        println!(
+            "N={n_tokens:>6} B={b:>4} k={k}: n={n_blocks:>4} blocks, required SNR ≈ {need:.2} \
+             → required Δμ_eff ≈ {:.2}",
+            need / (d as f64 / (2.0 * b as f64)).sqrt()
+        );
+    }
+}

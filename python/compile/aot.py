@@ -1,0 +1,293 @@
+"""AOT pipeline: lower every model variant / kernel graph to HLO *text*
+artifacts + a manifest the rust runtime consumes.
+
+Why HLO text, not `lowered.compile()` / proto `.serialize()`: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension
+0.5.1 (what the published `xla` 0.1.6 crate links) rejects
+(`proto.id() <= INT_MAX`). The HLO *text* parser reassigns ids, so text
+round-trips cleanly. See /opt/xla-example/README.md.
+
+Outputs (under artifacts/):
+  <name>.hlo.txt          one per lowered graph
+  <variant>_init.bin      f32 little-endian concatenated initial params
+  manifest.json           every artifact's I/O signature + variant configs
+
+Run via `make artifacts` (no-op when inputs are unchanged) or
+`python -m compile.aot --out-dir ../artifacts [--fast]`.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .kernels import ref
+from .kernels.moba import moba_attention_full
+from .layers import ModelConfig
+from .model import forward, init_params, param_count
+from .train import train_step
+
+# --------------------------------------------------------------- variants
+# Scaled §5.1 families. Paper trains at N=8192 with B in {512,256,128} and
+# k in {2,4,8} (constant sparsity); the CPU testbed trains at N=1024 with
+# B in {128,64,32} — same candidate-block counts n=N/B in {8,16,32} and the
+# same k ladder, so the d/B ratio sweep is preserved (d=64 exactly).
+TINY = dict(vocab_size=512, d_model=128, n_layers=4, n_heads=2, n_kv_heads=2,
+            ffn_dim=384, seq_len=1024, window=128)
+SMALL = dict(vocab_size=1024, d_model=256, n_layers=6, n_heads=4, n_kv_heads=4,
+             ffn_dim=768, seq_len=1024, window=128)
+E2E = dict(vocab_size=4096, d_model=384, n_layers=8, n_heads=6, n_kv_heads=6,
+           ffn_dim=1024, seq_len=512, window=128)
+
+
+def make_variants() -> dict[str, ModelConfig]:
+    v: dict[str, ModelConfig] = {}
+    # tiny scale == paper's 340M table rows
+    v["tiny-dense"] = ModelConfig(name="tiny-dense", attn="dense", **TINY)
+    v["tiny-moba128"] = ModelConfig(name="tiny-moba128", attn="moba", moba_block=128, moba_topk=2, **TINY)
+    v["tiny-moba64"] = ModelConfig(name="tiny-moba64", attn="moba", moba_block=64, moba_topk=4, **TINY)
+    v["tiny-moba32"] = ModelConfig(name="tiny-moba32", attn="moba", moba_block=32, moba_topk=8, **TINY)
+    v["tiny-moba32-kconv3"] = ModelConfig(name="tiny-moba32-kconv3", attn="moba", moba_block=32, moba_topk=8, kconv=3, **TINY)
+    v["tiny-moba32-kconv5"] = ModelConfig(name="tiny-moba32-kconv5", attn="moba", moba_block=32, moba_topk=8, kconv=5, **TINY)
+    # small scale == paper's 1B table rows
+    v["small-dense"] = ModelConfig(name="small-dense", attn="dense", **SMALL)
+    v["small-moba32"] = ModelConfig(name="small-moba32", attn="moba", moba_block=32, moba_topk=8, **SMALL)
+    v["small-moba32-kconv3"] = ModelConfig(name="small-moba32-kconv3", attn="moba", moba_block=32, moba_topk=8, kconv=3, **SMALL)
+    v["small-moba32-kconv5"] = ModelConfig(name="small-moba32-kconv5", attn="moba", moba_block=32, moba_topk=8, kconv=5, **SMALL)
+    # e2e showcase (examples/train_tiny.rs) — MoBA + kconv3, ~17M params
+    v["e2e-moba64-kconv3"] = ModelConfig(name="e2e-moba64-kconv3", attn="moba", moba_block=64, moba_topk=4, kconv=3, **E2E)
+    for cfg in v.values():
+        cfg.validate()
+    return v
+
+
+TRAIN_BATCH = {"tiny": 4, "small": 2, "e2e": 2}
+EVAL_SEQS = {"tiny": [1024, 2048, 4096], "small": [1024, 2048], "e2e": [512]}
+
+
+def scale_of(name: str) -> str:
+    return name.split("-", 1)[0]
+
+
+# --------------------------------------------------------------- lowering
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sig(args) -> list[dict]:
+    return [
+        {"name": name, "shape": list(a.shape), "dtype": str(np.dtype(a.dtype))}
+        for name, a in args
+    ]
+
+
+class Emitter:
+    def __init__(self, out_dir: Path):
+        self.out_dir = out_dir
+        self.manifest: dict = {"version": 1, "variants": {}, "artifacts": {}}
+        out_dir.mkdir(parents=True, exist_ok=True)
+
+    def emit(self, name: str, fn, in_named, out_named):
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*[a for _, a in in_named])
+        text = to_hlo_text(lowered)
+        path = self.out_dir / f"{name}.hlo.txt"
+        path.write_text(text)
+        self.manifest["artifacts"][name] = {
+            "file": path.name,
+            "inputs": _sig(in_named),
+            "outputs": _sig(out_named),
+        }
+        print(f"  [{time.time()-t0:6.1f}s] {name}: {len(text)/1e6:.2f} MB", flush=True)
+
+    def save_manifest(self):
+        (self.out_dir / "manifest.json").write_text(json.dumps(self.manifest, indent=1))
+
+
+def flatten_named(params):
+    flat, treedef = jax.tree_util.tree_flatten(params)
+    paths = jax.tree_util.tree_flatten_with_path(params)[0]
+    names = []
+    for path, _ in paths:
+        parts = []
+        for p in path:
+            if isinstance(p, jax.tree_util.DictKey):
+                parts.append(str(p.key))
+            elif isinstance(p, jax.tree_util.SequenceKey):
+                parts.append(str(p.idx))
+            else:
+                parts.append(str(p))
+        names.append(".".join(parts))
+    return flat, treedef, names
+
+
+def write_init_bin(path: Path, flat) -> None:
+    with open(path, "wb") as f:
+        for leaf in flat:
+            f.write(np.asarray(leaf, dtype=np.float32).tobytes())
+
+
+# --------------------------------------------------------------- per-variant
+def emit_variant(em: Emitter, cfg: ModelConfig, fast: bool):
+    scale = scale_of(cfg.name)
+    key = jax.random.PRNGKey(abs(hash(cfg.name)) % 2**31)
+    params = init_params(cfg, key)
+    flat, treedef, names = flatten_named(params)
+
+    init_path = em.out_dir / f"{cfg.name}_init.bin"
+    write_init_bin(init_path, flat)
+
+    eval_seqs = [s for s in EVAL_SEQS[scale] if not (fast and s > cfg.seq_len)]
+    em.manifest["variants"][cfg.name] = {
+        **dataclasses.asdict(cfg),
+        "param_count": param_count(params),
+        "params": [{"name": n, "shape": list(l.shape)} for n, l in zip(names, flat)],
+        "init_file": init_path.name,
+        "train_batch": TRAIN_BATCH[scale],
+        "eval_seqs": eval_seqs,
+        "train_step": f"{cfg.name}_train_step",
+        "fwd": {str(s): f"{cfg.name}_fwd_n{s}" for s in eval_seqs},
+    }
+
+    spec = lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype)
+    batch = TRAIN_BATCH[scale]
+    tok = jax.ShapeDtypeStruct((batch, cfg.seq_len), jnp.int32)
+    scalar = jax.ShapeDtypeStruct((), jnp.float32)
+
+    # ---- train step: (tokens, targets, lr, step, *p, *m, *v) -> (loss, *p', *m', *v')
+    def ts(tokens, targets, lr, step, *rest):
+        np_ = len(flat)
+        p = jax.tree_util.tree_unflatten(treedef, rest[:np_])
+        m = jax.tree_util.tree_unflatten(treedef, rest[np_ : 2 * np_])
+        v = jax.tree_util.tree_unflatten(treedef, rest[2 * np_ :])
+        loss, p2, m2, v2 = train_step(cfg, p, m, v, tokens, targets, lr, step)
+        return (
+            loss,
+            *jax.tree_util.tree_leaves(p2),
+            *jax.tree_util.tree_leaves(m2),
+            *jax.tree_util.tree_leaves(v2),
+        )
+
+    pmv = lambda tag: [(f"{tag}.{n_}", spec(l)) for n_, l in zip(names, flat)]
+    em.emit(
+        f"{cfg.name}_train_step",
+        ts,
+        [("tokens", tok), ("targets", tok), ("lr", scalar), ("step", scalar)]
+        + pmv("p") + pmv("m") + pmv("v"),
+        [("loss", scalar)] + pmv("p") + pmv("m") + pmv("v"),
+    )
+
+    # ---- eval forwards at each eval context length (batch 1)
+    for s in eval_seqs:
+        ecfg = dataclasses.replace(cfg, seq_len=s)
+        etok = jax.ShapeDtypeStruct((1, s), jnp.int32)
+
+        def fwd_fn(tokens, *flat_p, _cfg=ecfg):
+            p = jax.tree_util.tree_unflatten(treedef, flat_p)
+            return (forward(_cfg, p, tokens),)
+
+        em.emit(
+            f"{cfg.name}_fwd_n{s}",
+            fwd_fn,
+            [("tokens", etok)] + pmv("p"),
+            [("logits", jax.ShapeDtypeStruct((1, s, cfg.vocab_size), jnp.float32))],
+        )
+
+
+# --------------------------------------------------------------- kernels
+def emit_attention_artifacts(em: Emitter, fast: bool):
+    """Standalone multi-head attention graphs for the serving path.
+
+    The MoBA ones embed the *Pallas* kernels (interpret=True lowering),
+    proving the L1 -> L2 -> HLO -> rust-PJRT composition end to end.
+    """
+    h, d = 4, 64
+    seqs = (1024, 2048) if fast else (1024, 2048, 4096)
+    for n in seqs:
+        spec = jax.ShapeDtypeStruct((h, n, d), jnp.float32)
+        sig = [("q", spec), ("k", spec), ("v", spec)]
+
+        def moba_fn(q, k, v):
+            f = lambda q_, k_, v_: moba_attention_full(q_, k_, v_, 128, 8, tile_q=128)
+            return (jax.vmap(f)(q, k, v),)
+
+        em.emit(f"attn_moba_n{n}", moba_fn, sig, [("o", spec)])
+
+        def dense_fn(q, k, v):
+            f = lambda q_, k_, v_: ref.dense_attention_ref(q_, k_, v_)
+            return (jax.vmap(f)(q, k, v),)
+
+        em.emit(f"attn_dense_n{n}", dense_fn, sig, [("o", spec)])
+
+
+def emit_pallas_proof(em: Emitter):
+    """A full model fwd with use_pallas=True — the kernel-in-model proof."""
+    base = {k: v for k, v in TINY.items() if k != "seq_len"}
+    cfg = ModelConfig(name="proof", attn="moba", moba_block=64, moba_topk=2,
+                      use_pallas=True, kconv=3, seq_len=512, **base).validate()
+    params = init_params(cfg, jax.random.PRNGKey(7))
+    flat, treedef, names = flatten_named(params)
+    init_path = em.out_dir / "proof_init.bin"
+    write_init_bin(init_path, flat)
+    em.manifest["variants"]["proof"] = {
+        **dataclasses.asdict(cfg),
+        "param_count": param_count(params),
+        "params": [{"name": n, "shape": list(l.shape)} for n, l in zip(names, flat)],
+        "init_file": init_path.name,
+        "train_batch": 1,
+        "eval_seqs": [512],
+        "train_step": None,
+        "fwd": {"512": "proof_fwd_n512"},
+    }
+    spec = lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype)
+
+    def fwd_fn(tokens, *flat_p):
+        p = jax.tree_util.tree_unflatten(treedef, flat_p)
+        return (forward(cfg, p, tokens),)
+
+    em.emit(
+        "proof_fwd_n512",
+        fwd_fn,
+        [("tokens", jax.ShapeDtypeStruct((1, 512), jnp.int32))]
+        + [(f"p.{n_}", spec(l)) for n_, l in zip(names, flat)],
+        [("logits", jax.ShapeDtypeStruct((1, 512, cfg.vocab_size), jnp.float32))],
+    )
+
+
+# --------------------------------------------------------------- main
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma list of variant names")
+    ap.add_argument("--fast", action="store_true", help="skip long-context fwds")
+    args = ap.parse_args()
+
+    em = Emitter(Path(args.out_dir))
+    variants = make_variants()
+    if args.only:
+        keep = set(args.only.split(","))
+        variants = {k: v for k, v in variants.items() if k in keep}
+
+    print(f"emitting {len(variants)} variants -> {em.out_dir}", flush=True)
+    for cfg in variants.values():
+        emit_variant(em, cfg, fast=args.fast)
+    emit_attention_artifacts(em, fast=args.fast)
+    emit_pallas_proof(em)
+    em.save_manifest()
+    print(f"manifest: {len(em.manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

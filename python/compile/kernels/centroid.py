@@ -1,0 +1,38 @@
+"""Fused key-block centroid computation (paper Algorithm 2).
+
+One grid step per key block: the (B, d) block is staged HBM->VMEM by the
+BlockSpec and mean-pooled on chip, emitting a single (1, d) centroid row.
+The output matrix K~ is B x smaller than K, which is what makes the
+subsequent Flash TopK pass cheap (§4.2).
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the CUDA version is a
+Triton reduction kernel; here the HBM->VMEM schedule is expressed with a
+BlockSpec and the reduction runs on the VPU. `interpret=True` because the
+CPU PJRT plugin cannot execute Mosaic custom-calls.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _centroid_kernel(k_ref, out_ref):
+    out_ref[...] = jnp.mean(k_ref[...], axis=0, keepdims=True)
+
+
+def centroid(k: jax.Array, block_size: int) -> jax.Array:
+    """Mean-pool keys per block: (N, d) -> (N // block_size, d)."""
+    n, d = k.shape
+    if n % block_size != 0:
+        raise ValueError(f"N={n} must be divisible by block size {block_size}")
+    n_blocks = n // block_size
+    return pl.pallas_call(
+        _centroid_kernel,
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec((block_size, d), lambda j: (j, 0))],
+        out_specs=pl.BlockSpec((1, d), lambda j: (j, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_blocks, d), k.dtype),
+        interpret=True,
+    )(k)

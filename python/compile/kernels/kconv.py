@@ -1,0 +1,56 @@
+"""Depthwise causal key convolution kernel (paper Appendix B).
+
+k'_t = k_t + SiLU( sum_{l=0}^{W-1} W_l (.) k_{t-l} )
+
+Depthwise (per-channel) taps, causal left padding, SiLU, residual — the
+clustering-inducing transform applied to keys before centroid routing.
+
+TPU mapping: the sequence is processed in tiles; each grid step loads its
+tile plus a (W-1)-row halo from a zero-padded copy of K staged in VMEM,
+so the conv needs no cross-step state. W is 3 or 5 — tiny compared to the
+tile, so the halo overhead is negligible.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kconv_kernel(kp_ref, w_ref, o_ref, *, width: int, tile: int):
+    i = pl.program_id(0)
+    # kp_ref holds K zero-padded with (width-1) leading rows; the tile's
+    # row t corresponds to padded row i*tile + t + (width-1).
+    base = i * tile + (width - 1)
+    acc = None
+    for lag in range(width):  # static unroll: W is 3 or 5
+        blk = kp_ref[pl.dslice(base - lag, tile), :]
+        term = w_ref[lag, :][None, :] * blk
+        acc = term if acc is None else acc + term
+    orig = kp_ref[pl.dslice(base, tile), :]
+    o_ref[...] = orig + jax.nn.silu(acc)
+
+
+def kconv(k: jax.Array, w: jax.Array, tile: int = 256) -> jax.Array:
+    """Apply the depthwise causal conv. k: (N, d); w: (W, d) -> (N, d)."""
+    n, d = k.shape
+    width = w.shape[0]
+    tile = min(tile, n)
+    if n % tile != 0:
+        raise ValueError(f"N={n} must be divisible by tile={tile}")
+    kp = jnp.pad(k, ((width - 1, 0), (0, 0)))
+    kern = functools.partial(_kconv_kernel, width=width, tile=tile)
+    return pl.pallas_call(
+        kern,
+        grid=(n // tile,),
+        in_specs=[
+            pl.BlockSpec(kp.shape, lambda i: (0, 0)),
+            pl.BlockSpec(w.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), k.dtype),
+        interpret=True,
+    )(kp, w)

@@ -1,0 +1,159 @@
+"""MoBA attention forward kernel (paper Algorithm 1, TPU adaptation).
+
+The CUDA kernel is "gather-and-densify": per logical key block, gather the
+sparse set of routed queries into dense SRAM tiles and run FA-2 style
+GEMMs. TPUs have no efficient scatter/gather into VMEM, so the adaptation
+(DESIGN.md §Hardware-Adaptation) inverts the loop structure:
+
+  grid = (query tiles, logical KV blocks), KV innermost.
+
+Each (i, j) step stages Q-tile i and KV-block j into VMEM with BlockSpecs
+(the HBM<->VMEM schedule the CUDA kernel does with threadblocks), decides
+per-row routing from the compact (B_r, k) index tile — the dense N x n
+mask is never materialized — and skips the whole block with `pl.when`
+when no row in the tile routed to it (the analogue of the varlen
+key-block-centric work list). Online-softmax state (m, l, acc) lives in
+VMEM scratch, FA-2 style, and the output tile is written once on the last
+KV step.
+
+Complexity per query tile is O(#visited blocks * B * d); with query tiles
+aligned to MoBA blocks and k << n the visit count approaches the paper's
+O(N * k * B) total.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _moba_fwd_kernel(
+    q_ref,  # (B_r, d) query tile i
+    k_ref,  # (B, d) key block j
+    v_ref,  # (B, d) value block j
+    idx_ref,  # (B_r, topk) routed block ids for this query tile
+    o_ref,  # (B_r, d) output tile i
+    m_scr,  # (B_r, 1) running max
+    l_scr,  # (B_r, 1) running denominator
+    acc_scr,  # (B_r, d) running numerator
+    *,
+    block_size: int,
+    sm_scale: float,
+):
+    i, j = pl.program_id(0), pl.program_id(1)
+    n_kv = pl.num_programs(1)
+    b_r = q_ref.shape[0]
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    row_pos = i * b_r + jax.lax.iota(jnp.int32, b_r)
+    row_block = row_pos // block_size
+    routed = jnp.any(idx_ref[...] == j, axis=1)  # top-k routed past block
+    own = row_block == j  # always attend own block (causally)
+    row_ok = routed | own
+
+    # Block-level skip: the varlen work-list analogue. Whole (i, j) pairs
+    # with no routed rows cost only this predicate.
+    @pl.when(jnp.any(row_ok))
+    def _visit():
+        q = q_ref[...]
+        k = k_ref[...]
+        v = v_ref[...]
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * sm_scale
+        col_pos = j * k.shape[0] + jax.lax.iota(jnp.int32, k.shape[0])
+        # row_ok gates routing; col <= row gives causality inside the own
+        # block (for strictly-past blocks it is vacuously true).
+        mask = row_ok[:, None] & (col_pos[None, :] <= row_pos[:, None])
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        # guard: rows with everything masked keep m at NEG_INF
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * corr + jnp.dot(
+            p.astype(v.dtype), v, preferred_element_type=jnp.float32
+        )
+        m_scr[...] = m_new
+
+    @pl.when(j == n_kv - 1)
+    def _emit():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)  # fully-masked rows emit zeros
+        o_ref[...] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def moba_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    block_indices: jax.Array,
+    block_size: int,
+    tile_q: int = 128,
+) -> jax.Array:
+    """MoBA attention forward over pre-routed blocks.
+
+    q, k, v: (N, d); block_indices: (N, topk) int32 from `flash_topk`
+    (-1 = unused slot). Returns (N, d) in q.dtype.
+    """
+    n, d = q.shape
+    if n % block_size != 0:
+        raise ValueError(f"N={n} must be divisible by B={block_size}")
+    tile_q = min(tile_q, n)
+    if n % tile_q != 0:
+        raise ValueError(f"N={n} must be divisible by tile_q={tile_q}")
+    topk = block_indices.shape[1]
+    n_blocks = n // block_size
+    grid = (n // tile_q, n_blocks)
+    kern = functools.partial(
+        _moba_fwd_kernel,
+        block_size=block_size,
+        sm_scale=1.0 / (d**0.5),
+    )
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_q, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_size, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_size, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((tile_q, topk), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_q, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((tile_q, 1), jnp.float32),
+            pltpu.VMEM((tile_q, 1), jnp.float32),
+            pltpu.VMEM((tile_q, d), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v, block_indices)
+
+
+def moba_attention_full(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    block_size: int,
+    topk: int,
+    tile_q: int = 128,
+) -> jax.Array:
+    """Full MoBA pipeline: centroids -> Flash TopK -> attention."""
+    from . import centroid as centroid_mod
+    from . import topk as topk_mod
+
+    c = centroid_mod.centroid(k, block_size)
+    idx, _ = topk_mod.flash_topk(q, c, block_size, topk, tile_q=tile_q)
+    return moba_attention(q, k, v, idx, block_size, tile_q=tile_q)

@@ -1,0 +1,180 @@
+"""Pure-jnp reference oracles for the FlashMoBA kernels.
+
+Everything here is the *specification*: slow, obvious, and used by pytest
+(and by fast train-step artifacts, where XLA fuses it well) to check the
+Pallas kernels in `centroid.py`, `topk.py`, `moba.py` and `kconv.py`.
+
+Shapes follow the paper (§2): a sequence of N keys is partitioned into
+n = N / B blocks of size B; a query attends to its top-k past blocks
+(scored against block centroids) plus, causally, to its own block.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def centroid_ref(k: jax.Array, block_size: int) -> jax.Array:
+    """Mean-pool keys per block (Algorithm 2).
+
+    k: (N, d) -> (N // block_size, d). N must be divisible by block_size.
+    """
+    n, d = k.shape
+    assert n % block_size == 0, f"N={n} not divisible by B={block_size}"
+    return k.reshape(n // block_size, block_size, d).mean(axis=1)
+
+
+def block_scores_ref(q: jax.Array, centroids: jax.Array, block_size: int) -> jax.Array:
+    """Router scores s_{t,j} = q_t . k~_j with MoBA causal masking.
+
+    A query in block c may route only to *strictly past* blocks j < c; its
+    own block is always attended (handled separately), and future blocks
+    are masked. Returns (N, n_blocks) with NEG_INF on masked entries.
+    """
+    n_tokens = q.shape[0]
+    n_blocks = centroids.shape[0]
+    scores = q @ centroids.T  # (N, n_blocks)
+    q_block = jnp.arange(n_tokens) // block_size  # block id of each query
+    j = jnp.arange(n_blocks)
+    allowed = j[None, :] < q_block[:, None]  # strictly past blocks only
+    return jnp.where(allowed, scores, NEG_INF)
+
+
+def topk_blocks_ref(
+    q: jax.Array, centroids: jax.Array, block_size: int, topk: int
+) -> tuple[jax.Array, jax.Array]:
+    """Top-k routed block ids per query (Algorithm 3 semantics).
+
+    Returns (indices, mask):
+      indices: (N, k) int32, block id or -1 where fewer than k blocks exist.
+      mask:    (N, n_blocks) bool, True where the query routes to the block
+               (selected top-k OR own block).
+    """
+    n_tokens = q.shape[0]
+    n_blocks = centroids.shape[0]
+    scores = block_scores_ref(q, centroids, block_size)
+    k = min(topk, n_blocks)
+    # Sort-based top-k. Two environment constraints shape this code:
+    # (1) lax.top_k lowers to the `topk` HLO instruction, which the
+    #     xla_extension 0.5.1 text parser cannot read back;
+    # (2) take_along_axis (gather) has a broken batched-transpose in this
+    #     jax build, so nothing on the grad path may gather.
+    # argsort's integer output is grad-opaque; slot validity comes from
+    # the candidate count (row t has t // B strictly-past candidates).
+    # stop_gradient matches MoBA's training semantics (hard routing — no
+    # gradient through selection) and keeps sort's JVP (which gathers)
+    # off the autodiff path entirely.
+    order = jnp.argsort(jax.lax.stop_gradient(-scores), axis=1)[:, :k].astype(jnp.int32)
+    n_candidates = jnp.arange(n_tokens, dtype=jnp.int32) // block_size
+    slot_valid = jnp.arange(k, dtype=jnp.int32)[None, :] < n_candidates[:, None]
+    top_idx = jnp.where(slot_valid, order, -1)
+    if k < topk:  # pad to the requested k for a stable interface
+        pad = -jnp.ones((n_tokens, topk - k), dtype=jnp.int32)
+        top_idx = jnp.concatenate([top_idx, pad], axis=1)
+    # (N, k, n_blocks) one-hot of valid selections, reduced over k. A
+    # scatter would be wrong here: -1 padding clamps onto block 0 and
+    # "last write wins" could erase a real selection.
+    onehot = (top_idx[:, :, None] == jnp.arange(n_blocks)[None, None, :]) & (
+        top_idx[:, :, None] >= 0
+    )
+    mask = onehot.any(axis=1)
+    own = jnp.arange(n_tokens) // block_size
+    mask = mask | (jnp.arange(n_blocks)[None, :] == own[:, None])
+    return top_idx, mask
+
+
+def dense_attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True
+) -> jax.Array:
+    """Vanilla softmax attention, (N, d) x (N, d) x (N, d) -> (N, d)."""
+    d = q.shape[-1]
+    s = (q @ k.T) / jnp.sqrt(jnp.float32(d))
+    if causal:
+        n = q.shape[0]
+        mask = jnp.tril(jnp.ones((n, n), dtype=bool))
+        s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return p @ v
+
+
+def sliding_window_attention_ref(
+    q: jax.Array, k: jax.Array, v: jax.Array, window: int
+) -> jax.Array:
+    """Causal sliding-window attention: token t sees [t - window + 1, t]."""
+    n, d = q.shape
+    s = (q @ k.T) / jnp.sqrt(jnp.float32(d))
+    i = jnp.arange(n)[:, None]
+    j = jnp.arange(n)[None, :]
+    mask = (j <= i) & (j > i - window)
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return p @ v
+
+
+def moba_attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    block_size: int,
+    topk: int,
+) -> jax.Array:
+    """MoBA attention (§2): softmax over the union of routed blocks.
+
+    Token-level mask formulation: token t attends token u iff u <= t and
+    u's block is routed for t (top-k past block or t's own block).
+    """
+    n, d = q.shape
+    centroids = centroid_ref(k, block_size)
+    _, block_mask = topk_blocks_ref(q, centroids, block_size, topk)
+    u_block = jnp.arange(n) // block_size
+    tok_mask = block_mask[:, u_block]  # (N, N): query t -> token u allowed
+    causal = jnp.tril(jnp.ones((n, n), dtype=bool))
+    tok_mask = tok_mask & causal
+    s = (q @ k.T) / jnp.sqrt(jnp.float32(d))
+    s = jnp.where(tok_mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return p @ v
+
+
+def kconv_ref(k: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal 1-D key convolution with SiLU + residual (App. B).
+
+    k: (N, d); w: (W, d) per-lag depthwise weights.
+    out[t] = k[t] + SiLU(sum_l w[l] * k[t - l])   (left-zero-padded)
+    """
+    width = w.shape[0]
+    acc = jnp.zeros_like(k)
+    for lag in range(width):
+        shifted = jnp.pad(k, ((lag, 0), (0, 0)))[: k.shape[0]]
+        acc = acc + w[lag][None, :] * shifted
+    return k + jax.nn.silu(acc)
+
+
+def varlen_layout_ref(indices, n_blocks: int):
+    """Algorithm 4 as plain python: query-centric (N, k) top-k indices ->
+    key-block-centric varlen layout (counts, offsets, flat query ids).
+
+    Used to cross-check the rust `attention::varlen` module via test
+    vectors; deterministic (queries sorted ascending per block).
+    """
+    import numpy as np
+
+    indices = np.asarray(indices)
+    n_tokens = indices.shape[0]
+    counts = np.zeros(n_blocks, dtype=np.int64)
+    for t in range(n_tokens):
+        for b in indices[t]:
+            if b >= 0:
+                counts[b] += 1
+    offsets = np.zeros(n_blocks, dtype=np.int64)
+    offsets[1:] = np.cumsum(counts)[:-1]
+    flat = np.zeros(int(counts.sum()), dtype=np.int64)
+    cursor = offsets.copy()
+    for t in range(n_tokens):
+        for b in sorted(x for x in indices[t] if x >= 0):
+            flat[cursor[b]] = t
+            cursor[b] += 1
+    return counts, offsets, flat

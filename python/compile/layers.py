@@ -1,0 +1,183 @@
+"""Model building blocks for the hybrid SWA / MoBA transformer (§5.1).
+
+Parameters are plain pytrees (nested dicts) so the AOT boundary can
+flatten them into a stable list of tensors shared with the rust runtime.
+
+Attention layers come in three flavours, matching the paper's hybrid
+stack: sliding-window attention with RoPE on odd layers, and on even
+layers either dense attention or MoBA (both *without* positional
+encoding, per §5.1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.kconv import kconv as kconv_pallas
+from .kernels.moba import moba_attention_full as moba_pallas
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Scaled-down §5.1 architecture. head_dim stays 64 like the paper."""
+
+    name: str = "tiny"
+    vocab_size: int = 512
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 2
+    n_kv_heads: int = 2
+    head_dim: int = 64
+    ffn_dim: int = 384
+    seq_len: int = 1024
+    window: int = 128  # SWA window (paper: 256 at 8K context)
+    attn: str = "moba"  # even-layer global attention: "dense" | "moba"
+    moba_block: int = 32
+    moba_topk: int = 8
+    kconv: int = 0  # 0 = off, else kernel width (3 or 5)
+    rope_theta: float = 10000.0
+    use_pallas: bool = False  # pallas kernels vs jnp ref inside the graph
+
+    def validate(self) -> "ModelConfig":
+        assert self.n_heads * self.head_dim == self.d_model, "heads*dim != d_model"
+        assert self.n_heads % self.n_kv_heads == 0, "GQA group must divide heads"
+        assert self.seq_len % self.moba_block == 0, "seq not divisible by B"
+        assert self.attn in ("dense", "moba")
+        assert self.kconv in (0, 3, 5)
+        return self
+
+    @property
+    def n_blocks(self) -> int:
+        return self.seq_len // self.moba_block
+
+
+# ----------------------------------------------------------------- init
+def _dense_init(key, shape, scale=None):
+    fan_in = shape[0]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(fan_in)
+    return (jax.random.normal(key, shape) * scale).astype(jnp.float32)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict[str, Any]:
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    d, hd = cfg.d_model, cfg.head_dim
+    params: dict[str, Any] = {
+        "embed": _dense_init(keys[0], (cfg.vocab_size, d), scale=0.02),
+        "ln_f": jnp.ones((d,)),
+        "lm_head": _dense_init(keys[1], (d, cfg.vocab_size)),
+        "layers": [],
+    }
+    for li in range(cfg.n_layers):
+        lk = jax.random.split(keys[2 + li], 8)
+        layer = {
+            "ln1": jnp.ones((d,)),
+            "wq": _dense_init(lk[0], (d, cfg.n_heads * hd)),
+            "wk": _dense_init(lk[1], (d, cfg.n_kv_heads * hd)),
+            "wv": _dense_init(lk[2], (d, cfg.n_kv_heads * hd)),
+            "wo": _dense_init(lk[3], (cfg.n_heads * hd, d)),
+            "ln2": jnp.ones((d,)),
+            "w_gate": _dense_init(lk[4], (d, cfg.ffn_dim)),
+            "w_up": _dense_init(lk[5], (d, cfg.ffn_dim)),
+            "w_down": _dense_init(lk[6], (cfg.ffn_dim, d)),
+        }
+        if cfg.kconv and _is_global_layer(li) and cfg.attn == "moba":
+            # near-zero init: starts as identity (residual dominates)
+            layer["kconv_w"] = _dense_init(lk[7], (cfg.kconv, cfg.n_kv_heads * hd), scale=0.02)
+        params["layers"].append(layer)
+    return params
+
+
+def _is_global_layer(layer_idx: int) -> bool:
+    """Paper §5.1: odd layers (1-indexed) are SWA, even are global
+    (dense/MoBA). 0-indexed: layer 0, 2, ... are SWA; 1, 3, ... global."""
+    return layer_idx % 2 == 1
+
+
+# ----------------------------------------------------------------- ops
+def rmsnorm(x: jax.Array, g: jax.Array, eps: float = 1e-6) -> jax.Array:
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * g
+
+
+def rope(x: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding over (..., N, hd)."""
+    n, hd = x.shape[-2], x.shape[-1]
+    half = hd // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = jnp.arange(n, dtype=jnp.float32)[:, None] * freqs[None, :]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def swiglu(x: jax.Array, w_gate, w_up, w_down) -> jax.Array:
+    return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+def _split_heads(x: jax.Array, n_heads: int, hd: int) -> jax.Array:
+    b, n, _ = x.shape
+    return x.reshape(b, n, n_heads, hd).transpose(0, 2, 1, 3)  # (B, H, N, hd)
+
+
+def _merge_heads(x: jax.Array) -> jax.Array:
+    b, h, n, hd = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(b, n, h * hd)
+
+
+def _repeat_kv(x: jax.Array, groups: int) -> jax.Array:
+    return jnp.repeat(x, groups, axis=1) if groups > 1 else x
+
+
+# ----------------------------------------------------------------- layers
+def attention_layer(cfg: ModelConfig, layer, x: jax.Array, layer_idx: int) -> jax.Array:
+    """One attention sublayer on (B, N, d_model)."""
+    h = rmsnorm(x, layer["ln1"])
+    q = _split_heads(h @ layer["wq"], cfg.n_heads, cfg.head_dim)
+    k = _split_heads(h @ layer["wk"], cfg.n_kv_heads, cfg.head_dim)
+    v = _split_heads(h @ layer["wv"], cfg.n_kv_heads, cfg.head_dim)
+    groups = cfg.n_heads // cfg.n_kv_heads
+
+    if not _is_global_layer(layer_idx):
+        # SWA + RoPE (local layer)
+        q, k = rope(q, cfg.rope_theta), rope(k, cfg.rope_theta)
+        k, v = _repeat_kv(k, groups), _repeat_kv(v, groups)
+        o = jax.vmap(jax.vmap(lambda q_, k_, v_: ref.sliding_window_attention_ref(q_, k_, v_, cfg.window)))(q, k, v)
+    elif cfg.attn == "dense":
+        # dense global layer, NoPE
+        k, v = _repeat_kv(k, groups), _repeat_kv(v, groups)
+        o = jax.vmap(jax.vmap(lambda q_, k_, v_: ref.dense_attention_ref(q_, k_, v_)))(q, k, v)
+    else:
+        # MoBA global layer, NoPE; optional key convolution before routing
+        if cfg.kconv:
+            w = layer["kconv_w"].reshape(cfg.kconv, cfg.n_kv_heads, cfg.head_dim)
+            if cfg.use_pallas:
+                k = jax.vmap(  # over batch
+                    jax.vmap(kconv_pallas, in_axes=(0, 0)), in_axes=(0, None)
+                )(k, w.transpose(1, 0, 2))
+            else:
+                k = jax.vmap(
+                    jax.vmap(ref.kconv_ref, in_axes=(0, 0)), in_axes=(0, None)
+                )(k, w.transpose(1, 0, 2))
+        k, v = _repeat_kv(k, groups), _repeat_kv(v, groups)
+        if cfg.use_pallas:
+            fn = lambda q_, k_, v_: moba_pallas(
+                q_, k_, v_, cfg.moba_block, cfg.moba_topk,
+                tile_q=min(128, cfg.moba_block),
+            )
+        else:
+            fn = lambda q_, k_, v_: ref.moba_attention_ref(
+                q_, k_, v_, cfg.moba_block, cfg.moba_topk
+            )
+        o = jax.vmap(jax.vmap(fn))(q, k, v)
+
+    return x + _merge_heads(o) @ layer["wo"]
+
+
+def mlp_layer(layer, x: jax.Array) -> jax.Array:
+    h = rmsnorm(x, layer["ln2"])
+    return x + swiglu(h, layer["w_gate"], layer["w_up"], layer["w_down"])

@@ -1,0 +1,28 @@
+"""L2: the hybrid SWA/MoBA transformer forward pass (paper §5.1).
+
+`forward(cfg, params, tokens) -> logits` is the single compute graph the
+AOT pipeline lowers; everything it calls lives in `layers.py` and
+`kernels/`.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from .layers import ModelConfig, attention_layer, init_params, mlp_layer, rmsnorm
+
+__all__ = ["ModelConfig", "init_params", "forward", "param_count"]
+
+
+def forward(cfg: ModelConfig, params, tokens: jax.Array) -> jax.Array:
+    """tokens (B, N) int32 -> logits (B, N, vocab) f32."""
+    x = params["embed"][tokens]  # (B, N, d)
+    for li, layer in enumerate(params["layers"]):
+        x = attention_layer(cfg, layer, x, li)
+        x = mlp_layer(layer, x)
+    x = rmsnorm(x, params["ln_f"])
+    return x @ params["lm_head"]
+
+
+def param_count(params) -> int:
+    return sum(int(p.size) for p in jax.tree_util.tree_leaves(params))

@@ -1,0 +1,89 @@
+"""Training step: cross-entropy loss + AdamW (paper §5.1 recipe).
+
+AdamW is hand-rolled (optax is not in the image): beta1=0.9, beta2=0.95,
+weight decay 0.1 applied decoupled to matrix params, global-norm gradient
+clipping at 1.0. The learning rate arrives as a runtime input so the rust
+driver owns the cosine schedule.
+
+The exported `train_step` is a pure function
+    (tokens, targets, lr, step, params, m, v) -> (loss, params', m', v')
+over flat pytrees, which `aot.py` lowers once per model variant.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import ModelConfig
+from .model import forward
+
+BETA1, BETA2, EPS = 0.9, 0.95, 1e-8
+WEIGHT_DECAY = 0.1
+CLIP_NORM = 1.0
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """Mean next-token NLL. logits (B, N, V), targets (B, N) int32.
+
+    Positions with target < 0 are masked out (padding / prompt scoring).
+    """
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    safe = jnp.maximum(targets, 0)
+    picked = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = logz - picked
+    mask = (targets >= 0).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def loss_fn(cfg: ModelConfig, params, tokens, targets) -> jax.Array:
+    return cross_entropy(forward(cfg, params, tokens), targets)
+
+
+def _decay_mask(params):
+    """Decoupled weight decay on >=2-D tensors only (norm gains exempt)."""
+    return jax.tree_util.tree_map(lambda p: float(p.ndim >= 2), params)
+
+
+def adamw_init(params):
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return zeros, jax.tree_util.tree_map(jnp.zeros_like, params)
+
+
+def train_step(cfg: ModelConfig, params, m, v, tokens, targets, lr, step):
+    """One AdamW step. `step` is the 1-based step number (f32 scalar)."""
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(cfg, p, tokens, targets))(params)
+
+    # global-norm clip
+    leaves = jax.tree_util.tree_leaves(grads)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g)) for g in leaves))
+    scale = jnp.minimum(1.0, CLIP_NORM / (gnorm + 1e-12))
+    grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+    bc1 = 1.0 - BETA1**step
+    bc2 = 1.0 - BETA2**step
+    decay = _decay_mask(params)
+
+    def upd(p, g, m_, v_, wd):
+        m_n = BETA1 * m_ + (1.0 - BETA1) * g
+        v_n = BETA2 * v_ + (1.0 - BETA2) * jnp.square(g)
+        mhat = m_n / bc1
+        vhat = v_n / bc2
+        p_n = p - lr * (mhat / (jnp.sqrt(vhat) + EPS) + WEIGHT_DECAY * wd * p)
+        return p_n, m_n, v_n
+
+    out = jax.tree_util.tree_map(upd, params, grads, m, v, decay)
+    params_n = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    m_n = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    v_n = jax.tree_util.tree_map(lambda t: t[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return loss, params_n, m_n, v_n
+
+
+def cosine_lr(step: int, total: int, peak: float, warmup: int = 20, floor_frac: float = 0.1) -> float:
+    """Reference schedule (mirrored in rust `train::schedule`)."""
+    import math
+
+    if step < warmup:
+        return peak * (step + 1) / warmup
+    t = (step - warmup) / max(1, total - warmup)
+    return peak * (floor_frac + (1 - floor_frac) * 0.5 * (1 + math.cos(math.pi * min(t, 1.0))))

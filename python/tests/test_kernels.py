@@ -1,0 +1,249 @@
+"""L1 correctness: every Pallas kernel against its pure-jnp oracle.
+
+Hypothesis sweeps shapes / block sizes / dtypes; deterministic cases pin
+the paper's configurations (d=64, B in {32..512}, k in {2,4,8}).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref
+from compile.kernels.centroid import centroid
+from compile.kernels.kconv import kconv
+from compile.kernels.moba import moba_attention, moba_attention_full
+from compile.kernels.topk import flash_topk
+
+settings.register_profile("kernels", deadline=None, max_examples=12)
+settings.load_profile("kernels")
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def qkv(seed, n, d):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return tuple(rand(k, (n, d)) for k in ks)
+
+
+# ---------------------------------------------------------------- centroid
+@pytest.mark.parametrize("n,d,b", [(256, 64, 32), (512, 64, 128), (128, 32, 16)])
+def test_centroid_matches_ref(n, d, b):
+    k = rand(jax.random.PRNGKey(0), (n, d))
+    assert_allclose(np.asarray(centroid(k, b)), np.asarray(ref.centroid_ref(k, b)), rtol=1e-5, atol=1e-6)
+
+
+def test_centroid_constant_blocks():
+    # each block constant c_j -> centroid exactly c_j
+    b, nb, d = 32, 8, 16
+    vals = jnp.arange(nb, dtype=jnp.float32)
+    k = jnp.repeat(vals[:, None], b, axis=0) * jnp.ones((1, d))
+    c = centroid(k, b)
+    assert_allclose(np.asarray(c), np.asarray(vals[:, None] * jnp.ones((1, d))), rtol=0, atol=0)
+
+
+def test_centroid_rejects_ragged():
+    with pytest.raises(ValueError):
+        centroid(jnp.zeros((100, 8)), 32)
+
+
+@given(
+    nb=st.integers(2, 8),
+    b=st.sampled_from([16, 32, 64]),
+    d=st.sampled_from([16, 64]),
+    seed=st.integers(0, 2**16),
+)
+def test_centroid_hypothesis(nb, b, d, seed):
+    k = rand(jax.random.PRNGKey(seed), (nb * b, d))
+    assert_allclose(np.asarray(centroid(k, b)), np.asarray(ref.centroid_ref(k, b)), rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------- flash topk
+@pytest.mark.parametrize(
+    "n,d,b,k,tile_q,tile_c",
+    [
+        (512, 64, 64, 3, 128, 4),
+        (512, 64, 128, 2, 128, 2),
+        (1024, 64, 128, 8, 256, 8),
+        (256, 32, 32, 2, 64, 3),  # tile_c not dividing n_blocks
+    ],
+)
+def test_flash_topk_matches_ref(n, d, b, k, tile_q, tile_c):
+    q, kk, _ = qkv(1, n, d)
+    c = centroid(kk, b)
+    idx, sc = flash_topk(q, c, b, k, tile_q=tile_q, tile_c=tile_c)
+    ridx, _ = ref.topk_blocks_ref(q, c, b, k)
+    assert (np.sort(np.asarray(idx), 1) == np.sort(np.asarray(ridx), 1)).all()
+    # returned scores must equal q . centroid for every valid pick
+    idx_np, sc_np = np.asarray(idx), np.asarray(sc)
+    full = np.asarray(q @ c.T)
+    for t in range(0, n, 97):
+        for slot in range(k):
+            if idx_np[t, slot] >= 0:
+                assert abs(sc_np[t, slot] - full[t, idx_np[t, slot]]) < 1e-3
+
+
+def test_flash_topk_causality():
+    # no query may ever route to its own or a future block
+    n, d, b, k = 512, 64, 64, 4
+    q, kk, _ = qkv(2, n, d)
+    idx = np.asarray(flash_topk(q, centroid(kk, b), b, k)[0])
+    own = np.arange(n) // b
+    valid = idx >= 0
+    assert (idx[valid] < np.repeat(own, k).reshape(n, k)[valid]).all()
+
+
+def test_flash_topk_first_block_empty():
+    n, d, b, k = 256, 32, 64, 2
+    q, kk, _ = qkv(3, n, d)
+    idx = np.asarray(flash_topk(q, centroid(kk, b), b, k)[0])
+    assert (idx[:b] == -1).all()
+
+
+@given(
+    nb=st.integers(2, 12),
+    k=st.integers(1, 6),
+    seed=st.integers(0, 2**16),
+)
+def test_flash_topk_hypothesis(nb, k, seed):
+    b, d = 32, 32
+    n = nb * b
+    keys = jax.random.split(jax.random.PRNGKey(seed), 2)
+    q = rand(keys[0], (n, d))
+    kk = rand(keys[1], (n, d))
+    c = centroid(kk, b)
+    idx, _ = flash_topk(q, c, b, k, tile_q=32, tile_c=5)
+    ridx, _ = ref.topk_blocks_ref(q, c, b, k)
+    assert (np.sort(np.asarray(idx), 1) == np.sort(np.asarray(ridx), 1)).all()
+
+
+# ---------------------------------------------------------------- moba attention
+@pytest.mark.parametrize(
+    "n,d,b,k,tile_q",
+    [
+        (512, 64, 64, 3, 128),
+        (512, 64, 128, 2, 128),
+        (1024, 64, 128, 8, 256),
+        (256, 32, 32, 4, 64),
+        (512, 64, 64, 2, 32),  # tile smaller than MoBA block
+    ],
+)
+def test_moba_attention_matches_ref(n, d, b, k, tile_q):
+    q, kk, v = qkv(4, n, d)
+    o = moba_attention_full(q, kk, v, b, k, tile_q=tile_q)
+    oref = ref.moba_attention_ref(q, kk, v, b, k)
+    assert_allclose(np.asarray(o), np.asarray(oref), rtol=3e-4, atol=3e-4)
+
+
+def test_moba_equals_dense_when_all_blocks_selected():
+    # k >= n_blocks makes MoBA exactly causal dense attention
+    n, d, b = 256, 32, 32
+    q, kk, v = qkv(5, n, d)
+    o = moba_attention_full(q, kk, v, b, topk=n // b)
+    oref = ref.dense_attention_ref(q, kk, v, causal=True)
+    assert_allclose(np.asarray(o), np.asarray(oref), rtol=3e-4, atol=3e-4)
+
+
+def test_moba_first_token_attends_self_only():
+    n, d, b = 128, 16, 32
+    q, kk, v = qkv(6, n, d)
+    o = moba_attention_full(q, kk, v, b, topk=2)
+    assert_allclose(np.asarray(o)[0], np.asarray(v)[0], rtol=1e-5, atol=1e-5)
+
+
+def test_moba_respects_given_indices():
+    # hand-crafted routing: every query in the last block routes to block 0
+    n, d, b = 256, 32, 64
+    q, kk, v = qkv(7, n, d)
+    idx = -np.ones((n, 1), np.int32)
+    idx[-b:, 0] = 0
+    o = moba_attention(q, kk, v, jnp.asarray(idx), b)
+    # manual: rows of last block see tokens [0..b) plus own block causally
+    s = np.asarray(q @ kk.T) / np.sqrt(d)
+    row = n - 1
+    allowed = np.zeros(n, bool)
+    allowed[:b] = True
+    allowed[n - b : row + 1] = True
+    e = np.exp(s[row, allowed] - s[row, allowed].max())
+    expect = (e / e.sum()) @ np.asarray(v)[allowed]
+    assert_allclose(np.asarray(o)[row], expect, rtol=3e-4, atol=3e-4)
+
+
+@given(
+    nb=st.integers(2, 8),
+    k=st.integers(1, 4),
+    seed=st.integers(0, 2**16),
+    tile_q=st.sampled_from([16, 32]),  # must divide n = nb * 32 for any nb
+)
+def test_moba_attention_hypothesis(nb, k, seed, tile_q):
+    b, d = 32, 32
+    n = nb * b
+    keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q, kk, v = (rand(x, (n, d)) for x in keys)
+    o = moba_attention_full(q, kk, v, b, k, tile_q=tile_q)
+    oref = ref.moba_attention_ref(q, kk, v, b, k)
+    assert_allclose(np.asarray(o), np.asarray(oref), rtol=5e-4, atol=5e-4)
+
+
+# ---------------------------------------------------------------- kconv
+@pytest.mark.parametrize("w_width", [3, 5])
+@pytest.mark.parametrize("n,d,tile", [(256, 64, 128), (512, 32, 256), (128, 16, 128)])
+def test_kconv_matches_ref(w_width, n, d, tile):
+    keys = jax.random.split(jax.random.PRNGKey(8), 2)
+    k = rand(keys[0], (n, d))
+    w = rand(keys[1], (w_width, d), scale=0.2)
+    assert_allclose(np.asarray(kconv(k, w, tile=tile)), np.asarray(ref.kconv_ref(k, w)), rtol=1e-5, atol=1e-5)
+
+
+def test_kconv_zero_weights_is_identity():
+    k = rand(jax.random.PRNGKey(9), (128, 32))
+    w = jnp.zeros((3, 32))
+    # SiLU(0) = 0 so output == input
+    assert_allclose(np.asarray(kconv(k, w, tile=64)), np.asarray(k), rtol=0, atol=0)
+
+
+def test_kconv_causality():
+    # changing a future key must not affect earlier outputs
+    keys = jax.random.split(jax.random.PRNGKey(10), 2)
+    k = rand(keys[0], (128, 16))
+    w = rand(keys[1], (5, 16), scale=0.3)
+    out1 = np.asarray(kconv(k, w, tile=64))
+    k2 = k.at[100].set(99.0)
+    out2 = np.asarray(kconv(k2, w, tile=64))
+    assert_allclose(out1[:100], out2[:100], rtol=0, atol=0)
+    assert not np.allclose(out1[100], out2[100])
+
+
+@given(
+    width=st.sampled_from([3, 5]),
+    n=st.sampled_from([64, 128, 256]),
+    seed=st.integers(0, 2**16),
+)
+def test_kconv_hypothesis(width, n, seed):
+    d = 32
+    keys = jax.random.split(jax.random.PRNGKey(seed), 2)
+    k = rand(keys[0], (n, d))
+    w = rand(keys[1], (width, d), scale=0.2)
+    assert_allclose(np.asarray(kconv(k, w, tile=64)), np.asarray(ref.kconv_ref(k, w)), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------- varlen oracle
+def test_varlen_layout_roundtrip():
+    rng = np.random.default_rng(0)
+    n, k, nb = 64, 3, 8
+    idx = rng.integers(-1, nb, size=(n, k)).astype(np.int32)
+    counts, offsets, flat = ref.varlen_layout_ref(idx, nb)
+    assert counts.sum() == (idx >= 0).sum()
+    # every (query, block) pair appears exactly where offsets say
+    for b in range(nb):
+        qs = set(flat[offsets[b] : offsets[b] + counts[b]].tolist())
+        expect = {t for t in range(n) if (idx[t] == b).any()}
+        # duplicates in a row collapse in `expect` but not in counts; compare multiset
+        lst = sorted(flat[offsets[b] : offsets[b] + counts[b]].tolist())
+        exp_multi = sorted([t for t in range(n) for j in range(k) if idx[t, j] == b])
+        assert lst == exp_multi
+        assert qs == expect

@@ -1,0 +1,129 @@
+"""L2 model tests: shapes, hybrid layer structure, GQA, causality,
+pallas-vs-ref parity inside the full model."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile.layers import ModelConfig, rope, rmsnorm, _is_global_layer
+from compile.model import forward, init_params, param_count
+
+
+def tiny_cfg(**kw):
+    base = dict(
+        name="t", vocab_size=128, d_model=128, n_layers=2, n_heads=2,
+        n_kv_heads=2, ffn_dim=256, seq_len=128, window=32,
+        attn="moba", moba_block=32, moba_topk=2,
+    )
+    base.update(kw)
+    return ModelConfig(**base).validate()
+
+
+def test_forward_shapes_and_finite():
+    cfg = tiny_cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tok = jax.random.randint(jax.random.PRNGKey(1), (2, cfg.seq_len), 0, cfg.vocab_size)
+    logits = forward(cfg, params, tok)
+    assert logits.shape == (2, cfg.seq_len, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_layer_parity_swa_then_global():
+    # paper §5.1: odd layers (1-indexed) SWA, even layers global
+    assert not _is_global_layer(0)  # layer 1 -> SWA
+    assert _is_global_layer(1)  # layer 2 -> global
+    assert not _is_global_layer(2)
+    assert _is_global_layer(3)
+
+
+def test_causality_future_tokens_do_not_affect_past():
+    cfg = tiny_cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tok = jax.random.randint(jax.random.PRNGKey(2), (1, cfg.seq_len), 0, cfg.vocab_size)
+    base = forward(cfg, params, tok)
+    tok2 = tok.at[0, cfg.seq_len - 1].set((tok[0, cfg.seq_len - 1] + 1) % cfg.vocab_size)
+    pert = forward(cfg, params, tok2)
+    # all positions before the edit are bit-identical
+    assert_allclose(np.asarray(base)[0, : cfg.seq_len - 1], np.asarray(pert)[0, : cfg.seq_len - 1], rtol=0, atol=0)
+    assert not np.allclose(np.asarray(base)[0, -1], np.asarray(pert)[0, -1])
+
+
+def test_dense_variant_runs():
+    cfg = tiny_cfg(attn="dense")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tok = jnp.zeros((1, cfg.seq_len), jnp.int32)
+    assert forward(cfg, params, tok).shape == (1, cfg.seq_len, cfg.vocab_size)
+
+
+def test_gqa_shares_kv_heads():
+    cfg = tiny_cfg(n_heads=2, n_kv_heads=1)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    # wk projects to n_kv_heads * head_dim
+    assert params["layers"][0]["wk"].shape == (cfg.d_model, cfg.head_dim)
+    tok = jnp.zeros((1, cfg.seq_len), jnp.int32)
+    logits = forward(cfg, params, tok)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_kconv_param_only_on_moba_layers():
+    cfg = tiny_cfg(kconv=3)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    for li, layer in enumerate(params["layers"]):
+        if _is_global_layer(li):
+            assert "kconv_w" in layer, f"layer {li}"
+            assert layer["kconv_w"].shape == (3, cfg.n_kv_heads * cfg.head_dim)
+        else:
+            assert "kconv_w" not in layer
+
+
+def test_pallas_model_matches_ref_model():
+    cfg_ref = tiny_cfg(kconv=3, seq_len=128)
+    cfg_pal = dataclasses.replace(cfg_ref, use_pallas=True)
+    params = init_params(cfg_ref, jax.random.PRNGKey(3))
+    tok = jax.random.randint(jax.random.PRNGKey(4), (1, 128), 0, cfg_ref.vocab_size)
+    a = forward(cfg_ref, params, tok)
+    b = forward(cfg_pal, params, tok)
+    assert_allclose(np.asarray(a), np.asarray(b), rtol=3e-3, atol=3e-3)
+
+
+def test_param_count_scales_with_layers():
+    c2 = tiny_cfg(n_layers=2)
+    c4 = tiny_cfg(n_layers=4)
+    p2 = param_count(init_params(c2, jax.random.PRNGKey(0)))
+    p4 = param_count(init_params(c4, jax.random.PRNGKey(0)))
+    assert p4 > p2
+    per_layer = (p4 - p2) / 2
+    embed_ish = 2 * c2.vocab_size * c2.d_model
+    assert abs((p2 - embed_ish - c2.d_model) - 2 * per_layer) < per_layer * 0.2
+
+
+def test_rope_preserves_norm_and_relativity():
+    x = jax.random.normal(jax.random.PRNGKey(5), (16, 64))
+    r = rope(x, 10000.0)
+    assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(r), axis=-1),
+        rtol=1e-5,
+    )
+    # position 0 is the identity rotation
+    assert_allclose(np.asarray(r)[0], np.asarray(x)[0], rtol=1e-6, atol=1e-6)
+
+
+def test_rmsnorm_unit_scale():
+    x = jax.random.normal(jax.random.PRNGKey(6), (8, 32)) * 5.0
+    y = rmsnorm(x, jnp.ones(32))
+    ms = np.mean(np.square(np.asarray(y)), axis=-1)
+    assert_allclose(ms, np.ones(8), rtol=1e-3)
+
+
+def test_validate_rejects_bad_configs():
+    with pytest.raises(AssertionError):
+        tiny_cfg(d_model=100)  # heads*dim mismatch
+    with pytest.raises(AssertionError):
+        tiny_cfg(seq_len=100)  # not divisible by block
+    with pytest.raises(AssertionError):
+        tiny_cfg(kconv=4)

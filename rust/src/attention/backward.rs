@@ -1,0 +1,265 @@
+//! FlashMoBA backward pass (paper Algorithm 5): recomputation-based,
+//! parallelized over the key dimension, gather-and-densify mirrored from
+//! the forward, with dQ accumulated into a high-precision global buffer
+//! (the CUDA atomicAdd analogue; sequential here, same arithmetic).
+//!
+//! Also [`naive_backward`], an original-style backward that materializes
+//! the full masked probability matrix — the memory-hog baseline.
+
+use super::simd::{axpy, dot as sdot};
+use super::varlen::VarlenLayout;
+use super::MobaShape;
+
+/// Gradients of (q, k, v).
+pub struct Grads {
+    pub dq: Vec<f32>,
+    pub dk: Vec<f32>,
+    pub dv: Vec<f32>,
+}
+
+/// Is token u attended by query t under the routing table?
+fn attended(t: usize, u: usize, block: usize, indices: &[i32], topk: usize) -> bool {
+    if u > t {
+        return false;
+    }
+    let ub = u / block;
+    ub == t / block || indices[t * topk..(t + 1) * topk].contains(&(ub as i32))
+}
+
+/// Materializing backward (f64 accumulation; correctness oracle).
+pub fn naive_backward(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    dout: &[f32],
+    shape: MobaShape,
+    indices: &[i32],
+) -> Grads {
+    let MobaShape { n, d, block, topk } = shape;
+    let scale = 1.0 / (d as f64).sqrt();
+    let mut dq = vec![0.0f64; n * d];
+    let mut dk = vec![0.0f64; n * d];
+    let mut dv = vec![0.0f64; n * d];
+    for t in 0..n {
+        // recompute p_t
+        let mut s = vec![f64::NEG_INFINITY; t + 1];
+        for (u, su) in s.iter_mut().enumerate() {
+            if !attended(t, u, block, indices, topk) {
+                continue;
+            }
+            let mut dot = 0.0f64;
+            for c in 0..d {
+                dot += q[t * d + c] as f64 * k[u * d + c] as f64;
+            }
+            *su = dot * scale;
+        }
+        let m = s.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let z: f64 = s.iter().filter(|x| x.is_finite()).map(|x| (x - m).exp()).sum();
+        let p: Vec<f64> =
+            s.iter().map(|x| if x.is_finite() { (x - m).exp() / z } else { 0.0 }).collect();
+        // dv_u += p_u * do_t ; dp_u = do_t . v_u
+        let mut dsum = 0.0f64; // sum_u p_u dp_u  (= do . o)
+        let mut dp = vec![0.0f64; t + 1];
+        for u in 0..=t {
+            if p[u] == 0.0 {
+                continue;
+            }
+            let mut dot = 0.0f64;
+            for c in 0..d {
+                dv[u * d + c] += p[u] * dout[t * d + c] as f64;
+                dot += dout[t * d + c] as f64 * v[u * d + c] as f64;
+            }
+            dp[u] = dot;
+            dsum += p[u] * dot;
+        }
+        for u in 0..=t {
+            if p[u] == 0.0 {
+                continue;
+            }
+            let ds = p[u] * (dp[u] - dsum) * scale;
+            for c in 0..d {
+                dq[t * d + c] += ds * k[u * d + c] as f64;
+                dk[u * d + c] += ds * q[t * d + c] as f64;
+            }
+        }
+    }
+    Grads {
+        dq: dq.into_iter().map(|x| x as f32).collect(),
+        dk: dk.into_iter().map(|x| x as f32).collect(),
+        dv: dv.into_iter().map(|x| x as f32).collect(),
+    }
+}
+
+/// FlashMoBA backward (Algorithm 5).
+///
+/// Inputs mirror the forward: routing `layout` + `indices`, the forward
+/// output `o` and per-row logsumexp `lse`, upstream gradient `dout`.
+#[allow(clippy::too_many_arguments)]
+pub fn flash_moba_backward(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    o: &[f32],
+    lse: &[f32],
+    dout: &[f32],
+    shape: MobaShape,
+    layout: &VarlenLayout,
+) -> Grads {
+    let MobaShape { n, d, block, .. } = shape;
+    let nb = shape.n_blocks();
+    let scale = 1.0 / (d as f32).sqrt();
+
+    // preprocessing kernel: D_t = rowsum(dO ∘ O)
+    let mut dvec = vec![0.0f32; n];
+    for t in 0..n {
+        let mut s = 0.0f32;
+        for c in 0..d {
+            s += dout[t * d + c] * o[t * d + c];
+        }
+        dvec[t] = s;
+    }
+
+    // high-precision global dQ accumulator (atomicAdd analogue)
+    let mut dq_accum = vec![0.0f64; n * d];
+    let mut dk = vec![0.0f32; n * d];
+    let mut dv = vec![0.0f32; n * d];
+
+    // main kernel: one pass per logical key block
+    for j in 0..nb {
+        let kb = &k[j * block * d..(j + 1) * block * d];
+        let vb = &v[j * block * d..(j + 1) * block * d];
+        let dkb_off = j * block * d;
+        let own_start = j * block;
+
+        let mut process_rows = |rows: &[u32], causal: bool, dk: &mut [f32], dv: &mut [f32]| {
+            for &t_ in rows {
+                let t = t_ as usize;
+                let qt = &q[t * d..(t + 1) * d];
+                let dot_ = &dout[t * d..(t + 1) * d];
+                // recompute p over this block: p_u = exp(s_u - lse_t)
+                for u in 0..block {
+                    if causal && own_start + u > t {
+                        break;
+                    }
+                    let ku = &kb[u * d..(u + 1) * d];
+                    let p = (sdot(qt, ku) * scale - lse[t]).exp();
+                    if p == 0.0 {
+                        continue;
+                    }
+                    // dV_j += P^T dO ; dP = dO · V_j^T   (vectorized)
+                    axpy(&mut dv[dkb_off + u * d..dkb_off + (u + 1) * d], p, dot_);
+                    let dp = sdot(dot_, &vb[u * d..(u + 1) * d]);
+                    // dS = P ∘ (dP - D)
+                    let ds = p * (dp - dvec[t]) * scale;
+                    // dK_j += dS^T Q (vectorized); dQ accumulates in the
+                    // high-precision buffer (atomicAdd analogue)
+                    axpy(&mut dk[dkb_off + u * d..dkb_off + (u + 1) * d], ds, qt);
+                    for c in 0..d {
+                        dq_accum[t * d + c] += (ds * ku[c]) as f64;
+                    }
+                }
+            }
+        };
+
+        process_rows(layout.queries_of(j), false, &mut dk, &mut dv);
+        let own_rows: Vec<u32> =
+            (own_start as u32..((own_start + block).min(n)) as u32).collect();
+        process_rows(&own_rows, true, &mut dk, &mut dv);
+    }
+
+    // postprocess kernel: convert dQ to output dtype
+    let dq = dq_accum.into_iter().map(|x| x as f32).collect();
+    Grads { dq, dk, dv }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::flash_moba::{flash_moba_forward, FlashMobaConfig};
+    use crate::attention::moba_naive::moba_reference;
+    use crate::attention::testutil::{max_abs_diff, qkv, Rng};
+
+    fn setup(n: usize, d: usize, b: usize, k: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>, MobaShape) {
+        let shape = MobaShape::new(n, d, b, k);
+        let (q, kk, v) = qkv(seed, n, d);
+        (q, kk, v, shape)
+    }
+
+    #[test]
+    fn flash_backward_matches_naive_backward() {
+        for (n, d, b, k) in [(64, 8, 16, 2), (128, 16, 32, 2), (96, 4, 16, 3)] {
+            let (q, kk, v, shape) = setup(n, d, b, k, 41);
+            let out = flash_moba_forward(&q, &kk, &v, shape, FlashMobaConfig::default());
+            let mut rng = Rng::new(42);
+            let dout = rng.normal_vec(n * d);
+            let g1 = naive_backward(&q, &kk, &v, &dout, shape, &out.indices);
+            let g2 = flash_moba_backward(&q, &kk, &v, &out.o, &out.lse, &dout, shape, &out.layout);
+            assert!(max_abs_diff(&g1.dq, &g2.dq) < 5e-4, "dq n={n}");
+            assert!(max_abs_diff(&g1.dk, &g2.dk) < 5e-4, "dk n={n}");
+            assert!(max_abs_diff(&g1.dv, &g2.dv) < 5e-4, "dv n={n}");
+        }
+    }
+
+    /// central finite differences on a scalar loss sum(o * w)
+    #[test]
+    fn gradients_match_finite_differences() {
+        let (n, d, b, k) = (32, 4, 8, 1);
+        let (q, kk, v, shape) = setup(n, d, b, k, 43);
+        let mut rng = Rng::new(44);
+        let w = rng.normal_vec(n * d);
+
+        let loss = |q_: &[f32], k_: &[f32], v_: &[f32], idx: &[i32]| -> f64 {
+            let (o, _) = moba_reference(q_, k_, v_, shape, idx);
+            o.iter().zip(&w).map(|(a, b)| *a as f64 * *b as f64).sum()
+        };
+
+        let out = flash_moba_forward(&q, &kk, &v, shape, FlashMobaConfig::default());
+        let g = flash_moba_backward(&q, &kk, &v, &out.o, &out.lse, &w, shape, &out.layout);
+
+        let eps = 1e-3f32;
+        let check = |arr: &[f32], grad: &[f32], which: usize| {
+            let mut rng = Rng::new(45 + which as u64);
+            for _ in 0..12 {
+                let i = rng.below(arr.len());
+                let mut plus = arr.to_vec();
+                let mut minus = arr.to_vec();
+                plus[i] += eps;
+                minus[i] -= eps;
+                // routing held fixed (straight-through, as in training)
+                let (lp, lm) = match which {
+                    0 => (loss(&plus, &kk, &v, &out.indices), loss(&minus, &kk, &v, &out.indices)),
+                    1 => (loss(&q, &plus, &v, &out.indices), loss(&q, &minus, &v, &out.indices)),
+                    _ => (loss(&q, &kk, &plus, &out.indices), loss(&q, &kk, &minus, &out.indices)),
+                };
+                let fd = ((lp - lm) / (2.0 * eps as f64)) as f32;
+                let an = grad[i];
+                assert!(
+                    (fd - an).abs() < 2e-2 * (1.0 + an.abs()),
+                    "which={which} i={i} fd={fd} an={an}"
+                );
+            }
+        };
+        check(&q, &g.dq, 0);
+        check(&kk, &g.dk, 1);
+        check(&v, &g.dv, 2);
+    }
+
+    #[test]
+    fn dv_rows_of_unattended_tokens_are_zero() {
+        // token in a never-routed block (other than by its own queries)
+        let (n, d, b, k) = (64, 4, 16, 1);
+        let (q, kk, v, shape) = setup(n, d, b, k, 46);
+        let out = flash_moba_forward(&q, &kk, &v, shape, FlashMobaConfig::default());
+        let mut rng = Rng::new(47);
+        let dout = rng.normal_vec(n * d);
+        let g = flash_moba_backward(&q, &kk, &v, &out.o, &out.lse, &dout, shape, &out.layout);
+        // gradient exists exactly where some query attends the token
+        for u in 0..n {
+            let touched = (0..n).any(|t| attended(t, u, b, &out.indices, k));
+            let norm: f32 = g.dv[u * d..(u + 1) * d].iter().map(|x| x * x).sum();
+            if !touched {
+                assert_eq!(norm, 0.0, "u={u} should be untouched");
+            }
+        }
+    }
+}

@@ -1,0 +1,73 @@
+//! Key-block centroid computation (paper Algorithm 2): K~_j = mean of
+//! block j's keys. Mirror of the Pallas kernel in
+//! `python/compile/kernels/centroid.py`.
+
+/// k: (n, d) row-major -> centroids (n / block, d).
+pub fn centroids(k: &[f32], n: usize, d: usize, block: usize) -> Vec<f32> {
+    assert_eq!(k.len(), n * d);
+    assert!(n % block == 0, "N={n} not divisible by B={block}");
+    let nb = n / block;
+    let inv = 1.0 / block as f32;
+    let mut out = vec![0.0f32; nb * d];
+    for j in 0..nb {
+        let dst = &mut out[j * d..(j + 1) * d];
+        for r in 0..block {
+            let src = &k[(j * block + r) * d..(j * block + r + 1) * d];
+            for c in 0..d {
+                dst[c] += src[c];
+            }
+        }
+        for c in dst.iter_mut() {
+            *c *= inv;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::testutil::Rng;
+
+    #[test]
+    fn constant_blocks_are_exact() {
+        let (nb, b, d) = (4, 8, 3);
+        let mut k = Vec::new();
+        for j in 0..nb {
+            for _ in 0..b {
+                for c in 0..d {
+                    k.push((j * 10 + c) as f32);
+                }
+            }
+        }
+        let c = centroids(&k, nb * b, d, b);
+        for j in 0..nb {
+            for cc in 0..d {
+                assert_eq!(c[j * d + cc], (j * 10 + cc) as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn mean_matches_direct_computation() {
+        let mut rng = Rng::new(5);
+        let (n, d, b) = (64, 16, 16);
+        let k = rng.normal_vec(n * d);
+        let c = centroids(&k, n, d, b);
+        for j in 0..n / b {
+            for cc in 0..d {
+                let mut s = 0.0f32;
+                for r in 0..b {
+                    s += k[(j * b + r) * d + cc];
+                }
+                assert!((c[j * d + cc] - s / b as f32).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn ragged_panics() {
+        centroids(&[0.0; 30], 10, 3, 4);
+    }
+}

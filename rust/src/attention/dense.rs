@@ -1,0 +1,184 @@
+//! Dense causal attention baselines.
+//!
+//! * [`naive_attention`] — textbook O(N²) with a materialized score row
+//!   (the correctness oracle for everything else).
+//! * [`flash_attention`] — blocked, online-softmax, cache-tiled: the
+//!   FlashAttention-2 analogue on this hardware (used as the dense
+//!   baseline in Figure 3/4 reproductions).
+//!
+//! Both return the output and the per-row logsumexp L (needed by the
+//! merge stage of the original-MoBA pipeline and by the backward pass).
+
+use super::simd::{axpy, dot, scale as vscale};
+use super::stats::ws_bytes;
+
+pub const NEG_INF: f32 = -1.0e30;
+
+/// Textbook causal attention. q,k,v: (n, d) row-major. Returns (o, lse).
+pub fn naive_attention(q: &[f32], k: &[f32], v: &[f32], n: usize, d: usize) -> (Vec<f32>, Vec<f32>) {
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut o = vec![0.0f32; n * d];
+    let mut lse = vec![0.0f32; n];
+    let mut s = vec![0.0f32; n];
+    for t in 0..n {
+        let qt = &q[t * d..(t + 1) * d];
+        let mut m = NEG_INF;
+        for u in 0..=t {
+            let val = dot(qt, &k[u * d..(u + 1) * d]) * scale;
+            s[u] = val;
+            if val > m {
+                m = val;
+            }
+        }
+        let mut z = 0.0f32;
+        for u in 0..=t {
+            s[u] = (s[u] - m).exp();
+            z += s[u];
+        }
+        let ot = &mut o[t * d..(t + 1) * d];
+        for u in 0..=t {
+            axpy(ot, s[u] / z, &v[u * d..(u + 1) * d]);
+        }
+        lse[t] = m + z.ln();
+    }
+    (o, lse)
+}
+
+/// Blocked online-softmax causal attention (FlashAttention-2 style).
+///
+/// Processes queries in `br`-row tiles and keys in `bc`-column tiles,
+/// carrying (m, l, acc) across key tiles; only O(br·bc + br·d) workspace.
+pub fn flash_attention(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    d: usize,
+    br: usize,
+    bc: usize,
+) -> (Vec<f32>, Vec<f32>, u64) {
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut o = vec![0.0f32; n * d];
+    let mut lse = vec![0.0f32; n];
+    let mut s = vec![0.0f32; br * bc];
+    let mut acc = vec![0.0f32; br * d];
+    let mut mrow = vec![NEG_INF; br];
+    let mut lrow = vec![0.0f32; br];
+    let workspace = ws_bytes(&[s.len(), acc.len(), mrow.len(), lrow.len()]);
+
+    let tq = n.div_ceil(br);
+    for it in 0..tq {
+        let r0 = it * br;
+        let rows = br.min(n - r0);
+        acc[..rows * d].fill(0.0);
+        mrow[..rows].fill(NEG_INF);
+        lrow[..rows].fill(0.0);
+        // causal: key tiles only up to the query tile's end
+        let last_col = r0 + rows; // exclusive
+        let tk = last_col.div_ceil(bc);
+        for jt in 0..tk {
+            let c0 = jt * bc;
+            let cols = bc.min(last_col - c0).min(bc);
+            // scores tile
+            for r in 0..rows {
+                let qt = &q[(r0 + r) * d..(r0 + r + 1) * d];
+                let srow = &mut s[r * bc..r * bc + cols];
+                for (cc, sval) in srow.iter_mut().enumerate() {
+                    let u = c0 + cc;
+                    if u > r0 + r {
+                        *sval = NEG_INF;
+                        continue;
+                    }
+                    *sval = dot(qt, &k[u * d..(u + 1) * d]) * scale;
+                }
+            }
+            // online softmax update
+            for r in 0..rows {
+                let srow = &mut s[r * bc..r * bc + cols];
+                let mut mt = mrow[r];
+                for &x in srow.iter() {
+                    if x > mt {
+                        mt = x;
+                    }
+                }
+                if mt == NEG_INF {
+                    continue; // whole tile masked for this row
+                }
+                let corr = (mrow[r] - mt).exp();
+                let mut psum = 0.0f32;
+                for x in srow.iter_mut() {
+                    *x = if *x <= NEG_INF / 2.0 { 0.0 } else { (*x - mt).exp() };
+                    psum += *x;
+                }
+                lrow[r] = lrow[r] * corr + psum;
+                let arow = &mut acc[r * d..(r + 1) * d];
+                if corr != 1.0 {
+                    vscale(arow, corr);
+                }
+                for (cc, &p) in srow.iter().enumerate() {
+                    if p == 0.0 {
+                        continue;
+                    }
+                    axpy(arow, p, &v[(c0 + cc) * d..(c0 + cc + 1) * d]);
+                }
+                mrow[r] = mt;
+            }
+        }
+        for r in 0..rows {
+            let l = if lrow[r] == 0.0 { 1.0 } else { lrow[r] };
+            let ot = &mut o[(r0 + r) * d..(r0 + r + 1) * d];
+            let arow = &acc[r * d..(r + 1) * d];
+            for c in 0..d {
+                ot[c] = arow[c] / l;
+            }
+            lse[r0 + r] = mrow[r] + lrow[r].max(1e-30).ln();
+        }
+    }
+    (o, lse, workspace)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::testutil::{max_abs_diff, qkv};
+
+    #[test]
+    fn flash_matches_naive() {
+        for (n, d, br, bc) in [(128, 16, 32, 32), (96, 8, 32, 16), (64, 4, 64, 64), (100, 8, 32, 48)] {
+            let (q, k, v) = qkv(1, n, d);
+            let (o1, l1) = naive_attention(&q, &k, &v, n, d);
+            let (o2, l2, _) = flash_attention(&q, &k, &v, n, d, br, bc);
+            assert!(max_abs_diff(&o1, &o2) < 2e-5, "n={n} d={d}");
+            assert!(max_abs_diff(&l1, &l2) < 2e-5);
+        }
+    }
+
+    #[test]
+    fn first_row_is_v0() {
+        let (q, k, v) = qkv(2, 16, 8);
+        let (o, _) = naive_attention(&q, &k, &v, 16, 8);
+        assert!(max_abs_diff(&o[..8], &v[..8]) < 1e-6);
+    }
+
+    #[test]
+    fn rows_are_convex_combinations() {
+        // each output must lie within [min, max] of the value column range
+        let (q, k, v) = qkv(3, 64, 4);
+        let (o, _) = naive_attention(&q, &k, &v, 64, 4);
+        for c in 0..4 {
+            let lo = v.iter().skip(c).step_by(4).fold(f32::MAX, |a, &b| a.min(b));
+            let hi = v.iter().skip(c).step_by(4).fold(f32::MIN, |a, &b| a.max(b));
+            for t in 0..64 {
+                let x = o[t * 4 + c];
+                assert!(x >= lo - 1e-4 && x <= hi + 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn lse_is_finite_and_ordered_sane() {
+        let (q, k, v) = qkv(4, 32, 8);
+        let (_, lse) = naive_attention(&q, &k, &v, 32, 8);
+        assert!(lse.iter().all(|x| x.is_finite()));
+    }
+}

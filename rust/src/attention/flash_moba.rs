@@ -1,0 +1,262 @@
+//! FlashMoBA forward (paper §4.2, Algorithm 1): fused tiled top-k +
+//! gather-and-densify attention.
+//!
+//! Two stages instead of the original's five:
+//!   1. `flash_topk` — centroids + streaming tiled selection (no N×n
+//!      score matrix) + varlen epilogue (Algorithms 2–4)
+//!   2. `fwd`        — per logical KV block, gather the routed queries
+//!      into dense tiles and run blocked GEMM + online softmax, with the
+//!      own-block causal pass fused into the same accumulators
+//!
+//! Single-threaded adaptation: the CUDA kernel keeps (m, l, acc) per
+//! query tile in SRAM and revisits query blocks from one thread block;
+//! sequentially we keep the accumulators in one O(N·d) buffer and visit
+//! key blocks outer-loop — the same arithmetic in the same order per
+//! (query, block) pair, with the same O(N·k·B·d) complexity.
+
+use super::centroid::centroids;
+use super::simd::{axpy, dot, scale};
+use super::dense::NEG_INF;
+use super::stats::{ws_bytes, StageStats};
+use super::topk::tiled_topk;
+use super::varlen::{build_varlen, VarlenLayout};
+use super::MobaShape;
+
+/// Tuning knobs (physical tile sizes; logical block size comes from
+/// [`MobaShape`]).
+#[derive(Debug, Clone, Copy)]
+pub struct FlashMobaConfig {
+    /// query rows gathered per dense tile (CUDA: B_r)
+    pub tile_r: usize,
+    /// key columns per inner tile (CUDA: B_c)
+    pub tile_c: usize,
+    /// centroid tile width in the top-k pass
+    pub topk_tile: usize,
+}
+
+impl Default for FlashMobaConfig {
+    fn default() -> Self {
+        Self { tile_r: 64, tile_c: 64, topk_tile: 64 }
+    }
+}
+
+/// Forward pass output.
+pub struct FlashMobaOut {
+    pub o: Vec<f32>,
+    pub lse: Vec<f32>,
+    pub indices: Vec<i32>,
+    pub layout: VarlenLayout,
+    pub stats: StageStats,
+}
+
+/// Run the fused pipeline.
+pub fn flash_moba_forward(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    shape: MobaShape,
+    cfg: FlashMobaConfig,
+) -> FlashMobaOut {
+    let MobaShape { n, d, block, topk } = shape;
+    let nb = shape.n_blocks();
+    let mut st = StageStats::new();
+
+    // ---- stage 1: Flash TopK + varlen epilogue -------------------------
+    let (indices, layout, topk_ws) = st.time("flash_topk", || {
+        let c = centroids(k, n, d, block);
+        let (idx, ws) = tiled_topk(q, &c, n, d, block, topk, cfg.topk_tile);
+        let layout = build_varlen(&idx, n, topk, nb);
+        (idx, layout, ws + ws_bytes(&[nb * d]))
+    });
+    st.add_workspace(topk_ws + ws_bytes(&[layout.total() + 2 * nb]));
+
+    // ---- stage 2: gather-and-densify forward ---------------------------
+    let mut o = vec![0.0f32; n * d];
+    let mut lse = vec![0.0f32; n];
+    let fwd_ws = st.time("fwd", || forward_core(q, k, v, shape, cfg, &layout, &mut o, &mut lse));
+    st.add_workspace(fwd_ws);
+
+    FlashMobaOut { o, lse, indices, layout, stats: st }
+}
+
+/// The gather-and-densify kernel body (Algorithm 1), shared with benches.
+/// Returns the workspace bytes it allocated.
+#[allow(clippy::too_many_arguments)]
+fn forward_core(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    shape: MobaShape,
+    cfg: FlashMobaConfig,
+    layout: &VarlenLayout,
+    o: &mut [f32],
+    lse: &mut [f32],
+) -> u64 {
+    let MobaShape { n, d, block, .. } = shape;
+    let nb = shape.n_blocks();
+    let sm_scale = 1.0 / (d as f32).sqrt();
+    let tile_r = cfg.tile_r;
+    let tile_c = cfg.tile_c.min(block);
+
+    // global online-softmax accumulators (the SRAM state, sequentially)
+    let mut m = vec![NEG_INF; n];
+    let mut l = vec![0.0f32; n];
+    let mut acc = vec![0.0f32; n * d];
+    // dense gather buffers (the SRAM tiles)
+    let mut qg = vec![0.0f32; tile_r * d];
+    let mut s = vec![0.0f32; tile_r * tile_c];
+    let ws = ws_bytes(&[m.len(), l.len(), acc.len(), qg.len(), s.len()]);
+
+    for j in 0..nb {
+        let kb = &k[j * block * d..(j + 1) * block * d];
+        let vb = &v[j * block * d..(j + 1) * block * d];
+
+        // routed queries (strictly future of block j) + own-block queries
+        let routed = layout.queries_of(j);
+        let own_start = j * block;
+
+        // process in dense physical tiles: first routed, then own block
+        let mut process_tile = |rows: &[u32], causal: bool| {
+            let rcount = rows.len();
+            // gather-load queries into the dense buffer
+            for (r, &t) in rows.iter().enumerate() {
+                qg[r * d..(r + 1) * d].copy_from_slice(&q[t as usize * d..(t as usize + 1) * d]);
+            }
+            let tcs = block.div_ceil(tile_c);
+            for ct in 0..tcs {
+                let c0 = ct * tile_c;
+                let cols = tile_c.min(block - c0);
+                // dense GEMM tile: s = qg · kb_tile^T
+                for r in 0..rcount {
+                    let qt = &qg[r * d..(r + 1) * d];
+                    let trow = rows[r] as usize;
+                    let srow = &mut s[r * tile_c..r * tile_c + cols];
+                    for (cc, sval) in srow.iter_mut().enumerate() {
+                        let u = c0 + cc;
+                        if causal && own_start + u > trow {
+                            *sval = NEG_INF;
+                            continue;
+                        }
+                        *sval = dot(qt, &kb[u * d..(u + 1) * d]) * sm_scale;
+                    }
+                }
+                // online softmax scatter-update
+                for r in 0..rcount {
+                    let t = rows[r] as usize;
+                    let srow = &mut s[r * tile_c..r * tile_c + cols];
+                    let mut mt = m[t];
+                    for &x in srow.iter() {
+                        if x > mt {
+                            mt = x;
+                        }
+                    }
+                    if mt == NEG_INF {
+                        continue;
+                    }
+                    let corr = (m[t] - mt).exp();
+                    let mut psum = 0.0f32;
+                    for x in srow.iter_mut() {
+                        *x = if *x <= NEG_INF / 2.0 { 0.0 } else { (*x - mt).exp() };
+                        psum += *x;
+                    }
+                    l[t] = l[t] * corr + psum;
+                    let arow = &mut acc[t * d..(t + 1) * d];
+                    if corr != 1.0 {
+                        scale(arow, corr);
+                    }
+                    for (cc, &p) in srow.iter().enumerate() {
+                        if p == 0.0 {
+                            continue;
+                        }
+                        axpy(arow, p, &vb[(c0 + cc) * d..(c0 + cc + 1) * d]);
+                    }
+                    m[t] = mt;
+                }
+            }
+        };
+
+        for chunk in routed.chunks(tile_r) {
+            process_tile(chunk, false);
+        }
+        // fused local pass: own-block rows, causal
+        let own_rows: Vec<u32> = (own_start as u32..(own_start + block) as u32)
+            .take_while(|&t| (t as usize) < n)
+            .collect();
+        for chunk in own_rows.chunks(tile_r) {
+            process_tile(chunk, true);
+        }
+    }
+
+    // epilogue: normalize
+    for t in 0..n {
+        let z = if l[t] == 0.0 { 1.0 } else { l[t] };
+        for c in 0..d {
+            o[t * d + c] = acc[t * d + c] / z;
+        }
+        lse[t] = m[t] + l[t].max(1e-30).ln();
+    }
+    ws
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::dense::naive_attention;
+    use crate::attention::moba_naive::{moba_naive_forward, moba_reference};
+    use crate::attention::testutil::{max_abs_diff, qkv};
+
+    #[test]
+    fn matches_reference_and_naive_pipeline() {
+        for (n, d, b, k) in [(128, 16, 16, 2), (256, 8, 32, 3), (256, 64, 64, 2), (64, 4, 16, 1)] {
+            let shape = MobaShape::new(n, d, b, k);
+            let (q, kk, v) = qkv(31, n, d);
+            let out = flash_moba_forward(&q, &kk, &v, shape, FlashMobaConfig::default());
+            let (oref, lref) = moba_reference(&q, &kk, &v, shape, &out.indices);
+            assert!(max_abs_diff(&out.o, &oref) < 3e-5, "n={n} b={b} k={k}");
+            assert!(max_abs_diff(&out.lse, &lref) < 3e-5);
+            let (onaive, idx_naive, _) = moba_naive_forward(&q, &kk, &v, shape);
+            assert!(crate::attention::topk::same_selection(&out.indices, &idx_naive, k));
+            assert!(max_abs_diff(&out.o, &onaive) < 5e-5);
+        }
+    }
+
+    #[test]
+    fn small_tiles_still_correct() {
+        let shape = MobaShape::new(128, 8, 32, 2);
+        let (q, kk, v) = qkv(32, 128, 8);
+        let cfg = FlashMobaConfig { tile_r: 3, tile_c: 5, topk_tile: 3 };
+        let out = flash_moba_forward(&q, &kk, &v, shape, cfg);
+        let (oref, _) = moba_reference(&q, &kk, &v, shape, &out.indices);
+        assert!(max_abs_diff(&out.o, &oref) < 3e-5);
+    }
+
+    #[test]
+    fn full_routing_equals_dense() {
+        let (n, d, b) = (96, 8, 16);
+        let shape = MobaShape::new(n, d, b, n / b);
+        let (q, kk, v) = qkv(33, n, d);
+        let out = flash_moba_forward(&q, &kk, &v, shape, FlashMobaConfig::default());
+        let (oref, lref) = naive_attention(&q, &kk, &v, n, d);
+        assert!(max_abs_diff(&out.o, &oref) < 3e-5);
+        assert!(max_abs_diff(&out.lse, &lref) < 3e-5);
+    }
+
+    #[test]
+    fn uses_less_workspace_than_naive() {
+        let shape = MobaShape::new(1024, 64, 64, 4);
+        let (q, kk, v) = qkv(34, 1024, 64);
+        let out = flash_moba_forward(&q, &kk, &v, shape, FlashMobaConfig::default());
+        let (_, _, st_naive) = moba_naive_forward(&q, &kk, &v, shape);
+        assert!(out.stats.workspace_bytes < st_naive.workspace_bytes);
+    }
+
+    #[test]
+    fn two_stage_labels() {
+        let shape = MobaShape::new(64, 4, 16, 1);
+        let (q, kk, v) = qkv(35, 64, 4);
+        let out = flash_moba_forward(&q, &kk, &v, shape, FlashMobaConfig::default());
+        assert!(out.stats.get("flash_topk").is_some());
+        assert!(out.stats.get("fwd").is_some());
+        assert_eq!(out.stats.stages().len(), 2);
+    }
+}

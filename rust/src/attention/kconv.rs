@@ -1,0 +1,64 @@
+//! Depthwise causal key convolution (paper Appendix B), rust mirror of
+//! `python/compile/kernels/kconv.py`:
+//!
+//!   k'_t = k_t + SiLU( Σ_l w_l ⊙ k_{t-l} )
+
+fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// k: (n, d); w: (width, d) depthwise taps. Returns (n, d).
+pub fn kconv(k: &[f32], w: &[f32], n: usize, d: usize, width: usize) -> Vec<f32> {
+    assert_eq!(k.len(), n * d);
+    assert_eq!(w.len(), width * d);
+    let mut out = vec![0.0f32; n * d];
+    for t in 0..n {
+        for c in 0..d {
+            let mut acc = 0.0f32;
+            for lag in 0..width.min(t + 1) {
+                acc += w[lag * d + c] * k[(t - lag) * d + c];
+            }
+            out[t * d + c] = k[t * d + c] + silu(acc);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::testutil::Rng;
+
+    #[test]
+    fn zero_weights_identity() {
+        let mut rng = Rng::new(1);
+        let k = rng.normal_vec(32 * 4);
+        let out = kconv(&k, &vec![0.0; 3 * 4], 32, 4, 3);
+        assert_eq!(out, k);
+    }
+
+    #[test]
+    fn causal() {
+        let mut rng = Rng::new(2);
+        let k = rng.normal_vec(16 * 2);
+        let w = rng.normal_vec(5 * 2);
+        let a = kconv(&k, &w, 16, 2, 5);
+        let mut k2 = k.clone();
+        k2[10 * 2] += 7.0;
+        let b = kconv(&k2, &w, 16, 2, 5);
+        assert_eq!(&a[..10 * 2], &b[..10 * 2]);
+        assert_ne!(a[10 * 2], b[10 * 2]);
+    }
+
+    #[test]
+    fn matches_direct_formula_at_t0() {
+        // at t=0 only lag 0 contributes
+        let k = vec![2.0f32, -1.0];
+        let w = vec![0.5f32, 0.5, 9.0, 9.0]; // width 2, d 2
+        let out = kconv(&k, &w, 1, 2, 2);
+        let exp0 = 2.0 + silu(1.0);
+        let exp1 = -1.0 + silu(-0.5);
+        assert!((out[0] - exp0).abs() < 1e-6);
+        assert!((out[1] - exp1).abs() < 1e-6);
+    }
+}

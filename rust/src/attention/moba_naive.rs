@@ -1,0 +1,275 @@
+//! The *original* MoBA pipeline (Lu et al., 2025) re-implemented
+//! faithfully, overheads included — the baseline of Figures 3–4.
+//!
+//! Five stages (§5.3 "Breakdown Analysis"):
+//!   1. `gating`   — centroids + full N×n score matrix + top-k
+//!   2. `reindex`  — global reindexing: gather routed queries into
+//!                   per-block contiguous buffers
+//!   3. `routed`   — attention of gathered queries against their blocks,
+//!                   materializing *partial* outputs + logsumexps
+//!   4. `local`    — separate causal attention on each query's own block
+//!   5. `merge`    — logsumexp-weighted combination of all partials
+//!
+//! Stages 1, 2 and 5 dominate at small block sizes — exactly the
+//! overhead FlashMoBA eliminates.
+//!
+//! Also hosts [`moba_reference`], the slow token-mask oracle used by
+//! every test.
+
+use super::centroid::centroids;
+use super::simd::{axpy, dot};
+use super::dense::NEG_INF;
+use super::stats::{ws_bytes, StageStats};
+use super::topk::naive_topk;
+use super::varlen::build_varlen;
+use super::MobaShape;
+
+/// Token-mask oracle: O(N²) masked softmax, f64 accumulation.
+/// Given a routing table (n, k) (-1 padded), token t attends token u iff
+/// u <= t and (block(u) routed for t or block(u) == block(t)).
+pub fn moba_reference(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    shape: MobaShape,
+    indices: &[i32],
+) -> (Vec<f32>, Vec<f32>) {
+    let MobaShape { n, d, block, topk } = shape;
+    let scale = 1.0 / (d as f64).sqrt();
+    let mut o = vec![0.0f32; n * d];
+    let mut lse = vec![0.0f32; n];
+    for t in 0..n {
+        let own = t / block;
+        let routed = &indices[t * topk..(t + 1) * topk];
+        let qt = &q[t * d..(t + 1) * d];
+        let mut s = vec![f64::NEG_INFINITY; t + 1];
+        for (u, su) in s.iter_mut().enumerate() {
+            let ub = u / block;
+            let ok = ub == own || routed.contains(&(ub as i32));
+            if !ok {
+                continue;
+            }
+            let ku = &k[u * d..(u + 1) * d];
+            let mut dot = 0.0f64;
+            for c in 0..d {
+                dot += qt[c] as f64 * ku[c] as f64;
+            }
+            *su = dot * scale;
+        }
+        let m = s.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let mut z = 0.0f64;
+        let ot = &mut o[t * d..(t + 1) * d];
+        let mut acc = vec![0.0f64; d];
+        for (u, &su) in s.iter().enumerate() {
+            if su == f64::NEG_INFINITY {
+                continue;
+            }
+            let p = (su - m).exp();
+            z += p;
+            let vu = &v[u * d..(u + 1) * d];
+            for c in 0..d {
+                acc[c] += p * vu[c] as f64;
+            }
+        }
+        for c in 0..d {
+            ot[c] = (acc[c] / z) as f32;
+        }
+        lse[t] = (m + z.ln()) as f32;
+    }
+    (o, lse)
+}
+
+/// Full original pipeline. Returns (o, routing indices, stats).
+pub fn moba_naive_forward(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    shape: MobaShape,
+) -> (Vec<f32>, Vec<i32>, StageStats) {
+    let MobaShape { n, d, block, topk } = shape;
+    let nb = shape.n_blocks();
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut st = StageStats::new();
+
+    // ---- stage 1: gating (full score matrix!) --------------------------
+    let (indices, gate_ws) = st.time("gating", || {
+        let c = centroids(k, n, d, block);
+        naive_topk(q, &c, n, d, block, topk)
+    });
+    st.add_workspace(gate_ws + ws_bytes(&[nb * d]));
+
+    // ---- stage 2: global reindex (gather q copies per block) -----------
+    let layout = st.time("reindex", || build_varlen(&indices, n, topk, nb));
+    let gathered: Vec<Vec<f32>> = st.time("reindex", || {
+        (0..nb)
+            .map(|j| {
+                let qs = layout.queries_of(j);
+                let mut g = Vec::with_capacity(qs.len() * d);
+                for &t in qs {
+                    g.extend_from_slice(&q[t as usize * d..(t as usize + 1) * d]);
+                }
+                g
+            })
+            .collect()
+    });
+    st.add_workspace(ws_bytes(&[layout.total() * d + layout.total() + 2 * nb]));
+
+    // ---- stage 3: routed attention (partial outputs materialized) ------
+    // partials[p] = (query id, partial out, partial lse)
+    let mut partial_o = vec![0.0f32; layout.total() * d];
+    let mut partial_l = vec![0.0f32; layout.total()];
+    st.time("routed", || {
+        let mut p_idx = 0usize;
+        for j in 0..nb {
+            let qs = layout.queries_of(j);
+            let g = &gathered[j];
+            let kb = &k[j * block * d..(j + 1) * block * d];
+            let vb = &v[j * block * d..(j + 1) * block * d];
+            for (row, _t) in qs.iter().enumerate() {
+                let qt = &g[row * d..(row + 1) * d];
+                let mut s = vec![0.0f32; block];
+                let mut m = NEG_INF;
+                for (u, su) in s.iter_mut().enumerate() {
+                    *su = dot(qt, &kb[u * d..(u + 1) * d]) * scale;
+                    if *su > m {
+                        m = *su;
+                    }
+                }
+                let mut z = 0.0f32;
+                let po = &mut partial_o[p_idx * d..(p_idx + 1) * d];
+                for (u, su) in s.iter().enumerate() {
+                    let p = (su - m).exp();
+                    z += p;
+                    axpy(po, p, &vb[u * d..(u + 1) * d]);
+                }
+                for c in po.iter_mut() {
+                    *c /= z;
+                }
+                partial_l[p_idx] = m + z.ln();
+                p_idx += 1;
+            }
+        }
+    });
+    st.add_workspace(ws_bytes(&[partial_o.len(), partial_l.len()]));
+
+    // ---- stage 4: local (own block, causal) -----------------------------
+    let mut local_o = vec![0.0f32; n * d];
+    let mut local_l = vec![0.0f32; n];
+    st.time("local", || {
+        for t in 0..n {
+            let own = t / block;
+            let base = own * block;
+            let qt = &q[t * d..(t + 1) * d];
+            let mut m = NEG_INF;
+            let upto = t - base; // inclusive offset in own block
+            let mut s = vec![0.0f32; upto + 1];
+            for (u, su) in s.iter_mut().enumerate() {
+                *su = dot(qt, &k[(base + u) * d..(base + u + 1) * d]) * scale;
+                if *su > m {
+                    m = *su;
+                }
+            }
+            let mut z = 0.0f32;
+            let ot = &mut local_o[t * d..(t + 1) * d];
+            for (u, su) in s.iter().enumerate() {
+                let p = (su - m).exp();
+                z += p;
+                axpy(ot, p, &v[(base + u) * d..(base + u + 1) * d]);
+            }
+            for c in ot.iter_mut() {
+                *c /= z;
+            }
+            local_l[t] = m + z.ln();
+        }
+    });
+    st.add_workspace(ws_bytes(&[local_o.len(), local_l.len()]));
+
+    // ---- stage 5: merge --------------------------------------------------
+    let mut o = vec![0.0f32; n * d];
+    st.time("merge", || {
+        // global max per query over partials
+        let mut m = local_l.clone();
+        let mut p_idx = 0usize;
+        for j in 0..nb {
+            for &t in layout.queries_of(j) {
+                let t = t as usize;
+                if partial_l[p_idx] > m[t] {
+                    m[t] = partial_l[p_idx];
+                }
+                p_idx += 1;
+            }
+        }
+        let mut z = vec![0.0f32; n];
+        for t in 0..n {
+            let w = (local_l[t] - m[t]).exp();
+            z[t] += w;
+            axpy(&mut o[t * d..(t + 1) * d], w, &local_o[t * d..(t + 1) * d]);
+        }
+        p_idx = 0;
+        for j in 0..nb {
+            for &t in layout.queries_of(j) {
+                let t = t as usize;
+                let w = (partial_l[p_idx] - m[t]).exp();
+                z[t] += w;
+                axpy(&mut o[t * d..(t + 1) * d], w, &partial_o[p_idx * d..(p_idx + 1) * d]);
+                p_idx += 1;
+            }
+        }
+        for t in 0..n {
+            for c in 0..d {
+                o[t * d + c] /= z[t];
+            }
+        }
+    });
+    st.add_workspace(ws_bytes(&[2 * n]));
+
+    (o, indices, st)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::dense::naive_attention;
+    use crate::attention::testutil::{max_abs_diff, qkv};
+
+    #[test]
+    fn naive_pipeline_matches_reference() {
+        for (n, d, b, k) in [(128, 16, 16, 2), (256, 8, 32, 3), (64, 4, 16, 1)] {
+            let shape = MobaShape::new(n, d, b, k);
+            let (q, kk, v) = qkv(21, n, d);
+            let (o, idx, _st) = moba_naive_forward(&q, &kk, &v, shape);
+            let (oref, _) = moba_reference(&q, &kk, &v, shape, &idx);
+            assert!(max_abs_diff(&o, &oref) < 3e-5, "n={n} b={b} k={k}");
+        }
+    }
+
+    #[test]
+    fn all_blocks_routed_equals_dense() {
+        let (n, d, b) = (128, 8, 16);
+        let shape = MobaShape::new(n, d, b, n / b); // k = nb: everything routed
+        let (q, kk, v) = qkv(22, n, d);
+        let (o, _, _) = moba_naive_forward(&q, &kk, &v, shape);
+        let (oref, _) = naive_attention(&q, &kk, &v, n, d);
+        assert!(max_abs_diff(&o, &oref) < 3e-5);
+    }
+
+    #[test]
+    fn stage_labels_complete() {
+        let shape = MobaShape::new(64, 4, 16, 1);
+        let (q, kk, v) = qkv(23, 64, 4);
+        let (_, _, st) = moba_naive_forward(&q, &kk, &v, shape);
+        for label in ["gating", "reindex", "routed", "local", "merge"] {
+            assert!(st.get(label).is_some(), "missing stage {label}");
+        }
+        assert!(st.workspace_bytes > 0);
+    }
+
+    #[test]
+    fn reference_first_token_is_v0() {
+        let shape = MobaShape::new(32, 4, 8, 1);
+        let (q, kk, v) = qkv(24, 32, 4);
+        let idx = vec![-1i32; 32];
+        let (o, _) = moba_reference(&q, &kk, &v, shape, &idx);
+        assert!(max_abs_diff(&o[..4], &v[..4]) < 1e-6);
+    }
+}

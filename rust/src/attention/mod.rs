@@ -1,0 +1,82 @@
+//! CPU attention substrate — the performance testbed for the paper's
+//! efficiency claims (§4, §5.3, Figures 3–4).
+//!
+//! The paper's kernels are CUDA; this machine is a single CPU core. Per
+//! DESIGN.md §Hardware-Adaptation we reproduce the *algorithms* (and
+//! their asymptotics, overheads and crossovers) as faithful f32
+//! implementations:
+//!
+//! * [`dense`] — naive O(N²) attention plus a blocked online-softmax
+//!   implementation (the FlashAttention-2 analogue on this hardware).
+//! * [`moba_naive`] — the original MoBA pipeline from Lu et al. (2025):
+//!   five stages incl. full N×n score-matrix materialization and global
+//!   reindexing, whose overheads dominate Figure 4.
+//! * [`flash_moba`] — the paper's FlashMoBA: fused tiled top-k (no score
+//!   matrix) + gather-and-densify forward, plus the recomputation-based
+//!   backward (Algorithm 5) in [`backward`].
+//! * [`topk`], [`centroid`], [`varlen`], [`kconv`] — shared building
+//!   blocks (Algorithms 2–4, Appendix B).
+//!
+//! All single-head (N, d) row-major f32; multi-head benches loop heads.
+
+pub mod backward;
+pub mod centroid;
+pub mod dense;
+pub mod flash_moba;
+pub mod kconv;
+pub mod moba_naive;
+pub mod simd;
+pub mod stats;
+pub mod testutil;
+pub mod topk;
+pub mod varlen;
+
+pub use stats::StageStats;
+
+/// Geometry of one MoBA attention problem.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MobaShape {
+    /// sequence length
+    pub n: usize,
+    /// head dimension (paper: 64)
+    pub d: usize,
+    /// MoBA block size B
+    pub block: usize,
+    /// routed blocks per query (excluding the always-attended own block)
+    pub topk: usize,
+}
+
+impl MobaShape {
+    pub fn new(n: usize, d: usize, block: usize, topk: usize) -> Self {
+        assert!(n % block == 0, "N={n} not divisible by B={block}");
+        Self { n, d, block, topk }
+    }
+
+    pub fn n_blocks(&self) -> usize {
+        self.n / self.block
+    }
+
+    /// Attended fraction of the causal matrix (sparsity complement),
+    /// ≈ (k+1)·B / N for long sequences.
+    pub fn density(&self) -> f64 {
+        ((self.topk + 1) as f64 * self.block as f64 / self.n as f64).min(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_basics() {
+        let s = MobaShape::new(1024, 64, 128, 2);
+        assert_eq!(s.n_blocks(), 8);
+        assert!((s.density() - 3.0 * 128.0 / 1024.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn ragged_rejected() {
+        MobaShape::new(100, 64, 32, 2);
+    }
+}

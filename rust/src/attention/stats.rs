@@ -1,0 +1,100 @@
+//! Stage-level instrumentation for the pipeline breakdown experiments
+//! (Figure 4) and workspace-memory accounting (Figure 3 bottom).
+
+use std::time::{Duration, Instant};
+
+/// Named stage timings + logical workspace bytes for one pipeline run.
+#[derive(Debug, Clone, Default)]
+pub struct StageStats {
+    stages: Vec<(String, Duration)>,
+    /// peak *extra* workspace allocated by the pipeline (bytes), beyond
+    /// the q/k/v/o tensors themselves — the quantity that differs by
+    /// orders of magnitude between original MoBA and FlashMoBA.
+    pub workspace_bytes: u64,
+}
+
+impl StageStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time `f` and record it under `name`.
+    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+        let t0 = Instant::now();
+        let out = f();
+        self.stages.push((name.to_string(), t0.elapsed()));
+        out
+    }
+
+    pub fn add_workspace(&mut self, bytes: u64) {
+        self.workspace_bytes += bytes;
+    }
+
+    pub fn stages(&self) -> &[(String, Duration)] {
+        &self.stages
+    }
+
+    pub fn total(&self) -> Duration {
+        self.stages.iter().map(|(_, d)| *d).sum()
+    }
+
+    pub fn get(&self, name: &str) -> Option<Duration> {
+        // sum over repeated stages with the same label
+        let tot: Duration =
+            self.stages.iter().filter(|(n, _)| n == name).map(|(_, d)| *d).sum();
+        if self.stages.iter().any(|(n, _)| n == name) {
+            Some(tot)
+        } else {
+            None
+        }
+    }
+
+    /// Pretty one-line summary, e.g. `topk 1.2ms | attn 3.4ms (total 4.6ms)`.
+    pub fn summary(&self) -> String {
+        let parts: Vec<String> = self
+            .stages
+            .iter()
+            .map(|(n, d)| format!("{n} {:.2}ms", d.as_secs_f64() * 1e3))
+            .collect();
+        format!("{} (total {:.2}ms, ws {:.1}MB)",
+            parts.join(" | "),
+            self.total().as_secs_f64() * 1e3,
+            self.workspace_bytes as f64 / 1e6)
+    }
+}
+
+/// f32 workspace size helper: number of elements -> bytes.
+pub fn ws_bytes(lens: &[usize]) -> u64 {
+    lens.iter().map(|&l| l as u64 * 4).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_stages_in_order() {
+        let mut st = StageStats::new();
+        let x = st.time("a", || 1 + 1);
+        assert_eq!(x, 2);
+        st.time("b", || std::thread::sleep(Duration::from_millis(2)));
+        assert_eq!(st.stages().len(), 2);
+        assert!(st.get("b").unwrap() >= Duration::from_millis(2));
+        assert!(st.get("c").is_none());
+        assert!(st.total() >= st.get("b").unwrap());
+        assert!(st.summary().contains("a "));
+    }
+
+    #[test]
+    fn repeated_stage_names_accumulate() {
+        let mut st = StageStats::new();
+        st.time("x", || std::thread::sleep(Duration::from_millis(1)));
+        st.time("x", || std::thread::sleep(Duration::from_millis(1)));
+        assert!(st.get("x").unwrap() >= Duration::from_millis(2));
+    }
+
+    #[test]
+    fn ws_bytes_sums() {
+        assert_eq!(ws_bytes(&[2, 3]), 20);
+    }
+}

@@ -1,0 +1,191 @@
+//! Top-k routed-block selection.
+//!
+//! * [`naive_topk`] — the original MoBA approach: materialize the full
+//!   N×n gating-score matrix, then select per row. Memory: O(N·n) — the
+//!   §4.1 "top-k and gating overhead" bottleneck.
+//! * [`tiled_topk`] — Flash TopK (Algorithm 3): stream centroid tiles,
+//!   maintain a per-query running top-k with an insertion sort (the
+//!   paper's bubble-sort-in-registers, k ≪ n), never materializing the
+//!   score matrix.
+//!
+//! Selection is over *strictly past* blocks (the own block is always
+//! attended by the main kernel); unused slots are -1.
+
+use super::simd::dot;
+use super::stats::ws_bytes;
+
+/// Materializing reference selection. Returns ((n, k) indices, workspace bytes).
+pub fn naive_topk(
+    q: &[f32],
+    centroids: &[f32],
+    n: usize,
+    d: usize,
+    block: usize,
+    topk: usize,
+) -> (Vec<i32>, u64) {
+    let nb = centroids.len() / d;
+    // full score matrix, exactly like the original implementation
+    let mut scores = vec![0.0f32; n * nb];
+    for t in 0..n {
+        let qt = &q[t * d..(t + 1) * d];
+        for j in 0..nb {
+            scores[t * nb + j] = dot(qt, &centroids[j * d..(j + 1) * d]);
+        }
+    }
+    let ws = ws_bytes(&[scores.len()]);
+    let mut out = vec![-1i32; n * topk];
+    let mut order: Vec<usize> = Vec::with_capacity(nb);
+    for t in 0..n {
+        let own = t / block;
+        order.clear();
+        order.extend(0..own); // strictly past blocks
+        order.sort_by(|&a, &b| {
+            scores[t * nb + b].partial_cmp(&scores[t * nb + a]).unwrap()
+        });
+        for (slot, &j) in order.iter().take(topk).enumerate() {
+            out[t * topk + slot] = j as i32;
+        }
+    }
+    (out, ws)
+}
+
+/// Streaming selection (Flash TopK). Returns ((n, k) indices, workspace bytes).
+///
+/// `tile_c` is the centroid tile width; the running top-k state is
+/// O(k) per query row — `ws` counts only the per-tile score buffer.
+pub fn tiled_topk(
+    q: &[f32],
+    centroids: &[f32],
+    n: usize,
+    d: usize,
+    block: usize,
+    topk: usize,
+    tile_c: usize,
+) -> (Vec<i32>, u64) {
+    let _nb = centroids.len() / d;
+    let mut out = vec![-1i32; n * topk];
+    // per-row running state (scores descending)
+    let mut best_s = vec![f32::NEG_INFINITY; topk];
+    let mut best_i = vec![-1i32; topk];
+    let ws = ws_bytes(&[tile_c + 2 * topk]);
+
+    for t in 0..n {
+        let own = t / block; // candidates: blocks [0, own)
+        let qt = &q[t * d..(t + 1) * d];
+        best_s.fill(f32::NEG_INFINITY);
+        best_i.fill(-1);
+        let mut j0 = 0;
+        while j0 < own {
+            let jend = (j0 + tile_c).min(own);
+            for j in j0..jend {
+                let dotv = dot(qt, &centroids[j * d..(j + 1) * d]);
+                // insertion into the running top-k (paper: bubble sort)
+                if dotv > best_s[topk - 1] {
+                    let mut pos = topk - 1;
+                    while pos > 0 && best_s[pos - 1] < dotv {
+                        best_s[pos] = best_s[pos - 1];
+                        best_i[pos] = best_i[pos - 1];
+                        pos -= 1;
+                    }
+                    best_s[pos] = dotv;
+                    best_i[pos] = j as i32;
+                }
+            }
+            j0 = jend;
+        }
+        out[t * topk..(t + 1) * topk].copy_from_slice(&best_i);
+    }
+    (out, ws)
+}
+
+/// Set-equality of two routing tables (order within a row is irrelevant).
+pub fn same_selection(a: &[i32], b: &[i32], topk: usize) -> bool {
+    if a.len() != b.len() {
+        return false;
+    }
+    let mut ra: Vec<i32> = Vec::with_capacity(topk);
+    let mut rb: Vec<i32> = Vec::with_capacity(topk);
+    for (ca, cb) in a.chunks(topk).zip(b.chunks(topk)) {
+        ra.clear();
+        rb.clear();
+        ra.extend_from_slice(ca);
+        rb.extend_from_slice(cb);
+        ra.sort_unstable();
+        rb.sort_unstable();
+        if ra != rb {
+            return false;
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::centroid::centroids;
+    use crate::attention::testutil::qkv;
+
+    #[test]
+    fn tiled_matches_naive() {
+        for (n, d, b, k, tc) in [(256, 16, 32, 3, 4), (128, 8, 16, 8, 3), (512, 32, 64, 2, 8)] {
+            let (q, kk, _) = qkv(11, n, d);
+            let c = centroids(&kk, n, d, b);
+            let (a, ws_naive) = naive_topk(&q, &c, n, d, b, k);
+            let (t, ws_tiled) = tiled_topk(&q, &c, n, d, b, k, tc);
+            assert!(same_selection(&a, &t, k), "n={n} b={b} k={k}");
+            assert!(ws_naive > ws_tiled, "naive must materialize more");
+        }
+    }
+
+    #[test]
+    fn first_block_has_no_candidates() {
+        let (q, kk, _) = qkv(12, 64, 8);
+        let c = centroids(&kk, 64, 8, 16);
+        let (idx, _) = tiled_topk(&q, &c, 64, 8, 16, 2, 4);
+        for t in 0..16 {
+            assert_eq!(&idx[t * 2..t * 2 + 2], &[-1, -1]);
+        }
+    }
+
+    #[test]
+    fn selection_is_strictly_past() {
+        let (q, kk, _) = qkv(13, 256, 16);
+        let c = centroids(&kk, 256, 16, 32);
+        let (idx, _) = tiled_topk(&q, &c, 256, 16, 32, 4, 3);
+        for t in 0..256 {
+            let own = (t / 32) as i32;
+            for s in 0..4 {
+                let j = idx[t * 4 + s];
+                assert!(j < own, "t={t} j={j} own={own}");
+            }
+        }
+    }
+
+    #[test]
+    fn scores_of_selected_dominate_unselected() {
+        let (q, kk, _) = qkv(14, 128, 8);
+        let (n, d, b, k) = (128, 8, 16, 2);
+        let c = centroids(&kk, n, d, b);
+        let (idx, _) = tiled_topk(&q, &c, n, d, b, k, 4);
+        let nb = n / b;
+        let t = n - 1; // last row: all 7 past blocks candidates
+        let dots: Vec<f32> = (0..nb)
+            .map(|j| (0..d).map(|cc| q[t * d + cc] * c[j * d + cc]).sum())
+            .collect();
+        let own = t / b;
+        let sel: Vec<i32> = idx[t * k..(t + 1) * k].to_vec();
+        let min_sel = sel.iter().map(|&j| dots[j as usize]).fold(f32::MAX, f32::min);
+        for j in 0..own {
+            if !sel.contains(&(j as i32)) {
+                assert!(dots[j] <= min_sel + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn same_selection_detects_mismatch() {
+        assert!(same_selection(&[1, 2, 3, 4], &[2, 1, 4, 3], 2));
+        assert!(!same_selection(&[1, 2, 3, 4], &[1, 2, 3, 5], 2));
+        assert!(!same_selection(&[1, 2], &[1, 2, 3, 4], 2));
+    }
+}

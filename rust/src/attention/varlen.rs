@@ -1,0 +1,119 @@
+//! Varlen index reformatting (paper Algorithm 4): query-centric (N, k)
+//! top-k indices -> key-block-centric layout `(counts, offsets, flat)`
+//! where `flat[offsets[j] .. offsets[j] + counts[j]]` lists the queries
+//! routed to block j (ascending).
+//!
+//! The CUDA kernel scatters with atomics; single-threaded we get the
+//! deterministic ascending order for free by iterating queries in order.
+
+/// Key-block-centric routing layout.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct VarlenLayout {
+    pub counts: Vec<u32>,
+    pub offsets: Vec<u32>,
+    /// flat query ids, grouped by key block
+    pub flat: Vec<u32>,
+}
+
+impl VarlenLayout {
+    /// Queries routed to block `j`.
+    pub fn queries_of(&self, j: usize) -> &[u32] {
+        let o = self.offsets[j] as usize;
+        &self.flat[o..o + self.counts[j] as usize]
+    }
+
+    pub fn total(&self) -> usize {
+        self.flat.len()
+    }
+}
+
+/// Build the layout from (n, k) indices (-1 = unused slot).
+pub fn build_varlen(indices: &[i32], n: usize, topk: usize, n_blocks: usize) -> VarlenLayout {
+    assert_eq!(indices.len(), n * topk);
+    // stage 1: histogram + exclusive prefix sum (offsets)
+    let mut counts = vec![0u32; n_blocks];
+    for &j in indices {
+        if j >= 0 {
+            counts[j as usize] += 1;
+        }
+    }
+    let mut offsets = vec![0u32; n_blocks];
+    let mut acc = 0u32;
+    for j in 0..n_blocks {
+        offsets[j] = acc;
+        acc += counts[j];
+    }
+    // stage 2: scatter query ids
+    let mut flat = vec![0u32; acc as usize];
+    let mut cursor = offsets.clone();
+    for t in 0..n {
+        for s in 0..topk {
+            let j = indices[t * topk + s];
+            if j >= 0 {
+                let c = &mut cursor[j as usize];
+                flat[*c as usize] = t as u32;
+                *c += 1;
+            }
+        }
+    }
+    VarlenLayout { counts, offsets, flat }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::testutil::Rng;
+
+    #[test]
+    fn small_example() {
+        // 3 queries, k=2, 4 blocks
+        let idx = [0, 1, -1, 1, 0, 3];
+        let l = build_varlen(&idx, 3, 2, 4);
+        assert_eq!(l.counts, vec![2, 2, 0, 1]);
+        assert_eq!(l.offsets, vec![0, 2, 4, 4]);
+        assert_eq!(l.queries_of(0), &[0, 2]);
+        assert_eq!(l.queries_of(1), &[0, 1]);
+        assert_eq!(l.queries_of(2), &[0u32; 0]);
+        assert_eq!(l.queries_of(3), &[2]);
+        assert_eq!(l.total(), 5);
+    }
+
+    #[test]
+    fn is_permutation_of_valid_entries() {
+        let mut rng = Rng::new(9);
+        let (n, k, nb) = (200, 4, 16);
+        let idx: Vec<i32> =
+            (0..n * k).map(|_| rng.below(nb + 1) as i32 - 1).collect();
+        let l = build_varlen(&idx, n, k, nb);
+        assert_eq!(l.total(), idx.iter().filter(|&&x| x >= 0).count());
+        // each (t, j) pair appears exactly as many times as in the table
+        for j in 0..nb {
+            let mut got: Vec<u32> = l.queries_of(j).to_vec();
+            let mut expect: Vec<u32> = Vec::new();
+            for t in 0..n {
+                for s in 0..k {
+                    if idx[t * k + s] == j as i32 {
+                        expect.push(t as u32);
+                    }
+                }
+            }
+            got.sort_unstable();
+            expect.sort_unstable();
+            assert_eq!(got, expect, "block {j}");
+        }
+    }
+
+    #[test]
+    fn queries_sorted_ascending_per_block() {
+        let mut rng = Rng::new(10);
+        let (n, k, nb) = (100, 3, 8);
+        let idx: Vec<i32> = (0..n * k)
+            .map(|_| if rng.uniform() < 0.3 { -1 } else { rng.below(nb) as i32 })
+            .collect();
+        let l = build_varlen(&idx, n, k, nb);
+        for j in 0..nb {
+            let qs = l.queries_of(j);
+            assert!(qs.windows(2).all(|w| w[0] <= w[1]));
+        }
+    }
+}

@@ -1,0 +1,359 @@
+//! Figures 3–4 + §5.3 headline numbers, on the CPU attention substrate.
+//!
+//! Figure 3 (latency & memory vs N): dense FA-2 analogue vs original
+//! MoBA vs FlashMoBA, forward + backward + top-k decomposition. Points
+//! too slow to time on one core are skipped per-impl (the paper skips
+//! original-MoBA points past its OOM the same way); memory curves are
+//! exact workspace accounting and extend analytically to paper-scale N
+//! with the OOM budget marker.
+//!
+//! Figure 4 (stage breakdown): the original's five stages vs
+//! FlashMoBA's two at the largest timed N.
+
+use std::time::Instant;
+
+
+use crate::attention::backward::{flash_moba_backward, naive_backward};
+use crate::attention::dense::flash_attention;
+use crate::attention::flash_moba::{flash_moba_forward, FlashMobaConfig};
+use crate::attention::moba_naive::moba_naive_forward;
+use crate::attention::stats::ws_bytes;
+use crate::attention::testutil::{qkv, Rng};
+use crate::attention::MobaShape;
+use crate::config::AppConfig;
+use crate::util::json::Json;
+use crate::Result;
+
+use super::report::{self, Table};
+
+/// Measured timings for one (impl, N) point; `None` = skipped (too slow
+/// on this testbed / past the OOM budget — rendered as `--`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Point {
+    pub fwd_s: Option<f64>,
+    pub bwd_s: Option<f64>,
+    pub topk_s: Option<f64>,
+    pub workspace: u64,
+    pub oom: bool,
+}
+
+/// Analytic workspace of the original pipeline (bytes): score matrix +
+/// gathered copies + partial outputs (the Figure-3 memory story).
+pub fn naive_workspace_bytes(shape: MobaShape) -> u64 {
+    let MobaShape { n, d, topk, .. } = shape;
+    let nb = shape.n_blocks();
+    let routed = n * topk; // upper bound on routed pairs
+    ws_bytes(&[
+        n * nb,          // score matrix
+        nb * d,          // centroids
+        routed * d,      // gathered queries
+        routed * d,      // partial outputs
+        routed,          // partial lse
+        n * d + n,       // local outputs + lse
+        2 * n,           // merge workspace
+    ])
+}
+
+/// Analytic workspace of FlashMoBA (bytes).
+pub fn flash_workspace_bytes(shape: MobaShape, cfg: FlashMobaConfig) -> u64 {
+    let MobaShape { n, d, topk, .. } = shape;
+    let nb = shape.n_blocks();
+    ws_bytes(&[
+        nb * d,                      // centroids
+        cfg.topk_tile + 2 * topk,    // topk running state
+        n * topk + 2 * nb,           // varlen layout
+        2 * n + n * d,               // m, l, acc accumulators
+        cfg.tile_r * d,              // gathered tile
+        cfg.tile_r * cfg.tile_c,     // score tile
+    ])
+}
+
+/// Analytic workspace of the dense FA-2 analogue (bytes).
+pub fn dense_workspace_bytes(d: usize, br: usize, bc: usize) -> u64 {
+    ws_bytes(&[br * bc, br * d, 2 * br])
+}
+
+/// One Figure-3 sweep. `budget_bytes` reproduces the OOM cliff.
+pub struct Fig3Row {
+    pub n: usize,
+    pub dense: Point,
+    pub naive: Point,
+    pub flash: Point,
+}
+
+pub fn run_fig3(cfg: &AppConfig, quick: bool) -> Result<Vec<Fig3Row>> {
+    let b = cfg.bench.block;
+    let k = cfg.bench.topk;
+    let d = cfg.bench.head_dim;
+    let reps = if quick { 1 } else { cfg.bench.reps };
+    let budget_bytes: u64 = 2 << 30; // 2 GiB workspace budget = "80GB H100" analogue
+    // single-core time budgets (seconds) per measured point
+    let (dense_fwd_cap, dense_bwd_cap, naive_cap) =
+        if quick { (4096, 2048, 8192) } else { (16384, 8192, 32768) };
+
+    let mut rows = Vec::new();
+    for &n in &cfg.bench.fig3_lens {
+        let shape = MobaShape::new(n, d, b, k);
+        let (q, kk, v) = qkv(1000 + n as u64, n, d);
+        let mut rng = Rng::new(7 + n as u64);
+
+        // ---------------- dense (FA-2 analogue)
+        let mut dense = Point { workspace: dense_workspace_bytes(d, 64, 64), ..Default::default() };
+        if n <= dense_fwd_cap {
+            dense.fwd_s = Some(time_reps(reps, || {
+                flash_attention(&q, &kk, &v, n, d, 64, 64);
+            }));
+        }
+        if n <= dense_bwd_cap {
+            // dense backward == naive_backward with full routing
+            let full_idx = full_routing(shape);
+            let dout = rng.normal_vec(n * d);
+            let full_shape = MobaShape::new(n, d, b, shape.n_blocks());
+            dense.bwd_s = Some(time_reps(1, || {
+                naive_backward(&q, &kk, &v, &dout, full_shape, &full_idx);
+            }));
+        }
+
+        // ---------------- original MoBA
+        let naive_ws = naive_workspace_bytes(shape);
+        let mut naive = Point { workspace: naive_ws, oom: naive_ws > budget_bytes, ..Default::default() };
+        if !naive.oom && n <= naive_cap {
+            let mut topk_s = 0.0;
+            naive.fwd_s = Some(time_reps(reps, || {
+                let (_, _, st) = moba_naive_forward(&q, &kk, &v, shape);
+                topk_s += st.get("gating").unwrap().as_secs_f64()
+                    + st.get("reindex").unwrap().as_secs_f64();
+            }));
+            naive.topk_s = Some(topk_s / reps as f64);
+            let dout = rng.normal_vec(n * d);
+            let (_, idx, _) = moba_naive_forward(&q, &kk, &v, shape);
+            naive.bwd_s = Some(time_reps(1, || {
+                naive_backward(&q, &kk, &v, &dout, shape, &idx);
+            }));
+        }
+
+        // ---------------- FlashMoBA
+        let fm_cfg = FlashMobaConfig::default();
+        let mut flash = Point { workspace: flash_workspace_bytes(shape, fm_cfg), ..Default::default() };
+        let mut topk_s = 0.0;
+        flash.fwd_s = Some(time_reps(reps, || {
+            let out = flash_moba_forward(&q, &kk, &v, shape, fm_cfg);
+            topk_s += out.stats.get("flash_topk").unwrap().as_secs_f64();
+        }));
+        flash.topk_s = Some(topk_s / reps as f64);
+        let out = flash_moba_forward(&q, &kk, &v, shape, fm_cfg);
+        let dout = rng.normal_vec(n * d);
+        flash.bwd_s = Some(time_reps(1, || {
+            flash_moba_backward(&q, &kk, &v, &out.o, &out.lse, &dout, shape, &out.layout);
+        }));
+
+        rows.push(Fig3Row { n, dense, naive, flash });
+    }
+    Ok(rows)
+}
+
+fn full_routing(shape: MobaShape) -> Vec<i32> {
+    // every strictly-past block routed (dense as a MoBA special case)
+    let nb = shape.n_blocks();
+    let mut idx = vec![-1i32; shape.n * nb];
+    for t in 0..shape.n {
+        let own = t / shape.block;
+        for j in 0..own {
+            idx[t * nb + j] = j as i32;
+        }
+    }
+    idx
+}
+
+fn time_reps(reps: usize, mut f: impl FnMut()) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / reps as f64
+}
+
+fn opt_ms(x: Option<f64>) -> String {
+    x.map(|v| report::ms(v)).unwrap_or_else(|| "--".into())
+}
+
+/// Print Figure 3 and persist JSON. Returns the headline speedup
+/// (FlashMoBA vs dense at the largest common timed N).
+pub fn print_fig3(cfg: &AppConfig, rows: &[Fig3Row]) -> Result<f64> {
+    let mut t = Table::new(
+        "Figure 3 — latency (ms) & workspace (MB) vs N  [B=128-analogue, k=8]",
+        &[
+            "N", "dense.fwd", "dense.bwd", "moba.topk", "moba.fwd", "moba.bwd", "moba.ws",
+            "flash.topk", "flash.fwd", "flash.bwd", "flash.ws", "note",
+        ],
+    );
+    let mut headline: f64 = 0.0;
+    for r in rows {
+        let note = if r.naive.oom { "moba OOM" } else { "" };
+        t.row(vec![
+            r.n.to_string(),
+            opt_ms(r.dense.fwd_s),
+            opt_ms(r.dense.bwd_s),
+            opt_ms(r.naive.topk_s),
+            opt_ms(r.naive.fwd_s),
+            opt_ms(r.naive.bwd_s),
+            report::mb(r.naive.workspace),
+            opt_ms(r.flash.topk_s),
+            opt_ms(r.flash.fwd_s),
+            opt_ms(r.flash.bwd_s),
+            report::mb(r.flash.workspace),
+            note.into(),
+        ]);
+        if let (Some(dfwd), Some(ffwd)) = (r.dense.fwd_s, r.flash.fwd_s) {
+            headline = headline.max(dfwd / ffwd);
+        }
+    }
+    t.print();
+    println!("headline: FlashMoBA up to {headline:.1}x faster than dense (paper: 14.7x at 512K on H100)\n");
+
+    let blob = Json::obj(vec![
+        (
+            "rows",
+            Json::arr(
+                rows.iter()
+                    .map(|r| {
+                        Json::obj(vec![
+                            ("n", Json::from(r.n)),
+                            ("dense", point_json(&r.dense)),
+                            ("moba_naive", point_json(&r.naive)),
+                            ("flash_moba", point_json(&r.flash)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        ("headline_speedup_vs_dense", Json::from(headline)),
+    ]);
+    report::save_json(&cfg.results_dir, "fig3", &blob)?;
+    Ok(headline)
+}
+
+fn point_json(p: &Point) -> Json {
+    Json::obj(vec![
+        ("fwd_s", Json::from(p.fwd_s)),
+        ("bwd_s", Json::from(p.bwd_s)),
+        ("topk_s", Json::from(p.topk_s)),
+        ("workspace_bytes", Json::from(p.workspace)),
+        ("oom", Json::from(p.oom)),
+    ])
+}
+
+/// Figure 4: five-stage vs two-stage forward breakdown at one N.
+pub fn run_fig4(cfg: &AppConfig, n: usize) -> Result<()> {
+    let shape = MobaShape::new(n, cfg.bench.head_dim, cfg.bench.block, cfg.bench.topk);
+    let (q, k, v) = qkv(4444, n, cfg.bench.head_dim);
+
+    let (_, _, st_naive) = moba_naive_forward(&q, &k, &v, shape);
+    let out = flash_moba_forward(&q, &k, &v, shape, FlashMobaConfig::default());
+    let (_, _, dense_ws) = flash_attention(&q, &k, &v, n, cfg.bench.head_dim, 64, 64);
+    let t0 = Instant::now();
+    flash_attention(&q, &k, &v, n, cfg.bench.head_dim, 64, 64);
+    let dense_t = t0.elapsed().as_secs_f64();
+
+    let mut t = Table::new(
+        &format!("Figure 4 — forward timing breakdown at N={n}"),
+        &["impl", "stage", "ms", "% of impl total"],
+    );
+    let naive_total = st_naive.total().as_secs_f64();
+    for (name, dur) in st_naive.stages() {
+        let s = dur.as_secs_f64();
+        t.row(vec![
+            "MoBA (original)".into(),
+            name.clone(),
+            report::ms(s),
+            format!("{:.0}%", 100.0 * s / naive_total),
+        ]);
+    }
+    let flash_total = out.stats.total().as_secs_f64();
+    for (name, dur) in out.stats.stages() {
+        let s = dur.as_secs_f64();
+        t.row(vec![
+            "FlashMoBA".into(),
+            name.clone(),
+            report::ms(s),
+            format!("{:.0}%", 100.0 * s / flash_total),
+        ]);
+    }
+    t.row(vec!["FlashAttention-2".into(), "fwd".into(), report::ms(dense_t), "100%".into()]);
+    t.print();
+
+    let overhead_frac = (st_naive.get("gating").unwrap()
+        + st_naive.get("reindex").unwrap()
+        + st_naive.get("merge").unwrap())
+    .as_secs_f64()
+        / naive_total;
+    println!(
+        "original MoBA overhead stages (gating+reindex+merge): {:.0}% of runtime (paper: >70%)",
+        100.0 * overhead_frac
+    );
+    println!(
+        "FlashMoBA total {:.1} ms vs dense {:.1} ms vs original {:.1} ms\n",
+        flash_total * 1e3,
+        dense_t * 1e3,
+        naive_total * 1e3
+    );
+
+    let stage_arr = |stages: &[(String, std::time::Duration)]| {
+        Json::arr(
+            stages
+                .iter()
+                .map(|(s, d)| {
+                    Json::obj(vec![
+                        ("stage", Json::from(s.as_str())),
+                        ("s", Json::from(d.as_secs_f64())),
+                    ])
+                })
+                .collect(),
+        )
+    };
+    let blob = Json::obj(vec![
+        ("n", Json::from(n)),
+        ("moba_original_stages", stage_arr(st_naive.stages())),
+        ("flash_moba_stages", stage_arr(out.stats.stages())),
+        ("dense_fwd_s", Json::from(dense_t)),
+        ("dense_ws_bytes", Json::from(dense_ws)),
+        ("original_overhead_fraction", Json::from(overhead_frac)),
+    ]);
+    report::save_json(&cfg.results_dir, "fig4", &blob)
+}
+
+/// Ablation: FlashMoBA physical tile sizes (the §C.2 tuning trade-off).
+pub fn run_tile_ablation(cfg: &AppConfig, n: usize) -> Result<()> {
+    let shape = MobaShape::new(n, cfg.bench.head_dim, cfg.bench.block, cfg.bench.topk);
+    let (q, k, v) = qkv(555, n, cfg.bench.head_dim);
+    let mut t = Table::new(
+        &format!("Ablation — physical tile sizes at N={n}"),
+        &["tile_r", "tile_c", "fwd ms", "ws MB"],
+    );
+    let mut results = Vec::new();
+    for tile_r in [16, 32, 64, 128] {
+        for tile_c in [16, 32, 64, 128] {
+            let fm = FlashMobaConfig { tile_r, tile_c, topk_tile: 64 };
+            let t0 = Instant::now();
+            let out = flash_moba_forward(&q, &k, &v, shape, fm);
+            let el = t0.elapsed().as_secs_f64();
+            t.row(vec![
+                tile_r.to_string(),
+                tile_c.to_string(),
+                report::ms(el),
+                report::mb(out.stats.workspace_bytes),
+            ]);
+            results.push(Json::obj(vec![
+                ("tile_r", Json::from(tile_r as usize)),
+                ("tile_c", Json::from(tile_c as usize)),
+                ("fwd_s", Json::from(el)),
+            ]));
+        }
+    }
+    t.print();
+    report::save_json(
+        &cfg.results_dir,
+        "ablate_tiles",
+        &Json::obj(vec![("n", Json::from(n)), ("points", Json::arr(results))]),
+    )
+}

@@ -1,0 +1,20 @@
+//! Regeneration harness for every table and figure in the paper's
+//! evaluation (§5.2, §5.3) — see DESIGN.md §4 for the experiment index.
+//!
+//! * [`tables`] — Tables 1–6 (+ Figure 2): train the scaled variants on
+//!   the synthetic corpus via the AOT train-step artifacts, then run the
+//!   evaluators. Checkpoints are cached in `results/ckpt` so Tables 1,
+//!   3, 5 (and 2, 4, 6) share one training run per variant.
+//! * [`figures`] — Figures 3–4 + headline speedups: run the CPU
+//!   attention substrate (dense FA-2 analogue vs original MoBA vs
+//!   FlashMoBA) across sequence lengths, with stage decomposition and
+//!   workspace-memory accounting (analytic beyond the timeable range,
+//!   with the paper's OOM point reproduced as a workspace budget).
+//! * [`snr_harness`] — Eq. 1–3 validation: closed form vs Monte-Carlo,
+//!   plus paper-scale retrieval curves (the Tables 3–4 shape at 64K).
+//! * [`report`] — aligned-table printing + JSON result persistence.
+
+pub mod figures;
+pub mod report;
+pub mod snr_harness;
+pub mod tables;

@@ -1,0 +1,273 @@
+//! Tables 1–6 + Figure 2: train the scaled §5.1 variants from scratch
+//! through the AOT train-step artifacts, then evaluate. One training run
+//! per variant is cached as a checkpoint and shared by all tables.
+//!
+//! Scale mapping (DESIGN.md §3): `tiny-*` == the paper's 340M family,
+//! `small-*` == the 1B family; `tiny-moba128/64/32` == paper
+//! MoBA-512/256/128 (same candidate-block counts and k ladder at the
+//! testbed's 1024-token training context).
+
+use std::path::PathBuf;
+
+
+use crate::config::AppConfig;
+use crate::util::json::Json;
+use crate::data::corpus::{Corpus, CorpusConfig};
+use crate::data::longbench;
+use crate::data::niah::NiahVariant;
+use crate::eval::Evaluator;
+use crate::runtime::{ParamStore, Runtime};
+use crate::train::Trainer;
+use crate::Result;
+
+use super::report::{self, Table};
+
+/// Display order of variants per scale (paper table row order).
+pub fn variants_of(scale: &str) -> Vec<&'static str> {
+    match scale {
+        "tiny" => vec![
+            "tiny-dense",
+            "tiny-moba128",
+            "tiny-moba64",
+            "tiny-moba32",
+            "tiny-moba32-kconv3",
+            "tiny-moba32-kconv5",
+        ],
+        "small" => vec![
+            "small-dense",
+            "small-moba32",
+            "small-moba32-kconv3",
+            "small-moba32-kconv5",
+        ],
+        other => panic!("unknown scale {other}"),
+    }
+}
+
+/// Paper-row label for a variant.
+pub fn paper_label(variant: &str) -> String {
+    match variant {
+        "tiny-dense" | "small-dense" => "Dense".into(),
+        "tiny-moba128" => "MoBA-512*".into(),
+        "tiny-moba64" => "MoBA-256*".into(),
+        "tiny-moba32" | "small-moba32" => "MoBA-128*".into(),
+        "tiny-moba32-kconv3" | "small-moba32-kconv3" => "+ kconv3".into(),
+        "tiny-moba32-kconv5" | "small-moba32-kconv5" => "+ kconv5".into(),
+        other => other.into(),
+    }
+}
+
+fn ckpt_path(cfg: &AppConfig, variant: &str, steps: usize) -> PathBuf {
+    cfg.results_dir.join("ckpt").join(format!("{variant}_s{steps}.bin"))
+}
+
+/// Train (or load a cached checkpoint of) a variant for `steps` steps.
+pub fn ensure_trained(
+    cfg: &AppConfig,
+    runtime: &Runtime,
+    corpus: &Corpus,
+    variant: &str,
+) -> Result<ParamStore> {
+    let steps = cfg.train.steps;
+    let path = ckpt_path(cfg, variant, steps);
+    if path.exists() {
+        println!("[train] {variant}: using cached checkpoint {}", path.display());
+        return Trainer::load_checkpoint(runtime, variant, &path);
+    }
+    println!("[train] {variant}: training {steps} steps...");
+    let mut tr = Trainer::new(runtime, variant)?;
+    let mut tcfg = cfg.train.clone();
+    tcfg.steps = steps;
+    tr.run(corpus, &tcfg, |log| {
+        println!(
+            "[train] {variant} step {:>4}  loss {:.4}  lr {:.2e}  ({:.2}s/step)",
+            log.step, log.loss, log.lr, log.step_time_s
+        );
+    })?;
+    std::fs::create_dir_all(path.parent().unwrap())?;
+    let ps = tr.params()?;
+    std::fs::write(&path, ps.to_bytes()?)?;
+    // persist the loss curve alongside
+    tr.checkpoint(&cfg.results_dir.join("ckpt"), &format!("s{steps}"))?;
+    Ok(ps)
+}
+
+fn corpus_for(runtime: &Runtime, variant: &str) -> Result<Corpus> {
+    let spec = runtime.manifest().variant(variant)?;
+    Ok(Corpus::new(CorpusConfig { vocab: spec.vocab_size, ..Default::default() }))
+}
+
+/// 8 probe tasks standing in for the paper's 8 zero-shot suites.
+const LM_PROBES: [&str; 8] = [
+    "qasper", "mfield", "hotpotqa", "2wikimqa", "musique", "triviaqa", "lcc", "repobench",
+];
+
+/// Tables 1 (scale=tiny) and 2 (scale=small): LM quality.
+pub fn run_table_lm(cfg: &AppConfig, runtime: &Runtime, scale: &str) -> Result<()> {
+    let table_no = if scale == "tiny" { 1 } else { 2 };
+    let mut header = vec!["Model", "ppl↓"];
+    header.extend(LM_PROBES);
+    header.push("Avg acc↑");
+    let mut t = Table::new(
+        &format!("Table {table_no} — LM quality ({scale} scale, synthetic corpus)"),
+        &header,
+    );
+    let mut blob = Vec::new();
+    for variant in variants_of(scale) {
+        let corpus = corpus_for(runtime, variant)?;
+        let params = ensure_trained(cfg, runtime, &corpus, variant)?;
+        let mut ev = Evaluator::new(runtime, variant, params)?;
+        let ppl = ev.perplexity(&corpus, cfg.eval.ppl_batches)?;
+        let train_seq = ev.spec().seq_len;
+        let mut row = vec![paper_label(variant), report::f1(ppl)];
+        let mut accs = Vec::new();
+        for task in LM_PROBES {
+            let acc = ev.task_score(task, train_seq, cfg.eval.task_samples)?;
+            row.push(report::f1(acc));
+            accs.push(acc);
+        }
+        let avg = accs.iter().sum::<f64>() / accs.len() as f64;
+        row.push(report::f1(avg));
+        t.row(row);
+        blob.push(Json::obj(vec![
+            ("variant", Json::from(variant)),
+            ("ppl", Json::from(ppl)),
+            ("probe_acc", Json::arr(accs.iter().map(|&a| Json::from(a)).collect())),
+            ("avg", Json::from(avg)),
+        ]));
+    }
+    t.print();
+    report::save_json(
+        &cfg.results_dir,
+        &format!("table{table_no}"),
+        &Json::obj(vec![("rows", Json::arr(blob))]),
+    )
+}
+
+/// Tables 3 (tiny) and 4 (small): S-NIAH retrieval sweeps.
+pub fn run_table_niah(cfg: &AppConfig, runtime: &Runtime, scale: &str) -> Result<()> {
+    let table_no = if scale == "tiny" { 3 } else { 4 };
+    let lens = &cfg.eval.niah_lens;
+    let mut header: Vec<String> = vec!["Model".into()];
+    for v in NiahVariant::all() {
+        for &l in lens {
+            header.push(format!("{}@{}", v.label().trim_start_matches("S-NIAH-"), l));
+        }
+    }
+    header.push("Avg".into());
+    let hrefs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(
+        &format!("Table {table_no} — S-NIAH retrieval ({scale} scale, trained at 1024)"),
+        &hrefs,
+    );
+    let mut blob = Vec::new();
+    for variant in variants_of(scale) {
+        let corpus = corpus_for(runtime, variant)?;
+        let params = ensure_trained(cfg, runtime, &corpus, variant)?;
+        let mut ev = Evaluator::new(runtime, variant, params)?;
+        let mut row = vec![paper_label(variant)];
+        let mut cells = Vec::new();
+        let mut accs: Vec<f64> = Vec::new();
+        for v in NiahVariant::all() {
+            for &l in lens {
+                let acc = ev.niah_accuracy(v, l, cfg.eval.niah_samples)?;
+                row.push(format!("{acc:.0}"));
+                accs.push(acc);
+                cells.push(Json::obj(vec![
+                    ("task", Json::from(v.label())),
+                    ("len", Json::from(l)),
+                    ("acc", Json::from(acc)),
+                ]));
+            }
+        }
+        let avg: f64 = accs.iter().sum::<f64>() / accs.len() as f64;
+        row.push(report::f1(avg));
+        t.row(row);
+        blob.push(Json::obj(vec![
+            ("variant", Json::from(variant)),
+            ("cells", Json::arr(cells)),
+            ("avg", Json::from(avg)),
+        ]));
+    }
+    t.print();
+    report::save_json(
+        &cfg.results_dir,
+        &format!("table{table_no}"),
+        &Json::obj(vec![("rows", Json::arr(blob))]),
+    )
+}
+
+/// Tables 5 (tiny) and 6 (small): LongBench-proxy suite.
+pub fn run_table_longbench(cfg: &AppConfig, runtime: &Runtime, scale: &str) -> Result<()> {
+    let table_no = if scale == "tiny" { 5 } else { 6 };
+    let mut header = vec!["Model"];
+    header.extend(longbench::TASKS);
+    header.push("Avg");
+    let mut t = Table::new(
+        &format!("Table {table_no} — LongBench-proxy ({scale} scale, ctx {})", cfg.eval.task_len),
+        &header,
+    );
+    let mut blob = Vec::new();
+    for variant in variants_of(scale) {
+        let corpus = corpus_for(runtime, variant)?;
+        let params = ensure_trained(cfg, runtime, &corpus, variant)?;
+        let mut ev = Evaluator::new(runtime, variant, params)?;
+        let mut row = vec![paper_label(variant)];
+        let mut scores = Vec::new();
+        for task in longbench::TASKS {
+            let sc = ev.task_score(task, cfg.eval.task_len, cfg.eval.task_samples)?;
+            row.push(report::f1(sc));
+            scores.push(sc);
+        }
+        let avg = scores.iter().sum::<f64>() / scores.len() as f64;
+        row.push(report::f1(avg));
+        t.row(row);
+        blob.push(Json::obj(vec![
+            ("variant", Json::from(variant)),
+            ("scores", Json::arr(scores.iter().map(|&x| Json::from(x)).collect())),
+            ("avg", Json::from(avg)),
+        ]));
+    }
+    t.print();
+    report::save_json(
+        &cfg.results_dir,
+        &format!("table{table_no}"),
+        &Json::obj(vec![("rows", Json::arr(blob))]),
+    )
+}
+
+/// Figure 2: block-size ablation summary (ppl + NIAH avg vs B), derived
+/// from fresh evals of the tiny block-size ladder.
+pub fn run_fig2(cfg: &AppConfig, runtime: &Runtime) -> Result<()> {
+    let ladder = [("tiny-moba128", 128usize), ("tiny-moba64", 64), ("tiny-moba32", 32)];
+    let mut t = Table::new(
+        "Figure 2 — smaller blocks improve ppl and retrieval (tiny scale)",
+        &["B", "paper-B equiv", "ppl↓", "NIAH avg↑"],
+    );
+    let mut blob = Vec::new();
+    for (variant, b) in ladder {
+        let corpus = corpus_for(runtime, variant)?;
+        let params = ensure_trained(cfg, runtime, &corpus, variant)?;
+        let mut ev = Evaluator::new(runtime, variant, params)?;
+        let ppl = ev.perplexity(&corpus, cfg.eval.ppl_batches)?;
+        let mut accs = Vec::new();
+        for v in NiahVariant::all() {
+            for &l in &cfg.eval.niah_lens {
+                accs.push(ev.niah_accuracy(v, l, cfg.eval.niah_samples)?);
+            }
+        }
+        let niah = accs.iter().sum::<f64>() / accs.len() as f64;
+        t.row(vec![
+            b.to_string(),
+            (b * 4).to_string(),
+            report::f1(ppl),
+            report::f1(niah),
+        ]);
+        blob.push(Json::obj(vec![
+            ("B", Json::from(b)),
+            ("ppl", Json::from(ppl)),
+            ("niah_avg", Json::from(niah)),
+        ]));
+    }
+    t.print();
+    report::save_json(&cfg.results_dir, "fig2", &Json::obj(vec![("points", Json::arr(blob))]))
+}

@@ -1,0 +1,233 @@
+//! JSON-backed configuration system for the CLI and examples.
+//!
+//! Everything has a sensible default so `flash-moba <cmd>` works with no
+//! config file; `--config path.json` overrides fields selectively (every
+//! table and field is optional).
+
+use std::path::{Path, PathBuf};
+
+use anyhow::Context;
+
+use crate::util::json::Json;
+use crate::Result;
+
+#[derive(Debug, Clone)]
+pub struct AppConfig {
+    /// where `make artifacts` put the HLO + manifest
+    pub artifacts_dir: PathBuf,
+    /// where harnesses write json/csv results
+    pub results_dir: PathBuf,
+    pub train: TrainParams,
+    pub eval: EvalParams,
+    pub serve: ServeParams,
+    pub bench: BenchParams,
+}
+
+impl Default for AppConfig {
+    fn default() -> Self {
+        Self {
+            artifacts_dir: PathBuf::from("artifacts"),
+            results_dir: PathBuf::from("results"),
+            train: TrainParams::default(),
+            eval: EvalParams::default(),
+            serve: ServeParams::default(),
+            bench: BenchParams::default(),
+        }
+    }
+}
+
+/// Paper §5.1 optimizer recipe (AdamW betas/wd live in the artifact; the
+/// schedule is driven from rust).
+#[derive(Debug, Clone)]
+pub struct TrainParams {
+    pub steps: usize,
+    pub peak_lr: f64,
+    pub warmup: usize,
+    /// cosine floor as a fraction of peak
+    pub floor_frac: f64,
+    pub log_every: usize,
+    pub seed: u64,
+}
+
+impl Default for TrainParams {
+    fn default() -> Self {
+        Self { steps: 300, peak_lr: 6e-4, warmup: 20, floor_frac: 0.1, log_every: 10, seed: 42 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct EvalParams {
+    pub niah_samples: usize,
+    pub task_samples: usize,
+    pub ppl_batches: usize,
+    pub niah_lens: Vec<usize>,
+    pub task_len: usize,
+}
+
+impl Default for EvalParams {
+    fn default() -> Self {
+        Self {
+            niah_samples: 25,
+            task_samples: 10,
+            ppl_batches: 8,
+            niah_lens: vec![1024, 2048, 4096],
+            task_len: 1024,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ServeParams {
+    /// max single-head requests packed into one kernel execution
+    pub max_batch: usize,
+    /// flush deadline for a partially filled batch
+    pub max_wait_ms: u64,
+    pub queue_capacity: usize,
+}
+
+impl Default for ServeParams {
+    fn default() -> Self {
+        Self { max_batch: 4, max_wait_ms: 5, queue_capacity: 1024 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchParams {
+    /// sequence lengths for the Figure-3 sweep
+    pub fig3_lens: Vec<usize>,
+    /// repetitions per point
+    pub reps: usize,
+    /// block size / top-k for the efficiency figures (paper: 128 / 8)
+    pub block: usize,
+    pub topk: usize,
+    pub head_dim: usize,
+}
+
+impl Default for BenchParams {
+    fn default() -> Self {
+        Self {
+            fig3_lens: vec![2048, 4096, 8192, 16384, 32768],
+            reps: 3,
+            block: 128,
+            topk: 8,
+            head_dim: 64,
+        }
+    }
+}
+
+fn ov_usize(j: &Json, key: &str, dst: &mut usize) {
+    if let Some(x) = j.get(key).and_then(|x| x.as_usize()) {
+        *dst = x;
+    }
+}
+
+fn ov_f64(j: &Json, key: &str, dst: &mut f64) {
+    if let Some(x) = j.get(key).and_then(|x| x.as_f64()) {
+        *dst = x;
+    }
+}
+
+fn ov_usize_vec(j: &Json, key: &str, dst: &mut Vec<usize>) {
+    if let Some(arr) = j.get(key).and_then(|x| x.as_arr()) {
+        let parsed: Option<Vec<usize>> = arr.iter().map(|x| x.as_usize()).collect();
+        if let Some(v) = parsed {
+            *dst = v;
+        }
+    }
+}
+
+impl AppConfig {
+    /// Apply a partial JSON override onto the defaults.
+    pub fn apply(&mut self, j: &Json) {
+        if let Some(s) = j.get("artifacts_dir").and_then(|x| x.as_str()) {
+            self.artifacts_dir = PathBuf::from(s);
+        }
+        if let Some(s) = j.get("results_dir").and_then(|x| x.as_str()) {
+            self.results_dir = PathBuf::from(s);
+        }
+        if let Some(t) = j.get("train") {
+            ov_usize(t, "steps", &mut self.train.steps);
+            ov_f64(t, "peak_lr", &mut self.train.peak_lr);
+            ov_usize(t, "warmup", &mut self.train.warmup);
+            ov_f64(t, "floor_frac", &mut self.train.floor_frac);
+            ov_usize(t, "log_every", &mut self.train.log_every);
+            if let Some(x) = t.get("seed").and_then(|x| x.as_f64()) {
+                self.train.seed = x as u64;
+            }
+        }
+        if let Some(e) = j.get("eval") {
+            ov_usize(e, "niah_samples", &mut self.eval.niah_samples);
+            ov_usize(e, "task_samples", &mut self.eval.task_samples);
+            ov_usize(e, "ppl_batches", &mut self.eval.ppl_batches);
+            ov_usize_vec(e, "niah_lens", &mut self.eval.niah_lens);
+            ov_usize(e, "task_len", &mut self.eval.task_len);
+        }
+        if let Some(s) = j.get("serve") {
+            ov_usize(s, "max_batch", &mut self.serve.max_batch);
+            if let Some(x) = s.get("max_wait_ms").and_then(|x| x.as_f64()) {
+                self.serve.max_wait_ms = x as u64;
+            }
+            ov_usize(s, "queue_capacity", &mut self.serve.queue_capacity);
+        }
+        if let Some(b) = j.get("bench") {
+            ov_usize_vec(b, "fig3_lens", &mut self.bench.fig3_lens);
+            ov_usize(b, "reps", &mut self.bench.reps);
+            ov_usize(b, "block", &mut self.bench.block);
+            ov_usize(b, "topk", &mut self.bench.topk);
+            ov_usize(b, "head_dim", &mut self.bench.head_dim);
+        }
+    }
+
+    pub fn load(path: Option<&Path>) -> Result<Self> {
+        let mut cfg = Self::default();
+        if let Some(p) = path {
+            let text =
+                std::fs::read_to_string(p).with_context(|| format!("reading {p:?}"))?;
+            let j = Json::parse(&text).context("parsing config JSON")?;
+            cfg.apply(&j);
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_sane() {
+        let c = AppConfig::default();
+        assert!(c.train.steps > 0);
+        assert!(c.serve.max_batch >= 1);
+        assert!(!c.bench.fig3_lens.is_empty());
+    }
+
+    #[test]
+    fn partial_json_overrides_only_named_fields() {
+        let j = Json::parse(
+            r#"{"train": {"steps": 7}, "serve": {"max_batch": 2}, "results_dir": "/tmp/r"}"#,
+        )
+        .unwrap();
+        let mut c = AppConfig::default();
+        c.apply(&j);
+        assert_eq!(c.train.steps, 7);
+        assert_eq!(c.serve.max_batch, 2);
+        assert_eq!(c.results_dir, PathBuf::from("/tmp/r"));
+        // untouched fields keep defaults
+        assert_eq!(c.train.warmup, TrainParams::default().warmup);
+        assert_eq!(c.eval.ppl_batches, EvalParams::default().ppl_batches);
+    }
+
+    #[test]
+    fn vec_override() {
+        let j = Json::parse(r#"{"bench": {"fig3_lens": [128, 256]}}"#).unwrap();
+        let mut c = AppConfig::default();
+        c.apply(&j);
+        assert_eq!(c.bench.fig3_lens, vec![128, 256]);
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(AppConfig::load(Some(Path::new("/nonexistent/cfg.json"))).is_err());
+    }
+}

@@ -1,0 +1,222 @@
+//! Dynamic batcher: packs single-head requests into the H-head serving
+//! kernels (capacity `max_batch = H`), flushing on capacity or deadline —
+//! the standard continuous-batching trade-off (occupancy vs latency).
+//!
+//! Pure data structure (no tasks/timers inside) so invariants are
+//! proptest-able; the server drives it with `poll(now)`.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use super::request::AttnRequest;
+
+/// A group of requests that will share one kernel execution.
+#[derive(Debug)]
+pub struct Batch {
+    /// (request, enqueue timestamp)
+    pub items: Vec<(AttnRequest, Instant)>,
+    /// artifact name chosen by the router for this group
+    pub artifact: String,
+    /// kernel sequence capacity
+    pub kernel_n: usize,
+}
+
+/// One queue per (artifact) group.
+#[derive(Debug)]
+struct Lane {
+    artifact: String,
+    kernel_n: usize,
+    q: VecDeque<(AttnRequest, Instant)>,
+}
+
+#[derive(Debug)]
+pub struct Batcher {
+    lanes: Vec<Lane>,
+    max_batch: usize,
+    max_wait: Duration,
+    capacity: usize,
+    len: usize,
+}
+
+impl Batcher {
+    pub fn new(max_batch: usize, max_wait: Duration, capacity: usize) -> Self {
+        assert!(max_batch >= 1);
+        Self { lanes: Vec::new(), max_batch, max_wait, capacity, len: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    /// Enqueue; `Err(req)` returns the request when the queue is full.
+    pub fn push(
+        &mut self,
+        req: AttnRequest,
+        artifact: &str,
+        kernel_n: usize,
+        now: Instant,
+    ) -> Result<(), AttnRequest> {
+        if self.len >= self.capacity {
+            return Err(req);
+        }
+        let lane = match self.lanes.iter_mut().find(|l| l.artifact == artifact) {
+            Some(l) => l,
+            None => {
+                self.lanes.push(Lane {
+                    artifact: artifact.to_string(),
+                    kernel_n,
+                    q: VecDeque::new(),
+                });
+                self.lanes.last_mut().unwrap()
+            }
+        };
+        lane.q.push_back((req, now));
+        self.len += 1;
+        Ok(())
+    }
+
+    /// Pull the next batch to execute, if any lane is full or timed out.
+    /// Full lanes win over timed-out lanes; FIFO within a lane.
+    pub fn poll(&mut self, now: Instant) -> Option<Batch> {
+        // 1) any lane at capacity?
+        let full = self
+            .lanes
+            .iter()
+            .position(|l| l.q.len() >= self.max_batch)
+            .or_else(|| {
+                // 2) any lane whose head waited past the deadline?
+                self.lanes.iter().position(|l| {
+                    l.q.front()
+                        .map(|(_, t)| now.duration_since(*t) >= self.max_wait)
+                        .unwrap_or(false)
+                })
+            })?;
+        let lane = &mut self.lanes[full];
+        let take = lane.q.len().min(self.max_batch);
+        let items: Vec<_> = lane.q.drain(..take).collect();
+        self.len -= items.len();
+        Some(Batch { items, artifact: lane.artifact.clone(), kernel_n: lane.kernel_n })
+    }
+
+    /// Drain everything (shutdown), deadline ignored.
+    pub fn flush_all(&mut self) -> Vec<Batch> {
+        let mut out = Vec::new();
+        for lane in &mut self.lanes {
+            while !lane.q.is_empty() {
+                let take = lane.q.len().min(self.max_batch);
+                let items: Vec<_> = lane.q.drain(..take).collect();
+                self.len -= items.len();
+                out.push(Batch {
+                    items,
+                    artifact: lane.artifact.clone(),
+                    kernel_n: lane.kernel_n,
+                });
+            }
+        }
+        out
+    }
+
+    /// Earliest deadline across lanes (when the server should wake up).
+    pub fn next_deadline(&self) -> Option<Instant> {
+        self.lanes
+            .iter()
+            .filter_map(|l| l.q.front().map(|(_, t)| *t + self.max_wait))
+            .min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::request::AttnKind;
+
+    fn req(id: u64, n: usize) -> AttnRequest {
+        AttnRequest {
+            id,
+            kind: AttnKind::Moba,
+            n,
+            d: 2,
+            q: vec![0.0; n * 2],
+            k: vec![0.0; n * 2],
+            v: vec![0.0; n * 2],
+        }
+    }
+
+    #[test]
+    fn flushes_on_capacity() {
+        let mut b = Batcher::new(2, Duration::from_secs(100), 100);
+        let t = Instant::now();
+        b.push(req(1, 4), "a", 8, t).unwrap();
+        assert!(b.poll(t).is_none());
+        b.push(req(2, 4), "a", 8, t).unwrap();
+        let batch = b.poll(t).unwrap();
+        assert_eq!(batch.items.len(), 2);
+        assert_eq!(batch.items[0].0.id, 1); // FIFO
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn flushes_on_deadline() {
+        let mut b = Batcher::new(4, Duration::from_millis(10), 100);
+        let t = Instant::now();
+        b.push(req(1, 4), "a", 8, t).unwrap();
+        assert!(b.poll(t).is_none());
+        let later = t + Duration::from_millis(11);
+        let batch = b.poll(later).unwrap();
+        assert_eq!(batch.items.len(), 1);
+    }
+
+    #[test]
+    fn lanes_are_independent() {
+        let mut b = Batcher::new(2, Duration::from_secs(100), 100);
+        let t = Instant::now();
+        b.push(req(1, 4), "a", 8, t).unwrap();
+        b.push(req(2, 4), "b", 8, t).unwrap();
+        assert!(b.poll(t).is_none()); // neither lane full
+        b.push(req(3, 4), "a", 8, t).unwrap();
+        let batch = b.poll(t).unwrap();
+        assert_eq!(batch.artifact, "a");
+        assert_eq!(batch.items.len(), 2);
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn rejects_when_at_capacity() {
+        let mut b = Batcher::new(2, Duration::from_secs(1), 2);
+        let t = Instant::now();
+        b.push(req(1, 4), "a", 8, t).unwrap();
+        b.push(req(2, 4), "a", 8, t).unwrap();
+        assert!(b.push(req(3, 4), "a", 8, t).is_err());
+    }
+
+    #[test]
+    fn flush_all_empties_everything() {
+        let mut b = Batcher::new(4, Duration::from_secs(100), 100);
+        let t = Instant::now();
+        for i in 0..10 {
+            b.push(req(i, 4), if i % 2 == 0 { "a" } else { "b" }, 8, t).unwrap();
+        }
+        let batches = b.flush_all();
+        assert!(b.is_empty());
+        let total: usize = batches.iter().map(|x| x.items.len()).sum();
+        assert_eq!(total, 10);
+        assert!(batches.iter().all(|x| x.items.len() <= 4));
+    }
+
+    #[test]
+    fn next_deadline_is_earliest_head() {
+        let mut b = Batcher::new(4, Duration::from_millis(5), 100);
+        let t = Instant::now();
+        b.push(req(1, 4), "a", 8, t).unwrap();
+        b.push(req(2, 4), "b", 8, t + Duration::from_millis(2)).unwrap();
+        assert_eq!(b.next_deadline().unwrap(), t + Duration::from_millis(5));
+    }
+}

@@ -1,0 +1,123 @@
+//! Service metrics: counters + a fixed-bucket latency histogram.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+/// Log-spaced latency buckets (seconds).
+const BUCKETS: [f64; 12] = [
+    1e-4, 3e-4, 1e-3, 3e-3, 1e-2, 3e-2, 1e-1, 3e-1, 1.0, 3.0, 10.0, f64::INFINITY,
+];
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub responses: AtomicU64,
+    pub rejected: AtomicU64,
+    pub batches: AtomicU64,
+    pub batched_requests: AtomicU64,
+    hist: Mutex<Histo>,
+}
+
+#[derive(Debug, Default, Clone)]
+struct Histo {
+    counts: [u64; 12],
+    sum: f64,
+    n: u64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_latency(&self, seconds: f64) {
+        let mut h = self.hist.lock().unwrap();
+        let b = BUCKETS.iter().position(|&ub| seconds <= ub).unwrap_or(BUCKETS.len() - 1);
+        h.counts[b] += 1;
+        h.sum += seconds;
+        h.n += 1;
+    }
+
+    pub fn mean_latency_s(&self) -> f64 {
+        let h = self.hist.lock().unwrap();
+        if h.n == 0 {
+            0.0
+        } else {
+            h.sum / h.n as f64
+        }
+    }
+
+    /// Approximate quantile from the histogram (upper bucket bound).
+    pub fn latency_quantile_s(&self, q: f64) -> f64 {
+        let h = self.hist.lock().unwrap();
+        if h.n == 0 {
+            return 0.0;
+        }
+        let target = (q * h.n as f64).ceil() as u64;
+        let mut acc = 0u64;
+        for (i, &c) in h.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return BUCKETS[i];
+            }
+        }
+        BUCKETS[BUCKETS.len() - 1]
+    }
+
+    /// Mean requests per kernel launch.
+    pub fn mean_occupancy(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.batched_requests.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "req={} resp={} rejected={} batches={} occupancy={:.2} mean_lat={:.2}ms p95<={:.1}ms",
+            self.requests.load(Ordering::Relaxed),
+            self.responses.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_occupancy(),
+            self.mean_latency_s() * 1e3,
+            self.latency_quantile_s(0.95) * 1e3,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_monotone() {
+        let m = Metrics::new();
+        for i in 0..100 {
+            m.record_latency(i as f64 * 1e-3);
+        }
+        let p50 = m.latency_quantile_s(0.5);
+        let p95 = m.latency_quantile_s(0.95);
+        assert!(p50 <= p95);
+        assert!(m.mean_latency_s() > 0.0);
+    }
+
+    #[test]
+    fn occupancy_mean() {
+        let m = Metrics::new();
+        m.batches.store(2, Ordering::Relaxed);
+        m.batched_requests.store(6, Ordering::Relaxed);
+        assert_eq!(m.mean_occupancy(), 3.0);
+        assert!(m.summary().contains("occupancy=3.00"));
+    }
+
+    #[test]
+    fn empty_metrics_are_zero() {
+        let m = Metrics::new();
+        assert_eq!(m.mean_latency_s(), 0.0);
+        assert_eq!(m.latency_quantile_s(0.9), 0.0);
+        assert_eq!(m.mean_occupancy(), 0.0);
+    }
+}

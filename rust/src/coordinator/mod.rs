@@ -1,0 +1,26 @@
+//! Serving coordinator — the L3 runtime around the attention artifacts.
+//!
+//! The paper's contribution is a kernel, so the coordinator is the thin
+//! but real serving stack a deployment needs (vLLM-router-shaped):
+//!
+//! * [`request`] — typed single-head attention requests/responses.
+//! * [`router`] — routes a request to the smallest compiled artifact
+//!   that fits its sequence length (dense vs MoBA kernels).
+//! * [`batcher`] — dynamic batching: artifacts compute H=4 heads per
+//!   launch, so up to 4 single-head requests are packed per execution,
+//!   flushed on capacity or deadline (max-wait).
+//! * [`metrics`] — counters + latency histogram.
+//! * [`server`] — the tokio event loop tying it together; in-process
+//!   `submit()` API used by examples, benches and tests.
+
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod server;
+
+pub use batcher::{Batch, Batcher};
+pub use metrics::Metrics;
+pub use request::{AttnKind, AttnRequest, AttnResponse};
+pub use router::Router;
+pub use server::{Coordinator, Ticket};

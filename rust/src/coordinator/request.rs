@@ -1,0 +1,97 @@
+//! Request/response types for the attention service.
+
+use std::time::Instant;
+
+/// Which attention kernel family to serve.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AttnKind {
+    Dense,
+    Moba,
+}
+
+impl AttnKind {
+    pub fn artifact_prefix(self) -> &'static str {
+        match self {
+            AttnKind::Dense => "attn_dense_n",
+            AttnKind::Moba => "attn_moba_n",
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            AttnKind::Dense => "dense",
+            AttnKind::Moba => "moba",
+        }
+    }
+}
+
+/// One single-head attention request: q/k/v of shape (n, d) flattened.
+#[derive(Debug, Clone)]
+pub struct AttnRequest {
+    pub id: u64,
+    pub kind: AttnKind,
+    pub n: usize,
+    pub d: usize,
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl AttnRequest {
+    pub fn validate(&self) -> bool {
+        let e = self.n * self.d;
+        self.q.len() == e && self.k.len() == e && self.v.len() == e && self.n > 0
+    }
+}
+
+/// Response: the attention output plus service-side timing.
+#[derive(Debug, Clone)]
+pub struct AttnResponse {
+    pub id: u64,
+    pub o: Vec<f32>,
+    /// sequence length of the kernel actually used (>= request n)
+    pub served_n: usize,
+    /// how many requests shared the kernel launch
+    pub batch_occupancy: usize,
+    pub queued_at: Option<QueueStamp>,
+}
+
+/// Timing breadcrumbs attached by the server.
+#[derive(Debug, Clone, Copy)]
+pub struct QueueStamp {
+    pub enqueued: Instant,
+    pub executed: Instant,
+}
+
+impl QueueStamp {
+    pub fn queue_latency_s(&self) -> f64 {
+        self.executed.duration_since(self.enqueued).as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn validate_checks_lengths() {
+        let ok = AttnRequest {
+            id: 1,
+            kind: AttnKind::Moba,
+            n: 4,
+            d: 2,
+            q: vec![0.0; 8],
+            k: vec![0.0; 8],
+            v: vec![0.0; 8],
+        };
+        assert!(ok.validate());
+        let bad = AttnRequest { v: vec![0.0; 7], ..ok.clone() };
+        assert!(!bad.validate());
+    }
+
+    #[test]
+    fn artifact_prefixes() {
+        assert_eq!(AttnKind::Dense.artifact_prefix(), "attn_dense_n");
+        assert_eq!(AttnKind::Moba.artifact_prefix(), "attn_moba_n");
+    }
+}

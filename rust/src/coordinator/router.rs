@@ -1,0 +1,104 @@
+//! Routing: map (kind, sequence length) to the smallest compiled
+//! artifact that fits. Built once from the manifest; requests longer
+//! than every compiled kernel are rejected up front.
+
+use std::collections::HashMap;
+
+use anyhow::anyhow;
+
+use super::request::AttnKind;
+use crate::runtime::Manifest;
+use crate::Result;
+
+/// Routing table over the `attn_{kind}_n{N}` artifacts.
+#[derive(Debug, Clone)]
+pub struct Router {
+    /// kind -> sorted (n, artifact name)
+    table: HashMap<AttnKind, Vec<(usize, String)>>,
+    /// (h, d) of the serving kernels (from manifest input shapes)
+    pub heads: usize,
+    pub head_dim: usize,
+}
+
+impl Router {
+    pub fn from_manifest(m: &Manifest) -> Result<Self> {
+        let mut table: HashMap<AttnKind, Vec<(usize, String)>> = HashMap::new();
+        let mut heads = 0usize;
+        let mut head_dim = 0usize;
+        for (name, spec) in &m.artifacts {
+            for kind in [AttnKind::Dense, AttnKind::Moba] {
+                if let Some(rest) = name.strip_prefix(kind.artifact_prefix()) {
+                    if let Ok(n) = rest.parse::<usize>() {
+                        table.entry(kind).or_default().push((n, name.clone()));
+                        // shapes are (h, n, d)
+                        heads = spec.inputs[0].shape[0];
+                        head_dim = spec.inputs[0].shape[2];
+                    }
+                }
+            }
+        }
+        for v in table.values_mut() {
+            v.sort_unstable();
+        }
+        if table.is_empty() {
+            return Err(anyhow!("no attn_* artifacts in manifest"));
+        }
+        Ok(Self { table, heads, head_dim })
+    }
+
+    /// Smallest artifact with kernel n >= request n.
+    pub fn route(&self, kind: AttnKind, n: usize) -> Result<(usize, &str)> {
+        let list = self.table.get(&kind).ok_or_else(|| anyhow!("no artifacts for {kind:?}"))?;
+        list.iter()
+            .find(|(cap, _)| *cap >= n)
+            .map(|(cap, name)| (*cap, name.as_str()))
+            .ok_or_else(|| {
+                anyhow!("request n={n} exceeds largest compiled kernel ({})", list.last().unwrap().0)
+            })
+    }
+
+    /// All (n, artifact) pairs for a kind, ascending.
+    pub fn capacities(&self, kind: AttnKind) -> &[(usize, String)] {
+        self.table.get(&kind).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    fn manifest() -> Manifest {
+        Manifest::parse(
+            r#"{
+          "version": 1, "variants": {},
+          "artifacts": {
+            "attn_moba_n1024": {"file": "a", "inputs": [{"name":"q","shape":[4,1024,64],"dtype":"float32"}], "outputs": []},
+            "attn_moba_n4096": {"file": "b", "inputs": [{"name":"q","shape":[4,4096,64],"dtype":"float32"}], "outputs": []},
+            "attn_dense_n1024": {"file": "c", "inputs": [{"name":"q","shape":[4,1024,64],"dtype":"float32"}], "outputs": []},
+            "other_thing": {"file": "d", "inputs": [{"name":"x","shape":[1],"dtype":"float32"}], "outputs": []}
+          }
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn routes_to_smallest_fitting() {
+        let r = Router::from_manifest(&manifest()).unwrap();
+        assert_eq!(r.route(AttnKind::Moba, 512).unwrap().0, 1024);
+        assert_eq!(r.route(AttnKind::Moba, 1024).unwrap().0, 1024);
+        assert_eq!(r.route(AttnKind::Moba, 1025).unwrap().0, 4096);
+        assert!(r.route(AttnKind::Moba, 8192).is_err());
+        assert_eq!(r.heads, 4);
+        assert_eq!(r.head_dim, 64);
+    }
+
+    #[test]
+    fn dense_and_moba_tables_independent() {
+        let r = Router::from_manifest(&manifest()).unwrap();
+        assert_eq!(r.capacities(AttnKind::Dense).len(), 1);
+        assert_eq!(r.capacities(AttnKind::Moba).len(), 2);
+        assert!(r.route(AttnKind::Dense, 2048).is_err());
+    }
+}

@@ -1,0 +1,285 @@
+//! The coordinator event loop: route → batch → execute → respond.
+//!
+//! Plain threads + channels (the testbed vendors no async runtime): one
+//! worker thread owns the batcher and the PJRT executables; clients get
+//! a per-request response channel ([`Pending`] ticket) and either block
+//! on it ([`Coordinator::submit`]) or collect tickets first and join
+//! later ([`Coordinator::submit_async`]) for concurrent load.
+//!
+//! Correctness of padding: requests shorter than the kernel's sequence
+//! capacity are zero-padded *at the tail*. Because MoBA routing only
+//! scores strictly-past blocks and the own block is causally masked,
+//! tail padding can never influence rows `< n` — the served output is
+//! exactly the n-length computation (asserted by integration tests).
+
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::anyhow;
+
+use super::batcher::{Batch, Batcher};
+use super::metrics::Metrics;
+use super::request::{AttnRequest, AttnResponse, QueueStamp};
+use super::router::Router;
+use crate::config::ServeParams;
+use crate::runtime::{Runtime, Tensor};
+use crate::Result;
+
+enum Envelope {
+    Req(AttnRequest, SyncSender<Result<AttnResponse>>),
+    Shutdown,
+}
+
+/// A pending response ticket.
+pub struct Ticket(Receiver<Result<AttnResponse>>);
+
+impl Ticket {
+    /// Block until the response arrives.
+    pub fn wait(self) -> Result<AttnResponse> {
+        self.0.recv().map_err(|_| anyhow!("coordinator dropped the request"))?
+    }
+}
+
+/// In-process serving handle.
+pub struct Coordinator {
+    tx: SyncSender<Envelope>,
+    metrics: Arc<Metrics>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    /// Spawn the worker thread. The PJRT client is not `Send` (the xla
+    /// crate uses `Rc` internally), so the worker *constructs its own*
+    /// [`Runtime`] from the artifacts directory and owns all PJRT state
+    /// for its lifetime; startup errors are reported synchronously.
+    pub fn start(artifacts_dir: impl Into<PathBuf>, params: ServeParams) -> Result<Self> {
+        let dir = artifacts_dir.into();
+        let metrics = Arc::new(Metrics::new());
+        let (tx, rx) = sync_channel::<Envelope>(params.queue_capacity.max(16));
+        let (boot_tx, boot_rx) = sync_channel::<Result<()>>(1);
+        let m2 = metrics.clone();
+        let worker = std::thread::Builder::new()
+            .name("flash-moba-coordinator".into())
+            .spawn(move || {
+                let runtime = match Runtime::load(&dir) {
+                    Ok(rt) => rt,
+                    Err(e) => {
+                        let _ = boot_tx.send(Err(e));
+                        return;
+                    }
+                };
+                let router = match Router::from_manifest(runtime.manifest()) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        let _ = boot_tx.send(Err(e));
+                        return;
+                    }
+                };
+                let _ = boot_tx.send(Ok(()));
+                worker_loop(runtime, router, params, rx, m2)
+            })
+            .expect("spawn coordinator");
+        boot_rx
+            .recv()
+            .map_err(|_| anyhow!("coordinator worker died during startup"))??;
+        Ok(Self { tx, metrics, worker: Some(worker) })
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    /// Submit without blocking; returns a ticket to wait on.
+    pub fn submit_async(&self, req: AttnRequest) -> Result<Ticket> {
+        if !req.validate() {
+            return Err(anyhow!("invalid request {}: shape mismatch", req.id));
+        }
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        let (otx, orx) = sync_channel(1);
+        self.tx
+            .send(Envelope::Req(req, otx))
+            .map_err(|_| anyhow!("coordinator is down"))?;
+        Ok(Ticket(orx))
+    }
+
+    /// Submit and block for the response.
+    pub fn submit(&self, req: AttnRequest) -> Result<AttnResponse> {
+        self.submit_async(req)?.wait()
+    }
+
+    /// Graceful shutdown: drains queued work.
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Envelope::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        let _ = self.tx.try_send(Envelope::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+type Pending = Vec<(u64, SyncSender<Result<AttnResponse>>)>;
+
+fn worker_loop(
+    runtime: Runtime,
+    router: Router,
+    params: ServeParams,
+    rx: Receiver<Envelope>,
+    metrics: Arc<Metrics>,
+) {
+    let max_wait = Duration::from_millis(params.max_wait_ms);
+    let mut batcher =
+        Batcher::new(params.max_batch.min(router.heads), max_wait, params.queue_capacity);
+    let mut pending: Pending = Vec::new();
+
+    loop {
+        // wait for work or the earliest batch deadline
+        let msg = match batcher.next_deadline() {
+            None => match rx.recv() {
+                Ok(m) => Some(m),
+                Err(_) => break, // all senders gone
+            },
+            Some(dl) => {
+                let now = Instant::now();
+                if dl <= now {
+                    None // deadline passed: flush first
+                } else {
+                    match rx.recv_timeout(dl - now) {
+                        Ok(m) => Some(m),
+                        Err(RecvTimeoutError::Timeout) => None,
+                        Err(RecvTimeoutError::Disconnected) => break,
+                    }
+                }
+            }
+        };
+
+        let mut shutdown = false;
+        match msg {
+            Some(Envelope::Req(req, otx)) => match router.route(req.kind, req.n) {
+                Ok((cap, artifact)) => {
+                    let artifact = artifact.to_string();
+                    pending.push((req.id, otx));
+                    if let Err(rej) = batcher.push(req, &artifact, cap, Instant::now()) {
+                        metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                        respond(&mut pending, rej.id, Err(anyhow!("queue full")));
+                    }
+                }
+                Err(e) => {
+                    metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                    let _ = otx.send(Err(e));
+                }
+            },
+            Some(Envelope::Shutdown) => shutdown = true,
+            None => {} // deadline wake-up
+        }
+
+        // execute everything ready (all lanes on shutdown)
+        let now = Instant::now();
+        let batches: Vec<Batch> = if shutdown {
+            batcher.flush_all()
+        } else {
+            std::iter::from_fn(|| batcher.poll(now)).collect()
+        };
+        for batch in batches {
+            run_batch(&runtime, &router, batch, &mut pending, &metrics);
+        }
+        if shutdown {
+            for (_, otx) in pending.drain(..) {
+                let _ = otx.send(Err(anyhow!("coordinator shut down")));
+            }
+            break;
+        }
+    }
+}
+
+fn respond(pending: &mut Pending, id: u64, result: Result<AttnResponse>) {
+    if let Some(pos) = pending.iter().position(|(pid, _)| *pid == id) {
+        let (_, otx) = pending.swap_remove(pos);
+        let _ = otx.send(result);
+    }
+}
+
+/// Pack requests into the (H, N, d) kernel, execute, unpack, respond.
+fn run_batch(
+    runtime: &Runtime,
+    router: &Router,
+    batch: Batch,
+    pending: &mut Pending,
+    metrics: &Metrics,
+) {
+    let h = router.heads;
+    let d = router.head_dim;
+    let n = batch.kernel_n;
+    let occupancy = batch.items.len();
+    debug_assert!(occupancy <= h);
+
+    let exec = || -> Result<Vec<Tensor>> {
+        let exe = runtime.get(&batch.artifact)?;
+        let mut q = vec![0.0f32; h * n * d];
+        let mut k = vec![0.0f32; h * n * d];
+        let mut v = vec![0.0f32; h * n * d];
+        for (slot, (req, _)) in batch.items.iter().enumerate() {
+            let e = req.n * d;
+            q[slot * n * d..slot * n * d + e].copy_from_slice(&req.q);
+            k[slot * n * d..slot * n * d + e].copy_from_slice(&req.k);
+            v[slot * n * d..slot * n * d + e].copy_from_slice(&req.v);
+        }
+        let shape = [h, n, d];
+        exe.run(&[
+            Tensor::f32(q, &shape)?,
+            Tensor::f32(k, &shape)?,
+            Tensor::f32(v, &shape)?,
+        ])
+    };
+
+    match exec() {
+        Ok(outs) => {
+            let executed = Instant::now();
+            metrics.batches.fetch_add(1, Ordering::Relaxed);
+            metrics.batched_requests.fetch_add(occupancy as u64, Ordering::Relaxed);
+            let o = outs.into_iter().next().and_then(|t| t.into_f32().ok());
+            match o {
+                Some(o) => {
+                    for (slot, (req, enq)) in batch.items.iter().enumerate() {
+                        let e = req.n * d;
+                        let out = o[slot * n * d..slot * n * d + e].to_vec();
+                        let stamp = QueueStamp { enqueued: *enq, executed };
+                        metrics.record_latency(stamp.queue_latency_s());
+                        metrics.responses.fetch_add(1, Ordering::Relaxed);
+                        respond(
+                            pending,
+                            req.id,
+                            Ok(AttnResponse {
+                                id: req.id,
+                                o: out,
+                                served_n: n,
+                                batch_occupancy: occupancy,
+                                queued_at: Some(stamp),
+                            }),
+                        );
+                    }
+                }
+                None => {
+                    for (req, _) in &batch.items {
+                        respond(pending, req.id, Err(anyhow!("bad kernel output")));
+                    }
+                }
+            }
+        }
+        Err(e) => {
+            for (req, _) in &batch.items {
+                respond(pending, req.id, Err(anyhow!("execution failed: {e}")));
+            }
+        }
+    }
+}

@@ -1,0 +1,276 @@
+//! LongBench proxy suite (paper Tables 5–6): 12 synthetic tasks keeping
+//! LongBench's grouping and relative difficulty structure, expressed
+//! over the shared vocabulary. Every task emits a [`TaskSample`] scored
+//! by teacher-forced next-token accuracy on the answer span.
+//!
+//! | group          | paper tasks            | proxy mechanics                      |
+//! |----------------|------------------------|--------------------------------------|
+//! | single-doc QA  | Qasper, MField         | 1-hop fact lookup; entity+field keys |
+//! | multi-doc QA   | HotpotQA, 2Wiki, MuSiQue | 2–3-hop chained lookups across docs |
+//! | summarization  | GovReport, QMSum, MNews | copy the IMPORTANT-tagged span       |
+//! | few-shot       | TriviaQA, SAMSum       | in-context pattern induction          |
+//! | code           | LCC, RepoBench-P       | assignment chasing, cross-"file"     |
+
+use super::vocabulary::{Vocab, ASSIGN, CALL, DEF, DOC, ENT, FIELD, IMPORTANT, QUERY, SAYS, SUMMARIZE};
+use super::TaskSample;
+use crate::attention::testutil::Rng;
+
+/// Task identifiers in paper column order (Tables 5–6).
+pub const TASKS: [&str; 12] = [
+    "qasper", "mfield", "hotpotqa", "2wikimqa", "musique", "gov_report", "qmsum",
+    "multi_news", "triviaqa", "samsum", "lcc", "repobench",
+];
+
+/// Group label for a task (report formatting).
+pub fn group_of(task: &str) -> &'static str {
+    match task {
+        "qasper" | "mfield" => "Single-Doc QA",
+        "hotpotqa" | "2wikimqa" | "musique" => "Multi-Doc QA",
+        "gov_report" | "qmsum" | "multi_news" => "Summarization",
+        "triviaqa" | "samsum" => "Few-shot",
+        "lcc" | "repobench" => "Code",
+        _ => "Unknown",
+    }
+}
+
+/// Generate one sample of `len` tokens for `task`.
+pub fn generate(vocab: Vocab, task: &str, len: usize, seed: u64) -> TaskSample {
+    let mut rng = Rng::new(seed.wrapping_mul(0x2545_F491).wrapping_add(7));
+    match task {
+        "qasper" => single_doc_qa(vocab, len, &mut rng, false),
+        "mfield" => single_doc_qa(vocab, len, &mut rng, true),
+        "hotpotqa" => multi_doc_qa(vocab, len, &mut rng, 2, false),
+        "2wikimqa" => multi_doc_qa(vocab, len, &mut rng, 2, true),
+        "musique" => multi_doc_qa(vocab, len, &mut rng, 3, false),
+        "gov_report" => summarize(vocab, len, &mut rng, 1, false),
+        "qmsum" => summarize(vocab, len, &mut rng, 2, true),
+        "multi_news" => summarize(vocab, len, &mut rng, 2, false),
+        "triviaqa" => few_shot(vocab, len, &mut rng, 4),
+        "samsum" => dialogue(vocab, len, &mut rng),
+        "lcc" => code(vocab, len, &mut rng, false),
+        "repobench" => code(vocab, len, &mut rng, true),
+        other => panic!("unknown task {other}"),
+    }
+}
+
+fn filler(vocab: Vocab, rng: &mut Rng, out: &mut Vec<i32>, count: usize) {
+    for _ in 0..count {
+        out.push(vocab.lang_base() + rng.below(vocab.lang_count()) as i32);
+    }
+}
+
+fn pad_to(vocab: Vocab, rng: &mut Rng, tokens: &mut Vec<i32>, head: usize) {
+    // pad *in front* so the probe stays at the end
+    let missing = head;
+    let mut pre = Vec::with_capacity(missing);
+    filler(vocab, rng, &mut pre, missing);
+    pre.append(tokens);
+    *tokens = pre;
+}
+
+/// 1-hop lookup. `fielded`: key = (entity, field) pair (MField flavour).
+fn single_doc_qa(vocab: Vocab, len: usize, rng: &mut Rng, fielded: bool) -> TaskSample {
+    let n_facts = 6;
+    let ents: Vec<i32> = (0..n_facts).map(|_| vocab.key(rng.below(128))).collect();
+    let fields: Vec<i32> = (0..n_facts).map(|_| vocab.key(rng.below(128))).collect();
+    let vals: Vec<i32> = (0..n_facts).map(|_| vocab.value(rng.below(128))).collect();
+    let mut body = Vec::new();
+    for i in 0..n_facts {
+        filler(vocab, rng, &mut body, 6);
+        if fielded {
+            body.extend_from_slice(&[ENT, ents[i], FIELD, fields[i], ASSIGN, vals[i]]);
+        } else {
+            body.extend_from_slice(&[ASSIGN, ents[i], vals[i]]);
+        }
+    }
+    let pick = rng.below(n_facts);
+    let probe = if fielded {
+        vec![QUERY, ENT, ents[pick], FIELD, fields[pick], vals[pick]]
+    } else {
+        vec![QUERY, ents[pick], vals[pick]]
+    };
+    finish(vocab, rng, len, body, probe, 1)
+}
+
+/// 2/3-hop chain across DOC-separated contexts.
+fn multi_doc_qa(vocab: Vocab, len: usize, rng: &mut Rng, hops: usize, shuffled: bool) -> TaskSample {
+    // chain k0 -> k1 -> ... -> value
+    let keys: Vec<i32> = (0..hops).map(|_| vocab.key(rng.below(128))).collect();
+    let val = vocab.value(rng.below(128));
+    let mut docs: Vec<Vec<i32>> = Vec::new();
+    for h in 0..hops {
+        let mut doc = vec![DOC];
+        filler(vocab, rng, &mut doc, 8);
+        let rhs = if h + 1 < hops { keys[h + 1] } else { val };
+        doc.extend_from_slice(&[ASSIGN, keys[h], rhs]);
+        filler(vocab, rng, &mut doc, 8);
+        docs.push(doc);
+    }
+    if shuffled && docs.len() >= 2 {
+        let last = docs.len() - 1;
+        docs.swap(0, last);
+    }
+    let body: Vec<i32> = docs.into_iter().flatten().collect();
+    let probe = vec![QUERY, keys[0], val];
+    finish(vocab, rng, len, body, probe, 1)
+}
+
+/// Copy the IMPORTANT-tagged span. `spans`: how many tagged candidates;
+/// `queried`: QMSum flavour — the probe names which span (by key).
+fn summarize(vocab: Vocab, len: usize, rng: &mut Rng, spans: usize, queried: bool) -> TaskSample {
+    let span_len = 3;
+    let keys: Vec<i32> = (0..spans).map(|_| vocab.key(rng.below(128))).collect();
+    let content: Vec<Vec<i32>> = (0..spans)
+        .map(|_| (0..span_len).map(|_| vocab.value(rng.below(128))).collect())
+        .collect();
+    let mut body = Vec::new();
+    for i in 0..spans {
+        filler(vocab, rng, &mut body, 10);
+        body.push(IMPORTANT);
+        body.push(keys[i]);
+        body.extend_from_slice(&content[i]);
+    }
+    let pick = if queried { rng.below(spans) } else { 0 };
+    let mut probe = vec![SUMMARIZE];
+    if queried {
+        probe.push(keys[pick]);
+    } else {
+        probe.push(keys[0]);
+    }
+    probe.extend_from_slice(&content[pick]);
+    finish(vocab, rng, len, body, probe, span_len)
+}
+
+/// In-context pattern induction: shots of `[QUERY k v]` with a fixed
+/// per-sample mapping; the final shot's value is scored.
+fn few_shot(vocab: Vocab, len: usize, rng: &mut Rng, shots: usize) -> TaskSample {
+    let k = vocab.key(rng.below(128));
+    let v = vocab.value(rng.below(128));
+    let mut body = Vec::new();
+    for _ in 0..shots {
+        filler(vocab, rng, &mut body, 6);
+        body.extend_from_slice(&[ASSIGN, k, v]);
+    }
+    let probe = vec![QUERY, k, v];
+    finish(vocab, rng, len, body, probe, 1)
+}
+
+/// Dialogue "summary": speakers tagged SAYS; answer = first speaker id.
+fn dialogue(vocab: Vocab, len: usize, rng: &mut Rng) -> TaskSample {
+    let speakers: Vec<i32> = (0..3).map(|_| vocab.key(rng.below(128))).collect();
+    let mut body = Vec::new();
+    for turn in 0..6 {
+        body.push(SAYS);
+        body.push(speakers[turn % speakers.len()]);
+        filler(vocab, rng, &mut body, 8);
+    }
+    let probe = vec![SUMMARIZE, SAYS, speakers[0]];
+    finish(vocab, rng, len, body, probe, 1)
+}
+
+/// Assignment chasing: `DEF f v` … `CALL f -> v`. `multi_file`:
+/// definition lives in an earlier DOC-separated "file".
+fn code(vocab: Vocab, len: usize, rng: &mut Rng, multi_file: bool) -> TaskSample {
+    let n_defs = 5;
+    let fns: Vec<i32> = (0..n_defs).map(|_| vocab.key(rng.below(128))).collect();
+    let vals: Vec<i32> = (0..n_defs).map(|_| vocab.value(rng.below(128))).collect();
+    let mut body = Vec::new();
+    for i in 0..n_defs {
+        if multi_file && i == 0 {
+            body.push(DOC);
+        }
+        filler(vocab, rng, &mut body, 5);
+        body.extend_from_slice(&[DEF, fns[i], vals[i]]);
+    }
+    if multi_file {
+        body.push(DOC);
+        filler(vocab, rng, &mut body, 12);
+    }
+    let pick = rng.below(n_defs);
+    let probe = vec![CALL, fns[pick], vals[pick]];
+    finish(vocab, rng, len, body, probe, 1)
+}
+
+/// Assemble body + probe into an exactly-`len` sample; last
+/// `answer_len` probe tokens are the scored span.
+fn finish(
+    vocab: Vocab,
+    rng: &mut Rng,
+    len: usize,
+    mut body: Vec<i32>,
+    probe: Vec<i32>,
+    answer_len: usize,
+) -> TaskSample {
+    let need = len as i64 - (body.len() + probe.len()) as i64;
+    if need > 0 {
+        pad_to(vocab, rng, &mut body, need as usize);
+    } else if need < 0 {
+        // truncate the *front* of the body (keep facts near the end intact
+        // only if they fit; generators keep body short so this is rare)
+        let cut = (-need) as usize;
+        body.drain(..cut.min(body.len()));
+    }
+    let mut tokens = body;
+    tokens.extend_from_slice(&probe);
+    debug_assert_eq!(tokens.len(), len);
+    let answer: Vec<i32> = probe[probe.len() - answer_len..].to_vec();
+    let start = len - answer_len;
+    let answer_pos: Vec<usize> = (0..answer_len).map(|i| start + i - 1).collect();
+    TaskSample { tokens, answer_pos, answer }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tasks_generate_valid_samples() {
+        let v = Vocab::new(512);
+        for task in TASKS {
+            for seed in 0..5 {
+                let s = generate(v, task, 1024, seed);
+                assert_eq!(s.tokens.len(), 1024, "{task}");
+                assert!(s.validate(), "{task} seed {seed}");
+            }
+        }
+    }
+
+    #[test]
+    fn groups_cover_all_tasks() {
+        for task in TASKS {
+            assert_ne!(group_of(task), "Unknown", "{task}");
+        }
+    }
+
+    #[test]
+    fn multi_hop_requires_chain() {
+        // answer value must appear in the body exactly once (in the chain
+        // terminus), and the probe key differs from the terminus key
+        let v = Vocab::new(512);
+        let s = generate(v, "musique", 512, 11);
+        let ans = s.answer[0];
+        let count = s.tokens[..s.tokens.len() - 1].iter().filter(|&&t| t == ans).count();
+        assert!(count >= 1);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let v = Vocab::new(512);
+        let a = generate(v, "lcc", 768, 3);
+        let b = generate(v, "lcc", 768, 3);
+        assert_eq!(a.tokens, b.tokens);
+        let c = generate(v, "lcc", 768, 4);
+        assert_ne!(a.tokens, c.tokens);
+    }
+
+    #[test]
+    fn answers_live_in_value_or_key_region() {
+        let v = Vocab::new(512);
+        for task in TASKS {
+            let s = generate(v, task, 512, 2);
+            for &a in &s.answer {
+                assert!(v.is_value(a) || v.is_key(a), "{task} answer {a}");
+            }
+        }
+    }
+}

@@ -1,0 +1,47 @@
+//! Synthetic datasets — the CPU-testbed stand-ins for FineWeb-Edu,
+//! RULER S-NIAH and LongBench (see DESIGN.md §3 Substitutions).
+//!
+//! Everything is deterministic given a seed and expressed over a small
+//! shared token vocabulary ([`vocabulary`]):
+//!
+//! * [`corpus`] — training corpus: a Zipfian bigram background language
+//!   with *episodic* key→value facts planted per sequence (bindings are
+//!   random per sequence, so predicting a queried value requires
+//!   in-context retrieval, not memorization — the ability MoBA's router
+//!   must learn).
+//! * [`niah`] — S-NIAH-1/2/3 analogues (single needle in filler; value
+//!   lengths 1/4/8 tokens) scored by teacher-forced next-token argmax.
+//! * [`longbench`] — 12 proxy tasks mirroring LongBench's grouping:
+//!   single-doc QA, multi-doc QA (2–3 hop), summarization (salience
+//!   copy), few-shot pattern induction, and code (assignment chasing).
+
+pub mod corpus;
+pub mod longbench;
+pub mod niah;
+pub mod vocabulary;
+
+pub use corpus::{Corpus, CorpusConfig};
+pub use niah::{NiahSample, NiahVariant};
+pub use vocabulary::Vocab;
+
+/// One scored evaluation sample: feed `tokens`, and for each i require
+/// `argmax logits[answer_pos[i]] == answer[i]` (next-token prediction).
+#[derive(Debug, Clone)]
+pub struct TaskSample {
+    pub tokens: Vec<i32>,
+    pub answer_pos: Vec<usize>,
+    pub answer: Vec<i32>,
+}
+
+impl TaskSample {
+    /// Internal consistency: answer positions in range, one answer each,
+    /// and the ground-truth token actually present after each position.
+    pub fn validate(&self) -> bool {
+        self.answer_pos.len() == self.answer.len()
+            && self
+                .answer_pos
+                .iter()
+                .zip(&self.answer)
+                .all(|(&p, &a)| p + 1 < self.tokens.len() && self.tokens[p + 1] == a)
+    }
+}

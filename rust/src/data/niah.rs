@@ -1,0 +1,138 @@
+//! S-NIAH analogues (RULER single-needle tasks, paper Tables 3–4).
+//!
+//! A haystack of repetitive filler sentences hides one needle
+//! `[ASSIGN key v_1 .. v_L]` at a seeded depth; the sequence ends with
+//! the probe `[QUERY key] v_1 .. v_L`. The model is scored teacher-forced:
+//! every value token must be the argmax prediction of its predecessor
+//! position (mirrors RULER's exact-match string scoring).
+//!
+//! Variants mirror RULER's difficulty ladder by value length:
+//!   S-NIAH-1 → 1 value token  ("word" needle)
+//!   S-NIAH-2 → 4 value tokens ("number" needle)
+//!   S-NIAH-3 → 8 value tokens ("uuid" needle)
+
+use super::vocabulary::{Vocab, ASSIGN, QUERY};
+use super::TaskSample;
+use crate::attention::testutil::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NiahVariant {
+    S1,
+    S2,
+    S3,
+}
+
+impl NiahVariant {
+    pub fn value_len(self) -> usize {
+        match self {
+            NiahVariant::S1 => 1,
+            NiahVariant::S2 => 4,
+            NiahVariant::S3 => 8,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            NiahVariant::S1 => "S-NIAH-1",
+            NiahVariant::S2 => "S-NIAH-2",
+            NiahVariant::S3 => "S-NIAH-3",
+        }
+    }
+
+    pub fn all() -> [NiahVariant; 3] {
+        [NiahVariant::S1, NiahVariant::S2, NiahVariant::S3]
+    }
+}
+
+pub type NiahSample = TaskSample;
+
+/// Build one sample of exactly `len` tokens.
+pub fn generate(vocab: Vocab, variant: NiahVariant, len: usize, seed: u64) -> NiahSample {
+    let vl = variant.value_len();
+    assert!(len >= 2 * (vl + 2) + 16, "context too short");
+    let mut rng = Rng::new(seed.wrapping_mul(0x9E37_79B9).wrapping_add(1));
+
+    let key = vocab.key(rng.below(128));
+    let values: Vec<i32> = (0..vl).map(|_| vocab.value(rng.below(128))).collect();
+
+    // filler: cycle of 8-token "sentences" from the language region
+    let mut filler_sentence: Vec<i32> = Vec::new();
+    for _ in 0..8 {
+        filler_sentence.push(vocab.lang_base() + rng.below(vocab.lang_count()) as i32);
+    }
+
+    let needle_len = 2 + vl; // ASSIGN key values
+    let probe_len = 2 + vl; // QUERY key values
+    let hay_len = len - needle_len - probe_len;
+    // needle depth uniform in the haystack
+    let depth = rng.below(hay_len.max(1));
+
+    let mut tokens = Vec::with_capacity(len);
+    let fill = |tokens: &mut Vec<i32>, count: usize| {
+        for i in 0..count {
+            tokens.push(filler_sentence[i % filler_sentence.len()]);
+        }
+    };
+    fill(&mut tokens, depth);
+    tokens.push(ASSIGN);
+    tokens.push(key);
+    tokens.extend_from_slice(&values);
+    fill(&mut tokens, hay_len - depth);
+    tokens.push(QUERY);
+    tokens.push(key);
+    let probe_start = tokens.len(); // first value goes here
+    tokens.extend_from_slice(&values);
+    assert_eq!(tokens.len(), len);
+
+    let answer_pos: Vec<usize> = (0..vl).map(|i| probe_start + i - 1).collect();
+    NiahSample { tokens, answer_pos, answer: values }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_validate() {
+        let v = Vocab::new(512);
+        for variant in NiahVariant::all() {
+            for seed in 0..10 {
+                let s = generate(v, variant, 1024, seed);
+                assert_eq!(s.tokens.len(), 1024);
+                assert!(s.validate(), "{variant:?} seed {seed}");
+                assert_eq!(s.answer.len(), variant.value_len());
+            }
+        }
+    }
+
+    #[test]
+    fn needle_appears_before_probe() {
+        let v = Vocab::new(512);
+        let s = generate(v, NiahVariant::S2, 512, 3);
+        let assign_pos = s.tokens.iter().position(|&t| t == ASSIGN).unwrap();
+        let query_pos = s.tokens.iter().position(|&t| t == QUERY).unwrap();
+        assert!(assign_pos < query_pos);
+        // needle values equal probe answer
+        assert_eq!(&s.tokens[assign_pos + 2..assign_pos + 6], s.answer.as_slice());
+    }
+
+    #[test]
+    fn depth_varies_with_seed() {
+        let v = Vocab::new(512);
+        let p1 = generate(v, NiahVariant::S1, 1024, 1)
+            .tokens.iter().position(|&t| t == ASSIGN).unwrap();
+        let p2 = generate(v, NiahVariant::S1, 1024, 2)
+            .tokens.iter().position(|&t| t == ASSIGN).unwrap();
+        assert_ne!(p1, p2);
+    }
+
+    #[test]
+    fn exact_length_for_all_contexts() {
+        let v = Vocab::new(512);
+        for len in [512, 1024, 2048, 4096] {
+            let s = generate(v, NiahVariant::S3, len, 9);
+            assert_eq!(s.tokens.len(), len);
+            assert!(s.validate());
+        }
+    }
+}

@@ -1,0 +1,91 @@
+//! Shared synthetic vocabulary layout.
+//!
+//! The smallest model vocab is 512, so every region fits within
+//! [0, 512); larger-vocab variants simply leave the tail for extra
+//! language tokens.
+
+/// Vocabulary regions. All generators draw from these ranges.
+#[derive(Debug, Clone, Copy)]
+pub struct Vocab {
+    pub size: usize,
+}
+
+// marker tokens
+pub const PAD: i32 = 0;
+pub const ASSIGN: i32 = 1; // "X is Y" statements
+pub const QUERY: i32 = 2; // "what is X?"
+pub const ENT: i32 = 3; // entity marker (multi-field QA)
+pub const FIELD: i32 = 4; // field marker
+pub const SUMMARIZE: i32 = 5;
+pub const IMPORTANT: i32 = 6; // salient-sentence tag
+pub const DOC: i32 = 7; // document separator
+pub const SAYS: i32 = 8; // dialogue marker
+pub const DEF: i32 = 9; // code: definition
+pub const CALL: i32 = 10; // code: reference
+pub const EOS: i32 = 11;
+pub const N_MARKERS: i32 = 16;
+
+pub const N_KEYS: i32 = 128;
+pub const N_VALUES: i32 = 128;
+
+impl Vocab {
+    pub fn new(size: usize) -> Self {
+        assert!(size >= 512, "vocab must be >= 512");
+        Self { size }
+    }
+
+    pub fn key(&self, i: usize) -> i32 {
+        N_MARKERS + (i as i32 % N_KEYS)
+    }
+
+    pub fn value(&self, i: usize) -> i32 {
+        N_MARKERS + N_KEYS + (i as i32 % N_VALUES)
+    }
+
+    /// First language (filler) token id.
+    pub fn lang_base(&self) -> i32 {
+        N_MARKERS + N_KEYS + N_VALUES
+    }
+
+    /// Number of language tokens.
+    pub fn lang_count(&self) -> usize {
+        self.size - self.lang_base() as usize
+    }
+
+    pub fn is_value(&self, t: i32) -> bool {
+        t >= N_MARKERS + N_KEYS && t < N_MARKERS + N_KEYS + N_VALUES
+    }
+
+    pub fn is_key(&self, t: i32) -> bool {
+        t >= N_MARKERS && t < N_MARKERS + N_KEYS
+    }
+
+    pub fn is_lang(&self, t: i32) -> bool {
+        t >= self.lang_base() && (t as usize) < self.size
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn regions_disjoint_and_in_range() {
+        let v = Vocab::new(512);
+        assert!(v.is_key(v.key(0)) && v.is_key(v.key(127)));
+        assert!(v.is_value(v.value(0)) && v.is_value(v.value(127)));
+        assert!(!v.is_key(v.value(0)));
+        assert!(!v.is_value(v.key(5)));
+        assert!(v.lang_count() >= 200);
+        assert!(v.is_lang(v.lang_base()));
+        assert!((v.lang_base() as usize) + v.lang_count() == 512);
+    }
+
+    #[test]
+    fn wraps_indices() {
+        let v = Vocab::new(1024);
+        assert_eq!(v.key(0), v.key(128));
+        assert_eq!(v.value(5), v.value(133));
+        assert_eq!(v.lang_count(), 1024 - 272);
+    }
+}

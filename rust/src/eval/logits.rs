@@ -1,0 +1,111 @@
+//! Pure logit math: argmax scoring and next-token NLL, computed on the
+//! host from the `(1, seq, vocab)` logits the fwd artifacts return.
+
+use crate::data::TaskSample;
+
+/// Argmax token at `pos` in a (seq, vocab) logits matrix.
+pub fn argmax(logits: &[f32], vocab: usize, pos: usize) -> i32 {
+    let row = &logits[pos * vocab..(pos + 1) * vocab];
+    let mut best = 0usize;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &x) in row.iter().enumerate() {
+        if x > bv {
+            bv = x;
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// Teacher-forced exact-match scoring of a [`TaskSample`]:
+/// returns (all_correct, per-token accuracy).
+pub fn score_sample(logits: &[f32], vocab: usize, sample: &TaskSample) -> (bool, f64) {
+    let mut correct = 0usize;
+    for (&pos, &ans) in sample.answer_pos.iter().zip(&sample.answer) {
+        if argmax(logits, vocab, pos) == ans {
+            correct += 1;
+        }
+    }
+    let acc = correct as f64 / sample.answer.len().max(1) as f64;
+    (correct == sample.answer.len(), acc)
+}
+
+/// Mean next-token negative log-likelihood over positions `0..seq-1`
+/// with `targets[i]` the gold id for position i. Numerically stable
+/// log-softmax in f64.
+pub fn nll_from_logits(logits: &[f32], vocab: usize, targets: &[i32]) -> f64 {
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    for (pos, &tgt) in targets.iter().enumerate() {
+        if tgt < 0 {
+            continue;
+        }
+        let row = &logits[pos * vocab..(pos + 1) * vocab];
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+        let z: f64 = row.iter().map(|&x| ((x as f64) - m).exp()).sum();
+        let logz = m + z.ln();
+        total += logz - row[tgt as usize] as f64;
+        count += 1;
+    }
+    total / count.max(1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_max() {
+        let logits = vec![0.1, 0.9, 0.0, /*row1*/ 5.0, -1.0, 2.0];
+        assert_eq!(argmax(&logits, 3, 0), 1);
+        assert_eq!(argmax(&logits, 3, 1), 0);
+    }
+
+    #[test]
+    fn nll_of_onehot_confident_model_is_small() {
+        // logits strongly peaked at the target
+        let vocab = 4;
+        let mut logits = vec![0.0f32; 2 * vocab];
+        logits[2] = 20.0; // pos 0 predicts token 2
+        logits[vocab + 1] = 20.0; // pos 1 predicts token 1
+        let nll = nll_from_logits(&logits, vocab, &[2, 1]);
+        assert!(nll < 1e-6, "nll={nll}");
+        let bad = nll_from_logits(&logits, vocab, &[0, 0]);
+        assert!(bad > 10.0);
+    }
+
+    #[test]
+    fn nll_uniform_is_log_vocab() {
+        let vocab = 8;
+        let logits = vec![0.0f32; 3 * vocab];
+        let nll = nll_from_logits(&logits, vocab, &[1, 2, 3]);
+        assert!((nll - (vocab as f64).ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn negative_targets_masked() {
+        let vocab = 4;
+        let logits = vec![0.0f32; 2 * vocab];
+        let a = nll_from_logits(&logits, vocab, &[1, -1]);
+        let b = nll_from_logits(&logits, vocab, &[1, 2]);
+        assert!((a - b).abs() < 1e-12); // uniform logits: same value, but
+        // the masked version averaged over 1 position only
+        assert!((a - (4f64).ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn score_sample_counts_matches() {
+        let vocab = 4;
+        let mut logits = vec![0.0f32; 4 * vocab];
+        logits[vocab + 3] = 9.0; // pos 1 -> 3
+        logits[2 * vocab + 2] = 9.0; // pos 2 -> 2
+        let s = TaskSample { tokens: vec![0, 0, 3, 2], answer_pos: vec![1, 2], answer: vec![3, 2] };
+        let (all, acc) = score_sample(&logits, vocab, &s);
+        assert!(all);
+        assert_eq!(acc, 1.0);
+        let s2 = TaskSample { tokens: vec![0, 0, 3, 1], answer_pos: vec![1, 2], answer: vec![3, 1] };
+        let (all2, acc2) = score_sample(&logits, vocab, &s2);
+        assert!(!all2);
+        assert_eq!(acc2, 0.5);
+    }
+}

@@ -1,0 +1,9 @@
+//! Evaluators: perplexity on the held-out corpus, NIAH retrieval
+//! accuracy, and the LongBench-proxy task suite — the measurement side
+//! of Tables 1–6.
+
+mod logits;
+mod runner;
+
+pub use logits::{argmax, nll_from_logits, score_sample};
+pub use runner::{EvalReport, Evaluator};

@@ -1,0 +1,167 @@
+//! The evaluator: runs a model variant's fwd artifacts over synthetic
+//! eval sets and aggregates scores.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::anyhow;
+
+use super::logits::{nll_from_logits, score_sample};
+use crate::data::{corpus::Corpus, longbench, niah, niah::NiahVariant, vocabulary::Vocab};
+use crate::runtime::{Executable, ParamStore, Runtime, Tensor, VariantSpec};
+use crate::Result;
+
+/// Aggregated evaluation results for one variant.
+#[derive(Debug, Clone, Default)]
+pub struct EvalReport {
+    pub wiki_ppl: Option<f64>,
+    /// (niah variant label, context len) -> accuracy %
+    pub niah: BTreeMap<(String, usize), f64>,
+    /// longbench task -> score %
+    pub tasks: BTreeMap<String, f64>,
+}
+
+impl EvalReport {
+    pub fn niah_avg(&self) -> f64 {
+        if self.niah.is_empty() {
+            return 0.0;
+        }
+        self.niah.values().sum::<f64>() / self.niah.len() as f64
+    }
+
+    pub fn task_avg(&self) -> f64 {
+        if self.tasks.is_empty() {
+            return 0.0;
+        }
+        self.tasks.values().sum::<f64>() / self.tasks.len() as f64
+    }
+}
+
+/// Evaluates one variant with a given parameter set.
+pub struct Evaluator<'rt> {
+    runtime: &'rt Runtime,
+    spec: VariantSpec,
+    params: ParamStore,
+    vocab: Vocab,
+    /// fwd executables keyed by context length (lazy)
+    fwd: BTreeMap<usize, Arc<Executable>>,
+}
+
+impl<'rt> Evaluator<'rt> {
+    pub fn new(runtime: &'rt Runtime, variant: &str, params: ParamStore) -> Result<Self> {
+        let spec = runtime.manifest().variant(variant)?.clone();
+        let vocab = Vocab::new(spec.vocab_size);
+        Ok(Self { runtime, spec, params, vocab, fwd: BTreeMap::new() })
+    }
+
+    pub fn spec(&self) -> &VariantSpec {
+        &self.spec
+    }
+
+    pub fn vocab(&self) -> Vocab {
+        self.vocab
+    }
+
+    /// Largest supported eval context ≤ requested (or smallest overall).
+    pub fn supported_seq(&self, want: usize) -> usize {
+        let mut seqs = self.spec.eval_seqs.clone();
+        seqs.sort_unstable();
+        *seqs.iter().rev().find(|&&s| s <= want).unwrap_or(&seqs[0])
+    }
+
+    fn fwd_exe(&mut self, seq: usize) -> Result<Arc<Executable>> {
+        if let Some(e) = self.fwd.get(&seq) {
+            return Ok(e.clone());
+        }
+        let name = self.spec.fwd_artifact(seq)?.to_string();
+        let exe = self.runtime.get(&name)?;
+        self.fwd.insert(seq, exe.clone());
+        Ok(exe)
+    }
+
+    /// Run the model over `tokens` (len == a supported seq); returns
+    /// flattened (seq, vocab) logits.
+    pub fn forward(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let seq = tokens.len();
+        if !self.spec.eval_seqs.contains(&seq) {
+            return Err(anyhow!(
+                "seq {seq} unsupported for {} (have {:?})",
+                self.spec.name,
+                self.spec.eval_seqs
+            ));
+        }
+        let exe = self.fwd_exe(seq)?;
+        let mut inputs = Vec::with_capacity(1 + self.params.len());
+        inputs.push(Tensor::i32(tokens.to_vec(), &[1, seq])?);
+        inputs.extend(self.params.tensors().iter().cloned());
+        let out = exe.run(&inputs)?;
+        out.into_iter().next().ok_or_else(|| anyhow!("no logits output"))?.into_f32()
+    }
+
+    /// Held-out perplexity over `batches` sequences at the training seq.
+    pub fn perplexity(&mut self, corpus: &Corpus, batches: usize) -> Result<f64> {
+        let seq = self.supported_seq(self.spec.seq_len);
+        let vocab = self.spec.vocab_size;
+        let mut total = 0.0f64;
+        let mut n = 0usize;
+        for i in 0..batches {
+            let (tokens, targets) = corpus.heldout_batch(1, seq, i as u64);
+            let logits = self.forward(&tokens)?;
+            total += nll_from_logits(&logits, vocab, &targets);
+            n += 1;
+        }
+        Ok((total / n.max(1) as f64).exp())
+    }
+
+    /// NIAH accuracy (%) at context `len` over `samples` samples.
+    pub fn niah_accuracy(&mut self, variant: NiahVariant, len: usize, samples: usize) -> Result<f64> {
+        let seq = self.supported_seq(len);
+        let vocab = self.spec.vocab_size;
+        let mut ok = 0usize;
+        for s in 0..samples {
+            let sample = niah::generate(self.vocab, variant, seq, s as u64);
+            let logits = self.forward(&sample.tokens)?;
+            if score_sample(&logits, vocab, &sample).0 {
+                ok += 1;
+            }
+        }
+        Ok(100.0 * ok as f64 / samples.max(1) as f64)
+    }
+
+    /// LongBench-proxy score (%) for one task (mean token accuracy).
+    pub fn task_score(&mut self, task: &str, len: usize, samples: usize) -> Result<f64> {
+        let seq = self.supported_seq(len);
+        let vocab = self.spec.vocab_size;
+        let mut acc = 0.0f64;
+        for s in 0..samples {
+            let sample = longbench::generate(self.vocab, task, seq, s as u64);
+            let logits = self.forward(&sample.tokens)?;
+            acc += score_sample(&logits, vocab, &sample).1;
+        }
+        Ok(100.0 * acc / samples.max(1) as f64)
+    }
+
+    /// Full report: ppl + NIAH sweep + all 12 tasks.
+    pub fn full_report(
+        &mut self,
+        corpus: &Corpus,
+        niah_lens: &[usize],
+        niah_samples: usize,
+        task_len: usize,
+        task_samples: usize,
+        ppl_batches: usize,
+    ) -> Result<EvalReport> {
+        let mut rep = EvalReport { wiki_ppl: Some(self.perplexity(corpus, ppl_batches)?), ..Default::default() };
+        for v in NiahVariant::all() {
+            for &len in niah_lens {
+                let acc = self.niah_accuracy(v, len, niah_samples)?;
+                rep.niah.insert((v.label().to_string(), len), acc);
+            }
+        }
+        for task in longbench::TASKS {
+            let sc = self.task_score(task, task_len, task_samples)?;
+            rep.tasks.insert(task.to_string(), sc);
+        }
+        Ok(rep)
+    }
+}

@@ -1,0 +1,32 @@
+//! # flash-moba
+//!
+//! A three-layer Rust + JAX + Pallas reproduction of *"Optimizing Mixture
+//! of Block Attention"* (Xiao et al., 2025).
+//!
+//! * **L1** — Pallas kernels (build-time python, `python/compile/kernels/`):
+//!   block centroids, Flash TopK selection, MoBA attention, key conv.
+//! * **L2** — JAX model (build-time python, `python/compile/model.py`):
+//!   the paper's hybrid SWA/MoBA transformer, AOT-lowered to HLO text.
+//! * **L3** — this crate: loads the artifacts over PJRT ([`runtime`]),
+//!   drives training ([`train`]) and serving ([`coordinator`]), and hosts
+//!   every substrate the paper's evaluation needs: a CPU attention
+//!   performance testbed ([`attention`]), the SNR statistical model
+//!   ([`snr`]), synthetic datasets ([`data`]), evaluators ([`eval`]) and
+//!   the table/figure regeneration harness ([`bench_harness`]).
+//!
+//! Python never runs on the request path: after `make artifacts`, the
+//! `flash-moba` binary is self-contained.
+
+pub mod attention;
+pub mod bench_harness;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod runtime;
+pub mod snr;
+pub mod train;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

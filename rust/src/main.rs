@@ -1,0 +1,222 @@
+//! flash-moba CLI — the L3 entrypoint.
+//!
+//! ```text
+//! flash-moba info                      # manifest / artifact inventory
+//! flash-moba train --variant tiny-moba32 --steps 200
+//! flash-moba eval  --variant tiny-moba32 [--ckpt path.bin]
+//! flash-moba bench table1|...|table6|fig2|fig3|fig4|snr|ablate-tiles|all [--quick] [--steps N]
+//! flash-moba serve-demo [--requests N] # coordinator demo over PJRT kernels
+//! ```
+
+use std::path::{Path, PathBuf};
+
+use flash_moba::bench_harness::{figures, snr_harness, tables};
+use flash_moba::config::AppConfig;
+use flash_moba::coordinator::{AttnKind, AttnRequest, Coordinator};
+use flash_moba::data::corpus::{Corpus, CorpusConfig};
+use flash_moba::eval::Evaluator;
+use flash_moba::runtime::Runtime;
+use flash_moba::train::Trainer;
+use flash_moba::util::cli::Args;
+use flash_moba::Result;
+
+const USAGE: &str = "\
+flash-moba — FlashMoBA: optimized Mixture of Block Attention (rust+JAX+Pallas reproduction)
+
+USAGE:
+  flash-moba <command> [options]
+
+COMMANDS:
+  info                         manifest / artifact inventory
+  train                        train one variant (--variant, --steps)
+  eval                         evaluate a variant (--variant, --ckpt)
+  bench <target>               regenerate a paper table/figure:
+                               table1..table6, fig2, fig3, fig4, snr,
+                               ablate-tiles, all   (--quick, --steps N)
+  serve-demo                   run the serving coordinator demo (--requests N)
+
+GLOBAL OPTIONS:
+  --config path.json           partial config override
+  --artifacts DIR              artifacts directory (default: artifacts)
+";
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &["quick"]);
+    let Some(cmd) = args.pos(0).map(|s| s.to_string()) else {
+        print!("{USAGE}");
+        return Ok(());
+    };
+
+    let mut cfg = AppConfig::load(args.get("config").map(Path::new))?;
+    if let Some(dir) = args.get("artifacts") {
+        cfg.artifacts_dir = PathBuf::from(dir);
+    }
+    if let Some(s) = args.get_usize("steps") {
+        cfg.train.steps = s;
+    }
+
+    match cmd.as_str() {
+        "info" => info(&cfg),
+        "train" => train(&cfg, args.get("variant").unwrap_or("tiny-moba32")),
+        "eval" => eval(
+            &cfg,
+            args.get("variant").unwrap_or("tiny-moba32"),
+            args.get("ckpt").map(PathBuf::from),
+        ),
+        "bench" => {
+            let target = args.pos(1).unwrap_or("all").to_string();
+            bench(&cfg, &target, args.has("quick"))
+        }
+        "serve-demo" => serve_demo(&cfg, args.get_usize("requests").unwrap_or(32)),
+        other => {
+            eprintln!("unknown command {other:?}\n\n{USAGE}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn info(cfg: &AppConfig) -> Result<()> {
+    let rt = Runtime::load(&cfg.artifacts_dir)?;
+    println!("platform: {}", rt.platform());
+    println!("artifacts dir: {}", rt.artifacts_dir().display());
+    println!("\nvariants:");
+    for (name, v) in &rt.manifest().variants {
+        println!(
+            "  {name:<24} {:>9} params  attn={:<6} B={} k={} kconv={} seq={} evals={:?}",
+            v.param_count, v.attn, v.moba_block, v.moba_topk, v.kconv, v.seq_len, v.eval_seqs
+        );
+    }
+    println!("\nartifacts: {}", rt.manifest().artifacts.len());
+    for (name, a) in &rt.manifest().artifacts {
+        println!("  {name:<28} {} inputs, {} outputs", a.inputs.len(), a.outputs.len());
+    }
+    Ok(())
+}
+
+fn train(cfg: &AppConfig, variant: &str) -> Result<()> {
+    let rt = Runtime::load(&cfg.artifacts_dir)?;
+    let spec = rt.manifest().variant(variant)?;
+    let corpus = Corpus::new(CorpusConfig { vocab: spec.vocab_size, ..Default::default() });
+    let mut tr = Trainer::new(&rt, variant)?;
+    println!(
+        "training {variant}: {} params, {} steps, batch {} x seq {}",
+        tr.spec().param_count,
+        cfg.train.steps,
+        tr.spec().train_batch,
+        tr.spec().seq_len
+    );
+    let final_loss = tr.run(&corpus, &cfg.train, |log| {
+        println!(
+            "step {:>4}  loss {:.4}  lr {:.2e}  {:.2}s/step",
+            log.step, log.loss, log.lr, log.step_time_s
+        );
+    })?;
+    tr.checkpoint(&cfg.results_dir.join("ckpt"), &format!("s{}", cfg.train.steps))?;
+    println!("final loss: {final_loss:.4}");
+    Ok(())
+}
+
+fn eval(cfg: &AppConfig, variant: &str, ckpt: Option<PathBuf>) -> Result<()> {
+    let rt = Runtime::load(&cfg.artifacts_dir)?;
+    let spec = rt.manifest().variant(variant)?.clone();
+    let params = match ckpt {
+        Some(p) => Trainer::load_checkpoint(&rt, variant, &p)?,
+        None => rt.load_init_params(variant)?,
+    };
+    let corpus = Corpus::new(CorpusConfig { vocab: spec.vocab_size, ..Default::default() });
+    let mut ev = Evaluator::new(&rt, variant, params)?;
+    let lens: Vec<usize> =
+        cfg.eval.niah_lens.iter().cloned().filter(|l| spec.eval_seqs.contains(l)).collect();
+    let rep = ev.full_report(
+        &corpus,
+        &lens,
+        cfg.eval.niah_samples,
+        cfg.eval.task_len,
+        cfg.eval.task_samples,
+        cfg.eval.ppl_batches,
+    )?;
+    println!("\n== eval {variant} ==");
+    println!("ppl: {:.2}", rep.wiki_ppl.unwrap_or(f64::NAN));
+    for ((task, len), acc) in &rep.niah {
+        println!("{task}@{len}: {acc:.0}%");
+    }
+    for (task, sc) in &rep.tasks {
+        println!("{task}: {sc:.1}");
+    }
+    println!("NIAH avg {:.1}, task avg {:.1}", rep.niah_avg(), rep.task_avg());
+    Ok(())
+}
+
+fn bench(cfg: &AppConfig, target: &str, quick: bool) -> Result<()> {
+    let needs_runtime = matches!(
+        target,
+        "table1" | "table2" | "table3" | "table4" | "table5" | "table6" | "fig2" | "all"
+    );
+    let rt = if needs_runtime { Some(Runtime::load(&cfg.artifacts_dir)?) } else { None };
+    let run_one = |cfg: &AppConfig, target: &str| -> Result<()> {
+        match target {
+            "table1" => tables::run_table_lm(cfg, rt.as_ref().unwrap(), "tiny"),
+            "table2" => tables::run_table_lm(cfg, rt.as_ref().unwrap(), "small"),
+            "table3" => tables::run_table_niah(cfg, rt.as_ref().unwrap(), "tiny"),
+            "table4" => tables::run_table_niah(cfg, rt.as_ref().unwrap(), "small"),
+            "table5" => tables::run_table_longbench(cfg, rt.as_ref().unwrap(), "tiny"),
+            "table6" => tables::run_table_longbench(cfg, rt.as_ref().unwrap(), "small"),
+            "fig2" => tables::run_fig2(cfg, rt.as_ref().unwrap()),
+            "fig3" => {
+                let rows = figures::run_fig3(cfg, quick)?;
+                figures::print_fig3(cfg, &rows).map(|_| ())
+            }
+            "fig4" => figures::run_fig4(cfg, if quick { 4096 } else { 16384 }),
+            "snr" => snr_harness::run_snr(cfg, if quick { 1000 } else { 4000 }),
+            "ablate-tiles" => figures::run_tile_ablation(cfg, if quick { 2048 } else { 8192 }),
+            other => Err(anyhow::anyhow!("unknown bench target {other}")),
+        }
+    };
+    if target == "all" {
+        for t in [
+            "snr", "fig3", "fig4", "ablate-tiles", "table1", "table3", "table5", "fig2",
+            "table2", "table4", "table6",
+        ] {
+            println!("\n######## bench {t} ########");
+            run_one(cfg, t)?;
+        }
+        Ok(())
+    } else {
+        run_one(cfg, target)
+    }
+}
+
+fn serve_demo(cfg: &AppConfig, requests: usize) -> Result<()> {
+    let coord = Coordinator::start(cfg.artifacts_dir.clone(), cfg.serve.clone())?;
+    let t0 = std::time::Instant::now();
+    let mut tickets = Vec::new();
+    for i in 0..requests {
+        let n = if i % 3 == 0 { 512 } else { 1024 };
+        let d = 64;
+        let mut rng = flash_moba::attention::testutil::Rng::new(i as u64 + 1);
+        let req = AttnRequest {
+            id: i as u64,
+            kind: if i % 4 == 0 { AttnKind::Dense } else { AttnKind::Moba },
+            n,
+            d,
+            q: rng.normal_vec(n * d),
+            k: rng.normal_vec(n * d),
+            v: rng.normal_vec(n * d),
+        };
+        tickets.push(coord.submit_async(req)?);
+    }
+    let mut ok = 0usize;
+    for t in tickets {
+        let resp = t.wait()?;
+        assert!(!resp.o.is_empty());
+        ok += 1;
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    println!(
+        "served {ok}/{requests} requests in {elapsed:.2}s ({:.1} req/s)",
+        ok as f64 / elapsed
+    );
+    println!("metrics: {}", coord.metrics().summary());
+    coord.shutdown();
+    Ok(())
+}

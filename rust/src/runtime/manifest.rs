@@ -1,0 +1,329 @@
+//! `artifacts/manifest.json` schema — the contract between `aot.py` (L2)
+//! and this runtime (L3). Every artifact's I/O signature plus every model
+//! variant's configuration and parameter table. Parsed with the in-tree
+//! JSON parser ([`crate::util::json`]).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context};
+
+use crate::util::json::Json;
+use crate::Result;
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u32,
+    pub variants: BTreeMap<String, VariantSpec>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+/// One lowered HLO graph.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            name: j.req("name")?.as_str().ok_or_else(|| anyhow!("name"))?.to_string(),
+            shape: usize_vec(j.req("shape")?)?,
+            dtype: j.req("dtype")?.as_str().ok_or_else(|| anyhow!("dtype"))?.to_string(),
+        })
+    }
+}
+
+/// One trained model variant (paper §5.1 configuration, scaled).
+#[derive(Debug, Clone)]
+pub struct VariantSpec {
+    pub name: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub ffn_dim: usize,
+    pub seq_len: usize,
+    pub window: usize,
+    /// "dense" | "moba" (even-layer global attention type)
+    pub attn: String,
+    pub moba_block: usize,
+    pub moba_topk: usize,
+    pub kconv: usize,
+    pub use_pallas: bool,
+    pub param_count: usize,
+    pub params: Vec<ParamSpec>,
+    pub init_file: String,
+    pub train_batch: usize,
+    pub eval_seqs: Vec<usize>,
+    pub train_step: Option<String>,
+    /// eval seq len -> fwd artifact name
+    pub fwd: BTreeMap<usize, String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+fn usize_vec(j: &Json) -> Result<Vec<usize>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow!("expected array"))?
+        .iter()
+        .map(|x| x.as_usize().ok_or_else(|| anyhow!("expected number")))
+        .collect()
+}
+
+fn get_usize(j: &Json, key: &str) -> Result<usize> {
+    j.req(key)?.as_usize().ok_or_else(|| anyhow!("field {key} not a number"))
+}
+
+fn get_str(j: &Json, key: &str) -> Result<String> {
+    Ok(j.req(key)?.as_str().ok_or_else(|| anyhow!("field {key} not a string"))?.to_string())
+}
+
+impl VariantSpec {
+    fn from_json(name: &str, j: &Json) -> Result<Self> {
+        let params = j
+            .req("params")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("params not array"))?
+            .iter()
+            .map(|p| {
+                Ok(ParamSpec { name: get_str(p, "name")?, shape: usize_vec(p.req("shape")?)? })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let fwd = j
+            .req("fwd")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("fwd not object"))?
+            .iter()
+            .map(|(k, v)| {
+                Ok((
+                    k.parse::<usize>().context("fwd key")?,
+                    v.as_str().ok_or_else(|| anyhow!("fwd value"))?.to_string(),
+                ))
+            })
+            .collect::<Result<BTreeMap<_, _>>>()?;
+        Ok(Self {
+            name: name.to_string(),
+            vocab_size: get_usize(j, "vocab_size")?,
+            d_model: get_usize(j, "d_model")?,
+            n_layers: get_usize(j, "n_layers")?,
+            n_heads: get_usize(j, "n_heads")?,
+            n_kv_heads: get_usize(j, "n_kv_heads")?,
+            head_dim: get_usize(j, "head_dim")?,
+            ffn_dim: get_usize(j, "ffn_dim")?,
+            seq_len: get_usize(j, "seq_len")?,
+            window: get_usize(j, "window")?,
+            attn: get_str(j, "attn")?,
+            moba_block: get_usize(j, "moba_block")?,
+            moba_topk: get_usize(j, "moba_topk")?,
+            kconv: get_usize(j, "kconv")?,
+            use_pallas: j.get("use_pallas").and_then(|x| x.as_bool()).unwrap_or(false),
+            param_count: get_usize(j, "param_count")?,
+            params,
+            init_file: get_str(j, "init_file")?,
+            train_batch: get_usize(j, "train_batch")?,
+            eval_seqs: usize_vec(j.req("eval_seqs")?)?,
+            train_step: j
+                .get("train_step")
+                .and_then(|x| x.as_str())
+                .map(|s| s.to_string()),
+            fwd,
+        })
+    }
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text).context("parsing manifest.json")?;
+        let mut variants = BTreeMap::new();
+        for (name, v) in j.req("variants")?.as_obj().ok_or_else(|| anyhow!("variants"))? {
+            variants.insert(
+                name.clone(),
+                VariantSpec::from_json(name, v).with_context(|| format!("variant {name}"))?,
+            );
+        }
+        let mut artifacts = BTreeMap::new();
+        for (name, a) in j.req("artifacts")?.as_obj().ok_or_else(|| anyhow!("artifacts"))? {
+            let inputs = a
+                .req("inputs")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("inputs"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = a
+                .req("outputs")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("outputs"))?
+                .iter()
+                .map(TensorSpec::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            artifacts.insert(
+                name.clone(),
+                ArtifactSpec { file: get_str(a, "file")?, inputs, outputs },
+            );
+        }
+        Ok(Manifest {
+            version: j.req("version")?.as_usize().unwrap_or(0) as u32,
+            variants,
+            artifacts,
+        })
+    }
+
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text)
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name:?} not in manifest"))
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantSpec> {
+        self.variants
+            .get(name)
+            .ok_or_else(|| anyhow!("variant {name:?} not in manifest"))
+    }
+}
+
+impl VariantSpec {
+    /// Total f32 count across all parameter tensors (== init.bin length / 4).
+    pub fn total_param_elems(&self) -> usize {
+        self.params.iter().map(|p| p.numel()).sum()
+    }
+
+    /// Fwd artifact for an eval sequence length.
+    pub fn fwd_artifact(&self, seq: usize) -> Result<&str> {
+        self.fwd
+            .get(&seq)
+            .map(|s| s.as_str())
+            .ok_or_else(|| anyhow!("variant {} has no fwd artifact at seq {}", self.name, seq))
+    }
+
+    /// Minimal spec for unit tests elsewhere in the crate.
+    #[doc(hidden)]
+    pub fn test_stub(name: &str, params: Vec<(&str, Vec<usize>)>) -> Self {
+        let params: Vec<ParamSpec> = params
+            .into_iter()
+            .map(|(n, shape)| ParamSpec { name: n.to_string(), shape })
+            .collect();
+        Self {
+            name: name.to_string(),
+            vocab_size: 512,
+            d_model: 128,
+            n_layers: 2,
+            n_heads: 2,
+            n_kv_heads: 2,
+            head_dim: 64,
+            ffn_dim: 256,
+            seq_len: 128,
+            window: 32,
+            attn: "moba".into(),
+            moba_block: 32,
+            moba_topk: 2,
+            kconv: 0,
+            use_pallas: false,
+            param_count: params.iter().map(|p| p.numel()).sum(),
+            params,
+            init_file: "x.bin".into(),
+            train_batch: 1,
+            eval_seqs: vec![128],
+            train_step: None,
+            fwd: BTreeMap::new(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 1,
+      "variants": {
+        "tiny-dense": {
+          "name": "tiny-dense", "vocab_size": 512, "d_model": 128,
+          "n_layers": 4, "n_heads": 2, "n_kv_heads": 2, "head_dim": 64,
+          "ffn_dim": 384, "seq_len": 1024, "window": 128, "attn": "dense",
+          "moba_block": 32, "moba_topk": 8, "kconv": 0, "rope_theta": 10000.0,
+          "use_pallas": false, "param_count": 10,
+          "params": [{"name": "embed", "shape": [5, 2]}],
+          "init_file": "tiny-dense_init.bin", "train_batch": 4,
+          "eval_seqs": [1024], "train_step": "tiny-dense_train_step",
+          "fwd": {"1024": "tiny-dense_fwd_n1024"}
+        }
+      },
+      "artifacts": {
+        "tiny-dense_fwd_n1024": {
+          "file": "tiny-dense_fwd_n1024.hlo.txt",
+          "inputs": [{"name": "tokens", "shape": [1, 1024], "dtype": "int32"}],
+          "outputs": [{"name": "logits", "shape": [1, 1024, 512], "dtype": "float32"}]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_and_indexes() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.version, 1);
+        let v = m.variant("tiny-dense").unwrap();
+        assert_eq!(v.total_param_elems(), 10);
+        assert_eq!(v.fwd_artifact(1024).unwrap(), "tiny-dense_fwd_n1024");
+        assert!(v.fwd_artifact(2048).is_err());
+        assert_eq!(v.train_step.as_deref(), Some("tiny-dense_train_step"));
+        assert!(m.variant("nope").is_err());
+        assert!(m.artifact("nope").is_err());
+        let a = m.artifact("tiny-dense_fwd_n1024").unwrap();
+        assert_eq!(a.inputs[0].numel(), 1024);
+        assert_eq!(a.outputs[0].dtype, "float32");
+    }
+
+    #[test]
+    fn null_train_step_is_none() {
+        let text = SAMPLE.replace("\"tiny-dense_train_step\"", "null");
+        let m = Manifest::parse(&text).unwrap();
+        assert!(m.variant("tiny-dense").unwrap().train_step.is_none());
+    }
+
+    #[test]
+    fn unknown_extra_fields_ignored() {
+        // rope_theta is present in the sample but not in the struct
+        assert!(Manifest::parse(SAMPLE).is_ok());
+    }
+
+    #[test]
+    fn test_stub_consistency() {
+        let s = VariantSpec::test_stub("t", vec![("a", vec![2, 2]), ("b", vec![3])]);
+        assert_eq!(s.total_param_elems(), 7);
+        assert_eq!(s.params.len(), 2);
+    }
+}

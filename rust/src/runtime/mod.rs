@@ -1,0 +1,174 @@
+//! PJRT runtime: load AOT HLO-text artifacts produced by `aot.py` and
+//! execute them on the CPU PJRT client from the request path.
+//!
+//! Pattern (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Artifacts are lowered with `return_tuple=True`, so every execution
+//! returns a single tuple literal that we decompose into output tensors.
+
+mod manifest;
+mod params;
+mod tensor;
+
+pub use manifest::{ArtifactSpec, Manifest, ParamSpec, TensorSpec, VariantSpec};
+pub use params::ParamStore;
+pub use tensor::{DType, Tensor, TensorData};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context};
+
+use crate::Result;
+
+/// A compiled artifact plus its manifest signature.
+pub struct Executable {
+    name: String,
+    exe: xla::PjRtLoadedExecutable,
+    spec: ArtifactSpec,
+    /// cumulative host<->device + execute wall time, for perf accounting
+    stats: Mutex<ExecStats>,
+}
+
+#[derive(Debug, Default, Clone, Copy)]
+pub struct ExecStats {
+    pub calls: u64,
+    pub total: Duration,
+}
+
+impl Executable {
+    pub fn spec(&self) -> &ArtifactSpec {
+        &self.spec
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn stats(&self) -> ExecStats {
+        *self.stats.lock().unwrap()
+    }
+
+    /// Validate inputs against the manifest signature.
+    fn check_inputs(&self, inputs: &[Tensor]) -> Result<()> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: got {} inputs, artifact expects {}",
+                self.name,
+                inputs.len(),
+                self.spec.inputs.len()
+            );
+        }
+        for (i, (t, s)) in inputs.iter().zip(&self.spec.inputs).enumerate() {
+            if t.shape() != s.shape.as_slice() {
+                bail!(
+                    "{}: input #{i} ({}) shape {:?} != expected {:?}",
+                    self.name,
+                    s.name,
+                    t.shape(),
+                    s.shape
+                );
+            }
+            if t.dtype() != DType::parse(&s.dtype)? {
+                bail!("{}: input #{i} ({}) dtype mismatch", self.name, s.name);
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute with host tensors; returns host tensors (tuple decomposed).
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.check_inputs(inputs)?;
+        let t0 = Instant::now();
+        let lits: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let bufs = self.exe.execute::<xla::Literal>(&lits)?;
+        let tuple = bufs[0][0].to_literal_sync()?;
+        let outs = tuple
+            .to_tuple()?
+            .iter()
+            .map(Tensor::from_literal)
+            .collect::<Result<Vec<_>>>()?;
+        if outs.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: got {} outputs, manifest says {}",
+                self.name,
+                outs.len(),
+                self.spec.outputs.len()
+            );
+        }
+        let mut st = self.stats.lock().unwrap();
+        st.calls += 1;
+        st.total += t0.elapsed();
+        Ok(outs)
+    }
+}
+
+/// Artifact registry: manifest + lazily compiled executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and read `manifest.json` from `dir`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, manifest, dir, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Compile (or fetch from cache) an artifact by manifest name.
+    pub fn get(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.artifact(name)?.clone();
+        let path = self.dir.join(&spec.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("XLA compile of {name}"))?;
+        let exec = Arc::new(Executable {
+            name: name.to_string(),
+            exe,
+            spec,
+            stats: Mutex::new(ExecStats::default()),
+        });
+        tracing_compile(name, t0.elapsed());
+        self.cache.lock().unwrap().insert(name.to_string(), exec.clone());
+        Ok(exec)
+    }
+
+    /// Load a variant's initial parameters from its `init.bin`.
+    pub fn load_init_params(&self, variant: &str) -> Result<ParamStore> {
+        let v = self.manifest.variant(variant)?;
+        ParamStore::from_init_bin(v, &self.dir.join(&v.init_file))
+    }
+}
+
+fn tracing_compile(name: &str, took: Duration) {
+    if std::env::var_os("FLASH_MOBA_QUIET").is_none() {
+        eprintln!("[runtime] compiled {name} in {:.2}s", took.as_secs_f64());
+    }
+}

@@ -1,0 +1,173 @@
+//! Parameter store: the flat, manifest-ordered list of model tensors that
+//! crosses the AOT boundary (`<variant>_init.bin` and checkpoints).
+
+use std::path::Path;
+
+use anyhow::{bail, Context};
+
+use super::{Tensor, VariantSpec};
+use crate::Result;
+
+/// All parameters of one model variant, in manifest order.
+#[derive(Debug, Clone)]
+pub struct ParamStore {
+    names: Vec<String>,
+    tensors: Vec<Tensor>,
+}
+
+impl ParamStore {
+    /// Read `<variant>_init.bin`: raw little-endian f32, concatenated in
+    /// manifest parameter order.
+    pub fn from_init_bin(spec: &VariantSpec, path: &Path) -> Result<Self> {
+        let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+        let expect = spec.total_param_elems() * 4;
+        if bytes.len() != expect {
+            bail!(
+                "{}: init.bin is {} bytes, manifest says {} ({} f32)",
+                spec.name,
+                bytes.len(),
+                expect,
+                spec.total_param_elems()
+            );
+        }
+        let mut tensors = Vec::with_capacity(spec.params.len());
+        let mut names = Vec::with_capacity(spec.params.len());
+        let mut off = 0usize;
+        for p in &spec.params {
+            let n = p.numel();
+            let data: Vec<f32> = bytes[off..off + n * 4]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            tensors.push(Tensor::f32(data, &p.shape)?);
+            names.push(p.name.clone());
+            off += n * 4;
+        }
+        Ok(Self { names, tensors })
+    }
+
+    /// Build from tensors already in manifest order (e.g. train-step outputs).
+    pub fn from_tensors(spec: &VariantSpec, tensors: Vec<Tensor>) -> Result<Self> {
+        if tensors.len() != spec.params.len() {
+            bail!(
+                "{}: got {} tensors, manifest lists {} params",
+                spec.name,
+                tensors.len(),
+                spec.params.len()
+            );
+        }
+        for (t, p) in tensors.iter().zip(&spec.params) {
+            if t.shape() != p.shape.as_slice() {
+                bail!("param {}: shape {:?} != manifest {:?}", p.name, t.shape(), p.shape);
+            }
+        }
+        Ok(Self { names: spec.params.iter().map(|p| p.name.clone()).collect(), tensors })
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn tensors(&self) -> &[Tensor] {
+        &self.tensors
+    }
+
+    pub fn into_tensors(self) -> Vec<Tensor> {
+        self.tensors
+    }
+
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.names.iter().position(|n| n == name).map(|i| &self.tensors[i])
+    }
+
+    /// Zero-filled clone (optimizer moment init).
+    pub fn zeros_like(&self) -> Self {
+        Self {
+            names: self.names.clone(),
+            tensors: self.tensors.iter().map(|t| Tensor::zeros_f32(t.shape())).collect(),
+        }
+    }
+
+    /// Serialize to the same raw format as init.bin (checkpointing).
+    pub fn to_bytes(&self) -> Result<Vec<u8>> {
+        let mut out = Vec::new();
+        for t in &self.tensors {
+            for v in t.as_f32()? {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::ParamSpec;
+
+    fn spec() -> VariantSpec {
+        VariantSpec::test_stub("t", vec![("a", vec![2, 2]), ("b", vec![2])])
+    }
+
+    #[test]
+    fn init_bin_roundtrip() {
+        let s = spec();
+        let vals: Vec<f32> = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        let dir = std::env::temp_dir().join("fm_params_test.bin");
+        std::fs::write(&dir, &bytes).unwrap();
+        let ps = ParamStore::from_init_bin(&s, &dir).unwrap();
+        assert_eq!(ps.len(), 2);
+        assert_eq!(ps.get("a").unwrap().as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(ps.get("b").unwrap().as_f32().unwrap(), &[5.0, 6.0]);
+        assert_eq!(ps.to_bytes().unwrap(), bytes);
+    }
+
+    #[test]
+    fn init_bin_size_mismatch_rejected() {
+        let s = spec();
+        let dir = std::env::temp_dir().join("fm_params_bad.bin");
+        std::fs::write(&dir, [0u8; 8]).unwrap();
+        assert!(ParamStore::from_init_bin(&s, &dir).is_err());
+    }
+
+    #[test]
+    fn from_tensors_validates_shapes() {
+        let s = spec();
+        let ok = vec![
+            Tensor::f32(vec![0.0; 4], &[2, 2]).unwrap(),
+            Tensor::f32(vec![0.0; 2], &[2]).unwrap(),
+        ];
+        assert!(ParamStore::from_tensors(&s, ok).is_ok());
+        let bad = vec![
+            Tensor::f32(vec![0.0; 4], &[4]).unwrap(),
+            Tensor::f32(vec![0.0; 2], &[2]).unwrap(),
+        ];
+        assert!(ParamStore::from_tensors(&s, bad).is_err());
+        let _ = ParamSpec { name: "x".into(), shape: vec![1] }.numel();
+    }
+
+    #[test]
+    fn zeros_like_preserves_shapes() {
+        let s = spec();
+        let ps = ParamStore::from_tensors(
+            &s,
+            vec![
+                Tensor::f32(vec![1.0; 4], &[2, 2]).unwrap(),
+                Tensor::f32(vec![1.0; 2], &[2]).unwrap(),
+            ],
+        )
+        .unwrap();
+        let z = ps.zeros_like();
+        assert_eq!(z.tensors()[0].as_f32().unwrap(), &[0.0; 4]);
+        assert_eq!(z.tensors()[0].shape(), &[2, 2]);
+    }
+}

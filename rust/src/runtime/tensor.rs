@@ -1,0 +1,172 @@
+//! Host-side tensors and conversion to/from PJRT [`xla::Literal`]s.
+//!
+//! Only the dtypes crossing the AOT boundary are supported: `f32`
+//! (parameters, activations, scalars) and `i32` (token ids).
+
+use anyhow::{anyhow, bail};
+
+use crate::Result;
+
+/// Dtype of a boundary tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "float32" | "f32" => Ok(DType::F32),
+            "int32" | "i32" => Ok(DType::I32),
+            other => bail!("unsupported dtype {other:?}"),
+        }
+    }
+
+    pub fn size_bytes(self) -> usize {
+        4
+    }
+}
+
+/// A dense host tensor in row-major layout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: TensorData,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Tensor {
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if data.len() != n {
+            bail!("data len {} != shape {:?} product {}", data.len(), shape, n);
+        }
+        Ok(Self { shape: shape.to_vec(), data: TensorData::F32(data) })
+    }
+
+    pub fn i32(data: Vec<i32>, shape: &[usize]) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        if data.len() != n {
+            bail!("data len {} != shape {:?} product {}", data.len(), shape, n);
+        }
+        Ok(Self { shape: shape.to_vec(), data: TensorData::I32(data) })
+    }
+
+    pub fn scalar_f32(v: f32) -> Self {
+        Self { shape: vec![], data: TensorData::F32(vec![v]) }
+    }
+
+    pub fn zeros_f32(shape: &[usize]) -> Self {
+        let n: usize = shape.iter().product();
+        Self { shape: shape.to_vec(), data: TensorData::F32(vec![0.0; n]) }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self.data {
+            TensorData::F32(_) => DType::F32,
+            TensorData::I32(_) => DType::I32,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            TensorData::I32(_) => Err(anyhow!("tensor is i32, expected f32")),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            TensorData::F32(_) => Err(anyhow!("tensor is f32, expected i32")),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self.data {
+            TensorData::F32(v) => Ok(v),
+            TensorData::I32(_) => Err(anyhow!("tensor is i32, expected f32")),
+        }
+    }
+
+    /// Scalar extraction (shape [] or [1]).
+    pub fn scalar(&self) -> Result<f32> {
+        let v = self.as_f32()?;
+        if v.len() != 1 {
+            bail!("not a scalar: shape {:?}", self.shape);
+        }
+        Ok(v[0])
+    }
+
+    /// Convert to an XLA literal (copies).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            TensorData::F32(v) => xla::Literal::vec1(v.as_slice()),
+            TensorData::I32(v) => xla::Literal::vec1(v.as_slice()),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    /// Read a literal back into a host tensor.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => Tensor::f32(lit.to_vec::<f32>()?, &dims),
+            xla::ElementType::S32 => Tensor::i32(lit.to_vec::<i32>()?, &dims),
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_product_enforced() {
+        assert!(Tensor::f32(vec![1.0; 5], &[2, 3]).is_err());
+        assert!(Tensor::f32(vec![1.0; 6], &[2, 3]).is_ok());
+    }
+
+    #[test]
+    fn dtype_accessors() {
+        let t = Tensor::i32(vec![1, 2], &[2]).unwrap();
+        assert_eq!(t.dtype(), DType::I32);
+        assert!(t.as_f32().is_err());
+        assert_eq!(t.as_i32().unwrap(), &[1, 2]);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let t = Tensor::scalar_f32(3.5);
+        assert_eq!(t.scalar().unwrap(), 3.5);
+        assert!(t.shape().is_empty());
+    }
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::parse("float32").unwrap(), DType::F32);
+        assert_eq!(DType::parse("int32").unwrap(), DType::I32);
+        assert!(DType::parse("bfloat16").is_err());
+    }
+}

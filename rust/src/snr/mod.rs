@@ -1,0 +1,16 @@
+//! The paper's statistical model of MoBA block selection (§3, App. A).
+//!
+//! * [`theory`] — closed forms: SNR = Δμ_eff · √(d / 2B), failure
+//!   probability p = Φ(−SNR), top-k retrieval probability among n blocks.
+//! * [`montecarlo`] — direct simulation of the Appendix-A generative
+//!   model, used to validate the closed forms (Eq. 1–3) and to extend
+//!   the RULER-style retrieval predictions to paper-scale block counts
+//!   (64K-token-equivalent) that the CPU testbed cannot train at.
+
+pub mod montecarlo;
+pub mod theory;
+
+pub use montecarlo::{simulate_retrieval, McConfig, McResult};
+pub use theory::{
+    delta_mu_eff, normal_cdf, normal_icdf, p_fail, snr, topk_success_prob,
+};

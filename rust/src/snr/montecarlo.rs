@@ -1,0 +1,168 @@
+//! Monte-Carlo simulation of the Appendix-A generative model.
+//!
+//! Per trial: n blocks of B keys. Dot products q·k are drawn directly as
+//! Gaussians with variance σ² = 1/d (normalized vectors in high
+//! dimension): noise keys mean μ_noise, the signal key mean μ_signal,
+//! and m−1 clustered keys mean μ_cluster inside the signal block. The
+//! router score of a block is the mean of its keys' dot products
+//! (centroid linearity); retrieval succeeds when the signal block ranks
+//! in the top-k.
+//!
+//! Validates Eq. 1–3 / the Φ(−SNR) failure law, and generates the
+//! RULER-shaped retrieval curves at paper-scale block counts.
+
+use crate::attention::testutil::Rng;
+use crate::snr::theory;
+
+#[derive(Debug, Clone, Copy)]
+pub struct McConfig {
+    pub d: usize,
+    pub block: usize,
+    pub n_blocks: usize,
+    pub topk: usize,
+    /// E[q·k*] − E[q·k_noise]
+    pub delta_mu: f64,
+    /// number of clustered signal tokens in the target block (≥1)
+    pub m: usize,
+    /// E[q·k_cluster] − E[q·k_noise] for the m−1 clustered tokens
+    pub cluster_gain: f64,
+    pub trials: usize,
+    pub seed: u64,
+}
+
+impl Default for McConfig {
+    fn default() -> Self {
+        Self {
+            d: 64,
+            block: 128,
+            n_blocks: 64,
+            topk: 8,
+            delta_mu: 1.0,
+            m: 1,
+            cluster_gain: 0.0,
+            trials: 2000,
+            seed: 0x5eed,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct McResult {
+    /// empirical P(signal block in top-k)
+    pub success_rate: f64,
+    /// empirical P(one given noise block outranks signal block)
+    pub pairwise_fail: f64,
+    /// closed-form prediction for the same quantities
+    pub predicted_success: f64,
+    pub predicted_pairwise_fail: f64,
+    pub snr: f64,
+}
+
+/// Run the simulation.
+pub fn simulate_retrieval(cfg: McConfig) -> McResult {
+    assert!(cfg.m >= 1 && cfg.m <= cfg.block);
+    let mut rng = Rng::new(cfg.seed);
+    let sigma = 1.0 / (cfg.d as f64).sqrt();
+    let inv_b = 1.0 / cfg.block as f64;
+
+    let mut successes = 0usize;
+    let mut pair_fails = 0usize;
+    let mut pair_total = 0usize;
+
+    for _ in 0..cfg.trials {
+        // noise block scores: mean of B iid N(0, sigma^2) => N(0, sigma^2/B)
+        let block_sigma = sigma * inv_b.sqrt();
+        let mut noise_scores = Vec::with_capacity(cfg.n_blocks - 1);
+        for _ in 0..cfg.n_blocks - 1 {
+            noise_scores.push(rng.normal() * block_sigma);
+        }
+        // signal block: 1 signal key + (m-1) cluster keys + (B-m) noise keys
+        let mut sum = cfg.delta_mu + rng.normal() * sigma; // signal key
+        for _ in 0..cfg.m - 1 {
+            sum += cfg.cluster_gain + rng.normal() * sigma;
+        }
+        for _ in 0..cfg.block - cfg.m {
+            sum += rng.normal() * sigma;
+        }
+        let signal_score = sum * inv_b;
+
+        let beaten = noise_scores.iter().filter(|&&s| s > signal_score).count();
+        if beaten < cfg.topk {
+            successes += 1;
+        }
+        pair_fails += beaten;
+        pair_total += noise_scores.len();
+    }
+
+    let dmu_eff = theory::delta_mu_eff(cfg.delta_mu, cfg.m, cfg.cluster_gain, 0.0);
+    let snr = theory::snr(dmu_eff, cfg.d, cfg.block);
+    McResult {
+        success_rate: successes as f64 / cfg.trials as f64,
+        pairwise_fail: pair_fails as f64 / pair_total as f64,
+        predicted_success: theory::topk_success_prob(snr, cfg.n_blocks, cfg.topk),
+        predicted_pairwise_fail: theory::p_fail(snr),
+        snr,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ci_halfwidth(p: f64, n: usize) -> f64 {
+        // ~4σ binomial half-width
+        4.0 * (p * (1.0 - p) / n as f64).sqrt() + 0.01
+    }
+
+    #[test]
+    fn pairwise_failure_matches_phi_minus_snr() {
+        for (d, b) in [(64, 64), (64, 256), (128, 128)] {
+            let cfg = McConfig { d, block: b, trials: 4000, ..Default::default() };
+            let r = simulate_retrieval(cfg);
+            let tol = ci_halfwidth(r.predicted_pairwise_fail, cfg.trials * (cfg.n_blocks - 1));
+            assert!(
+                (r.pairwise_fail - r.predicted_pairwise_fail).abs() < tol,
+                "d={d} B={b}: mc={} theory={} tol={tol}",
+                r.pairwise_fail,
+                r.predicted_pairwise_fail
+            );
+        }
+    }
+
+    #[test]
+    fn topk_success_matches_theory() {
+        let cfg = McConfig { trials: 3000, ..Default::default() };
+        let r = simulate_retrieval(cfg);
+        let tol = ci_halfwidth(r.predicted_success, cfg.trials);
+        assert!(
+            (r.success_rate - r.predicted_success).abs() < tol,
+            "mc={} theory={}",
+            r.success_rate,
+            r.predicted_success
+        );
+    }
+
+    #[test]
+    fn smaller_blocks_retrieve_better() {
+        // the paper's headline: B 512 -> 128 at fixed kB improves retrieval
+        let base = McConfig { delta_mu: 0.6, trials: 3000, ..Default::default() };
+        let r512 = simulate_retrieval(McConfig { block: 512, topk: 2, n_blocks: 16, ..base });
+        let r128 = simulate_retrieval(McConfig { block: 128, topk: 8, n_blocks: 64, ..base });
+        assert!(
+            r128.success_rate > r512.success_rate + 0.05,
+            "B=128: {} vs B=512: {}",
+            r128.success_rate,
+            r512.success_rate
+        );
+    }
+
+    #[test]
+    fn clustering_helps() {
+        let base = McConfig { delta_mu: 0.4, trials: 3000, n_blocks: 128, ..Default::default() };
+        let plain = simulate_retrieval(base);
+        let clustered = simulate_retrieval(McConfig { m: 4, cluster_gain: 0.3, ..base });
+        assert!(clustered.success_rate > plain.success_rate, "{} vs {}",
+            clustered.success_rate, plain.success_rate);
+        assert!(clustered.snr > plain.snr);
+    }
+}

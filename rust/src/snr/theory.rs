@@ -1,0 +1,207 @@
+//! Closed-form SNR model (paper Eq. 1–3 and Appendix A).
+//!
+//! Score difference between the signal block and a noise block:
+//!   E[D]   = Δμ_eff / B
+//!   Var(D) = 2σ² / B          with σ² = 1/d for normalized vectors
+//!   SNR    = Δμ_eff · √(d / 2B)
+//!   p_fail = Φ(−SNR)           (one noise block outranking the signal)
+
+/// Effective signal separation (App. A.2):
+/// Δμ_eff = Δμ + (m−1)(μ_cluster − μ_noise).
+pub fn delta_mu_eff(delta_mu: f64, m: usize, mu_cluster: f64, mu_noise: f64) -> f64 {
+    delta_mu + (m.saturating_sub(1)) as f64 * (mu_cluster - mu_noise)
+}
+
+/// SNR = Δμ_eff · √(d / 2B)  (Eq. 3).
+pub fn snr(delta_mu_eff: f64, d: usize, block: usize) -> f64 {
+    delta_mu_eff * (d as f64 / (2.0 * block as f64)).sqrt()
+}
+
+/// Probability a single noise block outranks the signal block (Eq. 12).
+pub fn p_fail(snr_value: f64) -> f64 {
+    normal_cdf(-snr_value)
+}
+
+/// P(signal block ranks in the top-k among `n_blocks` candidates).
+///
+/// Outranking events are *correlated* through the shared signal score, so
+/// a plain Binomial(n−1, p_fail) underestimates success. Conditioning on
+/// the standardized signal score z (noise blocks are then independent):
+///
+///   P(success) = ∫ φ(z) · BinomCDF(k−1; n−1, Φ(−(√2·SNR + z))) dz
+///
+/// using μ_s/σ_b = √2·SNR (Var(D) = 2σ_b² in the paper's Eq. 2).
+/// Evaluated by trapezoid quadrature over z ∈ [−8, 8].
+pub fn topk_success_prob(snr_value: f64, n_blocks: usize, k: usize) -> f64 {
+    if n_blocks <= k {
+        return 1.0;
+    }
+    let n = n_blocks - 1;
+    let steps = 241usize;
+    let (lo, hi) = (-8.0f64, 8.0f64);
+    let h = (hi - lo) / (steps - 1) as f64;
+    let mut total = 0.0f64;
+    for i in 0..steps {
+        let z = lo + i as f64 * h;
+        let phi = (-0.5 * z * z).exp() / (2.0 * std::f64::consts::PI).sqrt();
+        let p = normal_cdf(-(std::f64::consts::SQRT_2 * snr_value + z));
+        let mut cdf = 0.0f64;
+        for x in 0..k.min(n + 1) {
+            cdf += binom_pmf(n, x, p);
+        }
+        let w = if i == 0 || i == steps - 1 { 0.5 } else { 1.0 };
+        total += w * phi * cdf.min(1.0);
+    }
+    (total * h).clamp(0.0, 1.0)
+}
+
+fn binom_pmf(n: usize, x: usize, p: f64) -> f64 {
+    if p <= 0.0 {
+        return if x == 0 { 1.0 } else { 0.0 };
+    }
+    if p >= 1.0 {
+        return if x == n { 1.0 } else { 0.0 };
+    }
+    let logc = ln_choose(n, x);
+    (logc + x as f64 * p.ln() + (n - x) as f64 * (1.0 - p).ln()).exp()
+}
+
+fn ln_choose(n: usize, x: usize) -> f64 {
+    ln_factorial(n) - ln_factorial(x) - ln_factorial(n - x)
+}
+
+fn ln_factorial(n: usize) -> f64 {
+    // Stirling for large n, exact for small
+    if n < 32 {
+        (2..=n).map(|i| (i as f64).ln()).sum()
+    } else {
+        let nf = n as f64;
+        nf * nf.ln() - nf + 0.5 * (2.0 * std::f64::consts::PI * nf).ln() + 1.0 / (12.0 * nf)
+    }
+}
+
+/// Standard normal CDF Φ (Abramowitz–Stegun 7.1.26-based erf, |ε| < 1.5e-7).
+pub fn normal_cdf(x: f64) -> f64 {
+    0.5 * (1.0 + erf(x / std::f64::consts::SQRT_2))
+}
+
+fn erf(x: f64) -> f64 {
+    let sign = if x < 0.0 { -1.0 } else { 1.0 };
+    let x = x.abs();
+    let t = 1.0 / (1.0 + 0.3275911 * x);
+    let y = 1.0
+        - (((((1.061405429 * t - 1.453152027) * t) + 1.421413741) * t - 0.284496736) * t
+            + 0.254829592)
+            * t
+            * (-x * x).exp();
+    sign * y
+}
+
+/// Inverse standard normal CDF (Acklam's rational approximation).
+pub fn normal_icdf(p: f64) -> f64 {
+    assert!(p > 0.0 && p < 1.0, "p must be in (0,1), got {p}");
+    const A: [f64; 6] = [
+        -3.969683028665376e+01, 2.209460984245205e+02, -2.759285104469687e+02,
+        1.383577518672690e+02, -3.066479806614716e+01, 2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01, 1.615858368580409e+02, -1.556989798598866e+02,
+        6.680131188771972e+01, -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03, -3.223964580411365e-01, -2.400758277161838e+00,
+        -2.549732539343734e+00, 4.374664141464968e+00, 2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03, 3.224671290700398e-01, 2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    let plow = 0.02425;
+    if p < plow {
+        let q = (-2.0 * p.ln()).sqrt();
+        return (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0);
+    }
+    if p > 1.0 - plow {
+        return -normal_icdf(1.0 - p);
+    }
+    let q = p - 0.5;
+    let r = q * q;
+    (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+        / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snr_scales_sqrt_d_over_b() {
+        // halving B improves SNR by sqrt(2) (paper §3.3 point 1)
+        let s1 = snr(1.0, 64, 128);
+        let s2 = snr(1.0, 64, 64);
+        assert!((s2 / s1 - std::f64::consts::SQRT_2).abs() < 1e-12);
+        // doubling d same effect
+        let s3 = snr(1.0, 128, 128);
+        assert!((s3 / s1 - std::f64::consts::SQRT_2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn clustering_multiplies_signal() {
+        // m related tokens raise delta_mu_eff linearly (§3.3 point 2)
+        let base = delta_mu_eff(0.5, 1, 0.3, 0.0);
+        assert_eq!(base, 0.5);
+        let clustered = delta_mu_eff(0.5, 4, 0.3, 0.0);
+        assert!((clustered - (0.5 + 3.0 * 0.3)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cdf_basics() {
+        assert!((normal_cdf(0.0) - 0.5).abs() < 1e-9);
+        assert!((normal_cdf(1.96) - 0.975).abs() < 1e-3);
+        assert!(normal_cdf(-8.0) < 1e-14);
+        assert!((p_fail(0.0) - 0.5).abs() < 1e-7); // erf approx, not exact
+        assert!(p_fail(3.0) < 0.0014);
+    }
+
+    #[test]
+    fn icdf_inverts_cdf() {
+        for p in [0.001, 0.01, 0.1, 0.5, 0.9, 0.99, 0.999] {
+            let x = normal_icdf(p);
+            assert!((normal_cdf(x) - p).abs() < 1e-4, "p={p}");
+        }
+    }
+
+    #[test]
+    fn topk_success_monotone_in_snr_and_k() {
+        let a = topk_success_prob(1.0, 64, 2);
+        let b = topk_success_prob(2.0, 64, 2);
+        assert!(b > a);
+        let c = topk_success_prob(1.0, 64, 8);
+        assert!(c > a);
+        // trivially successful when every block fits in top-k
+        assert_eq!(topk_success_prob(0.0, 4, 8), 1.0);
+    }
+
+    #[test]
+    fn paper_reliability_criterion() {
+        // "for reliable top-k retrieval we need p < k/n, i.e.
+        //  SNR > Phi^{-1}(1 - k/n)" — check the two formulations agree.
+        let (n, k) = (64usize, 8usize);
+        let thresh = normal_icdf(1.0 - k as f64 / n as f64);
+        // just above the threshold, success probability should be decent
+        let p_ok = topk_success_prob(thresh + 1.0, n, k);
+        let p_bad = topk_success_prob(thresh - 1.5, n, k);
+        assert!(p_ok > 0.85, "p_ok={p_ok}");
+        assert!(p_bad < 0.4, "p_bad={p_bad}");
+        // and the heuristic threshold itself sits in the transition zone
+        let p_at = topk_success_prob(thresh, n, k);
+        assert!(p_at > 0.2 && p_at < 0.95, "p_at={p_at}");
+    }
+
+    #[test]
+    fn binom_pmf_sums_to_one() {
+        let total: f64 = (0..=20).map(|x| binom_pmf(20, x, 0.3)).sum();
+        assert!((total - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,159 @@
+//! The training loop. Owns the (params, m, v) state tensors and advances
+//! them through the `train_step` executable.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::anyhow;
+
+use super::schedule::cosine_lr;
+use crate::config::TrainParams;
+use crate::data::corpus::Corpus;
+use crate::runtime::{ParamStore, Runtime, Tensor, VariantSpec};
+use crate::Result;
+
+/// Per-step record for the loss curve.
+#[derive(Debug, Clone, Copy)]
+pub struct TrainLog {
+    pub step: usize,
+    pub loss: f64,
+    pub lr: f64,
+    pub step_time_s: f64,
+}
+
+pub struct Trainer<'rt> {
+    runtime: &'rt Runtime,
+    spec: VariantSpec,
+    exe: std::sync::Arc<crate::runtime::Executable>,
+    params: Vec<Tensor>,
+    m: Vec<Tensor>,
+    v: Vec<Tensor>,
+    step: usize,
+    pub history: Vec<TrainLog>,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(runtime: &'rt Runtime, variant: &str) -> Result<Self> {
+        let spec = runtime.manifest().variant(variant)?.clone();
+        let ts_name = spec
+            .train_step
+            .clone()
+            .ok_or_else(|| anyhow!("variant {variant} has no train_step artifact"))?;
+        let exe = runtime.get(&ts_name)?;
+        let init = runtime.load_init_params(variant)?;
+        let zeros_m = init.zeros_like().into_tensors();
+        let zeros_v = init.zeros_like().into_tensors();
+        Ok(Self {
+            runtime,
+            spec,
+            exe,
+            params: init.into_tensors(),
+            m: zeros_m,
+            v: zeros_v,
+            step: 0,
+            history: Vec::new(),
+        })
+    }
+
+    pub fn spec(&self) -> &VariantSpec {
+        &self.spec
+    }
+
+    pub fn step_count(&self) -> usize {
+        self.step
+    }
+
+    /// Current parameters as a [`ParamStore`] (for eval / checkpointing).
+    pub fn params(&self) -> Result<ParamStore> {
+        ParamStore::from_tensors(&self.spec, self.params.clone())
+    }
+
+    /// Restore parameters (e.g. from a checkpoint); optimizer state resets.
+    pub fn set_params(&mut self, store: ParamStore) -> Result<()> {
+        let zeros_m = store.zeros_like().into_tensors();
+        let zeros_v = store.zeros_like().into_tensors();
+        self.params = store.into_tensors();
+        self.m = zeros_m;
+        self.v = zeros_v;
+        Ok(())
+    }
+
+    /// One optimizer step on a (tokens, targets) batch; returns the loss.
+    pub fn step_batch(&mut self, tokens: &[i32], targets: &[i32], lr: f64) -> Result<f64> {
+        let t0 = Instant::now();
+        let b = self.spec.train_batch;
+        let n = self.spec.seq_len;
+        let np = self.params.len();
+        let mut inputs: Vec<Tensor> = Vec::with_capacity(4 + 3 * np);
+        inputs.push(Tensor::i32(tokens.to_vec(), &[b, n])?);
+        inputs.push(Tensor::i32(targets.to_vec(), &[b, n])?);
+        inputs.push(Tensor::scalar_f32(lr as f32));
+        inputs.push(Tensor::scalar_f32((self.step + 1) as f32));
+        inputs.extend(self.params.iter().cloned());
+        inputs.extend(self.m.iter().cloned());
+        inputs.extend(self.v.iter().cloned());
+
+        let mut out = self.exe.run(&inputs)?;
+        // outputs: loss, p'..., m'..., v'...
+        if out.len() != 1 + 3 * np {
+            return Err(anyhow!("train_step returned {} outputs, expected {}", out.len(), 1 + 3 * np));
+        }
+        let rest = out.split_off(1);
+        let loss = out[0].scalar()? as f64;
+        let (p_new, mv) = rest.split_at(np);
+        let (m_new, v_new) = mv.split_at(np);
+        self.params = p_new.to_vec();
+        self.m = m_new.to_vec();
+        self.v = v_new.to_vec();
+        self.step += 1;
+        self.history.push(TrainLog {
+            step: self.step,
+            loss,
+            lr,
+            step_time_s: t0.elapsed().as_secs_f64(),
+        });
+        Ok(loss)
+    }
+
+    /// Run `cfg.steps` steps over the corpus with the cosine schedule.
+    /// `on_log` fires every `cfg.log_every` steps with the latest record.
+    pub fn run(
+        &mut self,
+        corpus: &Corpus,
+        cfg: &TrainParams,
+        mut on_log: impl FnMut(&TrainLog),
+    ) -> Result<f64> {
+        let b = self.spec.train_batch;
+        let n = self.spec.seq_len;
+        let mut last = f64::NAN;
+        for s in 0..cfg.steps {
+            let (tokens, targets) = corpus.train_batch(b, n, cfg.seed.wrapping_add(s as u64));
+            let lr = cosine_lr(s, cfg.steps, cfg.peak_lr, cfg.warmup, cfg.floor_frac);
+            last = self.step_batch(&tokens, &targets, lr)?;
+            if (s + 1) % cfg.log_every == 0 || s + 1 == cfg.steps {
+                on_log(self.history.last().unwrap());
+            }
+        }
+        let _ = self.runtime; // (kept for future device-resident state)
+        Ok(last)
+    }
+
+    /// Save params in init.bin format + the loss curve as CSV.
+    pub fn checkpoint(&self, dir: &Path, tag: &str) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let ps = self.params()?;
+        std::fs::write(dir.join(format!("{}_{tag}.bin", self.spec.name)), ps.to_bytes()?)?;
+        let mut csv = String::from("step,loss,lr,step_time_s\n");
+        for l in &self.history {
+            csv.push_str(&format!("{},{},{},{}\n", l.step, l.loss, l.lr, l.step_time_s));
+        }
+        std::fs::write(dir.join(format!("{}_{tag}_loss.csv", self.spec.name)), csv)?;
+        Ok(())
+    }
+
+    /// Load a params checkpoint saved by [`Self::checkpoint`].
+    pub fn load_checkpoint(runtime: &Runtime, variant: &str, path: &Path) -> Result<ParamStore> {
+        let spec = runtime.manifest().variant(variant)?.clone();
+        ParamStore::from_init_bin(&spec, path)
+    }
+}

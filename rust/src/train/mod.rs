@@ -1,0 +1,11 @@
+//! Training driver: the rust loop around the AOT `train_step` artifact.
+//!
+//! Each step feeds (tokens, targets, lr, step, params, m, v) and reads
+//! back (loss, params', m', v'); state stays in manifest order the whole
+//! time. The cosine schedule mirrors `python/compile/train.py`.
+
+mod driver;
+mod schedule;
+
+pub use driver::{TrainLog, Trainer};
+pub use schedule::cosine_lr;

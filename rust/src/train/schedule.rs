@@ -1,0 +1,47 @@
+//! Cosine LR schedule with linear warmup (paper §5.1). Mirror of
+//! `python/compile/train.py::cosine_lr` — kept in lockstep by tests on
+//! a shared set of probe points.
+
+/// LR at 0-based `step` of a `total`-step run.
+pub fn cosine_lr(step: usize, total: usize, peak: f64, warmup: usize, floor_frac: f64) -> f64 {
+    if step < warmup {
+        return peak * (step + 1) as f64 / warmup as f64;
+    }
+    let t = (step - warmup) as f64 / (total.saturating_sub(warmup)).max(1) as f64;
+    let t = t.min(1.0);
+    peak * (floor_frac + (1.0 - floor_frac) * 0.5 * (1.0 + (std::f64::consts::PI * t).cos()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps_linearly() {
+        let peak = 6e-4;
+        assert!((cosine_lr(0, 100, peak, 20, 0.1) - peak / 20.0).abs() < 1e-12);
+        assert!((cosine_lr(19, 100, peak, 20, 0.1) - peak).abs() < 1e-12);
+    }
+
+    #[test]
+    fn peak_then_decays_to_floor() {
+        let peak = 1e-3;
+        let at_peak = cosine_lr(20, 120, peak, 20, 0.1);
+        assert!((at_peak - peak).abs() < 1e-9);
+        let end = cosine_lr(119, 120, peak, 20, 0.1);
+        assert!(end < peak * 0.12 && end >= peak * 0.1 - 1e-12);
+        // monotone decreasing after warmup
+        let mut prev = at_peak;
+        for s in 21..120 {
+            let lr = cosine_lr(s, 120, peak, 20, 0.1);
+            assert!(lr <= prev + 1e-15);
+            prev = lr;
+        }
+    }
+
+    #[test]
+    fn beyond_total_clamps_at_floor() {
+        let peak = 1e-3;
+        assert!((cosine_lr(500, 100, peak, 10, 0.1) - peak * 0.1).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,139 @@
+//! Criterion-style micro-benchmark harness for `cargo bench`
+//! (`harness = false` benches): warmup, repeated timing, median/min/mean
+//! reporting, `--filter substring` support.
+
+use std::time::{Duration, Instant};
+
+pub struct Bench {
+    filter: Option<String>,
+    results: Vec<(String, Stats)>,
+    samples: usize,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub min_s: f64,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        // cargo bench passes "--bench"; a positional arg filters by name
+        let filter = std::env::args().skip(1).find(|a| !a.starts_with("--"));
+        Self { filter, results: Vec::new(), samples: 10 }
+    }
+
+    pub fn samples(mut self, n: usize) -> Self {
+        self.samples = n.max(3);
+        self
+    }
+
+    /// Time `f`, auto-calibrating iterations so each sample runs >= 10ms.
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) {
+        if let Some(flt) = &self.filter {
+            if !name.contains(flt.as_str()) {
+                return;
+            }
+        }
+        // warmup + calibration
+        let t0 = Instant::now();
+        f();
+        let once = t0.elapsed().max(Duration::from_nanos(100));
+        let iters = (Duration::from_millis(10).as_secs_f64() / once.as_secs_f64())
+            .ceil()
+            .clamp(1.0, 1e6) as usize;
+
+        let mut times = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            times.push(t.elapsed().as_secs_f64() / iters as f64);
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let stats = Stats {
+            mean_s: times.iter().sum::<f64>() / times.len() as f64,
+            median_s: times[times.len() / 2],
+            min_s: times[0],
+        };
+        println!(
+            "{name:<48} {:>12}/iter  (median {:>12}, min {:>12}, {} samples x {} iters)",
+            fmt_t(stats.mean_s),
+            fmt_t(stats.median_s),
+            fmt_t(stats.min_s),
+            self.samples,
+            iters
+        );
+        self.results.push((name.to_string(), stats));
+    }
+
+    pub fn results(&self) -> &[(String, Stats)] {
+        &self.results
+    }
+
+    /// Ratio of two benched entries (e.g. speedup reporting).
+    pub fn ratio(&self, num: &str, den: &str) -> Option<f64> {
+        let get = |n: &str| {
+            self.results.iter().find(|(name, _)| name == n).map(|(_, s)| s.median_s)
+        };
+        Some(get(num)? / get(den)?)
+    }
+}
+
+pub fn fmt_t(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.3}ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3}µs", s * 1e6)
+    } else {
+        format!("{:.0}ns", s * 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn times_something() {
+        let mut b = Bench { filter: None, results: Vec::new(), samples: 3 };
+        let mut x = 0u64;
+        b.bench("spin", || {
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+        });
+        assert_eq!(b.results().len(), 1);
+        assert!(b.results()[0].1.min_s > 0.0);
+        std::hint::black_box(x);
+    }
+
+    #[test]
+    fn filter_skips() {
+        let mut b = Bench { filter: Some("yes".into()), results: Vec::new(), samples: 3 };
+        b.bench("no_match", || {});
+        assert!(b.results().is_empty());
+        b.bench("yes_match", || {});
+        assert_eq!(b.results().len(), 1);
+        assert!(b.ratio("yes_match", "yes_match").unwrap() == 1.0);
+        assert!(b.ratio("nope", "yes_match").is_none());
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert!(fmt_t(2.0).ends_with('s'));
+        assert!(fmt_t(2e-3).ends_with("ms"));
+        assert!(fmt_t(2e-6).ends_with("µs"));
+        assert!(fmt_t(2e-9).ends_with("ns"));
+    }
+}

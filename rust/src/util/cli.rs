@@ -1,0 +1,89 @@
+//! Tiny argv parser: positionals + `--flag [value]` options.
+
+use std::collections::HashMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positionals: Vec<String>,
+    flags: HashMap<String, String>,
+    switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse argv (excluding the program name). `switch_names` are
+    /// boolean flags that take no value.
+    pub fn parse(argv: impl Iterator<Item = String>, switch_names: &[&str]) -> Self {
+        let mut out = Args::default();
+        let mut it = argv.peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if switch_names.contains(&name) {
+                    out.switches.push(name.to_string());
+                } else if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if let Some(v) = it.peek() {
+                    if v.starts_with("--") {
+                        out.switches.push(name.to_string());
+                    } else {
+                        out.flags.insert(name.to_string(), it.next().unwrap());
+                    }
+                } else {
+                    out.switches.push(name.to_string());
+                }
+            } else {
+                out.positionals.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_usize(&self, name: &str) -> Option<usize> {
+        self.get(name).and_then(|s| s.parse().ok())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name) || self.flags.contains_key(name)
+    }
+
+    pub fn pos(&self, i: usize) -> Option<&str> {
+        self.positionals.get(i).map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> impl Iterator<Item = String> + '_ {
+        s.split_whitespace().map(|x| x.to_string())
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let a = Args::parse(argv("bench fig3 --steps 50 --quick --artifacts /tmp/a"), &["quick"]);
+        assert_eq!(a.pos(0), Some("bench"));
+        assert_eq!(a.pos(1), Some("fig3"));
+        assert_eq!(a.get_usize("steps"), Some(50));
+        assert!(a.has("quick"));
+        assert_eq!(a.get("artifacts"), Some("/tmp/a"));
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn eq_form_and_trailing_switch() {
+        let a = Args::parse(argv("train --variant=tiny-moba32 --quick"), &["quick"]);
+        assert_eq!(a.get("variant"), Some("tiny-moba32"));
+        assert!(a.has("quick"));
+    }
+
+    #[test]
+    fn unknown_trailing_flag_becomes_switch() {
+        let a = Args::parse(argv("x --dangling"), &[]);
+        assert!(a.has("dangling"));
+        assert_eq!(a.get("dangling"), None);
+    }
+}

@@ -1,0 +1,11 @@
+//! In-tree utilities replacing external crates (the testbed vendors only
+//! the xla closure — see Cargo.toml).
+//!
+//! * [`json`] — minimal JSON parser/writer (manifest.json, configs,
+//!   results persistence).
+//! * [`bench`] — tiny criterion-style timing harness for `cargo bench`.
+//! * [`cli`] — flag/positional argument parsing for the binary.
+
+pub mod bench;
+pub mod cli;
+pub mod json;

@@ -1,0 +1,122 @@
+//! Integration tests over the real AOT artifacts + PJRT runtime.
+//!
+//! Require `make artifacts` to have run (skipped with a notice
+//! otherwise, so unit tests stay runnable on a fresh checkout).
+
+use flash_moba::attention::flash_moba::{flash_moba_forward, FlashMobaConfig};
+use flash_moba::attention::testutil::{max_abs_diff, Rng};
+use flash_moba::attention::MobaShape;
+use flash_moba::runtime::{Runtime, Tensor};
+
+fn runtime() -> Option<Runtime> {
+    let dir = std::env::var("FLASH_MOBA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    match Runtime::load(&dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_lists_expected_inventory() {
+    let Some(rt) = runtime() else { return };
+    let m = rt.manifest();
+    for v in ["tiny-dense", "tiny-moba32", "small-moba32", "proof", "e2e-moba64-kconv3"] {
+        assert!(m.variants.contains_key(v), "missing variant {v}");
+    }
+    for a in ["attn_moba_n1024", "attn_dense_n1024", "tiny-moba32_train_step"] {
+        assert!(m.artifacts.contains_key(a), "missing artifact {a}");
+    }
+    // every artifact file exists on disk
+    for (name, spec) in &m.artifacts {
+        assert!(rt.artifacts_dir().join(&spec.file).exists(), "{name} file missing");
+    }
+    // every variant's init bin matches its declared parameter count
+    for (name, v) in &m.variants {
+        let meta = std::fs::metadata(rt.artifacts_dir().join(&v.init_file)).unwrap();
+        assert_eq!(meta.len() as usize, v.total_param_elems() * 4, "{name} init size");
+        assert_eq!(v.param_count, v.total_param_elems(), "{name} param count");
+    }
+}
+
+/// The Pallas MoBA kernel (via HLO + PJRT) must agree with the rust
+/// substrate — the L1 == L3 cross-check through the whole AOT pipeline.
+#[test]
+fn pjrt_moba_kernel_matches_rust_substrate() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.get("attn_moba_n1024").expect("compile");
+    let (h, n, d) = (4usize, 1024usize, 64usize);
+    let shape = MobaShape::new(n, d, 128, 8);
+    let mut rng = Rng::new(77);
+    let q = rng.normal_vec(h * n * d);
+    let k = rng.normal_vec(h * n * d);
+    let v = rng.normal_vec(h * n * d);
+    let outs = exe
+        .run(&[
+            Tensor::f32(q.clone(), &[h, n, d]).unwrap(),
+            Tensor::f32(k.clone(), &[h, n, d]).unwrap(),
+            Tensor::f32(v.clone(), &[h, n, d]).unwrap(),
+        ])
+        .expect("execute");
+    let o = outs[0].as_f32().unwrap();
+    for head in 0..h {
+        let s = head * n * d;
+        let rust = flash_moba_forward(
+            &q[s..s + n * d],
+            &k[s..s + n * d],
+            &v[s..s + n * d],
+            shape,
+            FlashMobaConfig::default(),
+        );
+        assert!(
+            max_abs_diff(&rust.o, &o[s..s + n * d]) < 1e-3,
+            "head {head} disagrees"
+        );
+    }
+}
+
+/// Shape/dtype validation errors come from the manifest check, not XLA.
+#[test]
+fn runtime_rejects_bad_inputs() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.get("attn_dense_n1024").unwrap();
+    // wrong arity
+    assert!(exe.run(&[]).is_err());
+    // wrong shape
+    let bad = Tensor::f32(vec![0.0; 4], &[2, 2]).unwrap();
+    assert!(exe.run(&[bad.clone(), bad.clone(), bad]).is_err());
+    // wrong dtype
+    let i = Tensor::i32(vec![0; 4 * 1024 * 64], &[4, 1024, 64]).unwrap();
+    assert!(exe.run(&[i.clone(), i.clone(), i]).is_err());
+}
+
+#[test]
+fn executable_cache_returns_same_instance() {
+    let Some(rt) = runtime() else { return };
+    let a = rt.get("attn_dense_n1024").unwrap();
+    let b = rt.get("attn_dense_n1024").unwrap();
+    assert!(std::sync::Arc::ptr_eq(&a, &b));
+    assert!(a.stats().calls <= b.stats().calls);
+}
+
+/// The pallas-proof model fwd runs and produces sane logits.
+#[test]
+fn pallas_proof_model_forward_runs() {
+    let Some(rt) = runtime() else { return };
+    let spec = rt.manifest().variant("proof").unwrap().clone();
+    let params = rt.load_init_params("proof").unwrap();
+    let exe = rt.get(spec.fwd_artifact(512).unwrap()).unwrap();
+    let mut rng = Rng::new(5);
+    let tokens: Vec<i32> = (0..512).map(|_| rng.below(spec.vocab_size) as i32).collect();
+    let mut inputs = vec![Tensor::i32(tokens, &[1, 512]).unwrap()];
+    inputs.extend(params.tensors().iter().cloned());
+    let outs = exe.run(&inputs).unwrap();
+    let logits = outs[0].as_f32().unwrap();
+    assert_eq!(logits.len(), 512 * spec.vocab_size);
+    assert!(logits.iter().all(|x| x.is_finite()));
+    // untrained logits should not be constant
+    let first = logits[0];
+    assert!(logits.iter().any(|&x| (x - first).abs() > 1e-3));
+}

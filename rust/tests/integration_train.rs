@@ -1,0 +1,95 @@
+//! Training-loop integration: drive the real `train_step` artifact for a
+//! few steps and check learning dynamics + checkpoint round-trips.
+
+use flash_moba::config::TrainParams;
+use flash_moba::data::corpus::{Corpus, CorpusConfig};
+use flash_moba::runtime::Runtime;
+use flash_moba::train::Trainer;
+
+fn runtime() -> Option<Runtime> {
+    let dir = std::env::var("FLASH_MOBA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    match Runtime::load(&dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn ten_steps_reduce_loss() {
+    let Some(rt) = runtime() else { return };
+    let variant = "tiny-moba32";
+    let spec = rt.manifest().variant(variant).unwrap().clone();
+    let corpus = Corpus::new(CorpusConfig { vocab: spec.vocab_size, ..Default::default() });
+    let mut tr = Trainer::new(&rt, variant).unwrap();
+    let cfg = TrainParams { steps: 10, warmup: 2, log_every: 100, ..Default::default() };
+    tr.run(&corpus, &cfg, |_| {}).unwrap();
+    assert_eq!(tr.history.len(), 10);
+    let first = tr.history[0].loss;
+    let last = tr.history[9].loss;
+    assert!(first.is_finite() && last.is_finite());
+    // vocab 512: initial loss should be near ln(512) ~= 6.24
+    assert!((first - (512f64).ln()).abs() < 1.5, "first loss {first}");
+    assert!(last < first, "loss did not drop: {first} -> {last}");
+}
+
+#[test]
+fn checkpoint_roundtrip_preserves_params() {
+    let Some(rt) = runtime() else { return };
+    let variant = "tiny-moba64";
+    let spec = rt.manifest().variant(variant).unwrap().clone();
+    let corpus = Corpus::new(CorpusConfig { vocab: spec.vocab_size, ..Default::default() });
+    let mut tr = Trainer::new(&rt, variant).unwrap();
+    let cfg = TrainParams { steps: 2, warmup: 1, log_every: 100, ..Default::default() };
+    tr.run(&corpus, &cfg, |_| {}).unwrap();
+
+    let dir = std::env::temp_dir().join("fm_ckpt_test");
+    tr.checkpoint(&dir, "t").unwrap();
+    let path = dir.join(format!("{}_t.bin", spec.name));
+    let restored = Trainer::load_checkpoint(&rt, variant, &path).unwrap();
+    let orig = tr.params().unwrap();
+    assert_eq!(orig.len(), restored.len());
+    for (a, b) in orig.tensors().iter().zip(restored.tensors()) {
+        assert_eq!(a, b);
+    }
+    // loss CSV written
+    assert!(dir.join(format!("{}_t_loss.csv", spec.name)).exists());
+}
+
+#[test]
+fn lr_zero_is_a_fixed_point() {
+    let Some(rt) = runtime() else { return };
+    let variant = "tiny-moba32";
+    let spec = rt.manifest().variant(variant).unwrap().clone();
+    let corpus = Corpus::new(CorpusConfig { vocab: spec.vocab_size, ..Default::default() });
+    let mut tr = Trainer::new(&rt, variant).unwrap();
+    let before = tr.params().unwrap();
+    let (tokens, targets) = corpus.train_batch(spec.train_batch, spec.seq_len, 1);
+    tr.step_batch(&tokens, &targets, 0.0).unwrap();
+    let after = tr.params().unwrap();
+    // AdamW with lr=0 must leave every parameter untouched
+    for (a, b) in before.tensors().iter().zip(after.tensors()) {
+        let (av, bv) = (a.as_f32().unwrap(), b.as_f32().unwrap());
+        let max: f32 = av.iter().zip(bv).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max);
+        assert!(max == 0.0, "params moved with lr=0 (max delta {max})");
+    }
+}
+
+#[test]
+fn deterministic_replay_same_seed() {
+    let Some(rt) = runtime() else { return };
+    let variant = "tiny-moba32";
+    let spec = rt.manifest().variant(variant).unwrap().clone();
+    let corpus = Corpus::new(CorpusConfig { vocab: spec.vocab_size, ..Default::default() });
+    let cfg = TrainParams { steps: 3, warmup: 1, log_every: 100, seed: 7, ..Default::default() };
+    let losses = |_: ()| -> Vec<f64> {
+        let mut tr = Trainer::new(&rt, variant).unwrap();
+        tr.run(&corpus, &cfg, |_| {}).unwrap();
+        tr.history.iter().map(|l| l.loss).collect()
+    };
+    let a = losses(());
+    let b = losses(());
+    assert_eq!(a, b, "training is not deterministic");
+}

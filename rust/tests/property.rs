@@ -1,0 +1,220 @@
+//! Property-based tests (hand-rolled generators — the testbed vendors no
+//! proptest): randomized invariants over the attention substrate, the
+//! coordinator data structures, and the JSON codec. Each property runs
+//! across many seeded cases; failures print the seed for replay.
+
+use std::time::{Duration, Instant};
+
+use flash_moba::attention::centroid::centroids;
+use flash_moba::attention::dense::{flash_attention, naive_attention};
+use flash_moba::attention::flash_moba::{flash_moba_forward, FlashMobaConfig};
+use flash_moba::attention::moba_naive::{moba_naive_forward, moba_reference};
+use flash_moba::attention::testutil::{max_abs_diff, qkv, Rng};
+use flash_moba::attention::topk::{naive_topk, same_selection, tiled_topk};
+use flash_moba::attention::varlen::build_varlen;
+use flash_moba::attention::MobaShape;
+use flash_moba::coordinator::{AttnKind, AttnRequest, Batcher};
+use flash_moba::util::json::Json;
+
+const CASES: u64 = 24;
+
+fn rand_shape(rng: &mut Rng) -> MobaShape {
+    let d = [4usize, 8, 16, 32][rng.below(4)];
+    let block = [8usize, 16, 32, 64][rng.below(4)];
+    let nb = 2 + rng.below(7);
+    let topk = 1 + rng.below(4);
+    MobaShape::new(nb * block, d, block, topk)
+}
+
+/// flash online-softmax attention == naive attention, any tile shape.
+#[test]
+fn prop_flash_dense_equals_naive() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(1000 + seed);
+        let n = 16 + rng.below(200);
+        let d = [4usize, 8, 16][rng.below(3)];
+        let br = 1 + rng.below(64);
+        let bc = 1 + rng.below(64);
+        let (q, k, v) = qkv(seed, n, d);
+        let (o1, l1) = naive_attention(&q, &k, &v, n, d);
+        let (o2, l2, _) = flash_attention(&q, &k, &v, n, d, br, bc);
+        assert!(max_abs_diff(&o1, &o2) < 5e-5, "seed={seed} n={n} d={d} br={br} bc={bc}");
+        assert!(max_abs_diff(&l1, &l2) < 5e-5, "lse seed={seed}");
+    }
+}
+
+/// tiled (streaming) top-k selects the same set as the materializing one.
+#[test]
+fn prop_tiled_topk_equals_naive() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(2000 + seed);
+        let shape = rand_shape(&mut rng);
+        let tile_c = 1 + rng.below(shape.n_blocks() + 2);
+        let (q, k, _) = qkv(seed, shape.n, shape.d);
+        let c = centroids(&k, shape.n, shape.d, shape.block);
+        let (a, _) = naive_topk(&q, &c, shape.n, shape.d, shape.block, shape.topk);
+        let (b, _) = tiled_topk(&q, &c, shape.n, shape.d, shape.block, shape.topk, tile_c);
+        assert!(same_selection(&a, &b, shape.topk), "seed={seed} shape={shape:?} tile_c={tile_c}");
+    }
+}
+
+/// FlashMoBA forward == token-mask reference == original pipeline.
+#[test]
+fn prop_flash_moba_three_way_agreement() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(3000 + seed);
+        let shape = rand_shape(&mut rng);
+        let cfg = FlashMobaConfig {
+            tile_r: 1 + rng.below(80),
+            tile_c: 1 + rng.below(80),
+            topk_tile: 1 + rng.below(16),
+        };
+        let (q, k, v) = qkv(seed, shape.n, shape.d);
+        let out = flash_moba_forward(&q, &k, &v, shape, cfg);
+        let (oref, _) = moba_reference(&q, &k, &v, shape, &out.indices);
+        assert!(max_abs_diff(&out.o, &oref) < 1e-4, "seed={seed} shape={shape:?} cfg={cfg:?}");
+        let (onaive, idx2, _) = moba_naive_forward(&q, &k, &v, shape);
+        assert!(same_selection(&out.indices, &idx2, shape.topk), "routing mismatch seed={seed}");
+        assert!(max_abs_diff(&out.o, &onaive) < 1e-4, "pipeline mismatch seed={seed}");
+    }
+}
+
+/// varlen layout is a permutation: every valid (query, block) entry
+/// appears exactly once, queries ascending per block.
+#[test]
+fn prop_varlen_is_permutation() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(4000 + seed);
+        let n = 1 + rng.below(300);
+        let k = 1 + rng.below(6);
+        let nb = 1 + rng.below(24);
+        let idx: Vec<i32> = (0..n * k)
+            .map(|_| if rng.uniform() < 0.25 { -1 } else { rng.below(nb) as i32 })
+            .collect();
+        let l = build_varlen(&idx, n, k, nb);
+        assert_eq!(l.total(), idx.iter().filter(|&&x| x >= 0).count());
+        let mut seen = 0usize;
+        for j in 0..nb {
+            let qs = l.queries_of(j);
+            assert!(qs.windows(2).all(|w| w[0] <= w[1]), "not ascending seed={seed}");
+            for &t in qs {
+                assert!(idx[t as usize * k..(t as usize + 1) * k].contains(&(j as i32)));
+            }
+            seen += qs.len();
+        }
+        assert_eq!(seen, l.total());
+    }
+}
+
+/// Batcher: never emits more than max_batch, answers preserve FIFO within
+/// a lane, and flush_all drains exactly everything that was accepted.
+#[test]
+fn prop_batcher_invariants() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(5000 + seed);
+        let max_batch = 1 + rng.below(6);
+        let cap = 4 + rng.below(64);
+        let mut b = Batcher::new(max_batch, Duration::from_millis(5), cap);
+        let t0 = Instant::now();
+        let mut accepted = 0usize;
+        let mut emitted = 0usize;
+        let lanes = ["a", "b", "c"];
+        let mut last_id_per_lane = std::collections::HashMap::new();
+        for i in 0..rng.below(200) {
+            let lane = lanes[rng.below(3)];
+            let req = AttnRequest {
+                id: i as u64,
+                kind: AttnKind::Moba,
+                n: 4,
+                d: 2,
+                q: vec![0.0; 8],
+                k: vec![0.0; 8],
+                v: vec![0.0; 8],
+            };
+            if b.push(req, lane, 8, t0).is_ok() {
+                accepted += 1;
+            }
+            while let Some(batch) = b.poll(t0) {
+                assert!(batch.items.len() <= max_batch, "seed={seed}");
+                // FIFO within the lane
+                let last = last_id_per_lane.entry(batch.artifact.clone()).or_insert(0u64);
+                for (req, _) in &batch.items {
+                    assert!(req.id >= *last, "fifo violated seed={seed}");
+                    *last = req.id;
+                }
+                emitted += batch.items.len();
+            }
+            assert!(b.len() <= cap);
+        }
+        for batch in b.flush_all() {
+            assert!(batch.items.len() <= max_batch);
+            emitted += batch.items.len();
+        }
+        assert_eq!(accepted, emitted, "lost or duplicated requests seed={seed}");
+        assert!(b.is_empty());
+    }
+}
+
+/// Deadline semantics: a lone request is emitted exactly once its wait
+/// exceeds max_wait.
+#[test]
+fn prop_batcher_deadline() {
+    for seed in 0..8 {
+        let mut rng = Rng::new(6000 + seed);
+        let wait_ms = 1 + rng.below(50) as u64;
+        let mut b = Batcher::new(8, Duration::from_millis(wait_ms), 16);
+        let t0 = Instant::now();
+        let req = AttnRequest {
+            id: 1,
+            kind: AttnKind::Dense,
+            n: 4,
+            d: 2,
+            q: vec![0.0; 8],
+            k: vec![0.0; 8],
+            v: vec![0.0; 8],
+        };
+        b.push(req, "x", 8, t0).unwrap();
+        assert!(b.poll(t0 + Duration::from_millis(wait_ms - 1)).is_none());
+        assert_eq!(b.next_deadline(), Some(t0 + Duration::from_millis(wait_ms)));
+        assert!(b.poll(t0 + Duration::from_millis(wait_ms)).is_some());
+    }
+}
+
+/// JSON writer/parser round-trip on random documents.
+#[test]
+fn prop_json_roundtrip() {
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth > 3 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.uniform() < 0.5),
+            2 => Json::Num((rng.normal() * 100.0).round()),
+            3 => Json::Str(format!("s{}-\"quote\"-\n-{}", rng.below(100), rng.below(100))),
+            4 => Json::Arr((0..rng.below(5)).map(|_| gen(rng, depth + 1)).collect()),
+            _ => Json::Obj(
+                (0..rng.below(5)).map(|i| (format!("k{i}"), gen(rng, depth + 1))).collect(),
+            ),
+        }
+    }
+    for seed in 0..CASES {
+        let mut rng = Rng::new(7000 + seed);
+        let doc = gen(&mut rng, 0);
+        let text = doc.to_string();
+        assert_eq!(Json::parse(&text).unwrap(), doc, "seed={seed} text={text}");
+        let pretty = doc.to_string_pretty();
+        assert_eq!(Json::parse(&pretty).unwrap(), doc, "pretty seed={seed}");
+    }
+}
+
+/// MoBA sparsity invariant: rows attend at most (k+1) blocks' worth of
+/// tokens — the output must match a reference restricted to that set.
+#[test]
+fn prop_flash_moba_lse_matches_reference() {
+    for seed in 0..8 {
+        let mut rng = Rng::new(8000 + seed);
+        let shape = rand_shape(&mut rng);
+        let (q, k, v) = qkv(seed, shape.n, shape.d);
+        let out = flash_moba_forward(&q, &k, &v, shape, FlashMobaConfig::default());
+        let (_, lref) = moba_reference(&q, &k, &v, shape, &out.indices);
+        assert!(max_abs_diff(&out.lse, &lref) < 1e-4, "seed={seed}");
+    }
+}
