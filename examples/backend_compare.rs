@@ -1,0 +1,69 @@
+//! Compare every registered attention backend on one problem through
+//! the `AttentionBackend` trait: agreement vs the dense oracle, stage
+//! breakdowns, workspace and speedups. Runs on a fresh checkout (no
+//! artifacts needed).
+//!
+//! ```sh
+//! cargo run --release --example backend_compare -- [n] [block] [topk]
+//! ```
+
+use std::time::Instant;
+
+use flash_moba::attention::backend::{self, BackendRegistry, ParityTolerance};
+use flash_moba::attention::dense::naive_attention;
+use flash_moba::attention::testutil::{max_abs_diff, qkv};
+use flash_moba::attention::MobaShape;
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let n: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4096);
+    let block: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(128);
+    let topk: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(8);
+
+    let Some(shape) = MobaShape::try_new(n, 64, block, topk) else {
+        eprintln!("invalid geometry: n={n} must divide into blocks of {block}");
+        std::process::exit(2);
+    };
+    let registry = BackendRegistry::with_defaults();
+    println!(
+        "registered backends: {:?}   (shape: N={n}, d=64, B={block}, k={topk}, density {:.2})\n",
+        registry.names(),
+        shape.density()
+    );
+
+    let (q, k, v) = qkv(42, shape.n, shape.d);
+    let (oracle, _) = naive_attention(&q, &k, &v, shape.n, shape.d);
+
+    let mut dense_time = None;
+    for b in registry.iter() {
+        if !b.supports(&shape) {
+            println!("{:<12} unsupported for this geometry, skipping", b.name());
+            continue;
+        }
+        let t0 = Instant::now();
+        let (o, st) = b.forward(&shape, &q, &k, &v);
+        let el = t0.elapsed().as_secs_f64();
+        if b.name() == "dense" {
+            dense_time = Some(el);
+        }
+        let speedup = dense_time.map(|d| d / el).unwrap_or(1.0);
+        println!(
+            "{:<12} {:>8.1} ms  ({:>5.2}x vs dense)   max|Δ| vs oracle {:.2e}",
+            b.name(),
+            el * 1e3,
+            speedup,
+            max_abs_diff(&o, &oracle)
+        );
+        println!("{:<12} stages: {}\n", "", st.summary());
+    }
+
+    // the shared parity harness — the same check `cargo test` and
+    // `flash-moba bench parity` run
+    match backend::check_grid_parity(&registry, &ParityTolerance::default()) {
+        Ok(()) => println!("parity grid OK: all backends agree within tolerance"),
+        Err(e) => {
+            eprintln!("parity violation: {e}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,6 +1,13 @@
+//! Probe the HLO text artifacts: can each be loaded as an HloModule?
+//! In stub builds (no vendored PJRT bindings) this is a lightweight
+//! sanity check of the artifact files; with the real bindings linked it
+//! exercises the full proto parser.
+
+use flash_moba::xla::HloModuleProto;
+
 fn main() {
     for f in ["artifacts/attn_dense_n1024.hlo.txt", "artifacts/attn_moba_n1024.hlo.txt"] {
-        match xla::HloModuleProto::from_text_file(f) {
+        match HloModuleProto::from_text_file(f) {
             Ok(_) => println!("{f}: OK"),
             Err(e) => println!("{f}: ERR {e}"),
         }

@@ -1,10 +1,14 @@
 //! Serving example: the coordinator batching concurrent long-context
-//! attention requests over the AOT Pallas kernels, reporting throughput,
-//! latency percentiles and batch occupancy — the deployment story for
-//! FlashMoBA kernels.
+//! attention requests, reporting throughput, latency percentiles and
+//! batch occupancy — the deployment story for FlashMoBA kernels.
+//!
+//! With AOT artifacts present the requests execute over PJRT; without
+//! them the coordinator serves on the CPU attention substrate through
+//! the `AttentionBackend` registry, so this example works out of the
+//! box on a fresh checkout:
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example serve_longcontext -- [n_requests]
+//! cargo run --release --example serve_longcontext -- [n_requests]
 //! ```
 
 use flash_moba::attention::testutil::Rng;
@@ -17,7 +21,7 @@ fn main() -> flash_moba::Result<()> {
     let dir = std::env::var("FLASH_MOBA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
     let coord = Coordinator::start(
         dir,
-        ServeParams { max_batch: 4, max_wait_ms: 8, queue_capacity: 256 },
+        ServeParams { max_batch: 4, max_wait_ms: 8, queue_capacity: 256, ..Default::default() },
     )?;
 
     // a mixed long-context workload: MoBA-heavy, some dense, mixed sizes

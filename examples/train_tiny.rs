@@ -1,4 +1,5 @@
-//! End-to-end training driver (the DESIGN.md §e2e validation run):
+//! End-to-end training driver (the e2e validation run, README.md
+//! §Architecture):
 //! train the `e2e-moba64-kconv3` hybrid SWA/MoBA transformer (~17M
 //! params) from scratch on the synthetic corpus for a few hundred steps,
 //! entirely from rust over the AOT train-step artifact, logging the loss
@@ -7,7 +8,7 @@
 //! ```sh
 //! make artifacts && cargo run --release --example train_tiny -- [steps] [variant]
 //! ```
-//! The run recorded in EXPERIMENTS.md used the default 200 steps.
+//! The reference run used the default 200 steps.
 
 use flash_moba::config::TrainParams;
 use flash_moba::data::corpus::{Corpus, CorpusConfig};

@@ -5,7 +5,7 @@ BlockSpec and mean-pooled on chip, emitting a single (1, d) centroid row.
 The output matrix K~ is B x smaller than K, which is what makes the
 subsequent Flash TopK pass cheap (§4.2).
 
-TPU mapping (see DESIGN.md §Hardware-Adaptation): the CUDA version is a
+TPU mapping (hardware adaptation, README.md §Architecture): the CUDA version is a
 Triton reduction kernel; here the HBM->VMEM schedule is expressed with a
 BlockSpec and the reduction runs on the VPU. `interpret=True` because the
 CPU PJRT plugin cannot execute Mosaic custom-calls.

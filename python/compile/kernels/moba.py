@@ -3,7 +3,7 @@
 The CUDA kernel is "gather-and-densify": per logical key block, gather the
 sparse set of routed queries into dense SRAM tiles and run FA-2 style
 GEMMs. TPUs have no efficient scatter/gather into VMEM, so the adaptation
-(DESIGN.md §Hardware-Adaptation) inverts the loop structure:
+(hardware adaptation, README.md §Architecture) inverts the loop structure:
 
   grid = (query tiles, logical KV blocks), KV innermost.
 

@@ -1,0 +1,416 @@
+//! The [`AttentionBackend`] trait: one call convention for every
+//! attention implementation in the substrate, plus a [`BackendRegistry`]
+//! and the cross-backend parity harness.
+//!
+//! Before this existed, `dense::flash_attention`, `moba_naive` and
+//! `flash_moba` were three disconnected signatures and every consumer
+//! (coordinator, evaluators, bench harness) hard-coded all three. The
+//! trait makes "which attention" a runtime value, so new backends
+//! (varlen batching, kconv-routed selection, adaptive block sizes) plug
+//! in by registering one object — and inherit the parity harness, the
+//! figure sweeps and the serving router for free.
+
+use super::dense::{flash_attention, naive_attention};
+use super::flash_moba::{flash_moba_forward, FlashMobaConfig};
+use super::moba_naive::moba_naive_forward;
+use super::stats::StageStats;
+use super::testutil::{max_abs_diff, qkv};
+use super::MobaShape;
+
+/// A single-head causal attention implementation.
+///
+/// Inputs are (n, d) row-major f32; the routing geometry (block size,
+/// top-k) rides in the [`MobaShape`]. Implementations that ignore
+/// routing (dense) simply read `n` and `d`.
+pub trait AttentionBackend: Send + Sync {
+    /// Stable registry key (also the display name in reports).
+    fn name(&self) -> &'static str;
+
+    /// Supported-config predicate: can this backend run this geometry?
+    /// Callers must check before `forward` (routers use this to fall
+    /// back, harnesses to skip).
+    fn supports(&self, shape: &MobaShape) -> bool;
+
+    /// `true` when the output equals dense attention for *any* routing
+    /// (no sparsity approximation). Exact backends are compared against
+    /// the dense oracle on every shape by the parity harness; sparse
+    /// ones only at full routing, plus pairwise against each other.
+    fn is_exact(&self) -> bool {
+        false
+    }
+
+    /// Run the forward pass. Returns the (n, d) output and the stage
+    /// timings / workspace accounting of the run.
+    fn forward(&self, shape: &MobaShape, q: &[f32], k: &[f32], v: &[f32])
+        -> (Vec<f32>, StageStats);
+}
+
+/// Blocked online-softmax dense attention (the FlashAttention-2
+/// analogue) behind the trait.
+#[derive(Debug, Clone, Copy)]
+pub struct DenseBackend {
+    pub br: usize,
+    pub bc: usize,
+}
+
+impl Default for DenseBackend {
+    fn default() -> Self {
+        Self { br: 64, bc: 64 }
+    }
+}
+
+impl AttentionBackend for DenseBackend {
+    fn name(&self) -> &'static str {
+        "dense"
+    }
+
+    fn supports(&self, _shape: &MobaShape) -> bool {
+        true
+    }
+
+    fn is_exact(&self) -> bool {
+        true
+    }
+
+    fn forward(
+        &self,
+        shape: &MobaShape,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+    ) -> (Vec<f32>, StageStats) {
+        let mut st = StageStats::new();
+        let (o, _lse, ws) =
+            st.time("fwd", || flash_attention(q, k, v, shape.n, shape.d, self.br, self.bc));
+        st.add_workspace(ws);
+        (o, st)
+    }
+}
+
+/// The original five-stage MoBA pipeline (Lu et al., 2025) behind the
+/// trait — the overhead-laden baseline of Figures 3–4.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MobaNaiveBackend;
+
+impl AttentionBackend for MobaNaiveBackend {
+    fn name(&self) -> &'static str {
+        "moba_naive"
+    }
+
+    fn supports(&self, shape: &MobaShape) -> bool {
+        shape.topk >= 1 && shape.block >= 1 && shape.n % shape.block == 0
+    }
+
+    fn forward(
+        &self,
+        shape: &MobaShape,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+    ) -> (Vec<f32>, StageStats) {
+        let (o, _indices, st) = moba_naive_forward(q, k, v, *shape);
+        (o, st)
+    }
+}
+
+/// The paper's fused FlashMoBA forward behind the trait.
+#[derive(Debug, Clone, Copy)]
+pub struct FlashMobaBackend {
+    pub cfg: FlashMobaConfig,
+}
+
+impl Default for FlashMobaBackend {
+    fn default() -> Self {
+        Self { cfg: FlashMobaConfig::default() }
+    }
+}
+
+impl AttentionBackend for FlashMobaBackend {
+    fn name(&self) -> &'static str {
+        "flash_moba"
+    }
+
+    fn supports(&self, shape: &MobaShape) -> bool {
+        shape.topk >= 1 && shape.block >= 1 && shape.n % shape.block == 0
+    }
+
+    fn forward(
+        &self,
+        shape: &MobaShape,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+    ) -> (Vec<f32>, StageStats) {
+        let out = flash_moba_forward(q, k, v, *shape, self.cfg);
+        (out.o, out.stats)
+    }
+}
+
+/// Ordered collection of registered backends, keyed by name.
+pub struct BackendRegistry {
+    backends: Vec<Box<dyn AttentionBackend>>,
+}
+
+impl BackendRegistry {
+    pub fn new() -> Self {
+        Self { backends: Vec::new() }
+    }
+
+    /// The three in-tree implementations, in report display order.
+    pub fn with_defaults() -> Self {
+        let mut r = Self::new();
+        r.register(Box::new(DenseBackend::default()));
+        r.register(Box::new(MobaNaiveBackend));
+        r.register(Box::new(FlashMobaBackend::default()));
+        r
+    }
+
+    /// Add a backend (replacing any existing one with the same name, so
+    /// callers can override e.g. tile configs).
+    pub fn register(&mut self, backend: Box<dyn AttentionBackend>) {
+        self.backends.retain(|b| b.name() != backend.name());
+        self.backends.push(backend);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&dyn AttentionBackend> {
+        self.backends.iter().find(|b| b.name() == name).map(|b| b.as_ref())
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &dyn AttentionBackend> + '_ {
+        self.backends.iter().map(|b| b.as_ref())
+    }
+
+    pub fn names(&self) -> Vec<&'static str> {
+        self.backends.iter().map(|b| b.name()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.backends.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.backends.is_empty()
+    }
+}
+
+impl Default for BackendRegistry {
+    /// An *empty* registry, matching [`BackendRegistry::new`] (use
+    /// [`BackendRegistry::with_defaults`] for the stock backends).
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+// --------------------------------------------------------------- parity
+
+/// Agreement tolerances (max |Δ| over all output elements).
+#[derive(Debug, Clone, Copy)]
+pub struct ParityTolerance {
+    /// vs the textbook dense oracle ([`naive_attention`]): exact
+    /// backends on any shape; every backend at full routing
+    pub dense: f32,
+    /// pairwise between sparse backends on the same routing geometry
+    pub cross: f32,
+}
+
+impl Default for ParityTolerance {
+    fn default() -> Self {
+        // generous vs f32 accumulation noise (~1e-5 at these sizes) but
+        // orders of magnitude below any real routing/parity bug (~1e-1)
+        Self { dense: 5e-4, cross: 5e-4 }
+    }
+}
+
+/// Is every strictly-past block routed for every query (MoBA == dense)?
+pub fn fully_routed(shape: &MobaShape) -> bool {
+    shape.topk + 1 >= shape.n_blocks()
+}
+
+/// Run every supporting backend on one seeded problem and check:
+/// exact backends (and, at full routing, all backends) against the
+/// textbook dense oracle; sparse backends pairwise against each other.
+/// `Err` carries a human-readable violation description.
+pub fn check_shape_parity(
+    registry: &BackendRegistry,
+    shape: MobaShape,
+    seed: u64,
+    tol: &ParityTolerance,
+) -> std::result::Result<(), String> {
+    let (q, k, v) = qkv(seed, shape.n, shape.d);
+    let (oracle, _) = naive_attention(&q, &k, &v, shape.n, shape.d);
+    let full = fully_routed(&shape);
+    let mut sparse: Vec<(&str, Vec<f32>)> = Vec::new();
+    for b in registry.iter() {
+        if !b.supports(&shape) {
+            continue;
+        }
+        let (o, _st) = b.forward(&shape, &q, &k, &v);
+        if o.len() != shape.n * shape.d {
+            return Err(format!(
+                "{}: output length {} != n*d {} (shape {shape:?})",
+                b.name(),
+                o.len(),
+                shape.n * shape.d
+            ));
+        }
+        if b.is_exact() || full {
+            let dev = max_abs_diff(&o, &oracle);
+            if dev > tol.dense {
+                return Err(format!(
+                    "{} deviates from the dense oracle by {dev:.2e} > {:.2e} \
+                     (shape {shape:?}, seed {seed}, full_routing={full})",
+                    b.name(),
+                    tol.dense
+                ));
+            }
+        }
+        if !b.is_exact() {
+            sparse.push((b.name(), o));
+        }
+    }
+    for i in 0..sparse.len() {
+        for j in i + 1..sparse.len() {
+            let dev = max_abs_diff(&sparse[i].1, &sparse[j].1);
+            if dev > tol.cross {
+                return Err(format!(
+                    "sparse backends {} and {} disagree by {dev:.2e} > {:.2e} \
+                     (shape {shape:?}, seed {seed})",
+                    sparse[i].0, sparse[j].0, tol.cross
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// The default verification grid: a mix of sparse routings and
+/// fully-routed shapes (where MoBA must reproduce dense exactly).
+pub fn parity_grid() -> Vec<MobaShape> {
+    vec![
+        MobaShape::new(64, 4, 16, 1),
+        MobaShape::new(128, 16, 16, 2),
+        MobaShape::new(128, 8, 16, 8),   // fully routed (k = n_blocks)
+        MobaShape::new(96, 8, 16, 6),    // fully routed
+        MobaShape::new(256, 8, 32, 3),
+        MobaShape::new(256, 32, 64, 4),  // fully routed
+        MobaShape::new(512, 16, 64, 2),
+    ]
+}
+
+/// Assert parity over the whole default grid.
+pub fn check_grid_parity(
+    registry: &BackendRegistry,
+    tol: &ParityTolerance,
+) -> std::result::Result<(), String> {
+    for (i, shape) in parity_grid().into_iter().enumerate() {
+        check_shape_parity(registry, shape, 0x9A17 + i as u64, tol)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_defaults_cover_all_three() {
+        let r = BackendRegistry::with_defaults();
+        assert_eq!(r.names(), vec!["dense", "moba_naive", "flash_moba"]);
+        assert!(r.get("dense").is_some());
+        assert!(r.get("flash_moba").is_some());
+        assert!(r.get("nope").is_none());
+        assert_eq!(r.len(), 3);
+        assert!(!r.is_empty());
+    }
+
+    #[test]
+    fn register_replaces_same_name() {
+        let mut r = BackendRegistry::with_defaults();
+        r.register(Box::new(DenseBackend { br: 32, bc: 32 }));
+        assert_eq!(r.len(), 3);
+        // replaced entry moves to the back
+        assert_eq!(r.names().last().copied(), Some("dense"));
+    }
+
+    #[test]
+    fn supports_predicates() {
+        let shape = MobaShape::new(128, 8, 32, 2);
+        let no_topk = MobaShape::new(128, 8, 32, 0);
+        let r = BackendRegistry::with_defaults();
+        for b in r.iter() {
+            assert!(b.supports(&shape), "{}", b.name());
+        }
+        assert!(r.get("dense").unwrap().supports(&no_topk));
+        assert!(!r.get("moba_naive").unwrap().supports(&no_topk));
+        assert!(!r.get("flash_moba").unwrap().supports(&no_topk));
+    }
+
+    #[test]
+    fn dense_backend_matches_oracle_everywhere() {
+        let r = BackendRegistry::with_defaults();
+        let dense = r.get("dense").unwrap();
+        assert!(dense.is_exact());
+        for shape in [MobaShape::new(96, 8, 16, 1), MobaShape::new(128, 4, 32, 2)] {
+            let (q, k, v) = qkv(5, shape.n, shape.d);
+            let (o, st) = dense.forward(&shape, &q, &k, &v);
+            let (oracle, _) = naive_attention(&q, &k, &v, shape.n, shape.d);
+            assert!(max_abs_diff(&o, &oracle) < 5e-5);
+            assert!(st.get("fwd").is_some());
+            assert!(st.workspace_bytes > 0);
+        }
+    }
+
+    #[test]
+    fn moba_backends_report_their_stages() {
+        let shape = MobaShape::new(64, 4, 16, 1);
+        let (q, k, v) = qkv(6, shape.n, shape.d);
+        let r = BackendRegistry::with_defaults();
+        let (_, st) = r.get("moba_naive").unwrap().forward(&shape, &q, &k, &v);
+        assert!(st.get("gating").is_some() && st.get("merge").is_some());
+        let (_, st) = r.get("flash_moba").unwrap().forward(&shape, &q, &k, &v);
+        assert!(st.get("flash_topk").is_some() && st.get("fwd").is_some());
+    }
+
+    #[test]
+    fn grid_parity_holds_for_default_registry() {
+        let r = BackendRegistry::with_defaults();
+        check_grid_parity(&r, &ParityTolerance::default()).unwrap();
+    }
+
+    #[test]
+    fn parity_detects_a_broken_backend() {
+        /// Deliberately wrong "dense" impl: returns zeros.
+        struct Broken;
+        impl AttentionBackend for Broken {
+            fn name(&self) -> &'static str {
+                "broken"
+            }
+            fn supports(&self, _s: &MobaShape) -> bool {
+                true
+            }
+            fn is_exact(&self) -> bool {
+                true
+            }
+            fn forward(
+                &self,
+                shape: &MobaShape,
+                _q: &[f32],
+                _k: &[f32],
+                _v: &[f32],
+            ) -> (Vec<f32>, StageStats) {
+                (vec![0.0; shape.n * shape.d], StageStats::new())
+            }
+        }
+        let mut r = BackendRegistry::with_defaults();
+        r.register(Box::new(Broken));
+        let err = check_grid_parity(&r, &ParityTolerance::default()).unwrap_err();
+        assert!(err.contains("broken"), "{err}");
+    }
+
+    #[test]
+    fn fully_routed_detection() {
+        assert!(fully_routed(&MobaShape::new(128, 8, 16, 8)));
+        assert!(fully_routed(&MobaShape::new(128, 8, 16, 7)));
+        assert!(!fully_routed(&MobaShape::new(128, 8, 16, 6)));
+    }
+}

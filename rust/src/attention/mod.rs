@@ -1,10 +1,10 @@
 //! CPU attention substrate — the performance testbed for the paper's
 //! efficiency claims (§4, §5.3, Figures 3–4).
 //!
-//! The paper's kernels are CUDA; this machine is a single CPU core. Per
-//! DESIGN.md §Hardware-Adaptation we reproduce the *algorithms* (and
-//! their asymptotics, overheads and crossovers) as faithful f32
-//! implementations:
+//! The paper's kernels are CUDA; this machine is a single CPU core. We
+//! reproduce the *algorithms* (and their asymptotics, overheads and
+//! crossovers) as faithful f32 implementations (see README.md
+//! §Architecture for the hardware-adaptation rationale):
 //!
 //! * [`dense`] — naive O(N²) attention plus a blocked online-softmax
 //!   implementation (the FlashAttention-2 analogue on this hardware).
@@ -16,9 +16,14 @@
 //!   backward (Algorithm 5) in [`backward`].
 //! * [`topk`], [`centroid`], [`varlen`], [`kconv`] — shared building
 //!   blocks (Algorithms 2–4, Appendix B).
+//! * [`backend`] — the [`backend::AttentionBackend`] trait unifying the
+//!   implementations behind one call convention, plus the registry and
+//!   cross-backend parity harness every consumer layer dispatches
+//!   through.
 //!
 //! All single-head (N, d) row-major f32; multi-head benches loop heads.
 
+pub mod backend;
 pub mod backward;
 pub mod centroid;
 pub mod dense;
@@ -31,6 +36,7 @@ pub mod testutil;
 pub mod topk;
 pub mod varlen;
 
+pub use backend::{AttentionBackend, BackendRegistry};
 pub use stats::StageStats;
 
 /// Geometry of one MoBA attention problem.
@@ -48,8 +54,23 @@ pub struct MobaShape {
 
 impl MobaShape {
     pub fn new(n: usize, d: usize, block: usize, topk: usize) -> Self {
-        assert!(n % block == 0, "N={n} not divisible by B={block}");
-        Self { n, d, block, topk }
+        Self::try_new(n, d, block, topk).unwrap_or_else(|| {
+            panic!(
+                "invalid MoBA geometry N={n} d={d} B={block}: \
+                 N must be a positive multiple of B, and d > 0"
+            )
+        })
+    }
+
+    /// Non-panicking constructor: `None` when the geometry is invalid
+    /// (ragged block partition or empty problem). Used by callers that
+    /// must *decide* rather than assert — e.g. the serving router
+    /// falling back to a dense backend for unsupported request shapes.
+    pub fn try_new(n: usize, d: usize, block: usize, topk: usize) -> Option<Self> {
+        if n == 0 || d == 0 || block == 0 || n % block != 0 {
+            return None;
+        }
+        Some(Self { n, d, block, topk })
     }
 
     pub fn n_blocks(&self) -> usize {
@@ -78,5 +99,14 @@ mod tests {
     #[should_panic]
     fn ragged_rejected() {
         MobaShape::new(100, 64, 32, 2);
+    }
+
+    #[test]
+    fn try_new_decides_instead_of_panicking() {
+        assert!(MobaShape::try_new(1024, 64, 128, 8).is_some());
+        assert!(MobaShape::try_new(700, 64, 128, 8).is_none()); // ragged
+        assert!(MobaShape::try_new(0, 64, 128, 8).is_none());
+        assert!(MobaShape::try_new(128, 0, 128, 8).is_none());
+        assert!(MobaShape::try_new(128, 64, 0, 8).is_none());
     }
 }

@@ -2,7 +2,7 @@
 //! can autovectorize them (multiple independent accumulators lift the
 //! f32-associativity constraint that blocks SIMD on naive loops).
 //!
-//! §Perf pass result (EXPERIMENTS.md): replacing the scalar loops in the
+//! Perf pass result: replacing the scalar loops in the
 //! attention substrate with these raised FlashMoBA forward throughput
 //! ~3–4× on this machine (with `-C target-cpu=native`).
 

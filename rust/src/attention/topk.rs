@@ -38,10 +38,12 @@ pub fn naive_topk(
     for t in 0..n {
         let own = t / block;
         order.clear();
-        order.extend(0..own); // strictly past blocks
-        order.sort_by(|&a, &b| {
-            scores[t * nb + b].partial_cmp(&scores[t * nb + a]).unwrap()
-        });
+        // strictly past blocks; NaN scores (degenerate q/centroid
+        // inputs) are excluded up front — `total_cmp` would rank +NaN
+        // above every real score, while the streaming kernel's
+        // `dotv > best` insertion never admits NaN
+        order.extend((0..own).filter(|&j| !scores[t * nb + j].is_nan()));
+        order.sort_by(|&a, &b| scores[t * nb + b].total_cmp(&scores[t * nb + a]));
         for (slot, &j) in order.iter().take(topk).enumerate() {
             out[t * topk + slot] = j as i32;
         }
@@ -62,8 +64,17 @@ pub fn tiled_topk(
     topk: usize,
     tile_c: usize,
 ) -> (Vec<i32>, u64) {
+    // degenerate tile widths: 0 would never advance the stream; clamp
+    // (widths larger than the candidate set are already handled by the
+    // `min(own)` bound below and covered by regression tests)
+    let tile_c = tile_c.max(1);
     let _nb = centroids.len() / d;
     let mut out = vec![-1i32; n * topk];
+    // k = 0: empty selection, mirroring naive_topk (and avoiding the
+    // `best_s[topk - 1]` underflow in the insertion below)
+    if topk == 0 {
+        return (out, ws_bytes(&[tile_c]));
+    }
     // per-row running state (scores descending)
     let mut best_s = vec![f32::NEG_INFINITY; topk];
     let mut best_i = vec![-1i32; topk];
@@ -187,5 +198,72 @@ mod tests {
         assert!(same_selection(&[1, 2, 3, 4], &[2, 1, 4, 3], 2));
         assert!(!same_selection(&[1, 2, 3, 4], &[1, 2, 3, 5], 2));
         assert!(!same_selection(&[1, 2], &[1, 2, 3, 4], 2));
+    }
+
+    /// Degenerate tile widths: a tile larger than the whole candidate
+    /// set, tile width 1 (fully serial streaming), and the clamped
+    /// width-0 case must all select exactly what the materializing
+    /// reference selects.
+    #[test]
+    fn degenerate_tile_widths_match_naive() {
+        let (n, d, b, k) = (256, 8, 16, 3);
+        let nb = n / b;
+        let (q, kk, _) = qkv(15, n, d);
+        let c = centroids(&kk, n, d, b);
+        let (reference, _) = naive_topk(&q, &c, n, d, b, k);
+        for tile_c in [1, nb, nb + 7, 10 * nb, 0] {
+            let (t, _) = tiled_topk(&q, &c, n, d, b, k, tile_c);
+            assert!(same_selection(&reference, &t, k), "tile_c={tile_c}");
+        }
+    }
+
+    /// topk larger than the candidate set: unused slots stay -1 and the
+    /// selected prefix matches the reference.
+    #[test]
+    fn topk_exceeding_candidates_pads_with_minus_one() {
+        let (n, d, b) = (64, 4, 16);
+        let nb = n / b; // 4 blocks; k = 6 > any candidate count
+        let k = nb + 2;
+        let (q, kk, _) = qkv(16, n, d);
+        let c = centroids(&kk, n, d, b);
+        let (a, _) = naive_topk(&q, &c, n, d, b, k);
+        let (t, _) = tiled_topk(&q, &c, n, d, b, k, 3);
+        assert!(same_selection(&a, &t, k));
+        // the last row has nb-1 = 3 candidates -> 3 real picks, 3 pads
+        let last = &t[(n - 1) * k..n * k];
+        assert_eq!(last.iter().filter(|&&j| j >= 0).count(), nb - 1);
+        assert_eq!(last.iter().filter(|&&j| j == -1).count(), k - (nb - 1));
+    }
+
+    /// k = 0 must produce an empty selection from both selectors (the
+    /// streaming kernel's insertion indexes `best_s[k - 1]`).
+    #[test]
+    fn topk_zero_is_empty_not_a_panic() {
+        let (n, d, b) = (64, 4, 16);
+        let (q, kk, _) = qkv(18, n, d);
+        let c = centroids(&kk, n, d, b);
+        let (a, _) = naive_topk(&q, &c, n, d, b, 0);
+        let (t, _) = tiled_topk(&q, &c, n, d, b, 0, 4);
+        assert!(a.is_empty());
+        assert!(t.is_empty());
+    }
+
+    /// NaN gating scores must not panic the materializing sort and must
+    /// leave NaN-scored blocks unselected — mirroring the streaming
+    /// kernel, whose `>` insertion never admits NaN.
+    #[test]
+    fn nan_scores_do_not_panic_and_are_never_selected() {
+        let (n, d, b, k) = (64, 4, 16, 2);
+        let (q, kk, _) = qkv(17, n, d);
+        let mut c = centroids(&kk, n, d, b);
+        // poison block 1's centroid: every q·c score for block 1 is NaN
+        for x in c[d..2 * d].iter_mut() {
+            *x = f32::NAN;
+        }
+        let (a, _) = naive_topk(&q, &c, n, d, b, k);
+        let (t, _) = tiled_topk(&q, &c, n, d, b, k, 4);
+        assert!(same_selection(&a, &t, k));
+        assert!(a.iter().all(|&j| j != 1), "NaN block selected by naive_topk");
+        assert!(t.iter().all(|&j| j != 1), "NaN block selected by tiled_topk");
     }
 }

@@ -1,5 +1,13 @@
 //! Figures 3–4 + §5.3 headline numbers, on the CPU attention substrate.
 //!
+//! Every forward measurement dispatches through the
+//! [`AttentionBackend`] registry, so a newly registered backend shows up
+//! in the sweeps and breakdowns without touching this file; what stays
+//! per-implementation here is measurement *policy*, not dispatch: the
+//! backward timings (not part of the trait), the analytic workspace
+//! curves, and the single-core timing caps in [`fwd_cap`]/[`bwd_cap`]
+//! (unknown backends get no cap and no backward point).
+//!
 //! Figure 3 (latency & memory vs N): dense FA-2 analogue vs original
 //! MoBA vs FlashMoBA, forward + backward + top-k decomposition. Points
 //! too slow to time on one core are skipped per-impl (the paper skips
@@ -12,12 +20,13 @@
 
 use std::time::Instant;
 
-
+#[allow(unused_imports)]
+use crate::attention::backend::AttentionBackend;
+use crate::attention::backend::BackendRegistry;
 use crate::attention::backward::{flash_moba_backward, naive_backward};
-use crate::attention::dense::flash_attention;
 use crate::attention::flash_moba::{flash_moba_forward, FlashMobaConfig};
 use crate::attention::moba_naive::moba_naive_forward;
-use crate::attention::stats::ws_bytes;
+use crate::attention::stats::{ws_bytes, StageStats};
 use crate::attention::testutil::{qkv, Rng};
 use crate::attention::MobaShape;
 use crate::config::AppConfig;
@@ -26,8 +35,8 @@ use crate::Result;
 
 use super::report::{self, Table};
 
-/// Measured timings for one (impl, N) point; `None` = skipped (too slow
-/// on this testbed / past the OOM budget — rendered as `--`).
+/// Measured timings for one (backend, N) point; `None` = skipped (too
+/// slow on this testbed / past the OOM budget — rendered as `--`).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct Point {
     pub fwd_s: Option<f64>,
@@ -73,81 +82,138 @@ pub fn dense_workspace_bytes(d: usize, br: usize, bc: usize) -> u64 {
     ws_bytes(&[br * bc, br * d, 2 * br])
 }
 
-/// One Figure-3 sweep. `budget_bytes` reproduces the OOM cliff.
+fn analytic_workspace(name: &str, shape: MobaShape) -> u64 {
+    match name {
+        "dense" => dense_workspace_bytes(shape.d, 64, 64),
+        "moba_naive" => naive_workspace_bytes(shape),
+        "flash_moba" => flash_workspace_bytes(shape, FlashMobaConfig::default()),
+        _ => 0, // unknown backend: filled from measured stats
+    }
+}
+
+/// Largest N we time a backend's forward at on one core.
+fn fwd_cap(name: &str, quick: bool) -> usize {
+    match name {
+        "dense" => if quick { 4096 } else { 16384 },
+        "moba_naive" => if quick { 8192 } else { 32768 },
+        _ => usize::MAX,
+    }
+}
+
+/// Largest N we time a backend's backward at.
+fn bwd_cap(name: &str, quick: bool) -> usize {
+    match name {
+        "dense" => if quick { 2048 } else { 8192 },
+        "moba_naive" => if quick { 8192 } else { 32768 },
+        "flash_moba" => usize::MAX,
+        _ => 0, // backward is not part of the trait; unknown backends skip
+    }
+}
+
+/// Sum of the routing-overhead stages a backend reports (the "top-k"
+/// decomposition column; labels cover both pipelines).
+fn topk_seconds(st: &StageStats) -> f64 {
+    ["gating", "reindex", "flash_topk"]
+        .iter()
+        .copied()
+        .filter_map(|label| st.get(label))
+        .map(|d| d.as_secs_f64())
+        .sum()
+}
+
+/// One backward timing, per implementation (Algorithm 5 for FlashMoBA,
+/// the materializing baseline otherwise).
+fn backward_seconds(
+    name: &str,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    dout: &[f32],
+    shape: MobaShape,
+) -> Option<f64> {
+    match name {
+        "dense" => {
+            // dense backward == naive_backward with full routing
+            let full_shape = MobaShape::new(shape.n, shape.d, shape.block, shape.n_blocks());
+            let full_idx = full_routing(shape);
+            Some(time_reps(1, || {
+                naive_backward(q, k, v, dout, full_shape, &full_idx);
+            }))
+        }
+        "moba_naive" => {
+            let (_, idx, _) = moba_naive_forward(q, k, v, shape);
+            Some(time_reps(1, || {
+                naive_backward(q, k, v, dout, shape, &idx);
+            }))
+        }
+        "flash_moba" => {
+            let out = flash_moba_forward(q, k, v, shape, FlashMobaConfig::default());
+            Some(time_reps(1, || {
+                flash_moba_backward(q, k, v, &out.o, &out.lse, dout, shape, &out.layout);
+            }))
+        }
+        _ => None,
+    }
+}
+
+/// One Figure-3 sweep row: every registered backend's measurements at N.
 pub struct Fig3Row {
     pub n: usize,
-    pub dense: Point,
-    pub naive: Point,
-    pub flash: Point,
+    /// (backend name, point) in registry order
+    pub points: Vec<(String, Point)>,
+}
+
+impl Fig3Row {
+    pub fn point(&self, name: &str) -> Option<&Point> {
+        self.points.iter().find(|(n, _)| n == name).map(|(_, p)| p)
+    }
 }
 
 pub fn run_fig3(cfg: &AppConfig, quick: bool) -> Result<Vec<Fig3Row>> {
+    let registry = BackendRegistry::with_defaults();
     let b = cfg.bench.block;
     let k = cfg.bench.topk;
     let d = cfg.bench.head_dim;
     let reps = if quick { 1 } else { cfg.bench.reps };
     let budget_bytes: u64 = 2 << 30; // 2 GiB workspace budget = "80GB H100" analogue
-    // single-core time budgets (seconds) per measured point
-    let (dense_fwd_cap, dense_bwd_cap, naive_cap) =
-        if quick { (4096, 2048, 8192) } else { (16384, 8192, 32768) };
 
     let mut rows = Vec::new();
     for &n in &cfg.bench.fig3_lens {
         let shape = MobaShape::new(n, d, b, k);
         let (q, kk, v) = qkv(1000 + n as u64, n, d);
         let mut rng = Rng::new(7 + n as u64);
-
-        // ---------------- dense (FA-2 analogue)
-        let mut dense = Point { workspace: dense_workspace_bytes(d, 64, 64), ..Default::default() };
-        if n <= dense_fwd_cap {
-            dense.fwd_s = Some(time_reps(reps, || {
-                flash_attention(&q, &kk, &v, n, d, 64, 64);
-            }));
-        }
-        if n <= dense_bwd_cap {
-            // dense backward == naive_backward with full routing
-            let full_idx = full_routing(shape);
-            let dout = rng.normal_vec(n * d);
-            let full_shape = MobaShape::new(n, d, b, shape.n_blocks());
-            dense.bwd_s = Some(time_reps(1, || {
-                naive_backward(&q, &kk, &v, &dout, full_shape, &full_idx);
-            }));
-        }
-
-        // ---------------- original MoBA
-        let naive_ws = naive_workspace_bytes(shape);
-        let mut naive = Point { workspace: naive_ws, oom: naive_ws > budget_bytes, ..Default::default() };
-        if !naive.oom && n <= naive_cap {
-            let mut topk_s = 0.0;
-            naive.fwd_s = Some(time_reps(reps, || {
-                let (_, _, st) = moba_naive_forward(&q, &kk, &v, shape);
-                topk_s += st.get("gating").unwrap().as_secs_f64()
-                    + st.get("reindex").unwrap().as_secs_f64();
-            }));
-            naive.topk_s = Some(topk_s / reps as f64);
-            let dout = rng.normal_vec(n * d);
-            let (_, idx, _) = moba_naive_forward(&q, &kk, &v, shape);
-            naive.bwd_s = Some(time_reps(1, || {
-                naive_backward(&q, &kk, &v, &dout, shape, &idx);
-            }));
-        }
-
-        // ---------------- FlashMoBA
-        let fm_cfg = FlashMobaConfig::default();
-        let mut flash = Point { workspace: flash_workspace_bytes(shape, fm_cfg), ..Default::default() };
-        let mut topk_s = 0.0;
-        flash.fwd_s = Some(time_reps(reps, || {
-            let out = flash_moba_forward(&q, &kk, &v, shape, fm_cfg);
-            topk_s += out.stats.get("flash_topk").unwrap().as_secs_f64();
-        }));
-        flash.topk_s = Some(topk_s / reps as f64);
-        let out = flash_moba_forward(&q, &kk, &v, shape, fm_cfg);
         let dout = rng.normal_vec(n * d);
-        flash.bwd_s = Some(time_reps(1, || {
-            flash_moba_backward(&q, &kk, &v, &out.o, &out.lse, &dout, shape, &out.layout);
-        }));
 
-        rows.push(Fig3Row { n, dense, naive, flash });
+        let mut points = Vec::new();
+        for backend in registry.iter() {
+            let name = backend.name();
+            let mut p = Point { workspace: analytic_workspace(name, shape), ..Default::default() };
+            // any backend whose known workspace exceeds the budget is
+            // marked OOM and skipped — in practice only the original
+            // pipeline's materialized score matrix hits the cliff
+            p.oom = p.workspace > budget_bytes;
+
+            if !p.oom && backend.supports(&shape) && n <= fwd_cap(name, quick) {
+                let mut topk_s = 0.0;
+                let mut measured_ws = 0u64;
+                p.fwd_s = Some(time_reps(reps, || {
+                    let (_, st) = backend.forward(&shape, &q, &kk, &v);
+                    topk_s += topk_seconds(&st);
+                    measured_ws = st.workspace_bytes;
+                }));
+                if topk_s > 0.0 {
+                    p.topk_s = Some(topk_s / reps as f64);
+                }
+                if p.workspace == 0 {
+                    p.workspace = measured_ws;
+                }
+            }
+            if !p.oom && backend.supports(&shape) && n <= bwd_cap(name, quick) {
+                p.bwd_s = backward_seconds(name, &q, &kk, &v, &dout, shape);
+            }
+            points.push((name.to_string(), p));
+        }
+        rows.push(Fig3Row { n, points });
     }
     Ok(rows)
 }
@@ -174,38 +240,52 @@ fn time_reps(reps: usize, mut f: impl FnMut()) -> f64 {
 }
 
 fn opt_ms(x: Option<f64>) -> String {
-    x.map(|v| report::ms(v)).unwrap_or_else(|| "--".into())
+    x.map(report::ms).unwrap_or_else(|| "--".into())
 }
 
 /// Print Figure 3 and persist JSON. Returns the headline speedup
 /// (FlashMoBA vs dense at the largest common timed N).
 pub fn print_fig3(cfg: &AppConfig, rows: &[Fig3Row]) -> Result<f64> {
+    let names: Vec<String> = rows
+        .first()
+        .map(|r| r.points.iter().map(|(n, _)| n.clone()).collect())
+        .unwrap_or_default();
+    let mut header: Vec<String> = vec!["N".into()];
+    for name in &names {
+        header.push(format!("{name}.topk"));
+        header.push(format!("{name}.fwd"));
+        header.push(format!("{name}.bwd"));
+        header.push(format!("{name}.ws"));
+    }
+    header.push("note".into());
+    let hrefs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
     let mut t = Table::new(
-        "Figure 3 — latency (ms) & workspace (MB) vs N  [B=128-analogue, k=8]",
-        &[
-            "N", "dense.fwd", "dense.bwd", "moba.topk", "moba.fwd", "moba.bwd", "moba.ws",
-            "flash.topk", "flash.fwd", "flash.bwd", "flash.ws", "note",
-        ],
+        &format!(
+            "Figure 3 — latency (ms) & workspace (MB) vs N  [B={}, k={}]",
+            cfg.bench.block, cfg.bench.topk
+        ),
+        &hrefs,
     );
     let mut headline: f64 = 0.0;
     for r in rows {
-        let note = if r.naive.oom { "moba OOM" } else { "" };
-        t.row(vec![
-            r.n.to_string(),
-            opt_ms(r.dense.fwd_s),
-            opt_ms(r.dense.bwd_s),
-            opt_ms(r.naive.topk_s),
-            opt_ms(r.naive.fwd_s),
-            opt_ms(r.naive.bwd_s),
-            report::mb(r.naive.workspace),
-            opt_ms(r.flash.topk_s),
-            opt_ms(r.flash.fwd_s),
-            opt_ms(r.flash.bwd_s),
-            report::mb(r.flash.workspace),
-            note.into(),
-        ]);
-        if let (Some(dfwd), Some(ffwd)) = (r.dense.fwd_s, r.flash.fwd_s) {
-            headline = headline.max(dfwd / ffwd);
+        let mut cells = vec![r.n.to_string()];
+        let mut notes: Vec<String> = Vec::new();
+        for name in &names {
+            let p = r.point(name).copied().unwrap_or_default();
+            if p.oom {
+                notes.push(format!("{name} OOM"));
+            }
+            cells.push(opt_ms(p.topk_s));
+            cells.push(opt_ms(p.fwd_s));
+            cells.push(opt_ms(p.bwd_s));
+            cells.push(report::mb(p.workspace));
+        }
+        cells.push(notes.join(", "));
+        t.row(cells);
+        if let (Some(dp), Some(fp)) = (r.point("dense"), r.point("flash_moba")) {
+            if let (Some(dfwd), Some(ffwd)) = (dp.fwd_s, fp.fwd_s) {
+                headline = headline.max(dfwd / ffwd);
+            }
         }
     }
     t.print();
@@ -217,12 +297,11 @@ pub fn print_fig3(cfg: &AppConfig, rows: &[Fig3Row]) -> Result<f64> {
             Json::arr(
                 rows.iter()
                     .map(|r| {
-                        Json::obj(vec![
-                            ("n", Json::from(r.n)),
-                            ("dense", point_json(&r.dense)),
-                            ("moba_naive", point_json(&r.naive)),
-                            ("flash_moba", point_json(&r.flash)),
-                        ])
+                        let mut pairs: Vec<(&str, Json)> = vec![("n", Json::from(r.n))];
+                        for (name, p) in &r.points {
+                            pairs.push((name.as_str(), point_json(p)));
+                        }
+                        Json::obj(pairs)
                     })
                     .collect(),
             ),
@@ -243,64 +322,57 @@ fn point_json(p: &Point) -> Json {
     ])
 }
 
-/// Figure 4: five-stage vs two-stage forward breakdown at one N.
+/// Figure 4: per-stage forward breakdown of every registered backend at
+/// one N (five stages for the original, two for FlashMoBA, one for the
+/// dense FA-2 analogue).
 pub fn run_fig4(cfg: &AppConfig, n: usize) -> Result<()> {
+    let registry = BackendRegistry::with_defaults();
     let shape = MobaShape::new(n, cfg.bench.head_dim, cfg.bench.block, cfg.bench.topk);
     let (q, k, v) = qkv(4444, n, cfg.bench.head_dim);
 
-    let (_, _, st_naive) = moba_naive_forward(&q, &k, &v, shape);
-    let out = flash_moba_forward(&q, &k, &v, shape, FlashMobaConfig::default());
-    let (_, _, dense_ws) = flash_attention(&q, &k, &v, n, cfg.bench.head_dim, 64, 64);
-    let t0 = Instant::now();
-    flash_attention(&q, &k, &v, n, cfg.bench.head_dim, 64, 64);
-    let dense_t = t0.elapsed().as_secs_f64();
-
     let mut t = Table::new(
         &format!("Figure 4 — forward timing breakdown at N={n}"),
-        &["impl", "stage", "ms", "% of impl total"],
+        &["backend", "stage", "ms", "% of backend total"],
     );
-    let naive_total = st_naive.total().as_secs_f64();
-    for (name, dur) in st_naive.stages() {
-        let s = dur.as_secs_f64();
-        t.row(vec![
-            "MoBA (original)".into(),
-            name.clone(),
-            report::ms(s),
-            format!("{:.0}%", 100.0 * s / naive_total),
-        ]);
+    let mut all_stats: Vec<(String, StageStats)> = Vec::new();
+    for backend in registry.iter() {
+        if !backend.supports(&shape) {
+            continue;
+        }
+        let (_, st) = backend.forward(&shape, &q, &k, &v);
+        let total = st.total().as_secs_f64().max(1e-12);
+        for (stage, dur) in st.stages() {
+            let s = dur.as_secs_f64();
+            t.row(vec![
+                backend.name().into(),
+                stage.clone(),
+                report::ms(s),
+                format!("{:.0}%", 100.0 * s / total),
+            ]);
+        }
+        all_stats.push((backend.name().to_string(), st));
     }
-    let flash_total = out.stats.total().as_secs_f64();
-    for (name, dur) in out.stats.stages() {
-        let s = dur.as_secs_f64();
-        t.row(vec![
-            "FlashMoBA".into(),
-            name.clone(),
-            report::ms(s),
-            format!("{:.0}%", 100.0 * s / flash_total),
-        ]);
-    }
-    t.row(vec!["FlashAttention-2".into(), "fwd".into(), report::ms(dense_t), "100%".into()]);
     t.print();
 
-    let overhead_frac = (st_naive.get("gating").unwrap()
-        + st_naive.get("reindex").unwrap()
-        + st_naive.get("merge").unwrap())
-    .as_secs_f64()
-        / naive_total;
-    println!(
-        "original MoBA overhead stages (gating+reindex+merge): {:.0}% of runtime (paper: >70%)",
-        100.0 * overhead_frac
-    );
-    println!(
-        "FlashMoBA total {:.1} ms vs dense {:.1} ms vs original {:.1} ms\n",
-        flash_total * 1e3,
-        dense_t * 1e3,
-        naive_total * 1e3
-    );
+    let mut overhead_frac = 0.0f64;
+    if let Some((_, st)) = all_stats.iter().find(|(name, _)| name == "moba_naive") {
+        if let (Some(g), Some(r), Some(m)) = (st.get("gating"), st.get("reindex"), st.get("merge")) {
+            overhead_frac = (g + r + m).as_secs_f64() / st.total().as_secs_f64().max(1e-12);
+            println!(
+                "original MoBA overhead stages (gating+reindex+merge): {:.0}% of runtime (paper: >70%)",
+                100.0 * overhead_frac
+            );
+        }
+    }
+    let totals: Vec<String> = all_stats
+        .iter()
+        .map(|(name, st)| format!("{name} {:.1} ms", st.total().as_secs_f64() * 1e3))
+        .collect();
+    println!("totals: {}\n", totals.join(" | "));
 
-    let stage_arr = |stages: &[(String, std::time::Duration)]| {
+    let stage_arr = |st: &StageStats| {
         Json::arr(
-            stages
+            st.stages()
                 .iter()
                 .map(|(s, d)| {
                     Json::obj(vec![
@@ -313,16 +385,22 @@ pub fn run_fig4(cfg: &AppConfig, n: usize) -> Result<()> {
     };
     let blob = Json::obj(vec![
         ("n", Json::from(n)),
-        ("moba_original_stages", stage_arr(st_naive.stages())),
-        ("flash_moba_stages", stage_arr(out.stats.stages())),
-        ("dense_fwd_s", Json::from(dense_t)),
-        ("dense_ws_bytes", Json::from(dense_ws)),
+        (
+            "backends",
+            Json::obj(
+                all_stats
+                    .iter()
+                    .map(|(name, st)| (name.as_str(), stage_arr(st)))
+                    .collect(),
+            ),
+        ),
         ("original_overhead_fraction", Json::from(overhead_frac)),
     ]);
     report::save_json(&cfg.results_dir, "fig4", &blob)
 }
 
 /// Ablation: FlashMoBA physical tile sizes (the §C.2 tuning trade-off).
+/// Stays implementation-specific: it sweeps FlashMoBA's own config knob.
 pub fn run_tile_ablation(cfg: &AppConfig, n: usize) -> Result<()> {
     let shape = MobaShape::new(n, cfg.bench.head_dim, cfg.bench.block, cfg.bench.topk);
     let (q, k, v) = qkv(555, n, cfg.bench.head_dim);

@@ -1,5 +1,6 @@
 //! Regeneration harness for every table and figure in the paper's
-//! evaluation (§5.2, §5.3) — see DESIGN.md §4 for the experiment index.
+//! evaluation (§5.2, §5.3) — see README.md §Benchmarks for the
+//! experiment index.
 //!
 //! * [`tables`] — Tables 1–6 (+ Figure 2): train the scaled variants on
 //!   the synthetic corpus via the AOT train-step artifacts, then run the

@@ -83,11 +83,16 @@ pub struct ServeParams {
     /// flush deadline for a partially filled batch
     pub max_wait_ms: u64,
     pub queue_capacity: usize,
+    /// MoBA routing geometry used when requests are served on the CPU
+    /// attention substrate (no PJRT artifacts available); mirrors the
+    /// serving kernels' B=128, k=8
+    pub moba_block: usize,
+    pub moba_topk: usize,
 }
 
 impl Default for ServeParams {
     fn default() -> Self {
-        Self { max_batch: 4, max_wait_ms: 5, queue_capacity: 1024 }
+        Self { max_batch: 4, max_wait_ms: 5, queue_capacity: 1024, moba_block: 128, moba_topk: 8 }
     }
 }
 
@@ -168,6 +173,8 @@ impl AppConfig {
                 self.serve.max_wait_ms = x as u64;
             }
             ov_usize(s, "queue_capacity", &mut self.serve.queue_capacity);
+            ov_usize(s, "moba_block", &mut self.serve.moba_block);
+            ov_usize(s, "moba_topk", &mut self.serve.moba_topk);
         }
         if let Some(b) = j.get("bench") {
             ov_usize_vec(b, "fig3_lens", &mut self.bench.fig3_lens);

@@ -1,23 +1,43 @@
-//! Routing: map (kind, sequence length) to the smallest compiled
-//! artifact that fits. Built once from the manifest; requests longer
-//! than every compiled kernel are rejected up front.
+//! Routing: map (kind, sequence length) to a serving target. Two route
+//! families share one table shape:
+//!
+//! * **Artifact routes** ([`Router::from_manifest`]) — the smallest
+//!   compiled `attn_{kind}_n{N}` PJRT kernel that fits; requests longer
+//!   than every compiled kernel are rejected up front.
+//! * **CPU-substrate routes** ([`Router::from_backends`]) — targets name
+//!   registered [`crate::attention::backend::AttentionBackend`]s instead
+//!   of artifacts, so the coordinator serves through the trait when no
+//!   artifacts exist.
 
 use std::collections::HashMap;
 
 use anyhow::anyhow;
 
 use super::request::AttnKind;
+#[allow(unused_imports)]
+use crate::attention::backend::AttentionBackend;
+use crate::attention::backend::BackendRegistry;
+use crate::config::ServeParams;
 use crate::runtime::Manifest;
 use crate::Result;
 
-/// Routing table over the `attn_{kind}_n{N}` artifacts.
+/// Largest request length accepted by the CPU-substrate routes (a
+/// sanity bound standing in for compiled-kernel capacity).
+pub const CPU_SUBSTRATE_MAX_N: usize = 1 << 22;
+
+/// Routing table over serving targets (artifact names or backend names).
 #[derive(Debug, Clone)]
 pub struct Router {
-    /// kind -> sorted (n, artifact name)
+    /// kind -> sorted (n, target name)
     table: HashMap<AttnKind, Vec<(usize, String)>>,
-    /// (h, d) of the serving kernels (from manifest input shapes)
+    /// heads packed per kernel launch (manifest input shapes); on the
+    /// CPU substrate, the batch pack limit
     pub heads: usize,
+    /// head dim the serving kernels compute (manifest input shapes);
+    /// 0 on the CPU substrate, which serves any d
     pub head_dim: usize,
+    /// true when targets name CPU [`AttentionBackend`]s, not artifacts
+    pub cpu_substrate: bool,
 }
 
 impl Router {
@@ -43,7 +63,32 @@ impl Router {
         if table.is_empty() {
             return Err(anyhow!("no attn_* artifacts in manifest"));
         }
-        Ok(Self { table, heads, head_dim })
+        Ok(Self { table, heads, head_dim, cpu_substrate: false })
+    }
+
+    /// Build CPU-substrate routes over a backend registry: dense
+    /// requests hit the exact backend, MoBA requests the sparse
+    /// flagship. Per-request geometry fallback (a length that does not
+    /// divide into blocks) is the server's job via the backends'
+    /// supported-config predicate.
+    pub fn from_backends(registry: &BackendRegistry, serve: &ServeParams) -> Result<Self> {
+        let dense = registry
+            .get("dense")
+            .ok_or_else(|| anyhow!("no dense backend registered"))?;
+        let moba = registry
+            .get("flash_moba")
+            .or_else(|| registry.get("moba_naive"))
+            .ok_or_else(|| anyhow!("no MoBA backend registered"))?;
+        let mut table: HashMap<AttnKind, Vec<(usize, String)>> = HashMap::new();
+        table.insert(AttnKind::Dense, vec![(CPU_SUBSTRATE_MAX_N, dense.name().to_string())]);
+        table.insert(AttnKind::Moba, vec![(CPU_SUBSTRATE_MAX_N, moba.name().to_string())]);
+        Ok(Self {
+            table,
+            // no H-head kernel packing constraint on the substrate
+            heads: serve.max_batch.max(1),
+            head_dim: 0, // any d is served
+            cpu_substrate: true,
+        })
     }
 
     /// Smallest artifact with kernel n >= request n.
@@ -100,5 +145,26 @@ mod tests {
         assert_eq!(r.capacities(AttnKind::Dense).len(), 1);
         assert_eq!(r.capacities(AttnKind::Moba).len(), 2);
         assert!(r.route(AttnKind::Dense, 2048).is_err());
+        assert!(!r.cpu_substrate);
+    }
+
+    #[test]
+    fn backend_routes_dispatch_by_kind() {
+        let reg = BackendRegistry::with_defaults();
+        let serve = ServeParams::default();
+        let r = Router::from_backends(&reg, &serve).unwrap();
+        assert!(r.cpu_substrate);
+        assert_eq!(r.heads, serve.max_batch);
+        assert_eq!(r.route(AttnKind::Dense, 700).unwrap().1, "dense");
+        assert_eq!(r.route(AttnKind::Moba, 1024).unwrap().1, "flash_moba");
+        // bounded, but far beyond any compiled kernel
+        assert!(r.route(AttnKind::Moba, 8192).is_ok());
+        assert!(r.route(AttnKind::Moba, CPU_SUBSTRATE_MAX_N + 1).is_err());
+    }
+
+    #[test]
+    fn backend_routes_require_a_dense_backend() {
+        let reg = BackendRegistry::new();
+        assert!(Router::from_backends(&reg, &ServeParams::default()).is_err());
     }
 }

@@ -1,16 +1,25 @@
 //! The coordinator event loop: route → batch → execute → respond.
 //!
 //! Plain threads + channels (the testbed vendors no async runtime): one
-//! worker thread owns the batcher and the PJRT executables; clients get
+//! worker thread owns the batcher and the execution backend; clients get
 //! a per-request response channel ([`Pending`] ticket) and either block
 //! on it ([`Coordinator::submit`]) or collect tickets first and join
 //! later ([`Coordinator::submit_async`]) for concurrent load.
 //!
-//! Correctness of padding: requests shorter than the kernel's sequence
-//! capacity are zero-padded *at the tail*. Because MoBA routing only
-//! scores strictly-past blocks and the own block is causally masked,
-//! tail padding can never influence rows `< n` — the served output is
-//! exactly the n-length computation (asserted by integration tests).
+//! Two execution paths behind one loop:
+//!
+//! * **PJRT** — compiled `attn_*` artifacts; up to H single-head
+//!   requests packed per launch. Requests shorter than the kernel's
+//!   capacity are zero-padded *at the tail*. Because MoBA routing only
+//!   scores strictly-past blocks and the own block is causally masked,
+//!   tail padding can never influence rows `< n` — the served output is
+//!   exactly the n-length computation (asserted by integration tests).
+//! * **CPU substrate** — when no artifacts (or no PJRT bindings) are
+//!   available, requests dispatch through the
+//!   [`crate::attention::backend::AttentionBackend`] registry: MoBA
+//!   requests run FlashMoBA, anything the sparse backend's
+//!   supported-config predicate rejects falls back to the exact dense
+//!   backend. No padding; `served_n == n`.
 
 use std::path::PathBuf;
 use std::sync::atomic::Ordering;
@@ -22,11 +31,23 @@ use anyhow::anyhow;
 
 use super::batcher::{Batch, Batcher};
 use super::metrics::Metrics;
-use super::request::{AttnRequest, AttnResponse, QueueStamp};
+use super::request::{AttnKind, AttnRequest, AttnResponse, QueueStamp};
 use super::router::Router;
+#[allow(unused_imports)]
+use crate::attention::backend::AttentionBackend;
+use crate::attention::backend::BackendRegistry;
+use crate::attention::MobaShape;
 use crate::config::ServeParams;
 use crate::runtime::{Runtime, Tensor};
 use crate::Result;
+
+/// What the worker thread executes batches on.
+enum Exec {
+    /// Compiled PJRT artifacts (owned by the worker; not `Send`).
+    Pjrt(Runtime),
+    /// The pure-rust attention substrate behind the backend trait.
+    Cpu(BackendRegistry),
+}
 
 enum Envelope {
     Req(AttnRequest, SyncSender<Result<AttnResponse>>),
@@ -55,6 +76,10 @@ impl Coordinator {
     /// crate uses `Rc` internally), so the worker *constructs its own*
     /// [`Runtime`] from the artifacts directory and owns all PJRT state
     /// for its lifetime; startup errors are reported synchronously.
+    ///
+    /// When the runtime cannot load (no artifacts, or a build without
+    /// PJRT bindings) the coordinator serves on the CPU attention
+    /// substrate instead of failing.
     pub fn start(artifacts_dir: impl Into<PathBuf>, params: ServeParams) -> Result<Self> {
         let dir = artifacts_dir.into();
         let metrics = Arc::new(Metrics::new());
@@ -64,22 +89,31 @@ impl Coordinator {
         let worker = std::thread::Builder::new()
             .name("flash-moba-coordinator".into())
             .spawn(move || {
-                let runtime = match Runtime::load(&dir) {
-                    Ok(rt) => rt,
+                let (exec, router) = match Runtime::load(&dir) {
+                    Ok(rt) => match Router::from_manifest(rt.manifest()) {
+                        Ok(r) => (Exec::Pjrt(rt), r),
+                        Err(e) => {
+                            let _ = boot_tx.send(Err(e));
+                            return;
+                        }
+                    },
                     Err(e) => {
-                        let _ = boot_tx.send(Err(e));
-                        return;
-                    }
-                };
-                let router = match Router::from_manifest(runtime.manifest()) {
-                    Ok(r) => r,
-                    Err(e) => {
-                        let _ = boot_tx.send(Err(e));
-                        return;
+                        eprintln!(
+                            "[coordinator] PJRT runtime unavailable ({e:#}); \
+                             serving on the CPU attention substrate"
+                        );
+                        let registry = BackendRegistry::with_defaults();
+                        match Router::from_backends(&registry, &params) {
+                            Ok(r) => (Exec::Cpu(registry), r),
+                            Err(e) => {
+                                let _ = boot_tx.send(Err(e));
+                                return;
+                            }
+                        }
                     }
                 };
                 let _ = boot_tx.send(Ok(()));
-                worker_loop(runtime, router, params, rx, m2)
+                worker_loop(exec, router, params, rx, m2)
             })
             .expect("spawn coordinator");
         boot_rx
@@ -131,7 +165,7 @@ impl Drop for Coordinator {
 type Pending = Vec<(u64, SyncSender<Result<AttnResponse>>)>;
 
 fn worker_loop(
-    runtime: Runtime,
+    exec: Exec,
     router: Router,
     params: ServeParams,
     rx: Receiver<Envelope>,
@@ -165,20 +199,35 @@ fn worker_loop(
 
         let mut shutdown = false;
         match msg {
-            Some(Envelope::Req(req, otx)) => match router.route(req.kind, req.n) {
-                Ok((cap, artifact)) => {
-                    let artifact = artifact.to_string();
-                    pending.push((req.id, otx));
-                    if let Err(rej) = batcher.push(req, &artifact, cap, Instant::now()) {
-                        metrics.rejected.fetch_add(1, Ordering::Relaxed);
-                        respond(&mut pending, rej.id, Err(anyhow!("queue full")));
+            Some(Envelope::Req(req, otx)) => {
+                // PJRT kernels compute a fixed head dim; a mismatched
+                // request must be rejected here, not panic the packer.
+                // (The CPU substrate serves any d.)
+                if !router.cpu_substrate && req.d != router.head_dim {
+                    metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                    let _ = otx.send(Err(anyhow!(
+                        "request {} has d={}, serving kernels compute d={}",
+                        req.id,
+                        req.d,
+                        router.head_dim
+                    )));
+                } else {
+                    match router.route(req.kind, req.n) {
+                        Ok((cap, artifact)) => {
+                            let artifact = artifact.to_string();
+                            pending.push((req.id, otx));
+                            if let Err(rej) = batcher.push(req, &artifact, cap, Instant::now()) {
+                                metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                                respond(&mut pending, rej.id, Err(anyhow!("queue full")));
+                            }
+                        }
+                        Err(e) => {
+                            metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                            let _ = otx.send(Err(e));
+                        }
                     }
                 }
-                Err(e) => {
-                    metrics.rejected.fetch_add(1, Ordering::Relaxed);
-                    let _ = otx.send(Err(e));
-                }
-            },
+            }
             Some(Envelope::Shutdown) => shutdown = true,
             None => {} // deadline wake-up
         }
@@ -191,7 +240,7 @@ fn worker_loop(
             std::iter::from_fn(|| batcher.poll(now)).collect()
         };
         for batch in batches {
-            run_batch(&runtime, &router, batch, &mut pending, &metrics);
+            run_batch(&exec, &router, &params, batch, &mut pending, &metrics);
         }
         if shutdown {
             for (_, otx) in pending.drain(..) {
@@ -209,8 +258,99 @@ fn respond(pending: &mut Pending, id: u64, result: Result<AttnResponse>) {
     }
 }
 
-/// Pack requests into the (H, N, d) kernel, execute, unpack, respond.
+/// Dispatch a ready batch to the active execution path.
 fn run_batch(
+    exec: &Exec,
+    router: &Router,
+    params: &ServeParams,
+    batch: Batch,
+    pending: &mut Pending,
+    metrics: &Metrics,
+) {
+    match exec {
+        Exec::Pjrt(runtime) => run_batch_pjrt(runtime, router, batch, pending, metrics),
+        Exec::Cpu(registry) => run_batch_cpu(registry, params, batch, pending, metrics),
+    }
+}
+
+/// Execute a batch on the CPU attention substrate: each request runs at
+/// its native length through the [`BackendRegistry`] (no padding), so
+/// batching amortizes queueing rather than kernel launches.
+fn run_batch_cpu(
+    registry: &BackendRegistry,
+    params: &ServeParams,
+    batch: Batch,
+    pending: &mut Pending,
+    metrics: &Metrics,
+) {
+    let occupancy = batch.items.len();
+    metrics.batches.fetch_add(1, Ordering::Relaxed);
+    metrics.batched_requests.fetch_add(occupancy as u64, Ordering::Relaxed);
+    for (req, enq) in &batch.items {
+        let result = run_cpu_request(registry, params, &batch.artifact, req);
+        let executed = Instant::now();
+        match result {
+            Ok(o) => {
+                let stamp = QueueStamp { enqueued: *enq, executed };
+                metrics.record_latency(stamp.queue_latency_s());
+                metrics.responses.fetch_add(1, Ordering::Relaxed);
+                respond(
+                    pending,
+                    req.id,
+                    Ok(AttnResponse {
+                        id: req.id,
+                        o,
+                        served_n: req.n,
+                        batch_occupancy: occupancy,
+                        queued_at: Some(stamp),
+                    }),
+                );
+            }
+            Err(e) => respond(pending, req.id, Err(e)),
+        }
+    }
+}
+
+/// Pick the backend for one request: the router's chosen target
+/// (`routed`, the batch's lane name) when its supported-config
+/// predicate accepts the geometry, the exact dense backend otherwise.
+fn run_cpu_request(
+    registry: &BackendRegistry,
+    params: &ServeParams,
+    routed: &str,
+    req: &AttnRequest,
+) -> Result<Vec<f32>> {
+    let dense = registry
+        .get("dense")
+        .ok_or_else(|| anyhow!("no dense backend registered"))?;
+    let (backend, shape) = match req.kind {
+        AttnKind::Moba => {
+            match MobaShape::try_new(req.n, req.d, params.moba_block, params.moba_topk) {
+                Some(shape) => {
+                    let b = registry.get(routed).unwrap_or(dense);
+                    if b.supports(&shape) {
+                        (b, shape)
+                    } else {
+                        (dense, dense_shape(req))
+                    }
+                }
+                None => (dense, dense_shape(req)),
+            }
+        }
+        AttnKind::Dense => (dense, dense_shape(req)),
+    };
+    let (o, _stats) = backend.forward(&shape, &req.q, &req.k, &req.v);
+    Ok(o)
+}
+
+/// A single-block geometry valid for any n; exact backends ignore the
+/// routing fields.
+fn dense_shape(req: &AttnRequest) -> MobaShape {
+    MobaShape { n: req.n, d: req.d, block: req.n, topk: 0 }
+}
+
+/// Pack requests into the (H, N, d) kernel, execute, unpack, respond.
+fn run_batch_pjrt(
     runtime: &Runtime,
     router: &Router,
     batch: Batch,

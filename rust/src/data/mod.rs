@@ -1,5 +1,6 @@
 //! Synthetic datasets — the CPU-testbed stand-ins for FineWeb-Edu,
-//! RULER S-NIAH and LongBench (see DESIGN.md §3 Substitutions).
+//! RULER S-NIAH and LongBench (see README.md §Architecture for the
+//! substitution rationale).
 //!
 //! Everything is deterministic given a seed and expressed over a small
 //! shared token vocabulary ([`vocabulary`]):

@@ -1,9 +1,11 @@
 //! Evaluators: perplexity on the held-out corpus, NIAH retrieval
 //! accuracy, and the LongBench-proxy task suite — the measurement side
-//! of Tables 1–6.
+//! of Tables 1–6 — plus [`substrate_eval`], which scores the CPU
+//! attention backends themselves through the
+//! [`crate::attention::backend::AttentionBackend`] trait.
 
 mod logits;
 mod runner;
 
 pub use logits::{argmax, nll_from_logits, score_sample};
-pub use runner::{EvalReport, Evaluator};
+pub use runner::{substrate_eval, EvalReport, Evaluator, SubstrateRow};

@@ -27,6 +27,10 @@ pub mod runtime;
 pub mod snr;
 pub mod train;
 pub mod util;
+// PJRT binding surface. This build ships the in-tree stub (execution is
+// gated, see the module docs); to link the real vendored bindings,
+// replace this declaration with `pub use real_xla_crate as xla;`.
+pub mod xla;
 
 /// Crate-wide result type.
 pub type Result<T> = anyhow::Result<T>;

@@ -1,10 +1,15 @@
 //! PJRT runtime: load AOT HLO-text artifacts produced by `aot.py` and
 //! execute them on the CPU PJRT client from the request path.
 //!
-//! Pattern (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
-//! Artifacts are lowered with `return_tuple=True`, so every execution
-//! returns a single tuple literal that we decompose into output tensors.
+//! Pattern: `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `client.compile` → `execute`. Artifacts are lowered with
+//! `return_tuple=True`, so every execution returns a single tuple
+//! literal that we decompose into output tensors.
+//!
+//! This build links the in-tree [`crate::xla`] stub, which gates client
+//! creation: [`Runtime::load`] returns an error, artifact-dependent
+//! tests and examples skip with a notice, and the coordinator falls
+//! back to the pure-rust attention substrate (see `coordinator::server`).
 
 mod manifest;
 mod params;
@@ -21,6 +26,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context};
 
+use crate::xla;
 use crate::Result;
 
 /// A compiled artifact plus its manifest signature.

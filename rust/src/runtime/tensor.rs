@@ -5,6 +5,7 @@
 
 use anyhow::{anyhow, bail};
 
+use crate::xla;
 use crate::Result;
 
 /// Dtype of a boundary tensor.

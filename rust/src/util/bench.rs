@@ -58,7 +58,7 @@ impl Bench {
             }
             times.push(t.elapsed().as_secs_f64() / iters as f64);
         }
-        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        times.sort_by(|a, b| a.total_cmp(b));
         let stats = Stats {
             mean_s: times.iter().sum::<f64>() / times.len() as f64,
             median_s: times[times.len() / 2],

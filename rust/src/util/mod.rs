@@ -1,5 +1,6 @@
-//! In-tree utilities replacing external crates (the testbed vendors only
-//! the xla closure — see Cargo.toml).
+//! In-tree utilities replacing external crates (the crate's only
+//! external dependency is `anyhow` — see Cargo.toml; even the PJRT
+//! binding surface is an in-tree stub, [`crate::xla`]).
 //!
 //! * [`json`] — minimal JSON parser/writer (manifest.json, configs,
 //!   results persistence).

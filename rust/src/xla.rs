@@ -1,0 +1,309 @@
+//! In-tree stand-in for the vendored `xla` (PJRT) bindings.
+//!
+//! The real serving path loads AOT HLO artifacts through PJRT. That
+//! closure is not vendorable in this build (the crate's only external
+//! dependency is `anyhow`), so this module keeps the exact API surface
+//! the [`crate::runtime`] layer consumes while *gating* execution:
+//!
+//! * [`Literal`] is a real host-side container (shape + f32/i32 data) —
+//!   constructing, reshaping and reading literals all work.
+//! * [`HloModuleProto::from_text_file`] performs a lightweight sanity
+//!   probe of HLO text (the file must exist and contain `HloModule`).
+//! * [`PjRtClient::cpu`] returns an error: without the real bindings no
+//!   artifact can be compiled or executed. `Runtime::load` therefore
+//!   fails cleanly and every artifact-dependent test/bench/example skips
+//!   with a notice, while the pure-rust attention substrate (and the
+//!   coordinator's CPU-substrate serving path) keep working.
+//!
+//! Swapping the real bindings back in is a one-line change in
+//! `rust/src/lib.rs` (point `xla` at the extern crate instead).
+
+use std::fmt;
+
+/// Error type mirroring the binding crate's; converts into
+/// [`anyhow::Error`] at the `runtime` boundary via `std::error::Error`.
+#[derive(Debug)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla stub: {}", self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+type XlaResult<T> = std::result::Result<T, XlaError>;
+
+fn unavailable<T>(what: &str) -> XlaResult<T> {
+    Err(XlaError(format!(
+        "{what} is unavailable in this build (in-tree stub; the real PJRT \
+         bindings are not vendored — see README.md §Runtime)"
+    )))
+}
+
+/// Element types crossing the AOT boundary (subset the manifest allows,
+/// plus the common extras so matches stay non-exhaustive-friendly).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ElementType {
+    Pred,
+    S32,
+    S64,
+    U32,
+    F32,
+    F64,
+}
+
+/// Typed payload of a [`Literal`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum LiteralData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// Host values storable in a [`Literal`].
+pub trait NativeType: Copy + Sized {
+    fn element_type() -> ElementType;
+    fn wrap(v: Vec<Self>) -> LiteralData;
+    fn read(d: &LiteralData) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn element_type() -> ElementType {
+        ElementType::F32
+    }
+
+    fn wrap(v: Vec<Self>) -> LiteralData {
+        LiteralData::F32(v)
+    }
+
+    fn read(d: &LiteralData) -> Option<Vec<Self>> {
+        match d {
+            LiteralData::F32(v) => Some(v.clone()),
+            LiteralData::I32(_) => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn element_type() -> ElementType {
+        ElementType::S32
+    }
+
+    fn wrap(v: Vec<Self>) -> LiteralData {
+        LiteralData::I32(v)
+    }
+
+    fn read(d: &LiteralData) -> Option<Vec<Self>> {
+        match d {
+            LiteralData::I32(v) => Some(v.clone()),
+            LiteralData::F32(_) => None,
+        }
+    }
+}
+
+/// Dims + element type of an array-shaped literal.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+    ty: ElementType,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    pub fn ty(&self) -> ElementType {
+        self.ty
+    }
+}
+
+/// A host-side XLA literal: array (shape + data) or tuple of literals.
+#[derive(Debug, Clone)]
+pub enum Literal {
+    Array { dims: Vec<i64>, data: LiteralData },
+    Tuple(Vec<Literal>),
+}
+
+impl Literal {
+    /// Rank-1 literal over a host slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal::Array { dims: vec![v.len() as i64], data: T::wrap(v.to_vec()) }
+    }
+
+    /// Reshape (element count must be preserved).
+    pub fn reshape(&self, dims: &[i64]) -> XlaResult<Literal> {
+        match self {
+            Literal::Array { data, dims: old } => {
+                let count: i64 = old.iter().product();
+                let want: i64 = dims.iter().product();
+                if count != want {
+                    return Err(XlaError(format!(
+                        "reshape {old:?} -> {dims:?}: element count {count} != {want}"
+                    )));
+                }
+                Ok(Literal::Array { dims: dims.to_vec(), data: data.clone() })
+            }
+            Literal::Tuple(_) => Err(XlaError("cannot reshape a tuple literal".into())),
+        }
+    }
+
+    pub fn array_shape(&self) -> XlaResult<ArrayShape> {
+        match self {
+            Literal::Array { dims, data } => Ok(ArrayShape {
+                dims: dims.clone(),
+                ty: match data {
+                    LiteralData::F32(_) => ElementType::F32,
+                    LiteralData::I32(_) => ElementType::S32,
+                },
+            }),
+            Literal::Tuple(_) => Err(XlaError("tuple literal has no array shape".into())),
+        }
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> XlaResult<Vec<T>> {
+        match self {
+            Literal::Array { data, .. } => T::read(data)
+                .ok_or_else(|| XlaError("literal element type mismatch".into())),
+            Literal::Tuple(_) => Err(XlaError("tuple literal has no flat data".into())),
+        }
+    }
+
+    pub fn to_tuple(&self) -> XlaResult<Vec<Literal>> {
+        match self {
+            Literal::Tuple(items) => Ok(items.clone()),
+            Literal::Array { .. } => Err(XlaError("literal is not a tuple".into())),
+        }
+    }
+}
+
+/// Parsed (here: sanity-probed) HLO module text.
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    pub text: String,
+}
+
+impl HloModuleProto {
+    /// Probe an HLO text artifact: the file must be readable UTF-8 and
+    /// declare an `HloModule`. Full parsing needs the real bindings.
+    pub fn from_text_file(path: &str) -> XlaResult<HloModuleProto> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| XlaError(format!("reading {path}: {e}")))?;
+        if !text.contains("HloModule") {
+            return Err(XlaError(format!("{path}: no HloModule declaration found")));
+        }
+        Ok(HloModuleProto { text })
+    }
+}
+
+/// Opaque computation handle.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    _proto: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _proto: proto.clone() }
+    }
+}
+
+/// Device buffer handle returned by an execution.
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> XlaResult<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+/// Compiled executable handle. Never constructible through the stub
+/// (compilation errors out), but the type keeps `runtime` compiling.
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> XlaResult<Vec<Vec<PjRtBuffer>>> {
+        unavailable("artifact execution")
+    }
+}
+
+/// PJRT client handle.
+#[derive(Debug)]
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    /// Always fails in the stub build: there is no PJRT runtime to bind.
+    pub fn cpu() -> XlaResult<PjRtClient> {
+        unavailable("the PJRT CPU client")
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> XlaResult<PjRtLoadedExecutable> {
+        unavailable("XLA compilation")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32_and_i32() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        let shape = r.array_shape().unwrap();
+        assert_eq!(shape.dims(), &[2, 2]);
+        assert_eq!(shape.ty(), ElementType::F32);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r.to_vec::<i32>().is_err());
+
+        let i = Literal::vec1(&[7i32, 8]);
+        assert_eq!(i.array_shape().unwrap().ty(), ElementType::S32);
+        assert_eq!(i.to_vec::<i32>().unwrap(), vec![7, 8]);
+    }
+
+    #[test]
+    fn reshape_validates_element_count() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0]);
+        assert!(l.reshape(&[2, 2]).is_err());
+        assert!(l.reshape(&[3, 1]).is_ok());
+    }
+
+    #[test]
+    fn tuple_decomposes() {
+        let t = Literal::Tuple(vec![Literal::vec1(&[1.0f32]), Literal::vec1(&[2i32])]);
+        let items = t.to_tuple().unwrap();
+        assert_eq!(items.len(), 2);
+        assert!(t.array_shape().is_err());
+    }
+
+    #[test]
+    fn client_is_gated() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("stub"));
+    }
+
+    #[test]
+    fn hlo_probe_requires_module_text() {
+        let dir = std::env::temp_dir();
+        let good = dir.join("fm_stub_good.hlo.txt");
+        let bad = dir.join("fm_stub_bad.hlo.txt");
+        std::fs::write(&good, "HloModule m\nENTRY e { ROOT c = f32[] constant(0) }").unwrap();
+        std::fs::write(&bad, "not hlo at all").unwrap();
+        assert!(HloModuleProto::from_text_file(good.to_str().unwrap()).is_ok());
+        assert!(HloModuleProto::from_text_file(bad.to_str().unwrap()).is_err());
+        assert!(HloModuleProto::from_text_file("/nonexistent/x.hlo").is_err());
+    }
+}

@@ -1,5 +1,10 @@
-//! Coordinator integration over real PJRT kernels: routing, dynamic
-//! batching, padding exactness, metrics, shutdown semantics.
+//! Coordinator integration: routing, dynamic batching, padding
+//! exactness, metrics, shutdown semantics.
+//!
+//! Two suites: the PJRT suite runs over real compiled kernels (skipped
+//! when `make artifacts` hasn't run), and the CPU-substrate suite runs
+//! unconditionally — pointing the coordinator at a nonexistent
+//! artifacts dir forces the `AttentionBackend`-registry serving path.
 
 use flash_moba::attention::dense::naive_attention;
 use flash_moba::attention::flash_moba::{flash_moba_forward, FlashMobaConfig};
@@ -18,6 +23,11 @@ fn artifacts_dir() -> Option<String> {
         eprintln!("SKIP (run `make artifacts`)");
         None
     }
+}
+
+/// a dir that never holds artifacts: forces the CPU-substrate path
+fn no_artifacts_dir() -> String {
+    "/nonexistent/flash-moba-artifacts".to_string()
 }
 
 fn req(id: u64, kind: AttnKind, n: usize, seed: u64) -> AttnRequest {
@@ -39,7 +49,7 @@ fn serves_batched_requests_with_exact_results() {
     let Some(rt) = artifacts_dir() else { return };
     let coord = Coordinator::start(
         rt,
-        ServeParams { max_batch: 4, max_wait_ms: 4, queue_capacity: 64 },
+        ServeParams { max_batch: 4, max_wait_ms: 4, queue_capacity: 64, ..Default::default() },
     )
     .unwrap();
 
@@ -67,7 +77,7 @@ fn padding_is_exact_for_short_requests() {
     let Some(rt) = artifacts_dir() else { return };
     let coord = Coordinator::start(
         rt,
-        ServeParams { max_batch: 2, max_wait_ms: 2, queue_capacity: 16 },
+        ServeParams { max_batch: 2, max_wait_ms: 2, queue_capacity: 16, ..Default::default() },
     )
     .unwrap();
     let r = req(1, AttnKind::Dense, 700, 99);
@@ -105,7 +115,7 @@ fn deadline_flush_serves_partial_batches() {
     let Some(rt) = artifacts_dir() else { return };
     let coord = Coordinator::start(
         rt,
-        ServeParams { max_batch: 4, max_wait_ms: 3, queue_capacity: 16 },
+        ServeParams { max_batch: 4, max_wait_ms: 3, queue_capacity: 16, ..Default::default() },
     )
     .unwrap();
     // a single request can never fill the batch; only the deadline fires
@@ -120,7 +130,7 @@ fn shutdown_drains_pending_work() {
     let Some(rt) = artifacts_dir() else { return };
     let coord = Coordinator::start(
         rt,
-        ServeParams { max_batch: 4, max_wait_ms: 10_000, queue_capacity: 16 },
+        ServeParams { max_batch: 4, max_wait_ms: 10_000, queue_capacity: 16, ..Default::default() },
     )
     .unwrap();
     // huge deadline: these would sit forever without the shutdown flush
@@ -129,6 +139,115 @@ fn shutdown_drains_pending_work() {
     std::thread::sleep(std::time::Duration::from_millis(50));
     coord.shutdown();
     // both must have been answered (drained, not dropped)
+    assert!(t1.wait().is_ok());
+    assert!(t2.wait().is_ok());
+}
+
+// --------------------------------------------------------------------
+// CPU-substrate suite: no artifacts, serving through the backend
+// registry. These run on every checkout.
+// --------------------------------------------------------------------
+
+/// MoBA requests at a block-aligned length are served by FlashMoBA at
+/// their native length (no padding on the substrate).
+#[test]
+fn cpu_substrate_serves_moba_exact() {
+    // long deadline: batches may only flush on capacity, so the exact
+    // occupancy assertion below cannot flake under CI scheduling jitter
+    let coord = Coordinator::start(
+        no_artifacts_dir(),
+        ServeParams { max_batch: 2, max_wait_ms: 5_000, queue_capacity: 64, ..Default::default() },
+    )
+    .unwrap();
+    let reqs: Vec<AttnRequest> =
+        (0..4).map(|i| req(i, AttnKind::Moba, 512, 140 + i)).collect();
+    let tickets: Vec<_> =
+        reqs.iter().map(|r| coord.submit_async(r.clone()).unwrap()).collect();
+    // ServeParams defaults carry the kernels' B=128, k=8 geometry
+    let shape = MobaShape::new(512, 64, 128, 8);
+    for (r, t) in reqs.iter().zip(tickets) {
+        let resp = t.wait().unwrap();
+        assert_eq!(resp.id, r.id);
+        assert_eq!(resp.served_n, 512);
+        let expect = flash_moba_forward(&r.q, &r.k, &r.v, shape, FlashMobaConfig::default());
+        assert!(max_abs_diff(&resp.o, &expect.o) < 1e-5, "req {} mismatch", r.id);
+    }
+    assert_eq!(coord.metrics().mean_occupancy(), 2.0);
+    coord.shutdown();
+}
+
+/// Dense requests match the textbook oracle.
+#[test]
+fn cpu_substrate_serves_dense_exact() {
+    let coord = Coordinator::start(
+        no_artifacts_dir(),
+        ServeParams { max_batch: 2, max_wait_ms: 2, queue_capacity: 16, ..Default::default() },
+    )
+    .unwrap();
+    let r = req(1, AttnKind::Dense, 384, 199);
+    let resp = coord.submit(r.clone()).unwrap();
+    assert_eq!(resp.served_n, 384);
+    let (expect, _) = naive_attention(&r.q, &r.k, &r.v, 384, 64);
+    assert!(max_abs_diff(&resp.o, &expect) < 1e-4);
+    coord.shutdown();
+}
+
+/// A MoBA request whose length does not divide into B=128 blocks falls
+/// back to the exact dense backend via the supported-config predicate.
+#[test]
+fn cpu_substrate_falls_back_to_dense_for_ragged_moba() {
+    let coord = Coordinator::start(
+        no_artifacts_dir(),
+        ServeParams { max_batch: 2, max_wait_ms: 2, queue_capacity: 16, ..Default::default() },
+    )
+    .unwrap();
+    let r = req(7, AttnKind::Moba, 700, 299);
+    let resp = coord.submit(r.clone()).unwrap();
+    assert_eq!(resp.served_n, 700);
+    assert_eq!(resp.o.len(), 700 * 64);
+    let (expect, _) = naive_attention(&r.q, &r.k, &r.v, 700, 64);
+    assert!(max_abs_diff(&resp.o, &expect) < 1e-4);
+    coord.shutdown();
+}
+
+/// Malformed requests are still rejected before reaching the worker,
+/// and batching/metrics semantics hold on the substrate path.
+#[test]
+fn cpu_substrate_rejects_invalid_and_batches_partial() {
+    let coord = Coordinator::start(
+        no_artifacts_dir(),
+        ServeParams { max_batch: 4, max_wait_ms: 3, queue_capacity: 16, ..Default::default() },
+    )
+    .unwrap();
+    let bad = AttnRequest {
+        id: 2,
+        kind: AttnKind::Moba,
+        n: 8,
+        d: 64,
+        q: vec![0.0; 3],
+        k: vec![0.0; 3],
+        v: vec![0.0; 3],
+    };
+    assert!(coord.submit(bad).is_err());
+    // a lone request flushes on the deadline with occupancy 1
+    let resp = coord.submit(req(9, AttnKind::Moba, 256, 5)).unwrap();
+    assert_eq!(resp.batch_occupancy, 1);
+    assert!(coord.metrics().mean_occupancy() <= 1.0 + 1e-9);
+    coord.shutdown();
+}
+
+/// Shutdown drains queued work on the substrate path too.
+#[test]
+fn cpu_substrate_shutdown_drains_pending_work() {
+    let coord = Coordinator::start(
+        no_artifacts_dir(),
+        ServeParams { max_batch: 4, max_wait_ms: 10_000, queue_capacity: 16, ..Default::default() },
+    )
+    .unwrap();
+    let t1 = coord.submit_async(req(1, AttnKind::Moba, 256, 1)).unwrap();
+    let t2 = coord.submit_async(req(2, AttnKind::Dense, 256, 2)).unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    coord.shutdown();
     assert!(t1.wait().is_ok());
     assert!(t2.wait().is_ok());
 }

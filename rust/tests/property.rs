@@ -5,6 +5,7 @@
 
 use std::time::{Duration, Instant};
 
+use flash_moba::attention::backend::{check_shape_parity, BackendRegistry, ParityTolerance};
 use flash_moba::attention::centroid::centroids;
 use flash_moba::attention::dense::{flash_attention, naive_attention};
 use flash_moba::attention::flash_moba::{flash_moba_forward, FlashMobaConfig};
@@ -202,6 +203,26 @@ fn prop_json_roundtrip() {
         assert_eq!(Json::parse(&text).unwrap(), doc, "seed={seed} text={text}");
         let pretty = doc.to_string_pretty();
         assert_eq!(Json::parse(&pretty).unwrap(), doc, "pretty seed={seed}");
+    }
+}
+
+/// Every registered backend satisfies the shared parity harness on
+/// randomized (n, d, block, topk) shapes: exact backends match the
+/// dense oracle everywhere, sparse backends match each other, and at
+/// full routing everything matches dense.
+#[test]
+fn prop_backend_parity_harness() {
+    let registry = BackendRegistry::with_defaults();
+    let tol = ParityTolerance::default();
+    for seed in 0..CASES {
+        let mut rng = Rng::new(9000 + seed);
+        let shape = rand_shape(&mut rng);
+        check_shape_parity(&registry, shape, 100 + seed, &tol)
+            .unwrap_or_else(|e| panic!("seed={seed} {e}"));
+        // the fully-routed variant of the same geometry: MoBA == dense
+        let full = MobaShape::new(shape.n, shape.d, shape.block, shape.n_blocks());
+        check_shape_parity(&registry, full, 200 + seed, &tol)
+            .unwrap_or_else(|e| panic!("seed={seed} (full routing) {e}"));
     }
 }
 
