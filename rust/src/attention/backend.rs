@@ -10,6 +10,7 @@
 //! in by registering one object — and inherit the parity harness, the
 //! figure sweeps and the serving router for free.
 
+use super::decode::DecodeSession;
 use super::dense::{flash_attention, naive_attention};
 use super::flash_moba::{flash_moba_forward, FlashMobaConfig};
 use super::moba_naive::moba_naive_forward;
@@ -43,6 +44,20 @@ pub trait AttentionBackend: Send + Sync {
     /// timings / workspace accounting of the run.
     fn forward(&self, shape: &MobaShape, q: &[f32], k: &[f32], v: &[f32])
         -> (Vec<f32>, StageStats);
+
+    /// One autoregressive decode step: attention of `q_t` (the query at
+    /// the session's current position, i.e. its last appended token)
+    /// over the session's KV cache. Returns the (d,) output row.
+    ///
+    /// Contract: token-by-token decode must reproduce this backend's
+    /// prefill [`forward`](AttentionBackend::forward) row-for-row (the
+    /// decode parity suite asserts this for every registered backend).
+    /// The default is the exact dense fallback over everything cached —
+    /// correct for exact backends; sparse backends override with the
+    /// routed path.
+    fn forward_decode(&self, session: &mut DecodeSession, q_t: &[f32]) -> Vec<f32> {
+        session.decode_dense(q_t)
+    }
 }
 
 /// Blocked online-softmax dense attention (the FlashAttention-2
@@ -111,6 +126,14 @@ impl AttentionBackend for MobaNaiveBackend {
         let (o, _indices, st) = moba_naive_forward(q, k, v, *shape);
         (o, st)
     }
+
+    /// Streaming MoBA routing over the cached centroids. Per step there
+    /// is no five-stage pipeline to reproduce — the selected block set
+    /// is identical to the prefill gating, so the routed single-row
+    /// path *is* this backend's decode semantics.
+    fn forward_decode(&self, session: &mut DecodeSession, q_t: &[f32]) -> Vec<f32> {
+        session.decode_routed(q_t)
+    }
 }
 
 /// The paper's fused FlashMoBA forward behind the trait.
@@ -143,6 +166,13 @@ impl AttentionBackend for FlashMobaBackend {
     ) -> (Vec<f32>, StageStats) {
         let out = flash_moba_forward(q, k, v, *shape, self.cfg);
         (out.o, out.stats)
+    }
+
+    /// Streaming tiled top-k against the cache's running centroids +
+    /// single-row attention over the gathered blocks — the decode
+    /// analogue of the fused two-stage forward.
+    fn forward_decode(&self, session: &mut DecodeSession, q_t: &[f32]) -> Vec<f32> {
+        session.decode_routed(q_t)
     }
 }
 
@@ -412,5 +442,61 @@ mod tests {
         assert!(fully_routed(&MobaShape::new(128, 8, 16, 8)));
         assert!(fully_routed(&MobaShape::new(128, 8, 16, 7)));
         assert!(!fully_routed(&MobaShape::new(128, 8, 16, 6)));
+    }
+
+    /// Token-by-token decode through the trait reproduces each
+    /// backend's prefill rows (the full grid lives in
+    /// `rust/tests/decode_parity.rs`; this is the smoke version).
+    #[test]
+    fn forward_decode_matches_prefill_rows() {
+        let shape = MobaShape::new(96, 8, 16, 2);
+        let (q, k, v) = qkv(77, shape.n, shape.d);
+        let r = BackendRegistry::with_defaults();
+        for b in r.iter() {
+            let (prefill, _) = b.forward(&shape, &q, &k, &v);
+            let mut sess = DecodeSession::new(shape.d, shape.block, shape.topk);
+            for t in 0..shape.n {
+                sess.append(&k[t * shape.d..(t + 1) * shape.d], &v[t * shape.d..(t + 1) * shape.d]);
+                let o = b.forward_decode(&mut sess, &q[t * shape.d..(t + 1) * shape.d]);
+                assert_eq!(o.len(), shape.d);
+                let dev = max_abs_diff(&o, &prefill[t * shape.d..(t + 1) * shape.d]);
+                assert!(dev < 1e-4, "{} row {t} dev {dev:.2e}", b.name());
+            }
+        }
+    }
+
+    /// The default trait impl (dense fallback) is exact: a backend that
+    /// overrides nothing decodes the dense oracle.
+    #[test]
+    fn default_forward_decode_is_dense_fallback() {
+        struct Plain;
+        impl AttentionBackend for Plain {
+            fn name(&self) -> &'static str {
+                "plain"
+            }
+            fn supports(&self, _s: &MobaShape) -> bool {
+                true
+            }
+            fn forward(
+                &self,
+                shape: &MobaShape,
+                q: &[f32],
+                k: &[f32],
+                v: &[f32],
+            ) -> (Vec<f32>, StageStats) {
+                let (o, _) = naive_attention(q, k, v, shape.n, shape.d);
+                (o, StageStats::new())
+            }
+        }
+        let (n, d) = (48, 8);
+        let (q, k, v) = qkv(78, n, d);
+        let (oracle, _) = naive_attention(&q, &k, &v, n, d);
+        let b = Plain;
+        let mut sess = DecodeSession::new(d, 16, 1); // routing geometry ignored by the fallback
+        for t in 0..n {
+            sess.append(&k[t * d..(t + 1) * d], &v[t * d..(t + 1) * d]);
+            let o = b.forward_decode(&mut sess, &q[t * d..(t + 1) * d]);
+            assert!(max_abs_diff(&o, &oracle[t * d..(t + 1) * d]) < 1e-4, "row {t}");
+        }
     }
 }

@@ -1,0 +1,533 @@
+//! Incremental (autoregressive) decode over a block KV cache with
+//! streaming MoBA routing — the serving-side twin of the prefill
+//! kernels.
+//!
+//! The paper's routing model (§3; the tiled top-k of Algorithm 1)
+//! extends to decode by maintaining block statistics *incrementally* as
+//! keys arrive:
+//!
+//! * [`KvCache`] — per-session K/V storage partitioned into logical
+//!   MoBA blocks, with a running per-block key sum so the centroid of
+//!   any block is one O(d) multiply away. Appending a token is
+//!   amortized O(d); with key convolution enabled, a ring buffer of the
+//!   last `width` raw keys ([`KconvStream`]) makes the streaming kconv
+//!   bit-identical to the batch [`kconv`](super::kconv::kconv).
+//! * [`DecodeSession`] — routes each new query against the cached
+//!   centroids (top-k over *complete, strictly-past* blocks, plus the
+//!   always-attended current block — the paper's causal own-block
+//!   rule) and computes single-row softmax attention over the gathered
+//!   blocks.
+//!
+//! Parity contract: feeding tokens one at a time through a session
+//! reproduces the prefill `forward` of the matching backend
+//! row-for-row (see `rust/tests/decode_parity.rs`). The load-bearing
+//! detail is that the running block sums are accumulated in arrival
+//! order and divided once at read time — exactly the arithmetic of the
+//! batch [`centroids`](super::centroid::centroids) — so the routing
+//! scores, and therefore the selected block sets, are bit-identical to
+//! prefill's.
+
+use super::centroid::centroids;
+use super::dense::NEG_INF;
+use super::kconv::KconvStream;
+use super::simd::{axpy, dot};
+use super::topk::{tiled_topk, topk_insert};
+
+/// Per-session K/V block storage with running centroids.
+///
+/// Keys stored here are post-kconv when a [`KconvStream`] is attached;
+/// values are stored as given. `len` tokens occupy `ceil(len / block)`
+/// logical blocks, of which the last may be partial.
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    d: usize,
+    block: usize,
+    /// cached (possibly kconv'd) keys, (len, d) row-major
+    k: Vec<f32>,
+    /// cached values, (len, d) row-major
+    v: Vec<f32>,
+    /// running per-block key sums, (num_blocks, d); divided by the
+    /// block's token count at read time to form the centroid
+    sums: Vec<f32>,
+    kconv: Option<KconvStream>,
+}
+
+impl KvCache {
+    pub fn new(d: usize, block: usize) -> Self {
+        assert!(d >= 1 && block >= 1, "KvCache needs d >= 1 and block >= 1");
+        Self { d, block, k: Vec::new(), v: Vec::new(), sums: Vec::new(), kconv: None }
+    }
+
+    /// A cache that applies the depthwise causal key convolution
+    /// (paper Appendix B) to every appended key before storing it.
+    /// `w` is the (width, d) tap tensor.
+    pub fn with_kconv(d: usize, block: usize, w: &[f32], width: usize) -> Self {
+        let mut c = Self::new(d, block);
+        c.kconv = Some(KconvStream::new(w, width, d));
+        c
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    pub fn block(&self) -> usize {
+        self.block
+    }
+
+    /// Tokens cached.
+    pub fn len(&self) -> usize {
+        self.k.len() / self.d
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.k.is_empty()
+    }
+
+    /// Logical blocks currently occupied, `ceil(len / block)`.
+    pub fn num_blocks(&self) -> usize {
+        self.len().div_ceil(self.block)
+    }
+
+    /// Blocks holding exactly `block` tokens, `len / block`.
+    pub fn complete_blocks(&self) -> usize {
+        self.len() / self.block
+    }
+
+    /// Tokens stored in block `b`.
+    pub fn block_len(&self, b: usize) -> usize {
+        assert!(b < self.num_blocks());
+        (self.len() - b * self.block).min(self.block)
+    }
+
+    /// Cached (post-kconv) keys, (len, d) row-major.
+    pub fn keys(&self) -> &[f32] {
+        &self.k
+    }
+
+    /// Cached values, (len, d) row-major.
+    pub fn values(&self) -> &[f32] {
+        &self.v
+    }
+
+    /// Append one token's (k_t, v_t). Amortized O(d): one ring-buffer
+    /// kconv step (O(width · d)) when enabled, one add into the current
+    /// block's running sum, two row copies — no per-token allocation on
+    /// the plain path.
+    pub fn append(&mut self, k_t: &[f32], v_t: &[f32]) {
+        assert_eq!(k_t.len(), self.d, "key row has wrong width");
+        assert_eq!(v_t.len(), self.d, "value row has wrong width");
+        let t = self.len();
+        if t % self.block == 0 {
+            // first token of a fresh block: open its running sum
+            self.sums.extend(std::iter::repeat(0.0f32).take(self.d));
+        }
+        let b = t / self.block;
+        match &mut self.kconv {
+            Some(stream) => {
+                let stored = stream.push(k_t);
+                let sum = &mut self.sums[b * self.d..(b + 1) * self.d];
+                for (c, s) in sum.iter_mut().enumerate() {
+                    *s += stored[c];
+                }
+                self.k.extend_from_slice(&stored);
+            }
+            None => {
+                let sum = &mut self.sums[b * self.d..(b + 1) * self.d];
+                for (c, s) in sum.iter_mut().enumerate() {
+                    *s += k_t[c];
+                }
+                self.k.extend_from_slice(k_t);
+            }
+        }
+        self.v.extend_from_slice(v_t);
+    }
+
+    /// Write block `b`'s centroid (mean of its stored keys) into `out`.
+    /// For complete blocks this is bit-identical to the batch
+    /// [`centroids`](super::centroid::centroids): the sum accumulates
+    /// in arrival order and is scaled by `1 / block` once.
+    pub fn centroid_into(&self, b: usize, out: &mut [f32]) {
+        assert_eq!(out.len(), self.d);
+        let inv = 1.0 / self.block_len(b) as f32;
+        let sum = &self.sums[b * self.d..(b + 1) * self.d];
+        for (c, o) in out.iter_mut().enumerate() {
+            *o = sum[c] * inv;
+        }
+    }
+
+    /// Block `b`'s centroid as an owned row.
+    pub fn centroid(&self, b: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.d];
+        self.centroid_into(b, &mut out);
+        out
+    }
+
+    /// Route the query at the current position (the last appended
+    /// token): top-`topk` complete strictly-past blocks by q·centroid,
+    /// plus the always-attended current block. Returns block indices
+    /// sorted ascending, deduplicated, all causal (`<= own`), with the
+    /// own block always last.
+    ///
+    /// Selection uses the same streaming insertion (and therefore the
+    /// same tie-breaking: earliest block wins) as
+    /// [`tiled_topk`](super::topk::tiled_topk), over centroids computed
+    /// with the same arithmetic — so it reproduces prefill routing
+    /// exactly.
+    pub fn route(&self, q: &[f32], topk: usize) -> Vec<usize> {
+        assert!(!self.is_empty(), "route called on an empty cache");
+        assert_eq!(q.len(), self.d);
+        let own = (self.len() - 1) / self.block;
+        let mut blocks: Vec<usize> = Vec::with_capacity(topk + 1);
+        if topk > 0 && own > 0 {
+            // candidates: blocks [0, own) — all complete by construction
+            let mut best_s = vec![f32::NEG_INFINITY; topk];
+            let mut best_i = vec![-1i32; topk];
+            let mut cbuf = vec![0.0f32; self.d];
+            for j in 0..own {
+                self.centroid_into(j, &mut cbuf);
+                topk_insert(&mut best_s, &mut best_i, dot(q, &cbuf), j as i32);
+            }
+            blocks.extend(best_i.iter().filter(|&&j| j >= 0).map(|&j| j as usize));
+            blocks.sort_unstable();
+        }
+        blocks.push(own);
+        blocks
+    }
+
+    /// Single-row softmax attention of `q` over the given blocks
+    /// (ascending; the last may be the partial current block). Exact
+    /// per-row softmax: gather scores, subtract the max, combine
+    /// values — the decode analogue of one `naive_attention` row.
+    pub fn attend(&self, q: &[f32], blocks: &[usize]) -> Vec<f32> {
+        assert!(!self.is_empty(), "attend called on an empty cache");
+        assert_eq!(q.len(), self.d);
+        let d = self.d;
+        let len = self.len();
+        let scale = 1.0 / (d as f32).sqrt();
+        let mut scores: Vec<f32> = Vec::with_capacity(blocks.len() * self.block);
+        let mut rows: Vec<usize> = Vec::with_capacity(blocks.len() * self.block);
+        let mut m = NEG_INF;
+        for &b in blocks {
+            let start = b * self.block;
+            let end = ((b + 1) * self.block).min(len);
+            for u in start..end {
+                let s = dot(q, &self.k[u * d..(u + 1) * d]) * scale;
+                if s > m {
+                    m = s;
+                }
+                scores.push(s);
+                rows.push(u);
+            }
+        }
+        let mut z = 0.0f32;
+        let mut out = vec![0.0f32; d];
+        for (&s, &u) in scores.iter().zip(rows.iter()) {
+            let p = (s - m).exp();
+            z += p;
+            axpy(&mut out, p, &self.v[u * d..(u + 1) * d]);
+        }
+        for o in out.iter_mut() {
+            *o /= z;
+        }
+        out
+    }
+}
+
+/// One autoregressive decode session: a [`KvCache`] plus the routing
+/// geometry and per-step accounting. Backends drive it through
+/// [`AttentionBackend::forward_decode`](super::backend::AttentionBackend::forward_decode).
+#[derive(Debug, Clone)]
+pub struct DecodeSession {
+    cache: KvCache,
+    topk: usize,
+    /// decode steps served so far
+    steps: u64,
+    /// K/V bytes gathered from the cache by the last decode step
+    last_gathered_bytes: u64,
+    /// blocks attended by the last decode step (incl. the own block)
+    last_routed_blocks: usize,
+}
+
+impl DecodeSession {
+    pub fn new(d: usize, block: usize, topk: usize) -> Self {
+        Self {
+            cache: KvCache::new(d, block),
+            topk,
+            steps: 0,
+            last_gathered_bytes: 0,
+            last_routed_blocks: 0,
+        }
+    }
+
+    /// A session whose cache applies the streaming key convolution.
+    pub fn with_kconv(d: usize, block: usize, topk: usize, w: &[f32], width: usize) -> Self {
+        let mut s = Self::new(d, block, topk);
+        s.cache = KvCache::with_kconv(d, block, w, width);
+        s
+    }
+
+    pub fn cache(&self) -> &KvCache {
+        &self.cache
+    }
+
+    pub fn d(&self) -> usize {
+        self.cache.d()
+    }
+
+    pub fn topk(&self) -> usize {
+        self.topk
+    }
+
+    pub fn len(&self) -> usize {
+        self.cache.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cache.is_empty()
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+
+    pub fn last_gathered_bytes(&self) -> u64 {
+        self.last_gathered_bytes
+    }
+
+    pub fn last_routed_blocks(&self) -> usize {
+        self.last_routed_blocks
+    }
+
+    /// Append one token's (k_t, v_t) to the cache.
+    pub fn append(&mut self, k_t: &[f32], v_t: &[f32]) {
+        self.cache.append(k_t, v_t);
+    }
+
+    /// The block set the current query would attend (routing only).
+    pub fn route_current(&self, q: &[f32]) -> Vec<usize> {
+        self.cache.route(q, self.topk)
+    }
+
+    /// Routed decode: top-k blocks + own block (the MoBA decode path).
+    pub fn decode_routed(&mut self, q: &[f32]) -> Vec<f32> {
+        let blocks = self.cache.route(q, self.topk);
+        self.note_gather(&blocks);
+        self.cache.attend(q, &blocks)
+    }
+
+    /// Exact dense decode over the whole cache (the fallback path and
+    /// the oracle for routed decode at full routing).
+    pub fn decode_dense(&mut self, q: &[f32]) -> Vec<f32> {
+        let blocks: Vec<usize> = (0..self.cache.num_blocks()).collect();
+        self.note_gather(&blocks);
+        self.cache.attend(q, &blocks)
+    }
+
+    fn note_gather(&mut self, blocks: &[usize]) {
+        let toks: usize = blocks.iter().map(|&b| self.cache.block_len(b)).sum();
+        // K and V rows read from the cache for this step
+        self.last_gathered_bytes = (2 * toks * self.cache.d() * 4) as u64;
+        self.last_routed_blocks = blocks.len();
+        self.steps += 1;
+    }
+}
+
+/// Slow oracle for the decode semantics, ragged-n capable: row `t`
+/// attends its own (possibly partial) block causally plus the top-k
+/// complete strictly-past blocks by q·centroid, with f64 softmax.
+/// Routing reuses [`tiled_topk`] over the complete-prefix centroids, so
+/// selection ties break exactly as in prefill and decode.
+pub fn decode_reference(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    d: usize,
+    block: usize,
+    topk: usize,
+) -> Vec<f32> {
+    assert_eq!(q.len(), n * d);
+    assert_eq!(k.len(), n * d);
+    assert_eq!(v.len(), n * d);
+    let cb = n / block; // complete blocks
+    let c = centroids(&k[..cb * block * d], cb * block, d, block);
+    let (idx, _) = tiled_topk(q, &c, n, d, block, topk, 64);
+    let scale = 1.0 / (d as f64).sqrt();
+    let mut o = vec![0.0f32; n * d];
+    for t in 0..n {
+        let own = t / block;
+        let routed = &idx[t * topk..(t + 1) * topk];
+        let qt = &q[t * d..(t + 1) * d];
+        let mut m = f64::NEG_INFINITY;
+        let mut s = vec![f64::NEG_INFINITY; t + 1];
+        for (u, su) in s.iter_mut().enumerate() {
+            let ub = u / block;
+            if ub != own && !routed.contains(&(ub as i32)) {
+                continue;
+            }
+            let ku = &k[u * d..(u + 1) * d];
+            let mut acc = 0.0f64;
+            for cc in 0..d {
+                acc += qt[cc] as f64 * ku[cc] as f64;
+            }
+            *su = acc * scale;
+            if *su > m {
+                m = *su;
+            }
+        }
+        let mut z = 0.0f64;
+        let mut acc = vec![0.0f64; d];
+        for (u, &su) in s.iter().enumerate() {
+            if su == f64::NEG_INFINITY {
+                continue;
+            }
+            let p = (su - m).exp();
+            z += p;
+            let vu = &v[u * d..(u + 1) * d];
+            for cc in 0..d {
+                acc[cc] += p * vu[cc] as f64;
+            }
+        }
+        let ot = &mut o[t * d..(t + 1) * d];
+        for cc in 0..d {
+            ot[cc] = (acc[cc] / z) as f32;
+        }
+    }
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::dense::naive_attention;
+    use crate::attention::kconv::kconv;
+    use crate::attention::testutil::{max_abs_diff, qkv, Rng};
+
+    #[test]
+    fn append_tracks_blocks_and_centroids() {
+        let (d, block) = (4, 8);
+        let mut cache = KvCache::new(d, block);
+        let mut rng = Rng::new(1);
+        for t in 0..20 {
+            cache.append(&rng.normal_vec(d), &rng.normal_vec(d));
+            assert_eq!(cache.len(), t + 1);
+            assert_eq!(cache.num_blocks(), (t + 1).div_ceil(block));
+            assert_eq!(cache.complete_blocks(), (t + 1) / block);
+        }
+        assert_eq!(cache.block_len(0), 8);
+        assert_eq!(cache.block_len(2), 4); // 20 = 2*8 + 4
+        // centroid of block 1 == mean of its stored keys
+        let cen = cache.centroid(1);
+        for c in 0..d {
+            let mean: f32 =
+                (8..16).map(|t| cache.keys()[t * d + c]).sum::<f32>() / 8.0;
+            assert!((cen[c] - mean).abs() < 1e-5);
+        }
+    }
+
+    /// Complete-block centroids are bit-identical to the batch kernel.
+    #[test]
+    fn complete_block_centroids_match_batch_exactly() {
+        let (n, d, block) = (64, 8, 16);
+        let (_, k, v) = qkv(2, n, d);
+        let mut cache = KvCache::new(d, block);
+        for t in 0..n {
+            cache.append(&k[t * d..(t + 1) * d], &v[t * d..(t + 1) * d]);
+        }
+        let batch = crate::attention::centroid::centroids(&k, n, d, block);
+        for b in 0..n / block {
+            assert_eq!(&cache.centroid(b)[..], &batch[b * d..(b + 1) * d], "block {b}");
+        }
+    }
+
+    #[test]
+    fn route_is_sorted_causal_and_includes_own_block() {
+        let (n, d, block, topk) = (100, 8, 16, 3);
+        let (q, k, v) = qkv(3, n, d);
+        let mut cache = KvCache::new(d, block);
+        for t in 0..n {
+            cache.append(&k[t * d..(t + 1) * d], &v[t * d..(t + 1) * d]);
+            let blocks = cache.route(&q[t * d..(t + 1) * d], topk);
+            let own = t / block;
+            assert!(blocks.windows(2).all(|w| w[0] < w[1]), "t={t} {blocks:?}");
+            assert_eq!(*blocks.last().unwrap(), own);
+            assert!(blocks.len() <= topk + 1);
+            // routed (non-own) blocks are complete and strictly past
+            for &b in &blocks[..blocks.len() - 1] {
+                assert!(b < own);
+            }
+        }
+    }
+
+    #[test]
+    fn full_routing_decode_equals_dense_rows() {
+        let (n, d, block) = (96, 8, 16);
+        let (q, k, v) = qkv(4, n, d);
+        let (oracle, _) = naive_attention(&q, &k, &v, n, d);
+        let mut sess = DecodeSession::new(d, block, n / block); // topk >= all blocks
+        for t in 0..n {
+            sess.append(&k[t * d..(t + 1) * d], &v[t * d..(t + 1) * d]);
+            let o = sess.decode_routed(&q[t * d..(t + 1) * d]);
+            assert!(
+                max_abs_diff(&o, &oracle[t * d..(t + 1) * d]) < 1e-4,
+                "row {t}"
+            );
+        }
+        assert_eq!(sess.steps(), n as u64);
+        assert!(sess.last_gathered_bytes() > 0);
+    }
+
+    #[test]
+    fn dense_decode_equals_naive_rows_ragged() {
+        let (n, d, block) = (70, 4, 16); // n not divisible by block
+        let (q, k, v) = qkv(5, n, d);
+        let (oracle, _) = naive_attention(&q, &k, &v, n, d);
+        let mut sess = DecodeSession::new(d, block, 0);
+        for t in 0..n {
+            sess.append(&k[t * d..(t + 1) * d], &v[t * d..(t + 1) * d]);
+            let o = sess.decode_dense(&q[t * d..(t + 1) * d]);
+            assert!(max_abs_diff(&o, &oracle[t * d..(t + 1) * d]) < 1e-4, "row {t}");
+        }
+    }
+
+    #[test]
+    fn routed_decode_matches_reference_ragged_and_topk0() {
+        for (n, d, block, topk) in [(100, 8, 16, 2), (64, 4, 16, 0), (50, 4, 8, 3)] {
+            let (q, k, v) = qkv(6 + n as u64, n, d);
+            let oracle = decode_reference(&q, &k, &v, n, d, block, topk);
+            let mut sess = DecodeSession::new(d, block, topk);
+            for t in 0..n {
+                sess.append(&k[t * d..(t + 1) * d], &v[t * d..(t + 1) * d]);
+                let o = sess.decode_routed(&q[t * d..(t + 1) * d]);
+                assert!(
+                    max_abs_diff(&o, &oracle[t * d..(t + 1) * d]) < 1e-4,
+                    "n={n} block={block} topk={topk} row {t}"
+                );
+            }
+        }
+    }
+
+    /// Streaming kconv inside the cache == batch kconv of the same keys.
+    #[test]
+    fn cached_keys_match_batch_kconv() {
+        let (n, d, block, width) = (48, 8, 16, 4);
+        let (_, k, v) = qkv(7, n, d);
+        let mut rng = Rng::new(8);
+        let w = rng.normal_vec(width * d);
+        let mut cache = KvCache::with_kconv(d, block, &w, width);
+        for t in 0..n {
+            cache.append(&k[t * d..(t + 1) * d], &v[t * d..(t + 1) * d]);
+        }
+        let batch = kconv(&k, &w, n, d, width);
+        assert_eq!(cache.keys(), &batch[..]);
+        // values are stored untouched
+        assert_eq!(cache.values(), &v[..]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn route_on_empty_cache_panics() {
+        KvCache::new(4, 8).route(&[0.0; 4], 2);
+    }
+}

@@ -2,8 +2,15 @@
 //! `python/compile/kernels/kconv.py`:
 //!
 //!   k'_t = k_t + SiLU( Σ_l w_l ⊙ k_{t-l} )
+//!
+//! Two forms share the arithmetic: [`kconv`] transforms a whole (n, d)
+//! key tensor at once (prefill), [`KconvStream`] transforms keys one at
+//! a time over a ring buffer of the last `width` raw keys (decode). The
+//! streaming form accumulates lags in the same order as the batch form,
+//! so the two are bit-identical — locked down by the decode parity
+//! suite.
 
-fn silu(x: f32) -> f32 {
+pub fn silu(x: f32) -> f32 {
     x / (1.0 + (-x).exp())
 }
 
@@ -24,6 +31,56 @@ pub fn kconv(k: &[f32], w: &[f32], n: usize, d: usize, width: usize) -> Vec<f32>
     out
 }
 
+/// Streaming kconv over a ring buffer of the last `width` raw keys —
+/// the decode-path twin of [`kconv`]. O(width · d) per pushed key.
+#[derive(Debug, Clone)]
+pub struct KconvStream {
+    /// (width, d) depthwise taps
+    w: Vec<f32>,
+    width: usize,
+    d: usize,
+    /// last `width` raw keys; slot for token t is `t % width`
+    ring: Vec<f32>,
+    /// tokens pushed so far
+    len: usize,
+}
+
+impl KconvStream {
+    pub fn new(w: &[f32], width: usize, d: usize) -> Self {
+        assert!(width >= 1 && d >= 1, "kconv needs width >= 1 and d >= 1");
+        assert_eq!(w.len(), width * d);
+        Self { w: w.to_vec(), width, d, ring: vec![0.0; width * d], len: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Push raw key k_t, returning the convolved key k'_t. Accumulates
+    /// lag 0..min(width, t+1) in the same order as the batch [`kconv`].
+    pub fn push(&mut self, kt: &[f32]) -> Vec<f32> {
+        assert_eq!(kt.len(), self.d);
+        let t = self.len;
+        let slot = t % self.width;
+        self.ring[slot * self.d..(slot + 1) * self.d].copy_from_slice(kt);
+        let mut out = vec![0.0f32; self.d];
+        for c in 0..self.d {
+            let mut acc = 0.0f32;
+            for lag in 0..self.width.min(t + 1) {
+                let src = (t - lag) % self.width;
+                acc += self.w[lag * self.d + c] * self.ring[src * self.d + c];
+            }
+            out[c] = kt[c] + silu(acc);
+        }
+        self.len += 1;
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -33,7 +90,7 @@ mod tests {
     fn zero_weights_identity() {
         let mut rng = Rng::new(1);
         let k = rng.normal_vec(32 * 4);
-        let out = kconv(&k, &vec![0.0; 3 * 4], 32, 4, 3);
+        let out = kconv(&k, &[0.0; 3 * 4], 32, 4, 3);
         assert_eq!(out, k);
     }
 
@@ -60,5 +117,23 @@ mod tests {
         let exp1 = -1.0 + silu(-0.5);
         assert!((out[0] - exp0).abs() < 1e-6);
         assert!((out[1] - exp1).abs() < 1e-6);
+    }
+
+    /// The streaming ring-buffer form is bit-identical to the batch
+    /// form: same taps, same lag order, same f32 operations.
+    #[test]
+    fn stream_matches_batch_exactly() {
+        let mut rng = Rng::new(3);
+        for (n, d, width) in [(1, 4, 1), (7, 2, 3), (40, 8, 4), (64, 3, 7), (16, 5, 32)] {
+            let k = rng.normal_vec(n * d);
+            let w = rng.normal_vec(width * d);
+            let batch = kconv(&k, &w, n, d, width);
+            let mut stream = KconvStream::new(&w, width, d);
+            for t in 0..n {
+                let got = stream.push(&k[t * d..(t + 1) * d]);
+                assert_eq!(&got[..], &batch[t * d..(t + 1) * d], "t={t} n={n} width={width}");
+            }
+            assert_eq!(stream.len(), n);
+        }
     }
 }

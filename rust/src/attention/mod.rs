@@ -16,16 +16,20 @@
 //!   backward (Algorithm 5) in [`backward`].
 //! * [`topk`], [`centroid`], [`varlen`], [`kconv`] — shared building
 //!   blocks (Algorithms 2–4, Appendix B).
+//! * [`decode`] — incremental autoregressive decode: per-session block
+//!   KV cache with running centroids and streaming MoBA routing, parity
+//!   locked against the prefill kernels.
 //! * [`backend`] — the [`backend::AttentionBackend`] trait unifying the
-//!   implementations behind one call convention, plus the registry and
-//!   cross-backend parity harness every consumer layer dispatches
-//!   through.
+//!   implementations behind one call convention (prefill `forward` +
+//!   incremental `forward_decode`), plus the registry and cross-backend
+//!   parity harness every consumer layer dispatches through.
 //!
 //! All single-head (N, d) row-major f32; multi-head benches loop heads.
 
 pub mod backend;
 pub mod backward;
 pub mod centroid;
+pub mod decode;
 pub mod dense;
 pub mod flash_moba;
 pub mod kconv;
@@ -37,6 +41,7 @@ pub mod topk;
 pub mod varlen;
 
 pub use backend::{AttentionBackend, BackendRegistry};
+pub use decode::{DecodeSession, KvCache};
 pub use stats::StageStats;
 
 /// Geometry of one MoBA attention problem.

@@ -51,6 +51,31 @@ pub fn naive_topk(
     (out, ws)
 }
 
+/// Insert (score, index) into a descending running top-k — the paper's
+/// bubble-sort-in-registers. Strict `>` admission: equal scores keep
+/// the earlier index, and NaN is never admitted.
+///
+/// This is the single insertion implementation shared by the prefill
+/// [`tiled_topk`] and the decode-path routing
+/// ([`KvCache::route`](super::decode::KvCache::route)); their selection
+/// parity (identical sets *and* tie-breaking) depends on both calling
+/// exactly this. `best_s`/`best_i` must be non-empty and equal length.
+#[inline]
+pub fn topk_insert(best_s: &mut [f32], best_i: &mut [i32], score: f32, index: i32) {
+    let k = best_s.len();
+    debug_assert_eq!(k, best_i.len());
+    if score > best_s[k - 1] {
+        let mut pos = k - 1;
+        while pos > 0 && best_s[pos - 1] < score {
+            best_s[pos] = best_s[pos - 1];
+            best_i[pos] = best_i[pos - 1];
+            pos -= 1;
+        }
+        best_s[pos] = score;
+        best_i[pos] = index;
+    }
+}
+
 /// Streaming selection (Flash TopK). Returns ((n, k) indices, workspace bytes).
 ///
 /// `tile_c` is the centroid tile width; the running top-k state is
@@ -90,17 +115,7 @@ pub fn tiled_topk(
             let jend = (j0 + tile_c).min(own);
             for j in j0..jend {
                 let dotv = dot(qt, &centroids[j * d..(j + 1) * d]);
-                // insertion into the running top-k (paper: bubble sort)
-                if dotv > best_s[topk - 1] {
-                    let mut pos = topk - 1;
-                    while pos > 0 && best_s[pos - 1] < dotv {
-                        best_s[pos] = best_s[pos - 1];
-                        best_i[pos] = best_i[pos - 1];
-                        pos -= 1;
-                    }
-                    best_s[pos] = dotv;
-                    best_i[pos] = j as i32;
-                }
+                topk_insert(&mut best_s, &mut best_i, dotv, j as i32);
             }
             j0 = jend;
         }
@@ -191,6 +206,23 @@ mod tests {
                 assert!(dots[j] <= min_sel + 1e-6);
             }
         }
+    }
+
+    /// The shared insertion: descending order, earliest index wins
+    /// ties, NaN never admitted.
+    #[test]
+    fn topk_insert_orders_ties_and_rejects_nan() {
+        let mut s = [f32::NEG_INFINITY; 3];
+        let mut i = [-1i32; 3];
+        topk_insert(&mut s, &mut i, 1.0, 0);
+        topk_insert(&mut s, &mut i, 2.0, 1);
+        topk_insert(&mut s, &mut i, 1.0, 2); // tie with index 0: stays behind it
+        assert_eq!(i, [1, 0, 2]);
+        assert_eq!(s, [2.0, 1.0, 1.0]);
+        topk_insert(&mut s, &mut i, f32::NAN, 9); // NaN fails the > admission
+        assert_eq!(i, [1, 0, 2]);
+        topk_insert(&mut s, &mut i, 3.0, 3);
+        assert_eq!(i, [3, 1, 0]);
     }
 
     #[test]

@@ -1,0 +1,184 @@
+//! `bench decode` — incremental-decode throughput on the CPU attention
+//! substrate: per-token latency of every registered backend's
+//! `forward_decode` at steady-state context lengths, plus a
+//! decode↔prefill parity check on small shapes.
+//!
+//! The story mirrors Figure 3 for serving: dense decode reads the whole
+//! cache (O(N·d) per token), routed MoBA decode reads (k+1)·B rows
+//! (O(k·B·d)) — so the speedup grows linearly in N while the routing
+//! cost stays at one centroid dot per complete block.
+
+use std::time::Instant;
+
+#[allow(unused_imports)]
+use crate::attention::backend::AttentionBackend;
+use crate::attention::backend::BackendRegistry;
+use crate::attention::decode::DecodeSession;
+use crate::attention::testutil::Rng;
+use crate::attention::MobaShape;
+use crate::config::AppConfig;
+use crate::eval::decode_eval;
+use crate::util::json::Json;
+use crate::Result;
+
+use super::report::{self, Table};
+
+/// One (backend, context length) decode measurement.
+#[derive(Debug, Clone)]
+pub struct DecodePoint {
+    pub backend: String,
+    pub context_n: usize,
+    pub per_token_s: f64,
+    /// blocks attended per step (incl. the own block)
+    pub routed_blocks: usize,
+    /// K/V bytes gathered from the cache per step
+    pub gathered_bytes: u64,
+}
+
+/// Time `steps` decode queries against a fixed context of length `n`.
+/// The session is pre-filled by appending `n` tokens (untimed), then
+/// each timed step routes + attends without appending, so every backend
+/// sees the identical steady-state cache.
+pub fn measure_decode(
+    registry: &BackendRegistry,
+    n: usize,
+    d: usize,
+    block: usize,
+    topk: usize,
+    steps: usize,
+    seed: u64,
+) -> Vec<DecodePoint> {
+    let mut rng = Rng::new(seed);
+    let ks = rng.normal_vec(n * d);
+    let vs = rng.normal_vec(n * d);
+    let qs = rng.normal_vec(steps * d);
+    let mut points = Vec::new();
+    for backend in registry.iter() {
+        let mut sess = DecodeSession::new(d, block, topk);
+        for t in 0..n {
+            sess.append(&ks[t * d..(t + 1) * d], &vs[t * d..(t + 1) * d]);
+        }
+        let t0 = Instant::now();
+        for s in 0..steps {
+            let o = backend.forward_decode(&mut sess, &qs[s * d..(s + 1) * d]);
+            debug_assert_eq!(o.len(), d);
+        }
+        let per_token_s = t0.elapsed().as_secs_f64() / steps as f64;
+        points.push(DecodePoint {
+            backend: backend.name().to_string(),
+            context_n: n,
+            per_token_s,
+            routed_blocks: sess.last_routed_blocks(),
+            gathered_bytes: sess.last_gathered_bytes(),
+        });
+    }
+    points
+}
+
+/// The `bench decode` target: parity table + per-token latency sweep.
+pub fn run_decode(cfg: &AppConfig, quick: bool) -> Result<()> {
+    let registry = BackendRegistry::with_defaults();
+
+    // 1) decode↔prefill parity on small shapes (every backend)
+    let shapes = vec![
+        MobaShape::new(128, 16, 16, 2),
+        MobaShape::new(96, 8, 16, 6), // fully routed
+        MobaShape::new(256, 8, 32, 3),
+    ];
+    let parity = decode_eval(&registry, &shapes, 0xDEC0);
+    let mut pt = Table::new(
+        "Decode parity — token-by-token forward_decode vs prefill forward",
+        &["backend", "N", "B", "k", "max|Δ| vs prefill", "us/token"],
+    );
+    for r in &parity {
+        assert!(
+            r.max_dev_vs_prefill < 1e-4,
+            "decode parity violated: {} dev {:.2e} at N={}",
+            r.backend,
+            r.max_dev_vs_prefill,
+            r.n
+        );
+        pt.row(vec![
+            r.backend.clone(),
+            r.n.to_string(),
+            r.block.to_string(),
+            r.topk.to_string(),
+            format!("{:.1e}", r.max_dev_vs_prefill),
+            format!("{:.1}", r.per_token_s * 1e6),
+        ]);
+    }
+    pt.print();
+
+    // 2) steady-state per-token latency vs context length
+    let d = cfg.bench.head_dim;
+    let block = cfg.bench.block;
+    let topk = cfg.bench.topk;
+    let lens: Vec<usize> = if quick { vec![1024, 4096] } else { vec![1024, 4096, 16384] };
+    let steps = if quick { 32 } else { 128 };
+    let mut t = Table::new(
+        &format!("bench decode — per-token latency vs context  [B={block}, k={topk}, d={d}]"),
+        &["backend", "context N", "us/token", "blocks/step", "gathered KB/step"],
+    );
+    let mut blob = Vec::new();
+    let mut headline: f64 = 0.0;
+    for &n in &lens {
+        let points = measure_decode(&registry, n, d, block, topk, steps, 0xDEC0DE + n as u64);
+        let dense_s = points
+            .iter()
+            .find(|p| p.backend == "dense")
+            .map(|p| p.per_token_s);
+        for p in &points {
+            t.row(vec![
+                p.backend.clone(),
+                p.context_n.to_string(),
+                format!("{:.1}", p.per_token_s * 1e6),
+                p.routed_blocks.to_string(),
+                format!("{:.1}", p.gathered_bytes as f64 / 1e3),
+            ]);
+            blob.push(Json::obj(vec![
+                ("backend", Json::from(p.backend.as_str())),
+                ("context_n", Json::from(p.context_n)),
+                ("per_token_s", Json::from(p.per_token_s)),
+                ("routed_blocks", Json::from(p.routed_blocks)),
+                ("gathered_bytes", Json::from(p.gathered_bytes)),
+            ]));
+            if p.backend == "flash_moba" {
+                if let Some(ds) = dense_s {
+                    headline = headline.max(ds / p.per_token_s);
+                }
+            }
+        }
+    }
+    t.print();
+    println!(
+        "headline: routed decode up to {headline:.1}x faster per token than dense \
+         decode at these contexts\n"
+    );
+    report::save_json(
+        &cfg.results_dir,
+        "decode",
+        &Json::obj(vec![
+            ("rows", Json::arr(blob)),
+            ("headline_speedup_vs_dense", Json::from(headline)),
+        ]),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_covers_all_backends_and_sparse_gathers_less() {
+        let registry = BackendRegistry::with_defaults();
+        // 8 blocks, k=1: routed decode touches 2 blocks vs dense's 8
+        let points = measure_decode(&registry, 256, 8, 32, 1, 4, 9);
+        assert_eq!(points.len(), registry.len());
+        let dense = points.iter().find(|p| p.backend == "dense").unwrap();
+        let flash = points.iter().find(|p| p.backend == "flash_moba").unwrap();
+        assert_eq!(dense.routed_blocks, 8);
+        assert_eq!(flash.routed_blocks, 2);
+        assert!(flash.gathered_bytes < dense.gathered_bytes);
+        assert!(dense.per_token_s > 0.0 && flash.per_token_s > 0.0);
+    }
+}

@@ -11,10 +11,14 @@
 //!   FlashMoBA) across sequence lengths, with stage decomposition and
 //!   workspace-memory accounting (analytic beyond the timeable range,
 //!   with the paper's OOM point reproduced as a workspace budget).
+//! * [`decode`] — incremental-decode throughput: per-token latency of
+//!   every backend's `forward_decode` at steady-state context lengths,
+//!   plus a decode↔prefill parity table.
 //! * [`snr_harness`] — Eq. 1–3 validation: closed form vs Monte-Carlo,
 //!   plus paper-scale retrieval curves (the Tables 3–4 shape at 64K).
 //! * [`report`] — aligned-table printing + JSON result persistence.
 
+pub mod decode;
 pub mod figures;
 pub mod report;
 pub mod snr_harness;

@@ -1,6 +1,14 @@
-//! Dynamic batcher: packs single-head requests into the H-head serving
-//! kernels (capacity `max_batch = H`), flushing on capacity or deadline —
-//! the standard continuous-batching trade-off (occupancy vs latency).
+//! Dynamic batcher: packs work items into lane groups (prefill requests
+//! per serving artifact, decode steps per backend lane), flushing on
+//! capacity or deadline — the standard continuous-batching trade-off
+//! (occupancy vs latency).
+//!
+//! Items are [`WorkItem`]s: a decode step carries only the new token's
+//! three d-length rows, so queueing and polling it moves O(d) bytes no
+//! matter how long its session's context is — the session's cached K/V
+//! never travels through the queue. Each flushed [`Batch`] reports the
+//! payload bytes it moved ([`Batch::payload_bytes`], StageStats-style
+//! accounting) so the regression suite can pin that invariant.
 //!
 //! Pure data structure (no tasks/timers inside) so invariants are
 //! proptest-able; the server drives it with `poll(now)`.
@@ -8,25 +16,28 @@
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
 
-use super::request::AttnRequest;
+use super::request::WorkItem;
 
-/// A group of requests that will share one kernel execution.
+/// A group of work items that will share one execution.
 #[derive(Debug)]
 pub struct Batch {
-    /// (request, enqueue timestamp)
-    pub items: Vec<(AttnRequest, Instant)>,
-    /// artifact name chosen by the router for this group
+    /// (work item, enqueue timestamp)
+    pub items: Vec<(WorkItem, Instant)>,
+    /// lane name chosen by the router for this group (artifact or
+    /// backend target)
     pub artifact: String,
-    /// kernel sequence capacity
+    /// kernel sequence capacity (1 for decode lanes)
     pub kernel_n: usize,
+    /// tensor payload bytes this poll moved out of the queue
+    pub payload_bytes: u64,
 }
 
-/// One queue per (artifact) group.
+/// One queue per lane (artifact / decode target).
 #[derive(Debug)]
 struct Lane {
     artifact: String,
     kernel_n: usize,
-    q: VecDeque<(AttnRequest, Instant)>,
+    q: VecDeque<(WorkItem, Instant)>,
 }
 
 #[derive(Debug)]
@@ -36,12 +47,13 @@ pub struct Batcher {
     max_wait: Duration,
     capacity: usize,
     len: usize,
+    bytes_flushed: u64,
 }
 
 impl Batcher {
     pub fn new(max_batch: usize, max_wait: Duration, capacity: usize) -> Self {
         assert!(max_batch >= 1);
-        Self { lanes: Vec::new(), max_batch, max_wait, capacity, len: 0 }
+        Self { lanes: Vec::new(), max_batch, max_wait, capacity, len: 0, bytes_flushed: 0 }
     }
 
     pub fn len(&self) -> usize {
@@ -56,16 +68,22 @@ impl Batcher {
         self.max_batch
     }
 
-    /// Enqueue; `Err(req)` returns the request when the queue is full.
+    /// Cumulative payload bytes drained by `poll`/`flush_all`.
+    pub fn bytes_flushed(&self) -> u64 {
+        self.bytes_flushed
+    }
+
+    /// Enqueue; `Err(item)` returns the item when the queue is full.
     pub fn push(
         &mut self,
-        req: AttnRequest,
+        item: impl Into<WorkItem>,
         artifact: &str,
         kernel_n: usize,
         now: Instant,
-    ) -> Result<(), AttnRequest> {
+    ) -> Result<(), WorkItem> {
+        let item = item.into();
         if self.len >= self.capacity {
-            return Err(req);
+            return Err(item);
         }
         let lane = match self.lanes.iter_mut().find(|l| l.artifact == artifact) {
             Some(l) => l,
@@ -78,7 +96,7 @@ impl Batcher {
                 self.lanes.last_mut().unwrap()
             }
         };
-        lane.q.push_back((req, now));
+        lane.q.push_back((item, now));
         self.len += 1;
         Ok(())
     }
@@ -103,7 +121,14 @@ impl Batcher {
         let take = lane.q.len().min(self.max_batch);
         let items: Vec<_> = lane.q.drain(..take).collect();
         self.len -= items.len();
-        Some(Batch { items, artifact: lane.artifact.clone(), kernel_n: lane.kernel_n })
+        let payload_bytes: u64 = items.iter().map(|(i, _)| i.payload_bytes()).sum();
+        self.bytes_flushed += payload_bytes;
+        Some(Batch {
+            items,
+            artifact: lane.artifact.clone(),
+            kernel_n: lane.kernel_n,
+            payload_bytes,
+        })
     }
 
     /// Drain everything (shutdown), deadline ignored.
@@ -114,10 +139,13 @@ impl Batcher {
                 let take = lane.q.len().min(self.max_batch);
                 let items: Vec<_> = lane.q.drain(..take).collect();
                 self.len -= items.len();
+                let payload_bytes: u64 = items.iter().map(|(i, _)| i.payload_bytes()).sum();
+                self.bytes_flushed += payload_bytes;
                 out.push(Batch {
                     items,
                     artifact: lane.artifact.clone(),
                     kernel_n: lane.kernel_n,
+                    payload_bytes,
                 });
             }
         }
@@ -136,7 +164,7 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::request::AttnKind;
+    use crate::coordinator::request::{AttnKind, AttnRequest, DecodeStep};
 
     fn req(id: u64, n: usize) -> AttnRequest {
         AttnRequest {
@@ -150,6 +178,10 @@ mod tests {
         }
     }
 
+    fn step(id: u64, session: u64, d: usize) -> DecodeStep {
+        DecodeStep { id, session, q: vec![0.0; d], k: vec![0.0; d], v: vec![0.0; d] }
+    }
+
     #[test]
     fn flushes_on_capacity() {
         let mut b = Batcher::new(2, Duration::from_secs(100), 100);
@@ -159,7 +191,7 @@ mod tests {
         b.push(req(2, 4), "a", 8, t).unwrap();
         let batch = b.poll(t).unwrap();
         assert_eq!(batch.items.len(), 2);
-        assert_eq!(batch.items[0].0.id, 1); // FIFO
+        assert_eq!(batch.items[0].0.id(), 1); // FIFO
         assert!(b.is_empty());
     }
 
@@ -194,7 +226,8 @@ mod tests {
         let t = Instant::now();
         b.push(req(1, 4), "a", 8, t).unwrap();
         b.push(req(2, 4), "a", 8, t).unwrap();
-        assert!(b.push(req(3, 4), "a", 8, t).is_err());
+        let rejected = b.push(req(3, 4), "a", 8, t).unwrap_err();
+        assert_eq!(rejected.id(), 3);
     }
 
     #[test]
@@ -218,5 +251,42 @@ mod tests {
         b.push(req(1, 4), "a", 8, t).unwrap();
         b.push(req(2, 4), "b", 8, t + Duration::from_millis(2)).unwrap();
         assert_eq!(b.next_deadline().unwrap(), t + Duration::from_millis(5));
+    }
+
+    /// Decode steps ride their own lane and their queue payload is
+    /// O(d) per step — a fixed 3·d·4 bytes, with no dependence on the
+    /// session's context length (the cached K/V never enters the
+    /// queue). Guards against regressing to prefill-style resends.
+    #[test]
+    fn decode_lane_payload_is_constant_per_step() {
+        let d = 64;
+        let mut b = Batcher::new(4, Duration::from_secs(100), 100);
+        let t = Instant::now();
+        for i in 0..4 {
+            b.push(step(i, 1, d), "decode:flash_moba", 1, t).unwrap();
+        }
+        let batch = b.poll(t).unwrap();
+        assert_eq!(batch.artifact, "decode:flash_moba");
+        assert_eq!(batch.kernel_n, 1);
+        assert_eq!(batch.payload_bytes, (4 * 3 * d * 4) as u64);
+        assert_eq!(b.bytes_flushed(), batch.payload_bytes);
+        // ...and is dwarfed by even a modest prefill in the next lane
+        b.push(req(9, 1024), "a", 1024, t).unwrap();
+        let prefill = b.poll(t + Duration::from_secs(200)).unwrap();
+        assert!(prefill.payload_bytes > 100 * batch.payload_bytes);
+    }
+
+    #[test]
+    fn mixed_lanes_keep_fifo_per_lane() {
+        let mut b = Batcher::new(2, Duration::from_secs(100), 100);
+        let t = Instant::now();
+        b.push(step(1, 1, 4), "decode:x", 1, t).unwrap();
+        b.push(req(2, 4), "a", 8, t).unwrap();
+        b.push(step(3, 1, 4), "decode:x", 1, t).unwrap();
+        let batch = b.poll(t).unwrap();
+        assert_eq!(batch.artifact, "decode:x");
+        let ids: Vec<u64> = batch.items.iter().map(|(i, _)| i.id()).collect();
+        assert_eq!(ids, vec![1, 3]);
+        assert_eq!(b.len(), 1);
     }
 }

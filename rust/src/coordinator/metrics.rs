@@ -15,6 +15,15 @@ pub struct Metrics {
     pub rejected: AtomicU64,
     pub batches: AtomicU64,
     pub batched_requests: AtomicU64,
+    /// decode sessions opened / freed (active = created - freed)
+    pub sessions_created: AtomicU64,
+    pub sessions_freed: AtomicU64,
+    /// decode steps executed
+    pub decode_steps: AtomicU64,
+    /// queue payload bytes moved for decode steps — O(d) per step by
+    /// design; the regression suite asserts it never scales with the
+    /// session's context length
+    pub decode_payload_bytes: AtomicU64,
     hist: Mutex<Histo>,
 }
 
@@ -74,14 +83,24 @@ impl Metrics {
         }
     }
 
+    /// Sessions currently open (created minus freed).
+    pub fn active_sessions(&self) -> u64 {
+        self.sessions_created
+            .load(Ordering::Relaxed)
+            .saturating_sub(self.sessions_freed.load(Ordering::Relaxed))
+    }
+
     pub fn summary(&self) -> String {
         format!(
-            "req={} resp={} rejected={} batches={} occupancy={:.2} mean_lat={:.2}ms p95<={:.1}ms",
+            "req={} resp={} rejected={} batches={} occupancy={:.2} \
+             sessions={} decode_steps={} mean_lat={:.2}ms p95<={:.1}ms",
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_occupancy(),
+            self.active_sessions(),
+            self.decode_steps.load(Ordering::Relaxed),
             self.mean_latency_s() * 1e3,
             self.latency_quantile_s(0.95) * 1e3,
         )
@@ -119,5 +138,21 @@ mod tests {
         assert_eq!(m.mean_latency_s(), 0.0);
         assert_eq!(m.latency_quantile_s(0.9), 0.0);
         assert_eq!(m.mean_occupancy(), 0.0);
+        assert_eq!(m.active_sessions(), 0);
+    }
+
+    #[test]
+    fn session_accounting() {
+        let m = Metrics::new();
+        m.sessions_created.store(3, Ordering::Relaxed);
+        m.sessions_freed.store(1, Ordering::Relaxed);
+        m.decode_steps.store(40, Ordering::Relaxed);
+        assert_eq!(m.active_sessions(), 2);
+        let s = m.summary();
+        assert!(s.contains("sessions=2"), "{s}");
+        assert!(s.contains("decode_steps=40"), "{s}");
+        // freed > created never underflows
+        m.sessions_freed.store(9, Ordering::Relaxed);
+        assert_eq!(m.active_sessions(), 0);
     }
 }

@@ -3,15 +3,20 @@
 //! The paper's contribution is a kernel, so the coordinator is the thin
 //! but real serving stack a deployment needs (vLLM-router-shaped):
 //!
-//! * [`request`] — typed single-head attention requests/responses.
+//! * [`request`] — typed single-head attention requests/responses,
+//!   plus decode steps and the [`request::WorkItem`] the batcher queues.
 //! * [`router`] — routes a request to the smallest compiled artifact
 //!   that fits its sequence length (dense vs MoBA kernels).
 //! * [`batcher`] — dynamic batching: artifacts compute H=4 heads per
 //!   launch, so up to 4 single-head requests are packed per execution,
-//!   flushed on capacity or deadline (max-wait).
-//! * [`metrics`] — counters + latency histogram.
-//! * [`server`] — the tokio event loop tying it together; in-process
-//!   `submit()` API used by examples, benches and tests.
+//!   flushed on capacity or deadline (max-wait). Decode steps batch in
+//!   their own lanes, carrying O(d) payload per step.
+//! * [`metrics`] — counters + latency histogram (incl. session/decode
+//!   counters).
+//! * [`server`] — the event loop tying it together; in-process
+//!   `submit()` prefill API plus the decode session API
+//!   (`session_create` / `decode` / `session_free`) used by examples,
+//!   benches and tests.
 
 pub mod batcher;
 pub mod metrics;
@@ -21,6 +26,6 @@ pub mod server;
 
 pub use batcher::{Batch, Batcher};
 pub use metrics::Metrics;
-pub use request::{AttnKind, AttnRequest, AttnResponse};
+pub use request::{AttnKind, AttnRequest, AttnResponse, DecodeStep, WorkItem};
 pub use router::Router;
-pub use server::{Coordinator, Ticket};
+pub use server::{Coordinator, Ticket, DECODE_ID_BASE};

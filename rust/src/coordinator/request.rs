@@ -42,6 +42,80 @@ impl AttnRequest {
         let e = self.n * self.d;
         self.q.len() == e && self.k.len() == e && self.v.len() == e && self.n > 0
     }
+
+    /// Tensor payload bytes this request carries: O(n·d).
+    pub fn payload_bytes(&self) -> u64 {
+        (self.q.len() + self.k.len() + self.v.len()) as u64 * 4
+    }
+}
+
+/// One autoregressive decode step for an open session: append (k, v)
+/// to the session's KV cache, then attend `q` over it. Carries only
+/// the new token's three d-length rows — the cached context stays in
+/// the worker's session table, so queueing a step moves O(d) bytes
+/// regardless of how long the session's context already is (the
+/// regression suite pins this via [`WorkItem::payload_bytes`]).
+#[derive(Debug, Clone)]
+pub struct DecodeStep {
+    /// response-ticket id (allocated by the coordinator)
+    pub id: u64,
+    /// session handle from `Coordinator::session_create`
+    pub session: u64,
+    pub q: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl DecodeStep {
+    /// All three rows present and of the session's head dim.
+    pub fn validate(&self, d: usize) -> bool {
+        d > 0 && self.q.len() == d && self.k.len() == d && self.v.len() == d
+    }
+
+    /// Tensor payload bytes this step carries: O(d), the invariant the
+    /// no-copy regression tests pin.
+    pub fn payload_bytes(&self) -> u64 {
+        (self.q.len() + self.k.len() + self.v.len()) as u64 * 4
+    }
+}
+
+/// What the batcher queues: a full prefill request or one decode step.
+#[derive(Debug, Clone)]
+pub enum WorkItem {
+    Prefill(AttnRequest),
+    Decode(DecodeStep),
+}
+
+impl WorkItem {
+    /// Response-ticket id of the carried work.
+    pub fn id(&self) -> u64 {
+        match self {
+            WorkItem::Prefill(r) => r.id,
+            WorkItem::Decode(s) => s.id,
+        }
+    }
+
+    /// Bytes of tensor payload this item moves through the queue
+    /// (StageStats-style accounting): O(n·d) for prefill, O(d) for a
+    /// decode step.
+    pub fn payload_bytes(&self) -> u64 {
+        match self {
+            WorkItem::Prefill(r) => r.payload_bytes(),
+            WorkItem::Decode(s) => s.payload_bytes(),
+        }
+    }
+}
+
+impl From<AttnRequest> for WorkItem {
+    fn from(r: AttnRequest) -> Self {
+        WorkItem::Prefill(r)
+    }
+}
+
+impl From<DecodeStep> for WorkItem {
+    fn from(s: DecodeStep) -> Self {
+        WorkItem::Decode(s)
+    }
 }
 
 /// Response: the attention output plus service-side timing.
@@ -93,5 +167,47 @@ mod tests {
     fn artifact_prefixes() {
         assert_eq!(AttnKind::Dense.artifact_prefix(), "attn_dense_n");
         assert_eq!(AttnKind::Moba.artifact_prefix(), "attn_moba_n");
+    }
+
+    #[test]
+    fn decode_step_validates_row_widths() {
+        let step = DecodeStep {
+            id: 1,
+            session: 7,
+            q: vec![0.0; 4],
+            k: vec![0.0; 4],
+            v: vec![0.0; 4],
+        };
+        assert!(step.validate(4));
+        assert!(!step.validate(8));
+        assert!(!step.validate(0));
+        let short = DecodeStep { k: vec![0.0; 3], ..step.clone() };
+        assert!(!short.validate(4));
+    }
+
+    #[test]
+    fn work_item_payload_is_o_d_for_decode() {
+        let n = 1024;
+        let d = 64;
+        let prefill = WorkItem::from(AttnRequest {
+            id: 1,
+            kind: AttnKind::Moba,
+            n,
+            d,
+            q: vec![0.0; n * d],
+            k: vec![0.0; n * d],
+            v: vec![0.0; n * d],
+        });
+        let decode = WorkItem::from(DecodeStep {
+            id: 2,
+            session: 1,
+            q: vec![0.0; d],
+            k: vec![0.0; d],
+            v: vec![0.0; d],
+        });
+        assert_eq!(prefill.payload_bytes(), (3 * n * d * 4) as u64);
+        assert_eq!(decode.payload_bytes(), (3 * d * 4) as u64);
+        assert_eq!(prefill.id(), 1);
+        assert_eq!(decode.id(), 2);
     }
 }

@@ -1,10 +1,24 @@
 //! The coordinator event loop: route → batch → execute → respond.
 //!
 //! Plain threads + channels (the testbed vendors no async runtime): one
-//! worker thread owns the batcher and the execution backend; clients get
-//! a per-request response channel ([`Pending`] ticket) and either block
-//! on it ([`Coordinator::submit`]) or collect tickets first and join
-//! later ([`Coordinator::submit_async`]) for concurrent load.
+//! worker thread owns the batcher, the execution backend and the decode
+//! session table; clients get a per-request response channel
+//! ([`Pending`] ticket) and either block on it ([`Coordinator::submit`])
+//! or collect tickets first and join later ([`Coordinator::submit_async`])
+//! for concurrent load.
+//!
+//! Two request families share the loop:
+//!
+//! * **Prefill** — one-shot attention over a full (n, d) problem, as
+//!   before.
+//! * **Decode** — autoregressive sessions: `session_create` opens a
+//!   per-session block KV cache in the worker
+//!   ([`crate::attention::decode::DecodeSession`]), each
+//!   [`Coordinator::decode`] step ships only the new token's three
+//!   d-length rows through a dedicated batcher lane (the cached context
+//!   never travels through the queue), and `session_free` drops the
+//!   cache. Steps for one session execute in submission order (FIFO
+//!   within the lane).
 //!
 //! Two execution paths behind one loop:
 //!
@@ -14,15 +28,21 @@
 //!   scores strictly-past blocks and the own block is causally masked,
 //!   tail padding can never influence rows `< n` — the served output is
 //!   exactly the n-length computation (asserted by integration tests).
+//!   The compiled kernels are prefill-only, so `session_create` is
+//!   rejected on this path.
 //! * **CPU substrate** — when no artifacts (or no PJRT bindings) are
 //!   available, requests dispatch through the
 //!   [`crate::attention::backend::AttentionBackend`] registry: MoBA
 //!   requests run FlashMoBA, anything the sparse backend's
 //!   supported-config predicate rejects falls back to the exact dense
-//!   backend. No padding; `served_n == n`.
+//!   backend. No padding; `served_n == n`. Decode sessions live here:
+//!   MoBA sessions route each step over cached block centroids
+//!   (`ServeParams.moba_block` / `moba_topk` geometry), dense sessions
+//!   use the exact fallback over the whole cache.
 
+use std::collections::HashMap;
 use std::path::PathBuf;
-use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
@@ -31,11 +51,14 @@ use anyhow::anyhow;
 
 use super::batcher::{Batch, Batcher};
 use super::metrics::Metrics;
-use super::request::{AttnKind, AttnRequest, AttnResponse, QueueStamp};
+use super::request::{
+    AttnKind, AttnRequest, AttnResponse, DecodeStep, QueueStamp, WorkItem,
+};
 use super::router::Router;
 #[allow(unused_imports)]
 use crate::attention::backend::AttentionBackend;
 use crate::attention::backend::BackendRegistry;
+use crate::attention::decode::DecodeSession;
 use crate::attention::MobaShape;
 use crate::config::ServeParams;
 use crate::runtime::{Runtime, Tensor};
@@ -49,10 +72,25 @@ enum Exec {
     Cpu(BackendRegistry),
 }
 
+/// Decode-session parameters fixed at creation time.
+struct SessionSpec {
+    kind: AttnKind,
+    d: usize,
+}
+
 enum Envelope {
     Req(AttnRequest, SyncSender<Result<AttnResponse>>),
+    Decode(DecodeStep, SyncSender<Result<AttnResponse>>),
+    SessionCreate(SessionSpec, SyncSender<Result<u64>>),
+    SessionFree(u64, SyncSender<Result<()>>),
     Shutdown,
 }
+
+/// Ids at and above this are allocated by the coordinator for decode
+/// tickets; caller-chosen prefill request ids must stay below it so the
+/// shared pending-response table can never route a decode row to a
+/// prefill waiter (or vice versa).
+pub const DECODE_ID_BASE: u64 = 1 << 62;
 
 /// A pending response ticket.
 pub struct Ticket(Receiver<Result<AttnResponse>>);
@@ -68,6 +106,9 @@ impl Ticket {
 pub struct Coordinator {
     tx: SyncSender<Envelope>,
     metrics: Arc<Metrics>,
+    /// ids for decode-step tickets; high range so they never collide
+    /// with caller-chosen prefill request ids
+    next_decode_id: AtomicU64,
     worker: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -119,7 +160,12 @@ impl Coordinator {
         boot_rx
             .recv()
             .map_err(|_| anyhow!("coordinator worker died during startup"))??;
-        Ok(Self { tx, metrics, worker: Some(worker) })
+        Ok(Self {
+            tx,
+            metrics,
+            next_decode_id: AtomicU64::new(DECODE_ID_BASE),
+            worker: Some(worker),
+        })
     }
 
     pub fn metrics(&self) -> &Metrics {
@@ -130,6 +176,12 @@ impl Coordinator {
     pub fn submit_async(&self, req: AttnRequest) -> Result<Ticket> {
         if !req.validate() {
             return Err(anyhow!("invalid request {}: shape mismatch", req.id));
+        }
+        if req.id >= DECODE_ID_BASE {
+            return Err(anyhow!(
+                "invalid request id {}: ids >= 2^62 are reserved for decode tickets",
+                req.id
+            ));
         }
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
         let (otx, orx) = sync_channel(1);
@@ -142,6 +194,66 @@ impl Coordinator {
     /// Submit and block for the response.
     pub fn submit(&self, req: AttnRequest) -> Result<AttnResponse> {
         self.submit_async(req)?.wait()
+    }
+
+    /// Open a decode session of head dim `d`. MoBA sessions route with
+    /// the `ServeParams` geometry (`moba_block` / `moba_topk`); dense
+    /// sessions decode exactly over the whole cache. Returns the
+    /// session handle for [`Coordinator::decode`] / `session_free`.
+    pub fn session_create(&self, kind: AttnKind, d: usize) -> Result<u64> {
+        if d == 0 {
+            return Err(anyhow!("decode session needs d > 0"));
+        }
+        let (otx, orx) = sync_channel(1);
+        self.tx
+            .send(Envelope::SessionCreate(SessionSpec { kind, d }, otx))
+            .map_err(|_| anyhow!("coordinator is down"))?;
+        orx.recv().map_err(|_| anyhow!("coordinator dropped the request"))?
+    }
+
+    /// Submit one decode step without blocking: append (k, v) to the
+    /// session's cache, attend q over it. Steps for one session execute
+    /// in submission order; the response's `o` is the (d,) output row
+    /// and `served_n` the session's context length after the append.
+    pub fn decode_async(
+        &self,
+        session: u64,
+        q: Vec<f32>,
+        k: Vec<f32>,
+        v: Vec<f32>,
+    ) -> Result<Ticket> {
+        let id = self.next_decode_id.fetch_add(1, Ordering::Relaxed);
+        let step = DecodeStep { id, session, q, k, v };
+        if step.q.is_empty() || step.k.len() != step.q.len() || step.v.len() != step.q.len() {
+            return Err(anyhow!("decode step {id}: q/k/v must be equal-length, non-empty rows"));
+        }
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        let (otx, orx) = sync_channel(1);
+        self.tx
+            .send(Envelope::Decode(step, otx))
+            .map_err(|_| anyhow!("coordinator is down"))?;
+        Ok(Ticket(orx))
+    }
+
+    /// Submit one decode step and block for the output row.
+    pub fn decode(
+        &self,
+        session: u64,
+        q: Vec<f32>,
+        k: Vec<f32>,
+        v: Vec<f32>,
+    ) -> Result<AttnResponse> {
+        self.decode_async(session, q, k, v)?.wait()
+    }
+
+    /// Drop a session's KV cache. Steps already queued for it will be
+    /// answered with an error; wait for outstanding tickets first.
+    pub fn session_free(&self, session: u64) -> Result<()> {
+        let (otx, orx) = sync_channel(1);
+        self.tx
+            .send(Envelope::SessionFree(session, otx))
+            .map_err(|_| anyhow!("coordinator is down"))?;
+        orx.recv().map_err(|_| anyhow!("coordinator dropped the request"))?
     }
 
     /// Graceful shutdown: drains queued work.
@@ -164,6 +276,9 @@ impl Drop for Coordinator {
 
 type Pending = Vec<(u64, SyncSender<Result<AttnResponse>>)>;
 
+/// Open decode sessions: handle -> (backend target, session state).
+type Sessions = HashMap<u64, (String, DecodeSession)>;
+
 fn worker_loop(
     exec: Exec,
     router: Router,
@@ -175,6 +290,8 @@ fn worker_loop(
     let mut batcher =
         Batcher::new(params.max_batch.min(router.heads), max_wait, params.queue_capacity);
     let mut pending: Pending = Vec::new();
+    let mut sessions: Sessions = HashMap::new();
+    let mut next_session: u64 = 1;
 
     loop {
         // wait for work or the earliest batch deadline
@@ -218,7 +335,7 @@ fn worker_loop(
                             pending.push((req.id, otx));
                             if let Err(rej) = batcher.push(req, &artifact, cap, Instant::now()) {
                                 metrics.rejected.fetch_add(1, Ordering::Relaxed);
-                                respond(&mut pending, rej.id, Err(anyhow!("queue full")));
+                                respond(&mut pending, rej.id(), Err(anyhow!("queue full")));
                             }
                         }
                         Err(e) => {
@@ -227,6 +344,66 @@ fn worker_loop(
                         }
                     }
                 }
+            }
+            Some(Envelope::Decode(step, otx)) => {
+                let sid = step.session;
+                match sessions.get(&sid) {
+                    None => {
+                        metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                        let _ = otx.send(Err(anyhow!("decode step for unknown session {sid}")));
+                    }
+                    Some((_, sess)) if !step.validate(sess.d()) => {
+                        metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                        let _ = otx.send(Err(anyhow!(
+                            "decode step {}: rows must have the session head dim d={}",
+                            step.id,
+                            sess.d()
+                        )));
+                    }
+                    Some((target, _)) => {
+                        // one lane per backend target: decode steps
+                        // batch with each other, never with prefill
+                        let lane = format!("decode:{target}");
+                        pending.push((step.id, otx));
+                        if let Err(rej) = batcher.push(step, &lane, 1, Instant::now()) {
+                            metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                            respond(&mut pending, rej.id(), Err(anyhow!("queue full")));
+                        }
+                    }
+                }
+            }
+            Some(Envelope::SessionCreate(spec, otx)) => {
+                let result = match &exec {
+                    Exec::Pjrt(_) => Err(anyhow!(
+                        "decode sessions need the CPU substrate: the compiled \
+                         PJRT kernels are prefill-only"
+                    )),
+                    Exec::Cpu(_) => router.route(spec.kind, 1).map(|(_, target)| {
+                        let id = next_session;
+                        next_session += 1;
+                        let (block, topk) = match spec.kind {
+                            AttnKind::Moba => (params.moba_block.max(1), params.moba_topk),
+                            // dense decode ignores routing; the block
+                            // size only shapes cache bookkeeping
+                            AttnKind::Dense => (params.moba_block.max(1), 0),
+                        };
+                        let sess = DecodeSession::new(spec.d, block, topk);
+                        sessions.insert(id, (target.to_string(), sess));
+                        metrics.sessions_created.fetch_add(1, Ordering::Relaxed);
+                        id
+                    }),
+                };
+                let _ = otx.send(result);
+            }
+            Some(Envelope::SessionFree(id, otx)) => {
+                let result = match sessions.remove(&id) {
+                    Some(_) => {
+                        metrics.sessions_freed.fetch_add(1, Ordering::Relaxed);
+                        Ok(())
+                    }
+                    None => Err(anyhow!("unknown decode session {id}")),
+                };
+                let _ = otx.send(result);
             }
             Some(Envelope::Shutdown) => shutdown = true,
             None => {} // deadline wake-up
@@ -240,7 +417,7 @@ fn worker_loop(
             std::iter::from_fn(|| batcher.poll(now)).collect()
         };
         for batch in batches {
-            run_batch(&exec, &router, &params, batch, &mut pending, &metrics);
+            run_batch(&exec, &router, &params, batch, &mut pending, &mut sessions, &metrics);
         }
         if shutdown {
             for (_, otx) in pending.drain(..) {
@@ -265,50 +442,105 @@ fn run_batch(
     params: &ServeParams,
     batch: Batch,
     pending: &mut Pending,
+    sessions: &mut Sessions,
     metrics: &Metrics,
 ) {
     match exec {
         Exec::Pjrt(runtime) => run_batch_pjrt(runtime, router, batch, pending, metrics),
-        Exec::Cpu(registry) => run_batch_cpu(registry, params, batch, pending, metrics),
+        Exec::Cpu(registry) => {
+            run_batch_cpu(registry, params, batch, pending, sessions, metrics)
+        }
     }
 }
 
-/// Execute a batch on the CPU attention substrate: each request runs at
-/// its native length through the [`BackendRegistry`] (no padding), so
-/// batching amortizes queueing rather than kernel launches.
+/// Execute a batch on the CPU attention substrate: prefill requests run
+/// at their native length through the [`BackendRegistry`] (no padding),
+/// decode steps append to their session's cache and attend over it —
+/// so batching amortizes queueing rather than kernel launches.
 fn run_batch_cpu(
     registry: &BackendRegistry,
     params: &ServeParams,
     batch: Batch,
     pending: &mut Pending,
+    sessions: &mut Sessions,
     metrics: &Metrics,
 ) {
     let occupancy = batch.items.len();
     metrics.batches.fetch_add(1, Ordering::Relaxed);
     metrics.batched_requests.fetch_add(occupancy as u64, Ordering::Relaxed);
-    for (req, enq) in &batch.items {
-        let result = run_cpu_request(registry, params, &batch.artifact, req);
-        let executed = Instant::now();
-        match result {
-            Ok(o) => {
-                let stamp = QueueStamp { enqueued: *enq, executed };
-                metrics.record_latency(stamp.queue_latency_s());
-                metrics.responses.fetch_add(1, Ordering::Relaxed);
-                respond(
-                    pending,
-                    req.id,
-                    Ok(AttnResponse {
-                        id: req.id,
-                        o,
-                        served_n: req.n,
-                        batch_occupancy: occupancy,
-                        queued_at: Some(stamp),
-                    }),
-                );
+    for (item, enq) in &batch.items {
+        match item {
+            WorkItem::Prefill(req) => {
+                let result = run_cpu_request(registry, params, &batch.artifact, req);
+                let executed = Instant::now();
+                match result {
+                    Ok(o) => {
+                        let stamp = QueueStamp { enqueued: *enq, executed };
+                        metrics.record_latency(stamp.queue_latency_s());
+                        metrics.responses.fetch_add(1, Ordering::Relaxed);
+                        respond(
+                            pending,
+                            req.id,
+                            Ok(AttnResponse {
+                                id: req.id,
+                                o,
+                                served_n: req.n,
+                                batch_occupancy: occupancy,
+                                queued_at: Some(stamp),
+                            }),
+                        );
+                    }
+                    Err(e) => respond(pending, req.id, Err(e)),
+                }
             }
-            Err(e) => respond(pending, req.id, Err(e)),
+            WorkItem::Decode(step) => {
+                let result = run_cpu_decode(registry, sessions, step, metrics);
+                let executed = Instant::now();
+                match result {
+                    Ok((o, served_n)) => {
+                        let stamp = QueueStamp { enqueued: *enq, executed };
+                        metrics.record_latency(stamp.queue_latency_s());
+                        metrics.responses.fetch_add(1, Ordering::Relaxed);
+                        respond(
+                            pending,
+                            step.id,
+                            Ok(AttnResponse {
+                                id: step.id,
+                                o,
+                                served_n,
+                                batch_occupancy: occupancy,
+                                queued_at: Some(stamp),
+                            }),
+                        );
+                    }
+                    Err(e) => respond(pending, step.id, Err(e)),
+                }
+            }
         }
     }
+}
+
+/// One decode step: append the token to its session's cache, then run
+/// the session backend's incremental path. Returns (output row, context
+/// length after the append).
+fn run_cpu_decode(
+    registry: &BackendRegistry,
+    sessions: &mut Sessions,
+    step: &DecodeStep,
+    metrics: &Metrics,
+) -> Result<(Vec<f32>, usize)> {
+    let (target, sess) = sessions
+        .get_mut(&step.session)
+        .ok_or_else(|| anyhow!("decode session {} was freed", step.session))?;
+    let backend = registry
+        .get(target.as_str())
+        .or_else(|| registry.get("dense"))
+        .ok_or_else(|| anyhow!("no backend available for decode target {target}"))?;
+    sess.append(&step.k, &step.v);
+    let o = backend.forward_decode(sess, &step.q);
+    metrics.decode_steps.fetch_add(1, Ordering::Relaxed);
+    metrics.decode_payload_bytes.fetch_add(step.payload_bytes(), Ordering::Relaxed);
+    Ok((o, sess.len()))
 }
 
 /// Pick the backend for one request: the router's chosen target
@@ -350,6 +582,8 @@ fn dense_shape(req: &AttnRequest) -> MobaShape {
 }
 
 /// Pack requests into the (H, N, d) kernel, execute, unpack, respond.
+/// Decode steps cannot reach this path (sessions are rejected at
+/// creation on PJRT), but are answered with an error defensively.
 fn run_batch_pjrt(
     runtime: &Runtime,
     router: &Router,
@@ -360,7 +594,21 @@ fn run_batch_pjrt(
     let h = router.heads;
     let d = router.head_dim;
     let n = batch.kernel_n;
-    let occupancy = batch.items.len();
+    let mut reqs: Vec<(&AttnRequest, Instant)> = Vec::with_capacity(batch.items.len());
+    for (item, enq) in &batch.items {
+        match item {
+            WorkItem::Prefill(r) => reqs.push((r, *enq)),
+            WorkItem::Decode(s) => respond(
+                pending,
+                s.id,
+                Err(anyhow!("decode is not served by the PJRT path")),
+            ),
+        }
+    }
+    let occupancy = reqs.len();
+    if occupancy == 0 {
+        return;
+    }
     debug_assert!(occupancy <= h);
 
     let exec = || -> Result<Vec<Tensor>> {
@@ -368,7 +616,7 @@ fn run_batch_pjrt(
         let mut q = vec![0.0f32; h * n * d];
         let mut k = vec![0.0f32; h * n * d];
         let mut v = vec![0.0f32; h * n * d];
-        for (slot, (req, _)) in batch.items.iter().enumerate() {
+        for (slot, (req, _)) in reqs.iter().enumerate() {
             let e = req.n * d;
             q[slot * n * d..slot * n * d + e].copy_from_slice(&req.q);
             k[slot * n * d..slot * n * d + e].copy_from_slice(&req.k);
@@ -390,7 +638,7 @@ fn run_batch_pjrt(
             let o = outs.into_iter().next().and_then(|t| t.into_f32().ok());
             match o {
                 Some(o) => {
-                    for (slot, (req, enq)) in batch.items.iter().enumerate() {
+                    for (slot, (req, enq)) in reqs.iter().enumerate() {
                         let e = req.n * d;
                         let out = o[slot * n * d..slot * n * d + e].to_vec();
                         let stamp = QueueStamp { enqueued: *enq, executed };
@@ -410,14 +658,14 @@ fn run_batch_pjrt(
                     }
                 }
                 None => {
-                    for (req, _) in &batch.items {
+                    for (req, _) in &reqs {
                         respond(pending, req.id, Err(anyhow!("bad kernel output")));
                     }
                 }
             }
         }
         Err(e) => {
-            for (req, _) in &batch.items {
+            for (req, _) in &reqs {
                 respond(pending, req.id, Err(anyhow!("execution failed: {e}")));
             }
         }

@@ -2,10 +2,12 @@
 //! accuracy, and the LongBench-proxy task suite — the measurement side
 //! of Tables 1–6 — plus [`substrate_eval`], which scores the CPU
 //! attention backends themselves through the
-//! [`crate::attention::backend::AttentionBackend`] trait.
+//! [`crate::attention::backend::AttentionBackend`] trait, and
+//! [`decode_eval`], which scores each backend's incremental decode
+//! path against its own prefill.
 
 mod logits;
 mod runner;
 
 pub use logits::{argmax, nll_from_logits, score_sample};
-pub use runner::{substrate_eval, EvalReport, Evaluator, SubstrateRow};
+pub use runner::{decode_eval, substrate_eval, DecodeParityRow, EvalReport, Evaluator, SubstrateRow};

@@ -74,6 +74,63 @@ pub fn substrate_eval(
     rows
 }
 
+/// One (backend × shape) decode-parity measurement from [`decode_eval`].
+#[derive(Debug, Clone)]
+pub struct DecodeParityRow {
+    pub backend: String,
+    pub n: usize,
+    pub block: usize,
+    pub topk: usize,
+    /// max |Δ| between token-by-token `forward_decode` and the same
+    /// backend's prefill `forward`, over all n rows — an implementation
+    /// deviation, not a sparsity approximation (the two must agree)
+    pub max_dev_vs_prefill: f32,
+    /// mean wall time per decode step
+    pub per_token_s: f64,
+}
+
+/// Score each supporting backend's incremental decode against its own
+/// prefill: run `forward` once, then feed the same tokens one at a time
+/// through a [`DecodeSession`](crate::attention::decode::DecodeSession)
+/// and record the worst row deviation. Dispatch goes through the trait,
+/// so newly registered backends are covered automatically.
+pub fn decode_eval(
+    registry: &BackendRegistry,
+    shapes: &[MobaShape],
+    seed: u64,
+) -> Vec<DecodeParityRow> {
+    use crate::attention::decode::DecodeSession;
+    let mut rows = Vec::new();
+    for (i, shape) in shapes.iter().enumerate() {
+        let (q, k, v) = qkv(seed.wrapping_add(i as u64), shape.n, shape.d);
+        let d = shape.d;
+        for b in registry.iter() {
+            if !b.supports(shape) {
+                continue;
+            }
+            let (prefill, _) = b.forward(shape, &q, &k, &v);
+            let mut sess = DecodeSession::new(d, shape.block, shape.topk);
+            let mut max_dev = 0.0f32;
+            let t0 = Instant::now();
+            for t in 0..shape.n {
+                sess.append(&k[t * d..(t + 1) * d], &v[t * d..(t + 1) * d]);
+                let o = b.forward_decode(&mut sess, &q[t * d..(t + 1) * d]);
+                max_dev = max_dev.max(max_abs_diff(&o, &prefill[t * d..(t + 1) * d]));
+            }
+            let per_token_s = t0.elapsed().as_secs_f64() / shape.n as f64;
+            rows.push(DecodeParityRow {
+                backend: b.name().to_string(),
+                n: shape.n,
+                block: shape.block,
+                topk: shape.topk,
+                max_dev_vs_prefill: max_dev,
+                per_token_s,
+            });
+        }
+    }
+    rows
+}
+
 /// Aggregated evaluation results for one variant.
 #[derive(Debug, Clone, Default)]
 pub struct EvalReport {
@@ -262,6 +319,24 @@ mod tests {
         let rows = substrate_eval(&reg, &[MobaShape::new(128, 8, 16, 8)], 9);
         for r in &rows {
             assert!(r.max_dev_vs_dense < 5e-4, "{} dev {}", r.backend, r.max_dev_vs_dense);
+        }
+    }
+
+    #[test]
+    fn decode_eval_shows_parity_for_every_backend() {
+        let reg = BackendRegistry::with_defaults();
+        let shapes = vec![MobaShape::new(96, 8, 16, 2), MobaShape::new(64, 4, 16, 4)];
+        let rows = decode_eval(&reg, &shapes, 21);
+        assert_eq!(rows.len(), reg.len() * shapes.len());
+        for r in &rows {
+            assert!(
+                r.max_dev_vs_prefill < 1e-4,
+                "{} N={} dev {:.2e}",
+                r.backend,
+                r.n,
+                r.max_dev_vs_prefill
+            );
+            assert!(r.per_token_s >= 0.0);
         }
     }
 

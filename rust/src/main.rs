@@ -10,7 +10,7 @@
 
 use std::path::{Path, PathBuf};
 
-use flash_moba::bench_harness::{figures, snr_harness, tables};
+use flash_moba::bench_harness::{decode as decode_bench, figures, snr_harness, tables};
 use flash_moba::config::AppConfig;
 use flash_moba::coordinator::{AttnKind, AttnRequest, Coordinator};
 use flash_moba::data::corpus::{Corpus, CorpusConfig};
@@ -32,10 +32,12 @@ COMMANDS:
   eval                         evaluate a variant (--variant, --ckpt)
   bench <target>               regenerate a paper table/figure:
                                table1..table6, fig2, fig3, fig4, snr,
-                               parity, ablate-tiles, all (--quick, --steps N)
-                               (parity/fig3/fig4/snr/ablate-tiles need no
-                               artifacts: they run the CPU substrate
-                               through the AttentionBackend registry)
+                               parity, decode, ablate-tiles, all
+                               (--quick, --steps N)
+                               (parity/decode/fig3/fig4/snr/ablate-tiles
+                               need no artifacts: they run the CPU
+                               substrate through the AttentionBackend
+                               registry)
   serve-demo                   run the serving coordinator demo (--requests N)
 
 GLOBAL OPTIONS:
@@ -172,14 +174,15 @@ fn bench(cfg: &AppConfig, target: &str, quick: bool) -> Result<()> {
             "fig4" => figures::run_fig4(cfg, if quick { 4096 } else { 16384 }),
             "snr" => snr_harness::run_snr(cfg, if quick { 1000 } else { 4000 }),
             "parity" => tables::run_table_parity(cfg),
+            "decode" => decode_bench::run_decode(cfg, quick),
             "ablate-tiles" => figures::run_tile_ablation(cfg, if quick { 2048 } else { 8192 }),
             other => Err(anyhow::anyhow!("unknown bench target {other}")),
         }
     };
     if target == "all" {
         for t in [
-            "parity", "snr", "fig3", "fig4", "ablate-tiles", "table1", "table3", "table5",
-            "fig2", "table2", "table4", "table6",
+            "parity", "decode", "snr", "fig3", "fig4", "ablate-tiles", "table1", "table3",
+            "table5", "fig2", "table2", "table4", "table6",
         ] {
             println!("\n######## bench {t} ########");
             run_one(cfg, t)?;

@@ -1,0 +1,205 @@
+//! Decode↔prefill parity suite: feeding tokens one at a time through a
+//! `DecodeSession` must reproduce the prefill `forward` outputs
+//! row-for-row, for every registered backend, within 1e-4.
+//!
+//! Rows are compared at *every* step, so each intermediate position —
+//! including every partial-own-block position between block boundaries —
+//! is held against the corresponding prefill row. Geometries the
+//! backends' prefill cannot express (n not divisible by block, topk=0
+//! for the sparse backends) are held against the f64 `decode_reference`
+//! oracle and, where attention is dense-equivalent, the textbook
+//! oracle.
+
+use flash_moba::attention::backend::{AttentionBackend, BackendRegistry};
+use flash_moba::attention::decode::{decode_reference, DecodeSession};
+use flash_moba::attention::dense::naive_attention;
+use flash_moba::attention::kconv::kconv;
+use flash_moba::attention::testutil::{max_abs_diff, qkv, Rng};
+use flash_moba::attention::MobaShape;
+
+const TOL: f32 = 1e-4;
+
+/// Token-by-token decode of (q, k, v) through `backend`, asserting each
+/// output row against `expect` (an (n, d) row-major tensor).
+fn assert_decode_rows(
+    backend: &dyn AttentionBackend,
+    mut sess: DecodeSession,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    expect: &[f32],
+    label: &str,
+) {
+    let d = sess.d();
+    let n = expect.len() / d;
+    for t in 0..n {
+        sess.append(&k[t * d..(t + 1) * d], &v[t * d..(t + 1) * d]);
+        let o = backend.forward_decode(&mut sess, &q[t * d..(t + 1) * d]);
+        assert_eq!(o.len(), d, "{label}: row {t} has wrong width");
+        let dev = max_abs_diff(&o, &expect[t * d..(t + 1) * d]);
+        assert!(
+            dev < TOL,
+            "{label}: {} decode deviates from prefill by {dev:.2e} at row {t}/{n}",
+            backend.name()
+        );
+    }
+    assert_eq!(sess.len(), n);
+}
+
+/// The block-aligned grid: every backend that supports the shape must
+/// reproduce its own prefill. Covers sparse routing, full routing
+/// (topk >= n_blocks), and topk == n_blocks exactly.
+#[test]
+fn decode_matches_prefill_for_every_backend_on_the_grid() {
+    let shapes = [
+        MobaShape::new(64, 4, 16, 1),
+        MobaShape::new(128, 16, 16, 2),
+        MobaShape::new(96, 8, 16, 6),    // fully routed
+        MobaShape::new(128, 8, 16, 8),   // topk == n_blocks
+        MobaShape::new(160, 8, 32, 12),  // topk > n_blocks
+        MobaShape::new(256, 8, 32, 3),
+    ];
+    let registry = BackendRegistry::with_defaults();
+    for (i, shape) in shapes.iter().enumerate() {
+        let (q, k, v) = qkv(0xDEC0 + i as u64, shape.n, shape.d);
+        for b in registry.iter() {
+            if !b.supports(shape) {
+                continue;
+            }
+            let (prefill, _) = b.forward(shape, &q, &k, &v);
+            let sess = DecodeSession::new(shape.d, shape.block, shape.topk);
+            assert_decode_rows(b, sess, &q, &k, &v, &prefill, &format!("shape {shape:?}"));
+        }
+    }
+}
+
+/// n not divisible by block: the dense backend still expresses this as
+/// prefill (routing fields are ignored), so decode with a *ragged*
+/// cache must match it row-for-row through the real backend path.
+#[test]
+fn ragged_context_matches_dense_prefill() {
+    let registry = BackendRegistry::with_defaults();
+    let dense = registry.get("dense").unwrap();
+    for (n, d, block) in [(100, 8, 16), (70, 4, 32), (33, 16, 8)] {
+        let (q, k, v) = qkv(0xAA + n as u64, n, d);
+        // single-block geometry: valid for any n, ignored by dense
+        let shape = MobaShape { n, d, block: n, topk: 0 };
+        let (prefill, _) = dense.forward(&shape, &q, &k, &v);
+        let sess = DecodeSession::new(d, block, 0);
+        assert_decode_rows(dense, sess, &q, &k, &v, &prefill, &format!("ragged n={n}"));
+    }
+}
+
+/// n not divisible by block, sparse routing: the sparse backends'
+/// prefill predicate rejects ragged shapes, so their decode is held
+/// against the f64 routing oracle (complete strictly-past blocks only,
+/// partial own block causal).
+#[test]
+fn ragged_context_matches_routing_oracle_for_sparse_backends() {
+    let registry = BackendRegistry::with_defaults();
+    for (n, d, block, topk) in [(100, 8, 16, 2), (150, 4, 32, 1), (90, 8, 16, 3)] {
+        let (q, k, v) = qkv(0xBB + n as u64, n, d);
+        let oracle = decode_reference(&q, &k, &v, n, d, block, topk);
+        for name in ["moba_naive", "flash_moba"] {
+            let b = registry.get(name).unwrap();
+            let sess = DecodeSession::new(d, block, topk);
+            assert_decode_rows(b, sess, &q, &k, &v, &oracle, &format!("ragged n={n} {name}"));
+        }
+    }
+}
+
+/// topk = 0: own-block-only attention. The sparse backends' prefill
+/// rejects it, so decode is held against the oracle.
+#[test]
+fn topk_zero_attends_own_block_only() {
+    let (n, d, block) = (64, 4, 16);
+    let (q, k, v) = qkv(0xCC, n, d);
+    let oracle = decode_reference(&q, &k, &v, n, d, block, 0);
+    let registry = BackendRegistry::with_defaults();
+    for name in ["moba_naive", "flash_moba"] {
+        let b = registry.get(name).unwrap();
+        let sess = DecodeSession::new(d, block, 0);
+        assert_decode_rows(b, sess, &q, &k, &v, &oracle, &format!("topk=0 {name}"));
+    }
+    // sanity: with topk=0 the first row of each block attends only itself
+    let mut sess = DecodeSession::new(d, block, 0);
+    for t in 0..=block {
+        sess.append(&k[t * d..(t + 1) * d], &v[t * d..(t + 1) * d]);
+        if t == block {
+            // first token of block 1: softmax over one token == its value
+            let o = sess.decode_routed(&q[t * d..(t + 1) * d]);
+            assert!(max_abs_diff(&o, &v[t * d..(t + 1) * d]) < 1e-6);
+        }
+    }
+}
+
+/// Fully-routed decode equals the textbook dense oracle — the MoBA ==
+/// dense degenerate case, token by token.
+#[test]
+fn fully_routed_decode_equals_dense_oracle() {
+    let (n, d, block) = (128, 8, 16);
+    let (q, k, v) = qkv(0xDD, n, d);
+    let (oracle, _) = naive_attention(&q, &k, &v, n, d);
+    let registry = BackendRegistry::with_defaults();
+    for b in registry.iter() {
+        let sess = DecodeSession::new(d, block, n / block);
+        assert_decode_rows(b, sess, &q, &k, &v, &oracle, "fully routed vs dense oracle");
+    }
+}
+
+/// kconv path: the session's streaming ring-buffer kconv must equal the
+/// batch `kconv()`, and decode over the convolved cache must reproduce
+/// each backend's prefill on the batch-convolved keys.
+#[test]
+fn kconv_streaming_path_matches_batch_prefill() {
+    let shape = MobaShape::new(128, 8, 16, 2);
+    let (n, d) = (shape.n, shape.d);
+    let width = 4;
+    let (q, k, v) = qkv(0xEE, n, d);
+    let mut rng = Rng::new(0xEF);
+    let w = rng.normal_vec(width * d);
+    let k2 = kconv(&k, &w, n, d, width);
+
+    // the cache stores exactly the batch-convolved keys
+    let mut probe = DecodeSession::with_kconv(d, shape.block, shape.topk, &w, width);
+    for t in 0..n {
+        probe.append(&k[t * d..(t + 1) * d], &v[t * d..(t + 1) * d]);
+    }
+    assert_eq!(probe.cache().keys(), &k2[..], "streaming kconv != batch kconv");
+
+    // and every backend's decode over raw keys + streaming kconv equals
+    // its prefill over the batch-convolved keys
+    let registry = BackendRegistry::with_defaults();
+    for b in registry.iter() {
+        if !b.supports(&shape) {
+            continue;
+        }
+        let (prefill, _) = b.forward(&shape, &q, &k2, &v);
+        let sess = DecodeSession::with_kconv(d, shape.block, shape.topk, &w, width);
+        assert_decode_rows(b, sess, &q, &k, &v, &prefill, "kconv");
+    }
+}
+
+/// Randomized sweep: block-aligned shapes, every backend, fresh seeds —
+/// the property-flavored closure over the grid above.
+#[test]
+fn randomized_shapes_hold_parity() {
+    let registry = BackendRegistry::with_defaults();
+    for seed in 0..10u64 {
+        let mut rng = Rng::new(0x5EED + seed);
+        let d = [4usize, 8, 16][rng.below(3)];
+        let block = [8usize, 16, 32][rng.below(3)];
+        let nb = 2 + rng.below(5);
+        let topk = rng.below(nb + 2); // 0..=nb+1: sparse through over-full
+        let shape = MobaShape::new(nb * block, d, block, topk);
+        let (q, k, v) = qkv(0x900 + seed, shape.n, shape.d);
+        for b in registry.iter() {
+            if !b.supports(&shape) {
+                continue;
+            }
+            let (prefill, _) = b.forward(&shape, &q, &k, &v);
+            let sess = DecodeSession::new(d, block, topk);
+            assert_decode_rows(b, sess, &q, &k, &v, &prefill, &format!("seed {seed} {shape:?}"));
+        }
+    }
+}

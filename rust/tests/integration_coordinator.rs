@@ -229,6 +229,10 @@ fn cpu_substrate_rejects_invalid_and_batches_partial() {
         v: vec![0.0; 3],
     };
     assert!(coord.submit(bad).is_err());
+    // ids in the decode-ticket range are rejected so the shared pending
+    // table can never cross-route a prefill and a decode response
+    let reserved = req(flash_moba::coordinator::DECODE_ID_BASE, AttnKind::Moba, 8, 5);
+    assert!(coord.submit(reserved).is_err());
     // a lone request flushes on the deadline with occupancy 1
     let resp = coord.submit(req(9, AttnKind::Moba, 256, 5)).unwrap();
     assert_eq!(resp.batch_occupancy, 1);
@@ -250,4 +254,205 @@ fn cpu_substrate_shutdown_drains_pending_work() {
     coord.shutdown();
     assert!(t1.wait().is_ok());
     assert!(t2.wait().is_ok());
+}
+
+// --------------------------------------------------------------------
+// Decode-session suite: the session API on the CPU substrate.
+// --------------------------------------------------------------------
+
+/// Streaming a MoBA session token by token reproduces the prefill
+/// FlashMoBA forward row-for-row — the serving-level decode↔prefill
+/// parity check (the kernel-level suite is rust/tests/decode_parity.rs).
+#[test]
+fn decode_session_matches_prefill_through_the_coordinator() {
+    let serve = ServeParams {
+        max_batch: 4,
+        max_wait_ms: 1,
+        queue_capacity: 512,
+        moba_block: 32,
+        moba_topk: 2,
+        ..Default::default()
+    };
+    let coord = Coordinator::start(no_artifacts_dir(), serve).unwrap();
+    let (n, d) = (256, 64);
+    let mut rng = Rng::new(0xD1);
+    let q: Vec<f32> = rng.normal_vec(n * d);
+    let k: Vec<f32> = rng.normal_vec(n * d);
+    let v: Vec<f32> = rng.normal_vec(n * d);
+
+    let session = coord.session_create(AttnKind::Moba, d).unwrap();
+    let tickets: Vec<_> = (0..n)
+        .map(|t| {
+            coord
+                .decode_async(
+                    session,
+                    q[t * d..(t + 1) * d].to_vec(),
+                    k[t * d..(t + 1) * d].to_vec(),
+                    v[t * d..(t + 1) * d].to_vec(),
+                )
+                .unwrap()
+        })
+        .collect();
+
+    let shape = MobaShape::new(n, d, 32, 2);
+    let expect = flash_moba_forward(&q, &k, &v, shape, FlashMobaConfig::default());
+    for (t, ticket) in tickets.into_iter().enumerate() {
+        let resp = ticket.wait().unwrap();
+        assert_eq!(resp.served_n, t + 1, "context length after step {t}");
+        assert_eq!(resp.o.len(), d);
+        let dev = max_abs_diff(&resp.o, &expect.o[t * d..(t + 1) * d]);
+        assert!(dev < 1e-4, "row {t} deviates by {dev:.2e}");
+    }
+    assert_eq!(coord.metrics().decode_steps.load(std::sync::atomic::Ordering::Relaxed), n as u64);
+    assert_eq!(coord.metrics().active_sessions(), 1);
+    coord.session_free(session).unwrap();
+    assert_eq!(coord.metrics().active_sessions(), 0);
+    coord.shutdown();
+}
+
+/// Dense sessions decode the textbook oracle, at ragged lengths too.
+#[test]
+fn decode_session_dense_matches_oracle() {
+    let coord = Coordinator::start(
+        no_artifacts_dir(),
+        ServeParams { max_batch: 2, max_wait_ms: 1, queue_capacity: 256, ..Default::default() },
+    )
+    .unwrap();
+    let (n, d) = (100, 64); // not block-aligned on purpose
+    let mut rng = Rng::new(0xD2);
+    let q: Vec<f32> = rng.normal_vec(n * d);
+    let k: Vec<f32> = rng.normal_vec(n * d);
+    let v: Vec<f32> = rng.normal_vec(n * d);
+    let (oracle, _) = naive_attention(&q, &k, &v, n, d);
+
+    let session = coord.session_create(AttnKind::Dense, d).unwrap();
+    for t in 0..n {
+        let resp = coord
+            .decode(
+                session,
+                q[t * d..(t + 1) * d].to_vec(),
+                k[t * d..(t + 1) * d].to_vec(),
+                v[t * d..(t + 1) * d].to_vec(),
+            )
+            .unwrap();
+        let dev = max_abs_diff(&resp.o, &oracle[t * d..(t + 1) * d]);
+        assert!(dev < 1e-4, "row {t} deviates by {dev:.2e}");
+    }
+    coord.session_free(session).unwrap();
+    coord.shutdown();
+}
+
+/// Regression: a decode step moves O(d) queue payload regardless of the
+/// session's context length — streaming 512 tokens accounts exactly
+/// 512 · 3·d·4 bytes, with no O(n·d) re-sends of the cached K/V.
+#[test]
+fn decode_steps_never_copy_the_cached_context() {
+    let coord = Coordinator::start(
+        no_artifacts_dir(),
+        ServeParams { max_batch: 8, max_wait_ms: 1, queue_capacity: 1024, ..Default::default() },
+    )
+    .unwrap();
+    let d = 64;
+    let steps = 512usize;
+    let mut rng = Rng::new(0xD3);
+    let session = coord.session_create(AttnKind::Moba, d).unwrap();
+    let tickets: Vec<_> = (0..steps)
+        .map(|_| {
+            coord
+                .decode_async(session, rng.normal_vec(d), rng.normal_vec(d), rng.normal_vec(d))
+                .unwrap()
+        })
+        .collect();
+    for t in tickets {
+        assert!(t.wait().is_ok());
+    }
+    let moved = coord
+        .metrics()
+        .decode_payload_bytes
+        .load(std::sync::atomic::Ordering::Relaxed);
+    // exactly 3 d-length f32 rows per step: context length never leaks
+    // into the per-step queue traffic
+    assert_eq!(moved, (steps * 3 * d * 4) as u64);
+    coord.session_free(session).unwrap();
+    coord.shutdown();
+}
+
+/// Session lifecycle errors: unknown sessions are rejected on decode
+/// and free; freeing twice fails; steps after free fail.
+#[test]
+fn decode_session_lifecycle_errors() {
+    let coord = Coordinator::start(
+        no_artifacts_dir(),
+        ServeParams { max_batch: 2, max_wait_ms: 1, queue_capacity: 64, ..Default::default() },
+    )
+    .unwrap();
+    let d = 16;
+    // unknown session
+    assert!(coord.decode(999, vec![0.0; d], vec![0.0; d], vec![0.0; d]).is_err());
+    assert!(coord.session_free(999).is_err());
+    // wrong head dim is rejected before touching the cache
+    let session = coord.session_create(AttnKind::Moba, d).unwrap();
+    assert!(coord.decode(session, vec![0.0; d + 1], vec![0.0; d + 1], vec![0.0; d + 1]).is_err());
+    // a valid step still works afterwards
+    assert!(coord.decode(session, vec![0.1; d], vec![0.1; d], vec![0.1; d]).is_ok());
+    // free, then everything on the handle fails
+    coord.session_free(session).unwrap();
+    assert!(coord.decode(session, vec![0.0; d], vec![0.0; d], vec![0.0; d]).is_err());
+    assert!(coord.session_free(session).is_err());
+    coord.shutdown();
+}
+
+/// Two interleaved sessions stay isolated: each reproduces its own
+/// prefill despite alternating steps through the same decode lane.
+#[test]
+fn interleaved_sessions_stay_isolated() {
+    let serve = ServeParams {
+        max_batch: 4,
+        max_wait_ms: 1,
+        queue_capacity: 512,
+        moba_block: 16,
+        moba_topk: 1,
+        ..Default::default()
+    };
+    let coord = Coordinator::start(no_artifacts_dir(), serve).unwrap();
+    let (n, d) = (64, 32);
+    let mut rng = Rng::new(0xD4);
+    let mk = |rng: &mut Rng| -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        (rng.normal_vec(n * d), rng.normal_vec(n * d), rng.normal_vec(n * d))
+    };
+    let (qa, ka, va) = mk(&mut rng);
+    let (qb, kb, vb) = mk(&mut rng);
+    let sa = coord.session_create(AttnKind::Moba, d).unwrap();
+    let sb = coord.session_create(AttnKind::Moba, d).unwrap();
+    assert_ne!(sa, sb);
+
+    let mut tickets = Vec::new();
+    for t in 0..n {
+        for (s, q, k, v) in [(sa, &qa, &ka, &va), (sb, &qb, &kb, &vb)] {
+            tickets.push((
+                s,
+                t,
+                coord
+                    .decode_async(
+                        s,
+                        q[t * d..(t + 1) * d].to_vec(),
+                        k[t * d..(t + 1) * d].to_vec(),
+                        v[t * d..(t + 1) * d].to_vec(),
+                    )
+                    .unwrap(),
+            ));
+        }
+    }
+    let shape = MobaShape::new(n, d, 16, 1);
+    let ea = flash_moba_forward(&qa, &ka, &va, shape, FlashMobaConfig::default());
+    let eb = flash_moba_forward(&qb, &kb, &vb, shape, FlashMobaConfig::default());
+    for (s, t, ticket) in tickets {
+        let resp = ticket.wait().unwrap();
+        let expect = if s == sa { &ea.o } else { &eb.o };
+        let dev = max_abs_diff(&resp.o, &expect[t * d..(t + 1) * d]);
+        assert!(dev < 1e-4, "session {s} row {t} deviates by {dev:.2e}");
+    }
+    coord.session_free(sa).unwrap();
+    coord.session_free(sb).unwrap();
+    coord.shutdown();
 }

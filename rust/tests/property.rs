@@ -7,6 +7,7 @@ use std::time::{Duration, Instant};
 
 use flash_moba::attention::backend::{check_shape_parity, BackendRegistry, ParityTolerance};
 use flash_moba::attention::centroid::centroids;
+use flash_moba::attention::decode::KvCache;
 use flash_moba::attention::dense::{flash_attention, naive_attention};
 use flash_moba::attention::flash_moba::{flash_moba_forward, FlashMobaConfig};
 use flash_moba::attention::moba_naive::{moba_naive_forward, moba_reference};
@@ -14,7 +15,7 @@ use flash_moba::attention::testutil::{max_abs_diff, qkv, Rng};
 use flash_moba::attention::topk::{naive_topk, same_selection, tiled_topk};
 use flash_moba::attention::varlen::build_varlen;
 use flash_moba::attention::MobaShape;
-use flash_moba::coordinator::{AttnKind, AttnRequest, Batcher};
+use flash_moba::coordinator::{AttnKind, AttnRequest, Batcher, DecodeStep};
 use flash_moba::util::json::Json;
 
 const CASES: u64 = 24;
@@ -139,9 +140,9 @@ fn prop_batcher_invariants() {
                 assert!(batch.items.len() <= max_batch, "seed={seed}");
                 // FIFO within the lane
                 let last = last_id_per_lane.entry(batch.artifact.clone()).or_insert(0u64);
-                for (req, _) in &batch.items {
-                    assert!(req.id >= *last, "fifo violated seed={seed}");
-                    *last = req.id;
+                for (item, _) in &batch.items {
+                    assert!(item.id() >= *last, "fifo violated seed={seed}");
+                    *last = item.id();
                 }
                 emitted += batch.items.len();
             }
@@ -223,6 +224,137 @@ fn prop_backend_parity_harness() {
         let full = MobaShape::new(shape.n, shape.d, shape.block, shape.n_blocks());
         check_shape_parity(&registry, full, 200 + seed, &tol)
             .unwrap_or_else(|e| panic!("seed={seed} (full routing) {e}"));
+    }
+}
+
+/// KvCache invariants under randomized append/route sequences: the
+/// centroid of every block equals the mean of its stored keys, block
+/// count == ceil(len / block), and routed index sets are sorted,
+/// deduplicated, causal, and always include the current block.
+#[test]
+fn prop_kv_cache_invariants() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(11_000 + seed);
+        let d = [3usize, 4, 8, 16][rng.below(4)];
+        let block = [4usize, 8, 16, 32][rng.below(4)];
+        let mut cache = if rng.uniform() < 0.5 {
+            let width = 1 + rng.below(5);
+            let w = rng.normal_vec(width * d);
+            KvCache::with_kconv(d, block, &w, width)
+        } else {
+            KvCache::new(d, block)
+        };
+        assert!(cache.is_empty());
+        let total = 1 + rng.below(120);
+        for t in 0..total {
+            cache.append(&rng.normal_vec(d), &rng.normal_vec(d));
+            assert_eq!(cache.len(), t + 1, "seed={seed}");
+            assert_eq!(cache.num_blocks(), (t + 1).div_ceil(block), "seed={seed}");
+            assert_eq!(cache.complete_blocks(), (t + 1) / block, "seed={seed}");
+            if rng.uniform() < 0.3 {
+                let q = rng.normal_vec(d);
+                let topk = rng.below(6);
+                let blocks = cache.route(&q, topk);
+                let own = t / block;
+                // strictly ascending == sorted + deduplicated
+                assert!(
+                    blocks.windows(2).all(|w| w[0] < w[1]),
+                    "seed={seed} t={t} {blocks:?}"
+                );
+                assert_eq!(*blocks.last().unwrap(), own, "own block missing seed={seed}");
+                assert!(blocks.len() <= topk + 1, "seed={seed}");
+                // every routed (non-own) block is complete and strictly past
+                for &bb in &blocks[..blocks.len() - 1] {
+                    assert!(bb < own, "non-causal block seed={seed}");
+                    assert_eq!(cache.block_len(bb), block, "partial block routed seed={seed}");
+                }
+            }
+        }
+        // centroid == mean of the stored (post-kconv) keys, per block
+        for bb in 0..cache.num_blocks() {
+            let cnt = cache.block_len(bb);
+            let cen = cache.centroid(bb);
+            for c in 0..d {
+                let mean: f32 = (0..cnt)
+                    .map(|r| cache.keys()[(bb * block + r) * d + c])
+                    .sum::<f32>()
+                    / cnt as f32;
+                assert!(
+                    (cen[c] - mean).abs() < 1e-4,
+                    "seed={seed} block={bb} dim={c}: {} vs {}",
+                    cen[c],
+                    mean
+                );
+            }
+        }
+    }
+}
+
+/// Batcher under random arrival times: poll never returns more than
+/// max_batch, nothing is held past max_wait once polled, and len()
+/// stays equal to enqueued-minus-flushed throughout.
+#[test]
+fn prop_batcher_random_arrival_deadlines() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(12_000 + seed);
+        let max_batch = 1 + rng.below(5);
+        let wait_ms = 1 + rng.below(40) as u64;
+        let cap = 4 + rng.below(48);
+        let mut b = Batcher::new(max_batch, Duration::from_millis(wait_ms), cap);
+        let t0 = Instant::now();
+        let mut now = t0;
+        let mut accepted = 0usize;
+        let mut emitted = 0usize;
+        let lanes = ["a", "b", "decode:x"];
+        for i in 0..100u64 {
+            now += Duration::from_millis(rng.below(12) as u64);
+            if rng.uniform() < 0.7 {
+                let lane = lanes[rng.below(3)];
+                let ok = if lane.starts_with("decode") {
+                    let step = DecodeStep {
+                        id: i,
+                        session: 1,
+                        q: vec![0.0; 4],
+                        k: vec![0.0; 4],
+                        v: vec![0.0; 4],
+                    };
+                    b.push(step, lane, 1, now).is_ok()
+                } else {
+                    let req = AttnRequest {
+                        id: i,
+                        kind: AttnKind::Moba,
+                        n: 4,
+                        d: 2,
+                        q: vec![0.0; 8],
+                        k: vec![0.0; 8],
+                        v: vec![0.0; 8],
+                    };
+                    b.push(req, lane, 8, now).is_ok()
+                };
+                if ok {
+                    accepted += 1;
+                }
+            }
+            if rng.uniform() < 0.8 {
+                while let Some(batch) = b.poll(now) {
+                    assert!(batch.items.len() <= max_batch, "seed={seed}");
+                    assert!(batch.items.len() <= b.max_batch());
+                    emitted += batch.items.len();
+                }
+                // after draining, nothing still queued is past its deadline
+                if let Some(dl) = b.next_deadline() {
+                    assert!(dl > now, "request held past max_wait seed={seed}");
+                }
+            }
+            assert_eq!(b.len(), accepted - emitted, "len drifted seed={seed}");
+            assert!(b.len() <= cap, "seed={seed}");
+        }
+        for batch in b.flush_all() {
+            assert!(batch.items.len() <= max_batch);
+            emitted += batch.items.len();
+        }
+        assert_eq!(accepted, emitted, "lost or duplicated work seed={seed}");
+        assert!(b.is_empty());
     }
 }
 
