@@ -12,7 +12,7 @@ use std::time::Instant;
 use flash_moba::attention::backend::{self, BackendRegistry, ParityTolerance};
 use flash_moba::attention::dense::naive_attention;
 use flash_moba::attention::testutil::{max_abs_diff, qkv};
-use flash_moba::attention::MobaShape;
+use flash_moba::attention::{ExecCtx, MobaShape};
 
 fn main() {
     let args: Vec<String> = std::env::args().collect();
@@ -24,11 +24,14 @@ fn main() {
         eprintln!("invalid geometry: n={n} must divide into blocks of {block}");
         std::process::exit(2);
     };
+    let ctx = ExecCtx::global();
     let registry = BackendRegistry::with_defaults();
     println!(
-        "registered backends: {:?}   (shape: N={n}, d=64, B={block}, k={topk}, density {:.2})\n",
+        "registered backends: {:?}   (shape: N={n}, d=64, B={block}, k={topk}, \
+         density {:.2}, {} threads)\n",
         registry.names(),
-        shape.density()
+        shape.density(),
+        ctx.threads()
     );
 
     let (q, k, v) = qkv(42, shape.n, shape.d);
@@ -41,7 +44,7 @@ fn main() {
             continue;
         }
         let t0 = Instant::now();
-        let (o, st) = b.forward(&shape, &q, &k, &v);
+        let (o, st) = b.forward(ctx, &shape, &q, &k, &v);
         let el = t0.elapsed().as_secs_f64();
         if b.name() == "dense" {
             dense_time = Some(el);

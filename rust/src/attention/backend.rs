@@ -9,14 +9,21 @@
 //! (varlen batching, kconv-routed selection, adaptive block sizes) plug
 //! in by registering one object — and inherit the parity harness, the
 //! figure sweeps and the serving router for free.
+//!
+//! Every call takes an [`ExecCtx`]: the shared thread pool the kernels
+//! partition their work over. Consumers hand one pool to all backends
+//! (the coordinator's worker, the bench harness, the evaluators) rather
+//! than each spawning its own; results are bit-identical at any worker
+//! count (the determinism contract of `crate::util::pool`).
 
 use super::decode::DecodeSession;
-use super::dense::{flash_attention, naive_attention};
-use super::flash_moba::{flash_moba_forward, FlashMobaConfig};
-use super::moba_naive::moba_naive_forward;
+use super::dense::{flash_attention_ctx, naive_attention};
+use super::flash_moba::{flash_moba_forward_ctx, FlashMobaConfig};
+use super::moba_naive::moba_naive_forward_ctx;
 use super::stats::StageStats;
 use super::testutil::{max_abs_diff, qkv};
 use super::MobaShape;
+use crate::util::pool::ExecCtx;
 
 /// A single-head causal attention implementation.
 ///
@@ -40,10 +47,22 @@ pub trait AttentionBackend: Send + Sync {
         false
     }
 
-    /// Run the forward pass. Returns the (n, d) output and the stage
-    /// timings / workspace accounting of the run.
-    fn forward(&self, shape: &MobaShape, q: &[f32], k: &[f32], v: &[f32])
-        -> (Vec<f32>, StageStats);
+    /// Run the forward pass on `ctx`'s thread pool. Returns the (n, d)
+    /// output and the stage timings / workspace accounting of the run.
+    ///
+    /// Contract: the output is bit-identical for any `ctx.threads()` —
+    /// implementations parallelize by partitioning independent work
+    /// units, never by reordering reductions (asserted for every
+    /// registered backend by the determinism property suite and the CI
+    /// `MOBA_THREADS` matrix).
+    fn forward(
+        &self,
+        ctx: &ExecCtx,
+        shape: &MobaShape,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+    ) -> (Vec<f32>, StageStats);
 
     /// One autoregressive decode step: attention of `q_t` (the query at
     /// the session's current position, i.e. its last appended token)
@@ -54,8 +73,16 @@ pub trait AttentionBackend: Send + Sync {
     /// decode parity suite asserts this for every registered backend).
     /// The default is the exact dense fallback over everything cached —
     /// correct for exact backends; sparse backends override with the
-    /// routed path.
-    fn forward_decode(&self, session: &mut DecodeSession, q_t: &[f32]) -> Vec<f32> {
+    /// routed path. A decode step is a single O((k+1)·B·d) row, below
+    /// the threshold where fan-out pays, so implementations run serial
+    /// regardless of `ctx` — the parameter keeps the call convention
+    /// uniform (one pool per consumer) for heavier future backends.
+    fn forward_decode(
+        &self,
+        _ctx: &ExecCtx,
+        session: &mut DecodeSession,
+        q_t: &[f32],
+    ) -> Vec<f32> {
         session.decode_dense(q_t)
     }
 }
@@ -89,14 +116,16 @@ impl AttentionBackend for DenseBackend {
 
     fn forward(
         &self,
+        ctx: &ExecCtx,
         shape: &MobaShape,
         q: &[f32],
         k: &[f32],
         v: &[f32],
     ) -> (Vec<f32>, StageStats) {
-        let mut st = StageStats::new();
-        let (o, _lse, ws) =
-            st.time("fwd", || flash_attention(q, k, v, shape.n, shape.d, self.br, self.bc));
+        let mut st = StageStats::for_ctx(ctx);
+        let (o, _lse, ws) = st.time("fwd", || {
+            flash_attention_ctx(ctx, q, k, v, shape.n, shape.d, self.br, self.bc)
+        });
         st.add_workspace(ws);
         (o, st)
     }
@@ -118,12 +147,13 @@ impl AttentionBackend for MobaNaiveBackend {
 
     fn forward(
         &self,
+        ctx: &ExecCtx,
         shape: &MobaShape,
         q: &[f32],
         k: &[f32],
         v: &[f32],
     ) -> (Vec<f32>, StageStats) {
-        let (o, _indices, st) = moba_naive_forward(q, k, v, *shape);
+        let (o, _indices, st) = moba_naive_forward_ctx(ctx, q, k, v, *shape);
         (o, st)
     }
 
@@ -131,7 +161,12 @@ impl AttentionBackend for MobaNaiveBackend {
     /// is no five-stage pipeline to reproduce — the selected block set
     /// is identical to the prefill gating, so the routed single-row
     /// path *is* this backend's decode semantics.
-    fn forward_decode(&self, session: &mut DecodeSession, q_t: &[f32]) -> Vec<f32> {
+    fn forward_decode(
+        &self,
+        _ctx: &ExecCtx,
+        session: &mut DecodeSession,
+        q_t: &[f32],
+    ) -> Vec<f32> {
         session.decode_routed(q_t)
     }
 }
@@ -159,19 +194,25 @@ impl AttentionBackend for FlashMobaBackend {
 
     fn forward(
         &self,
+        ctx: &ExecCtx,
         shape: &MobaShape,
         q: &[f32],
         k: &[f32],
         v: &[f32],
     ) -> (Vec<f32>, StageStats) {
-        let out = flash_moba_forward(q, k, v, *shape, self.cfg);
+        let out = flash_moba_forward_ctx(ctx, q, k, v, *shape, self.cfg);
         (out.o, out.stats)
     }
 
     /// Streaming tiled top-k against the cache's running centroids +
     /// single-row attention over the gathered blocks — the decode
     /// analogue of the fused two-stage forward.
-    fn forward_decode(&self, session: &mut DecodeSession, q_t: &[f32]) -> Vec<f32> {
+    fn forward_decode(
+        &self,
+        _ctx: &ExecCtx,
+        session: &mut DecodeSession,
+        q_t: &[f32],
+    ) -> Vec<f32> {
         session.decode_routed(q_t)
     }
 }
@@ -256,16 +297,18 @@ pub fn fully_routed(shape: &MobaShape) -> bool {
     shape.topk + 1 >= shape.n_blocks()
 }
 
-/// Run every supporting backend on one seeded problem and check:
-/// exact backends (and, at full routing, all backends) against the
-/// textbook dense oracle; sparse backends pairwise against each other.
-/// `Err` carries a human-readable violation description.
+/// Run every supporting backend on one seeded problem (on the shared
+/// process pool) and check: exact backends (and, at full routing, all
+/// backends) against the textbook dense oracle; sparse backends
+/// pairwise against each other. `Err` carries a human-readable
+/// violation description.
 pub fn check_shape_parity(
     registry: &BackendRegistry,
     shape: MobaShape,
     seed: u64,
     tol: &ParityTolerance,
 ) -> std::result::Result<(), String> {
+    let ctx = ExecCtx::global();
     let (q, k, v) = qkv(seed, shape.n, shape.d);
     let (oracle, _) = naive_attention(&q, &k, &v, shape.n, shape.d);
     let full = fully_routed(&shape);
@@ -274,7 +317,7 @@ pub fn check_shape_parity(
         if !b.supports(&shape) {
             continue;
         }
-        let (o, _st) = b.forward(&shape, &q, &k, &v);
+        let (o, _st) = b.forward(ctx, &shape, &q, &k, &v);
         if o.len() != shape.n * shape.d {
             return Err(format!(
                 "{}: output length {} != n*d {} (shape {shape:?})",
@@ -377,27 +420,30 @@ mod tests {
 
     #[test]
     fn dense_backend_matches_oracle_everywhere() {
+        let ctx = ExecCtx::global();
         let r = BackendRegistry::with_defaults();
         let dense = r.get("dense").unwrap();
         assert!(dense.is_exact());
         for shape in [MobaShape::new(96, 8, 16, 1), MobaShape::new(128, 4, 32, 2)] {
             let (q, k, v) = qkv(5, shape.n, shape.d);
-            let (o, st) = dense.forward(&shape, &q, &k, &v);
+            let (o, st) = dense.forward(ctx, &shape, &q, &k, &v);
             let (oracle, _) = naive_attention(&q, &k, &v, shape.n, shape.d);
             assert!(max_abs_diff(&o, &oracle) < 5e-5);
             assert!(st.get("fwd").is_some());
             assert!(st.workspace_bytes > 0);
+            assert_eq!(st.threads(), ctx.threads());
         }
     }
 
     #[test]
     fn moba_backends_report_their_stages() {
+        let ctx = ExecCtx::global();
         let shape = MobaShape::new(64, 4, 16, 1);
         let (q, k, v) = qkv(6, shape.n, shape.d);
         let r = BackendRegistry::with_defaults();
-        let (_, st) = r.get("moba_naive").unwrap().forward(&shape, &q, &k, &v);
+        let (_, st) = r.get("moba_naive").unwrap().forward(ctx, &shape, &q, &k, &v);
         assert!(st.get("gating").is_some() && st.get("merge").is_some());
-        let (_, st) = r.get("flash_moba").unwrap().forward(&shape, &q, &k, &v);
+        let (_, st) = r.get("flash_moba").unwrap().forward(ctx, &shape, &q, &k, &v);
         assert!(st.get("flash_topk").is_some() && st.get("fwd").is_some());
     }
 
@@ -423,6 +469,7 @@ mod tests {
             }
             fn forward(
                 &self,
+                _ctx: &ExecCtx,
                 shape: &MobaShape,
                 _q: &[f32],
                 _k: &[f32],
@@ -449,15 +496,16 @@ mod tests {
     /// `rust/tests/decode_parity.rs`; this is the smoke version).
     #[test]
     fn forward_decode_matches_prefill_rows() {
+        let ctx = ExecCtx::global();
         let shape = MobaShape::new(96, 8, 16, 2);
         let (q, k, v) = qkv(77, shape.n, shape.d);
         let r = BackendRegistry::with_defaults();
         for b in r.iter() {
-            let (prefill, _) = b.forward(&shape, &q, &k, &v);
+            let (prefill, _) = b.forward(ctx, &shape, &q, &k, &v);
             let mut sess = DecodeSession::new(shape.d, shape.block, shape.topk);
             for t in 0..shape.n {
                 sess.append(&k[t * shape.d..(t + 1) * shape.d], &v[t * shape.d..(t + 1) * shape.d]);
-                let o = b.forward_decode(&mut sess, &q[t * shape.d..(t + 1) * shape.d]);
+                let o = b.forward_decode(ctx, &mut sess, &q[t * shape.d..(t + 1) * shape.d]);
                 assert_eq!(o.len(), shape.d);
                 let dev = max_abs_diff(&o, &prefill[t * shape.d..(t + 1) * shape.d]);
                 assert!(dev < 1e-4, "{} row {t} dev {dev:.2e}", b.name());
@@ -479,6 +527,7 @@ mod tests {
             }
             fn forward(
                 &self,
+                _ctx: &ExecCtx,
                 shape: &MobaShape,
                 q: &[f32],
                 k: &[f32],
@@ -488,6 +537,7 @@ mod tests {
                 (o, StageStats::new())
             }
         }
+        let ctx = ExecCtx::global();
         let (n, d) = (48, 8);
         let (q, k, v) = qkv(78, n, d);
         let (oracle, _) = naive_attention(&q, &k, &v, n, d);
@@ -495,7 +545,7 @@ mod tests {
         let mut sess = DecodeSession::new(d, 16, 1); // routing geometry ignored by the fallback
         for t in 0..n {
             sess.append(&k[t * d..(t + 1) * d], &v[t * d..(t + 1) * d]);
-            let o = b.forward_decode(&mut sess, &q[t * d..(t + 1) * d]);
+            let o = b.forward_decode(ctx, &mut sess, &q[t * d..(t + 1) * d]);
             assert!(max_abs_diff(&o, &oracle[t * d..(t + 1) * d]) < 1e-4, "row {t}");
         }
     }

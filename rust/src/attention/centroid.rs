@@ -1,27 +1,41 @@
 //! Key-block centroid computation (paper Algorithm 2): K~_j = mean of
 //! block j's keys. Mirror of the Pallas kernel in
 //! `python/compile/kernels/centroid.py`.
+//!
+//! Parallelized over block ranges: each block's mean is an independent
+//! work unit computed with the unchanged serial arithmetic, so the
+//! result is bit-identical at any thread count.
 
-/// k: (n, d) row-major -> centroids (n / block, d).
+use crate::util::pool::{concat, ExecCtx};
+
+/// k: (n, d) row-major -> centroids (n / block, d), on the process-wide
+/// shared pool.
 pub fn centroids(k: &[f32], n: usize, d: usize, block: usize) -> Vec<f32> {
+    centroids_ctx(ExecCtx::global(), k, n, d, block)
+}
+
+/// [`centroids`] on an explicit execution context.
+pub fn centroids_ctx(ctx: &ExecCtx, k: &[f32], n: usize, d: usize, block: usize) -> Vec<f32> {
     assert_eq!(k.len(), n * d);
     assert!(n % block == 0, "N={n} not divisible by B={block}");
     let nb = n / block;
     let inv = 1.0 / block as f32;
-    let mut out = vec![0.0f32; nb * d];
-    for j in 0..nb {
-        let dst = &mut out[j * d..(j + 1) * d];
-        for r in 0..block {
-            let src = &k[(j * block + r) * d..(j * block + r + 1) * d];
-            for c in 0..d {
-                dst[c] += src[c];
+    concat(ctx.pool().map_ranges(nb, |range| {
+        let mut out = vec![0.0f32; range.len() * d];
+        for (jj, j) in range.enumerate() {
+            let dst = &mut out[jj * d..(jj + 1) * d];
+            for r in 0..block {
+                let src = &k[(j * block + r) * d..(j * block + r + 1) * d];
+                for c in 0..d {
+                    dst[c] += src[c];
+                }
+            }
+            for c in dst.iter_mut() {
+                *c *= inv;
             }
         }
-        for c in dst.iter_mut() {
-            *c *= inv;
-        }
-    }
-    out
+        out
+    }))
 }
 
 #[cfg(test)]
@@ -69,5 +83,18 @@ mod tests {
     #[should_panic]
     fn ragged_panics() {
         centroids(&[0.0; 30], 10, 3, 4);
+    }
+
+    /// Partitioning blocks across workers must not change a single bit.
+    #[test]
+    fn parallel_is_bit_identical_to_serial() {
+        let mut rng = Rng::new(6);
+        let (n, d, b) = (7 * 16, 8, 16); // 7 blocks: uneven over any worker count
+        let k = rng.normal_vec(n * d);
+        let serial = centroids_ctx(&ExecCtx::serial(), &k, n, d, b);
+        for threads in [2, 3, 5, 16] {
+            let par = centroids_ctx(&ExecCtx::with_threads(threads), &k, n, d, b);
+            assert_eq!(serial, par, "threads={threads}");
+        }
     }
 }

@@ -11,6 +11,7 @@
 
 use super::simd::{axpy, dot, scale as vscale};
 use super::stats::ws_bytes;
+use crate::util::pool::ExecCtx;
 
 pub const NEG_INF: f32 = -1.0e30;
 
@@ -44,10 +45,12 @@ pub fn naive_attention(q: &[f32], k: &[f32], v: &[f32], n: usize, d: usize) -> (
     (o, lse)
 }
 
-/// Blocked online-softmax causal attention (FlashAttention-2 style).
+/// Blocked online-softmax causal attention (FlashAttention-2 style), on
+/// the process-wide shared pool.
 ///
 /// Processes queries in `br`-row tiles and keys in `bc`-column tiles,
-/// carrying (m, l, acc) across key tiles; only O(br·bc + br·d) workspace.
+/// carrying (m, l, acc) across key tiles; only O(br·bc + br·d) workspace
+/// per worker.
 pub fn flash_attention(
     q: &[f32],
     k: &[f32],
@@ -57,82 +60,114 @@ pub fn flash_attention(
     br: usize,
     bc: usize,
 ) -> (Vec<f32>, Vec<f32>, u64) {
-    let scale = 1.0 / (d as f32).sqrt();
-    let mut o = vec![0.0f32; n * d];
-    let mut lse = vec![0.0f32; n];
-    let mut s = vec![0.0f32; br * bc];
-    let mut acc = vec![0.0f32; br * d];
-    let mut mrow = vec![NEG_INF; br];
-    let mut lrow = vec![0.0f32; br];
-    let workspace = ws_bytes(&[s.len(), acc.len(), mrow.len(), lrow.len()]);
+    flash_attention_ctx(ExecCtx::global(), q, k, v, n, d, br, bc)
+}
 
+/// [`flash_attention`] on an explicit execution context. Query tiles
+/// are independent work units (each carries its own (m, l, acc) state
+/// and visits key tiles in the same ascending order), so partitioning
+/// the tile loop across workers is bit-identical to the serial path.
+#[allow(clippy::too_many_arguments)]
+pub fn flash_attention_ctx(
+    ctx: &ExecCtx,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    n: usize,
+    d: usize,
+    br: usize,
+    bc: usize,
+) -> (Vec<f32>, Vec<f32>, u64) {
+    let scale = 1.0 / (d as f32).sqrt();
     let tq = n.div_ceil(br);
-    for it in 0..tq {
-        let r0 = it * br;
-        let rows = br.min(n - r0);
-        acc[..rows * d].fill(0.0);
-        mrow[..rows].fill(NEG_INF);
-        lrow[..rows].fill(0.0);
-        // causal: key tiles only up to the query tile's end
-        let last_col = r0 + rows; // exclusive
-        let tk = last_col.div_ceil(bc);
-        for jt in 0..tk {
-            let c0 = jt * bc;
-            let cols = bc.min(last_col - c0).min(bc);
-            // scores tile
-            for r in 0..rows {
-                let qt = &q[(r0 + r) * d..(r0 + r + 1) * d];
-                let srow = &mut s[r * bc..r * bc + cols];
-                for (cc, sval) in srow.iter_mut().enumerate() {
-                    let u = c0 + cc;
-                    if u > r0 + r {
-                        *sval = NEG_INF;
-                        continue;
+    let parts = ctx.pool().map_ranges(tq, |tiles| {
+        let row0 = tiles.start * br;
+        let row_end = (tiles.end * br).min(n);
+        let mut o = vec![0.0f32; (row_end - row0) * d];
+        let mut lse = vec![0.0f32; row_end - row0];
+        let mut s = vec![0.0f32; br * bc];
+        let mut acc = vec![0.0f32; br * d];
+        let mut mrow = vec![NEG_INF; br];
+        let mut lrow = vec![0.0f32; br];
+        let workspace = ws_bytes(&[s.len(), acc.len(), mrow.len(), lrow.len()]);
+
+        for it in tiles {
+            let r0 = it * br;
+            let rows = br.min(n - r0);
+            acc[..rows * d].fill(0.0);
+            mrow[..rows].fill(NEG_INF);
+            lrow[..rows].fill(0.0);
+            // causal: key tiles only up to the query tile's end
+            let last_col = r0 + rows; // exclusive
+            let tk = last_col.div_ceil(bc);
+            for jt in 0..tk {
+                let c0 = jt * bc;
+                let cols = bc.min(last_col - c0).min(bc);
+                // scores tile
+                for r in 0..rows {
+                    let qt = &q[(r0 + r) * d..(r0 + r + 1) * d];
+                    let srow = &mut s[r * bc..r * bc + cols];
+                    for (cc, sval) in srow.iter_mut().enumerate() {
+                        let u = c0 + cc;
+                        if u > r0 + r {
+                            *sval = NEG_INF;
+                            continue;
+                        }
+                        *sval = dot(qt, &k[u * d..(u + 1) * d]) * scale;
                     }
-                    *sval = dot(qt, &k[u * d..(u + 1) * d]) * scale;
+                }
+                // online softmax update
+                for r in 0..rows {
+                    let srow = &mut s[r * bc..r * bc + cols];
+                    let mut mt = mrow[r];
+                    for &x in srow.iter() {
+                        if x > mt {
+                            mt = x;
+                        }
+                    }
+                    if mt == NEG_INF {
+                        continue; // whole tile masked for this row
+                    }
+                    let corr = (mrow[r] - mt).exp();
+                    let mut psum = 0.0f32;
+                    for x in srow.iter_mut() {
+                        *x = if *x <= NEG_INF / 2.0 { 0.0 } else { (*x - mt).exp() };
+                        psum += *x;
+                    }
+                    lrow[r] = lrow[r] * corr + psum;
+                    let arow = &mut acc[r * d..(r + 1) * d];
+                    if corr != 1.0 {
+                        vscale(arow, corr);
+                    }
+                    for (cc, &p) in srow.iter().enumerate() {
+                        if p == 0.0 {
+                            continue;
+                        }
+                        axpy(arow, p, &v[(c0 + cc) * d..(c0 + cc + 1) * d]);
+                    }
+                    mrow[r] = mt;
                 }
             }
-            // online softmax update
             for r in 0..rows {
-                let srow = &mut s[r * bc..r * bc + cols];
-                let mut mt = mrow[r];
-                for &x in srow.iter() {
-                    if x > mt {
-                        mt = x;
-                    }
+                let l = if lrow[r] == 0.0 { 1.0 } else { lrow[r] };
+                let ot = &mut o[(r0 - row0 + r) * d..(r0 - row0 + r + 1) * d];
+                let arow = &acc[r * d..(r + 1) * d];
+                for c in 0..d {
+                    ot[c] = arow[c] / l;
                 }
-                if mt == NEG_INF {
-                    continue; // whole tile masked for this row
-                }
-                let corr = (mrow[r] - mt).exp();
-                let mut psum = 0.0f32;
-                for x in srow.iter_mut() {
-                    *x = if *x <= NEG_INF / 2.0 { 0.0 } else { (*x - mt).exp() };
-                    psum += *x;
-                }
-                lrow[r] = lrow[r] * corr + psum;
-                let arow = &mut acc[r * d..(r + 1) * d];
-                if corr != 1.0 {
-                    vscale(arow, corr);
-                }
-                for (cc, &p) in srow.iter().enumerate() {
-                    if p == 0.0 {
-                        continue;
-                    }
-                    axpy(arow, p, &v[(c0 + cc) * d..(c0 + cc + 1) * d]);
-                }
-                mrow[r] = mt;
+                lse[r0 - row0 + r] = mrow[r] + lrow[r].max(1e-30).ln();
             }
         }
-        for r in 0..rows {
-            let l = if lrow[r] == 0.0 { 1.0 } else { lrow[r] };
-            let ot = &mut o[(r0 + r) * d..(r0 + r + 1) * d];
-            let arow = &acc[r * d..(r + 1) * d];
-            for c in 0..d {
-                ot[c] = arow[c] / l;
-            }
-            lse[r0 + r] = mrow[r] + lrow[r].max(1e-30).ln();
-        }
+        (o, lse, workspace)
+    });
+
+    let mut o = Vec::with_capacity(n * d);
+    let mut lse = Vec::with_capacity(n);
+    let mut workspace = 0u64;
+    for (op, lp, ws) in parts {
+        o.extend_from_slice(&op);
+        lse.extend_from_slice(&lp);
+        workspace += ws;
     }
     (o, lse, workspace)
 }
@@ -150,6 +185,21 @@ mod tests {
             let (o2, l2, _) = flash_attention(&q, &k, &v, n, d, br, bc);
             assert!(max_abs_diff(&o1, &o2) < 2e-5, "n={n} d={d}");
             assert!(max_abs_diff(&l1, &l2) < 2e-5);
+        }
+    }
+
+    /// Partitioning query tiles across workers must not change a single
+    /// bit of o or lse.
+    #[test]
+    fn parallel_is_bit_identical_to_serial() {
+        let (n, d) = (101, 8); // ragged against both tile size and worker count
+        let (q, k, v) = qkv(9, n, d);
+        let (o1, l1, _) = flash_attention_ctx(&ExecCtx::serial(), &q, &k, &v, n, d, 32, 48);
+        for threads in [2, 3, 5] {
+            let ctx = ExecCtx::with_threads(threads);
+            let (o2, l2, _) = flash_attention_ctx(&ctx, &q, &k, &v, n, d, 32, 48);
+            assert_eq!(o1, o2, "threads={threads}");
+            assert_eq!(l1, l2, "threads={threads}");
         }
     }
 

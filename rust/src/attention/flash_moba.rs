@@ -8,19 +8,24 @@
 //!      into dense tiles and run blocked GEMM + online softmax, with the
 //!      own-block causal pass fused into the same accumulators
 //!
-//! Single-threaded adaptation: the CUDA kernel keeps (m, l, acc) per
-//! query tile in SRAM and revisits query blocks from one thread block;
-//! sequentially we keep the accumulators in one O(N·d) buffer and visit
-//! key blocks outer-loop — the same arithmetic in the same order per
-//! (query, block) pair, with the same O(N·k·B·d) complexity.
+//! Multi-core adaptation: the CUDA kernel keeps (m, l, acc) per query
+//! tile in SRAM; here each worker owns a contiguous *query-row range*
+//! with its own (m, l, acc) accumulators and walks the KV blocks in the
+//! same ascending order the serial kernel does, visiting only the rows
+//! of its range. A query row's update sequence — which (block, column
+//! tile) pairs it sees, in which order, with which scores — is
+//! independent of how rows are grouped into physical tiles, so the
+//! result is bit-identical to the serial path at any worker count
+//! (pinned by the determinism property suite and the CI thread matrix).
 
-use super::centroid::centroids;
+use super::centroid::centroids_ctx;
 use super::simd::{axpy, dot, scale};
 use super::dense::NEG_INF;
 use super::stats::{ws_bytes, StageStats};
-use super::topk::tiled_topk;
+use super::topk::tiled_topk_ctx;
 use super::varlen::{build_varlen, VarlenLayout};
 use super::MobaShape;
+use crate::util::pool::ExecCtx;
 
 /// Tuning knobs (physical tile sizes; logical block size comes from
 /// [`MobaShape`]).
@@ -49,8 +54,20 @@ pub struct FlashMobaOut {
     pub stats: StageStats,
 }
 
-/// Run the fused pipeline.
+/// Run the fused pipeline on the process-wide shared pool.
 pub fn flash_moba_forward(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    shape: MobaShape,
+    cfg: FlashMobaConfig,
+) -> FlashMobaOut {
+    flash_moba_forward_ctx(ExecCtx::global(), q, k, v, shape, cfg)
+}
+
+/// [`flash_moba_forward`] on an explicit execution context.
+pub fn flash_moba_forward_ctx(
+    ctx: &ExecCtx,
     q: &[f32],
     k: &[f32],
     v: &[f32],
@@ -59,49 +76,64 @@ pub fn flash_moba_forward(
 ) -> FlashMobaOut {
     let MobaShape { n, d, block, topk } = shape;
     let nb = shape.n_blocks();
-    let mut st = StageStats::new();
+    let mut st = StageStats::for_ctx(ctx);
 
     // ---- stage 1: Flash TopK + varlen epilogue -------------------------
     let (indices, layout, topk_ws) = st.time("flash_topk", || {
-        let c = centroids(k, n, d, block);
-        let (idx, ws) = tiled_topk(q, &c, n, d, block, topk, cfg.topk_tile);
+        let c = centroids_ctx(ctx, k, n, d, block);
+        let (idx, ws) = tiled_topk_ctx(ctx, q, &c, n, d, block, topk, cfg.topk_tile);
         let layout = build_varlen(&idx, n, topk, nb);
         (idx, layout, ws + ws_bytes(&[nb * d]))
     });
     st.add_workspace(topk_ws + ws_bytes(&[layout.total() + 2 * nb]));
 
     // ---- stage 2: gather-and-densify forward ---------------------------
-    let mut o = vec![0.0f32; n * d];
-    let mut lse = vec![0.0f32; n];
-    let fwd_ws = st.time("fwd", || forward_core(q, k, v, shape, cfg, &layout, &mut o, &mut lse));
+    let mut o = Vec::with_capacity(n * d);
+    let mut lse = Vec::with_capacity(n);
+    let fwd_ws = st.time("fwd", || {
+        let parts = ctx.pool().map_ranges(n, |rows| {
+            forward_range(q, k, v, shape, cfg, &layout, rows.start, rows.end)
+        });
+        let mut ws = 0u64;
+        for (op, lp, w) in parts {
+            o.extend_from_slice(&op);
+            lse.extend_from_slice(&lp);
+            ws += w;
+        }
+        ws
+    });
     st.add_workspace(fwd_ws);
 
     FlashMobaOut { o, lse, indices, layout, stats: st }
 }
 
-/// The gather-and-densify kernel body (Algorithm 1), shared with benches.
-/// Returns the workspace bytes it allocated.
+/// The gather-and-densify kernel body (Algorithm 1) for query rows
+/// `lo..hi`: walk every KV block in ascending order, processing the
+/// routed queries of the range first and the (causal) own-block rows
+/// second — the exact per-row visit order of the serial kernel.
+/// Returns the range's (o, lse, workspace bytes).
 #[allow(clippy::too_many_arguments)]
-fn forward_core(
+fn forward_range(
     q: &[f32],
     k: &[f32],
     v: &[f32],
     shape: MobaShape,
     cfg: FlashMobaConfig,
     layout: &VarlenLayout,
-    o: &mut [f32],
-    lse: &mut [f32],
-) -> u64 {
+    lo: usize,
+    hi: usize,
+) -> (Vec<f32>, Vec<f32>, u64) {
     let MobaShape { n, d, block, .. } = shape;
     let nb = shape.n_blocks();
     let sm_scale = 1.0 / (d as f32).sqrt();
     let tile_r = cfg.tile_r;
     let tile_c = cfg.tile_c.min(block);
+    let rows_total = hi - lo;
 
-    // global online-softmax accumulators (the SRAM state, sequentially)
-    let mut m = vec![NEG_INF; n];
-    let mut l = vec![0.0f32; n];
-    let mut acc = vec![0.0f32; n * d];
+    // this range's online-softmax accumulators (the SRAM state)
+    let mut m = vec![NEG_INF; rows_total];
+    let mut l = vec![0.0f32; rows_total];
+    let mut acc = vec![0.0f32; rows_total * d];
     // dense gather buffers (the SRAM tiles)
     let mut qg = vec![0.0f32; tile_r * d];
     let mut s = vec![0.0f32; tile_r * tile_c];
@@ -111,8 +143,12 @@ fn forward_core(
         let kb = &k[j * block * d..(j + 1) * block * d];
         let vb = &v[j * block * d..(j + 1) * block * d];
 
-        // routed queries (strictly future of block j) + own-block queries
-        let routed = layout.queries_of(j);
+        // routed queries (strictly future of block j) restricted to the
+        // range — `queries_of` is ascending, so that's a subslice
+        let routed_all = layout.queries_of(j);
+        let a = routed_all.partition_point(|&t| (t as usize) < lo);
+        let b = routed_all.partition_point(|&t| (t as usize) < hi);
+        let routed = &routed_all[a..b];
         let own_start = j * block;
 
         // process in dense physical tiles: first routed, then own block
@@ -142,9 +178,9 @@ fn forward_core(
                 }
                 // online softmax scatter-update
                 for r in 0..rcount {
-                    let t = rows[r] as usize;
+                    let ti = rows[r] as usize - lo;
                     let srow = &mut s[r * tile_c..r * tile_c + cols];
-                    let mut mt = m[t];
+                    let mut mt = m[ti];
                     for &x in srow.iter() {
                         if x > mt {
                             mt = x;
@@ -153,14 +189,14 @@ fn forward_core(
                     if mt == NEG_INF {
                         continue;
                     }
-                    let corr = (m[t] - mt).exp();
+                    let corr = (m[ti] - mt).exp();
                     let mut psum = 0.0f32;
                     for x in srow.iter_mut() {
                         *x = if *x <= NEG_INF / 2.0 { 0.0 } else { (*x - mt).exp() };
                         psum += *x;
                     }
-                    l[t] = l[t] * corr + psum;
-                    let arow = &mut acc[t * d..(t + 1) * d];
+                    l[ti] = l[ti] * corr + psum;
+                    let arow = &mut acc[ti * d..(ti + 1) * d];
                     if corr != 1.0 {
                         scale(arow, corr);
                     }
@@ -170,7 +206,7 @@ fn forward_core(
                         }
                         axpy(arow, p, &vb[(c0 + cc) * d..(c0 + cc + 1) * d]);
                     }
-                    m[t] = mt;
+                    m[ti] = mt;
                 }
             }
         };
@@ -178,24 +214,28 @@ fn forward_core(
         for chunk in routed.chunks(tile_r) {
             process_tile(chunk, false);
         }
-        // fused local pass: own-block rows, causal
-        let own_rows: Vec<u32> = (own_start as u32..(own_start + block) as u32)
-            .take_while(|&t| (t as usize) < n)
-            .collect();
-        for chunk in own_rows.chunks(tile_r) {
-            process_tile(chunk, true);
+        // fused local pass: own-block rows within the range, causal
+        let os = own_start.max(lo);
+        let oe = (own_start + block).min(n).min(hi);
+        if os < oe {
+            let own_rows: Vec<u32> = (os as u32..oe as u32).collect();
+            for chunk in own_rows.chunks(tile_r) {
+                process_tile(chunk, true);
+            }
         }
     }
 
     // epilogue: normalize
-    for t in 0..n {
-        let z = if l[t] == 0.0 { 1.0 } else { l[t] };
+    let mut o = vec![0.0f32; rows_total * d];
+    let mut lse = vec![0.0f32; rows_total];
+    for ti in 0..rows_total {
+        let z = if l[ti] == 0.0 { 1.0 } else { l[ti] };
         for c in 0..d {
-            o[t * d + c] = acc[t * d + c] / z;
+            o[ti * d + c] = acc[ti * d + c] / z;
         }
-        lse[t] = m[t] + l[t].max(1e-30).ln();
+        lse[ti] = m[ti] + l[ti].max(1e-30).ln();
     }
-    ws
+    (o, lse, ws)
 }
 
 #[cfg(test)]
@@ -239,6 +279,25 @@ mod tests {
         let (oref, lref) = naive_attention(&q, &kk, &v, n, d);
         assert!(max_abs_diff(&out.o, &oref) < 3e-5);
         assert!(max_abs_diff(&out.lse, &lref) < 3e-5);
+    }
+
+    /// Partitioning query rows across workers must not change a single
+    /// bit of o, lse or the routing table — including at worker counts
+    /// that split blocks and tiles unevenly.
+    #[test]
+    fn parallel_is_bit_identical_to_serial() {
+        let shape = MobaShape::new(7 * 32, 8, 32, 2); // 7 blocks: uneven splits
+        let (q, kk, v) = qkv(36, shape.n, shape.d);
+        let cfg = FlashMobaConfig { tile_r: 5, tile_c: 9, topk_tile: 3 };
+        let serial = flash_moba_forward_ctx(&ExecCtx::serial(), &q, &kk, &v, shape, cfg);
+        for threads in [2, 3, 4, 13] {
+            let ctx = ExecCtx::with_threads(threads);
+            let par = flash_moba_forward_ctx(&ctx, &q, &kk, &v, shape, cfg);
+            assert_eq!(serial.o, par.o, "o differs at threads={threads}");
+            assert_eq!(serial.lse, par.lse, "lse differs at threads={threads}");
+            assert_eq!(serial.indices, par.indices, "indices differ at threads={threads}");
+            assert_eq!(par.stats.threads(), threads);
+        }
     }
 
     #[test]

@@ -10,25 +10,46 @@
 //! so the two are bit-identical — locked down by the decode parity
 //! suite.
 
+use crate::util::pool::{concat, ExecCtx};
+
 pub fn silu(x: f32) -> f32 {
     x / (1.0 + (-x).exp())
 }
 
-/// k: (n, d); w: (width, d) depthwise taps. Returns (n, d).
+/// k: (n, d); w: (width, d) depthwise taps. Returns (n, d). Runs on the
+/// process-wide shared pool.
 pub fn kconv(k: &[f32], w: &[f32], n: usize, d: usize, width: usize) -> Vec<f32> {
+    kconv_ctx(ExecCtx::global(), k, w, n, d, width)
+}
+
+/// [`kconv`] on an explicit execution context. Each output row reads
+/// only rows `t-width+1..=t` of the immutable input, so rows are
+/// independent work units: partitioning them across workers keeps the
+/// per-row lag accumulation order — and therefore every bit — identical
+/// to the serial path (and to [`KconvStream`]).
+pub fn kconv_ctx(
+    ctx: &ExecCtx,
+    k: &[f32],
+    w: &[f32],
+    n: usize,
+    d: usize,
+    width: usize,
+) -> Vec<f32> {
     assert_eq!(k.len(), n * d);
     assert_eq!(w.len(), width * d);
-    let mut out = vec![0.0f32; n * d];
-    for t in 0..n {
-        for c in 0..d {
-            let mut acc = 0.0f32;
-            for lag in 0..width.min(t + 1) {
-                acc += w[lag * d + c] * k[(t - lag) * d + c];
+    concat(ctx.pool().map_ranges(n, |range| {
+        let mut out = vec![0.0f32; range.len() * d];
+        for (tt, t) in range.enumerate() {
+            for c in 0..d {
+                let mut acc = 0.0f32;
+                for lag in 0..width.min(t + 1) {
+                    acc += w[lag * d + c] * k[(t - lag) * d + c];
+                }
+                out[tt * d + c] = k[t * d + c] + silu(acc);
             }
-            out[t * d + c] = k[t * d + c] + silu(acc);
         }
-    }
-    out
+        out
+    }))
 }
 
 /// Streaming kconv over a ring buffer of the last `width` raw keys —
@@ -117,6 +138,21 @@ mod tests {
         let exp1 = -1.0 + silu(-0.5);
         assert!((out[0] - exp0).abs() < 1e-6);
         assert!((out[1] - exp1).abs() < 1e-6);
+    }
+
+    /// Partitioning rows across workers must not change a single bit
+    /// (each row's lag accumulation is untouched).
+    #[test]
+    fn parallel_is_bit_identical_to_serial() {
+        let mut rng = Rng::new(4);
+        let (n, d, width) = (53, 6, 4); // 53 rows: uneven over any worker count
+        let k = rng.normal_vec(n * d);
+        let w = rng.normal_vec(width * d);
+        let serial = kconv_ctx(&ExecCtx::serial(), &k, &w, n, d, width);
+        for threads in [2, 3, 7] {
+            let par = kconv_ctx(&ExecCtx::with_threads(threads), &k, &w, n, d, width);
+            assert_eq!(serial, par, "threads={threads}");
+        }
     }
 
     /// The streaming ring-buffer form is bit-identical to the batch

@@ -13,16 +13,24 @@
 //! Stages 1, 2 and 5 dominate at small block sizes — exactly the
 //! overhead FlashMoBA eliminates.
 //!
+//! Multi-core adaptation: gating, local and merge partition query rows,
+//! the routed stage partitions key blocks (each block owns a contiguous
+//! slice of the partial buffers). Every work unit runs the unchanged
+//! serial arithmetic — for merge, each query still combines its local
+//! partial first and its routed partials in ascending block order — so
+//! outputs are bit-identical to the serial path at any thread count.
+//!
 //! Also hosts [`moba_reference`], the slow token-mask oracle used by
 //! every test.
 
-use super::centroid::centroids;
+use super::centroid::centroids_ctx;
 use super::simd::{axpy, dot};
 use super::dense::NEG_INF;
 use super::stats::{ws_bytes, StageStats};
-use super::topk::naive_topk;
+use super::topk::naive_topk_ctx;
 use super::varlen::build_varlen;
 use super::MobaShape;
+use crate::util::pool::ExecCtx;
 
 /// Token-mask oracle: O(N²) masked softmax, f64 accumulation.
 /// Given a routing table (n, k) (-1 padded), token t attends token u iff
@@ -79,8 +87,20 @@ pub fn moba_reference(
     (o, lse)
 }
 
-/// Full original pipeline. Returns (o, routing indices, stats).
+/// Full original pipeline on the process-wide shared pool. Returns
+/// (o, routing indices, stats).
 pub fn moba_naive_forward(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    shape: MobaShape,
+) -> (Vec<f32>, Vec<i32>, StageStats) {
+    moba_naive_forward_ctx(ExecCtx::global(), q, k, v, shape)
+}
+
+/// [`moba_naive_forward`] on an explicit execution context.
+pub fn moba_naive_forward_ctx(
+    ctx: &ExecCtx,
     q: &[f32],
     k: &[f32],
     v: &[f32],
@@ -89,12 +109,12 @@ pub fn moba_naive_forward(
     let MobaShape { n, d, block, topk } = shape;
     let nb = shape.n_blocks();
     let scale = 1.0 / (d as f32).sqrt();
-    let mut st = StageStats::new();
+    let mut st = StageStats::for_ctx(ctx);
 
     // ---- stage 1: gating (full score matrix!) --------------------------
     let (indices, gate_ws) = st.time("gating", || {
-        let c = centroids(k, n, d, block);
-        naive_topk(q, &c, n, d, block, topk)
+        let c = centroids_ctx(ctx, k, n, d, block);
+        naive_topk_ctx(ctx, q, &c, n, d, block, topk)
     });
     st.add_workspace(gate_ws + ws_bytes(&[nb * d]));
 
@@ -115,110 +135,162 @@ pub fn moba_naive_forward(
     st.add_workspace(ws_bytes(&[layout.total() * d + layout.total() + 2 * nb]));
 
     // ---- stage 3: routed attention (partial outputs materialized) ------
-    // partials[p] = (query id, partial out, partial lse)
-    let mut partial_o = vec![0.0f32; layout.total() * d];
-    let mut partial_l = vec![0.0f32; layout.total()];
+    // partials[p] = (query id, partial out, partial lse), grouped by
+    // block: block j owns partial rows offsets[j]..offsets[j]+counts[j]
+    let mut partial_o = Vec::with_capacity(layout.total() * d);
+    let mut partial_l = Vec::with_capacity(layout.total());
     st.time("routed", || {
-        let mut p_idx = 0usize;
-        for j in 0..nb {
-            let qs = layout.queries_of(j);
-            let g = &gathered[j];
-            let kb = &k[j * block * d..(j + 1) * block * d];
-            let vb = &v[j * block * d..(j + 1) * block * d];
-            for (row, _t) in qs.iter().enumerate() {
-                let qt = &g[row * d..(row + 1) * d];
-                let mut s = vec![0.0f32; block];
-                let mut m = NEG_INF;
-                for (u, su) in s.iter_mut().enumerate() {
-                    *su = dot(qt, &kb[u * d..(u + 1) * d]) * scale;
-                    if *su > m {
-                        m = *su;
+        let parts = ctx.pool().map_ranges(nb, |blocks| {
+            let p0 = layout.offsets[blocks.start] as usize;
+            let pend = if blocks.end < nb {
+                layout.offsets[blocks.end] as usize
+            } else {
+                layout.total()
+            };
+            let mut po = vec![0.0f32; (pend - p0) * d];
+            let mut pl = vec![0.0f32; pend - p0];
+            let mut p_idx = 0usize;
+            for j in blocks {
+                let qs = layout.queries_of(j);
+                let g = &gathered[j];
+                let kb = &k[j * block * d..(j + 1) * block * d];
+                let vb = &v[j * block * d..(j + 1) * block * d];
+                for (row, _t) in qs.iter().enumerate() {
+                    let qt = &g[row * d..(row + 1) * d];
+                    let mut s = vec![0.0f32; block];
+                    let mut m = NEG_INF;
+                    for (u, su) in s.iter_mut().enumerate() {
+                        *su = dot(qt, &kb[u * d..(u + 1) * d]) * scale;
+                        if *su > m {
+                            m = *su;
+                        }
                     }
+                    let mut z = 0.0f32;
+                    let prow = &mut po[p_idx * d..(p_idx + 1) * d];
+                    for (u, su) in s.iter().enumerate() {
+                        let p = (su - m).exp();
+                        z += p;
+                        axpy(prow, p, &vb[u * d..(u + 1) * d]);
+                    }
+                    for c in prow.iter_mut() {
+                        *c /= z;
+                    }
+                    pl[p_idx] = m + z.ln();
+                    p_idx += 1;
                 }
-                let mut z = 0.0f32;
-                let po = &mut partial_o[p_idx * d..(p_idx + 1) * d];
-                for (u, su) in s.iter().enumerate() {
-                    let p = (su - m).exp();
-                    z += p;
-                    axpy(po, p, &vb[u * d..(u + 1) * d]);
-                }
-                for c in po.iter_mut() {
-                    *c /= z;
-                }
-                partial_l[p_idx] = m + z.ln();
-                p_idx += 1;
             }
+            (po, pl)
+        });
+        for (po, pl) in parts {
+            partial_o.extend_from_slice(&po);
+            partial_l.extend_from_slice(&pl);
         }
     });
     st.add_workspace(ws_bytes(&[partial_o.len(), partial_l.len()]));
 
     // ---- stage 4: local (own block, causal) -----------------------------
-    let mut local_o = vec![0.0f32; n * d];
-    let mut local_l = vec![0.0f32; n];
+    let mut local_o = Vec::with_capacity(n * d);
+    let mut local_l = Vec::with_capacity(n);
     st.time("local", || {
-        for t in 0..n {
-            let own = t / block;
-            let base = own * block;
-            let qt = &q[t * d..(t + 1) * d];
-            let mut m = NEG_INF;
-            let upto = t - base; // inclusive offset in own block
-            let mut s = vec![0.0f32; upto + 1];
-            for (u, su) in s.iter_mut().enumerate() {
-                *su = dot(qt, &k[(base + u) * d..(base + u + 1) * d]) * scale;
-                if *su > m {
-                    m = *su;
+        let parts = ctx.pool().map_ranges(n, |rows| {
+            let mut lo_o = vec![0.0f32; rows.len() * d];
+            let mut lo_l = vec![0.0f32; rows.len()];
+            for (tt, t) in rows.enumerate() {
+                let own = t / block;
+                let base = own * block;
+                let qt = &q[t * d..(t + 1) * d];
+                let mut m = NEG_INF;
+                let upto = t - base; // inclusive offset in own block
+                let mut s = vec![0.0f32; upto + 1];
+                for (u, su) in s.iter_mut().enumerate() {
+                    *su = dot(qt, &k[(base + u) * d..(base + u + 1) * d]) * scale;
+                    if *su > m {
+                        m = *su;
+                    }
                 }
+                let mut z = 0.0f32;
+                let ot = &mut lo_o[tt * d..(tt + 1) * d];
+                for (u, su) in s.iter().enumerate() {
+                    let p = (su - m).exp();
+                    z += p;
+                    axpy(ot, p, &v[(base + u) * d..(base + u + 1) * d]);
+                }
+                for c in ot.iter_mut() {
+                    *c /= z;
+                }
+                lo_l[tt] = m + z.ln();
             }
-            let mut z = 0.0f32;
-            let ot = &mut local_o[t * d..(t + 1) * d];
-            for (u, su) in s.iter().enumerate() {
-                let p = (su - m).exp();
-                z += p;
-                axpy(ot, p, &v[(base + u) * d..(base + u + 1) * d]);
-            }
-            for c in ot.iter_mut() {
-                *c /= z;
-            }
-            local_l[t] = m + z.ln();
+            (lo_o, lo_l)
+        });
+        for (lo_o, lo_l) in parts {
+            local_o.extend_from_slice(&lo_o);
+            local_l.extend_from_slice(&lo_l);
         }
     });
     st.add_workspace(ws_bytes(&[local_o.len(), local_l.len()]));
 
     // ---- stage 5: merge --------------------------------------------------
-    let mut o = vec![0.0f32; n * d];
+    // per query: max over (local, routed partials in ascending block
+    // order), then the weighted combination in the same order — the
+    // serial accumulation order, partitioned by query rows
+    let mut o = Vec::with_capacity(n * d);
     st.time("merge", || {
-        // global max per query over partials
-        let mut m = local_l.clone();
-        let mut p_idx = 0usize;
-        for j in 0..nb {
-            for &t in layout.queries_of(j) {
-                let t = t as usize;
-                if partial_l[p_idx] > m[t] {
-                    m[t] = partial_l[p_idx];
+        let parts = ctx.pool().map_ranges(n, |rows| {
+            let (lo, hi) = (rows.start, rows.end);
+            let count = hi - lo;
+            // this range's routed sub-slice of every block's query list
+            // (computed once; the max pass and the accumulate pass both
+            // walk the same (a, b) windows)
+            let windows: Vec<(usize, usize)> = (0..nb)
+                .map(|j| {
+                    let qs = layout.queries_of(j);
+                    let a = qs.partition_point(|&t| (t as usize) < lo);
+                    let b = qs.partition_point(|&t| (t as usize) < hi);
+                    (a, b)
+                })
+                .collect();
+            // global max per query over partials
+            let mut m: Vec<f32> = local_l[lo..hi].to_vec();
+            for (j, &(a, b)) in windows.iter().enumerate() {
+                let qs = layout.queries_of(j);
+                for (off, &t) in qs[a..b].iter().enumerate() {
+                    let p = layout.offsets[j] as usize + a + off;
+                    let ti = t as usize - lo;
+                    if partial_l[p] > m[ti] {
+                        m[ti] = partial_l[p];
+                    }
                 }
-                p_idx += 1;
             }
-        }
-        let mut z = vec![0.0f32; n];
-        for t in 0..n {
-            let w = (local_l[t] - m[t]).exp();
-            z[t] += w;
-            axpy(&mut o[t * d..(t + 1) * d], w, &local_o[t * d..(t + 1) * d]);
-        }
-        p_idx = 0;
-        for j in 0..nb {
-            for &t in layout.queries_of(j) {
-                let t = t as usize;
-                let w = (partial_l[p_idx] - m[t]).exp();
-                z[t] += w;
-                axpy(&mut o[t * d..(t + 1) * d], w, &partial_o[p_idx * d..(p_idx + 1) * d]);
-                p_idx += 1;
+            let mut z = vec![0.0f32; count];
+            let mut og = vec![0.0f32; count * d];
+            for (tt, t) in rows.enumerate() {
+                let w = (local_l[t] - m[tt]).exp();
+                z[tt] += w;
+                axpy(&mut og[tt * d..(tt + 1) * d], w, &local_o[t * d..(t + 1) * d]);
             }
-        }
-        for t in 0..n {
-            for c in 0..d {
-                o[t * d + c] /= z[t];
+            for (j, &(a, b)) in windows.iter().enumerate() {
+                let qs = layout.queries_of(j);
+                for (off, &t) in qs[a..b].iter().enumerate() {
+                    let p = layout.offsets[j] as usize + a + off;
+                    let ti = t as usize - lo;
+                    let w = (partial_l[p] - m[ti]).exp();
+                    z[ti] += w;
+                    axpy(
+                        &mut og[ti * d..(ti + 1) * d],
+                        w,
+                        &partial_o[p * d..(p + 1) * d],
+                    );
+                }
             }
+            for ti in 0..count {
+                for c in 0..d {
+                    og[ti * d + c] /= z[ti];
+                }
+            }
+            og
+        });
+        for og in parts {
+            o.extend_from_slice(&og);
         }
     });
     st.add_workspace(ws_bytes(&[2 * n]));
@@ -251,6 +323,22 @@ mod tests {
         let (o, _, _) = moba_naive_forward(&q, &kk, &v, shape);
         let (oref, _) = naive_attention(&q, &kk, &v, n, d);
         assert!(max_abs_diff(&o, &oref) < 3e-5);
+    }
+
+    /// Partitioning the five stages across workers must not change a
+    /// single bit of the output or the routing table.
+    #[test]
+    fn parallel_is_bit_identical_to_serial() {
+        let shape = MobaShape::new(5 * 16, 8, 16, 2); // 5 blocks: uneven splits
+        let (q, kk, v) = qkv(25, shape.n, shape.d);
+        let (o1, i1, _) = moba_naive_forward_ctx(&ExecCtx::serial(), &q, &kk, &v, shape);
+        for threads in [2, 3, 4, 11] {
+            let ctx = ExecCtx::with_threads(threads);
+            let (o2, i2, st) = moba_naive_forward_ctx(&ctx, &q, &kk, &v, shape);
+            assert_eq!(o1, o2, "o differs at threads={threads}");
+            assert_eq!(i1, i2, "indices differ at threads={threads}");
+            assert_eq!(st.threads(), threads);
+        }
     }
 
     #[test]

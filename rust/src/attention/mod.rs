@@ -43,6 +43,9 @@ pub mod varlen;
 pub use backend::{AttentionBackend, BackendRegistry};
 pub use decode::{DecodeSession, KvCache};
 pub use stats::StageStats;
+// the execution context every backend call takes (canonical home:
+// `crate::util::pool`; re-exported here for trait consumers)
+pub use crate::util::pool::ExecCtx;
 
 /// Geometry of one MoBA attention problem.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

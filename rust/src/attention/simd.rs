@@ -45,11 +45,19 @@ pub fn axpy(y: &mut [f32], a: f32, x: &[f32]) {
     }
 }
 
-/// y *= a.
+/// y *= a, unrolled into 8 independent lanes like `dot`/`axpy` so the
+/// accumulator-row rescale in the online-softmax kernels vectorizes.
 #[inline]
 pub fn scale(y: &mut [f32], a: f32) {
-    for v in y.iter_mut() {
-        *v *= a;
+    let chunks = y.len() / 8;
+    for i in 0..chunks {
+        let yi = &mut y[i * 8..i * 8 + 8];
+        for l in 0..8 {
+            yi[l] *= a;
+        }
+    }
+    for i in chunks * 8..y.len() {
+        y[i] *= a;
     }
 }
 
@@ -89,5 +97,20 @@ mod tests {
         let mut y = vec![1.0f32, -2.0, 3.0];
         scale(&mut y, 0.5);
         assert_eq!(y, vec![0.5, -1.0, 1.5]);
+    }
+
+    /// The unrolled scale is exact (x * a element-wise, no reassociation)
+    /// at every length across the 8-lane boundary.
+    #[test]
+    fn scale_matches_scalar_all_lengths() {
+        let mut rng = Rng::new(3);
+        for len in [0, 1, 7, 8, 9, 16, 63, 64, 65, 100] {
+            let mut y = rng.normal_vec(len);
+            let y0 = y.clone();
+            scale(&mut y, -1.75);
+            for i in 0..len {
+                assert_eq!(y[i], y0[i] * -1.75, "len={len} i={i}");
+            }
+        }
     }
 }

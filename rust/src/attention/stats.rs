@@ -1,28 +1,68 @@
 //! Stage-level instrumentation for the pipeline breakdown experiments
-//! (Figure 4) and workspace-memory accounting (Figure 3 bottom).
+//! (Figure 4) and workspace-memory accounting (Figure 3 bottom), plus
+//! the thread count each stage ran with (the multi-core execution
+//! layer's per-stage telemetry, surfaced in the `BENCH_*.json` blobs).
 
 use std::time::{Duration, Instant};
 
+use crate::util::pool::ExecCtx;
+
+/// One timed pipeline stage.
+#[derive(Debug, Clone)]
+pub struct StageRecord {
+    pub name: String,
+    /// wall-clock time of the stage
+    pub wall: Duration,
+    /// worker threads the stage's kernels could partition over
+    /// (1 = serial path)
+    pub threads: usize,
+}
+
 /// Named stage timings + logical workspace bytes for one pipeline run.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone)]
 pub struct StageStats {
-    stages: Vec<(String, Duration)>,
+    records: Vec<StageRecord>,
+    /// thread budget stamped onto stages recorded via [`StageStats::time`]
+    threads: usize,
     /// peak *extra* workspace allocated by the pipeline (bytes), beyond
     /// the q/k/v/o tensors themselves — the quantity that differs by
-    /// orders of magnitude between original MoBA and FlashMoBA.
+    /// orders of magnitude between original MoBA and FlashMoBA. With
+    /// multiple workers this sums each worker's private buffers (the
+    /// true footprint of the parallel run).
     pub workspace_bytes: u64,
 }
 
+impl Default for StageStats {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 impl StageStats {
+    /// Serial-stamped stats (threads = 1).
     pub fn new() -> Self {
-        Self::default()
+        Self { records: Vec::new(), threads: 1, workspace_bytes: 0 }
+    }
+
+    /// Stats whose stages are stamped with `ctx`'s worker count.
+    pub fn for_ctx(ctx: &ExecCtx) -> Self {
+        Self { records: Vec::new(), threads: ctx.threads(), workspace_bytes: 0 }
+    }
+
+    /// Thread budget stamped onto recorded stages.
+    pub fn threads(&self) -> usize {
+        self.threads
     }
 
     /// Time `f` and record it under `name`.
     pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
         let t0 = Instant::now();
         let out = f();
-        self.stages.push((name.to_string(), t0.elapsed()));
+        self.records.push(StageRecord {
+            name: name.to_string(),
+            wall: t0.elapsed(),
+            threads: self.threads,
+        });
         out
     }
 
@@ -30,36 +70,41 @@ impl StageStats {
         self.workspace_bytes += bytes;
     }
 
-    pub fn stages(&self) -> &[(String, Duration)] {
-        &self.stages
+    pub fn stages(&self) -> &[StageRecord] {
+        &self.records
     }
 
     pub fn total(&self) -> Duration {
-        self.stages.iter().map(|(_, d)| *d).sum()
+        self.records.iter().map(|r| r.wall).sum()
     }
 
     pub fn get(&self, name: &str) -> Option<Duration> {
         // sum over repeated stages with the same label
         let tot: Duration =
-            self.stages.iter().filter(|(n, _)| n == name).map(|(_, d)| *d).sum();
-        if self.stages.iter().any(|(n, _)| n == name) {
+            self.records.iter().filter(|r| r.name == name).map(|r| r.wall).sum();
+        if self.records.iter().any(|r| r.name == name) {
             Some(tot)
         } else {
             None
         }
     }
 
-    /// Pretty one-line summary, e.g. `topk 1.2ms | attn 3.4ms (total 4.6ms)`.
+    /// Pretty one-line summary, e.g.
+    /// `topk 1.2ms | attn 3.4ms (total 4.6ms, ws 0.1MB, 4 threads)`.
     pub fn summary(&self) -> String {
         let parts: Vec<String> = self
-            .stages
+            .records
             .iter()
-            .map(|(n, d)| format!("{n} {:.2}ms", d.as_secs_f64() * 1e3))
+            .map(|r| format!("{} {:.2}ms", r.name, r.wall.as_secs_f64() * 1e3))
             .collect();
-        format!("{} (total {:.2}ms, ws {:.1}MB)",
+        format!(
+            "{} (total {:.2}ms, ws {:.1}MB, {} thread{})",
             parts.join(" | "),
             self.total().as_secs_f64() * 1e3,
-            self.workspace_bytes as f64 / 1e6)
+            self.workspace_bytes as f64 / 1e6,
+            self.threads,
+            if self.threads == 1 { "" } else { "s" }
+        )
     }
 }
 
@@ -91,6 +136,20 @@ mod tests {
         st.time("x", || std::thread::sleep(Duration::from_millis(1)));
         st.time("x", || std::thread::sleep(Duration::from_millis(1)));
         assert!(st.get("x").unwrap() >= Duration::from_millis(2));
+    }
+
+    #[test]
+    fn stages_are_stamped_with_the_ctx_thread_count() {
+        let ctx = ExecCtx::with_threads(3);
+        let mut st = StageStats::for_ctx(&ctx);
+        st.time("p", || ());
+        assert_eq!(st.threads(), 3);
+        assert_eq!(st.stages()[0].threads, 3);
+        assert!(st.summary().contains("3 threads"));
+        let mut serial = StageStats::new();
+        serial.time("s", || ());
+        assert_eq!(serial.stages()[0].threads, 1);
+        assert!(serial.summary().contains("1 thread"));
     }
 
     #[test]

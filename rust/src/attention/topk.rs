@@ -13,9 +13,29 @@
 
 use super::simd::dot;
 use super::stats::ws_bytes;
+use crate::util::pool::{concat, ExecCtx};
 
-/// Materializing reference selection. Returns ((n, k) indices, workspace bytes).
+/// Materializing reference selection on the process-wide shared pool.
+/// Returns ((n, k) indices, workspace bytes).
 pub fn naive_topk(
+    q: &[f32],
+    centroids: &[f32],
+    n: usize,
+    d: usize,
+    block: usize,
+    topk: usize,
+) -> (Vec<i32>, u64) {
+    naive_topk_ctx(ExecCtx::global(), q, centroids, n, d, block, topk)
+}
+
+/// [`naive_topk`] on an explicit execution context. Both passes — the
+/// score-matrix fill and the per-row selection — partition query rows;
+/// per-row arithmetic (and the stable sort's tie order) is unchanged,
+/// so results are bit-identical at any thread count. The full N×n
+/// matrix is still materialized: that overhead *is* the original
+/// pipeline being reproduced.
+pub fn naive_topk_ctx(
+    ctx: &ExecCtx,
     q: &[f32],
     centroids: &[f32],
     n: usize,
@@ -25,29 +45,35 @@ pub fn naive_topk(
 ) -> (Vec<i32>, u64) {
     let nb = centroids.len() / d;
     // full score matrix, exactly like the original implementation
-    let mut scores = vec![0.0f32; n * nb];
-    for t in 0..n {
-        let qt = &q[t * d..(t + 1) * d];
-        for j in 0..nb {
-            scores[t * nb + j] = dot(qt, &centroids[j * d..(j + 1) * d]);
+    let scores: Vec<f32> = concat(ctx.pool().map_ranges(n, |range| {
+        let mut chunk = vec![0.0f32; range.len() * nb];
+        for (tt, t) in range.enumerate() {
+            let qt = &q[t * d..(t + 1) * d];
+            for j in 0..nb {
+                chunk[tt * nb + j] = dot(qt, &centroids[j * d..(j + 1) * d]);
+            }
         }
-    }
+        chunk
+    }));
     let ws = ws_bytes(&[scores.len()]);
-    let mut out = vec![-1i32; n * topk];
-    let mut order: Vec<usize> = Vec::with_capacity(nb);
-    for t in 0..n {
-        let own = t / block;
-        order.clear();
-        // strictly past blocks; NaN scores (degenerate q/centroid
-        // inputs) are excluded up front — `total_cmp` would rank +NaN
-        // above every real score, while the streaming kernel's
-        // `dotv > best` insertion never admits NaN
-        order.extend((0..own).filter(|&j| !scores[t * nb + j].is_nan()));
-        order.sort_by(|&a, &b| scores[t * nb + b].total_cmp(&scores[t * nb + a]));
-        for (slot, &j) in order.iter().take(topk).enumerate() {
-            out[t * topk + slot] = j as i32;
+    let out: Vec<i32> = concat(ctx.pool().map_ranges(n, |range| {
+        let mut chunk = vec![-1i32; range.len() * topk];
+        let mut order: Vec<usize> = Vec::with_capacity(nb);
+        for (tt, t) in range.enumerate() {
+            let own = t / block;
+            order.clear();
+            // strictly past blocks; NaN scores (degenerate q/centroid
+            // inputs) are excluded up front — `total_cmp` would rank +NaN
+            // above every real score, while the streaming kernel's
+            // `dotv > best` insertion never admits NaN
+            order.extend((0..own).filter(|&j| !scores[t * nb + j].is_nan()));
+            order.sort_by(|&a, &b| scores[t * nb + b].total_cmp(&scores[t * nb + a]));
+            for (slot, &j) in order.iter().take(topk).enumerate() {
+                chunk[tt * topk + slot] = j as i32;
+            }
         }
-    }
+        chunk
+    }));
     (out, ws)
 }
 
@@ -76,11 +102,30 @@ pub fn topk_insert(best_s: &mut [f32], best_i: &mut [i32], score: f32, index: i3
     }
 }
 
-/// Streaming selection (Flash TopK). Returns ((n, k) indices, workspace bytes).
+/// Streaming selection (Flash TopK) on the process-wide shared pool.
+/// Returns ((n, k) indices, workspace bytes).
+pub fn tiled_topk(
+    q: &[f32],
+    centroids: &[f32],
+    n: usize,
+    d: usize,
+    block: usize,
+    topk: usize,
+    tile_c: usize,
+) -> (Vec<i32>, u64) {
+    tiled_topk_ctx(ExecCtx::global(), q, centroids, n, d, block, topk, tile_c)
+}
+
+/// [`tiled_topk`] on an explicit execution context. Query rows are
+/// independent work units (each carries its own O(k) running state and
+/// streams centroid tiles in the same order), so partitioning them
+/// across workers selects bit-identically to the serial path.
 ///
 /// `tile_c` is the centroid tile width; the running top-k state is
 /// O(k) per query row — `ws` counts only the per-tile score buffer.
-pub fn tiled_topk(
+#[allow(clippy::too_many_arguments)]
+pub fn tiled_topk_ctx(
+    ctx: &ExecCtx,
     q: &[f32],
     centroids: &[f32],
     n: usize,
@@ -93,34 +138,35 @@ pub fn tiled_topk(
     // (widths larger than the candidate set are already handled by the
     // `min(own)` bound below and covered by regression tests)
     let tile_c = tile_c.max(1);
-    let _nb = centroids.len() / d;
-    let mut out = vec![-1i32; n * topk];
     // k = 0: empty selection, mirroring naive_topk (and avoiding the
     // `best_s[topk - 1]` underflow in the insertion below)
     if topk == 0 {
-        return (out, ws_bytes(&[tile_c]));
+        return (Vec::new(), ws_bytes(&[tile_c]));
     }
-    // per-row running state (scores descending)
-    let mut best_s = vec![f32::NEG_INFINITY; topk];
-    let mut best_i = vec![-1i32; topk];
     let ws = ws_bytes(&[tile_c + 2 * topk]);
-
-    for t in 0..n {
-        let own = t / block; // candidates: blocks [0, own)
-        let qt = &q[t * d..(t + 1) * d];
-        best_s.fill(f32::NEG_INFINITY);
-        best_i.fill(-1);
-        let mut j0 = 0;
-        while j0 < own {
-            let jend = (j0 + tile_c).min(own);
-            for j in j0..jend {
-                let dotv = dot(qt, &centroids[j * d..(j + 1) * d]);
-                topk_insert(&mut best_s, &mut best_i, dotv, j as i32);
+    let out: Vec<i32> = concat(ctx.pool().map_ranges(n, |range| {
+        let mut chunk = vec![-1i32; range.len() * topk];
+        // per-row running state (scores descending)
+        let mut best_s = vec![f32::NEG_INFINITY; topk];
+        let mut best_i = vec![-1i32; topk];
+        for (tt, t) in range.enumerate() {
+            let own = t / block; // candidates: blocks [0, own)
+            let qt = &q[t * d..(t + 1) * d];
+            best_s.fill(f32::NEG_INFINITY);
+            best_i.fill(-1);
+            let mut j0 = 0;
+            while j0 < own {
+                let jend = (j0 + tile_c).min(own);
+                for j in j0..jend {
+                    let dotv = dot(qt, &centroids[j * d..(j + 1) * d]);
+                    topk_insert(&mut best_s, &mut best_i, dotv, j as i32);
+                }
+                j0 = jend;
             }
-            j0 = jend;
+            chunk[tt * topk..(tt + 1) * topk].copy_from_slice(&best_i);
         }
-        out[t * topk..(t + 1) * topk].copy_from_slice(&best_i);
-    }
+        chunk
+    }));
     (out, ws)
 }
 

@@ -19,6 +19,7 @@ use crate::attention::MobaShape;
 use crate::config::AppConfig;
 use crate::eval::decode_eval;
 use crate::util::json::Json;
+use crate::util::pool::ExecCtx;
 use crate::Result;
 
 use super::report::{self, Table};
@@ -39,7 +40,9 @@ pub struct DecodePoint {
 /// The session is pre-filled by appending `n` tokens (untimed), then
 /// each timed step routes + attends without appending, so every backend
 /// sees the identical steady-state cache.
+#[allow(clippy::too_many_arguments)]
 pub fn measure_decode(
+    ctx: &ExecCtx,
     registry: &BackendRegistry,
     n: usize,
     d: usize,
@@ -60,7 +63,7 @@ pub fn measure_decode(
         }
         let t0 = Instant::now();
         for s in 0..steps {
-            let o = backend.forward_decode(&mut sess, &qs[s * d..(s + 1) * d]);
+            let o = backend.forward_decode(ctx, &mut sess, &qs[s * d..(s + 1) * d]);
             debug_assert_eq!(o.len(), d);
         }
         let per_token_s = t0.elapsed().as_secs_f64() / steps as f64;
@@ -76,7 +79,10 @@ pub fn measure_decode(
 }
 
 /// The `bench decode` target: parity table + per-token latency sweep.
-pub fn run_decode(cfg: &AppConfig, quick: bool) -> Result<()> {
+/// Returns the headline routed-vs-dense per-token speedup (the CI perf
+/// job's floor metric).
+pub fn run_decode(cfg: &AppConfig, quick: bool) -> Result<f64> {
+    let ctx = ExecCtx::global();
     let registry = BackendRegistry::with_defaults();
 
     // 1) decode↔prefill parity on small shapes (every backend)
@@ -85,7 +91,7 @@ pub fn run_decode(cfg: &AppConfig, quick: bool) -> Result<()> {
         MobaShape::new(96, 8, 16, 6), // fully routed
         MobaShape::new(256, 8, 32, 3),
     ];
-    let parity = decode_eval(&registry, &shapes, 0xDEC0);
+    let parity = decode_eval(ctx, &registry, &shapes, 0xDEC0);
     let mut pt = Table::new(
         "Decode parity — token-by-token forward_decode vs prefill forward",
         &["backend", "N", "B", "k", "max|Δ| vs prefill", "us/token"],
@@ -122,7 +128,7 @@ pub fn run_decode(cfg: &AppConfig, quick: bool) -> Result<()> {
     let mut blob = Vec::new();
     let mut headline: f64 = 0.0;
     for &n in &lens {
-        let points = measure_decode(&registry, n, d, block, topk, steps, 0xDEC0DE + n as u64);
+        let points = measure_decode(ctx, &registry, n, d, block, topk, steps, 0xDEC0DE + n as u64);
         let dense_s = points
             .iter()
             .find(|p| p.backend == "dense")
@@ -161,7 +167,8 @@ pub fn run_decode(cfg: &AppConfig, quick: bool) -> Result<()> {
             ("rows", Json::arr(blob)),
             ("headline_speedup_vs_dense", Json::from(headline)),
         ]),
-    )
+    )?;
+    Ok(headline)
 }
 
 #[cfg(test)]
@@ -172,7 +179,7 @@ mod tests {
     fn measure_covers_all_backends_and_sparse_gathers_less() {
         let registry = BackendRegistry::with_defaults();
         // 8 blocks, k=1: routed decode touches 2 blocks vs dense's 8
-        let points = measure_decode(&registry, 256, 8, 32, 1, 4, 9);
+        let points = measure_decode(ExecCtx::global(), &registry, 256, 8, 32, 1, 4, 9);
         assert_eq!(points.len(), registry.len());
         let dense = points.iter().find(|p| p.backend == "dense").unwrap();
         let flash = points.iter().find(|p| p.backend == "flash_moba").unwrap();

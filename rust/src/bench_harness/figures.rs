@@ -24,13 +24,14 @@ use std::time::Instant;
 use crate::attention::backend::AttentionBackend;
 use crate::attention::backend::BackendRegistry;
 use crate::attention::backward::{flash_moba_backward, naive_backward};
-use crate::attention::flash_moba::{flash_moba_forward, FlashMobaConfig};
+use crate::attention::flash_moba::{flash_moba_forward, flash_moba_forward_ctx, FlashMobaConfig};
 use crate::attention::moba_naive::moba_naive_forward;
 use crate::attention::stats::{ws_bytes, StageStats};
 use crate::attention::testutil::{qkv, Rng};
 use crate::attention::MobaShape;
 use crate::config::AppConfig;
 use crate::util::json::Json;
+use crate::util::pool::ExecCtx;
 use crate::Result;
 
 use super::report::{self, Table};
@@ -170,6 +171,7 @@ impl Fig3Row {
 }
 
 pub fn run_fig3(cfg: &AppConfig, quick: bool) -> Result<Vec<Fig3Row>> {
+    let ctx = ExecCtx::global();
     let registry = BackendRegistry::with_defaults();
     let b = cfg.bench.block;
     let k = cfg.bench.topk;
@@ -197,7 +199,7 @@ pub fn run_fig3(cfg: &AppConfig, quick: bool) -> Result<Vec<Fig3Row>> {
                 let mut topk_s = 0.0;
                 let mut measured_ws = 0u64;
                 p.fwd_s = Some(time_reps(reps, || {
-                    let (_, st) = backend.forward(&shape, &q, &kk, &v);
+                    let (_, st) = backend.forward(ctx, &shape, &q, &kk, &v);
                     topk_s += topk_seconds(&st);
                     measured_ws = st.workspace_bytes;
                 }));
@@ -326,12 +328,13 @@ fn point_json(p: &Point) -> Json {
 /// one N (five stages for the original, two for FlashMoBA, one for the
 /// dense FA-2 analogue).
 pub fn run_fig4(cfg: &AppConfig, n: usize) -> Result<()> {
+    let ctx = ExecCtx::global();
     let registry = BackendRegistry::with_defaults();
     let shape = MobaShape::new(n, cfg.bench.head_dim, cfg.bench.block, cfg.bench.topk);
     let (q, k, v) = qkv(4444, n, cfg.bench.head_dim);
 
     let mut t = Table::new(
-        &format!("Figure 4 — forward timing breakdown at N={n}"),
+        &format!("Figure 4 — forward timing breakdown at N={n}  [{} threads]", ctx.threads()),
         &["backend", "stage", "ms", "% of backend total"],
     );
     let mut all_stats: Vec<(String, StageStats)> = Vec::new();
@@ -339,13 +342,13 @@ pub fn run_fig4(cfg: &AppConfig, n: usize) -> Result<()> {
         if !backend.supports(&shape) {
             continue;
         }
-        let (_, st) = backend.forward(&shape, &q, &k, &v);
+        let (_, st) = backend.forward(ctx, &shape, &q, &k, &v);
         let total = st.total().as_secs_f64().max(1e-12);
-        for (stage, dur) in st.stages() {
-            let s = dur.as_secs_f64();
+        for rec in st.stages() {
+            let s = rec.wall.as_secs_f64();
             t.row(vec![
                 backend.name().into(),
-                stage.clone(),
+                rec.name.clone(),
                 report::ms(s),
                 format!("{:.0}%", 100.0 * s / total),
             ]);
@@ -374,10 +377,11 @@ pub fn run_fig4(cfg: &AppConfig, n: usize) -> Result<()> {
         Json::arr(
             st.stages()
                 .iter()
-                .map(|(s, d)| {
+                .map(|rec| {
                     Json::obj(vec![
-                        ("stage", Json::from(s.as_str())),
-                        ("s", Json::from(d.as_secs_f64())),
+                        ("stage", Json::from(rec.name.as_str())),
+                        ("s", Json::from(rec.wall.as_secs_f64())),
+                        ("threads", Json::from(rec.threads)),
                     ])
                 })
                 .collect(),
@@ -397,6 +401,32 @@ pub fn run_fig4(cfg: &AppConfig, n: usize) -> Result<()> {
         ("original_overhead_fraction", Json::from(overhead_frac)),
     ]);
     report::save_json(&cfg.results_dir, "fig4", &blob)
+}
+
+/// Multi-core calibration: the FlashMoBA forward at one Figure-3 shape,
+/// serial context vs the process pool. Returns (serial_wall /
+/// parallel_wall, pool thread count) — the `multicore_speedup` metric
+/// the CI perf job holds against its committed floor. The two runs are
+/// bit-identical by the pool's determinism contract; only wall time may
+/// differ.
+pub fn measure_multicore_speedup(cfg: &AppConfig, quick: bool) -> (f64, usize) {
+    let n = if quick { 8192 } else { 16384 };
+    let shape = MobaShape::new(n, cfg.bench.head_dim, cfg.bench.block, cfg.bench.topk);
+    let (q, k, v) = qkv(777, n, cfg.bench.head_dim);
+    let fm = FlashMobaConfig::default();
+    let serial = ExecCtx::serial();
+    let pooled = ExecCtx::global();
+    // warm caches so the first timed run isn't paying page faults
+    flash_moba_forward_ctx(&serial, &q, &k, &v, shape, fm);
+    flash_moba_forward_ctx(pooled, &q, &k, &v, shape, fm);
+    let reps = if quick { 2 } else { 3 };
+    let t_serial = time_reps(reps, || {
+        flash_moba_forward_ctx(&serial, &q, &k, &v, shape, fm);
+    });
+    let t_pooled = time_reps(reps, || {
+        flash_moba_forward_ctx(pooled, &q, &k, &v, shape, fm);
+    });
+    (t_serial / t_pooled, pooled.threads())
 }
 
 /// Ablation: FlashMoBA physical tile sizes (the §C.2 tuning trade-off).

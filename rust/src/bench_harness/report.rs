@@ -1,9 +1,12 @@
 //! Result formatting: aligned console tables (paper-row style) + JSON
-//! persistence under `results/`.
+//! persistence under `results/`, including the machine-readable
+//! `BENCH_<target>.json` summaries the CI perf job consumes.
 
 use std::path::Path;
 
+use crate::config::BenchParams;
 use crate::util::json::Json;
+use crate::util::pool::ExecCtx;
 use crate::Result;
 
 /// Simple aligned table printer.
@@ -86,6 +89,60 @@ pub fn save_json(dir: &Path, name: &str, value: &Json) -> Result<()> {
     Ok(())
 }
 
+/// Build the machine-readable `BENCH_<target>.json` blob (see README.md
+/// §Performance for the schema):
+///
+/// ```json
+/// {
+///   "target": "parity", "quick": true, "threads": 4, "wall_s": 1.2,
+///   "config": {"block": 128, "topk": 8, "head_dim": 64},
+///   "metrics": {"speedup_vs_dense": 2.1}
+/// }
+/// ```
+pub fn bench_summary(
+    target: &str,
+    wall_s: f64,
+    quick: bool,
+    bench: &BenchParams,
+    metrics: &[(String, f64)],
+) -> Json {
+    Json::obj(vec![
+        ("target", Json::from(target)),
+        ("quick", Json::from(quick)),
+        ("threads", Json::from(ExecCtx::global().threads())),
+        ("wall_s", Json::from(wall_s)),
+        (
+            "config",
+            Json::obj(vec![
+                ("block", Json::from(bench.block)),
+                ("topk", Json::from(bench.topk)),
+                ("head_dim", Json::from(bench.head_dim)),
+            ]),
+        ),
+        (
+            "metrics",
+            Json::Obj(metrics.iter().map(|(k, v)| (k.clone(), Json::from(*v))).collect()),
+        ),
+    ])
+}
+
+/// Write `BENCH_<target>.json` under `dir` (the artifact the CI
+/// perf-smoke job uploads and `flash-moba bench-check` gates on).
+pub fn save_bench_summary(
+    dir: &Path,
+    target: &str,
+    wall_s: f64,
+    quick: bool,
+    bench: &BenchParams,
+    metrics: &[(String, f64)],
+) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(format!("BENCH_{target}.json"));
+    std::fs::write(&path, bench_summary(target, wall_s, quick, bench, metrics).to_string_pretty())?;
+    println!("[bench] wrote {}", path.display());
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -116,5 +173,23 @@ mod tests {
         assert_eq!(f2(1.257), "1.26");
         assert_eq!(ms(0.0123), "12.3");
         assert_eq!(mb(2_500_000), "2.5");
+    }
+
+    /// The BENCH_* schema the CI floor check parses: target, threads,
+    /// config and a flat numeric metrics object.
+    #[test]
+    fn bench_summary_schema() {
+        let bench = BenchParams::default();
+        let metrics = vec![("speedup_vs_dense".to_string(), 2.5)];
+        let blob = bench_summary("parity", 1.25, true, &bench, &metrics);
+        let parsed = Json::parse(&blob.to_string_pretty()).unwrap();
+        assert_eq!(parsed.req("target").unwrap().as_str(), Some("parity"));
+        assert_eq!(parsed.req("quick").unwrap().as_bool(), Some(true));
+        assert!(parsed.req("threads").unwrap().as_usize().unwrap() >= 1);
+        assert_eq!(parsed.req("wall_s").unwrap().as_f64(), Some(1.25));
+        let cfg = parsed.req("config").unwrap();
+        assert_eq!(cfg.req("block").unwrap().as_usize(), Some(bench.block));
+        let m = parsed.req("metrics").unwrap();
+        assert_eq!(m.req("speedup_vs_dense").unwrap().as_f64(), Some(2.5));
     }
 }

@@ -8,10 +8,14 @@
 //! testbed's 1024-token training context).
 
 use std::path::PathBuf;
+use std::time::Instant;
 
-use crate::attention::backend::{self, BackendRegistry, ParityTolerance};
+use crate::attention::backend::{self, AttentionBackend, BackendRegistry, ParityTolerance};
+use crate::attention::testutil::qkv;
+use crate::attention::MobaShape;
 use crate::config::AppConfig;
 use crate::util::json::Json;
+use crate::util::pool::ExecCtx;
 use crate::data::corpus::{Corpus, CorpusConfig};
 use crate::data::longbench;
 use crate::data::niah::NiahVariant;
@@ -236,11 +240,13 @@ pub fn run_table_longbench(cfg: &AppConfig, runtime: &Runtime, scale: &str) -> R
 }
 
 /// Backend parity table: every registered `AttentionBackend` across
-/// the verification shape grid — deviation vs
-/// the dense oracle, workspace and latency — after *asserting* grid
-/// parity through the shared harness. Runs without artifacts; the only
-/// bench target that exercises the full registry end to end.
-pub fn run_table_parity(cfg: &AppConfig) -> Result<()> {
+/// the verification shape grid — deviation vs the dense oracle,
+/// workspace and latency — after *asserting* grid parity through the
+/// shared harness, plus a flash-vs-dense speed probe at a
+/// Figure-3-scale shape. Runs without artifacts. Returns the probe's
+/// speedup (the CI perf job's floor metric).
+pub fn run_table_parity(cfg: &AppConfig, quick: bool) -> Result<f64> {
+    let ctx = ExecCtx::global();
     let registry = BackendRegistry::with_defaults();
     backend::check_grid_parity(&registry, &ParityTolerance::default())
         .map_err(|e| anyhow::anyhow!("backend parity violated: {e}"))?;
@@ -249,7 +255,7 @@ pub fn run_table_parity(cfg: &AppConfig) -> Result<()> {
     // keeps pairwise outputs, the table wants timings/workspace — the
     // duplicated forward work is milliseconds at these shapes
     let shapes = backend::parity_grid();
-    let rows = substrate_eval(&registry, &shapes, 0xA11CE);
+    let rows = substrate_eval(ctx, &registry, &shapes, 0xA11CE);
     let mut t = Table::new(
         "Backend parity — registered backends vs the dense oracle (shape grid)",
         &["backend", "N", "B", "k", "density", "max|Δ| vs dense", "ws MB", "fwd ms"],
@@ -282,11 +288,58 @@ pub fn run_table_parity(cfg: &AppConfig) -> Result<()> {
         "parity OK: {} backends agree with the dense reference (full routing) and each other\n",
         registry.len()
     );
+
+    // speed probe: flash_moba vs dense at one fig3-scale geometry (the
+    // grid shapes are too small to separate the backends from noise).
+    // This number feeds the hard CI floor, so both backends get a
+    // warmup pass and the best of several reps — one scheduling hiccup
+    // on a shared runner must not flip the gate.
+    let n = if quick { 8192 } else { 16384 };
+    let probe = MobaShape::new(n, cfg.bench.head_dim, cfg.bench.block, cfg.bench.topk);
+    let (q, k, v) = qkv(0xBEEF, probe.n, probe.d);
+    let dense = registry.get("dense").expect("dense registered");
+    let flash = registry.get("flash_moba").expect("flash_moba registered");
+    let best_of = |b: &dyn AttentionBackend| -> f64 {
+        b.forward(ctx, &probe, &q, &k, &v); // warmup (page faults, caches)
+        let reps = if quick { 2 } else { 3 };
+        (0..reps)
+            .map(|_| {
+                let t0 = Instant::now();
+                b.forward(ctx, &probe, &q, &k, &v);
+                t0.elapsed().as_secs_f64()
+            })
+            .fold(f64::INFINITY, f64::min)
+    };
+    let dense_s = best_of(dense);
+    let flash_s = best_of(flash);
+    let speedup = dense_s / flash_s.max(1e-12);
+    println!(
+        "speed probe at N={n} [B={}, k={}, {} threads]: dense {:.1} ms, flash_moba {:.1} ms -> {speedup:.2}x\n",
+        probe.block,
+        probe.topk,
+        ctx.threads(),
+        dense_s * 1e3,
+        flash_s * 1e3
+    );
+
     report::save_json(
         &cfg.results_dir,
         "parity",
-        &Json::obj(vec![("rows", Json::arr(blob))]),
-    )
+        &Json::obj(vec![
+            ("rows", Json::arr(blob)),
+            (
+                "speed_probe",
+                Json::obj(vec![
+                    ("n", Json::from(probe.n)),
+                    ("threads", Json::from(ctx.threads())),
+                    ("dense_s", Json::from(dense_s)),
+                    ("flash_moba_s", Json::from(flash_s)),
+                    ("speedup_vs_dense", Json::from(speedup)),
+                ]),
+            ),
+        ]),
+    )?;
+    Ok(speedup)
 }
 
 /// Figure 2: block-size ablation summary (ppl + NIAH avg vs B), derived

@@ -62,6 +62,7 @@ use crate::attention::decode::DecodeSession;
 use crate::attention::MobaShape;
 use crate::config::ServeParams;
 use crate::runtime::{Runtime, Tensor};
+use crate::util::pool::ExecCtx;
 use crate::Result;
 
 /// What the worker thread executes batches on.
@@ -292,6 +293,10 @@ fn worker_loop(
     let mut pending: Pending = Vec::new();
     let mut sessions: Sessions = HashMap::new();
     let mut next_session: u64 = 1;
+    // one worker pool for the whole serving path (MOBA_THREADS budget):
+    // single-item batches parallelize inside the kernel, multi-item
+    // batches fan items across it — bit-identical either way
+    let ctx = ExecCtx::from_env();
 
     loop {
         // wait for work or the earliest batch deadline
@@ -417,7 +422,7 @@ fn worker_loop(
             std::iter::from_fn(|| batcher.poll(now)).collect()
         };
         for batch in batches {
-            run_batch(&exec, &router, &params, batch, &mut pending, &mut sessions, &metrics);
+            run_batch(&exec, &router, &params, &ctx, batch, &mut pending, &mut sessions, &metrics);
         }
         if shutdown {
             for (_, otx) in pending.drain(..) {
@@ -436,10 +441,12 @@ fn respond(pending: &mut Pending, id: u64, result: Result<AttnResponse>) {
 }
 
 /// Dispatch a ready batch to the active execution path.
+#[allow(clippy::too_many_arguments)]
 fn run_batch(
     exec: &Exec,
     router: &Router,
     params: &ServeParams,
+    ctx: &ExecCtx,
     batch: Batch,
     pending: &mut Pending,
     sessions: &mut Sessions,
@@ -448,7 +455,7 @@ fn run_batch(
     match exec {
         Exec::Pjrt(runtime) => run_batch_pjrt(runtime, router, batch, pending, metrics),
         Exec::Cpu(registry) => {
-            run_batch_cpu(registry, params, batch, pending, sessions, metrics)
+            run_batch_cpu(registry, params, ctx, batch, pending, sessions, metrics)
         }
     }
 }
@@ -457,9 +464,18 @@ fn run_batch(
 /// at their native length through the [`BackendRegistry`] (no padding),
 /// decode steps append to their session's cache and attend over it —
 /// so batching amortizes queueing rather than kernel launches.
+///
+/// Prefill items fan out across the worker pool (each item on one
+/// worker, running the serial kernel path) instead of queueing behind
+/// one another; a batch of one parallelizes *inside* the kernel. Both
+/// paths produce bit-identical outputs (the pool's determinism
+/// contract), so batching never changes what a request computes.
+/// Decode steps mutate their session's cache and stay strictly
+/// sequential in lane order.
 fn run_batch_cpu(
     registry: &BackendRegistry,
     params: &ServeParams,
+    ctx: &ExecCtx,
     batch: Batch,
     pending: &mut Pending,
     sessions: &mut Sessions,
@@ -468,10 +484,44 @@ fn run_batch_cpu(
     let occupancy = batch.items.len();
     metrics.batches.fetch_add(1, Ordering::Relaxed);
     metrics.batched_requests.fetch_add(occupancy as u64, Ordering::Relaxed);
+
+    // phase 1: compute all prefill outputs (item-level fan-out when the
+    // batch has several; intra-kernel parallelism when it has one)
+    let prefills: Vec<&AttnRequest> = batch
+        .items
+        .iter()
+        .filter_map(|(item, _)| match item {
+            WorkItem::Prefill(req) => Some(req),
+            WorkItem::Decode(_) => None,
+        })
+        .collect();
+    let prefill_results: Vec<Result<Vec<f32>>> = if prefills.len() > 1 && ctx.threads() > 1 {
+        let serial = ExecCtx::serial();
+        ctx.pool()
+            .map_ranges(prefills.len(), |range| {
+                range
+                    .map(|i| {
+                        run_cpu_request(registry, params, &serial, &batch.artifact, prefills[i])
+                    })
+                    .collect::<Vec<_>>()
+            })
+            .into_iter()
+            .flatten()
+            .collect()
+    } else {
+        prefills
+            .iter()
+            .map(|&req| run_cpu_request(registry, params, ctx, &batch.artifact, req))
+            .collect()
+    };
+
+    // phase 2: respond in item order; decode steps execute here,
+    // sequentially, against the worker-owned session table
+    let mut prefill_iter = prefill_results.into_iter();
     for (item, enq) in &batch.items {
         match item {
             WorkItem::Prefill(req) => {
-                let result = run_cpu_request(registry, params, &batch.artifact, req);
+                let result = prefill_iter.next().expect("one result per prefill item");
                 let executed = Instant::now();
                 match result {
                     Ok(o) => {
@@ -494,7 +544,7 @@ fn run_batch_cpu(
                 }
             }
             WorkItem::Decode(step) => {
-                let result = run_cpu_decode(registry, sessions, step, metrics);
+                let result = run_cpu_decode(registry, ctx, sessions, step, metrics);
                 let executed = Instant::now();
                 match result {
                     Ok((o, served_n)) => {
@@ -525,6 +575,7 @@ fn run_batch_cpu(
 /// length after the append).
 fn run_cpu_decode(
     registry: &BackendRegistry,
+    ctx: &ExecCtx,
     sessions: &mut Sessions,
     step: &DecodeStep,
     metrics: &Metrics,
@@ -537,7 +588,7 @@ fn run_cpu_decode(
         .or_else(|| registry.get("dense"))
         .ok_or_else(|| anyhow!("no backend available for decode target {target}"))?;
     sess.append(&step.k, &step.v);
-    let o = backend.forward_decode(sess, &step.q);
+    let o = backend.forward_decode(ctx, sess, &step.q);
     metrics.decode_steps.fetch_add(1, Ordering::Relaxed);
     metrics.decode_payload_bytes.fetch_add(step.payload_bytes(), Ordering::Relaxed);
     Ok((o, sess.len()))
@@ -549,6 +600,7 @@ fn run_cpu_decode(
 fn run_cpu_request(
     registry: &BackendRegistry,
     params: &ServeParams,
+    ctx: &ExecCtx,
     routed: &str,
     req: &AttnRequest,
 ) -> Result<Vec<f32>> {
@@ -571,7 +623,7 @@ fn run_cpu_request(
         }
         AttnKind::Dense => (dense, dense_shape(req)),
     };
-    let (o, _stats) = backend.forward(&shape, &req.q, &req.k, &req.v);
+    let (o, _stats) = backend.forward(ctx, &shape, &req.q, &req.k, &req.v);
     Ok(o)
 }
 

@@ -18,6 +18,7 @@ use crate::attention::backend::{AttentionBackend, BackendRegistry};
 use crate::attention::dense::naive_attention;
 use crate::attention::testutil::{max_abs_diff, qkv};
 use crate::attention::MobaShape;
+use crate::util::pool::ExecCtx;
 use crate::data::{corpus::Corpus, longbench, niah, niah::NiahVariant, vocabulary::Vocab};
 use crate::runtime::{Executable, ParamStore, Runtime, Tensor, VariantSpec};
 use crate::Result;
@@ -41,9 +42,11 @@ pub struct SubstrateRow {
 
 /// Evaluate every supporting backend in `registry` on each shape:
 /// output deviation vs the dense oracle, wall time and workspace. All
-/// dispatch goes through the [`AttentionBackend`] trait, so newly
-/// registered backends are covered without touching this code.
+/// dispatch goes through the [`AttentionBackend`] trait (on the shared
+/// `ctx` pool), so newly registered backends are covered without
+/// touching this code.
 pub fn substrate_eval(
+    ctx: &ExecCtx,
     registry: &BackendRegistry,
     shapes: &[MobaShape],
     seed: u64,
@@ -57,7 +60,7 @@ pub fn substrate_eval(
                 continue;
             }
             let t0 = Instant::now();
-            let (o, st) = b.forward(shape, &q, &k, &v);
+            let (o, st) = b.forward(ctx, shape, &q, &k, &v);
             let fwd_s = t0.elapsed().as_secs_f64();
             rows.push(SubstrateRow {
                 backend: b.name().to_string(),
@@ -95,6 +98,7 @@ pub struct DecodeParityRow {
 /// and record the worst row deviation. Dispatch goes through the trait,
 /// so newly registered backends are covered automatically.
 pub fn decode_eval(
+    ctx: &ExecCtx,
     registry: &BackendRegistry,
     shapes: &[MobaShape],
     seed: u64,
@@ -108,13 +112,13 @@ pub fn decode_eval(
             if !b.supports(shape) {
                 continue;
             }
-            let (prefill, _) = b.forward(shape, &q, &k, &v);
+            let (prefill, _) = b.forward(ctx, shape, &q, &k, &v);
             let mut sess = DecodeSession::new(d, shape.block, shape.topk);
             let mut max_dev = 0.0f32;
             let t0 = Instant::now();
             for t in 0..shape.n {
                 sess.append(&k[t * d..(t + 1) * d], &v[t * d..(t + 1) * d]);
-                let o = b.forward_decode(&mut sess, &q[t * d..(t + 1) * d]);
+                let o = b.forward_decode(ctx, &mut sess, &q[t * d..(t + 1) * d]);
                 max_dev = max_dev.max(max_abs_diff(&o, &prefill[t * d..(t + 1) * d]));
             }
             let per_token_s = t0.elapsed().as_secs_f64() / shape.n as f64;
@@ -294,7 +298,7 @@ mod tests {
     fn substrate_eval_covers_all_supporting_backends() {
         let reg = BackendRegistry::with_defaults();
         let shapes = vec![MobaShape::new(64, 8, 16, 1), MobaShape::new(128, 8, 32, 2)];
-        let rows = substrate_eval(&reg, &shapes, 42);
+        let rows = substrate_eval(ExecCtx::global(), &reg, &shapes, 42);
         // 3 backends x 2 shapes, all supported
         assert_eq!(rows.len(), 6);
         for name in ["dense", "moba_naive", "flash_moba"] {
@@ -305,7 +309,7 @@ mod tests {
     #[test]
     fn dense_rows_have_negligible_deviation() {
         let reg = BackendRegistry::with_defaults();
-        let rows = substrate_eval(&reg, &[MobaShape::new(128, 16, 32, 1)], 7);
+        let rows = substrate_eval(ExecCtx::global(), &reg, &[MobaShape::new(128, 16, 32, 1)], 7);
         let dense = rows.iter().find(|r| r.backend == "dense").unwrap();
         assert!(dense.max_dev_vs_dense < 5e-5, "dev {}", dense.max_dev_vs_dense);
         // density describes the routing geometry: (k+1)*B/N = 2*32/128
@@ -316,7 +320,7 @@ mod tests {
     fn full_routing_rows_match_dense_for_sparse_backends() {
         let reg = BackendRegistry::with_defaults();
         // topk == n_blocks: every backend reduces to dense attention
-        let rows = substrate_eval(&reg, &[MobaShape::new(128, 8, 16, 8)], 9);
+        let rows = substrate_eval(ExecCtx::global(), &reg, &[MobaShape::new(128, 8, 16, 8)], 9);
         for r in &rows {
             assert!(r.max_dev_vs_dense < 5e-4, "{} dev {}", r.backend, r.max_dev_vs_dense);
         }
@@ -326,7 +330,7 @@ mod tests {
     fn decode_eval_shows_parity_for_every_backend() {
         let reg = BackendRegistry::with_defaults();
         let shapes = vec![MobaShape::new(96, 8, 16, 2), MobaShape::new(64, 4, 16, 4)];
-        let rows = decode_eval(&reg, &shapes, 21);
+        let rows = decode_eval(ExecCtx::global(), &reg, &shapes, 21);
         assert_eq!(rows.len(), reg.len() * shapes.len());
         for r in &rows {
             assert!(
@@ -343,7 +347,7 @@ mod tests {
     #[test]
     fn sparse_routing_deviates_but_stays_bounded() {
         let reg = BackendRegistry::with_defaults();
-        let rows = substrate_eval(&reg, &[MobaShape::new(256, 8, 32, 1)], 11);
+        let rows = substrate_eval(ExecCtx::global(), &reg, &[MobaShape::new(256, 8, 32, 1)], 11);
         let flash = rows.iter().find(|r| r.backend == "flash_moba").unwrap();
         // sparse attention is an approximation: measurably off the
         // oracle, but not unboundedly so on gaussian inputs

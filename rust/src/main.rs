@@ -9,9 +9,11 @@
 //! ```
 
 use std::path::{Path, PathBuf};
+use std::time::Instant;
 
-use flash_moba::bench_harness::{decode as decode_bench, figures, snr_harness, tables};
+use flash_moba::bench_harness::{decode as decode_bench, figures, report, snr_harness, tables};
 use flash_moba::config::AppConfig;
+use flash_moba::util::json::Json;
 use flash_moba::coordinator::{AttnKind, AttnRequest, Coordinator};
 use flash_moba::data::corpus::{Corpus, CorpusConfig};
 use flash_moba::eval::Evaluator;
@@ -37,12 +39,23 @@ COMMANDS:
                                (parity/decode/fig3/fig4/snr/ablate-tiles
                                need no artifacts: they run the CPU
                                substrate through the AttentionBackend
-                               registry)
+                               registry; every target writes a
+                               machine-readable BENCH_<target>.json
+                               under the results dir)
+  bench-check                  gate BENCH_*.json metrics against the
+                               committed floors (--floor
+                               ci/bench_floor.json, --results DIR);
+                               exits non-zero below any floor
   serve-demo                   run the serving coordinator demo (--requests N)
 
 GLOBAL OPTIONS:
   --config path.json           partial config override
   --artifacts DIR              artifacts directory (default: artifacts)
+
+ENVIRONMENT:
+  MOBA_THREADS                 worker threads for the attention substrate
+                               (default: all cores; outputs are
+                               bit-identical at any setting)
 ";
 
 fn main() -> Result<()> {
@@ -72,6 +85,10 @@ fn main() -> Result<()> {
             let target = args.pos(1).unwrap_or("all").to_string();
             bench(&cfg, &target, args.has("quick"))
         }
+        "bench-check" => bench_check(
+            Path::new(args.get("floor").unwrap_or("ci/bench_floor.json")),
+            args.get("results").map(Path::new).unwrap_or(&cfg.results_dir),
+        ),
         "serve-demo" => serve_demo(&cfg, args.get_usize("requests").unwrap_or(32)),
         other => {
             eprintln!("unknown command {other:?}\n\n{USAGE}");
@@ -158,26 +175,52 @@ fn bench(cfg: &AppConfig, target: &str, quick: bool) -> Result<()> {
         "table1" | "table2" | "table3" | "table4" | "table5" | "table6" | "fig2" | "all"
     );
     let rt = if needs_runtime { Some(Runtime::load(&cfg.artifacts_dir)?) } else { None };
-    let run_one = |cfg: &AppConfig, target: &str| -> Result<()> {
+    // each target returns the headline metrics for its BENCH_<target>.json
+    let run_one = |cfg: &AppConfig, target: &str| -> Result<Vec<(String, f64)>> {
+        let none = |r: Result<()>| r.map(|_| Vec::new());
         match target {
-            "table1" => tables::run_table_lm(cfg, rt.as_ref().unwrap(), "tiny"),
-            "table2" => tables::run_table_lm(cfg, rt.as_ref().unwrap(), "small"),
-            "table3" => tables::run_table_niah(cfg, rt.as_ref().unwrap(), "tiny"),
-            "table4" => tables::run_table_niah(cfg, rt.as_ref().unwrap(), "small"),
-            "table5" => tables::run_table_longbench(cfg, rt.as_ref().unwrap(), "tiny"),
-            "table6" => tables::run_table_longbench(cfg, rt.as_ref().unwrap(), "small"),
-            "fig2" => tables::run_fig2(cfg, rt.as_ref().unwrap()),
+            "table1" => none(tables::run_table_lm(cfg, rt.as_ref().unwrap(), "tiny")),
+            "table2" => none(tables::run_table_lm(cfg, rt.as_ref().unwrap(), "small")),
+            "table3" => none(tables::run_table_niah(cfg, rt.as_ref().unwrap(), "tiny")),
+            "table4" => none(tables::run_table_niah(cfg, rt.as_ref().unwrap(), "small")),
+            "table5" => none(tables::run_table_longbench(cfg, rt.as_ref().unwrap(), "tiny")),
+            "table6" => none(tables::run_table_longbench(cfg, rt.as_ref().unwrap(), "small")),
+            "fig2" => none(tables::run_fig2(cfg, rt.as_ref().unwrap())),
             "fig3" => {
                 let rows = figures::run_fig3(cfg, quick)?;
-                figures::print_fig3(cfg, &rows).map(|_| ())
+                let headline = figures::print_fig3(cfg, &rows)?;
+                let (multicore, threads) = figures::measure_multicore_speedup(cfg, quick);
+                println!(
+                    "multi-core: flash_moba forward {multicore:.2}x vs serial ({threads} threads)\n"
+                );
+                Ok(vec![
+                    ("headline_speedup_vs_dense".into(), headline),
+                    ("multicore_speedup".into(), multicore),
+                ])
             }
-            "fig4" => figures::run_fig4(cfg, if quick { 4096 } else { 16384 }),
-            "snr" => snr_harness::run_snr(cfg, if quick { 1000 } else { 4000 }),
-            "parity" => tables::run_table_parity(cfg),
-            "decode" => decode_bench::run_decode(cfg, quick),
-            "ablate-tiles" => figures::run_tile_ablation(cfg, if quick { 2048 } else { 8192 }),
+            "fig4" => none(figures::run_fig4(cfg, if quick { 4096 } else { 16384 })),
+            "snr" => none(snr_harness::run_snr(cfg, if quick { 1000 } else { 4000 })),
+            "parity" => tables::run_table_parity(cfg, quick)
+                .map(|s| vec![("speedup_vs_dense".into(), s)]),
+            "decode" => decode_bench::run_decode(cfg, quick)
+                .map(|s| vec![("speedup_vs_dense".into(), s)]),
+            "ablate-tiles" => {
+                none(figures::run_tile_ablation(cfg, if quick { 2048 } else { 8192 }))
+            }
             other => Err(anyhow::anyhow!("unknown bench target {other}")),
         }
+    };
+    let run_and_emit = |cfg: &AppConfig, t: &str| -> Result<()> {
+        let t0 = Instant::now();
+        let metrics = run_one(cfg, t)?;
+        report::save_bench_summary(
+            &cfg.results_dir,
+            t,
+            t0.elapsed().as_secs_f64(),
+            quick,
+            &cfg.bench,
+            &metrics,
+        )
     };
     if target == "all" {
         for t in [
@@ -185,11 +228,70 @@ fn bench(cfg: &AppConfig, target: &str, quick: bool) -> Result<()> {
             "table5", "fig2", "table2", "table4", "table6",
         ] {
             println!("\n######## bench {t} ########");
-            run_one(cfg, t)?;
+            run_and_emit(cfg, t)?;
         }
         Ok(())
     } else {
-        run_one(cfg, target)
+        run_and_emit(cfg, target)
+    }
+}
+
+/// `bench-check`: compare every metric named in the committed floor
+/// file against the matching `BENCH_<target>.json` in the results dir.
+/// A missing file, a missing metric or a value below its floor fails
+/// the run — this is the CI perf gate.
+fn bench_check(floor_path: &Path, results_dir: &Path) -> Result<()> {
+    let floors = Json::parse(
+        &std::fs::read_to_string(floor_path)
+            .map_err(|e| anyhow::anyhow!("reading floor file {floor_path:?}: {e}"))?,
+    )?;
+    let targets = floors
+        .as_obj()
+        .ok_or_else(|| anyhow::anyhow!("floor file must be an object of targets"))?;
+    let mut failures: Vec<String> = Vec::new();
+    for (target, metrics) in targets {
+        let path = results_dir.join(format!("BENCH_{target}.json"));
+        let blob = match std::fs::read_to_string(&path) {
+            Ok(text) => Json::parse(&text)
+                .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?,
+            Err(e) => {
+                failures.push(format!("{target}: missing {} ({e})", path.display()));
+                continue;
+            }
+        };
+        let got = blob.get("metrics");
+        let Some(floor_metrics) = metrics.as_obj() else {
+            failures.push(format!(
+                "{target}: floor entry must be an object of metric -> floor pairs"
+            ));
+            continue;
+        };
+        for (metric, floor) in floor_metrics {
+            let Some(floor) = floor.as_f64() else {
+                failures.push(format!("{target}.{metric}: floor is not a number"));
+                continue;
+            };
+            match got.and_then(|m| m.get(metric)).and_then(|v| v.as_f64()) {
+                Some(v) if v >= floor => {
+                    println!("[bench-check] OK   {target}.{metric} = {v:.3} (floor {floor:.3})");
+                }
+                Some(v) => {
+                    failures.push(format!("{target}.{metric} = {v:.3} below floor {floor:.3}"));
+                }
+                None => {
+                    failures.push(format!("{target}.{metric} missing from {}", path.display()));
+                }
+            }
+        }
+    }
+    if failures.is_empty() {
+        println!("[bench-check] all floors hold");
+        Ok(())
+    } else {
+        for f in &failures {
+            eprintln!("[bench-check] FAIL {f}");
+        }
+        Err(anyhow::anyhow!("{} bench floor violation(s)", failures.len()))
     }
 }
 

@@ -6,7 +6,11 @@
 //!   results persistence).
 //! * [`bench`] — tiny criterion-style timing harness for `cargo bench`.
 //! * [`cli`] — flag/positional argument parsing for the binary.
+//! * [`pool`] — scoped thread pool + [`pool::ExecCtx`]: the
+//!   deterministic multi-core execution layer under every attention
+//!   backend (`MOBA_THREADS` workers, bit-identical to serial).
 
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod pool;

@@ -1,0 +1,322 @@
+//! Zero-dependency scoped thread pool + the [`ExecCtx`] execution
+//! context threaded through every attention backend.
+//!
+//! Design constraints (see README.md §Performance):
+//!
+//! * **Determinism.** Every parallel kernel in the substrate partitions
+//!   *independent* work units (query rows, query tiles, key blocks)
+//!   into contiguous ranges and runs the unchanged serial arithmetic on
+//!   each unit. There are no cross-thread reductions, so the f32
+//!   results are bit-identical to the serial path at any worker count —
+//!   the property suite and the CI `MOBA_THREADS={1,4}` matrix both
+//!   pin this.
+//! * **No dependencies.** Built on [`std::thread::scope`]: each
+//!   parallel region spawns at most `workers` scoped threads and joins
+//!   them before returning. Worker threads never outlive a call, so
+//!   there is no shared mutable pool state to poison — a panicking task
+//!   propagates to the caller (after all siblings are joined) and the
+//!   pool remains usable.
+//! * **Serial fast path.** With one worker (or one task) everything
+//!   runs inline on the caller's thread; `MOBA_THREADS=1` spawns
+//!   nothing.
+//!
+//! Known trade-off: spawning scoped threads per region costs tens of
+//! microseconds, which the tiniest shapes (the parity-grid tests, a
+//! short serving prefill) don't amortize. That overhead was accepted
+//! over persistent workers because persistence needs either unsafe
+//! lifetime erasure or 'static channels — the wrong risk profile for a
+//! correctness-first substrate; callers that care run `MOBA_THREADS=1`
+//! or an [`ExecCtx::serial`] context.
+
+use std::ops::Range;
+use std::sync::{Arc, OnceLock};
+
+/// Scoped fork-join pool: a worker-count budget plus the spawn/join
+/// helpers every parallel kernel uses.
+#[derive(Debug)]
+pub struct ThreadPool {
+    workers: usize,
+}
+
+/// Parse a `MOBA_THREADS`-style override; `None` means "use the
+/// hardware default". Zero and garbage are rejected rather than
+/// clamped so a typo cannot silently serialize the substrate.
+fn parse_workers(var: Option<&str>) -> Option<usize> {
+    var.and_then(|s| s.trim().parse::<usize>().ok()).filter(|&w| w >= 1)
+}
+
+impl ThreadPool {
+    pub fn new(workers: usize) -> Self {
+        Self { workers: workers.max(1) }
+    }
+
+    /// Worker count from the `MOBA_THREADS` env var (default: all
+    /// available cores).
+    pub fn from_env() -> Self {
+        let workers = parse_workers(std::env::var("MOBA_THREADS").ok().as_deref())
+            .unwrap_or_else(|| {
+                std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+            });
+        Self::new(workers)
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run the tasks concurrently and return the results in task order.
+    /// Callers hand over at most [`ThreadPool::workers`] tasks (use
+    /// [`partition`] to chunk larger work lists). The first task runs
+    /// inline on the calling thread — it would otherwise idle in the
+    /// join — so a region of W tasks spawns only W-1 threads. An empty
+    /// task list is a no-op; a single task runs entirely inline. If a
+    /// task panics, the panic propagates to the caller after every
+    /// sibling has been joined — the pool itself holds no state and
+    /// stays usable.
+    #[allow(clippy::type_complexity)]
+    pub fn run_tasks<'env, T: Send>(
+        &self,
+        mut tasks: Vec<Box<dyn FnOnce() -> T + Send + 'env>>,
+    ) -> Vec<T> {
+        if tasks.is_empty() {
+            return Vec::new();
+        }
+        if tasks.len() == 1 {
+            let task = tasks.pop().unwrap();
+            return vec![task()];
+        }
+        std::thread::scope(|s| {
+            let mut rest = tasks.into_iter();
+            let first = rest.next().expect("tasks is non-empty");
+            let handles: Vec<_> = rest.map(|t| s.spawn(t)).collect();
+            let mut out = Vec::with_capacity(handles.len() + 1);
+            out.push(first());
+            for h in handles {
+                out.push(h.join().unwrap_or_else(|p| std::panic::resume_unwind(p)));
+            }
+            out
+        })
+    }
+
+    /// Partition `0..n` into at most `workers` contiguous ranges, run
+    /// `f` on each range concurrently (via [`ThreadPool::run_tasks`]),
+    /// and return the results in range order (so concatenating them
+    /// reassembles `0..n`). `n == 0` is a no-op returning an empty vec.
+    pub fn map_ranges<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(Range<usize>) -> T + Sync,
+    {
+        let ranges = partition(n, self.workers);
+        if ranges.len() <= 1 {
+            return ranges.into_iter().map(f).collect();
+        }
+        let fr = &f;
+        let tasks: Vec<Box<dyn FnOnce() -> T + Send + '_>> = ranges
+            .into_iter()
+            .map(|r| Box::new(move || fr(r)) as Box<dyn FnOnce() -> T + Send + '_>)
+            .collect();
+        self.run_tasks(tasks)
+    }
+}
+
+/// Split `0..n` into at most `parts` contiguous, near-equal, non-empty
+/// ranges (the first `n % parts` ranges get one extra element).
+/// Deterministic in (n, parts); empty for n == 0.
+pub fn partition(n: usize, parts: usize) -> Vec<Range<usize>> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let parts = parts.clamp(1, n);
+    let base = n / parts;
+    let rem = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for i in 0..parts {
+        let len = base + usize::from(i < rem);
+        out.push(start..start + len);
+        start += len;
+    }
+    debug_assert_eq!(start, n);
+    out
+}
+
+/// Concatenate per-range result chunks back into one buffer (the
+/// companion of [`ThreadPool::map_ranges`]).
+pub fn concat<T: Clone>(parts: Vec<Vec<T>>) -> Vec<T> {
+    let total = parts.iter().map(|p| p.len()).sum();
+    let mut out = Vec::with_capacity(total);
+    for p in &parts {
+        out.extend_from_slice(p);
+    }
+    out
+}
+
+/// Execution context handed to every [`AttentionBackend`]
+/// (`crate::attention::backend::AttentionBackend`) call: the shared
+/// thread pool the kernels partition their work over. Cheap to clone
+/// (an [`Arc`]); `threads() == 1` selects the pure serial path.
+#[derive(Debug, Clone)]
+pub struct ExecCtx {
+    pool: Arc<ThreadPool>,
+}
+
+impl ExecCtx {
+    pub fn new(pool: ThreadPool) -> Self {
+        Self { pool: Arc::new(pool) }
+    }
+
+    /// A context with exactly `n` workers (tests pin 1 vs N to assert
+    /// bit-identical outputs).
+    pub fn with_threads(n: usize) -> Self {
+        Self::new(ThreadPool::new(n))
+    }
+
+    /// The single-threaded context (identical results, no spawning).
+    pub fn serial() -> Self {
+        Self::with_threads(1)
+    }
+
+    /// A fresh context from `MOBA_THREADS` / available cores.
+    pub fn from_env() -> Self {
+        Self::new(ThreadPool::from_env())
+    }
+
+    /// The process-wide shared context (env read once). Entry points
+    /// that take no explicit context — the compat kernel wrappers, the
+    /// bench harness — run on this pool, so the whole process shares
+    /// one worker budget.
+    pub fn global() -> &'static ExecCtx {
+        static GLOBAL: OnceLock<ExecCtx> = OnceLock::new();
+        GLOBAL.get_or_init(ExecCtx::from_env)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.pool.workers()
+    }
+
+    pub fn pool(&self) -> &ThreadPool {
+        &self.pool
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::panic::{catch_unwind, AssertUnwindSafe};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn partition_covers_contiguously() {
+        for (n, parts) in [(0, 4), (1, 4), (7, 3), (8, 3), (9, 3), (100, 7), (3, 10)] {
+            let ranges = partition(n, parts);
+            assert!(ranges.len() <= parts.max(1));
+            let mut next = 0;
+            for r in &ranges {
+                assert_eq!(r.start, next, "n={n} parts={parts}");
+                assert!(!r.is_empty(), "n={n} parts={parts}");
+                next = r.end;
+            }
+            assert_eq!(next, n, "n={n} parts={parts}");
+            // near-equal: sizes differ by at most one
+            if let (Some(max), Some(min)) = (
+                ranges.iter().map(|r| r.len()).max(),
+                ranges.iter().map(|r| r.len()).min(),
+            ) {
+                assert!(max - min <= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_items_is_a_noop() {
+        let pool = ThreadPool::new(4);
+        assert!(pool.map_ranges(0, |r| r.len()).is_empty());
+        assert!(pool.run_tasks::<usize>(Vec::new()).is_empty());
+    }
+
+    #[test]
+    fn map_ranges_preserves_order_and_runs_everything() {
+        for workers in [1, 2, 3, 8] {
+            let pool = ThreadPool::new(workers);
+            let counter = AtomicUsize::new(0);
+            let parts = pool.map_ranges(23, |r| {
+                counter.fetch_add(r.len(), Ordering::Relaxed);
+                r.collect::<Vec<usize>>()
+            });
+            assert_eq!(counter.load(Ordering::Relaxed), 23);
+            let flat: Vec<usize> = parts.into_iter().flatten().collect();
+            assert_eq!(flat, (0..23).collect::<Vec<_>>(), "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn run_tasks_returns_in_task_order() {
+        let pool = ThreadPool::new(4);
+        let tasks: Vec<Box<dyn FnOnce() -> usize + Send>> = (0..4)
+            .map(|i| {
+                Box::new(move || {
+                    // later tasks finish first; order must still hold
+                    std::thread::sleep(std::time::Duration::from_millis(4 - i as u64));
+                    i
+                }) as Box<dyn FnOnce() -> usize + Send>
+            })
+            .collect();
+        assert_eq!(pool.run_tasks(tasks), vec![0, 1, 2, 3]);
+    }
+
+    /// A panicking task propagates to the caller but does not poison
+    /// the pool: subsequent parallel regions run normally.
+    #[test]
+    fn panic_propagates_without_poisoning_the_pool() {
+        let pool = ThreadPool::new(4);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let tasks: Vec<Box<dyn FnOnce() + Send>> = vec![
+                Box::new(|| panic!("task panic")),
+                Box::new(|| ()),
+                Box::new(|| ()),
+            ];
+            pool.run_tasks(tasks);
+        }));
+        assert!(result.is_err(), "panic must reach the caller");
+        // the pool is stateless: the next region works
+        let sums = pool.map_ranges(16, |r| r.sum::<usize>());
+        assert_eq!(sums.iter().sum::<usize>(), (0..16).sum::<usize>());
+    }
+
+    #[test]
+    fn inline_single_task_panic_also_propagates() {
+        let pool = ThreadPool::new(1);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.run_tasks::<()>(vec![Box::new(|| panic!("inline"))]);
+        }));
+        assert!(result.is_err());
+        assert_eq!(pool.map_ranges(4, |r| r.len()).iter().sum::<usize>(), 4);
+    }
+
+    #[test]
+    fn worker_parsing_rules() {
+        assert_eq!(parse_workers(None), None);
+        assert_eq!(parse_workers(Some("4")), Some(4));
+        assert_eq!(parse_workers(Some(" 2 ")), Some(2));
+        assert_eq!(parse_workers(Some("0")), None, "0 is rejected, not clamped");
+        assert_eq!(parse_workers(Some("lots")), None);
+        assert!(ThreadPool::new(0).workers() >= 1);
+    }
+
+    #[test]
+    fn ctx_constructors() {
+        assert_eq!(ExecCtx::serial().threads(), 1);
+        assert_eq!(ExecCtx::with_threads(3).threads(), 3);
+        assert!(ExecCtx::global().threads() >= 1);
+        // clones share the same pool budget
+        let ctx = ExecCtx::with_threads(2);
+        assert_eq!(ctx.clone().threads(), 2);
+    }
+
+    #[test]
+    fn concat_reassembles() {
+        assert_eq!(concat(vec![vec![1, 2], vec![], vec![3]]), vec![1, 2, 3]);
+        assert!(concat::<f32>(Vec::new()).is_empty());
+    }
+}

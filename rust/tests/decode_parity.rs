@@ -15,7 +15,7 @@ use flash_moba::attention::decode::{decode_reference, DecodeSession};
 use flash_moba::attention::dense::naive_attention;
 use flash_moba::attention::kconv::kconv;
 use flash_moba::attention::testutil::{max_abs_diff, qkv, Rng};
-use flash_moba::attention::MobaShape;
+use flash_moba::attention::{ExecCtx, MobaShape};
 
 const TOL: f32 = 1e-4;
 
@@ -30,11 +30,12 @@ fn assert_decode_rows(
     expect: &[f32],
     label: &str,
 ) {
+    let ctx = ExecCtx::global();
     let d = sess.d();
     let n = expect.len() / d;
     for t in 0..n {
         sess.append(&k[t * d..(t + 1) * d], &v[t * d..(t + 1) * d]);
-        let o = backend.forward_decode(&mut sess, &q[t * d..(t + 1) * d]);
+        let o = backend.forward_decode(ctx, &mut sess, &q[t * d..(t + 1) * d]);
         assert_eq!(o.len(), d, "{label}: row {t} has wrong width");
         let dev = max_abs_diff(&o, &expect[t * d..(t + 1) * d]);
         assert!(
@@ -66,7 +67,7 @@ fn decode_matches_prefill_for_every_backend_on_the_grid() {
             if !b.supports(shape) {
                 continue;
             }
-            let (prefill, _) = b.forward(shape, &q, &k, &v);
+            let (prefill, _) = b.forward(ExecCtx::global(), shape, &q, &k, &v);
             let sess = DecodeSession::new(shape.d, shape.block, shape.topk);
             assert_decode_rows(b, sess, &q, &k, &v, &prefill, &format!("shape {shape:?}"));
         }
@@ -84,7 +85,7 @@ fn ragged_context_matches_dense_prefill() {
         let (q, k, v) = qkv(0xAA + n as u64, n, d);
         // single-block geometry: valid for any n, ignored by dense
         let shape = MobaShape { n, d, block: n, topk: 0 };
-        let (prefill, _) = dense.forward(&shape, &q, &k, &v);
+        let (prefill, _) = dense.forward(ExecCtx::global(), &shape, &q, &k, &v);
         let sess = DecodeSession::new(d, block, 0);
         assert_decode_rows(dense, sess, &q, &k, &v, &prefill, &format!("ragged n={n}"));
     }
@@ -174,7 +175,7 @@ fn kconv_streaming_path_matches_batch_prefill() {
         if !b.supports(&shape) {
             continue;
         }
-        let (prefill, _) = b.forward(&shape, &q, &k2, &v);
+        let (prefill, _) = b.forward(ExecCtx::global(), &shape, &q, &k2, &v);
         let sess = DecodeSession::with_kconv(d, shape.block, shape.topk, &w, width);
         assert_decode_rows(b, sess, &q, &k, &v, &prefill, "kconv");
     }
@@ -197,7 +198,7 @@ fn randomized_shapes_hold_parity() {
             if !b.supports(&shape) {
                 continue;
             }
-            let (prefill, _) = b.forward(&shape, &q, &k, &v);
+            let (prefill, _) = b.forward(ExecCtx::global(), &shape, &q, &k, &v);
             let sess = DecodeSession::new(d, block, topk);
             assert_decode_rows(b, sess, &q, &k, &v, &prefill, &format!("seed {seed} {shape:?}"));
         }

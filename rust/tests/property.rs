@@ -5,16 +5,20 @@
 
 use std::time::{Duration, Instant};
 
-use flash_moba::attention::backend::{check_shape_parity, BackendRegistry, ParityTolerance};
+use flash_moba::attention::backend::{
+    check_shape_parity, AttentionBackend, BackendRegistry, ParityTolerance,
+};
 use flash_moba::attention::centroid::centroids;
 use flash_moba::attention::decode::KvCache;
-use flash_moba::attention::dense::{flash_attention, naive_attention};
-use flash_moba::attention::flash_moba::{flash_moba_forward, FlashMobaConfig};
+use flash_moba::attention::dense::{flash_attention, flash_attention_ctx, naive_attention};
+use flash_moba::attention::flash_moba::{
+    flash_moba_forward, flash_moba_forward_ctx, FlashMobaConfig,
+};
 use flash_moba::attention::moba_naive::{moba_naive_forward, moba_reference};
 use flash_moba::attention::testutil::{max_abs_diff, qkv, Rng};
 use flash_moba::attention::topk::{naive_topk, same_selection, tiled_topk};
 use flash_moba::attention::varlen::build_varlen;
-use flash_moba::attention::MobaShape;
+use flash_moba::attention::{ExecCtx, MobaShape};
 use flash_moba::coordinator::{AttnKind, AttnRequest, Batcher, DecodeStep};
 use flash_moba::util::json::Json;
 
@@ -355,6 +359,83 @@ fn prop_batcher_random_arrival_deadlines() {
         }
         assert_eq!(accepted, emitted, "lost or duplicated work seed={seed}");
         assert!(b.is_empty());
+    }
+}
+
+/// The multi-core determinism contract: every registered backend
+/// produces bit-identical o (and, for the FlashMoBA pipeline, lse and
+/// routing indices) at MOBA_THREADS=1 vs any MOBA_THREADS>1, across
+/// randomized shapes whose row/block counts split unevenly over the
+/// workers. Exact equality — `to_bits`, not a tolerance.
+#[test]
+fn prop_thread_count_never_changes_a_bit() {
+    let registry = BackendRegistry::with_defaults();
+    let serial = ExecCtx::serial();
+    for seed in 0..CASES / 2 {
+        let mut rng = Rng::new(13_000 + seed);
+        let shape = rand_shape(&mut rng);
+        let threads = 2 + rng.below(6); // 2..=7 workers
+        let par = ExecCtx::with_threads(threads);
+        let (q, k, v) = qkv(600 + seed, shape.n, shape.d);
+
+        // every backend through the trait
+        for b in registry.iter() {
+            if !b.supports(&shape) {
+                continue;
+            }
+            let (o1, _) = b.forward(&serial, &shape, &q, &k, &v);
+            let (o2, st) = b.forward(&par, &shape, &q, &k, &v);
+            assert_eq!(st.threads(), threads);
+            assert_eq!(o1.len(), o2.len());
+            for (i, (a, z)) in o1.iter().zip(&o2).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    z.to_bits(),
+                    "{} differs at element {i} (seed={seed} threads={threads} shape={shape:?})",
+                    b.name()
+                );
+            }
+        }
+
+        // the full FlashMoBA pipeline output: o, lse and indices
+        let f1 = flash_moba_forward_ctx(&serial, &q, &k, &v, shape, FlashMobaConfig::default());
+        let f2 = flash_moba_forward_ctx(&par, &q, &k, &v, shape, FlashMobaConfig::default());
+        assert_eq!(f1.indices, f2.indices, "routing differs seed={seed}");
+        assert!(
+            f1.lse.iter().zip(&f2.lse).all(|(a, z)| a.to_bits() == z.to_bits()),
+            "lse differs seed={seed} threads={threads}"
+        );
+        assert!(
+            f1.o.iter().zip(&f2.o).all(|(a, z)| a.to_bits() == z.to_bits()),
+            "o differs seed={seed} threads={threads}"
+        );
+    }
+}
+
+/// Dense flash attention at ragged n (not a multiple of the tile size
+/// or any worker count) is also bit-stable across thread counts.
+#[test]
+fn prop_thread_count_bit_stable_on_ragged_dense_shapes() {
+    let serial = ExecCtx::serial();
+    for seed in 0..CASES / 2 {
+        let mut rng = Rng::new(14_000 + seed);
+        let n = 17 + rng.below(300); // ragged sequence lengths
+        let d = [4usize, 8, 16][rng.below(3)];
+        let br = 1 + rng.below(64);
+        let bc = 1 + rng.below(64);
+        let threads = 2 + rng.below(6);
+        let (q, k, v) = qkv(700 + seed, n, d);
+        let (o1, l1, _) = flash_attention_ctx(&serial, &q, &k, &v, n, d, br, bc);
+        let (o2, l2, _) =
+            flash_attention_ctx(&ExecCtx::with_threads(threads), &q, &k, &v, n, d, br, bc);
+        assert!(
+            o1.iter().zip(&o2).all(|(a, z)| a.to_bits() == z.to_bits()),
+            "o differs seed={seed} n={n} br={br} bc={bc} threads={threads}"
+        );
+        assert!(
+            l1.iter().zip(&l2).all(|(a, z)| a.to_bits() == z.to_bits()),
+            "lse differs seed={seed} n={n} threads={threads}"
+        );
     }
 }
 
