@@ -9,7 +9,7 @@ use flash_moba::attention::dense::flash_attention;
 use flash_moba::attention::flash_moba::{flash_moba_forward, FlashMobaConfig};
 use flash_moba::attention::moba_naive::moba_naive_forward;
 use flash_moba::attention::testutil::qkv;
-use flash_moba::attention::MobaShape;
+use flash_moba::attention::AttnShape;
 use flash_moba::util::bench::Bench;
 
 fn main() {
@@ -17,7 +17,7 @@ fn main() {
     let (block, topk) = (128, 8);
     let mut b = Bench::new().samples(5);
     for n in [2048usize, 4096, 8192] {
-        let shape = MobaShape::new(n, d, block, topk);
+        let shape = AttnShape::single(n, d, block, topk);
         let (q, k, v) = qkv(n as u64, n, d);
 
         b.bench(&format!("fig3/dense_fa2/n{n}"), || {

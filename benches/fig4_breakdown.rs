@@ -7,12 +7,12 @@ use flash_moba::attention::moba_naive::moba_naive_forward;
 use flash_moba::attention::testutil::qkv;
 use flash_moba::attention::topk::{naive_topk, tiled_topk};
 use flash_moba::attention::varlen::build_varlen;
-use flash_moba::attention::MobaShape;
+use flash_moba::attention::AttnShape;
 use flash_moba::util::bench::Bench;
 
 fn main() {
     let (n, d, block, topk) = (8192usize, 64usize, 128usize, 8usize);
-    let shape = MobaShape::new(n, d, block, topk);
+    let shape = AttnShape::single(n, d, block, topk);
     let (q, k, v) = qkv(99, n, d);
     let cents = centroids(&k, n, d, block);
 

@@ -1,41 +1,47 @@
 //! Compare every registered attention backend on one problem through
 //! the `AttentionBackend` trait: agreement vs the dense oracle, stage
 //! breakdowns, workspace and speedups. Runs on a fresh checkout (no
-//! artifacts needed).
+//! artifacts needed). Pass a head layout to exercise the packed
+//! multi-head / GQA path — one kernel launch covers all heads.
 //!
 //! ```sh
-//! cargo run --release --example backend_compare -- [n] [block] [topk]
+//! cargo run --release --example backend_compare -- [n] [block] [topk] [heads] [kv_heads]
 //! ```
 
 use std::time::Instant;
 
 use flash_moba::attention::backend::{self, BackendRegistry, ParityTolerance};
-use flash_moba::attention::dense::naive_attention;
-use flash_moba::attention::testutil::{max_abs_diff, qkv};
-use flash_moba::attention::{ExecCtx, MobaShape};
+use flash_moba::attention::dense::naive_attention_packed;
+use flash_moba::attention::testutil::{max_abs_diff, qkv_packed};
+use flash_moba::attention::{AttnShape, ExecCtx};
 
 fn main() {
     let args: Vec<String> = std::env::args().collect();
     let n: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4096);
     let block: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(128);
     let topk: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(8);
+    let heads: usize = args.get(4).and_then(|s| s.parse().ok()).unwrap_or(1);
+    let kv_heads: usize = args.get(5).and_then(|s| s.parse().ok()).unwrap_or(heads);
 
-    let Some(shape) = MobaShape::try_new(n, 64, block, topk) else {
-        eprintln!("invalid geometry: n={n} must divide into blocks of {block}");
+    let Some(shape) = AttnShape::try_new(heads, kv_heads, n, 64, block, topk) else {
+        eprintln!(
+            "invalid geometry: need heads={heads} a positive multiple of kv_heads={kv_heads} \
+             and n, block > 0"
+        );
         std::process::exit(2);
     };
     let ctx = ExecCtx::global();
     let registry = BackendRegistry::with_defaults();
     println!(
         "registered backends: {:?}   (shape: N={n}, d=64, B={block}, k={topk}, \
-         density {:.2}, {} threads)\n",
+         h={heads}/{kv_heads}, density {:.2}, {} threads)\n",
         registry.names(),
         shape.density(),
         ctx.threads()
     );
 
-    let (q, k, v) = qkv(42, shape.n, shape.d);
-    let (oracle, _) = naive_attention(&q, &k, &v, shape.n, shape.d);
+    let (q, k, v) = qkv_packed(42, shape.h, shape.h_kv, shape.n, shape.d);
+    let (oracle, _) = naive_attention_packed(&q, &k, &v, shape.h, shape.h_kv, shape.n, shape.d);
 
     let mut dense_time = None;
     for b in registry.iter() {
@@ -61,7 +67,8 @@ fn main() {
     }
 
     // the shared parity harness — the same check `cargo test` and
-    // `flash-moba bench parity` run
+    // `flash-moba bench parity` run (its grid includes GQA and
+    // ragged-tail shapes)
     match backend::check_grid_parity(&registry, &ParityTolerance::default()) {
         Ok(()) => println!("parity grid OK: all backends agree within tolerance"),
         Err(e) => {

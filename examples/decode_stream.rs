@@ -1,8 +1,9 @@
-//! Streaming decode example: open a decode session on the coordinator,
-//! feed tokens one at a time, and watch per-token latency stay flat
-//! while the context grows — each step ships only the new token's three
-//! d-length rows; the block KV cache (and its running centroids) lives
-//! server-side.
+//! Streaming decode example: open a grouped-query (GQA) decode session
+//! on the coordinator, feed tokens one at a time, and watch per-token
+//! latency stay flat while the context grows — each step ships only the
+//! new token's packed `(h, d)` query + `(h_kv, d)` K/V rows; the
+//! per-KV-head block cache (and its running centroids) lives
+//! server-side, and one step covers every query head.
 //!
 //! Works out of the box on a fresh checkout (the coordinator serves on
 //! the CPU attention substrate when no PJRT artifacts exist):
@@ -20,6 +21,9 @@ fn main() -> flash_moba::Result<()> {
     let n_tokens: usize =
         std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(512);
     let d = 64;
+    // GQA: 4 query heads grouped over 2 KV heads — the cache stores 2
+    // head stores, each step routes 4 query heads against them
+    let (h, h_kv) = (4usize, 2usize);
     let dir = std::env::var("FLASH_MOBA_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
     let serve = ServeParams {
         max_batch: 4,
@@ -32,14 +36,16 @@ fn main() -> flash_moba::Result<()> {
     };
     let coord = Coordinator::start(dir, serve.clone())?;
 
-    let session = coord.session_create(AttnKind::Moba, d)?;
+    let session = coord.session_create(AttnKind::Moba, h, h_kv, d)?;
     let mut rng = Rng::new(0xD5);
     let t0 = std::time::Instant::now();
     let mut checkpoints = Vec::new();
     for t in 0..n_tokens {
-        let (q, k, v) = (rng.normal_vec(d), rng.normal_vec(d), rng.normal_vec(d));
+        let (q, k, v) =
+            (rng.normal_vec(h * d), rng.normal_vec(h_kv * d), rng.normal_vec(h_kv * d));
         let resp = coord.decode(session, q, k, v)?;
         assert_eq!(resp.served_n, t + 1);
+        assert_eq!(resp.o.len(), h * d);
         assert!(resp.o.iter().all(|x| x.is_finite()));
         if (t + 1) % (n_tokens / 4).max(1) == 0 {
             checkpoints.push((t + 1, t0.elapsed().as_secs_f64()));
@@ -47,7 +53,7 @@ fn main() -> flash_moba::Result<()> {
     }
     let elapsed = t0.elapsed().as_secs_f64();
     println!(
-        "streamed {n_tokens} tokens (d={d}, B={}, k={}) in {elapsed:.2}s = {:.0} tok/s",
+        "streamed {n_tokens} tokens (h={h}/{h_kv}, d={d}, B={}, k={}) in {elapsed:.2}s = {:.0} tok/s",
         serve.moba_block,
         serve.moba_topk,
         n_tokens as f64 / elapsed
@@ -65,18 +71,20 @@ fn main() -> flash_moba::Result<()> {
     coord.shutdown();
 
     // the same machinery without a server: drive a DecodeSession directly
-    let mut sess = DecodeSession::new(d, 64, 4);
+    let mut sess = DecodeSession::new(h, h_kv, d, 64, 4);
     let mut rng = Rng::new(0xD6);
     for _ in 0..256 {
-        let (q, k, v) = (rng.normal_vec(d), rng.normal_vec(d), rng.normal_vec(d));
+        let (q, k, v) =
+            (rng.normal_vec(h * d), rng.normal_vec(h_kv * d), rng.normal_vec(h_kv * d));
         sess.append(&k, &v);
-        let blocks = sess.route_current(&q);
+        let routes = sess.route_current(&q); // one block set per query head
+        assert_eq!(routes.len(), h);
         let o = sess.decode_routed(&q);
         assert!(o.iter().all(|x| x.is_finite()));
-        let _ = blocks;
     }
     println!(
-        "in-process session: {} tokens cached, last step attended {} blocks ({} KB gathered)",
+        "in-process GQA session: {} tokens cached, last step attended {} blocks \
+         across {h} query heads ({} KB gathered)",
         sess.len(),
         sess.last_routed_blocks(),
         sess.last_gathered_bytes() / 1000

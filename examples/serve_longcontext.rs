@@ -2,10 +2,11 @@
 //! attention requests, reporting throughput, latency percentiles and
 //! batch occupancy — the deployment story for FlashMoBA kernels.
 //!
-//! With AOT artifacts present the requests execute over PJRT; without
-//! them the coordinator serves on the CPU attention substrate through
-//! the `AttentionBackend` registry, so this example works out of the
-//! box on a fresh checkout:
+//! The coordinator serves on the CPU attention substrate through the
+//! `AttentionBackend` registry (this build's PJRT surface is the
+//! in-tree stub), which accepts any head layout — the workload below
+//! mixes single-head, MHA and GQA requests, each a single packed
+//! kernel launch. Works out of the box on a fresh checkout:
 //!
 //! ```sh
 //! cargo run --release --example serve_longcontext -- [n_requests]
@@ -24,7 +25,9 @@ fn main() -> flash_moba::Result<()> {
         ServeParams { max_batch: 4, max_wait_ms: 8, queue_capacity: 256, ..Default::default() },
     )?;
 
-    // a mixed long-context workload: MoBA-heavy, some dense, mixed sizes
+    // a mixed long-context workload: MoBA-heavy, some dense, mixed
+    // sizes and head layouts (single-head, MHA, GQA) — each multi-head
+    // request is ONE kernel launch on the substrate
     let t0 = std::time::Instant::now();
     let mut tickets = Vec::new();
     for i in 0..n_requests {
@@ -32,18 +35,25 @@ fn main() -> flash_moba::Result<()> {
             0 => (AttnKind::Dense, 1024),
             1 | 2 => (AttnKind::Moba, 2048),
             3 | 4 => (AttnKind::Moba, 1024),
-            _ => (AttnKind::Moba, 700), // padded onto the 1024 kernel
+            _ => (AttnKind::Moba, 700), // ragged tail: served natively
+        };
+        let (h, h_kv) = match i % 3 {
+            0 => (1, 1), // single-head
+            1 => (4, 4), // MHA
+            _ => (4, 2), // GQA
         };
         let d = 64;
         let mut rng = Rng::new(100 + i as u64);
         let req = AttnRequest {
             id: i as u64,
             kind,
+            h,
+            h_kv,
             n,
             d,
-            q: rng.normal_vec(n * d),
-            k: rng.normal_vec(n * d),
-            v: rng.normal_vec(n * d),
+            q: rng.normal_vec(h * n * d),
+            k: rng.normal_vec(h_kv * n * d),
+            v: rng.normal_vec(h_kv * n * d),
         };
         tickets.push(coord.submit_async(req)?);
     }

@@ -10,6 +10,13 @@
 //! in by registering one object — and inherit the parity harness, the
 //! figure sweeps and the serving router for free.
 //!
+//! Call convention: packed row-major tensors. `q` and the returned
+//! output are `(h, n, d)`, `k`/`v` are `(h_kv, n, d)`; the head layout
+//! and routing geometry ride in the [`AttnShape`]. One `forward` (or
+//! `forward_decode`) call covers the whole head dimension — backends
+//! iterate heads internally, computing centroids once per KV head and
+//! routing once per query head.
+//!
 //! Every call takes an [`ExecCtx`]: the shared thread pool the kernels
 //! partition their work over. Consumers hand one pool to all backends
 //! (the coordinator's worker, the bench harness, the evaluators) rather
@@ -17,19 +24,20 @@
 //! count (the determinism contract of `crate::util::pool`).
 
 use super::decode::DecodeSession;
-use super::dense::{flash_attention_ctx, naive_attention};
+use super::dense::{flash_attention_packed, naive_attention_packed};
 use super::flash_moba::{flash_moba_forward_ctx, FlashMobaConfig};
 use super::moba_naive::moba_naive_forward_ctx;
 use super::stats::StageStats;
-use super::testutil::{max_abs_diff, qkv};
-use super::MobaShape;
+use super::testutil::{max_abs_diff, qkv_packed};
+use super::AttnShape;
 use crate::util::pool::ExecCtx;
 
-/// A single-head causal attention implementation.
+/// A causal attention implementation over packed multi-head tensors.
 ///
-/// Inputs are (n, d) row-major f32; the routing geometry (block size,
-/// top-k) rides in the [`MobaShape`]. Implementations that ignore
-/// routing (dense) simply read `n` and `d`.
+/// Inputs are packed row-major f32: `q` is `(h, n, d)`, `k`/`v` are
+/// `(h_kv, n, d)`; the head layout and routing geometry (block size,
+/// top-k) ride in the [`AttnShape`]. Implementations that ignore
+/// routing (dense) simply read the head layout and `n`/`d`.
 pub trait AttentionBackend: Send + Sync {
     /// Stable registry key (also the display name in reports).
     fn name(&self) -> &'static str;
@@ -37,7 +45,7 @@ pub trait AttentionBackend: Send + Sync {
     /// Supported-config predicate: can this backend run this geometry?
     /// Callers must check before `forward` (routers use this to fall
     /// back, harnesses to skip).
-    fn supports(&self, shape: &MobaShape) -> bool;
+    fn supports(&self, shape: &AttnShape) -> bool;
 
     /// `true` when the output equals dense attention for *any* routing
     /// (no sparsity approximation). Exact backends are compared against
@@ -47,33 +55,38 @@ pub trait AttentionBackend: Send + Sync {
         false
     }
 
-    /// Run the forward pass on `ctx`'s thread pool. Returns the (n, d)
-    /// output and the stage timings / workspace accounting of the run.
+    /// Run the forward pass on `ctx`'s thread pool. Returns the packed
+    /// `(h, n, d)` output and the stage timings / workspace accounting
+    /// of the run (stamped with the shape's head count — one launch
+    /// covers all heads).
     ///
     /// Contract: the output is bit-identical for any `ctx.threads()` —
-    /// implementations parallelize by partitioning independent work
-    /// units, never by reordering reductions (asserted for every
-    /// registered backend by the determinism property suite and the CI
-    /// `MOBA_THREADS` matrix).
+    /// implementations parallelize by partitioning independent
+    /// `head × query-row` work units, never by reordering reductions
+    /// (asserted for every registered backend by the determinism
+    /// property suite and the CI `MOBA_THREADS` matrix) — and
+    /// `h = h_kv = 1` reproduces the single-head path bit-for-bit
+    /// (pinned by `rust/tests/singlehead_regression.rs`).
     fn forward(
         &self,
         ctx: &ExecCtx,
-        shape: &MobaShape,
+        shape: &AttnShape,
         q: &[f32],
         k: &[f32],
         v: &[f32],
     ) -> (Vec<f32>, StageStats);
 
-    /// One autoregressive decode step: attention of `q_t` (the query at
-    /// the session's current position, i.e. its last appended token)
-    /// over the session's KV cache. Returns the (d,) output row.
+    /// One autoregressive decode step: attention of the packed
+    /// `(h, d)` query `q_t` (at the session's current position, i.e.
+    /// its last appended token) over the session's KV cache. One call
+    /// covers all query heads; returns the packed `(h, d)` output row.
     ///
     /// Contract: token-by-token decode must reproduce this backend's
     /// prefill [`forward`](AttentionBackend::forward) row-for-row (the
     /// decode parity suite asserts this for every registered backend).
     /// The default is the exact dense fallback over everything cached —
     /// correct for exact backends; sparse backends override with the
-    /// routed path. A decode step is a single O((k+1)·B·d) row, below
+    /// routed path. A decode step is h single O((k+1)·B·d) rows, below
     /// the threshold where fan-out pays, so implementations run serial
     /// regardless of `ctx` — the parameter keeps the call convention
     /// uniform (one pool per consumer) for heavier future backends.
@@ -106,7 +119,7 @@ impl AttentionBackend for DenseBackend {
         "dense"
     }
 
-    fn supports(&self, _shape: &MobaShape) -> bool {
+    fn supports(&self, _shape: &AttnShape) -> bool {
         true
     }
 
@@ -117,14 +130,16 @@ impl AttentionBackend for DenseBackend {
     fn forward(
         &self,
         ctx: &ExecCtx,
-        shape: &MobaShape,
+        shape: &AttnShape,
         q: &[f32],
         k: &[f32],
         v: &[f32],
     ) -> (Vec<f32>, StageStats) {
-        let mut st = StageStats::for_ctx(ctx);
+        let mut st = StageStats::for_heads(ctx, shape.h);
         let (o, _lse, ws) = st.time("fwd", || {
-            flash_attention_ctx(ctx, q, k, v, shape.n, shape.d, self.br, self.bc)
+            flash_attention_packed(
+                ctx, q, k, v, shape.h, shape.h_kv, shape.n, shape.d, self.br, self.bc,
+            )
         });
         st.add_workspace(ws);
         (o, st)
@@ -141,14 +156,16 @@ impl AttentionBackend for MobaNaiveBackend {
         "moba_naive"
     }
 
-    fn supports(&self, shape: &MobaShape) -> bool {
-        shape.topk >= 1 && shape.block >= 1 && shape.n % shape.block == 0
+    fn supports(&self, shape: &AttnShape) -> bool {
+        // a ragged tail is fine (always-attended, never routed); only a
+        // routing-free geometry is rejected
+        shape.topk >= 1
     }
 
     fn forward(
         &self,
         ctx: &ExecCtx,
-        shape: &MobaShape,
+        shape: &AttnShape,
         q: &[f32],
         k: &[f32],
         v: &[f32],
@@ -159,7 +176,7 @@ impl AttentionBackend for MobaNaiveBackend {
 
     /// Streaming MoBA routing over the cached centroids. Per step there
     /// is no five-stage pipeline to reproduce — the selected block set
-    /// is identical to the prefill gating, so the routed single-row
+    /// is identical to the prefill gating, so the routed per-head
     /// path *is* this backend's decode semantics.
     fn forward_decode(
         &self,
@@ -188,14 +205,14 @@ impl AttentionBackend for FlashMobaBackend {
         "flash_moba"
     }
 
-    fn supports(&self, shape: &MobaShape) -> bool {
-        shape.topk >= 1 && shape.block >= 1 && shape.n % shape.block == 0
+    fn supports(&self, shape: &AttnShape) -> bool {
+        shape.topk >= 1
     }
 
     fn forward(
         &self,
         ctx: &ExecCtx,
-        shape: &MobaShape,
+        shape: &AttnShape,
         q: &[f32],
         k: &[f32],
         v: &[f32],
@@ -205,8 +222,8 @@ impl AttentionBackend for FlashMobaBackend {
     }
 
     /// Streaming tiled top-k against the cache's running centroids +
-    /// single-row attention over the gathered blocks — the decode
-    /// analogue of the fused two-stage forward.
+    /// per-head single-row attention over the gathered blocks — the
+    /// decode analogue of the fused two-stage forward.
     fn forward_decode(
         &self,
         _ctx: &ExecCtx,
@@ -277,7 +294,7 @@ impl Default for BackendRegistry {
 /// Agreement tolerances (max |Δ| over all output elements).
 #[derive(Debug, Clone, Copy)]
 pub struct ParityTolerance {
-    /// vs the textbook dense oracle ([`naive_attention`]): exact
+    /// vs the textbook dense oracle ([`naive_attention_packed`]): exact
     /// backends on any shape; every backend at full routing
     pub dense: f32,
     /// pairwise between sparse backends on the same routing geometry
@@ -292,25 +309,28 @@ impl Default for ParityTolerance {
     }
 }
 
-/// Is every strictly-past block routed for every query (MoBA == dense)?
-pub fn fully_routed(shape: &MobaShape) -> bool {
-    shape.topk + 1 >= shape.n_blocks()
+/// Is every complete strictly-past block routed for every query of
+/// every head (MoBA == dense)? With a ragged tail the worst row sees
+/// every complete block as a candidate; aligned, the last row sees all
+/// but its own.
+pub fn fully_routed(shape: &AttnShape) -> bool {
+    shape.topk >= shape.max_candidates()
 }
 
-/// Run every supporting backend on one seeded problem (on the shared
-/// process pool) and check: exact backends (and, at full routing, all
-/// backends) against the textbook dense oracle; sparse backends
-/// pairwise against each other. `Err` carries a human-readable
-/// violation description.
+/// Run every supporting backend on one seeded packed problem (on the
+/// shared process pool) and check: exact backends (and, at full
+/// routing, all backends) against the textbook dense oracle; sparse
+/// backends pairwise against each other. `Err` carries a
+/// human-readable violation description.
 pub fn check_shape_parity(
     registry: &BackendRegistry,
-    shape: MobaShape,
+    shape: AttnShape,
     seed: u64,
     tol: &ParityTolerance,
 ) -> std::result::Result<(), String> {
     let ctx = ExecCtx::global();
-    let (q, k, v) = qkv(seed, shape.n, shape.d);
-    let (oracle, _) = naive_attention(&q, &k, &v, shape.n, shape.d);
+    let (q, k, v) = qkv_packed(seed, shape.h, shape.h_kv, shape.n, shape.d);
+    let (oracle, _) = naive_attention_packed(&q, &k, &v, shape.h, shape.h_kv, shape.n, shape.d);
     let full = fully_routed(&shape);
     let mut sparse: Vec<(&str, Vec<f32>)> = Vec::new();
     for b in registry.iter() {
@@ -318,12 +338,12 @@ pub fn check_shape_parity(
             continue;
         }
         let (o, _st) = b.forward(ctx, &shape, &q, &k, &v);
-        if o.len() != shape.n * shape.d {
+        if o.len() != shape.q_elems() {
             return Err(format!(
-                "{}: output length {} != n*d {} (shape {shape:?})",
+                "{}: output length {} != h*n*d {} (shape {shape:?})",
                 b.name(),
                 o.len(),
-                shape.n * shape.d
+                shape.q_elems()
             ));
         }
         if b.is_exact() || full {
@@ -356,17 +376,24 @@ pub fn check_shape_parity(
     Ok(())
 }
 
-/// The default verification grid: a mix of sparse routings and
-/// fully-routed shapes (where MoBA must reproduce dense exactly).
-pub fn parity_grid() -> Vec<MobaShape> {
+/// The default verification grid: the single-head shapes (a mix of
+/// sparse routings and fully-routed shapes where MoBA must reproduce
+/// dense exactly), multi-head and GQA layouts, and ragged-n shapes
+/// whose tail block is always-attended but never routed.
+pub fn parity_grid() -> Vec<AttnShape> {
     vec![
-        MobaShape::new(64, 4, 16, 1),
-        MobaShape::new(128, 16, 16, 2),
-        MobaShape::new(128, 8, 16, 8),   // fully routed (k = n_blocks)
-        MobaShape::new(96, 8, 16, 6),    // fully routed
-        MobaShape::new(256, 8, 32, 3),
-        MobaShape::new(256, 32, 64, 4),  // fully routed
-        MobaShape::new(512, 16, 64, 2),
+        AttnShape::single(64, 4, 16, 1),
+        AttnShape::single(128, 16, 16, 2),
+        AttnShape::single(128, 8, 16, 8),   // fully routed (k = n_blocks)
+        AttnShape::single(96, 8, 16, 6),    // fully routed
+        AttnShape::single(256, 8, 32, 3),
+        AttnShape::single(256, 32, 64, 4),  // fully routed
+        AttnShape::single(512, 16, 64, 2),
+        AttnShape::new(4, 4, 128, 8, 32, 2),  // MHA
+        AttnShape::new(4, 2, 128, 8, 16, 3),  // GQA
+        AttnShape::new(8, 2, 64, 4, 16, 1),   // wide GQA groups
+        AttnShape::single(100, 8, 16, 2),     // ragged tail
+        AttnShape::new(4, 2, 72, 8, 16, 4),   // ragged GQA, fully routed
     ]
 }
 
@@ -384,6 +411,9 @@ pub fn check_grid_parity(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use super::super::dense::naive_attention;
+    use super::super::packed_rows;
+    use super::super::testutil::qkv;
 
     #[test]
     fn registry_defaults_cover_all_three() {
@@ -407,11 +437,14 @@ mod tests {
 
     #[test]
     fn supports_predicates() {
-        let shape = MobaShape::new(128, 8, 32, 2);
-        let no_topk = MobaShape::new(128, 8, 32, 0);
+        let shape = AttnShape::single(128, 8, 32, 2);
+        let ragged = AttnShape::single(100, 8, 32, 2);
+        let no_topk = AttnShape::single(128, 8, 32, 0);
         let r = BackendRegistry::with_defaults();
         for b in r.iter() {
             assert!(b.supports(&shape), "{}", b.name());
+            // the ragged-tail prefill path is a supported geometry now
+            assert!(b.supports(&ragged), "{} must accept ragged n", b.name());
         }
         assert!(r.get("dense").unwrap().supports(&no_topk));
         assert!(!r.get("moba_naive").unwrap().supports(&no_topk));
@@ -424,27 +457,35 @@ mod tests {
         let r = BackendRegistry::with_defaults();
         let dense = r.get("dense").unwrap();
         assert!(dense.is_exact());
-        for shape in [MobaShape::new(96, 8, 16, 1), MobaShape::new(128, 4, 32, 2)] {
-            let (q, k, v) = qkv(5, shape.n, shape.d);
+        for shape in [
+            AttnShape::single(96, 8, 16, 1),
+            AttnShape::single(128, 4, 32, 2),
+            AttnShape::new(4, 2, 96, 8, 16, 1),
+        ] {
+            let (q, k, v) = qkv_packed(5, shape.h, shape.h_kv, shape.n, shape.d);
             let (o, st) = dense.forward(ctx, &shape, &q, &k, &v);
-            let (oracle, _) = naive_attention(&q, &k, &v, shape.n, shape.d);
+            let (oracle, _) =
+                naive_attention_packed(&q, &k, &v, shape.h, shape.h_kv, shape.n, shape.d);
             assert!(max_abs_diff(&o, &oracle) < 5e-5);
             assert!(st.get("fwd").is_some());
             assert!(st.workspace_bytes > 0);
             assert_eq!(st.threads(), ctx.threads());
+            assert_eq!(st.heads(), shape.h);
         }
     }
 
     #[test]
     fn moba_backends_report_their_stages() {
         let ctx = ExecCtx::global();
-        let shape = MobaShape::new(64, 4, 16, 1);
-        let (q, k, v) = qkv(6, shape.n, shape.d);
+        let shape = AttnShape::new(2, 2, 64, 4, 16, 1);
+        let (q, k, v) = qkv_packed(6, 2, 2, 64, 4);
         let r = BackendRegistry::with_defaults();
         let (_, st) = r.get("moba_naive").unwrap().forward(ctx, &shape, &q, &k, &v);
         assert!(st.get("gating").is_some() && st.get("merge").is_some());
+        assert_eq!(st.heads(), 2);
         let (_, st) = r.get("flash_moba").unwrap().forward(ctx, &shape, &q, &k, &v);
         assert!(st.get("flash_topk").is_some() && st.get("fwd").is_some());
+        assert_eq!(st.heads(), 2);
     }
 
     #[test]
@@ -461,7 +502,7 @@ mod tests {
             fn name(&self) -> &'static str {
                 "broken"
             }
-            fn supports(&self, _s: &MobaShape) -> bool {
+            fn supports(&self, _s: &AttnShape) -> bool {
                 true
             }
             fn is_exact(&self) -> bool {
@@ -470,12 +511,12 @@ mod tests {
             fn forward(
                 &self,
                 _ctx: &ExecCtx,
-                shape: &MobaShape,
+                shape: &AttnShape,
                 _q: &[f32],
                 _k: &[f32],
                 _v: &[f32],
             ) -> (Vec<f32>, StageStats) {
-                (vec![0.0; shape.n * shape.d], StageStats::new())
+                (vec![0.0; shape.q_elems()], StageStats::new())
             }
         }
         let mut r = BackendRegistry::with_defaults();
@@ -486,29 +527,45 @@ mod tests {
 
     #[test]
     fn fully_routed_detection() {
-        assert!(fully_routed(&MobaShape::new(128, 8, 16, 8)));
-        assert!(fully_routed(&MobaShape::new(128, 8, 16, 7)));
-        assert!(!fully_routed(&MobaShape::new(128, 8, 16, 6)));
+        assert!(fully_routed(&AttnShape::single(128, 8, 16, 8)));
+        assert!(fully_routed(&AttnShape::single(128, 8, 16, 7)));
+        assert!(!fully_routed(&AttnShape::single(128, 8, 16, 6)));
+        // ragged: the tail row sees every complete block as a candidate
+        assert!(fully_routed(&AttnShape::single(100, 8, 16, 6)));
+        assert!(!fully_routed(&AttnShape::single(100, 8, 16, 5)));
+        // head layout is irrelevant to routing density
+        assert!(fully_routed(&AttnShape::new(4, 2, 128, 8, 16, 7)));
     }
 
     /// Token-by-token decode through the trait reproduces each
-    /// backend's prefill rows (the full grid lives in
-    /// `rust/tests/decode_parity.rs`; this is the smoke version).
+    /// backend's prefill rows — one packed step per token covering all
+    /// heads (the full grid lives in `rust/tests/decode_parity.rs`;
+    /// this is the smoke version).
     #[test]
     fn forward_decode_matches_prefill_rows() {
         let ctx = ExecCtx::global();
-        let shape = MobaShape::new(96, 8, 16, 2);
-        let (q, k, v) = qkv(77, shape.n, shape.d);
-        let r = BackendRegistry::with_defaults();
-        for b in r.iter() {
-            let (prefill, _) = b.forward(ctx, &shape, &q, &k, &v);
-            let mut sess = DecodeSession::new(shape.d, shape.block, shape.topk);
-            for t in 0..shape.n {
-                sess.append(&k[t * shape.d..(t + 1) * shape.d], &v[t * shape.d..(t + 1) * shape.d]);
-                let o = b.forward_decode(ctx, &mut sess, &q[t * shape.d..(t + 1) * shape.d]);
-                assert_eq!(o.len(), shape.d);
-                let dev = max_abs_diff(&o, &prefill[t * shape.d..(t + 1) * shape.d]);
-                assert!(dev < 1e-4, "{} row {t} dev {dev:.2e}", b.name());
+        for shape in [AttnShape::single(96, 8, 16, 2), AttnShape::new(4, 2, 64, 8, 16, 2)] {
+            let (q, k, v) = qkv_packed(77, shape.h, shape.h_kv, shape.n, shape.d);
+            let r = BackendRegistry::with_defaults();
+            for b in r.iter() {
+                let (prefill, _) = b.forward(ctx, &shape, &q, &k, &v);
+                let mut sess =
+                    DecodeSession::new(shape.h, shape.h_kv, shape.d, shape.block, shape.topk);
+                for t in 0..shape.n {
+                    sess.append(
+                        &packed_rows(&k, shape.h_kv, shape.n, shape.d, t),
+                        &packed_rows(&v, shape.h_kv, shape.n, shape.d, t),
+                    );
+                    let o = b.forward_decode(
+                        ctx,
+                        &mut sess,
+                        &packed_rows(&q, shape.h, shape.n, shape.d, t),
+                    );
+                    assert_eq!(o.len(), shape.h * shape.d);
+                    let expect = packed_rows(&prefill, shape.h, shape.n, shape.d, t);
+                    let dev = max_abs_diff(&o, &expect);
+                    assert!(dev < 1e-4, "{} row {t} dev {dev:.2e} ({shape:?})", b.name());
+                }
             }
         }
     }
@@ -522,13 +579,13 @@ mod tests {
             fn name(&self) -> &'static str {
                 "plain"
             }
-            fn supports(&self, _s: &MobaShape) -> bool {
+            fn supports(&self, _s: &AttnShape) -> bool {
                 true
             }
             fn forward(
                 &self,
                 _ctx: &ExecCtx,
-                shape: &MobaShape,
+                shape: &AttnShape,
                 q: &[f32],
                 k: &[f32],
                 v: &[f32],
@@ -542,7 +599,7 @@ mod tests {
         let (q, k, v) = qkv(78, n, d);
         let (oracle, _) = naive_attention(&q, &k, &v, n, d);
         let b = Plain;
-        let mut sess = DecodeSession::new(d, 16, 1); // routing geometry ignored by the fallback
+        let mut sess = DecodeSession::new(1, 1, d, 16, 1); // routing geometry ignored by the fallback
         for t in 0..n {
             sess.append(&k[t * d..(t + 1) * d], &v[t * d..(t + 1) * d]);
             let o = b.forward_decode(ctx, &mut sess, &q[t * d..(t + 1) * d]);

@@ -5,10 +5,15 @@
 //!
 //! Also [`naive_backward`], an original-style backward that materializes
 //! the full masked probability matrix — the memory-hog baseline.
+//!
+//! Both backwards are *single-head* (`shape.h == 1`): the backward pass
+//! is not part of the `AttentionBackend` trait, and the bench harness
+//! times it per head. Only `n/d/block/topk` of the [`AttnShape`] are
+//! read.
 
 use super::simd::{axpy, dot as sdot};
 use super::varlen::VarlenLayout;
-use super::MobaShape;
+use super::AttnShape;
 
 /// Gradients of (q, k, v).
 pub struct Grads {
@@ -32,10 +37,15 @@ pub fn naive_backward(
     k: &[f32],
     v: &[f32],
     dout: &[f32],
-    shape: MobaShape,
+    shape: AttnShape,
     indices: &[i32],
 ) -> Grads {
-    let MobaShape { n, d, block, topk } = shape;
+    assert_eq!(shape.h, 1, "backward is single-head; loop heads in the caller");
+    let AttnShape { n, d, block, topk, .. } = shape;
+    assert_eq!(q.len(), n * d);
+    assert_eq!(k.len(), n * d);
+    assert_eq!(v.len(), n * d);
+    assert_eq!(dout.len(), n * d);
     let scale = 1.0 / (d as f64).sqrt();
     let mut dq = vec![0.0f64; n * d];
     let mut dk = vec![0.0f64; n * d];
@@ -102,11 +112,16 @@ pub fn flash_moba_backward(
     o: &[f32],
     lse: &[f32],
     dout: &[f32],
-    shape: MobaShape,
+    shape: AttnShape,
     layout: &VarlenLayout,
 ) -> Grads {
-    let MobaShape { n, d, block, .. } = shape;
-    let nb = shape.n_blocks();
+    assert_eq!(shape.h, 1, "backward is single-head; loop heads in the caller");
+    let AttnShape { n, d, block, .. } = shape;
+    assert_eq!(q.len(), n * d);
+    assert_eq!(k.len(), n * d);
+    assert_eq!(v.len(), n * d);
+    assert_eq!(dout.len(), n * d);
+    let nb = shape.complete_blocks();
     let scale = 1.0 / (d as f32).sqrt();
 
     // preprocessing kernel: D_t = rowsum(dO ∘ O)
@@ -124,10 +139,12 @@ pub fn flash_moba_backward(
     let mut dk = vec![0.0f32; n * d];
     let mut dv = vec![0.0f32; n * d];
 
-    // main kernel: one pass per logical key block
-    for j in 0..nb {
-        let kb = &k[j * block * d..(j + 1) * block * d];
-        let vb = &v[j * block * d..(j + 1) * block * d];
+    // main kernel: one pass per logical key block (the ragged tail, if
+    // any, appears only as its own queries' causal pass)
+    for j in 0..shape.n_blocks() {
+        let blen = shape.block_len(j);
+        let kb = &k[j * block * d..(j * block + blen) * d];
+        let vb = &v[j * block * d..(j * block + blen) * d];
         let dkb_off = j * block * d;
         let own_start = j * block;
 
@@ -137,7 +154,7 @@ pub fn flash_moba_backward(
                 let qt = &q[t * d..(t + 1) * d];
                 let dot_ = &dout[t * d..(t + 1) * d];
                 // recompute p over this block: p_u = exp(s_u - lse_t)
-                for u in 0..block {
+                for u in 0..blen {
                     if causal && own_start + u > t {
                         break;
                     }
@@ -161,9 +178,11 @@ pub fn flash_moba_backward(
             }
         };
 
-        process_rows(layout.queries_of(j), false, &mut dk, &mut dv);
+        if j < nb {
+            process_rows(layout.queries_of(j), false, &mut dk, &mut dv);
+        }
         let own_rows: Vec<u32> =
-            (own_start as u32..((own_start + block).min(n)) as u32).collect();
+            (own_start as u32..(own_start + blen) as u32).collect();
         process_rows(&own_rows, true, &mut dk, &mut dv);
     }
 
@@ -179,8 +198,8 @@ mod tests {
     use crate::attention::moba_naive::moba_reference;
     use crate::attention::testutil::{max_abs_diff, qkv, Rng};
 
-    fn setup(n: usize, d: usize, b: usize, k: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>, MobaShape) {
-        let shape = MobaShape::new(n, d, b, k);
+    fn setup(n: usize, d: usize, b: usize, k: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>, AttnShape) {
+        let shape = AttnShape::single(n, d, b, k);
         let (q, kk, v) = qkv(seed, n, d);
         (q, kk, v, shape)
     }
@@ -193,7 +212,7 @@ mod tests {
             let mut rng = Rng::new(42);
             let dout = rng.normal_vec(n * d);
             let g1 = naive_backward(&q, &kk, &v, &dout, shape, &out.indices);
-            let g2 = flash_moba_backward(&q, &kk, &v, &out.o, &out.lse, &dout, shape, &out.layout);
+            let g2 = flash_moba_backward(&q, &kk, &v, &out.o, &out.lse, &dout, shape, &out.layouts[0]);
             assert!(max_abs_diff(&g1.dq, &g2.dq) < 5e-4, "dq n={n}");
             assert!(max_abs_diff(&g1.dk, &g2.dk) < 5e-4, "dk n={n}");
             assert!(max_abs_diff(&g1.dv, &g2.dv) < 5e-4, "dv n={n}");
@@ -214,7 +233,7 @@ mod tests {
         };
 
         let out = flash_moba_forward(&q, &kk, &v, shape, FlashMobaConfig::default());
-        let g = flash_moba_backward(&q, &kk, &v, &out.o, &out.lse, &w, shape, &out.layout);
+        let g = flash_moba_backward(&q, &kk, &v, &out.o, &out.lse, &w, shape, &out.layouts[0]);
 
         let eps = 1e-3f32;
         let check = |arr: &[f32], grad: &[f32], which: usize| {
@@ -252,7 +271,7 @@ mod tests {
         let out = flash_moba_forward(&q, &kk, &v, shape, FlashMobaConfig::default());
         let mut rng = Rng::new(47);
         let dout = rng.normal_vec(n * d);
-        let g = flash_moba_backward(&q, &kk, &v, &out.o, &out.lse, &dout, shape, &out.layout);
+        let g = flash_moba_backward(&q, &kk, &v, &out.o, &out.lse, &dout, shape, &out.layouts[0]);
         // gradient exists exactly where some query attends the token
         for u in 0..n {
             let touched = (0..n).any(|t| attended(t, u, b, &out.indices, k));

@@ -2,9 +2,15 @@
 //! block j's keys. Mirror of the Pallas kernel in
 //! `python/compile/kernels/centroid.py`.
 //!
-//! Parallelized over block ranges: each block's mean is an independent
-//! work unit computed with the unchanged serial arithmetic, so the
-//! result is bit-identical at any thread count.
+//! Two entry points share the per-block arithmetic: the single-head
+//! [`centroids`] (block-aligned n, the original kernel) and the packed
+//! [`centroids_packed`], which computes centroids once per *KV head*
+//! over a `(h_kv, n, d)` key tensor and skips a ragged tail block (the
+//! tail is never a routing candidate — see `AttnShape`).
+//!
+//! Parallelized over (head ×) block ranges: each block's mean is an
+//! independent work unit computed with the unchanged serial arithmetic,
+//! so the result is bit-identical at any thread count.
 
 use crate::util::pool::{concat, ExecCtx};
 
@@ -14,18 +20,43 @@ pub fn centroids(k: &[f32], n: usize, d: usize, block: usize) -> Vec<f32> {
     centroids_ctx(ExecCtx::global(), k, n, d, block)
 }
 
-/// [`centroids`] on an explicit execution context.
+/// [`centroids`] on an explicit execution context — the `h_kv = 1`
+/// slice of [`centroids_packed`] (one mean implementation; the
+/// pre-refactor single-head behavior is pinned independently by
+/// `rust/tests/singlehead_regression.rs`). Unlike the packed form,
+/// which silently skips a ragged tail, the single-head entry point
+/// keeps its block-aligned contract and panics on ragged n.
 pub fn centroids_ctx(ctx: &ExecCtx, k: &[f32], n: usize, d: usize, block: usize) -> Vec<f32> {
     assert_eq!(k.len(), n * d);
     assert!(n % block == 0, "N={n} not divisible by B={block}");
-    let nb = n / block;
+    centroids_packed(ctx, k, 1, n, d, block)
+}
+
+/// Packed multi-head centroids: k is `(h_kv, n, d)` row-major; returns
+/// `(h_kv, cb, d)` where `cb = n / block` counts the *complete* blocks
+/// (tail rows of a ragged sequence are excluded — the partial block is
+/// never routed). Work units are flattened `(head, block)` pairs in
+/// head-major order, so `h_kv = 1` with aligned n partitions exactly as
+/// [`centroids_ctx`] does — bit-identical to the single-head kernel.
+pub fn centroids_packed(
+    ctx: &ExecCtx,
+    k: &[f32],
+    h_kv: usize,
+    n: usize,
+    d: usize,
+    block: usize,
+) -> Vec<f32> {
+    assert_eq!(k.len(), h_kv * n * d);
+    let cb = n / block;
     let inv = 1.0 / block as f32;
-    concat(ctx.pool().map_ranges(nb, |range| {
+    concat(ctx.pool().map_ranges(h_kv * cb, |range| {
         let mut out = vec![0.0f32; range.len() * d];
-        for (jj, j) in range.enumerate() {
-            let dst = &mut out[jj * d..(jj + 1) * d];
+        for (uu, u) in range.enumerate() {
+            let (head, j) = (u / cb, u % cb);
+            let base = head * n + j * block;
+            let dst = &mut out[uu * d..(uu + 1) * d];
             for r in 0..block {
-                let src = &k[(j * block + r) * d..(j * block + r + 1) * d];
+                let src = &k[(base + r) * d..(base + r + 1) * d];
                 for c in 0..d {
                     dst[c] += src[c];
                 }
@@ -95,6 +126,24 @@ mod tests {
         for threads in [2, 3, 5, 16] {
             let par = centroids_ctx(&ExecCtx::with_threads(threads), &k, n, d, b);
             assert_eq!(serial, par, "threads={threads}");
+        }
+    }
+
+    /// Packed multi-head == per-head single-head runs, and a ragged
+    /// tail contributes no centroid.
+    #[test]
+    fn packed_covers_heads_and_skips_ragged_tail() {
+        let mut rng = Rng::new(8);
+        let (h_kv, n, d, b) = (3, 2 * 8 + 5, 4, 8); // ragged: cb = 2
+        let k = rng.normal_vec(h_kv * n * d);
+        let ctx = ExecCtx::with_threads(2);
+        let packed = centroids_packed(&ctx, &k, h_kv, n, d, b);
+        let cb = n / b;
+        assert_eq!(packed.len(), h_kv * cb * d);
+        for head in 0..h_kv {
+            let aligned = &k[head * n * d..head * n * d + cb * b * d];
+            let single = centroids_ctx(&ctx, aligned, cb * b, d, b);
+            assert_eq!(&packed[head * cb * d..(head + 1) * cb * d], &single[..], "head {head}");
         }
     }
 }

@@ -6,17 +6,20 @@
 //! extends to decode by maintaining block statistics *incrementally* as
 //! keys arrive:
 //!
-//! * [`KvCache`] — per-session K/V storage partitioned into logical
-//!   MoBA blocks, with a running per-block key sum so the centroid of
-//!   any block is one O(d) multiply away. Appending a token is
-//!   amortized O(d); with key convolution enabled, a ring buffer of the
-//!   last `width` raw keys ([`KconvStream`]) makes the streaming kconv
-//!   bit-identical to the batch [`kconv`](super::kconv::kconv).
-//! * [`DecodeSession`] — routes each new query against the cached
-//!   centroids (top-k over *complete, strictly-past* blocks, plus the
+//! * [`KvCache`] — per-session K/V storage, one block-partitioned store
+//!   *per KV head*, each with a running per-block key sum so the
+//!   centroid of any block is one O(d) multiply away. Appending a token
+//!   is amortized O(h_kv · d); with key convolution enabled, a
+//!   per-head ring buffer of the last `width` raw keys
+//!   ([`KconvStream`]) makes the streaming kconv bit-identical to the
+//!   batch [`kconv`](super::kconv::kconv).
+//! * [`DecodeSession`] — one decode step covers *all* query heads:
+//!   each query head routes against its GQA group's KV-head centroids
+//!   (top-k over complete, strictly-past blocks, plus the
 //!   always-attended current block — the paper's causal own-block
 //!   rule) and computes single-row softmax attention over the gathered
-//!   blocks.
+//!   blocks. `h = h_kv = 1` reproduces the single-head decode path
+//!   bit-for-bit.
 //!
 //! Parity contract: feeding tokens one at a time through a session
 //! reproduces the prefill `forward` of the matching backend
@@ -33,18 +36,11 @@ use super::kconv::KconvStream;
 use super::simd::{axpy, dot};
 use super::topk::{tiled_topk, topk_insert};
 
-/// Per-session K/V block storage with running centroids.
-///
-/// Keys stored here are post-kconv when a [`KconvStream`] is attached;
-/// values are stored as given. `len` tokens occupy `ceil(len / block)`
-/// logical blocks, of which the last may be partial.
+/// One KV head's storage: cached (possibly kconv'd) keys and values,
+/// (len, d) row-major, plus the running per-block key sums.
 #[derive(Debug, Clone)]
-pub struct KvCache {
-    d: usize,
-    block: usize,
-    /// cached (possibly kconv'd) keys, (len, d) row-major
+struct HeadStore {
     k: Vec<f32>,
-    /// cached values, (len, d) row-major
     v: Vec<f32>,
     /// running per-block key sums, (num_blocks, d); divided by the
     /// block's token count at read time to form the centroid
@@ -52,19 +48,47 @@ pub struct KvCache {
     kconv: Option<KconvStream>,
 }
 
+/// Per-session K/V block storage with running centroids, one store per
+/// KV head.
+///
+/// Keys stored here are post-kconv when a [`KconvStream`] is attached
+/// (one independent stream per head, shared taps); values are stored as
+/// given. `len` tokens occupy `ceil(len / block)` logical blocks per
+/// head, of which the last may be partial.
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    h_kv: usize,
+    d: usize,
+    block: usize,
+    heads: Vec<HeadStore>,
+}
+
 impl KvCache {
-    pub fn new(d: usize, block: usize) -> Self {
-        assert!(d >= 1 && block >= 1, "KvCache needs d >= 1 and block >= 1");
-        Self { d, block, k: Vec::new(), v: Vec::new(), sums: Vec::new(), kconv: None }
+    pub fn new(h_kv: usize, d: usize, block: usize) -> Self {
+        assert!(
+            h_kv >= 1 && d >= 1 && block >= 1,
+            "KvCache needs h_kv >= 1, d >= 1 and block >= 1"
+        );
+        let heads = (0..h_kv)
+            .map(|_| HeadStore { k: Vec::new(), v: Vec::new(), sums: Vec::new(), kconv: None })
+            .collect();
+        Self { h_kv, d, block, heads }
     }
 
     /// A cache that applies the depthwise causal key convolution
-    /// (paper Appendix B) to every appended key before storing it.
-    /// `w` is the (width, d) tap tensor.
-    pub fn with_kconv(d: usize, block: usize, w: &[f32], width: usize) -> Self {
-        let mut c = Self::new(d, block);
-        c.kconv = Some(KconvStream::new(w, width, d));
+    /// (paper Appendix B) to every appended key before storing it —
+    /// one independent stream per KV head, sharing the (width, d) tap
+    /// tensor `w`.
+    pub fn with_kconv(h_kv: usize, d: usize, block: usize, w: &[f32], width: usize) -> Self {
+        let mut c = Self::new(h_kv, d, block);
+        for store in &mut c.heads {
+            store.kconv = Some(KconvStream::new(w, width, d));
+        }
         c
+    }
+
+    pub fn h_kv(&self) -> usize {
+        self.h_kv
     }
 
     pub fn d(&self) -> usize {
@@ -75,13 +99,13 @@ impl KvCache {
         self.block
     }
 
-    /// Tokens cached.
+    /// Tokens cached (identical across heads).
     pub fn len(&self) -> usize {
-        self.k.len() / self.d
+        self.heads[0].k.len() / self.d
     }
 
     pub fn is_empty(&self) -> bool {
-        self.k.is_empty()
+        self.heads[0].k.is_empty()
     }
 
     /// Logical blocks currently occupied, `ceil(len / block)`.
@@ -100,81 +124,100 @@ impl KvCache {
         (self.len() - b * self.block).min(self.block)
     }
 
-    /// Cached (post-kconv) keys, (len, d) row-major.
+    /// KV head `head`'s cached (post-kconv) keys, (len, d) row-major.
+    pub fn keys_of(&self, head: usize) -> &[f32] {
+        &self.heads[head].k
+    }
+
+    /// KV head `head`'s cached values, (len, d) row-major.
+    pub fn values_of(&self, head: usize) -> &[f32] {
+        &self.heads[head].v
+    }
+
+    /// Single-KV-head convenience accessor (`h_kv == 1`).
     pub fn keys(&self) -> &[f32] {
-        &self.k
+        assert_eq!(self.h_kv, 1, "use keys_of(head) on a multi-head cache");
+        self.keys_of(0)
     }
 
-    /// Cached values, (len, d) row-major.
+    /// Single-KV-head convenience accessor (`h_kv == 1`).
     pub fn values(&self) -> &[f32] {
-        &self.v
+        assert_eq!(self.h_kv, 1, "use values_of(head) on a multi-head cache");
+        self.values_of(0)
     }
 
-    /// Append one token's (k_t, v_t). Amortized O(d): one ring-buffer
-    /// kconv step (O(width · d)) when enabled, one add into the current
-    /// block's running sum, two row copies — no per-token allocation on
-    /// the plain path.
+    /// Append one token's packed (k_t, v_t), each `(h_kv, d)` row-major.
+    /// Amortized O(h_kv · d): per head one ring-buffer kconv step
+    /// (O(width · d)) when enabled, one add into the current block's
+    /// running sum, two row copies — no per-token allocation on the
+    /// plain path.
     pub fn append(&mut self, k_t: &[f32], v_t: &[f32]) {
-        assert_eq!(k_t.len(), self.d, "key row has wrong width");
-        assert_eq!(v_t.len(), self.d, "value row has wrong width");
+        assert_eq!(k_t.len(), self.h_kv * self.d, "key row has wrong width");
+        assert_eq!(v_t.len(), self.h_kv * self.d, "value row has wrong width");
         let t = self.len();
-        if t % self.block == 0 {
-            // first token of a fresh block: open its running sum
-            self.sums.extend(std::iter::repeat(0.0f32).take(self.d));
-        }
         let b = t / self.block;
-        match &mut self.kconv {
-            Some(stream) => {
-                let stored = stream.push(k_t);
-                let sum = &mut self.sums[b * self.d..(b + 1) * self.d];
-                for (c, s) in sum.iter_mut().enumerate() {
-                    *s += stored[c];
-                }
-                self.k.extend_from_slice(&stored);
+        let d = self.d;
+        for (head, store) in self.heads.iter_mut().enumerate() {
+            if t % self.block == 0 {
+                // first token of a fresh block: open its running sum
+                let len = store.sums.len();
+                store.sums.resize(len + d, 0.0);
             }
-            None => {
-                let sum = &mut self.sums[b * self.d..(b + 1) * self.d];
-                for (c, s) in sum.iter_mut().enumerate() {
-                    *s += k_t[c];
+            let kh = &k_t[head * d..(head + 1) * d];
+            match &mut store.kconv {
+                Some(stream) => {
+                    let stored = stream.push(kh);
+                    let sum = &mut store.sums[b * d..(b + 1) * d];
+                    for (c, s) in sum.iter_mut().enumerate() {
+                        *s += stored[c];
+                    }
+                    store.k.extend_from_slice(&stored);
                 }
-                self.k.extend_from_slice(k_t);
+                None => {
+                    let sum = &mut store.sums[b * d..(b + 1) * d];
+                    for (c, s) in sum.iter_mut().enumerate() {
+                        *s += kh[c];
+                    }
+                    store.k.extend_from_slice(kh);
+                }
             }
+            store.v.extend_from_slice(&v_t[head * d..(head + 1) * d]);
         }
-        self.v.extend_from_slice(v_t);
     }
 
-    /// Write block `b`'s centroid (mean of its stored keys) into `out`.
-    /// For complete blocks this is bit-identical to the batch
-    /// [`centroids`](super::centroid::centroids): the sum accumulates
-    /// in arrival order and is scaled by `1 / block` once.
-    pub fn centroid_into(&self, b: usize, out: &mut [f32]) {
+    /// Write KV head `head`'s block `b` centroid (mean of its stored
+    /// keys) into `out`. For complete blocks this is bit-identical to
+    /// the batch [`centroids`](super::centroid::centroids): the sum
+    /// accumulates in arrival order and is scaled by `1 / block` once.
+    pub fn centroid_into(&self, head: usize, b: usize, out: &mut [f32]) {
         assert_eq!(out.len(), self.d);
         let inv = 1.0 / self.block_len(b) as f32;
-        let sum = &self.sums[b * self.d..(b + 1) * self.d];
+        let sum = &self.heads[head].sums[b * self.d..(b + 1) * self.d];
         for (c, o) in out.iter_mut().enumerate() {
             *o = sum[c] * inv;
         }
     }
 
-    /// Block `b`'s centroid as an owned row.
-    pub fn centroid(&self, b: usize) -> Vec<f32> {
+    /// KV head `head`'s block `b` centroid as an owned row.
+    pub fn centroid(&self, head: usize, b: usize) -> Vec<f32> {
         let mut out = vec![0.0f32; self.d];
-        self.centroid_into(b, &mut out);
+        self.centroid_into(head, b, &mut out);
         out
     }
 
-    /// Route the query at the current position (the last appended
-    /// token): top-`topk` complete strictly-past blocks by q·centroid,
-    /// plus the always-attended current block. Returns block indices
-    /// sorted ascending, deduplicated, all causal (`<= own`), with the
-    /// own block always last.
+    /// Route one query head's row (at the current position, i.e. the
+    /// last appended token) against KV head `head`'s centroids:
+    /// top-`topk` complete strictly-past blocks by q·centroid, plus the
+    /// always-attended current block. Returns block indices sorted
+    /// ascending, deduplicated, all causal (`<= own`), with the own
+    /// block always last.
     ///
     /// Selection uses the same streaming insertion (and therefore the
     /// same tie-breaking: earliest block wins) as
     /// [`tiled_topk`](super::topk::tiled_topk), over centroids computed
     /// with the same arithmetic — so it reproduces prefill routing
     /// exactly.
-    pub fn route(&self, q: &[f32], topk: usize) -> Vec<usize> {
+    pub fn route(&self, q: &[f32], head: usize, topk: usize) -> Vec<usize> {
         assert!(!self.is_empty(), "route called on an empty cache");
         assert_eq!(q.len(), self.d);
         let own = (self.len() - 1) / self.block;
@@ -185,7 +228,7 @@ impl KvCache {
             let mut best_i = vec![-1i32; topk];
             let mut cbuf = vec![0.0f32; self.d];
             for j in 0..own {
-                self.centroid_into(j, &mut cbuf);
+                self.centroid_into(head, j, &mut cbuf);
                 topk_insert(&mut best_s, &mut best_i, dot(q, &cbuf), j as i32);
             }
             blocks.extend(best_i.iter().filter(|&&j| j >= 0).map(|&j| j as usize));
@@ -195,15 +238,17 @@ impl KvCache {
         blocks
     }
 
-    /// Single-row softmax attention of `q` over the given blocks
-    /// (ascending; the last may be the partial current block). Exact
-    /// per-row softmax: gather scores, subtract the max, combine
-    /// values — the decode analogue of one `naive_attention` row.
-    pub fn attend(&self, q: &[f32], blocks: &[usize]) -> Vec<f32> {
+    /// Single-row softmax attention of one query head's row `q` over
+    /// the given blocks of KV head `head` (ascending; the last may be
+    /// the partial current block). Exact per-row softmax: gather
+    /// scores, subtract the max, combine values — the decode analogue
+    /// of one `naive_attention` row.
+    pub fn attend(&self, q: &[f32], head: usize, blocks: &[usize]) -> Vec<f32> {
         assert!(!self.is_empty(), "attend called on an empty cache");
         assert_eq!(q.len(), self.d);
         let d = self.d;
         let len = self.len();
+        let store = &self.heads[head];
         let scale = 1.0 / (d as f32).sqrt();
         let mut scores: Vec<f32> = Vec::with_capacity(blocks.len() * self.block);
         let mut rows: Vec<usize> = Vec::with_capacity(blocks.len() * self.block);
@@ -212,7 +257,7 @@ impl KvCache {
             let start = b * self.block;
             let end = ((b + 1) * self.block).min(len);
             for u in start..end {
-                let s = dot(q, &self.k[u * d..(u + 1) * d]) * scale;
+                let s = dot(q, &store.k[u * d..(u + 1) * d]) * scale;
                 if s > m {
                     m = s;
                 }
@@ -225,7 +270,7 @@ impl KvCache {
         for (&s, &u) in scores.iter().zip(rows.iter()) {
             let p = (s - m).exp();
             z += p;
-            axpy(&mut out, p, &self.v[u * d..(u + 1) * d]);
+            axpy(&mut out, p, &store.v[u * d..(u + 1) * d]);
         }
         for o in out.iter_mut() {
             *o /= z;
@@ -234,25 +279,32 @@ impl KvCache {
     }
 }
 
-/// One autoregressive decode session: a [`KvCache`] plus the routing
-/// geometry and per-step accounting. Backends drive it through
-/// [`AttentionBackend::forward_decode`](super::backend::AttentionBackend::forward_decode).
+/// One autoregressive decode session: a [`KvCache`] plus the head
+/// layout, routing geometry and per-step accounting. One
+/// [`AttentionBackend::forward_decode`](super::backend::AttentionBackend::forward_decode)
+/// call per token covers all `h` query heads.
 #[derive(Debug, Clone)]
 pub struct DecodeSession {
     cache: KvCache,
+    /// query heads served per step (GQA group = h / cache.h_kv())
+    h: usize,
     topk: usize,
     /// decode steps served so far
     steps: u64,
-    /// K/V bytes gathered from the cache by the last decode step
+    /// K/V bytes gathered from the cache by the last decode step,
+    /// summed over all query heads
     last_gathered_bytes: u64,
-    /// blocks attended by the last decode step (incl. the own block)
+    /// blocks attended by the last decode step, summed over all query
+    /// heads (each incl. its own block)
     last_routed_blocks: usize,
 }
 
 impl DecodeSession {
-    pub fn new(d: usize, block: usize, topk: usize) -> Self {
+    pub fn new(h: usize, h_kv: usize, d: usize, block: usize, topk: usize) -> Self {
+        assert!(h >= 1 && h_kv >= 1 && h % h_kv == 0, "h={h} must be a multiple of h_kv={h_kv}");
         Self {
-            cache: KvCache::new(d, block),
+            cache: KvCache::new(h_kv, d, block),
+            h,
             topk,
             steps: 0,
             last_gathered_bytes: 0,
@@ -260,15 +312,34 @@ impl DecodeSession {
         }
     }
 
-    /// A session whose cache applies the streaming key convolution.
-    pub fn with_kconv(d: usize, block: usize, topk: usize, w: &[f32], width: usize) -> Self {
-        let mut s = Self::new(d, block, topk);
-        s.cache = KvCache::with_kconv(d, block, w, width);
+    /// A session whose cache applies the streaming key convolution
+    /// (shared taps, one stream per KV head).
+    pub fn with_kconv(
+        h: usize,
+        h_kv: usize,
+        d: usize,
+        block: usize,
+        topk: usize,
+        w: &[f32],
+        width: usize,
+    ) -> Self {
+        let mut s = Self::new(h, h_kv, d, block, topk);
+        s.cache = KvCache::with_kconv(h_kv, d, block, w, width);
         s
     }
 
     pub fn cache(&self) -> &KvCache {
         &self.cache
+    }
+
+    /// Query heads per step.
+    pub fn h(&self) -> usize {
+        self.h
+    }
+
+    /// KV heads in the cache.
+    pub fn h_kv(&self) -> usize {
+        self.cache.h_kv()
     }
 
     pub fn d(&self) -> usize {
@@ -277,6 +348,12 @@ impl DecodeSession {
 
     pub fn topk(&self) -> usize {
         self.topk
+    }
+
+    /// The KV head query head `qh` routes and attends against.
+    pub fn kv_head_of(&self, qh: usize) -> usize {
+        debug_assert!(qh < self.h);
+        qh / (self.h / self.cache.h_kv())
     }
 
     pub fn len(&self) -> usize {
@@ -299,45 +376,81 @@ impl DecodeSession {
         self.last_routed_blocks
     }
 
-    /// Append one token's (k_t, v_t) to the cache.
+    /// Append one token's packed `(h_kv, d)` (k_t, v_t) to the cache.
     pub fn append(&mut self, k_t: &[f32], v_t: &[f32]) {
         self.cache.append(k_t, v_t);
     }
 
-    /// The block set the current query would attend (routing only).
-    pub fn route_current(&self, q: &[f32]) -> Vec<usize> {
-        self.cache.route(q, self.topk)
+    /// The block sets the current packed `(h, d)` query would attend
+    /// (routing only), one per query head.
+    pub fn route_current(&self, q: &[f32]) -> Vec<Vec<usize>> {
+        assert_eq!(q.len(), self.h * self.d());
+        let d = self.d();
+        (0..self.h)
+            .map(|qh| self.cache.route(&q[qh * d..(qh + 1) * d], self.kv_head_of(qh), self.topk))
+            .collect()
     }
 
-    /// Routed decode: top-k blocks + own block (the MoBA decode path).
+    /// Routed decode of a packed `(h, d)` query: per query head, top-k
+    /// blocks + own block (the MoBA decode path). Returns the packed
+    /// `(h, d)` output row.
     pub fn decode_routed(&mut self, q: &[f32]) -> Vec<f32> {
-        let blocks = self.cache.route(q, self.topk);
-        self.note_gather(&blocks);
-        self.cache.attend(q, &blocks)
+        assert_eq!(q.len(), self.h * self.d());
+        let d = self.d();
+        let mut out = Vec::with_capacity(self.h * d);
+        let mut gathered = 0u64;
+        let mut routed = 0usize;
+        for qh in 0..self.h {
+            let kvh = self.kv_head_of(qh);
+            let qrow = &q[qh * d..(qh + 1) * d];
+            let blocks = self.cache.route(qrow, kvh, self.topk);
+            gathered += self.gather_bytes(&blocks);
+            routed += blocks.len();
+            out.extend(self.cache.attend(qrow, kvh, &blocks));
+        }
+        self.note_step(gathered, routed);
+        out
     }
 
-    /// Exact dense decode over the whole cache (the fallback path and
-    /// the oracle for routed decode at full routing).
+    /// Exact dense decode of a packed `(h, d)` query over the whole
+    /// cache (the fallback path and the oracle for routed decode at
+    /// full routing). Returns the packed `(h, d)` output row.
     pub fn decode_dense(&mut self, q: &[f32]) -> Vec<f32> {
+        assert_eq!(q.len(), self.h * self.d());
+        let d = self.d();
         let blocks: Vec<usize> = (0..self.cache.num_blocks()).collect();
-        self.note_gather(&blocks);
-        self.cache.attend(q, &blocks)
+        let mut out = Vec::with_capacity(self.h * d);
+        let mut gathered = 0u64;
+        let mut routed = 0usize;
+        for qh in 0..self.h {
+            let kvh = self.kv_head_of(qh);
+            gathered += self.gather_bytes(&blocks);
+            routed += blocks.len();
+            out.extend(self.cache.attend(&q[qh * d..(qh + 1) * d], kvh, &blocks));
+        }
+        self.note_step(gathered, routed);
+        out
     }
 
-    fn note_gather(&mut self, blocks: &[usize]) {
+    /// K and V bytes one query head reads from the cache for `blocks`.
+    fn gather_bytes(&self, blocks: &[usize]) -> u64 {
         let toks: usize = blocks.iter().map(|&b| self.cache.block_len(b)).sum();
-        // K and V rows read from the cache for this step
-        self.last_gathered_bytes = (2 * toks * self.cache.d() * 4) as u64;
-        self.last_routed_blocks = blocks.len();
+        (2 * toks * self.d() * 4) as u64
+    }
+
+    fn note_step(&mut self, gathered: u64, routed: usize) {
+        self.last_gathered_bytes = gathered;
+        self.last_routed_blocks = routed;
         self.steps += 1;
     }
 }
 
-/// Slow oracle for the decode semantics, ragged-n capable: row `t`
-/// attends its own (possibly partial) block causally plus the top-k
-/// complete strictly-past blocks by q·centroid, with f64 softmax.
+/// Slow single-head oracle for the decode semantics, ragged-n capable:
+/// row `t` attends its own (possibly partial) block causally plus the
+/// top-k complete strictly-past blocks by q·centroid, with f64 softmax.
 /// Routing reuses [`tiled_topk`] over the complete-prefix centroids, so
-/// selection ties break exactly as in prefill and decode.
+/// selection ties break exactly as in prefill and decode. Multi-head
+/// callers run it once per query head with the GQA-mapped K/V slices.
 pub fn decode_reference(
     q: &[f32],
     k: &[f32],
@@ -402,12 +515,13 @@ mod tests {
     use super::*;
     use crate::attention::dense::naive_attention;
     use crate::attention::kconv::kconv;
-    use crate::attention::testutil::{max_abs_diff, qkv, Rng};
+    use crate::attention::testutil::{max_abs_diff, qkv, qkv_packed, Rng};
+    use crate::attention::packed_rows;
 
     #[test]
     fn append_tracks_blocks_and_centroids() {
         let (d, block) = (4, 8);
-        let mut cache = KvCache::new(d, block);
+        let mut cache = KvCache::new(1, d, block);
         let mut rng = Rng::new(1);
         for t in 0..20 {
             cache.append(&rng.normal_vec(d), &rng.normal_vec(d));
@@ -418,11 +532,38 @@ mod tests {
         assert_eq!(cache.block_len(0), 8);
         assert_eq!(cache.block_len(2), 4); // 20 = 2*8 + 4
         // centroid of block 1 == mean of its stored keys
-        let cen = cache.centroid(1);
+        let cen = cache.centroid(0, 1);
         for c in 0..d {
             let mean: f32 =
                 (8..16).map(|t| cache.keys()[t * d + c]).sum::<f32>() / 8.0;
             assert!((cen[c] - mean).abs() < 1e-5);
+        }
+    }
+
+    /// Multi-head appends keep every KV head's store independent: each
+    /// head's keys/values/centroids equal a single-head cache fed that
+    /// head's rows.
+    #[test]
+    fn multi_head_stores_are_per_head_caches() {
+        let (h_kv, n, d, block) = (3, 26, 4, 8);
+        let (_, k, v) = qkv_packed(2, 1, h_kv, n, d);
+        let mut cache = KvCache::new(h_kv, d, block);
+        for t in 0..n {
+            cache.append(&packed_rows(&k, h_kv, n, d, t), &packed_rows(&v, h_kv, n, d, t));
+        }
+        for head in 0..h_kv {
+            let mut single = KvCache::new(1, d, block);
+            for t in 0..n {
+                single.append(
+                    &k[(head * n + t) * d..(head * n + t + 1) * d],
+                    &v[(head * n + t) * d..(head * n + t + 1) * d],
+                );
+            }
+            assert_eq!(cache.keys_of(head), single.keys(), "head {head} keys");
+            assert_eq!(cache.values_of(head), single.values(), "head {head} values");
+            for b in 0..cache.num_blocks() {
+                assert_eq!(cache.centroid(head, b), single.centroid(0, b), "head {head} b {b}");
+            }
         }
     }
 
@@ -431,13 +572,13 @@ mod tests {
     fn complete_block_centroids_match_batch_exactly() {
         let (n, d, block) = (64, 8, 16);
         let (_, k, v) = qkv(2, n, d);
-        let mut cache = KvCache::new(d, block);
+        let mut cache = KvCache::new(1, d, block);
         for t in 0..n {
             cache.append(&k[t * d..(t + 1) * d], &v[t * d..(t + 1) * d]);
         }
         let batch = crate::attention::centroid::centroids(&k, n, d, block);
         for b in 0..n / block {
-            assert_eq!(&cache.centroid(b)[..], &batch[b * d..(b + 1) * d], "block {b}");
+            assert_eq!(&cache.centroid(0, b)[..], &batch[b * d..(b + 1) * d], "block {b}");
         }
     }
 
@@ -445,10 +586,10 @@ mod tests {
     fn route_is_sorted_causal_and_includes_own_block() {
         let (n, d, block, topk) = (100, 8, 16, 3);
         let (q, k, v) = qkv(3, n, d);
-        let mut cache = KvCache::new(d, block);
+        let mut cache = KvCache::new(1, d, block);
         for t in 0..n {
             cache.append(&k[t * d..(t + 1) * d], &v[t * d..(t + 1) * d]);
-            let blocks = cache.route(&q[t * d..(t + 1) * d], topk);
+            let blocks = cache.route(&q[t * d..(t + 1) * d], 0, topk);
             let own = t / block;
             assert!(blocks.windows(2).all(|w| w[0] < w[1]), "t={t} {blocks:?}");
             assert_eq!(*blocks.last().unwrap(), own);
@@ -465,7 +606,7 @@ mod tests {
         let (n, d, block) = (96, 8, 16);
         let (q, k, v) = qkv(4, n, d);
         let (oracle, _) = naive_attention(&q, &k, &v, n, d);
-        let mut sess = DecodeSession::new(d, block, n / block); // topk >= all blocks
+        let mut sess = DecodeSession::new(1, 1, d, block, n / block); // topk >= all blocks
         for t in 0..n {
             sess.append(&k[t * d..(t + 1) * d], &v[t * d..(t + 1) * d]);
             let o = sess.decode_routed(&q[t * d..(t + 1) * d]);
@@ -478,12 +619,47 @@ mod tests {
         assert!(sess.last_gathered_bytes() > 0);
     }
 
+    /// One GQA decode step covers every query head: the packed output
+    /// equals per-head single-head sessions over the mapped KV heads.
+    #[test]
+    fn gqa_step_equals_per_head_single_head_sessions() {
+        let (h, h_kv, n, d, block, topk) = (4, 2, 60, 8, 16, 2);
+        let (q, k, v) = qkv_packed(5, h, h_kv, n, d);
+        let mut sess = DecodeSession::new(h, h_kv, d, block, topk);
+        let mut singles: Vec<DecodeSession> =
+            (0..h).map(|_| DecodeSession::new(1, 1, d, block, topk)).collect();
+        let group = h / h_kv;
+        for t in 0..n {
+            sess.append(&packed_rows(&k, h_kv, n, d, t), &packed_rows(&v, h_kv, n, d, t));
+            let o = sess.decode_routed(&packed_rows(&q, h, n, d, t));
+            assert_eq!(o.len(), h * d);
+            for (qh, single) in singles.iter_mut().enumerate() {
+                let kvh = qh / group;
+                single.append(
+                    &k[(kvh * n + t) * d..(kvh * n + t + 1) * d],
+                    &v[(kvh * n + t) * d..(kvh * n + t + 1) * d],
+                );
+                let oh = single.decode_routed(&q[(qh * n + t) * d..(qh * n + t + 1) * d]);
+                assert_eq!(&o[qh * d..(qh + 1) * d], &oh[..], "t={t} head {qh}");
+            }
+        }
+        // accounting sums over query heads
+        assert_eq!(
+            sess.last_routed_blocks(),
+            singles.iter().map(|s| s.last_routed_blocks()).sum::<usize>()
+        );
+        assert_eq!(
+            sess.last_gathered_bytes(),
+            singles.iter().map(|s| s.last_gathered_bytes()).sum::<u64>()
+        );
+    }
+
     #[test]
     fn dense_decode_equals_naive_rows_ragged() {
         let (n, d, block) = (70, 4, 16); // n not divisible by block
         let (q, k, v) = qkv(5, n, d);
         let (oracle, _) = naive_attention(&q, &k, &v, n, d);
-        let mut sess = DecodeSession::new(d, block, 0);
+        let mut sess = DecodeSession::new(1, 1, d, block, 0);
         for t in 0..n {
             sess.append(&k[t * d..(t + 1) * d], &v[t * d..(t + 1) * d]);
             let o = sess.decode_dense(&q[t * d..(t + 1) * d]);
@@ -496,7 +672,7 @@ mod tests {
         for (n, d, block, topk) in [(100, 8, 16, 2), (64, 4, 16, 0), (50, 4, 8, 3)] {
             let (q, k, v) = qkv(6 + n as u64, n, d);
             let oracle = decode_reference(&q, &k, &v, n, d, block, topk);
-            let mut sess = DecodeSession::new(d, block, topk);
+            let mut sess = DecodeSession::new(1, 1, d, block, topk);
             for t in 0..n {
                 sess.append(&k[t * d..(t + 1) * d], &v[t * d..(t + 1) * d]);
                 let o = sess.decode_routed(&q[t * d..(t + 1) * d]);
@@ -508,26 +684,35 @@ mod tests {
         }
     }
 
-    /// Streaming kconv inside the cache == batch kconv of the same keys.
+    /// Streaming kconv inside the cache == batch kconv of the same
+    /// keys, independently per KV head.
     #[test]
     fn cached_keys_match_batch_kconv() {
-        let (n, d, block, width) = (48, 8, 16, 4);
-        let (_, k, v) = qkv(7, n, d);
+        let (h_kv, n, d, block, width) = (2, 48, 8, 16, 4);
+        let (_, k, v) = qkv_packed(7, 1, h_kv, n, d);
         let mut rng = Rng::new(8);
         let w = rng.normal_vec(width * d);
-        let mut cache = KvCache::with_kconv(d, block, &w, width);
+        let mut cache = KvCache::with_kconv(h_kv, d, block, &w, width);
         for t in 0..n {
-            cache.append(&k[t * d..(t + 1) * d], &v[t * d..(t + 1) * d]);
+            cache.append(&packed_rows(&k, h_kv, n, d, t), &packed_rows(&v, h_kv, n, d, t));
         }
-        let batch = kconv(&k, &w, n, d, width);
-        assert_eq!(cache.keys(), &batch[..]);
-        // values are stored untouched
-        assert_eq!(cache.values(), &v[..]);
+        for head in 0..h_kv {
+            let batch = kconv(&k[head * n * d..(head + 1) * n * d], &w, n, d, width);
+            assert_eq!(cache.keys_of(head), &batch[..], "head {head}");
+            // values are stored untouched
+            assert_eq!(cache.values_of(head), &v[head * n * d..(head + 1) * n * d]);
+        }
     }
 
     #[test]
     #[should_panic]
     fn route_on_empty_cache_panics() {
-        KvCache::new(4, 8).route(&[0.0; 4], 2);
+        KvCache::new(1, 4, 8).route(&[0.0; 4], 0, 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn ragged_head_groups_panic() {
+        DecodeSession::new(3, 2, 4, 8, 1);
     }
 }

@@ -1,13 +1,21 @@
 //! Dense causal attention baselines.
 //!
 //! * [`naive_attention`] — textbook O(N²) with a materialized score row
-//!   (the correctness oracle for everything else).
-//! * [`flash_attention`] — blocked, online-softmax, cache-tiled: the
-//!   FlashAttention-2 analogue on this hardware (used as the dense
-//!   baseline in Figure 3/4 reproductions).
+//!   (the correctness oracle for everything else); single-head.
+//!   [`naive_attention_packed`] runs it per query head over packed
+//!   `(h, n, d)` / `(h_kv, n, d)` tensors with the GQA head mapping.
+//! * [`flash_attention_packed`] — blocked, online-softmax, cache-tiled:
+//!   the FlashAttention-2 analogue on this hardware (used as the dense
+//!   baseline in Figure 3/4 reproductions). Iterates heads internally:
+//!   one call covers the whole head dimension, with the thread pool
+//!   partitioning flattened `(head, query-tile)` work units.
+//!   [`flash_attention`]/[`flash_attention_ctx`] are the single-head
+//!   form (`h = h_kv = 1`), preserved for the microbenches and the
+//!   bit-parity regression suite.
 //!
-//! Both return the output and the per-row logsumexp L (needed by the
-//! merge stage of the original-MoBA pipeline and by the backward pass).
+//! All forms return the output and the per-row logsumexp L (needed by
+//! the merge stage of the original-MoBA pipeline and by the backward
+//! pass).
 
 use super::simd::{axpy, dot, scale as vscale};
 use super::stats::ws_bytes;
@@ -45,12 +53,43 @@ pub fn naive_attention(q: &[f32], k: &[f32], v: &[f32], n: usize, d: usize) -> (
     (o, lse)
 }
 
-/// Blocked online-softmax causal attention (FlashAttention-2 style), on
-/// the process-wide shared pool.
-///
-/// Processes queries in `br`-row tiles and keys in `bc`-column tiles,
-/// carrying (m, l, acc) across key tiles; only O(br·bc + br·d) workspace
-/// per worker.
+/// [`naive_attention`] per query head over packed tensors: q is
+/// `(h, n, d)`, k/v are `(h_kv, n, d)`, query head `qh` attends KV head
+/// `qh / (h / h_kv)`. Serial (it is the oracle). Returns the packed
+/// `(h, n, d)` output and `(h, n)` logsumexp.
+pub fn naive_attention_packed(
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    h: usize,
+    h_kv: usize,
+    n: usize,
+    d: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    assert!(h >= 1 && h_kv >= 1 && h % h_kv == 0);
+    assert_eq!(q.len(), h * n * d);
+    assert_eq!(k.len(), h_kv * n * d);
+    assert_eq!(v.len(), h_kv * n * d);
+    let group = h / h_kv;
+    let mut o = Vec::with_capacity(h * n * d);
+    let mut lse = Vec::with_capacity(h * n);
+    for qh in 0..h {
+        let kvh = qh / group;
+        let (oh, lh) = naive_attention(
+            &q[qh * n * d..(qh + 1) * n * d],
+            &k[kvh * n * d..(kvh + 1) * n * d],
+            &v[kvh * n * d..(kvh + 1) * n * d],
+            n,
+            d,
+        );
+        o.extend_from_slice(&oh);
+        lse.extend_from_slice(&lh);
+    }
+    (o, lse)
+}
+
+/// Blocked online-softmax causal attention (FlashAttention-2 style),
+/// single-head, on the process-wide shared pool.
 pub fn flash_attention(
     q: &[f32],
     k: &[f32],
@@ -63,10 +102,9 @@ pub fn flash_attention(
     flash_attention_ctx(ExecCtx::global(), q, k, v, n, d, br, bc)
 }
 
-/// [`flash_attention`] on an explicit execution context. Query tiles
-/// are independent work units (each carries its own (m, l, acc) state
-/// and visits key tiles in the same ascending order), so partitioning
-/// the tile loop across workers is bit-identical to the serial path.
+/// Single-head [`flash_attention`] on an explicit execution context —
+/// the `h = h_kv = 1` slice of [`flash_attention_packed`], kept as its
+/// own entry point for the microbenches and regression suites.
 #[allow(clippy::too_many_arguments)]
 pub fn flash_attention_ctx(
     ctx: &ExecCtx,
@@ -78,20 +116,55 @@ pub fn flash_attention_ctx(
     br: usize,
     bc: usize,
 ) -> (Vec<f32>, Vec<f32>, u64) {
+    flash_attention_packed(ctx, q, k, v, 1, 1, n, d, br, bc)
+}
+
+/// Packed multi-head blocked online-softmax causal attention. q is
+/// `(h, n, d)`, k/v are `(h_kv, n, d)` (GQA: query head `qh` reads KV
+/// head `qh / (h / h_kv)`). Returns the packed `(h, n, d)` output, the
+/// `(h, n)` logsumexp, and workspace bytes.
+///
+/// Work units are flattened `(head, query-tile)` pairs in head-major
+/// order: each tile carries its own (m, l, acc) state and visits key
+/// tiles in the same ascending order, so partitioning the flattened
+/// tile sequence across workers is bit-identical to the serial path —
+/// and `h = 1` partitions exactly as the pre-multi-head kernel did.
+#[allow(clippy::too_many_arguments)]
+pub fn flash_attention_packed(
+    ctx: &ExecCtx,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    h: usize,
+    h_kv: usize,
+    n: usize,
+    d: usize,
+    br: usize,
+    bc: usize,
+) -> (Vec<f32>, Vec<f32>, u64) {
+    assert!(h >= 1 && h_kv >= 1 && h % h_kv == 0, "h={h} must be a multiple of h_kv={h_kv}");
+    assert_eq!(q.len(), h * n * d);
+    assert_eq!(k.len(), h_kv * n * d);
+    assert_eq!(v.len(), h_kv * n * d);
+    let group = h / h_kv;
     let scale = 1.0 / (d as f32).sqrt();
     let tq = n.div_ceil(br);
-    let parts = ctx.pool().map_ranges(tq, |tiles| {
-        let row0 = tiles.start * br;
-        let row_end = (tiles.end * br).min(n);
-        let mut o = vec![0.0f32; (row_end - row0) * d];
-        let mut lse = vec![0.0f32; row_end - row0];
+    let parts = ctx.pool().map_ranges(h * tq, |units| {
+        let mut o = Vec::with_capacity(units.len() * br * d);
+        let mut lse = Vec::with_capacity(units.len() * br);
         let mut s = vec![0.0f32; br * bc];
         let mut acc = vec![0.0f32; br * d];
         let mut mrow = vec![NEG_INF; br];
         let mut lrow = vec![0.0f32; br];
         let workspace = ws_bytes(&[s.len(), acc.len(), mrow.len(), lrow.len()]);
 
-        for it in tiles {
+        for u in units {
+            let (head, it) = (u / tq, u % tq);
+            let qh = &q[head * n * d..(head + 1) * n * d];
+            let kvh = head / group;
+            let kh = &k[kvh * n * d..(kvh + 1) * n * d];
+            let vh = &v[kvh * n * d..(kvh + 1) * n * d];
+
             let r0 = it * br;
             let rows = br.min(n - r0);
             acc[..rows * d].fill(0.0);
@@ -105,15 +178,15 @@ pub fn flash_attention_ctx(
                 let cols = bc.min(last_col - c0).min(bc);
                 // scores tile
                 for r in 0..rows {
-                    let qt = &q[(r0 + r) * d..(r0 + r + 1) * d];
+                    let qt = &qh[(r0 + r) * d..(r0 + r + 1) * d];
                     let srow = &mut s[r * bc..r * bc + cols];
                     for (cc, sval) in srow.iter_mut().enumerate() {
-                        let u = c0 + cc;
-                        if u > r0 + r {
+                        let col = c0 + cc;
+                        if col > r0 + r {
                             *sval = NEG_INF;
                             continue;
                         }
-                        *sval = dot(qt, &k[u * d..(u + 1) * d]) * scale;
+                        *sval = dot(qt, &kh[col * d..(col + 1) * d]) * scale;
                     }
                 }
                 // online softmax update
@@ -143,26 +216,28 @@ pub fn flash_attention_ctx(
                         if p == 0.0 {
                             continue;
                         }
-                        axpy(arow, p, &v[(c0 + cc) * d..(c0 + cc + 1) * d]);
+                        axpy(arow, p, &vh[(c0 + cc) * d..(c0 + cc + 1) * d]);
                     }
                     mrow[r] = mt;
                 }
             }
+            // tile epilogue: normalize and append (tiles are emitted in
+            // flattened unit order, which is exactly the packed (h, n, d)
+            // row order)
             for r in 0..rows {
                 let l = if lrow[r] == 0.0 { 1.0 } else { lrow[r] };
-                let ot = &mut o[(r0 - row0 + r) * d..(r0 - row0 + r + 1) * d];
                 let arow = &acc[r * d..(r + 1) * d];
                 for c in 0..d {
-                    ot[c] = arow[c] / l;
+                    o.push(arow[c] / l);
                 }
-                lse[r0 - row0 + r] = mrow[r] + lrow[r].max(1e-30).ln();
+                lse.push(mrow[r] + lrow[r].max(1e-30).ln());
             }
         }
         (o, lse, workspace)
     });
 
-    let mut o = Vec::with_capacity(n * d);
-    let mut lse = Vec::with_capacity(n);
+    let mut o = Vec::with_capacity(h * n * d);
+    let mut lse = Vec::with_capacity(h * n);
     let mut workspace = 0u64;
     for (op, lp, ws) in parts {
         o.extend_from_slice(&op);
@@ -175,7 +250,7 @@ pub fn flash_attention_ctx(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::attention::testutil::{max_abs_diff, qkv};
+    use crate::attention::testutil::{max_abs_diff, qkv, qkv_packed};
 
     #[test]
     fn flash_matches_naive() {
@@ -188,8 +263,8 @@ mod tests {
         }
     }
 
-    /// Partitioning query tiles across workers must not change a single
-    /// bit of o or lse.
+    /// Partitioning (head, query-tile) units across workers must not
+    /// change a single bit of o or lse.
     #[test]
     fn parallel_is_bit_identical_to_serial() {
         let (n, d) = (101, 8); // ragged against both tile size and worker count
@@ -201,6 +276,60 @@ mod tests {
             assert_eq!(o1, o2, "threads={threads}");
             assert_eq!(l1, l2, "threads={threads}");
         }
+    }
+
+    /// The packed kernel at any head count equals per-head single-head
+    /// runs with the GQA mapping — and stays bit-stable across thread
+    /// counts.
+    #[test]
+    fn packed_matches_per_head_single_head() {
+        for (h, h_kv) in [(1, 1), (2, 2), (4, 2), (3, 1)] {
+            let (n, d) = (53, 8);
+            let (q, k, v) = qkv_packed(11, h, h_kv, n, d);
+            let serial = flash_attention_packed(&ExecCtx::serial(), &q, &k, &v, h, h_kv, n, d, 16, 24);
+            for qh in 0..h {
+                let kvh = qh / (h / h_kv);
+                let (oh, lh, _) = flash_attention_ctx(
+                    &ExecCtx::serial(),
+                    &q[qh * n * d..(qh + 1) * n * d],
+                    &k[kvh * n * d..(kvh + 1) * n * d],
+                    &v[kvh * n * d..(kvh + 1) * n * d],
+                    n,
+                    d,
+                    16,
+                    24,
+                );
+                assert_eq!(&serial.0[qh * n * d..(qh + 1) * n * d], &oh[..], "h={h} head {qh}");
+                assert_eq!(&serial.1[qh * n..(qh + 1) * n], &lh[..], "h={h} head {qh}");
+            }
+            for threads in [2, 5] {
+                let par = flash_attention_packed(
+                    &ExecCtx::with_threads(threads),
+                    &q,
+                    &k,
+                    &v,
+                    h,
+                    h_kv,
+                    n,
+                    d,
+                    16,
+                    24,
+                );
+                assert_eq!(serial.0, par.0, "h={h} threads={threads}");
+                assert_eq!(serial.1, par.1, "h={h} threads={threads}");
+            }
+        }
+    }
+
+    /// Packed GQA output == the dense oracle per head.
+    #[test]
+    fn packed_gqa_matches_oracle() {
+        let (h, h_kv, n, d) = (4, 2, 96, 8);
+        let (q, k, v) = qkv_packed(12, h, h_kv, n, d);
+        let (o, lse, _) = flash_attention_packed(ExecCtx::global(), &q, &k, &v, h, h_kv, n, d, 32, 32);
+        let (oref, lref) = naive_attention_packed(&q, &k, &v, h, h_kv, n, d);
+        assert!(max_abs_diff(&o, &oref) < 5e-5);
+        assert!(max_abs_diff(&lse, &lref) < 5e-5);
     }
 
     #[test]

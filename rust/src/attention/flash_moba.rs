@@ -2,33 +2,42 @@
 //! gather-and-densify attention.
 //!
 //! Two stages instead of the original's five:
-//!   1. `flash_topk` — centroids + streaming tiled selection (no N×n
-//!      score matrix) + varlen epilogue (Algorithms 2–4)
+//!   1. `flash_topk` — centroids (once per KV head) + streaming tiled
+//!      selection per query head (no score tensor) + varlen epilogue
+//!      (Algorithms 2–4)
 //!   2. `fwd`        — per logical KV block, gather the routed queries
 //!      into dense tiles and run blocked GEMM + online softmax, with the
 //!      own-block causal pass fused into the same accumulators
 //!
+//! Tensors are packed: q/o `(h, n, d)`, k/v `(h_kv, n, d)` with GQA
+//! head grouping; one call covers the whole head dimension. A ragged
+//! final block is supported: its queries attend it causally (fused own
+//! pass, clamped to the tail length) and route among the complete
+//! strictly-past blocks only.
+//!
 //! Multi-core adaptation: the CUDA kernel keeps (m, l, acc) per query
-//! tile in SRAM; here each worker owns a contiguous *query-row range*
-//! with its own (m, l, acc) accumulators and walks the KV blocks in the
-//! same ascending order the serial kernel does, visiting only the rows
-//! of its range. A query row's update sequence — which (block, column
-//! tile) pairs it sees, in which order, with which scores — is
-//! independent of how rows are grouped into physical tiles, so the
-//! result is bit-identical to the serial path at any worker count
-//! (pinned by the determinism property suite and the CI thread matrix).
+//! tile in SRAM; here each worker owns a contiguous range of flattened
+//! `(head, query-row)` units with its own (m, l, acc) accumulators and
+//! walks its head's KV blocks in the same ascending order the serial
+//! kernel does, visiting only the rows of its range. A query row's
+//! update sequence — which (block, column tile) pairs it sees, in which
+//! order, with which scores — is independent of how rows are grouped
+//! into physical tiles, so the result is bit-identical to the serial
+//! path at any worker count (pinned by the determinism property suite
+//! and the CI thread matrix), and `h = h_kv = 1` is bit-identical to
+//! the pre-multi-head kernel.
 
-use super::centroid::centroids_ctx;
-use super::simd::{axpy, dot, scale};
+use super::centroid::centroids_packed;
 use super::dense::NEG_INF;
+use super::simd::{axpy, dot, scale};
 use super::stats::{ws_bytes, StageStats};
-use super::topk::tiled_topk_ctx;
-use super::varlen::{build_varlen, VarlenLayout};
-use super::MobaShape;
+use super::topk::tiled_topk_packed;
+use super::varlen::{build_varlen_heads, VarlenLayout};
+use super::AttnShape;
 use crate::util::pool::ExecCtx;
 
 /// Tuning knobs (physical tile sizes; logical block size comes from
-/// [`MobaShape`]).
+/// [`AttnShape`]).
 #[derive(Debug, Clone, Copy)]
 pub struct FlashMobaConfig {
     /// query rows gathered per dense tile (CUDA: B_r)
@@ -47,10 +56,14 @@ impl Default for FlashMobaConfig {
 
 /// Forward pass output.
 pub struct FlashMobaOut {
+    /// packed (h, n, d) attention output
     pub o: Vec<f32>,
+    /// packed (h, n) per-row logsumexp
     pub lse: Vec<f32>,
+    /// packed (h, n, topk) routing table (-1 padded)
     pub indices: Vec<i32>,
-    pub layout: VarlenLayout,
+    /// one key-block-centric routing layout per query head
+    pub layouts: Vec<VarlenLayout>,
     pub stats: StageStats,
 }
 
@@ -59,7 +72,7 @@ pub fn flash_moba_forward(
     q: &[f32],
     k: &[f32],
     v: &[f32],
-    shape: MobaShape,
+    shape: AttnShape,
     cfg: FlashMobaConfig,
 ) -> FlashMobaOut {
     flash_moba_forward_ctx(ExecCtx::global(), q, k, v, shape, cfg)
@@ -71,28 +84,58 @@ pub fn flash_moba_forward_ctx(
     q: &[f32],
     k: &[f32],
     v: &[f32],
-    shape: MobaShape,
+    shape: AttnShape,
     cfg: FlashMobaConfig,
 ) -> FlashMobaOut {
-    let MobaShape { n, d, block, topk } = shape;
-    let nb = shape.n_blocks();
-    let mut st = StageStats::for_ctx(ctx);
+    let AttnShape { h, h_kv, n, d, block, topk } = shape;
+    assert_eq!(q.len(), shape.q_elems());
+    assert_eq!(k.len(), shape.kv_elems());
+    assert_eq!(v.len(), shape.kv_elems());
+    let cb = shape.complete_blocks();
+    let mut st = StageStats::for_heads(ctx, h);
 
     // ---- stage 1: Flash TopK + varlen epilogue -------------------------
-    let (indices, layout, topk_ws) = st.time("flash_topk", || {
-        let c = centroids_ctx(ctx, k, n, d, block);
-        let (idx, ws) = tiled_topk_ctx(ctx, q, &c, n, d, block, topk, cfg.topk_tile);
-        let layout = build_varlen(&idx, n, topk, nb);
-        (idx, layout, ws + ws_bytes(&[nb * d]))
+    let (indices, layouts, topk_ws) = st.time("flash_topk", || {
+        let c = centroids_packed(ctx, k, h_kv, n, d, block);
+        let (idx, ws) = tiled_topk_packed(ctx, q, &c, &shape, cfg.topk_tile);
+        let layouts = build_varlen_heads(&idx, h, n, topk, cb);
+        (idx, layouts, ws + ws_bytes(&[h_kv * cb * d]))
     });
-    st.add_workspace(topk_ws + ws_bytes(&[layout.total() + 2 * nb]));
+    let total_all: usize = layouts.iter().map(|l| l.total()).sum();
+    st.add_workspace(topk_ws + ws_bytes(&[total_all + 2 * h * cb]));
 
     // ---- stage 2: gather-and-densify forward ---------------------------
-    let mut o = Vec::with_capacity(n * d);
-    let mut lse = Vec::with_capacity(n);
+    let mut o = Vec::with_capacity(h * n * d);
+    let mut lse = Vec::with_capacity(h * n);
     let fwd_ws = st.time("fwd", || {
-        let parts = ctx.pool().map_ranges(n, |rows| {
-            forward_range(q, k, v, shape, cfg, &layout, rows.start, rows.end)
+        let parts = ctx.pool().map_ranges(h * n, |rows| {
+            // a flattened range may span head boundaries; split it so
+            // every sub-range runs against its own head's K/V and layout
+            let mut o_all: Vec<f32> = Vec::with_capacity(rows.len() * d);
+            let mut lse_all: Vec<f32> = Vec::with_capacity(rows.len());
+            let mut ws = 0u64;
+            let mut start = rows.start;
+            while start < rows.end {
+                let qh = start / n;
+                let head_end = ((qh + 1) * n).min(rows.end);
+                let (lo, hi) = (start % n, start % n + (head_end - start));
+                let kvh = shape.kv_head_of(qh);
+                let (op, lp, w) = forward_range(
+                    &q[qh * n * d..(qh + 1) * n * d],
+                    &k[kvh * n * d..(kvh + 1) * n * d],
+                    &v[kvh * n * d..(kvh + 1) * n * d],
+                    shape,
+                    cfg,
+                    &layouts[qh],
+                    lo,
+                    hi,
+                );
+                o_all.extend_from_slice(&op);
+                lse_all.extend_from_slice(&lp);
+                ws += w;
+                start = head_end;
+            }
+            (o_all, lse_all, ws)
         });
         let mut ws = 0u64;
         for (op, lp, w) in parts {
@@ -104,27 +147,31 @@ pub fn flash_moba_forward_ctx(
     });
     st.add_workspace(fwd_ws);
 
-    FlashMobaOut { o, lse, indices, layout, stats: st }
+    FlashMobaOut { o, lse, indices, layouts, stats: st }
 }
 
-/// The gather-and-densify kernel body (Algorithm 1) for query rows
-/// `lo..hi`: walk every KV block in ascending order, processing the
-/// routed queries of the range first and the (causal) own-block rows
-/// second — the exact per-row visit order of the serial kernel.
+/// The gather-and-densify kernel body (Algorithm 1) for one query
+/// head's rows `lo..hi` against its KV head's (n, d) slices: walk every
+/// logical KV block in ascending order, processing the routed queries
+/// of the range first and the (causal) own-block rows second — the
+/// exact per-row visit order of the serial kernel. Routed passes exist
+/// only for complete blocks; the ragged tail block (if any) appears
+/// only as its own queries' causal pass, clamped to its length.
 /// Returns the range's (o, lse, workspace bytes).
 #[allow(clippy::too_many_arguments)]
 fn forward_range(
     q: &[f32],
     k: &[f32],
     v: &[f32],
-    shape: MobaShape,
+    shape: AttnShape,
     cfg: FlashMobaConfig,
     layout: &VarlenLayout,
     lo: usize,
     hi: usize,
 ) -> (Vec<f32>, Vec<f32>, u64) {
-    let MobaShape { n, d, block, .. } = shape;
-    let nb = shape.n_blocks();
+    let AttnShape { n, d, block, .. } = shape;
+    let nb = shape.n_blocks(); // logical blocks incl. a partial tail
+    let cb = shape.complete_blocks();
     let sm_scale = 1.0 / (d as f32).sqrt();
     let tile_r = cfg.tile_r;
     let tile_c = cfg.tile_c.min(block);
@@ -140,15 +187,9 @@ fn forward_range(
     let ws = ws_bytes(&[m.len(), l.len(), acc.len(), qg.len(), s.len()]);
 
     for j in 0..nb {
-        let kb = &k[j * block * d..(j + 1) * block * d];
-        let vb = &v[j * block * d..(j + 1) * block * d];
-
-        // routed queries (strictly future of block j) restricted to the
-        // range — `queries_of` is ascending, so that's a subslice
-        let routed_all = layout.queries_of(j);
-        let a = routed_all.partition_point(|&t| (t as usize) < lo);
-        let b = routed_all.partition_point(|&t| (t as usize) < hi);
-        let routed = &routed_all[a..b];
+        let blen = shape.block_len(j); // == block except for the tail
+        let kb = &k[j * block * d..(j * block + blen) * d];
+        let vb = &v[j * block * d..(j * block + blen) * d];
         let own_start = j * block;
 
         // process in dense physical tiles: first routed, then own block
@@ -158,10 +199,10 @@ fn forward_range(
             for (r, &t) in rows.iter().enumerate() {
                 qg[r * d..(r + 1) * d].copy_from_slice(&q[t as usize * d..(t as usize + 1) * d]);
             }
-            let tcs = block.div_ceil(tile_c);
+            let tcs = blen.div_ceil(tile_c);
             for ct in 0..tcs {
                 let c0 = ct * tile_c;
-                let cols = tile_c.min(block - c0);
+                let cols = tile_c.min(blen - c0);
                 // dense GEMM tile: s = qg · kb_tile^T
                 for r in 0..rcount {
                     let qt = &qg[r * d..(r + 1) * d];
@@ -211,12 +252,19 @@ fn forward_range(
             }
         };
 
-        for chunk in routed.chunks(tile_r) {
-            process_tile(chunk, false);
+        if j < cb {
+            // routed queries (strictly future of block j) restricted to
+            // the range — `queries_of` is ascending, so that's a subslice
+            let routed_all = layout.queries_of(j);
+            let a = routed_all.partition_point(|&t| (t as usize) < lo);
+            let b = routed_all.partition_point(|&t| (t as usize) < hi);
+            for chunk in routed_all[a..b].chunks(tile_r) {
+                process_tile(chunk, false);
+            }
         }
         // fused local pass: own-block rows within the range, causal
         let os = own_start.max(lo);
-        let oe = (own_start + block).min(n).min(hi);
+        let oe = (own_start + blen).min(hi);
         if os < oe {
             let own_rows: Vec<u32> = (os as u32..oe as u32).collect();
             for chunk in own_rows.chunks(tile_r) {
@@ -241,14 +289,14 @@ fn forward_range(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::attention::dense::naive_attention;
+    use crate::attention::dense::{naive_attention, naive_attention_packed};
     use crate::attention::moba_naive::{moba_naive_forward, moba_reference};
-    use crate::attention::testutil::{max_abs_diff, qkv};
+    use crate::attention::testutil::{max_abs_diff, qkv, qkv_packed};
 
     #[test]
     fn matches_reference_and_naive_pipeline() {
         for (n, d, b, k) in [(128, 16, 16, 2), (256, 8, 32, 3), (256, 64, 64, 2), (64, 4, 16, 1)] {
-            let shape = MobaShape::new(n, d, b, k);
+            let shape = AttnShape::single(n, d, b, k);
             let (q, kk, v) = qkv(31, n, d);
             let out = flash_moba_forward(&q, &kk, &v, shape, FlashMobaConfig::default());
             let (oref, lref) = moba_reference(&q, &kk, &v, shape, &out.indices);
@@ -261,8 +309,40 @@ mod tests {
     }
 
     #[test]
+    fn multi_head_gqa_matches_reference_and_pipeline() {
+        for (h, h_kv, n) in [(2, 2, 128), (4, 2, 96), (8, 2, 64), (4, 1, 64)] {
+            let shape = AttnShape::new(h, h_kv, n, 8, 16, 2);
+            let (q, kk, v) = qkv_packed(37, h, h_kv, n, 8);
+            let out = flash_moba_forward(&q, &kk, &v, shape, FlashMobaConfig::default());
+            assert_eq!(out.o.len(), shape.q_elems());
+            assert_eq!(out.layouts.len(), h);
+            assert_eq!(out.stats.heads(), h);
+            let (oref, lref) = moba_reference(&q, &kk, &v, shape, &out.indices);
+            assert!(max_abs_diff(&out.o, &oref) < 3e-5, "h={h} h_kv={h_kv}");
+            assert!(max_abs_diff(&out.lse, &lref) < 3e-5);
+            let (onaive, idx_naive, _) = moba_naive_forward(&q, &kk, &v, shape);
+            assert!(crate::attention::topk::same_selection(&out.indices, &idx_naive, shape.topk));
+            assert!(max_abs_diff(&out.o, &onaive) < 5e-5);
+        }
+    }
+
+    #[test]
+    fn ragged_tail_matches_reference() {
+        for shape in [
+            AttnShape::single(100, 8, 16, 2),
+            AttnShape::new(4, 2, 90, 8, 16, 3),
+        ] {
+            let (q, kk, v) = qkv_packed(38, shape.h, shape.h_kv, shape.n, shape.d);
+            let out = flash_moba_forward(&q, &kk, &v, shape, FlashMobaConfig::default());
+            assert!(out.indices.iter().all(|&j| j < shape.complete_blocks() as i32));
+            let (oref, _) = moba_reference(&q, &kk, &v, shape, &out.indices);
+            assert!(max_abs_diff(&out.o, &oref) < 3e-5, "{shape:?}");
+        }
+    }
+
+    #[test]
     fn small_tiles_still_correct() {
-        let shape = MobaShape::new(128, 8, 32, 2);
+        let shape = AttnShape::single(128, 8, 32, 2);
         let (q, kk, v) = qkv(32, 128, 8);
         let cfg = FlashMobaConfig { tile_r: 3, tile_c: 5, topk_tile: 3 };
         let out = flash_moba_forward(&q, &kk, &v, shape, cfg);
@@ -273,7 +353,7 @@ mod tests {
     #[test]
     fn full_routing_equals_dense() {
         let (n, d, b) = (96, 8, 16);
-        let shape = MobaShape::new(n, d, b, n / b);
+        let shape = AttnShape::single(n, d, b, n / b);
         let (q, kk, v) = qkv(33, n, d);
         let out = flash_moba_forward(&q, &kk, &v, shape, FlashMobaConfig::default());
         let (oref, lref) = naive_attention(&q, &kk, &v, n, d);
@@ -281,28 +361,44 @@ mod tests {
         assert!(max_abs_diff(&out.lse, &lref) < 3e-5);
     }
 
-    /// Partitioning query rows across workers must not change a single
-    /// bit of o, lse or the routing table — including at worker counts
-    /// that split blocks and tiles unevenly.
+    #[test]
+    fn gqa_full_routing_equals_dense() {
+        let shape = AttnShape::new(4, 2, 96, 8, 16, 6); // topk == n_blocks
+        let (q, kk, v) = qkv_packed(39, 4, 2, 96, 8);
+        let out = flash_moba_forward(&q, &kk, &v, shape, FlashMobaConfig::default());
+        let (oref, lref) = naive_attention_packed(&q, &kk, &v, 4, 2, 96, 8);
+        assert!(max_abs_diff(&out.o, &oref) < 3e-5);
+        assert!(max_abs_diff(&out.lse, &lref) < 3e-5);
+    }
+
+    /// Partitioning flattened (head, query-row) units across workers
+    /// must not change a single bit of o, lse or the routing table —
+    /// including at worker counts that split heads, blocks and tiles
+    /// unevenly.
     #[test]
     fn parallel_is_bit_identical_to_serial() {
-        let shape = MobaShape::new(7 * 32, 8, 32, 2); // 7 blocks: uneven splits
-        let (q, kk, v) = qkv(36, shape.n, shape.d);
-        let cfg = FlashMobaConfig { tile_r: 5, tile_c: 9, topk_tile: 3 };
-        let serial = flash_moba_forward_ctx(&ExecCtx::serial(), &q, &kk, &v, shape, cfg);
-        for threads in [2, 3, 4, 13] {
-            let ctx = ExecCtx::with_threads(threads);
-            let par = flash_moba_forward_ctx(&ctx, &q, &kk, &v, shape, cfg);
-            assert_eq!(serial.o, par.o, "o differs at threads={threads}");
-            assert_eq!(serial.lse, par.lse, "lse differs at threads={threads}");
-            assert_eq!(serial.indices, par.indices, "indices differ at threads={threads}");
-            assert_eq!(par.stats.threads(), threads);
+        for shape in [
+            AttnShape::single(7 * 32, 8, 32, 2), // 7 blocks: uneven splits
+            AttnShape::new(4, 2, 3 * 32, 8, 32, 2),
+            AttnShape::new(2, 1, 100, 8, 32, 2), // ragged tail
+        ] {
+            let (q, kk, v) = qkv_packed(36, shape.h, shape.h_kv, shape.n, shape.d);
+            let cfg = FlashMobaConfig { tile_r: 5, tile_c: 9, topk_tile: 3 };
+            let serial = flash_moba_forward_ctx(&ExecCtx::serial(), &q, &kk, &v, shape, cfg);
+            for threads in [2, 3, 4, 13] {
+                let ctx = ExecCtx::with_threads(threads);
+                let par = flash_moba_forward_ctx(&ctx, &q, &kk, &v, shape, cfg);
+                assert_eq!(serial.o, par.o, "o differs at threads={threads} {shape:?}");
+                assert_eq!(serial.lse, par.lse, "lse differs at threads={threads} {shape:?}");
+                assert_eq!(serial.indices, par.indices, "indices differ at threads={threads}");
+                assert_eq!(par.stats.threads(), threads);
+            }
         }
     }
 
     #[test]
     fn uses_less_workspace_than_naive() {
-        let shape = MobaShape::new(1024, 64, 64, 4);
+        let shape = AttnShape::single(1024, 64, 64, 4);
         let (q, kk, v) = qkv(34, 1024, 64);
         let out = flash_moba_forward(&q, &kk, &v, shape, FlashMobaConfig::default());
         let (_, _, st_naive) = moba_naive_forward(&q, &kk, &v, shape);
@@ -311,7 +407,7 @@ mod tests {
 
     #[test]
     fn two_stage_labels() {
-        let shape = MobaShape::new(64, 4, 16, 1);
+        let shape = AttnShape::single(64, 4, 16, 1);
         let (q, kk, v) = qkv(35, 64, 4);
         let out = flash_moba_forward(&q, &kk, &v, shape, FlashMobaConfig::default());
         assert!(out.stats.get("flash_topk").is_some());

@@ -52,6 +52,26 @@ pub fn kconv_ctx(
     }))
 }
 
+/// [`kconv`] applied independently to every KV head of a packed
+/// `(h_kv, n, d)` key tensor (the taps are shared across heads, as in
+/// the multi-head decode cache). Serial per head — it is the batch
+/// oracle the decode-parity suite compares streaming caches against.
+pub fn kconv_heads(k: &[f32], w: &[f32], h_kv: usize, n: usize, d: usize, width: usize) -> Vec<f32> {
+    assert_eq!(k.len(), h_kv * n * d);
+    let mut out = Vec::with_capacity(h_kv * n * d);
+    for head in 0..h_kv {
+        out.extend(kconv_ctx(
+            &ExecCtx::serial(),
+            &k[head * n * d..(head + 1) * n * d],
+            w,
+            n,
+            d,
+            width,
+        ));
+    }
+    out
+}
+
 /// Streaming kconv over a ring buffer of the last `width` raw keys —
 /// the decode-path twin of [`kconv`]. O(width · d) per pushed key.
 #[derive(Debug, Clone)]
@@ -152,6 +172,20 @@ mod tests {
         for threads in [2, 3, 7] {
             let par = kconv_ctx(&ExecCtx::with_threads(threads), &k, &w, n, d, width);
             assert_eq!(serial, par, "threads={threads}");
+        }
+    }
+
+    /// Per-head batch form == the single-head kernel on each head slice.
+    #[test]
+    fn heads_form_is_per_head_batch() {
+        let mut rng = Rng::new(5);
+        let (h_kv, n, d, width) = (3, 12, 4, 3);
+        let k = rng.normal_vec(h_kv * n * d);
+        let w = rng.normal_vec(width * d);
+        let all = kconv_heads(&k, &w, h_kv, n, d, width);
+        for head in 0..h_kv {
+            let single = kconv(&k[head * n * d..(head + 1) * n * d], &w, n, d, width);
+            assert_eq!(&all[head * n * d..(head + 1) * n * d], &single[..], "head {head}");
         }
     }
 

@@ -2,9 +2,10 @@
 //! faithfully, overheads included — the baseline of Figures 3–4.
 //!
 //! Five stages (§5.3 "Breakdown Analysis"):
-//!   1. `gating`   — centroids + full N×n score matrix + top-k
+//!   1. `gating`   — centroids (once per KV head) + full H×N×n score
+//!                   tensor + top-k per query head
 //!   2. `reindex`  — global reindexing: gather routed queries into
-//!                   per-block contiguous buffers
+//!                   per-(head, block) contiguous buffers
 //!   3. `routed`   — attention of gathered queries against their blocks,
 //!                   materializing *partial* outputs + logsumexps
 //!   4. `local`    — separate causal attention on each query's own block
@@ -13,87 +14,102 @@
 //! Stages 1, 2 and 5 dominate at small block sizes — exactly the
 //! overhead FlashMoBA eliminates.
 //!
-//! Multi-core adaptation: gating, local and merge partition query rows,
-//! the routed stage partitions key blocks (each block owns a contiguous
-//! slice of the partial buffers). Every work unit runs the unchanged
-//! serial arithmetic — for merge, each query still combines its local
-//! partial first and its routed partials in ascending block order — so
-//! outputs are bit-identical to the serial path at any thread count.
+//! Tensors are packed: q/o `(h, n, d)`, k/v `(h_kv, n, d)` (GQA).
+//! A ragged final block is supported: tail queries attend their partial
+//! own block causally and route among the complete strictly-past blocks
+//! only (the tail is never a routing candidate).
+//!
+//! Multi-core adaptation: gating, local and merge partition flattened
+//! `(head, query-row)` units, the routed stage flattened
+//! `(head, key-block)` units. Every work unit runs the unchanged serial
+//! arithmetic — for merge, each query still combines its local partial
+//! first and its routed partials in ascending block order — so outputs
+//! are bit-identical to the serial path at any thread count, and
+//! `h = h_kv = 1` reproduces the single-head pipeline bit-for-bit.
 //!
 //! Also hosts [`moba_reference`], the slow token-mask oracle used by
 //! every test.
 
-use super::centroid::centroids_ctx;
-use super::simd::{axpy, dot};
+use super::centroid::centroids_packed;
 use super::dense::NEG_INF;
+use super::simd::{axpy, dot};
 use super::stats::{ws_bytes, StageStats};
-use super::topk::naive_topk_ctx;
-use super::varlen::build_varlen;
-use super::MobaShape;
+use super::topk::naive_topk_packed;
+use super::varlen::{build_varlen_heads, VarlenLayout};
+use super::AttnShape;
 use crate::util::pool::ExecCtx;
 
-/// Token-mask oracle: O(N²) masked softmax, f64 accumulation.
-/// Given a routing table (n, k) (-1 padded), token t attends token u iff
-/// u <= t and (block(u) routed for t or block(u) == block(t)).
+/// Token-mask oracle: O(N²) masked softmax per query head, f64
+/// accumulation. Given a packed routing table `(h, n, k)` (-1 padded),
+/// head `qh`'s token t attends token u of KV head `qh / group` iff
+/// u <= t and (block(u) routed for (qh, t) or block(u) == block(t)).
+/// Handles ragged n (the tail block is its own queries' own block).
 pub fn moba_reference(
     q: &[f32],
     k: &[f32],
     v: &[f32],
-    shape: MobaShape,
+    shape: AttnShape,
     indices: &[i32],
 ) -> (Vec<f32>, Vec<f32>) {
-    let MobaShape { n, d, block, topk } = shape;
+    let AttnShape { h, n, d, block, topk, .. } = shape;
+    assert_eq!(indices.len(), h * n * topk);
+    let group = shape.group();
     let scale = 1.0 / (d as f64).sqrt();
-    let mut o = vec![0.0f32; n * d];
-    let mut lse = vec![0.0f32; n];
-    for t in 0..n {
-        let own = t / block;
-        let routed = &indices[t * topk..(t + 1) * topk];
-        let qt = &q[t * d..(t + 1) * d];
-        let mut s = vec![f64::NEG_INFINITY; t + 1];
-        for (u, su) in s.iter_mut().enumerate() {
-            let ub = u / block;
-            let ok = ub == own || routed.contains(&(ub as i32));
-            if !ok {
-                continue;
+    let mut o = vec![0.0f32; h * n * d];
+    let mut lse = vec![0.0f32; h * n];
+    for qh in 0..h {
+        let kvh = qh / group;
+        let kh = &k[kvh * n * d..(kvh + 1) * n * d];
+        let vh = &v[kvh * n * d..(kvh + 1) * n * d];
+        for t in 0..n {
+            let own = t / block;
+            let routed = &indices[(qh * n + t) * topk..(qh * n + t + 1) * topk];
+            let qt = &q[(qh * n + t) * d..(qh * n + t + 1) * d];
+            let mut s = vec![f64::NEG_INFINITY; t + 1];
+            for (u, su) in s.iter_mut().enumerate() {
+                let ub = u / block;
+                let ok = ub == own || routed.contains(&(ub as i32));
+                if !ok {
+                    continue;
+                }
+                let ku = &kh[u * d..(u + 1) * d];
+                let mut dot = 0.0f64;
+                for c in 0..d {
+                    dot += qt[c] as f64 * ku[c] as f64;
+                }
+                *su = dot * scale;
             }
-            let ku = &k[u * d..(u + 1) * d];
-            let mut dot = 0.0f64;
+            let m = s.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let mut z = 0.0f64;
+            let ot = &mut o[(qh * n + t) * d..(qh * n + t + 1) * d];
+            let mut acc = vec![0.0f64; d];
+            for (u, &su) in s.iter().enumerate() {
+                if su == f64::NEG_INFINITY {
+                    continue;
+                }
+                let p = (su - m).exp();
+                z += p;
+                let vu = &vh[u * d..(u + 1) * d];
+                for c in 0..d {
+                    acc[c] += p * vu[c] as f64;
+                }
+            }
             for c in 0..d {
-                dot += qt[c] as f64 * ku[c] as f64;
+                ot[c] = (acc[c] / z) as f32;
             }
-            *su = dot * scale;
+            lse[qh * n + t] = (m + z.ln()) as f32;
         }
-        let m = s.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
-        let mut z = 0.0f64;
-        let ot = &mut o[t * d..(t + 1) * d];
-        let mut acc = vec![0.0f64; d];
-        for (u, &su) in s.iter().enumerate() {
-            if su == f64::NEG_INFINITY {
-                continue;
-            }
-            let p = (su - m).exp();
-            z += p;
-            let vu = &v[u * d..(u + 1) * d];
-            for c in 0..d {
-                acc[c] += p * vu[c] as f64;
-            }
-        }
-        for c in 0..d {
-            ot[c] = (acc[c] / z) as f32;
-        }
-        lse[t] = (m + z.ln()) as f32;
     }
     (o, lse)
 }
 
 /// Full original pipeline on the process-wide shared pool. Returns
-/// (o, routing indices, stats).
+/// (packed (h, n, d) output, (h, n, topk) routing indices, stats).
 pub fn moba_naive_forward(
     q: &[f32],
     k: &[f32],
     v: &[f32],
-    shape: MobaShape,
+    shape: AttnShape,
 ) -> (Vec<f32>, Vec<i32>, StageStats) {
     moba_naive_forward_ctx(ExecCtx::global(), q, k, v, shape)
 }
@@ -104,79 +120,88 @@ pub fn moba_naive_forward_ctx(
     q: &[f32],
     k: &[f32],
     v: &[f32],
-    shape: MobaShape,
+    shape: AttnShape,
 ) -> (Vec<f32>, Vec<i32>, StageStats) {
-    let MobaShape { n, d, block, topk } = shape;
-    let nb = shape.n_blocks();
+    let AttnShape { h, h_kv, n, d, block, topk } = shape;
+    assert_eq!(q.len(), shape.q_elems());
+    assert_eq!(k.len(), shape.kv_elems());
+    assert_eq!(v.len(), shape.kv_elems());
+    let cb = shape.complete_blocks(); // routing candidate universe
+    let group = shape.group();
     let scale = 1.0 / (d as f32).sqrt();
-    let mut st = StageStats::for_ctx(ctx);
+    let mut st = StageStats::for_heads(ctx, h);
 
-    // ---- stage 1: gating (full score matrix!) --------------------------
+    // ---- stage 1: gating (full score tensor!) --------------------------
     let (indices, gate_ws) = st.time("gating", || {
-        let c = centroids_ctx(ctx, k, n, d, block);
-        naive_topk_ctx(ctx, q, &c, n, d, block, topk)
+        let c = centroids_packed(ctx, k, h_kv, n, d, block);
+        naive_topk_packed(ctx, q, &c, &shape)
     });
-    st.add_workspace(gate_ws + ws_bytes(&[nb * d]));
+    st.add_workspace(gate_ws + ws_bytes(&[h_kv * cb * d]));
 
-    // ---- stage 2: global reindex (gather q copies per block) -----------
-    let layout = st.time("reindex", || build_varlen(&indices, n, topk, nb));
+    // ---- stage 2: global reindex (gather q copies per head × block) ----
+    let layouts: Vec<VarlenLayout> =
+        st.time("reindex", || build_varlen_heads(&indices, h, n, topk, cb));
     let gathered: Vec<Vec<f32>> = st.time("reindex", || {
-        (0..nb)
-            .map(|j| {
-                let qs = layout.queries_of(j);
+        (0..h * cb)
+            .map(|u| {
+                let (qh, j) = (u / cb, u % cb);
+                let qs = layouts[qh].queries_of(j);
                 let mut g = Vec::with_capacity(qs.len() * d);
                 for &t in qs {
-                    g.extend_from_slice(&q[t as usize * d..(t as usize + 1) * d]);
+                    let row = qh * n + t as usize;
+                    g.extend_from_slice(&q[row * d..(row + 1) * d]);
                 }
                 g
             })
             .collect()
     });
-    st.add_workspace(ws_bytes(&[layout.total() * d + layout.total() + 2 * nb]));
+    // per-head base offset of the global partial buffers
+    let mut pbase = vec![0usize; h + 1];
+    for qh in 0..h {
+        pbase[qh + 1] = pbase[qh] + layouts[qh].total();
+    }
+    let total_all = pbase[h];
+    st.add_workspace(ws_bytes(&[total_all * d + total_all + 2 * h * cb]));
 
     // ---- stage 3: routed attention (partial outputs materialized) ------
-    // partials[p] = (query id, partial out, partial lse), grouped by
-    // block: block j owns partial rows offsets[j]..offsets[j]+counts[j]
-    let mut partial_o = Vec::with_capacity(layout.total() * d);
-    let mut partial_l = Vec::with_capacity(layout.total());
+    // partials grouped by (head, block): head qh's block j owns global
+    // partial rows pbase[qh] + offsets[j] .. + counts[j]
+    let mut partial_o = Vec::with_capacity(total_all * d);
+    let mut partial_l = Vec::with_capacity(total_all);
     st.time("routed", || {
-        let parts = ctx.pool().map_ranges(nb, |blocks| {
-            let p0 = layout.offsets[blocks.start] as usize;
-            let pend = if blocks.end < nb {
-                layout.offsets[blocks.end] as usize
-            } else {
-                layout.total()
-            };
-            let mut po = vec![0.0f32; (pend - p0) * d];
-            let mut pl = vec![0.0f32; pend - p0];
-            let mut p_idx = 0usize;
-            for j in blocks {
-                let qs = layout.queries_of(j);
-                let g = &gathered[j];
-                let kb = &k[j * block * d..(j + 1) * block * d];
-                let vb = &v[j * block * d..(j + 1) * block * d];
+        let parts = ctx.pool().map_ranges(h * cb, |units| {
+            let mut po: Vec<f32> = Vec::new();
+            let mut pl: Vec<f32> = Vec::new();
+            for u in units {
+                let (qh, j) = (u / cb, u % cb);
+                let kvh = qh / group;
+                let qs = layouts[qh].queries_of(j);
+                let g = &gathered[u];
+                let kb = &k[(kvh * n + j * block) * d..(kvh * n + (j + 1) * block) * d];
+                let vb = &v[(kvh * n + j * block) * d..(kvh * n + (j + 1) * block) * d];
                 for (row, _t) in qs.iter().enumerate() {
                     let qt = &g[row * d..(row + 1) * d];
                     let mut s = vec![0.0f32; block];
                     let mut m = NEG_INF;
-                    for (u, su) in s.iter_mut().enumerate() {
-                        *su = dot(qt, &kb[u * d..(u + 1) * d]) * scale;
+                    for (u_, su) in s.iter_mut().enumerate() {
+                        *su = dot(qt, &kb[u_ * d..(u_ + 1) * d]) * scale;
                         if *su > m {
                             m = *su;
                         }
                     }
                     let mut z = 0.0f32;
-                    let prow = &mut po[p_idx * d..(p_idx + 1) * d];
-                    for (u, su) in s.iter().enumerate() {
+                    let p0 = po.len();
+                    po.resize(p0 + d, 0.0);
+                    let prow = &mut po[p0..p0 + d];
+                    for (u_, su) in s.iter().enumerate() {
                         let p = (su - m).exp();
                         z += p;
-                        axpy(prow, p, &vb[u * d..(u + 1) * d]);
+                        axpy(prow, p, &vb[u_ * d..(u_ + 1) * d]);
                     }
                     for c in prow.iter_mut() {
                         *c /= z;
                     }
-                    pl[p_idx] = m + z.ln();
-                    p_idx += 1;
+                    pl.push(m + z.ln());
                 }
             }
             (po, pl)
@@ -188,32 +213,36 @@ pub fn moba_naive_forward_ctx(
     });
     st.add_workspace(ws_bytes(&[partial_o.len(), partial_l.len()]));
 
-    // ---- stage 4: local (own block, causal) -----------------------------
-    let mut local_o = Vec::with_capacity(n * d);
-    let mut local_l = Vec::with_capacity(n);
+    // ---- stage 4: local (own block, causal; tail block may be partial) --
+    let mut local_o = Vec::with_capacity(h * n * d);
+    let mut local_l = Vec::with_capacity(h * n);
     st.time("local", || {
-        let parts = ctx.pool().map_ranges(n, |rows| {
+        let parts = ctx.pool().map_ranges(h * n, |rows| {
             let mut lo_o = vec![0.0f32; rows.len() * d];
             let mut lo_l = vec![0.0f32; rows.len()];
-            for (tt, t) in rows.enumerate() {
+            for (tt, u) in rows.enumerate() {
+                let (qh, t) = (u / n, u % n);
+                let kvh = qh / group;
                 let own = t / block;
                 let base = own * block;
-                let qt = &q[t * d..(t + 1) * d];
+                let qt = &q[u * d..(u + 1) * d];
                 let mut m = NEG_INF;
                 let upto = t - base; // inclusive offset in own block
                 let mut s = vec![0.0f32; upto + 1];
-                for (u, su) in s.iter_mut().enumerate() {
-                    *su = dot(qt, &k[(base + u) * d..(base + u + 1) * d]) * scale;
+                for (u_, su) in s.iter_mut().enumerate() {
+                    let row = kvh * n + base + u_;
+                    *su = dot(qt, &k[row * d..(row + 1) * d]) * scale;
                     if *su > m {
                         m = *su;
                     }
                 }
                 let mut z = 0.0f32;
                 let ot = &mut lo_o[tt * d..(tt + 1) * d];
-                for (u, su) in s.iter().enumerate() {
+                for (u_, su) in s.iter().enumerate() {
                     let p = (su - m).exp();
                     z += p;
-                    axpy(ot, p, &v[(base + u) * d..(base + u + 1) * d]);
+                    let row = kvh * n + base + u_;
+                    axpy(ot, p, &v[row * d..(row + 1) * d]);
                 }
                 for c in ot.iter_mut() {
                     *c /= z;
@@ -232,68 +261,82 @@ pub fn moba_naive_forward_ctx(
     // ---- stage 5: merge --------------------------------------------------
     // per query: max over (local, routed partials in ascending block
     // order), then the weighted combination in the same order — the
-    // serial accumulation order, partitioned by query rows
-    let mut o = Vec::with_capacity(n * d);
+    // serial accumulation order, partitioned by flattened (head, row)
+    // ranges (each flattened range splits at head boundaries so every
+    // row merges against its own head's layout)
+    let mut o = Vec::with_capacity(h * n * d);
     st.time("merge", || {
-        let parts = ctx.pool().map_ranges(n, |rows| {
-            let (lo, hi) = (rows.start, rows.end);
-            let count = hi - lo;
-            // this range's routed sub-slice of every block's query list
-            // (computed once; the max pass and the accumulate pass both
-            // walk the same (a, b) windows)
-            let windows: Vec<(usize, usize)> = (0..nb)
-                .map(|j| {
+        let parts = ctx.pool().map_ranges(h * n, |rows| {
+            let mut og_all: Vec<f32> = Vec::with_capacity(rows.len() * d);
+            let mut start = rows.start;
+            while start < rows.end {
+                let qh = start / n;
+                let head_end = ((qh + 1) * n).min(rows.end);
+                // per-head row window [lo, hi) in head-local coordinates
+                let (lo, hi) = (start % n, start % n + (head_end - start));
+                let layout = &layouts[qh];
+                let base = pbase[qh];
+                let count = hi - lo;
+                // this range's routed sub-slice of every block's query
+                // list (computed once; the max pass and the accumulate
+                // pass both walk the same (a, b) windows)
+                let windows: Vec<(usize, usize)> = (0..cb)
+                    .map(|j| {
+                        let qs = layout.queries_of(j);
+                        let a = qs.partition_point(|&t| (t as usize) < lo);
+                        let b = qs.partition_point(|&t| (t as usize) < hi);
+                        (a, b)
+                    })
+                    .collect();
+                // global max per query over partials
+                let mut m: Vec<f32> = local_l[qh * n + lo..qh * n + hi].to_vec();
+                for (j, &(a, b)) in windows.iter().enumerate() {
                     let qs = layout.queries_of(j);
-                    let a = qs.partition_point(|&t| (t as usize) < lo);
-                    let b = qs.partition_point(|&t| (t as usize) < hi);
-                    (a, b)
-                })
-                .collect();
-            // global max per query over partials
-            let mut m: Vec<f32> = local_l[lo..hi].to_vec();
-            for (j, &(a, b)) in windows.iter().enumerate() {
-                let qs = layout.queries_of(j);
-                for (off, &t) in qs[a..b].iter().enumerate() {
-                    let p = layout.offsets[j] as usize + a + off;
-                    let ti = t as usize - lo;
-                    if partial_l[p] > m[ti] {
-                        m[ti] = partial_l[p];
+                    for (off, &t) in qs[a..b].iter().enumerate() {
+                        let p = base + layout.offsets[j] as usize + a + off;
+                        let ti = t as usize - lo;
+                        if partial_l[p] > m[ti] {
+                            m[ti] = partial_l[p];
+                        }
                     }
                 }
-            }
-            let mut z = vec![0.0f32; count];
-            let mut og = vec![0.0f32; count * d];
-            for (tt, t) in rows.enumerate() {
-                let w = (local_l[t] - m[tt]).exp();
-                z[tt] += w;
-                axpy(&mut og[tt * d..(tt + 1) * d], w, &local_o[t * d..(t + 1) * d]);
-            }
-            for (j, &(a, b)) in windows.iter().enumerate() {
-                let qs = layout.queries_of(j);
-                for (off, &t) in qs[a..b].iter().enumerate() {
-                    let p = layout.offsets[j] as usize + a + off;
-                    let ti = t as usize - lo;
-                    let w = (partial_l[p] - m[ti]).exp();
-                    z[ti] += w;
-                    axpy(
-                        &mut og[ti * d..(ti + 1) * d],
-                        w,
-                        &partial_o[p * d..(p + 1) * d],
-                    );
+                let mut z = vec![0.0f32; count];
+                let mut og = vec![0.0f32; count * d];
+                for (tt, t) in (lo..hi).enumerate() {
+                    let row = qh * n + t;
+                    let w = (local_l[row] - m[tt]).exp();
+                    z[tt] += w;
+                    axpy(&mut og[tt * d..(tt + 1) * d], w, &local_o[row * d..(row + 1) * d]);
                 }
-            }
-            for ti in 0..count {
-                for c in 0..d {
-                    og[ti * d + c] /= z[ti];
+                for (j, &(a, b)) in windows.iter().enumerate() {
+                    let qs = layout.queries_of(j);
+                    for (off, &t) in qs[a..b].iter().enumerate() {
+                        let p = base + layout.offsets[j] as usize + a + off;
+                        let ti = t as usize - lo;
+                        let w = (partial_l[p] - m[ti]).exp();
+                        z[ti] += w;
+                        axpy(
+                            &mut og[ti * d..(ti + 1) * d],
+                            w,
+                            &partial_o[p * d..(p + 1) * d],
+                        );
+                    }
                 }
+                for ti in 0..count {
+                    for c in 0..d {
+                        og[ti * d + c] /= z[ti];
+                    }
+                }
+                og_all.extend_from_slice(&og);
+                start = head_end;
             }
-            og
+            og_all
         });
         for og in parts {
             o.extend_from_slice(&og);
         }
     });
-    st.add_workspace(ws_bytes(&[2 * n]));
+    st.add_workspace(ws_bytes(&[2 * h * n]));
 
     (o, indices, st)
 }
@@ -301,13 +344,13 @@ pub fn moba_naive_forward_ctx(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::attention::dense::naive_attention;
-    use crate::attention::testutil::{max_abs_diff, qkv};
+    use crate::attention::dense::{naive_attention, naive_attention_packed};
+    use crate::attention::testutil::{max_abs_diff, qkv, qkv_packed};
 
     #[test]
     fn naive_pipeline_matches_reference() {
         for (n, d, b, k) in [(128, 16, 16, 2), (256, 8, 32, 3), (64, 4, 16, 1)] {
-            let shape = MobaShape::new(n, d, b, k);
+            let shape = AttnShape::single(n, d, b, k);
             let (q, kk, v) = qkv(21, n, d);
             let (o, idx, _st) = moba_naive_forward(&q, &kk, &v, shape);
             let (oref, _) = moba_reference(&q, &kk, &v, shape, &idx);
@@ -316,34 +359,78 @@ mod tests {
     }
 
     #[test]
+    fn multi_head_gqa_matches_reference() {
+        for (h, h_kv, n) in [(2, 2, 128), (4, 2, 96), (4, 1, 64)] {
+            let shape = AttnShape::new(h, h_kv, n, 8, 16, 2);
+            let (q, kk, v) = qkv_packed(26, h, h_kv, n, 8);
+            let (o, idx, st) = moba_naive_forward(&q, &kk, &v, shape);
+            assert_eq!(o.len(), shape.q_elems());
+            assert_eq!(idx.len(), h * n * shape.topk);
+            assert_eq!(st.heads(), h);
+            let (oref, _) = moba_reference(&q, &kk, &v, shape, &idx);
+            assert!(max_abs_diff(&o, &oref) < 3e-5, "h={h} h_kv={h_kv}");
+        }
+    }
+
+    #[test]
+    fn ragged_tail_matches_reference() {
+        // n = 100 over B = 16: 6 complete blocks + a 4-token tail that
+        // is always-attended and never routed
+        let shape = AttnShape::new(2, 1, 100, 8, 16, 2);
+        let (q, kk, v) = qkv_packed(27, 2, 1, 100, 8);
+        let (o, idx, _) = moba_naive_forward(&q, &kk, &v, shape);
+        // no tail-block index can appear in the routing table
+        assert!(idx.iter().all(|&j| j < shape.complete_blocks() as i32));
+        let (oref, _) = moba_reference(&q, &kk, &v, shape, &idx);
+        assert!(max_abs_diff(&o, &oref) < 3e-5);
+    }
+
+    #[test]
     fn all_blocks_routed_equals_dense() {
         let (n, d, b) = (128, 8, 16);
-        let shape = MobaShape::new(n, d, b, n / b); // k = nb: everything routed
+        let shape = AttnShape::single(n, d, b, n / b); // k = nb: everything routed
         let (q, kk, v) = qkv(22, n, d);
         let (o, _, _) = moba_naive_forward(&q, &kk, &v, shape);
         let (oref, _) = naive_attention(&q, &kk, &v, n, d);
         assert!(max_abs_diff(&o, &oref) < 3e-5);
     }
 
+    #[test]
+    fn ragged_fully_routed_equals_dense() {
+        // topk >= complete blocks: tail and complete queries attend
+        // everything causal, so the pipeline must equal dense attention
+        let shape = AttnShape::new(2, 2, 72, 8, 16, 4); // cb = 4, tail = 8
+        let (q, kk, v) = qkv_packed(28, 2, 2, 72, 8);
+        let (o, _, _) = moba_naive_forward(&q, &kk, &v, shape);
+        let (oref, _) = naive_attention_packed(&q, &kk, &v, 2, 2, 72, 8);
+        assert!(max_abs_diff(&o, &oref) < 3e-5);
+    }
+
     /// Partitioning the five stages across workers must not change a
-    /// single bit of the output or the routing table.
+    /// single bit of the output or the routing table — single- and
+    /// multi-head.
     #[test]
     fn parallel_is_bit_identical_to_serial() {
-        let shape = MobaShape::new(5 * 16, 8, 16, 2); // 5 blocks: uneven splits
-        let (q, kk, v) = qkv(25, shape.n, shape.d);
-        let (o1, i1, _) = moba_naive_forward_ctx(&ExecCtx::serial(), &q, &kk, &v, shape);
-        for threads in [2, 3, 4, 11] {
-            let ctx = ExecCtx::with_threads(threads);
-            let (o2, i2, st) = moba_naive_forward_ctx(&ctx, &q, &kk, &v, shape);
-            assert_eq!(o1, o2, "o differs at threads={threads}");
-            assert_eq!(i1, i2, "indices differ at threads={threads}");
-            assert_eq!(st.threads(), threads);
+        for shape in [
+            AttnShape::single(5 * 16, 8, 16, 2), // 5 blocks: uneven splits
+            AttnShape::new(4, 2, 5 * 16, 8, 16, 2),
+            AttnShape::new(2, 1, 90, 8, 16, 2), // ragged tail
+        ] {
+            let (q, kk, v) = qkv_packed(25, shape.h, shape.h_kv, shape.n, shape.d);
+            let (o1, i1, _) = moba_naive_forward_ctx(&ExecCtx::serial(), &q, &kk, &v, shape);
+            for threads in [2, 3, 4, 11] {
+                let ctx = ExecCtx::with_threads(threads);
+                let (o2, i2, st) = moba_naive_forward_ctx(&ctx, &q, &kk, &v, shape);
+                assert_eq!(o1, o2, "o differs at threads={threads} {shape:?}");
+                assert_eq!(i1, i2, "indices differ at threads={threads} {shape:?}");
+                assert_eq!(st.threads(), threads);
+            }
         }
     }
 
     #[test]
     fn stage_labels_complete() {
-        let shape = MobaShape::new(64, 4, 16, 1);
+        let shape = AttnShape::single(64, 4, 16, 1);
         let (q, kk, v) = qkv(23, 64, 4);
         let (_, _, st) = moba_naive_forward(&q, &kk, &v, shape);
         for label in ["gating", "reindex", "routed", "local", "merge"] {
@@ -354,7 +441,7 @@ mod tests {
 
     #[test]
     fn reference_first_token_is_v0() {
-        let shape = MobaShape::new(32, 4, 8, 1);
+        let shape = AttnShape::single(32, 4, 8, 1);
         let (q, kk, v) = qkv(24, 32, 4);
         let idx = vec![-1i32; 32];
         let (o, _) = moba_reference(&q, &kk, &v, shape, &idx);

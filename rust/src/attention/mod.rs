@@ -24,7 +24,14 @@
 //!   incremental `forward_decode`), plus the registry and cross-backend
 //!   parity harness every consumer layer dispatches through.
 //!
-//! All single-head (N, d) row-major f32; multi-head benches loop heads.
+//! Tensor layout: packed row-major `(h, n, d)` f32 — queries carry `h`
+//! heads, keys/values carry `h_kv` KV heads (GQA: `h % h_kv == 0`, each
+//! group of `h / h_kv` query heads reads one KV head). Kernels iterate
+//! heads *internally*: centroids/kconv are computed once per KV head,
+//! routing/top-k once per query head, and the thread pool partitions
+//! `head × query-row` work units — so one kernel launch covers the whole
+//! head dimension. `h = h_kv = 1` reproduces the single-head path
+//! bit-for-bit (pinned by `rust/tests/singlehead_regression.rs`).
 
 pub mod backend;
 pub mod backward;
@@ -47,10 +54,23 @@ pub use stats::StageStats;
 // `crate::util::pool`; re-exported here for trait consumers)
 pub use crate::util::pool::ExecCtx;
 
-/// Geometry of one MoBA attention problem.
+/// Geometry of one (possibly multi-head / GQA) MoBA attention problem.
+///
+/// Buffers are packed row-major: `q`/`o` are `(h, n, d)`, `k`/`v` are
+/// `(h_kv, n, d)`. Query head `qh` routes and attends against KV head
+/// `qh / (h / h_kv)` ([`AttnShape::kv_head_of`]).
+///
+/// The sequence may end in a ragged (partial) final block: the tail
+/// block is always attended causally by its own queries but is never a
+/// routing candidate — routing selects among *complete* strictly-past
+/// blocks only, exactly as in streaming decode.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub struct MobaShape {
-    /// sequence length
+pub struct AttnShape {
+    /// query heads
+    pub h: usize,
+    /// KV heads (GQA groups of `h / h_kv` query heads; `h % h_kv == 0`)
+    pub h_kv: usize,
+    /// sequence length (need not be a multiple of `block`)
     pub n: usize,
     /// head dimension (paper: 64)
     pub d: usize,
@@ -60,36 +80,127 @@ pub struct MobaShape {
     pub topk: usize,
 }
 
-impl MobaShape {
-    pub fn new(n: usize, d: usize, block: usize, topk: usize) -> Self {
-        Self::try_new(n, d, block, topk).unwrap_or_else(|| {
+impl AttnShape {
+    pub fn new(h: usize, h_kv: usize, n: usize, d: usize, block: usize, topk: usize) -> Self {
+        Self::try_new(h, h_kv, n, d, block, topk).unwrap_or_else(|| {
             panic!(
-                "invalid MoBA geometry N={n} d={d} B={block}: \
-                 N must be a positive multiple of B, and d > 0"
+                "invalid attention geometry h={h} h_kv={h_kv} N={n} d={d} B={block}: \
+                 need h a positive multiple of h_kv, and n, d, block > 0"
             )
         })
     }
 
     /// Non-panicking constructor: `None` when the geometry is invalid
-    /// (ragged block partition or empty problem). Used by callers that
-    /// must *decide* rather than assert — e.g. the serving router
-    /// falling back to a dense backend for unsupported request shapes.
-    pub fn try_new(n: usize, d: usize, block: usize, topk: usize) -> Option<Self> {
-        if n == 0 || d == 0 || block == 0 || n % block != 0 {
+    /// (empty problem, or `h` not a positive multiple of `h_kv`). Used
+    /// by callers that must *decide* rather than assert — e.g. the
+    /// serving router falling back to a dense backend for unsupported
+    /// request shapes. A ragged final block (`n % block != 0`) is a
+    /// *valid* geometry: the tail block is always-attended and excluded
+    /// from routing.
+    pub fn try_new(
+        h: usize,
+        h_kv: usize,
+        n: usize,
+        d: usize,
+        block: usize,
+        topk: usize,
+    ) -> Option<Self> {
+        if h == 0 || h_kv == 0 || h % h_kv != 0 || n == 0 || d == 0 || block == 0 {
             return None;
         }
-        Some(Self { n, d, block, topk })
+        Some(Self { h, h_kv, n, d, block, topk })
     }
 
+    /// The single-head geometry (`h = h_kv = 1`) — bit-for-bit the
+    /// pre-multi-head behavior.
+    pub fn single(n: usize, d: usize, block: usize, topk: usize) -> Self {
+        Self::new(1, 1, n, d, block, topk)
+    }
+
+    /// The same routing geometry with a different head layout.
+    pub fn with_heads(mut self, h: usize, h_kv: usize) -> Self {
+        assert!(h >= 1 && h_kv >= 1 && h % h_kv == 0, "h={h} must be a multiple of h_kv={h_kv}");
+        self.h = h;
+        self.h_kv = h_kv;
+        self
+    }
+
+    /// Logical blocks covering the sequence, `ceil(n / block)` — the
+    /// last may be partial.
     pub fn n_blocks(&self) -> usize {
+        self.n.div_ceil(self.block)
+    }
+
+    /// Blocks holding exactly `block` tokens, `n / block` — the routing
+    /// candidate universe.
+    pub fn complete_blocks(&self) -> usize {
         self.n / self.block
     }
 
+    /// Does the sequence end in a partial block?
+    pub fn has_partial_tail(&self) -> bool {
+        self.n % self.block != 0
+    }
+
+    /// Tokens in logical block `j`.
+    pub fn block_len(&self, j: usize) -> usize {
+        assert!(j < self.n_blocks());
+        (self.n - j * self.block).min(self.block)
+    }
+
+    /// Query heads per KV head (the GQA group size).
+    pub fn group(&self) -> usize {
+        self.h / self.h_kv
+    }
+
+    /// The KV head that query head `qh` routes and attends against.
+    pub fn kv_head_of(&self, qh: usize) -> usize {
+        debug_assert!(qh < self.h);
+        qh / self.group()
+    }
+
+    /// Element count of the packed `(h, n, d)` query/output tensors.
+    pub fn q_elems(&self) -> usize {
+        self.h * self.n * self.d
+    }
+
+    /// Element count of the packed `(h_kv, n, d)` key/value tensors.
+    pub fn kv_elems(&self) -> usize {
+        self.h_kv * self.n * self.d
+    }
+
+    /// Largest routing candidate count any query row sees: tail-block
+    /// queries see every complete block; with an aligned n the last
+    /// row's own block is complete, leaving `complete_blocks - 1`
+    /// strict-past candidates.
+    pub fn max_candidates(&self) -> usize {
+        let cb = self.complete_blocks();
+        if self.has_partial_tail() {
+            cb
+        } else {
+            cb.saturating_sub(1)
+        }
+    }
+
     /// Attended fraction of the causal matrix (sparsity complement),
-    /// ≈ (k+1)·B / N for long sequences.
+    /// ≈ (k+1)·B / N for long sequences. Head layout does not change
+    /// the per-head density.
     pub fn density(&self) -> f64 {
         ((self.topk + 1) as f64 * self.block as f64 / self.n as f64).min(1.0)
     }
+}
+
+/// Gather token `t`'s row from every head of a packed `(heads, n, d)`
+/// tensor into one `(heads, d)` row — the per-token slice the decode
+/// path streams.
+pub fn packed_rows(x: &[f32], heads: usize, n: usize, d: usize, t: usize) -> Vec<f32> {
+    assert_eq!(x.len(), heads * n * d);
+    assert!(t < n);
+    let mut out = Vec::with_capacity(heads * d);
+    for head in 0..heads {
+        out.extend_from_slice(&x[(head * n + t) * d..(head * n + t + 1) * d]);
+    }
+    out
 }
 
 #[cfg(test)]
@@ -98,23 +209,78 @@ mod tests {
 
     #[test]
     fn shape_basics() {
-        let s = MobaShape::new(1024, 64, 128, 2);
+        let s = AttnShape::single(1024, 64, 128, 2);
         assert_eq!(s.n_blocks(), 8);
+        assert_eq!(s.complete_blocks(), 8);
+        assert!(!s.has_partial_tail());
+        assert_eq!(s.group(), 1);
+        assert_eq!(s.kv_head_of(0), 0);
         assert!((s.density() - 3.0 * 128.0 / 1024.0).abs() < 1e-12);
     }
 
     #[test]
-    #[should_panic]
-    fn ragged_rejected() {
-        MobaShape::new(100, 64, 32, 2);
+    fn gqa_head_mapping() {
+        let s = AttnShape::new(8, 2, 256, 16, 32, 2);
+        assert_eq!(s.group(), 4);
+        assert_eq!(s.kv_head_of(0), 0);
+        assert_eq!(s.kv_head_of(3), 0);
+        assert_eq!(s.kv_head_of(4), 1);
+        assert_eq!(s.kv_head_of(7), 1);
+        assert_eq!(s.q_elems(), 8 * 256 * 16);
+        assert_eq!(s.kv_elems(), 2 * 256 * 16);
+    }
+
+    #[test]
+    fn ragged_tail_is_a_valid_geometry() {
+        // the shape the old MobaShape::try_new rejected
+        let s = AttnShape::try_new(1, 1, 700, 64, 128, 8).expect("ragged n is supported");
+        assert_eq!(s.n_blocks(), 6);
+        assert_eq!(s.complete_blocks(), 5);
+        assert!(s.has_partial_tail());
+        assert_eq!(s.block_len(4), 128);
+        assert_eq!(s.block_len(5), 700 - 5 * 128);
+        assert_eq!(s.max_candidates(), 5); // tail queries see all complete blocks
+        let aligned = AttnShape::single(640, 64, 128, 8);
+        assert_eq!(aligned.max_candidates(), 4);
     }
 
     #[test]
     fn try_new_decides_instead_of_panicking() {
-        assert!(MobaShape::try_new(1024, 64, 128, 8).is_some());
-        assert!(MobaShape::try_new(700, 64, 128, 8).is_none()); // ragged
-        assert!(MobaShape::try_new(0, 64, 128, 8).is_none());
-        assert!(MobaShape::try_new(128, 0, 128, 8).is_none());
-        assert!(MobaShape::try_new(128, 64, 0, 8).is_none());
+        assert!(AttnShape::try_new(1, 1, 1024, 64, 128, 8).is_some());
+        assert!(AttnShape::try_new(4, 2, 1024, 64, 128, 8).is_some());
+        assert!(AttnShape::try_new(0, 1, 1024, 64, 128, 8).is_none()); // no heads
+        assert!(AttnShape::try_new(2, 0, 1024, 64, 128, 8).is_none()); // no KV heads
+        assert!(AttnShape::try_new(3, 2, 1024, 64, 128, 8).is_none()); // ragged groups
+        assert!(AttnShape::try_new(2, 4, 1024, 64, 128, 8).is_none()); // h < h_kv
+        assert!(AttnShape::try_new(1, 1, 0, 64, 128, 8).is_none());
+        assert!(AttnShape::try_new(1, 1, 128, 0, 128, 8).is_none());
+        assert!(AttnShape::try_new(1, 1, 128, 64, 0, 8).is_none());
+    }
+
+    #[test]
+    #[should_panic]
+    fn ragged_groups_rejected() {
+        AttnShape::new(6, 4, 128, 8, 32, 2);
+    }
+
+    #[test]
+    fn with_heads_preserves_routing_geometry() {
+        let s = AttnShape::single(256, 8, 32, 3).with_heads(4, 2);
+        assert_eq!((s.h, s.h_kv), (4, 2));
+        assert_eq!((s.n, s.d, s.block, s.topk), (256, 8, 32, 3));
+    }
+
+    #[test]
+    fn packed_rows_gathers_across_heads() {
+        // 2 heads, n=3, d=2: x[h][t][c] = 100h + 10t + c
+        let mut x = Vec::new();
+        for h in 0..2 {
+            for t in 0..3 {
+                for c in 0..2 {
+                    x.push((100 * h + 10 * t + c) as f32);
+                }
+            }
+        }
+        assert_eq!(packed_rows(&x, 2, 3, 2, 1), vec![10.0, 11.0, 110.0, 111.0]);
     }
 }

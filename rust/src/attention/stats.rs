@@ -24,6 +24,11 @@ pub struct StageStats {
     records: Vec<StageRecord>,
     /// thread budget stamped onto stages recorded via [`StageStats::time`]
     threads: usize,
+    /// query heads the run's kernel launches covered (1 = single-head).
+    /// Kernels iterate heads internally, so a stage's wall time folds
+    /// all heads into one record — this stamp is how consumers recover
+    /// the per-head share.
+    heads: usize,
     /// peak *extra* workspace allocated by the pipeline (bytes), beyond
     /// the q/k/v/o tensors themselves — the quantity that differs by
     /// orders of magnitude between original MoBA and FlashMoBA. With
@@ -39,19 +44,30 @@ impl Default for StageStats {
 }
 
 impl StageStats {
-    /// Serial-stamped stats (threads = 1).
+    /// Serial-stamped stats (threads = 1, heads = 1).
     pub fn new() -> Self {
-        Self { records: Vec::new(), threads: 1, workspace_bytes: 0 }
+        Self { records: Vec::new(), threads: 1, heads: 1, workspace_bytes: 0 }
     }
 
     /// Stats whose stages are stamped with `ctx`'s worker count.
     pub fn for_ctx(ctx: &ExecCtx) -> Self {
-        Self { records: Vec::new(), threads: ctx.threads(), workspace_bytes: 0 }
+        Self { records: Vec::new(), threads: ctx.threads(), heads: 1, workspace_bytes: 0 }
+    }
+
+    /// Stats stamped with `ctx`'s worker count and a query-head count
+    /// (the backends construct these from their `AttnShape`).
+    pub fn for_heads(ctx: &ExecCtx, heads: usize) -> Self {
+        Self { records: Vec::new(), threads: ctx.threads(), heads: heads.max(1), workspace_bytes: 0 }
     }
 
     /// Thread budget stamped onto recorded stages.
     pub fn threads(&self) -> usize {
         self.threads
+    }
+
+    /// Query heads the recorded stages covered per launch.
+    pub fn heads(&self) -> usize {
+        self.heads
     }
 
     /// Time `f` and record it under `name`.
@@ -90,15 +106,20 @@ impl StageStats {
     }
 
     /// Pretty one-line summary, e.g.
-    /// `topk 1.2ms | attn 3.4ms (total 4.6ms, ws 0.1MB, 4 threads)`.
+    /// `topk 1.2ms | attn 3.4ms (total 4.6ms, ws 0.1MB, 8 heads, 4 threads)`.
     pub fn summary(&self) -> String {
         let parts: Vec<String> = self
             .records
             .iter()
             .map(|r| format!("{} {:.2}ms", r.name, r.wall.as_secs_f64() * 1e3))
             .collect();
+        let heads = if self.heads == 1 {
+            String::new()
+        } else {
+            format!("{} heads, ", self.heads)
+        };
         format!(
-            "{} (total {:.2}ms, ws {:.1}MB, {} thread{})",
+            "{} (total {:.2}ms, ws {:.1}MB, {heads}{} thread{})",
             parts.join(" | "),
             self.total().as_secs_f64() * 1e3,
             self.workspace_bytes as f64 / 1e6,
@@ -155,5 +176,20 @@ mod tests {
     #[test]
     fn ws_bytes_sums() {
         assert_eq!(ws_bytes(&[2, 3]), 20);
+    }
+
+    #[test]
+    fn head_stamp_folds_into_summary() {
+        let ctx = ExecCtx::with_threads(2);
+        let mut st = StageStats::for_heads(&ctx, 8);
+        st.time("fwd", || ());
+        assert_eq!(st.heads(), 8);
+        assert_eq!(st.threads(), 2);
+        assert!(st.summary().contains("8 heads"));
+        // single-head stats keep the old summary shape
+        assert_eq!(StageStats::for_ctx(&ctx).heads(), 1);
+        assert!(!StageStats::new().summary().contains("heads"));
+        // heads = 0 is clamped, not propagated
+        assert_eq!(StageStats::for_heads(&ctx, 0).heads(), 1);
     }
 }

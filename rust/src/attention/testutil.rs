@@ -51,6 +51,40 @@ pub fn qkv(seed: u64, n: usize, d: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
     (r.normal_vec(n * d), r.normal_vec(n * d), r.normal_vec(n * d))
 }
 
+/// Random packed (q, k, v) triple: q is (h, n, d), k/v are (h_kv, n, d).
+/// With `h = h_kv = 1` this draws exactly the same values as
+/// [`qkv`] — the single-head bit-parity tests depend on that.
+pub fn qkv_packed(
+    seed: u64,
+    h: usize,
+    h_kv: usize,
+    n: usize,
+    d: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut r = Rng::new(seed);
+    (
+        r.normal_vec(h * n * d),
+        r.normal_vec(h_kv * n * d),
+        r.normal_vec(h_kv * n * d),
+    )
+}
+
+/// Tile a packed (h_from, n, d) tensor up to (h_to, n, d) by repeating
+/// each head `h_to / h_from` times in group order — the explicit-KV
+/// form of GQA broadcasting (used by the GQA-semantics property tests).
+pub fn repeat_heads(x: &[f32], h_from: usize, h_to: usize, n: usize, d: usize) -> Vec<f32> {
+    assert_eq!(x.len(), h_from * n * d);
+    assert!(h_from >= 1 && h_to % h_from == 0);
+    let group = h_to / h_from;
+    let mut out = Vec::with_capacity(h_to * n * d);
+    for head in 0..h_from {
+        for _ in 0..group {
+            out.extend_from_slice(&x[head * n * d..(head + 1) * n * d]);
+        }
+    }
+    out
+}
+
 /// Max |a - b|.
 pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
     assert_eq!(a.len(), b.len());
@@ -68,6 +102,26 @@ mod tests {
         for _ in 0..100 {
             assert_eq!(a.next_u64(), b.next_u64());
         }
+    }
+
+    #[test]
+    fn qkv_packed_single_head_equals_qkv() {
+        let (q1, k1, v1) = qkv(77, 12, 4);
+        let (q2, k2, v2) = qkv_packed(77, 1, 1, 12, 4);
+        assert_eq!(q1, q2);
+        assert_eq!(k1, k2);
+        assert_eq!(v1, v2);
+    }
+
+    #[test]
+    fn repeat_heads_tiles_in_group_order() {
+        // 2 heads of (n=1, d=2) -> 4 heads: [a a b b]
+        let x = vec![1.0, 2.0, 3.0, 4.0];
+        assert_eq!(
+            repeat_heads(&x, 2, 4, 1, 2),
+            vec![1.0, 2.0, 1.0, 2.0, 3.0, 4.0, 3.0, 4.0]
+        );
+        assert_eq!(repeat_heads(&x, 2, 2, 1, 2), x);
     }
 
     #[test]

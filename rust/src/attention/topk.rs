@@ -13,6 +13,7 @@
 
 use super::simd::dot;
 use super::stats::ws_bytes;
+use super::AttnShape;
 use crate::util::pool::{concat, ExecCtx};
 
 /// Materializing reference selection on the process-wide shared pool.
@@ -28,12 +29,12 @@ pub fn naive_topk(
     naive_topk_ctx(ExecCtx::global(), q, centroids, n, d, block, topk)
 }
 
-/// [`naive_topk`] on an explicit execution context. Both passes — the
-/// score-matrix fill and the per-row selection — partition query rows;
-/// per-row arithmetic (and the stable sort's tie order) is unchanged,
-/// so results are bit-identical at any thread count. The full N×n
-/// matrix is still materialized: that overhead *is* the original
-/// pipeline being reproduced.
+/// [`naive_topk`] on an explicit execution context — the
+/// `h = h_kv = 1` slice of [`naive_topk_packed`] (one selection
+/// implementation, no divergence risk; the pre-refactor single-head
+/// behavior is pinned independently by
+/// `rust/tests/singlehead_regression.rs`). `centroids` must hold
+/// exactly `n / block` rows.
 pub fn naive_topk_ctx(
     ctx: &ExecCtx,
     q: &[f32],
@@ -43,38 +44,8 @@ pub fn naive_topk_ctx(
     block: usize,
     topk: usize,
 ) -> (Vec<i32>, u64) {
-    let nb = centroids.len() / d;
-    // full score matrix, exactly like the original implementation
-    let scores: Vec<f32> = concat(ctx.pool().map_ranges(n, |range| {
-        let mut chunk = vec![0.0f32; range.len() * nb];
-        for (tt, t) in range.enumerate() {
-            let qt = &q[t * d..(t + 1) * d];
-            for j in 0..nb {
-                chunk[tt * nb + j] = dot(qt, &centroids[j * d..(j + 1) * d]);
-            }
-        }
-        chunk
-    }));
-    let ws = ws_bytes(&[scores.len()]);
-    let out: Vec<i32> = concat(ctx.pool().map_ranges(n, |range| {
-        let mut chunk = vec![-1i32; range.len() * topk];
-        let mut order: Vec<usize> = Vec::with_capacity(nb);
-        for (tt, t) in range.enumerate() {
-            let own = t / block;
-            order.clear();
-            // strictly past blocks; NaN scores (degenerate q/centroid
-            // inputs) are excluded up front — `total_cmp` would rank +NaN
-            // above every real score, while the streaming kernel's
-            // `dotv > best` insertion never admits NaN
-            order.extend((0..own).filter(|&j| !scores[t * nb + j].is_nan()));
-            order.sort_by(|&a, &b| scores[t * nb + b].total_cmp(&scores[t * nb + a]));
-            for (slot, &j) in order.iter().take(topk).enumerate() {
-                chunk[tt * topk + slot] = j as i32;
-            }
-        }
-        chunk
-    }));
-    (out, ws)
+    let shape = AttnShape::new(1, 1, n, d, block, topk);
+    naive_topk_packed(ctx, q, centroids, &shape)
 }
 
 /// Insert (score, index) into a descending running top-k — the paper's
@@ -116,10 +87,12 @@ pub fn tiled_topk(
     tiled_topk_ctx(ExecCtx::global(), q, centroids, n, d, block, topk, tile_c)
 }
 
-/// [`tiled_topk`] on an explicit execution context. Query rows are
-/// independent work units (each carries its own O(k) running state and
-/// streams centroid tiles in the same order), so partitioning them
-/// across workers selects bit-identically to the serial path.
+/// [`tiled_topk`] on an explicit execution context — the
+/// `h = h_kv = 1` slice of [`tiled_topk_packed`] (one selection
+/// implementation; the pre-refactor single-head behavior is pinned
+/// independently by `rust/tests/singlehead_regression.rs`).
+/// `centroids` must hold exactly `n / block` rows — with a ragged `n`,
+/// tail-block queries see every complete block as a candidate.
 ///
 /// `tile_c` is the centroid tile width; the running top-k state is
 /// O(k) per query row — `ws` counts only the per-tile score buffer.
@@ -134,36 +107,107 @@ pub fn tiled_topk_ctx(
     topk: usize,
     tile_c: usize,
 ) -> (Vec<i32>, u64) {
-    // degenerate tile widths: 0 would never advance the stream; clamp
-    // (widths larger than the candidate set are already handled by the
-    // `min(own)` bound below and covered by regression tests)
+    let shape = AttnShape::new(1, 1, n, d, block, topk);
+    tiled_topk_packed(ctx, q, centroids, &shape, tile_c)
+}
+
+/// Packed multi-head materializing selection (the original pipeline's
+/// gating): q is `(h, n, d)`, `centroids` is `(h_kv, cb, d)` from
+/// [`centroids_packed`](super::centroid::centroids_packed). Each query
+/// head scores its group's KV-head centroids; the full `(h, n, cb)`
+/// score tensor is materialized — that overhead *is* the original
+/// pipeline being reproduced. Returns (`(h, n, topk)` indices, ws
+/// bytes). Work units are flattened `(head, row)` pairs, so `h = 1`
+/// partitions and selects exactly as [`naive_topk_ctx`].
+pub fn naive_topk_packed(
+    ctx: &ExecCtx,
+    q: &[f32],
+    centroids: &[f32],
+    shape: &AttnShape,
+) -> (Vec<i32>, u64) {
+    let AttnShape { h, h_kv, n, d, block, topk } = *shape;
+    let cb = shape.complete_blocks();
+    assert_eq!(q.len(), h * n * d);
+    assert_eq!(centroids.len(), h_kv * cb * d);
+    let group = shape.group();
+    let units = h * n;
+    // full score tensor, exactly like the original implementation
+    let scores: Vec<f32> = concat(ctx.pool().map_ranges(units, |range| {
+        let mut chunk = vec![0.0f32; range.len() * cb];
+        for (uu, u) in range.enumerate() {
+            let (qh, t) = (u / n, u % n);
+            let qt = &q[(qh * n + t) * d..(qh * n + t + 1) * d];
+            let ch = &centroids[(qh / group) * cb * d..(qh / group + 1) * cb * d];
+            for j in 0..cb {
+                chunk[uu * cb + j] = dot(qt, &ch[j * d..(j + 1) * d]);
+            }
+        }
+        chunk
+    }));
+    let ws = ws_bytes(&[scores.len()]);
+    let out: Vec<i32> = concat(ctx.pool().map_ranges(units, |range| {
+        let mut chunk = vec![-1i32; range.len() * topk];
+        let mut order: Vec<usize> = Vec::with_capacity(cb);
+        for (uu, u) in range.enumerate() {
+            let t = u % n;
+            // candidates: complete strictly-past blocks. Tail-block
+            // queries have own == cb, so they see every complete block.
+            let own = (t / block).min(cb);
+            let row = &scores[u * cb..(u + 1) * cb];
+            order.clear();
+            order.extend((0..own).filter(|&j| !row[j].is_nan()));
+            order.sort_by(|&a, &b| row[b].total_cmp(&row[a]));
+            for (slot, &j) in order.iter().take(topk).enumerate() {
+                chunk[uu * topk + slot] = j as i32;
+            }
+        }
+        chunk
+    }));
+    (out, ws)
+}
+
+/// Packed multi-head streaming selection (Flash TopK): same inputs as
+/// [`naive_topk_packed`], O(k) running state per query row, no score
+/// tensor. Returns (`(h, n, topk)` indices, ws bytes). `h = 1` selects
+/// bit-identically to [`tiled_topk_ctx`].
+pub fn tiled_topk_packed(
+    ctx: &ExecCtx,
+    q: &[f32],
+    centroids: &[f32],
+    shape: &AttnShape,
+    tile_c: usize,
+) -> (Vec<i32>, u64) {
+    let AttnShape { h, h_kv, n, d, block, topk } = *shape;
+    let cb = shape.complete_blocks();
+    assert_eq!(q.len(), h * n * d);
+    assert_eq!(centroids.len(), h_kv * cb * d);
+    let group = shape.group();
     let tile_c = tile_c.max(1);
-    // k = 0: empty selection, mirroring naive_topk (and avoiding the
-    // `best_s[topk - 1]` underflow in the insertion below)
     if topk == 0 {
         return (Vec::new(), ws_bytes(&[tile_c]));
     }
     let ws = ws_bytes(&[tile_c + 2 * topk]);
-    let out: Vec<i32> = concat(ctx.pool().map_ranges(n, |range| {
+    let out: Vec<i32> = concat(ctx.pool().map_ranges(h * n, |range| {
         let mut chunk = vec![-1i32; range.len() * topk];
-        // per-row running state (scores descending)
         let mut best_s = vec![f32::NEG_INFINITY; topk];
         let mut best_i = vec![-1i32; topk];
-        for (tt, t) in range.enumerate() {
-            let own = t / block; // candidates: blocks [0, own)
-            let qt = &q[t * d..(t + 1) * d];
+        for (uu, u) in range.enumerate() {
+            let (qh, t) = (u / n, u % n);
+            let own = (t / block).min(cb); // candidates: complete blocks [0, own)
+            let qt = &q[(qh * n + t) * d..(qh * n + t + 1) * d];
+            let ch = &centroids[(qh / group) * cb * d..(qh / group + 1) * cb * d];
             best_s.fill(f32::NEG_INFINITY);
             best_i.fill(-1);
             let mut j0 = 0;
             while j0 < own {
                 let jend = (j0 + tile_c).min(own);
                 for j in j0..jend {
-                    let dotv = dot(qt, &centroids[j * d..(j + 1) * d]);
+                    let dotv = dot(qt, &ch[j * d..(j + 1) * d]);
                     topk_insert(&mut best_s, &mut best_i, dotv, j as i32);
                 }
                 j0 = jend;
             }
-            chunk[tt * topk..(tt + 1) * topk].copy_from_slice(&best_i);
+            chunk[uu * topk..(uu + 1) * topk].copy_from_slice(&best_i);
         }
         chunk
     }));
@@ -324,6 +368,46 @@ mod tests {
         let (t, _) = tiled_topk(&q, &c, n, d, b, 0, 4);
         assert!(a.is_empty());
         assert!(t.is_empty());
+    }
+
+    /// Multi-head packed selection == per-head single-head selection
+    /// with the GQA head mapping, including a ragged tail (whose rows
+    /// see every complete block as candidates) and both selectors
+    /// agreeing with each other.
+    #[test]
+    fn packed_gqa_selection_matches_per_head_reference() {
+        use crate::attention::centroid::centroids_packed;
+        use crate::attention::testutil::qkv_packed;
+        use crate::attention::AttnShape;
+        use crate::util::pool::ExecCtx;
+        let ctx = ExecCtx::with_threads(3);
+        for shape in [
+            AttnShape::new(4, 2, 128, 8, 16, 2),
+            AttnShape::new(2, 1, 100, 4, 16, 3), // ragged tail
+        ] {
+            let (q, kk, _) = qkv_packed(20, shape.h, shape.h_kv, shape.n, shape.d);
+            let c = centroids_packed(&ctx, &kk, shape.h_kv, shape.n, shape.d, shape.block);
+            let cb = shape.complete_blocks();
+            let (a, _) = naive_topk_packed(&ctx, &q, &c, &shape);
+            let (t, _) = tiled_topk_packed(&ctx, &q, &c, &shape, 3);
+            assert_eq!(a.len(), shape.h * shape.n * shape.topk);
+            assert!(same_selection(&a, &t, shape.topk), "{shape:?}");
+            for qh in 0..shape.h {
+                let kvh = shape.kv_head_of(qh);
+                let qs = &q[qh * shape.n * shape.d..(qh + 1) * shape.n * shape.d];
+                let cs = &c[kvh * cb * shape.d..(kvh + 1) * cb * shape.d];
+                // single-head selection over this head's slices must
+                // reproduce the head's slab of the packed table (tail
+                // rows see all cb complete blocks as candidates)
+                let (single, _) =
+                    tiled_topk_ctx(&ctx, qs, cs, shape.n, shape.d, shape.block, shape.topk, 3);
+                assert_eq!(
+                    &t[qh * shape.n * shape.topk..(qh + 1) * shape.n * shape.topk],
+                    &single[..],
+                    "head {qh} {shape:?}"
+                );
+            }
+        }
     }
 
     /// NaN gating scores must not panic the materializing sort and must

@@ -59,6 +59,22 @@ pub fn build_varlen(indices: &[i32], n: usize, topk: usize, n_blocks: usize) -> 
     VarlenLayout { counts, offsets, flat }
 }
 
+/// Build one layout per query head from a packed `(h, n, topk)` routing
+/// table — head `qh`'s layout indexes *its own* `(n, topk)` slab, so
+/// `queries_of` stays in per-head row coordinates.
+pub fn build_varlen_heads(
+    indices: &[i32],
+    h: usize,
+    n: usize,
+    topk: usize,
+    n_blocks: usize,
+) -> Vec<VarlenLayout> {
+    assert_eq!(indices.len(), h * n * topk);
+    (0..h)
+        .map(|qh| build_varlen(&indices[qh * n * topk..(qh + 1) * n * topk], n, topk, n_blocks))
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -101,6 +117,21 @@ mod tests {
             expect.sort_unstable();
             assert_eq!(got, expect, "block {j}");
         }
+    }
+
+    #[test]
+    fn per_head_layouts_slice_the_packed_table() {
+        // 2 heads x 2 queries, k=1, 3 blocks
+        let idx = [0, 2, 1, -1]; // head 0: q0->b0, q1->b2; head 1: q0->b1
+        let ls = build_varlen_heads(&idx, 2, 2, 1, 3);
+        assert_eq!(ls.len(), 2);
+        assert_eq!(ls[0].queries_of(0), &[0]);
+        assert_eq!(ls[0].queries_of(2), &[1]);
+        assert_eq!(ls[1].queries_of(1), &[0]);
+        assert_eq!(ls[1].total(), 1);
+        // single head == plain build_varlen
+        let single = build_varlen(&idx[..2], 2, 1, 3);
+        assert_eq!(build_varlen_heads(&idx[..2], 1, 2, 1, 3)[0], single);
     }
 
     #[test]

@@ -15,7 +15,7 @@ use crate::attention::backend::AttentionBackend;
 use crate::attention::backend::BackendRegistry;
 use crate::attention::decode::DecodeSession;
 use crate::attention::testutil::Rng;
-use crate::attention::MobaShape;
+use crate::attention::{packed_rows, AttnShape};
 use crate::config::AppConfig;
 use crate::eval::decode_eval;
 use crate::util::json::Json;
@@ -36,35 +36,33 @@ pub struct DecodePoint {
     pub gathered_bytes: u64,
 }
 
-/// Time `steps` decode queries against a fixed context of length `n`.
-/// The session is pre-filled by appending `n` tokens (untimed), then
-/// each timed step routes + attends without appending, so every backend
-/// sees the identical steady-state cache.
-#[allow(clippy::too_many_arguments)]
+/// Time `steps` decode queries against a fixed context of length
+/// `shape.n`, with `shape`'s head layout (one packed step covers every
+/// query head). The session is pre-filled by appending `n` tokens
+/// (untimed), then each timed step routes + attends without appending,
+/// so every backend sees the identical steady-state cache.
 pub fn measure_decode(
     ctx: &ExecCtx,
     registry: &BackendRegistry,
-    n: usize,
-    d: usize,
-    block: usize,
-    topk: usize,
+    shape: &AttnShape,
     steps: usize,
     seed: u64,
 ) -> Vec<DecodePoint> {
+    let AttnShape { h, h_kv, n, d, block, topk } = *shape;
     let mut rng = Rng::new(seed);
-    let ks = rng.normal_vec(n * d);
-    let vs = rng.normal_vec(n * d);
-    let qs = rng.normal_vec(steps * d);
+    let ks = rng.normal_vec(h_kv * n * d);
+    let vs = rng.normal_vec(h_kv * n * d);
+    let qs = rng.normal_vec(steps * h * d);
     let mut points = Vec::new();
     for backend in registry.iter() {
-        let mut sess = DecodeSession::new(d, block, topk);
+        let mut sess = DecodeSession::new(h, h_kv, d, block, topk);
         for t in 0..n {
-            sess.append(&ks[t * d..(t + 1) * d], &vs[t * d..(t + 1) * d]);
+            sess.append(&packed_rows(&ks, h_kv, n, d, t), &packed_rows(&vs, h_kv, n, d, t));
         }
         let t0 = Instant::now();
         for s in 0..steps {
-            let o = backend.forward_decode(ctx, &mut sess, &qs[s * d..(s + 1) * d]);
-            debug_assert_eq!(o.len(), d);
+            let o = backend.forward_decode(ctx, &mut sess, &qs[s * h * d..(s + 1) * h * d]);
+            debug_assert_eq!(o.len(), h * d);
         }
         let per_token_s = t0.elapsed().as_secs_f64() / steps as f64;
         points.push(DecodePoint {
@@ -85,27 +83,32 @@ pub fn run_decode(cfg: &AppConfig, quick: bool) -> Result<f64> {
     let ctx = ExecCtx::global();
     let registry = BackendRegistry::with_defaults();
 
-    // 1) decode↔prefill parity on small shapes (every backend)
+    // 1) decode↔prefill parity on small shapes (every backend),
+    //    single-head, MHA and GQA layouts
     let shapes = vec![
-        MobaShape::new(128, 16, 16, 2),
-        MobaShape::new(96, 8, 16, 6), // fully routed
-        MobaShape::new(256, 8, 32, 3),
+        AttnShape::single(128, 16, 16, 2),
+        AttnShape::single(96, 8, 16, 6), // fully routed
+        AttnShape::single(256, 8, 32, 3),
+        AttnShape::new(4, 2, 96, 8, 16, 2), // GQA
     ];
     let parity = decode_eval(ctx, &registry, &shapes, 0xDEC0);
     let mut pt = Table::new(
         "Decode parity — token-by-token forward_decode vs prefill forward",
-        &["backend", "N", "B", "k", "max|Δ| vs prefill", "us/token"],
+        &["backend", "H", "Hkv", "N", "B", "k", "max|Δ| vs prefill", "us/token"],
     );
     for r in &parity {
         assert!(
             r.max_dev_vs_prefill < 1e-4,
-            "decode parity violated: {} dev {:.2e} at N={}",
+            "decode parity violated: {} dev {:.2e} at N={} h={}",
             r.backend,
             r.max_dev_vs_prefill,
-            r.n
+            r.n,
+            r.h
         );
         pt.row(vec![
             r.backend.clone(),
+            r.h.to_string(),
+            r.h_kv.to_string(),
             r.n.to_string(),
             r.block.to_string(),
             r.topk.to_string(),
@@ -119,16 +122,20 @@ pub fn run_decode(cfg: &AppConfig, quick: bool) -> Result<f64> {
     let d = cfg.bench.head_dim;
     let block = cfg.bench.block;
     let topk = cfg.bench.topk;
+    let (h, h_kv) = (cfg.bench.heads.max(1), cfg.bench.kv_heads.max(1));
     let lens: Vec<usize> = if quick { vec![1024, 4096] } else { vec![1024, 4096, 16384] };
     let steps = if quick { 32 } else { 128 };
     let mut t = Table::new(
-        &format!("bench decode — per-token latency vs context  [B={block}, k={topk}, d={d}]"),
+        &format!(
+            "bench decode — per-token latency vs context  [B={block}, k={topk}, d={d}, h={h}/{h_kv}]"
+        ),
         &["backend", "context N", "us/token", "blocks/step", "gathered KB/step"],
     );
     let mut blob = Vec::new();
     let mut headline: f64 = 0.0;
     for &n in &lens {
-        let points = measure_decode(ctx, &registry, n, d, block, topk, steps, 0xDEC0DE + n as u64);
+        let shape = AttnShape::new(h, h_kv, n, d, block, topk);
+        let points = measure_decode(ctx, &registry, &shape, steps, 0xDEC0DE + n as u64);
         let dense_s = points
             .iter()
             .find(|p| p.backend == "dense")
@@ -143,6 +150,8 @@ pub fn run_decode(cfg: &AppConfig, quick: bool) -> Result<f64> {
             ]);
             blob.push(Json::obj(vec![
                 ("backend", Json::from(p.backend.as_str())),
+                ("h", Json::from(h)),
+                ("h_kv", Json::from(h_kv)),
                 ("context_n", Json::from(p.context_n)),
                 ("per_token_s", Json::from(p.per_token_s)),
                 ("routed_blocks", Json::from(p.routed_blocks)),
@@ -179,7 +188,8 @@ mod tests {
     fn measure_covers_all_backends_and_sparse_gathers_less() {
         let registry = BackendRegistry::with_defaults();
         // 8 blocks, k=1: routed decode touches 2 blocks vs dense's 8
-        let points = measure_decode(ExecCtx::global(), &registry, 256, 8, 32, 1, 4, 9);
+        let shape = AttnShape::single(256, 8, 32, 1);
+        let points = measure_decode(ExecCtx::global(), &registry, &shape, 4, 9);
         assert_eq!(points.len(), registry.len());
         let dense = points.iter().find(|p| p.backend == "dense").unwrap();
         let flash = points.iter().find(|p| p.backend == "flash_moba").unwrap();
@@ -187,5 +197,18 @@ mod tests {
         assert_eq!(flash.routed_blocks, 2);
         assert!(flash.gathered_bytes < dense.gathered_bytes);
         assert!(dense.per_token_s > 0.0 && flash.per_token_s > 0.0);
+    }
+
+    #[test]
+    fn gqa_measure_sums_blocks_over_query_heads() {
+        let registry = BackendRegistry::with_defaults();
+        let shape = AttnShape::new(4, 2, 256, 8, 32, 1);
+        let points = measure_decode(ExecCtx::global(), &registry, &shape, 2, 10);
+        let dense = points.iter().find(|p| p.backend == "dense").unwrap();
+        let flash = points.iter().find(|p| p.backend == "flash_moba").unwrap();
+        // per query head: dense reads 8 blocks, routed reads 2
+        assert_eq!(dense.routed_blocks, 4 * 8);
+        assert_eq!(flash.routed_blocks, 4 * 2);
+        assert!(flash.gathered_bytes < dense.gathered_bytes);
     }
 }

@@ -27,8 +27,8 @@ use crate::attention::backward::{flash_moba_backward, naive_backward};
 use crate::attention::flash_moba::{flash_moba_forward, flash_moba_forward_ctx, FlashMobaConfig};
 use crate::attention::moba_naive::moba_naive_forward;
 use crate::attention::stats::{ws_bytes, StageStats};
-use crate::attention::testutil::{qkv, Rng};
-use crate::attention::MobaShape;
+use crate::attention::testutil::{qkv_packed, Rng};
+use crate::attention::AttnShape;
 use crate::config::AppConfig;
 use crate::util::json::Json;
 use crate::util::pool::ExecCtx;
@@ -47,32 +47,34 @@ pub struct Point {
     pub oom: bool,
 }
 
-/// Analytic workspace of the original pipeline (bytes): score matrix +
-/// gathered copies + partial outputs (the Figure-3 memory story).
-pub fn naive_workspace_bytes(shape: MobaShape) -> u64 {
-    let MobaShape { n, d, topk, .. } = shape;
-    let nb = shape.n_blocks();
-    let routed = n * topk; // upper bound on routed pairs
+/// Analytic workspace of the original pipeline (bytes): score tensor +
+/// gathered copies + partial outputs (the Figure-3 memory story),
+/// per query head (score/gather/partials/local/merge) and per KV head
+/// (centroids).
+pub fn naive_workspace_bytes(shape: AttnShape) -> u64 {
+    let AttnShape { h, h_kv, n, d, topk, .. } = shape;
+    let cb = shape.complete_blocks();
+    let routed = n * topk; // upper bound on routed pairs per head
     ws_bytes(&[
-        n * nb,          // score matrix
-        nb * d,          // centroids
-        routed * d,      // gathered queries
-        routed * d,      // partial outputs
-        routed,          // partial lse
-        n * d + n,       // local outputs + lse
-        2 * n,           // merge workspace
+        h * n * cb,          // score tensor
+        h_kv * cb * d,       // centroids
+        h * routed * d,      // gathered queries
+        h * routed * d,      // partial outputs
+        h * routed,          // partial lse
+        h * (n * d + n),     // local outputs + lse
+        2 * h * n,           // merge workspace
     ])
 }
 
 /// Analytic workspace of FlashMoBA (bytes).
-pub fn flash_workspace_bytes(shape: MobaShape, cfg: FlashMobaConfig) -> u64 {
-    let MobaShape { n, d, topk, .. } = shape;
-    let nb = shape.n_blocks();
+pub fn flash_workspace_bytes(shape: AttnShape, cfg: FlashMobaConfig) -> u64 {
+    let AttnShape { h, h_kv, n, d, topk, .. } = shape;
+    let cb = shape.complete_blocks();
     ws_bytes(&[
-        nb * d,                      // centroids
+        h_kv * cb * d,               // centroids
         cfg.topk_tile + 2 * topk,    // topk running state
-        n * topk + 2 * nb,           // varlen layout
-        2 * n + n * d,               // m, l, acc accumulators
+        h * (n * topk + 2 * cb),     // varlen layouts (one per head)
+        h * (2 * n + n * d),         // m, l, acc accumulators
         cfg.tile_r * d,              // gathered tile
         cfg.tile_r * cfg.tile_c,     // score tile
     ])
@@ -83,7 +85,7 @@ pub fn dense_workspace_bytes(d: usize, br: usize, bc: usize) -> u64 {
     ws_bytes(&[br * bc, br * d, 2 * br])
 }
 
-fn analytic_workspace(name: &str, shape: MobaShape) -> u64 {
+fn analytic_workspace(name: &str, shape: AttnShape) -> u64 {
     match name {
         "dense" => dense_workspace_bytes(shape.d, 64, 64),
         "moba_naive" => naive_workspace_bytes(shape),
@@ -130,12 +132,14 @@ fn backward_seconds(
     k: &[f32],
     v: &[f32],
     dout: &[f32],
-    shape: MobaShape,
+    shape: AttnShape,
 ) -> Option<f64> {
+    debug_assert_eq!(shape.h, 1, "backward timing is per head");
     match name {
         "dense" => {
             // dense backward == naive_backward with full routing
-            let full_shape = MobaShape::new(shape.n, shape.d, shape.block, shape.n_blocks());
+            let full_shape =
+                AttnShape::single(shape.n, shape.d, shape.block, shape.n_blocks());
             let full_idx = full_routing(shape);
             Some(time_reps(1, || {
                 naive_backward(q, k, v, dout, full_shape, &full_idx);
@@ -150,7 +154,7 @@ fn backward_seconds(
         "flash_moba" => {
             let out = flash_moba_forward(q, k, v, shape, FlashMobaConfig::default());
             Some(time_reps(1, || {
-                flash_moba_backward(q, k, v, &out.o, &out.lse, dout, shape, &out.layout);
+                flash_moba_backward(q, k, v, &out.o, &out.lse, dout, shape, &out.layouts[0]);
             }))
         }
         _ => None,
@@ -176,13 +180,14 @@ pub fn run_fig3(cfg: &AppConfig, quick: bool) -> Result<Vec<Fig3Row>> {
     let b = cfg.bench.block;
     let k = cfg.bench.topk;
     let d = cfg.bench.head_dim;
+    let (h, h_kv) = (cfg.bench.heads, cfg.bench.kv_heads);
     let reps = if quick { 1 } else { cfg.bench.reps };
     let budget_bytes: u64 = 2 << 30; // 2 GiB workspace budget = "80GB H100" analogue
 
     let mut rows = Vec::new();
     for &n in &cfg.bench.fig3_lens {
-        let shape = MobaShape::new(n, d, b, k);
-        let (q, kk, v) = qkv(1000 + n as u64, n, d);
+        let shape = AttnShape::new(h, h_kv, n, d, b, k);
+        let (q, kk, v) = qkv_packed(1000 + n as u64, h, h_kv, n, d);
         let mut rng = Rng::new(7 + n as u64);
         let dout = rng.normal_vec(n * d);
 
@@ -210,7 +215,9 @@ pub fn run_fig3(cfg: &AppConfig, quick: bool) -> Result<Vec<Fig3Row>> {
                     p.workspace = measured_ws;
                 }
             }
-            if !p.oom && backend.supports(&shape) && n <= bwd_cap(name, quick) {
+            // backward is timed per head; only the single-head sweep
+            // reports it (multi-head backward is h independent repeats)
+            if !p.oom && h == 1 && backend.supports(&shape) && n <= bwd_cap(name, quick) {
                 p.bwd_s = backward_seconds(name, &q, &kk, &v, &dout, shape);
             }
             points.push((name.to_string(), p));
@@ -220,8 +227,9 @@ pub fn run_fig3(cfg: &AppConfig, quick: bool) -> Result<Vec<Fig3Row>> {
     Ok(rows)
 }
 
-fn full_routing(shape: MobaShape) -> Vec<i32> {
-    // every strictly-past block routed (dense as a MoBA special case)
+fn full_routing(shape: AttnShape) -> Vec<i32> {
+    // every strictly-past block routed (dense as a MoBA special case);
+    // single-head, like the backward timings that consume it
     let nb = shape.n_blocks();
     let mut idx = vec![-1i32; shape.n * nb];
     for t in 0..shape.n {
@@ -263,8 +271,8 @@ pub fn print_fig3(cfg: &AppConfig, rows: &[Fig3Row]) -> Result<f64> {
     let hrefs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
     let mut t = Table::new(
         &format!(
-            "Figure 3 — latency (ms) & workspace (MB) vs N  [B={}, k={}]",
-            cfg.bench.block, cfg.bench.topk
+            "Figure 3 — latency (ms) & workspace (MB) vs N  [B={}, k={}, h={}/{}]",
+            cfg.bench.block, cfg.bench.topk, cfg.bench.heads, cfg.bench.kv_heads
         ),
         &hrefs,
     );
@@ -330,8 +338,15 @@ fn point_json(p: &Point) -> Json {
 pub fn run_fig4(cfg: &AppConfig, n: usize) -> Result<()> {
     let ctx = ExecCtx::global();
     let registry = BackendRegistry::with_defaults();
-    let shape = MobaShape::new(n, cfg.bench.head_dim, cfg.bench.block, cfg.bench.topk);
-    let (q, k, v) = qkv(4444, n, cfg.bench.head_dim);
+    let shape = AttnShape::new(
+        cfg.bench.heads,
+        cfg.bench.kv_heads,
+        n,
+        cfg.bench.head_dim,
+        cfg.bench.block,
+        cfg.bench.topk,
+    );
+    let (q, k, v) = qkv_packed(4444, shape.h, shape.h_kv, n, cfg.bench.head_dim);
 
     let mut t = Table::new(
         &format!("Figure 4 — forward timing breakdown at N={n}  [{} threads]", ctx.threads()),
@@ -411,8 +426,15 @@ pub fn run_fig4(cfg: &AppConfig, n: usize) -> Result<()> {
 /// differ.
 pub fn measure_multicore_speedup(cfg: &AppConfig, quick: bool) -> (f64, usize) {
     let n = if quick { 8192 } else { 16384 };
-    let shape = MobaShape::new(n, cfg.bench.head_dim, cfg.bench.block, cfg.bench.topk);
-    let (q, k, v) = qkv(777, n, cfg.bench.head_dim);
+    let shape = AttnShape::new(
+        cfg.bench.heads,
+        cfg.bench.kv_heads,
+        n,
+        cfg.bench.head_dim,
+        cfg.bench.block,
+        cfg.bench.topk,
+    );
+    let (q, k, v) = qkv_packed(777, shape.h, shape.h_kv, n, cfg.bench.head_dim);
     let fm = FlashMobaConfig::default();
     let serial = ExecCtx::serial();
     let pooled = ExecCtx::global();
@@ -432,8 +454,15 @@ pub fn measure_multicore_speedup(cfg: &AppConfig, quick: bool) -> (f64, usize) {
 /// Ablation: FlashMoBA physical tile sizes (the §C.2 tuning trade-off).
 /// Stays implementation-specific: it sweeps FlashMoBA's own config knob.
 pub fn run_tile_ablation(cfg: &AppConfig, n: usize) -> Result<()> {
-    let shape = MobaShape::new(n, cfg.bench.head_dim, cfg.bench.block, cfg.bench.topk);
-    let (q, k, v) = qkv(555, n, cfg.bench.head_dim);
+    let shape = AttnShape::new(
+        cfg.bench.heads,
+        cfg.bench.kv_heads,
+        n,
+        cfg.bench.head_dim,
+        cfg.bench.block,
+        cfg.bench.topk,
+    );
+    let (q, k, v) = qkv_packed(555, shape.h, shape.h_kv, n, cfg.bench.head_dim);
     let mut t = Table::new(
         &format!("Ablation — physical tile sizes at N={n}"),
         &["tile_r", "tile_c", "fwd ms", "ws MB"],

@@ -95,7 +95,7 @@ pub fn save_json(dir: &Path, name: &str, value: &Json) -> Result<()> {
 /// ```json
 /// {
 ///   "target": "parity", "quick": true, "threads": 4, "wall_s": 1.2,
-///   "config": {"block": 128, "topk": 8, "head_dim": 64},
+///   "config": {"block": 128, "topk": 8, "head_dim": 64, "heads": 1, "kv_heads": 1},
 ///   "metrics": {"speedup_vs_dense": 2.1}
 /// }
 /// ```
@@ -117,6 +117,8 @@ pub fn bench_summary(
                 ("block", Json::from(bench.block)),
                 ("topk", Json::from(bench.topk)),
                 ("head_dim", Json::from(bench.head_dim)),
+                ("heads", Json::from(bench.heads)),
+                ("kv_heads", Json::from(bench.kv_heads)),
             ]),
         ),
         (
@@ -189,6 +191,8 @@ mod tests {
         assert_eq!(parsed.req("wall_s").unwrap().as_f64(), Some(1.25));
         let cfg = parsed.req("config").unwrap();
         assert_eq!(cfg.req("block").unwrap().as_usize(), Some(bench.block));
+        assert_eq!(cfg.req("heads").unwrap().as_usize(), Some(bench.heads));
+        assert_eq!(cfg.req("kv_heads").unwrap().as_usize(), Some(bench.kv_heads));
         let m = parsed.req("metrics").unwrap();
         assert_eq!(m.req("speedup_vs_dense").unwrap().as_f64(), Some(2.5));
     }

@@ -11,8 +11,8 @@ use std::path::PathBuf;
 use std::time::Instant;
 
 use crate::attention::backend::{self, AttentionBackend, BackendRegistry, ParityTolerance};
-use crate::attention::testutil::qkv;
-use crate::attention::MobaShape;
+use crate::attention::testutil::qkv_packed;
+use crate::attention::AttnShape;
 use crate::config::AppConfig;
 use crate::util::json::Json;
 use crate::util::pool::ExecCtx;
@@ -245,25 +245,43 @@ pub fn run_table_longbench(cfg: &AppConfig, runtime: &Runtime, scale: &str) -> R
 /// shared harness, plus a flash-vs-dense speed probe at a
 /// Figure-3-scale shape. Runs without artifacts. Returns the probe's
 /// speedup (the CI perf job's floor metric).
-pub fn run_table_parity(cfg: &AppConfig, quick: bool) -> Result<f64> {
+///
+/// The head layout comes from `cfg.bench.heads` / `cfg.bench.kv_heads`
+/// (1/1 = the single-head `parity` target; the `parity-gqa` target
+/// sets a GQA layout and re-runs the whole table through it).
+/// `results_name` is the bench target invoking the run — the rows blob
+/// is persisted as `<results>/<results_name>.json`, matching the
+/// target's `BENCH_<results_name>.json` summary regardless of the
+/// configured head layout.
+pub fn run_table_parity(cfg: &AppConfig, quick: bool, results_name: &str) -> Result<f64> {
     let ctx = ExecCtx::global();
     let registry = BackendRegistry::with_defaults();
     backend::check_grid_parity(&registry, &ParityTolerance::default())
         .map_err(|e| anyhow::anyhow!("backend parity violated: {e}"))?;
 
+    let (h, h_kv) = (cfg.bench.heads.max(1), cfg.bench.kv_heads.max(1));
     // the grid is re-run for measurement: the assertion harness above
     // keeps pairwise outputs, the table wants timings/workspace — the
-    // duplicated forward work is milliseconds at these shapes
-    let shapes = backend::parity_grid();
+    // duplicated forward work is milliseconds at these shapes. With a
+    // multi-head bench config the whole grid is mapped onto that head
+    // layout (the grid's own single-head rows already ran in the
+    // assertion above).
+    let shapes: Vec<AttnShape> = if h == 1 && h_kv == 1 {
+        backend::parity_grid()
+    } else {
+        backend::parity_grid().into_iter().map(|s| s.with_heads(h, h_kv)).collect()
+    };
     let rows = substrate_eval(ctx, &registry, &shapes, 0xA11CE);
     let mut t = Table::new(
         "Backend parity — registered backends vs the dense oracle (shape grid)",
-        &["backend", "N", "B", "k", "density", "max|Δ| vs dense", "ws MB", "fwd ms"],
+        &["backend", "H", "Hkv", "N", "B", "k", "density", "max|Δ| vs dense", "ws MB", "fwd ms"],
     );
     let mut blob = Vec::new();
     for r in &rows {
         t.row(vec![
             r.backend.clone(),
+            r.h.to_string(),
+            r.h_kv.to_string(),
             r.n.to_string(),
             r.block.to_string(),
             r.topk.to_string(),
@@ -274,6 +292,8 @@ pub fn run_table_parity(cfg: &AppConfig, quick: bool) -> Result<f64> {
         ]);
         blob.push(Json::obj(vec![
             ("backend", Json::from(r.backend.as_str())),
+            ("h", Json::from(r.h)),
+            ("h_kv", Json::from(r.h_kv)),
             ("n", Json::from(r.n)),
             ("block", Json::from(r.block)),
             ("topk", Json::from(r.topk)),
@@ -295,8 +315,8 @@ pub fn run_table_parity(cfg: &AppConfig, quick: bool) -> Result<f64> {
     // warmup pass and the best of several reps — one scheduling hiccup
     // on a shared runner must not flip the gate.
     let n = if quick { 8192 } else { 16384 };
-    let probe = MobaShape::new(n, cfg.bench.head_dim, cfg.bench.block, cfg.bench.topk);
-    let (q, k, v) = qkv(0xBEEF, probe.n, probe.d);
+    let probe = AttnShape::new(h, h_kv, n, cfg.bench.head_dim, cfg.bench.block, cfg.bench.topk);
+    let (q, k, v) = qkv_packed(0xBEEF, probe.h, probe.h_kv, probe.n, probe.d);
     let dense = registry.get("dense").expect("dense registered");
     let flash = registry.get("flash_moba").expect("flash_moba registered");
     let best_of = |b: &dyn AttentionBackend| -> f64 {
@@ -314,9 +334,12 @@ pub fn run_table_parity(cfg: &AppConfig, quick: bool) -> Result<f64> {
     let flash_s = best_of(flash);
     let speedup = dense_s / flash_s.max(1e-12);
     println!(
-        "speed probe at N={n} [B={}, k={}, {} threads]: dense {:.1} ms, flash_moba {:.1} ms -> {speedup:.2}x\n",
+        "speed probe at N={n} [B={}, k={}, h={}/{}, {} threads]: dense {:.1} ms, \
+         flash_moba {:.1} ms -> {speedup:.2}x\n",
         probe.block,
         probe.topk,
+        probe.h,
+        probe.h_kv,
         ctx.threads(),
         dense_s * 1e3,
         flash_s * 1e3
@@ -324,13 +347,15 @@ pub fn run_table_parity(cfg: &AppConfig, quick: bool) -> Result<f64> {
 
     report::save_json(
         &cfg.results_dir,
-        "parity",
+        results_name,
         &Json::obj(vec![
             ("rows", Json::arr(blob)),
             (
                 "speed_probe",
                 Json::obj(vec![
                     ("n", Json::from(probe.n)),
+                    ("h", Json::from(probe.h)),
+                    ("h_kv", Json::from(probe.h_kv)),
                     ("threads", Json::from(ctx.threads())),
                     ("dense_s", Json::from(dense_s)),
                     ("flash_moba_s", Json::from(flash_s)),

@@ -78,7 +78,8 @@ impl Default for EvalParams {
 
 #[derive(Debug, Clone)]
 pub struct ServeParams {
-    /// max single-head requests packed into one kernel execution
+    /// max requests packed into one batch (the PJRT path additionally
+    /// caps packing at the compiled kernels' head capacity)
     pub max_batch: usize,
     /// flush deadline for a partially filled batch
     pub max_wait_ms: u64,
@@ -88,11 +89,40 @@ pub struct ServeParams {
     /// serving kernels' B=128, k=8
     pub moba_block: usize,
     pub moba_topk: usize,
+    /// query heads of the serving model (the router's advertised head
+    /// layout; decode sessions default to it). Plumbed from the runtime
+    /// manifest via [`ServeParams::with_variant`]; mirrors the compiled
+    /// kernels' H=4.
+    pub n_heads: usize,
+    /// KV heads of the serving model (GQA: `n_heads % n_kv_heads == 0`)
+    pub n_kv_heads: usize,
 }
 
 impl Default for ServeParams {
     fn default() -> Self {
-        Self { max_batch: 4, max_wait_ms: 5, queue_capacity: 1024, moba_block: 128, moba_topk: 8 }
+        Self {
+            max_batch: 4,
+            max_wait_ms: 5,
+            queue_capacity: 1024,
+            moba_block: 128,
+            moba_topk: 8,
+            n_heads: 4,
+            n_kv_heads: 4,
+        }
+    }
+}
+
+impl ServeParams {
+    /// Adopt a manifest variant's attention geometry: head layout
+    /// (`n_heads` / `n_kv_heads` — the fields `runtime/manifest.rs`
+    /// parses) and MoBA routing config. This is the plumbing the
+    /// serving router reads its head layout from.
+    pub fn with_variant(mut self, v: &crate::runtime::VariantSpec) -> Self {
+        self.n_heads = v.n_heads.max(1);
+        self.n_kv_heads = v.n_kv_heads.max(1);
+        self.moba_block = v.moba_block.max(1);
+        self.moba_topk = v.moba_topk;
+        self
     }
 }
 
@@ -106,6 +136,10 @@ pub struct BenchParams {
     pub block: usize,
     pub topk: usize,
     pub head_dim: usize,
+    /// head layout for the substrate sweeps (1/1 = the single-head
+    /// figures; the `parity-gqa` bench target overrides to a GQA config)
+    pub heads: usize,
+    pub kv_heads: usize,
 }
 
 impl Default for BenchParams {
@@ -116,6 +150,8 @@ impl Default for BenchParams {
             block: 128,
             topk: 8,
             head_dim: 64,
+            heads: 1,
+            kv_heads: 1,
         }
     }
 }
@@ -175,6 +211,8 @@ impl AppConfig {
             ov_usize(s, "queue_capacity", &mut self.serve.queue_capacity);
             ov_usize(s, "moba_block", &mut self.serve.moba_block);
             ov_usize(s, "moba_topk", &mut self.serve.moba_topk);
+            ov_usize(s, "n_heads", &mut self.serve.n_heads);
+            ov_usize(s, "n_kv_heads", &mut self.serve.n_kv_heads);
         }
         if let Some(b) = j.get("bench") {
             ov_usize_vec(b, "fig3_lens", &mut self.bench.fig3_lens);
@@ -182,7 +220,17 @@ impl AppConfig {
             ov_usize(b, "block", &mut self.bench.block);
             ov_usize(b, "topk", &mut self.bench.topk);
             ov_usize(b, "head_dim", &mut self.bench.head_dim);
+            ov_usize(b, "heads", &mut self.bench.heads);
+            ov_usize(b, "kv_heads", &mut self.bench.kv_heads);
         }
+        // a zero head count is a config mistake, not a geometry: clamp
+        // once here so every bench target and the serving router see
+        // the same valid layout (non-multiple h/h_kv combinations are
+        // still rejected downstream with a real error)
+        self.bench.heads = self.bench.heads.max(1);
+        self.bench.kv_heads = self.bench.kv_heads.max(1);
+        self.serve.n_heads = self.serve.n_heads.max(1);
+        self.serve.n_kv_heads = self.serve.n_kv_heads.max(1);
     }
 
     pub fn load(path: Option<&Path>) -> Result<Self> {
@@ -231,6 +279,30 @@ mod tests {
         let mut c = AppConfig::default();
         c.apply(&j);
         assert_eq!(c.bench.fig3_lens, vec![128, 256]);
+    }
+
+    #[test]
+    fn head_layout_overrides() {
+        let j = Json::parse(
+            r#"{"serve": {"n_heads": 8, "n_kv_heads": 2}, "bench": {"heads": 4, "kv_heads": 2}}"#,
+        )
+        .unwrap();
+        let mut c = AppConfig::default();
+        c.apply(&j);
+        assert_eq!((c.serve.n_heads, c.serve.n_kv_heads), (8, 2));
+        assert_eq!((c.bench.heads, c.bench.kv_heads), (4, 2));
+        // defaults are single-head benches, H=4 serving (the kernels' H)
+        let d = AppConfig::default();
+        assert_eq!((d.bench.heads, d.bench.kv_heads), (1, 1));
+        assert_eq!((d.serve.n_heads, d.serve.n_kv_heads), (4, 4));
+        // zeros in the config are clamped once at apply time, so every
+        // consumer (fig3, parity, router) sees the same valid layout
+        let z = Json::parse(r#"{"serve": {"n_heads": 0}, "bench": {"heads": 0, "kv_heads": 0}}"#)
+            .unwrap();
+        let mut c = AppConfig::default();
+        c.apply(&z);
+        assert_eq!((c.bench.heads, c.bench.kv_heads), (1, 1));
+        assert_eq!(c.serve.n_heads, 1);
     }
 
     #[test]

@@ -3,14 +3,21 @@
 //! The paper's contribution is a kernel, so the coordinator is the thin
 //! but real serving stack a deployment needs (vLLM-router-shaped):
 //!
-//! * [`request`] — typed single-head attention requests/responses,
-//!   plus decode steps and the [`request::WorkItem`] the batcher queues.
+//! * [`request`] — typed attention requests/responses over packed
+//!   multi-head `(h, n, d)` / `(h_kv, n, d)` tensors, plus decode steps
+//!   and the [`request::WorkItem`] the batcher queues. One request is
+//!   one kernel launch: the substrate kernels iterate heads internally,
+//!   so the coordinator has no head loop.
 //! * [`router`] — routes a request to the smallest compiled artifact
-//!   that fits its sequence length (dense vs MoBA kernels).
-//! * [`batcher`] — dynamic batching: artifacts compute H=4 heads per
-//!   launch, so up to 4 single-head requests are packed per execution,
-//!   flushed on capacity or deadline (max-wait). Decode steps batch in
-//!   their own lanes, carrying O(d) payload per step.
+//!   that fits its sequence length (dense vs MoBA kernels); advertises
+//!   the serving model's head layout (`n_heads` / `n_kv_heads`, plumbed
+//!   from the manifest via `ServeParams::with_variant`).
+//! * [`batcher`] — dynamic batching: the compiled PJRT artifacts
+//!   compute H heads per launch, so up to H *single-head* requests are
+//!   packed per execution there; the CPU substrate batches whole
+//!   multi-head requests bounded only by `max_batch`. Flushed on
+//!   capacity or deadline (max-wait). Decode steps batch in their own
+//!   lanes, carrying O(h·d) payload per step.
 //! * [`metrics`] — counters + latency histogram (incl. session/decode
 //!   counters).
 //! * [`server`] — the event loop tying it together; in-process

@@ -25,11 +25,18 @@ impl AttnKind {
     }
 }
 
-/// One single-head attention request: q/k/v of shape (n, d) flattened.
+/// One attention request over packed multi-head tensors: `q` is
+/// `(h, n, d)` flattened, `k`/`v` are `(h_kv, n, d)` flattened (GQA:
+/// `h % h_kv == 0`; `h = h_kv = 1` is the single-head case). One
+/// request is one kernel launch — the server never loops heads.
 #[derive(Debug, Clone)]
 pub struct AttnRequest {
     pub id: u64,
     pub kind: AttnKind,
+    /// query heads
+    pub h: usize,
+    /// KV heads
+    pub h_kv: usize,
     pub n: usize,
     pub d: usize,
     pub q: Vec<f32>,
@@ -38,22 +45,35 @@ pub struct AttnRequest {
 }
 
 impl AttnRequest {
-    pub fn validate(&self) -> bool {
-        let e = self.n * self.d;
-        self.q.len() == e && self.k.len() == e && self.v.len() == e && self.n > 0
+    /// The single-head constructor most callers want.
+    #[allow(clippy::too_many_arguments)]
+    pub fn single(id: u64, kind: AttnKind, n: usize, d: usize, q: Vec<f32>, k: Vec<f32>, v: Vec<f32>) -> Self {
+        Self { id, kind, h: 1, h_kv: 1, n, d, q, k, v }
     }
 
-    /// Tensor payload bytes this request carries: O(n·d).
+    pub fn validate(&self) -> bool {
+        self.h >= 1
+            && self.h_kv >= 1
+            && self.h % self.h_kv == 0
+            && self.n > 0
+            && self.d > 0
+            && self.q.len() == self.h * self.n * self.d
+            && self.k.len() == self.h_kv * self.n * self.d
+            && self.v.len() == self.h_kv * self.n * self.d
+    }
+
+    /// Tensor payload bytes this request carries: O((h + 2·h_kv)·n·d).
     pub fn payload_bytes(&self) -> u64 {
         (self.q.len() + self.k.len() + self.v.len()) as u64 * 4
     }
 }
 
-/// One autoregressive decode step for an open session: append (k, v)
-/// to the session's KV cache, then attend `q` over it. Carries only
-/// the new token's three d-length rows — the cached context stays in
-/// the worker's session table, so queueing a step moves O(d) bytes
-/// regardless of how long the session's context already is (the
+/// One autoregressive decode step for an open session: append the
+/// packed `(h_kv, d)` (k, v) rows to the session's KV cache, then
+/// attend the packed `(h, d)` query over it — all heads in one step.
+/// Carries only the new token's rows — the cached context stays in the
+/// worker's session table, so queueing a step moves O((h + 2·h_kv)·d)
+/// bytes regardless of how long the session's context already is (the
 /// regression suite pins this via [`WorkItem::payload_bytes`]).
 #[derive(Debug, Clone)]
 pub struct DecodeStep {
@@ -67,13 +87,19 @@ pub struct DecodeStep {
 }
 
 impl DecodeStep {
-    /// All three rows present and of the session's head dim.
-    pub fn validate(&self, d: usize) -> bool {
-        d > 0 && self.q.len() == d && self.k.len() == d && self.v.len() == d
+    /// All rows present and matching the session's head layout: q is
+    /// `(h, d)`, k/v are `(h_kv, d)`.
+    pub fn validate(&self, h: usize, h_kv: usize, d: usize) -> bool {
+        d > 0
+            && h >= 1
+            && h_kv >= 1
+            && self.q.len() == h * d
+            && self.k.len() == h_kv * d
+            && self.v.len() == h_kv * d
     }
 
-    /// Tensor payload bytes this step carries: O(d), the invariant the
-    /// no-copy regression tests pin.
+    /// Tensor payload bytes this step carries: O((h + 2·h_kv)·d), the
+    /// invariant the no-copy regression tests pin.
     pub fn payload_bytes(&self) -> u64 {
         (self.q.len() + self.k.len() + self.v.len()) as u64 * 4
     }
@@ -96,8 +122,8 @@ impl WorkItem {
     }
 
     /// Bytes of tensor payload this item moves through the queue
-    /// (StageStats-style accounting): O(n·d) for prefill, O(d) for a
-    /// decode step.
+    /// (StageStats-style accounting): O(h·n·d) for prefill, O(h·d) for
+    /// a decode step.
     pub fn payload_bytes(&self) -> u64 {
         match self {
             WorkItem::Prefill(r) => r.payload_bytes(),
@@ -122,8 +148,10 @@ impl From<DecodeStep> for WorkItem {
 #[derive(Debug, Clone)]
 pub struct AttnResponse {
     pub id: u64,
+    /// packed (h, n, d) output for prefill, packed (h, d) row for decode
     pub o: Vec<f32>,
-    /// sequence length of the kernel actually used (>= request n)
+    /// sequence length of the kernel actually used (>= request n);
+    /// context length after the append for decode steps
     pub served_n: usize,
     /// how many requests shared the kernel launch
     pub batch_occupancy: usize,
@@ -149,18 +177,38 @@ mod tests {
 
     #[test]
     fn validate_checks_lengths() {
-        let ok = AttnRequest {
-            id: 1,
-            kind: AttnKind::Moba,
-            n: 4,
-            d: 2,
-            q: vec![0.0; 8],
-            k: vec![0.0; 8],
-            v: vec![0.0; 8],
-        };
+        let ok = AttnRequest::single(1, AttnKind::Moba, 4, 2, vec![0.0; 8], vec![0.0; 8], vec![0.0; 8]);
         assert!(ok.validate());
         let bad = AttnRequest { v: vec![0.0; 7], ..ok.clone() };
         assert!(!bad.validate());
+        // a zero head dim is rejected even though all lengths "match"
+        let zero_d = AttnRequest::single(2, AttnKind::Dense, 8, 0, vec![], vec![], vec![]);
+        assert!(!zero_d.validate());
+    }
+
+    #[test]
+    fn validate_checks_gqa_head_layout() {
+        let (n, d) = (4, 2);
+        let gqa = AttnRequest {
+            id: 1,
+            kind: AttnKind::Moba,
+            h: 4,
+            h_kv: 2,
+            n,
+            d,
+            q: vec![0.0; 4 * n * d],
+            k: vec![0.0; 2 * n * d],
+            v: vec![0.0; 2 * n * d],
+        };
+        assert!(gqa.validate());
+        // k/v sized for h instead of h_kv
+        let bad_kv = AttnRequest { k: vec![0.0; 4 * n * d], ..gqa.clone() };
+        assert!(!bad_kv.validate());
+        // ragged groups
+        let bad_groups = AttnRequest { h: 3, q: vec![0.0; 3 * n * d], ..gqa.clone() };
+        assert!(!bad_groups.validate());
+        let no_heads = AttnRequest { h: 0, h_kv: 0, q: vec![], k: vec![], v: vec![] , ..gqa.clone() };
+        assert!(!no_heads.validate());
     }
 
     #[test]
@@ -178,35 +226,50 @@ mod tests {
             k: vec![0.0; 4],
             v: vec![0.0; 4],
         };
-        assert!(step.validate(4));
-        assert!(!step.validate(8));
-        assert!(!step.validate(0));
+        assert!(step.validate(1, 1, 4));
+        assert!(!step.validate(1, 1, 8));
+        assert!(!step.validate(1, 1, 0));
         let short = DecodeStep { k: vec![0.0; 3], ..step.clone() };
-        assert!(!short.validate(4));
+        assert!(!short.validate(1, 1, 4));
+        // GQA step: q carries h rows, k/v carry h_kv rows
+        let d = 4;
+        let gqa = DecodeStep {
+            id: 2,
+            session: 7,
+            q: vec![0.0; 4 * d],
+            k: vec![0.0; 2 * d],
+            v: vec![0.0; 2 * d],
+        };
+        assert!(gqa.validate(4, 2, d));
+        assert!(!gqa.validate(4, 4, d));
+        assert!(!gqa.validate(2, 2, d));
     }
 
     #[test]
     fn work_item_payload_is_o_d_for_decode() {
         let n = 1024;
         let d = 64;
+        let (h, h_kv) = (4, 2);
         let prefill = WorkItem::from(AttnRequest {
             id: 1,
             kind: AttnKind::Moba,
+            h,
+            h_kv,
             n,
             d,
-            q: vec![0.0; n * d],
-            k: vec![0.0; n * d],
-            v: vec![0.0; n * d],
+            q: vec![0.0; h * n * d],
+            k: vec![0.0; h_kv * n * d],
+            v: vec![0.0; h_kv * n * d],
         });
         let decode = WorkItem::from(DecodeStep {
             id: 2,
             session: 1,
-            q: vec![0.0; d],
-            k: vec![0.0; d],
-            v: vec![0.0; d],
+            q: vec![0.0; h * d],
+            k: vec![0.0; h_kv * d],
+            v: vec![0.0; h_kv * d],
         });
-        assert_eq!(prefill.payload_bytes(), (3 * n * d * 4) as u64);
-        assert_eq!(decode.payload_bytes(), (3 * d * 4) as u64);
+        assert_eq!(prefill.payload_bytes(), ((h + 2 * h_kv) * n * d * 4) as u64);
+        assert_eq!(decode.payload_bytes(), ((h + 2 * h_kv) * d * 4) as u64);
         assert_eq!(prefill.id(), 1);
         assert_eq!(decode.id(), 2);
     }

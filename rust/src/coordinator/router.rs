@@ -3,11 +3,15 @@
 //!
 //! * **Artifact routes** ([`Router::from_manifest`]) — the smallest
 //!   compiled `attn_{kind}_n{N}` PJRT kernel that fits; requests longer
-//!   than every compiled kernel are rejected up front.
+//!   than every compiled kernel are rejected up front. The head layout
+//!   (`heads` / `kv_heads`) is read off the kernels' input signatures.
 //! * **CPU-substrate routes** ([`Router::from_backends`]) — targets name
 //!   registered [`crate::attention::backend::AttentionBackend`]s instead
 //!   of artifacts, so the coordinator serves through the trait when no
-//!   artifacts exist.
+//!   artifacts exist. The head layout comes from
+//!   [`ServeParams::n_heads`] / [`ServeParams::n_kv_heads`] — plumbed
+//!   from the runtime manifest's variant config
+//!   ([`ServeParams::with_variant`]), NOT faked from the batch size.
 
 use std::collections::HashMap;
 
@@ -30,9 +34,13 @@ pub const CPU_SUBSTRATE_MAX_N: usize = 1 << 22;
 pub struct Router {
     /// kind -> sorted (n, target name)
     table: HashMap<AttnKind, Vec<(usize, String)>>,
-    /// heads packed per kernel launch (manifest input shapes); on the
-    /// CPU substrate, the batch pack limit
+    /// query heads of the serving model: the packed-kernel head
+    /// dimension on PJRT (manifest input shapes), the manifest
+    /// variant's `n_heads` on the CPU substrate
     pub heads: usize,
+    /// KV heads of the serving model (GQA; == `heads` when the model
+    /// has no grouped KV)
+    pub kv_heads: usize,
     /// head dim the serving kernels compute (manifest input shapes);
     /// 0 on the CPU substrate, which serves any d
     pub head_dim: usize,
@@ -44,15 +52,22 @@ impl Router {
     pub fn from_manifest(m: &Manifest) -> Result<Self> {
         let mut table: HashMap<AttnKind, Vec<(usize, String)>> = HashMap::new();
         let mut heads = 0usize;
+        let mut kv_heads = 0usize;
         let mut head_dim = 0usize;
         for (name, spec) in &m.artifacts {
             for kind in [AttnKind::Dense, AttnKind::Moba] {
                 if let Some(rest) = name.strip_prefix(kind.artifact_prefix()) {
                     if let Ok(n) = rest.parse::<usize>() {
                         table.entry(kind).or_default().push((n, name.clone()));
-                        // shapes are (h, n, d)
+                        // q input is (h, n, d); k (input 1, when
+                        // present) is (h_kv, n, d)
                         heads = spec.inputs[0].shape[0];
                         head_dim = spec.inputs[0].shape[2];
+                        kv_heads = spec
+                            .inputs
+                            .get(1)
+                            .map(|k| k.shape[0])
+                            .unwrap_or(heads);
                     }
                 }
             }
@@ -63,14 +78,29 @@ impl Router {
         if table.is_empty() {
             return Err(anyhow!("no attn_* artifacts in manifest"));
         }
-        Ok(Self { table, heads, head_dim, cpu_substrate: false })
+        // The PJRT packer fills the kernels' head dimension with
+        // INDEPENDENT single-head requests — only expressible when the
+        // kernel's query and KV head counts coincide (each packed slot
+        // owns its K/V). A grouped-KV kernel would force unrelated
+        // requests to share KV slots, so it is rejected up front rather
+        // than failing every batch at execution time.
+        if kv_heads != heads {
+            return Err(anyhow!(
+                "attn_* artifacts have a grouped head layout (h={heads}, h_kv={kv_heads}): \
+                 compiled GQA kernels cannot pack independent single-head requests; \
+                 serve GQA requests on the CPU substrate instead"
+            ));
+        }
+        Ok(Self { table, heads, kv_heads, head_dim, cpu_substrate: false })
     }
 
     /// Build CPU-substrate routes over a backend registry: dense
     /// requests hit the exact backend, MoBA requests the sparse
-    /// flagship. Per-request geometry fallback (a length that does not
-    /// divide into blocks) is the server's job via the backends'
-    /// supported-config predicate.
+    /// flagship. Per-request geometry fallback (an unsupported head
+    /// layout or routing config) is the server's job via the backends'
+    /// supported-config predicate. The advertised head layout comes
+    /// from `serve.n_heads` / `serve.n_kv_heads` (see
+    /// [`ServeParams::with_variant`] for manifest plumbing).
     pub fn from_backends(registry: &BackendRegistry, serve: &ServeParams) -> Result<Self> {
         let dense = registry
             .get("dense")
@@ -79,16 +109,36 @@ impl Router {
             .get("flash_moba")
             .or_else(|| registry.get("moba_naive"))
             .ok_or_else(|| anyhow!("no MoBA backend registered"))?;
+        if serve.n_heads == 0 || serve.n_kv_heads == 0 || serve.n_heads % serve.n_kv_heads != 0 {
+            return Err(anyhow!(
+                "invalid serving head layout: n_heads={} n_kv_heads={} \
+                 (need n_heads a positive multiple of n_kv_heads)",
+                serve.n_heads,
+                serve.n_kv_heads
+            ));
+        }
         let mut table: HashMap<AttnKind, Vec<(usize, String)>> = HashMap::new();
         table.insert(AttnKind::Dense, vec![(CPU_SUBSTRATE_MAX_N, dense.name().to_string())]);
         table.insert(AttnKind::Moba, vec![(CPU_SUBSTRATE_MAX_N, moba.name().to_string())]);
         Ok(Self {
             table,
-            // no H-head kernel packing constraint on the substrate
-            heads: serve.max_batch.max(1),
+            heads: serve.n_heads,
+            kv_heads: serve.n_kv_heads,
             head_dim: 0, // any d is served
             cpu_substrate: true,
         })
+    }
+
+    /// How many requests one kernel launch can pack: the compiled
+    /// kernels pack up to `heads` single-head requests per execution;
+    /// the CPU substrate runs each (multi-head) request as its own
+    /// launch, so batching there is bounded only by `max_batch`.
+    pub fn pack_limit(&self) -> usize {
+        if self.cpu_substrate {
+            usize::MAX
+        } else {
+            self.heads.max(1)
+        }
     }
 
     /// Smallest artifact with kernel n >= request n.
@@ -111,16 +161,16 @@ impl Router {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::Manifest;
+    use crate::runtime::{Manifest, VariantSpec};
 
     fn manifest() -> Manifest {
         Manifest::parse(
             r#"{
           "version": 1, "variants": {},
           "artifacts": {
-            "attn_moba_n1024": {"file": "a", "inputs": [{"name":"q","shape":[4,1024,64],"dtype":"float32"}], "outputs": []},
-            "attn_moba_n4096": {"file": "b", "inputs": [{"name":"q","shape":[4,4096,64],"dtype":"float32"}], "outputs": []},
-            "attn_dense_n1024": {"file": "c", "inputs": [{"name":"q","shape":[4,1024,64],"dtype":"float32"}], "outputs": []},
+            "attn_moba_n1024": {"file": "a", "inputs": [{"name":"q","shape":[4,1024,64],"dtype":"float32"}, {"name":"k","shape":[4,1024,64],"dtype":"float32"}], "outputs": []},
+            "attn_moba_n4096": {"file": "b", "inputs": [{"name":"q","shape":[4,4096,64],"dtype":"float32"}, {"name":"k","shape":[4,4096,64],"dtype":"float32"}], "outputs": []},
+            "attn_dense_n1024": {"file": "c", "inputs": [{"name":"q","shape":[4,1024,64],"dtype":"float32"}, {"name":"k","shape":[4,1024,64],"dtype":"float32"}], "outputs": []},
             "other_thing": {"file": "d", "inputs": [{"name":"x","shape":[1],"dtype":"float32"}], "outputs": []}
           }
         }"#,
@@ -136,7 +186,28 @@ mod tests {
         assert_eq!(r.route(AttnKind::Moba, 1025).unwrap().0, 4096);
         assert!(r.route(AttnKind::Moba, 8192).is_err());
         assert_eq!(r.heads, 4);
+        assert_eq!(r.kv_heads, 4); // read off the k input's shape
         assert_eq!(r.head_dim, 64);
+        assert_eq!(r.pack_limit(), 4);
+    }
+
+    /// Compiled kernels with grouped KV cannot pack independent
+    /// single-head requests — from_manifest must refuse them up front
+    /// instead of letting every batch fail at execution time (the
+    /// PJRT packer builds all three tensors at the query head count).
+    #[test]
+    fn gqa_artifacts_are_rejected_up_front() {
+        let m = Manifest::parse(
+            r#"{
+          "version": 1, "variants": {},
+          "artifacts": {
+            "attn_moba_n1024": {"file": "a", "inputs": [{"name":"q","shape":[4,1024,64],"dtype":"float32"}, {"name":"k","shape":[2,1024,64],"dtype":"float32"}], "outputs": []}
+          }
+        }"#,
+        )
+        .unwrap();
+        let err = Router::from_manifest(&m).unwrap_err().to_string();
+        assert!(err.contains("grouped head layout"), "{err}");
     }
 
     #[test]
@@ -154,12 +225,49 @@ mod tests {
         let serve = ServeParams::default();
         let r = Router::from_backends(&reg, &serve).unwrap();
         assert!(r.cpu_substrate);
-        assert_eq!(r.heads, serve.max_batch);
         assert_eq!(r.route(AttnKind::Dense, 700).unwrap().1, "dense");
         assert_eq!(r.route(AttnKind::Moba, 1024).unwrap().1, "flash_moba");
         // bounded, but far beyond any compiled kernel
         assert!(r.route(AttnKind::Moba, 8192).is_ok());
         assert!(r.route(AttnKind::Moba, CPU_SUBSTRATE_MAX_N + 1).is_err());
+        // the substrate packs whole multi-head requests, never heads
+        assert_eq!(r.pack_limit(), usize::MAX);
+    }
+
+    /// Regression for the `heads: serve.max_batch.max(1)` placeholder:
+    /// the advertised head layout must come from the serving config's
+    /// n_heads / n_kv_heads — changing max_batch must not change it.
+    #[test]
+    fn backend_routes_take_heads_from_serve_params_not_max_batch() {
+        let reg = BackendRegistry::with_defaults();
+        let serve = ServeParams { n_heads: 8, n_kv_heads: 2, max_batch: 3, ..Default::default() };
+        let r = Router::from_backends(&reg, &serve).unwrap();
+        assert_eq!(r.heads, 8);
+        assert_eq!(r.kv_heads, 2);
+        let bigger_batch = ServeParams { max_batch: 64, ..serve.clone() };
+        let r2 = Router::from_backends(&reg, &bigger_batch).unwrap();
+        assert_eq!((r2.heads, r2.kv_heads), (8, 2), "max_batch leaked into the head layout");
+        // invalid layouts are rejected up front
+        let bad = ServeParams { n_heads: 3, n_kv_heads: 2, ..ServeParams::default() };
+        assert!(Router::from_backends(&reg, &bad).is_err());
+    }
+
+    /// The manifest variant -> ServeParams -> Router plumbing: a
+    /// variant's n_heads / n_kv_heads (and MoBA geometry) land on the
+    /// router unchanged.
+    #[test]
+    fn variant_head_layout_plumbs_through_serve_params() {
+        let mut spec = VariantSpec::test_stub("t", vec![("a", vec![2, 2])]);
+        spec.n_heads = 8;
+        spec.n_kv_heads = 4;
+        spec.moba_block = 64;
+        spec.moba_topk = 3;
+        let serve = ServeParams::default().with_variant(&spec);
+        assert_eq!((serve.n_heads, serve.n_kv_heads), (8, 4));
+        assert_eq!((serve.moba_block, serve.moba_topk), (64, 3));
+        let reg = BackendRegistry::with_defaults();
+        let r = Router::from_backends(&reg, &serve).unwrap();
+        assert_eq!((r.heads, r.kv_heads), (8, 4));
     }
 
     #[test]

@@ -9,36 +9,42 @@
 //!
 //! Two request families share the loop:
 //!
-//! * **Prefill** — one-shot attention over a full (n, d) problem, as
-//!   before.
+//! * **Prefill** — one-shot attention over a full packed `(h, n, d)` /
+//!   `(h_kv, n, d)` problem. One request is ONE kernel launch covering
+//!   every head — the kernels iterate heads internally, so the server
+//!   has no head loop.
 //! * **Decode** — autoregressive sessions: `session_create` opens a
-//!   per-session block KV cache in the worker
+//!   per-session block KV cache (one store per KV head) in the worker
 //!   ([`crate::attention::decode::DecodeSession`]), each
-//!   [`Coordinator::decode`] step ships only the new token's three
-//!   d-length rows through a dedicated batcher lane (the cached context
-//!   never travels through the queue), and `session_free` drops the
-//!   cache. Steps for one session execute in submission order (FIFO
-//!   within the lane).
+//!   [`Coordinator::decode`] step ships only the new token's packed
+//!   `(h, d)` / `(h_kv, d)` rows through a dedicated batcher lane (the
+//!   cached context never travels through the queue), and `session_free`
+//!   drops the cache. Steps for one session execute in submission order
+//!   (FIFO within the lane).
 //!
 //! Two execution paths behind one loop:
 //!
-//! * **PJRT** — compiled `attn_*` artifacts; up to H single-head
-//!   requests packed per launch. Requests shorter than the kernel's
-//!   capacity are zero-padded *at the tail*. Because MoBA routing only
-//!   scores strictly-past blocks and the own block is causally masked,
-//!   tail padding can never influence rows `< n` — the served output is
-//!   exactly the n-length computation (asserted by integration tests).
-//!   The compiled kernels are prefill-only, so `session_create` is
-//!   rejected on this path.
+//! * **PJRT** — compiled `attn_*` artifacts; the kernels compute a
+//!   fixed (H, N, d) problem, so up to H *single-head* requests are
+//!   packed per launch (multi-head requests are rejected on this path —
+//!   the compiled head dimension is the packing axis). Requests shorter
+//!   than the kernel's capacity are zero-padded *at the tail*. Because
+//!   MoBA routing only scores strictly-past blocks and the own block is
+//!   causally masked, tail padding can never influence rows `< n` — the
+//!   served output is exactly the n-length computation (asserted by
+//!   integration tests). The compiled kernels are prefill-only, so
+//!   `session_create` is rejected on this path.
 //! * **CPU substrate** — when no artifacts (or no PJRT bindings) are
 //!   available, requests dispatch through the
 //!   [`crate::attention::backend::AttentionBackend`] registry: MoBA
 //!   requests run FlashMoBA, anything the sparse backend's
 //!   supported-config predicate rejects falls back to the exact dense
-//!   backend. No padding; `served_n == n`. Decode sessions live here:
-//!   MoBA sessions route each step over cached block centroids
-//!   (`ServeParams.moba_block` / `moba_topk` geometry), dense sessions
-//!   use the exact fallback over the whole cache.
+//!   backend. No padding; `served_n == n`; any head layout with
+//!   `h % h_kv == 0` is served, ragged lengths included (the tail block
+//!   is always-attended, never routed). Decode sessions live here: MoBA
+//!   sessions route each query head over its KV head's cached block
+//!   centroids (`ServeParams.moba_block` / `moba_topk` geometry), dense
+//!   sessions use the exact fallback over the whole cache.
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -59,7 +65,7 @@ use super::router::Router;
 use crate::attention::backend::AttentionBackend;
 use crate::attention::backend::BackendRegistry;
 use crate::attention::decode::DecodeSession;
-use crate::attention::MobaShape;
+use crate::attention::AttnShape;
 use crate::config::ServeParams;
 use crate::runtime::{Runtime, Tensor};
 use crate::util::pool::ExecCtx;
@@ -76,6 +82,8 @@ enum Exec {
 /// Decode-session parameters fixed at creation time.
 struct SessionSpec {
     kind: AttnKind,
+    h: usize,
+    h_kv: usize,
     d: usize,
 }
 
@@ -121,7 +129,14 @@ impl Coordinator {
     ///
     /// When the runtime cannot load (no artifacts, or a build without
     /// PJRT bindings) the coordinator serves on the CPU attention
-    /// substrate instead of failing.
+    /// substrate instead of failing. On that path the router's
+    /// advertised head layout comes from `params.n_heads` /
+    /// `params.n_kv_heads` — callers serving a specific manifest
+    /// variant should build `params` with
+    /// [`ServeParams::with_variant`](crate::config::ServeParams::with_variant)
+    /// so the variant's head layout and MoBA geometry travel with it
+    /// (the coordinator cannot do this itself: the substrate path is
+    /// taken exactly when no manifest could be loaded).
     pub fn start(artifacts_dir: impl Into<PathBuf>, params: ServeParams) -> Result<Self> {
         let dir = artifacts_dir.into();
         let metrics = Arc::new(Metrics::new());
@@ -197,25 +212,34 @@ impl Coordinator {
         self.submit_async(req)?.wait()
     }
 
-    /// Open a decode session of head dim `d`. MoBA sessions route with
-    /// the `ServeParams` geometry (`moba_block` / `moba_topk`); dense
-    /// sessions decode exactly over the whole cache. Returns the
-    /// session handle for [`Coordinator::decode`] / `session_free`.
-    pub fn session_create(&self, kind: AttnKind, d: usize) -> Result<u64> {
+    /// Open a decode session with `h` query heads, `h_kv` KV heads and
+    /// head dim `d`. MoBA sessions route with the `ServeParams` geometry
+    /// (`moba_block` / `moba_topk`); dense sessions decode exactly over
+    /// the whole cache. Returns the session handle for
+    /// [`Coordinator::decode`] / `session_free`.
+    pub fn session_create(&self, kind: AttnKind, h: usize, h_kv: usize, d: usize) -> Result<u64> {
         if d == 0 {
             return Err(anyhow!("decode session needs d > 0"));
         }
+        if h == 0 || h_kv == 0 || h % h_kv != 0 {
+            return Err(anyhow!(
+                "decode session needs h a positive multiple of h_kv (got h={h}, h_kv={h_kv})"
+            ));
+        }
         let (otx, orx) = sync_channel(1);
         self.tx
-            .send(Envelope::SessionCreate(SessionSpec { kind, d }, otx))
+            .send(Envelope::SessionCreate(SessionSpec { kind, h, h_kv, d }, otx))
             .map_err(|_| anyhow!("coordinator is down"))?;
         orx.recv().map_err(|_| anyhow!("coordinator dropped the request"))?
     }
 
-    /// Submit one decode step without blocking: append (k, v) to the
-    /// session's cache, attend q over it. Steps for one session execute
-    /// in submission order; the response's `o` is the (d,) output row
-    /// and `served_n` the session's context length after the append.
+    /// Submit one decode step without blocking: append the packed
+    /// `(h_kv, d)` (k, v) rows to the session's cache, attend the
+    /// packed `(h, d)` q over it — every head in one step. Steps for
+    /// one session execute in submission order; the response's `o` is
+    /// the packed `(h, d)` output row and `served_n` the session's
+    /// context length after the append. Row widths are validated
+    /// against the session's head layout in the worker.
     pub fn decode_async(
         &self,
         session: u64,
@@ -225,8 +249,10 @@ impl Coordinator {
     ) -> Result<Ticket> {
         let id = self.next_decode_id.fetch_add(1, Ordering::Relaxed);
         let step = DecodeStep { id, session, q, k, v };
-        if step.q.is_empty() || step.k.len() != step.q.len() || step.v.len() != step.q.len() {
-            return Err(anyhow!("decode step {id}: q/k/v must be equal-length, non-empty rows"));
+        if step.q.is_empty() || step.k.is_empty() || step.k.len() != step.v.len() {
+            return Err(anyhow!(
+                "decode step {id}: q and k must be non-empty and k/v equal-length"
+            ));
         }
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
         let (otx, orx) = sync_channel(1);
@@ -236,7 +262,7 @@ impl Coordinator {
         Ok(Ticket(orx))
     }
 
-    /// Submit one decode step and block for the output row.
+    /// Submit one decode step and block for the packed output row.
     pub fn decode(
         &self,
         session: u64,
@@ -288,8 +314,10 @@ fn worker_loop(
     metrics: Arc<Metrics>,
 ) {
     let max_wait = Duration::from_millis(params.max_wait_ms);
+    // batching: bounded by max_batch, and on the PJRT path additionally
+    // by the compiled kernels' head-packing capacity
     let mut batcher =
-        Batcher::new(params.max_batch.min(router.heads), max_wait, params.queue_capacity);
+        Batcher::new(params.max_batch.min(router.pack_limit()).max(1), max_wait, params.queue_capacity);
     let mut pending: Pending = Vec::new();
     let mut sessions: Sessions = HashMap::new();
     let mut next_session: u64 = 1;
@@ -322,10 +350,20 @@ fn worker_loop(
         let mut shutdown = false;
         match msg {
             Some(Envelope::Req(req, otx)) => {
-                // PJRT kernels compute a fixed head dim; a mismatched
-                // request must be rejected here, not panic the packer.
-                // (The CPU substrate serves any d.)
-                if !router.cpu_substrate && req.d != router.head_dim {
+                // PJRT kernels compute a fixed (H, N, d): the head
+                // dimension is the request-packing axis, so only
+                // single-head requests with the kernel head dim are
+                // accepted there. (The CPU substrate serves any layout.)
+                if !router.cpu_substrate && (req.h != 1 || req.h_kv != 1) {
+                    metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                    let _ = otx.send(Err(anyhow!(
+                        "request {} has h={} h_kv={}: the compiled kernels pack \
+                         single-head requests along their head dimension",
+                        req.id,
+                        req.h,
+                        req.h_kv
+                    )));
+                } else if !router.cpu_substrate && req.d != router.head_dim {
                     metrics.rejected.fetch_add(1, Ordering::Relaxed);
                     let _ = otx.send(Err(anyhow!(
                         "request {} has d={}, serving kernels compute d={}",
@@ -357,11 +395,14 @@ fn worker_loop(
                         metrics.rejected.fetch_add(1, Ordering::Relaxed);
                         let _ = otx.send(Err(anyhow!("decode step for unknown session {sid}")));
                     }
-                    Some((_, sess)) if !step.validate(sess.d()) => {
+                    Some((_, sess)) if !step.validate(sess.h(), sess.h_kv(), sess.d()) => {
                         metrics.rejected.fetch_add(1, Ordering::Relaxed);
                         let _ = otx.send(Err(anyhow!(
-                            "decode step {}: rows must have the session head dim d={}",
+                            "decode step {}: rows must match the session head layout \
+                             h={} h_kv={} d={}",
                             step.id,
+                            sess.h(),
+                            sess.h_kv(),
                             sess.d()
                         )));
                     }
@@ -392,7 +433,7 @@ fn worker_loop(
                             // size only shapes cache bookkeeping
                             AttnKind::Dense => (params.moba_block.max(1), 0),
                         };
-                        let sess = DecodeSession::new(spec.d, block, topk);
+                        let sess = DecodeSession::new(spec.h, spec.h_kv, spec.d, block, topk);
                         sessions.insert(id, (target.to_string(), sess));
                         metrics.sessions_created.fetch_add(1, Ordering::Relaxed);
                         id
@@ -461,9 +502,11 @@ fn run_batch(
 }
 
 /// Execute a batch on the CPU attention substrate: prefill requests run
-/// at their native length through the [`BackendRegistry`] (no padding),
-/// decode steps append to their session's cache and attend over it —
-/// so batching amortizes queueing rather than kernel launches.
+/// at their native length and head layout through the
+/// [`BackendRegistry`] (no padding, no head loop — one launch per
+/// request covers all heads), decode steps append to their session's
+/// cache and attend over it — so batching amortizes queueing rather
+/// than kernel launches.
 ///
 /// Prefill items fan out across the worker pool (each item on one
 /// worker, running the serial kernel path) instead of queueing behind
@@ -570,9 +613,10 @@ fn run_batch_cpu(
     }
 }
 
-/// One decode step: append the token to its session's cache, then run
-/// the session backend's incremental path. Returns (output row, context
-/// length after the append).
+/// One decode step: append the token's packed rows to its session's
+/// cache, then run the session backend's incremental path — one call
+/// covering every query head. Returns (packed (h, d) output row,
+/// context length after the append).
 fn run_cpu_decode(
     registry: &BackendRegistry,
     ctx: &ExecCtx,
@@ -609,7 +653,14 @@ fn run_cpu_request(
         .ok_or_else(|| anyhow!("no dense backend registered"))?;
     let (backend, shape) = match req.kind {
         AttnKind::Moba => {
-            match MobaShape::try_new(req.n, req.d, params.moba_block, params.moba_topk) {
+            match AttnShape::try_new(
+                req.h,
+                req.h_kv,
+                req.n,
+                req.d,
+                params.moba_block,
+                params.moba_topk,
+            ) {
                 Some(shape) => {
                     let b = registry.get(routed).unwrap_or(dense);
                     if b.supports(&shape) {
@@ -629,13 +680,14 @@ fn run_cpu_request(
 
 /// A single-block geometry valid for any n; exact backends ignore the
 /// routing fields.
-fn dense_shape(req: &AttnRequest) -> MobaShape {
-    MobaShape { n: req.n, d: req.d, block: req.n, topk: 0 }
+fn dense_shape(req: &AttnRequest) -> AttnShape {
+    AttnShape { h: req.h, h_kv: req.h_kv, n: req.n, d: req.d, block: req.n, topk: 0 }
 }
 
-/// Pack requests into the (H, N, d) kernel, execute, unpack, respond.
-/// Decode steps cannot reach this path (sessions are rejected at
-/// creation on PJRT), but are answered with an error defensively.
+/// Pack single-head requests into the (H, N, d) kernel, execute,
+/// unpack, respond. Decode steps cannot reach this path (sessions are
+/// rejected at creation on PJRT), but are answered with an error
+/// defensively.
 fn run_batch_pjrt(
     runtime: &Runtime,
     router: &Router,

@@ -15,9 +15,9 @@ use anyhow::anyhow;
 
 use super::logits::{nll_from_logits, score_sample};
 use crate::attention::backend::{AttentionBackend, BackendRegistry};
-use crate::attention::dense::naive_attention;
-use crate::attention::testutil::{max_abs_diff, qkv};
-use crate::attention::MobaShape;
+use crate::attention::dense::naive_attention_packed;
+use crate::attention::testutil::{max_abs_diff, qkv_packed};
+use crate::attention::{packed_rows, AttnShape};
 use crate::util::pool::ExecCtx;
 use crate::data::{corpus::Corpus, longbench, niah, niah::NiahVariant, vocabulary::Vocab};
 use crate::runtime::{Executable, ParamStore, Runtime, Tensor, VariantSpec};
@@ -27,6 +27,8 @@ use crate::Result;
 #[derive(Debug, Clone)]
 pub struct SubstrateRow {
     pub backend: String,
+    pub h: usize,
+    pub h_kv: usize,
     pub n: usize,
     pub block: usize,
     pub topk: usize,
@@ -40,21 +42,22 @@ pub struct SubstrateRow {
     pub workspace_bytes: u64,
 }
 
-/// Evaluate every supporting backend in `registry` on each shape:
-/// output deviation vs the dense oracle, wall time and workspace. All
-/// dispatch goes through the [`AttentionBackend`] trait (on the shared
-/// `ctx` pool), so newly registered backends are covered without
-/// touching this code.
+/// Evaluate every supporting backend in `registry` on each packed
+/// shape: output deviation vs the dense oracle, wall time and
+/// workspace. All dispatch goes through the [`AttentionBackend`] trait
+/// (on the shared `ctx` pool), so newly registered backends are covered
+/// without touching this code.
 pub fn substrate_eval(
     ctx: &ExecCtx,
     registry: &BackendRegistry,
-    shapes: &[MobaShape],
+    shapes: &[AttnShape],
     seed: u64,
 ) -> Vec<SubstrateRow> {
     let mut rows = Vec::new();
     for (i, shape) in shapes.iter().enumerate() {
-        let (q, k, v) = qkv(seed.wrapping_add(i as u64), shape.n, shape.d);
-        let (oracle, _) = naive_attention(&q, &k, &v, shape.n, shape.d);
+        let (q, k, v) =
+            qkv_packed(seed.wrapping_add(i as u64), shape.h, shape.h_kv, shape.n, shape.d);
+        let (oracle, _) = naive_attention_packed(&q, &k, &v, shape.h, shape.h_kv, shape.n, shape.d);
         for b in registry.iter() {
             if !b.supports(shape) {
                 continue;
@@ -64,6 +67,8 @@ pub fn substrate_eval(
             let fwd_s = t0.elapsed().as_secs_f64();
             rows.push(SubstrateRow {
                 backend: b.name().to_string(),
+                h: shape.h,
+                h_kv: shape.h_kv,
                 n: shape.n,
                 block: shape.block,
                 topk: shape.topk,
@@ -81,50 +86,66 @@ pub fn substrate_eval(
 #[derive(Debug, Clone)]
 pub struct DecodeParityRow {
     pub backend: String,
+    pub h: usize,
+    pub h_kv: usize,
     pub n: usize,
     pub block: usize,
     pub topk: usize,
     /// max |Δ| between token-by-token `forward_decode` and the same
-    /// backend's prefill `forward`, over all n rows — an implementation
-    /// deviation, not a sparsity approximation (the two must agree)
+    /// backend's prefill `forward`, over all h·n rows — an
+    /// implementation deviation, not a sparsity approximation (the two
+    /// must agree)
     pub max_dev_vs_prefill: f32,
-    /// mean wall time per decode step
+    /// mean wall time per decode step (one step covers all heads)
     pub per_token_s: f64,
 }
 
 /// Score each supporting backend's incremental decode against its own
 /// prefill: run `forward` once, then feed the same tokens one at a time
 /// through a [`DecodeSession`](crate::attention::decode::DecodeSession)
-/// and record the worst row deviation. Dispatch goes through the trait,
-/// so newly registered backends are covered automatically.
+/// (one packed step per token covering all heads) and record the worst
+/// row deviation. Dispatch goes through the trait, so newly registered
+/// backends are covered automatically.
 pub fn decode_eval(
     ctx: &ExecCtx,
     registry: &BackendRegistry,
-    shapes: &[MobaShape],
+    shapes: &[AttnShape],
     seed: u64,
 ) -> Vec<DecodeParityRow> {
     use crate::attention::decode::DecodeSession;
     let mut rows = Vec::new();
     for (i, shape) in shapes.iter().enumerate() {
-        let (q, k, v) = qkv(seed.wrapping_add(i as u64), shape.n, shape.d);
-        let d = shape.d;
+        let (q, k, v) =
+            qkv_packed(seed.wrapping_add(i as u64), shape.h, shape.h_kv, shape.n, shape.d);
+        let (h, h_kv, n, d) = (shape.h, shape.h_kv, shape.n, shape.d);
         for b in registry.iter() {
             if !b.supports(shape) {
                 continue;
             }
             let (prefill, _) = b.forward(ctx, shape, &q, &k, &v);
-            let mut sess = DecodeSession::new(d, shape.block, shape.topk);
+            let mut sess = DecodeSession::new(h, h_kv, d, shape.block, shape.topk);
             let mut max_dev = 0.0f32;
+            // pre-materialize the per-token packed rows so the timed
+            // loop measures forward_decode, not row gathering
+            let k_rows: Vec<Vec<f32>> = (0..n).map(|t| packed_rows(&k, h_kv, n, d, t)).collect();
+            let v_rows: Vec<Vec<f32>> = (0..n).map(|t| packed_rows(&v, h_kv, n, d, t)).collect();
+            let q_rows: Vec<Vec<f32>> = (0..n).map(|t| packed_rows(&q, h, n, d, t)).collect();
             let t0 = Instant::now();
-            for t in 0..shape.n {
-                sess.append(&k[t * d..(t + 1) * d], &v[t * d..(t + 1) * d]);
-                let o = b.forward_decode(ctx, &mut sess, &q[t * d..(t + 1) * d]);
-                max_dev = max_dev.max(max_abs_diff(&o, &prefill[t * d..(t + 1) * d]));
+            let outs: Vec<Vec<f32>> = (0..n)
+                .map(|t| {
+                    sess.append(&k_rows[t], &v_rows[t]);
+                    b.forward_decode(ctx, &mut sess, &q_rows[t])
+                })
+                .collect();
+            let per_token_s = t0.elapsed().as_secs_f64() / n as f64;
+            for (t, o) in outs.iter().enumerate() {
+                max_dev = max_dev.max(max_abs_diff(o, &packed_rows(&prefill, h, n, d, t)));
             }
-            let per_token_s = t0.elapsed().as_secs_f64() / shape.n as f64;
             rows.push(DecodeParityRow {
                 backend: b.name().to_string(),
-                n: shape.n,
+                h,
+                h_kv,
+                n,
                 block: shape.block,
                 topk: shape.topk,
                 max_dev_vs_prefill: max_dev,
@@ -297,19 +318,22 @@ mod tests {
     #[test]
     fn substrate_eval_covers_all_supporting_backends() {
         let reg = BackendRegistry::with_defaults();
-        let shapes = vec![MobaShape::new(64, 8, 16, 1), MobaShape::new(128, 8, 32, 2)];
+        let shapes =
+            vec![AttnShape::single(64, 8, 16, 1), AttnShape::new(4, 2, 128, 8, 32, 2)];
         let rows = substrate_eval(ExecCtx::global(), &reg, &shapes, 42);
         // 3 backends x 2 shapes, all supported
         assert_eq!(rows.len(), 6);
         for name in ["dense", "moba_naive", "flash_moba"] {
             assert_eq!(rows.iter().filter(|r| r.backend == name).count(), 2, "{name}");
         }
+        assert!(rows.iter().any(|r| r.h == 4 && r.h_kv == 2));
     }
 
     #[test]
     fn dense_rows_have_negligible_deviation() {
         let reg = BackendRegistry::with_defaults();
-        let rows = substrate_eval(ExecCtx::global(), &reg, &[MobaShape::new(128, 16, 32, 1)], 7);
+        let rows =
+            substrate_eval(ExecCtx::global(), &reg, &[AttnShape::single(128, 16, 32, 1)], 7);
         let dense = rows.iter().find(|r| r.backend == "dense").unwrap();
         assert!(dense.max_dev_vs_dense < 5e-5, "dev {}", dense.max_dev_vs_dense);
         // density describes the routing geometry: (k+1)*B/N = 2*32/128
@@ -319,25 +343,30 @@ mod tests {
     #[test]
     fn full_routing_rows_match_dense_for_sparse_backends() {
         let reg = BackendRegistry::with_defaults();
-        // topk == n_blocks: every backend reduces to dense attention
-        let rows = substrate_eval(ExecCtx::global(), &reg, &[MobaShape::new(128, 8, 16, 8)], 9);
-        for r in &rows {
-            assert!(r.max_dev_vs_dense < 5e-4, "{} dev {}", r.backend, r.max_dev_vs_dense);
+        // topk == n_blocks: every backend reduces to dense attention,
+        // single-head and GQA alike
+        for shape in [AttnShape::single(128, 8, 16, 8), AttnShape::new(4, 2, 128, 8, 16, 8)] {
+            let rows = substrate_eval(ExecCtx::global(), &reg, &[shape], 9);
+            for r in &rows {
+                assert!(r.max_dev_vs_dense < 5e-4, "{} dev {}", r.backend, r.max_dev_vs_dense);
+            }
         }
     }
 
     #[test]
     fn decode_eval_shows_parity_for_every_backend() {
         let reg = BackendRegistry::with_defaults();
-        let shapes = vec![MobaShape::new(96, 8, 16, 2), MobaShape::new(64, 4, 16, 4)];
+        let shapes =
+            vec![AttnShape::single(96, 8, 16, 2), AttnShape::new(4, 2, 64, 4, 16, 4)];
         let rows = decode_eval(ExecCtx::global(), &reg, &shapes, 21);
         assert_eq!(rows.len(), reg.len() * shapes.len());
         for r in &rows {
             assert!(
                 r.max_dev_vs_prefill < 1e-4,
-                "{} N={} dev {:.2e}",
+                "{} N={} h={} dev {:.2e}",
                 r.backend,
                 r.n,
+                r.h,
                 r.max_dev_vs_prefill
             );
             assert!(r.per_token_s >= 0.0);
@@ -347,7 +376,8 @@ mod tests {
     #[test]
     fn sparse_routing_deviates_but_stays_bounded() {
         let reg = BackendRegistry::with_defaults();
-        let rows = substrate_eval(ExecCtx::global(), &reg, &[MobaShape::new(256, 8, 32, 1)], 11);
+        let rows =
+            substrate_eval(ExecCtx::global(), &reg, &[AttnShape::single(256, 8, 32, 1)], 11);
         let flash = rows.iter().find(|r| r.backend == "flash_moba").unwrap();
         // sparse attention is an approximation: measurably off the
         // oracle, but not unboundedly so on gaussian inputs

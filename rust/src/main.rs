@@ -34,14 +34,17 @@ COMMANDS:
   eval                         evaluate a variant (--variant, --ckpt)
   bench <target>               regenerate a paper table/figure:
                                table1..table6, fig2, fig3, fig4, snr,
-                               parity, decode, ablate-tiles, all
-                               (--quick, --steps N)
-                               (parity/decode/fig3/fig4/snr/ablate-tiles
-                               need no artifacts: they run the CPU
-                               substrate through the AttentionBackend
-                               registry; every target writes a
-                               machine-readable BENCH_<target>.json
-                               under the results dir)
+                               parity, parity-gqa, decode, ablate-tiles,
+                               all (--quick, --steps N)
+                               (parity/parity-gqa/decode/fig3/fig4/snr/
+                               ablate-tiles need no artifacts: they run
+                               the CPU substrate through the
+                               AttentionBackend registry; every target
+                               writes a machine-readable
+                               BENCH_<target>.json under the results
+                               dir. parity-gqa re-runs the parity table
+                               at a grouped-query head layout, h=8 over
+                               h_kv=2)
   bench-check                  gate BENCH_*.json metrics against the
                                committed floors (--floor
                                ci/bench_floor.json, --results DIR);
@@ -169,6 +172,19 @@ fn eval(cfg: &AppConfig, variant: &str, ckpt: Option<PathBuf>) -> Result<()> {
     Ok(())
 }
 
+/// The bench config a target actually runs with: `parity-gqa` pins the
+/// grouped-query head layout (h=8 over h_kv=2), everything else uses
+/// the configured (default single-head) layout. Also what lands in the
+/// emitted BENCH_<target>.json `config` object.
+fn effective_bench(cfg: &AppConfig, target: &str) -> flash_moba::config::BenchParams {
+    let mut b = cfg.bench.clone();
+    if target == "parity-gqa" {
+        b.heads = 8;
+        b.kv_heads = 2;
+    }
+    b
+}
+
 fn bench(cfg: &AppConfig, target: &str, quick: bool) -> Result<()> {
     let needs_runtime = matches!(
         target,
@@ -200,8 +216,16 @@ fn bench(cfg: &AppConfig, target: &str, quick: bool) -> Result<()> {
             }
             "fig4" => none(figures::run_fig4(cfg, if quick { 4096 } else { 16384 })),
             "snr" => none(snr_harness::run_snr(cfg, if quick { 1000 } else { 4000 })),
-            "parity" => tables::run_table_parity(cfg, quick)
+            "parity" => tables::run_table_parity(cfg, quick, "parity")
                 .map(|s| vec![("speedup_vs_dense".into(), s)]),
+            "parity-gqa" => {
+                // the multi-head floor config: 8 query heads grouped
+                // over 2 KV heads through the same parity table
+                let mut gqa = cfg.clone();
+                gqa.bench = effective_bench(cfg, "parity-gqa");
+                tables::run_table_parity(&gqa, quick, "parity-gqa")
+                    .map(|s| vec![("speedup_vs_dense".into(), s)])
+            }
             "decode" => decode_bench::run_decode(cfg, quick)
                 .map(|s| vec![("speedup_vs_dense".into(), s)]),
             "ablate-tiles" => {
@@ -218,14 +242,14 @@ fn bench(cfg: &AppConfig, target: &str, quick: bool) -> Result<()> {
             t,
             t0.elapsed().as_secs_f64(),
             quick,
-            &cfg.bench,
+            &effective_bench(cfg, t),
             &metrics,
         )
     };
     if target == "all" {
         for t in [
-            "parity", "decode", "snr", "fig3", "fig4", "ablate-tiles", "table1", "table3",
-            "table5", "fig2", "table2", "table4", "table6",
+            "parity", "parity-gqa", "decode", "snr", "fig3", "fig4", "ablate-tiles", "table1",
+            "table3", "table5", "fig2", "table2", "table4", "table6",
         ] {
             println!("\n######## bench {t} ########");
             run_and_emit(cfg, t)?;

@@ -1,29 +1,32 @@
 //! Decode↔prefill parity suite: feeding tokens one at a time through a
-//! `DecodeSession` must reproduce the prefill `forward` outputs
-//! row-for-row, for every registered backend, within 1e-4.
+//! `DecodeSession` — one packed step per token covering all query
+//! heads — must reproduce the prefill `forward` outputs row-for-row,
+//! for every registered backend, within 1e-4.
 //!
 //! Rows are compared at *every* step, so each intermediate position —
 //! including every partial-own-block position between block boundaries —
-//! is held against the corresponding prefill row. Geometries the
-//! backends' prefill cannot express (n not divisible by block, topk=0
-//! for the sparse backends) are held against the f64 `decode_reference`
-//! oracle and, where attention is dense-equivalent, the textbook
-//! oracle.
+//! is held against the corresponding prefill row. Since the prefill
+//! kernels handle ragged tails natively now, ragged contexts are held
+//! against the real backends' prefill too; topk=0 (which the sparse
+//! backends' prefill predicate rejects) is held against the f64
+//! `decode_reference` oracle.
 
 use flash_moba::attention::backend::{AttentionBackend, BackendRegistry};
 use flash_moba::attention::decode::{decode_reference, DecodeSession};
 use flash_moba::attention::dense::naive_attention;
-use flash_moba::attention::kconv::kconv;
-use flash_moba::attention::testutil::{max_abs_diff, qkv, Rng};
-use flash_moba::attention::{ExecCtx, MobaShape};
+use flash_moba::attention::kconv::kconv_heads;
+use flash_moba::attention::testutil::{max_abs_diff, qkv, qkv_packed, Rng};
+use flash_moba::attention::{packed_rows, AttnShape, ExecCtx};
 
 const TOL: f32 = 1e-4;
 
-/// Token-by-token decode of (q, k, v) through `backend`, asserting each
-/// output row against `expect` (an (n, d) row-major tensor).
+/// Token-by-token decode of packed (q, k, v) through `backend`,
+/// asserting each packed output row against `expect` (a packed
+/// (h, n, d) tensor).
 fn assert_decode_rows(
     backend: &dyn AttentionBackend,
     mut sess: DecodeSession,
+    shape: &AttnShape,
     q: &[f32],
     k: &[f32],
     v: &[f32],
@@ -31,13 +34,13 @@ fn assert_decode_rows(
     label: &str,
 ) {
     let ctx = ExecCtx::global();
-    let d = sess.d();
-    let n = expect.len() / d;
+    let (h, h_kv, n, d) = (shape.h, shape.h_kv, shape.n, shape.d);
+    assert_eq!(expect.len(), h * n * d, "{label}: bad expectation length");
     for t in 0..n {
-        sess.append(&k[t * d..(t + 1) * d], &v[t * d..(t + 1) * d]);
-        let o = backend.forward_decode(ctx, &mut sess, &q[t * d..(t + 1) * d]);
-        assert_eq!(o.len(), d, "{label}: row {t} has wrong width");
-        let dev = max_abs_diff(&o, &expect[t * d..(t + 1) * d]);
+        sess.append(&packed_rows(k, h_kv, n, d, t), &packed_rows(v, h_kv, n, d, t));
+        let o = backend.forward_decode(ctx, &mut sess, &packed_rows(q, h, n, d, t));
+        assert_eq!(o.len(), h * d, "{label}: row {t} has wrong width");
+        let dev = max_abs_diff(&o, &packed_rows(expect, h, n, d, t));
         assert!(
             dev < TOL,
             "{label}: {} decode deviates from prefill by {dev:.2e} at row {t}/{n}",
@@ -47,64 +50,102 @@ fn assert_decode_rows(
     assert_eq!(sess.len(), n);
 }
 
+fn session_for(shape: &AttnShape) -> DecodeSession {
+    DecodeSession::new(shape.h, shape.h_kv, shape.d, shape.block, shape.topk)
+}
+
 /// The block-aligned grid: every backend that supports the shape must
 /// reproduce its own prefill. Covers sparse routing, full routing
-/// (topk >= n_blocks), and topk == n_blocks exactly.
+/// (topk >= n_blocks), topk == n_blocks exactly, MHA and GQA layouts.
 #[test]
 fn decode_matches_prefill_for_every_backend_on_the_grid() {
     let shapes = [
-        MobaShape::new(64, 4, 16, 1),
-        MobaShape::new(128, 16, 16, 2),
-        MobaShape::new(96, 8, 16, 6),    // fully routed
-        MobaShape::new(128, 8, 16, 8),   // topk == n_blocks
-        MobaShape::new(160, 8, 32, 12),  // topk > n_blocks
-        MobaShape::new(256, 8, 32, 3),
+        AttnShape::single(64, 4, 16, 1),
+        AttnShape::single(128, 16, 16, 2),
+        AttnShape::single(96, 8, 16, 6),    // fully routed
+        AttnShape::single(128, 8, 16, 8),   // topk == n_blocks
+        AttnShape::single(160, 8, 32, 12),  // topk > n_blocks
+        AttnShape::single(256, 8, 32, 3),
+        AttnShape::new(4, 4, 96, 8, 16, 2),  // MHA
+        AttnShape::new(4, 2, 96, 8, 16, 2),  // GQA
+        AttnShape::new(8, 2, 64, 4, 16, 1),  // wide GQA groups
     ];
     let registry = BackendRegistry::with_defaults();
     for (i, shape) in shapes.iter().enumerate() {
-        let (q, k, v) = qkv(0xDEC0 + i as u64, shape.n, shape.d);
+        let (q, k, v) = qkv_packed(0xDEC0 + i as u64, shape.h, shape.h_kv, shape.n, shape.d);
         for b in registry.iter() {
             if !b.supports(shape) {
                 continue;
             }
             let (prefill, _) = b.forward(ExecCtx::global(), shape, &q, &k, &v);
-            let sess = DecodeSession::new(shape.d, shape.block, shape.topk);
-            assert_decode_rows(b, sess, &q, &k, &v, &prefill, &format!("shape {shape:?}"));
+            assert_decode_rows(
+                b,
+                session_for(shape),
+                shape,
+                &q,
+                &k,
+                &v,
+                &prefill,
+                &format!("shape {shape:?}"),
+            );
         }
     }
 }
 
-/// n not divisible by block: the dense backend still expresses this as
-/// prefill (routing fields are ignored), so decode with a *ragged*
-/// cache must match it row-for-row through the real backend path.
+/// n not divisible by block: every backend's prefill expresses this
+/// natively now (the tail block is always-attended, never routed), so
+/// decode with a ragged cache must match each backend's own prefill
+/// row-for-row — single-head and GQA.
 #[test]
-fn ragged_context_matches_dense_prefill() {
+fn ragged_context_matches_prefill_for_every_backend() {
     let registry = BackendRegistry::with_defaults();
-    let dense = registry.get("dense").unwrap();
-    for (n, d, block) in [(100, 8, 16), (70, 4, 32), (33, 16, 8)] {
-        let (q, k, v) = qkv(0xAA + n as u64, n, d);
-        // single-block geometry: valid for any n, ignored by dense
-        let shape = MobaShape { n, d, block: n, topk: 0 };
-        let (prefill, _) = dense.forward(ExecCtx::global(), &shape, &q, &k, &v);
-        let sess = DecodeSession::new(d, block, 0);
-        assert_decode_rows(dense, sess, &q, &k, &v, &prefill, &format!("ragged n={n}"));
+    for shape in [
+        AttnShape::single(100, 8, 16, 2),
+        AttnShape::single(70, 4, 32, 1),
+        AttnShape::new(4, 2, 90, 8, 16, 3),
+    ] {
+        let (q, k, v) = qkv_packed(0xAA + shape.n as u64, shape.h, shape.h_kv, shape.n, shape.d);
+        for b in registry.iter() {
+            if !b.supports(&shape) {
+                continue;
+            }
+            let (prefill, _) = b.forward(ExecCtx::global(), &shape, &q, &k, &v);
+            assert_decode_rows(
+                b,
+                session_for(&shape),
+                &shape,
+                &q,
+                &k,
+                &v,
+                &prefill,
+                &format!("ragged {shape:?} {}", b.name()),
+            );
+        }
     }
 }
 
-/// n not divisible by block, sparse routing: the sparse backends'
-/// prefill predicate rejects ragged shapes, so their decode is held
-/// against the f64 routing oracle (complete strictly-past blocks only,
-/// partial own block causal).
+/// Ragged contexts also agree with the f64 routing oracle (complete
+/// strictly-past blocks only, partial own block causal) — the
+/// triangle-closing check between decode, prefill and the oracle.
 #[test]
-fn ragged_context_matches_routing_oracle_for_sparse_backends() {
+fn ragged_context_matches_routing_oracle() {
     let registry = BackendRegistry::with_defaults();
     for (n, d, block, topk) in [(100, 8, 16, 2), (150, 4, 32, 1), (90, 8, 16, 3)] {
+        let shape = AttnShape::single(n, d, block, topk);
         let (q, k, v) = qkv(0xBB + n as u64, n, d);
         let oracle = decode_reference(&q, &k, &v, n, d, block, topk);
         for name in ["moba_naive", "flash_moba"] {
             let b = registry.get(name).unwrap();
-            let sess = DecodeSession::new(d, block, topk);
-            assert_decode_rows(b, sess, &q, &k, &v, &oracle, &format!("ragged n={n} {name}"));
+            assert_decode_rows(
+                b,
+                session_for(&shape),
+                &shape,
+                &q,
+                &k,
+                &v,
+                &oracle,
+                &format!("ragged n={n} {name}"),
+            );
         }
     }
 }
@@ -114,16 +155,25 @@ fn ragged_context_matches_routing_oracle_for_sparse_backends() {
 #[test]
 fn topk_zero_attends_own_block_only() {
     let (n, d, block) = (64, 4, 16);
+    let shape = AttnShape::single(n, d, block, 0);
     let (q, k, v) = qkv(0xCC, n, d);
     let oracle = decode_reference(&q, &k, &v, n, d, block, 0);
     let registry = BackendRegistry::with_defaults();
     for name in ["moba_naive", "flash_moba"] {
         let b = registry.get(name).unwrap();
-        let sess = DecodeSession::new(d, block, 0);
-        assert_decode_rows(b, sess, &q, &k, &v, &oracle, &format!("topk=0 {name}"));
+        assert_decode_rows(
+            b,
+            session_for(&shape),
+            &shape,
+            &q,
+            &k,
+            &v,
+            &oracle,
+            &format!("topk=0 {name}"),
+        );
     }
     // sanity: with topk=0 the first row of each block attends only itself
-    let mut sess = DecodeSession::new(d, block, 0);
+    let mut sess = DecodeSession::new(1, 1, d, block, 0);
     for t in 0..=block {
         sess.append(&k[t * d..(t + 1) * d], &v[t * d..(t + 1) * d]);
         if t == block {
@@ -139,50 +189,69 @@ fn topk_zero_attends_own_block_only() {
 #[test]
 fn fully_routed_decode_equals_dense_oracle() {
     let (n, d, block) = (128, 8, 16);
+    let shape = AttnShape::single(n, d, block, n / block);
     let (q, k, v) = qkv(0xDD, n, d);
     let (oracle, _) = naive_attention(&q, &k, &v, n, d);
     let registry = BackendRegistry::with_defaults();
     for b in registry.iter() {
-        let sess = DecodeSession::new(d, block, n / block);
-        assert_decode_rows(b, sess, &q, &k, &v, &oracle, "fully routed vs dense oracle");
+        assert_decode_rows(
+            b,
+            session_for(&shape),
+            &shape,
+            &q,
+            &k,
+            &v,
+            &oracle,
+            "fully routed vs dense oracle",
+        );
     }
 }
 
 /// kconv path: the session's streaming ring-buffer kconv must equal the
-/// batch `kconv()`, and decode over the convolved cache must reproduce
-/// each backend's prefill on the batch-convolved keys.
+/// per-head batch `kconv()`, and decode over the convolved cache must
+/// reproduce each backend's prefill on the batch-convolved keys —
+/// including with a GQA head layout.
 #[test]
 fn kconv_streaming_path_matches_batch_prefill() {
-    let shape = MobaShape::new(128, 8, 16, 2);
-    let (n, d) = (shape.n, shape.d);
-    let width = 4;
-    let (q, k, v) = qkv(0xEE, n, d);
-    let mut rng = Rng::new(0xEF);
-    let w = rng.normal_vec(width * d);
-    let k2 = kconv(&k, &w, n, d, width);
+    for shape in [AttnShape::single(128, 8, 16, 2), AttnShape::new(4, 2, 96, 8, 16, 2)] {
+        let (h, h_kv, n, d) = (shape.h, shape.h_kv, shape.n, shape.d);
+        let width = 4;
+        let (q, k, v) = qkv_packed(0xEE, h, h_kv, n, d);
+        let mut rng = Rng::new(0xEF);
+        let w = rng.normal_vec(width * d);
+        let k2 = kconv_heads(&k, &w, h_kv, n, d, width);
 
-    // the cache stores exactly the batch-convolved keys
-    let mut probe = DecodeSession::with_kconv(d, shape.block, shape.topk, &w, width);
-    for t in 0..n {
-        probe.append(&k[t * d..(t + 1) * d], &v[t * d..(t + 1) * d]);
-    }
-    assert_eq!(probe.cache().keys(), &k2[..], "streaming kconv != batch kconv");
-
-    // and every backend's decode over raw keys + streaming kconv equals
-    // its prefill over the batch-convolved keys
-    let registry = BackendRegistry::with_defaults();
-    for b in registry.iter() {
-        if !b.supports(&shape) {
-            continue;
+        // the cache stores exactly the batch-convolved keys, per head
+        let mut probe =
+            DecodeSession::with_kconv(h, h_kv, d, shape.block, shape.topk, &w, width);
+        for t in 0..n {
+            probe.append(&packed_rows(&k, h_kv, n, d, t), &packed_rows(&v, h_kv, n, d, t));
         }
-        let (prefill, _) = b.forward(ExecCtx::global(), &shape, &q, &k2, &v);
-        let sess = DecodeSession::with_kconv(d, shape.block, shape.topk, &w, width);
-        assert_decode_rows(b, sess, &q, &k, &v, &prefill, "kconv");
+        for head in 0..h_kv {
+            assert_eq!(
+                probe.cache().keys_of(head),
+                &k2[head * n * d..(head + 1) * n * d],
+                "streaming kconv != batch kconv (head {head})"
+            );
+        }
+
+        // and every backend's decode over raw keys + streaming kconv
+        // equals its prefill over the batch-convolved keys
+        let registry = BackendRegistry::with_defaults();
+        for b in registry.iter() {
+            if !b.supports(&shape) {
+                continue;
+            }
+            let (prefill, _) = b.forward(ExecCtx::global(), &shape, &q, &k2, &v);
+            let sess = DecodeSession::with_kconv(h, h_kv, d, shape.block, shape.topk, &w, width);
+            assert_decode_rows(b, sess, &shape, &q, &k, &v, &prefill, "kconv");
+        }
     }
 }
 
-/// Randomized sweep: block-aligned shapes, every backend, fresh seeds —
-/// the property-flavored closure over the grid above.
+/// Randomized sweep: random head layouts (GQA included), block-aligned
+/// and ragged lengths, every backend, fresh seeds — the
+/// property-flavored closure over the grid above.
 #[test]
 fn randomized_shapes_hold_parity() {
     let registry = BackendRegistry::with_defaults();
@@ -191,16 +260,26 @@ fn randomized_shapes_hold_parity() {
         let d = [4usize, 8, 16][rng.below(3)];
         let block = [8usize, 16, 32][rng.below(3)];
         let nb = 2 + rng.below(5);
+        let tail = if rng.uniform() < 0.4 { 1 + rng.below(block - 1) } else { 0 };
         let topk = rng.below(nb + 2); // 0..=nb+1: sparse through over-full
-        let shape = MobaShape::new(nb * block, d, block, topk);
-        let (q, k, v) = qkv(0x900 + seed, shape.n, shape.d);
+        let (h, h_kv) = [(1, 1), (2, 2), (4, 2), (3, 1)][rng.below(4)];
+        let shape = AttnShape::new(h, h_kv, nb * block + tail, d, block, topk);
+        let (q, k, v) = qkv_packed(0x900 + seed, h, h_kv, shape.n, d);
         for b in registry.iter() {
             if !b.supports(&shape) {
                 continue;
             }
             let (prefill, _) = b.forward(ExecCtx::global(), &shape, &q, &k, &v);
-            let sess = DecodeSession::new(d, block, topk);
-            assert_decode_rows(b, sess, &q, &k, &v, &prefill, &format!("seed {seed} {shape:?}"));
+            assert_decode_rows(
+                b,
+                session_for(&shape),
+                &shape,
+                &q,
+                &k,
+                &v,
+                &prefill,
+                &format!("seed {seed} {shape:?}"),
+            );
         }
     }
 }

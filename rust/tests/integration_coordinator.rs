@@ -1,15 +1,15 @@
 //! Coordinator integration: routing, dynamic batching, padding
-//! exactness, metrics, shutdown semantics.
+//! exactness, multi-head serving, metrics, shutdown semantics.
 //!
 //! Two suites: the PJRT suite runs over real compiled kernels (skipped
 //! when `make artifacts` hasn't run), and the CPU-substrate suite runs
 //! unconditionally — pointing the coordinator at a nonexistent
 //! artifacts dir forces the `AttentionBackend`-registry serving path.
 
-use flash_moba::attention::dense::naive_attention;
+use flash_moba::attention::dense::{naive_attention, naive_attention_packed};
 use flash_moba::attention::flash_moba::{flash_moba_forward, FlashMobaConfig};
 use flash_moba::attention::testutil::{max_abs_diff, Rng};
-use flash_moba::attention::MobaShape;
+use flash_moba::attention::{packed_rows, AttnShape};
 use flash_moba::config::ServeParams;
 use flash_moba::coordinator::{AttnKind, AttnRequest, Coordinator};
 use flash_moba::runtime::Runtime;
@@ -33,14 +33,29 @@ fn no_artifacts_dir() -> String {
 fn req(id: u64, kind: AttnKind, n: usize, seed: u64) -> AttnRequest {
     let d = 64;
     let mut rng = Rng::new(seed);
-    AttnRequest {
+    AttnRequest::single(
         id,
         kind,
         n,
         d,
-        q: rng.normal_vec(n * d),
-        k: rng.normal_vec(n * d),
-        v: rng.normal_vec(n * d),
+        rng.normal_vec(n * d),
+        rng.normal_vec(n * d),
+        rng.normal_vec(n * d),
+    )
+}
+
+fn req_gqa(id: u64, kind: AttnKind, h: usize, h_kv: usize, n: usize, d: usize, seed: u64) -> AttnRequest {
+    let mut rng = Rng::new(seed);
+    AttnRequest {
+        id,
+        kind,
+        h,
+        h_kv,
+        n,
+        d,
+        q: rng.normal_vec(h * n * d),
+        k: rng.normal_vec(h_kv * n * d),
+        v: rng.normal_vec(h_kv * n * d),
     }
 }
 
@@ -58,7 +73,7 @@ fn serves_batched_requests_with_exact_results() {
         (0..8).map(|i| req(i, AttnKind::Moba, 1024, 40 + i)).collect();
     let tickets: Vec<_> =
         reqs.iter().map(|r| coord.submit_async(r.clone()).unwrap()).collect();
-    let shape = MobaShape::new(1024, 64, 128, 8);
+    let shape = AttnShape::single(1024, 64, 128, 8);
     for (r, t) in reqs.iter().zip(tickets) {
         let resp = t.wait().unwrap();
         assert_eq!(resp.id, r.id);
@@ -97,16 +112,12 @@ fn oversized_and_invalid_requests_rejected() {
     let r = req(1, AttnKind::Moba, 5000, 1);
     assert!(coord.submit(r).is_err());
     // malformed shapes never reach the worker
-    let bad = AttnRequest {
-        id: 2,
-        kind: AttnKind::Moba,
-        n: 8,
-        d: 64,
-        q: vec![0.0; 3],
-        k: vec![0.0; 3],
-        v: vec![0.0; 3],
-    };
+    let bad = AttnRequest::single(2, AttnKind::Moba, 8, 64, vec![0.0; 3], vec![0.0; 3], vec![0.0; 3]);
     assert!(coord.submit(bad).is_err());
+    // the compiled kernels pack single-head requests: a multi-head
+    // request is rejected on the PJRT path
+    let mh = req_gqa(3, AttnKind::Moba, 4, 2, 1024, 64, 5);
+    assert!(coord.submit(mh).is_err());
     coord.shutdown();
 }
 
@@ -164,7 +175,7 @@ fn cpu_substrate_serves_moba_exact() {
     let tickets: Vec<_> =
         reqs.iter().map(|r| coord.submit_async(r.clone()).unwrap()).collect();
     // ServeParams defaults carry the kernels' B=128, k=8 geometry
-    let shape = MobaShape::new(512, 64, 128, 8);
+    let shape = AttnShape::single(512, 64, 128, 8);
     for (r, t) in reqs.iter().zip(tickets) {
         let resp = t.wait().unwrap();
         assert_eq!(resp.id, r.id);
@@ -176,7 +187,35 @@ fn cpu_substrate_serves_moba_exact() {
     coord.shutdown();
 }
 
-/// Dense requests match the textbook oracle.
+/// A GQA request is ONE kernel launch covering all heads: the served
+/// output equals the packed FlashMoBA forward — no server-side head
+/// loop, no per-head requests.
+#[test]
+fn cpu_substrate_serves_gqa_request_in_one_launch() {
+    let coord = Coordinator::start(
+        no_artifacts_dir(),
+        ServeParams {
+            max_batch: 2,
+            max_wait_ms: 2,
+            queue_capacity: 16,
+            moba_block: 64,
+            moba_topk: 2,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let (h, h_kv, n, d) = (4, 2, 256, 32);
+    let r = req_gqa(11, AttnKind::Moba, h, h_kv, n, d, 777);
+    let resp = coord.submit(r.clone()).unwrap();
+    assert_eq!(resp.served_n, n);
+    assert_eq!(resp.o.len(), h * n * d);
+    let shape = AttnShape::new(h, h_kv, n, d, 64, 2);
+    let expect = flash_moba_forward(&r.q, &r.k, &r.v, shape, FlashMobaConfig::default());
+    assert!(max_abs_diff(&resp.o, &expect.o) < 1e-5);
+    coord.shutdown();
+}
+
+/// Dense requests match the textbook oracle — GQA layouts included.
 #[test]
 fn cpu_substrate_serves_dense_exact() {
     let coord = Coordinator::start(
@@ -189,13 +228,19 @@ fn cpu_substrate_serves_dense_exact() {
     assert_eq!(resp.served_n, 384);
     let (expect, _) = naive_attention(&r.q, &r.k, &r.v, 384, 64);
     assert!(max_abs_diff(&resp.o, &expect) < 1e-4);
+    let g = req_gqa(2, AttnKind::Dense, 4, 2, 128, 32, 200);
+    let resp = coord.submit(g.clone()).unwrap();
+    let (expect, _) = naive_attention_packed(&g.q, &g.k, &g.v, 4, 2, 128, 32);
+    assert!(max_abs_diff(&resp.o, &expect) < 1e-4);
     coord.shutdown();
 }
 
-/// A MoBA request whose length does not divide into B=128 blocks falls
-/// back to the exact dense backend via the supported-config predicate.
+/// A MoBA request whose length does not divide into B=128 blocks is
+/// now a *native* geometry: the sparse backend serves it with the
+/// ragged tail always-attended and excluded from routing (here topk=8
+/// covers every complete block, so the result equals dense attention).
 #[test]
-fn cpu_substrate_falls_back_to_dense_for_ragged_moba() {
+fn cpu_substrate_serves_ragged_moba_natively() {
     let coord = Coordinator::start(
         no_artifacts_dir(),
         ServeParams { max_batch: 2, max_wait_ms: 2, queue_capacity: 16, ..Default::default() },
@@ -205,8 +250,14 @@ fn cpu_substrate_falls_back_to_dense_for_ragged_moba() {
     let resp = coord.submit(r.clone()).unwrap();
     assert_eq!(resp.served_n, 700);
     assert_eq!(resp.o.len(), 700 * 64);
+    // 700 = 5 complete blocks of 128 + a 60-token tail; topk=8 >= 5
+    // routes everything -> sparse output == dense attention
     let (expect, _) = naive_attention(&r.q, &r.k, &r.v, 700, 64);
     assert!(max_abs_diff(&resp.o, &expect) < 1e-4);
+    // the same shape through the packed kernel directly
+    let shape = AttnShape::single(700, 64, 128, 8);
+    let flash = flash_moba_forward(&r.q, &r.k, &r.v, shape, FlashMobaConfig::default());
+    assert!(max_abs_diff(&resp.o, &flash.o) < 1e-6);
     coord.shutdown();
 }
 
@@ -219,16 +270,22 @@ fn cpu_substrate_rejects_invalid_and_batches_partial() {
         ServeParams { max_batch: 4, max_wait_ms: 3, queue_capacity: 16, ..Default::default() },
     )
     .unwrap();
-    let bad = AttnRequest {
-        id: 2,
-        kind: AttnKind::Moba,
-        n: 8,
-        d: 64,
-        q: vec![0.0; 3],
-        k: vec![0.0; 3],
-        v: vec![0.0; 3],
-    };
+    let bad = AttnRequest::single(2, AttnKind::Moba, 8, 64, vec![0.0; 3], vec![0.0; 3], vec![0.0; 3]);
     assert!(coord.submit(bad).is_err());
+    // a GQA layout whose k/v are sized for h instead of h_kv
+    let d = 8;
+    let bad_gqa = AttnRequest {
+        id: 3,
+        kind: AttnKind::Moba,
+        h: 4,
+        h_kv: 2,
+        n: 16,
+        d,
+        q: vec![0.0; 4 * 16 * d],
+        k: vec![0.0; 4 * 16 * d],
+        v: vec![0.0; 4 * 16 * d],
+    };
+    assert!(coord.submit(bad_gqa).is_err());
     // ids in the decode-ticket range are rejected so the shared pending
     // table can never cross-route a prefill and a decode response
     let reserved = req(flash_moba::coordinator::DECODE_ID_BASE, AttnKind::Moba, 8, 5);
@@ -280,7 +337,7 @@ fn decode_session_matches_prefill_through_the_coordinator() {
     let k: Vec<f32> = rng.normal_vec(n * d);
     let v: Vec<f32> = rng.normal_vec(n * d);
 
-    let session = coord.session_create(AttnKind::Moba, d).unwrap();
+    let session = coord.session_create(AttnKind::Moba, 1, 1, d).unwrap();
     let tickets: Vec<_> = (0..n)
         .map(|t| {
             coord
@@ -294,7 +351,7 @@ fn decode_session_matches_prefill_through_the_coordinator() {
         })
         .collect();
 
-    let shape = MobaShape::new(n, d, 32, 2);
+    let shape = AttnShape::single(n, d, 32, 2);
     let expect = flash_moba_forward(&q, &k, &v, shape, FlashMobaConfig::default());
     for (t, ticket) in tickets.into_iter().enumerate() {
         let resp = ticket.wait().unwrap();
@@ -307,6 +364,46 @@ fn decode_session_matches_prefill_through_the_coordinator() {
     assert_eq!(coord.metrics().active_sessions(), 1);
     coord.session_free(session).unwrap();
     assert_eq!(coord.metrics().active_sessions(), 0);
+    coord.shutdown();
+}
+
+/// A GQA decode session: one step per token carries the packed (h, d)
+/// query + (h_kv, d) KV rows and reproduces the packed prefill.
+#[test]
+fn gqa_decode_session_matches_packed_prefill() {
+    let serve = ServeParams {
+        max_batch: 4,
+        max_wait_ms: 1,
+        queue_capacity: 512,
+        moba_block: 16,
+        moba_topk: 2,
+        ..Default::default()
+    };
+    let coord = Coordinator::start(no_artifacts_dir(), serve).unwrap();
+    let (h, h_kv, n, d) = (4, 2, 96, 16);
+    let mut rng = Rng::new(0xD7);
+    let q: Vec<f32> = rng.normal_vec(h * n * d);
+    let k: Vec<f32> = rng.normal_vec(h_kv * n * d);
+    let v: Vec<f32> = rng.normal_vec(h_kv * n * d);
+
+    let session = coord.session_create(AttnKind::Moba, h, h_kv, d).unwrap();
+    let shape = AttnShape::new(h, h_kv, n, d, 16, 2);
+    let expect = flash_moba_forward(&q, &k, &v, shape, FlashMobaConfig::default());
+    for t in 0..n {
+        let resp = coord
+            .decode(
+                session,
+                packed_rows(&q, h, n, d, t),
+                packed_rows(&k, h_kv, n, d, t),
+                packed_rows(&v, h_kv, n, d, t),
+            )
+            .unwrap();
+        assert_eq!(resp.served_n, t + 1);
+        assert_eq!(resp.o.len(), h * d);
+        let dev = max_abs_diff(&resp.o, &packed_rows(&expect.o, h, n, d, t));
+        assert!(dev < 1e-4, "row {t} deviates by {dev:.2e}");
+    }
+    coord.session_free(session).unwrap();
     coord.shutdown();
 }
 
@@ -325,7 +422,7 @@ fn decode_session_dense_matches_oracle() {
     let v: Vec<f32> = rng.normal_vec(n * d);
     let (oracle, _) = naive_attention(&q, &k, &v, n, d);
 
-    let session = coord.session_create(AttnKind::Dense, d).unwrap();
+    let session = coord.session_create(AttnKind::Dense, 1, 1, d).unwrap();
     for t in 0..n {
         let resp = coord
             .decode(
@@ -342,9 +439,10 @@ fn decode_session_dense_matches_oracle() {
     coord.shutdown();
 }
 
-/// Regression: a decode step moves O(d) queue payload regardless of the
-/// session's context length — streaming 512 tokens accounts exactly
-/// 512 · 3·d·4 bytes, with no O(n·d) re-sends of the cached K/V.
+/// Regression: a decode step moves O((h + 2·h_kv)·d) queue payload
+/// regardless of the session's context length — streaming 512 tokens
+/// through a GQA session accounts exactly 512 · (h + 2·h_kv)·d·4
+/// bytes, with no O(n·d) re-sends of the cached K/V.
 #[test]
 fn decode_steps_never_copy_the_cached_context() {
     let coord = Coordinator::start(
@@ -353,13 +451,19 @@ fn decode_steps_never_copy_the_cached_context() {
     )
     .unwrap();
     let d = 64;
+    let (h, h_kv) = (4usize, 2usize);
     let steps = 512usize;
     let mut rng = Rng::new(0xD3);
-    let session = coord.session_create(AttnKind::Moba, d).unwrap();
+    let session = coord.session_create(AttnKind::Moba, h, h_kv, d).unwrap();
     let tickets: Vec<_> = (0..steps)
         .map(|_| {
             coord
-                .decode_async(session, rng.normal_vec(d), rng.normal_vec(d), rng.normal_vec(d))
+                .decode_async(
+                    session,
+                    rng.normal_vec(h * d),
+                    rng.normal_vec(h_kv * d),
+                    rng.normal_vec(h_kv * d),
+                )
                 .unwrap()
         })
         .collect();
@@ -370,15 +474,16 @@ fn decode_steps_never_copy_the_cached_context() {
         .metrics()
         .decode_payload_bytes
         .load(std::sync::atomic::Ordering::Relaxed);
-    // exactly 3 d-length f32 rows per step: context length never leaks
-    // into the per-step queue traffic
-    assert_eq!(moved, (steps * 3 * d * 4) as u64);
+    // exactly h + 2·h_kv d-length f32 rows per step: context length
+    // never leaks into the per-step queue traffic
+    assert_eq!(moved, (steps * (h + 2 * h_kv) * d * 4) as u64);
     coord.session_free(session).unwrap();
     coord.shutdown();
 }
 
 /// Session lifecycle errors: unknown sessions are rejected on decode
-/// and free; freeing twice fails; steps after free fail.
+/// and free; freeing twice fails; steps after free fail; head-layout
+/// mismatches are rejected before touching the cache.
 #[test]
 fn decode_session_lifecycle_errors() {
     let coord = Coordinator::start(
@@ -390,15 +495,23 @@ fn decode_session_lifecycle_errors() {
     // unknown session
     assert!(coord.decode(999, vec![0.0; d], vec![0.0; d], vec![0.0; d]).is_err());
     assert!(coord.session_free(999).is_err());
+    // invalid head layouts never open a session
+    assert!(coord.session_create(AttnKind::Moba, 3, 2, d).is_err());
+    assert!(coord.session_create(AttnKind::Moba, 0, 1, d).is_err());
     // wrong head dim is rejected before touching the cache
-    let session = coord.session_create(AttnKind::Moba, d).unwrap();
+    let session = coord.session_create(AttnKind::Moba, 1, 1, d).unwrap();
     assert!(coord.decode(session, vec![0.0; d + 1], vec![0.0; d + 1], vec![0.0; d + 1]).is_err());
+    // a GQA session rejects rows sized for the wrong layout
+    let gqa = coord.session_create(AttnKind::Moba, 4, 2, d).unwrap();
+    assert!(coord.decode(gqa, vec![0.0; 4 * d], vec![0.0; 4 * d], vec![0.0; 4 * d]).is_err());
+    assert!(coord.decode(gqa, vec![0.1; 4 * d], vec![0.1; 2 * d], vec![0.1; 2 * d]).is_ok());
     // a valid step still works afterwards
     assert!(coord.decode(session, vec![0.1; d], vec![0.1; d], vec![0.1; d]).is_ok());
     // free, then everything on the handle fails
     coord.session_free(session).unwrap();
     assert!(coord.decode(session, vec![0.0; d], vec![0.0; d], vec![0.0; d]).is_err());
     assert!(coord.session_free(session).is_err());
+    coord.session_free(gqa).unwrap();
     coord.shutdown();
 }
 
@@ -422,8 +535,8 @@ fn interleaved_sessions_stay_isolated() {
     };
     let (qa, ka, va) = mk(&mut rng);
     let (qb, kb, vb) = mk(&mut rng);
-    let sa = coord.session_create(AttnKind::Moba, d).unwrap();
-    let sb = coord.session_create(AttnKind::Moba, d).unwrap();
+    let sa = coord.session_create(AttnKind::Moba, 1, 1, d).unwrap();
+    let sb = coord.session_create(AttnKind::Moba, 1, 1, d).unwrap();
     assert_ne!(sa, sb);
 
     let mut tickets = Vec::new();
@@ -443,7 +556,7 @@ fn interleaved_sessions_stay_isolated() {
             ));
         }
     }
-    let shape = MobaShape::new(n, d, 16, 1);
+    let shape = AttnShape::single(n, d, 16, 1);
     let ea = flash_moba_forward(&qa, &ka, &va, shape, FlashMobaConfig::default());
     let eb = flash_moba_forward(&qb, &kb, &vb, shape, FlashMobaConfig::default());
     for (s, t, ticket) in tickets {

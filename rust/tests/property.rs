@@ -15,21 +15,49 @@ use flash_moba::attention::flash_moba::{
     flash_moba_forward, flash_moba_forward_ctx, FlashMobaConfig,
 };
 use flash_moba::attention::moba_naive::{moba_naive_forward, moba_reference};
-use flash_moba::attention::testutil::{max_abs_diff, qkv, Rng};
+use flash_moba::attention::testutil::{max_abs_diff, qkv, qkv_packed, repeat_heads, Rng};
 use flash_moba::attention::topk::{naive_topk, same_selection, tiled_topk};
 use flash_moba::attention::varlen::build_varlen;
-use flash_moba::attention::{ExecCtx, MobaShape};
+use flash_moba::attention::{AttnShape, ExecCtx};
 use flash_moba::coordinator::{AttnKind, AttnRequest, Batcher, DecodeStep};
 use flash_moba::util::json::Json;
 
 const CASES: u64 = 24;
 
-fn rand_shape(rng: &mut Rng) -> MobaShape {
+fn rand_shape(rng: &mut Rng) -> AttnShape {
     let d = [4usize, 8, 16, 32][rng.below(4)];
     let block = [8usize, 16, 32, 64][rng.below(4)];
     let nb = 2 + rng.below(7);
     let topk = 1 + rng.below(4);
-    MobaShape::new(nb * block, d, block, topk)
+    AttnShape::single(nb * block, d, block, topk)
+}
+
+/// A random head layout: single-head, MHA, or GQA with 2–4 groups.
+fn rand_heads(rng: &mut Rng) -> (usize, usize) {
+    match rng.below(4) {
+        0 => (1, 1),
+        1 => {
+            let h = [2usize, 4][rng.below(2)];
+            (h, h) // MHA
+        }
+        2 => {
+            let h_kv = 1 + rng.below(2);
+            let group = 2 + rng.below(3);
+            (h_kv * group, h_kv) // GQA
+        }
+        _ => (2 + rng.below(3), 1), // MQA-style: all heads share one KV head
+    }
+}
+
+/// A random multi-head shape, occasionally with a ragged tail block.
+fn rand_mh_shape(rng: &mut Rng) -> AttnShape {
+    let (h, h_kv) = rand_heads(rng);
+    let d = [4usize, 8, 16][rng.below(3)];
+    let block = [8usize, 16, 32][rng.below(3)];
+    let nb = 2 + rng.below(5);
+    let tail = if rng.uniform() < 0.3 { 1 + rng.below(block - 1) } else { 0 };
+    let topk = 1 + rng.below(4);
+    AttnShape::new(h, h_kv, nb * block + tail, d, block, topk)
 }
 
 /// flash online-softmax attention == naive attention, any tile shape.
@@ -64,24 +92,119 @@ fn prop_tiled_topk_equals_naive() {
     }
 }
 
-/// FlashMoBA forward == token-mask reference == original pipeline.
+/// FlashMoBA forward == token-mask reference == original pipeline —
+/// over random head layouts (incl. GQA) and ragged tails.
 #[test]
 fn prop_flash_moba_three_way_agreement() {
     for seed in 0..CASES {
         let mut rng = Rng::new(3000 + seed);
-        let shape = rand_shape(&mut rng);
+        let shape = rand_mh_shape(&mut rng);
         let cfg = FlashMobaConfig {
             tile_r: 1 + rng.below(80),
             tile_c: 1 + rng.below(80),
             topk_tile: 1 + rng.below(16),
         };
-        let (q, k, v) = qkv(seed, shape.n, shape.d);
+        let (q, k, v) = qkv_packed(seed, shape.h, shape.h_kv, shape.n, shape.d);
         let out = flash_moba_forward(&q, &k, &v, shape, cfg);
         let (oref, _) = moba_reference(&q, &k, &v, shape, &out.indices);
         assert!(max_abs_diff(&out.o, &oref) < 1e-4, "seed={seed} shape={shape:?} cfg={cfg:?}");
         let (onaive, idx2, _) = moba_naive_forward(&q, &k, &v, shape);
         assert!(same_selection(&out.indices, &idx2, shape.topk), "routing mismatch seed={seed}");
         assert!(max_abs_diff(&out.o, &onaive) < 1e-4, "pipeline mismatch seed={seed}");
+    }
+}
+
+/// GQA broadcast semantics: running h query heads over h_kv = 1 shared
+/// KV must be bit-identical to h_kv = h with the K/V explicitly
+/// repeated per group — for every registered backend, serial and
+/// multi-threaded.
+#[test]
+fn prop_gqa_broadcast_equals_duplicated_kv() {
+    let registry = BackendRegistry::with_defaults();
+    for seed in 0..CASES / 2 {
+        let mut rng = Rng::new(15_000 + seed);
+        let h = [2usize, 3, 4][rng.below(3)];
+        let d = [4usize, 8][rng.below(2)];
+        let block = [8usize, 16][rng.below(2)];
+        let nb = 2 + rng.below(4);
+        let tail = if rng.uniform() < 0.3 { 1 + rng.below(block - 1) } else { 0 };
+        let n = nb * block + tail;
+        let topk = 1 + rng.below(3);
+        let shared = AttnShape::new(h, 1, n, d, block, topk);
+        let dup = AttnShape::new(h, h, n, d, block, topk);
+        let (q, k1, v1) = qkv_packed(700 + seed, h, 1, n, d);
+        let kd = repeat_heads(&k1, 1, h, n, d);
+        let vd = repeat_heads(&v1, 1, h, n, d);
+        for threads in [1usize, 4] {
+            let ctx = ExecCtx::with_threads(threads);
+            for b in registry.iter() {
+                if !b.supports(&shared) {
+                    continue;
+                }
+                let (o1, _) = b.forward(&ctx, &shared, &q, &k1, &v1);
+                let (o2, _) = b.forward(&ctx, &dup, &q, &kd, &vd);
+                assert_eq!(o1.len(), o2.len());
+                for (i, (a, z)) in o1.iter().zip(&o2).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        z.to_bits(),
+                        "{} h={h} threads={threads} differs at {i} (seed={seed})",
+                        b.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Head-permutation equivariance (h_kv = h): permuting the input heads
+/// permutes the output heads, bit for bit, for every registered
+/// backend at 1 and several worker threads.
+#[test]
+fn prop_head_permutation_permutes_outputs() {
+    let registry = BackendRegistry::with_defaults();
+    for seed in 0..CASES / 2 {
+        let mut rng = Rng::new(16_000 + seed);
+        let h = [2usize, 3, 4][rng.below(3)];
+        let d = [4usize, 8][rng.below(2)];
+        let block = [8usize, 16][rng.below(2)];
+        let n = (2 + rng.below(4)) * block;
+        let topk = 1 + rng.below(3);
+        let shape = AttnShape::new(h, h, n, d, block, topk);
+        let (q, k, v) = qkv_packed(800 + seed, h, h, n, d);
+        // a random permutation π of the heads (Fisher–Yates)
+        let mut perm: Vec<usize> = (0..h).collect();
+        for i in (1..h).rev() {
+            let j = rng.below(i + 1);
+            perm.swap(i, j);
+        }
+        let permute = |x: &[f32]| -> Vec<f32> {
+            let mut out = Vec::with_capacity(x.len());
+            for &src in &perm {
+                out.extend_from_slice(&x[src * n * d..(src + 1) * n * d]);
+            }
+            out
+        };
+        let (qp, kp, vp) = (permute(&q), permute(&k), permute(&v));
+        for threads in [1usize, 3] {
+            let ctx = ExecCtx::with_threads(threads);
+            for b in registry.iter() {
+                if !b.supports(&shape) {
+                    continue;
+                }
+                let (o, _) = b.forward(&ctx, &shape, &q, &k, &v);
+                let (op, _) = b.forward(&ctx, &shape, &qp, &kp, &vp);
+                for (dst, &src) in perm.iter().enumerate() {
+                    let a = &op[dst * n * d..(dst + 1) * n * d];
+                    let z = &o[src * n * d..(src + 1) * n * d];
+                    assert!(
+                        a.iter().zip(z).all(|(x, y)| x.to_bits() == y.to_bits()),
+                        "{} head {src}->{dst} not permuted (seed={seed} threads={threads})",
+                        b.name()
+                    );
+                }
+            }
+        }
     }
 }
 
@@ -94,9 +217,8 @@ fn prop_varlen_is_permutation() {
         let n = 1 + rng.below(300);
         let k = 1 + rng.below(6);
         let nb = 1 + rng.below(24);
-        let idx: Vec<i32> = (0..n * k)
-            .map(|_| if rng.uniform() < 0.25 { -1 } else { rng.below(nb) as i32 })
-            .collect();
+        let idx: Vec<i32> =
+            (0..n * k).map(|_| if rng.uniform() < 0.25 { -1 } else { rng.below(nb) as i32 }).collect();
         let l = build_varlen(&idx, n, k, nb);
         assert_eq!(l.total(), idx.iter().filter(|&&x| x >= 0).count());
         let mut seen = 0usize;
@@ -128,15 +250,15 @@ fn prop_batcher_invariants() {
         let mut last_id_per_lane = std::collections::HashMap::new();
         for i in 0..rng.below(200) {
             let lane = lanes[rng.below(3)];
-            let req = AttnRequest {
-                id: i as u64,
-                kind: AttnKind::Moba,
-                n: 4,
-                d: 2,
-                q: vec![0.0; 8],
-                k: vec![0.0; 8],
-                v: vec![0.0; 8],
-            };
+            let req = AttnRequest::single(
+                i as u64,
+                AttnKind::Moba,
+                4,
+                2,
+                vec![0.0; 8],
+                vec![0.0; 8],
+                vec![0.0; 8],
+            );
             if b.push(req, lane, 8, t0).is_ok() {
                 accepted += 1;
             }
@@ -170,15 +292,15 @@ fn prop_batcher_deadline() {
         let wait_ms = 1 + rng.below(50) as u64;
         let mut b = Batcher::new(8, Duration::from_millis(wait_ms), 16);
         let t0 = Instant::now();
-        let req = AttnRequest {
-            id: 1,
-            kind: AttnKind::Dense,
-            n: 4,
-            d: 2,
-            q: vec![0.0; 8],
-            k: vec![0.0; 8],
-            v: vec![0.0; 8],
-        };
+        let req = AttnRequest::single(
+            1,
+            AttnKind::Dense,
+            4,
+            2,
+            vec![0.0; 8],
+            vec![0.0; 8],
+            vec![0.0; 8],
+        );
         b.push(req, "x", 8, t0).unwrap();
         assert!(b.poll(t0 + Duration::from_millis(wait_ms - 1)).is_none());
         assert_eq!(b.next_deadline(), Some(t0 + Duration::from_millis(wait_ms)));
@@ -212,53 +334,63 @@ fn prop_json_roundtrip() {
 }
 
 /// Every registered backend satisfies the shared parity harness on
-/// randomized (n, d, block, topk) shapes: exact backends match the
-/// dense oracle everywhere, sparse backends match each other, and at
-/// full routing everything matches dense.
+/// randomized (h, h_kv, n, d, block, topk) shapes: exact backends match
+/// the dense oracle everywhere, sparse backends match each other, and
+/// at full routing everything matches dense.
 #[test]
 fn prop_backend_parity_harness() {
     let registry = BackendRegistry::with_defaults();
     let tol = ParityTolerance::default();
     for seed in 0..CASES {
         let mut rng = Rng::new(9000 + seed);
-        let shape = rand_shape(&mut rng);
+        let shape = rand_mh_shape(&mut rng);
         check_shape_parity(&registry, shape, 100 + seed, &tol)
             .unwrap_or_else(|e| panic!("seed={seed} {e}"));
         // the fully-routed variant of the same geometry: MoBA == dense
-        let full = MobaShape::new(shape.n, shape.d, shape.block, shape.n_blocks());
+        let full = AttnShape::new(
+            shape.h,
+            shape.h_kv,
+            shape.n,
+            shape.d,
+            shape.block,
+            shape.complete_blocks(),
+        );
         check_shape_parity(&registry, full, 200 + seed, &tol)
             .unwrap_or_else(|e| panic!("seed={seed} (full routing) {e}"));
     }
 }
 
-/// KvCache invariants under randomized append/route sequences: the
-/// centroid of every block equals the mean of its stored keys, block
-/// count == ceil(len / block), and routed index sets are sorted,
-/// deduplicated, causal, and always include the current block.
+/// KvCache invariants under randomized append/route sequences, with
+/// randomized KV head counts: the centroid of every (head, block)
+/// equals the mean of that head's stored keys, block count ==
+/// ceil(len / block), and routed index sets are sorted, deduplicated,
+/// causal, and always include the current block.
 #[test]
 fn prop_kv_cache_invariants() {
     for seed in 0..CASES {
         let mut rng = Rng::new(11_000 + seed);
+        let h_kv = 1 + rng.below(3);
         let d = [3usize, 4, 8, 16][rng.below(4)];
         let block = [4usize, 8, 16, 32][rng.below(4)];
         let mut cache = if rng.uniform() < 0.5 {
             let width = 1 + rng.below(5);
             let w = rng.normal_vec(width * d);
-            KvCache::with_kconv(d, block, &w, width)
+            KvCache::with_kconv(h_kv, d, block, &w, width)
         } else {
-            KvCache::new(d, block)
+            KvCache::new(h_kv, d, block)
         };
         assert!(cache.is_empty());
         let total = 1 + rng.below(120);
         for t in 0..total {
-            cache.append(&rng.normal_vec(d), &rng.normal_vec(d));
+            cache.append(&rng.normal_vec(h_kv * d), &rng.normal_vec(h_kv * d));
             assert_eq!(cache.len(), t + 1, "seed={seed}");
             assert_eq!(cache.num_blocks(), (t + 1).div_ceil(block), "seed={seed}");
             assert_eq!(cache.complete_blocks(), (t + 1) / block, "seed={seed}");
             if rng.uniform() < 0.3 {
                 let q = rng.normal_vec(d);
                 let topk = rng.below(6);
-                let blocks = cache.route(&q, topk);
+                let head = rng.below(h_kv);
+                let blocks = cache.route(&q, head, topk);
                 let own = t / block;
                 // strictly ascending == sorted + deduplicated
                 assert!(
@@ -274,21 +406,23 @@ fn prop_kv_cache_invariants() {
                 }
             }
         }
-        // centroid == mean of the stored (post-kconv) keys, per block
-        for bb in 0..cache.num_blocks() {
-            let cnt = cache.block_len(bb);
-            let cen = cache.centroid(bb);
-            for c in 0..d {
-                let mean: f32 = (0..cnt)
-                    .map(|r| cache.keys()[(bb * block + r) * d + c])
-                    .sum::<f32>()
-                    / cnt as f32;
-                assert!(
-                    (cen[c] - mean).abs() < 1e-4,
-                    "seed={seed} block={bb} dim={c}: {} vs {}",
-                    cen[c],
-                    mean
-                );
+        // centroid == mean of the stored (post-kconv) keys, per (head, block)
+        for head in 0..h_kv {
+            for bb in 0..cache.num_blocks() {
+                let cnt = cache.block_len(bb);
+                let cen = cache.centroid(head, bb);
+                for c in 0..d {
+                    let mean: f32 = (0..cnt)
+                        .map(|r| cache.keys_of(head)[(bb * block + r) * d + c])
+                        .sum::<f32>()
+                        / cnt as f32;
+                    assert!(
+                        (cen[c] - mean).abs() < 1e-4,
+                        "seed={seed} head={head} block={bb} dim={c}: {} vs {}",
+                        cen[c],
+                        mean
+                    );
+                }
             }
         }
     }
@@ -324,15 +458,15 @@ fn prop_batcher_random_arrival_deadlines() {
                     };
                     b.push(step, lane, 1, now).is_ok()
                 } else {
-                    let req = AttnRequest {
-                        id: i,
-                        kind: AttnKind::Moba,
-                        n: 4,
-                        d: 2,
-                        q: vec![0.0; 8],
-                        k: vec![0.0; 8],
-                        v: vec![0.0; 8],
-                    };
+                    let req = AttnRequest::single(
+                        i,
+                        AttnKind::Moba,
+                        4,
+                        2,
+                        vec![0.0; 8],
+                        vec![0.0; 8],
+                        vec![0.0; 8],
+                    );
                     b.push(req, lane, 8, now).is_ok()
                 };
                 if ok {
@@ -365,18 +499,19 @@ fn prop_batcher_random_arrival_deadlines() {
 /// The multi-core determinism contract: every registered backend
 /// produces bit-identical o (and, for the FlashMoBA pipeline, lse and
 /// routing indices) at MOBA_THREADS=1 vs any MOBA_THREADS>1, across
-/// randomized shapes whose row/block counts split unevenly over the
-/// workers. Exact equality — `to_bits`, not a tolerance.
+/// randomized multi-head shapes (GQA and ragged tails included) whose
+/// head/row/block counts split unevenly over the workers. Exact
+/// equality — `to_bits`, not a tolerance.
 #[test]
 fn prop_thread_count_never_changes_a_bit() {
     let registry = BackendRegistry::with_defaults();
     let serial = ExecCtx::serial();
     for seed in 0..CASES / 2 {
         let mut rng = Rng::new(13_000 + seed);
-        let shape = rand_shape(&mut rng);
+        let shape = rand_mh_shape(&mut rng);
         let threads = 2 + rng.below(6); // 2..=7 workers
         let par = ExecCtx::with_threads(threads);
-        let (q, k, v) = qkv(600 + seed, shape.n, shape.d);
+        let (q, k, v) = qkv_packed(600 + seed, shape.h, shape.h_kv, shape.n, shape.d);
 
         // every backend through the trait
         for b in registry.iter() {

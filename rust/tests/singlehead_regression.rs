@@ -1,0 +1,683 @@
+//! Single-head bit-parity regression suite: with `h = h_kv = 1`, every
+//! registered backend's `forward` and `forward_decode` must be
+//! **bit-identical** (`to_bits`, not a tolerance) to the pre-refactor
+//! single-head path.
+//!
+//! The `legacy` module below preserves the pre-multi-head serial
+//! kernels verbatim — the exact arithmetic the substrate computed
+//! before `MobaShape` became the packed `(h, n, d)` `AttnShape` —
+//! including its own copies of the centroid mean and both top-k
+//! selectors (the crate's single-head entry points are now thin
+//! delegates of the packed kernels, so the pin must not route through
+//! them). The only shared building blocks are `simd::{dot, axpy,
+//! scale}` (deliberately: the old kernels called exactly these) and
+//! `build_varlen` (untouched by the refactor). Any change to the
+//! multi-head kernels' per-head arithmetic or selection fails these
+//! exact-equality tests.
+
+use flash_moba::attention::backend::{AttentionBackend, BackendRegistry};
+use flash_moba::attention::decode::DecodeSession;
+use flash_moba::attention::flash_moba::{flash_moba_forward_ctx, FlashMobaConfig};
+use flash_moba::attention::moba_naive::moba_naive_forward_ctx;
+use flash_moba::attention::testutil::qkv;
+use flash_moba::attention::{AttnShape, ExecCtx};
+
+/// The pre-refactor single-head serial kernels, preserved as oracles.
+mod legacy {
+    use flash_moba::attention::simd::{axpy, dot, scale as vscale};
+    use flash_moba::attention::varlen::{build_varlen, VarlenLayout};
+
+    pub const NEG_INF: f32 = -1.0e30;
+
+    /// Pre-refactor single-head block centroids (Algorithm 2):
+    /// per-block sum in row order, scaled once.
+    fn centroids(k: &[f32], n: usize, d: usize, block: usize) -> Vec<f32> {
+        assert_eq!(n % block, 0);
+        let nb = n / block;
+        let inv = 1.0 / block as f32;
+        let mut out = vec![0.0f32; nb * d];
+        for j in 0..nb {
+            let dst = &mut out[j * d..(j + 1) * d];
+            for r in 0..block {
+                let src = &k[(j * block + r) * d..(j * block + r + 1) * d];
+                for c in 0..d {
+                    dst[c] += src[c];
+                }
+            }
+            for c in dst.iter_mut() {
+                *c *= inv;
+            }
+        }
+        out
+    }
+
+    /// Pre-refactor descending top-k insertion: strict `>` admission,
+    /// equal scores keep the earlier index, NaN never admitted.
+    fn topk_insert(best_s: &mut [f32], best_i: &mut [i32], score: f32, index: i32) {
+        let k = best_s.len();
+        if score > best_s[k - 1] {
+            let mut pos = k - 1;
+            while pos > 0 && best_s[pos - 1] < score {
+                best_s[pos] = best_s[pos - 1];
+                best_i[pos] = best_i[pos - 1];
+                pos -= 1;
+            }
+            best_s[pos] = score;
+            best_i[pos] = index;
+        }
+    }
+
+    /// Pre-refactor materializing selection (the original gating):
+    /// full score row, NaN filtered, total_cmp sort descending.
+    fn naive_topk(
+        q: &[f32],
+        centroids_: &[f32],
+        n: usize,
+        d: usize,
+        block: usize,
+        topk: usize,
+    ) -> Vec<i32> {
+        let nb = centroids_.len() / d;
+        let mut out = vec![-1i32; n * topk];
+        let mut order: Vec<usize> = Vec::with_capacity(nb);
+        for t in 0..n {
+            let own = t / block;
+            let qt = &q[t * d..(t + 1) * d];
+            let scores: Vec<f32> =
+                (0..nb).map(|j| dot(qt, &centroids_[j * d..(j + 1) * d])).collect();
+            order.clear();
+            order.extend((0..own).filter(|&j| !scores[j].is_nan()));
+            order.sort_by(|&a, &b| scores[b].total_cmp(&scores[a]));
+            for (slot, &j) in order.iter().take(topk).enumerate() {
+                out[t * topk + slot] = j as i32;
+            }
+        }
+        out
+    }
+
+    /// Pre-refactor streaming selection (Flash TopK): per-row running
+    /// top-k over ascending centroid tiles.
+    fn tiled_topk(
+        q: &[f32],
+        centroids_: &[f32],
+        n: usize,
+        d: usize,
+        block: usize,
+        topk: usize,
+        tile_c: usize,
+    ) -> Vec<i32> {
+        let tile_c = tile_c.max(1);
+        if topk == 0 {
+            return Vec::new();
+        }
+        let mut out = vec![-1i32; n * topk];
+        let mut best_s = vec![f32::NEG_INFINITY; topk];
+        let mut best_i = vec![-1i32; topk];
+        for t in 0..n {
+            let own = t / block; // candidates: blocks [0, own)
+            let qt = &q[t * d..(t + 1) * d];
+            best_s.fill(f32::NEG_INFINITY);
+            best_i.fill(-1);
+            let mut j0 = 0;
+            while j0 < own {
+                let jend = (j0 + tile_c).min(own);
+                for j in j0..jend {
+                    let dotv = dot(qt, &centroids_[j * d..(j + 1) * d]);
+                    topk_insert(&mut best_s, &mut best_i, dotv, j as i32);
+                }
+                j0 = jend;
+            }
+            out[t * topk..(t + 1) * topk].copy_from_slice(&best_i);
+        }
+        out
+    }
+
+    /// Pre-refactor `flash_attention` (serial): blocked online-softmax
+    /// over (n, d), query tiles of `br` rows, key tiles of `bc` columns.
+    pub fn flash_attention(
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        n: usize,
+        d: usize,
+        br: usize,
+        bc: usize,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let scale = 1.0 / (d as f32).sqrt();
+        let tq = n.div_ceil(br);
+        let mut o = vec![0.0f32; n * d];
+        let mut lse = vec![0.0f32; n];
+        let mut s = vec![0.0f32; br * bc];
+        let mut acc = vec![0.0f32; br * d];
+        let mut mrow = vec![NEG_INF; br];
+        let mut lrow = vec![0.0f32; br];
+        for it in 0..tq {
+            let r0 = it * br;
+            let rows = br.min(n - r0);
+            acc[..rows * d].fill(0.0);
+            mrow[..rows].fill(NEG_INF);
+            lrow[..rows].fill(0.0);
+            let last_col = r0 + rows;
+            let tk = last_col.div_ceil(bc);
+            for jt in 0..tk {
+                let c0 = jt * bc;
+                let cols = bc.min(last_col - c0).min(bc);
+                for r in 0..rows {
+                    let qt = &q[(r0 + r) * d..(r0 + r + 1) * d];
+                    let srow = &mut s[r * bc..r * bc + cols];
+                    for (cc, sval) in srow.iter_mut().enumerate() {
+                        let u = c0 + cc;
+                        if u > r0 + r {
+                            *sval = NEG_INF;
+                            continue;
+                        }
+                        *sval = dot(qt, &k[u * d..(u + 1) * d]) * scale;
+                    }
+                }
+                for r in 0..rows {
+                    let srow = &mut s[r * bc..r * bc + cols];
+                    let mut mt = mrow[r];
+                    for &x in srow.iter() {
+                        if x > mt {
+                            mt = x;
+                        }
+                    }
+                    if mt == NEG_INF {
+                        continue;
+                    }
+                    let corr = (mrow[r] - mt).exp();
+                    let mut psum = 0.0f32;
+                    for x in srow.iter_mut() {
+                        *x = if *x <= NEG_INF / 2.0 { 0.0 } else { (*x - mt).exp() };
+                        psum += *x;
+                    }
+                    lrow[r] = lrow[r] * corr + psum;
+                    let arow = &mut acc[r * d..(r + 1) * d];
+                    if corr != 1.0 {
+                        vscale(arow, corr);
+                    }
+                    for (cc, &p) in srow.iter().enumerate() {
+                        if p == 0.0 {
+                            continue;
+                        }
+                        axpy(arow, p, &v[(c0 + cc) * d..(c0 + cc + 1) * d]);
+                    }
+                    mrow[r] = mt;
+                }
+            }
+            for r in 0..rows {
+                let l = if lrow[r] == 0.0 { 1.0 } else { lrow[r] };
+                let ot = &mut o[(r0 + r) * d..(r0 + r + 1) * d];
+                let arow = &acc[r * d..(r + 1) * d];
+                for c in 0..d {
+                    ot[c] = arow[c] / l;
+                }
+                lse[r0 + r] = mrow[r] + lrow[r].max(1e-30).ln();
+            }
+        }
+        (o, lse)
+    }
+
+    /// Pre-refactor `moba_naive_forward` (serial five-stage pipeline,
+    /// block-aligned n).
+    pub fn moba_naive(
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        n: usize,
+        d: usize,
+        block: usize,
+        topk: usize,
+    ) -> (Vec<f32>, Vec<i32>) {
+        assert_eq!(n % block, 0, "legacy pipeline is block-aligned");
+        let nb = n / block;
+        let scale = 1.0 / (d as f32).sqrt();
+
+        // stage 1: gating
+        let c = centroids(k, n, d, block);
+        let indices = naive_topk(q, &c, n, d, block, topk);
+
+        // stage 2: reindex
+        let layout = build_varlen(&indices, n, topk, nb);
+        let gathered: Vec<Vec<f32>> = (0..nb)
+            .map(|j| {
+                let qs = layout.queries_of(j);
+                let mut g = Vec::with_capacity(qs.len() * d);
+                for &t in qs {
+                    g.extend_from_slice(&q[t as usize * d..(t as usize + 1) * d]);
+                }
+                g
+            })
+            .collect();
+
+        // stage 3: routed partials
+        let mut partial_o = vec![0.0f32; layout.total() * d];
+        let mut partial_l = vec![0.0f32; layout.total()];
+        let mut p_idx = 0usize;
+        for j in 0..nb {
+            let qs = layout.queries_of(j);
+            let g = &gathered[j];
+            let kb = &k[j * block * d..(j + 1) * block * d];
+            let vb = &v[j * block * d..(j + 1) * block * d];
+            for (row, _t) in qs.iter().enumerate() {
+                let qt = &g[row * d..(row + 1) * d];
+                let mut s = vec![0.0f32; block];
+                let mut m = NEG_INF;
+                for (u, su) in s.iter_mut().enumerate() {
+                    *su = dot(qt, &kb[u * d..(u + 1) * d]) * scale;
+                    if *su > m {
+                        m = *su;
+                    }
+                }
+                let mut z = 0.0f32;
+                let prow = &mut partial_o[p_idx * d..(p_idx + 1) * d];
+                for (u, su) in s.iter().enumerate() {
+                    let p = (su - m).exp();
+                    z += p;
+                    axpy(prow, p, &vb[u * d..(u + 1) * d]);
+                }
+                for cc in prow.iter_mut() {
+                    *cc /= z;
+                }
+                partial_l[p_idx] = m + z.ln();
+                p_idx += 1;
+            }
+        }
+
+        // stage 4: local (own block, causal)
+        let mut local_o = vec![0.0f32; n * d];
+        let mut local_l = vec![0.0f32; n];
+        for t in 0..n {
+            let own = t / block;
+            let base = own * block;
+            let qt = &q[t * d..(t + 1) * d];
+            let mut m = NEG_INF;
+            let upto = t - base;
+            let mut s = vec![0.0f32; upto + 1];
+            for (u, su) in s.iter_mut().enumerate() {
+                *su = dot(qt, &k[(base + u) * d..(base + u + 1) * d]) * scale;
+                if *su > m {
+                    m = *su;
+                }
+            }
+            let mut z = 0.0f32;
+            let ot = &mut local_o[t * d..(t + 1) * d];
+            for (u, su) in s.iter().enumerate() {
+                let p = (su - m).exp();
+                z += p;
+                axpy(ot, p, &v[(base + u) * d..(base + u + 1) * d]);
+            }
+            for cc in ot.iter_mut() {
+                *cc /= z;
+            }
+            local_l[t] = m + z.ln();
+        }
+
+        // stage 5: merge (local first, routed partials in ascending
+        // block order)
+        let mut o = vec![0.0f32; n * d];
+        let mut m = local_l.clone();
+        for j in 0..nb {
+            let qs = layout.queries_of(j);
+            for (off, &t) in qs.iter().enumerate() {
+                let p = layout.offsets[j] as usize + off;
+                let ti = t as usize;
+                if partial_l[p] > m[ti] {
+                    m[ti] = partial_l[p];
+                }
+            }
+        }
+        let mut z = vec![0.0f32; n];
+        for t in 0..n {
+            let w = (local_l[t] - m[t]).exp();
+            z[t] += w;
+            axpy(&mut o[t * d..(t + 1) * d], w, &local_o[t * d..(t + 1) * d]);
+        }
+        for j in 0..nb {
+            let qs = layout.queries_of(j);
+            for (off, &t) in qs.iter().enumerate() {
+                let p = layout.offsets[j] as usize + off;
+                let ti = t as usize;
+                let w = (partial_l[p] - m[ti]).exp();
+                z[ti] += w;
+                axpy(&mut o[ti * d..(ti + 1) * d], w, &partial_o[p * d..(p + 1) * d]);
+            }
+        }
+        for t in 0..n {
+            for cc in 0..d {
+                o[t * d + cc] /= z[t];
+            }
+        }
+        (o, indices)
+    }
+
+    /// Pre-refactor `flash_moba_forward` (serial, block-aligned n):
+    /// Flash TopK + the gather-and-densify forward over all rows.
+    #[allow(clippy::too_many_arguments)]
+    pub fn flash_moba(
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        n: usize,
+        d: usize,
+        block: usize,
+        topk: usize,
+        tile_r: usize,
+        tile_c: usize,
+        topk_tile: usize,
+    ) -> (Vec<f32>, Vec<f32>, Vec<i32>) {
+        assert_eq!(n % block, 0, "legacy pipeline is block-aligned");
+        let nb = n / block;
+        let c = centroids(k, n, d, block);
+        let indices = tiled_topk(q, &c, n, d, block, topk, topk_tile);
+        let layout = build_varlen(&indices, n, topk, nb);
+        let (o, lse) = forward_range(q, k, v, n, d, block, nb, tile_r, tile_c, &layout);
+        (o, lse, indices)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn forward_range(
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        n: usize,
+        d: usize,
+        block: usize,
+        nb: usize,
+        tile_r: usize,
+        tile_c: usize,
+        layout: &VarlenLayout,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let sm_scale = 1.0 / (d as f32).sqrt();
+        let tile_c = tile_c.min(block);
+        let mut m = vec![NEG_INF; n];
+        let mut l = vec![0.0f32; n];
+        let mut acc = vec![0.0f32; n * d];
+        let mut qg = vec![0.0f32; tile_r * d];
+        let mut s = vec![0.0f32; tile_r * tile_c];
+
+        for j in 0..nb {
+            let kb = &k[j * block * d..(j + 1) * block * d];
+            let vb = &v[j * block * d..(j + 1) * block * d];
+            let own_start = j * block;
+
+            let mut process_tile = |rows: &[u32], causal: bool| {
+                let rcount = rows.len();
+                for (r, &t) in rows.iter().enumerate() {
+                    qg[r * d..(r + 1) * d]
+                        .copy_from_slice(&q[t as usize * d..(t as usize + 1) * d]);
+                }
+                let tcs = block.div_ceil(tile_c);
+                for ct in 0..tcs {
+                    let c0 = ct * tile_c;
+                    let cols = tile_c.min(block - c0);
+                    for r in 0..rcount {
+                        let qt = &qg[r * d..(r + 1) * d];
+                        let trow = rows[r] as usize;
+                        let srow = &mut s[r * tile_c..r * tile_c + cols];
+                        for (cc, sval) in srow.iter_mut().enumerate() {
+                            let u = c0 + cc;
+                            if causal && own_start + u > trow {
+                                *sval = NEG_INF;
+                                continue;
+                            }
+                            *sval = dot(qt, &kb[u * d..(u + 1) * d]) * sm_scale;
+                        }
+                    }
+                    for r in 0..rcount {
+                        let ti = rows[r] as usize;
+                        let srow = &mut s[r * tile_c..r * tile_c + cols];
+                        let mut mt = m[ti];
+                        for &x in srow.iter() {
+                            if x > mt {
+                                mt = x;
+                            }
+                        }
+                        if mt == NEG_INF {
+                            continue;
+                        }
+                        let corr = (m[ti] - mt).exp();
+                        let mut psum = 0.0f32;
+                        for x in srow.iter_mut() {
+                            *x = if *x <= NEG_INF / 2.0 { 0.0 } else { (*x - mt).exp() };
+                            psum += *x;
+                        }
+                        l[ti] = l[ti] * corr + psum;
+                        let arow = &mut acc[ti * d..(ti + 1) * d];
+                        if corr != 1.0 {
+                            vscale(arow, corr);
+                        }
+                        for (cc, &p) in srow.iter().enumerate() {
+                            if p == 0.0 {
+                                continue;
+                            }
+                            axpy(arow, p, &vb[(c0 + cc) * d..(c0 + cc + 1) * d]);
+                        }
+                        m[ti] = mt;
+                    }
+                }
+            };
+
+            for chunk in layout.queries_of(j).chunks(tile_r) {
+                process_tile(chunk, false);
+            }
+            let own_rows: Vec<u32> =
+                (own_start as u32..((own_start + block).min(n)) as u32).collect();
+            for chunk in own_rows.chunks(tile_r) {
+                process_tile(chunk, true);
+            }
+        }
+
+        let mut o = vec![0.0f32; n * d];
+        let mut lse = vec![0.0f32; n];
+        for ti in 0..n {
+            let z = if l[ti] == 0.0 { 1.0 } else { l[ti] };
+            for c in 0..d {
+                o[ti * d + c] = acc[ti * d + c] / z;
+            }
+            lse[ti] = m[ti] + l[ti].max(1e-30).ln();
+        }
+        (o, lse)
+    }
+
+    /// Pre-refactor single-head decode: running per-block key sums +
+    /// streaming top-k routing + single-row softmax attention (the old
+    /// `KvCache::route` / `KvCache::attend`).
+    pub struct Cache {
+        d: usize,
+        block: usize,
+        k: Vec<f32>,
+        v: Vec<f32>,
+        sums: Vec<f32>,
+    }
+
+    impl Cache {
+        pub fn new(d: usize, block: usize) -> Self {
+            Self { d, block, k: Vec::new(), v: Vec::new(), sums: Vec::new() }
+        }
+
+        pub fn len(&self) -> usize {
+            self.k.len() / self.d
+        }
+
+        pub fn num_blocks(&self) -> usize {
+            self.len().div_ceil(self.block)
+        }
+
+        pub fn append(&mut self, k_t: &[f32], v_t: &[f32]) {
+            let t = self.len();
+            if t % self.block == 0 {
+                let len = self.sums.len();
+                self.sums.resize(len + self.d, 0.0);
+            }
+            let b = t / self.block;
+            let sum = &mut self.sums[b * self.d..(b + 1) * self.d];
+            for (c, s) in sum.iter_mut().enumerate() {
+                *s += k_t[c];
+            }
+            self.k.extend_from_slice(k_t);
+            self.v.extend_from_slice(v_t);
+        }
+
+        pub fn route(&self, q: &[f32], topk: usize) -> Vec<usize> {
+            let own = (self.len() - 1) / self.block;
+            let mut blocks: Vec<usize> = Vec::with_capacity(topk + 1);
+            if topk > 0 && own > 0 {
+                let mut best_s = vec![f32::NEG_INFINITY; topk];
+                let mut best_i = vec![-1i32; topk];
+                let mut cbuf = vec![0.0f32; self.d];
+                for j in 0..own {
+                    let inv = 1.0 / self.block as f32;
+                    let sum = &self.sums[j * self.d..(j + 1) * self.d];
+                    for (c, o) in cbuf.iter_mut().enumerate() {
+                        *o = sum[c] * inv;
+                    }
+                    topk_insert(&mut best_s, &mut best_i, dot(q, &cbuf), j as i32);
+                }
+                blocks.extend(best_i.iter().filter(|&&j| j >= 0).map(|&j| j as usize));
+                blocks.sort_unstable();
+            }
+            blocks.push(own);
+            blocks
+        }
+
+        pub fn attend(&self, q: &[f32], blocks: &[usize]) -> Vec<f32> {
+            let d = self.d;
+            let len = self.len();
+            let scale = 1.0 / (d as f32).sqrt();
+            let mut scores: Vec<f32> = Vec::new();
+            let mut rows: Vec<usize> = Vec::new();
+            let mut m = NEG_INF;
+            for &b in blocks {
+                let start = b * self.block;
+                let end = ((b + 1) * self.block).min(len);
+                for u in start..end {
+                    let s = dot(q, &self.k[u * d..(u + 1) * d]) * scale;
+                    if s > m {
+                        m = s;
+                    }
+                    scores.push(s);
+                    rows.push(u);
+                }
+            }
+            let mut z = 0.0f32;
+            let mut out = vec![0.0f32; d];
+            for (&s, &u) in scores.iter().zip(rows.iter()) {
+                let p = (s - m).exp();
+                z += p;
+                axpy(&mut out, p, &self.v[u * d..(u + 1) * d]);
+            }
+            for o in out.iter_mut() {
+                *o /= z;
+            }
+            out
+        }
+    }
+}
+
+fn bits_equal(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: bit mismatch at element {i}");
+    }
+}
+
+const SHAPES: [(usize, usize, usize, usize); 4] = [
+    (64, 4, 16, 1),
+    (96, 8, 16, 2),
+    (128, 16, 32, 3),
+    (96, 8, 16, 6), // fully routed
+];
+
+/// `dense` at h = h_kv = 1 is bit-identical to the pre-refactor
+/// single-head flash attention — at any thread count.
+#[test]
+fn dense_single_head_is_bit_identical_to_legacy() {
+    let registry = BackendRegistry::with_defaults();
+    let dense = registry.get("dense").unwrap();
+    for (n, d, block, topk) in SHAPES {
+        let shape = AttnShape::single(n, d, block, topk);
+        let (q, k, v) = qkv(0x51D + n as u64, n, d);
+        let (lo, _) = legacy::flash_attention(&q, &k, &v, n, d, 64, 64);
+        for threads in [1, 3] {
+            let ctx = ExecCtx::with_threads(threads);
+            let (o, _) = dense.forward(&ctx, &shape, &q, &k, &v);
+            bits_equal(&o, &lo, &format!("dense n={n} threads={threads}"));
+        }
+    }
+}
+
+/// `moba_naive` at h = h_kv = 1 is bit-identical to the pre-refactor
+/// five-stage pipeline: output AND routing table.
+#[test]
+fn moba_naive_single_head_is_bit_identical_to_legacy() {
+    for (n, d, block, topk) in SHAPES {
+        let shape = AttnShape::single(n, d, block, topk);
+        let (q, k, v) = qkv(0x52D + n as u64, n, d);
+        let (lo, lidx) = legacy::moba_naive(&q, &k, &v, n, d, block, topk);
+        for threads in [1, 3] {
+            let ctx = ExecCtx::with_threads(threads);
+            let (o, idx, _) = moba_naive_forward_ctx(&ctx, &q, &k, &v, shape);
+            assert_eq!(idx, lidx, "moba_naive routing n={n} threads={threads}");
+            bits_equal(&o, &lo, &format!("moba_naive n={n} threads={threads}"));
+        }
+    }
+}
+
+/// `flash_moba` at h = h_kv = 1 is bit-identical to the pre-refactor
+/// fused kernel: o, lse AND routing table — with the default tile
+/// config and a deliberately awkward one.
+#[test]
+fn flash_moba_single_head_is_bit_identical_to_legacy() {
+    for (n, d, block, topk) in SHAPES {
+        let shape = AttnShape::single(n, d, block, topk);
+        let (q, k, v) = qkv(0x53D + n as u64, n, d);
+        for cfg in [
+            FlashMobaConfig::default(),
+            FlashMobaConfig { tile_r: 5, tile_c: 9, topk_tile: 3 },
+        ] {
+            let (lo, llse, lidx) = legacy::flash_moba(
+                &q, &k, &v, n, d, block, topk, cfg.tile_r, cfg.tile_c, cfg.topk_tile,
+            );
+            for threads in [1, 4] {
+                let ctx = ExecCtx::with_threads(threads);
+                let out = flash_moba_forward_ctx(&ctx, &q, &k, &v, shape, cfg);
+                assert_eq!(out.indices, lidx, "flash_moba routing n={n} threads={threads}");
+                bits_equal(&out.o, &lo, &format!("flash_moba o n={n} threads={threads}"));
+                bits_equal(&out.lse, &llse, &format!("flash_moba lse n={n} threads={threads}"));
+            }
+        }
+    }
+}
+
+/// Every backend's `forward_decode` at h = h_kv = 1 is bit-identical to
+/// the pre-refactor single-head decode: the dense fallback reads the
+/// whole legacy cache, the sparse backends follow the legacy routed
+/// path (same running sums, same insertion, same attend order).
+#[test]
+fn decode_single_head_is_bit_identical_to_legacy() {
+    let registry = BackendRegistry::with_defaults();
+    let ctx = ExecCtx::global();
+    for (n, d, block, topk) in SHAPES {
+        let (q, k, v) = qkv(0x54D + n as u64, n, d);
+        for b in registry.iter() {
+            let mut sess = DecodeSession::new(1, 1, d, block, topk);
+            let mut cache = legacy::Cache::new(d, block);
+            for t in 0..n {
+                let (kt, vt) = (&k[t * d..(t + 1) * d], &v[t * d..(t + 1) * d]);
+                sess.append(kt, vt);
+                cache.append(kt, vt);
+                let qt = &q[t * d..(t + 1) * d];
+                let o = b.forward_decode(ctx, &mut sess, qt);
+                let expect = if b.is_exact() {
+                    let all: Vec<usize> = (0..cache.num_blocks()).collect();
+                    cache.attend(qt, &all)
+                } else {
+                    let blocks = cache.route(qt, topk);
+                    cache.attend(qt, &blocks)
+                };
+                bits_equal(&o, &expect, &format!("{} decode n={n} t={t}", b.name()));
+            }
+        }
+    }
+}
