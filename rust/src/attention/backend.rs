@@ -24,8 +24,8 @@
 //! count (the determinism contract of `crate::util::pool`).
 
 use super::decode::DecodeSession;
-use super::dense::{flash_attention_packed, naive_attention_packed};
-use super::flash_moba::{flash_moba_forward_ctx, FlashMobaConfig};
+use super::dense::{flash_attention_packed_into, naive_attention_packed};
+use super::flash_moba::{flash_moba_forward_ctx, flash_moba_forward_into, FlashMobaConfig};
 use super::moba_naive::moba_naive_forward_ctx;
 use super::stats::StageStats;
 use super::testutil::{max_abs_diff, qkv_packed};
@@ -76,6 +76,32 @@ pub trait AttentionBackend: Send + Sync {
         v: &[f32],
     ) -> (Vec<f32>, StageStats);
 
+    /// [`forward`](AttentionBackend::forward) writing the packed
+    /// `(h, n, d)` output into a caller-provided buffer — the
+    /// steady-state serving entry point. The output is bit-identical
+    /// to `forward`'s. The default clones through `forward`; the
+    /// `dense` and `flash_moba` backends override it with genuinely
+    /// allocation-free paths (intermediates drawn from `ctx`'s scratch
+    /// arenas), so a caller that reuses `o` across same-shape calls
+    /// allocates nothing after warmup (pinned by
+    /// `rust/tests/alloc_regression.rs`). `moba_naive` only avoids the
+    /// output copy: its five-stage pipeline materializes intermediates
+    /// by design — that overhead *is* the baseline being reproduced.
+    fn forward_into(
+        &self,
+        ctx: &ExecCtx,
+        shape: &AttnShape,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        o: &mut Vec<f32>,
+    ) -> StageStats {
+        let (out, st) = self.forward(ctx, shape, q, k, v);
+        o.clear();
+        o.extend_from_slice(&out);
+        st
+    }
+
     /// One autoregressive decode step: attention of the packed
     /// `(h, d)` query `q_t` (at the session's current position, i.e.
     /// its last appended token) over the session's KV cache. One call
@@ -97,6 +123,24 @@ pub trait AttentionBackend: Send + Sync {
         q_t: &[f32],
     ) -> Vec<f32> {
         session.decode_dense(q_t)
+    }
+
+    /// [`forward_decode`](AttentionBackend::forward_decode) writing the
+    /// packed `(h, d)` output row into a caller-provided buffer — the
+    /// serving decode lane's entry point. Bit-identical to
+    /// `forward_decode`. With the session's persistent step workspace,
+    /// the in-tree backends' overrides make a steady-state step
+    /// perform zero heap allocations.
+    fn forward_decode_into(
+        &self,
+        ctx: &ExecCtx,
+        session: &mut DecodeSession,
+        q_t: &[f32],
+        o: &mut Vec<f32>,
+    ) {
+        let out = self.forward_decode(ctx, session, q_t);
+        o.clear();
+        o.extend_from_slice(&out);
     }
 }
 
@@ -135,14 +179,49 @@ impl AttentionBackend for DenseBackend {
         k: &[f32],
         v: &[f32],
     ) -> (Vec<f32>, StageStats) {
+        let mut o = Vec::new();
+        let st = self.forward_into(ctx, shape, q, k, v, &mut o);
+        (o, st)
+    }
+
+    fn forward_into(
+        &self,
+        ctx: &ExecCtx,
+        shape: &AttnShape,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        o: &mut Vec<f32>,
+    ) -> StageStats {
         let mut st = StageStats::for_heads(ctx, shape.h);
-        let (o, _lse, ws) = st.time("fwd", || {
-            flash_attention_packed(
-                ctx, q, k, v, shape.h, shape.h_kv, shape.n, shape.d, self.br, self.bc,
+        // the lse row is internal on this path; borrow it from the arena
+        let (mut lse, pooled) = {
+            let mut s = ctx.scratch(0);
+            let pooled = s.is_pooled();
+            (s.take_f32(shape.h * shape.n, 0.0), pooled)
+        };
+        let ws = st.time("fwd", || {
+            flash_attention_packed_into(
+                ctx, q, k, v, shape.h, shape.h_kv, shape.n, shape.d, self.br, self.bc, o, &mut lse,
             )
         });
+        // pooled-taken goes back (waiting out any contention); a
+        // fallback-taken row is throwaway and drops here
+        if pooled {
+            ctx.scratch_wait(0).give_f32(lse);
+        }
         st.add_workspace(ws);
-        (o, st)
+        st
+    }
+
+    fn forward_decode_into(
+        &self,
+        _ctx: &ExecCtx,
+        session: &mut DecodeSession,
+        q_t: &[f32],
+        o: &mut Vec<f32>,
+    ) {
+        session.decode_dense_into(q_t, o);
     }
 }
 
@@ -174,6 +253,24 @@ impl AttentionBackend for MobaNaiveBackend {
         (o, st)
     }
 
+    /// Moves the pipeline's output into `o` instead of copying it. The
+    /// five-stage baseline allocates its intermediates by design (the
+    /// overhead under study), so this is NOT an allocation-free path —
+    /// only the redundant output copy of the default impl is avoided.
+    fn forward_into(
+        &self,
+        ctx: &ExecCtx,
+        shape: &AttnShape,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        o: &mut Vec<f32>,
+    ) -> StageStats {
+        let (out, _indices, st) = moba_naive_forward_ctx(ctx, q, k, v, *shape);
+        *o = out;
+        st
+    }
+
     /// Streaming MoBA routing over the cached centroids. Per step there
     /// is no five-stage pipeline to reproduce — the selected block set
     /// is identical to the prefill gating, so the routed per-head
@@ -185,6 +282,16 @@ impl AttentionBackend for MobaNaiveBackend {
         q_t: &[f32],
     ) -> Vec<f32> {
         session.decode_routed(q_t)
+    }
+
+    fn forward_decode_into(
+        &self,
+        _ctx: &ExecCtx,
+        session: &mut DecodeSession,
+        q_t: &[f32],
+        o: &mut Vec<f32>,
+    ) {
+        session.decode_routed_into(q_t, o);
     }
 }
 
@@ -221,6 +328,18 @@ impl AttentionBackend for FlashMobaBackend {
         (out.o, out.stats)
     }
 
+    fn forward_into(
+        &self,
+        ctx: &ExecCtx,
+        shape: &AttnShape,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        o: &mut Vec<f32>,
+    ) -> StageStats {
+        flash_moba_forward_into(ctx, q, k, v, *shape, self.cfg, o)
+    }
+
     /// Streaming tiled top-k against the cache's running centroids +
     /// per-head single-row attention over the gathered blocks — the
     /// decode analogue of the fused two-stage forward.
@@ -231,6 +350,16 @@ impl AttentionBackend for FlashMobaBackend {
         q_t: &[f32],
     ) -> Vec<f32> {
         session.decode_routed(q_t)
+    }
+
+    fn forward_decode_into(
+        &self,
+        _ctx: &ExecCtx,
+        session: &mut DecodeSession,
+        q_t: &[f32],
+        o: &mut Vec<f32>,
+    ) {
+        session.decode_routed_into(q_t, o);
     }
 }
 
@@ -565,6 +694,57 @@ mod tests {
                     let expect = packed_rows(&prefill, shape.h, shape.n, shape.d, t);
                     let dev = max_abs_diff(&o, &expect);
                     assert!(dev < 1e-4, "{} row {t} dev {dev:.2e} ({shape:?})", b.name());
+                }
+            }
+        }
+    }
+
+    /// The `_into` surface is bit-identical to the allocating one for
+    /// every registered backend — prefill and decode — and reusing the
+    /// output buffer across calls changes nothing.
+    #[test]
+    fn into_paths_match_allocating_paths_bitwise() {
+        let ctx = ExecCtx::global();
+        let r = BackendRegistry::with_defaults();
+        for shape in [AttnShape::single(96, 8, 16, 2), AttnShape::new(4, 2, 100, 8, 16, 2)] {
+            let (q, k, v) = qkv_packed(91, shape.h, shape.h_kv, shape.n, shape.d);
+            let mut o = vec![7.0f32; 3]; // stale contents must be replaced
+            for b in r.iter() {
+                if !b.supports(&shape) {
+                    continue;
+                }
+                let (expect, _) = b.forward(ctx, &shape, &q, &k, &v);
+                for _ in 0..2 {
+                    let st = b.forward_into(ctx, &shape, &q, &k, &v, &mut o);
+                    assert_eq!(o.len(), expect.len(), "{}", b.name());
+                    assert!(
+                        o.iter().zip(&expect).all(|(a, z)| a.to_bits() == z.to_bits()),
+                        "{} forward_into differs ({shape:?})",
+                        b.name()
+                    );
+                    assert_eq!(st.heads(), shape.h);
+                }
+            }
+            // decode: two identical sessions, one stepped through each API
+            for b in r.iter() {
+                let mut s1 =
+                    DecodeSession::new(shape.h, shape.h_kv, shape.d, shape.block, shape.topk);
+                let mut s2 = s1.clone();
+                let mut row = Vec::new();
+                for t in 0..shape.n.min(40) {
+                    let kt = packed_rows(&k, shape.h_kv, shape.n, shape.d, t);
+                    let vt = packed_rows(&v, shape.h_kv, shape.n, shape.d, t);
+                    s1.append(&kt, &vt);
+                    s2.append(&kt, &vt);
+                    let qt = packed_rows(&q, shape.h, shape.n, shape.d, t);
+                    let expect = b.forward_decode(ctx, &mut s1, &qt);
+                    b.forward_decode_into(ctx, &mut s2, &qt, &mut row);
+                    assert_eq!(row.len(), expect.len());
+                    assert!(
+                        row.iter().zip(&expect).all(|(a, z)| a.to_bits() == z.to_bits()),
+                        "{} forward_decode_into differs at t={t}",
+                        b.name()
+                    );
                 }
             }
         }

@@ -12,7 +12,7 @@
 //! independent work unit computed with the unchanged serial arithmetic,
 //! so the result is bit-identical at any thread count.
 
-use crate::util::pool::{concat, ExecCtx};
+use crate::util::pool::ExecCtx;
 
 /// k: (n, d) row-major -> centroids (n / block, d), on the process-wide
 /// shared pool.
@@ -46,15 +46,35 @@ pub fn centroids_packed(
     d: usize,
     block: usize,
 ) -> Vec<f32> {
+    let cb = n / block;
+    let mut out = vec![0.0f32; h_kv * cb * d];
+    centroids_packed_into(ctx, k, h_kv, n, d, block, &mut out);
+    out
+}
+
+/// [`centroids_packed`] writing into a caller-provided `(h_kv, cb, d)`
+/// buffer — the zero-allocation steady-state path (no per-range chunk
+/// vectors, no concat copy; the serial path allocates nothing).
+pub fn centroids_packed_into(
+    ctx: &ExecCtx,
+    k: &[f32],
+    h_kv: usize,
+    n: usize,
+    d: usize,
+    block: usize,
+    out: &mut [f32],
+) {
     assert_eq!(k.len(), h_kv * n * d);
     let cb = n / block;
+    assert_eq!(out.len(), h_kv * cb * d);
     let inv = 1.0 / block as f32;
-    concat(ctx.pool().map_ranges(h_kv * cb, |range| {
-        let mut out = vec![0.0f32; range.len() * d];
+    let none: &mut [f32] = &mut [];
+    ctx.pool().for_ranges_split(h_kv * cb, out, none, |u| (u * d, 0), |_, range, chunk, _| {
         for (uu, u) in range.enumerate() {
             let (head, j) = (u / cb, u % cb);
             let base = head * n + j * block;
-            let dst = &mut out[uu * d..(uu + 1) * d];
+            let dst = &mut chunk[uu * d..(uu + 1) * d];
+            dst.fill(0.0);
             for r in 0..block {
                 let src = &k[(base + r) * d..(base + r + 1) * d];
                 for c in 0..d {
@@ -65,8 +85,7 @@ pub fn centroids_packed(
                 *c *= inv;
             }
         }
-        out
-    }))
+    });
 }
 
 #[cfg(test)]

@@ -32,8 +32,9 @@
 
 use super::centroid::centroids;
 use super::dense::NEG_INF;
+use super::gemm::{accum_rows, qk_row};
 use super::kconv::KconvStream;
-use super::simd::{axpy, dot};
+use super::simd::dot;
 use super::topk::{tiled_topk, topk_insert};
 
 /// One KV head's storage: cached (possibly kconv'd) keys and values,
@@ -218,24 +219,47 @@ impl KvCache {
     /// with the same arithmetic — so it reproduces prefill routing
     /// exactly.
     pub fn route(&self, q: &[f32], head: usize, topk: usize) -> Vec<usize> {
+        let mut blocks = Vec::new();
+        let (mut best_s, mut best_i, mut cbuf) = (Vec::new(), Vec::new(), Vec::new());
+        self.route_into(q, head, topk, &mut blocks, &mut best_s, &mut best_i, &mut cbuf);
+        blocks
+    }
+
+    /// [`KvCache::route`] into caller-provided (reused) buffers — the
+    /// per-token zero-allocation path. `blocks` receives the selection;
+    /// `best_s`/`best_i`/`cbuf` are the running top-k state and the
+    /// centroid row, reused across calls.
+    #[allow(clippy::too_many_arguments)]
+    pub fn route_into(
+        &self,
+        q: &[f32],
+        head: usize,
+        topk: usize,
+        blocks: &mut Vec<usize>,
+        best_s: &mut Vec<f32>,
+        best_i: &mut Vec<i32>,
+        cbuf: &mut Vec<f32>,
+    ) {
         assert!(!self.is_empty(), "route called on an empty cache");
         assert_eq!(q.len(), self.d);
         let own = (self.len() - 1) / self.block;
-        let mut blocks: Vec<usize> = Vec::with_capacity(topk + 1);
+        blocks.clear();
         if topk > 0 && own > 0 {
             // candidates: blocks [0, own) — all complete by construction
-            let mut best_s = vec![f32::NEG_INFINITY; topk];
-            let mut best_i = vec![-1i32; topk];
-            let mut cbuf = vec![0.0f32; self.d];
+            best_s.clear();
+            best_s.resize(topk, f32::NEG_INFINITY);
+            best_i.clear();
+            best_i.resize(topk, -1);
+            cbuf.clear();
+            cbuf.resize(self.d, 0.0);
             for j in 0..own {
-                self.centroid_into(head, j, &mut cbuf);
-                topk_insert(&mut best_s, &mut best_i, dot(q, &cbuf), j as i32);
+                self.centroid_into(head, j, cbuf);
+                topk_insert(best_s, best_i, dot(q, cbuf), j as i32);
             }
             blocks.extend(best_i.iter().filter(|&&j| j >= 0).map(|&j| j as usize));
             blocks.sort_unstable();
         }
         blocks.push(own);
-        blocks
     }
 
     /// Single-row softmax attention of one query head's row `q` over
@@ -244,43 +268,92 @@ impl KvCache {
     /// scores, subtract the max, combine values — the decode analogue
     /// of one `naive_attention` row.
     pub fn attend(&self, q: &[f32], head: usize, blocks: &[usize]) -> Vec<f32> {
+        let mut scores = Vec::new();
+        let mut out = vec![0.0f32; self.d];
+        self.attend_into(q, head, blocks, &mut scores, &mut out);
+        out
+    }
+
+    /// [`KvCache::attend`] into a caller-provided output row, with the
+    /// score buffer reused across calls — the per-token
+    /// zero-allocation path. Scores run on the register-blocked gemv
+    /// per block (cache rows are contiguous) and the value combine on
+    /// the fused [`accum_rows`]; both preserve the per-element f32
+    /// operation order of the dot/axpy formulation, so the output is
+    /// bit-identical to it (pinned by the single-head legacy decode
+    /// regression).
+    pub fn attend_into(
+        &self,
+        q: &[f32],
+        head: usize,
+        blocks: &[usize],
+        scores: &mut Vec<f32>,
+        out: &mut [f32],
+    ) {
         assert!(!self.is_empty(), "attend called on an empty cache");
         assert_eq!(q.len(), self.d);
+        assert_eq!(out.len(), self.d);
         let d = self.d;
         let len = self.len();
         let store = &self.heads[head];
         let scale = 1.0 / (d as f32).sqrt();
-        let mut scores: Vec<f32> = Vec::with_capacity(blocks.len() * self.block);
-        let mut rows: Vec<usize> = Vec::with_capacity(blocks.len() * self.block);
-        let mut m = NEG_INF;
+        scores.clear();
         for &b in blocks {
             let start = b * self.block;
             let end = ((b + 1) * self.block).min(len);
-            for u in start..end {
-                let s = dot(q, &store.k[u * d..(u + 1) * d]) * scale;
-                if s > m {
-                    m = s;
-                }
-                scores.push(s);
-                rows.push(u);
+            let seg = scores.len();
+            scores.resize(seg + (end - start), 0.0);
+            qk_row(q, &store.k[start * d..end * d], d, end - start, scale, &mut scores[seg..]);
+        }
+        let mut m = NEG_INF;
+        for &x in scores.iter() {
+            if x > m {
+                m = x;
             }
         }
         let mut z = 0.0f32;
-        let mut out = vec![0.0f32; d];
-        for (&s, &u) in scores.iter().zip(rows.iter()) {
-            let p = (s - m).exp();
-            z += p;
-            axpy(&mut out, p, &store.v[u * d..(u + 1) * d]);
+        for x in scores.iter_mut() {
+            *x = (*x - m).exp();
+            z += *x;
+        }
+        out.fill(0.0);
+        let mut seg = 0usize;
+        for &b in blocks {
+            let start = b * self.block;
+            let end = ((b + 1) * self.block).min(len);
+            accum_rows(out, &scores[seg..seg + (end - start)], &store.v[start * d..end * d]);
+            seg += end - start;
         }
         for o in out.iter_mut() {
             *o /= z;
         }
-        out
+    }
+
+    /// K and V bytes one query head reads from the cache for `blocks`.
+    pub fn gather_bytes(&self, blocks: &[usize]) -> u64 {
+        let toks: usize = blocks.iter().map(|&b| self.block_len(b)).sum();
+        (2 * toks * self.d * 4) as u64
     }
 }
 
+/// The per-session reusable buffers one decode step works in: routing
+/// state, the selected block list, the score row and the centroid row.
+/// Persisted across steps so a steady-state decode step performs
+/// **zero heap allocations** (pinned by
+/// `rust/tests/alloc_regression.rs`) — these were eight fresh `Vec`s
+/// per token before the workspace-reuse pass.
+#[derive(Debug, Clone, Default)]
+struct DecodeScratch {
+    blocks: Vec<usize>,
+    best_s: Vec<f32>,
+    best_i: Vec<i32>,
+    cbuf: Vec<f32>,
+    scores: Vec<f32>,
+}
+
 /// One autoregressive decode session: a [`KvCache`] plus the head
-/// layout, routing geometry and per-step accounting. One
+/// layout, routing geometry, reusable step workspace and per-step
+/// accounting. One
 /// [`AttentionBackend::forward_decode`](super::backend::AttentionBackend::forward_decode)
 /// call per token covers all `h` query heads.
 #[derive(Debug, Clone)]
@@ -289,6 +362,8 @@ pub struct DecodeSession {
     /// query heads served per step (GQA group = h / cache.h_kv())
     h: usize,
     topk: usize,
+    /// reusable per-step working buffers
+    scratch: DecodeScratch,
     /// decode steps served so far
     steps: u64,
     /// K/V bytes gathered from the cache by the last decode step,
@@ -306,6 +381,7 @@ impl DecodeSession {
             cache: KvCache::new(h_kv, d, block),
             h,
             topk,
+            scratch: DecodeScratch::default(),
             steps: 0,
             last_gathered_bytes: 0,
             last_routed_blocks: 0,
@@ -395,47 +471,81 @@ impl DecodeSession {
     /// blocks + own block (the MoBA decode path). Returns the packed
     /// `(h, d)` output row.
     pub fn decode_routed(&mut self, q: &[f32]) -> Vec<f32> {
+        let mut out = Vec::new();
+        self.decode_routed_into(q, &mut out);
+        out
+    }
+
+    /// [`DecodeSession::decode_routed`] into a caller-provided (reused)
+    /// output row — with the session's persistent step workspace, a
+    /// steady-state call performs zero heap allocations.
+    pub fn decode_routed_into(&mut self, q: &[f32], out: &mut Vec<f32>) {
         assert_eq!(q.len(), self.h * self.d());
         let d = self.d();
-        let mut out = Vec::with_capacity(self.h * d);
+        let h = self.h;
+        let topk = self.topk;
+        let group = h / self.cache.h_kv();
+        // resize only: attend_into fully rewrites every head's row
+        out.resize(h * d, 0.0);
         let mut gathered = 0u64;
         let mut routed = 0usize;
-        for qh in 0..self.h {
-            let kvh = self.kv_head_of(qh);
-            let qrow = &q[qh * d..(qh + 1) * d];
-            let blocks = self.cache.route(qrow, kvh, self.topk);
-            gathered += self.gather_bytes(&blocks);
-            routed += blocks.len();
-            out.extend(self.cache.attend(qrow, kvh, &blocks));
+        {
+            let DecodeSession { cache, scratch, .. } = self;
+            for qh in 0..h {
+                let kvh = qh / group;
+                let qrow = &q[qh * d..(qh + 1) * d];
+                cache.route_into(
+                    qrow,
+                    kvh,
+                    topk,
+                    &mut scratch.blocks,
+                    &mut scratch.best_s,
+                    &mut scratch.best_i,
+                    &mut scratch.cbuf,
+                );
+                gathered += cache.gather_bytes(&scratch.blocks);
+                routed += scratch.blocks.len();
+                let orow = &mut out[qh * d..(qh + 1) * d];
+                cache.attend_into(qrow, kvh, &scratch.blocks, &mut scratch.scores, orow);
+            }
         }
         self.note_step(gathered, routed);
-        out
     }
 
     /// Exact dense decode of a packed `(h, d)` query over the whole
     /// cache (the fallback path and the oracle for routed decode at
     /// full routing). Returns the packed `(h, d)` output row.
     pub fn decode_dense(&mut self, q: &[f32]) -> Vec<f32> {
-        assert_eq!(q.len(), self.h * self.d());
-        let d = self.d();
-        let blocks: Vec<usize> = (0..self.cache.num_blocks()).collect();
-        let mut out = Vec::with_capacity(self.h * d);
-        let mut gathered = 0u64;
-        let mut routed = 0usize;
-        for qh in 0..self.h {
-            let kvh = self.kv_head_of(qh);
-            gathered += self.gather_bytes(&blocks);
-            routed += blocks.len();
-            out.extend(self.cache.attend(&q[qh * d..(qh + 1) * d], kvh, &blocks));
-        }
-        self.note_step(gathered, routed);
+        let mut out = Vec::new();
+        self.decode_dense_into(q, &mut out);
         out
     }
 
-    /// K and V bytes one query head reads from the cache for `blocks`.
-    fn gather_bytes(&self, blocks: &[usize]) -> u64 {
-        let toks: usize = blocks.iter().map(|&b| self.cache.block_len(b)).sum();
-        (2 * toks * self.d() * 4) as u64
+    /// [`DecodeSession::decode_dense`] into a caller-provided (reused)
+    /// output row — the zero-allocation twin.
+    pub fn decode_dense_into(&mut self, q: &[f32], out: &mut Vec<f32>) {
+        assert_eq!(q.len(), self.h * self.d());
+        let d = self.d();
+        let h = self.h;
+        let group = h / self.cache.h_kv();
+        // resize only: attend_into fully rewrites every head's row
+        out.resize(h * d, 0.0);
+        let mut gathered = 0u64;
+        let mut routed = 0usize;
+        {
+            let DecodeSession { cache, scratch, .. } = self;
+            scratch.blocks.clear();
+            scratch.blocks.extend(0..cache.num_blocks());
+            for qh in 0..h {
+                let kvh = qh / group;
+                gathered += cache.gather_bytes(&scratch.blocks);
+                routed += scratch.blocks.len();
+                let qrow = &q[qh * d..(qh + 1) * d];
+                let orow = &mut out[qh * d..(qh + 1) * d];
+                cache.attend_into(qrow, kvh, &scratch.blocks, &mut scratch.scores, orow);
+            }
+        }
+        self.note_step(gathered, routed);
     }
 
     fn note_step(&mut self, gathered: u64, routed: usize) {

@@ -17,7 +17,10 @@
 //! the merge stage of the original-MoBA pipeline and by the backward
 //! pass).
 
-use super::simd::{axpy, dot, scale as vscale};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::gemm::{qkt_tile, softmax_accum};
+use super::simd::{axpy, dot};
 use super::stats::ws_bytes;
 use crate::util::pool::ExecCtx;
 
@@ -142,6 +145,41 @@ pub fn flash_attention_packed(
     br: usize,
     bc: usize,
 ) -> (Vec<f32>, Vec<f32>, u64) {
+    let mut o = Vec::new();
+    let mut lse = Vec::new();
+    let ws = flash_attention_packed_into(ctx, q, k, v, h, h_kv, n, d, br, bc, &mut o, &mut lse);
+    (o, lse, ws)
+}
+
+/// [`flash_attention_packed`] writing into caller-provided output
+/// buffers, with every per-worker tile buffer (score tile, (m, l, acc)
+/// accumulators) drawn from the context's scratch arenas — the
+/// zero-allocation steady-state path (serial repeats of the same shape
+/// allocate nothing after warmup; `rust/tests/alloc_regression.rs`).
+///
+/// Score tiles run on the register-blocked [`qkt_tile`] microkernel
+/// and the accumulator update on the fused [`softmax_accum`]; both
+/// preserve the per-element f32 operation order of the scalar
+/// dot/axpy/scale formulation, so outputs are `to_bits`-identical to
+/// the pre-microkernel kernel (pinned by the scalar-oracle property
+/// test and the single-head legacy regression suite). Causal masking
+/// is applied by overwriting the dense tile after the GEMM — masked
+/// entries never survive, so the surviving values are unchanged.
+#[allow(clippy::too_many_arguments)]
+pub fn flash_attention_packed_into(
+    ctx: &ExecCtx,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    h: usize,
+    h_kv: usize,
+    n: usize,
+    d: usize,
+    br: usize,
+    bc: usize,
+    o: &mut Vec<f32>,
+    lse: &mut Vec<f32>,
+) -> u64 {
     assert!(h >= 1 && h_kv >= 1 && h % h_kv == 0, "h={h} must be a multiple of h_kv={h_kv}");
     assert_eq!(q.len(), h * n * d);
     assert_eq!(k.len(), h_kv * n * d);
@@ -149,102 +187,123 @@ pub fn flash_attention_packed(
     let group = h / h_kv;
     let scale = 1.0 / (d as f32).sqrt();
     let tq = n.div_ceil(br);
-    let parts = ctx.pool().map_ranges(h * tq, |units| {
-        let mut o = Vec::with_capacity(units.len() * br * d);
-        let mut lse = Vec::with_capacity(units.len() * br);
-        let mut s = vec![0.0f32; br * bc];
-        let mut acc = vec![0.0f32; br * d];
-        let mut mrow = vec![NEG_INF; br];
-        let mut lrow = vec![0.0f32; br];
-        let workspace = ws_bytes(&[s.len(), acc.len(), mrow.len(), lrow.len()]);
+    // resize only (no clear): every element is overwritten by the tile
+    // epilogues, and a same-length resize is a no-op — clearing first
+    // would re-fill the whole output on every steady-state call
+    o.resize(h * n * d, 0.0);
+    lse.resize(h * n, 0.0);
+    // first output row of unit u, in packed (h, n) row coordinates
+    let row_off = |u: usize| {
+        let (head, it) = (u / tq, u % tq);
+        head * n + (it * br).min(n)
+    };
+    let workspace = AtomicU64::new(0);
+    ctx.pool().for_ranges_split(
+        h * tq,
+        o.as_mut_slice(),
+        lse.as_mut_slice(),
+        |u| {
+            let ro = row_off(u);
+            (ro * d, ro)
+        },
+        |slot, units, o_chunk, lse_chunk| {
+            let mut scratch = ctx.scratch(slot);
+            let mut s = scratch.take_f32(br * bc, 0.0);
+            let mut acc = scratch.take_f32(br * d, 0.0);
+            let mut mrow = scratch.take_f32(br, NEG_INF);
+            let mut lrow = scratch.take_f32(br, 0.0);
+            workspace.fetch_add(
+                ws_bytes(&[s.len(), acc.len(), mrow.len(), lrow.len()]),
+                Ordering::Relaxed,
+            );
+            let chunk_base = row_off(units.start);
 
-        for u in units {
-            let (head, it) = (u / tq, u % tq);
-            let qh = &q[head * n * d..(head + 1) * n * d];
-            let kvh = head / group;
-            let kh = &k[kvh * n * d..(kvh + 1) * n * d];
-            let vh = &v[kvh * n * d..(kvh + 1) * n * d];
+            for u in units {
+                let (head, it) = (u / tq, u % tq);
+                let qh = &q[head * n * d..(head + 1) * n * d];
+                let kvh = head / group;
+                let kh = &k[kvh * n * d..(kvh + 1) * n * d];
+                let vh = &v[kvh * n * d..(kvh + 1) * n * d];
 
-            let r0 = it * br;
-            let rows = br.min(n - r0);
-            acc[..rows * d].fill(0.0);
-            mrow[..rows].fill(NEG_INF);
-            lrow[..rows].fill(0.0);
-            // causal: key tiles only up to the query tile's end
-            let last_col = r0 + rows; // exclusive
-            let tk = last_col.div_ceil(bc);
-            for jt in 0..tk {
-                let c0 = jt * bc;
-                let cols = bc.min(last_col - c0).min(bc);
-                // scores tile
-                for r in 0..rows {
-                    let qt = &qh[(r0 + r) * d..(r0 + r + 1) * d];
-                    let srow = &mut s[r * bc..r * bc + cols];
-                    for (cc, sval) in srow.iter_mut().enumerate() {
-                        let col = c0 + cc;
-                        if col > r0 + r {
-                            *sval = NEG_INF;
-                            continue;
+                let r0 = it * br;
+                let rows = br.min(n - r0);
+                acc[..rows * d].fill(0.0);
+                mrow[..rows].fill(NEG_INF);
+                lrow[..rows].fill(0.0);
+                // causal: key tiles only up to the query tile's end
+                let last_col = r0 + rows; // exclusive
+                let tk = last_col.div_ceil(bc);
+                for jt in 0..tk {
+                    let c0 = jt * bc;
+                    let cols = bc.min(last_col - c0).min(bc);
+                    // dense register-blocked score tile ...
+                    qkt_tile(
+                        &qh[r0 * d..(r0 + rows) * d],
+                        &kh[c0 * d..(c0 + cols) * d],
+                        d,
+                        rows,
+                        cols,
+                        scale,
+                        &mut s,
+                        bc,
+                    );
+                    // ... then the causal mask: row r keeps columns
+                    // c0 + cc <= r0 + r
+                    for r in 0..rows {
+                        let keep = (r0 + r + 1).saturating_sub(c0).min(cols);
+                        for x in s[r * bc + keep..r * bc + cols].iter_mut() {
+                            *x = NEG_INF;
                         }
-                        *sval = dot(qt, &kh[col * d..(col + 1) * d]) * scale;
+                    }
+                    // online softmax update
+                    for r in 0..rows {
+                        let srow = &mut s[r * bc..r * bc + cols];
+                        let mut mt = mrow[r];
+                        for &x in srow.iter() {
+                            if x > mt {
+                                mt = x;
+                            }
+                        }
+                        if mt == NEG_INF {
+                            continue; // whole tile masked for this row
+                        }
+                        let corr = (mrow[r] - mt).exp();
+                        let mut psum = 0.0f32;
+                        for x in srow.iter_mut() {
+                            *x = if *x <= NEG_INF / 2.0 { 0.0 } else { (*x - mt).exp() };
+                            psum += *x;
+                        }
+                        lrow[r] = lrow[r] * corr + psum;
+                        softmax_accum(
+                            &mut acc[r * d..(r + 1) * d],
+                            corr,
+                            &s[r * bc..r * bc + cols],
+                            &vh[c0 * d..(c0 + cols) * d],
+                        );
+                        mrow[r] = mt;
                     }
                 }
-                // online softmax update
+                // tile epilogue: normalize into the unit's rows of the
+                // chunk (units are emitted in flattened order, which is
+                // exactly the packed (h, n, d) row order)
+                let local = row_off(u) - chunk_base;
                 for r in 0..rows {
-                    let srow = &mut s[r * bc..r * bc + cols];
-                    let mut mt = mrow[r];
-                    for &x in srow.iter() {
-                        if x > mt {
-                            mt = x;
-                        }
+                    let l = if lrow[r] == 0.0 { 1.0 } else { lrow[r] };
+                    let arow = &acc[r * d..(r + 1) * d];
+                    let orow = &mut o_chunk[(local + r) * d..(local + r + 1) * d];
+                    for c in 0..d {
+                        orow[c] = arow[c] / l;
                     }
-                    if mt == NEG_INF {
-                        continue; // whole tile masked for this row
-                    }
-                    let corr = (mrow[r] - mt).exp();
-                    let mut psum = 0.0f32;
-                    for x in srow.iter_mut() {
-                        *x = if *x <= NEG_INF / 2.0 { 0.0 } else { (*x - mt).exp() };
-                        psum += *x;
-                    }
-                    lrow[r] = lrow[r] * corr + psum;
-                    let arow = &mut acc[r * d..(r + 1) * d];
-                    if corr != 1.0 {
-                        vscale(arow, corr);
-                    }
-                    for (cc, &p) in srow.iter().enumerate() {
-                        if p == 0.0 {
-                            continue;
-                        }
-                        axpy(arow, p, &vh[(c0 + cc) * d..(c0 + cc + 1) * d]);
-                    }
-                    mrow[r] = mt;
+                    lse_chunk[local + r] = mrow[r] + lrow[r].max(1e-30).ln();
                 }
             }
-            // tile epilogue: normalize and append (tiles are emitted in
-            // flattened unit order, which is exactly the packed (h, n, d)
-            // row order)
-            for r in 0..rows {
-                let l = if lrow[r] == 0.0 { 1.0 } else { lrow[r] };
-                let arow = &acc[r * d..(r + 1) * d];
-                for c in 0..d {
-                    o.push(arow[c] / l);
-                }
-                lse.push(mrow[r] + lrow[r].max(1e-30).ln());
-            }
-        }
-        (o, lse, workspace)
-    });
-
-    let mut o = Vec::with_capacity(h * n * d);
-    let mut lse = Vec::with_capacity(h * n);
-    let mut workspace = 0u64;
-    for (op, lp, ws) in parts {
-        o.extend_from_slice(&op);
-        lse.extend_from_slice(&lp);
-        workspace += ws;
-    }
-    (o, lse, workspace)
+            scratch.give_f32(lrow);
+            scratch.give_f32(mrow);
+            scratch.give_f32(acc);
+            scratch.give_f32(s);
+        },
+    );
+    workspace.into_inner()
 }
 
 #[cfg(test)]

@@ -27,14 +27,17 @@
 //! and the CI thread matrix), and `h = h_kv = 1` is bit-identical to
 //! the pre-multi-head kernel.
 
-use super::centroid::centroids_packed;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use super::centroid::centroids_packed_into;
 use super::dense::NEG_INF;
-use super::simd::{axpy, dot, scale};
+use super::gemm::{qkt_tile, softmax_accum};
 use super::stats::{ws_bytes, StageStats};
-use super::topk::tiled_topk_packed;
-use super::varlen::{build_varlen_heads, VarlenLayout};
+use super::topk::tiled_topk_packed_into;
+use super::varlen::{build_varlen_heads_into, VarlenHeads, VarlenLayout, VarlenView};
 use super::AttnShape;
 use crate::util::pool::ExecCtx;
+use crate::util::scratch::Scratch;
 
 /// Tuning knobs (physical tile sizes; logical block size comes from
 /// [`AttnShape`]).
@@ -87,6 +90,84 @@ pub fn flash_moba_forward_ctx(
     shape: AttnShape,
     cfg: FlashMobaConfig,
 ) -> FlashMobaOut {
+    let mut centroids = Vec::new();
+    let mut indices = Vec::new();
+    let mut heads = VarlenHeads::new();
+    let mut o = Vec::new();
+    let mut lse = Vec::new();
+    let stats = forward_core(
+        ctx, q, k, v, shape, cfg, &mut centroids, &mut indices, &mut heads, &mut o, &mut lse,
+    );
+    FlashMobaOut { o, lse, indices, layouts: heads.to_layouts(), stats }
+}
+
+/// The zero-allocation steady-state entry point: the packed `(h, n, d)`
+/// output lands in the caller's reusable `o`, and every intermediate
+/// (centroids, routing table, varlen layout, lse, per-worker tile
+/// state) is borrowed from the context's scratch arenas and returned
+/// when the call ends. Repeating the same shape on a serial context
+/// performs zero heap allocations after warmup
+/// (`rust/tests/alloc_regression.rs`). Bit-identical to
+/// [`flash_moba_forward_ctx`].
+pub fn flash_moba_forward_into(
+    ctx: &ExecCtx,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    shape: AttnShape,
+    cfg: FlashMobaConfig,
+    o: &mut Vec<f32>,
+) -> StageStats {
+    let AttnShape { h, h_kv, n, d, topk, .. } = shape;
+    let cb = shape.complete_blocks();
+    let (mut centroids, mut indices, mut heads, mut lse, pooled) = {
+        // hold slot 0 only while taking: the parallel region's task 0
+        // locks the same slot for its own tile buffers
+        let mut s = ctx.scratch(0);
+        let pooled = s.is_pooled();
+        (
+            s.take_f32(h_kv * cb * d, 0.0),
+            s.take_i32(h * n * topk, -1),
+            VarlenHeads::take(&mut s, h, n, topk, cb),
+            s.take_f32(h * n, 0.0),
+            pooled,
+        )
+    };
+    let stats = forward_core(
+        ctx, q, k, v, shape, cfg, &mut centroids, &mut indices, &mut heads, o, &mut lse,
+    );
+    // pooled-taken buffers go back to the pool, waiting for the slot
+    // rather than falling back (a pooled buffer must not be lost just
+    // because the slot is momentarily contended); buffers taken from a
+    // contention-fallback arena are throwaway and simply drop here
+    if pooled {
+        let mut s = ctx.scratch_wait(0);
+        s.give_f32(centroids);
+        s.give_i32(indices);
+        heads.release(&mut s);
+        s.give_f32(lse);
+    }
+    stats
+}
+
+/// Shared pipeline body: stage 1 (Flash TopK + varlen epilogue) and
+/// stage 2 (gather-and-densify forward), writing every product into
+/// the caller's buffers. Both public entry points are thin wrappers —
+/// one allocates fresh buffers, one borrows them from the arena.
+#[allow(clippy::too_many_arguments)]
+fn forward_core(
+    ctx: &ExecCtx,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    shape: AttnShape,
+    cfg: FlashMobaConfig,
+    centroids: &mut Vec<f32>,
+    indices: &mut Vec<i32>,
+    heads: &mut VarlenHeads,
+    o: &mut Vec<f32>,
+    lse: &mut Vec<f32>,
+) -> StageStats {
     let AttnShape { h, h_kv, n, d, block, topk } = shape;
     assert_eq!(q.len(), shape.q_elems());
     assert_eq!(k.len(), shape.kv_elems());
@@ -95,59 +176,63 @@ pub fn flash_moba_forward_ctx(
     let mut st = StageStats::for_heads(ctx, h);
 
     // ---- stage 1: Flash TopK + varlen epilogue -------------------------
-    let (indices, layouts, topk_ws) = st.time("flash_topk", || {
-        let c = centroids_packed(ctx, k, h_kv, n, d, block);
-        let (idx, ws) = tiled_topk_packed(ctx, q, &c, &shape, cfg.topk_tile);
-        let layouts = build_varlen_heads(&idx, h, n, topk, cb);
-        (idx, layouts, ws + ws_bytes(&[h_kv * cb * d]))
+    // (buffers are resized without clearing: every element is fully
+    // overwritten by the kernels, and a same-length resize is a no-op,
+    // so steady-state calls skip the redundant refill)
+    let topk_ws = st.time("flash_topk", || {
+        centroids.resize(h_kv * cb * d, 0.0);
+        centroids_packed_into(ctx, k, h_kv, n, d, block, centroids);
+        let ws = tiled_topk_packed_into(ctx, q, centroids, &shape, cfg.topk_tile, indices);
+        build_varlen_heads_into(indices, h, n, topk, cb, heads);
+        ws + ws_bytes(&[h_kv * cb * d])
     });
-    let total_all: usize = layouts.iter().map(|l| l.total()).sum();
-    st.add_workspace(topk_ws + ws_bytes(&[total_all + 2 * h * cb]));
+    st.add_workspace(topk_ws + ws_bytes(&[heads.total() + 2 * h * cb]));
 
-    // ---- stage 2: gather-and-densify forward ---------------------------
-    let mut o = Vec::with_capacity(h * n * d);
-    let mut lse = Vec::with_capacity(h * n);
+    // ---- stage 2: gather-and-densify forward (in place) ----------------
+    o.resize(h * n * d, 0.0);
+    lse.resize(h * n, 0.0);
     let fwd_ws = st.time("fwd", || {
-        let parts = ctx.pool().map_ranges(h * n, |rows| {
-            // a flattened range may span head boundaries; split it so
-            // every sub-range runs against its own head's K/V and layout
-            let mut o_all: Vec<f32> = Vec::with_capacity(rows.len() * d);
-            let mut lse_all: Vec<f32> = Vec::with_capacity(rows.len());
-            let mut ws = 0u64;
-            let mut start = rows.start;
-            while start < rows.end {
-                let qh = start / n;
-                let head_end = ((qh + 1) * n).min(rows.end);
-                let (lo, hi) = (start % n, start % n + (head_end - start));
-                let kvh = shape.kv_head_of(qh);
-                let (op, lp, w) = forward_range(
-                    &q[qh * n * d..(qh + 1) * n * d],
-                    &k[kvh * n * d..(kvh + 1) * n * d],
-                    &v[kvh * n * d..(kvh + 1) * n * d],
-                    shape,
-                    cfg,
-                    &layouts[qh],
-                    lo,
-                    hi,
-                );
-                o_all.extend_from_slice(&op);
-                lse_all.extend_from_slice(&lp);
-                ws += w;
-                start = head_end;
-            }
-            (o_all, lse_all, ws)
-        });
-        let mut ws = 0u64;
-        for (op, lp, w) in parts {
-            o.extend_from_slice(&op);
-            lse.extend_from_slice(&lp);
-            ws += w;
-        }
-        ws
+        let ws = AtomicU64::new(0);
+        ctx.pool().for_ranges_split(
+            h * n,
+            o.as_mut_slice(),
+            lse.as_mut_slice(),
+            |u| (u * d, u),
+            |slot, rows, o_chunk, lse_chunk| {
+                // a flattened range may span head boundaries; split it
+                // so every sub-range runs against its own head's K/V
+                // and layout
+                let mut scratch = ctx.scratch(slot);
+                let base = rows.start;
+                let mut w = 0u64;
+                let mut start = rows.start;
+                while start < rows.end {
+                    let qh = start / n;
+                    let head_end = ((qh + 1) * n).min(rows.end);
+                    let (lo, hi) = (start % n, start % n + (head_end - start));
+                    let kvh = shape.kv_head_of(qh);
+                    w += forward_range(
+                        &q[qh * n * d..(qh + 1) * n * d],
+                        &k[kvh * n * d..(kvh + 1) * n * d],
+                        &v[kvh * n * d..(kvh + 1) * n * d],
+                        shape,
+                        cfg,
+                        heads.head(qh),
+                        lo,
+                        hi,
+                        &mut scratch,
+                        &mut o_chunk[(start - base) * d..(head_end - base) * d],
+                        &mut lse_chunk[start - base..head_end - base],
+                    );
+                    start = head_end;
+                }
+                ws.fetch_add(w, Ordering::Relaxed);
+            },
+        );
+        ws.into_inner()
     });
     st.add_workspace(fwd_ws);
-
-    FlashMobaOut { o, lse, indices, layouts, stats: st }
+    st
 }
 
 /// The gather-and-densify kernel body (Algorithm 1) for one query
@@ -157,7 +242,16 @@ pub fn flash_moba_forward_ctx(
 /// exact per-row visit order of the serial kernel. Routed passes exist
 /// only for complete blocks; the ragged tail block (if any) appears
 /// only as its own queries' causal pass, clamped to its length.
-/// Returns the range's (o, lse, workspace bytes).
+///
+/// Score tiles run on the register-blocked [`qkt_tile`] microkernel
+/// (causal tiles are computed dense and masked by overwrite — the
+/// surviving values are bit-identical to the skip-and-dot path) and
+/// the accumulator update on the fused [`softmax_accum`]; every
+/// working buffer — the (m, l, acc) "SRAM state", the gather/score
+/// tiles and the own-rows list — is borrowed from `scratch` and
+/// returned, so steady-state repeats allocate nothing. The range's
+/// output lands in `o`/`lse` (length `(hi - lo) * d` / `hi - lo`).
+/// Returns the range's workspace bytes.
 #[allow(clippy::too_many_arguments)]
 fn forward_range(
     q: &[f32],
@@ -165,25 +259,33 @@ fn forward_range(
     v: &[f32],
     shape: AttnShape,
     cfg: FlashMobaConfig,
-    layout: &VarlenLayout,
+    layout: VarlenView<'_>,
     lo: usize,
     hi: usize,
-) -> (Vec<f32>, Vec<f32>, u64) {
-    let AttnShape { n, d, block, .. } = shape;
+    scratch: &mut Scratch,
+    o: &mut [f32],
+    lse: &mut [f32],
+) -> u64 {
+    let AttnShape { d, block, .. } = shape;
     let nb = shape.n_blocks(); // logical blocks incl. a partial tail
     let cb = shape.complete_blocks();
     let sm_scale = 1.0 / (d as f32).sqrt();
     let tile_r = cfg.tile_r;
     let tile_c = cfg.tile_c.min(block);
     let rows_total = hi - lo;
+    debug_assert_eq!(o.len(), rows_total * d);
+    debug_assert_eq!(lse.len(), rows_total);
 
-    // this range's online-softmax accumulators (the SRAM state)
-    let mut m = vec![NEG_INF; rows_total];
-    let mut l = vec![0.0f32; rows_total];
-    let mut acc = vec![0.0f32; rows_total * d];
-    // dense gather buffers (the SRAM tiles)
-    let mut qg = vec![0.0f32; tile_r * d];
-    let mut s = vec![0.0f32; tile_r * tile_c];
+    // this range's online-softmax accumulators (the SRAM state) and
+    // dense gather tiles, all arena-backed
+    let mut m = scratch.take_f32(rows_total, NEG_INF);
+    let mut l = scratch.take_f32(rows_total, 0.0);
+    let mut acc = scratch.take_f32(rows_total * d, 0.0);
+    let mut qg = scratch.take_f32(tile_r * d, 0.0);
+    let mut s = scratch.take_f32(tile_r * tile_c, 0.0);
+    // the own-block row list, reused across blocks (sized to the
+    // largest own pass this range can see)
+    let mut own_rows = scratch.take_u32(block.min(rows_total), 0);
     let ws = ws_bytes(&[m.len(), l.len(), acc.len(), qg.len(), s.len()]);
 
     for j in 0..nb {
@@ -203,18 +305,25 @@ fn forward_range(
             for ct in 0..tcs {
                 let c0 = ct * tile_c;
                 let cols = tile_c.min(blen - c0);
-                // dense GEMM tile: s = qg · kb_tile^T
-                for r in 0..rcount {
-                    let qt = &qg[r * d..(r + 1) * d];
-                    let trow = rows[r] as usize;
-                    let srow = &mut s[r * tile_c..r * tile_c + cols];
-                    for (cc, sval) in srow.iter_mut().enumerate() {
-                        let u = c0 + cc;
-                        if causal && own_start + u > trow {
-                            *sval = NEG_INF;
-                            continue;
+                // dense register-blocked GEMM tile: s = qg · kb_tile^T
+                qkt_tile(
+                    &qg[..rcount * d],
+                    &kb[c0 * d..(c0 + cols) * d],
+                    d,
+                    rcount,
+                    cols,
+                    sm_scale,
+                    &mut s,
+                    tile_c,
+                );
+                if causal {
+                    // row t keeps columns own_start + c0 + cc <= t
+                    for r in 0..rcount {
+                        let trow = rows[r] as usize;
+                        let keep = (trow + 1).saturating_sub(own_start + c0).min(cols);
+                        for x in s[r * tile_c + keep..r * tile_c + cols].iter_mut() {
+                            *x = NEG_INF;
                         }
-                        *sval = dot(qt, &kb[u * d..(u + 1) * d]) * sm_scale;
                     }
                 }
                 // online softmax scatter-update
@@ -237,16 +346,12 @@ fn forward_range(
                         psum += *x;
                     }
                     l[ti] = l[ti] * corr + psum;
-                    let arow = &mut acc[ti * d..(ti + 1) * d];
-                    if corr != 1.0 {
-                        scale(arow, corr);
-                    }
-                    for (cc, &p) in srow.iter().enumerate() {
-                        if p == 0.0 {
-                            continue;
-                        }
-                        axpy(arow, p, &vb[(c0 + cc) * d..(c0 + cc + 1) * d]);
-                    }
+                    softmax_accum(
+                        &mut acc[ti * d..(ti + 1) * d],
+                        corr,
+                        &s[r * tile_c..r * tile_c + cols],
+                        &vb[c0 * d..(c0 + cols) * d],
+                    );
                     m[ti] = mt;
                 }
             }
@@ -266,16 +371,15 @@ fn forward_range(
         let os = own_start.max(lo);
         let oe = (own_start + blen).min(hi);
         if os < oe {
-            let own_rows: Vec<u32> = (os as u32..oe as u32).collect();
+            own_rows.clear();
+            own_rows.extend(os as u32..oe as u32);
             for chunk in own_rows.chunks(tile_r) {
                 process_tile(chunk, true);
             }
         }
     }
 
-    // epilogue: normalize
-    let mut o = vec![0.0f32; rows_total * d];
-    let mut lse = vec![0.0f32; rows_total];
+    // epilogue: normalize into the caller's output window
     for ti in 0..rows_total {
         let z = if l[ti] == 0.0 { 1.0 } else { l[ti] };
         for c in 0..d {
@@ -283,7 +387,13 @@ fn forward_range(
         }
         lse[ti] = m[ti] + l[ti].max(1e-30).ln();
     }
-    (o, lse, ws)
+    scratch.give_u32(own_rows);
+    scratch.give_f32(s);
+    scratch.give_f32(qg);
+    scratch.give_f32(acc);
+    scratch.give_f32(l);
+    scratch.give_f32(m);
+    ws
 }
 
 #[cfg(test)]

@@ -1,0 +1,373 @@
+//! Register-blocked GEMM microkernels for the small-block hot path.
+//!
+//! [`super::simd::dot`] computes one score at a time: every `s[r][c]`
+//! of a tile reloads the same query and key rows from cache, so the
+//! kernels are load-bound (1 FMA per 2 vector loads). The microkernels
+//! here compute an RxC **micro-tile** of `s = Q·Kᵀ` per pass — R query
+//! rows against C key rows held live across the shared 8-lane k-loop —
+//! raising the FMA-to-load ratio (8 FMAs per 6 loads at 2x4) exactly
+//! where the paper says small blocks go memory-bound (FlashMoBA, §4).
+//!
+//! **The lane-order rule (bit-determinism contract).** Every output
+//! element is reduced in the *exact* f32 operation order of
+//! `simd::dot`: 8 independent accumulator lanes over ascending 8-wide
+//! chunks, a scalar remainder accumulated in ascending index order,
+//! then the fixed reduction tree `(l0+l4)+(l1+l5)+(l2+l6)+(l3+l7)+rest`
+//! and one optional trailing `* scale`. Register blocking only changes
+//! *which* outputs share a pass over the k-dimension — never the
+//! per-output operation sequence — so the microkernel results are
+//! `to_bits`-identical to the scalar path they replaced (pinned by the
+//! unit tests below and by `prop_microkernels_bit_identical_to_scalar_
+//! oracle` in `rust/tests/property.rs`).
+//!
+//! The same rule governs the fused accumulator updates:
+//! [`softmax_accum`] / [`accum_rows`] interchange the (row, element)
+//! loops so the accumulator is loaded once per 8-lane chunk instead of
+//! once per value row, but each accumulator *element* still sees its
+//! multiply-adds in ascending value-row order — element-wise the
+//! identical f32 sequence as the `scale` + per-row `axpy` formulation.
+
+use super::simd::dot;
+
+const LANES: usize = 8;
+
+/// Raw RxC micro-tile: `out[r][c] = dot(q_row_r, k_row_c)`, every
+/// element reduced in `simd::dot`'s exact lane order. `q` holds R rows
+/// and `k` C rows, both row-major with stride `d`.
+#[inline(always)]
+fn micro_rc<const R: usize, const C: usize>(q: &[f32], k: &[f32], d: usize) -> [[f32; C]; R] {
+    debug_assert!(q.len() >= R * d && k.len() >= C * d);
+    let mut lanes = [[[0.0f32; LANES]; C]; R];
+    let chunks = d / LANES;
+    for i in 0..chunks {
+        let base = i * LANES;
+        for r in 0..R {
+            let a = &q[r * d + base..r * d + base + LANES];
+            for (c, lc) in lanes[r].iter_mut().enumerate() {
+                let b = &k[c * d + base..c * d + base + LANES];
+                for l in 0..LANES {
+                    lc[l] += a[l] * b[l];
+                }
+            }
+        }
+    }
+    let mut rest = [[0.0f32; C]; R];
+    for i in chunks * LANES..d {
+        for r in 0..R {
+            let a = q[r * d + i];
+            for (c, rc) in rest[r].iter_mut().enumerate() {
+                *rc += a * k[c * d + i];
+            }
+        }
+    }
+    let mut out = [[0.0f32; C]; R];
+    for r in 0..R {
+        for c in 0..C {
+            let l = &lanes[r][c];
+            out[r][c] = (l[0] + l[4]) + (l[1] + l[5]) + (l[2] + l[6])
+                + (l[3] + l[7])
+                + rest[r][c];
+        }
+    }
+    out
+}
+
+/// Score tile `s[r * s_stride + c] = dot(q_row_r, k_row_c) * scale`
+/// for `r in 0..rows`, `c in 0..cols` — 2x4 register micro-tiles with
+/// `dot`-kernel edges, so every element is bit-identical to the
+/// per-(row, col) `dot(..) * scale` it replaces.
+///
+/// `q` holds `rows` rows and `k` holds `cols` rows, row-major with
+/// stride `d`; `s` must fit `(rows - 1) * s_stride + cols` elements.
+#[allow(clippy::too_many_arguments)]
+pub fn qkt_tile(
+    q: &[f32],
+    k: &[f32],
+    d: usize,
+    rows: usize,
+    cols: usize,
+    scale: f32,
+    s: &mut [f32],
+    s_stride: usize,
+) {
+    debug_assert!(q.len() >= rows * d);
+    debug_assert!(k.len() >= cols * d);
+    debug_assert!(rows == 0 || s.len() >= (rows - 1) * s_stride + cols);
+    const R: usize = 2;
+    const C: usize = 4;
+    let mut r = 0;
+    while r + R <= rows {
+        let qr = &q[r * d..];
+        let mut c = 0;
+        while c + C <= cols {
+            let out = micro_rc::<R, C>(qr, &k[c * d..], d);
+            for (rr, orow) in out.iter().enumerate() {
+                let srow = &mut s[(r + rr) * s_stride + c..(r + rr) * s_stride + c + C];
+                for (cc, &val) in orow.iter().enumerate() {
+                    srow[cc] = val * scale;
+                }
+            }
+            c += C;
+        }
+        while c < cols {
+            for rr in 0..R {
+                s[(r + rr) * s_stride + c] =
+                    dot(&q[(r + rr) * d..(r + rr + 1) * d], &k[c * d..(c + 1) * d]) * scale;
+            }
+            c += 1;
+        }
+        r += R;
+    }
+    while r < rows {
+        let srow = &mut s[r * s_stride..r * s_stride + cols];
+        qk_row(&q[r * d..(r + 1) * d], k, d, cols, scale, srow);
+        r += 1;
+    }
+}
+
+/// One query row against `cols` key rows: `s[c] = dot(q, k_row_c) *
+/// scale` — the 1x4 register-blocked gemv (single-row decode, dense
+/// tile edges).
+pub fn qk_row(q: &[f32], k: &[f32], d: usize, cols: usize, scale: f32, s: &mut [f32]) {
+    debug_assert!(q.len() >= d);
+    debug_assert!(k.len() >= cols * d);
+    debug_assert!(s.len() >= cols);
+    const C: usize = 4;
+    let mut c = 0;
+    while c + C <= cols {
+        let out = micro_rc::<1, C>(q, &k[c * d..], d);
+        for (cc, &val) in out[0].iter().enumerate() {
+            s[c + cc] = val * scale;
+        }
+        c += C;
+    }
+    while c < cols {
+        s[c] = dot(q, &k[c * d..(c + 1) * d]) * scale;
+        c += 1;
+    }
+}
+
+/// [`qk_row`] without the trailing scale multiply: `s[c] = dot(q,
+/// k_row_c)` exactly (the routing/top-k scoring form — gating scores
+/// are raw dots, and `x * 1.0` is not guaranteed bit-transparent for
+/// every NaN payload, so the raw form is its own kernel).
+pub fn qk_row_raw(q: &[f32], k: &[f32], d: usize, cols: usize, s: &mut [f32]) {
+    debug_assert!(q.len() >= d);
+    debug_assert!(k.len() >= cols * d);
+    debug_assert!(s.len() >= cols);
+    const C: usize = 4;
+    let mut c = 0;
+    while c + C <= cols {
+        let out = micro_rc::<1, C>(q, &k[c * d..], d);
+        s[c..c + C].copy_from_slice(&out[0]);
+        c += C;
+    }
+    while c < cols {
+        s[c] = dot(q, &k[c * d..(c + 1) * d]);
+        c += 1;
+    }
+}
+
+/// Fused online-softmax accumulator update for one query row:
+/// `acc *= corr` (skipped when `corr == 1.0`), then `acc += p[c] *
+/// v_row_c` for every `c` with `p[c] != 0.0`, in ascending `c`.
+/// `v` is `(p.len(), acc.len())` row-major.
+///
+/// Loop-interchanged so `acc` is loaded/stored once per 8-lane chunk
+/// instead of once per value row; element-wise the operation sequence
+/// is identical to `scale(acc, corr)` followed by per-row `axpy` with
+/// the `p == 0.0` skip — the exact arithmetic (including the skip,
+/// which matters for `-0.0` accumulators) of the kernels it replaces.
+pub fn softmax_accum(acc: &mut [f32], corr: f32, p: &[f32], v: &[f32]) {
+    let d = acc.len();
+    debug_assert!(v.len() >= p.len() * d);
+    let chunks = d / LANES;
+    for ch in 0..chunks {
+        let base = ch * LANES;
+        let a = &mut acc[base..base + LANES];
+        if corr != 1.0 {
+            for x in a.iter_mut() {
+                *x *= corr;
+            }
+        }
+        for (c, &pc) in p.iter().enumerate() {
+            if pc == 0.0 {
+                continue;
+            }
+            let vb = &v[c * d + base..c * d + base + LANES];
+            for l in 0..LANES {
+                a[l] += pc * vb[l];
+            }
+        }
+    }
+    for i in chunks * LANES..d {
+        let mut x = acc[i];
+        if corr != 1.0 {
+            x *= corr;
+        }
+        for (c, &pc) in p.iter().enumerate() {
+            if pc == 0.0 {
+                continue;
+            }
+            x += pc * v[c * d + i];
+        }
+        acc[i] = x;
+    }
+}
+
+/// Fused multi-row weighted accumulate *without* the zero-weight skip
+/// or rescale: `acc += p[c] * v_row_c` for every `c` in ascending
+/// order — element-wise identical to a plain per-row `axpy` sequence
+/// (the original-pipeline partial/local combines and the decode
+/// single-row path, which never skip).
+pub fn accum_rows(acc: &mut [f32], p: &[f32], v: &[f32]) {
+    let d = acc.len();
+    debug_assert!(v.len() >= p.len() * d);
+    let chunks = d / LANES;
+    for ch in 0..chunks {
+        let base = ch * LANES;
+        let a = &mut acc[base..base + LANES];
+        for (c, &pc) in p.iter().enumerate() {
+            let vb = &v[c * d + base..c * d + base + LANES];
+            for l in 0..LANES {
+                a[l] += pc * vb[l];
+            }
+        }
+    }
+    for i in chunks * LANES..d {
+        let mut x = acc[i];
+        for (c, &pc) in p.iter().enumerate() {
+            x += pc * v[c * d + i];
+        }
+        acc[i] = x;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::simd::{axpy, scale as vscale};
+    use crate::attention::testutil::Rng;
+
+    fn bits_eq(a: &[f32], b: &[f32], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: element {i} ({x} vs {y})");
+        }
+    }
+
+    /// The tile kernel is bit-identical to per-(row, col) dot * scale
+    /// at every (rows, cols, d) combination crossing the 2x4 micro and
+    /// 8-lane boundaries, including strided output rows.
+    #[test]
+    fn qkt_tile_bits_match_dot() {
+        let mut rng = Rng::new(1);
+        for d in [1, 3, 7, 8, 9, 16, 24, 33] {
+            for rows in [1, 2, 3, 4, 5, 8] {
+                for cols in [1, 2, 3, 4, 5, 7, 8, 9] {
+                    let q = rng.normal_vec(rows * d);
+                    let k = rng.normal_vec(cols * d);
+                    let stride = cols + 3;
+                    let mut s = vec![0.0f32; rows * stride];
+                    qkt_tile(&q, &k, d, rows, cols, 0.37, &mut s, stride);
+                    for r in 0..rows {
+                        for c in 0..cols {
+                            let expect =
+                                dot(&q[r * d..(r + 1) * d], &k[c * d..(c + 1) * d]) * 0.37;
+                            assert_eq!(
+                                s[r * stride + c].to_bits(),
+                                expect.to_bits(),
+                                "d={d} rows={rows} cols={cols} r={r} c={c}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn qk_row_bits_match_dot_scaled_and_raw() {
+        let mut rng = Rng::new(2);
+        for d in [1, 4, 8, 13, 32] {
+            for cols in [0, 1, 3, 4, 5, 8, 11] {
+                let q = rng.normal_vec(d);
+                let k = rng.normal_vec(cols * d);
+                let mut s = vec![0.0f32; cols];
+                qk_row(&q, &k, d, cols, 1.7, &mut s);
+                let expect: Vec<f32> =
+                    (0..cols).map(|c| dot(&q, &k[c * d..(c + 1) * d]) * 1.7).collect();
+                bits_eq(&s, &expect, &format!("qk_row d={d} cols={cols}"));
+                qk_row_raw(&q, &k, d, cols, &mut s);
+                let expect: Vec<f32> =
+                    (0..cols).map(|c| dot(&q, &k[c * d..(c + 1) * d])).collect();
+                bits_eq(&s, &expect, &format!("qk_row_raw d={d} cols={cols}"));
+            }
+        }
+    }
+
+    /// The fused update == scale() then per-row axpy() with the zero
+    /// skip, bit for bit — including corr == 1.0 (no rescale) and
+    /// p rows that are exactly zero.
+    #[test]
+    fn softmax_accum_bits_match_scale_plus_axpy() {
+        let mut rng = Rng::new(3);
+        for d in [1, 5, 8, 9, 16, 24] {
+            for cols in [1, 2, 4, 7] {
+                for corr in [1.0f32, 0.625] {
+                    let v = rng.normal_vec(cols * d);
+                    let mut p = rng.normal_vec(cols);
+                    p[cols / 2] = 0.0; // exercise the skip
+                    let acc0 = rng.normal_vec(d);
+                    let mut fused = acc0.clone();
+                    softmax_accum(&mut fused, corr, &p, &v);
+                    let mut plain = acc0.clone();
+                    if corr != 1.0 {
+                        vscale(&mut plain, corr);
+                    }
+                    for (c, &pc) in p.iter().enumerate() {
+                        if pc == 0.0 {
+                            continue;
+                        }
+                        axpy(&mut plain, pc, &v[c * d..(c + 1) * d]);
+                    }
+                    bits_eq(&fused, &plain, &format!("softmax_accum d={d} cols={cols}"));
+                }
+            }
+        }
+    }
+
+    /// accum_rows == the skip-free axpy sequence, bit for bit (zero
+    /// weights are applied, not skipped — the decode/original-pipeline
+    /// semantics).
+    #[test]
+    fn accum_rows_bits_match_axpy_sequence() {
+        let mut rng = Rng::new(4);
+        for d in [1, 8, 11, 16] {
+            for cols in [1, 3, 6] {
+                let v = rng.normal_vec(cols * d);
+                let mut p = rng.normal_vec(cols);
+                p[0] = 0.0; // applied, not skipped
+                let acc0 = rng.normal_vec(d);
+                let mut fused = acc0.clone();
+                accum_rows(&mut fused, &p, &v);
+                let mut plain = acc0;
+                for (c, &pc) in p.iter().enumerate() {
+                    axpy(&mut plain, pc, &v[c * d..(c + 1) * d]);
+                }
+                bits_eq(&fused, &plain, &format!("accum_rows d={d} cols={cols}"));
+            }
+        }
+    }
+
+    #[test]
+    fn empty_shapes_are_noops() {
+        let mut s: Vec<f32> = Vec::new();
+        qkt_tile(&[], &[], 4, 0, 0, 1.0, &mut s, 0);
+        qk_row(&[0.0; 4], &[], 4, 0, 1.0, &mut s);
+        let mut acc = [1.0f32, 2.0];
+        softmax_accum(&mut acc, 1.0, &[], &[]);
+        accum_rows(&mut acc, &[], &[]);
+        assert_eq!(acc, [1.0, 2.0]);
+    }
+}

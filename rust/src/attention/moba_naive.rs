@@ -32,7 +32,8 @@
 
 use super::centroid::centroids_packed;
 use super::dense::NEG_INF;
-use super::simd::{axpy, dot};
+use super::gemm::{accum_rows, qk_row};
+use super::simd::axpy;
 use super::stats::{ws_bytes, StageStats};
 use super::topk::naive_topk_packed;
 use super::varlen::{build_varlen_heads, VarlenLayout};
@@ -172,6 +173,7 @@ pub fn moba_naive_forward_ctx(
         let parts = ctx.pool().map_ranges(h * cb, |units| {
             let mut po: Vec<f32> = Vec::new();
             let mut pl: Vec<f32> = Vec::new();
+            let mut s = vec![0.0f32; block];
             for u in units {
                 let (qh, j) = (u / cb, u % cb);
                 let kvh = qh / group;
@@ -181,23 +183,24 @@ pub fn moba_naive_forward_ctx(
                 let vb = &v[(kvh * n + j * block) * d..(kvh * n + (j + 1) * block) * d];
                 for (row, _t) in qs.iter().enumerate() {
                     let qt = &g[row * d..(row + 1) * d];
-                    let mut s = vec![0.0f32; block];
+                    // register-blocked block scoring (bit-identical to
+                    // the per-row dot), then the same softmax order
+                    qk_row(qt, kb, d, block, scale, &mut s);
                     let mut m = NEG_INF;
-                    for (u_, su) in s.iter_mut().enumerate() {
-                        *su = dot(qt, &kb[u_ * d..(u_ + 1) * d]) * scale;
-                        if *su > m {
-                            m = *su;
+                    for &x in s.iter() {
+                        if x > m {
+                            m = x;
                         }
                     }
                     let mut z = 0.0f32;
+                    for x in s.iter_mut() {
+                        *x = (*x - m).exp();
+                        z += *x;
+                    }
                     let p0 = po.len();
                     po.resize(p0 + d, 0.0);
                     let prow = &mut po[p0..p0 + d];
-                    for (u_, su) in s.iter().enumerate() {
-                        let p = (su - m).exp();
-                        z += p;
-                        axpy(prow, p, &vb[u_ * d..(u_ + 1) * d]);
-                    }
+                    accum_rows(prow, &s, vb);
                     for c in prow.iter_mut() {
                         *c /= z;
                     }
@@ -220,30 +223,31 @@ pub fn moba_naive_forward_ctx(
         let parts = ctx.pool().map_ranges(h * n, |rows| {
             let mut lo_o = vec![0.0f32; rows.len() * d];
             let mut lo_l = vec![0.0f32; rows.len()];
+            let mut s: Vec<f32> = Vec::with_capacity(block);
             for (tt, u) in rows.enumerate() {
                 let (qh, t) = (u / n, u % n);
                 let kvh = qh / group;
                 let own = t / block;
                 let base = own * block;
                 let qt = &q[u * d..(u + 1) * d];
-                let mut m = NEG_INF;
                 let upto = t - base; // inclusive offset in own block
-                let mut s = vec![0.0f32; upto + 1];
-                for (u_, su) in s.iter_mut().enumerate() {
-                    let row = kvh * n + base + u_;
-                    *su = dot(qt, &k[row * d..(row + 1) * d]) * scale;
-                    if *su > m {
-                        m = *su;
+                s.clear();
+                s.resize(upto + 1, 0.0);
+                let krows = &k[(kvh * n + base) * d..(kvh * n + base + upto + 1) * d];
+                qk_row(qt, krows, d, upto + 1, scale, &mut s);
+                let mut m = NEG_INF;
+                for &x in s.iter() {
+                    if x > m {
+                        m = x;
                     }
                 }
                 let mut z = 0.0f32;
-                let ot = &mut lo_o[tt * d..(tt + 1) * d];
-                for (u_, su) in s.iter().enumerate() {
-                    let p = (su - m).exp();
-                    z += p;
-                    let row = kvh * n + base + u_;
-                    axpy(ot, p, &v[row * d..(row + 1) * d]);
+                for x in s.iter_mut() {
+                    *x = (*x - m).exp();
+                    z += *x;
                 }
+                let ot = &mut lo_o[tt * d..(tt + 1) * d];
+                accum_rows(ot, &s, &v[(kvh * n + base) * d..(kvh * n + base + upto + 1) * d]);
                 for c in ot.iter_mut() {
                     *c /= z;
                 }

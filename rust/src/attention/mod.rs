@@ -16,6 +16,10 @@
 //!   backward (Algorithm 5) in [`backward`].
 //! * [`topk`], [`centroid`], [`varlen`], [`kconv`] — shared building
 //!   blocks (Algorithms 2–4, Appendix B).
+//! * [`gemm`] — register-blocked GEMM microkernels (score micro-tiles,
+//!   fused online-softmax accumulate) under every kernel above; the
+//!   lane-order rule keeps them bit-identical to the scalar
+//!   [`simd`]-based formulation (see README.md §Performance).
 //! * [`decode`] — incremental autoregressive decode: per-session block
 //!   KV cache with running centroids and streaming MoBA routing, parity
 //!   locked against the prefill kernels.
@@ -39,6 +43,7 @@ pub mod centroid;
 pub mod decode;
 pub mod dense;
 pub mod flash_moba;
+pub mod gemm;
 pub mod kconv;
 pub mod moba_naive;
 pub mod simd;

@@ -2,15 +2,21 @@
 //! (Figure 4) and workspace-memory accounting (Figure 3 bottom), plus
 //! the thread count each stage ran with (the multi-core execution
 //! layer's per-stage telemetry, surfaced in the `BENCH_*.json` blobs).
+//!
+//! `StageStats` is entirely stack-allocated: stage names are `'static`
+//! labels and the records live in a fixed inline array, so timing a
+//! kernel costs the hot path **zero heap allocations** — part of the
+//! allocation-free steady-state contract pinned by
+//! `rust/tests/alloc_regression.rs`.
 
 use std::time::{Duration, Instant};
 
 use crate::util::pool::ExecCtx;
 
 /// One timed pipeline stage.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Copy)]
 pub struct StageRecord {
-    pub name: String,
+    pub name: &'static str,
     /// wall-clock time of the stage
     pub wall: Duration,
     /// worker threads the stage's kernels could partition over
@@ -18,10 +24,18 @@ pub struct StageRecord {
     pub threads: usize,
 }
 
+const EMPTY_RECORD: StageRecord = StageRecord { name: "", wall: Duration::ZERO, threads: 1 };
+
+/// Inline record capacity — the deepest in-tree pipeline (original
+/// MoBA) records 6 stages; further stages past the cap are dropped
+/// (debug-asserted) rather than allocated.
+const MAX_STAGES: usize = 8;
+
 /// Named stage timings + logical workspace bytes for one pipeline run.
 #[derive(Debug, Clone)]
 pub struct StageStats {
-    records: Vec<StageRecord>,
+    records: [StageRecord; MAX_STAGES],
+    len: usize,
     /// thread budget stamped onto stages recorded via [`StageStats::time`]
     threads: usize,
     /// query heads the run's kernel launches covered (1 = single-head).
@@ -46,18 +60,28 @@ impl Default for StageStats {
 impl StageStats {
     /// Serial-stamped stats (threads = 1, heads = 1).
     pub fn new() -> Self {
-        Self { records: Vec::new(), threads: 1, heads: 1, workspace_bytes: 0 }
+        Self {
+            records: [EMPTY_RECORD; MAX_STAGES],
+            len: 0,
+            threads: 1,
+            heads: 1,
+            workspace_bytes: 0,
+        }
     }
 
     /// Stats whose stages are stamped with `ctx`'s worker count.
     pub fn for_ctx(ctx: &ExecCtx) -> Self {
-        Self { records: Vec::new(), threads: ctx.threads(), heads: 1, workspace_bytes: 0 }
+        let mut st = Self::new();
+        st.threads = ctx.threads();
+        st
     }
 
     /// Stats stamped with `ctx`'s worker count and a query-head count
     /// (the backends construct these from their `AttnShape`).
     pub fn for_heads(ctx: &ExecCtx, heads: usize) -> Self {
-        Self { records: Vec::new(), threads: ctx.threads(), heads: heads.max(1), workspace_bytes: 0 }
+        let mut st = Self::for_ctx(ctx);
+        st.heads = heads.max(1);
+        st
     }
 
     /// Thread budget stamped onto recorded stages.
@@ -71,14 +95,15 @@ impl StageStats {
     }
 
     /// Time `f` and record it under `name`.
-    pub fn time<T>(&mut self, name: &str, f: impl FnOnce() -> T) -> T {
+    pub fn time<T>(&mut self, name: &'static str, f: impl FnOnce() -> T) -> T {
         let t0 = Instant::now();
         let out = f();
-        self.records.push(StageRecord {
-            name: name.to_string(),
-            wall: t0.elapsed(),
-            threads: self.threads,
-        });
+        debug_assert!(self.len < MAX_STAGES, "stage record capacity exceeded at {name}");
+        if self.len < MAX_STAGES {
+            self.records[self.len] =
+                StageRecord { name, wall: t0.elapsed(), threads: self.threads };
+            self.len += 1;
+        }
         out
     }
 
@@ -87,18 +112,18 @@ impl StageStats {
     }
 
     pub fn stages(&self) -> &[StageRecord] {
-        &self.records
+        &self.records[..self.len]
     }
 
     pub fn total(&self) -> Duration {
-        self.records.iter().map(|r| r.wall).sum()
+        self.stages().iter().map(|r| r.wall).sum()
     }
 
     pub fn get(&self, name: &str) -> Option<Duration> {
         // sum over repeated stages with the same label
         let tot: Duration =
-            self.records.iter().filter(|r| r.name == name).map(|r| r.wall).sum();
-        if self.records.iter().any(|r| r.name == name) {
+            self.stages().iter().filter(|r| r.name == name).map(|r| r.wall).sum();
+        if self.stages().iter().any(|r| r.name == name) {
             Some(tot)
         } else {
             None
@@ -109,7 +134,7 @@ impl StageStats {
     /// `topk 1.2ms | attn 3.4ms (total 4.6ms, ws 0.1MB, 8 heads, 4 threads)`.
     pub fn summary(&self) -> String {
         let parts: Vec<String> = self
-            .records
+            .stages()
             .iter()
             .map(|r| format!("{} {:.2}ms", r.name, r.wall.as_secs_f64() * 1e3))
             .collect();
@@ -191,5 +216,17 @@ mod tests {
         assert!(!StageStats::new().summary().contains("heads"));
         // heads = 0 is clamped, not propagated
         assert_eq!(StageStats::for_heads(&ctx, 0).heads(), 1);
+    }
+
+    /// The inline record array never spills past its cap in release
+    /// builds — extra stages are dropped, the run still reports.
+    #[test]
+    #[cfg(not(debug_assertions))]
+    fn overflow_drops_instead_of_growing() {
+        let mut st = StageStats::new();
+        for _ in 0..12 {
+            st.time("x", || ());
+        }
+        assert_eq!(st.stages().len(), 8);
     }
 }

@@ -91,6 +91,342 @@ pub fn max_abs_diff(a: &[f32], b: &[f32]) -> f32 {
     a.iter().zip(b).map(|(x, y)| (x - y).abs()).fold(0.0, f32::max)
 }
 
+/// Serial **scalar oracles** for the microkernel-backed forward
+/// kernels: the pre-refactor per-(row, col) `dot` / per-row `axpy` /
+/// `scale` formulation, preserved verbatim (GQA- and ragged-capable)
+/// so the register-blocked GEMM path can be pinned `to_bits`-identical
+/// to it forever — see `prop_microkernels_bit_identical_to_scalar_
+/// oracle` in `rust/tests/property.rs`. Shares only `simd::{dot, axpy,
+/// scale}` (the scalar kernels always called exactly these) and the
+/// untouched `build_varlen`.
+pub mod scalar {
+    use super::super::dense::NEG_INF;
+    use super::super::flash_moba::FlashMobaConfig;
+    use super::super::simd::{axpy, dot, scale as vscale};
+    use super::super::varlen::build_varlen;
+    use super::super::AttnShape;
+
+    /// Pre-refactor packed blocked online-softmax attention (serial
+    /// flattened (head, query-tile) unit order). Returns (o, lse).
+    #[allow(clippy::too_many_arguments)]
+    pub fn flash_attention_packed(
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        h: usize,
+        h_kv: usize,
+        n: usize,
+        d: usize,
+        br: usize,
+        bc: usize,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let group = h / h_kv;
+        let scale = 1.0 / (d as f32).sqrt();
+        let tq = n.div_ceil(br);
+        let mut o = Vec::with_capacity(h * n * d);
+        let mut lse = Vec::with_capacity(h * n);
+        let mut s = vec![0.0f32; br * bc];
+        let mut acc = vec![0.0f32; br * d];
+        let mut mrow = vec![NEG_INF; br];
+        let mut lrow = vec![0.0f32; br];
+        for u in 0..h * tq {
+            let (head, it) = (u / tq, u % tq);
+            let qh = &q[head * n * d..(head + 1) * n * d];
+            let kvh = head / group;
+            let kh = &k[kvh * n * d..(kvh + 1) * n * d];
+            let vh = &v[kvh * n * d..(kvh + 1) * n * d];
+            let r0 = it * br;
+            let rows = br.min(n - r0);
+            acc[..rows * d].fill(0.0);
+            mrow[..rows].fill(NEG_INF);
+            lrow[..rows].fill(0.0);
+            let last_col = r0 + rows;
+            let tk = last_col.div_ceil(bc);
+            for jt in 0..tk {
+                let c0 = jt * bc;
+                let cols = bc.min(last_col - c0);
+                for r in 0..rows {
+                    let qt = &qh[(r0 + r) * d..(r0 + r + 1) * d];
+                    let srow = &mut s[r * bc..r * bc + cols];
+                    for (cc, sval) in srow.iter_mut().enumerate() {
+                        let col = c0 + cc;
+                        if col > r0 + r {
+                            *sval = NEG_INF;
+                            continue;
+                        }
+                        *sval = dot(qt, &kh[col * d..(col + 1) * d]) * scale;
+                    }
+                }
+                for r in 0..rows {
+                    let srow = &mut s[r * bc..r * bc + cols];
+                    let mut mt = mrow[r];
+                    for &x in srow.iter() {
+                        if x > mt {
+                            mt = x;
+                        }
+                    }
+                    if mt == NEG_INF {
+                        continue;
+                    }
+                    let corr = (mrow[r] - mt).exp();
+                    let mut psum = 0.0f32;
+                    for x in srow.iter_mut() {
+                        *x = if *x <= NEG_INF / 2.0 { 0.0 } else { (*x - mt).exp() };
+                        psum += *x;
+                    }
+                    lrow[r] = lrow[r] * corr + psum;
+                    let arow = &mut acc[r * d..(r + 1) * d];
+                    if corr != 1.0 {
+                        vscale(arow, corr);
+                    }
+                    for (cc, &p) in srow.iter().enumerate() {
+                        if p == 0.0 {
+                            continue;
+                        }
+                        axpy(arow, p, &vh[(c0 + cc) * d..(c0 + cc + 1) * d]);
+                    }
+                    mrow[r] = mt;
+                }
+            }
+            for r in 0..rows {
+                let l = if lrow[r] == 0.0 { 1.0 } else { lrow[r] };
+                let arow = &acc[r * d..(r + 1) * d];
+                for c in 0..d {
+                    o.push(arow[c] / l);
+                }
+                lse.push(mrow[r] + lrow[r].max(1e-30).ln());
+            }
+        }
+        (o, lse)
+    }
+
+    fn topk_insert(best_s: &mut [f32], best_i: &mut [i32], score: f32, index: i32) {
+        let k = best_s.len();
+        if score > best_s[k - 1] {
+            let mut pos = k - 1;
+            while pos > 0 && best_s[pos - 1] < score {
+                best_s[pos] = best_s[pos - 1];
+                best_i[pos] = best_i[pos - 1];
+                pos -= 1;
+            }
+            best_s[pos] = score;
+            best_i[pos] = index;
+        }
+    }
+
+    /// One KV head's complete-block centroids (ragged tail skipped).
+    fn centroids_head(k: &[f32], n: usize, d: usize, block: usize) -> Vec<f32> {
+        let cb = n / block;
+        let inv = 1.0 / block as f32;
+        let mut out = vec![0.0f32; cb * d];
+        for j in 0..cb {
+            let dst = &mut out[j * d..(j + 1) * d];
+            for r in 0..block {
+                let src = &k[(j * block + r) * d..(j * block + r + 1) * d];
+                for c in 0..d {
+                    dst[c] += src[c];
+                }
+            }
+            for c in dst.iter_mut() {
+                *c *= inv;
+            }
+        }
+        out
+    }
+
+    /// One query head's streaming tiled top-k (ragged-aware: tail rows
+    /// see every complete block as a candidate).
+    fn tiled_topk_head(
+        q: &[f32],
+        centroids: &[f32],
+        n: usize,
+        d: usize,
+        block: usize,
+        topk: usize,
+        tile_c: usize,
+    ) -> Vec<i32> {
+        let cb = centroids.len() / d.max(1);
+        let tile_c = tile_c.max(1);
+        if topk == 0 {
+            return Vec::new();
+        }
+        let mut out = vec![-1i32; n * topk];
+        let mut best_s = vec![f32::NEG_INFINITY; topk];
+        let mut best_i = vec![-1i32; topk];
+        for t in 0..n {
+            let own = (t / block).min(cb);
+            let qt = &q[t * d..(t + 1) * d];
+            best_s.fill(f32::NEG_INFINITY);
+            best_i.fill(-1);
+            let mut j0 = 0;
+            while j0 < own {
+                let jend = (j0 + tile_c).min(own);
+                for j in j0..jend {
+                    let dotv = dot(qt, &centroids[j * d..(j + 1) * d]);
+                    topk_insert(&mut best_s, &mut best_i, dotv, j as i32);
+                }
+                j0 = jend;
+            }
+            out[t * topk..(t + 1) * topk].copy_from_slice(&best_i);
+        }
+        out
+    }
+
+    /// Pre-refactor packed FlashMoBA forward (serial, GQA + ragged
+    /// tail): Flash TopK per query head + the gather-and-densify
+    /// forward over all rows. Returns (o, lse, (h, n, topk) indices).
+    pub fn flash_moba(
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        shape: AttnShape,
+        cfg: FlashMobaConfig,
+    ) -> (Vec<f32>, Vec<f32>, Vec<i32>) {
+        let AttnShape { h, h_kv, n, d, block, topk } = shape;
+        let cb = shape.complete_blocks();
+        let group = shape.group();
+        let cents: Vec<Vec<f32>> = (0..h_kv)
+            .map(|kvh| centroids_head(&k[kvh * n * d..(kvh + 1) * n * d], n, d, block))
+            .collect();
+        let mut o = Vec::with_capacity(h * n * d);
+        let mut lse = Vec::with_capacity(h * n);
+        let mut indices = Vec::new();
+        for qh in 0..h {
+            let kvh = qh / group;
+            let idx = tiled_topk_head(
+                &q[qh * n * d..(qh + 1) * n * d],
+                &cents[kvh],
+                n,
+                d,
+                block,
+                topk,
+                cfg.topk_tile,
+            );
+            let layout = build_varlen(&idx, n, topk, cb);
+            let (oh, lh) = forward_head(
+                &q[qh * n * d..(qh + 1) * n * d],
+                &k[kvh * n * d..(kvh + 1) * n * d],
+                &v[kvh * n * d..(kvh + 1) * n * d],
+                shape,
+                cfg,
+                &layout,
+            );
+            o.extend_from_slice(&oh);
+            lse.extend_from_slice(&lh);
+            indices.extend_from_slice(&idx);
+        }
+        (o, lse, indices)
+    }
+
+    /// The scalar gather-and-densify body for one whole head.
+    fn forward_head(
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        shape: AttnShape,
+        cfg: FlashMobaConfig,
+        layout: &super::super::varlen::VarlenLayout,
+    ) -> (Vec<f32>, Vec<f32>) {
+        let AttnShape { n, d, block, .. } = shape;
+        let nb = shape.n_blocks();
+        let cb = shape.complete_blocks();
+        let sm_scale = 1.0 / (d as f32).sqrt();
+        let tile_r = cfg.tile_r;
+        let tile_c = cfg.tile_c.min(block);
+        let mut m = vec![NEG_INF; n];
+        let mut l = vec![0.0f32; n];
+        let mut acc = vec![0.0f32; n * d];
+        let mut qg = vec![0.0f32; tile_r * d];
+        let mut s = vec![0.0f32; tile_r * tile_c];
+
+        for j in 0..nb {
+            let blen = shape.block_len(j);
+            let kb = &k[j * block * d..(j * block + blen) * d];
+            let vb = &v[j * block * d..(j * block + blen) * d];
+            let own_start = j * block;
+
+            let mut process_tile = |rows: &[u32], causal: bool| {
+                let rcount = rows.len();
+                for (r, &t) in rows.iter().enumerate() {
+                    qg[r * d..(r + 1) * d]
+                        .copy_from_slice(&q[t as usize * d..(t as usize + 1) * d]);
+                }
+                let tcs = blen.div_ceil(tile_c);
+                for ct in 0..tcs {
+                    let c0 = ct * tile_c;
+                    let cols = tile_c.min(blen - c0);
+                    for r in 0..rcount {
+                        let qt = &qg[r * d..(r + 1) * d];
+                        let trow = rows[r] as usize;
+                        let srow = &mut s[r * tile_c..r * tile_c + cols];
+                        for (cc, sval) in srow.iter_mut().enumerate() {
+                            let u = c0 + cc;
+                            if causal && own_start + u > trow {
+                                *sval = NEG_INF;
+                                continue;
+                            }
+                            *sval = dot(qt, &kb[u * d..(u + 1) * d]) * sm_scale;
+                        }
+                    }
+                    for r in 0..rcount {
+                        let ti = rows[r] as usize;
+                        let srow = &mut s[r * tile_c..r * tile_c + cols];
+                        let mut mt = m[ti];
+                        for &x in srow.iter() {
+                            if x > mt {
+                                mt = x;
+                            }
+                        }
+                        if mt == NEG_INF {
+                            continue;
+                        }
+                        let corr = (m[ti] - mt).exp();
+                        let mut psum = 0.0f32;
+                        for x in srow.iter_mut() {
+                            *x = if *x <= NEG_INF / 2.0 { 0.0 } else { (*x - mt).exp() };
+                            psum += *x;
+                        }
+                        l[ti] = l[ti] * corr + psum;
+                        let arow = &mut acc[ti * d..(ti + 1) * d];
+                        if corr != 1.0 {
+                            vscale(arow, corr);
+                        }
+                        for (cc, &p) in srow.iter().enumerate() {
+                            if p == 0.0 {
+                                continue;
+                            }
+                            axpy(arow, p, &vb[(c0 + cc) * d..(c0 + cc + 1) * d]);
+                        }
+                        m[ti] = mt;
+                    }
+                }
+            };
+
+            if j < cb {
+                for chunk in layout.queries_of(j).chunks(tile_r) {
+                    process_tile(chunk, false);
+                }
+            }
+            let own_rows: Vec<u32> =
+                (own_start as u32..(own_start + blen) as u32).collect();
+            for chunk in own_rows.chunks(tile_r) {
+                process_tile(chunk, true);
+            }
+        }
+
+        let mut o = vec![0.0f32; n * d];
+        let mut lse = vec![0.0f32; n];
+        for ti in 0..n {
+            let z = if l[ti] == 0.0 { 1.0 } else { l[ti] };
+            for c in 0..d {
+                o[ti * d + c] = acc[ti * d + c] / z;
+            }
+            lse[ti] = m[ti] + l[ti].max(1e-30).ln();
+        }
+        (o, lse)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

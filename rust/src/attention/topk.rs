@@ -11,7 +11,7 @@
 //! Selection is over *strictly past* blocks (the own block is always
 //! attended by the main kernel); unused slots are -1.
 
-use super::simd::dot;
+use super::gemm::qk_row_raw;
 use super::stats::ws_bytes;
 use super::AttnShape;
 use crate::util::pool::{concat, ExecCtx};
@@ -131,16 +131,16 @@ pub fn naive_topk_packed(
     assert_eq!(centroids.len(), h_kv * cb * d);
     let group = shape.group();
     let units = h * n;
-    // full score tensor, exactly like the original implementation
+    // full score tensor, exactly like the original implementation —
+    // each row scored by the register-blocked gemv (bit-identical to
+    // the per-block dot)
     let scores: Vec<f32> = concat(ctx.pool().map_ranges(units, |range| {
         let mut chunk = vec![0.0f32; range.len() * cb];
         for (uu, u) in range.enumerate() {
             let (qh, t) = (u / n, u % n);
             let qt = &q[(qh * n + t) * d..(qh * n + t + 1) * d];
             let ch = &centroids[(qh / group) * cb * d..(qh / group + 1) * cb * d];
-            for j in 0..cb {
-                chunk[uu * cb + j] = dot(qt, &ch[j * d..(j + 1) * d]);
-            }
+            qk_row_raw(qt, ch, d, cb, &mut chunk[uu * cb..(uu + 1) * cb]);
         }
         chunk
     }));
@@ -177,6 +177,27 @@ pub fn tiled_topk_packed(
     shape: &AttnShape,
     tile_c: usize,
 ) -> (Vec<i32>, u64) {
+    let mut out = Vec::new();
+    let ws = tiled_topk_packed_into(ctx, q, centroids, shape, tile_c, &mut out);
+    (out, ws)
+}
+
+/// [`tiled_topk_packed`] writing the `(h, n, topk)` table into a
+/// caller-provided buffer, with the per-worker running state and the
+/// per-tile score buffer drawn from the context's scratch arenas — the
+/// zero-allocation steady-state path. Centroid scoring runs on the
+/// register-blocked gemv ([`qk_row_raw`]), which is bit-identical to
+/// the per-block dot it replaced, and the streaming insertion order is
+/// unchanged — so the selection (sets *and* tie-breaks) is exactly the
+/// scalar kernel's.
+pub fn tiled_topk_packed_into(
+    ctx: &ExecCtx,
+    q: &[f32],
+    centroids: &[f32],
+    shape: &AttnShape,
+    tile_c: usize,
+    out: &mut Vec<i32>,
+) -> u64 {
     let AttnShape { h, h_kv, n, d, block, topk } = *shape;
     let cb = shape.complete_blocks();
     assert_eq!(q.len(), h * n * d);
@@ -184,34 +205,50 @@ pub fn tiled_topk_packed(
     let group = shape.group();
     let tile_c = tile_c.max(1);
     if topk == 0 {
-        return (Vec::new(), ws_bytes(&[tile_c]));
+        out.clear();
+        return ws_bytes(&[tile_c]);
     }
     let ws = ws_bytes(&[tile_c + 2 * topk]);
-    let out: Vec<i32> = concat(ctx.pool().map_ranges(h * n, |range| {
-        let mut chunk = vec![-1i32; range.len() * topk];
-        let mut best_s = vec![f32::NEG_INFINITY; topk];
-        let mut best_i = vec![-1i32; topk];
-        for (uu, u) in range.enumerate() {
-            let (qh, t) = (u / n, u % n);
-            let own = (t / block).min(cb); // candidates: complete blocks [0, own)
-            let qt = &q[(qh * n + t) * d..(qh * n + t + 1) * d];
-            let ch = &centroids[(qh / group) * cb * d..(qh / group + 1) * cb * d];
-            best_s.fill(f32::NEG_INFINITY);
-            best_i.fill(-1);
-            let mut j0 = 0;
-            while j0 < own {
-                let jend = (j0 + tile_c).min(own);
-                for j in j0..jend {
-                    let dotv = dot(qt, &ch[j * d..(j + 1) * d]);
-                    topk_insert(&mut best_s, &mut best_i, dotv, j as i32);
+    // resize only: every row is overwritten below, and a same-length
+    // resize is a no-op on steady-state calls
+    out.resize(h * n * topk, -1);
+    let none: &mut [f32] = &mut [];
+    ctx.pool().for_ranges_split(
+        h * n,
+        out.as_mut_slice(),
+        none,
+        |u| (u * topk, 0),
+        |slot, range, chunk, _| {
+            let mut scratch = ctx.scratch(slot);
+            let mut best_s = scratch.take_f32(topk, f32::NEG_INFINITY);
+            let mut best_i = scratch.take_i32(topk, -1);
+            // a tile never spans more than the cb candidate blocks
+            let mut scores = scratch.take_f32(tile_c.min(cb), 0.0);
+            for (uu, u) in range.enumerate() {
+                let (qh, t) = (u / n, u % n);
+                let own = (t / block).min(cb); // candidates: complete blocks [0, own)
+                let qt = &q[(qh * n + t) * d..(qh * n + t + 1) * d];
+                let ch = &centroids[(qh / group) * cb * d..(qh / group + 1) * cb * d];
+                best_s.fill(f32::NEG_INFINITY);
+                best_i.fill(-1);
+                let mut j0 = 0;
+                while j0 < own {
+                    let jend = (j0 + tile_c).min(own);
+                    let width = jend - j0;
+                    qk_row_raw(qt, &ch[j0 * d..jend * d], d, width, &mut scores[..width]);
+                    for (jj, &sc) in scores[..width].iter().enumerate() {
+                        topk_insert(&mut best_s, &mut best_i, sc, (j0 + jj) as i32);
+                    }
+                    j0 = jend;
                 }
-                j0 = jend;
+                chunk[uu * topk..(uu + 1) * topk].copy_from_slice(&best_i);
             }
-            chunk[uu * topk..(uu + 1) * topk].copy_from_slice(&best_i);
-        }
-        chunk
-    }));
-    (out, ws)
+            scratch.give_f32(scores);
+            scratch.give_i32(best_i);
+            scratch.give_f32(best_s);
+        },
+    );
+    ws
 }
 
 /// Set-equality of two routing tables (order within a row is irrelevant).

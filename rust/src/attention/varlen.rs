@@ -5,6 +5,15 @@
 //!
 //! The CUDA kernel scatters with atomics; single-threaded we get the
 //! deterministic ascending order for free by iterating queries in order.
+//!
+//! Two representations share the build arithmetic: the per-head
+//! [`VarlenLayout`] (owned vectors, the original API) and the
+//! flattened [`VarlenHeads`], which packs *every* head's layout into
+//! five reusable `u32` buffers so the steady-state forward can rebuild
+//! its routing layout with zero heap allocations (buffers come from a
+//! [`Scratch`] arena and go back when the call ends).
+
+use crate::util::scratch::Scratch;
 
 /// Key-block-centric routing layout.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -75,6 +84,178 @@ pub fn build_varlen_heads(
         .collect()
 }
 
+/// Every query head's key-block-centric layout in five flat reusable
+/// buffers — the arena-backed twin of a `Vec<VarlenLayout>`. Per-head
+/// query ids stay in head-local row coordinates, exactly as in the
+/// per-head struct.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct VarlenHeads {
+    h: usize,
+    nb: usize,
+    /// (h, nb) per-block routed-query counts, head-major
+    counts: Vec<u32>,
+    /// (h, nb) head-local exclusive prefix offsets
+    offsets: Vec<u32>,
+    /// concatenated per-head flat query ids
+    flat: Vec<u32>,
+    /// (h + 1) per-head bases into `flat`
+    base: Vec<u32>,
+    /// scatter cursor, reused between builds
+    cursor: Vec<u32>,
+}
+
+/// Borrowed single-head view into a [`VarlenHeads`] — the shape
+/// [`VarlenLayout`] exposes, without owning anything.
+#[derive(Debug, Clone, Copy)]
+pub struct VarlenView<'a> {
+    pub counts: &'a [u32],
+    pub offsets: &'a [u32],
+    pub flat: &'a [u32],
+}
+
+impl VarlenView<'_> {
+    /// Queries routed to block `j` (head-local row ids, ascending).
+    pub fn queries_of(&self, j: usize) -> &[u32] {
+        let o = self.offsets[j] as usize;
+        &self.flat[o..o + self.counts[j] as usize]
+    }
+
+    pub fn total(&self) -> usize {
+        self.flat.len()
+    }
+}
+
+impl VarlenHeads {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Assemble from arena buffers sized for an `(h, n, topk)` table
+    /// over `nb` blocks — the zero-allocation path. Pair with
+    /// [`VarlenHeads::release`].
+    pub fn take(scratch: &mut Scratch, h: usize, n: usize, topk: usize, nb: usize) -> Self {
+        Self {
+            h: 0,
+            nb: 0,
+            counts: scratch.take_u32(h * nb, 0),
+            offsets: scratch.take_u32(h * nb, 0),
+            flat: scratch.take_u32(h * n * topk, 0),
+            base: scratch.take_u32(h + 1, 0),
+            cursor: scratch.take_u32(h * nb, 0),
+        }
+    }
+
+    /// Return the internal buffers to the arena.
+    pub fn release(self, scratch: &mut Scratch) {
+        scratch.give_u32(self.counts);
+        scratch.give_u32(self.offsets);
+        scratch.give_u32(self.flat);
+        scratch.give_u32(self.base);
+        scratch.give_u32(self.cursor);
+    }
+
+    /// Query heads covered by the last build.
+    pub fn h(&self) -> usize {
+        self.h
+    }
+
+    /// Head `qh`'s layout view.
+    pub fn head(&self, qh: usize) -> VarlenView<'_> {
+        let nb = self.nb;
+        let b = self.base[qh] as usize;
+        let e = self.base[qh + 1] as usize;
+        VarlenView {
+            counts: &self.counts[qh * nb..(qh + 1) * nb],
+            offsets: &self.offsets[qh * nb..(qh + 1) * nb],
+            flat: &self.flat[b..e],
+        }
+    }
+
+    /// Total routed (query, block) pairs over all heads.
+    pub fn total(&self) -> usize {
+        self.flat.len()
+    }
+
+    /// Clone every head out as owned [`VarlenLayout`]s (compat shim for
+    /// consumers of the per-head struct, e.g. the backward pass).
+    pub fn to_layouts(&self) -> Vec<VarlenLayout> {
+        (0..self.h)
+            .map(|qh| {
+                let v = self.head(qh);
+                VarlenLayout {
+                    counts: v.counts.to_vec(),
+                    offsets: v.offsets.to_vec(),
+                    flat: v.flat.to_vec(),
+                }
+            })
+            .collect()
+    }
+}
+
+/// Build every head's layout into `out`, reusing its buffers — the
+/// in-place twin of [`build_varlen_heads`] (identical counts, offsets
+/// and per-block query order).
+pub fn build_varlen_heads_into(
+    indices: &[i32],
+    h: usize,
+    n: usize,
+    topk: usize,
+    nb: usize,
+    out: &mut VarlenHeads,
+) {
+    assert_eq!(indices.len(), h * n * topk);
+    out.h = h;
+    out.nb = nb;
+    // stage 1: histogram per (head, block)
+    out.counts.clear();
+    out.counts.resize(h * nb, 0);
+    for qh in 0..h {
+        let slab = &indices[qh * n * topk..(qh + 1) * n * topk];
+        let counts = &mut out.counts[qh * nb..(qh + 1) * nb];
+        for &j in slab {
+            if j >= 0 {
+                counts[j as usize] += 1;
+            }
+        }
+    }
+    // head-local exclusive prefix sums + per-head flat bases
+    out.offsets.clear();
+    out.offsets.resize(h * nb, 0);
+    out.base.clear();
+    out.base.resize(h + 1, 0);
+    let mut total = 0u32;
+    for qh in 0..h {
+        out.base[qh] = total;
+        let mut acc = 0u32;
+        for j in 0..nb {
+            out.offsets[qh * nb + j] = acc;
+            acc += out.counts[qh * nb + j];
+        }
+        total += acc;
+    }
+    out.base[h] = total;
+    // stage 2: scatter query ids (queries ascending per block, exactly
+    // as the serial per-head build)
+    out.flat.clear();
+    out.flat.resize(total as usize, 0);
+    out.cursor.clear();
+    out.cursor.extend_from_slice(&out.offsets);
+    for qh in 0..h {
+        let slab = &indices[qh * n * topk..(qh + 1) * n * topk];
+        let base = out.base[qh];
+        for t in 0..n {
+            for s in 0..topk {
+                let j = slab[t * topk + s];
+                if j >= 0 {
+                    let cur = &mut out.cursor[qh * nb + j as usize];
+                    out.flat[(base + *cur) as usize] = t as u32;
+                    *cur += 1;
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -132,6 +313,60 @@ mod tests {
         // single head == plain build_varlen
         let single = build_varlen(&idx[..2], 2, 1, 3);
         assert_eq!(build_varlen_heads(&idx[..2], 1, 2, 1, 3)[0], single);
+    }
+
+    /// The flattened multi-head build agrees with the per-head builds
+    /// exactly — counts, offsets, flat order — and its buffers round-
+    /// trip through a scratch arena without re-growing.
+    #[test]
+    fn varlen_heads_matches_per_head_layouts() {
+        let mut rng = Rng::new(11);
+        let (h, n, k, nb) = (3, 60, 3, 7);
+        let idx: Vec<i32> = (0..h * n * k)
+            .map(|_| if rng.uniform() < 0.3 { -1 } else { rng.below(nb) as i32 })
+            .collect();
+        let per_head = build_varlen_heads(&idx, h, n, k, nb);
+        let mut scratch = Scratch::new();
+        let mut warmed = 0u64;
+        for round in 0..3 {
+            let mut heads = VarlenHeads::take(&mut scratch, h, n, k, nb);
+            build_varlen_heads_into(&idx, h, n, k, nb, &mut heads);
+            assert_eq!(heads.h(), h);
+            assert_eq!(heads.total(), per_head.iter().map(|l| l.total()).sum::<usize>());
+            for (qh, l) in per_head.iter().enumerate() {
+                let v = heads.head(qh);
+                assert_eq!(v.counts, &l.counts[..], "round {round} head {qh}");
+                assert_eq!(v.offsets, &l.offsets[..], "head {qh}");
+                assert_eq!(v.flat, &l.flat[..], "head {qh}");
+                for j in 0..nb {
+                    assert_eq!(v.queries_of(j), l.queries_of(j), "head {qh} block {j}");
+                }
+            }
+            assert_eq!(heads.to_layouts(), per_head);
+            heads.release(&mut scratch);
+            if round == 0 {
+                warmed = scratch.grown_bytes();
+                assert!(warmed > 0);
+            } else {
+                // buffers warmed on round 0; later rounds reuse them
+                assert_eq!(scratch.grown_bytes(), warmed, "round {round} re-grew");
+            }
+        }
+    }
+
+    #[test]
+    fn varlen_heads_handles_empty_and_single_head() {
+        let mut heads = VarlenHeads::new();
+        build_varlen_heads_into(&[0, 1, -1, 1, 0, 3], 1, 3, 2, 4, &mut heads);
+        let single = build_varlen(&[0, 1, -1, 1, 0, 3], 3, 2, 4);
+        let v = heads.head(0);
+        assert_eq!(v.queries_of(0), single.queries_of(0));
+        assert_eq!(v.queries_of(3), single.queries_of(3));
+        assert_eq!(v.total(), single.total());
+        // a table with no valid entries
+        build_varlen_heads_into(&[-1, -1], 2, 1, 1, 3, &mut heads);
+        assert_eq!(heads.total(), 0);
+        assert_eq!(heads.head(1).queries_of(0), &[0u32; 0]);
     }
 
     #[test]

@@ -363,7 +363,7 @@ pub fn run_fig4(cfg: &AppConfig, n: usize) -> Result<()> {
             let s = rec.wall.as_secs_f64();
             t.row(vec![
                 backend.name().into(),
-                rec.name.clone(),
+                rec.name.to_string(),
                 report::ms(s),
                 format!("{:.0}%", 100.0 * s / total),
             ]);
@@ -394,7 +394,7 @@ pub fn run_fig4(cfg: &AppConfig, n: usize) -> Result<()> {
                 .iter()
                 .map(|rec| {
                     Json::obj(vec![
-                        ("stage", Json::from(rec.name.as_str())),
+                        ("stage", Json::from(rec.name)),
                         ("s", Json::from(rec.wall.as_secs_f64())),
                         ("threads", Json::from(rec.threads)),
                     ])

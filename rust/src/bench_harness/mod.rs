@@ -14,6 +14,9 @@
 //! * [`decode`] — incremental-decode throughput: per-token latency of
 //!   every backend's `forward_decode` at steady-state context lengths,
 //!   plus a decode↔prefill parity table.
+//! * [`smallblock`] — flash_moba vs dense across block ∈ {16, 32, 64}
+//!   at fixed N (the paper's small-block regime), through the
+//!   zero-allocation `forward_into` path; CI floors the B=32 speedup.
 //! * [`snr_harness`] — Eq. 1–3 validation: closed form vs Monte-Carlo,
 //!   plus paper-scale retrieval curves (the Tables 3–4 shape at 64K).
 //! * [`report`] — aligned-table printing + JSON result persistence.
@@ -21,5 +24,6 @@
 pub mod decode;
 pub mod figures;
 pub mod report;
+pub mod smallblock;
 pub mod snr_harness;
 pub mod tables;

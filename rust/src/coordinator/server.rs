@@ -68,7 +68,7 @@ use crate::attention::decode::DecodeSession;
 use crate::attention::AttnShape;
 use crate::config::ServeParams;
 use crate::runtime::{Runtime, Tensor};
-use crate::util::pool::ExecCtx;
+use crate::util::pool::{partition, ExecCtx};
 use crate::Result;
 
 /// What the worker thread executes batches on.
@@ -325,6 +325,13 @@ fn worker_loop(
     // single-item batches parallelize inside the kernel, multi-item
     // batches fan items across it — bit-identical either way
     let ctx = ExecCtx::from_env();
+    // one long-lived serial context per fan-out lane: a fanned-out
+    // prefill item runs the serial kernel path against its lane's
+    // scratch arenas, which persist across batches — so the fan-out
+    // path reaches the same steady-state allocation-free behavior as
+    // the single-item path (fresh per-batch contexts would re-warm
+    // every buffer every batch and contend on one slot)
+    let serial_lanes: Vec<ExecCtx> = (0..ctx.threads()).map(|_| ExecCtx::serial()).collect();
 
     loop {
         // wait for work or the earliest batch deadline
@@ -463,7 +470,17 @@ fn worker_loop(
             std::iter::from_fn(|| batcher.poll(now)).collect()
         };
         for batch in batches {
-            run_batch(&exec, &router, &params, &ctx, batch, &mut pending, &mut sessions, &metrics);
+            run_batch(
+                &exec,
+                &router,
+                &params,
+                &ctx,
+                &serial_lanes,
+                batch,
+                &mut pending,
+                &mut sessions,
+                &metrics,
+            );
         }
         if shutdown {
             for (_, otx) in pending.drain(..) {
@@ -488,6 +505,7 @@ fn run_batch(
     router: &Router,
     params: &ServeParams,
     ctx: &ExecCtx,
+    serial_lanes: &[ExecCtx],
     batch: Batch,
     pending: &mut Pending,
     sessions: &mut Sessions,
@@ -496,7 +514,7 @@ fn run_batch(
     match exec {
         Exec::Pjrt(runtime) => run_batch_pjrt(runtime, router, batch, pending, metrics),
         Exec::Cpu(registry) => {
-            run_batch_cpu(registry, params, ctx, batch, pending, sessions, metrics)
+            run_batch_cpu(registry, params, ctx, serial_lanes, batch, pending, sessions, metrics)
         }
     }
 }
@@ -509,16 +527,20 @@ fn run_batch(
 /// than kernel launches.
 ///
 /// Prefill items fan out across the worker pool (each item on one
-/// worker, running the serial kernel path) instead of queueing behind
-/// one another; a batch of one parallelizes *inside* the kernel. Both
-/// paths produce bit-identical outputs (the pool's determinism
-/// contract), so batching never changes what a request computes.
-/// Decode steps mutate their session's cache and stay strictly
-/// sequential in lane order.
+/// worker, running the serial kernel path against that fan-out lane's
+/// *persistent* serial context — its scratch arenas outlive the batch,
+/// so steady traffic reuses every kernel buffer) instead of queueing
+/// behind one another; a batch of one parallelizes *inside* the
+/// kernel. Both paths produce bit-identical outputs (the pool's
+/// determinism contract), so batching never changes what a request
+/// computes. Decode steps mutate their session's cache and stay
+/// strictly sequential in lane order.
+#[allow(clippy::too_many_arguments)]
 fn run_batch_cpu(
     registry: &BackendRegistry,
     params: &ServeParams,
     ctx: &ExecCtx,
+    serial_lanes: &[ExecCtx],
     batch: Batch,
     pending: &mut Pending,
     sessions: &mut Sessions,
@@ -538,19 +560,28 @@ fn run_batch_cpu(
             WorkItem::Decode(_) => None,
         })
         .collect();
-    let prefill_results: Vec<Result<Vec<f32>>> = if prefills.len() > 1 && ctx.threads() > 1 {
-        let serial = ExecCtx::serial();
-        ctx.pool()
-            .map_ranges(prefills.len(), |range| {
-                range
-                    .map(|i| {
-                        run_cpu_request(registry, params, &serial, &batch.artifact, prefills[i])
-                    })
-                    .collect::<Vec<_>>()
-            })
-            .into_iter()
-            .flatten()
-            .collect()
+    let use_fanout = prefills.len() > 1 && ctx.threads() > 1 && !serial_lanes.is_empty();
+    let prefill_results: Vec<Result<Vec<f32>>> = if use_fanout {
+        // range i always runs on lane i: each lane is owned by at most
+        // one task at a time, so its arena slot is never contended
+        let prefills_ref = &prefills;
+        let artifact = &batch.artifact;
+        let tasks: Vec<Box<dyn FnOnce() -> Vec<Result<Vec<f32>>> + Send + '_>> =
+            partition(prefills.len(), serial_lanes.len().min(ctx.threads()))
+                .into_iter()
+                .enumerate()
+                .map(|(i, range)| {
+                    let lane = &serial_lanes[i];
+                    Box::new(move || {
+                        range
+                            .map(|j| {
+                                run_cpu_request(registry, params, lane, artifact, prefills_ref[j])
+                            })
+                            .collect::<Vec<_>>()
+                    }) as Box<dyn FnOnce() -> Vec<Result<Vec<f32>>> + Send + '_>
+                })
+                .collect();
+        ctx.pool().run_tasks(tasks).into_iter().flatten().collect()
     } else {
         prefills
             .iter()
@@ -632,7 +663,11 @@ fn run_cpu_decode(
         .or_else(|| registry.get("dense"))
         .ok_or_else(|| anyhow!("no backend available for decode target {target}"))?;
     sess.append(&step.k, &step.v);
-    let o = backend.forward_decode(ctx, sess, &step.q);
+    // the response row is handed to the client, so it is a fresh Vec;
+    // the step's working buffers are the session's persistent scratch
+    // (zero per-token allocations beyond this row)
+    let mut o = Vec::new();
+    backend.forward_decode_into(ctx, sess, &step.q, &mut o);
     metrics.decode_steps.fetch_add(1, Ordering::Relaxed);
     metrics.decode_payload_bytes.fetch_add(step.payload_bytes(), Ordering::Relaxed);
     Ok((o, sess.len()))
@@ -674,7 +709,12 @@ fn run_cpu_request(
         }
         AttnKind::Dense => (dense, dense_shape(req)),
     };
-    let (o, _stats) = backend.forward(ctx, &shape, &req.q, &req.k, &req.v);
+    // the output Vec becomes the response payload (ownership moves to
+    // the client); on the dense and flash_moba lanes every kernel
+    // intermediate comes from ctx's scratch arenas via the steady-state
+    // forward_into path (the moba_naive baseline allocates by design)
+    let mut o = Vec::new();
+    backend.forward_into(ctx, &shape, &req.q, &req.k, &req.v, &mut o);
     Ok(o)
 }
 

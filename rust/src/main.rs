@@ -11,7 +11,9 @@
 use std::path::{Path, PathBuf};
 use std::time::Instant;
 
-use flash_moba::bench_harness::{decode as decode_bench, figures, report, snr_harness, tables};
+use flash_moba::bench_harness::{
+    decode as decode_bench, figures, report, smallblock, snr_harness, tables,
+};
 use flash_moba::config::AppConfig;
 use flash_moba::util::json::Json;
 use flash_moba::coordinator::{AttnKind, AttnRequest, Coordinator};
@@ -34,8 +36,12 @@ COMMANDS:
   eval                         evaluate a variant (--variant, --ckpt)
   bench <target>               regenerate a paper table/figure:
                                table1..table6, fig2, fig3, fig4, snr,
-                               parity, parity-gqa, decode, ablate-tiles,
-                               all (--quick, --steps N)
+                               parity, parity-gqa, decode, smallblock,
+                               ablate-tiles, all (--quick, --steps N)
+                               (smallblock sweeps block 16/32/64 at
+                               fixed N, flash_moba vs dense, through
+                               the zero-allocation forward_into path;
+                               its B=32 speedup is floor-gated in CI)
                                (parity/parity-gqa/decode/fig3/fig4/snr/
                                ablate-tiles need no artifacts: they run
                                the CPU substrate through the
@@ -228,6 +234,7 @@ fn bench(cfg: &AppConfig, target: &str, quick: bool) -> Result<()> {
             }
             "decode" => decode_bench::run_decode(cfg, quick)
                 .map(|s| vec![("speedup_vs_dense".into(), s)]),
+            "smallblock" => smallblock::run_smallblock(cfg, quick),
             "ablate-tiles" => {
                 none(figures::run_tile_ablation(cfg, if quick { 2048 } else { 8192 }))
             }
@@ -248,8 +255,8 @@ fn bench(cfg: &AppConfig, target: &str, quick: bool) -> Result<()> {
     };
     if target == "all" {
         for t in [
-            "parity", "parity-gqa", "decode", "snr", "fig3", "fig4", "ablate-tiles", "table1",
-            "table3", "table5", "fig2", "table2", "table4", "table6",
+            "parity", "parity-gqa", "decode", "smallblock", "snr", "fig3", "fig4", "ablate-tiles",
+            "table1", "table3", "table5", "fig2", "table2", "table4", "table6",
         ] {
             println!("\n######## bench {t} ########");
             run_and_emit(cfg, t)?;

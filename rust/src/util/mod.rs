@@ -9,8 +9,11 @@
 //! * [`pool`] — scoped thread pool + [`pool::ExecCtx`]: the
 //!   deterministic multi-core execution layer under every attention
 //!   backend (`MOBA_THREADS` workers, bit-identical to serial).
+//! * [`scratch`] — reusable buffer arena (one per `ExecCtx` worker
+//!   slot): the zero-allocation kernel runtime's freelists.
 
 pub mod bench;
 pub mod cli;
 pub mod json;
 pub mod pool;
+pub mod scratch;

@@ -28,8 +28,10 @@
 //! correctness-first substrate; callers that care run `MOBA_THREADS=1`
 //! or an [`ExecCtx::serial`] context.
 
-use std::ops::Range;
-use std::sync::{Arc, OnceLock};
+use std::ops::{Deref, DerefMut, Range};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock, TryLockError};
+
+use super::scratch::Scratch;
 
 /// Scoped fork-join pool: a worker-count budget plus the spawn/join
 /// helpers every parallel kernel uses.
@@ -118,6 +120,57 @@ impl ThreadPool {
             .collect();
         self.run_tasks(tasks)
     }
+
+    /// [`ThreadPool::map_ranges`] writing **in place**: partition
+    /// `0..n` into at most `workers` contiguous unit-ranges and hand
+    /// each task disjoint mutable windows of two output buffers —
+    /// no per-range result vectors, no concat copy. `bound(u)` maps a
+    /// unit boundary `u` (0..=n) to element offsets in `a` and `b`
+    /// (must be monotone; `bound(0) == (0, 0)`). `f` receives
+    /// `(range_index, unit_range, a_window, b_window)` where the
+    /// windows cover `bound(range.start)..bound(range.end)`.
+    ///
+    /// Range `i` is always the i-th partition of `0..n`, so a kernel
+    /// that keys per-worker scratch off `range_index` replays the
+    /// identical buffer sequence on every same-shape call. The serial
+    /// path (one worker or one unit) runs `f` inline with **zero heap
+    /// allocations** — the property the allocation-regression suite
+    /// pins through the kernels built on this.
+    pub fn for_ranges_split<A, B, FB, F>(&self, n: usize, a: &mut [A], b: &mut [B], bound: FB, f: F)
+    where
+        A: Send,
+        B: Send,
+        FB: Fn(usize) -> (usize, usize),
+        F: Fn(usize, Range<usize>, &mut [A], &mut [B]) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        debug_assert_eq!(bound(0), (0, 0), "bound must start at the buffer origin");
+        let (a_end, b_end) = bound(n);
+        if self.workers.min(n) <= 1 {
+            f(0, 0..n, &mut a[..a_end], &mut b[..b_end]);
+            return;
+        }
+        let ranges = partition(n, self.workers);
+        let fr = &f;
+        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(ranges.len());
+        let mut a_rest = &mut a[..a_end];
+        let mut b_rest = &mut b[..b_end];
+        let (mut a_base, mut b_base) = (0usize, 0usize);
+        for (i, r) in ranges.into_iter().enumerate() {
+            let (a_next, b_next) = bound(r.end);
+            debug_assert!(a_next >= a_base && b_next >= b_base, "bound must be monotone");
+            let (a_chunk, a_tail) = std::mem::take(&mut a_rest).split_at_mut(a_next - a_base);
+            let (b_chunk, b_tail) = std::mem::take(&mut b_rest).split_at_mut(b_next - b_base);
+            a_rest = a_tail;
+            b_rest = b_tail;
+            a_base = a_next;
+            b_base = b_next;
+            tasks.push(Box::new(move || fr(i, r, a_chunk, b_chunk)));
+        }
+        self.run_tasks(tasks);
+    }
 }
 
 /// Split `0..n` into at most `parts` contiguous, near-equal, non-empty
@@ -154,16 +207,64 @@ pub fn concat<T: Clone>(parts: Vec<Vec<T>>) -> Vec<T> {
 
 /// Execution context handed to every [`AttentionBackend`]
 /// (`crate::attention::backend::AttentionBackend`) call: the shared
-/// thread pool the kernels partition their work over. Cheap to clone
-/// (an [`Arc`]); `threads() == 1` selects the pure serial path.
+/// thread pool the kernels partition their work over, plus one
+/// [`Scratch`] buffer arena per worker slot (the zero-allocation
+/// kernel runtime's workspace). Cheap to clone (two [`Arc`]s; clones
+/// share both the worker budget and the arenas); `threads() == 1`
+/// selects the pure serial path.
 #[derive(Debug, Clone)]
 pub struct ExecCtx {
     pool: Arc<ThreadPool>,
+    scratch: Arc<Vec<Mutex<Scratch>>>,
+}
+
+/// A locked (or, under contention, private fallback) scratch arena —
+/// see [`ExecCtx::scratch`].
+pub enum ScratchHandle<'a> {
+    /// the worker slot's pooled arena (the steady-state path)
+    Pooled(MutexGuard<'a, Scratch>),
+    /// a throwaway arena: the slot was held by a concurrent call on
+    /// the same context, so this call pays allocations rather than
+    /// blocking behind it
+    Local(Box<Scratch>),
+}
+
+impl ScratchHandle<'_> {
+    /// Did this handle reach the worker slot's pooled arena? Callers
+    /// that give buffers back in a *separate* later acquisition (e.g.
+    /// `forward_into` taking before a parallel region and giving
+    /// after) must check this: pooled-taken buffers go back through
+    /// [`ExecCtx::scratch_wait`], Local-taken ones are throwaway and
+    /// must be dropped — returning them would grow the pooled
+    /// freelists without bound under repeated contention.
+    pub fn is_pooled(&self) -> bool {
+        matches!(self, ScratchHandle::Pooled(_))
+    }
+}
+
+impl Deref for ScratchHandle<'_> {
+    type Target = Scratch;
+    fn deref(&self) -> &Scratch {
+        match self {
+            ScratchHandle::Pooled(g) => g,
+            ScratchHandle::Local(s) => s,
+        }
+    }
+}
+
+impl DerefMut for ScratchHandle<'_> {
+    fn deref_mut(&mut self) -> &mut Scratch {
+        match self {
+            ScratchHandle::Pooled(g) => g,
+            ScratchHandle::Local(s) => s,
+        }
+    }
 }
 
 impl ExecCtx {
     pub fn new(pool: ThreadPool) -> Self {
-        Self { pool: Arc::new(pool) }
+        let slots = (0..pool.workers()).map(|_| Mutex::new(Scratch::new())).collect();
+        Self { pool: Arc::new(pool), scratch: Arc::new(slots) }
     }
 
     /// A context with exactly `n` workers (tests pin 1 vs N to assert
@@ -197,6 +298,38 @@ impl ExecCtx {
 
     pub fn pool(&self) -> &ThreadPool {
         &self.pool
+    }
+
+    /// Lock worker slot `slot`'s scratch arena (slots wrap modulo the
+    /// worker count, so a partition index is always a valid slot).
+    /// Deterministic kernels key the slot off their
+    /// [`ThreadPool::for_ranges_split`] range index: repeated
+    /// same-shape calls then replay the identical take/give sequence
+    /// per slot and stay allocation-free after warmup. If the slot is
+    /// held by a *concurrent* call on the same context, a private
+    /// throwaway arena is returned instead of blocking — correctness
+    /// is unaffected, that call just pays its allocations.
+    pub fn scratch(&self, slot: usize) -> ScratchHandle<'_> {
+        match self.scratch[slot % self.scratch.len()].try_lock() {
+            Ok(g) => ScratchHandle::Pooled(g),
+            Err(TryLockError::Poisoned(p)) => ScratchHandle::Pooled(p.into_inner()),
+            Err(TryLockError::WouldBlock) => ScratchHandle::Local(Box::default()),
+        }
+    }
+
+    /// Lock slot `slot`'s arena, *waiting* if a concurrent call holds
+    /// it. Used on give-back paths that took buffers in an earlier,
+    /// separate acquisition: a buffer taken from the pooled arena must
+    /// never be lost to a throwaway fallback just because the slot was
+    /// momentarily contended (that would silently re-grow the pool on
+    /// every later call). Callers must not already hold this slot's
+    /// handle on the same thread (the in-tree kernels never do — give
+    /// sites run after every kernel handle is dropped).
+    pub fn scratch_wait(&self, slot: usize) -> MutexGuard<'_, Scratch> {
+        match self.scratch[slot % self.scratch.len()].lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        }
     }
 }
 
@@ -318,5 +451,91 @@ mod tests {
     fn concat_reassembles() {
         assert_eq!(concat(vec![vec![1, 2], vec![], vec![3]]), vec![1, 2, 3]);
         assert!(concat::<f32>(Vec::new()).is_empty());
+    }
+
+    /// In-place range splitting covers both buffers exactly once, at
+    /// any worker count, with non-uniform unit spans.
+    #[test]
+    fn for_ranges_split_covers_disjoint_windows() {
+        // unit u owns u+1 elements of `a` and 1 element of `b`
+        let n = 7;
+        let bound = |u: usize| (u * (u + 1) / 2, u);
+        for workers in [1, 2, 3, 8] {
+            let pool = ThreadPool::new(workers);
+            let mut a = vec![0u32; bound(n).0];
+            let mut b = vec![0u32; n];
+            pool.for_ranges_split(n, &mut a, &mut b, bound, |idx, range, aw, bw| {
+                assert_eq!(aw.len(), bound(range.end).0 - bound(range.start).0);
+                assert_eq!(bw.len(), range.len());
+                for x in aw.iter_mut() {
+                    *x += 1 + idx as u32;
+                }
+                for (off, u) in range.enumerate() {
+                    bw[off] = u as u32;
+                }
+            });
+            // every element written exactly once
+            assert!(a.iter().all(|&x| x >= 1), "workers={workers}");
+            assert_eq!(b, (0..n as u32).collect::<Vec<_>>(), "workers={workers}");
+        }
+    }
+
+    #[test]
+    fn for_ranges_split_zero_units_is_noop() {
+        let pool = ThreadPool::new(4);
+        let mut a: Vec<f32> = Vec::new();
+        let mut b: Vec<f32> = Vec::new();
+        pool.for_ranges_split(0, &mut a, &mut b, |_| (0, 0), |_, _, _, _| panic!("no units"));
+    }
+
+    /// Scratch slots: same slot reuses buffers across calls; a held
+    /// slot falls back to a private arena instead of deadlocking.
+    #[test]
+    fn ctx_scratch_slots_reuse_and_fall_back() {
+        let ctx = ExecCtx::with_threads(2);
+        {
+            let mut s = ctx.scratch(0);
+            let v = s.take_f32(32, 0.0);
+            s.give_f32(v);
+            assert!(s.grown_bytes() > 0);
+        }
+        let grown = {
+            let s = ctx.scratch(0);
+            s.grown_bytes()
+        };
+        {
+            // steady state: same request, no further growth
+            let mut s = ctx.scratch(0);
+            let v = s.take_f32(32, 1.0);
+            assert_eq!(v.len(), 32);
+            s.give_f32(v);
+            assert_eq!(s.grown_bytes(), grown);
+        }
+        // slots wrap modulo worker count
+        let _ = ctx.scratch(5);
+        // holding slot 1 while asking for it again must not block
+        let _held = ctx.scratch(1);
+        let mut fallback = ctx.scratch(1);
+        assert!(matches!(fallback, ScratchHandle::Local(_)));
+        let v = fallback.take_f32(4, 0.0);
+        assert_eq!(v.len(), 4);
+    }
+
+    /// scratch_wait reaches the pooled arena (so give-backs are never
+    /// lost): a buffer given through it is reused by the next take.
+    #[test]
+    fn scratch_wait_gives_back_to_the_pool() {
+        let ctx = ExecCtx::with_threads(1);
+        let buf = {
+            let mut s = ctx.scratch(0);
+            s.take_f32(16, 0.0)
+        };
+        ctx.scratch_wait(0).give_f32(buf);
+        let mut s = ctx.scratch(0);
+        let grown = s.grown_bytes();
+        let again = s.take_f32(16, 1.0);
+        assert_eq!(again.len(), 16);
+        assert_eq!(s.grown_bytes(), grown, "pooled buffer was lost");
+        s.give_f32(again);
     }
 }

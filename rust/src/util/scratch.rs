@@ -1,0 +1,202 @@
+//! Reusable buffer arena for the zero-allocation kernel runtime.
+//!
+//! Every hot kernel in the attention substrate needs a handful of
+//! per-call working buffers (online-softmax accumulators, gathered
+//! query tiles, score tiles, routing state). Before this existed they
+//! were `vec![...]`'d fresh on every `forward` call and every decode
+//! token — the allocator churn dominated exactly the small-block
+//! regime the paper optimizes for. A [`Scratch`] keeps freed buffers
+//! on typed freelists and hands them back on the next request, so a
+//! steady-state repeat of the same shape performs **zero heap
+//! allocations** after the first (warmup) call — pinned by
+//! `rust/tests/alloc_regression.rs`.
+//!
+//! Protocol: `take_*` pops the first freelist entry whose capacity
+//! fits (growing one only when nothing fits — counted by the
+//! [`Scratch::grown_bytes`] hook the allocation-regression tests
+//! assert on), clears it and resizes it to `len` filled with `fill`.
+//! `give_*` returns the buffer for reuse. Buffers are plain owned
+//! `Vec`s while out, so there is no borrow entanglement with the
+//! arena: take several, use them together, give them back in any
+//! order.
+//!
+//! Threading: one `Scratch` is single-owner (`&mut`). The per-worker
+//! story lives in [`crate::util::pool::ExecCtx`], which holds one
+//! mutex-guarded arena per worker slot; deterministic kernels lock the
+//! slot matching their partition index, so repeated same-shape calls
+//! replay the identical take/give sequence per slot.
+
+/// Typed freelists of reusable buffers, plus growth accounting.
+#[derive(Debug, Default)]
+pub struct Scratch {
+    f32s: Vec<Vec<f32>>,
+    u32s: Vec<Vec<u32>>,
+    i32s: Vec<Vec<i32>>,
+    /// bytes of fresh capacity the arena had to allocate (0 in steady
+    /// state — the allocation-regression hook)
+    grown_bytes: u64,
+    /// take_* calls served
+    takes: u64,
+}
+
+/// Pop the *smallest* freelist buffer whose capacity fits `len`
+/// (best-fit: a small request must not consume the big buffer a later
+/// request in the same take/give sequence needs, or the sequence would
+/// keep growing buffers instead of converging). When nothing fits,
+/// grow the largest buffer — the one closest to fitting. Returns the
+/// buffer cleared and resized to `len` filled with `fill`, plus the
+/// bytes of capacity growth.
+fn take_from<T: Clone>(free: &mut Vec<Vec<T>>, len: usize, fill: T) -> (Vec<T>, u64) {
+    let mut fit: Option<(usize, usize)> = None; // (index, capacity)
+    let mut largest: Option<(usize, usize)> = None;
+    for (i, b) in free.iter().enumerate() {
+        let c = b.capacity();
+        let tighter = match fit {
+            Some((_, fc)) => c < fc,
+            None => true,
+        };
+        if c >= len && tighter {
+            fit = Some((i, c));
+        }
+        let larger = match largest {
+            Some((_, lc)) => c > lc,
+            None => true,
+        };
+        if larger {
+            largest = Some((i, c));
+        }
+    }
+    let mut v = match fit.or(largest) {
+        Some((i, _)) => free.swap_remove(i),
+        None => Vec::new(),
+    };
+    let grown = len.saturating_sub(v.capacity()) * std::mem::size_of::<T>();
+    v.clear();
+    v.resize(len, fill);
+    (v, grown as u64)
+}
+
+impl Scratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// An f32 buffer of exactly `len` elements, every element `fill`.
+    pub fn take_f32(&mut self, len: usize, fill: f32) -> Vec<f32> {
+        let (v, grown) = take_from(&mut self.f32s, len, fill);
+        self.grown_bytes += grown;
+        self.takes += 1;
+        v
+    }
+
+    /// A u32 buffer of exactly `len` elements, every element `fill`.
+    pub fn take_u32(&mut self, len: usize, fill: u32) -> Vec<u32> {
+        let (v, grown) = take_from(&mut self.u32s, len, fill);
+        self.grown_bytes += grown;
+        self.takes += 1;
+        v
+    }
+
+    /// An i32 buffer of exactly `len` elements, every element `fill`.
+    pub fn take_i32(&mut self, len: usize, fill: i32) -> Vec<i32> {
+        let (v, grown) = take_from(&mut self.i32s, len, fill);
+        self.grown_bytes += grown;
+        self.takes += 1;
+        v
+    }
+
+    pub fn give_f32(&mut self, v: Vec<f32>) {
+        self.f32s.push(v);
+    }
+
+    pub fn give_u32(&mut self, v: Vec<u32>) {
+        self.u32s.push(v);
+    }
+
+    pub fn give_i32(&mut self, v: Vec<i32>) {
+        self.i32s.push(v);
+    }
+
+    /// Bytes of fresh buffer capacity allocated so far. Stops growing
+    /// once every shape the arena serves has warmed up — the invariant
+    /// the allocation-regression tests pin.
+    pub fn grown_bytes(&self) -> u64 {
+        self.grown_bytes
+    }
+
+    /// take_* calls served (reuse diagnostics).
+    pub fn takes(&self) -> u64 {
+        self.takes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn take_is_sized_filled_and_reused() {
+        let mut s = Scratch::new();
+        let a = s.take_f32(8, 1.5);
+        assert_eq!(a, vec![1.5; 8]);
+        let first_growth = s.grown_bytes();
+        assert_eq!(first_growth, 8 * 4);
+        s.give_f32(a);
+        // same size again: reused, no growth
+        let b = s.take_f32(8, 0.0);
+        assert_eq!(b, vec![0.0; 8]);
+        assert_eq!(s.grown_bytes(), first_growth);
+        s.give_f32(b);
+        // smaller: still reused
+        let c = s.take_f32(3, 2.0);
+        assert_eq!(c, vec![2.0; 3]);
+        assert_eq!(s.grown_bytes(), first_growth);
+        s.give_f32(c);
+        assert_eq!(s.takes(), 3);
+    }
+
+    #[test]
+    fn best_fit_prefers_a_buffer_that_already_fits() {
+        let mut s = Scratch::new();
+        let small = s.take_u32(4, 0);
+        let large = s.take_u32(64, 0);
+        s.give_u32(small);
+        s.give_u32(large);
+        let grown = s.grown_bytes();
+        // a 16-element request must pick the 64-cap buffer, not grow
+        // the 4-cap one
+        let v = s.take_u32(16, 7);
+        assert_eq!(v.len(), 16);
+        assert!(v.iter().all(|&x| x == 7));
+        assert_eq!(s.grown_bytes(), grown);
+    }
+
+    #[test]
+    fn steady_state_sequence_stops_growing() {
+        let mut s = Scratch::new();
+        let mut after_warmup = 0;
+        for round in 0..4 {
+            let a = s.take_f32(100, 0.0);
+            let b = s.take_i32(10, -1);
+            let c = s.take_u32(33, 0);
+            s.give_u32(c);
+            s.give_i32(b);
+            s.give_f32(a);
+            if round == 0 {
+                after_warmup = s.grown_bytes();
+                assert!(after_warmup > 0);
+            } else {
+                assert_eq!(s.grown_bytes(), after_warmup, "round {round} grew");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_len_takes_work() {
+        let mut s = Scratch::new();
+        let v = s.take_f32(0, 0.0);
+        assert!(v.is_empty());
+        assert_eq!(s.grown_bytes(), 0);
+        s.give_f32(v);
+    }
+}

@@ -10,7 +10,9 @@ use flash_moba::attention::backend::{
 };
 use flash_moba::attention::centroid::centroids;
 use flash_moba::attention::decode::KvCache;
-use flash_moba::attention::dense::{flash_attention, flash_attention_ctx, naive_attention};
+use flash_moba::attention::dense::{
+    flash_attention, flash_attention_ctx, flash_attention_packed, naive_attention,
+};
 use flash_moba::attention::flash_moba::{
     flash_moba_forward, flash_moba_forward_ctx, FlashMobaConfig,
 };
@@ -571,6 +573,56 @@ fn prop_thread_count_bit_stable_on_ragged_dense_shapes() {
             l1.iter().zip(&l2).all(|(a, z)| a.to_bits() == z.to_bits()),
             "lse differs seed={seed} n={n} threads={threads}"
         );
+    }
+}
+
+/// The register-blocked microkernel forward is `to_bits`-identical to
+/// the pre-refactor scalar path (the per-(row, col) dot / per-row
+/// axpy/scale formulation, preserved as `testutil::scalar`), across
+/// the dense and FlashMoBA backends, random ragged/GQA shapes, random
+/// tile configs, and 1 vs several worker threads.
+#[test]
+fn prop_microkernels_bit_identical_to_scalar_oracle() {
+    use flash_moba::attention::testutil::scalar;
+    fn bits_equal(a: &[f32], b: &[f32], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: element {i}");
+        }
+    }
+    for seed in 0..CASES / 2 {
+        let mut rng = Rng::new(17_000 + seed);
+        let shape = rand_mh_shape(&mut rng);
+        let (q, k, v) = qkv_packed(900 + seed, shape.h, shape.h_kv, shape.n, shape.d);
+
+        // dense: the blocked online-softmax kernel at a random tiling
+        let (br, bc) = (1 + rng.below(64), 1 + rng.below(64));
+        let (so, sl) = scalar::flash_attention_packed(
+            &q, &k, &v, shape.h, shape.h_kv, shape.n, shape.d, br, bc,
+        );
+        for threads in [1usize, 3] {
+            let ctx = ExecCtx::with_threads(threads);
+            let (o, l, _) = flash_attention_packed(
+                &ctx, &q, &k, &v, shape.h, shape.h_kv, shape.n, shape.d, br, bc,
+            );
+            bits_equal(&o, &so, &format!("dense o seed={seed} threads={threads} {shape:?}"));
+            bits_equal(&l, &sl, &format!("dense lse seed={seed} threads={threads}"));
+        }
+
+        // FlashMoBA: the fused two-stage pipeline at a random config
+        let cfg = FlashMobaConfig {
+            tile_r: 1 + rng.below(40),
+            tile_c: 1 + rng.below(40),
+            topk_tile: 1 + rng.below(12),
+        };
+        let (so, sl, si) = scalar::flash_moba(&q, &k, &v, shape, cfg);
+        for threads in [1usize, 4] {
+            let ctx = ExecCtx::with_threads(threads);
+            let out = flash_moba_forward_ctx(&ctx, &q, &k, &v, shape, cfg);
+            assert_eq!(out.indices, si, "routing seed={seed} threads={threads} {shape:?}");
+            bits_equal(&out.o, &so, &format!("flash o seed={seed} threads={threads} {shape:?}"));
+            bits_equal(&out.lse, &sl, &format!("flash lse seed={seed} threads={threads}"));
+        }
     }
 }
 
