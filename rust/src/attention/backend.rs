@@ -23,14 +23,21 @@
 //! than each spawning its own; results are bit-identical at any worker
 //! count (the determinism contract of `crate::util::pool`).
 
+use super::centroid::centroids_packed;
 use super::decode::DecodeSession;
 use super::dense::{flash_attention_packed_into, naive_attention_packed};
 use super::flash_moba::{flash_moba_forward_ctx, flash_moba_forward_into, FlashMobaConfig};
 use super::moba_naive::moba_naive_forward_ctx;
+use super::plan::RoutePlan;
 use super::stats::StageStats;
 use super::testutil::{max_abs_diff, qkv_packed};
+use super::topk::routing_margin;
 use super::AttnShape;
 use crate::util::pool::ExecCtx;
+
+/// Query rows sampled per head by the runtime dense-fallback margin
+/// probe (`RoutePlan::fallback_margin`).
+const MARGIN_PROBE_ROWS: usize = 32;
 
 /// A causal attention implementation over packed multi-head tensors.
 ///
@@ -99,6 +106,122 @@ pub trait AttentionBackend: Send + Sync {
         let (out, st) = self.forward(ctx, shape, q, k, v);
         o.clear();
         o.extend_from_slice(&out);
+        st
+    }
+
+    /// Run the forward pass under a per-head [`RoutePlan`]: each KV
+    /// head attends at its own `(block, topk)` (query heads in a GQA
+    /// group share their KV head's plan), or densely for
+    /// `HeadMode::Dense` heads and for heads the runtime margin probe
+    /// degrades. Returns the packed `(h, n, d)` output and stats whose
+    /// `fallback_heads` counts the probe-degraded heads.
+    fn forward_plan(
+        &self,
+        ctx: &ExecCtx,
+        shape: &AttnShape,
+        plan: &RoutePlan,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+    ) -> (Vec<f32>, StageStats) {
+        let mut o = Vec::new();
+        let st = self.forward_plan_into(ctx, shape, plan, q, k, v, &mut o);
+        (o, st)
+    }
+
+    /// [`forward_plan`](AttentionBackend::forward_plan) writing into a
+    /// caller-provided buffer. The default implementation covers every
+    /// backend:
+    ///
+    /// * **Uniform plan, probe disabled** — delegates to
+    ///   [`forward_into`](AttentionBackend::forward_into) with the
+    ///   plan's `(block, topk)` substituted into the shape: literally
+    ///   the pre-plan code path, so `RoutePlan::uniform` output is
+    ///   `to_bits`-identical to the static-`AttnShape` path at any
+    ///   thread count (pinned by the property suite).
+    /// * **Mixed or probed plan** — dispatches KV heads in ascending
+    ///   order over their contiguous packed slices, each as an
+    ///   `(h = group, h_kv = 1)` sub-launch of this backend's own
+    ///   `forward_into`. The kernels treat heads independently, so the
+    ///   composition equals a per-head reference splice bit for bit,
+    ///   and stays deterministic at any thread count. A planned-dense
+    ///   or probe-degraded head runs *fully routed* (`topk` covering
+    ///   every candidate), which equals dense causal attention through
+    ///   this backend's own kernels (numerically within the parity
+    ///   tolerance of the dense oracle; `DenseBackend` overrides the
+    ///   whole method since every plan is dense to it). This path
+    ///   allocates per-head staging; only the uniform fast path is
+    ///   allocation-free.
+    ///
+    /// When `plan.fallback_enabled()`, each routed head is first probed
+    /// with [`routing_margin`]; a head whose observed margin falls
+    /// below `plan.fallback_margin` degrades to dense for this call and
+    /// increments `StageStats::fallback_heads`.
+    #[allow(clippy::too_many_arguments)]
+    fn forward_plan_into(
+        &self,
+        ctx: &ExecCtx,
+        shape: &AttnShape,
+        plan: &RoutePlan,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        o: &mut Vec<f32>,
+    ) -> StageStats {
+        assert_eq!(
+            plan.h_kv(),
+            shape.h_kv,
+            "route plan covers {} KV heads, shape has {}",
+            plan.h_kv(),
+            shape.h_kv
+        );
+        if !plan.fallback_enabled() {
+            if let Some((block, topk)) = plan.is_uniform() {
+                let uni = AttnShape { block, topk, ..*shape };
+                return self.forward_into(ctx, &uni, q, k, v, o);
+            }
+        }
+        let AttnShape { h, h_kv, n, d, .. } = *shape;
+        let group = shape.group();
+        let mut st = StageStats::for_heads(ctx, h);
+        o.clear();
+        o.resize(h * n * d, 0.0);
+        // one timed stage for the whole dispatch (a per-head record
+        // pair would overflow the inline stage cap at large h_kv);
+        // fallback / workspace tallies accumulate in locals because the
+        // closure must not borrow `st`
+        let mut fallback = 0u32;
+        let mut ws = 0u64;
+        let mut sub_o: Vec<f32> = Vec::new();
+        st.time("plan_fwd", || {
+            for kvh in 0..h_kv {
+                let hp = *plan.head(kvh);
+                let qs = &q[kvh * group * n * d..(kvh + 1) * group * n * d];
+                let ks = &k[kvh * n * d..(kvh + 1) * n * d];
+                let vs = &v[kvh * n * d..(kvh + 1) * n * d];
+                let sub = AttnShape::new(group, 1, n, d, hp.block, hp.topk);
+                let mut dense = hp.is_dense();
+                if !dense && plan.fallback_enabled() && !fully_routed(&sub) {
+                    let cents = centroids_packed(ctx, ks, 1, n, d, hp.block);
+                    let margin = routing_margin(qs, &cents, &sub, MARGIN_PROBE_ROWS);
+                    if margin < plan.fallback_margin {
+                        dense = true;
+                        fallback += 1;
+                    }
+                }
+                let run = if dense {
+                    // fully routed == dense causal through this backend
+                    AttnShape { topk: sub.max_candidates().max(1), ..sub }
+                } else {
+                    sub
+                };
+                sub_o.clear();
+                ws += self.forward_into(ctx, &run, qs, ks, vs, &mut sub_o).workspace_bytes;
+                o[kvh * group * n * d..(kvh + 1) * group * n * d].copy_from_slice(&sub_o);
+            }
+        });
+        st.add_workspace(ws);
+        st.fallback_heads = fallback;
         st
     }
 
@@ -212,6 +335,30 @@ impl AttentionBackend for DenseBackend {
         }
         st.add_workspace(ws);
         st
+    }
+
+    /// Dense attention ignores routing geometry entirely: every plan —
+    /// uniform, mixed, or probed — produces the same dense causal
+    /// output, so the plan path *is* the plain path (bit-identical,
+    /// allocation-free, no probe overhead).
+    fn forward_plan_into(
+        &self,
+        ctx: &ExecCtx,
+        shape: &AttnShape,
+        plan: &RoutePlan,
+        q: &[f32],
+        k: &[f32],
+        v: &[f32],
+        o: &mut Vec<f32>,
+    ) -> StageStats {
+        assert_eq!(
+            plan.h_kv(),
+            shape.h_kv,
+            "route plan covers {} KV heads, shape has {}",
+            plan.h_kv(),
+            shape.h_kv
+        );
+        self.forward_into(ctx, shape, q, k, v, o)
     }
 
     fn forward_decode_into(
@@ -747,6 +894,170 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    /// `RoutePlan::uniform` through `forward_plan[_into]` is the
+    /// pre-plan path bit for bit, for every backend and thread count —
+    /// the tentpole identity (the cross-shape sweep lives in
+    /// `rust/tests/property.rs`; this is the smoke version).
+    #[test]
+    fn uniform_plan_is_bitwise_identical_to_static_path() {
+        use super::super::plan::RoutePlan;
+        let r = BackendRegistry::with_defaults();
+        for shape in [AttnShape::single(96, 8, 16, 2), AttnShape::new(4, 2, 100, 8, 16, 2)] {
+            let plan = RoutePlan::uniform(shape.h_kv, shape.block, shape.topk);
+            let (q, k, v) = qkv_packed(31, shape.h, shape.h_kv, shape.n, shape.d);
+            for threads in [1usize, 3] {
+                let ctx = ExecCtx::with_threads(threads);
+                for b in r.iter() {
+                    if !b.supports(&shape) {
+                        continue;
+                    }
+                    let (expect, _) = b.forward(&ctx, &shape, &q, &k, &v);
+                    let (o, st) = b.forward_plan(&ctx, &shape, &plan, &q, &k, &v);
+                    assert_eq!(st.fallback_heads, 0);
+                    assert_eq!(o.len(), expect.len());
+                    assert!(
+                        o.iter().zip(&expect).all(|(a, z)| a.to_bits() == z.to_bits()),
+                        "{} uniform plan differs ({shape:?}, {threads} threads)",
+                        b.name()
+                    );
+                }
+            }
+        }
+    }
+
+    /// A uniform plan whose geometry differs from the carrier shape's
+    /// substitutes its own `(block, topk)` — same output as running the
+    /// static path at the plan's geometry.
+    #[test]
+    fn uniform_plan_overrides_shape_geometry() {
+        use super::super::plan::RoutePlan;
+        let ctx = ExecCtx::global();
+        let r = BackendRegistry::with_defaults();
+        let carrier = AttnShape::new(2, 2, 128, 8, 32, 1);
+        let planned = AttnShape::new(2, 2, 128, 8, 16, 3);
+        let plan = RoutePlan::uniform(2, 16, 3);
+        let (q, k, v) = qkv_packed(33, 2, 2, 128, 8);
+        for b in r.iter() {
+            if !b.supports(&planned) {
+                continue;
+            }
+            let (expect, _) = b.forward(ctx, &planned, &q, &k, &v);
+            let (o, _) = b.forward_plan(ctx, &carrier, &plan, &q, &k, &v);
+            assert!(
+                o.iter().zip(&expect).all(|(a, z)| a.to_bits() == z.to_bits()),
+                "{} plan geometry not substituted",
+                b.name()
+            );
+        }
+    }
+
+    /// Mixed per-head plans: the dispatch equals a hand-spliced
+    /// per-head composition bitwise, and a planned-dense head matches
+    /// the dense oracle numerically.
+    #[test]
+    fn mixed_plan_composes_per_head_and_dense_heads_match_oracle() {
+        use super::super::plan::{HeadPlan, RoutePlan};
+        let ctx = ExecCtx::global();
+        let r = BackendRegistry::with_defaults();
+        let shape = AttnShape::new(4, 2, 128, 8, 16, 2); // carrier geometry
+        let group = shape.group();
+        let (n, d) = (shape.n, shape.d);
+        let plan = RoutePlan {
+            heads: vec![HeadPlan::routed(16, 2), HeadPlan::dense(32)],
+            fallback_margin: f32::NEG_INFINITY,
+        };
+        let (q, k, v) = qkv_packed(35, shape.h, shape.h_kv, n, d);
+        let (oracle, _) = naive_attention_packed(&q, &k, &v, shape.h, shape.h_kv, n, d);
+        for b in r.iter() {
+            if !b.supports(&shape) {
+                continue;
+            }
+            let (o, st) = b.forward_plan(ctx, &shape, &plan, &q, &k, &v);
+            assert_eq!(o.len(), shape.q_elems(), "{}", b.name());
+            // planned-dense heads are not *fallbacks* (nothing degraded)
+            assert_eq!(st.fallback_heads, 0, "{}", b.name());
+            // head 1 (dense mode): numerically the dense oracle
+            let slab = &o[group * n * d..2 * group * n * d];
+            let ref_slab = &oracle[group * n * d..2 * group * n * d];
+            let dev = max_abs_diff(slab, ref_slab);
+            assert!(dev < 5e-4, "{} dense-mode head deviates {dev:.2e}", b.name());
+            // bitwise: the whole output equals the per-head splice
+            let mut expect = vec![0.0f32; shape.q_elems()];
+            for kvh in 0..shape.h_kv {
+                let hp = plan.head(kvh);
+                let sub = if hp.is_dense() {
+                    let s = AttnShape::new(group, 1, n, d, hp.block, 0);
+                    AttnShape { topk: s.max_candidates().max(1), ..s }
+                } else {
+                    AttnShape::new(group, 1, n, d, hp.block, hp.topk)
+                };
+                let (so, _) = b.forward(
+                    ctx,
+                    &sub,
+                    &q[kvh * group * n * d..(kvh + 1) * group * n * d],
+                    &k[kvh * n * d..(kvh + 1) * n * d],
+                    &v[kvh * n * d..(kvh + 1) * n * d],
+                );
+                expect[kvh * group * n * d..(kvh + 1) * group * n * d].copy_from_slice(&so);
+            }
+            if b.name() == "dense" {
+                // DenseBackend's override ignores the plan; numeric
+                // parity with the splice is all that's promised
+                assert!(max_abs_diff(&o, &expect) < 5e-4);
+            } else {
+                assert!(
+                    o.iter().zip(&expect).all(|(a, z)| a.to_bits() == z.to_bits()),
+                    "{} mixed plan differs from per-head composition",
+                    b.name()
+                );
+            }
+        }
+    }
+
+    /// The runtime escape hatch: a head whose routing margin collapses
+    /// (identical centroids -> margin 0) degrades to dense when the
+    /// threshold is above it, and `fallback_heads` records it; with the
+    /// probe below the margin nothing degrades and the output is the
+    /// routed one bit for bit.
+    #[test]
+    fn margin_probe_degrades_collapsed_heads_to_dense() {
+        use super::super::plan::RoutePlan;
+        let ctx = ExecCtx::global();
+        let r = BackendRegistry::with_defaults();
+        let shape = AttnShape::single(128, 8, 16, 2);
+        // keys constant within the whole sequence: every block centroid
+        // is identical, so every routing margin is exactly 0
+        let (q, _, v) = qkv_packed(37, 1, 1, shape.n, shape.d);
+        let k = vec![0.25f32; shape.n * shape.d];
+        for b in r.iter() {
+            if !b.supports(&shape) || b.is_exact() {
+                continue; // dense ignores plans; probe only matters for sparse
+            }
+            let mut plan = RoutePlan::uniform(1, shape.block, shape.topk);
+            plan.fallback_margin = 0.5; // margin 0 < 0.5 -> degrade
+            let (o, st) = b.forward_plan(ctx, &shape, &plan, &q, &k, &v);
+            assert_eq!(st.fallback_heads, 1, "{}", b.name());
+            let full = AttnShape { topk: shape.max_candidates(), ..shape };
+            let (dense, _) = b.forward(ctx, &full, &q, &k, &v);
+            assert!(
+                o.iter().zip(&dense).all(|(a, z)| a.to_bits() == z.to_bits()),
+                "{} degraded head is not the fully-routed output",
+                b.name()
+            );
+            // threshold below the observed margin: stays routed
+            let mut keep = RoutePlan::uniform(1, shape.block, shape.topk);
+            keep.fallback_margin = -1.0;
+            let (o2, st2) = b.forward_plan(ctx, &shape, &keep, &q, &k, &v);
+            assert_eq!(st2.fallback_heads, 0, "{}", b.name());
+            let (routed, _) = b.forward(ctx, &shape, &q, &k, &v);
+            assert!(
+                o2.iter().zip(&routed).all(|(a, z)| a.to_bits() == z.to_bits()),
+                "{} probed-but-kept head differs from the routed path",
+                b.name()
+            );
         }
     }
 

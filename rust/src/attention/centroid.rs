@@ -11,6 +11,11 @@
 //! Parallelized over (head ×) block ranges: each block's mean is an
 //! independent work unit computed with the unchanged serial arithmetic,
 //! so the result is bit-identical at any thread count.
+//!
+//! Under per-head route plans each KV head may carry its own block
+//! size; the dispatcher's per-head sub-launches land here as
+//! independent `h_kv = 1` calls, so differing geometries never share a
+//! centroid buffer.
 
 use crate::util::pool::ExecCtx;
 

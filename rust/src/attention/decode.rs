@@ -7,19 +7,22 @@
 //! keys arrive:
 //!
 //! * [`KvCache`] — per-session K/V storage, one block-partitioned store
-//!   *per KV head*, each with a running per-block key sum so the
-//!   centroid of any block is one O(d) multiply away. Appending a token
-//!   is amortized O(h_kv · d); with key convolution enabled, a
+//!   *per KV head* — each head at its **own block size** (a per-head
+//!   [`RoutePlan`]'s geometry) — with a running per-block key sum so
+//!   the centroid of any block is one O(d) multiply away. Appending a
+//!   token is amortized O(h_kv · d); with key convolution enabled, a
 //!   per-head ring buffer of the last `width` raw keys
 //!   ([`KconvStream`]) makes the streaming kconv bit-identical to the
 //!   batch [`kconv`](super::kconv::kconv).
 //! * [`DecodeSession`] — one decode step covers *all* query heads:
 //!   each query head routes against its GQA group's KV-head centroids
-//!   (top-k over complete, strictly-past blocks, plus the
-//!   always-attended current block — the paper's causal own-block
-//!   rule) and computes single-row softmax attention over the gathered
-//!   blocks. `h = h_kv = 1` reproduces the single-head decode path
-//!   bit-for-bit.
+//!   (its KV head's planned top-k over complete, strictly-past blocks,
+//!   plus the always-attended current block — the paper's causal
+//!   own-block rule) and computes single-row softmax attention over
+//!   the gathered blocks. Planned-dense heads attend the whole cache;
+//!   a finite `fallback_margin` degrades routed heads whose per-row
+//!   score margin collapses. `h = h_kv = 1` with a uniform plan
+//!   reproduces the single-head decode path bit-for-bit.
 //!
 //! Parity contract: feeding tokens one at a time through a session
 //! reproduces the prefill `forward` of the matching backend
@@ -34,6 +37,7 @@ use super::centroid::centroids;
 use super::dense::NEG_INF;
 use super::gemm::{accum_rows, qk_row};
 use super::kconv::KconvStream;
+use super::plan::RoutePlan;
 use super::simd::dot;
 use super::topk::{tiled_topk, topk_insert};
 
@@ -54,26 +58,37 @@ struct HeadStore {
 ///
 /// Keys stored here are post-kconv when a [`KconvStream`] is attached
 /// (one independent stream per head, shared taps); values are stored as
-/// given. `len` tokens occupy `ceil(len / block)` logical blocks per
-/// head, of which the last may be partial.
+/// given. Each KV head has its *own* block size (a per-head routing
+/// plan's geometry): head `i`'s `len` tokens occupy
+/// `ceil(len / blocks[i])` logical blocks, of which the last may be
+/// partial. [`KvCache::new`] is the uniform special case (every head at
+/// one block size) — bit-identical to the pre-plan cache.
 #[derive(Debug, Clone)]
 pub struct KvCache {
     h_kv: usize,
     d: usize,
-    block: usize,
+    /// per-KV-head block size (len == h_kv)
+    blocks: Vec<usize>,
     heads: Vec<HeadStore>,
 }
 
 impl KvCache {
     pub fn new(h_kv: usize, d: usize, block: usize) -> Self {
-        assert!(
-            h_kv >= 1 && d >= 1 && block >= 1,
-            "KvCache needs h_kv >= 1, d >= 1 and block >= 1"
-        );
+        Self::with_blocks(h_kv, d, &vec![block; h_kv.max(1)])
+    }
+
+    /// A cache whose KV head `i` is block-partitioned at `blocks[i]` —
+    /// the decode store of a mixed per-head [`RoutePlan`]. All heads
+    /// hold the same tokens; only the block boundaries (and therefore
+    /// the running centroid sums) differ per head.
+    pub fn with_blocks(h_kv: usize, d: usize, blocks: &[usize]) -> Self {
+        assert!(h_kv >= 1 && d >= 1, "KvCache needs h_kv >= 1 and d >= 1");
+        assert_eq!(blocks.len(), h_kv, "need one block size per KV head");
+        assert!(blocks.iter().all(|&b| b >= 1), "block sizes must be >= 1");
         let heads = (0..h_kv)
             .map(|_| HeadStore { k: Vec::new(), v: Vec::new(), sums: Vec::new(), kconv: None })
             .collect();
-        Self { h_kv, d, block, heads }
+        Self { h_kv, d, blocks: blocks.to_vec(), heads }
     }
 
     /// A cache that applies the depthwise causal key convolution
@@ -96,8 +111,16 @@ impl KvCache {
         self.d
     }
 
+    /// Head 0's block size — the cache-wide block size of a uniform
+    /// cache (the [`KvCache::new`] path). Mixed caches should ask per
+    /// head via [`KvCache::block_of`].
     pub fn block(&self) -> usize {
-        self.block
+        self.blocks[0]
+    }
+
+    /// KV head `head`'s block size.
+    pub fn block_of(&self, head: usize) -> usize {
+        self.blocks[head]
     }
 
     /// Tokens cached (identical across heads).
@@ -109,20 +132,37 @@ impl KvCache {
         self.heads[0].k.is_empty()
     }
 
-    /// Logical blocks currently occupied, `ceil(len / block)`.
+    /// Logical blocks head 0 currently occupies, `ceil(len / block)` —
+    /// the cache-wide count of a uniform cache.
     pub fn num_blocks(&self) -> usize {
-        self.len().div_ceil(self.block)
+        self.num_blocks_of(0)
     }
 
-    /// Blocks holding exactly `block` tokens, `len / block`.
+    /// Logical blocks KV head `head` currently occupies.
+    pub fn num_blocks_of(&self, head: usize) -> usize {
+        self.len().div_ceil(self.blocks[head])
+    }
+
+    /// Head 0's blocks holding exactly `block` tokens, `len / block`.
     pub fn complete_blocks(&self) -> usize {
-        self.len() / self.block
+        self.complete_blocks_of(0)
     }
 
-    /// Tokens stored in block `b`.
+    /// KV head `head`'s complete blocks.
+    pub fn complete_blocks_of(&self, head: usize) -> usize {
+        self.len() / self.blocks[head]
+    }
+
+    /// Tokens stored in head 0's block `b`.
     pub fn block_len(&self, b: usize) -> usize {
-        assert!(b < self.num_blocks());
-        (self.len() - b * self.block).min(self.block)
+        self.block_len_of(0, b)
+    }
+
+    /// Tokens stored in KV head `head`'s block `b`.
+    pub fn block_len_of(&self, head: usize, b: usize) -> usize {
+        assert!(b < self.num_blocks_of(head));
+        let block = self.blocks[head];
+        (self.len() - b * block).min(block)
     }
 
     /// KV head `head`'s cached (post-kconv) keys, (len, d) row-major.
@@ -156,10 +196,11 @@ impl KvCache {
         assert_eq!(k_t.len(), self.h_kv * self.d, "key row has wrong width");
         assert_eq!(v_t.len(), self.h_kv * self.d, "value row has wrong width");
         let t = self.len();
-        let b = t / self.block;
         let d = self.d;
         for (head, store) in self.heads.iter_mut().enumerate() {
-            if t % self.block == 0 {
+            let block = self.blocks[head];
+            let b = t / block;
+            if t % block == 0 {
                 // first token of a fresh block: open its running sum
                 let len = store.sums.len();
                 store.sums.resize(len + d, 0.0);
@@ -192,7 +233,7 @@ impl KvCache {
     /// accumulates in arrival order and is scaled by `1 / block` once.
     pub fn centroid_into(&self, head: usize, b: usize, out: &mut [f32]) {
         assert_eq!(out.len(), self.d);
-        let inv = 1.0 / self.block_len(b) as f32;
+        let inv = 1.0 / self.block_len_of(head, b) as f32;
         let sum = &self.heads[head].sums[b * self.d..(b + 1) * self.d];
         for (c, o) in out.iter_mut().enumerate() {
             *o = sum[c] * inv;
@@ -229,6 +270,12 @@ impl KvCache {
     /// per-token zero-allocation path. `blocks` receives the selection;
     /// `best_s`/`best_i`/`cbuf` are the running top-k state and the
     /// centroid row, reused across calls.
+    ///
+    /// Returns this row's routing score margin: worst admitted score
+    /// minus best rejected (non-NaN) score — the decode analogue of the
+    /// prefill [`routing_margin`](super::topk::routing_margin) probe,
+    /// at zero extra dot products. `+inf` when nothing was rejectable
+    /// (no candidates, `topk == 0`, or fewer candidates than `topk`).
     #[allow(clippy::too_many_arguments)]
     pub fn route_into(
         &self,
@@ -239,11 +286,12 @@ impl KvCache {
         best_s: &mut Vec<f32>,
         best_i: &mut Vec<i32>,
         cbuf: &mut Vec<f32>,
-    ) {
+    ) -> f32 {
         assert!(!self.is_empty(), "route called on an empty cache");
         assert_eq!(q.len(), self.d);
-        let own = (self.len() - 1) / self.block;
+        let own = (self.len() - 1) / self.blocks[head];
         blocks.clear();
+        let mut max_rej = f32::NEG_INFINITY;
         if topk > 0 && own > 0 {
             // candidates: blocks [0, own) — all complete by construction
             best_s.clear();
@@ -254,12 +302,29 @@ impl KvCache {
             cbuf.resize(self.d, 0.0);
             for j in 0..own {
                 self.centroid_into(head, j, cbuf);
-                topk_insert(best_s, best_i, dot(q, cbuf), j as i32);
+                let s = dot(q, cbuf);
+                // margin accounting: topk_insert admits iff s beats the
+                // current worst slot (strict, never NaN); on admission
+                // the displaced slot joins the rejected pool
+                let worst = best_s[topk - 1];
+                if s.is_nan() || s <= worst {
+                    if s > max_rej {
+                        max_rej = s;
+                    }
+                } else if worst > max_rej {
+                    max_rej = worst;
+                }
+                topk_insert(best_s, best_i, s, j as i32);
             }
             blocks.extend(best_i.iter().filter(|&&j| j >= 0).map(|&j| j as usize));
             blocks.sort_unstable();
         }
         blocks.push(own);
+        if max_rej > f32::NEG_INFINITY {
+            best_s[topk - 1] - max_rej
+        } else {
+            f32::INFINITY
+        }
     }
 
     /// Single-row softmax attention of one query head's row `q` over
@@ -295,12 +360,13 @@ impl KvCache {
         assert_eq!(out.len(), self.d);
         let d = self.d;
         let len = self.len();
+        let block = self.blocks[head];
         let store = &self.heads[head];
         let scale = 1.0 / (d as f32).sqrt();
         scores.clear();
         for &b in blocks {
-            let start = b * self.block;
-            let end = ((b + 1) * self.block).min(len);
+            let start = b * block;
+            let end = ((b + 1) * block).min(len);
             let seg = scores.len();
             scores.resize(seg + (end - start), 0.0);
             qk_row(q, &store.k[start * d..end * d], d, end - start, scale, &mut scores[seg..]);
@@ -319,8 +385,8 @@ impl KvCache {
         out.fill(0.0);
         let mut seg = 0usize;
         for &b in blocks {
-            let start = b * self.block;
-            let end = ((b + 1) * self.block).min(len);
+            let start = b * block;
+            let end = ((b + 1) * block).min(len);
             accum_rows(out, &scores[seg..seg + (end - start)], &store.v[start * d..end * d]);
             seg += end - start;
         }
@@ -329,9 +395,10 @@ impl KvCache {
         }
     }
 
-    /// K and V bytes one query head reads from the cache for `blocks`.
-    pub fn gather_bytes(&self, blocks: &[usize]) -> u64 {
-        let toks: usize = blocks.iter().map(|&b| self.block_len(b)).sum();
+    /// K and V bytes one query head reads from KV head `head`'s store
+    /// for `blocks`.
+    pub fn gather_bytes(&self, head: usize, blocks: &[usize]) -> u64 {
+        let toks: usize = blocks.iter().map(|&b| self.block_len_of(head, b)).sum();
         (2 * toks * self.d * 4) as u64
     }
 }
@@ -361,7 +428,9 @@ pub struct DecodeSession {
     cache: KvCache,
     /// query heads served per step (GQA group = h / cache.h_kv())
     h: usize,
-    topk: usize,
+    /// per-KV-head routing geometry; [`DecodeSession::new`] builds the
+    /// uniform plan, which reproduces the pre-plan session bit for bit
+    plan: RoutePlan,
     /// reusable per-step working buffers
     scratch: DecodeScratch,
     /// decode steps served so far
@@ -372,19 +441,40 @@ pub struct DecodeSession {
     /// blocks attended by the last decode step, summed over all query
     /// heads (each incl. its own block)
     last_routed_blocks: usize,
+    /// query-head decode steps that degraded to dense via the runtime
+    /// margin fallback (planned-`Dense` heads don't count)
+    fallback_steps: u64,
 }
 
 impl DecodeSession {
     pub fn new(h: usize, h_kv: usize, d: usize, block: usize, topk: usize) -> Self {
+        Self::with_plan(h, h_kv, d, RoutePlan::uniform(h_kv, block, topk))
+    }
+
+    /// A session whose KV heads follow a per-head [`RoutePlan`]: each
+    /// KV head's cache store is block-partitioned at its plan's
+    /// `block`, routed heads select their plan's `topk`, and
+    /// [`HeadMode::Dense`](super::plan::HeadMode::Dense) heads attend
+    /// the whole cache. A uniform plan is bit-identical to
+    /// [`DecodeSession::new`].
+    pub fn with_plan(h: usize, h_kv: usize, d: usize, plan: RoutePlan) -> Self {
         assert!(h >= 1 && h_kv >= 1 && h % h_kv == 0, "h={h} must be a multiple of h_kv={h_kv}");
+        assert_eq!(
+            plan.h_kv(),
+            h_kv,
+            "route plan covers {} KV heads, session has {h_kv}",
+            plan.h_kv()
+        );
+        let blocks: Vec<usize> = plan.heads.iter().map(|hp| hp.block).collect();
         Self {
-            cache: KvCache::new(h_kv, d, block),
+            cache: KvCache::with_blocks(h_kv, d, &blocks),
             h,
-            topk,
+            plan,
             scratch: DecodeScratch::default(),
             steps: 0,
             last_gathered_bytes: 0,
             last_routed_blocks: 0,
+            fallback_steps: 0,
         }
     }
 
@@ -422,8 +512,21 @@ impl DecodeSession {
         self.cache.d()
     }
 
+    /// Head 0's routed top-k — the session-wide top-k of a uniform
+    /// plan. Mixed plans should ask per head via [`DecodeSession::plan`].
     pub fn topk(&self) -> usize {
-        self.topk
+        self.plan.head(0).topk
+    }
+
+    /// The per-KV-head routing plan this session decodes under.
+    pub fn plan(&self) -> &RoutePlan {
+        &self.plan
+    }
+
+    /// Query-head decode steps that degraded to dense via the runtime
+    /// margin fallback so far.
+    pub fn fallback_steps(&self) -> u64 {
+        self.fallback_steps
     }
 
     /// The KV head query head `qh` routes and attends against.
@@ -458,18 +561,31 @@ impl DecodeSession {
     }
 
     /// The block sets the current packed `(h, d)` query would attend
-    /// (routing only), one per query head.
+    /// (routing only), one per query head. Planned-dense heads report
+    /// every block of their KV head's store.
     pub fn route_current(&self, q: &[f32]) -> Vec<Vec<usize>> {
         assert_eq!(q.len(), self.h * self.d());
         let d = self.d();
         (0..self.h)
-            .map(|qh| self.cache.route(&q[qh * d..(qh + 1) * d], self.kv_head_of(qh), self.topk))
+            .map(|qh| {
+                let kvh = self.kv_head_of(qh);
+                let hp = self.plan.head(kvh);
+                if hp.is_dense() {
+                    (0..self.cache.num_blocks_of(kvh)).collect()
+                } else {
+                    self.cache.route(&q[qh * d..(qh + 1) * d], kvh, hp.topk)
+                }
+            })
             .collect()
     }
 
-    /// Routed decode of a packed `(h, d)` query: per query head, top-k
-    /// blocks + own block (the MoBA decode path). Returns the packed
-    /// `(h, d)` output row.
+    /// Routed decode of a packed `(h, d)` query: per query head, its KV
+    /// head's planned top-k blocks + own block (the MoBA decode path);
+    /// planned-dense heads attend the whole cache. When the plan's
+    /// margin fallback is enabled, a routed head whose per-row score
+    /// margin collapses below the threshold degrades to dense for that
+    /// step (counted in [`DecodeSession::fallback_steps`]). Returns the
+    /// packed `(h, d)` output row.
     pub fn decode_routed(&mut self, q: &[f32]) -> Vec<f32> {
         let mut out = Vec::new();
         self.decode_routed_into(q, &mut out);
@@ -483,32 +599,46 @@ impl DecodeSession {
         assert_eq!(q.len(), self.h * self.d());
         let d = self.d();
         let h = self.h;
-        let topk = self.topk;
         let group = h / self.cache.h_kv();
         // resize only: attend_into fully rewrites every head's row
         out.resize(h * d, 0.0);
         let mut gathered = 0u64;
         let mut routed = 0usize;
+        let mut degraded = 0u64;
         {
-            let DecodeSession { cache, scratch, .. } = self;
+            let DecodeSession { cache, scratch, plan, .. } = self;
             for qh in 0..h {
                 let kvh = qh / group;
+                let hp = plan.head(kvh);
                 let qrow = &q[qh * d..(qh + 1) * d];
-                cache.route_into(
-                    qrow,
-                    kvh,
-                    topk,
-                    &mut scratch.blocks,
-                    &mut scratch.best_s,
-                    &mut scratch.best_i,
-                    &mut scratch.cbuf,
-                );
-                gathered += cache.gather_bytes(&scratch.blocks);
+                if hp.is_dense() {
+                    scratch.blocks.clear();
+                    scratch.blocks.extend(0..cache.num_blocks_of(kvh));
+                } else {
+                    let margin = cache.route_into(
+                        qrow,
+                        kvh,
+                        hp.topk,
+                        &mut scratch.blocks,
+                        &mut scratch.best_s,
+                        &mut scratch.best_i,
+                        &mut scratch.cbuf,
+                    );
+                    if margin < plan.fallback_margin {
+                        // collapsed margin: distractor blocks score as
+                        // well as the selected ones — attend everything
+                        degraded += 1;
+                        scratch.blocks.clear();
+                        scratch.blocks.extend(0..cache.num_blocks_of(kvh));
+                    }
+                }
+                gathered += cache.gather_bytes(kvh, &scratch.blocks);
                 routed += scratch.blocks.len();
                 let orow = &mut out[qh * d..(qh + 1) * d];
                 cache.attend_into(qrow, kvh, &scratch.blocks, &mut scratch.scores, orow);
             }
         }
+        self.fallback_steps += degraded;
         self.note_step(gathered, routed);
     }
 
@@ -534,11 +664,13 @@ impl DecodeSession {
         let mut routed = 0usize;
         {
             let DecodeSession { cache, scratch, .. } = self;
-            scratch.blocks.clear();
-            scratch.blocks.extend(0..cache.num_blocks());
             for qh in 0..h {
                 let kvh = qh / group;
-                gathered += cache.gather_bytes(&scratch.blocks);
+                // per-head block list: mixed plans partition each KV
+                // head's store at its own block size
+                scratch.blocks.clear();
+                scratch.blocks.extend(0..cache.num_blocks_of(kvh));
+                gathered += cache.gather_bytes(kvh, &scratch.blocks);
                 routed += scratch.blocks.len();
                 let qrow = &q[qh * d..(qh + 1) * d];
                 let orow = &mut out[qh * d..(qh + 1) * d];
@@ -625,6 +757,7 @@ mod tests {
     use super::*;
     use crate::attention::dense::naive_attention;
     use crate::attention::kconv::kconv;
+    use crate::attention::plan::HeadPlan;
     use crate::attention::testutil::{max_abs_diff, qkv, qkv_packed, Rng};
     use crate::attention::packed_rows;
 
@@ -814,10 +947,152 @@ mod tests {
         }
     }
 
+    /// A uniform plan is the identity: `with_plan` reproduces `new`
+    /// bit for bit, step for step, including the accounting counters.
+    #[test]
+    fn uniform_plan_session_is_bitwise_identical_to_new() {
+        let (h, h_kv, n, d, block, topk) = (4, 2, 52, 8, 16, 2);
+        let (q, k, v) = qkv_packed(11, h, h_kv, n, d);
+        let mut legacy = DecodeSession::new(h, h_kv, d, block, topk);
+        let plan = RoutePlan::uniform(h_kv, block, topk);
+        let mut planned = DecodeSession::with_plan(h, h_kv, d, plan);
+        assert_eq!(planned.topk(), topk);
+        assert_eq!(planned.cache().block(), block);
+        for t in 0..n {
+            let (kt, vt) = (packed_rows(&k, h_kv, n, d, t), packed_rows(&v, h_kv, n, d, t));
+            legacy.append(&kt, &vt);
+            planned.append(&kt, &vt);
+            let qt = packed_rows(&q, h, n, d, t);
+            let (a, b) = (legacy.decode_routed(&qt), planned.decode_routed(&qt));
+            assert!(a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()), "t={t}");
+        }
+        assert_eq!(legacy.last_gathered_bytes(), planned.last_gathered_bytes());
+        assert_eq!(legacy.last_routed_blocks(), planned.last_routed_blocks());
+        assert_eq!(planned.fallback_steps(), 0);
+    }
+
+    /// A mixed plan composes per head: each KV head's slab equals a
+    /// single-head session at that head's own geometry, and dense-mode
+    /// heads equal dense decode.
+    #[test]
+    fn mixed_plan_decode_composes_per_head_geometries() {
+        let (h, h_kv, n, d) = (4, 2, 57, 8);
+        let plan = RoutePlan {
+            heads: vec![HeadPlan::routed(8, 3), HeadPlan::dense(16)],
+            fallback_margin: f32::NEG_INFINITY,
+        };
+        let (q, k, v) = qkv_packed(12, h, h_kv, n, d);
+        let mut sess = DecodeSession::with_plan(h, h_kv, d, plan.clone());
+        let mut routed0 = DecodeSession::new(1, 1, d, 8, 3);
+        let mut dense1 = DecodeSession::new(1, 1, d, 16, 0);
+        let group = h / h_kv;
+        for t in 0..n {
+            sess.append(&packed_rows(&k, h_kv, n, d, t), &packed_rows(&v, h_kv, n, d, t));
+            routed0.append(&k[t * d..(t + 1) * d], &v[t * d..(t + 1) * d]);
+            dense1.append(
+                &k[(n + t) * d..(n + t + 1) * d],
+                &v[(n + t) * d..(n + t + 1) * d],
+            );
+            let o = sess.decode_routed(&packed_rows(&q, h, n, d, t));
+            for qh in 0..h {
+                let qrow = &q[(qh * n + t) * d..(qh * n + t + 1) * d];
+                let expect = if qh / group == 0 {
+                    routed0.decode_routed(qrow)
+                } else {
+                    dense1.decode_dense(qrow)
+                };
+                let got = &o[qh * d..(qh + 1) * d];
+                assert!(
+                    got.iter().zip(&expect).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "t={t} head {qh}"
+                );
+            }
+        }
+        // per-head stores carry per-head block geometry
+        assert_eq!(sess.cache().block_of(0), 8);
+        assert_eq!(sess.cache().block_of(1), 16);
+        assert_eq!(sess.cache().num_blocks_of(0), n.div_ceil(8));
+        assert_eq!(sess.cache().num_blocks_of(1), n.div_ceil(16));
+        // dense heads report all their blocks from route_current
+        let routes = sess.route_current(&packed_rows(&q, h, n, d, n - 1));
+        assert_eq!(routes[h - 1], (0..n.div_ceil(16)).collect::<Vec<_>>());
+        assert_eq!(sess.fallback_steps(), 0); // planned dense is not a fallback
+    }
+
+    /// The runtime margin fallback: an impossible threshold degrades
+    /// every routed step to dense (output == dense decode), a disabled
+    /// threshold never fires.
+    #[test]
+    fn margin_fallback_degrades_routed_steps_to_dense() {
+        let (n, d, block, topk) = (64, 8, 8, 1);
+        let (q, k, v) = qkv(13, n, d);
+        let mut plan = RoutePlan::uniform(1, block, topk);
+        plan.fallback_margin = f32::INFINITY; // every finite margin collapses
+        let mut degraded = DecodeSession::with_plan(1, 1, d, plan);
+        let mut dense = DecodeSession::new(1, 1, d, block, topk);
+        for t in 0..n {
+            degraded.append(&k[t * d..(t + 1) * d], &v[t * d..(t + 1) * d]);
+            dense.append(&k[t * d..(t + 1) * d], &v[t * d..(t + 1) * d]);
+            let o = degraded.decode_routed(&q[t * d..(t + 1) * d]);
+            let od = dense.decode_dense(&q[t * d..(t + 1) * d]);
+            assert!(o.iter().zip(&od).all(|(x, y)| x.to_bits() == y.to_bits()), "t={t}");
+        }
+        // rows with at least one rejected candidate have finite margin:
+        // own > topk, i.e. from t = (topk + 1) * block onward
+        let finite_rows = (n - (topk + 1) * block) as u64;
+        assert_eq!(degraded.fallback_steps(), finite_rows);
+    }
+
+    /// `route_into` reports the selection margin: +inf while nothing is
+    /// rejectable, positive once distractor blocks are scored, and the
+    /// selection itself is untouched by the accounting.
+    #[test]
+    fn route_margin_tracks_worst_admitted_vs_best_rejected() {
+        let (d, block, topk) = (4, 4, 2);
+        let mut cache = KvCache::new(1, d, block);
+        let mut scratch = DecodeScratch::default();
+        let q = [1.0f32, 0.0, 0.0, 0.0];
+        let margin_at = |cache: &KvCache, s: &mut DecodeScratch| {
+            cache.route_into(
+                &q,
+                0,
+                topk,
+                &mut s.blocks,
+                &mut s.best_s,
+                &mut s.best_i,
+                &mut s.cbuf,
+            )
+        };
+        // three blocks of constant keys scoring 3.0, 2.0, 1.0 — then a
+        // current block the row lives in
+        for val in [3.0f32, 2.0, 1.0] {
+            for _ in 0..block {
+                cache.append(&[val, 0.0, 0.0, 0.0], &[0.0; 4]);
+            }
+        }
+        cache.append(&[0.0; 4], &[0.0; 4]);
+        // candidates {3, 2, 1}: admitted worst 2.0, best rejected 1.0
+        let m = margin_at(&cache, &mut scratch);
+        assert!((m - 1.0).abs() < 1e-5, "margin {m}");
+        assert_eq!(scratch.blocks, vec![0, 1, 3]);
+        // fewer candidates than topk: nothing rejected, margin = +inf
+        let mut small = KvCache::new(1, d, block);
+        for _ in 0..block + 1 {
+            small.append(&[1.0, 0.0, 0.0, 0.0], &[0.0; 4]);
+        }
+        assert_eq!(margin_at(&small, &mut scratch), f32::INFINITY);
+    }
+
     #[test]
     #[should_panic]
     fn route_on_empty_cache_panics() {
         KvCache::new(1, 4, 8).route(&[0.0; 4], 0, 2);
+    }
+
+    #[test]
+    #[should_panic]
+    fn plan_head_count_mismatch_panics() {
+        DecodeSession::with_plan(4, 2, 8, RoutePlan::uniform(3, 16, 2));
     }
 
     #[test]

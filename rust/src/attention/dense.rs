@@ -16,6 +16,12 @@
 //! All forms return the output and the per-row logsumexp L (needed by
 //! the merge stage of the original-MoBA pipeline and by the backward
 //! pass).
+//!
+//! Note on per-head route plans: a plan's `Dense` heads are *not*
+//! served by these kernels — the dispatcher runs them through the
+//! routed backend as fully-routed launches so one request stays on one
+//! backend and one determinism contract. These baselines remain the
+//! correctness oracles the plan path is tested against.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 

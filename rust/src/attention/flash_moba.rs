@@ -26,6 +26,16 @@
 //! path at any worker count (pinned by the determinism property suite
 //! and the CI thread matrix), and `h = h_kv = 1` is bit-identical to
 //! the pre-multi-head kernel.
+//!
+//! Per-head route plans (`attention::plan`) never reach this kernel:
+//! the backend dispatcher decomposes a mixed [`RoutePlan`] into one
+//! uniform-geometry sub-launch per KV head, so every call here still
+//! sees a single `(block, topk)` for its whole shape. A planned-dense
+//! head arrives as a fully-routed launch (`topk = max_candidates`),
+//! which keeps the dense fallback on this kernel's own-block + routed
+//! arithmetic and therefore bit-deterministic at any thread count.
+//!
+//! [`RoutePlan`]: super::plan::RoutePlan
 
 use std::sync::atomic::{AtomicU64, Ordering};
 

@@ -27,6 +27,11 @@
 //! are bit-identical to the serial path at any thread count, and
 //! `h = h_kv = 1` reproduces the single-head pipeline bit-for-bit.
 //!
+//! Like every kernel behind the backend trait, this pipeline only ever
+//! sees uniform `(block, topk)` launches: mixed per-head route plans
+//! are decomposed upstream (`attention::backend`) into one sub-launch
+//! per KV head, so no plan awareness lives here.
+//!
 //! Also hosts [`moba_reference`], the slow token-mask oracle used by
 //! every test.
 

@@ -27,6 +27,10 @@
 //!   implementations behind one call convention (prefill `forward` +
 //!   incremental `forward_decode`), plus the registry and cross-backend
 //!   parity harness every consumer layer dispatches through.
+//! * [`plan`] — per-head routing plans: [`plan::RoutePlan`] gives every
+//!   KV head its own `(block, topk)` or a dense fallback, dispatched
+//!   through `AttentionBackend::forward_plan[_into]`; uniform plans
+//!   reproduce the static-`AttnShape` path bit for bit.
 //!
 //! Tensor layout: packed row-major `(h, n, d)` f32 — queries carry `h`
 //! heads, keys/values carry `h_kv` KV heads (GQA: `h % h_kv == 0`, each
@@ -46,6 +50,7 @@ pub mod flash_moba;
 pub mod gemm;
 pub mod kconv;
 pub mod moba_naive;
+pub mod plan;
 pub mod simd;
 pub mod stats;
 pub mod testutil;
@@ -54,6 +59,7 @@ pub mod varlen;
 
 pub use backend::{AttentionBackend, BackendRegistry};
 pub use decode::{DecodeSession, KvCache};
+pub use plan::{HeadMode, HeadPlan, RoutePlan};
 pub use stats::StageStats;
 // the execution context every backend call takes (canonical home:
 // `crate::util::pool`; re-exported here for trait consumers)

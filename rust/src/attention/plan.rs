@@ -1,0 +1,300 @@
+//! Per-head routing plans: each KV head carries its own `(block, topk)`
+//! routing geometry — or a dense fallback — instead of the single static
+//! pair baked into `AttnShape`.
+//!
+//! The paper's SNR model (Eq. 3: SNR = Δμ_eff · √(d/2B)) makes routing
+//! accuracy a *per-head* property: heads with strong signal separation
+//! retrieve reliably at large blocks and small top-k, weak heads need
+//! smaller blocks, more top-k, or no routing at all. A [`RoutePlan`]
+//! captures that choice per KV head (query heads in a GQA group share
+//! their KV head's plan), and the substrate threads it end to end:
+//! prefill via `AttentionBackend::forward_plan[_into]`, decode via
+//! `DecodeSession::with_plan`, and the serving coordinator via
+//! `serve.route_plan` / per-request overrides.
+//!
+//! Two invariants anchor the design:
+//!
+//! * **`RoutePlan::uniform` is the identity.** A uniform plan (every
+//!   head routed at the same `(block, topk)`, fallback disabled)
+//!   delegates to the exact pre-plan code path — same kernels, same
+//!   reduction order — so its outputs are `to_bits`-identical to the
+//!   static-`AttnShape` path at any `MOBA_THREADS`. The property suite
+//!   pins this.
+//! * **Determinism survives heterogeneity.** A mixed plan dispatches KV
+//!   heads in ascending head order over contiguous packed slices; each
+//!   per-head launch is itself bit-deterministic, so the composition is
+//!   too.
+//!
+//! The runtime escape hatch lives here as a threshold: when
+//! `fallback_margin` is finite and a head's observed routing score
+//! margin (see `topk::routing_margin`) falls below it, that head
+//! degrades to dense for the request. The default `-inf` disables the
+//! probe entirely — nothing compares below `-inf`, so uniform plans
+//! never take the fallback branch.
+
+use crate::util::json::Json;
+
+/// How one KV head attends: routed MoBA top-k, or full dense causal.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HeadMode {
+    /// MoBA routing at this head's `(block, topk)`.
+    Routed,
+    /// Full causal attention; `topk` is ignored, `block` only sizes the
+    /// decode cache's centroid accounting.
+    Dense,
+}
+
+/// One KV head's routing geometry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct HeadPlan {
+    pub block: usize,
+    pub topk: usize,
+    pub mode: HeadMode,
+}
+
+impl HeadPlan {
+    pub fn routed(block: usize, topk: usize) -> Self {
+        HeadPlan { block, topk, mode: HeadMode::Routed }
+    }
+
+    pub fn dense(block: usize) -> Self {
+        HeadPlan { block, topk: 0, mode: HeadMode::Dense }
+    }
+
+    pub fn is_dense(&self) -> bool {
+        self.mode == HeadMode::Dense
+    }
+}
+
+/// A full per-KV-head routing plan plus the runtime fallback threshold.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RoutePlan {
+    /// One entry per KV head, index = KV head id.
+    pub heads: Vec<HeadPlan>,
+    /// Runtime dense-fallback threshold on the observed routing score
+    /// margin. `-inf` (the default) disables the probe.
+    pub fallback_margin: f32,
+}
+
+impl RoutePlan {
+    /// Every KV head routed at the same `(block, topk)`, fallback
+    /// disabled — reproduces the static-`AttnShape` path bit for bit.
+    pub fn uniform(h_kv: usize, block: usize, topk: usize) -> Self {
+        RoutePlan {
+            heads: vec![HeadPlan::routed(block, topk); h_kv.max(1)],
+            fallback_margin: f32::NEG_INFINITY,
+        }
+    }
+
+    /// Number of KV heads this plan covers.
+    pub fn h_kv(&self) -> usize {
+        self.heads.len()
+    }
+
+    pub fn head(&self, kv_head: usize) -> &HeadPlan {
+        &self.heads[kv_head]
+    }
+
+    /// `Some((block, topk))` when every head is `Routed` at one shared
+    /// geometry — the fast path that delegates to the pre-plan kernels.
+    /// (Purely geometric: the fallback threshold is checked separately.)
+    pub fn is_uniform(&self) -> Option<(usize, usize)> {
+        let first = self.heads.first()?;
+        if first.mode != HeadMode::Routed {
+            return None;
+        }
+        for hp in &self.heads[1..] {
+            if hp != first {
+                return None;
+            }
+        }
+        Some((first.block, first.topk))
+    }
+
+    /// True when the margin probe can fire (threshold is finite).
+    pub fn fallback_enabled(&self) -> bool {
+        self.fallback_margin > f32::NEG_INFINITY
+    }
+
+    /// Structural validity for a given sequence length: at least one
+    /// head, every block >= 1, and routed heads need topk >= 1.
+    pub fn validate(&self, n: usize) -> Result<(), String> {
+        if self.heads.is_empty() {
+            return Err("route plan has no heads".into());
+        }
+        for (i, hp) in self.heads.iter().enumerate() {
+            if hp.block == 0 {
+                return Err(format!("head {i}: block must be >= 1"));
+            }
+            if hp.block > n.max(1) {
+                return Err(format!("head {i}: block {} exceeds n {}", hp.block, n));
+            }
+            if hp.mode == HeadMode::Routed && hp.topk == 0 {
+                return Err(format!("head {i}: routed head needs topk >= 1"));
+            }
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------ JSON
+    //
+    // Schema (the autotuner emits this, the coordinator loads it):
+    //
+    //   {
+    //     "n_kv_heads": 2,
+    //     "fallback_margin": 0.05,          // omitted when disabled
+    //     "heads": [
+    //       {"block": 32, "topk": 4, "mode": "routed"},
+    //       {"block": 64, "topk": 0, "mode": "dense"}
+    //     ]
+    //   }
+
+    pub fn to_json(&self) -> Json {
+        let heads = self
+            .heads
+            .iter()
+            .map(|hp| {
+                Json::obj(vec![
+                    ("block", Json::from(hp.block)),
+                    ("topk", Json::from(hp.topk)),
+                    (
+                        "mode",
+                        Json::from(match hp.mode {
+                            HeadMode::Routed => "routed",
+                            HeadMode::Dense => "dense",
+                        }),
+                    ),
+                ])
+            })
+            .collect();
+        let mut pairs = vec![("n_kv_heads", Json::from(self.heads.len()))];
+        // -inf is not representable in JSON; absence means "disabled"
+        if self.fallback_enabled() {
+            pairs.push(("fallback_margin", Json::from(self.fallback_margin as f64)));
+        }
+        pairs.push(("heads", Json::Arr(heads)));
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self, String> {
+        let heads_json = j
+            .get("heads")
+            .and_then(|h| h.as_arr())
+            .ok_or_else(|| "route plan: missing \"heads\" array".to_string())?;
+        let mut heads = Vec::with_capacity(heads_json.len());
+        for (i, hj) in heads_json.iter().enumerate() {
+            let block = hj
+                .get("block")
+                .and_then(|x| x.as_usize())
+                .ok_or_else(|| format!("route plan head {i}: missing \"block\""))?;
+            let topk = hj.get("topk").and_then(|x| x.as_usize()).unwrap_or(0);
+            let mode = match hj.get("mode").and_then(|x| x.as_str()).unwrap_or("routed") {
+                "routed" => HeadMode::Routed,
+                "dense" => HeadMode::Dense,
+                other => return Err(format!("route plan head {i}: unknown mode {other:?}")),
+            };
+            heads.push(HeadPlan { block, topk, mode });
+        }
+        if let Some(declared) = j.get("n_kv_heads").and_then(|x| x.as_usize()) {
+            if declared != heads.len() {
+                return Err(format!(
+                    "route plan: n_kv_heads {declared} != {} head entries",
+                    heads.len()
+                ));
+            }
+        }
+        let fallback_margin = j
+            .get("fallback_margin")
+            .and_then(|x| x.as_f64())
+            .map(|x| x as f32)
+            .unwrap_or(f32::NEG_INFINITY);
+        Ok(RoutePlan { heads, fallback_margin })
+    }
+
+    /// Parse a plan from JSON text (a plan file's contents).
+    pub fn parse(text: &str) -> Result<Self, String> {
+        let j = Json::parse(text).map_err(|e| format!("route plan: {e}"))?;
+        RoutePlan::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_is_uniform() {
+        let p = RoutePlan::uniform(3, 64, 8);
+        assert_eq!(p.h_kv(), 3);
+        assert_eq!(p.is_uniform(), Some((64, 8)));
+        assert!(!p.fallback_enabled());
+        assert!(p.validate(256).is_ok());
+    }
+
+    #[test]
+    fn mixed_or_dense_is_not_uniform() {
+        let mut p = RoutePlan::uniform(2, 64, 8);
+        p.heads[1] = HeadPlan::routed(32, 4);
+        assert_eq!(p.is_uniform(), None);
+        let mut q = RoutePlan::uniform(2, 64, 8);
+        q.heads[0] = HeadPlan::dense(64);
+        assert_eq!(q.is_uniform(), None);
+        // all-dense single head: not uniform either (uniform == routed)
+        let r = RoutePlan { heads: vec![HeadPlan::dense(16)], fallback_margin: f32::NEG_INFINITY };
+        assert_eq!(r.is_uniform(), None);
+    }
+
+    #[test]
+    fn validation_catches_degenerate_heads() {
+        let mut p = RoutePlan::uniform(2, 64, 8);
+        p.heads[0].block = 0;
+        assert!(p.validate(128).is_err());
+        let mut q = RoutePlan::uniform(2, 64, 8);
+        q.heads[1].topk = 0;
+        assert!(q.validate(128).is_err());
+        // dense heads don't need topk
+        let mut r = RoutePlan::uniform(2, 64, 8);
+        r.heads[1] = HeadPlan::dense(64);
+        assert!(r.validate(128).is_ok());
+        let empty = RoutePlan { heads: vec![], fallback_margin: f32::NEG_INFINITY };
+        assert!(empty.validate(128).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_mixed() {
+        let p = RoutePlan {
+            heads: vec![HeadPlan::routed(32, 4), HeadPlan::dense(64)],
+            fallback_margin: 0.125,
+        };
+        let text = p.to_json().to_string_pretty();
+        let q = RoutePlan::parse(&text).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn json_roundtrip_disabled_margin_omits_key() {
+        let p = RoutePlan::uniform(2, 128, 8);
+        let j = p.to_json();
+        assert!(j.get("fallback_margin").is_none());
+        let q = RoutePlan::from_json(&j).unwrap();
+        assert_eq!(p, q);
+        assert!(!q.fallback_enabled());
+    }
+
+    #[test]
+    fn json_rejects_malformed() {
+        assert!(RoutePlan::parse("{}").is_err());
+        assert!(RoutePlan::parse(r#"{"heads": [{"topk": 4}]}"#).is_err());
+        assert!(RoutePlan::parse(r#"{"heads": [{"block": 8, "mode": "???"}]}"#).is_err());
+        assert!(
+            RoutePlan::parse(r#"{"n_kv_heads": 3, "heads": [{"block": 8, "topk": 1}]}"#).is_err()
+        );
+    }
+
+    #[test]
+    fn mode_defaults_to_routed() {
+        let p = RoutePlan::parse(r#"{"heads": [{"block": 16, "topk": 2}]}"#).unwrap();
+        assert_eq!(p.heads[0].mode, HeadMode::Routed);
+        assert_eq!(p.is_uniform(), Some((16, 2)));
+    }
+}

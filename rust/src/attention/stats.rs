@@ -49,6 +49,10 @@ pub struct StageStats {
     /// multiple workers this sums each worker's private buffers (the
     /// true footprint of the parallel run).
     pub workspace_bytes: u64,
+    /// KV heads that degraded to dense for this run via the runtime
+    /// margin fallback (planned `HeadMode::Dense` heads don't count).
+    /// 0 on the uniform / static path.
+    pub fallback_heads: u32,
 }
 
 impl Default for StageStats {
@@ -66,6 +70,7 @@ impl StageStats {
             threads: 1,
             heads: 1,
             workspace_bytes: 0,
+            fallback_heads: 0,
         }
     }
 
@@ -143,6 +148,11 @@ impl StageStats {
         } else {
             format!("{} heads, ", self.heads)
         };
+        let heads = if self.fallback_heads == 0 {
+            heads
+        } else {
+            format!("{heads}{} dense-fallback, ", self.fallback_heads)
+        };
         format!(
             "{} (total {:.2}ms, ws {:.1}MB, {heads}{} thread{})",
             parts.join(" | "),
@@ -201,6 +211,16 @@ mod tests {
     #[test]
     fn ws_bytes_sums() {
         assert_eq!(ws_bytes(&[2, 3]), 20);
+    }
+
+    #[test]
+    fn fallback_heads_surface_in_summary_only_when_nonzero() {
+        let mut st = StageStats::new();
+        st.time("fwd", || ());
+        assert_eq!(st.fallback_heads, 0);
+        assert!(!st.summary().contains("dense-fallback"));
+        st.fallback_heads = 2;
+        assert!(st.summary().contains("2 dense-fallback"));
     }
 
     #[test]

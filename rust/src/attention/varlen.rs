@@ -12,6 +12,11 @@
 //! five reusable `u32` buffers so the steady-state forward can rebuild
 //! its routing layout with zero heap allocations (buffers come from a
 //! [`Scratch`] arena and go back when the call ends).
+//!
+//! Route-plan interaction: a layout is built per kernel launch, and
+//! the plan dispatcher gives each KV head of a mixed plan its own
+//! launch — so a layout never mixes block geometries, and the block
+//! count it is sized for is always the launching head's own.
 
 use crate::util::scratch::Scratch;
 

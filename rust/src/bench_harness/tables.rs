@@ -367,6 +367,117 @@ pub fn run_table_parity(cfg: &AppConfig, quick: bool, results_name: &str) -> Res
     Ok(speedup)
 }
 
+/// `parity-mixed`: the per-head plan path's bitwise-parity gate. Builds
+/// a mixed [`RoutePlan`] over the configured GQA layout — even KV heads
+/// routed at a small block, odd KV heads planned dense — runs it
+/// through every registered backend's `forward_plan`, and compares each
+/// output `to_bits`-exactly against a per-head reference splice (each
+/// KV head's group run as its own `(group, 1)` launch at that head's
+/// effective geometry). Also asserts the uniform-plan fast path is
+/// bitwise identical to the plain `forward_into` path. Returns 1.0 iff
+/// every comparison matched (the CI floor metric), 0.0 otherwise.
+pub fn run_table_parity_mixed(cfg: &AppConfig, quick: bool) -> Result<f64> {
+    use crate::attention::plan::{HeadPlan, RoutePlan};
+
+    let ctx = ExecCtx::global();
+    let registry = BackendRegistry::with_defaults();
+    let (h, h_kv) = (cfg.bench.heads.max(1), cfg.bench.kv_heads.max(1));
+    let group = h / h_kv.max(1);
+    anyhow::ensure!(group >= 1 && h == group * h_kv, "parity-mixed needs h a multiple of h_kv");
+    let n = if quick { 1024 } else { 2048 };
+    let d = cfg.bench.head_dim;
+    let heads: Vec<HeadPlan> = (0..h_kv)
+        .map(|i| if i % 2 == 0 { HeadPlan::routed(32, 4) } else { HeadPlan::dense(64) })
+        .collect();
+    let plan = RoutePlan { heads, fallback_margin: f32::NEG_INFINITY };
+    let uniform = RoutePlan::uniform(h_kv, cfg.bench.block, cfg.bench.topk.max(1));
+    let shape = AttnShape::new(h, h_kv, n, d, cfg.bench.block, cfg.bench.topk.max(1));
+    let (q, k, v) = qkv_packed(0xD15C0, h, h_kv, n, d);
+
+    // per-head reference splice: each KV head's group as its own
+    // (group, 1) launch at that head's effective geometry — exactly the
+    // decomposition forward_plan promises to equal bit for bit
+    let splice = |b: &dyn AttentionBackend| -> Vec<f32> {
+        let mut full = vec![0.0f32; h * n * d];
+        for kvh in 0..h_kv {
+            let hp = *plan.head(kvh);
+            let qs = &q[kvh * group * n * d..(kvh + 1) * group * n * d];
+            let ks = &k[kvh * n * d..(kvh + 1) * n * d];
+            let vs = &v[kvh * n * d..(kvh + 1) * n * d];
+            let sub = AttnShape::new(group, 1, n, d, hp.block, hp.topk);
+            let run = if hp.is_dense() {
+                // a planned-dense head runs fully routed (== dense
+                // causal through this backend)
+                AttnShape { topk: sub.max_candidates().max(1), ..sub }
+            } else {
+                sub
+            };
+            let (sub_o, _) = b.forward(ctx, &run, qs, ks, vs);
+            full[kvh * group * n * d..(kvh + 1) * group * n * d].copy_from_slice(&sub_o);
+        }
+        full
+    };
+    let bitwise = |a: &[f32], b: &[f32]| -> bool {
+        a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+    };
+
+    let mut t = Table::new(
+        "Plan-path parity — mixed per-KV-head (block, topk) vs per-head reference splice",
+        &["backend", "H", "Hkv", "N", "mixed == splice", "uniform == static", "plan fwd ms"],
+    );
+    let mut blob = Vec::new();
+    let mut all_ok = true;
+    for b in registry.iter() {
+        let reference = splice(b);
+        let t0 = Instant::now();
+        let (mixed_o, _) = b.forward_plan(ctx, &shape, &plan, &q, &k, &v);
+        let plan_s = t0.elapsed().as_secs_f64();
+        let mixed_ok = bitwise(&mixed_o, &reference);
+        // the uniform fast path must be the static path, bit for bit
+        let (uni_o, _) = b.forward_plan(ctx, &shape, &uniform, &q, &k, &v);
+        let mut static_o = Vec::new();
+        b.forward_into(ctx, &shape, &q, &k, &v, &mut static_o);
+        let uniform_ok = bitwise(&uni_o, &static_o);
+        all_ok &= mixed_ok && uniform_ok;
+        t.row(vec![
+            b.name().to_string(),
+            h.to_string(),
+            h_kv.to_string(),
+            n.to_string(),
+            mixed_ok.to_string(),
+            uniform_ok.to_string(),
+            report::ms(plan_s),
+        ]);
+        blob.push(Json::obj(vec![
+            ("backend", Json::from(b.name())),
+            ("mixed_matches_splice", Json::from(mixed_ok)),
+            ("uniform_matches_static", Json::from(uniform_ok)),
+            ("plan_fwd_s", Json::from(plan_s)),
+        ]));
+    }
+    t.print();
+    let parity_ok = if all_ok { 1.0 } else { 0.0 };
+    println!(
+        "plan-path parity {} at h={h}/h_kv={h_kv}, N={n} ({} threads)\n",
+        if all_ok { "OK" } else { "VIOLATED" },
+        ctx.threads()
+    );
+
+    report::save_json(
+        &cfg.results_dir,
+        "parity-mixed",
+        &Json::obj(vec![
+            ("rows", Json::arr(blob)),
+            ("n", Json::from(n)),
+            ("h", Json::from(h)),
+            ("h_kv", Json::from(h_kv)),
+            ("threads", Json::from(ctx.threads())),
+            ("parity_ok", Json::from(parity_ok)),
+        ]),
+    )?;
+    Ok(parity_ok)
+}
+
 /// Figure 2: block-size ablation summary (ppl + NIAH avg vs B), derived
 /// from fresh evals of the tiny block-size ladder.
 pub fn run_fig2(cfg: &AppConfig, runtime: &Runtime) -> Result<()> {

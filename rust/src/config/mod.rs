@@ -21,6 +21,7 @@ pub struct AppConfig {
     pub eval: EvalParams,
     pub serve: ServeParams,
     pub bench: BenchParams,
+    pub autotune: AutotuneParams,
 }
 
 impl Default for AppConfig {
@@ -32,6 +33,7 @@ impl Default for AppConfig {
             eval: EvalParams::default(),
             serve: ServeParams::default(),
             bench: BenchParams::default(),
+            autotune: AutotuneParams::default(),
         }
     }
 }
@@ -96,6 +98,15 @@ pub struct ServeParams {
     pub n_heads: usize,
     /// KV heads of the serving model (GQA: `n_heads % n_kv_heads == 0`)
     pub n_kv_heads: usize,
+    /// path to a per-head routing plan JSON file (the `flash-moba
+    /// autotune` output) applied to MoBA requests and decode sessions
+    /// on the CPU substrate; `None` serves the uniform
+    /// `moba_block`/`moba_topk` geometry
+    pub route_plan: Option<String>,
+    /// runtime dense-fallback threshold on the observed routing score
+    /// margin, applied to plans that don't carry their own; `-inf`
+    /// (the default) disables the probe
+    pub fallback_margin: f64,
 }
 
 impl Default for ServeParams {
@@ -108,6 +119,8 @@ impl Default for ServeParams {
             moba_topk: 8,
             n_heads: 4,
             n_kv_heads: 4,
+            route_plan: None,
+            fallback_margin: f64::NEG_INFINITY,
         }
     }
 }
@@ -123,6 +136,56 @@ impl ServeParams {
         self.moba_block = v.moba_block.max(1);
         self.moba_topk = v.moba_topk;
         self
+    }
+}
+
+/// Search space and targets for the `flash-moba autotune` command
+/// (mirrors [`crate::snr::AutotuneConfig`]; see [`AutotuneParams::to_config`]).
+#[derive(Debug, Clone)]
+pub struct AutotuneParams {
+    pub d: usize,
+    pub n: usize,
+    pub h_kv: usize,
+    pub target_recall: f64,
+    pub max_density: f64,
+    pub blocks: Vec<usize>,
+    pub topks: Vec<usize>,
+    /// per-head Δμ_eff measurements; empty = deterministic synthetic spread
+    pub head_delta_mu: Vec<f64>,
+    /// fallback threshold stamped into the emitted plan (-inf disables)
+    pub fallback_margin: f64,
+}
+
+impl Default for AutotuneParams {
+    fn default() -> Self {
+        let c = crate::snr::AutotuneConfig::default();
+        Self {
+            d: c.d,
+            n: c.n,
+            h_kv: c.h_kv,
+            target_recall: c.target_recall,
+            max_density: c.max_density,
+            blocks: c.blocks,
+            topks: c.topks,
+            head_delta_mu: Vec::new(),
+            fallback_margin: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl AutotuneParams {
+    pub fn to_config(&self) -> crate::snr::AutotuneConfig {
+        crate::snr::AutotuneConfig {
+            d: self.d,
+            n: self.n,
+            h_kv: self.h_kv,
+            target_recall: self.target_recall,
+            max_density: self.max_density,
+            blocks: self.blocks.clone(),
+            topks: self.topks.clone(),
+            head_delta_mu: self.head_delta_mu.clone(),
+            fallback_margin: self.fallback_margin,
+        }
     }
 }
 
@@ -177,6 +240,15 @@ fn ov_usize_vec(j: &Json, key: &str, dst: &mut Vec<usize>) {
     }
 }
 
+fn ov_f64_vec(j: &Json, key: &str, dst: &mut Vec<f64>) {
+    if let Some(arr) = j.get(key).and_then(|x| x.as_arr()) {
+        let parsed: Option<Vec<f64>> = arr.iter().map(|x| x.as_f64()).collect();
+        if let Some(v) = parsed {
+            *dst = v;
+        }
+    }
+}
+
 impl AppConfig {
     /// Apply a partial JSON override onto the defaults.
     pub fn apply(&mut self, j: &Json) {
@@ -213,6 +285,21 @@ impl AppConfig {
             ov_usize(s, "moba_topk", &mut self.serve.moba_topk);
             ov_usize(s, "n_heads", &mut self.serve.n_heads);
             ov_usize(s, "n_kv_heads", &mut self.serve.n_kv_heads);
+            if let Some(p) = s.get("route_plan").and_then(|x| x.as_str()) {
+                self.serve.route_plan = Some(p.to_string());
+            }
+            ov_f64(s, "fallback_margin", &mut self.serve.fallback_margin);
+        }
+        if let Some(a) = j.get("autotune") {
+            ov_usize(a, "d", &mut self.autotune.d);
+            ov_usize(a, "n", &mut self.autotune.n);
+            ov_usize(a, "h_kv", &mut self.autotune.h_kv);
+            ov_f64(a, "target_recall", &mut self.autotune.target_recall);
+            ov_f64(a, "max_density", &mut self.autotune.max_density);
+            ov_usize_vec(a, "blocks", &mut self.autotune.blocks);
+            ov_usize_vec(a, "topks", &mut self.autotune.topks);
+            ov_f64_vec(a, "head_delta_mu", &mut self.autotune.head_delta_mu);
+            ov_f64(a, "fallback_margin", &mut self.autotune.fallback_margin);
         }
         if let Some(b) = j.get("bench") {
             ov_usize_vec(b, "fig3_lens", &mut self.bench.fig3_lens);
@@ -303,6 +390,32 @@ mod tests {
         c.apply(&z);
         assert_eq!((c.bench.heads, c.bench.kv_heads), (1, 1));
         assert_eq!(c.serve.n_heads, 1);
+    }
+
+    #[test]
+    fn route_plan_and_autotune_overrides() {
+        let j = Json::parse(
+            r#"{"serve": {"route_plan": "plans/p.json", "fallback_margin": 0.1},
+                "autotune": {"h_kv": 8, "target_recall": 0.9, "blocks": [32, 64],
+                             "head_delta_mu": [1.5, 0.2]}}"#,
+        )
+        .unwrap();
+        let mut c = AppConfig::default();
+        c.apply(&j);
+        assert_eq!(c.serve.route_plan.as_deref(), Some("plans/p.json"));
+        assert!((c.serve.fallback_margin - 0.1).abs() < 1e-12);
+        assert_eq!(c.autotune.h_kv, 8);
+        assert_eq!(c.autotune.blocks, vec![32, 64]);
+        assert_eq!(c.autotune.head_delta_mu, vec![1.5, 0.2]);
+        // untouched: plan off, probe disabled, defaults preserved
+        let d = AppConfig::default();
+        assert!(d.serve.route_plan.is_none());
+        assert_eq!(d.serve.fallback_margin, f64::NEG_INFINITY);
+        assert_eq!(d.autotune.topks, crate::snr::AutotuneConfig::default().topks);
+        // the conversion round-trips onto the tuner's config
+        let cfg = c.autotune.to_config();
+        assert_eq!(cfg.h_kv, 8);
+        assert_eq!(cfg.head_delta_mu, vec![1.5, 0.2]);
     }
 
     #[test]

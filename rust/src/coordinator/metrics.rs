@@ -24,6 +24,10 @@ pub struct Metrics {
     /// design; the regression suite asserts it never scales with the
     /// session's context length
     pub decode_payload_bytes: AtomicU64,
+    /// prefill heads the runtime routing-margin probe degraded to dense
+    /// (planned-`Dense` heads don't count — only probe fallbacks do);
+    /// the rate against served requests is the plan-health signal
+    pub fallback_heads: AtomicU64,
     hist: Mutex<Histo>,
 }
 
@@ -93,7 +97,7 @@ impl Metrics {
     pub fn summary(&self) -> String {
         format!(
             "req={} resp={} rejected={} batches={} occupancy={:.2} \
-             sessions={} decode_steps={} mean_lat={:.2}ms p95<={:.1}ms",
+             sessions={} decode_steps={} fallback_heads={} mean_lat={:.2}ms p95<={:.1}ms",
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
@@ -101,6 +105,7 @@ impl Metrics {
             self.mean_occupancy(),
             self.active_sessions(),
             self.decode_steps.load(Ordering::Relaxed),
+            self.fallback_heads.load(Ordering::Relaxed),
             self.mean_latency_s() * 1e3,
             self.latency_quantile_s(0.95) * 1e3,
         )
@@ -154,5 +159,14 @@ mod tests {
         // freed > created never underflows
         m.sessions_freed.store(9, Ordering::Relaxed);
         assert_eq!(m.active_sessions(), 0);
+    }
+
+    #[test]
+    fn fallback_head_accounting() {
+        let m = Metrics::new();
+        assert!(m.summary().contains("fallback_heads=0"));
+        m.fallback_heads.fetch_add(3, Ordering::Relaxed);
+        m.fallback_heads.fetch_add(2, Ordering::Relaxed);
+        assert!(m.summary().contains("fallback_heads=5"));
     }
 }

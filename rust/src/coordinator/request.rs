@@ -2,6 +2,8 @@
 
 use std::time::Instant;
 
+use crate::attention::plan::RoutePlan;
+
 /// Which attention kernel family to serve.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum AttnKind {
@@ -42,17 +44,27 @@ pub struct AttnRequest {
     pub q: Vec<f32>,
     pub k: Vec<f32>,
     pub v: Vec<f32>,
+    /// Per-KV-head routing plan override for this request; `None` means
+    /// the server's configured plan (uniform from `ServeParams` unless
+    /// a plan file is loaded). `Moba` requests only — ignored by
+    /// `Dense` ones.
+    pub plan: Option<RoutePlan>,
 }
 
 impl AttnRequest {
     /// The single-head constructor most callers want.
     #[allow(clippy::too_many_arguments)]
     pub fn single(id: u64, kind: AttnKind, n: usize, d: usize, q: Vec<f32>, k: Vec<f32>, v: Vec<f32>) -> Self {
-        Self { id, kind, h: 1, h_kv: 1, n, d, q, k, v }
+        Self { id, kind, h: 1, h_kv: 1, n, d, q, k, v, plan: None }
     }
 
     pub fn validate(&self) -> bool {
-        self.h >= 1
+        let plan_ok = match &self.plan {
+            Some(p) => p.h_kv() == self.h_kv && p.validate(self.n).is_ok(),
+            None => true,
+        };
+        plan_ok
+            && self.h >= 1
             && self.h_kv >= 1
             && self.h % self.h_kv == 0
             && self.n > 0
@@ -199,6 +211,7 @@ mod tests {
             q: vec![0.0; 4 * n * d],
             k: vec![0.0; 2 * n * d],
             v: vec![0.0; 2 * n * d],
+            plan: None,
         };
         assert!(gqa.validate());
         // k/v sized for h instead of h_kv
@@ -209,6 +222,34 @@ mod tests {
         assert!(!bad_groups.validate());
         let no_heads = AttnRequest { h: 0, h_kv: 0, q: vec![], k: vec![], v: vec![] , ..gqa.clone() };
         assert!(!no_heads.validate());
+    }
+
+    #[test]
+    fn validate_checks_plan_coverage() {
+        use crate::attention::plan::{HeadPlan, RoutePlan};
+        let (n, d) = (32, 2);
+        let mut req = AttnRequest {
+            id: 3,
+            kind: AttnKind::Moba,
+            h: 4,
+            h_kv: 2,
+            n,
+            d,
+            q: vec![0.0; 4 * n * d],
+            k: vec![0.0; 2 * n * d],
+            v: vec![0.0; 2 * n * d],
+            plan: Some(RoutePlan {
+                heads: vec![HeadPlan::routed(8, 2), HeadPlan::dense(16)],
+                fallback_margin: f32::NEG_INFINITY,
+            }),
+        };
+        assert!(req.validate());
+        // plan must cover exactly h_kv heads
+        req.plan = Some(RoutePlan::uniform(3, 8, 2));
+        assert!(!req.validate());
+        // and be structurally valid for n (block larger than n rejected)
+        req.plan = Some(RoutePlan::uniform(2, 64, 2));
+        assert!(!req.validate());
     }
 
     #[test]
@@ -260,6 +301,7 @@ mod tests {
             q: vec![0.0; h * n * d],
             k: vec![0.0; h_kv * n * d],
             v: vec![0.0; h_kv * n * d],
+            plan: None,
         });
         let decode = WorkItem::from(DecodeStep {
             id: 2,

@@ -21,6 +21,7 @@ use super::request::AttnKind;
 #[allow(unused_imports)]
 use crate::attention::backend::AttentionBackend;
 use crate::attention::backend::BackendRegistry;
+use crate::attention::plan::RoutePlan;
 use crate::config::ServeParams;
 use crate::runtime::Manifest;
 use crate::Result;
@@ -158,6 +159,47 @@ impl Router {
     }
 }
 
+/// Load and validate the serving-level [`RoutePlan`] named by
+/// `serve.route_plan` (e.g. emitted by `flash-moba autotune`). A plan
+/// covering a different KV-head count than the advertised serving
+/// layout is a config error surfaced at startup, not per request.
+pub fn load_route_plan(serve: &ServeParams) -> Result<Option<RoutePlan>> {
+    let Some(path) = &serve.route_plan else {
+        return Ok(None);
+    };
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow!("reading route plan {path}: {e}"))?;
+    let plan = RoutePlan::parse(&text).map_err(|e| anyhow!("route plan {path}: {e}"))?;
+    if plan.h_kv() != serve.n_kv_heads {
+        return Err(anyhow!(
+            "route plan {path} covers {} KV heads, serving layout has n_kv_heads={}",
+            plan.h_kv(),
+            serve.n_kv_heads
+        ));
+    }
+    Ok(Some(plan))
+}
+
+/// The plan a MoBA request or decode session with `h_kv` KV heads is
+/// served under: the loaded serving plan when it covers the layout,
+/// else the uniform `moba_block`/`moba_topk` geometry. Plans that
+/// don't carry their own fallback threshold inherit
+/// `serve.fallback_margin`.
+pub fn effective_plan(
+    serve_plan: &Option<RoutePlan>,
+    serve: &ServeParams,
+    h_kv: usize,
+) -> RoutePlan {
+    let mut plan = match serve_plan {
+        Some(p) if p.h_kv() == h_kv => p.clone(),
+        _ => RoutePlan::uniform(h_kv, serve.moba_block.max(1), serve.moba_topk),
+    };
+    if !plan.fallback_enabled() && serve.fallback_margin > f64::NEG_INFINITY {
+        plan.fallback_margin = serve.fallback_margin as f32;
+    }
+    plan
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -274,5 +316,56 @@ mod tests {
     fn backend_routes_require_a_dense_backend() {
         let reg = BackendRegistry::new();
         assert!(Router::from_backends(&reg, &ServeParams::default()).is_err());
+    }
+
+    #[test]
+    fn effective_plan_defaults_to_uniform_serve_geometry() {
+        let serve = ServeParams { moba_block: 64, moba_topk: 4, ..ServeParams::default() };
+        let p = effective_plan(&None, &serve, 2);
+        assert_eq!(p, RoutePlan::uniform(2, 64, 4));
+        assert!(!p.fallback_enabled());
+        // a loaded plan with the right coverage wins ...
+        let loaded = Some(RoutePlan::uniform(2, 32, 2));
+        assert_eq!(effective_plan(&loaded, &serve, 2), RoutePlan::uniform(2, 32, 2));
+        // ... but a coverage mismatch falls back to uniform
+        assert_eq!(effective_plan(&loaded, &serve, 3), RoutePlan::uniform(3, 64, 4));
+    }
+
+    #[test]
+    fn effective_plan_inherits_the_serve_fallback_margin() {
+        let serve = ServeParams { fallback_margin: 0.25, ..ServeParams::default() };
+        let p = effective_plan(&None, &serve, 1);
+        assert!(p.fallback_enabled());
+        assert_eq!(p.fallback_margin, 0.25);
+        // a plan carrying its own threshold keeps it
+        let mut own = RoutePlan::uniform(1, 64, 4);
+        own.fallback_margin = 0.5;
+        assert_eq!(effective_plan(&Some(own), &serve, 1).fallback_margin, 0.5);
+    }
+
+    #[test]
+    fn load_route_plan_validates_coverage() {
+        // no plan configured: quietly absent
+        assert!(load_route_plan(&ServeParams::default()).unwrap().is_none());
+        // missing file is a startup error
+        let missing = ServeParams {
+            route_plan: Some("/nonexistent/plan.json".into()),
+            ..ServeParams::default()
+        };
+        assert!(load_route_plan(&missing).is_err());
+        // a valid plan loads iff it covers the serving layout
+        let plan = RoutePlan::uniform(2, 32, 2);
+        let path = std::env::temp_dir().join("fm_router_plan_test.json");
+        std::fs::write(&path, plan.to_json().to_string_pretty()).unwrap();
+        let serve = ServeParams {
+            route_plan: Some(path.to_string_lossy().into_owned()),
+            n_kv_heads: 2,
+            n_heads: 4,
+            ..ServeParams::default()
+        };
+        assert_eq!(load_route_plan(&serve).unwrap(), Some(plan));
+        let mismatched = ServeParams { n_kv_heads: 4, n_heads: 4, ..serve.clone() };
+        assert!(load_route_plan(&mismatched).is_err());
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -43,8 +43,14 @@
 //!   `h % h_kv == 0` is served, ragged lengths included (the tail block
 //!   is always-attended, never routed). Decode sessions live here: MoBA
 //!   sessions route each query head over its KV head's cached block
-//!   centroids (`ServeParams.moba_block` / `moba_topk` geometry), dense
-//!   sessions use the exact fallback over the whole cache.
+//!   centroids under the serving [`RoutePlan`] — per-KV-head
+//!   `(block, topk)` from a loaded plan file, or the uniform
+//!   `ServeParams.moba_block` / `moba_topk` geometry — dense sessions
+//!   use the exact fallback over the whole cache. MoBA prefills run
+//!   the same plan (a request may carry its own override), and heads
+//!   whose observed routing margin collapses below the configured
+//!   threshold degrade to dense per request/step (counted by
+//!   `Metrics::fallback_heads`).
 
 use std::collections::HashMap;
 use std::path::PathBuf;
@@ -60,11 +66,12 @@ use super::metrics::Metrics;
 use super::request::{
     AttnKind, AttnRequest, AttnResponse, DecodeStep, QueueStamp, WorkItem,
 };
-use super::router::Router;
+use super::router::{effective_plan, load_route_plan, Router};
 #[allow(unused_imports)]
 use crate::attention::backend::AttentionBackend;
 use crate::attention::backend::BackendRegistry;
 use crate::attention::decode::DecodeSession;
+use crate::attention::plan::RoutePlan;
 use crate::attention::AttnShape;
 use crate::config::ServeParams;
 use crate::runtime::{Runtime, Tensor};
@@ -146,6 +153,15 @@ impl Coordinator {
         let worker = std::thread::Builder::new()
             .name("flash-moba-coordinator".into())
             .spawn(move || {
+                // resolve the serving route plan (if configured) before
+                // acking boot, so a bad plan file is a startup error
+                let serve_plan = match load_route_plan(&params) {
+                    Ok(p) => p,
+                    Err(e) => {
+                        let _ = boot_tx.send(Err(e));
+                        return;
+                    }
+                };
                 let (exec, router) = match Runtime::load(&dir) {
                     Ok(rt) => match Router::from_manifest(rt.manifest()) {
                         Ok(r) => (Exec::Pjrt(rt), r),
@@ -170,7 +186,7 @@ impl Coordinator {
                     }
                 };
                 let _ = boot_tx.send(Ok(()));
-                worker_loop(exec, router, params, rx, m2)
+                worker_loop(exec, router, serve_plan, params, rx, m2)
             })
             .expect("spawn coordinator");
         boot_rx
@@ -213,10 +229,13 @@ impl Coordinator {
     }
 
     /// Open a decode session with `h` query heads, `h_kv` KV heads and
-    /// head dim `d`. MoBA sessions route with the `ServeParams` geometry
-    /// (`moba_block` / `moba_topk`); dense sessions decode exactly over
-    /// the whole cache. Returns the session handle for
-    /// [`Coordinator::decode`] / `session_free`.
+    /// head dim `d`. MoBA sessions route under the serving plan — the
+    /// loaded route-plan file when one is configured, otherwise the
+    /// uniform `ServeParams` geometry (`moba_block` / `moba_topk`) —
+    /// with the runtime margin fallback active when
+    /// `ServeParams::fallback_margin` (or the plan) enables it; dense
+    /// sessions decode exactly over the whole cache. Returns the
+    /// session handle for [`Coordinator::decode`] / `session_free`.
     pub fn session_create(&self, kind: AttnKind, h: usize, h_kv: usize, d: usize) -> Result<u64> {
         if d == 0 {
             return Err(anyhow!("decode session needs d > 0"));
@@ -309,6 +328,7 @@ type Sessions = HashMap<u64, (String, DecodeSession)>;
 fn worker_loop(
     exec: Exec,
     router: Router,
+    serve_plan: Option<RoutePlan>,
     params: ServeParams,
     rx: Receiver<Envelope>,
     metrics: Arc<Metrics>,
@@ -434,13 +454,27 @@ fn worker_loop(
                     Exec::Cpu(_) => router.route(spec.kind, 1).map(|(_, target)| {
                         let id = next_session;
                         next_session += 1;
-                        let (block, topk) = match spec.kind {
-                            AttnKind::Moba => (params.moba_block.max(1), params.moba_topk),
+                        let sess = match spec.kind {
+                            // MoBA sessions decode under the serving
+                            // route plan: per-KV-head (block, topk),
+                            // planned-dense heads, and the runtime
+                            // margin fallback all apply per step
+                            AttnKind::Moba => DecodeSession::with_plan(
+                                spec.h,
+                                spec.h_kv,
+                                spec.d,
+                                effective_plan(&serve_plan, &params, spec.h_kv),
+                            ),
                             // dense decode ignores routing; the block
                             // size only shapes cache bookkeeping
-                            AttnKind::Dense => (params.moba_block.max(1), 0),
+                            AttnKind::Dense => DecodeSession::new(
+                                spec.h,
+                                spec.h_kv,
+                                spec.d,
+                                params.moba_block.max(1),
+                                0,
+                            ),
                         };
-                        let sess = DecodeSession::new(spec.h, spec.h_kv, spec.d, block, topk);
                         sessions.insert(id, (target.to_string(), sess));
                         metrics.sessions_created.fetch_add(1, Ordering::Relaxed);
                         id
@@ -473,6 +507,7 @@ fn worker_loop(
             run_batch(
                 &exec,
                 &router,
+                &serve_plan,
                 &params,
                 &ctx,
                 &serial_lanes,
@@ -503,6 +538,7 @@ fn respond(pending: &mut Pending, id: u64, result: Result<AttnResponse>) {
 fn run_batch(
     exec: &Exec,
     router: &Router,
+    serve_plan: &Option<RoutePlan>,
     params: &ServeParams,
     ctx: &ExecCtx,
     serial_lanes: &[ExecCtx],
@@ -513,9 +549,9 @@ fn run_batch(
 ) {
     match exec {
         Exec::Pjrt(runtime) => run_batch_pjrt(runtime, router, batch, pending, metrics),
-        Exec::Cpu(registry) => {
-            run_batch_cpu(registry, params, ctx, serial_lanes, batch, pending, sessions, metrics)
-        }
+        Exec::Cpu(registry) => run_batch_cpu(
+            registry, serve_plan, params, ctx, serial_lanes, batch, pending, sessions, metrics,
+        ),
     }
 }
 
@@ -538,6 +574,7 @@ fn run_batch(
 #[allow(clippy::too_many_arguments)]
 fn run_batch_cpu(
     registry: &BackendRegistry,
+    serve_plan: &Option<RoutePlan>,
     params: &ServeParams,
     ctx: &ExecCtx,
     serial_lanes: &[ExecCtx],
@@ -561,12 +598,13 @@ fn run_batch_cpu(
         })
         .collect();
     let use_fanout = prefills.len() > 1 && ctx.threads() > 1 && !serial_lanes.is_empty();
-    let prefill_results: Vec<Result<Vec<f32>>> = if use_fanout {
+    type PrefillOut = Result<(Vec<f32>, u32)>;
+    let prefill_results: Vec<PrefillOut> = if use_fanout {
         // range i always runs on lane i: each lane is owned by at most
         // one task at a time, so its arena slot is never contended
         let prefills_ref = &prefills;
         let artifact = &batch.artifact;
-        let tasks: Vec<Box<dyn FnOnce() -> Vec<Result<Vec<f32>>> + Send + '_>> =
+        let tasks: Vec<Box<dyn FnOnce() -> Vec<PrefillOut> + Send + '_>> =
             partition(prefills.len(), serial_lanes.len().min(ctx.threads()))
                 .into_iter()
                 .enumerate()
@@ -575,17 +613,24 @@ fn run_batch_cpu(
                     Box::new(move || {
                         range
                             .map(|j| {
-                                run_cpu_request(registry, params, lane, artifact, prefills_ref[j])
+                                run_cpu_request(
+                                    registry,
+                                    serve_plan,
+                                    params,
+                                    lane,
+                                    artifact,
+                                    prefills_ref[j],
+                                )
                             })
                             .collect::<Vec<_>>()
-                    }) as Box<dyn FnOnce() -> Vec<Result<Vec<f32>>> + Send + '_>
+                    }) as Box<dyn FnOnce() -> Vec<PrefillOut> + Send + '_>
                 })
                 .collect();
         ctx.pool().run_tasks(tasks).into_iter().flatten().collect()
     } else {
         prefills
             .iter()
-            .map(|&req| run_cpu_request(registry, params, ctx, &batch.artifact, req))
+            .map(|&req| run_cpu_request(registry, serve_plan, params, ctx, &batch.artifact, req))
             .collect()
     };
 
@@ -598,10 +643,13 @@ fn run_batch_cpu(
                 let result = prefill_iter.next().expect("one result per prefill item");
                 let executed = Instant::now();
                 match result {
-                    Ok(o) => {
+                    Ok((o, fallback_heads)) => {
                         let stamp = QueueStamp { enqueued: *enq, executed };
                         metrics.record_latency(stamp.queue_latency_s());
                         metrics.responses.fetch_add(1, Ordering::Relaxed);
+                        metrics
+                            .fallback_heads
+                            .fetch_add(fallback_heads as u64, Ordering::Relaxed);
                         respond(
                             pending,
                             req.id,
@@ -673,49 +721,67 @@ fn run_cpu_decode(
     Ok((o, sess.len()))
 }
 
-/// Pick the backend for one request: the router's chosen target
-/// (`routed`, the batch's lane name) when its supported-config
-/// predicate accepts the geometry, the exact dense backend otherwise.
+/// Pick the backend for one request and execute it under its routing
+/// plan: per-request plan if the request carries one, the server's
+/// configured plan otherwise (uniform `ServeParams` geometry when no
+/// plan file is loaded). The router's chosen target (`routed`, the
+/// batch's lane name) serves when its supported-config predicate
+/// accepts the geometry; the exact dense backend otherwise. Returns
+/// the packed output plus the number of heads the runtime margin probe
+/// degraded to dense.
 fn run_cpu_request(
     registry: &BackendRegistry,
+    serve_plan: &Option<RoutePlan>,
     params: &ServeParams,
     ctx: &ExecCtx,
     routed: &str,
     req: &AttnRequest,
-) -> Result<Vec<f32>> {
+) -> Result<(Vec<f32>, u32)> {
     let dense = registry
         .get("dense")
         .ok_or_else(|| anyhow!("no dense backend registered"))?;
-    let (backend, shape) = match req.kind {
-        AttnKind::Moba => {
-            match AttnShape::try_new(
-                req.h,
-                req.h_kv,
-                req.n,
-                req.d,
-                params.moba_block,
-                params.moba_topk,
-            ) {
-                Some(shape) => {
-                    let b = registry.get(routed).unwrap_or(dense);
-                    if b.supports(&shape) {
-                        (b, shape)
-                    } else {
-                        (dense, dense_shape(req))
-                    }
+    let mut o = Vec::new();
+    if req.kind == AttnKind::Moba {
+        let mut plan = match &req.plan {
+            Some(p) => p.clone(),
+            None => effective_plan(serve_plan, params, req.h_kv),
+        };
+        // a per-request plan without its own probe threshold inherits
+        // the server's (effective_plan already did this for the rest)
+        if !plan.fallback_enabled() && params.fallback_margin > f64::NEG_INFINITY {
+            plan.fallback_margin = params.fallback_margin as f32;
+        }
+        let plan_ok = plan.h_kv() == req.h_kv && plan.validate(req.n).is_ok();
+        // the representative shape (the supported-config probe and the
+        // stats stamp): the uniform geometry when the plan is uniform,
+        // head 0's otherwise — per-head sub-launches use their own
+        // head's geometry regardless
+        let (block, topk) = match plan.is_uniform() {
+            Some(bt) => bt,
+            None => {
+                let hp = plan.head(0);
+                (hp.block, hp.topk.max(1))
+            }
+        };
+        if plan_ok {
+            if let Some(shape) = AttnShape::try_new(req.h, req.h_kv, req.n, req.d, block, topk) {
+                let b = registry.get(routed).unwrap_or(dense);
+                if b.supports(&shape) {
+                    // the output Vec becomes the response payload
+                    // (ownership moves to the client); kernel
+                    // intermediates come from ctx's scratch arenas via
+                    // the steady-state forward_plan_into path
+                    let st =
+                        b.forward_plan_into(ctx, &shape, &plan, &req.q, &req.k, &req.v, &mut o);
+                    return Ok((o, st.fallback_heads));
                 }
-                None => (dense, dense_shape(req)),
             }
         }
-        AttnKind::Dense => (dense, dense_shape(req)),
-    };
-    // the output Vec becomes the response payload (ownership moves to
-    // the client); on the dense and flash_moba lanes every kernel
-    // intermediate comes from ctx's scratch arenas via the steady-state
-    // forward_into path (the moba_naive baseline allocates by design)
-    let mut o = Vec::new();
-    backend.forward_into(ctx, &shape, &req.q, &req.k, &req.v, &mut o);
-    Ok(o)
+    }
+    // dense requests, unroutable geometries, and plans that don't cover
+    // this request's layout all take the exact dense path
+    dense.forward_into(ctx, &dense_shape(req), &req.q, &req.k, &req.v, &mut o);
+    Ok((o, 0))
 }
 
 /// A single-block geometry valid for any n; exact backends ignore the

@@ -5,6 +5,7 @@
 //! flash-moba train --variant tiny-moba32 --steps 200
 //! flash-moba eval  --variant tiny-moba32 [--ckpt path.bin]
 //! flash-moba bench table1|...|table6|fig2|fig3|fig4|snr|ablate-tiles|all [--quick] [--steps N]
+//! flash-moba autotune [--quick] [--out plan.json]   # SNR-driven per-head route plan
 //! flash-moba serve-demo [--requests N] # coordinator demo over PJRT kernels
 //! ```
 
@@ -36,8 +37,9 @@ COMMANDS:
   eval                         evaluate a variant (--variant, --ckpt)
   bench <target>               regenerate a paper table/figure:
                                table1..table6, fig2, fig3, fig4, snr,
-                               parity, parity-gqa, decode, smallblock,
-                               ablate-tiles, all (--quick, --steps N)
+                               parity, parity-gqa, parity-mixed, decode,
+                               smallblock, ablate-tiles, all
+                               (--quick, --steps N)
                                (smallblock sweeps block 16/32/64 at
                                fixed N, flash_moba vs dense, through
                                the zero-allocation forward_into path;
@@ -50,7 +52,18 @@ COMMANDS:
                                BENCH_<target>.json under the results
                                dir. parity-gqa re-runs the parity table
                                at a grouped-query head layout, h=8 over
-                               h_kv=2)
+                               h_kv=2; parity-mixed runs that layout
+                               under a mixed per-KV-head RoutePlan —
+                               one routed head, one dense head — and
+                               gates the plan path's bitwise parity
+                               against a per-head reference splice)
+  autotune                     pick each KV head's (block, topk) — or a
+                               dense fallback — from the closed-form
+                               SNR retrieval model and write a route
+                               plan JSON the coordinator loads via
+                               serve.route_plan (--quick shrinks the
+                               candidate grid; --out sets the plan
+                               path, default results/route_plan.json)
   bench-check                  gate BENCH_*.json metrics against the
                                committed floors (--floor
                                ci/bench_floor.json, --results DIR);
@@ -98,6 +111,7 @@ fn main() -> Result<()> {
             Path::new(args.get("floor").unwrap_or("ci/bench_floor.json")),
             args.get("results").map(Path::new).unwrap_or(&cfg.results_dir),
         ),
+        "autotune" => autotune_cmd(&cfg, args.has("quick"), args.get("out").map(PathBuf::from)),
         "serve-demo" => serve_demo(&cfg, args.get_usize("requests").unwrap_or(32)),
         other => {
             eprintln!("unknown command {other:?}\n\n{USAGE}");
@@ -178,13 +192,13 @@ fn eval(cfg: &AppConfig, variant: &str, ckpt: Option<PathBuf>) -> Result<()> {
     Ok(())
 }
 
-/// The bench config a target actually runs with: `parity-gqa` pins the
-/// grouped-query head layout (h=8 over h_kv=2), everything else uses
-/// the configured (default single-head) layout. Also what lands in the
-/// emitted BENCH_<target>.json `config` object.
+/// The bench config a target actually runs with: `parity-gqa` and
+/// `parity-mixed` pin the grouped-query head layout (h=8 over h_kv=2),
+/// everything else uses the configured (default single-head) layout.
+/// Also what lands in the emitted BENCH_<target>.json `config` object.
 fn effective_bench(cfg: &AppConfig, target: &str) -> flash_moba::config::BenchParams {
     let mut b = cfg.bench.clone();
-    if target == "parity-gqa" {
+    if target == "parity-gqa" || target == "parity-mixed" {
         b.heads = 8;
         b.kv_heads = 2;
     }
@@ -232,6 +246,14 @@ fn bench(cfg: &AppConfig, target: &str, quick: bool) -> Result<()> {
                 tables::run_table_parity(&gqa, quick, "parity-gqa")
                     .map(|s| vec![("speedup_vs_dense".into(), s)])
             }
+            "parity-mixed" => {
+                // two distinct per-KV-head plans through one launch:
+                // the plan-path bitwise-parity gate
+                let mut mixed = cfg.clone();
+                mixed.bench = effective_bench(cfg, "parity-mixed");
+                tables::run_table_parity_mixed(&mixed, quick)
+                    .map(|p| vec![("parity_ok".into(), p)])
+            }
             "decode" => decode_bench::run_decode(cfg, quick)
                 .map(|s| vec![("speedup_vs_dense".into(), s)]),
             "smallblock" => smallblock::run_smallblock(cfg, quick),
@@ -255,8 +277,8 @@ fn bench(cfg: &AppConfig, target: &str, quick: bool) -> Result<()> {
     };
     if target == "all" {
         for t in [
-            "parity", "parity-gqa", "decode", "smallblock", "snr", "fig3", "fig4", "ablate-tiles",
-            "table1", "table3", "table5", "fig2", "table2", "table4", "table6",
+            "parity", "parity-gqa", "parity-mixed", "decode", "smallblock", "snr", "fig3", "fig4",
+            "ablate-tiles", "table1", "table3", "table5", "fig2", "table2", "table4", "table6",
         ] {
             println!("\n######## bench {t} ########");
             run_and_emit(cfg, t)?;
@@ -326,6 +348,56 @@ fn bench_check(floor_path: &Path, results_dir: &Path) -> Result<()> {
     }
 }
 
+/// `autotune`: run the SNR-driven per-head planner and write the
+/// resulting route plan JSON (plus a per-head diagnostic report next to
+/// it). The emitted plan is re-parsed before reporting success, so a
+/// plan this command wrote is always loadable by
+/// `serve.route_plan` — the CI smoke step relies on that.
+fn autotune_cmd(cfg: &AppConfig, quick: bool, out: Option<PathBuf>) -> Result<()> {
+    let mut tune = cfg.autotune.to_config();
+    if quick {
+        // small grid, short sequence: seconds, same code path
+        tune.n = tune.n.min(512);
+        tune.blocks.retain(|&b| b <= 64);
+        tune.topks.retain(|&k| k <= 8);
+    }
+    let outcome = flash_moba::snr::autotune(&tune);
+    println!(
+        "autotune: d={} n={} h_kv={} target_recall={} max_density={}",
+        tune.d, tune.n, tune.h_kv, tune.target_recall, tune.max_density
+    );
+    for r in &outcome.rows {
+        if r.plan.is_dense() {
+            println!(
+                "  head {:>2}  dmu={:.3}  -> dense (B={}; no candidate met the recall target)",
+                r.head, r.delta_mu, r.plan.block
+            );
+        } else {
+            println!(
+                "  head {:>2}  dmu={:.3}  -> B={:<4} k={:<3} snr={:.2} recall={:.4} density={:.3}",
+                r.head, r.delta_mu, r.plan.block, r.plan.topk, r.snr, r.recall, r.density
+            );
+        }
+    }
+    let path = out.unwrap_or_else(|| cfg.results_dir.join("route_plan.json"));
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let text = outcome.plan.to_json().to_string_pretty();
+    std::fs::write(&path, &text)?;
+    // self-check: the written plan must round-trip through the same
+    // parser the coordinator uses at startup
+    flash_moba::attention::plan::RoutePlan::parse(&text)
+        .map_err(|e| anyhow::anyhow!("emitted plan failed to re-parse: {e}"))?;
+    let report_path = path.with_extension("report.json");
+    std::fs::write(&report_path, outcome.report_json().to_string_pretty())?;
+    println!("plan:   {}", path.display());
+    println!("report: {}", report_path.display());
+    Ok(())
+}
+
 fn serve_demo(cfg: &AppConfig, requests: usize) -> Result<()> {
     let coord = Coordinator::start(cfg.artifacts_dir.clone(), cfg.serve.clone())?;
     let t0 = std::time::Instant::now();
@@ -337,11 +409,14 @@ fn serve_demo(cfg: &AppConfig, requests: usize) -> Result<()> {
         let req = AttnRequest {
             id: i as u64,
             kind: if i % 4 == 0 { AttnKind::Dense } else { AttnKind::Moba },
+            h: 1,
+            h_kv: 1,
             n,
             d,
             q: rng.normal_vec(n * d),
             k: rng.normal_vec(n * d),
             v: rng.normal_vec(n * d),
+            plan: None,
         };
         tickets.push(coord.submit_async(req)?);
     }

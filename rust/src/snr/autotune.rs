@@ -1,0 +1,306 @@
+//! Offline SNR-driven routing autotuner: pick each KV head's
+//! `(block, topk)` — or a dense fallback — from the closed-form
+//! retrieval model, and emit a [`RoutePlan`] the serving coordinator
+//! can load.
+//!
+//! The paper's Eq. 3 (SNR = Δμ_eff · √(d/2B)) plus the conditioned
+//! top-k success integral ([`topk_success_prob`]) turn a head's signal
+//! separation Δμ_eff into a predicted retrieval recall for any
+//! `(block, topk)` geometry. The tuner searches a candidate grid per
+//! head for the *cheapest* geometry (lowest attended density) whose
+//! predicted recall clears `target_recall`; heads whose signal is too
+//! weak for every candidate degrade to [`HeadPlan::dense`] — routing a
+//! head the model says will mis-retrieve is worse than paying the
+//! dense cost.
+//!
+//! Everything here is deterministic closed-form arithmetic: the same
+//! config always produces the same plan (no RNG, no timing), so the
+//! emitted JSON is reproducible and diffable in CI.
+
+use crate::attention::plan::{HeadPlan, RoutePlan};
+use crate::snr::theory::{snr, topk_success_prob};
+use crate::util::json::Json;
+
+/// Search space and targets for one autotune run.
+#[derive(Debug, Clone)]
+pub struct AutotuneConfig {
+    /// head dimension
+    pub d: usize,
+    /// sequence length the plan is tuned for
+    pub n: usize,
+    /// KV heads to plan (query heads in a GQA group share the plan)
+    pub h_kv: usize,
+    /// minimum acceptable predicted top-k retrieval probability
+    pub target_recall: f64,
+    /// maximum attended fraction of the sequence for a routed head;
+    /// geometries denser than this are never picked over dense
+    pub max_density: f64,
+    /// candidate block sizes
+    pub blocks: Vec<usize>,
+    /// candidate top-k values
+    pub topks: Vec<usize>,
+    /// per-head effective signal separation Δμ_eff (measured offline);
+    /// empty = the deterministic synthetic spread of
+    /// [`AutotuneConfig::synthetic_delta_mu`]
+    pub head_delta_mu: Vec<f64>,
+    /// runtime margin-fallback threshold stamped into the plan
+    /// (`-inf` disables the probe)
+    pub fallback_margin: f64,
+}
+
+impl Default for AutotuneConfig {
+    fn default() -> Self {
+        Self {
+            d: 64,
+            n: 2048,
+            h_kv: 4,
+            target_recall: 0.95,
+            max_density: 0.5,
+            blocks: vec![16, 32, 64, 128],
+            topks: vec![1, 2, 4, 8, 16],
+            head_delta_mu: Vec::new(),
+            fallback_margin: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl AutotuneConfig {
+    /// The deterministic Δμ_eff spread used when no per-head
+    /// measurements are supplied: heads fan out linearly from strong
+    /// separation down to nearly none, so a default run exercises the
+    /// whole decision range (small-block routing → large top-k →
+    /// dense fallback).
+    pub fn synthetic_delta_mu(&self) -> Vec<f64> {
+        let h = self.h_kv.max(1);
+        (0..h)
+            .map(|i| {
+                if h == 1 {
+                    1.0
+                } else {
+                    // head 0: 1.6 (easily routed) ... head h-1: 0.02
+                    1.6 - (1.6 - 0.02) * i as f64 / (h - 1) as f64
+                }
+            })
+            .collect()
+    }
+
+    /// Per-head Δμ_eff this run tunes against (supplied or synthetic).
+    pub fn effective_delta_mu(&self) -> Vec<f64> {
+        if self.head_delta_mu.is_empty() {
+            self.synthetic_delta_mu()
+        } else {
+            assert_eq!(
+                self.head_delta_mu.len(),
+                self.h_kv,
+                "need one delta_mu per KV head"
+            );
+            self.head_delta_mu.clone()
+        }
+    }
+}
+
+/// One head's tuning decision plus the model quantities behind it.
+#[derive(Debug, Clone, Copy)]
+pub struct HeadReport {
+    pub head: usize,
+    /// the Δμ_eff this head was tuned against
+    pub delta_mu: f64,
+    /// chosen geometry (mode [`HeadMode::Dense`] when no candidate met
+    /// the recall target)
+    ///
+    /// [`HeadMode::Dense`]: crate::attention::plan::HeadMode::Dense
+    pub plan: HeadPlan,
+    /// Eq.-3 SNR at the chosen block (0 for dense heads)
+    pub snr: f64,
+    /// predicted top-k retrieval probability (1 for dense heads)
+    pub recall: f64,
+    /// attended fraction of the sequence (1 for dense heads)
+    pub density: f64,
+}
+
+/// An autotune run's full result: the loadable plan plus per-head
+/// diagnostics.
+#[derive(Debug, Clone)]
+pub struct AutotuneOutcome {
+    pub plan: RoutePlan,
+    pub rows: Vec<HeadReport>,
+}
+
+impl AutotuneOutcome {
+    /// Per-head diagnostic rows as JSON (the `BENCH_`-style report
+    /// blob; the plan itself serializes via [`RoutePlan::to_json`]).
+    pub fn report_json(&self) -> Json {
+        Json::Arr(
+            self.rows
+                .iter()
+                .map(|r| {
+                    Json::obj(vec![
+                        ("head", Json::from(r.head)),
+                        ("delta_mu", Json::from(r.delta_mu)),
+                        ("block", Json::from(r.plan.block)),
+                        ("topk", Json::from(r.plan.topk)),
+                        ("dense", Json::from(r.plan.is_dense())),
+                        ("snr", Json::from(r.snr)),
+                        ("recall", Json::from(r.recall)),
+                        ("density", Json::from(r.density)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+/// Attended fraction of an `n`-token sequence for a routed head:
+/// `topk` selected blocks plus the always-attended own block.
+fn routed_density(n: usize, block: usize, topk: usize) -> f64 {
+    (((topk + 1) * block) as f64 / n.max(1) as f64).min(1.0)
+}
+
+/// Tune one head: cheapest `(block, topk)` meeting the recall target,
+/// else dense. Ties in density break deterministically toward the
+/// earlier candidate in the config's `blocks` × `topks` order.
+fn tune_head(cfg: &AutotuneConfig, head: usize, delta_mu: f64) -> HeadReport {
+    let mut best: Option<HeadReport> = None;
+    for &block in &cfg.blocks {
+        if block == 0 || block > cfg.n {
+            continue;
+        }
+        let n_blocks = cfg.n / block;
+        let s = snr(delta_mu, cfg.d, block);
+        for &topk in &cfg.topks {
+            if topk == 0 {
+                continue;
+            }
+            let density = routed_density(cfg.n, block, topk);
+            if density > cfg.max_density {
+                continue;
+            }
+            let recall = topk_success_prob(s, n_blocks, topk);
+            if recall < cfg.target_recall {
+                continue;
+            }
+            let cand = HeadReport {
+                head,
+                delta_mu,
+                plan: HeadPlan::routed(block, topk),
+                snr: s,
+                recall,
+                density,
+            };
+            let better = match &best {
+                Some(b) => density < b.density,
+                None => true,
+            };
+            if better {
+                best = Some(cand);
+            }
+        }
+    }
+    best.unwrap_or_else(|| {
+        // no candidate retrieves reliably enough: dense fallback, with
+        // the largest candidate block sizing the decode cache's
+        // centroid accounting (fewest centroid rows)
+        let block = cfg.blocks.iter().copied().max().unwrap_or(64).min(cfg.n.max(1));
+        HeadReport {
+            head,
+            delta_mu,
+            plan: HeadPlan::dense(block),
+            snr: 0.0,
+            recall: 1.0,
+            density: 1.0,
+        }
+    })
+}
+
+/// Run the tuner over every KV head.
+pub fn autotune(cfg: &AutotuneConfig) -> AutotuneOutcome {
+    assert!(cfg.h_kv >= 1, "autotune needs h_kv >= 1");
+    assert!(!cfg.blocks.is_empty(), "autotune needs candidate blocks");
+    let mus = cfg.effective_delta_mu();
+    let rows: Vec<HeadReport> =
+        mus.iter().enumerate().map(|(i, &mu)| tune_head(cfg, i, mu)).collect();
+    let plan = RoutePlan {
+        heads: rows.iter().map(|r| r.plan).collect(),
+        fallback_margin: cfg.fallback_margin as f32,
+    };
+    debug_assert!(plan.validate(cfg.n).is_ok());
+    AutotuneOutcome { plan, rows }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::plan::HeadMode;
+
+    #[test]
+    fn strong_heads_route_weak_heads_go_dense() {
+        let cfg = AutotuneConfig {
+            h_kv: 2,
+            head_delta_mu: vec![1.5, 0.001],
+            ..AutotuneConfig::default()
+        };
+        let out = autotune(&cfg);
+        assert_eq!(out.plan.h_kv(), 2);
+        assert_eq!(out.rows[0].plan.mode, HeadMode::Routed);
+        assert!(out.rows[0].recall >= cfg.target_recall);
+        assert!(out.rows[0].density <= cfg.max_density);
+        // ~zero separation cannot clear a 0.95 recall target at any
+        // candidate geometry under the density cap
+        assert_eq!(out.rows[1].plan.mode, HeadMode::Dense);
+        assert!(out.plan.validate(cfg.n).is_ok());
+    }
+
+    #[test]
+    fn stronger_signal_never_costs_more_density() {
+        let base = AutotuneConfig::default();
+        let mut last = f64::INFINITY;
+        for mu in [0.4, 0.8, 1.6] {
+            let cfg = AutotuneConfig {
+                h_kv: 1,
+                head_delta_mu: vec![mu],
+                ..base.clone()
+            };
+            let d = autotune(&cfg).rows[0].density;
+            assert!(d <= last, "mu={mu}: density {d} > {last}");
+            last = d;
+        }
+    }
+
+    #[test]
+    fn synthetic_spread_is_deterministic_and_mixed() {
+        let cfg = AutotuneConfig { h_kv: 6, ..AutotuneConfig::default() };
+        let a = autotune(&cfg);
+        let b = autotune(&cfg);
+        assert_eq!(a.plan, b.plan);
+        // the default spread spans routed strong heads and a dense tail
+        assert_eq!(a.rows[0].plan.mode, HeadMode::Routed);
+        assert_eq!(a.rows[5].plan.mode, HeadMode::Dense);
+        assert_eq!(a.plan.is_uniform(), None);
+    }
+
+    #[test]
+    fn emitted_plan_json_is_loadable() {
+        let cfg = AutotuneConfig { h_kv: 3, fallback_margin: 0.25, ..AutotuneConfig::default() };
+        let out = autotune(&cfg);
+        let text = out.plan.to_json().to_string_pretty();
+        let back = RoutePlan::parse(&text).unwrap();
+        assert_eq!(back, out.plan);
+        assert!(back.fallback_enabled());
+        let report = out.report_json();
+        assert_eq!(report.as_arr().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn density_cap_is_respected_by_routed_choices() {
+        let cfg = AutotuneConfig {
+            h_kv: 1,
+            head_delta_mu: vec![0.5],
+            max_density: 0.25,
+            ..AutotuneConfig::default()
+        };
+        let out = autotune(&cfg);
+        if out.rows[0].plan.mode == HeadMode::Routed {
+            assert!(out.rows[0].density <= 0.25);
+        }
+    }
+}

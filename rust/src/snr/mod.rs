@@ -6,10 +6,15 @@
 //!   model, used to validate the closed forms (Eq. 1–3) and to extend
 //!   the RULER-style retrieval predictions to paper-scale block counts
 //!   (64K-token-equivalent) that the CPU testbed cannot train at.
+//! * [`autotune`] — the model applied: per-KV-head `(block, topk)`
+//!   selection (or dense fallback) against a recall target, emitting a
+//!   loadable `RoutePlan` (the `flash-moba autotune` CLI).
 
+pub mod autotune;
 pub mod montecarlo;
 pub mod theory;
 
+pub use autotune::{autotune, AutotuneConfig, AutotuneOutcome, HeadReport};
 pub use montecarlo::{simulate_retrieval, McConfig, McResult};
 pub use theory::{
     delta_mu_eff, normal_cdf, normal_icdf, p_fail, snr, topk_success_prob,

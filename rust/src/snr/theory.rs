@@ -98,8 +98,21 @@ fn erf(x: f64) -> f64 {
 }
 
 /// Inverse standard normal CDF (Acklam's rational approximation).
+///
+/// Edge behavior follows the mathematical limits instead of panicking:
+/// `p <= 0` maps to `-inf`, `p >= 1` to `+inf`, and NaN propagates —
+/// callers probing degenerate targets (e.g. the autotuner at
+/// `target_recall = 1.0`) get a comparable sentinel, not an abort.
 pub fn normal_icdf(p: f64) -> f64 {
-    assert!(p > 0.0 && p < 1.0, "p must be in (0,1), got {p}");
+    if p.is_nan() {
+        return f64::NAN;
+    }
+    if p <= 0.0 {
+        return f64::NEG_INFINITY;
+    }
+    if p >= 1.0 {
+        return f64::INFINITY;
+    }
     const A: [f64; 6] = [
         -3.969683028665376e+01, 2.209460984245205e+02, -2.759285104469687e+02,
         1.383577518672690e+02, -3.066479806614716e+01, 2.506628277459239e+00,
@@ -170,6 +183,20 @@ mod tests {
             let x = normal_icdf(p);
             assert!((normal_cdf(x) - p).abs() < 1e-4, "p={p}");
         }
+    }
+
+    #[test]
+    fn icdf_edge_cases_saturate_instead_of_panicking() {
+        assert_eq!(normal_icdf(0.0), f64::NEG_INFINITY);
+        assert_eq!(normal_icdf(-0.5), f64::NEG_INFINITY);
+        assert_eq!(normal_icdf(1.0), f64::INFINITY);
+        assert_eq!(normal_icdf(1.5), f64::INFINITY);
+        assert!(normal_icdf(f64::NAN).is_nan());
+        // interior values are untouched by the clamping
+        assert!((normal_icdf(0.5)).abs() < 1e-9);
+        // and the saturation is consistent with the CDF limits
+        assert_eq!(normal_cdf(f64::NEG_INFINITY), 0.0);
+        assert_eq!(normal_cdf(f64::INFINITY), 1.0);
     }
 
     #[test]

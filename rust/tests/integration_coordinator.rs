@@ -6,10 +6,13 @@
 //! unconditionally — pointing the coordinator at a nonexistent
 //! artifacts dir forces the `AttentionBackend`-registry serving path.
 
+use flash_moba::attention::backend::{AttentionBackend, BackendRegistry};
+use flash_moba::attention::decode::DecodeSession;
 use flash_moba::attention::dense::{naive_attention, naive_attention_packed};
 use flash_moba::attention::flash_moba::{flash_moba_forward, FlashMobaConfig};
+use flash_moba::attention::plan::{HeadPlan, RoutePlan};
 use flash_moba::attention::testutil::{max_abs_diff, Rng};
-use flash_moba::attention::{packed_rows, AttnShape};
+use flash_moba::attention::{packed_rows, AttnShape, ExecCtx};
 use flash_moba::config::ServeParams;
 use flash_moba::coordinator::{AttnKind, AttnRequest, Coordinator};
 use flash_moba::runtime::Runtime;
@@ -56,6 +59,7 @@ fn req_gqa(id: u64, kind: AttnKind, h: usize, h_kv: usize, n: usize, d: usize, s
         q: rng.normal_vec(h * n * d),
         k: rng.normal_vec(h_kv * n * d),
         v: rng.normal_vec(h_kv * n * d),
+        plan: None,
     }
 }
 
@@ -284,6 +288,7 @@ fn cpu_substrate_rejects_invalid_and_batches_partial() {
         q: vec![0.0; 4 * 16 * d],
         k: vec![0.0; 4 * 16 * d],
         v: vec![0.0; 4 * 16 * d],
+        plan: None,
     };
     assert!(coord.submit(bad_gqa).is_err());
     // ids in the decode-ticket range are rejected so the shared pending
@@ -567,5 +572,152 @@ fn interleaved_sessions_stay_isolated() {
     }
     coord.session_free(sa).unwrap();
     coord.session_free(sb).unwrap();
+    coord.shutdown();
+}
+
+// --------------------------------------------------------------------
+// Per-head route-plan suite: mixed plans end-to-end through the
+// coordinator (prefill + decode), per-request overrides, plan files,
+// and the runtime margin fallback.
+// --------------------------------------------------------------------
+
+/// The mixed plan used across this suite: KV head 0 routed at a small
+/// block, KV head 1 planned dense.
+fn mixed_plan() -> RoutePlan {
+    RoutePlan {
+        heads: vec![HeadPlan::routed(32, 2), HeadPlan::dense(64)],
+        fallback_margin: f32::NEG_INFINITY,
+    }
+}
+
+/// A request carrying its own per-head plan is served exactly as
+/// `forward_plan` computes it — one launch mixing two KV-head
+/// geometries, bit for bit.
+#[test]
+fn per_request_plan_override_serves_mixed_geometries() {
+    let coord = Coordinator::start(
+        no_artifacts_dir(),
+        ServeParams { max_batch: 2, max_wait_ms: 1, queue_capacity: 16, ..Default::default() },
+    )
+    .unwrap();
+    let (h, h_kv, n, d) = (4, 2, 256, 16);
+    let mut r = req_gqa(21, AttnKind::Moba, h, h_kv, n, d, 2100);
+    r.plan = Some(mixed_plan());
+    let resp = coord.submit(r.clone()).unwrap();
+    assert_eq!(resp.o.len(), h * n * d);
+
+    // the reference: the same plan through the registry's flash_moba
+    // backend directly (serving must add nothing and drop nothing)
+    let registry = BackendRegistry::with_defaults();
+    let backend = registry.get("flash_moba").unwrap();
+    let rep = mixed_plan().heads[0];
+    let shape = AttnShape::new(h, h_kv, n, d, rep.block, rep.topk);
+    let ctx = ExecCtx::with_threads(1);
+    let (expect, st) = backend.forward_plan(&ctx, &shape, &mixed_plan(), &r.q, &r.k, &r.v);
+    assert_eq!(st.fallback_heads, 0);
+    assert!(
+        resp.o.iter().zip(&expect).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "served mixed-plan output differs from forward_plan"
+    );
+    coord.shutdown();
+}
+
+/// A plan file named by `serve.route_plan` governs MoBA prefill *and*
+/// decode: the served outputs are bitwise those of the plan path and a
+/// locally-driven `DecodeSession::with_plan`.
+#[test]
+fn route_plan_file_governs_prefill_and_decode() {
+    let plan = mixed_plan();
+    let path = std::env::temp_dir().join("fm_itest_route_plan.json");
+    std::fs::write(&path, plan.to_json().to_string_pretty()).unwrap();
+    let serve = ServeParams {
+        max_batch: 2,
+        max_wait_ms: 1,
+        queue_capacity: 64,
+        n_heads: 4,
+        n_kv_heads: 2,
+        route_plan: Some(path.to_string_lossy().into_owned()),
+        ..Default::default()
+    };
+    let coord = Coordinator::start(no_artifacts_dir(), serve).unwrap();
+    let (h, h_kv, n, d) = (4usize, 2usize, 128usize, 16usize);
+    let registry = BackendRegistry::with_defaults();
+    let backend = registry.get("flash_moba").unwrap();
+    let ctx = ExecCtx::with_threads(1);
+
+    // prefill: no per-request plan — the file's plan applies
+    let r = req_gqa(31, AttnKind::Moba, h, h_kv, n, d, 3100);
+    let resp = coord.submit(r.clone()).unwrap();
+    let rep = plan.heads[0];
+    let shape = AttnShape::new(h, h_kv, n, d, rep.block, rep.topk);
+    let (expect, _) = backend.forward_plan(&ctx, &shape, &plan, &r.q, &r.k, &r.v);
+    assert!(
+        resp.o.iter().zip(&expect).all(|(a, b)| a.to_bits() == b.to_bits()),
+        "served plan-file output differs from forward_plan"
+    );
+
+    // decode: the session must carry the same per-head plan
+    let session = coord.session_create(AttnKind::Moba, h, h_kv, d).unwrap();
+    let mut local = DecodeSession::with_plan(h, h_kv, d, plan.clone());
+    let mut rng = Rng::new(0xA5);
+    let mut o = Vec::new();
+    for t in 0..96usize {
+        let q = rng.normal_vec(h * d);
+        let k = rng.normal_vec(h_kv * d);
+        let v = rng.normal_vec(h_kv * d);
+        let resp = coord.decode(session, q.clone(), k.clone(), v.clone()).unwrap();
+        local.append(&k, &v);
+        backend.forward_decode_into(&ctx, &mut local, &q, &mut o);
+        assert!(
+            resp.o.iter().zip(&o).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "decode step {t} differs from the planned session"
+        );
+    }
+    coord.session_free(session).unwrap();
+    coord.shutdown();
+    let _ = std::fs::remove_file(&path);
+}
+
+/// A plan file that doesn't cover the serving head layout is a startup
+/// error, not a silently-ignored config.
+#[test]
+fn mismatched_route_plan_file_fails_startup() {
+    let path = std::env::temp_dir().join("fm_itest_bad_plan.json");
+    std::fs::write(&path, mixed_plan().to_json().to_string_pretty()).unwrap();
+    let serve = ServeParams {
+        // plan covers 2 KV heads; the default serving layout says 4
+        route_plan: Some(path.to_string_lossy().into_owned()),
+        ..Default::default()
+    };
+    assert!(Coordinator::start(no_artifacts_dir(), serve).is_err());
+    let _ = std::fs::remove_file(&path);
+}
+
+/// An impossible margin threshold degrades every probed routed head to
+/// dense: the served output equals dense attention and the fallback
+/// counter records h_kv heads per MoBA request.
+#[test]
+fn margin_fallback_degrades_to_dense_and_counts_heads() {
+    let serve = ServeParams {
+        max_batch: 2,
+        max_wait_ms: 1,
+        queue_capacity: 16,
+        moba_block: 32,
+        moba_topk: 1,
+        fallback_margin: f64::INFINITY,
+        ..Default::default()
+    };
+    let coord = Coordinator::start(no_artifacts_dir(), serve).unwrap();
+    let (h, h_kv, n, d) = (4, 2, 256, 16);
+    // topk=1 over 8 blocks: genuinely sparse, so the probe applies
+    let r = req_gqa(41, AttnKind::Moba, h, h_kv, n, d, 4100);
+    let resp = coord.submit(r.clone()).unwrap();
+    let (dense, _) = naive_attention_packed(&r.q, &r.k, &r.v, h, h_kv, n, d);
+    assert!(
+        max_abs_diff(&resp.o, &dense) < 1e-4,
+        "degraded request should serve dense attention"
+    );
+    let fb = coord.metrics().fallback_heads.load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(fb, h_kv as u64, "every routed KV head should have degraded");
     coord.shutdown();
 }

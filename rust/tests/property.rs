@@ -17,6 +17,7 @@ use flash_moba::attention::flash_moba::{
     flash_moba_forward, flash_moba_forward_ctx, FlashMobaConfig,
 };
 use flash_moba::attention::moba_naive::{moba_naive_forward, moba_reference};
+use flash_moba::attention::plan::{HeadPlan, RoutePlan};
 use flash_moba::attention::testutil::{max_abs_diff, qkv, qkv_packed, repeat_heads, Rng};
 use flash_moba::attention::topk::{naive_topk, same_selection, tiled_topk};
 use flash_moba::attention::varlen::build_varlen;
@@ -622,6 +623,142 @@ fn prop_microkernels_bit_identical_to_scalar_oracle() {
             assert_eq!(out.indices, si, "routing seed={seed} threads={threads} {shape:?}");
             bits_equal(&out.o, &so, &format!("flash o seed={seed} threads={threads} {shape:?}"));
             bits_equal(&out.lse, &sl, &format!("flash lse seed={seed} threads={threads}"));
+        }
+    }
+}
+
+/// The plan refactor's bit-determinism contract: for every registered
+/// backend, `forward_plan` under `RoutePlan::uniform(h_kv, block, topk)`
+/// is `to_bits`-identical to the pre-plan static-`AttnShape` path
+/// (`forward_into`), across random multi-head shapes (GQA and ragged
+/// tails included) and 1 vs several worker threads.
+#[test]
+fn prop_uniform_plan_bitwise_equals_static_path() {
+    let registry = BackendRegistry::with_defaults();
+    for seed in 0..CASES / 2 {
+        let mut rng = Rng::new(18_000 + seed);
+        let shape = rand_mh_shape(&mut rng);
+        let plan = RoutePlan::uniform(shape.h_kv, shape.block, shape.topk);
+        let (q, k, v) = qkv_packed(1100 + seed, shape.h, shape.h_kv, shape.n, shape.d);
+        for threads in [1usize, 4] {
+            let ctx = ExecCtx::with_threads(threads);
+            for b in registry.iter() {
+                if !b.supports(&shape) {
+                    continue;
+                }
+                let mut stat = Vec::new();
+                b.forward_into(&ctx, &shape, &q, &k, &v, &mut stat);
+                let (planned, st) = b.forward_plan(&ctx, &shape, &plan, &q, &k, &v);
+                assert_eq!(st.fallback_heads, 0, "{} seed={seed}", b.name());
+                assert_eq!(planned.len(), stat.len());
+                for (i, (a, z)) in planned.iter().zip(&stat).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        z.to_bits(),
+                        "{} uniform plan differs at {i} (seed={seed} threads={threads} \
+                         shape={shape:?})",
+                        b.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Mixed per-KV-head plans compose per head: `forward_plan` under a
+/// random plan (routed heads at differing (block, topk), some heads
+/// planned dense) equals a per-head reference splice — each KV head's
+/// group run as its own `(group, 1)` launch at that head's effective
+/// geometry — bit for bit, at 1 and several worker threads.
+#[test]
+fn prop_mixed_plan_equals_per_head_splice() {
+    let registry = BackendRegistry::with_defaults();
+    for seed in 0..CASES / 2 {
+        let mut rng = Rng::new(19_000 + seed);
+        let (h, h_kv) = rand_heads(&mut rng);
+        let group = h / h_kv;
+        let d = [4usize, 8][rng.below(2)];
+        let n = 64 + rng.below(80); // >= every candidate block, often ragged
+        let heads: Vec<HeadPlan> = (0..h_kv)
+            .map(|_| {
+                let block = [8usize, 16, 32][rng.below(3)];
+                if rng.uniform() < 0.3 {
+                    HeadPlan::dense(block)
+                } else {
+                    HeadPlan::routed(block, 1 + rng.below(3))
+                }
+            })
+            .collect();
+        let plan = RoutePlan { heads, fallback_margin: f32::NEG_INFINITY };
+        assert!(plan.validate(n).is_ok(), "seed={seed}");
+        let rep = plan.head(0);
+        let shape = AttnShape::new(h, h_kv, n, d, rep.block, rep.topk.max(1));
+        let (q, k, v) = qkv_packed(1200 + seed, h, h_kv, n, d);
+        for threads in [1usize, 3] {
+            let ctx = ExecCtx::with_threads(threads);
+            for b in registry.iter() {
+                if !b.supports(&shape) {
+                    continue;
+                }
+                // per-head reference splice at each head's effective
+                // geometry (planned-dense == fully routed)
+                let mut spliced = vec![0.0f32; h * n * d];
+                for kvh in 0..h_kv {
+                    let hp = *plan.head(kvh);
+                    let sub = AttnShape::new(group, 1, n, d, hp.block, hp.topk);
+                    let run = if hp.is_dense() {
+                        AttnShape { topk: sub.max_candidates().max(1), ..sub }
+                    } else {
+                        sub
+                    };
+                    let qs = &q[kvh * group * n * d..(kvh + 1) * group * n * d];
+                    let ks = &k[kvh * n * d..(kvh + 1) * n * d];
+                    let vs = &v[kvh * n * d..(kvh + 1) * n * d];
+                    let (sub_o, _) = b.forward(&ctx, &run, qs, ks, vs);
+                    spliced[kvh * group * n * d..(kvh + 1) * group * n * d]
+                        .copy_from_slice(&sub_o);
+                }
+                let (planned, _) = b.forward_plan(&ctx, &shape, &plan, &q, &k, &v);
+                assert_eq!(planned.len(), spliced.len());
+                for (i, (a, z)) in planned.iter().zip(&spliced).enumerate() {
+                    assert_eq!(
+                        a.to_bits(),
+                        z.to_bits(),
+                        "{} mixed plan differs at {i} (seed={seed} threads={threads} \
+                         h={h} h_kv={h_kv} n={n} plan={plan:?})",
+                        b.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// RoutePlan JSON round-trip on random plans: emit via `to_json`
+/// (compact and pretty), re-load via `parse`, and land on an equal
+/// plan — including the fallback-margin encoding (omitted == disabled).
+#[test]
+fn prop_route_plan_json_roundtrip() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(20_000 + seed);
+        let h_kv = 1 + rng.below(8);
+        let heads: Vec<HeadPlan> = (0..h_kv)
+            .map(|_| {
+                let block = [8usize, 16, 32, 64, 128][rng.below(5)];
+                if rng.uniform() < 0.3 {
+                    HeadPlan::dense(block)
+                } else {
+                    HeadPlan::routed(block, 1 + rng.below(16))
+                }
+            })
+            .collect();
+        // dyadic margins survive the decimal round-trip exactly
+        let fallback_margin =
+            if rng.uniform() < 0.5 { f32::NEG_INFINITY } else { rng.below(8) as f32 * 0.25 };
+        let plan = RoutePlan { heads, fallback_margin };
+        for text in [plan.to_json().to_string(), plan.to_json().to_string_pretty()] {
+            let back = RoutePlan::parse(&text).unwrap_or_else(|e| panic!("seed={seed}: {e}"));
+            assert_eq!(back, plan, "seed={seed} text={text}");
         }
     }
 }
