@@ -33,7 +33,7 @@ use super::stats::StageStats;
 use super::testutil::{max_abs_diff, qkv_packed};
 use super::topk::routing_margin;
 use super::AttnShape;
-use crate::util::pool::ExecCtx;
+use crate::util::pool::{partition, ExecCtx};
 
 /// Query rows sampled per head by the runtime dense-fallback margin
 /// probe (`RoutePlan::fallback_margin`).
@@ -265,6 +265,118 @@ pub trait AttentionBackend: Send + Sync {
         o.clear();
         o.extend_from_slice(&out);
     }
+
+    /// Batched cross-session decode: one launch steps B independent
+    /// sessions. `q` is the concatenation of each session's packed
+    /// `(h_i, d_i)` query row in slice order (sessions may have
+    /// heterogeneous head layouts, dims and plans); the returned buffer
+    /// holds each session's `(h_i, d_i)` output row at the matching
+    /// prefix-sum offset.
+    ///
+    /// Contract: the output — and every per-session side effect
+    /// (routing choices, margin fallbacks, step counters) — is
+    /// bit-identical to calling
+    /// [`forward_decode`](AttentionBackend::forward_decode) on each
+    /// session in slice order, at any `ctx.threads()`. Implementations
+    /// parallelize by partitioning whole sessions across workers
+    /// (per-session arithmetic unchanged, outputs through disjoint
+    /// windows), never by splitting a session's reduction. The default
+    /// is literally the sequential loop.
+    fn forward_decode_batch(
+        &self,
+        ctx: &ExecCtx,
+        sessions: &mut [DecodeSession],
+        q: &[f32],
+    ) -> Vec<f32> {
+        let mut o = Vec::new();
+        self.forward_decode_batch_into(ctx, sessions, q, &mut o);
+        o
+    }
+
+    /// [`forward_decode_batch`](AttentionBackend::forward_decode_batch)
+    /// writing the packed batch output into a caller-provided buffer —
+    /// the serving decode lane's entry point. With each session's
+    /// persistent step workspace and a reused `o`, the in-tree
+    /// overrides make a steady-state serial batch step perform zero
+    /// heap allocations (the parallel path boxes one task per worker,
+    /// matching the pool's convention that only the serial path is
+    /// allocation-free).
+    fn forward_decode_batch_into(
+        &self,
+        ctx: &ExecCtx,
+        sessions: &mut [DecodeSession],
+        q: &[f32],
+        o: &mut Vec<f32>,
+    ) {
+        let total: usize = sessions.iter().map(|s| s.h() * s.d()).sum();
+        assert_eq!(q.len(), total, "packed batch query length mismatch");
+        o.clear();
+        let mut off = 0;
+        for sess in sessions.iter_mut() {
+            let e = sess.h() * sess.d();
+            let row = self.forward_decode(ctx, sess, &q[off..off + e]);
+            o.extend_from_slice(&row);
+            off += e;
+        }
+    }
+}
+
+/// Shared engine behind the in-tree backends'
+/// [`AttentionBackend::forward_decode_batch_into`] overrides: step
+/// every session through `step` (the session's dense or routed slice
+/// path). Serial contexts — and single-session batches — run the plain
+/// loop with zero allocations; parallel contexts partition *whole
+/// sessions* into contiguous ranges ([`partition`]'s deterministic
+/// split), carve matching disjoint query/output windows via sequential
+/// `split_at_mut`, and fan the ranges out over the pool. Per-session
+/// arithmetic is identical in both paths, so outputs and session
+/// counters are bit-identical to the sequential loop at any worker
+/// count.
+fn batched_decode_dispatch(
+    ctx: &ExecCtx,
+    sessions: &mut [DecodeSession],
+    q: &[f32],
+    o: &mut Vec<f32>,
+    step: fn(&mut DecodeSession, &[f32], &mut [f32]),
+) {
+    let total: usize = sessions.iter().map(|s| s.h() * s.d()).sum();
+    assert_eq!(q.len(), total, "packed batch query length mismatch");
+    // resize only: every window is fully rewritten by its session
+    o.resize(total, 0.0);
+    let workers = ctx.threads().min(sessions.len());
+    if workers <= 1 {
+        let mut off = 0;
+        for sess in sessions.iter_mut() {
+            let e = sess.h() * sess.d();
+            step(sess, &q[off..off + e], &mut o[off..off + e]);
+            off += e;
+        }
+        return;
+    }
+    let ranges = partition(sessions.len(), workers);
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(ranges.len());
+    let mut sess_rest = sessions;
+    let mut q_rest = q;
+    let mut o_rest = &mut o[..];
+    for range in ranges {
+        let count = range.len();
+        let elems: usize = sess_rest[..count].iter().map(|s| s.h() * s.d()).sum();
+        let (sess_chunk, sr) = std::mem::take(&mut sess_rest).split_at_mut(count);
+        let (q_chunk, qr) = q_rest.split_at(elems);
+        let (o_chunk, or) = std::mem::take(&mut o_rest).split_at_mut(elems);
+        sess_rest = sr;
+        q_rest = qr;
+        o_rest = or;
+        tasks.push(Box::new(move || {
+            let mut off = 0;
+            for sess in sess_chunk.iter_mut() {
+                let e = sess.h() * sess.d();
+                step(sess, &q_chunk[off..off + e], &mut o_chunk[off..off + e]);
+                off += e;
+            }
+        }));
+    }
+    ctx.pool().run_tasks(tasks);
 }
 
 /// Blocked online-softmax dense attention (the FlashAttention-2
@@ -370,6 +482,16 @@ impl AttentionBackend for DenseBackend {
     ) {
         session.decode_dense_into(q_t, o);
     }
+
+    fn forward_decode_batch_into(
+        &self,
+        ctx: &ExecCtx,
+        sessions: &mut [DecodeSession],
+        q: &[f32],
+        o: &mut Vec<f32>,
+    ) {
+        batched_decode_dispatch(ctx, sessions, q, o, DecodeSession::decode_dense_slice);
+    }
 }
 
 /// The original five-stage MoBA pipeline (Lu et al., 2025) behind the
@@ -440,6 +562,16 @@ impl AttentionBackend for MobaNaiveBackend {
     ) {
         session.decode_routed_into(q_t, o);
     }
+
+    fn forward_decode_batch_into(
+        &self,
+        ctx: &ExecCtx,
+        sessions: &mut [DecodeSession],
+        q: &[f32],
+        o: &mut Vec<f32>,
+    ) {
+        batched_decode_dispatch(ctx, sessions, q, o, DecodeSession::decode_routed_slice);
+    }
 }
 
 /// The paper's fused FlashMoBA forward behind the trait.
@@ -507,6 +639,21 @@ impl AttentionBackend for FlashMobaBackend {
         o: &mut Vec<f32>,
     ) {
         session.decode_routed_into(q_t, o);
+    }
+
+    /// Batched cross-session decode: B sessions' routed single-row
+    /// attentions are independent, so the batch partitions whole
+    /// sessions across the pool — the launch that finally gives decode
+    /// enough work per call to scale with cores (see `bench
+    /// decode-batch`).
+    fn forward_decode_batch_into(
+        &self,
+        ctx: &ExecCtx,
+        sessions: &mut [DecodeSession],
+        q: &[f32],
+        o: &mut Vec<f32>,
+    ) {
+        batched_decode_dispatch(ctx, sessions, q, o, DecodeSession::decode_routed_slice);
     }
 }
 

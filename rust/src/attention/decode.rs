@@ -596,12 +596,23 @@ impl DecodeSession {
     /// output row — with the session's persistent step workspace, a
     /// steady-state call performs zero heap allocations.
     pub fn decode_routed_into(&mut self, q: &[f32], out: &mut Vec<f32>) {
+        // resize only: decode_routed_slice fully rewrites every row
+        out.resize(self.h * self.d(), 0.0);
+        self.decode_routed_slice(q, out);
+    }
+
+    /// [`DecodeSession::decode_routed_into`] against a pre-sized output
+    /// window (`out.len() == h * d`) — the batched decode entry point:
+    /// [`AttentionBackend::forward_decode_batch`](super::backend::AttentionBackend::forward_decode_batch)
+    /// hands each session a disjoint window of the packed batch output,
+    /// so B sessions can step concurrently without touching each
+    /// other's rows. Bit-identical to `decode_routed_into`.
+    pub fn decode_routed_slice(&mut self, q: &[f32], out: &mut [f32]) {
         assert_eq!(q.len(), self.h * self.d());
+        assert_eq!(out.len(), self.h * self.d());
         let d = self.d();
         let h = self.h;
         let group = h / self.cache.h_kv();
-        // resize only: attend_into fully rewrites every head's row
-        out.resize(h * d, 0.0);
         let mut gathered = 0u64;
         let mut routed = 0usize;
         let mut degraded = 0u64;
@@ -654,12 +665,21 @@ impl DecodeSession {
     /// [`DecodeSession::decode_dense`] into a caller-provided (reused)
     /// output row — the zero-allocation twin.
     pub fn decode_dense_into(&mut self, q: &[f32], out: &mut Vec<f32>) {
+        // resize only: decode_dense_slice fully rewrites every row
+        out.resize(self.h * self.d(), 0.0);
+        self.decode_dense_slice(q, out);
+    }
+
+    /// [`DecodeSession::decode_dense_into`] against a pre-sized output
+    /// window (`out.len() == h * d`) — the dense twin of
+    /// [`DecodeSession::decode_routed_slice`] for the batched decode
+    /// path. Bit-identical to `decode_dense_into`.
+    pub fn decode_dense_slice(&mut self, q: &[f32], out: &mut [f32]) {
         assert_eq!(q.len(), self.h * self.d());
+        assert_eq!(out.len(), self.h * self.d());
         let d = self.d();
         let h = self.h;
         let group = h / self.cache.h_kv();
-        // resize only: attend_into fully rewrites every head's row
-        out.resize(h * d, 0.0);
         let mut gathered = 0u64;
         let mut routed = 0usize;
         {

@@ -118,6 +118,13 @@ impl RoutePlan {
 
     /// Structural validity for a given sequence length: at least one
     /// head, every block >= 1, and routed heads need topk >= 1.
+    ///
+    /// `n == 0` means "length unknown / nothing cached yet" — the shape
+    /// of a decode session at `session_create`, whose cache grows from
+    /// empty — so the `block <= n` bound is only enforced for `n > 0`.
+    /// (A plan valid for a length-unknown session is still rejected
+    /// per-request when the request's actual `n` is shorter than a
+    /// head's block.)
     pub fn validate(&self, n: usize) -> Result<(), String> {
         if self.heads.is_empty() {
             return Err("route plan has no heads".into());
@@ -126,7 +133,7 @@ impl RoutePlan {
             if hp.block == 0 {
                 return Err(format!("head {i}: block must be >= 1"));
             }
-            if hp.block > n.max(1) {
+            if n > 0 && hp.block > n {
                 return Err(format!("head {i}: block {} exceeds n {}", hp.block, n));
             }
             if hp.mode == HeadMode::Routed && hp.topk == 0 {
@@ -258,6 +265,26 @@ mod tests {
         assert!(r.validate(128).is_ok());
         let empty = RoutePlan { heads: vec![], fallback_margin: f32::NEG_INFINITY };
         assert!(empty.validate(128).is_err());
+    }
+
+    /// n = 0 is "length unknown" (an empty decode session at
+    /// `session_create`): the block <= n bound must not fire — the old
+    /// `block > n.max(1)` check spuriously rejected every plan with
+    /// block > 1 — while degenerate heads are still caught, and a
+    /// known-short n still rejects an oversized block.
+    #[test]
+    fn validate_skips_block_bound_at_unknown_length() {
+        let p = RoutePlan::uniform(2, 128, 8);
+        assert!(p.validate(0).is_ok());
+        assert!(p.validate(64).is_err()); // known n shorter than block
+        assert!(p.validate(128).is_ok());
+        // degenerate heads are rejected even at n = 0
+        let mut z = RoutePlan::uniform(1, 0, 8);
+        assert!(z.validate(0).is_err());
+        z = RoutePlan::uniform(1, 32, 0);
+        assert!(z.validate(0).is_err());
+        let empty = RoutePlan { heads: vec![], fallback_margin: f32::NEG_INFINITY };
+        assert!(empty.validate(0).is_err());
     }
 
     #[test]

@@ -14,6 +14,10 @@
 //! * [`decode`] — incremental-decode throughput: per-token latency of
 //!   every backend's `forward_decode` at steady-state context lengths,
 //!   plus a decode↔prefill parity table.
+//! * [`decode_batch`] — batched cross-session decode: aggregate
+//!   tokens/s of one `forward_decode_batch` launch over B sessions vs
+//!   the sequential per-session loop, B ∈ {1, 4, 16, 64}; CI floors
+//!   the B=16-vs-B=1 aggregate speedup.
 //! * [`smallblock`] — flash_moba vs dense across block ∈ {16, 32, 64}
 //!   at fixed N (the paper's small-block regime), through the
 //!   zero-allocation `forward_into` path; CI floors the B=32 speedup.
@@ -22,6 +26,7 @@
 //! * [`report`] — aligned-table printing + JSON result persistence.
 
 pub mod decode;
+pub mod decode_batch;
 pub mod figures;
 pub mod report;
 pub mod smallblock;

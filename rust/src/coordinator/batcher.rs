@@ -102,22 +102,30 @@ impl Batcher {
     }
 
     /// Pull the next batch to execute, if any lane is full or timed out.
-    /// Full lanes win over timed-out lanes; FIFO within a lane.
+    /// Expired heads win over merely-full lanes — oldest deadline
+    /// first — so a low-traffic lane (e.g. a capacity-1 decode lane)
+    /// can never be starved by lanes that keep refilling to capacity;
+    /// FIFO within a lane. (The old order — full lanes first — let a
+    /// sustained prefill stream hold an expired decode head back
+    /// indefinitely.)
     pub fn poll(&mut self, now: Instant) -> Option<Batch> {
-        // 1) any lane at capacity?
-        let full = self
+        // 1) the lane whose head has waited past the deadline longest
+        //    (min enqueue timestamp == oldest deadline)
+        let expired = self
             .lanes
             .iter()
-            .position(|l| l.q.len() >= self.max_batch)
-            .or_else(|| {
-                // 2) any lane whose head waited past the deadline?
-                self.lanes.iter().position(|l| {
-                    l.q.front()
-                        .map(|(_, t)| now.duration_since(*t) >= self.max_wait)
-                        .unwrap_or(false)
-                })
-            })?;
-        let lane = &mut self.lanes[full];
+            .enumerate()
+            .filter_map(|(i, l)| match l.q.front() {
+                Some((_, t)) if now.duration_since(*t) >= self.max_wait => Some((i, *t)),
+                _ => None,
+            })
+            .min_by_key(|&(_, t)| t)
+            .map(|(i, _)| i);
+        // 2) otherwise any lane at capacity
+        let pick = expired.or_else(|| {
+            self.lanes.iter().position(|l| l.q.len() >= self.max_batch)
+        })?;
+        let lane = &mut self.lanes[pick];
         let take = lane.q.len().min(self.max_batch);
         let items: Vec<_> = lane.q.drain(..take).collect();
         self.len -= items.len();
@@ -170,11 +178,14 @@ mod tests {
         AttnRequest {
             id,
             kind: AttnKind::Moba,
+            h: 1,
+            h_kv: 1,
             n,
             d: 2,
             q: vec![0.0; n * 2],
             k: vec![0.0; n * 2],
             v: vec![0.0; n * 2],
+            plan: None,
         }
     }
 
@@ -274,6 +285,52 @@ mod tests {
         b.push(req(9, 1024), "a", 1024, t).unwrap();
         let prefill = b.poll(t + Duration::from_secs(200)).unwrap();
         assert!(prefill.payload_bytes > 100 * batch.payload_bytes);
+    }
+
+    /// The starvation scenario the poll-order fix closes: a capacity-1
+    /// decode lane whose head is long past deadline, while a prefill
+    /// lane keeps refilling to max_batch. The old full-lanes-first
+    /// order served the prefill lane on every poll and the decode head
+    /// waited forever; expired-first serves it immediately.
+    #[test]
+    fn expired_decode_head_is_not_starved_by_full_prefill_lanes() {
+        let mut b = Batcher::new(2, Duration::from_millis(5), 1000);
+        let t = Instant::now();
+        b.push(step(1, 1, 4), "decode:flash_moba", 1, t).unwrap();
+        // sustained prefill load: the lane is back at capacity before
+        // every poll, each poll 10ms apart (decode head long expired)
+        let mut id = 100;
+        for round in 1..=5u32 {
+            let now = t + Duration::from_millis(10 * round as u64);
+            b.push(req(id, 4), "a", 8, now).unwrap();
+            b.push(req(id + 1, 4), "a", 8, now).unwrap();
+            id += 2;
+            let batch = b.poll(now).unwrap();
+            if round == 1 {
+                // the fix: the expired decode head wins the first poll
+                assert_eq!(batch.artifact, "decode:flash_moba");
+                assert_eq!(batch.items[0].0.id(), 1);
+            } else {
+                assert_eq!(batch.artifact, "a");
+            }
+        }
+        // drain the remaining full prefill lane
+        assert_eq!(b.poll(t + Duration::from_secs(1)).unwrap().artifact, "a");
+        assert!(b.is_empty());
+    }
+
+    /// Among several expired heads, the oldest deadline is served
+    /// first (no positional bias between lanes).
+    #[test]
+    fn oldest_expired_head_wins() {
+        let mut b = Batcher::new(8, Duration::from_millis(5), 100);
+        let t = Instant::now();
+        b.push(req(1, 4), "a", 8, t + Duration::from_millis(2)).unwrap();
+        b.push(req(2, 4), "b", 8, t).unwrap(); // older head, later lane
+        let now = t + Duration::from_millis(20);
+        assert_eq!(b.poll(now).unwrap().artifact, "b");
+        assert_eq!(b.poll(now).unwrap().artifact, "a");
+        assert!(b.poll(now).is_none());
     }
 
     #[test]

@@ -20,6 +20,10 @@ pub struct Metrics {
     pub sessions_freed: AtomicU64,
     /// decode steps executed
     pub decode_steps: AtomicU64,
+    /// batched cross-session decode launches (`forward_decode_batch`
+    /// waves); steps / batches is the decode occupancy — how much work
+    /// each launch amortized
+    pub decode_batches: AtomicU64,
     /// queue payload bytes moved for decode steps — O(d) per step by
     /// design; the regression suite asserts it never scales with the
     /// session's context length
@@ -94,10 +98,21 @@ impl Metrics {
             .saturating_sub(self.sessions_freed.load(Ordering::Relaxed))
     }
 
+    /// Mean decode steps per batched cross-session launch.
+    pub fn mean_decode_occupancy(&self) -> f64 {
+        let b = self.decode_batches.load(Ordering::Relaxed);
+        if b == 0 {
+            0.0
+        } else {
+            self.decode_steps.load(Ordering::Relaxed) as f64 / b as f64
+        }
+    }
+
     pub fn summary(&self) -> String {
         format!(
             "req={} resp={} rejected={} batches={} occupancy={:.2} \
-             sessions={} decode_steps={} fallback_heads={} mean_lat={:.2}ms p95<={:.1}ms",
+             sessions={} decode_steps={} decode_batches={} fallback_heads={} \
+             mean_lat={:.2}ms p95<={:.1}ms",
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
@@ -105,6 +120,7 @@ impl Metrics {
             self.mean_occupancy(),
             self.active_sessions(),
             self.decode_steps.load(Ordering::Relaxed),
+            self.decode_batches.load(Ordering::Relaxed),
             self.fallback_heads.load(Ordering::Relaxed),
             self.mean_latency_s() * 1e3,
             self.latency_quantile_s(0.95) * 1e3,
@@ -152,10 +168,13 @@ mod tests {
         m.sessions_created.store(3, Ordering::Relaxed);
         m.sessions_freed.store(1, Ordering::Relaxed);
         m.decode_steps.store(40, Ordering::Relaxed);
+        m.decode_batches.store(10, Ordering::Relaxed);
         assert_eq!(m.active_sessions(), 2);
+        assert_eq!(m.mean_decode_occupancy(), 4.0);
         let s = m.summary();
         assert!(s.contains("sessions=2"), "{s}");
         assert!(s.contains("decode_steps=40"), "{s}");
+        assert!(s.contains("decode_batches=10"), "{s}");
         // freed > created never underflows
         m.sessions_freed.store(9, Ordering::Relaxed);
         assert_eq!(m.active_sessions(), 0);

@@ -451,20 +451,26 @@ fn worker_loop(
                         "decode sessions need the CPU substrate: the compiled \
                          PJRT kernels are prefill-only"
                     )),
-                    Exec::Cpu(_) => router.route(spec.kind, 1).map(|(_, target)| {
-                        let id = next_session;
-                        next_session += 1;
+                    Exec::Cpu(_) => router.route(spec.kind, 1).and_then(|(_, target)| {
                         let sess = match spec.kind {
                             // MoBA sessions decode under the serving
                             // route plan: per-KV-head (block, topk),
                             // planned-dense heads, and the runtime
                             // margin fallback all apply per step
-                            AttnKind::Moba => DecodeSession::with_plan(
-                                spec.h,
-                                spec.h_kv,
-                                spec.d,
-                                effective_plan(&serve_plan, &params, spec.h_kv),
-                            ),
+                            AttnKind::Moba => {
+                                let plan = effective_plan(&serve_plan, &params, spec.h_kv);
+                                // the session starts empty — n = 0 means
+                                // "length unknown", so only structurally
+                                // degenerate plans are rejected here
+                                // (block = 0, routed topk = 0, no heads)
+                                if let Err(e) = plan.validate(0) {
+                                    metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                                    return Err(anyhow!(
+                                        "session_create: serving route plan is invalid: {e}"
+                                    ));
+                                }
+                                DecodeSession::with_plan(spec.h, spec.h_kv, spec.d, plan)
+                            }
                             // dense decode ignores routing; the block
                             // size only shapes cache bookkeeping
                             AttnKind::Dense => DecodeSession::new(
@@ -475,9 +481,11 @@ fn worker_loop(
                                 0,
                             ),
                         };
+                        let id = next_session;
+                        next_session += 1;
                         sessions.insert(id, (target.to_string(), sess));
                         metrics.sessions_created.fetch_add(1, Ordering::Relaxed);
-                        id
+                        Ok(id)
                     }),
                 };
                 let _ = otx.send(result);
@@ -569,8 +577,11 @@ fn run_batch(
 /// behind one another; a batch of one parallelizes *inside* the
 /// kernel. Both paths produce bit-identical outputs (the pool's
 /// determinism contract), so batching never changes what a request
-/// computes. Decode steps mutate their session's cache and stay
-/// strictly sequential in lane order.
+/// computes. Decode steps execute as batched cross-session launches
+/// ([`run_cpu_decode_batch`]): a flushed decode lane becomes one
+/// `forward_decode_batch` call per wave of distinct sessions instead
+/// of B sequential steps — bit-identical to the sequential loop, FIFO
+/// preserved within a session.
 #[allow(clippy::too_many_arguments)]
 fn run_batch_cpu(
     registry: &BackendRegistry,
@@ -634,9 +645,22 @@ fn run_batch_cpu(
             .collect()
     };
 
-    // phase 2: respond in item order; decode steps execute here,
-    // sequentially, against the worker-owned session table
+    // phase 1.5: decode steps run as batched cross-session launches
+    // against the worker-owned session table (one kernel call per wave
+    // of distinct sessions, not one per step)
+    let decode_steps: Vec<&DecodeStep> = batch
+        .items
+        .iter()
+        .filter_map(|(item, _)| match item {
+            WorkItem::Decode(step) => Some(step),
+            WorkItem::Prefill(_) => None,
+        })
+        .collect();
+    let decode_results = run_cpu_decode_batch(registry, ctx, sessions, &decode_steps, metrics);
+
+    // phase 2: respond in item order
     let mut prefill_iter = prefill_results.into_iter();
+    let mut decode_iter = decode_results.into_iter();
     for (item, enq) in &batch.items {
         match item {
             WorkItem::Prefill(req) => {
@@ -666,7 +690,7 @@ fn run_batch_cpu(
                 }
             }
             WorkItem::Decode(step) => {
-                let result = run_cpu_decode(registry, ctx, sessions, step, metrics);
+                let result = decode_iter.next().expect("one result per decode item");
                 let executed = Instant::now();
                 match result {
                     Ok((o, served_n)) => {
@@ -692,33 +716,101 @@ fn run_batch_cpu(
     }
 }
 
-/// One decode step: append the token's packed rows to its session's
-/// cache, then run the session backend's incremental path — one call
-/// covering every query head. Returns (packed (h, d) output row,
-/// context length after the append).
-fn run_cpu_decode(
+/// Execute a flushed decode lane's steps as batched cross-session
+/// launches: the steps are split into *waves* — maximal consecutive
+/// runs with pairwise-distinct sessions and one backend target — and
+/// each wave appends its token rows, packs its query rows, and runs as
+/// ONE [`AttentionBackend::forward_decode_batch_into`] call over all
+/// its sessions (fanned across the worker pool, outputs through
+/// disjoint per-session windows). A session with several steps queued
+/// lands in consecutive waves, preserving its FIFO append→attend
+/// order; sessions are temporarily removed from the table for the
+/// launch (B disjoint `&mut` sessions out of one map) and reinserted
+/// after. Per-session arithmetic is untouched, so results are
+/// bit-identical to the old one-step-at-a-time loop. Returns one
+/// `(packed (h, d) output row, context length after the append)`
+/// result per step, in step order.
+fn run_cpu_decode_batch(
     registry: &BackendRegistry,
     ctx: &ExecCtx,
     sessions: &mut Sessions,
-    step: &DecodeStep,
+    steps: &[&DecodeStep],
     metrics: &Metrics,
-) -> Result<(Vec<f32>, usize)> {
-    let (target, sess) = sessions
-        .get_mut(&step.session)
-        .ok_or_else(|| anyhow!("decode session {} was freed", step.session))?;
-    let backend = registry
-        .get(target.as_str())
-        .or_else(|| registry.get("dense"))
-        .ok_or_else(|| anyhow!("no backend available for decode target {target}"))?;
-    sess.append(&step.k, &step.v);
-    // the response row is handed to the client, so it is a fresh Vec;
-    // the step's working buffers are the session's persistent scratch
-    // (zero per-token allocations beyond this row)
-    let mut o = Vec::new();
-    backend.forward_decode_into(ctx, sess, &step.q, &mut o);
-    metrics.decode_steps.fetch_add(1, Ordering::Relaxed);
-    metrics.decode_payload_bytes.fetch_add(step.payload_bytes(), Ordering::Relaxed);
-    Ok((o, sess.len()))
+) -> Vec<Result<(Vec<f32>, usize)>> {
+    let mut results: Vec<Option<Result<(Vec<f32>, usize)>>> =
+        steps.iter().map(|_| None).collect();
+    // wave workspace, reused across the batch's waves
+    let mut wave: Vec<usize> = Vec::new();
+    let mut meta: Vec<(u64, String)> = Vec::new();
+    let mut wave_sessions: Vec<DecodeSession> = Vec::new();
+    let mut q: Vec<f32> = Vec::new();
+    let mut o: Vec<f32> = Vec::new();
+    let mut i = 0;
+    while i < steps.len() {
+        wave.clear();
+        meta.clear();
+        wave_sessions.clear();
+        q.clear();
+        while i < steps.len() {
+            let step = steps[i];
+            let Some((target, _)) = sessions.get(&step.session) else {
+                // freed mid-queue: answer inline (nothing to mutate)
+                results[i] =
+                    Some(Err(anyhow!("decode session {} was freed", step.session)));
+                i += 1;
+                continue;
+            };
+            if !wave.is_empty()
+                && (meta[0].1 != *target || meta.iter().any(|(id, _)| *id == step.session))
+            {
+                break; // wave boundary: new target, or the session repeats
+            }
+            // pull the session out of the table for the launch; its new
+            // token rows land in the cache before the wave executes
+            let (target, mut sess) = sessions.remove(&step.session).expect("checked above");
+            sess.append(&step.k, &step.v);
+            q.extend_from_slice(&step.q);
+            meta.push((step.session, target));
+            wave_sessions.push(sess);
+            wave.push(i);
+            i += 1;
+        }
+        if wave.is_empty() {
+            continue;
+        }
+        let target = meta[0].1.clone();
+        match registry.get(&target).or_else(|| registry.get("dense")) {
+            Some(backend) => {
+                backend.forward_decode_batch_into(ctx, &mut wave_sessions, &q, &mut o);
+                metrics.decode_batches.fetch_add(1, Ordering::Relaxed);
+                let mut off = 0;
+                for (sess, &slot) in wave_sessions.iter().zip(&wave) {
+                    let e = sess.h() * sess.d();
+                    // the response row is handed to the client, so it is
+                    // a fresh Vec; the launch's working buffers are the
+                    // sessions' persistent scratch
+                    results[slot] = Some(Ok((o[off..off + e].to_vec(), sess.len())));
+                    off += e;
+                    metrics.decode_steps.fetch_add(1, Ordering::Relaxed);
+                    metrics
+                        .decode_payload_bytes
+                        .fetch_add(steps[slot].payload_bytes(), Ordering::Relaxed);
+                }
+            }
+            None => {
+                for &slot in &wave {
+                    results[slot] = Some(Err(anyhow!(
+                        "no backend available for decode target {target}"
+                    )));
+                }
+            }
+        }
+        // return the stepped sessions to the table under their ids
+        for ((id, target), sess) in meta.drain(..).zip(wave_sessions.drain(..)) {
+            sessions.insert(id, (target, sess));
+        }
+    }
+    results.into_iter().map(|r| r.expect("every decode step resolved")).collect()
 }
 
 /// Pick the backend for one request and execute it under its routing
@@ -750,6 +842,29 @@ fn run_cpu_request(
         // the server's (effective_plan already did this for the rest)
         if !plan.fallback_enabled() && params.fallback_margin > f64::NEG_INFINITY {
             plan.fallback_margin = params.fallback_margin as f32;
+        }
+        // a client-supplied plan that doesn't fit the request is a
+        // client error: reject it loudly (the old code fell through to
+        // the dense path, silently serving something the client didn't
+        // ask for). A *serve-time* plan that doesn't cover this
+        // request's layout still takes the dense fallback below — that
+        // mismatch is server configuration, not a bad request.
+        if let Some(p) = &req.plan {
+            if p.h_kv() != req.h_kv {
+                return Err(anyhow!(
+                    "request {}: per-request route plan covers {} KV heads, \
+                     request has {}",
+                    req.id,
+                    p.h_kv(),
+                    req.h_kv
+                ));
+            }
+            if let Err(e) = p.validate(req.n) {
+                return Err(anyhow!(
+                    "request {}: invalid per-request route plan: {e}",
+                    req.id
+                ));
+            }
         }
         let plan_ok = plan.h_kv() == req.h_kv && plan.validate(req.n).is_ok();
         // the representative shape (the supported-config probe and the
@@ -879,5 +994,93 @@ fn run_batch_pjrt(
                 respond(pending, req.id, Err(anyhow!("execution failed: {e}")));
             }
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::plan::HeadPlan;
+    use crate::attention::testutil::qkv_packed;
+
+    fn moba_req(
+        id: u64,
+        h: usize,
+        h_kv: usize,
+        n: usize,
+        d: usize,
+        plan: Option<RoutePlan>,
+    ) -> AttnRequest {
+        let (q, k, v) = qkv_packed(0xC0FFEE ^ id, h, h_kv, n, d);
+        AttnRequest { id, kind: AttnKind::Moba, h, h_kv, n, d, q, k, v, plan }
+    }
+
+    /// A client-supplied plan that doesn't fit its request is a loud
+    /// error, not a silent dense serve (the old fall-through); a
+    /// serve-time plan mismatch still degrades to dense silently —
+    /// that's server configuration, not a bad request.
+    #[test]
+    fn per_request_plan_rejection_vs_serve_plan_fallback() {
+        let registry = BackendRegistry::with_defaults();
+        let params = ServeParams::default();
+        let ctx = ExecCtx::serial();
+
+        // wrong KV-head coverage: plan spans 3 heads, request has 2
+        let req = moba_req(1, 2, 2, 64, 8, Some(RoutePlan::uniform(3, 16, 2)));
+        let err = run_cpu_request(&registry, &None, &params, &ctx, "flash_moba", &req)
+            .expect_err("mismatched plan coverage must error");
+        assert!(
+            err.to_string().contains("per-request route plan covers"),
+            "unexpected error text: {err}"
+        );
+
+        // a plan block larger than the request's context is degenerate
+        let req = moba_req(2, 2, 2, 64, 8, Some(RoutePlan::uniform(2, 128, 2)));
+        let err = run_cpu_request(&registry, &None, &params, &ctx, "flash_moba", &req)
+            .expect_err("oversized plan block must error");
+        assert!(
+            err.to_string().contains("invalid per-request route plan"),
+            "unexpected error text: {err}"
+        );
+
+        // a valid per-request plan serves, bit-identical to the same
+        // plan installed server-side
+        let plan = RoutePlan {
+            heads: vec![HeadPlan::routed(16, 2), HeadPlan::dense(32)],
+            fallback_margin: f32::NEG_INFINITY,
+        };
+        let req = moba_req(3, 2, 2, 64, 8, Some(plan.clone()));
+        let (o, _) = run_cpu_request(&registry, &None, &params, &ctx, "flash_moba", &req)
+            .expect("valid per-request plan serves");
+        assert_eq!(o.len(), 2 * 64 * 8);
+        let bare = AttnRequest { plan: None, ..req };
+        let (o_serve, _) =
+            run_cpu_request(&registry, &Some(plan), &params, &ctx, "flash_moba", &bare)
+                .expect("serve-time plan serves");
+        assert!(
+            o.iter().zip(&o_serve).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "per-request plan diverged from the same plan served server-side"
+        );
+
+        // serve-time plan covering the wrong layout: silent exact-dense
+        let bare = moba_req(4, 2, 2, 64, 8, None);
+        let serve_plan = Some(RoutePlan::uniform(3, 16, 2));
+        let (o, fallback) =
+            run_cpu_request(&registry, &serve_plan, &params, &ctx, "flash_moba", &bare)
+                .expect("serve-plan mismatch still serves densely");
+        assert_eq!(fallback, 0);
+        let mut dense_o = Vec::new();
+        registry.get("dense").unwrap().forward_into(
+            &ctx,
+            &dense_shape(&bare),
+            &bare.q,
+            &bare.k,
+            &bare.v,
+            &mut dense_o,
+        );
+        assert!(
+            o.iter().zip(&dense_o).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "serve-plan mismatch did not take the exact dense path"
+        );
     }
 }

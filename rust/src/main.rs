@@ -13,7 +13,8 @@ use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 use flash_moba::bench_harness::{
-    decode as decode_bench, figures, report, smallblock, snr_harness, tables,
+    decode as decode_bench, decode_batch as decode_batch_bench, figures, report, smallblock,
+    snr_harness, tables,
 };
 use flash_moba::config::AppConfig;
 use flash_moba::util::json::Json;
@@ -38,15 +39,22 @@ COMMANDS:
   bench <target>               regenerate a paper table/figure:
                                table1..table6, fig2, fig3, fig4, snr,
                                parity, parity-gqa, parity-mixed, decode,
-                               smallblock, ablate-tiles, all
+                               decode-batch, smallblock, ablate-tiles,
+                               all
                                (--quick, --steps N)
                                (smallblock sweeps block 16/32/64 at
                                fixed N, flash_moba vs dense, through
                                the zero-allocation forward_into path;
                                its B=32 speedup is floor-gated in CI)
-                               (parity/parity-gqa/decode/fig3/fig4/snr/
-                               ablate-tiles need no artifacts: they run
-                               the CPU substrate through the
+                               (decode-batch sweeps one batched
+                               forward_decode_batch launch over
+                               B ∈ {1,4,16,64} sessions vs the
+                               sequential loop; its B=16-vs-B=1
+                               aggregate speedup is floor-gated in CI)
+                               (parity/parity-gqa/decode/decode-batch/
+                               fig3/fig4/snr/ablate-tiles need no
+                               artifacts: they run the CPU substrate
+                               through the
                                AttentionBackend registry; every target
                                writes a machine-readable
                                BENCH_<target>.json under the results
@@ -256,6 +264,9 @@ fn bench(cfg: &AppConfig, target: &str, quick: bool) -> Result<()> {
             }
             "decode" => decode_bench::run_decode(cfg, quick)
                 .map(|s| vec![("speedup_vs_dense".into(), s)]),
+            // batched cross-session decode: aggregate tok/s at
+            // B ∈ {1,4,16,64}; floors the B=16-vs-B=1 speedup
+            "decode-batch" => decode_batch_bench::run_decode_batch(cfg, quick),
             "smallblock" => smallblock::run_smallblock(cfg, quick),
             "ablate-tiles" => {
                 none(figures::run_tile_ablation(cfg, if quick { 2048 } else { 8192 }))
@@ -277,8 +288,9 @@ fn bench(cfg: &AppConfig, target: &str, quick: bool) -> Result<()> {
     };
     if target == "all" {
         for t in [
-            "parity", "parity-gqa", "parity-mixed", "decode", "smallblock", "snr", "fig3", "fig4",
-            "ablate-tiles", "table1", "table3", "table5", "fig2", "table2", "table4", "table6",
+            "parity", "parity-gqa", "parity-mixed", "decode", "decode-batch", "smallblock", "snr",
+            "fig3", "fig4", "ablate-tiles", "table1", "table3", "table5", "fig2", "table2",
+            "table4", "table6",
         ] {
             println!("\n######## bench {t} ########");
             run_and_emit(cfg, t)?;

@@ -9,7 +9,11 @@
 //!   caller's reused output buffer), and
 //! * a steady-state `DecodeSession` step (route + attend over a fixed
 //!   cache, the `bench decode` measurement loop) performs **zero**
-//!   heap allocations (the session's persistent step workspace).
+//!   heap allocations (the session's persistent step workspace), and
+//! * a steady-state batched `forward_decode_batch_into` over B
+//!   sessions on a serial context performs **zero** heap allocations
+//!   (per-session persistent workspaces + disjoint windows of one
+//!   reused packed output buffer).
 //!
 //! Parallel contexts spawn scoped threads and box per-range tasks, so
 //! the guarantee is pinned on the serial path — the per-worker arenas
@@ -132,4 +136,43 @@ fn steady_state_prefill_and_decode_are_allocation_free() {
     let grew = allocs() - before;
     assert_eq!(grew, 0, "trait decode lane allocated {grew} times");
     assert_eq!(out.len(), shape.h * shape.d);
+
+    // ---- batched cross-session decode -------------------------------
+    // a serial-context forward_decode_batch steps every session through
+    // its persistent workspace into disjoint windows of one reused
+    // packed buffer — zero allocations at steady state, same as B
+    // sequential steps (the parallel path boxes per-worker tasks, per
+    // the module-doc convention)
+    let b = 3;
+    let mut sessions: Vec<DecodeSession> = (0..b)
+        .map(|_| {
+            let mut s =
+                DecodeSession::new(shape.h, shape.h_kv, shape.d, shape.block, shape.topk);
+            for t in 0..shape.n {
+                s.append(
+                    &packed_rows(&k, shape.h_kv, shape.n, shape.d, t),
+                    &packed_rows(&v, shape.h_kv, shape.n, shape.d, t),
+                );
+            }
+            s
+        })
+        .collect();
+    let mut qbatch = Vec::new();
+    for _ in 0..b {
+        qbatch.extend_from_slice(&qrow);
+    }
+    let mut obatch = Vec::new();
+    for name in ["dense", "flash_moba"] {
+        let backend = registry.get(name).unwrap();
+        for _ in 0..3 {
+            backend.forward_decode_batch_into(&ctx, &mut sessions, &qbatch, &mut obatch);
+        }
+        let before = allocs();
+        for _ in 0..8 {
+            backend.forward_decode_batch_into(&ctx, &mut sessions, &qbatch, &mut obatch);
+        }
+        let grew = allocs() - before;
+        assert_eq!(grew, 0, "{name}: steady-state batched decode allocated {grew} times");
+        assert_eq!(obatch.len(), b * shape.h * shape.d);
+    }
 }

@@ -721,3 +721,102 @@ fn margin_fallback_degrades_to_dense_and_counts_heads() {
     assert_eq!(fb, h_kv as u64, "every routed KV head should have degraded");
     coord.shutdown();
 }
+
+/// A flushed decode batch over several distinct sessions executes as
+/// batched cross-session launches: every response stays bitwise those
+/// of a locally-driven `DecodeSession`, and the launch counter shows
+/// the steps rode in fewer kernel calls than steps (multi-session
+/// waves), not one call per step.
+#[test]
+fn decode_batch_launches_stay_bitwise_exact_across_sessions() {
+    let serve = ServeParams {
+        max_batch: 3,
+        max_wait_ms: 20,
+        queue_capacity: 512,
+        moba_block: 16,
+        moba_topk: 2,
+        ..Default::default()
+    };
+    let coord = Coordinator::start(no_artifacts_dir(), serve).unwrap();
+    let (h, h_kv, d) = (2usize, 1usize, 16usize);
+    let b = 3usize;
+    let registry = BackendRegistry::with_defaults();
+    let backend = registry.get("flash_moba").unwrap();
+    let ctx = ExecCtx::with_threads(1);
+
+    let ids: Vec<u64> = (0..b)
+        .map(|_| coord.session_create(AttnKind::Moba, h, h_kv, d).unwrap())
+        .collect();
+    let mut locals: Vec<DecodeSession> =
+        (0..b).map(|_| DecodeSession::new(h, h_kv, d, 16, 2)).collect();
+    let mut rng = Rng::new(0xBA7C);
+    let mut o = Vec::new();
+    let rounds = 48usize;
+    for t in 0..rounds {
+        // interleave one step per session so the lane flushes full with
+        // b pairwise-distinct sessions — exactly one wave per batch
+        let mut tickets = Vec::new();
+        for (i, &sid) in ids.iter().enumerate() {
+            let q = rng.normal_vec(h * d);
+            let k = rng.normal_vec(h_kv * d);
+            let v = rng.normal_vec(h_kv * d);
+            let ticket = coord.decode_async(sid, q.clone(), k.clone(), v.clone()).unwrap();
+            locals[i].append(&k, &v);
+            backend.forward_decode_into(&ctx, &mut locals[i], &q, &mut o);
+            tickets.push((i, ticket, o.clone()));
+        }
+        for (i, ticket, expect) in tickets {
+            let resp = ticket.wait().unwrap();
+            assert_eq!(resp.served_n, t + 1);
+            assert!(
+                resp.o.iter().zip(&expect).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "session {i} step {t}: batched decode differs from the local session"
+            );
+        }
+    }
+    let m = coord.metrics();
+    let steps = m.decode_steps.load(std::sync::atomic::Ordering::Relaxed);
+    let batches = m.decode_batches.load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(steps, (b * rounds) as u64);
+    assert!(batches > 0, "batched decode path never launched");
+    assert!(
+        batches < steps,
+        "every decode step launched alone ({batches} launches for {steps} steps): \
+         cross-session batching never happened"
+    );
+    for sid in ids {
+        coord.session_free(sid).unwrap();
+    }
+    coord.shutdown();
+}
+
+/// Opening a MoBA session whose serving plan uses blocks far larger
+/// than the (empty) cache must succeed: the plan's block bound applies
+/// to known context lengths, not to a cache that hasn't seen a token
+/// yet (the decode cache grows into the geometry).
+#[test]
+fn session_create_accepts_large_block_plan_on_empty_cache() {
+    let serve = ServeParams {
+        max_batch: 2,
+        max_wait_ms: 1,
+        queue_capacity: 64,
+        moba_block: 256,
+        moba_topk: 2,
+        ..Default::default()
+    };
+    let coord = Coordinator::start(no_artifacts_dir(), serve).unwrap();
+    let d = 16usize;
+    let session = coord
+        .session_create(AttnKind::Moba, 1, 1, d)
+        .expect("empty session must not be rejected by the block bound");
+    let mut rng = Rng::new(0x5E55);
+    // a handful of steps, all with n << block: still served
+    for _ in 0..8 {
+        let resp = coord
+            .decode(session, rng.normal_vec(d), rng.normal_vec(d), rng.normal_vec(d))
+            .unwrap();
+        assert_eq!(resp.o.len(), d);
+    }
+    coord.session_free(session).unwrap();
+    coord.shutdown();
+}

@@ -9,7 +9,7 @@ use flash_moba::attention::backend::{
     check_shape_parity, AttentionBackend, BackendRegistry, ParityTolerance,
 };
 use flash_moba::attention::centroid::centroids;
-use flash_moba::attention::decode::KvCache;
+use flash_moba::attention::decode::{DecodeSession, KvCache};
 use flash_moba::attention::dense::{
     flash_attention, flash_attention_ctx, flash_attention_packed, naive_attention,
 };
@@ -774,5 +774,97 @@ fn prop_flash_moba_lse_matches_reference() {
         let out = flash_moba_forward(&q, &k, &v, shape, FlashMobaConfig::default());
         let (_, lref) = moba_reference(&q, &k, &v, shape, &out.indices);
         assert!(max_abs_diff(&out.lse, &lref) < 1e-4, "seed={seed}");
+    }
+}
+
+/// Batched cross-session decode ≡ the sequential per-session loop,
+/// bit for bit: for every backend, `forward_decode_batch` over B mixed
+/// sessions (GQA and single-head layouts, heterogeneous dims, ragged
+/// context lengths, dense-planned heads, margin-fallback sessions)
+/// must reproduce B sequential `forward_decode` calls exactly — the
+/// packed outputs AND every per-session counter — at any thread count.
+#[test]
+fn prop_decode_batch_bitwise_equals_sequential_loop() {
+    let registry = BackendRegistry::with_defaults();
+    for seed in 0..CASES / 2 {
+        let mut rng = Rng::new(21_000 + seed);
+        let b = 1 + rng.below(6);
+        // B heterogeneous sessions + the packed (Σ h_i·d_i) batch query
+        let mut sessions: Vec<DecodeSession> = Vec::new();
+        let mut q: Vec<f32> = Vec::new();
+        for _ in 0..b {
+            let h_kv = 1 + rng.below(3);
+            let h = h_kv * (1 + rng.below(3));
+            let d = [4usize, 8, 16][rng.below(3)];
+            let block = [4usize, 8, 16][rng.below(3)];
+            let mut plan = RoutePlan::uniform(h_kv, block, 1 + rng.below(4));
+            for hp in plan.heads.iter_mut() {
+                if rng.uniform() < 0.3 {
+                    *hp = HeadPlan::dense(block); // planned-dense head
+                }
+            }
+            if rng.uniform() < 0.3 {
+                // an aggressive probe threshold: some heads degrade to
+                // dense at runtime — the fallback must batch identically
+                plan.fallback_margin = (rng.uniform() * 2.0) as f32;
+            }
+            let mut sess = DecodeSession::with_plan(h, h_kv, d, plan);
+            let n = 1 + rng.below(100); // ragged: partial tail blocks
+            for _ in 0..n {
+                sess.append(&rng.normal_vec(h_kv * d), &rng.normal_vec(h_kv * d));
+            }
+            q.extend_from_slice(&rng.normal_vec(h * d));
+            sessions.push(sess);
+        }
+        let threads = 2 + rng.below(6);
+        for backend in registry.iter() {
+            let mut seq = sessions.clone();
+            let mut bat = sessions.clone();
+            // oracle: the sequential per-session loop, serial context
+            let serial = ExecCtx::serial();
+            let mut expect: Vec<f32> = Vec::new();
+            let mut off = 0;
+            for sess in seq.iter_mut() {
+                let e = sess.h() * sess.d();
+                expect.extend_from_slice(&backend.forward_decode(
+                    &serial,
+                    sess,
+                    &q[off..off + e],
+                ));
+                off += e;
+            }
+            let par = ExecCtx::with_threads(threads);
+            let got = backend.forward_decode_batch(&par, &mut bat, &q);
+            assert_eq!(expect.len(), got.len(), "seed={seed} {}", backend.name());
+            for (i, (a, z)) in expect.iter().zip(&got).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    z.to_bits(),
+                    "{} batched decode differs at element {i} (seed={seed} b={b} \
+                     threads={threads})",
+                    backend.name()
+                );
+            }
+            // per-session side effects are part of the contract
+            for (i, (s1, s2)) in seq.iter().zip(&bat).enumerate() {
+                assert_eq!(s1.steps(), s2.steps(), "seed={seed} session={i}");
+                assert_eq!(
+                    s1.fallback_steps(),
+                    s2.fallback_steps(),
+                    "seed={seed} session={i} {}",
+                    backend.name()
+                );
+                assert_eq!(
+                    s1.last_gathered_bytes(),
+                    s2.last_gathered_bytes(),
+                    "seed={seed} session={i}"
+                );
+                assert_eq!(
+                    s1.last_routed_blocks(),
+                    s2.last_routed_blocks(),
+                    "seed={seed} session={i}"
+                );
+            }
+        }
     }
 }
