@@ -753,6 +753,13 @@ fn run_cpu_decode_batch(
         q.clear();
         while i < steps.len() {
             let step = steps[i];
+            // a session already riding this wave ends it — its next step
+            // belongs to the following wave (the session is out of the
+            // table right now, so this check must precede the lookup or
+            // a pipelined second step reads as "freed")
+            if meta.iter().any(|(id, _)| *id == step.session) {
+                break;
+            }
             let Some((target, _)) = sessions.get(&step.session) else {
                 // freed mid-queue: answer inline (nothing to mutate)
                 results[i] =
@@ -760,16 +767,14 @@ fn run_cpu_decode_batch(
                 i += 1;
                 continue;
             };
-            if !wave.is_empty()
-                && (meta[0].1 != *target || meta.iter().any(|(id, _)| *id == step.session))
-            {
-                break; // wave boundary: new target, or the session repeats
+            if !wave.is_empty() && meta[0].1 != *target {
+                break; // wave boundary: new backend target
             }
-            // pull the session out of the table for the launch; its new
-            // token rows land in the cache before the wave executes
-            let (target, mut sess) = sessions.remove(&step.session).expect("checked above");
-            sess.append(&step.k, &step.v);
-            q.extend_from_slice(&step.q);
+            // pull the session out of the table for the launch (B
+            // disjoint &mut sessions out of one map); the step's token
+            // rows are appended only once the wave's backend resolves,
+            // so a failed wave leaves every cache untouched
+            let (target, sess) = sessions.remove(&step.session).expect("checked above");
             meta.push((step.session, target));
             wave_sessions.push(sess);
             wave.push(i);
@@ -781,6 +786,10 @@ fn run_cpu_decode_batch(
         let target = meta[0].1.clone();
         match registry.get(&target).or_else(|| registry.get("dense")) {
             Some(backend) => {
+                for (sess, &slot) in wave_sessions.iter_mut().zip(&wave) {
+                    sess.append(&steps[slot].k, &steps[slot].v);
+                    q.extend_from_slice(&steps[slot].q);
+                }
                 backend.forward_decode_batch_into(ctx, &mut wave_sessions, &q, &mut o);
                 metrics.decode_batches.fetch_add(1, Ordering::Relaxed);
                 let mut off = 0;
@@ -844,9 +853,10 @@ fn run_cpu_request(
             plan.fallback_margin = params.fallback_margin as f32;
         }
         // a client-supplied plan that doesn't fit the request is a
-        // client error: reject it loudly (the old code fell through to
-        // the dense path, silently serving something the client didn't
-        // ask for). A *serve-time* plan that doesn't cover this
+        // client error: reject it loudly. Through the coordinator queue
+        // `AttnRequest::validate` already rejects this at enqueue, so
+        // here it is defense-in-depth for direct callers of this
+        // function. A *serve-time* plan that doesn't cover this
         // request's layout still takes the dense fallback below — that
         // mismatch is server configuration, not a bad request.
         if let Some(p) = &req.plan {

@@ -790,6 +790,62 @@ fn decode_batch_launches_stay_bitwise_exact_across_sessions() {
     coord.shutdown();
 }
 
+/// Two pipelined steps for ONE session flushed in the same decode
+/// batch must both be served, in FIFO order: the first ends its wave
+/// at the duplicate, the second rides the next wave. (Regression: the
+/// wave collector once looked the session up in the table *before*
+/// checking the current wave, so the second step of a pipelined pair
+/// was answered "session freed" and its k/v append was dropped.)
+#[test]
+fn pipelined_steps_for_one_session_in_one_flush_stay_fifo() {
+    let serve = ServeParams {
+        max_batch: 2,
+        max_wait_ms: 50,
+        queue_capacity: 64,
+        moba_block: 16,
+        moba_topk: 2,
+        ..Default::default()
+    };
+    let coord = Coordinator::start(no_artifacts_dir(), serve).unwrap();
+    let (h, h_kv, d) = (2usize, 1usize, 16usize);
+    let registry = BackendRegistry::with_defaults();
+    let backend = registry.get("flash_moba").unwrap();
+    let ctx = ExecCtx::with_threads(1);
+    let sid = coord.session_create(AttnKind::Moba, h, h_kv, d).unwrap();
+    let mut local = DecodeSession::new(h, h_kv, d, 16, 2);
+    let mut rng = Rng::new(0xF1F0);
+    let mut o = Vec::new();
+    let rounds = 24usize;
+    for t in 0..rounds {
+        // enqueue two steps back-to-back: the lane (capacity 2) flushes
+        // them as one batch holding the same session twice
+        let mut tickets = Vec::new();
+        for _ in 0..2 {
+            let q = rng.normal_vec(h * d);
+            let k = rng.normal_vec(h_kv * d);
+            let v = rng.normal_vec(h_kv * d);
+            let ticket = coord.decode_async(sid, q.clone(), k.clone(), v.clone()).unwrap();
+            local.append(&k, &v);
+            backend.forward_decode_into(&ctx, &mut local, &q, &mut o);
+            tickets.push((ticket, o.clone()));
+        }
+        for (j, (ticket, expect)) in tickets.into_iter().enumerate() {
+            let resp = ticket
+                .wait()
+                .unwrap_or_else(|e| panic!("round {t} step {j} was dropped: {e}"));
+            assert_eq!(resp.served_n, 2 * t + j + 1, "append lost or reordered");
+            assert!(
+                resp.o.iter().zip(&expect).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "round {t} step {j}: pipelined decode differs from the local session"
+            );
+        }
+    }
+    let steps = coord.metrics().decode_steps.load(std::sync::atomic::Ordering::Relaxed);
+    assert_eq!(steps, (2 * rounds) as u64, "every pipelined step must be served");
+    coord.session_free(sid).unwrap();
+    coord.shutdown();
+}
+
 /// Opening a MoBA session whose serving plan uses blocks far larger
 /// than the (empty) cache must succeed: the plan's block bound applies
 /// to known context lengths, not to a cache that hasn't seen a token
