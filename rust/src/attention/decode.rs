@@ -32,25 +32,89 @@
 //! batch [`centroids`](super::centroid::centroids) — so the routing
 //! scores, and therefore the selected block sets, are bit-identical to
 //! prefill's.
+//!
+//! Storage comes in two layouts behind one [`KvCache`] API: the
+//! original *contiguous* per-head slabs ([`KvCache::new`] /
+//! [`KvCache::with_blocks`]) and *paged* storage
+//! ([`KvCache::paged_with_blocks`]) where each logical block lives in
+//! one fixed-size page from a shared [`PagePool`] — per-session page
+//! tables, copy-on-write prefix sharing ([`KvCache::fork`]) and
+//! eviction/re-prefill ([`KvCache::evict`]). A page stores exactly the
+//! rows and centroid sum the contiguous slab kept for that block, and
+//! every kernel reads blocks through the same per-block slices — so
+//! the two layouts are bit-identical step for step (pinned by
+//! `rust/tests/paged_parity.rs`).
 
 use super::centroid::centroids;
 use super::dense::NEG_INF;
 use super::gemm::{accum_rows, qk_row};
 use super::kconv::KconvStream;
+use super::paged::{PageHandle, PagePool};
 use super::plan::RoutePlan;
 use super::simd::dot;
 use super::topk::{tiled_topk, topk_insert};
 
-/// One KV head's storage: cached (possibly kconv'd) keys and values,
-/// (len, d) row-major, plus the running per-block key sums.
+/// One KV head's block storage, in one of two layouts with identical
+/// per-block contents (and therefore identical arithmetic).
+#[derive(Debug, Clone)]
+enum HeadStorage {
+    /// Contiguous slabs: cached (possibly kconv'd) keys and values,
+    /// (len, d) row-major, plus the running per-block key sums
+    /// (num_blocks, d) — divided by the block's token count at read
+    /// time to form the centroid.
+    Contig { k: Vec<f32>, v: Vec<f32>, sums: Vec<f32> },
+    /// Page table: logical block `b` lives in `pages[b]`, a refcounted
+    /// page holding that block's rows and its running centroid sum.
+    /// Cloning the table shares every page (CoW fork).
+    Paged { pages: Vec<PageHandle> },
+}
+
+/// One KV head's storage plus its optional streaming key convolution.
 #[derive(Debug, Clone)]
 struct HeadStore {
-    k: Vec<f32>,
-    v: Vec<f32>,
-    /// running per-block key sums, (num_blocks, d); divided by the
-    /// block's token count at read time to form the centroid
-    sums: Vec<f32>,
+    storage: HeadStorage,
     kconv: Option<KconvStream>,
+}
+
+/// Append one (k, v) row into a head's storage, opening a fresh block
+/// (contiguous sum slab / pool page) at block boundaries. The centroid
+/// sum accumulates element-by-element in arrival order on both layouts
+/// — the bit-determinism hinge.
+fn store_row(
+    storage: &mut HeadStorage,
+    pool: Option<&PagePool>,
+    block: usize,
+    t: usize,
+    d: usize,
+    kr: &[f32],
+    vr: &[f32],
+) {
+    match storage {
+        HeadStorage::Contig { k, v, sums } => {
+            let b = t / block;
+            if t % block == 0 {
+                // first token of a fresh block: open its running sum
+                let len = sums.len();
+                sums.resize(len + d, 0.0);
+            }
+            let sum = &mut sums[b * d..(b + 1) * d];
+            for (c, s) in sum.iter_mut().enumerate() {
+                *s += kr[c];
+            }
+            k.extend_from_slice(kr);
+            v.extend_from_slice(vr);
+        }
+        HeadStorage::Paged { pages } => {
+            if t % block == 0 {
+                // first token of a fresh block: materialize its page
+                pages.push(pool.expect("paged storage always has a pool").alloc(d));
+            }
+            // make_mut is the CoW rule: a page shared with a forked
+            // sibling splits off a private copy on this first divergent
+            // append; complete shared prefix pages are never written
+            pages.last_mut().expect("block opened").make_mut().append_row(kr, vr);
+        }
+    }
 }
 
 /// Per-session K/V block storage with running centroids, one store per
@@ -69,10 +133,17 @@ pub struct KvCache {
     d: usize,
     /// per-KV-head block size (len == h_kv)
     blocks: Vec<usize>,
+    /// tokens cached (identical across heads; explicit so paged and
+    /// contiguous layouts share one source of truth)
+    len: usize,
     heads: Vec<HeadStore>,
+    /// the shared page allocator of a paged cache; `None` = contiguous
+    pool: Option<PagePool>,
 }
 
 impl KvCache {
+    /// A contiguous cache with every KV head block-partitioned at
+    /// `block` (the uniform-plan store).
     pub fn new(h_kv: usize, d: usize, block: usize) -> Self {
         Self::with_blocks(h_kv, d, &vec![block; h_kv.max(1)])
     }
@@ -82,13 +153,41 @@ impl KvCache {
     /// hold the same tokens; only the block boundaries (and therefore
     /// the running centroid sums) differ per head.
     pub fn with_blocks(h_kv: usize, d: usize, blocks: &[usize]) -> Self {
+        Self::build(h_kv, d, blocks, None)
+    }
+
+    /// The paged twin of [`KvCache::with_blocks`]: KV head `i`'s
+    /// logical block `b` lives in page `b` of its table, allocated from
+    /// `pool` as blocks open. Requires every head's block size to fit
+    /// one page (`block <= pool.page_tokens()`). Bit-identical to the
+    /// contiguous layout step for step.
+    pub fn paged_with_blocks(h_kv: usize, d: usize, blocks: &[usize], pool: &PagePool) -> Self {
+        for &b in blocks {
+            assert!(
+                b <= pool.page_tokens(),
+                "block size {b} exceeds the pool's page_tokens {}",
+                pool.page_tokens()
+            );
+        }
+        Self::build(h_kv, d, blocks, Some(pool.clone()))
+    }
+
+    fn build(h_kv: usize, d: usize, blocks: &[usize], pool: Option<PagePool>) -> Self {
         assert!(h_kv >= 1 && d >= 1, "KvCache needs h_kv >= 1 and d >= 1");
         assert_eq!(blocks.len(), h_kv, "need one block size per KV head");
         assert!(blocks.iter().all(|&b| b >= 1), "block sizes must be >= 1");
         let heads = (0..h_kv)
-            .map(|_| HeadStore { k: Vec::new(), v: Vec::new(), sums: Vec::new(), kconv: None })
+            .map(|_| HeadStore {
+                storage: match &pool {
+                    None => {
+                        HeadStorage::Contig { k: Vec::new(), v: Vec::new(), sums: Vec::new() }
+                    }
+                    Some(_) => HeadStorage::Paged { pages: Vec::new() },
+                },
+                kconv: None,
+            })
             .collect();
-        Self { h_kv, d, blocks: blocks.to_vec(), heads }
+        Self { h_kv, d, blocks: blocks.to_vec(), len: 0, heads, pool }
     }
 
     /// A cache that applies the depthwise causal key convolution
@@ -103,10 +202,28 @@ impl KvCache {
         c
     }
 
+    /// [`KvCache::with_kconv`] over paged storage.
+    pub fn paged_with_kconv(
+        h_kv: usize,
+        d: usize,
+        block: usize,
+        w: &[f32],
+        width: usize,
+        pool: &PagePool,
+    ) -> Self {
+        let mut c = Self::paged_with_blocks(h_kv, d, &vec![block; h_kv.max(1)], pool);
+        for store in &mut c.heads {
+            store.kconv = Some(KconvStream::new(w, width, d));
+        }
+        c
+    }
+
+    /// KV heads stored.
     pub fn h_kv(&self) -> usize {
         self.h_kv
     }
 
+    /// Head dimension of the cached rows.
     pub fn d(&self) -> usize {
         self.d
     }
@@ -125,11 +242,63 @@ impl KvCache {
 
     /// Tokens cached (identical across heads).
     pub fn len(&self) -> usize {
-        self.heads[0].k.len() / self.d
+        self.len
     }
 
+    /// Whether no tokens are cached yet.
     pub fn is_empty(&self) -> bool {
-        self.heads[0].k.is_empty()
+        self.len == 0
+    }
+
+    /// Whether this cache stores blocks in pool pages.
+    pub fn is_paged(&self) -> bool {
+        self.pool.is_some()
+    }
+
+    /// The shared allocator of a paged cache.
+    pub fn pool(&self) -> Option<&PagePool> {
+        self.pool.as_ref()
+    }
+
+    /// Page-table entries this cache currently holds across all heads
+    /// (0 for a contiguous cache). Shared pages count once per table
+    /// that references them — this is the admission-budget view, not
+    /// the pool's deduplicated `live_pages`.
+    pub fn total_pages(&self) -> usize {
+        self.heads
+            .iter()
+            .map(|s| match &s.storage {
+                HeadStorage::Contig { .. } => 0,
+                HeadStorage::Paged { pages } => pages.len(),
+            })
+            .sum()
+    }
+
+    /// Page-table entries a replay of `tokens` tokens would occupy
+    /// across all heads — the scheduler's restore-cost estimate.
+    pub fn pages_for(&self, tokens: usize) -> usize {
+        self.blocks.iter().map(|&b| tokens.div_ceil(b)).sum()
+    }
+
+    /// Upper bound on the pages appending `extra` tokens would
+    /// materialize: newly opened blocks per head, plus one CoW split
+    /// per head whose partial tail page is currently shared — the
+    /// scheduler's admission-cost estimate for a prefill.
+    pub fn append_page_cost(&self, extra: usize) -> usize {
+        let len = self.len;
+        let mut cost = 0;
+        for (head, store) in self.heads.iter().enumerate() {
+            let b = self.blocks[head];
+            cost += (len + extra).div_ceil(b) - len.div_ceil(b);
+            if extra > 0 && len % b != 0 {
+                if let HeadStorage::Paged { pages } = &store.storage {
+                    if pages.last().is_some_and(|p| p.is_shared()) {
+                        cost += 1;
+                    }
+                }
+            }
+        }
+        cost
     }
 
     /// Logical blocks head 0 currently occupies, `ceil(len / block)` —
@@ -166,13 +335,61 @@ impl KvCache {
     }
 
     /// KV head `head`'s cached (post-kconv) keys, (len, d) row-major.
+    /// Contiguous caches only — a paged cache has no single slab; read
+    /// per block via [`KvCache::block_keys`].
     pub fn keys_of(&self, head: usize) -> &[f32] {
-        &self.heads[head].k
+        match &self.heads[head].storage {
+            HeadStorage::Contig { k, .. } => k,
+            HeadStorage::Paged { .. } => {
+                panic!("paged caches have no contiguous view; use block_keys(head, b)")
+            }
+        }
     }
 
-    /// KV head `head`'s cached values, (len, d) row-major.
+    /// KV head `head`'s cached values, (len, d) row-major. Contiguous
+    /// caches only — see [`KvCache::keys_of`].
     pub fn values_of(&self, head: usize) -> &[f32] {
-        &self.heads[head].v
+        match &self.heads[head].storage {
+            HeadStorage::Contig { v, .. } => v,
+            HeadStorage::Paged { .. } => {
+                panic!("paged caches have no contiguous view; use block_values(head, b)")
+            }
+        }
+    }
+
+    /// KV head `head`'s block `b` keys, `(block_len_of(head, b), d)`
+    /// row-major — the layout-agnostic per-block view every kernel
+    /// reads through (a contiguous slab slice or the block's page).
+    pub fn block_keys(&self, head: usize, b: usize) -> &[f32] {
+        let (start, end) = self.block_span(head, b);
+        match &self.heads[head].storage {
+            HeadStorage::Contig { k, .. } => &k[start * self.d..end * self.d],
+            HeadStorage::Paged { pages } => {
+                let rows = pages[b].data().k();
+                debug_assert_eq!(rows.len(), (end - start) * self.d);
+                rows
+            }
+        }
+    }
+
+    /// KV head `head`'s block `b` values — see [`KvCache::block_keys`].
+    pub fn block_values(&self, head: usize, b: usize) -> &[f32] {
+        let (start, end) = self.block_span(head, b);
+        match &self.heads[head].storage {
+            HeadStorage::Contig { v, .. } => &v[start * self.d..end * self.d],
+            HeadStorage::Paged { pages } => {
+                let rows = pages[b].data().v();
+                debug_assert_eq!(rows.len(), (end - start) * self.d);
+                rows
+            }
+        }
+    }
+
+    /// Token span `[start, end)` of KV head `head`'s block `b`.
+    fn block_span(&self, head: usize, b: usize) -> (usize, usize) {
+        assert!(b < self.num_blocks_of(head), "block {b} out of range");
+        let block = self.blocks[head];
+        (b * block, ((b + 1) * block).min(self.len))
     }
 
     /// Single-KV-head convenience accessor (`h_kv == 1`).
@@ -195,36 +412,64 @@ impl KvCache {
     pub fn append(&mut self, k_t: &[f32], v_t: &[f32]) {
         assert_eq!(k_t.len(), self.h_kv * self.d, "key row has wrong width");
         assert_eq!(v_t.len(), self.h_kv * self.d, "value row has wrong width");
-        let t = self.len();
+        let t = self.len;
         let d = self.d;
-        for (head, store) in self.heads.iter_mut().enumerate() {
-            let block = self.blocks[head];
-            let b = t / block;
-            if t % block == 0 {
-                // first token of a fresh block: open its running sum
-                let len = store.sums.len();
-                store.sums.resize(len + d, 0.0);
-            }
+        let KvCache { heads, blocks, pool, .. } = self;
+        for (head, store) in heads.iter_mut().enumerate() {
+            let block = blocks[head];
             let kh = &k_t[head * d..(head + 1) * d];
-            match &mut store.kconv {
+            let vh = &v_t[head * d..(head + 1) * d];
+            let HeadStore { storage, kconv } = store;
+            match kconv {
                 Some(stream) => {
                     let stored = stream.push(kh);
-                    let sum = &mut store.sums[b * d..(b + 1) * d];
-                    for (c, s) in sum.iter_mut().enumerate() {
-                        *s += stored[c];
-                    }
-                    store.k.extend_from_slice(&stored);
+                    store_row(storage, pool.as_ref(), block, t, d, &stored, vh);
                 }
-                None => {
-                    let sum = &mut store.sums[b * d..(b + 1) * d];
-                    for (c, s) in sum.iter_mut().enumerate() {
-                        *s += kh[c];
-                    }
-                    store.k.extend_from_slice(kh);
+                None => store_row(storage, pool.as_ref(), block, t, d, kh, vh),
+            }
+        }
+        self.len = t + 1;
+    }
+
+    /// Share this cache's pages with a new cache — CoW prefix sharing
+    /// for a common prompt. Paged caches share every page (refcount
+    /// bumps, zero copies — the fork's table size is reported to the
+    /// pool as `prefix_shared`); divergent appends split only the
+    /// partial tail page, on first write. Contiguous caches deep-copy.
+    /// Either way the fork decodes bit-identically to an independent
+    /// cache fed the same history.
+    pub fn fork(&self) -> KvCache {
+        if let Some(pool) = &self.pool {
+            pool.note_share(self.total_pages() as u64);
+        }
+        self.clone()
+    }
+
+    /// Drop all cached tokens, returning the storage to its empty state
+    /// (pages go back to the pool once no sibling table shares them;
+    /// kconv streams reset). Returns the page-table entries released.
+    /// Replaying the same appends afterwards rebuilds the cache bit for
+    /// bit — eviction + re-prefill, the preemption path.
+    pub fn evict(&mut self) -> usize {
+        let mut released = 0;
+        for store in &mut self.heads {
+            match &mut store.storage {
+                HeadStorage::Contig { k, v, sums } => {
+                    k.clear();
+                    v.clear();
+                    sums.clear();
+                }
+                HeadStorage::Paged { pages } => {
+                    released += pages.len();
+                    pages.clear();
                 }
             }
-            store.v.extend_from_slice(&v_t[head * d..(head + 1) * d]);
+            if let Some(stream) = &mut store.kconv {
+                stream.reset();
+            }
         }
+        self.len = 0;
+        released
     }
 
     /// Write KV head `head`'s block `b` centroid (mean of its stored
@@ -234,7 +479,10 @@ impl KvCache {
     pub fn centroid_into(&self, head: usize, b: usize, out: &mut [f32]) {
         assert_eq!(out.len(), self.d);
         let inv = 1.0 / self.block_len_of(head, b) as f32;
-        let sum = &self.heads[head].sums[b * self.d..(b + 1) * self.d];
+        let sum = match &self.heads[head].storage {
+            HeadStorage::Contig { sums, .. } => &sums[b * self.d..(b + 1) * self.d],
+            HeadStorage::Paged { pages } => pages[b].data().sum(),
+        };
         for (c, o) in out.iter_mut().enumerate() {
             *o = sum[c] * inv;
         }
@@ -359,17 +607,16 @@ impl KvCache {
         assert_eq!(q.len(), self.d);
         assert_eq!(out.len(), self.d);
         let d = self.d;
-        let len = self.len();
-        let block = self.blocks[head];
-        let store = &self.heads[head];
         let scale = 1.0 / (d as f32).sqrt();
+        // per-block reads through block_keys/block_values: a block's
+        // rows are contiguous on both layouts (slab slice or page), so
+        // the gemv tiles see identical memory and produce identical bits
         scores.clear();
         for &b in blocks {
-            let start = b * block;
-            let end = ((b + 1) * block).min(len);
+            let rows = self.block_len_of(head, b);
             let seg = scores.len();
-            scores.resize(seg + (end - start), 0.0);
-            qk_row(q, &store.k[start * d..end * d], d, end - start, scale, &mut scores[seg..]);
+            scores.resize(seg + rows, 0.0);
+            qk_row(q, self.block_keys(head, b), d, rows, scale, &mut scores[seg..]);
         }
         let mut m = NEG_INF;
         for &x in scores.iter() {
@@ -385,10 +632,9 @@ impl KvCache {
         out.fill(0.0);
         let mut seg = 0usize;
         for &b in blocks {
-            let start = b * block;
-            let end = ((b + 1) * block).min(len);
-            accum_rows(out, &scores[seg..seg + (end - start)], &store.v[start * d..end * d]);
-            seg += end - start;
+            let rows = self.block_len_of(head, b);
+            accum_rows(out, &scores[seg..seg + rows], self.block_values(head, b));
+            seg += rows;
         }
         for o in out.iter_mut() {
             *o /= z;
@@ -447,6 +693,8 @@ pub struct DecodeSession {
 }
 
 impl DecodeSession {
+    /// A session routing every KV head uniformly at `(block, topk)`
+    /// over a contiguous cache.
     pub fn new(h: usize, h_kv: usize, d: usize, block: usize, topk: usize) -> Self {
         Self::with_plan(h, h_kv, d, RoutePlan::uniform(h_kv, block, topk))
     }
@@ -494,6 +742,80 @@ impl DecodeSession {
         s
     }
 
+    /// The paged twin of [`DecodeSession::new`]: cache blocks live in
+    /// pages from the shared `pool`. Decodes bit-identically to the
+    /// contiguous session (pinned by `rust/tests/paged_parity.rs`).
+    pub fn new_paged(
+        h: usize,
+        h_kv: usize,
+        d: usize,
+        block: usize,
+        topk: usize,
+        pool: &PagePool,
+    ) -> Self {
+        Self::with_plan_paged(h, h_kv, d, RoutePlan::uniform(h_kv, block, topk), pool)
+    }
+
+    /// The paged twin of [`DecodeSession::with_plan`].
+    pub fn with_plan_paged(h: usize, h_kv: usize, d: usize, plan: RoutePlan, pool: &PagePool) -> Self {
+        let mut s = Self::with_plan(h, h_kv, d, plan);
+        let blocks: Vec<usize> = s.plan.heads.iter().map(|hp| hp.block).collect();
+        s.cache = KvCache::paged_with_blocks(h_kv, d, &blocks, pool);
+        s
+    }
+
+    /// The paged twin of [`DecodeSession::with_kconv`]: key convolution
+    /// streams over page-backed storage.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_kconv_paged(
+        h: usize,
+        h_kv: usize,
+        d: usize,
+        block: usize,
+        topk: usize,
+        w: &[f32],
+        width: usize,
+        pool: &PagePool,
+    ) -> Self {
+        let mut s = Self::new(h, h_kv, d, block, topk);
+        s.cache = KvCache::paged_with_kconv(h_kv, d, block, w, width, pool);
+        s
+    }
+
+    /// Fork a new session sharing this session's cached prefix via CoW
+    /// pages ([`KvCache::fork`]) — the paged prefix-sharing path for a
+    /// common system prompt. The fork keeps the plan and head layout
+    /// but starts its own step counters and workspace; it decodes
+    /// bit-identically to an independent session fed the same history.
+    pub fn fork(&self) -> DecodeSession {
+        DecodeSession {
+            cache: self.cache.fork(),
+            h: self.h,
+            plan: self.plan.clone(),
+            scratch: DecodeScratch::default(),
+            steps: 0,
+            last_gathered_bytes: 0,
+            last_routed_blocks: 0,
+            fallback_steps: 0,
+        }
+    }
+
+    /// Evict this session's cached tokens ([`KvCache::evict`]) —
+    /// preemption under page-budget pressure. The session stays open
+    /// (plan, layout and served-step counters intact); replaying the
+    /// original appends restores its decode outputs bit for bit.
+    /// Returns the page-table entries released.
+    pub fn evict(&mut self) -> usize {
+        self.cache.evict()
+    }
+
+    /// Page-table entries this session's cache holds
+    /// ([`KvCache::total_pages`]).
+    pub fn total_pages(&self) -> usize {
+        self.cache.total_pages()
+    }
+
+    /// The session's KV cache (read-only).
     pub fn cache(&self) -> &KvCache {
         &self.cache
     }
@@ -508,6 +830,7 @@ impl DecodeSession {
         self.cache.h_kv()
     }
 
+    /// Head dimension.
     pub fn d(&self) -> usize {
         self.cache.d()
     }
@@ -535,22 +858,27 @@ impl DecodeSession {
         qh / (self.h / self.cache.h_kv())
     }
 
+    /// Tokens cached so far.
     pub fn len(&self) -> usize {
         self.cache.len()
     }
 
+    /// Whether the cache is still empty.
     pub fn is_empty(&self) -> bool {
         self.cache.is_empty()
     }
 
+    /// Decode steps executed so far.
     pub fn steps(&self) -> u64 {
         self.steps
     }
 
+    /// K/V bytes gathered by the most recent step (all query heads).
     pub fn last_gathered_bytes(&self) -> u64 {
         self.last_gathered_bytes
     }
 
+    /// Blocks attended by the most recent step (all query heads).
     pub fn last_routed_blocks(&self) -> usize {
         self.last_routed_blocks
     }
@@ -1101,6 +1429,174 @@ mod tests {
             small.append(&[1.0, 0.0, 0.0, 0.0], &[0.0; 4]);
         }
         assert_eq!(margin_at(&small, &mut scratch), f32::INFINITY);
+    }
+
+    /// The tentpole contract in miniature: a paged session's outputs
+    /// and per-step counters are bit-identical to the contiguous
+    /// session's, mixed plans and ragged tails included. (The full
+    /// sweep over shapes, thread counts and the batched entry points
+    /// lives in `rust/tests/paged_parity.rs`.)
+    #[test]
+    fn paged_session_is_bitwise_identical_to_contiguous() {
+        let (h, h_kv, n, d) = (4, 2, 57, 8);
+        let plan = RoutePlan {
+            heads: vec![HeadPlan::routed(8, 3), HeadPlan::dense(16)],
+            fallback_margin: f32::NEG_INFINITY,
+        };
+        let pool = PagePool::new(16, None);
+        let (q, k, v) = qkv_packed(21, h, h_kv, n, d);
+        let mut contig = DecodeSession::with_plan(h, h_kv, d, plan.clone());
+        let mut paged = DecodeSession::with_plan_paged(h, h_kv, d, plan, &pool);
+        assert!(paged.cache().is_paged() && !contig.cache().is_paged());
+        for t in 0..n {
+            let (kt, vt) = (packed_rows(&k, h_kv, n, d, t), packed_rows(&v, h_kv, n, d, t));
+            contig.append(&kt, &vt);
+            paged.append(&kt, &vt);
+            let qt = packed_rows(&q, h, n, d, t);
+            let (a, b) = (contig.decode_routed(&qt), paged.decode_routed(&qt));
+            assert!(a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()), "t={t}");
+            assert_eq!(contig.last_gathered_bytes(), paged.last_gathered_bytes(), "t={t}");
+            assert_eq!(contig.last_routed_blocks(), paged.last_routed_blocks(), "t={t}");
+        }
+        // one page per logical block per head, live in the pool
+        let expect = n.div_ceil(8) + n.div_ceil(16);
+        assert_eq!(paged.total_pages(), expect);
+        assert_eq!(pool.live_pages(), expect);
+        // per-block views agree across layouts
+        for head in 0..h_kv {
+            for b in 0..contig.cache().num_blocks_of(head) {
+                assert_eq!(
+                    contig.cache().block_keys(head, b),
+                    paged.cache().block_keys(head, b),
+                    "head {head} block {b}"
+                );
+            }
+        }
+        drop(paged);
+        assert_eq!(pool.live_pages(), 0);
+    }
+
+    /// Fork shares every page, then the first divergent append splits
+    /// only the partial tail page — and both sessions decode exactly
+    /// like independent sessions fed the same histories.
+    #[test]
+    fn fork_shares_prefix_and_splits_on_divergence() {
+        let (h, n_prefix, d, block, topk) = (1, 20, 8, 8, 2);
+        let pool = PagePool::new(block, None);
+        let (q, k, v) = qkv_packed(22, h, 1, n_prefix + 8, d);
+        let mut parent = DecodeSession::new_paged(h, 1, d, block, topk, &pool);
+        let mut indep_parent = DecodeSession::new(h, 1, d, block, topk);
+        for t in 0..n_prefix {
+            let (kt, vt) = (packed_rows(&k, 1, n_prefix + 8, d, t), packed_rows(&v, 1, n_prefix + 8, d, t));
+            parent.append(&kt, &vt);
+            indep_parent.append(&kt, &vt);
+        }
+        let pages_before = pool.live_pages();
+        assert_eq!(pages_before, n_prefix.div_ceil(block)); // 3 pages, last partial
+
+        let mut child = parent.fork();
+        let mut indep_child = indep_parent.clone();
+        // zero new pages: the whole prefix is shared
+        assert_eq!(pool.live_pages(), pages_before);
+        assert_eq!(pool.prefix_shared(), pages_before as u64);
+
+        // diverge: parent and child append different continuations
+        for (i, t) in (n_prefix..n_prefix + 4).enumerate() {
+            let (kt, vt) =
+                (packed_rows(&k, 1, n_prefix + 8, d, t), packed_rows(&v, 1, n_prefix + 8, d, t));
+            let (kt2, vt2) = (
+                packed_rows(&k, 1, n_prefix + 8, d, t + 4),
+                packed_rows(&v, 1, n_prefix + 8, d, t + 4),
+            );
+            parent.append(&kt, &vt);
+            indep_parent.append(&kt, &vt);
+            child.append(&kt2, &vt2);
+            indep_child.append(&kt2, &vt2);
+            let qt = packed_rows(&q, h, n_prefix + 8, d, t);
+            for (sess, indep) in
+                [(&mut parent, &mut indep_parent), (&mut child, &mut indep_child)]
+            {
+                let (a, b) = (sess.decode_routed(&qt), indep.decode_routed(&qt));
+                assert!(
+                    a.iter().zip(&b).all(|(x, y)| x.to_bits() == y.to_bits()),
+                    "divergent step {i}"
+                );
+            }
+        }
+        // exactly one CoW split: parent's first divergent append found
+        // the partial tail shared; once parent moved to its copy the
+        // child's tail was unique again and wrote in place
+        assert_eq!(pool.cow_splits(), 1);
+        // complete prefix pages stayed shared; only the tails forked
+        // (24 tokens = 3 blocks/table): 2 shared + 2 private tails
+        assert_eq!(pool.live_pages(), 2 + 2);
+    }
+
+    /// Evict, replay the same appends, and every output bit comes back
+    /// — the preemption/re-prefill path, kconv streams included.
+    #[test]
+    fn evict_then_replay_restores_outputs_bitwise() {
+        let (h, n, d, block, topk, width) = (2, 26, 8, 8, 2, 3);
+        let pool = PagePool::new(block, None);
+        let mut rng = Rng::new(23);
+        let w = rng.normal_vec(width * d);
+        let (q, k, v) = qkv_packed(24, h, 1, n, d);
+        let mut sess = DecodeSession::new_paged(h, 1, d, block, topk, &pool);
+        sess.cache = KvCache::paged_with_kconv(1, d, block, &w, width, &pool);
+        let mut outputs = Vec::new();
+        for t in 0..n {
+            sess.append(&packed_rows(&k, 1, n, d, t), &packed_rows(&v, 1, n, d, t));
+            outputs.push(sess.decode_routed(&packed_rows(&q, h, n, d, t)));
+        }
+        let released = sess.evict();
+        assert_eq!(released, n.div_ceil(block));
+        assert_eq!(pool.live_pages(), 0);
+        assert!(sess.is_empty());
+        // replay: identical appends rebuild identical pages and streams
+        for t in 0..n {
+            sess.append(&packed_rows(&k, 1, n, d, t), &packed_rows(&v, 1, n, d, t));
+            let o = sess.decode_routed(&packed_rows(&q, h, n, d, t));
+            assert!(
+                o.iter().zip(&outputs[t]).all(|(x, y)| x.to_bits() == y.to_bits()),
+                "replayed step {t} diverged"
+            );
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "no contiguous view")]
+    fn paged_cache_rejects_contiguous_accessors() {
+        let pool = PagePool::new(8, None);
+        let mut cache = KvCache::paged_with_blocks(1, 4, &[8], &pool);
+        cache.append(&[0.0; 4], &[0.0; 4]);
+        let _ = cache.keys_of(0);
+    }
+
+    #[test]
+    #[should_panic(expected = "exceeds the pool's page_tokens")]
+    fn block_larger_than_page_rejected() {
+        let pool = PagePool::new(8, None);
+        KvCache::paged_with_blocks(1, 4, &[16], &pool);
+    }
+
+    /// Admission-cost estimates: fresh blocks plus a CoW split for a
+    /// shared partial tail.
+    #[test]
+    fn append_page_cost_counts_new_blocks_and_tail_splits() {
+        let pool = PagePool::new(8, None);
+        let mut cache = KvCache::paged_with_blocks(2, 4, &[8, 4], &pool);
+        for _ in 0..6 {
+            cache.append(&[0.0; 8], &[0.0; 8]);
+        }
+        // head 0 (block 8): 6 + 10 tokens = 2 blocks (1 new); head 1
+        // (block 4): 6 + 10 = 4 blocks (2 new)
+        assert_eq!(cache.append_page_cost(10), 3);
+        assert_eq!(cache.append_page_cost(0), 0);
+        // a fork makes both partial tails shared: +1 split each
+        let _fork = cache.fork();
+        assert_eq!(cache.append_page_cost(10), 5);
+        // replay estimate is layout-independent
+        assert_eq!(cache.pages_for(16), 16usize.div_ceil(8) + 16usize.div_ceil(4));
     }
 
     #[test]

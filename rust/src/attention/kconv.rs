@@ -101,6 +101,15 @@ impl KconvStream {
         self.len == 0
     }
 
+    /// Reset to the empty-stream state, keeping the taps: zero the ring
+    /// buffer and forget every pushed token. An evicted cache resets
+    /// its streams before re-prefill, so replaying the original key
+    /// sequence reproduces the convolved keys bit for bit.
+    pub fn reset(&mut self) {
+        self.ring.fill(0.0);
+        self.len = 0;
+    }
+
     /// Push raw key k_t, returning the convolved key k'_t. Accumulates
     /// lag 0..min(width, t+1) in the same order as the batch [`kconv`].
     pub fn push(&mut self, kt: &[f32]) -> Vec<f32> {
@@ -204,6 +213,27 @@ mod tests {
                 assert_eq!(&got[..], &batch[t * d..(t + 1) * d], "t={t} n={n} width={width}");
             }
             assert_eq!(stream.len(), n);
+        }
+    }
+
+    /// Reset forgets all history: replaying the same keys reproduces
+    /// the original outputs bit for bit (the evict/re-prefill path).
+    #[test]
+    fn reset_then_replay_is_bitwise_identical() {
+        let mut rng = Rng::new(6);
+        let (n, d, width) = (23, 4, 3);
+        let k = rng.normal_vec(n * d);
+        let w = rng.normal_vec(width * d);
+        let mut stream = KconvStream::new(&w, width, d);
+        let first: Vec<Vec<f32>> = (0..n).map(|t| stream.push(&k[t * d..(t + 1) * d])).collect();
+        stream.reset();
+        assert!(stream.is_empty());
+        for (t, orig) in first.iter().enumerate() {
+            let got = stream.push(&k[t * d..(t + 1) * d]);
+            assert!(
+                got.iter().zip(orig).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "t={t} diverged after reset"
+            );
         }
     }
 }

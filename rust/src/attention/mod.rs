@@ -23,6 +23,11 @@
 //! * [`decode`] — incremental autoregressive decode: per-session block
 //!   KV cache with running centroids and streaming MoBA routing, parity
 //!   locked against the prefill kernels.
+//! * [`paged`] — the shared page allocator under paged KV caches:
+//!   fixed-size pages (one per logical block, centroid sum in the page
+//!   metadata), copy-on-write prefix sharing, and the soft page budget
+//!   admission control enforces. Paged decode is bit-identical to the
+//!   contiguous layout (`rust/tests/paged_parity.rs`).
 //! * [`backend`] — the [`backend::AttentionBackend`] trait unifying the
 //!   implementations behind one call convention (prefill `forward` +
 //!   incremental `forward_decode`), plus the registry and cross-backend
@@ -50,6 +55,7 @@ pub mod flash_moba;
 pub mod gemm;
 pub mod kconv;
 pub mod moba_naive;
+pub mod paged;
 pub mod plan;
 pub mod simd;
 pub mod stats;
@@ -59,6 +65,7 @@ pub mod varlen;
 
 pub use backend::{AttentionBackend, BackendRegistry};
 pub use decode::{DecodeSession, KvCache};
+pub use paged::{PagePool, PoolStats};
 pub use plan::{HeadMode, HeadPlan, RoutePlan};
 pub use stats::StageStats;
 // the execution context every backend call takes (canonical home:

@@ -1,0 +1,516 @@
+//! Paged KV storage: fixed-size pages owned by a shared pool, with
+//! copy-on-write prefix sharing — the vLLM-style allocator under the
+//! serving cache (ROADMAP item 1; ground truth
+//! `flash_causal_lm.py`-style block tables).
+//!
+//! * [`PagePool`] — the global allocator. A *page* holds the K/V rows
+//!   (and the running centroid-sum metadata) of **one logical block**
+//!   of one KV head; every page reserves `page_tokens` rows of
+//!   capacity up front, so steady-state appends into a page never
+//!   reallocate (the zero-alloc contract of
+//!   `rust/tests/alloc_regression.rs` extends to paged caches). The
+//!   pool is pure accounting + identity: pages live in the sessions'
+//!   page tables as refcounted handles, the pool tracks how many are
+//!   live against an optional budget (`max_pages`). The budget is
+//!   **soft**: `alloc` never fails mid-step — admission control
+//!   ([`crate::coordinator::scheduler`]) is the gate that keeps
+//!   `live_pages` under budget, and [`PagePool::would_fit`] is what it
+//!   asks.
+//! * [`PageHandle`] — one page-table entry: `Clone` shares the page
+//!   (refcount bump, no copy — how two sessions share a common
+//!   prefix), `Drop` returns the page to the pool when the last
+//!   handle goes. [`PageHandle::make_mut`] is the **copy-on-write
+//!   rule**: writing through a uniquely-held handle mutates in place;
+//!   writing through a shared handle first splits off a private copy
+//!   (counted in `cow_splits`). Appends only ever touch the *last*
+//!   (partial) page of a table, so after a fork the complete shared
+//!   prefix pages stay shared forever — only the partial tail page
+//!   splits, and only on the first divergent append.
+//!
+//! The paged cache's arithmetic is untouched by any of this: a page
+//! stores exactly the rows the contiguous store kept for that block,
+//! and the per-block centroid sum accumulates in the same arrival
+//! order — so paged decode is bit-identical to the contiguous path
+//! (pinned by `rust/tests/paged_parity.rs`).
+
+use std::sync::{Arc, Mutex, Weak};
+
+/// One page: the K/V rows and running centroid-sum metadata of one
+/// logical block of one KV head. Capacity (`cap_rows` == the pool's
+/// `page_tokens`) is reserved at allocation, so [`PageData::append_row`]
+/// never reallocates.
+#[derive(Debug)]
+pub struct PageData {
+    d: usize,
+    cap_rows: usize,
+    /// token rows stored so far (<= cap_rows)
+    len: usize,
+    /// (len, d) row-major keys (post-kconv when the cache streams one)
+    k: Vec<f32>,
+    /// (len, d) row-major values
+    v: Vec<f32>,
+    /// running key sum of this page's rows, (d) — divided by `len` at
+    /// read time to form the block centroid, exactly like the
+    /// contiguous store's `sums` slab
+    sum: Vec<f32>,
+}
+
+impl PageData {
+    fn new(cap_rows: usize, d: usize) -> Self {
+        Self {
+            d,
+            cap_rows,
+            len: 0,
+            k: Vec::with_capacity(cap_rows * d),
+            v: Vec::with_capacity(cap_rows * d),
+            sum: vec![0.0; d],
+        }
+    }
+
+    /// Capacity-preserving deep copy (the CoW split body). A derived
+    /// `Clone` would size the new vectors to `len * d` and lose the
+    /// reserve, breaking the no-realloc append contract.
+    fn split_copy(&self) -> Self {
+        let mut k = Vec::with_capacity(self.cap_rows * self.d);
+        k.extend_from_slice(&self.k);
+        let mut v = Vec::with_capacity(self.cap_rows * self.d);
+        v.extend_from_slice(&self.v);
+        Self { d: self.d, cap_rows: self.cap_rows, len: self.len, k, v, sum: self.sum.clone() }
+    }
+
+    /// Token rows stored.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Whether the page holds its full `page_tokens` rows.
+    pub fn is_full(&self) -> bool {
+        self.len == self.cap_rows
+    }
+
+    /// Stored keys, `(len, d)` row-major.
+    pub fn k(&self) -> &[f32] {
+        &self.k
+    }
+
+    /// Stored values, `(len, d)` row-major.
+    pub fn v(&self) -> &[f32] {
+        &self.v
+    }
+
+    /// Running key sum over this page's rows, `(d)`.
+    pub fn sum(&self) -> &[f32] {
+        &self.sum
+    }
+
+    /// Append one `(d)` key/value row, accumulating the centroid sum in
+    /// arrival order (the same f32 additions as the contiguous store).
+    pub fn append_row(&mut self, kr: &[f32], vr: &[f32]) {
+        assert_eq!(kr.len(), self.d);
+        assert_eq!(vr.len(), self.d);
+        assert!(self.len < self.cap_rows, "page overflow: {} rows cap {}", self.len, self.cap_rows);
+        for (s, &x) in self.sum.iter_mut().zip(kr) {
+            *s += x;
+        }
+        self.k.extend_from_slice(kr);
+        self.v.extend_from_slice(vr);
+        self.len += 1;
+    }
+}
+
+/// Pool-wide accounting, all under one lock.
+#[derive(Debug, Default)]
+struct PoolState {
+    /// pages currently held by at least one handle
+    live: usize,
+    /// high-water mark of `live`
+    peak: usize,
+    /// pages ever materialized (fresh allocs + CoW splits)
+    allocated: u64,
+    /// pages returned (last handle dropped)
+    freed: u64,
+    /// shared-handle writes that had to split a private copy
+    cow_splits: u64,
+    /// page-table entries satisfied by sharing an existing page
+    /// ([`PagePool::note_share`] — a fork reports its table size here)
+    prefix_shared: u64,
+    next_id: u64,
+}
+
+#[derive(Debug)]
+struct PoolShared {
+    page_tokens: usize,
+    max_pages: Option<usize>,
+    state: Mutex<PoolState>,
+}
+
+impl PoolShared {
+    /// Register one materialized page; returns its id.
+    fn note_alloc(&self, splits: u64) -> u64 {
+        let mut st = self.state.lock().unwrap();
+        st.allocated += 1;
+        st.cow_splits += splits;
+        st.live += 1;
+        st.peak = st.peak.max(st.live);
+        let id = st.next_id;
+        st.next_id += 1;
+        id
+    }
+}
+
+/// Snapshot of a pool's counters (one lock, consistent view).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolStats {
+    pub live: usize,
+    pub peak: usize,
+    pub allocated: u64,
+    pub freed: u64,
+    pub cow_splits: u64,
+    pub prefix_shared: u64,
+}
+
+/// The shared page allocator. `Clone` is a handle to the *same* pool
+/// (sessions and the coordinator share one).
+#[derive(Debug, Clone)]
+pub struct PagePool {
+    shared: Arc<PoolShared>,
+}
+
+impl PagePool {
+    /// A pool of pages holding `page_tokens` rows each; `max_pages` is
+    /// the soft budget admission control enforces (`None` = unbounded).
+    /// The pool is d-agnostic: row width is fixed per page at
+    /// [`PagePool::alloc`] time, so sessions with different head dims
+    /// can share one pool.
+    pub fn new(page_tokens: usize, max_pages: Option<usize>) -> Self {
+        assert!(page_tokens >= 1, "pages must hold at least one token row");
+        Self {
+            shared: Arc::new(PoolShared {
+                page_tokens,
+                max_pages,
+                state: Mutex::new(PoolState::default()),
+            }),
+        }
+    }
+
+    /// Rows per page. A paged cache requires every head's block size to
+    /// divide into this (block <= page_tokens; one page per block).
+    pub fn page_tokens(&self) -> usize {
+        self.shared.page_tokens
+    }
+
+    /// The soft budget (`None` = unbounded).
+    pub fn max_pages(&self) -> Option<usize> {
+        self.shared.max_pages
+    }
+
+    /// Materialize a fresh page with `(d)`-wide rows. Never fails: the
+    /// budget is enforced by admission control, not allocation — a
+    /// decode step that was admitted must be able to finish.
+    pub fn alloc(&self, d: usize) -> PageHandle {
+        assert!(d >= 1);
+        let id = self.shared.note_alloc(0);
+        PageHandle {
+            id,
+            pool: Arc::downgrade(&self.shared),
+            data: Some(Arc::new(PageData::new(self.shared.page_tokens, d))),
+        }
+    }
+
+    /// Would `extra` more live pages still fit under the budget?
+    pub fn would_fit(&self, extra: usize) -> bool {
+        match self.shared.max_pages {
+            None => true,
+            Some(m) => self.shared.state.lock().unwrap().live + extra <= m,
+        }
+    }
+
+    /// Record `n` page-table entries satisfied by sharing existing
+    /// pages (a fork reports its parent's table size).
+    pub fn note_share(&self, n: u64) {
+        self.shared.state.lock().unwrap().prefix_shared += n;
+    }
+
+    /// Consistent snapshot of the counters.
+    pub fn stats(&self) -> PoolStats {
+        let st = self.shared.state.lock().unwrap();
+        PoolStats {
+            live: st.live,
+            peak: st.peak,
+            allocated: st.allocated,
+            freed: st.freed,
+            cow_splits: st.cow_splits,
+            prefix_shared: st.prefix_shared,
+        }
+    }
+
+    /// Pages currently held by at least one handle.
+    pub fn live_pages(&self) -> usize {
+        self.shared.state.lock().unwrap().live
+    }
+
+    /// Pages ever materialized (fresh allocs + CoW splits).
+    pub fn pages_allocated(&self) -> u64 {
+        self.shared.state.lock().unwrap().allocated
+    }
+
+    /// Shared-handle writes that split a private copy.
+    pub fn cow_splits(&self) -> u64 {
+        self.shared.state.lock().unwrap().cow_splits
+    }
+
+    /// Page-table entries satisfied by sharing instead of allocating.
+    pub fn prefix_shared(&self) -> u64 {
+        self.shared.state.lock().unwrap().prefix_shared
+    }
+
+    /// Fraction of page-table entries ever created that were satisfied
+    /// by sharing an existing page instead of materializing a new one —
+    /// the serve-soak bench's headline cache-reuse metric.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let st = self.shared.state.lock().unwrap();
+        let total = st.prefix_shared + st.allocated;
+        if total == 0 {
+            0.0
+        } else {
+            st.prefix_shared as f64 / total as f64
+        }
+    }
+
+    /// Two handles point at the same pool.
+    pub fn same_pool(&self, other: &PagePool) -> bool {
+        Arc::ptr_eq(&self.shared, &other.shared)
+    }
+}
+
+/// One page-table entry: a refcounted handle to a [`PageData`].
+#[derive(Debug)]
+pub struct PageHandle {
+    id: u64,
+    pool: Weak<PoolShared>,
+    /// `Some` until `Drop` takes it (so the drop accounting can run
+    /// under the pool lock)
+    data: Option<Arc<PageData>>,
+}
+
+impl PageHandle {
+    /// Pool-unique page id (a CoW split assigns the private copy a new
+    /// one, so two tables sharing a page agree on its id).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Read access to the page.
+    pub fn data(&self) -> &PageData {
+        self.data.as_ref().expect("live handle")
+    }
+
+    /// Whether another table also holds this page.
+    pub fn is_shared(&self) -> bool {
+        Arc::strong_count(self.data.as_ref().expect("live handle")) > 1
+    }
+
+    /// Write access — the copy-on-write rule. A uniquely-held page is
+    /// mutated in place; a shared page first splits: this handle swaps
+    /// to a capacity-preserving private copy (fresh id, `cow_splits`
+    /// and `allocated` bumped) and the sibling tables keep the
+    /// original. Appends only ever write the last, partial page of a
+    /// table, so complete prefix pages shared by a fork never split.
+    pub fn make_mut(&mut self) -> &mut PageData {
+        let shared = Arc::get_mut(self.data.as_mut().expect("live handle")).is_none();
+        if shared {
+            let copy = Arc::new(self.data.as_ref().expect("live handle").split_copy());
+            if let Some(pool) = self.pool.upgrade() {
+                self.id = pool.note_alloc(1);
+                // replace our entry under the lock-free Arc swap; the
+                // refcount on the original drops by one, the sibling
+                // keeps it live
+                self.data = Some(copy);
+            } else {
+                // pool gone (tests tearing down): still split correctly,
+                // keep the old id space moving
+                self.id = u64::MAX - self.id;
+                self.data = Some(copy);
+            }
+        }
+        Arc::get_mut(self.data.as_mut().expect("live handle")).expect("uniquely held after split")
+    }
+}
+
+impl Clone for PageHandle {
+    /// Share the page: refcount bump, no copy, no pool accounting —
+    /// the pool counts *pages*, not handles. Callers tracking prefix
+    /// reuse report table-sized shares via [`PagePool::note_share`].
+    fn clone(&self) -> Self {
+        Self { id: self.id, pool: self.pool.clone(), data: self.data.clone() }
+    }
+}
+
+impl Drop for PageHandle {
+    fn drop(&mut self) {
+        let Some(arc) = self.data.take() else { return };
+        if let Some(pool) = self.pool.upgrade() {
+            // hold the pool lock across the refcount check AND the drop
+            // of our Arc: a concurrent drop of a sibling handle runs the
+            // same critical section, so exactly one of us observes
+            // strong_count == 1 and accounts the free
+            let mut st = pool.state.lock().unwrap();
+            if Arc::strong_count(&arc) == 1 {
+                st.live -= 1;
+                st.freed += 1;
+            }
+            drop(arc);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_and_drop_account_live_pages() {
+        let pool = PagePool::new(8, None);
+        let a = pool.alloc(4);
+        let b = pool.alloc(4);
+        assert_ne!(a.id(), b.id());
+        let st = pool.stats();
+        assert_eq!((st.live, st.peak, st.allocated, st.freed), (2, 2, 2, 0));
+        drop(a);
+        assert_eq!(pool.live_pages(), 1);
+        drop(b);
+        let st = pool.stats();
+        assert_eq!((st.live, st.peak, st.allocated, st.freed), (0, 2, 2, 2));
+    }
+
+    #[test]
+    fn cloned_handles_share_one_page() {
+        let pool = PagePool::new(8, None);
+        let a = pool.alloc(2);
+        let b = a.clone();
+        assert_eq!(a.id(), b.id());
+        assert!(a.is_shared() && b.is_shared());
+        // one page live, however many handles
+        assert_eq!(pool.live_pages(), 1);
+        drop(a);
+        assert!(!b.is_shared());
+        assert_eq!(pool.live_pages(), 1); // survivor keeps it live
+        drop(b);
+        assert_eq!(pool.live_pages(), 0);
+        assert_eq!(pool.stats().freed, 1);
+    }
+
+    #[test]
+    fn append_accumulates_rows_and_sum() {
+        let pool = PagePool::new(4, None);
+        let mut h = pool.alloc(2);
+        h.make_mut().append_row(&[1.0, 2.0], &[5.0, 6.0]);
+        h.make_mut().append_row(&[3.0, 4.0], &[7.0, 8.0]);
+        let p = h.data();
+        assert_eq!(p.len(), 2);
+        assert!(!p.is_full());
+        assert_eq!(p.k(), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(p.v(), &[5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(p.sum(), &[4.0, 6.0]);
+        // no CoW happened: the handle was unique throughout
+        assert_eq!(pool.cow_splits(), 0);
+    }
+
+    #[test]
+    fn shared_write_splits_copy_on_write() {
+        let pool = PagePool::new(4, None);
+        let mut a = pool.alloc(2);
+        a.make_mut().append_row(&[1.0, 1.0], &[0.0, 0.0]);
+        let mut b = a.clone();
+        assert_eq!(pool.live_pages(), 1);
+
+        // first divergent write through `a` splits a private copy
+        a.make_mut().append_row(&[2.0, 2.0], &[0.0, 0.0]);
+        assert_ne!(a.id(), b.id());
+        assert!(!a.is_shared() && !b.is_shared());
+        let st = pool.stats();
+        assert_eq!((st.live, st.allocated, st.cow_splits), (2, 2, 1));
+        // `b` kept the original content; `a` got prefix + new row
+        assert_eq!(b.data().len(), 1);
+        assert_eq!(a.data().len(), 2);
+        assert_eq!(&a.data().k()[..2], b.data().k());
+
+        // `b` is unique now: its writes are in place, no further split
+        b.make_mut().append_row(&[9.0, 9.0], &[0.0, 0.0]);
+        assert_eq!(pool.cow_splits(), 1);
+        assert_ne!(a.data().k(), b.data().k()); // genuinely diverged
+        drop(a);
+        drop(b);
+        assert_eq!(pool.live_pages(), 0);
+        assert_eq!(pool.stats().freed, 2);
+    }
+
+    #[test]
+    fn split_preserves_append_capacity() {
+        // after a CoW split the private copy must still absorb the rest
+        // of its block without reallocating (asserted structurally: the
+        // page accepts cap_rows rows — the alloc-regression suite pins
+        // the no-realloc behavior end to end)
+        let pool = PagePool::new(4, None);
+        let mut a = pool.alloc(3);
+        a.make_mut().append_row(&[0.0; 3], &[0.0; 3]);
+        let _b = a.clone();
+        let p = a.make_mut(); // split at len 1
+        for _ in 1..4 {
+            p.append_row(&[0.0; 3], &[0.0; 3]);
+        }
+        assert!(a.data().is_full());
+    }
+
+    #[test]
+    #[should_panic(expected = "page overflow")]
+    fn page_overflow_panics() {
+        let pool = PagePool::new(1, None);
+        let mut h = pool.alloc(2);
+        h.make_mut().append_row(&[0.0; 2], &[0.0; 2]);
+        h.make_mut().append_row(&[0.0; 2], &[0.0; 2]);
+    }
+
+    #[test]
+    fn budget_is_soft_but_visible() {
+        let pool = PagePool::new(8, Some(2));
+        assert_eq!(pool.max_pages(), Some(2));
+        assert!(pool.would_fit(2));
+        let _a = pool.alloc(4);
+        assert!(pool.would_fit(1));
+        assert!(!pool.would_fit(2));
+        let _b = pool.alloc(4);
+        assert!(!pool.would_fit(1));
+        // soft: an admitted step may still finish past the line
+        let c = pool.alloc(4);
+        assert_eq!(pool.live_pages(), 3);
+        drop(c);
+        assert!(pool.would_fit(0));
+    }
+
+    #[test]
+    fn share_accounting_feeds_hit_rate() {
+        let pool = PagePool::new(8, None);
+        assert_eq!(pool.prefix_hit_rate(), 0.0);
+        let a = pool.alloc(4);
+        let _fork = a.clone();
+        pool.note_share(1);
+        assert_eq!(pool.prefix_shared(), 1);
+        // 1 shared of (1 shared + 1 allocated)
+        assert!((pool.prefix_hit_rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pool_clone_is_same_pool() {
+        let pool = PagePool::new(8, None);
+        let alias = pool.clone();
+        assert!(pool.same_pool(&alias));
+        let _p = alias.alloc(4);
+        assert_eq!(pool.live_pages(), 1);
+        assert!(!pool.same_pool(&PagePool::new(8, None)));
+    }
+}

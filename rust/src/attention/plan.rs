@@ -53,14 +53,17 @@ pub struct HeadPlan {
 }
 
 impl HeadPlan {
+    /// A MoBA-routed head at `(block, topk)`.
     pub fn routed(block: usize, topk: usize) -> Self {
         HeadPlan { block, topk, mode: HeadMode::Routed }
     }
 
+    /// A planned-dense head; `block` only sizes the cache accounting.
     pub fn dense(block: usize) -> Self {
         HeadPlan { block, topk: 0, mode: HeadMode::Dense }
     }
 
+    /// Whether this head is planned dense (as opposed to routed).
     pub fn is_dense(&self) -> bool {
         self.mode == HeadMode::Dense
     }
@@ -91,6 +94,7 @@ impl RoutePlan {
         self.heads.len()
     }
 
+    /// KV head `kv_head`'s plan entry.
     pub fn head(&self, kv_head: usize) -> &HeadPlan {
         &self.heads[kv_head]
     }
@@ -156,6 +160,7 @@ impl RoutePlan {
     //     ]
     //   }
 
+    /// Serialize to the plan-file JSON schema above.
     pub fn to_json(&self) -> Json {
         let heads = self
             .heads
@@ -183,6 +188,8 @@ impl RoutePlan {
         Json::obj(pairs)
     }
 
+    /// Deserialize from the plan-file JSON schema (inverse of
+    /// [`RoutePlan::to_json`]); structural errors name the bad field.
     pub fn from_json(j: &Json) -> Result<Self, String> {
         let heads_json = j
             .get("heads")

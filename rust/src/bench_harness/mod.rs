@@ -18,6 +18,10 @@
 //!   tokens/s of one `forward_decode_batch` launch over B sessions vs
 //!   the sequential per-session loop, B ∈ {1, 4, 16, 64}; CI floors
 //!   the B=16-vs-B=1 aggregate speedup.
+//! * [`serve_soak`] — paged-KV serving soak: fork-heavy session
+//!   families through the coordinator, unbounded pool vs a tight page
+//!   budget; CI floors the fork `prefix_hit_rate` and the bitwise
+//!   `parity_ok` of the pressured leg.
 //! * [`smallblock`] — flash_moba vs dense across block ∈ {16, 32, 64}
 //!   at fixed N (the paper's small-block regime), through the
 //!   zero-allocation `forward_into` path; CI floors the B=32 speedup.
@@ -29,6 +33,7 @@ pub mod decode;
 pub mod decode_batch;
 pub mod figures;
 pub mod report;
+pub mod serve_soak;
 pub mod smallblock;
 pub mod snr_harness;
 pub mod tables;

@@ -1,0 +1,299 @@
+//! `bench serve-soak` — paged-KV serving soak: fork-heavy session
+//! families decoding through the coordinator, once on an unbounded
+//! page pool and once under a deliberately tight page budget.
+//!
+//! The soak builds `families` sessions sharing one prefilled prompt
+//! each (parent + copy-on-write forks), then interleaves decode steps
+//! across every session so the continuous-batching scheduler sees
+//! mixed traffic. Two CI-floored headline metrics come out:
+//!
+//! * `prefix_hit_rate` — from the unbounded leg: the fraction of
+//!   page-table entries satisfied by sharing a fork parent's pages
+//!   instead of allocating (the paged allocator's reason to exist);
+//! * `parity_ok` — 1.0 when the pressured leg's every served output is
+//!   `to_bits`-identical to the unbounded leg's. Preemption, swap-log
+//!   replay and deferred admission must be invisible to the math.
+//!
+//! The pressured leg's budget is sized from the session footprint so
+//! the working set cannot be resident at once — preemption round trips
+//! are guaranteed, and the run fails if none happened.
+
+use crate::attention::testutil::Rng;
+use crate::config::{AppConfig, ServeParams};
+use crate::coordinator::{AttnKind, Coordinator};
+use crate::util::json::Json;
+use crate::Result;
+
+use super::report::{self, Table};
+
+/// Soak geometry: `families` fork groups of `1 + forks_per` sessions,
+/// each prefilled with `n0` shared tokens then decoded `steps` tokens.
+#[derive(Debug, Clone, Copy)]
+pub struct SoakSpec {
+    pub families: usize,
+    pub forks_per: usize,
+    pub n0: usize,
+    pub steps: usize,
+    pub h: usize,
+    pub h_kv: usize,
+    pub d: usize,
+    pub block: usize,
+    pub topk: usize,
+}
+
+impl SoakSpec {
+    pub fn quick(d: usize) -> Self {
+        Self { families: 2, forks_per: 3, n0: 64, steps: 16, h: 2, h_kv: 1, d, block: 32, topk: 2 }
+    }
+
+    pub fn full(d: usize) -> Self {
+        Self { families: 4, forks_per: 7, n0: 256, steps: 64, h: 2, h_kv: 1, d, block: 32, topk: 2 }
+    }
+
+    fn sessions(&self) -> usize {
+        self.families * (1 + self.forks_per)
+    }
+
+    /// One session's worst-case page footprint (prefix + all decoded
+    /// tokens, per KV head) — the unit the pressured budget is sized in.
+    fn footprint(&self) -> usize {
+        self.h_kv * (self.n0 + self.steps).div_ceil(self.block)
+    }
+}
+
+/// One leg's counters, read off the coordinator metrics after a gauge
+/// barrier (pool gauges sync at the end of each worker turn).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LegStats {
+    pub prefix_hit_rate: f64,
+    pub pages_allocated: u64,
+    pub pages_live: u64,
+    pub preemptions: u64,
+    pub restores: u64,
+    pub deferred: u64,
+    pub rejected: u64,
+}
+
+/// Deterministic soak traffic, generated once and replayed identically
+/// on both legs: per-family prompts and per-(session, step) rows.
+struct Traffic {
+    prompts: Vec<(Vec<f32>, Vec<f32>)>,
+    rows: Vec<Vec<(Vec<f32>, Vec<f32>, Vec<f32>)>>,
+}
+
+fn build_traffic(spec: &SoakSpec, seed: u64) -> Traffic {
+    let mut rng = Rng::new(seed);
+    let prompts = (0..spec.families)
+        .map(|_| {
+            (rng.normal_vec(spec.h_kv * spec.n0 * spec.d), rng.normal_vec(spec.h_kv * spec.n0 * spec.d))
+        })
+        .collect();
+    let rows = (0..spec.sessions())
+        .map(|_| {
+            (0..spec.steps)
+                .map(|_| {
+                    (
+                        rng.normal_vec(spec.h * spec.d),
+                        rng.normal_vec(spec.h_kv * spec.d),
+                        rng.normal_vec(spec.h_kv * spec.d),
+                    )
+                })
+                .collect()
+        })
+        .collect();
+    Traffic { prompts, rows }
+}
+
+/// Run one leg: all families prefilled and forked, then `steps` rounds
+/// of one interleaved decode step per session (async within a round, so
+/// steps batch across sessions). Returns every served output in
+/// (session, step) order plus the leg's paging counters.
+/// `max_pages == 0` = unbounded pool.
+pub fn run_leg(spec: &SoakSpec, traffic: &Traffic, max_pages: usize) -> Result<(Vec<Vec<f32>>, LegStats)> {
+    let params = ServeParams {
+        max_batch: 8,
+        max_wait_ms: 1,
+        queue_capacity: 4096,
+        moba_block: spec.block,
+        moba_topk: spec.topk,
+        max_pages,
+        ..Default::default()
+    };
+    // a dir that never holds artifacts: the CPU-substrate serving path
+    let coord = Coordinator::start("/nonexistent/flash-moba-artifacts", params)?;
+
+    let mut sids = Vec::with_capacity(spec.sessions());
+    for (k0, v0) in &traffic.prompts {
+        let parent = coord.session_create(AttnKind::Moba, spec.h, spec.h_kv, spec.d)?;
+        coord.session_prefill(parent, spec.n0, k0.clone(), v0.clone())?;
+        sids.push(parent);
+        for _ in 0..spec.forks_per {
+            sids.push(coord.session_fork(parent)?);
+        }
+    }
+
+    let mut outs: Vec<Vec<f32>> = vec![Vec::new(); sids.len()];
+    for t in 0..spec.steps {
+        let tickets: Vec<_> = sids
+            .iter()
+            .enumerate()
+            .map(|(i, &sid)| {
+                let (q, k, v) = &traffic.rows[i][t];
+                coord.decode_async(sid, q.clone(), k.clone(), v.clone())
+            })
+            .collect::<Result<_>>()?;
+        for (i, ticket) in tickets.into_iter().enumerate() {
+            let resp = ticket.wait()?;
+            if resp.served_n != spec.n0 + t + 1 {
+                return Err(anyhow::anyhow!(
+                    "session {i} step {t}: served_n {} != {} — a step was lost or reordered",
+                    resp.served_n,
+                    spec.n0 + t + 1
+                ));
+            }
+            outs[i].extend_from_slice(&resp.o);
+        }
+    }
+
+    // gauge barrier: pool gauges mirror into the metrics at the end of
+    // each worker turn, so one more blocking round trip guarantees the
+    // soak turns above are all synced
+    let barrier = coord.session_create(AttnKind::Moba, spec.h, spec.h_kv, spec.d)?;
+    let m = coord.metrics();
+    let stats = LegStats {
+        prefix_hit_rate: m.prefix_hit_rate(),
+        pages_allocated: m.pages_allocated.load(std::sync::atomic::Ordering::Relaxed),
+        pages_live: m.pages_live.load(std::sync::atomic::Ordering::Relaxed),
+        preemptions: m.preemptions.load(std::sync::atomic::Ordering::Relaxed),
+        restores: m.restores.load(std::sync::atomic::Ordering::Relaxed),
+        deferred: m.admits_deferred.load(std::sync::atomic::Ordering::Relaxed),
+        rejected: m.rejected.load(std::sync::atomic::Ordering::Relaxed),
+    };
+    coord.session_free(barrier)?;
+    for sid in sids {
+        coord.session_free(sid)?;
+    }
+    coord.shutdown();
+    Ok((outs, stats))
+}
+
+/// Both legs over the same traffic: returns
+/// `(prefix_hit_rate, parity_ok, unbounded stats, pressured stats)`.
+/// The pressured budget is `3 × footprint` — enough for any single
+/// session's restore, far below the working set.
+pub fn run_soak(spec: &SoakSpec, seed: u64) -> Result<(f64, f64, LegStats, LegStats)> {
+    let traffic = build_traffic(spec, seed);
+    let (free_outs, free_stats) = run_leg(spec, &traffic, 0)?;
+    let budget = 3 * spec.footprint();
+    let (tight_outs, tight_stats) = run_leg(spec, &traffic, budget)?;
+    let parity = free_outs
+        .iter()
+        .zip(&tight_outs)
+        .all(|(a, b)| a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()));
+    Ok((free_stats.prefix_hit_rate, if parity { 1.0 } else { 0.0 }, free_stats, tight_stats))
+}
+
+/// The `bench serve-soak` target. CI floors `prefix_hit_rate` (the
+/// unbounded leg's fork sharing) and `parity_ok` (pressured == unbounded
+/// bitwise); the run also hard-fails if the pressured leg never
+/// preempted or dropped any parked work.
+pub fn run_serve_soak(cfg: &AppConfig, quick: bool) -> Result<Vec<(String, f64)>> {
+    let d = cfg.bench.head_dim;
+    let spec = if quick { SoakSpec::quick(d) } else { SoakSpec::full(d) };
+    let (hit_rate, parity_ok, free, tight) = run_soak(&spec, 0x50AC)?;
+
+    if tight.preemptions == 0 || tight.restores == 0 {
+        return Err(anyhow::anyhow!(
+            "the pressured leg (budget {} pages) never exercised preemption \
+             (preempt={} restore={}): the soak proves nothing",
+            3 * spec.footprint(),
+            tight.preemptions,
+            tight.restores
+        ));
+    }
+    if tight.rejected != 0 {
+        return Err(anyhow::anyhow!(
+            "the pressured leg dropped {} parked work items — the budget must \
+             defer, never lose",
+            tight.rejected
+        ));
+    }
+
+    let mut t = Table::new(
+        &format!(
+            "bench serve-soak — paged serving under fork sharing + page pressure  \
+             [{} sessions = {}×(1+{}), n0={}, steps={}, B={}, d={}]",
+            spec.sessions(),
+            spec.families,
+            spec.forks_per,
+            spec.n0,
+            spec.steps,
+            spec.block,
+            spec.d
+        ),
+        &["leg", "pages alloc", "pages live", "prefix_hit", "preempt", "restore", "deferred"],
+    );
+    for (name, s) in [("unbounded", &free), ("pressured", &tight)] {
+        t.row(vec![
+            name.to_string(),
+            s.pages_allocated.to_string(),
+            s.pages_live.to_string(),
+            format!("{:.2}", s.prefix_hit_rate),
+            s.preemptions.to_string(),
+            s.restores.to_string(),
+            s.deferred.to_string(),
+        ]);
+    }
+    t.print();
+    println!(
+        "headline: fork sharing satisfied {:.0}% of page-table entries without \
+         allocating; {} preemption round trips served bit-identically (parity_ok={parity_ok})\n",
+        hit_rate * 100.0,
+        tight.restores
+    );
+    report::save_json(
+        &cfg.results_dir,
+        "serve-soak",
+        &Json::obj(vec![
+            ("prefix_hit_rate", Json::from(hit_rate)),
+            ("parity_ok", Json::from(parity_ok)),
+            ("pages_allocated_unbounded", Json::from(free.pages_allocated as f64)),
+            ("pages_allocated_pressured", Json::from(tight.pages_allocated as f64)),
+            ("preemptions", Json::from(tight.preemptions as f64)),
+            ("restores", Json::from(tight.restores as f64)),
+            ("admits_deferred", Json::from(tight.deferred as f64)),
+            ("budget_pages", Json::from(3 * spec.footprint())),
+        ]),
+    )?;
+    Ok(vec![("prefix_hit_rate".to_string(), hit_rate), ("parity_ok".to_string(), parity_ok)])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A miniature soak end-to-end: sharing must register, the
+    /// pressured leg must preempt, and parity must hold bitwise.
+    #[test]
+    fn mini_soak_holds_parity_under_pressure() {
+        let spec = SoakSpec {
+            families: 2,
+            forks_per: 1,
+            n0: 16,
+            steps: 6,
+            h: 2,
+            h_kv: 1,
+            d: 8,
+            block: 8,
+            topk: 2,
+        };
+        let (hit_rate, parity_ok, free, tight) = run_soak(&spec, 0x77).unwrap();
+        assert_eq!(parity_ok, 1.0, "pressured leg diverged from the unbounded pool");
+        assert!(hit_rate > 0.0, "forks never shared a prefix page");
+        assert_eq!(free.preemptions, 0, "an unbounded pool must never preempt");
+        assert!(tight.preemptions > 0, "the tight budget never preempted");
+        assert_eq!(tight.rejected, 0, "parked work was dropped");
+        // pressure respects the budget gauge
+        assert!(tight.pages_live <= (3 * spec.footprint()) as u64);
+    }
+}

@@ -107,6 +107,19 @@ pub struct ServeParams {
     /// margin, applied to plans that don't carry their own; `-inf`
     /// (the default) disables the probe
     pub fallback_margin: f64,
+    /// tokens per KV-cache page on the CPU substrate's paged decode
+    /// path. A *floor* request, not an exact size: the worker derives
+    /// the minimum page able to hold the largest serving block (plan
+    /// heads and `moba_block`) and takes the max of the two, so a
+    /// too-small configured value can never produce an invalid pool.
+    /// 0 (the default) = fully derived
+    pub page_tokens: usize,
+    /// soft page budget for the shared KV pool: the continuous-batching
+    /// admission rule defers or preempts once live pages would exceed
+    /// it (in-flight steps still complete — the budget gates admission,
+    /// allocation never fails). 0 (the default) = unbounded, which also
+    /// disables swap logging and preemption entirely
+    pub max_pages: usize,
 }
 
 impl Default for ServeParams {
@@ -121,6 +134,8 @@ impl Default for ServeParams {
             n_kv_heads: 4,
             route_plan: None,
             fallback_margin: f64::NEG_INFINITY,
+            page_tokens: 0,
+            max_pages: 0,
         }
     }
 }
@@ -289,6 +304,8 @@ impl AppConfig {
                 self.serve.route_plan = Some(p.to_string());
             }
             ov_f64(s, "fallback_margin", &mut self.serve.fallback_margin);
+            ov_usize(s, "page_tokens", &mut self.serve.page_tokens);
+            ov_usize(s, "max_pages", &mut self.serve.max_pages);
         }
         if let Some(a) = j.get("autotune") {
             ov_usize(a, "d", &mut self.autotune.d);
@@ -416,6 +433,18 @@ mod tests {
         let cfg = c.autotune.to_config();
         assert_eq!(cfg.h_kv, 8);
         assert_eq!(cfg.head_delta_mu, vec![1.5, 0.2]);
+    }
+
+    #[test]
+    fn paging_overrides() {
+        // defaults: derived page size, unbounded pool (no preemption)
+        let d = AppConfig::default();
+        assert_eq!((d.serve.page_tokens, d.serve.max_pages), (0, 0));
+        let j = Json::parse(r#"{"serve": {"page_tokens": 256, "max_pages": 1024}}"#).unwrap();
+        let mut c = AppConfig::default();
+        c.apply(&j);
+        assert_eq!(c.serve.page_tokens, 256);
+        assert_eq!(c.serve.max_pages, 1024);
     }
 
     #[test]

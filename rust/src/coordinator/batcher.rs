@@ -4,11 +4,14 @@
 //! (occupancy vs latency).
 //!
 //! Items are [`WorkItem`]s: a decode step carries only the new token's
-//! three d-length rows, so queueing and polling it moves O(d) bytes no
-//! matter how long its session's context is — the session's cached K/V
-//! never travels through the queue. Each flushed [`Batch`] reports the
-//! payload bytes it moved ([`Batch::payload_bytes`], StageStats-style
-//! accounting) so the regression suite can pin that invariant.
+//! three d-length rows plus its session's page-table stamp — the cached
+//! K/V itself never travels through the queue. Each flushed [`Batch`]
+//! reports the payload bytes it moved ([`Batch::payload_bytes`],
+//! StageStats-style accounting), layout-aware per
+//! [`DecodeStep::payload_bytes`](super::request::DecodeStep::payload_bytes):
+//! token rows exactly, plus 8 bytes per page-table entry for paged
+//! sessions, never an O(n·d) context term — the invariant the
+//! regression suite pins.
 //!
 //! Pure data structure (no tasks/timers inside) so invariants are
 //! proptest-able; the server drives it with `poll(now)`.
@@ -40,6 +43,8 @@ struct Lane {
     q: VecDeque<(WorkItem, Instant)>,
 }
 
+/// The multi-lane queue: items accumulate per lane until a lane fills
+/// (`max_batch`) or its head item's deadline (`max_wait`) expires.
 #[derive(Debug)]
 pub struct Batcher {
     lanes: Vec<Lane>,
@@ -51,19 +56,24 @@ pub struct Batcher {
 }
 
 impl Batcher {
+    /// An empty batcher: `max_batch` items per flush, `max_wait` head
+    /// deadline, `capacity` total queued items across lanes.
     pub fn new(max_batch: usize, max_wait: Duration, capacity: usize) -> Self {
         assert!(max_batch >= 1);
         Self { lanes: Vec::new(), max_batch, max_wait, capacity, len: 0, bytes_flushed: 0 }
     }
 
+    /// Items queued across all lanes.
     pub fn len(&self) -> usize {
         self.len
     }
 
+    /// Whether no items are queued in any lane.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
 
+    /// The per-flush item cap this batcher was built with.
     pub fn max_batch(&self) -> usize {
         self.max_batch
     }
@@ -190,7 +200,14 @@ mod tests {
     }
 
     fn step(id: u64, session: u64, d: usize) -> DecodeStep {
-        DecodeStep { id, session, q: vec![0.0; d], k: vec![0.0; d], v: vec![0.0; d] }
+        DecodeStep {
+            id,
+            session,
+            q: vec![0.0; d],
+            k: vec![0.0; d],
+            v: vec![0.0; d],
+            table_pages: 0,
+        }
     }
 
     #[test]
@@ -265,9 +282,10 @@ mod tests {
     }
 
     /// Decode steps ride their own lane and their queue payload is
-    /// O(d) per step — a fixed 3·d·4 bytes, with no dependence on the
-    /// session's context length (the cached K/V never enters the
-    /// queue). Guards against regressing to prefill-style resends.
+    /// O(d) per step — a fixed 3·d·4 bytes for a contiguous-cache
+    /// session, with no dependence on the session's context length (the
+    /// cached K/V never enters the queue). Guards against regressing to
+    /// prefill-style resends.
     #[test]
     fn decode_lane_payload_is_constant_per_step() {
         let d = 64;
@@ -285,6 +303,28 @@ mod tests {
         b.push(req(9, 1024), "a", 1024, t).unwrap();
         let prefill = b.poll(t + Duration::from_secs(200)).unwrap();
         assert!(prefill.payload_bytes > 100 * batch.payload_bytes);
+    }
+
+    /// The accounting bugfix: a paged session's step costs its rows
+    /// PLUS 8 bytes per page-table entry, so admission budgeting sees
+    /// the table walk — while the total still has no O(n·d) term (a
+    /// long context at page_tokens=128 stamps a few dozen entries, not
+    /// thousands of rows).
+    #[test]
+    fn decode_lane_payload_counts_page_table_bytes() {
+        let d = 64;
+        let mut b = Batcher::new(2, Duration::from_secs(100), 100);
+        let t = Instant::now();
+        // a 6144-token context at page_tokens=128: 48 table entries
+        let paged = DecodeStep { table_pages: 48, ..step(1, 1, d) };
+        b.push(paged, "decode:flash_moba", 1, t).unwrap();
+        b.push(step(2, 2, d), "decode:flash_moba", 1, t).unwrap();
+        let batch = b.poll(t).unwrap();
+        let rows = (3 * d * 4) as u64;
+        assert_eq!(batch.payload_bytes, (rows + 48 * 8) + rows);
+        // the table term is bounded by pages, not context: even here it
+        // is a rounding error next to one prefill resend of that context
+        assert!((48 * 8) < 6144 * d * 4 / 100);
     }
 
     /// The starvation scenario the poll-order fix closes: a capacity-1

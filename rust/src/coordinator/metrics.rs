@@ -32,6 +32,28 @@ pub struct Metrics {
     /// (planned-`Dense` heads don't count — only probe fallbacks do);
     /// the rate against served requests is the plan-health signal
     pub fallback_heads: AtomicU64,
+    /// pages the shared KV pool has allocated over its lifetime (gauge
+    /// mirrored from `PagePool::pages_allocated` after each loop turn;
+    /// forked prefixes that share pages do NOT count — that difference
+    /// is what the prefix-sharing tests assert on)
+    pub pages_allocated: AtomicU64,
+    /// pages currently live in the pool (gauge from `PoolStats`)
+    pub pages_live: AtomicU64,
+    /// page-table entries acquired by sharing an existing page (session
+    /// forks) instead of allocating — the numerator of
+    /// [`Metrics::prefix_hit_rate`]
+    pub prefix_hits: AtomicU64,
+    /// copy-on-write page splits (first divergent write to a shared
+    /// partial page; gauge from `PoolStats`)
+    pub cow_splits: AtomicU64,
+    /// sessions preempted by the admission rule: cache evicted, pages
+    /// returned, swap log retained for replay
+    pub preemptions: AtomicU64,
+    /// evicted sessions re-prefilled from their swap log on next touch
+    pub restores: AtomicU64,
+    /// admissions that could not proceed (no evictable victim) and were
+    /// parked FIFO instead
+    pub admits_deferred: AtomicU64,
     hist: Mutex<Histo>,
 }
 
@@ -108,10 +130,25 @@ impl Metrics {
         }
     }
 
+    /// Fraction of page-table entries satisfied by sharing an existing
+    /// page (fork prefix hits) rather than allocating a new one:
+    /// `prefix_hits / (prefix_hits + pages_allocated)`. 0.0 when no
+    /// pages have moved at all.
+    pub fn prefix_hit_rate(&self) -> f64 {
+        let hits = self.prefix_hits.load(Ordering::Relaxed);
+        let total = hits + self.pages_allocated.load(Ordering::Relaxed);
+        if total == 0 {
+            0.0
+        } else {
+            hits as f64 / total as f64
+        }
+    }
+
     pub fn summary(&self) -> String {
         format!(
             "req={} resp={} rejected={} batches={} occupancy={:.2} \
              sessions={} decode_steps={} decode_batches={} fallback_heads={} \
+             pages={}/{} prefix_hit={:.2} cow_splits={} preempt={} restore={} deferred={} \
              mean_lat={:.2}ms p95<={:.1}ms",
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
@@ -122,6 +159,13 @@ impl Metrics {
             self.decode_steps.load(Ordering::Relaxed),
             self.decode_batches.load(Ordering::Relaxed),
             self.fallback_heads.load(Ordering::Relaxed),
+            self.pages_live.load(Ordering::Relaxed),
+            self.pages_allocated.load(Ordering::Relaxed),
+            self.prefix_hit_rate(),
+            self.cow_splits.load(Ordering::Relaxed),
+            self.preemptions.load(Ordering::Relaxed),
+            self.restores.load(Ordering::Relaxed),
+            self.admits_deferred.load(Ordering::Relaxed),
             self.mean_latency_s() * 1e3,
             self.latency_quantile_s(0.95) * 1e3,
         )
@@ -187,5 +231,26 @@ mod tests {
         m.fallback_heads.fetch_add(3, Ordering::Relaxed);
         m.fallback_heads.fetch_add(2, Ordering::Relaxed);
         assert!(m.summary().contains("fallback_heads=5"));
+    }
+
+    #[test]
+    fn prefix_hit_rate_and_paging_summary() {
+        let m = Metrics::new();
+        assert_eq!(m.prefix_hit_rate(), 0.0); // no traffic: defined as 0
+        m.pages_allocated.store(6, Ordering::Relaxed);
+        m.pages_live.store(4, Ordering::Relaxed);
+        m.prefix_hits.store(2, Ordering::Relaxed);
+        m.cow_splits.store(1, Ordering::Relaxed);
+        m.preemptions.store(3, Ordering::Relaxed);
+        m.restores.store(2, Ordering::Relaxed);
+        m.admits_deferred.store(1, Ordering::Relaxed);
+        assert_eq!(m.prefix_hit_rate(), 0.25); // 2 / (2 + 6)
+        let s = m.summary();
+        assert!(s.contains("pages=4/6"), "{s}");
+        assert!(s.contains("prefix_hit=0.25"), "{s}");
+        assert!(s.contains("cow_splits=1"), "{s}");
+        assert!(s.contains("preempt=3"), "{s}");
+        assert!(s.contains("restore=2"), "{s}");
+        assert!(s.contains("deferred=1"), "{s}");
     }
 }

@@ -18,8 +18,13 @@
 //!   multi-head requests bounded only by `max_batch`. Flushed on
 //!   capacity or deadline (max-wait). Decode steps batch in their own
 //!   lanes, carrying O(h·d) payload per step.
+//! * [`scheduler`] — deterministic LRU residency tracking behind the
+//!   continuous-batching admission rule: prefills are admitted into
+//!   running decode waves while their page cost fits the pool budget,
+//!   else coldest sessions are preempted (evict + swap-log replay on
+//!   next touch) and the work is parked FIFO.
 //! * [`metrics`] — counters + latency histogram (incl. session/decode
-//!   counters).
+//!   and paging counters).
 //! * [`server`] — the event loop tying it together; in-process
 //!   `submit()` prefill API plus the decode session API
 //!   (`session_create` / `decode` / `session_free`) used by examples,
@@ -29,10 +34,12 @@ pub mod batcher;
 pub mod metrics;
 pub mod request;
 pub mod router;
+pub mod scheduler;
 pub mod server;
 
 pub use batcher::{Batch, Batcher};
 pub use metrics::Metrics;
 pub use request::{AttnKind, AttnRequest, AttnResponse, DecodeStep, WorkItem};
 pub use router::Router;
+pub use scheduler::PageScheduler;
 pub use server::{Coordinator, Ticket, DECODE_ID_BASE};

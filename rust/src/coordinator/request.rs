@@ -83,9 +83,10 @@ impl AttnRequest {
 /// One autoregressive decode step for an open session: append the
 /// packed `(h_kv, d)` (k, v) rows to the session's KV cache, then
 /// attend the packed `(h, d)` query over it — all heads in one step.
-/// Carries only the new token's rows — the cached context stays in the
-/// worker's session table, so queueing a step moves O((h + 2·h_kv)·d)
-/// bytes regardless of how long the session's context already is (the
+/// Carries only the new token's rows plus the session's page-table
+/// entries — the cached context itself stays in the worker's session
+/// table, so queueing a step moves O((h + 2·h_kv)·d + table) bytes, a
+/// slowly growing table term but never the O(n·d) context (the
 /// regression suite pins this via [`WorkItem::payload_bytes`]).
 #[derive(Debug, Clone)]
 pub struct DecodeStep {
@@ -96,6 +97,11 @@ pub struct DecodeStep {
     pub q: Vec<f32>,
     pub k: Vec<f32>,
     pub v: Vec<f32>,
+    /// Page-table entries the session's paged cache held when this step
+    /// was enqueued (0 for a contiguous cache) — stamped by the worker
+    /// so queue-cost accounting sees the per-step table walk a paged
+    /// read incurs, not just the token rows.
+    pub table_pages: usize,
 }
 
 impl DecodeStep {
@@ -110,10 +116,14 @@ impl DecodeStep {
             && self.v.len() == h_kv * d
     }
 
-    /// Tensor payload bytes this step carries: O((h + 2·h_kv)·d), the
-    /// invariant the no-copy regression tests pin.
+    /// Bytes this step moves through the queue, layout-aware: the
+    /// O((h + 2·h_kv)·d) token rows plus 8 bytes per page-table entry
+    /// (a u64 page id each) for paged sessions. The table term is what
+    /// admission budgeting would undercount if payload accounting only
+    /// saw the rows; it grows with context as O(n / page_tokens), still
+    /// never O(n·d).
     pub fn payload_bytes(&self) -> u64 {
-        (self.q.len() + self.k.len() + self.v.len()) as u64 * 4
+        (self.q.len() + self.k.len() + self.v.len()) as u64 * 4 + self.table_pages as u64 * 8
     }
 }
 
@@ -266,12 +276,17 @@ mod tests {
             q: vec![0.0; 4],
             k: vec![0.0; 4],
             v: vec![0.0; 4],
+            table_pages: 0,
         };
         assert!(step.validate(1, 1, 4));
         assert!(!step.validate(1, 1, 8));
         assert!(!step.validate(1, 1, 0));
         let short = DecodeStep { k: vec![0.0; 3], ..step.clone() };
         assert!(!short.validate(1, 1, 4));
+        // the table stamp is accounting metadata, not shape: validation
+        // is indifferent to it
+        let stamped = DecodeStep { table_pages: 9, ..step.clone() };
+        assert!(stamped.validate(1, 1, 4));
         // GQA step: q carries h rows, k/v carry h_kv rows
         let d = 4;
         let gqa = DecodeStep {
@@ -280,6 +295,7 @@ mod tests {
             q: vec![0.0; 4 * d],
             k: vec![0.0; 2 * d],
             v: vec![0.0; 2 * d],
+            table_pages: 0,
         };
         assert!(gqa.validate(4, 2, d));
         assert!(!gqa.validate(4, 4, d));
@@ -309,10 +325,34 @@ mod tests {
             q: vec![0.0; h * d],
             k: vec![0.0; h_kv * d],
             v: vec![0.0; h_kv * d],
+            table_pages: 0,
         });
         assert_eq!(prefill.payload_bytes(), ((h + 2 * h_kv) * n * d * 4) as u64);
         assert_eq!(decode.payload_bytes(), ((h + 2 * h_kv) * d * 4) as u64);
         assert_eq!(prefill.id(), 1);
         assert_eq!(decode.id(), 2);
+    }
+
+    /// The accounting bugfix this suite pins: a paged session's decode
+    /// step costs its token rows PLUS its page-table walk — 8 bytes per
+    /// entry — so admission budgeting sees true queue cost. A
+    /// contiguous-cache step (table_pages = 0) is unchanged.
+    #[test]
+    fn decode_payload_accounting_is_layout_aware() {
+        let d = 64;
+        let (h, h_kv) = (4, 2);
+        let rows = ((h + 2 * h_kv) * d * 4) as u64;
+        let mut step = DecodeStep {
+            id: 3,
+            session: 1,
+            q: vec![0.0; h * d],
+            k: vec![0.0; h_kv * d],
+            v: vec![0.0; h_kv * d],
+            table_pages: 0,
+        };
+        assert_eq!(step.payload_bytes(), rows);
+        step.table_pages = 48; // e.g. 2 KV heads × 24 blocks resident
+        assert_eq!(step.payload_bytes(), rows + 48 * 8);
+        assert_eq!(WorkItem::from(step).payload_bytes(), rows + 48 * 8);
     }
 }

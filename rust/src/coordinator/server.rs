@@ -14,13 +14,33 @@
 //!   every head — the kernels iterate heads internally, so the server
 //!   has no head loop.
 //! * **Decode** — autoregressive sessions: `session_create` opens a
-//!   per-session block KV cache (one store per KV head) in the worker
+//!   *paged* block KV cache (one page table per KV head, pages owned by
+//!   the worker's shared [`PagePool`]) in the worker
 //!   ([`crate::attention::decode::DecodeSession`]), each
 //!   [`Coordinator::decode`] step ships only the new token's packed
 //!   `(h, d)` / `(h_kv, d)` rows through a dedicated batcher lane (the
 //!   cached context never travels through the queue), and `session_free`
 //!   drops the cache. Steps for one session execute in submission order
-//!   (FIFO within the lane).
+//!   (FIFO within the lane). [`Coordinator::session_fork`] opens a new
+//!   session sharing the parent's cache pages copy-on-write (common
+//!   prompt prefixes cost no new pages until they diverge), and
+//!   [`Coordinator::session_prefill`] bulk-appends a prompt's packed
+//!   `(h_kv, n, d)` K/V through the same admission path.
+//!
+//! **Continuous batching**: when `ServeParams::max_pages` bounds the
+//! pool, cache growth goes through an admission rule instead of
+//! allocating unchecked. Work whose page cost fits the remaining budget
+//! is admitted into the running decode waves; otherwise the scheduler
+//! preempts the coldest sessions (LRU, deterministic tie-break) that
+//! have no steps in flight — their caches are evicted, pages
+//! returned — and if no victim can make room the work is *parked* FIFO
+//! and retried head-only after every loop turn (strict arrival order;
+//! the head never loses its place to a smaller request). Every executed
+//! append is recorded in a per-session swap log, so a preempted session
+//! restores on next touch by replaying its log — bit-identical to never
+//! having been evicted (the paging parity suite pins this). With an
+//! unbounded pool (the default) the admission rule, swap logging and
+//! preemption are all inert.
 //!
 //! Two execution paths behind one loop:
 //!
@@ -52,7 +72,7 @@
 //!   threshold degrade to dense per request/step (counted by
 //!   `Metrics::fallback_heads`).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
@@ -67,12 +87,14 @@ use super::request::{
     AttnKind, AttnRequest, AttnResponse, DecodeStep, QueueStamp, WorkItem,
 };
 use super::router::{effective_plan, load_route_plan, Router};
+use super::scheduler::PageScheduler;
 #[allow(unused_imports)]
 use crate::attention::backend::AttentionBackend;
 use crate::attention::backend::BackendRegistry;
 use crate::attention::decode::DecodeSession;
+use crate::attention::paged::PagePool;
 use crate::attention::plan::RoutePlan;
-use crate::attention::AttnShape;
+use crate::attention::{packed_rows, AttnShape};
 use crate::config::ServeParams;
 use crate::runtime::{Runtime, Tensor};
 use crate::util::pool::{partition, ExecCtx};
@@ -98,6 +120,16 @@ enum Envelope {
     Req(AttnRequest, SyncSender<Result<AttnResponse>>),
     Decode(DecodeStep, SyncSender<Result<AttnResponse>>),
     SessionCreate(SessionSpec, SyncSender<Result<u64>>),
+    /// open a copy-on-write fork of an existing session's cache
+    SessionFork(u64, SyncSender<Result<u64>>),
+    /// bulk-append a prompt's packed `(h_kv, n, d)` K/V to a session
+    SessionPrefill {
+        session: u64,
+        n: usize,
+        k: Vec<f32>,
+        v: Vec<f32>,
+        tx: SyncSender<Result<usize>>,
+    },
     SessionFree(u64, SyncSender<Result<()>>),
     Shutdown,
 }
@@ -114,6 +146,20 @@ pub struct Ticket(Receiver<Result<AttnResponse>>);
 impl Ticket {
     /// Block until the response arrives.
     pub fn wait(self) -> Result<AttnResponse> {
+        self.0.recv().map_err(|_| anyhow!("coordinator dropped the request"))?
+    }
+}
+
+/// A pending session-prefill ticket; resolves to the session's context
+/// length after the append. Prefills go through the page-budget
+/// admission path and may be parked behind preemptions, so callers
+/// driving several sessions should collect tickets and join later
+/// rather than block one at a time.
+pub struct PrefillTicket(Receiver<Result<usize>>);
+
+impl PrefillTicket {
+    /// Block until the prefill has been admitted and executed.
+    pub fn wait(self) -> Result<usize> {
         self.0.recv().map_err(|_| anyhow!("coordinator dropped the request"))?
     }
 }
@@ -267,7 +313,9 @@ impl Coordinator {
         v: Vec<f32>,
     ) -> Result<Ticket> {
         let id = self.next_decode_id.fetch_add(1, Ordering::Relaxed);
-        let step = DecodeStep { id, session, q, k, v };
+        // table_pages is stamped by the worker at enqueue time — only it
+        // knows the session's current page-table size
+        let step = DecodeStep { id, session, q, k, v, table_pages: 0 };
         if step.q.is_empty() || step.k.is_empty() || step.k.len() != step.v.len() {
             return Err(anyhow!(
                 "decode step {id}: q and k must be non-empty and k/v equal-length"
@@ -290,6 +338,59 @@ impl Coordinator {
         v: Vec<f32>,
     ) -> Result<AttnResponse> {
         self.decode_async(session, q, k, v)?.wait()
+    }
+
+    /// Open a new decode session sharing `session`'s cache pages
+    /// copy-on-write: the fork costs zero new pages until one side
+    /// appends past the shared prefix, at which point only the divergent
+    /// tail page is copied. Forking a currently-preempted session is
+    /// fine — the child inherits the swap log and restores independently
+    /// on first touch. Returns the child's session handle; both sessions
+    /// decode bit-identically to independent sessions fed the same
+    /// histories.
+    pub fn session_fork(&self, session: u64) -> Result<u64> {
+        let (otx, orx) = sync_channel(1);
+        self.tx
+            .send(Envelope::SessionFork(session, otx))
+            .map_err(|_| anyhow!("coordinator is down"))?;
+        orx.recv().map_err(|_| anyhow!("coordinator dropped the request"))?
+    }
+
+    /// Bulk-append a prompt's K/V to a session's cache without blocking:
+    /// `k`/`v` are packed `(h_kv, n, d)` (the [`AttnRequest`] layout).
+    /// Goes through the page-budget admission path — under page pressure
+    /// the prefill may preempt colder sessions or be parked FIFO until
+    /// pages free up. The ticket resolves to the session's context
+    /// length after the append.
+    pub fn session_prefill_async(
+        &self,
+        session: u64,
+        n: usize,
+        k: Vec<f32>,
+        v: Vec<f32>,
+    ) -> Result<PrefillTicket> {
+        if n == 0 || k.is_empty() || k.len() != v.len() {
+            return Err(anyhow!(
+                "session_prefill: n must be > 0 and k/v non-empty equal-length"
+            ));
+        }
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        let (otx, orx) = sync_channel(1);
+        self.tx
+            .send(Envelope::SessionPrefill { session, n, k, v, tx: otx })
+            .map_err(|_| anyhow!("coordinator is down"))?;
+        Ok(PrefillTicket(orx))
+    }
+
+    /// [`Coordinator::session_prefill_async`], blocking for the result.
+    pub fn session_prefill(
+        &self,
+        session: u64,
+        n: usize,
+        k: Vec<f32>,
+        v: Vec<f32>,
+    ) -> Result<usize> {
+        self.session_prefill_async(session, n, k, v)?.wait()
     }
 
     /// Drop a session's KV cache. Steps already queued for it will be
@@ -325,6 +426,358 @@ type Pending = Vec<(u64, SyncSender<Result<AttnResponse>>)>;
 /// Open decode sessions: handle -> (backend target, session state).
 type Sessions = HashMap<u64, (String, DecodeSession)>;
 
+/// Work waiting for page-budget admission, parked in arrival order.
+enum SessionWork {
+    Step(DecodeStep),
+    Prefill {
+        n: usize,
+        k: Vec<f32>,
+        v: Vec<f32>,
+        tx: SyncSender<Result<usize>>,
+    },
+}
+
+impl SessionWork {
+    /// Tokens this work would append (the admission cost driver).
+    fn tokens(&self) -> usize {
+        match self {
+            SessionWork::Step(_) => 1,
+            SessionWork::Prefill { n, .. } => *n,
+        }
+    }
+}
+
+/// Per-session continuous-batching state, parallel to [`Sessions`] (kept
+/// separate so decode waves can pull `DecodeSession`s out of the table
+/// while this bookkeeping stays put).
+#[derive(Default)]
+struct SessState {
+    /// decode steps currently in the batcher (the session is protected
+    /// from preemption while > 0 — queued steps execute against the
+    /// live cache)
+    queued_steps: usize,
+    /// preempted: cache evicted, pages returned, swap log pending replay
+    evicted: bool,
+    /// swap log — every executed append's packed `(h_kv, d)` rows in
+    /// order (kept only under a finite page budget); replaying it
+    /// rebuilds the cache bit for bit
+    log_k: Vec<f32>,
+    log_v: Vec<f32>,
+    /// work parked behind admission, drained strictly in order
+    parked: VecDeque<SessionWork>,
+}
+
+/// The worker's continuous-batching machinery: the shared page pool, the
+/// LRU residency scheduler, per-session scheduling state, and the FIFO
+/// of sessions with parked work awaiting admission.
+struct PagingCtl {
+    pool: PagePool,
+    scheduler: PageScheduler,
+    state: HashMap<u64, SessState>,
+    admit_fifo: VecDeque<u64>,
+    /// record swap logs (exactly when the budget is finite — an
+    /// unbounded pool never evicts, so logging would be pure overhead)
+    log_swaps: bool,
+}
+
+impl PagingCtl {
+    fn new(params: &ServeParams, serve_plan: &Option<RoutePlan>) -> Self {
+        // the page must hold the largest block any serving plan can ask
+        // for; the configured page_tokens is a floor request on top
+        let mut page_tokens = params.moba_block.max(1);
+        if let Some(p) = serve_plan {
+            for hp in &p.heads {
+                page_tokens = page_tokens.max(hp.block);
+            }
+        }
+        page_tokens = page_tokens.max(params.page_tokens);
+        let budget = (params.max_pages > 0).then_some(params.max_pages);
+        Self {
+            pool: PagePool::new(page_tokens, budget),
+            scheduler: PageScheduler::new(),
+            state: HashMap::new(),
+            admit_fifo: VecDeque::new(),
+            log_swaps: budget.is_some(),
+        }
+    }
+
+    /// Copy the pool counters into the served metrics (gauges).
+    fn sync_metrics(&self, metrics: &Metrics) {
+        let st = self.pool.stats();
+        metrics.pages_allocated.store(st.allocated, Ordering::Relaxed);
+        metrics.pages_live.store(st.live as u64, Ordering::Relaxed);
+        metrics.cow_splits.store(st.cow_splits, Ordering::Relaxed);
+        metrics.prefix_hits.store(st.prefix_shared, Ordering::Relaxed);
+    }
+}
+
+/// Make room for `cost` pages: preempt coldest-first victims until the
+/// budget fits. Protected (never evicted): the session being admitted
+/// and sessions with steps in the batcher (those steps execute against
+/// the live cache). A session with *parked* work is fair game — its
+/// restore cost is recomputed when its FIFO turn comes, so evicting it
+/// is safe, and protecting it would deadlock two parked sessions
+/// against each other. Returns false when every resident session is
+/// protected and the budget still doesn't fit — the caller parks the
+/// work instead of spinning. Terminates because each round removes one
+/// scheduler entry.
+fn try_admit(
+    cost: usize,
+    admitting: u64,
+    sessions: &mut Sessions,
+    ctl: &mut PagingCtl,
+    metrics: &Metrics,
+) -> bool {
+    while !ctl.pool.would_fit(cost) {
+        let victim = ctl.scheduler.victim(|vid| {
+            vid == admitting
+                || ctl.state.get(&vid).map_or(true, |st| st.queued_steps > 0)
+        });
+        let Some((vid, _)) = victim else {
+            return false;
+        };
+        ctl.scheduler.remove(vid);
+        if let Some((_, sess)) = sessions.get_mut(&vid) {
+            sess.evict();
+        }
+        if let Some(st) = ctl.state.get_mut(&vid) {
+            st.evicted = true;
+        }
+        metrics.preemptions.fetch_add(1, Ordering::Relaxed);
+    }
+    true
+}
+
+/// Park work for `sid` behind admission, keeping strict arrival order.
+fn park_work(ctl: &mut PagingCtl, sid: u64, work: SessionWork, metrics: &Metrics) {
+    ctl.state.entry(sid).or_default().parked.push_back(work);
+    if !ctl.admit_fifo.contains(&sid) {
+        ctl.admit_fifo.push_back(sid);
+        metrics.admits_deferred.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Stamp an admitted step's page-table size and hand it to the batcher's
+/// decode lane. The stamp is what makes queue payload accounting
+/// layout-aware ([`DecodeStep::payload_bytes`]).
+fn enqueue_step(
+    mut step: DecodeStep,
+    sessions: &Sessions,
+    ctl: &mut PagingCtl,
+    batcher: &mut Batcher,
+    pending: &mut Pending,
+    metrics: &Metrics,
+) {
+    let sid = step.session;
+    let id = step.id;
+    let Some((target, sess)) = sessions.get(&sid) else {
+        metrics.rejected.fetch_add(1, Ordering::Relaxed);
+        respond(pending, id, Err(anyhow!("decode session {sid} was freed")));
+        return;
+    };
+    step.table_pages = sess.total_pages();
+    let lane = format!("decode:{target}");
+    if batcher.push(step, &lane, 1, Instant::now()).is_err() {
+        metrics.rejected.fetch_add(1, Ordering::Relaxed);
+        respond(pending, id, Err(anyhow!("queue full")));
+        return;
+    }
+    ctl.state.entry(sid).or_default().queued_steps += 1;
+    ctl.scheduler.touch(sid);
+}
+
+/// Route a validated decode step through admission: park it if the
+/// session is preempted or already has parked work (order!), otherwise
+/// make room for its append and enqueue it.
+fn admit_step(
+    step: DecodeStep,
+    sessions: &mut Sessions,
+    ctl: &mut PagingCtl,
+    batcher: &mut Batcher,
+    pending: &mut Pending,
+    metrics: &Metrics,
+) {
+    let sid = step.session;
+    let blocked = ctl
+        .state
+        .get(&sid)
+        .is_some_and(|st| st.evicted || !st.parked.is_empty());
+    let cost = sessions
+        .get(&sid)
+        .map_or(0, |(_, sess)| sess.cache().append_page_cost(1));
+    if blocked || !try_admit(cost, sid, sessions, ctl, metrics) {
+        park_work(ctl, sid, SessionWork::Step(step), metrics);
+        return;
+    }
+    enqueue_step(step, sessions, ctl, batcher, pending, metrics);
+}
+
+/// Append a prompt's packed `(h_kv, n, d)` K/V to an admitted session,
+/// token by token (identical arithmetic to decoding the same tokens one
+/// step at a time), recording the swap log when enabled. Returns the
+/// context length after the append.
+fn execute_prefill(
+    sess: &mut DecodeSession,
+    st: &mut SessState,
+    log: bool,
+    n: usize,
+    k: &[f32],
+    v: &[f32],
+) -> usize {
+    let (h_kv, d) = (sess.h_kv(), sess.d());
+    for t in 0..n {
+        let kt = packed_rows(k, h_kv, n, d, t);
+        let vt = packed_rows(v, h_kv, n, d, t);
+        sess.append(&kt, &vt);
+        if log {
+            st.log_k.extend_from_slice(&kt);
+            st.log_v.extend_from_slice(&vt);
+        }
+    }
+    sess.len()
+}
+
+/// Replay an evicted session's swap log, rebuilding its cache bit for
+/// bit (pages re-allocated, kconv streams re-driven).
+fn restore_session(sess: &mut DecodeSession, st: &mut SessState, metrics: &Metrics) {
+    let roww = sess.h_kv() * sess.d();
+    let tokens = st.log_k.len() / roww.max(1);
+    for t in 0..tokens {
+        sess.append(&st.log_k[t * roww..(t + 1) * roww], &st.log_v[t * roww..(t + 1) * roww]);
+    }
+    st.evicted = false;
+    metrics.restores.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Retry the parked-work FIFO, strictly head-only: the head session is
+/// restored (swap-log replay) and its parked work released in order; if
+/// its cost still doesn't fit after preempting every evictable victim,
+/// the whole queue waits (no smaller request ever jumps the line).
+/// Called after every loop turn — any state change that could unblock
+/// admission (an executed batch, a freed session, an arriving message)
+/// happens within a turn, so no wake-up is ever missed.
+fn drain_admissions(
+    sessions: &mut Sessions,
+    ctl: &mut PagingCtl,
+    batcher: &mut Batcher,
+    pending: &mut Pending,
+    metrics: &Metrics,
+) {
+    while let Some(&sid) = ctl.admit_fifo.front() {
+        if !sessions.contains_key(&sid) {
+            ctl.admit_fifo.pop_front(); // freed while parked
+            continue;
+        }
+        // cost of everything the session needs: the swap-log replay (if
+        // preempted) plus every parked append. `footprint` is the
+        // session's total page need — resident pages included — the
+        // can-this-ever-fit bound even with every other session evicted
+        let (cost, footprint, evicted) = {
+            let (_, sess) = sessions.get(&sid).expect("checked above");
+            let st = ctl.state.entry(sid).or_default();
+            let parked_tokens: usize = st.parked.iter().map(|w| w.tokens()).sum();
+            let roww = (sess.h_kv() * sess.d()).max(1);
+            if st.evicted {
+                let log_tokens = st.log_k.len() / roww;
+                let need = sess.cache().pages_for(log_tokens + parked_tokens);
+                (need, need, true)
+            } else {
+                let need = sess.cache().append_page_cost(parked_tokens);
+                (need, sess.total_pages() + need, false)
+            }
+        };
+        if let Some(m) = ctl.pool.max_pages() {
+            if footprint > m {
+                // can never fit, not even with every other session
+                // evicted: fail the parked work loudly instead of
+                // livelocking the queue (a live session holding the
+                // whole budget is its own unevictable blocker)
+                let st = ctl.state.entry(sid).or_default();
+                for work in st.parked.drain(..) {
+                    let err = || {
+                        anyhow!(
+                            "session {sid} needs {footprint} pages; the pool budget is {m}"
+                        )
+                    };
+                    match work {
+                        SessionWork::Step(s) => {
+                            metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                            respond(pending, s.id, Err(err()));
+                        }
+                        SessionWork::Prefill { tx, .. } => {
+                            metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                            let _ = tx.send(Err(err()));
+                        }
+                    }
+                }
+                ctl.admit_fifo.pop_front();
+                continue;
+            }
+        }
+        if !try_admit(cost, sid, sessions, ctl, metrics) {
+            break; // strict FIFO: the head blocks until pages free up
+        }
+        if evicted {
+            let (_, sess) = sessions.get_mut(&sid).expect("checked above");
+            let st = ctl.state.get_mut(&sid).expect("entry ensured above");
+            restore_session(sess, st, metrics);
+        }
+        // release parked work in arrival order; a prefill queued behind
+        // steps waits for those steps to execute first (they append to
+        // the cache ahead of it)
+        loop {
+            enum Next {
+                Step,
+                PrefillReady,
+                Blocked,
+                Empty,
+            }
+            let next = {
+                let st = ctl.state.get(&sid).expect("entry ensured above");
+                match st.parked.front() {
+                    None => Next::Empty,
+                    Some(SessionWork::Step(_)) => Next::Step,
+                    Some(SessionWork::Prefill { .. }) if st.queued_steps == 0 => {
+                        Next::PrefillReady
+                    }
+                    Some(SessionWork::Prefill { .. }) => Next::Blocked,
+                }
+            };
+            match next {
+                Next::Empty | Next::Blocked => break,
+                Next::Step => {
+                    let Some(SessionWork::Step(step)) =
+                        ctl.state.get_mut(&sid).unwrap().parked.pop_front()
+                    else {
+                        unreachable!("peeked a step")
+                    };
+                    enqueue_step(step, sessions, ctl, batcher, pending, metrics);
+                }
+                Next::PrefillReady => {
+                    let Some(SessionWork::Prefill { n, k, v, tx }) =
+                        ctl.state.get_mut(&sid).unwrap().parked.pop_front()
+                    else {
+                        unreachable!("peeked a prefill")
+                    };
+                    let log = ctl.log_swaps;
+                    let (_, sess) = sessions.get_mut(&sid).expect("checked above");
+                    let st = ctl.state.get_mut(&sid).expect("entry ensured above");
+                    let len = execute_prefill(sess, st, log, n, &k, &v);
+                    let _ = tx.send(Ok(len));
+                }
+            }
+        }
+        let (_, sess) = sessions.get(&sid).expect("checked above");
+        ctl.scheduler.note_resident(sid, sess.total_pages());
+        let st = ctl.state.get(&sid).expect("entry ensured above");
+        if st.parked.is_empty() {
+            ctl.admit_fifo.pop_front();
+        } else {
+            break; // prefill still blocked behind queued steps
+        }
+    }
+}
+
 fn worker_loop(
     exec: Exec,
     router: Router,
@@ -341,6 +794,8 @@ fn worker_loop(
     let mut pending: Pending = Vec::new();
     let mut sessions: Sessions = HashMap::new();
     let mut next_session: u64 = 1;
+    // the paged-KV machinery: shared pool, LRU residency, parked work
+    let mut ctl = PagingCtl::new(&params, &serve_plan);
     // one worker pool for the whole serving path (MOBA_THREADS budget):
     // single-item batches parallelize inside the kernel, multi-item
     // batches fan items across it — bit-identical either way
@@ -433,15 +888,21 @@ fn worker_loop(
                             sess.d()
                         )));
                     }
-                    Some((target, _)) => {
-                        // one lane per backend target: decode steps
-                        // batch with each other, never with prefill
-                        let lane = format!("decode:{target}");
+                    Some(_) => {
+                        // through the page-budget admission path: the
+                        // step lands in its target's decode lane (one
+                        // lane per backend: steps batch with each
+                        // other, never with prefill) unless admission
+                        // parks it first
                         pending.push((step.id, otx));
-                        if let Err(rej) = batcher.push(step, &lane, 1, Instant::now()) {
-                            metrics.rejected.fetch_add(1, Ordering::Relaxed);
-                            respond(&mut pending, rej.id(), Err(anyhow!("queue full")));
-                        }
+                        admit_step(
+                            step,
+                            &mut sessions,
+                            &mut ctl,
+                            &mut batcher,
+                            &mut pending,
+                            &metrics,
+                        );
                     }
                 }
             }
@@ -451,48 +912,173 @@ fn worker_loop(
                         "decode sessions need the CPU substrate: the compiled \
                          PJRT kernels are prefill-only"
                     )),
-                    Exec::Cpu(_) => router.route(spec.kind, 1).and_then(|(_, target)| {
-                        let sess = match spec.kind {
-                            // MoBA sessions decode under the serving
-                            // route plan: per-KV-head (block, topk),
-                            // planned-dense heads, and the runtime
-                            // margin fallback all apply per step
-                            AttnKind::Moba => {
-                                let plan = effective_plan(&serve_plan, &params, spec.h_kv);
-                                // the session starts empty — n = 0 means
-                                // "length unknown", so only structurally
-                                // degenerate plans are rejected here
-                                // (block = 0, routed topk = 0, no heads)
-                                if let Err(e) = plan.validate(0) {
-                                    metrics.rejected.fetch_add(1, Ordering::Relaxed);
-                                    return Err(anyhow!(
-                                        "session_create: serving route plan is invalid: {e}"
-                                    ));
+                    Exec::Cpu(_) => match router.route(spec.kind, 1) {
+                        Err(e) => Err(e),
+                        Ok((_, target)) => {
+                            let sess = match spec.kind {
+                                // MoBA sessions decode under the serving
+                                // route plan: per-KV-head (block, topk),
+                                // planned-dense heads, and the runtime
+                                // margin fallback all apply per step
+                                AttnKind::Moba => {
+                                    let plan = effective_plan(&serve_plan, &params, spec.h_kv);
+                                    // the session starts empty — n = 0
+                                    // means "length unknown", so only
+                                    // structurally degenerate plans are
+                                    // rejected here (block = 0, routed
+                                    // topk = 0, no heads)
+                                    if let Err(e) = plan.validate(0) {
+                                        metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                                        Err(anyhow!(
+                                            "session_create: serving route plan is invalid: {e}"
+                                        ))
+                                    } else {
+                                        // page_tokens was derived to
+                                        // cover every serving block, so
+                                        // this can never trip the
+                                        // pool's block-size assert
+                                        Ok(DecodeSession::with_plan_paged(
+                                            spec.h, spec.h_kv, spec.d, plan, &ctl.pool,
+                                        ))
+                                    }
                                 }
-                                DecodeSession::with_plan(spec.h, spec.h_kv, spec.d, plan)
-                            }
-                            // dense decode ignores routing; the block
-                            // size only shapes cache bookkeeping
-                            AttnKind::Dense => DecodeSession::new(
-                                spec.h,
-                                spec.h_kv,
-                                spec.d,
-                                params.moba_block.max(1),
-                                0,
-                            ),
+                                // dense decode ignores routing; the block
+                                // size only shapes cache bookkeeping
+                                AttnKind::Dense => Ok(DecodeSession::new_paged(
+                                    spec.h,
+                                    spec.h_kv,
+                                    spec.d,
+                                    params.moba_block.max(1),
+                                    0,
+                                    &ctl.pool,
+                                )),
+                            };
+                            sess.map(|sess| {
+                                let id = next_session;
+                                next_session += 1;
+                                sessions.insert(id, (target.to_string(), sess));
+                                ctl.state.insert(id, SessState::default());
+                                ctl.scheduler.note_resident(id, 0);
+                                metrics.sessions_created.fetch_add(1, Ordering::Relaxed);
+                                id
+                            })
+                        }
+                    },
+                };
+                let _ = otx.send(result);
+            }
+            Some(Envelope::SessionFork(parent, otx)) => {
+                let result = match sessions.get(&parent) {
+                    None => {
+                        metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                        Err(anyhow!("session_fork of unknown session {parent}"))
+                    }
+                    Some((target, sess)) => {
+                        // the child is a point-in-time CoW share of the
+                        // parent's *executed* state (steps still queued
+                        // for the parent are not part of the prefix);
+                        // it inherits the swap log so a preempted
+                        // lineage restores independently
+                        let child = sess.fork();
+                        let target = target.clone();
+                        let pages = child.total_pages();
+                        let (log_k, log_v, evicted) = match ctl.state.get(&parent) {
+                            Some(st) => (st.log_k.clone(), st.log_v.clone(), st.evicted),
+                            None => (Vec::new(), Vec::new(), false),
                         };
                         let id = next_session;
                         next_session += 1;
-                        sessions.insert(id, (target.to_string(), sess));
+                        sessions.insert(id, (target, child));
+                        ctl.state.insert(
+                            id,
+                            SessState { evicted, log_k, log_v, ..Default::default() },
+                        );
+                        if !evicted {
+                            ctl.scheduler.note_resident(id, pages);
+                        }
                         metrics.sessions_created.fetch_add(1, Ordering::Relaxed);
                         Ok(id)
-                    }),
+                    }
                 };
                 let _ = otx.send(result);
+            }
+            Some(Envelope::SessionPrefill { session, n, k, v, tx }) => {
+                // phase 1 — validate and cost under a shared borrow
+                let decision = match sessions.get(&session) {
+                    None => Err(anyhow!("session_prefill for unknown session {session}")),
+                    Some((_, sess)) => {
+                        let roww = sess.h_kv() * sess.d();
+                        if k.len() != n * roww {
+                            Err(anyhow!(
+                                "session_prefill: k/v must be packed (h_kv={}, n={n}, d={}) \
+                                 = {} floats, got {}",
+                                sess.h_kv(),
+                                sess.d(),
+                                n * roww,
+                                k.len()
+                            ))
+                        } else {
+                            Ok(sess.cache().append_page_cost(n))
+                        }
+                    }
+                };
+                // phase 2 — admit, park, or reject
+                match decision {
+                    Err(e) => {
+                        metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                        let _ = tx.send(Err(e));
+                    }
+                    Ok(cost) => {
+                        // parked when the session is preempted, already
+                        // has parked work, or has steps in the batcher
+                        // (the prefill must append *after* them)
+                        let blocked = ctl.state.get(&session).is_some_and(|st| {
+                            st.evicted || !st.parked.is_empty() || st.queued_steps > 0
+                        });
+                        if blocked || !try_admit(cost, session, &mut sessions, &mut ctl, &metrics)
+                        {
+                            park_work(
+                                &mut ctl,
+                                session,
+                                SessionWork::Prefill { n, k, v, tx },
+                                &metrics,
+                            );
+                        } else {
+                            let log = ctl.log_swaps;
+                            let (_, sess) = sessions.get_mut(&session).expect("checked above");
+                            let st = ctl.state.entry(session).or_default();
+                            let len = execute_prefill(sess, st, log, n, &k, &v);
+                            ctl.scheduler.note_resident(session, sess.total_pages());
+                            let _ = tx.send(Ok(len));
+                        }
+                    }
+                }
             }
             Some(Envelope::SessionFree(id, otx)) => {
                 let result = match sessions.remove(&id) {
                     Some(_) => {
+                        // pages return to the pool when the removed
+                        // cache drops (unless a fork still shares them);
+                        // parked work is answered with an error, queued
+                        // steps fail at execution ("freed mid-queue")
+                        ctl.scheduler.remove(id);
+                        ctl.admit_fifo.retain(|&s| s != id);
+                        if let Some(mut st) = ctl.state.remove(&id) {
+                            for work in st.parked.drain(..) {
+                                metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                                match work {
+                                    SessionWork::Step(s) => respond(
+                                        &mut pending,
+                                        s.id,
+                                        Err(anyhow!("decode session {id} was freed")),
+                                    ),
+                                    SessionWork::Prefill { tx, .. } => {
+                                        let _ = tx
+                                            .send(Err(anyhow!("decode session {id} was freed")));
+                                    }
+                                }
+                            }
+                        }
                         metrics.sessions_freed.fetch_add(1, Ordering::Relaxed);
                         Ok(())
                     }
@@ -522,10 +1108,26 @@ fn worker_loop(
                 batch,
                 &mut pending,
                 &mut sessions,
+                &mut ctl,
                 &metrics,
             );
         }
+        // retry parked admissions (executed batches may have freed
+        // pages or drained queued steps) and publish the pool gauges —
+        // every state change that can unblock admission happens inside
+        // a loop turn, so running this here can never miss a wake-up
+        drain_admissions(&mut sessions, &mut ctl, &mut batcher, &mut pending, &metrics);
+        ctl.sync_metrics(&metrics);
         if shutdown {
+            // parked prefills carry their own reply channel; parked
+            // steps have tickets in `pending` and fail with it below
+            for st in ctl.state.values_mut() {
+                for work in st.parked.drain(..) {
+                    if let SessionWork::Prefill { tx, .. } = work {
+                        let _ = tx.send(Err(anyhow!("coordinator shut down")));
+                    }
+                }
+            }
             for (_, otx) in pending.drain(..) {
                 let _ = otx.send(Err(anyhow!("coordinator shut down")));
             }
@@ -553,12 +1155,14 @@ fn run_batch(
     batch: Batch,
     pending: &mut Pending,
     sessions: &mut Sessions,
+    ctl: &mut PagingCtl,
     metrics: &Metrics,
 ) {
     match exec {
         Exec::Pjrt(runtime) => run_batch_pjrt(runtime, router, batch, pending, metrics),
         Exec::Cpu(registry) => run_batch_cpu(
-            registry, serve_plan, params, ctx, serial_lanes, batch, pending, sessions, metrics,
+            registry, serve_plan, params, ctx, serial_lanes, batch, pending, sessions, ctl,
+            metrics,
         ),
     }
 }
@@ -592,6 +1196,7 @@ fn run_batch_cpu(
     batch: Batch,
     pending: &mut Pending,
     sessions: &mut Sessions,
+    ctl: &mut PagingCtl,
     metrics: &Metrics,
 ) {
     let occupancy = batch.items.len();
@@ -656,7 +1261,8 @@ fn run_batch_cpu(
             WorkItem::Prefill(_) => None,
         })
         .collect();
-    let decode_results = run_cpu_decode_batch(registry, ctx, sessions, &decode_steps, metrics);
+    let decode_results =
+        run_cpu_decode_batch(registry, ctx, sessions, ctl, &decode_steps, metrics);
 
     // phase 2: respond in item order
     let mut prefill_iter = prefill_results.into_iter();
@@ -734,6 +1340,7 @@ fn run_cpu_decode_batch(
     registry: &BackendRegistry,
     ctx: &ExecCtx,
     sessions: &mut Sessions,
+    ctl: &mut PagingCtl,
     steps: &[&DecodeStep],
     metrics: &Metrics,
 ) -> Vec<Result<(Vec<f32>, usize)>> {
@@ -788,6 +1395,15 @@ fn run_cpu_decode_batch(
             Some(backend) => {
                 for (sess, &slot) in wave_sessions.iter_mut().zip(&wave) {
                     sess.append(&steps[slot].k, &steps[slot].v);
+                    // swap log, recorded at EXECUTION (not enqueue):
+                    // only appends that actually landed in the cache
+                    // are replayed after an eviction
+                    if ctl.log_swaps {
+                        if let Some(st) = ctl.state.get_mut(&steps[slot].session) {
+                            st.log_k.extend_from_slice(&steps[slot].k);
+                            st.log_v.extend_from_slice(&steps[slot].v);
+                        }
+                    }
                     q.extend_from_slice(&steps[slot].q);
                 }
                 backend.forward_decode_batch_into(ctx, &mut wave_sessions, &q, &mut o);
@@ -814,9 +1430,21 @@ fn run_cpu_decode_batch(
                 }
             }
         }
-        // return the stepped sessions to the table under their ids
+        // return the stepped sessions to the table under their ids,
+        // refreshing their LRU residency (they just grew and were
+        // touched; a session with queued steps is preemption-protected,
+        // so every wave session is guaranteed resident)
         for ((id, target), sess) in meta.drain(..).zip(wave_sessions.drain(..)) {
+            ctl.scheduler.note_resident(id, sess.total_pages());
             sessions.insert(id, (target, sess));
+        }
+    }
+    // every step handed to this function leaves the batcher here —
+    // executed, failed, or freed-mid-queue — so its queued_steps
+    // protection ends now (freed sessions have no state entry: no-op)
+    for step in steps {
+        if let Some(st) = ctl.state.get_mut(&step.session) {
+            st.queued_steps = st.queued_steps.saturating_sub(1);
         }
     }
     results.into_iter().map(|r| r.expect("every decode step resolved")).collect()

@@ -13,8 +13,8 @@ use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 use flash_moba::bench_harness::{
-    decode as decode_bench, decode_batch as decode_batch_bench, figures, report, smallblock,
-    snr_harness, tables,
+    decode as decode_bench, decode_batch as decode_batch_bench, figures, report, serve_soak,
+    smallblock, snr_harness, tables,
 };
 use flash_moba::config::AppConfig;
 use flash_moba::util::json::Json;
@@ -39,8 +39,8 @@ COMMANDS:
   bench <target>               regenerate a paper table/figure:
                                table1..table6, fig2, fig3, fig4, snr,
                                parity, parity-gqa, parity-mixed, decode,
-                               decode-batch, smallblock, ablate-tiles,
-                               all
+                               decode-batch, serve-soak, smallblock,
+                               ablate-tiles, all
                                (--quick, --steps N)
                                (smallblock sweeps block 16/32/64 at
                                fixed N, flash_moba vs dense, through
@@ -51,8 +51,14 @@ COMMANDS:
                                B ∈ {1,4,16,64} sessions vs the
                                sequential loop; its B=16-vs-B=1
                                aggregate speedup is floor-gated in CI)
+                               (serve-soak soaks the paged-KV serving
+                               path: fork-shared session families on an
+                               unbounded pool vs a tight page budget;
+                               CI floors the fork prefix_hit_rate and
+                               the pressured leg's bitwise parity_ok)
                                (parity/parity-gqa/decode/decode-batch/
-                               fig3/fig4/snr/ablate-tiles need no
+                               serve-soak/fig3/fig4/snr/ablate-tiles
+                               need no
                                artifacts: they run the CPU substrate
                                through the
                                AttentionBackend registry; every target
@@ -267,6 +273,9 @@ fn bench(cfg: &AppConfig, target: &str, quick: bool) -> Result<()> {
             // batched cross-session decode: aggregate tok/s at
             // B ∈ {1,4,16,64}; floors the B=16-vs-B=1 speedup
             "decode-batch" => decode_batch_bench::run_decode_batch(cfg, quick),
+            // paged serving soak: fork sharing + page pressure; floors
+            // prefix_hit_rate and the pressured leg's bitwise parity
+            "serve-soak" => serve_soak::run_serve_soak(cfg, quick),
             "smallblock" => smallblock::run_smallblock(cfg, quick),
             "ablate-tiles" => {
                 none(figures::run_tile_ablation(cfg, if quick { 2048 } else { 8192 }))
@@ -288,9 +297,9 @@ fn bench(cfg: &AppConfig, target: &str, quick: bool) -> Result<()> {
     };
     if target == "all" {
         for t in [
-            "parity", "parity-gqa", "parity-mixed", "decode", "decode-batch", "smallblock", "snr",
-            "fig3", "fig4", "ablate-tiles", "table1", "table3", "table5", "fig2", "table2",
-            "table4", "table6",
+            "parity", "parity-gqa", "parity-mixed", "decode", "decode-batch", "serve-soak",
+            "smallblock", "snr", "fig3", "fig4", "ablate-tiles", "table1", "table3", "table5",
+            "fig2", "table2", "table4", "table6",
         ] {
             println!("\n######## bench {t} ########");
             run_and_emit(cfg, t)?;

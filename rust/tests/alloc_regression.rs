@@ -13,7 +13,12 @@
 //! * a steady-state batched `forward_decode_batch_into` over B
 //!   sessions on a serial context performs **zero** heap allocations
 //!   (per-session persistent workspaces + disjoint windows of one
-//!   reused packed output buffer).
+//!   reused packed output buffer), and
+//! * a steady-state decode step over a **paged** cache performs zero
+//!   heap allocations — routing and attention read per-block page
+//!   slices through the same accessors as the contiguous store, so
+//!   the layout swap costs nothing on the hot path (pages are only
+//!   allocated on append, outside the measured window).
 //!
 //! Parallel contexts spawn scoped threads and box per-range tasks, so
 //! the guarantee is pinned on the serial path — the per-worker arenas
@@ -25,6 +30,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use flash_moba::attention::backend::{AttentionBackend, BackendRegistry};
 use flash_moba::attention::decode::DecodeSession;
+use flash_moba::attention::paged::PagePool;
 use flash_moba::attention::testutil::qkv_packed;
 use flash_moba::attention::{packed_rows, AttnShape, ExecCtx};
 
@@ -136,6 +142,40 @@ fn steady_state_prefill_and_decode_are_allocation_free() {
     let grew = allocs() - before;
     assert_eq!(grew, 0, "trait decode lane allocated {grew} times");
     assert_eq!(out.len(), shape.h * shape.d);
+
+    // ---- paged cache: the hot step is layout-agnostic ----------------
+    // same fixed-cache step over page-backed storage: block routing and
+    // gathering read per-block page slices through the same accessors
+    // as the contiguous store, so swapping the layout costs zero
+    // allocations on the decode hot path
+    let pool = PagePool::new(shape.block, None);
+    let mut psess =
+        DecodeSession::new_paged(shape.h, shape.h_kv, shape.d, shape.block, shape.topk, &pool);
+    for t in 0..shape.n {
+        psess.append(
+            &packed_rows(&k, shape.h_kv, shape.n, shape.d, t),
+            &packed_rows(&v, shape.h_kv, shape.n, shape.d, t),
+        );
+    }
+    for (label, routed) in [("paged decode_routed", true), ("paged decode_dense", false)] {
+        for _ in 0..3 {
+            if routed {
+                psess.decode_routed_into(&qrow, &mut out);
+            } else {
+                psess.decode_dense_into(&qrow, &mut out);
+            }
+        }
+        let before = allocs();
+        for _ in 0..8 {
+            if routed {
+                psess.decode_routed_into(&qrow, &mut out);
+            } else {
+                psess.decode_dense_into(&qrow, &mut out);
+            }
+        }
+        let grew = allocs() - before;
+        assert_eq!(grew, 0, "{label}: steady-state step allocated {grew} times");
+    }
 
     // ---- batched cross-session decode -------------------------------
     // a serial-context forward_decode_batch steps every session through

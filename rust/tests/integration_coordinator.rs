@@ -446,8 +446,9 @@ fn decode_session_dense_matches_oracle() {
 
 /// Regression: a decode step moves O((h + 2·h_kv)·d) queue payload
 /// regardless of the session's context length — streaming 512 tokens
-/// through a GQA session accounts exactly 512 · (h + 2·h_kv)·d·4
-/// bytes, with no O(n·d) re-sends of the cached K/V.
+/// through a GQA session accounts the exact row bytes plus at most the
+/// page-table term (8 bytes per table entry, O(n/B) not O(n·d)), with
+/// no re-sends of the cached K/V.
 #[test]
 fn decode_steps_never_copy_the_cached_context() {
     let coord = Coordinator::start(
@@ -479,9 +480,20 @@ fn decode_steps_never_copy_the_cached_context() {
         .metrics()
         .decode_payload_bytes
         .load(std::sync::atomic::Ordering::Relaxed);
-    // exactly h + 2·h_kv d-length f32 rows per step: context length
-    // never leaks into the per-step queue traffic
-    assert_eq!(moved, (steps * (h + 2 * h_kv) * d * 4) as u64);
+    // exactly h + 2·h_kv d-length f32 rows per step, plus the paged
+    // cache's page-table stamp: at most h_kv·ceil(n/B) u64 entries per
+    // step (B = the default 128-token serving block). The table term is
+    // O(pages), bytes per step in the tens — the cached K/V itself
+    // (O(n·d), megabytes by step 512) never rides the queue.
+    let row_bytes = (steps * (h + 2 * h_kv) * d * 4) as u64;
+    let max_table_entries = (h_kv * steps.div_ceil(128)) as u64;
+    let table_bytes = steps as u64 * max_table_entries * 8;
+    assert!(moved >= row_bytes, "row payload under-accounted: {moved} < {row_bytes}");
+    assert!(
+        moved <= row_bytes + table_bytes,
+        "per-step payload grew past rows + page table ({moved} > {row_bytes} + {table_bytes}): \
+         the cached context is leaking into queue traffic"
+    );
     coord.session_free(session).unwrap();
     coord.shutdown();
 }
@@ -874,5 +886,243 @@ fn session_create_accepts_large_block_plan_on_empty_cache() {
         assert_eq!(resp.o.len(), d);
     }
     coord.session_free(session).unwrap();
+    coord.shutdown();
+}
+
+// --------------------------------------------------------------------
+// Paged-KV serving suite: copy-on-write prefix sharing, preemption
+// round trips, and admission-budget semantics through the coordinator
+// API. (The cache-level bitwise contracts live in
+// rust/tests/paged_parity.rs; these tests pin the serving layer.)
+// --------------------------------------------------------------------
+
+/// Serving params shared by the paging tests: a 16-token block keeps
+/// page pressure reachable at test sizes. `max_pages == 0` = unbounded.
+fn paging_params(max_pages: usize) -> ServeParams {
+    ServeParams {
+        max_batch: 4,
+        max_wait_ms: 1,
+        queue_capacity: 256,
+        moba_block: 16,
+        moba_topk: 2,
+        max_pages,
+        ..Default::default()
+    }
+}
+
+/// `steps` random (q, k, v) decode rows for an (h, h_kv, d) session.
+fn step_rows(
+    rng: &mut Rng,
+    steps: usize,
+    d: usize,
+) -> Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+    (0..steps)
+        .map(|_| (rng.normal_vec(d), rng.normal_vec(d), rng.normal_vec(d)))
+        .collect()
+}
+
+/// Forking a session shares its prefix pages copy-on-write: two
+/// sessions serving the same 40-token prompt through a fork allocate
+/// strictly fewer pool pages than two independent sessions prefilled
+/// twice, the fork registers prefix hits and exactly one CoW split on
+/// divergence — and every decode step stays bitwise identical to the
+/// independent pair (sharing is invisible to the math).
+#[test]
+fn forked_sessions_share_prefix_pages_through_the_coordinator() {
+    let (d, n0, steps) = (16usize, 40usize, 8usize);
+    let mut rng = Rng::new(0xF0CC);
+    let k0 = rng.normal_vec(n0 * d);
+    let v0 = rng.normal_vec(n0 * d);
+    let tail_a = step_rows(&mut rng, steps, d);
+    let tail_b = step_rows(&mut rng, steps, d);
+
+    let run = |forked: bool| {
+        let coord = Coordinator::start(no_artifacts_dir(), paging_params(0)).unwrap();
+        let sa = coord.session_create(AttnKind::Moba, 1, 1, d).unwrap();
+        assert_eq!(coord.session_prefill(sa, n0, k0.clone(), v0.clone()).unwrap(), n0);
+        let sb = if forked {
+            coord.session_fork(sa).unwrap()
+        } else {
+            let s = coord.session_create(AttnKind::Moba, 1, 1, d).unwrap();
+            assert_eq!(coord.session_prefill(s, n0, k0.clone(), v0.clone()).unwrap(), n0);
+            s
+        };
+        let (mut oa, mut ob) = (Vec::new(), Vec::new());
+        for t in 0..steps {
+            let (q, k, v) = &tail_a[t];
+            let ra = coord.decode(sa, q.clone(), k.clone(), v.clone()).unwrap();
+            assert_eq!(ra.served_n, n0 + t + 1);
+            oa.push(ra.o);
+            let (q, k, v) = &tail_b[t];
+            let rb = coord.decode(sb, q.clone(), k.clone(), v.clone()).unwrap();
+            assert_eq!(rb.served_n, n0 + t + 1);
+            ob.push(rb.o);
+        }
+        // gauge barrier: pool counters mirror into the metrics at the
+        // end of each worker turn, so one more blocking round trip
+        // guarantees every turn above has been synced
+        let barrier = coord.session_create(AttnKind::Moba, 1, 1, d).unwrap();
+        let m = coord.metrics();
+        let allocated = m.pages_allocated.load(std::sync::atomic::Ordering::Relaxed);
+        let cow = m.cow_splits.load(std::sync::atomic::Ordering::Relaxed);
+        let hit_rate = m.prefix_hit_rate();
+        coord.session_free(barrier).unwrap();
+        coord.session_free(sa).unwrap();
+        coord.session_free(sb).unwrap();
+        coord.shutdown();
+        (oa, ob, allocated, cow, hit_rate)
+    };
+
+    let (fa, fb, forked_pages, forked_cow, forked_hits) = run(true);
+    let (ia, ib, indep_pages, _, indep_hits) = run(false);
+    // the acceptance metric: a shared prefix costs fewer pool pages
+    assert!(
+        forked_pages < indep_pages,
+        "fork allocated {forked_pages} pages, independents {indep_pages}: \
+         prefix sharing saved nothing"
+    );
+    assert!(forked_hits > 0.0, "fork never registered a prefix hit");
+    assert_eq!(indep_hits, 0.0, "independent sessions cannot share pages");
+    // 40 tokens end mid-page (page = 16): the first divergent append to
+    // the shared partial page splits it, once
+    assert!(forked_cow >= 1, "divergence never copy-on-write split the shared tail");
+    for t in 0..steps {
+        assert!(
+            fa[t].iter().zip(&ia[t]).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "parent step {t}: forked session diverged from the independent one"
+        );
+        assert!(
+            fb[t].iter().zip(&ib[t]).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "child step {t}: forked session diverged from the independent one"
+        );
+    }
+}
+
+/// Under a finite page budget the coordinator preempts cold sessions
+/// (evict, pages returned, swap log kept) and transparently restores
+/// them by replay on next touch. The entire pressured run — two
+/// sessions ping-ponging over a 4-page budget, pipelined steps parked
+/// FIFO behind a restore and a mid-stream prefill parked behind those
+/// steps — is bitwise identical to the same traffic on an unbounded
+/// pool, and the parked work drains strictly in arrival order.
+#[test]
+fn preempted_sessions_resume_bitwise_under_page_pressure() {
+    let (d, n0) = (16usize, 48usize);
+    let (pipelined, extra, after) = (8usize, 4usize, 4usize);
+    let mut rng = Rng::new(0xE71C);
+    let ka0 = rng.normal_vec(n0 * d);
+    let va0 = rng.normal_vec(n0 * d);
+    let kb0 = rng.normal_vec(n0 * d);
+    let vb0 = rng.normal_vec(n0 * d);
+    let tail = step_rows(&mut rng, pipelined, d);
+    let kx = rng.normal_vec(extra * d);
+    let vx = rng.normal_vec(extra * d);
+    let tail2 = step_rows(&mut rng, after, d);
+    let touch_b = step_rows(&mut rng, 1, d);
+
+    let run = |max_pages: usize| {
+        let coord = Coordinator::start(no_artifacts_dir(), paging_params(max_pages)).unwrap();
+        let sa = coord.session_create(AttnKind::Moba, 1, 1, d).unwrap();
+        assert_eq!(coord.session_prefill(sa, n0, ka0.clone(), va0.clone()).unwrap(), n0);
+        // pressured: B's 3-page prefill cannot fit beside A's 3 pages
+        // in a 4-page pool — A (cold, no queued steps) is preempted
+        let sb = coord.session_create(AttnKind::Moba, 1, 1, d).unwrap();
+        assert_eq!(coord.session_prefill(sb, n0, kb0.clone(), vb0.clone()).unwrap(), n0);
+        let mut outs: Vec<Vec<f32>> = Vec::new();
+        // pipelined touches on the (pressured: evicted) session park
+        // FIFO; the restore replays the swap log, then the steps drain
+        // in arrival order
+        let tickets: Vec<_> = (0..pipelined)
+            .map(|t| {
+                let (q, k, v) = &tail[t];
+                coord.decode_async(sa, q.clone(), k.clone(), v.clone()).unwrap()
+            })
+            .collect();
+        // a prefill queued behind in-flight steps appends after them
+        let pf = coord.session_prefill_async(sa, extra, kx.clone(), vx.clone()).unwrap();
+        for (t, ticket) in tickets.into_iter().enumerate() {
+            let r = ticket.wait().unwrap();
+            assert_eq!(r.served_n, n0 + t + 1, "parked steps must drain FIFO");
+            outs.push(r.o);
+        }
+        assert_eq!(pf.wait().unwrap(), n0 + pipelined + extra);
+        for (t, (q, k, v)) in tail2.iter().enumerate() {
+            let r = coord.decode(sa, q.clone(), k.clone(), v.clone()).unwrap();
+            assert_eq!(r.served_n, n0 + pipelined + extra + t + 1);
+            outs.push(r.o);
+        }
+        // touch the cold sibling: pressured, this is a second
+        // preempt-and-restore round trip
+        let (q, k, v) = &touch_b[0];
+        let r = coord.decode(sb, q.clone(), k.clone(), v.clone()).unwrap();
+        assert_eq!(r.served_n, n0 + 1);
+        outs.push(r.o);
+        let m = coord.metrics();
+        let preempt = m.preemptions.load(std::sync::atomic::Ordering::Relaxed);
+        let restores = m.restores.load(std::sync::atomic::Ordering::Relaxed);
+        let deferred = m.admits_deferred.load(std::sync::atomic::Ordering::Relaxed);
+        let rejected = m.rejected.load(std::sync::atomic::Ordering::Relaxed);
+        // gauge barrier (see the fork test), then the budget gauge
+        let barrier = coord.session_create(AttnKind::Moba, 1, 1, d).unwrap();
+        let live = m.pages_live.load(std::sync::atomic::Ordering::Relaxed);
+        coord.session_free(barrier).unwrap();
+        coord.session_free(sa).unwrap();
+        coord.session_free(sb).unwrap();
+        coord.shutdown();
+        (outs, preempt, restores, deferred, rejected, live)
+    };
+
+    let (pressured, preempt, restores, deferred, rejected, live) = run(4);
+    let (unbounded, p0, r0, _, rej0, _) = run(0);
+    assert_eq!(pressured.len(), unbounded.len());
+    for (t, (a, b)) in pressured.iter().zip(&unbounded).enumerate() {
+        assert!(
+            a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()),
+            "output {t}: preemption round trips changed served bits"
+        );
+    }
+    // the pressured run really exercised the machinery...
+    assert!(preempt >= 2, "expected preemptions under a 4-page budget, saw {preempt}");
+    assert!(restores >= 2, "expected swap-log restores, saw {restores}");
+    assert!(deferred >= 1, "touching an evicted session must defer admission");
+    assert_eq!(rejected, 0, "no parked work may be dropped under pressure");
+    assert!(live <= 4, "budget overrun: {live} live pages in a 4-page pool");
+    // ...and the unbounded run never needed it
+    assert_eq!((p0, r0), (0, 0), "an unbounded pool must never preempt");
+    assert_eq!(rej0, 0);
+}
+
+/// A session whose page need exceeds the *whole* pool budget fails
+/// loudly instead of parking forever: admission cannot evict the
+/// session's own pages, so the drain detects footprint > budget and
+/// answers the parked work with an error — and the coordinator keeps
+/// serving sessions that do fit.
+#[test]
+fn over_budget_sessions_fail_loudly_not_silently() {
+    let d = 16usize;
+    let mut rng = Rng::new(0x0B7B);
+    let coord = Coordinator::start(no_artifacts_dir(), paging_params(2)).unwrap();
+    // 48 tokens need 3 pages of 16 — more than the 2-page pool holds
+    let sa = coord.session_create(AttnKind::Moba, 1, 1, d).unwrap();
+    let too_big = coord.session_prefill(sa, 48, rng.normal_vec(48 * d), rng.normal_vec(48 * d));
+    assert!(too_big.is_err(), "a prefill larger than the pool must be rejected");
+    // a session can also *grow into* the whole budget: its next
+    // boundary-crossing step can never fit (its own pages are not
+    // evictable on its behalf) and must error, not hang
+    assert_eq!(
+        coord.session_prefill(sa, 32, rng.normal_vec(32 * d), rng.normal_vec(32 * d)).unwrap(),
+        32
+    );
+    let step = coord.decode(sa, rng.normal_vec(d), rng.normal_vec(d), rng.normal_vec(d));
+    assert!(step.is_err(), "a step past the whole-pool budget must be rejected");
+    // the pool is not wedged: a new session that fits still serves
+    // (preempting the full-budget one)
+    let sb = coord.session_create(AttnKind::Moba, 1, 1, d).unwrap();
+    let resp = coord
+        .decode(sb, rng.normal_vec(d), rng.normal_vec(d), rng.normal_vec(d))
+        .unwrap();
+    assert_eq!(resp.served_n, 1);
+    coord.session_free(sa).unwrap();
+    coord.session_free(sb).unwrap();
     coord.shutdown();
 }

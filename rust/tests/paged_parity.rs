@@ -1,0 +1,374 @@
+//! Paged ≡ contiguous parity suite: a `DecodeSession` whose KV cache
+//! lives in pool pages must produce *bit-identical* outputs (`to_bits`,
+//! not tolerance) to the contiguous session fed the same history — for
+//! every backend, across GQA and ragged shapes, at any `MOBA_THREADS`,
+//! through the batched cross-session decode path, through CoW forks,
+//! and through evict → re-prefill round trips.
+//!
+//! Bitwise equality holds by construction: pages store each block's
+//! rows contiguously and accumulate centroid sums element-by-element in
+//! arrival order — exactly the arithmetic the contiguous store performs
+//! — and the kernels only ever read per-block slices through the
+//! layout-agnostic `block_keys` / `block_values` accessors. This suite
+//! is the pinning test for that contract (docs/ARCHITECTURE.md,
+//! "Paged KV cache").
+
+use flash_moba::attention::backend::{AttentionBackend, BackendRegistry};
+use flash_moba::attention::decode::DecodeSession;
+use flash_moba::attention::paged::PagePool;
+use flash_moba::attention::plan::{HeadPlan, RoutePlan};
+use flash_moba::attention::testutil::{qkv_packed, Rng};
+use flash_moba::attention::{packed_rows, AttnShape, ExecCtx};
+
+/// Bitwise comparison with a step/shape label in the failure message.
+fn assert_bits(a: &[f32], b: &[f32], label: &str) {
+    assert_eq!(a.len(), b.len(), "{label}: output widths differ");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            x.to_bits() == y.to_bits(),
+            "{label}: bit divergence at element {i}: {x:e} vs {y:e}"
+        );
+    }
+}
+
+/// Drive a (contiguous, paged) session pair through the same token
+/// stream on `backend`, asserting bitwise-equal outputs and counters at
+/// every step.
+fn assert_pair_parity(
+    backend: &dyn AttentionBackend,
+    ctx: &ExecCtx,
+    mut contig: DecodeSession,
+    mut paged: DecodeSession,
+    shape: &AttnShape,
+    q: &[f32],
+    k: &[f32],
+    v: &[f32],
+    label: &str,
+) {
+    let (h, h_kv, n, d) = (shape.h, shape.h_kv, shape.n, shape.d);
+    for t in 0..n {
+        let (kt, vt) = (packed_rows(k, h_kv, n, d, t), packed_rows(v, h_kv, n, d, t));
+        contig.append(&kt, &vt);
+        paged.append(&kt, &vt);
+        let qt = packed_rows(q, h, n, d, t);
+        let oc = backend.forward_decode(ctx, &mut contig, &qt);
+        let op = backend.forward_decode(ctx, &mut paged, &qt);
+        assert_bits(&oc, &op, &format!("{label} step {t}"));
+        assert_eq!(contig.len(), paged.len(), "{label}: context counters diverged");
+    }
+}
+
+/// The core property: paged decode is bit-identical to contiguous for
+/// every backend, over block-aligned, ragged, MHA and GQA shapes, at
+/// several worker counts (the `MOBA_THREADS` axis).
+#[test]
+fn paged_decode_is_bitwise_identical_to_contiguous_across_threads() {
+    let shapes = [
+        AttnShape::single(64, 4, 16, 1),
+        AttnShape::single(100, 8, 16, 2),   // ragged tail
+        AttnShape::new(4, 4, 96, 8, 16, 2), // MHA
+        AttnShape::new(4, 2, 90, 8, 16, 3), // GQA + ragged
+        AttnShape::new(8, 2, 64, 4, 16, 1), // wide GQA groups
+    ];
+    let registry = BackendRegistry::with_defaults();
+    for threads in [1usize, 2, 5] {
+        let ctx = ExecCtx::with_threads(threads);
+        for (i, shape) in shapes.iter().enumerate() {
+            let (q, k, v) =
+                qkv_packed(0x9A6E + i as u64, shape.h, shape.h_kv, shape.n, shape.d);
+            for b in registry.iter() {
+                if !b.supports(shape) {
+                    continue;
+                }
+                let pool = PagePool::new(shape.block, None);
+                let contig =
+                    DecodeSession::new(shape.h, shape.h_kv, shape.d, shape.block, shape.topk);
+                let paged = DecodeSession::new_paged(
+                    shape.h, shape.h_kv, shape.d, shape.block, shape.topk, &pool,
+                );
+                assert_pair_parity(
+                    b,
+                    &ctx,
+                    contig,
+                    paged,
+                    shape,
+                    &q,
+                    &k,
+                    &v,
+                    &format!("{} threads={threads} {shape:?}", b.name()),
+                );
+                // the session dropped inside the parity check: every
+                // page must be back in the pool
+                assert_eq!(pool.live_pages(), 0, "pages leaked after session drop");
+            }
+        }
+    }
+}
+
+/// A mixed per-head route plan — routed and planned-dense heads with
+/// different block sizes — holds the same bitwise parity through
+/// `with_plan` vs `with_plan_paged`.
+#[test]
+fn mixed_plan_paged_decode_matches_contiguous() {
+    let (h, h_kv, n, d) = (4usize, 2usize, 57usize, 8usize);
+    let plan = RoutePlan {
+        heads: vec![HeadPlan::routed(8, 3), HeadPlan::dense(16)],
+        fallback_margin: f32::NEG_INFINITY,
+    };
+    let shape = AttnShape::new(h, h_kv, n, d, 8, 3);
+    let (q, k, v) = qkv_packed(0x417ED, h, h_kv, n, d);
+    let registry = BackendRegistry::with_defaults();
+    let ctx = ExecCtx::with_threads(3);
+    for name in ["moba_naive", "flash_moba"] {
+        let b = registry.get(name).unwrap();
+        let pool = PagePool::new(16, None);
+        let contig = DecodeSession::with_plan(h, h_kv, d, plan.clone());
+        let paged = DecodeSession::with_plan_paged(h, h_kv, d, plan.clone(), &pool);
+        assert_pair_parity(
+            b,
+            &ctx,
+            contig,
+            paged,
+            &shape,
+            &q,
+            &k,
+            &v,
+            &format!("mixed plan {name}"),
+        );
+        assert_eq!(pool.live_pages(), 0, "sessions dropped, pages must return");
+    }
+}
+
+/// Key convolution over paged storage: the streaming kconv ring buffer
+/// is orthogonal to where the convolved rows land, so `with_kconv` vs
+/// `with_kconv_paged` stay bit-identical.
+#[test]
+fn kconv_paged_decode_matches_contiguous() {
+    let (h, h_kv, n, d, block, topk, width) = (2usize, 2usize, 70usize, 8usize, 16usize, 2usize, 4usize);
+    let shape = AttnShape::new(h, h_kv, n, d, block, topk);
+    let (q, k, v) = qkv_packed(0x3C0, h, h_kv, n, d);
+    let w = Rng::new(0x3C1).normal_vec(width * d);
+    let registry = BackendRegistry::with_defaults();
+    let ctx = ExecCtx::with_threads(2);
+    for name in ["moba_naive", "flash_moba"] {
+        let b = registry.get(name).unwrap();
+        let pool = PagePool::new(block, None);
+        let contig = DecodeSession::with_kconv(h, h_kv, d, block, topk, &w, width);
+        let paged = DecodeSession::with_kconv_paged(h, h_kv, d, block, topk, &w, width, &pool);
+        assert_pair_parity(
+            b,
+            &ctx,
+            contig,
+            paged,
+            &shape,
+            &q,
+            &k,
+            &v,
+            &format!("kconv {name}"),
+        );
+    }
+}
+
+/// The batched cross-session decode path (`forward_decode_batch_into`,
+/// the serving wave launch) over all-paged sessions is bit-identical to
+/// the same wave over all-contiguous sessions — at 1 and several
+/// workers.
+#[test]
+fn batched_decode_waves_match_between_layouts() {
+    let (h, h_kv, d, block, topk) = (2usize, 2usize, 8usize, 16usize, 2usize);
+    let lens = [64usize, 70, 33, 96]; // ragged mix across the wave
+    let registry = BackendRegistry::with_defaults();
+    let b = registry.get("flash_moba").unwrap();
+    for threads in [1usize, 4] {
+        let ctx = ExecCtx::with_threads(threads);
+        let pool = PagePool::new(block, None);
+        let mut contig: Vec<DecodeSession> = Vec::new();
+        let mut paged: Vec<DecodeSession> = Vec::new();
+        let mut queries: Vec<Vec<f32>> = Vec::new();
+        for (s, &n) in lens.iter().enumerate() {
+            let (q, k, v) = qkv_packed(0xBA7C + s as u64, h, h_kv, n, d);
+            let mut cs = DecodeSession::new(h, h_kv, d, block, topk);
+            let mut ps = DecodeSession::new_paged(h, h_kv, d, block, topk, &pool);
+            // history: all but the final token (the wave appends it)
+            for t in 0..n - 1 {
+                let (kt, vt) = (packed_rows(&k, h_kv, n, d, t), packed_rows(&v, h_kv, n, d, t));
+                cs.append(&kt, &vt);
+                ps.append(&kt, &vt);
+            }
+            let t = n - 1;
+            let (kt, vt) = (packed_rows(&k, h_kv, n, d, t), packed_rows(&v, h_kv, n, d, t));
+            cs.append(&kt, &vt);
+            ps.append(&kt, &vt);
+            queries.push(packed_rows(&q, h, n, d, t));
+            contig.push(cs);
+            paged.push(ps);
+        }
+        let q_packed: Vec<f32> = queries.concat();
+        let (mut oc, mut op) = (Vec::new(), Vec::new());
+        b.forward_decode_batch_into(&ctx, &mut contig, &q_packed, &mut oc);
+        b.forward_decode_batch_into(&ctx, &mut paged, &q_packed, &mut op);
+        assert_bits(&oc, &op, &format!("wave threads={threads}"));
+    }
+}
+
+/// CoW prefix sharing: two forks of a common prefix decode
+/// bit-identically to two independent sessions fed the same full
+/// histories, while consuming strictly fewer pool pages.
+#[test]
+fn forked_sessions_match_independent_sessions_and_share_pages() {
+    let (h, h_kv, n_prefix, n_total, d, block, topk) =
+        (2usize, 2usize, 40usize, 56usize, 8usize, 8usize, 2usize);
+    let shape_n = n_total;
+    let (q, k, v) = qkv_packed(0xF02C, h, h_kv, shape_n, d);
+    // a second continuation stream for the sibling fork
+    let (q2, k2, v2) = qkv_packed(0xF02D, h, h_kv, shape_n, d);
+    let registry = BackendRegistry::with_defaults();
+    let b = registry.get("flash_moba").unwrap();
+    let ctx = ExecCtx::with_threads(1);
+
+    let shared_pool = PagePool::new(block, None);
+    let mut parent = DecodeSession::new_paged(h, h_kv, d, block, topk, &shared_pool);
+    for t in 0..n_prefix {
+        parent.append(
+            &packed_rows(&k, h_kv, shape_n, d, t),
+            &packed_rows(&v, h_kv, shape_n, d, t),
+        );
+    }
+    let mut child = parent.fork();
+
+    let indep_pool = PagePool::new(block, None);
+    let mut ia = DecodeSession::new_paged(h, h_kv, d, block, topk, &indep_pool);
+    let mut ib = DecodeSession::new_paged(h, h_kv, d, block, topk, &indep_pool);
+    for t in 0..n_prefix {
+        let (kt, vt) = (
+            packed_rows(&k, h_kv, shape_n, d, t),
+            packed_rows(&v, h_kv, shape_n, d, t),
+        );
+        ia.append(&kt, &vt);
+        ib.append(&kt, &vt);
+    }
+
+    // diverge: parent continues stream 1, child continues stream 2
+    for t in n_prefix..n_total {
+        let (kt, vt) = (
+            packed_rows(&k, h_kv, shape_n, d, t),
+            packed_rows(&v, h_kv, shape_n, d, t),
+        );
+        let (kt2, vt2) = (
+            packed_rows(&k2, h_kv, shape_n, d, t),
+            packed_rows(&v2, h_kv, shape_n, d, t),
+        );
+        parent.append(&kt, &vt);
+        ia.append(&kt, &vt);
+        child.append(&kt2, &vt2);
+        ib.append(&kt2, &vt2);
+        let qt = packed_rows(&q, h, shape_n, d, t);
+        let qt2 = packed_rows(&q2, h, shape_n, d, t);
+        assert_bits(
+            &b.forward_decode(&ctx, &mut parent, &qt),
+            &b.forward_decode(&ctx, &mut ia, &qt),
+            &format!("parent vs independent at step {t}"),
+        );
+        assert_bits(
+            &b.forward_decode(&ctx, &mut child, &qt2),
+            &b.forward_decode(&ctx, &mut ib, &qt2),
+            &format!("child vs independent at step {t}"),
+        );
+    }
+
+    // the shared-prefix pair holds strictly fewer live pages than the
+    // independent pair — the point of paging (prefix pages counted once)
+    assert!(
+        shared_pool.live_pages() < indep_pool.live_pages(),
+        "forked pair uses {} pages, independent pair {} — sharing saved nothing",
+        shared_pool.live_pages(),
+        indep_pool.live_pages()
+    );
+    assert!(shared_pool.prefix_shared() > 0, "fork must register prefix sharing");
+    assert_eq!(
+        shared_pool.cow_splits(),
+        1,
+        "exactly the one shared tail page splits on divergence"
+    );
+}
+
+/// Evict → re-prefill round trip: a session evicted under preemption
+/// and rebuilt by replaying its appends continues decoding bit-for-bit
+/// where an uninterrupted session would be — the serving restore path.
+#[test]
+fn evicted_session_resumes_bitwise_after_replay() {
+    let (h, h_kv, n, d, block, topk) = (2usize, 2usize, 50usize, 8usize, 16usize, 2usize);
+    let cut = 30usize; // evict after this many tokens
+    let (q, k, v) = qkv_packed(0xE71C, h, h_kv, n, d);
+    let registry = BackendRegistry::with_defaults();
+    let b = registry.get("flash_moba").unwrap();
+    let ctx = ExecCtx::with_threads(2);
+    let pool = PagePool::new(block, None);
+
+    let mut steady = DecodeSession::new_paged(h, h_kv, d, block, topk, &pool);
+    let mut swapped = DecodeSession::new_paged(h, h_kv, d, block, topk, &pool);
+    for t in 0..cut {
+        let (kt, vt) = (packed_rows(&k, h_kv, n, d, t), packed_rows(&v, h_kv, n, d, t));
+        steady.append(&kt, &vt);
+        swapped.append(&kt, &vt);
+    }
+    let released = swapped.evict();
+    assert_eq!(released, h_kv * cut.div_ceil(block), "evict returns the page-table size");
+    assert_eq!(swapped.len(), 0);
+    // re-prefill: replay the same history (the server's swap log)
+    for t in 0..cut {
+        let (kt, vt) = (packed_rows(&k, h_kv, n, d, t), packed_rows(&v, h_kv, n, d, t));
+        swapped.append(&kt, &vt);
+    }
+    for t in cut..n {
+        let (kt, vt) = (packed_rows(&k, h_kv, n, d, t), packed_rows(&v, h_kv, n, d, t));
+        steady.append(&kt, &vt);
+        swapped.append(&kt, &vt);
+        let qt = packed_rows(&q, h, n, d, t);
+        assert_bits(
+            &b.forward_decode(&ctx, &mut steady, &qt),
+            &b.forward_decode(&ctx, &mut swapped, &qt),
+            &format!("post-restore step {t}"),
+        );
+    }
+}
+
+/// Randomized closure over the property: random GQA layouts, ragged
+/// lengths, blocks and topk, each seed checked paged-vs-contiguous on
+/// every supporting backend at a random worker count.
+#[test]
+fn randomized_shapes_hold_paged_parity() {
+    let registry = BackendRegistry::with_defaults();
+    for seed in 0..8u64 {
+        let mut rng = Rng::new(0xFA6E_u64.wrapping_add(seed));
+        let d = [4usize, 8][rng.below(2)];
+        let block = [8usize, 16][rng.below(2)];
+        let nb = 2 + rng.below(4);
+        let tail = if rng.uniform() < 0.5 { 1 + rng.below(block - 1) } else { 0 };
+        let topk = rng.below(nb + 2);
+        let (h, h_kv) = [(1, 1), (2, 2), (4, 2)][rng.below(3)];
+        let shape = AttnShape::new(h, h_kv, nb * block + tail, d, block, topk);
+        let threads = 1 + rng.below(4);
+        let ctx = ExecCtx::with_threads(threads);
+        let (q, k, v) = qkv_packed(0x600D + seed, h, h_kv, shape.n, d);
+        for b in registry.iter() {
+            if !b.supports(&shape) {
+                continue;
+            }
+            let pool = PagePool::new(block, None);
+            let contig = DecodeSession::new(h, h_kv, d, block, topk);
+            let paged = DecodeSession::new_paged(h, h_kv, d, block, topk, &pool);
+            assert_pair_parity(
+                b,
+                &ctx,
+                contig,
+                paged,
+                &shape,
+                &q,
+                &k,
+                &v,
+                &format!("seed {seed} threads={threads} {} {shape:?}", b.name()),
+            );
+        }
+    }
+}

@@ -458,6 +458,7 @@ fn prop_batcher_random_arrival_deadlines() {
                         q: vec![0.0; 4],
                         k: vec![0.0; 4],
                         v: vec![0.0; 4],
+                        table_pages: 0,
                     };
                     b.push(step, lane, 1, now).is_ok()
                 } else {
