@@ -1115,6 +1115,7 @@ mod tests {
         let plan = RoutePlan {
             heads: vec![HeadPlan::routed(16, 2), HeadPlan::dense(32)],
             fallback_margin: f32::NEG_INFINITY,
+            kv_dtype: None,
         };
         let (q, k, v) = qkv_packed(35, shape.h, shape.h_kv, n, d);
         let (oracle, _) = naive_attention_packed(&q, &k, &v, shape.h, shape.h_kv, n, d);

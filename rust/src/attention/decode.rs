@@ -47,7 +47,8 @@
 
 use super::centroid::centroids;
 use super::dense::NEG_INF;
-use super::gemm::{accum_rows, qk_row};
+use super::dtype::{KvBuf, KvDtype, KvView};
+use super::gemm::{accum_rows_view, qk_row_view};
 use super::kconv::KconvStream;
 use super::paged::{PageHandle, PagePool};
 use super::plan::RoutePlan;
@@ -59,10 +60,11 @@ use super::topk::{tiled_topk, topk_insert};
 #[derive(Debug, Clone)]
 enum HeadStorage {
     /// Contiguous slabs: cached (possibly kconv'd) keys and values,
-    /// (len, d) row-major, plus the running per-block key sums
-    /// (num_blocks, d) — divided by the block's token count at read
-    /// time to form the centroid.
-    Contig { k: Vec<f32>, v: Vec<f32>, sums: Vec<f32> },
+    /// (len, d) row-major in the cache's [`KvDtype`], plus the running
+    /// per-block key sums (num_blocks, d) — always f32, accumulated
+    /// from the pre-quantization rows, divided by the block's token
+    /// count at read time to form the centroid.
+    Contig { k: KvBuf, v: KvBuf, sums: Vec<f32> },
     /// Page table: logical block `b` lives in `pages[b]`, a refcounted
     /// page holding that block's rows and its running centroid sum.
     /// Cloning the table shares every page (CoW fork).
@@ -80,12 +82,14 @@ struct HeadStore {
 /// (contiguous sum slab / pool page) at block boundaries. The centroid
 /// sum accumulates element-by-element in arrival order on both layouts
 /// — the bit-determinism hinge.
+#[allow(clippy::too_many_arguments)]
 fn store_row(
     storage: &mut HeadStorage,
     pool: Option<&PagePool>,
     block: usize,
     t: usize,
     d: usize,
+    dtype: KvDtype,
     kr: &[f32],
     vr: &[f32],
 ) {
@@ -97,17 +101,21 @@ fn store_row(
                 let len = sums.len();
                 sums.resize(len + d, 0.0);
             }
+            // the sum reads the caller's full-precision row *before*
+            // quantization — routing never sees the storage dtype
             let sum = &mut sums[b * d..(b + 1) * d];
             for (c, s) in sum.iter_mut().enumerate() {
                 *s += kr[c];
             }
-            k.extend_from_slice(kr);
-            v.extend_from_slice(vr);
+            k.append_row(kr);
+            v.append_row(vr);
         }
         HeadStorage::Paged { pages } => {
             if t % block == 0 {
                 // first token of a fresh block: materialize its page
-                pages.push(pool.expect("paged storage always has a pool").alloc(d));
+                pages.push(
+                    pool.expect("paged storage always has a pool").alloc_dtype(d, dtype),
+                );
             }
             // make_mut is the CoW rule: a page shared with a forked
             // sibling splits off a private copy on this first divergent
@@ -139,6 +147,8 @@ pub struct KvCache {
     heads: Vec<HeadStore>,
     /// the shared page allocator of a paged cache; `None` = contiguous
     pool: Option<PagePool>,
+    /// storage dtype of the cached K/V rows (centroid sums stay f32)
+    dtype: KvDtype,
 }
 
 impl KvCache {
@@ -179,15 +189,40 @@ impl KvCache {
         let heads = (0..h_kv)
             .map(|_| HeadStore {
                 storage: match &pool {
-                    None => {
-                        HeadStorage::Contig { k: Vec::new(), v: Vec::new(), sums: Vec::new() }
-                    }
+                    None => HeadStorage::Contig {
+                        k: KvBuf::new(KvDtype::F32),
+                        v: KvBuf::new(KvDtype::F32),
+                        sums: Vec::new(),
+                    },
                     Some(_) => HeadStorage::Paged { pages: Vec::new() },
                 },
                 kconv: None,
             })
             .collect();
-        Self { h_kv, d, blocks: blocks.to_vec(), len: 0, heads, pool }
+        Self { h_kv, d, blocks: blocks.to_vec(), len: 0, heads, pool, dtype: KvDtype::F32 }
+    }
+
+    /// Switch the storage dtype of an *empty* cache (builder-style):
+    /// appended K/V rows are quantized to `dtype` at store time, while
+    /// centroid sums keep accumulating the pre-quantization f32 rows —
+    /// routing is dtype-invariant by construction. Panics if any token
+    /// has already been appended.
+    pub fn with_dtype(mut self, dtype: KvDtype) -> Self {
+        assert!(self.is_empty(), "with_dtype must be called before any append");
+        self.dtype = dtype;
+        for store in &mut self.heads {
+            if let HeadStorage::Contig { k, v, .. } = &mut store.storage {
+                *k = KvBuf::new(dtype);
+                *v = KvBuf::new(dtype);
+            }
+            // paged tables adopt the dtype when their pages are allocated
+        }
+        self
+    }
+
+    /// Storage dtype of the cached K/V rows.
+    pub fn dtype(&self) -> KvDtype {
+        self.dtype
     }
 
     /// A cache that applies the depthwise causal key convolution
@@ -301,6 +336,15 @@ impl KvCache {
         cost
     }
 
+    /// [`KvCache::append_page_cost`] in budget *units* (1 unit = one
+    /// f32 page's worth of bytes is `4 × page elems`; see
+    /// [`PagePool::would_fit_units`]): pages × this cache's per-element
+    /// byte width. An f16 cache's prefill charges half the units of an
+    /// f32 cache's — the byte-true admission cost.
+    pub fn append_page_cost_units(&self, extra: usize) -> usize {
+        self.append_page_cost(extra) * self.dtype.elem_bytes()
+    }
+
     /// Logical blocks head 0 currently occupies, `ceil(len / block)` —
     /// the cache-wide count of a uniform cache.
     pub fn num_blocks(&self) -> usize {
@@ -335,11 +379,12 @@ impl KvCache {
     }
 
     /// KV head `head`'s cached (post-kconv) keys, (len, d) row-major.
-    /// Contiguous caches only — a paged cache has no single slab; read
-    /// per block via [`KvCache::block_keys`].
+    /// Contiguous f32 caches only — a paged cache has no single slab
+    /// (read per block via [`KvCache::block_keys`]) and a quantized
+    /// store has no raw f32 rows (read via [`KvCache::block_keys_view`]).
     pub fn keys_of(&self, head: usize) -> &[f32] {
         match &self.heads[head].storage {
-            HeadStorage::Contig { k, .. } => k,
+            HeadStorage::Contig { k, .. } => k.as_f32(),
             HeadStorage::Paged { .. } => {
                 panic!("paged caches have no contiguous view; use block_keys(head, b)")
             }
@@ -347,10 +392,10 @@ impl KvCache {
     }
 
     /// KV head `head`'s cached values, (len, d) row-major. Contiguous
-    /// caches only — see [`KvCache::keys_of`].
+    /// f32 caches only — see [`KvCache::keys_of`].
     pub fn values_of(&self, head: usize) -> &[f32] {
         match &self.heads[head].storage {
-            HeadStorage::Contig { v, .. } => v,
+            HeadStorage::Contig { v, .. } => v.as_f32(),
             HeadStorage::Paged { .. } => {
                 panic!("paged caches have no contiguous view; use block_values(head, b)")
             }
@@ -358,12 +403,13 @@ impl KvCache {
     }
 
     /// KV head `head`'s block `b` keys, `(block_len_of(head, b), d)`
-    /// row-major — the layout-agnostic per-block view every kernel
-    /// reads through (a contiguous slab slice or the block's page).
+    /// row-major — the layout-agnostic per-block f32 view (a contiguous
+    /// slab slice or the block's page). F32 caches only; quantized
+    /// stores are read through [`KvCache::block_keys_view`].
     pub fn block_keys(&self, head: usize, b: usize) -> &[f32] {
         let (start, end) = self.block_span(head, b);
         match &self.heads[head].storage {
-            HeadStorage::Contig { k, .. } => &k[start * self.d..end * self.d],
+            HeadStorage::Contig { k, .. } => &k.as_f32()[start * self.d..end * self.d],
             HeadStorage::Paged { pages } => {
                 let rows = pages[b].data().k();
                 debug_assert_eq!(rows.len(), (end - start) * self.d);
@@ -376,11 +422,43 @@ impl KvCache {
     pub fn block_values(&self, head: usize, b: usize) -> &[f32] {
         let (start, end) = self.block_span(head, b);
         match &self.heads[head].storage {
-            HeadStorage::Contig { v, .. } => &v[start * self.d..end * self.d],
+            HeadStorage::Contig { v, .. } => &v.as_f32()[start * self.d..end * self.d],
             HeadStorage::Paged { pages } => {
                 let rows = pages[b].data().v();
                 debug_assert_eq!(rows.len(), (end - start) * self.d);
                 rows
+            }
+        }
+    }
+
+    /// Dtype-agnostic view of KV head `head`'s block `b` keys — the
+    /// per-block view the decode kernels read through. On an f32 store
+    /// this is a zero-cost slice wrapper ([`KvView::F32`]), so the f32
+    /// path stays bit-transparent to the pre-dtype kernels; quantized
+    /// rows dequantize element-wise inside the fused kernels, never
+    /// into a materialized f32 copy.
+    pub fn block_keys_view(&self, head: usize, b: usize) -> KvView<'_> {
+        let (start, end) = self.block_span(head, b);
+        match &self.heads[head].storage {
+            HeadStorage::Contig { k, .. } => k.view_rows(start, end, self.d),
+            HeadStorage::Paged { pages } => {
+                let view = pages[b].data().k_view();
+                debug_assert_eq!(view.rows(self.d), end - start);
+                view
+            }
+        }
+    }
+
+    /// Dtype-agnostic view of KV head `head`'s block `b` values — see
+    /// [`KvCache::block_keys_view`].
+    pub fn block_values_view(&self, head: usize, b: usize) -> KvView<'_> {
+        let (start, end) = self.block_span(head, b);
+        match &self.heads[head].storage {
+            HeadStorage::Contig { v, .. } => v.view_rows(start, end, self.d),
+            HeadStorage::Paged { pages } => {
+                let view = pages[b].data().v_view();
+                debug_assert_eq!(view.rows(self.d), end - start);
+                view
             }
         }
     }
@@ -414,7 +492,7 @@ impl KvCache {
         assert_eq!(v_t.len(), self.h_kv * self.d, "value row has wrong width");
         let t = self.len;
         let d = self.d;
-        let KvCache { heads, blocks, pool, .. } = self;
+        let KvCache { heads, blocks, pool, dtype, .. } = self;
         for (head, store) in heads.iter_mut().enumerate() {
             let block = blocks[head];
             let kh = &k_t[head * d..(head + 1) * d];
@@ -423,9 +501,9 @@ impl KvCache {
             match kconv {
                 Some(stream) => {
                     let stored = stream.push(kh);
-                    store_row(storage, pool.as_ref(), block, t, d, &stored, vh);
+                    store_row(storage, pool.as_ref(), block, t, d, *dtype, &stored, vh);
                 }
-                None => store_row(storage, pool.as_ref(), block, t, d, kh, vh),
+                None => store_row(storage, pool.as_ref(), block, t, d, *dtype, kh, vh),
             }
         }
         self.len = t + 1;
@@ -591,10 +669,12 @@ impl KvCache {
     /// score buffer reused across calls — the per-token
     /// zero-allocation path. Scores run on the register-blocked gemv
     /// per block (cache rows are contiguous) and the value combine on
-    /// the fused [`accum_rows`]; both preserve the per-element f32
+    /// the fused [`accum_rows_view`]; on an f32 store both delegate to
+    /// the pre-dtype f32 kernels and preserve the per-element f32
     /// operation order of the dot/axpy formulation, so the output is
     /// bit-identical to it (pinned by the single-head legacy decode
-    /// regression).
+    /// regression). Quantized stores dequantize element-wise inside
+    /// the fused kernels — no materialized f32 copy, no allocation.
     pub fn attend_into(
         &self,
         q: &[f32],
@@ -616,7 +696,7 @@ impl KvCache {
             let rows = self.block_len_of(head, b);
             let seg = scores.len();
             scores.resize(seg + rows, 0.0);
-            qk_row(q, self.block_keys(head, b), d, rows, scale, &mut scores[seg..]);
+            qk_row_view(q, &self.block_keys_view(head, b), d, rows, scale, &mut scores[seg..]);
         }
         let mut m = NEG_INF;
         for &x in scores.iter() {
@@ -633,7 +713,7 @@ impl KvCache {
         let mut seg = 0usize;
         for &b in blocks {
             let rows = self.block_len_of(head, b);
-            accum_rows(out, &scores[seg..seg + rows], self.block_values(head, b));
+            accum_rows_view(out, &scores[seg..seg + rows], &self.block_values_view(head, b));
             seg += rows;
         }
         for o in out.iter_mut() {
@@ -642,10 +722,12 @@ impl KvCache {
     }
 
     /// K and V bytes one query head reads from KV head `head`'s store
-    /// for `blocks`.
+    /// for `blocks` — dtype-aware, so an f16 cache reports half the
+    /// traffic of f32 for the same block set (i8 scale rows are noise
+    /// and are not counted).
     pub fn gather_bytes(&self, head: usize, blocks: &[usize]) -> u64 {
         let toks: usize = blocks.iter().map(|&b| self.block_len_of(head, b)).sum();
-        (2 * toks * self.d * 4) as u64
+        (2 * toks * self.d * self.dtype.elem_bytes()) as u64
     }
 }
 
@@ -780,6 +862,22 @@ impl DecodeSession {
         let mut s = Self::new(h, h_kv, d, block, topk);
         s.cache = KvCache::paged_with_kconv(h_kv, d, block, w, width, pool);
         s
+    }
+
+    /// Switch the cache's storage dtype (builder-style, before any
+    /// append): K/V rows quantize to `dtype` at store time, routing
+    /// stays f32 ([`KvCache::with_dtype`]). The session's routed block
+    /// sets are bit-identical across dtypes; only the attention
+    /// arithmetic reads quantized rows (through the fused dequant
+    /// kernels). Panics if tokens are already cached.
+    pub fn with_dtype(mut self, dtype: KvDtype) -> Self {
+        self.cache = self.cache.with_dtype(dtype);
+        self
+    }
+
+    /// Storage dtype of this session's KV cache.
+    pub fn dtype(&self) -> KvDtype {
+        self.cache.dtype()
     }
 
     /// Fork a new session sharing this session's cached prefix via CoW
@@ -1328,6 +1426,7 @@ mod tests {
         let plan = RoutePlan {
             heads: vec![HeadPlan::routed(8, 3), HeadPlan::dense(16)],
             fallback_margin: f32::NEG_INFINITY,
+            kv_dtype: None,
         };
         let (q, k, v) = qkv_packed(12, h, h_kv, n, d);
         let mut sess = DecodeSession::with_plan(h, h_kv, d, plan.clone());
@@ -1442,6 +1541,7 @@ mod tests {
         let plan = RoutePlan {
             heads: vec![HeadPlan::routed(8, 3), HeadPlan::dense(16)],
             fallback_margin: f32::NEG_INFINITY,
+            kv_dtype: None,
         };
         let pool = PagePool::new(16, None);
         let (q, k, v) = qkv_packed(21, h, h_kv, n, d);
@@ -1603,6 +1703,83 @@ mod tests {
     #[should_panic]
     fn route_on_empty_cache_panics() {
         KvCache::new(1, 4, 8).route(&[0.0; 4], 0, 2);
+    }
+
+    /// Routing is dtype-invariant: centroid sums accumulate the
+    /// pre-quantization f32 rows, so every dtype's session selects
+    /// bitwise-identical block sets — the tentpole's
+    /// routing-stays-full-precision rule at the session level.
+    #[test]
+    fn routed_block_sets_are_identical_across_dtypes() {
+        let (h, h_kv, n, d, block, topk) = (4, 2, 57, 8, 8, 2);
+        let mut rng = Rng::new(23);
+        let mut sessions: Vec<DecodeSession> = KvDtype::ALL
+            .iter()
+            .map(|&dt| DecodeSession::new(h, h_kv, d, block, topk).with_dtype(dt))
+            .collect();
+        for _ in 0..n {
+            let (kt, vt) = (rng.normal_vec(h_kv * d), rng.normal_vec(h_kv * d));
+            let q = rng.normal_vec(h * d);
+            for sess in sessions.iter_mut() {
+                sess.append(&kt, &vt);
+            }
+            let base = sessions[0].route_current(&q);
+            for sess in sessions.iter().skip(1) {
+                assert_eq!(
+                    sess.route_current(&q),
+                    base,
+                    "dtype {} routed differently from f32",
+                    sess.dtype().as_str()
+                );
+            }
+        }
+    }
+
+    /// An f16 session's outputs track the f32 session's within a small
+    /// relative error (f16 has 11 significand bits; the softmax keeps
+    /// intermediate arithmetic f32) — and the quantized paged session
+    /// is bitwise identical to the quantized contiguous one.
+    #[test]
+    fn f16_session_tracks_f32_and_paged_matches_contig_bitwise() {
+        let (h, h_kv, n, d, block, topk) = (4, 2, 41, 8, 8, 2);
+        let pool = PagePool::new(block, None);
+        let mut rng = Rng::new(71);
+        let mut f32s = DecodeSession::new(h, h_kv, d, block, topk);
+        let mut f16c = DecodeSession::new(h, h_kv, d, block, topk).with_dtype(KvDtype::F16);
+        let mut f16p =
+            DecodeSession::new_paged(h, h_kv, d, block, topk, &pool).with_dtype(KvDtype::F16);
+        for _ in 0..n {
+            let (kt, vt) = (rng.normal_vec(h_kv * d), rng.normal_vec(h_kv * d));
+            let q = rng.normal_vec(h * d);
+            f32s.append(&kt, &vt);
+            f16c.append(&kt, &vt);
+            f16p.append(&kt, &vt);
+            let exact = f32s.decode_routed(&q);
+            let quant = f16c.decode_routed(&q);
+            let paged = f16p.decode_routed(&q);
+            assert_eq!(
+                quant.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                paged.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                "paged f16 diverged from contiguous f16"
+            );
+            let scale = exact.iter().fold(1.0f32, |m, &x| m.max(x.abs()));
+            for (o, e) in quant.iter().zip(exact.iter()) {
+                assert!(
+                    (o - e).abs() <= 2e-2 * scale,
+                    "f16 output {o} too far from f32 output {e}"
+                );
+            }
+        }
+        // byte-true accounting: same blocks gathered, half the bytes
+        assert_eq!(f16c.last_gathered_bytes() * 2, f32s.last_gathered_bytes());
+    }
+
+    #[test]
+    #[should_panic(expected = "with_dtype must be called before any append")]
+    fn with_dtype_after_append_panics() {
+        let mut cache = KvCache::new(1, 4, 8);
+        cache.append(&[1.0; 4], &[2.0; 4]);
+        let _ = cache.with_dtype(KvDtype::F16);
     }
 
     #[test]

@@ -1,0 +1,607 @@
+//! The KV-cache storage precision axis: [`KvDtype`] and the quantized
+//! row stores behind it.
+//!
+//! The small-block decode regime is memory-bandwidth-bound — bytes
+//! moved ≈ wall time — and the KV cache is where the bytes live. This
+//! module lets the cache layer store K/V rows at half width (`F16`,
+//! `Bf16`) or quarter width (`I8` with one f32 scale per row) while
+//! every kernel consumes them through borrowed [`KvView`]s that
+//! dequantize register-locally inside the fused `simd` kernels — no
+//! materialized f32 copy of a block ever exists, so the PR-5 zero-alloc
+//! steady-state contract survives quantization untouched.
+//!
+//! Two rules keep the numerics auditable:
+//!
+//! * **Routing stays full precision.** Centroid key-sums accumulate the
+//!   *pre-quantization* f32 rows (see `decode::store_row` /
+//!   `paged::PageData::append_row`), so q·centroid scores — and hence
+//!   the selected block indices — are bitwise identical across every
+//!   `KvDtype`. Quantization perturbs attention *weights*, never the
+//!   paper's SNR-driven block selection.
+//! * **Dequantization is element-wise.** `dequant(q[i]) * a[i]` in the
+//!   fused kernels is the same arithmetic as first expanding the row to
+//!   f32 and then running the f32 kernel, in the same lane order — so a
+//!   quantized cache attends bit-identically to an f32 cache holding
+//!   the dequantized rows (pinned by the decode tests), and the PR-5
+//!   lane-order rule restates per dtype rather than dissolving.
+//!
+//! Conversions are exact bit manipulation (f16→f32 is lossless; f32→f16
+//! and f32→bf16 round to nearest even), deliberately avoiding hardware
+//! convert intrinsics in the scalar path so every ISA's dequant agrees
+//! bit-for-bit with the scalar fallback.
+
+use super::simd;
+
+/// Storage element type of cached K/V rows. Centroid sums, queries and
+/// outputs stay f32 regardless.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum KvDtype {
+    /// Full precision — the legacy layout; byte-identical to the
+    /// pre-dtype cache, and the default everywhere.
+    #[default]
+    F32,
+    /// IEEE binary16: 1+5+10 bits, round-to-nearest-even on store.
+    F16,
+    /// bfloat16: the top 16 bits of an f32, round-to-nearest-even on
+    /// store (f32 dynamic range, 8-bit mantissa).
+    Bf16,
+    /// Symmetric int8 with one f32 scale per stored row
+    /// (`scale = max|row| / 127`); a streaming append cannot know a
+    /// block's dynamic range up front, so scales are per row, not per
+    /// block.
+    I8,
+}
+
+impl KvDtype {
+    /// Every dtype, in test/bench sweep order.
+    pub const ALL: [KvDtype; 4] = [KvDtype::F32, KvDtype::F16, KvDtype::Bf16, KvDtype::I8];
+
+    /// Bytes per stored K/V element (the I8 per-row scale is accounted
+    /// separately where byte-exactness matters; as a *cost weight* one
+    /// unit = one byte per element — see `paged::PagePool`).
+    pub fn elem_bytes(self) -> usize {
+        match self {
+            KvDtype::F32 => 4,
+            KvDtype::F16 | KvDtype::Bf16 => 2,
+            KvDtype::I8 => 1,
+        }
+    }
+
+    /// Stable lowercase name (config / plan JSON / bench labels).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            KvDtype::F32 => "f32",
+            KvDtype::F16 => "f16",
+            KvDtype::Bf16 => "bf16",
+            KvDtype::I8 => "i8",
+        }
+    }
+
+    /// Parse a config/JSON name. Case-insensitive; `None` on anything
+    /// unrecognized (callers decide whether that is a default or an
+    /// error).
+    pub fn parse(s: &str) -> Option<KvDtype> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "f32" | "fp32" | "float32" => Some(KvDtype::F32),
+            "f16" | "fp16" | "half" | "float16" => Some(KvDtype::F16),
+            "bf16" | "bfloat16" => Some(KvDtype::Bf16),
+            "i8" | "int8" => Some(KvDtype::I8),
+            _ => None,
+        }
+    }
+
+    /// The `MOBA_KV_DTYPE` environment override (the CI determinism
+    /// matrix leg), if set and parseable.
+    pub fn from_env() -> Option<KvDtype> {
+        std::env::var("MOBA_KV_DTYPE").ok().and_then(|s| KvDtype::parse(&s))
+    }
+}
+
+// ------------------------------------------------------------ convert
+
+/// f16 bits -> f32. Exact: every binary16 value (normals, subnormals,
+/// ±inf, NaN payloads) is representable in binary32.
+#[inline]
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let man = (h & 0x3ff) as u32;
+    let bits = match (exp, man) {
+        (0, 0) => sign,
+        (0, mut m) => {
+            // subnormal: renormalize (shift the leading 1 into place)
+            let mut e = 113u32; // unbiased -14, f32-biased
+            while m & 0x400 == 0 {
+                m <<= 1;
+                e -= 1;
+            }
+            sign | (e << 23) | ((m & 0x3ff) << 13)
+        }
+        (31, 0) => sign | 0x7f80_0000,
+        (31, m) => sign | 0x7fc0_0000 | (m << 13),
+        _ => sign | ((exp + 112) << 23) | (man << 13),
+    };
+    f32::from_bits(bits)
+}
+
+/// f32 -> f16 bits, round to nearest, ties to even (overflow -> ±inf,
+/// underflow -> ±0 through the subnormal range).
+#[inline]
+pub fn f32_to_f16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let man = bits & 0x7f_ffff;
+    if exp == 255 {
+        // inf / NaN (force a quiet payload bit so NaN survives)
+        return if man == 0 { sign | 0x7c00 } else { sign | 0x7e00 };
+    }
+    let e = exp - 127 + 15;
+    if e >= 31 {
+        return sign | 0x7c00;
+    }
+    if e <= 0 {
+        if e < -10 {
+            return sign; // below half the smallest subnormal
+        }
+        // subnormal target: mantissa with its implicit 1, shifted out
+        let m = man | 0x80_0000;
+        let shift = (14 - e) as u32;
+        let h = (m >> shift) as u16;
+        let rem = m & ((1u32 << shift) - 1);
+        let halfway = 1u32 << (shift - 1);
+        return sign
+            | if rem > halfway || (rem == halfway && h & 1 == 1) { h + 1 } else { h };
+    }
+    let h = ((e as u32) << 10) as u16 | (man >> 13) as u16;
+    let rem = man & 0x1fff;
+    // a mantissa carry rolls into the exponent field correctly (and
+    // 0x7bff + 1 = 0x7c00 = inf, the right saturation)
+    sign | if rem > 0x1000 || (rem == 0x1000 && h & 1 == 1) { h + 1 } else { h }
+}
+
+/// bf16 bits -> f32. Exact by construction (bf16 is the top half of an
+/// f32).
+#[inline]
+pub fn bf16_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// f32 -> bf16 bits, round to nearest, ties to even.
+#[inline]
+pub fn f32_to_bf16(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        // keep sign + a quiet payload; plain truncation could round a
+        // NaN to inf
+        return ((bits >> 16) as u16) | 0x0040;
+    }
+    let h = (bits >> 16) as u16;
+    let rem = bits & 0xffff;
+    if rem > 0x8000 || (rem == 0x8000 && h & 1 == 1) {
+        h.wrapping_add(1)
+    } else {
+        h
+    }
+}
+
+/// What one f32 value stores back as under `dtype` — the reference
+/// round-trip the error-bound and bitwise-oracle tests are written
+/// against. For `I8` the *row maximum magnitude* must be supplied
+/// (quantization is per row, not per element); the inverse scale is
+/// recomputed exactly as the append path computes it, so the round-trip
+/// is bit-identical to storage.
+#[inline]
+pub fn quantize_roundtrip(dtype: KvDtype, x: f32, i8_amax: f32) -> f32 {
+    match dtype {
+        KvDtype::F32 => x,
+        KvDtype::F16 => f16_to_f32(f32_to_f16(x)),
+        KvDtype::Bf16 => bf16_to_f32(f32_to_bf16(x)),
+        KvDtype::I8 => {
+            if i8_amax == 0.0 {
+                0.0
+            } else {
+                ((x * (127.0 / i8_amax)).round() as i8) as f32 * (i8_amax / 127.0)
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------- stores
+
+/// A growable store of quantized rows — the K (or V) side of one
+/// contiguous block slab or one page. Appends quantize; reads go
+/// through borrowed [`KvView`]s. Capacity reserved up front via
+/// [`KvBuf::with_capacity_rows`] keeps steady-state appends
+/// allocation-free (the zero-alloc contract).
+#[derive(Debug, Clone)]
+pub enum KvBuf {
+    F32(Vec<f32>),
+    F16(Vec<u16>),
+    Bf16(Vec<u16>),
+    I8 {
+        q: Vec<i8>,
+        /// one scale per stored row, `max|row| / 127`
+        scales: Vec<f32>,
+    },
+}
+
+impl KvBuf {
+    pub fn new(dtype: KvDtype) -> Self {
+        match dtype {
+            KvDtype::F32 => KvBuf::F32(Vec::new()),
+            KvDtype::F16 => KvBuf::F16(Vec::new()),
+            KvDtype::Bf16 => KvBuf::Bf16(Vec::new()),
+            KvDtype::I8 => KvBuf::I8 { q: Vec::new(), scales: Vec::new() },
+        }
+    }
+
+    /// An empty store with room for `rows` d-length rows (and their
+    /// scales), so appends up to that capacity never reallocate.
+    pub fn with_capacity_rows(dtype: KvDtype, rows: usize, d: usize) -> Self {
+        match dtype {
+            KvDtype::F32 => KvBuf::F32(Vec::with_capacity(rows * d)),
+            KvDtype::F16 => KvBuf::F16(Vec::with_capacity(rows * d)),
+            KvDtype::Bf16 => KvBuf::Bf16(Vec::with_capacity(rows * d)),
+            KvDtype::I8 => KvBuf::I8 {
+                q: Vec::with_capacity(rows * d),
+                scales: Vec::with_capacity(rows),
+            },
+        }
+    }
+
+    pub fn dtype(&self) -> KvDtype {
+        match self {
+            KvBuf::F32(_) => KvDtype::F32,
+            KvBuf::F16(_) => KvDtype::F16,
+            KvBuf::Bf16(_) => KvDtype::Bf16,
+            KvBuf::I8 { .. } => KvDtype::I8,
+        }
+    }
+
+    /// Stored rows (element count / `d`).
+    pub fn rows(&self, d: usize) -> usize {
+        match self {
+            KvBuf::F32(b) => b.len() / d,
+            KvBuf::F16(b) | KvBuf::Bf16(b) => b.len() / d,
+            KvBuf::I8 { scales, .. } => scales.len(),
+        }
+    }
+
+    /// Drop all stored rows, keeping the dtype and capacity (the
+    /// eviction path — a replay of the same appends rebuilds the store
+    /// bit for bit).
+    pub fn clear(&mut self) {
+        match self {
+            KvBuf::F32(b) => b.clear(),
+            KvBuf::F16(b) | KvBuf::Bf16(b) => b.clear(),
+            KvBuf::I8 { q, scales } => {
+                q.clear();
+                scales.clear();
+            }
+        }
+    }
+
+    /// Grow capacity to hold `rows` additional rows beyond the current
+    /// length (used by the contiguous slab open-block path).
+    pub fn reserve_rows(&mut self, rows: usize, d: usize) {
+        match self {
+            KvBuf::F32(b) => b.reserve(rows * d),
+            KvBuf::F16(b) | KvBuf::Bf16(b) => b.reserve(rows * d),
+            KvBuf::I8 { q, scales } => {
+                q.reserve(rows * d);
+                scales.reserve(rows);
+            }
+        }
+    }
+
+    /// Quantize-and-append one f32 row. Within reserved capacity this
+    /// allocates nothing.
+    pub fn append_row(&mut self, row: &[f32]) {
+        match self {
+            KvBuf::F32(b) => b.extend_from_slice(row),
+            KvBuf::F16(b) => b.extend(row.iter().map(|&x| f32_to_f16(x))),
+            KvBuf::Bf16(b) => b.extend(row.iter().map(|&x| f32_to_bf16(x))),
+            KvBuf::I8 { q, scales } => {
+                let mut amax = 0.0f32;
+                for &x in row.iter() {
+                    amax = amax.max(x.abs());
+                }
+                if amax == 0.0 {
+                    q.extend(std::iter::repeat(0i8).take(row.len()));
+                    scales.push(0.0);
+                } else {
+                    let inv = 127.0 / amax;
+                    q.extend(row.iter().map(|&x| (x * inv).round() as i8));
+                    scales.push(amax / 127.0);
+                }
+            }
+        }
+    }
+
+    /// Borrow rows `r0..r1` (row width `d`) as a [`KvView`].
+    pub fn view_rows(&self, r0: usize, r1: usize, d: usize) -> KvView<'_> {
+        let (a, b) = (r0 * d, r1 * d);
+        match self {
+            KvBuf::F32(buf) => KvView::F32(&buf[a..b]),
+            KvBuf::F16(buf) => KvView::F16(&buf[a..b]),
+            KvBuf::Bf16(buf) => KvView::Bf16(&buf[a..b]),
+            KvBuf::I8 { q, scales } => KvView::I8 { q: &q[a..b], scales: &scales[r0..r1] },
+        }
+    }
+
+    /// The raw f32 slab — only meaningful for `F32` stores (the legacy
+    /// accessors that promise `&[f32]` keep working on f32 caches;
+    /// quantized rows have no f32 slab to hand out).
+    pub fn as_f32(&self) -> &[f32] {
+        match self {
+            KvBuf::F32(b) => b,
+            other => panic!(
+                "as_f32 on a {} store: quantized rows must be read through KvView",
+                other.dtype().as_str()
+            ),
+        }
+    }
+
+    /// A copy with capacity for `cap_rows` rows — the page CoW split
+    /// (capacity-preserving so the copy keeps appending without
+    /// reallocating).
+    pub fn split_copy(&self, cap_rows: usize, d: usize) -> KvBuf {
+        let mut out = KvBuf::with_capacity_rows(self.dtype(), cap_rows, d);
+        match (&mut out, self) {
+            (KvBuf::F32(dst), KvBuf::F32(src)) => dst.extend_from_slice(src),
+            (KvBuf::F16(dst), KvBuf::F16(src)) => dst.extend_from_slice(src),
+            (KvBuf::Bf16(dst), KvBuf::Bf16(src)) => dst.extend_from_slice(src),
+            (KvBuf::I8 { q: dq, scales: ds }, KvBuf::I8 { q: sq, scales: ss }) => {
+                dq.extend_from_slice(sq);
+                ds.extend_from_slice(ss);
+            }
+            _ => unreachable!("split_copy preserves dtype"),
+        }
+        out
+    }
+}
+
+/// A borrowed, possibly-quantized span of rows. The kernels consume
+/// this instead of `&[f32]`: each accessor dispatches to the fused
+/// dequantizing `simd` kernel for its dtype, so dequantization happens
+/// in registers inside the reduction — never into a buffer.
+#[derive(Debug, Clone, Copy)]
+pub enum KvView<'a> {
+    F32(&'a [f32]),
+    F16(&'a [u16]),
+    Bf16(&'a [u16]),
+    I8 { q: &'a [i8], scales: &'a [f32] },
+}
+
+impl<'a> KvView<'a> {
+    pub fn dtype(&self) -> KvDtype {
+        match self {
+            KvView::F32(_) => KvDtype::F32,
+            KvView::F16(_) => KvDtype::F16,
+            KvView::Bf16(_) => KvDtype::Bf16,
+            KvView::I8 { .. } => KvDtype::I8,
+        }
+    }
+
+    /// Rows in the view at row width `d`.
+    pub fn rows(&self, d: usize) -> usize {
+        match self {
+            KvView::F32(b) => b.len() / d,
+            KvView::F16(b) | KvView::Bf16(b) => b.len() / d,
+            KvView::I8 { scales, .. } => scales.len(),
+        }
+    }
+
+    /// q · dequant(row r): the fused dequantizing dot, in the exact
+    /// lane order of `simd::dot` per the dtype-aware lane-order rule.
+    #[inline]
+    pub fn dot_row(&self, q: &[f32], r: usize, d: usize) -> f32 {
+        match *self {
+            KvView::F32(k) => simd::dot(q, &k[r * d..(r + 1) * d]),
+            KvView::F16(k) => simd::dequant_dot_f16(q, &k[r * d..(r + 1) * d]),
+            KvView::Bf16(k) => simd::dequant_dot_bf16(q, &k[r * d..(r + 1) * d]),
+            KvView::I8 { q: kq, scales } => {
+                simd::dequant_dot_i8(q, &kq[r * d..(r + 1) * d], scales[r])
+            }
+        }
+    }
+
+    /// y += a * dequant(row r): the fused dequantizing axpy, lane order
+    /// of `simd::axpy`.
+    #[inline]
+    pub fn axpy_row(&self, y: &mut [f32], a: f32, r: usize, d: usize) {
+        match *self {
+            KvView::F32(v) => simd::axpy(y, a, &v[r * d..(r + 1) * d]),
+            KvView::F16(v) => simd::dequant_axpy_f16(y, a, &v[r * d..(r + 1) * d]),
+            KvView::Bf16(v) => simd::dequant_axpy_bf16(y, a, &v[r * d..(r + 1) * d]),
+            KvView::I8 { q: vq, scales } => {
+                simd::dequant_axpy_i8(y, a, &vq[r * d..(r + 1) * d], scales[r])
+            }
+        }
+    }
+
+    /// Materialize the dequantized f32 rows (tests and diagnostics
+    /// only — the hot paths never do this; that is the whole point).
+    pub fn dequant_to_vec(&self, d: usize) -> Vec<f32> {
+        let rows = self.rows(d);
+        let mut out = Vec::with_capacity(rows * d);
+        for r in 0..rows {
+            match *self {
+                KvView::F32(b) => out.extend_from_slice(&b[r * d..(r + 1) * d]),
+                KvView::F16(b) => {
+                    out.extend(b[r * d..(r + 1) * d].iter().map(|&h| f16_to_f32(h)))
+                }
+                KvView::Bf16(b) => {
+                    out.extend(b[r * d..(r + 1) * d].iter().map(|&h| bf16_to_f32(h)))
+                }
+                KvView::I8 { q, scales } => out
+                    .extend(q[r * d..(r + 1) * d].iter().map(|&v| v as f32 * scales[r])),
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::testutil::Rng;
+
+    #[test]
+    fn dtype_names_round_trip() {
+        for dt in KvDtype::ALL {
+            assert_eq!(KvDtype::parse(dt.as_str()), Some(dt));
+        }
+        assert_eq!(KvDtype::parse("FP16"), Some(KvDtype::F16));
+        assert_eq!(KvDtype::parse("bogus"), None);
+        assert_eq!(KvDtype::default(), KvDtype::F32);
+        assert_eq!(KvDtype::F32.elem_bytes(), 4);
+        assert_eq!(KvDtype::F16.elem_bytes(), 2);
+        assert_eq!(KvDtype::Bf16.elem_bytes(), 2);
+        assert_eq!(KvDtype::I8.elem_bytes(), 1);
+    }
+
+    /// f16 -> f32 -> f16 is the identity on every one of the 65536 bit
+    /// patterns (NaNs compare by payload class: still NaN).
+    #[test]
+    fn f16_f32_f16_is_identity() {
+        for h in 0u16..=u16::MAX {
+            let x = f16_to_f32(h);
+            if x.is_nan() {
+                assert!(f16_to_f32(f32_to_f16(x)).is_nan(), "h={h:#06x}");
+            } else {
+                assert_eq!(f32_to_f16(x), h, "h={h:#06x} x={x}");
+            }
+        }
+    }
+
+    /// bf16 -> f32 -> bf16 identity over all non-NaN patterns.
+    #[test]
+    fn bf16_f32_bf16_is_identity() {
+        for h in 0u16..=u16::MAX {
+            let x = bf16_to_f32(h);
+            if x.is_nan() {
+                assert!(bf16_to_f32(f32_to_bf16(x)).is_nan(), "h={h:#06x}");
+            } else {
+                assert_eq!(f32_to_bf16(x), h, "h={h:#06x} x={x}");
+            }
+        }
+    }
+
+    /// Round-to-nearest-even at the halfway points: 1 + 2^-11 is exactly
+    /// between 1.0 and the next f16 (1 + 2^-10) — it must round to the
+    /// even mantissa (1.0); 1 + 3*2^-11 rounds up to 1 + 2*2^-10.
+    #[test]
+    fn f16_rounds_ties_to_even() {
+        assert_eq!(f32_to_f16(1.0 + 2.0f32.powi(-11)), f32_to_f16(1.0));
+        assert_eq!(
+            f32_to_f16(1.0 + 3.0 * 2.0f32.powi(-11)),
+            f32_to_f16(1.0 + 2.0 * 2.0f32.powi(-10))
+        );
+        // overflow saturates to inf, tiny values flush through subnormals to 0
+        assert_eq!(f16_to_f32(f32_to_f16(1e6)), f32::INFINITY);
+        assert_eq!(f16_to_f32(f32_to_f16(-1e6)), f32::NEG_INFINITY);
+        assert_eq!(f16_to_f32(f32_to_f16(1e-10)), 0.0);
+        // subnormal range survives: 2^-24 is the smallest f16 subnormal
+        assert_eq!(f16_to_f32(f32_to_f16(2.0f32.powi(-24))), 2.0f32.powi(-24));
+    }
+
+    /// f16 relative error on normals is bounded by 2^-11 (half ulp).
+    #[test]
+    fn f16_relative_error_bound() {
+        let mut rng = Rng::new(42);
+        for _ in 0..10_000 {
+            let x = rng.normal() as f32 * 3.0;
+            let r = f16_to_f32(f32_to_f16(x));
+            assert!(
+                (r - x).abs() <= x.abs() * 2.0f32.powi(-11) + f32::EPSILON,
+                "x={x} r={r}"
+            );
+        }
+    }
+
+    /// I8 rows: round-trip error per element is bounded by half a
+    /// quantization step (scale / 2), and an all-zero row stays zero.
+    #[test]
+    fn i8_row_quantization_error_bound() {
+        let mut rng = Rng::new(7);
+        for d in [1usize, 3, 8, 16, 64] {
+            let row: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+            let mut buf = KvBuf::new(KvDtype::I8);
+            buf.append_row(&row);
+            let back = buf.view_rows(0, 1, d).dequant_to_vec(d);
+            let amax = row.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            let step = amax / 127.0;
+            for (a, b) in row.iter().zip(&back) {
+                assert!((a - b).abs() <= step * 0.5 + 1e-7, "{a} vs {b} (step {step})");
+            }
+        }
+        let mut z = KvBuf::new(KvDtype::I8);
+        z.append_row(&[0.0; 4]);
+        assert_eq!(z.view_rows(0, 1, 4).dequant_to_vec(4), vec![0.0; 4]);
+    }
+
+    /// Append/view bookkeeping across all dtypes: row counts, reserved
+    /// capacity, split_copy equality and capacity preservation.
+    #[test]
+    fn kvbuf_rows_views_and_split_copy() {
+        let mut rng = Rng::new(9);
+        let d = 8;
+        for dt in KvDtype::ALL {
+            let mut buf = KvBuf::with_capacity_rows(dt, 16, d);
+            assert_eq!(buf.dtype(), dt);
+            let mut rows = Vec::new();
+            for _ in 0..5 {
+                let row = rng.normal_vec(d);
+                buf.append_row(&row);
+                rows.push(row);
+            }
+            assert_eq!(buf.rows(d), 5);
+            let full = buf.view_rows(0, 5, d);
+            assert_eq!(full.rows(d), 5);
+            let deq = full.dequant_to_vec(d);
+            // a sub-view dequantizes to the matching slice of the full view
+            let sub = buf.view_rows(2, 4, d).dequant_to_vec(d);
+            assert_eq!(&deq[2 * d..4 * d], &sub[..]);
+            // split_copy: same contents, requested capacity
+            let copy = buf.split_copy(16, d);
+            assert_eq!(copy.rows(d), 5);
+            assert_eq!(copy.view_rows(0, 5, d).dequant_to_vec(d), deq);
+            // round-trip agrees with the scalar reference per element
+            for (r, row) in rows.iter().enumerate() {
+                let amax = row.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+                for (c, &x) in row.iter().enumerate() {
+                    assert_eq!(
+                        deq[r * d + c].to_bits(),
+                        quantize_roundtrip(dt, x, amax).to_bits(),
+                        "{dt:?} r={r} c={c}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// F32 stores are byte-transparent: what goes in comes out bitwise
+    /// through both the view and the legacy `as_f32` slab.
+    #[test]
+    fn f32_store_is_transparent() {
+        let mut rng = Rng::new(11);
+        let d = 6;
+        let mut buf = KvBuf::new(KvDtype::F32);
+        let rows: Vec<f32> = rng.normal_vec(3 * d);
+        for r in 0..3 {
+            buf.append_row(&rows[r * d..(r + 1) * d]);
+        }
+        assert_eq!(buf.as_f32(), &rows[..]);
+        assert_eq!(buf.view_rows(0, 3, d).dequant_to_vec(d), rows);
+    }
+
+    #[test]
+    #[should_panic]
+    fn as_f32_panics_on_quantized_store() {
+        let mut buf = KvBuf::new(KvDtype::F16);
+        buf.append_row(&[1.0, 2.0]);
+        let _ = buf.as_f32();
+    }
+}

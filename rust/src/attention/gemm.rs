@@ -27,6 +27,20 @@
 //! multiply-adds in ascending value-row order — element-wise the
 //! identical f32 sequence as the `scale` + per-row `axpy` formulation.
 
+//! **Dtype-specialized variants.** Each kernel has a `_view` twin
+//! taking a [`super::dtype::KvView`] instead of an `&[f32]` K/V
+//! operand. `KvView::F32` delegates to the f32 kernel unchanged (bit
+//! transparency for the legacy store); quantized views (f16 / bf16 /
+//! int8-with-scale) go through the fused `simd::dequant_*` kernels,
+//! which widen each element in registers inside the reduction — no
+//! f32 copy of a row or block is ever materialized, preserving the
+//! zero-alloc contract. Because every fused dequant kernel is
+//! bit-identical to "expand the row to f32, then run the f32 kernel"
+//! (pinned in `simd.rs` tests), a quantized `_view` call equals the
+//! f32 kernel on the dequantized store, bit for bit — that identity is
+//! what makes per-dtype determinism inherit from the lane-order rule.
+
+use super::dtype::KvView;
 use super::simd::dot;
 
 const LANES: usize = 8;
@@ -243,11 +257,105 @@ pub fn accum_rows(acc: &mut [f32], p: &[f32], v: &[f32]) {
     }
 }
 
+/// [`qkt_tile`] over a dtype-erased key store: `KvView::F32` delegates
+/// to the register-blocked f32 tile; quantized views compute each
+/// element with the fused dequant dot (dequantization stays inside the
+/// dot's register lanes), so the result equals the f32 tile on the
+/// dequantized rows bit for bit.
+#[allow(clippy::too_many_arguments)]
+pub fn qkt_tile_view(
+    q: &[f32],
+    k: &KvView<'_>,
+    d: usize,
+    rows: usize,
+    cols: usize,
+    scale: f32,
+    s: &mut [f32],
+    s_stride: usize,
+) {
+    if let KvView::F32(kf) = k {
+        return qkt_tile(q, kf, d, rows, cols, scale, s, s_stride);
+    }
+    debug_assert!(q.len() >= rows * d);
+    debug_assert!(k.rows(d) >= cols);
+    for r in 0..rows {
+        let qt = &q[r * d..(r + 1) * d];
+        let srow = &mut s[r * s_stride..r * s_stride + cols];
+        for (c, sval) in srow.iter_mut().enumerate() {
+            *sval = k.dot_row(qt, c, d) * scale;
+        }
+    }
+}
+
+/// [`qk_row`] over a dtype-erased key store (single-row decode form).
+pub fn qk_row_view(q: &[f32], k: &KvView<'_>, d: usize, cols: usize, scale: f32, s: &mut [f32]) {
+    if let KvView::F32(kf) = k {
+        return qk_row(q, kf, d, cols, scale, s);
+    }
+    debug_assert!(k.rows(d) >= cols);
+    debug_assert!(s.len() >= cols);
+    for (c, sval) in s.iter_mut().enumerate().take(cols) {
+        *sval = k.dot_row(q, c, d) * scale;
+    }
+}
+
+/// [`qk_row_raw`] over a dtype-erased key store — raw dots, no trailing
+/// scale (the routing/top-k form). Routing normally scores f32
+/// centroids, so this only runs when a caller scores quantized keys
+/// directly.
+pub fn qk_row_raw_view(q: &[f32], k: &KvView<'_>, d: usize, cols: usize, s: &mut [f32]) {
+    if let KvView::F32(kf) = k {
+        return qk_row_raw(q, kf, d, cols, s);
+    }
+    debug_assert!(k.rows(d) >= cols);
+    debug_assert!(s.len() >= cols);
+    for (c, sval) in s.iter_mut().enumerate().take(cols) {
+        *sval = k.dot_row(q, c, d);
+    }
+}
+
+/// [`softmax_accum`] over a dtype-erased value store. Quantized views
+/// apply `corr` once then the per-row dequant axpy sequence with the
+/// `p == 0.0` skip — element-wise the identical f32 operation order as
+/// the fused f32 kernel on the dequantized rows.
+pub fn softmax_accum_view(acc: &mut [f32], corr: f32, p: &[f32], v: &KvView<'_>) {
+    if let KvView::F32(vf) = v {
+        return softmax_accum(acc, corr, p, vf);
+    }
+    let d = acc.len();
+    debug_assert!(v.rows(d) >= p.len());
+    if corr != 1.0 {
+        super::simd::scale(acc, corr);
+    }
+    for (c, &pc) in p.iter().enumerate() {
+        if pc == 0.0 {
+            continue;
+        }
+        v.axpy_row(acc, pc, c, d);
+    }
+}
+
+/// [`accum_rows`] over a dtype-erased value store: the skip-free
+/// ascending axpy sequence (decode single-row semantics), dequantizing
+/// per row in registers.
+pub fn accum_rows_view(acc: &mut [f32], p: &[f32], v: &KvView<'_>) {
+    if let KvView::F32(vf) = v {
+        return accum_rows(acc, p, vf);
+    }
+    let d = acc.len();
+    debug_assert!(v.rows(d) >= p.len());
+    for (c, &pc) in p.iter().enumerate() {
+        v.axpy_row(acc, pc, c, d);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::attention::dtype::KvBuf;
     use crate::attention::simd::{axpy, scale as vscale};
     use crate::attention::testutil::Rng;
+    use crate::attention::KvDtype;
 
     fn bits_eq(a: &[f32], b: &[f32], what: &str) {
         assert_eq!(a.len(), b.len(), "{what}: length");
@@ -369,5 +477,93 @@ mod tests {
         softmax_accum(&mut acc, 1.0, &[], &[]);
         accum_rows(&mut acc, &[], &[]);
         assert_eq!(acc, [1.0, 2.0]);
+    }
+
+    fn quantized_store(rng: &mut Rng, dtype: KvDtype, rows: usize, d: usize) -> KvBuf {
+        let mut buf = KvBuf::new(dtype);
+        for _ in 0..rows {
+            buf.append_row(&rng.normal_vec(d));
+        }
+        buf
+    }
+
+    /// An F32 view delegates straight to the f32 kernels — the legacy
+    /// store's outputs are untouched by the view layer.
+    #[test]
+    fn view_kernels_on_f32_store_are_bit_transparent() {
+        let mut rng = Rng::new(11);
+        let (rows, cols, d) = (3, 7, 13);
+        let q = rng.normal_vec(rows * d);
+        let k = quantized_store(&mut rng, KvDtype::F32, cols, d);
+        let kf = k.as_f32().to_vec();
+        let view = k.view_rows(0, cols, d);
+        let stride = cols + 2;
+        let mut s1 = vec![0.0f32; rows * stride];
+        let mut s2 = s1.clone();
+        qkt_tile_view(&q, &view, d, rows, cols, 0.41, &mut s1, stride);
+        qkt_tile(&q, &kf, d, rows, cols, 0.41, &mut s2, stride);
+        bits_eq(&s1, &s2, "qkt_tile f32 view");
+        let mut r1 = vec![0.0f32; cols];
+        let mut r2 = r1.clone();
+        qk_row_view(&q[..d], &view, d, cols, 1.3, &mut r1);
+        qk_row(&q[..d], &kf, d, cols, 1.3, &mut r2);
+        bits_eq(&r1, &r2, "qk_row f32 view");
+        qk_row_raw_view(&q[..d], &view, d, cols, &mut r1);
+        qk_row_raw(&q[..d], &kf, d, cols, &mut r2);
+        bits_eq(&r1, &r2, "qk_row_raw f32 view");
+        let p = rng.normal_vec(cols);
+        let mut a1 = rng.normal_vec(d);
+        let mut a2 = a1.clone();
+        softmax_accum_view(&mut a1, 0.625, &p, &view);
+        softmax_accum(&mut a2, 0.625, &p, &kf);
+        bits_eq(&a1, &a2, "softmax_accum f32 view");
+        accum_rows_view(&mut a1, &p, &view);
+        accum_rows(&mut a2, &p, &kf);
+        bits_eq(&a1, &a2, "accum_rows f32 view");
+    }
+
+    /// A quantized view kernel == the f32 kernel run on the dequantized
+    /// rows, bit for bit — for every quantized dtype, crossing the 2x4
+    /// micro-tile and 8-lane boundaries.
+    #[test]
+    fn quantized_view_kernels_equal_f32_kernels_on_dequantized_rows() {
+        for dtype in [KvDtype::F16, KvDtype::Bf16, KvDtype::I8] {
+            let mut rng = Rng::new(12);
+            for d in [1, 8, 9, 16, 24] {
+                for cols in [1, 3, 4, 5, 9] {
+                    let rows = 3;
+                    let q = rng.normal_vec(rows * d);
+                    let store = quantized_store(&mut rng, dtype, cols, d);
+                    let view = store.view_rows(0, cols, d);
+                    let deq = view.dequant_to_vec(d);
+                    let stride = cols + 1;
+                    let mut s1 = vec![0.0f32; rows * stride];
+                    let mut s2 = s1.clone();
+                    qkt_tile_view(&q, &view, d, rows, cols, 0.37, &mut s1, stride);
+                    qkt_tile(&q, &deq, d, rows, cols, 0.37, &mut s2, stride);
+                    bits_eq(&s1, &s2, &format!("qkt_tile {dtype:?} d={d} cols={cols}"));
+                    let mut r1 = vec![0.0f32; cols];
+                    let mut r2 = r1.clone();
+                    qk_row_view(&q[..d], &view, d, cols, 1.7, &mut r1);
+                    qk_row(&q[..d], &deq, d, cols, 1.7, &mut r2);
+                    bits_eq(&r1, &r2, &format!("qk_row {dtype:?} d={d} cols={cols}"));
+                    qk_row_raw_view(&q[..d], &view, d, cols, &mut r1);
+                    qk_row_raw(&q[..d], &deq, d, cols, &mut r2);
+                    bits_eq(&r1, &r2, &format!("qk_row_raw {dtype:?} d={d} cols={cols}"));
+                    for corr in [1.0f32, 0.625] {
+                        let mut p = rng.normal_vec(cols);
+                        p[cols / 2] = 0.0;
+                        let mut a1 = rng.normal_vec(d);
+                        let mut a2 = a1.clone();
+                        softmax_accum_view(&mut a1, corr, &p, &view);
+                        softmax_accum(&mut a2, corr, &p, &deq);
+                        bits_eq(&a1, &a2, &format!("softmax_accum {dtype:?} d={d}"));
+                        accum_rows_view(&mut a1, &p, &view);
+                        accum_rows(&mut a2, &p, &deq);
+                        bits_eq(&a1, &a2, &format!("accum_rows {dtype:?} d={d}"));
+                    }
+                }
+            }
+        }
     }
 }

@@ -20,6 +20,12 @@
 //!   fused online-softmax accumulate) under every kernel above; the
 //!   lane-order rule keeps them bit-identical to the scalar
 //!   [`simd`]-based formulation (see README.md §Performance).
+//! * [`dtype`] — the [`dtype::KvDtype`] storage axis: cached K/V rows
+//!   may be f16 / bf16 / int8-with-per-row-scales, dequantized inside
+//!   the [`simd`] / [`gemm`] kernels (never materialized back to f32);
+//!   centroid sums stay f32 so routing is dtype-invariant. [`simd`]
+//!   itself resolves a runtime ISA table (AVX2 / NEON / scalar) whose
+//!   variants are bit-identical to each other.
 //! * [`decode`] — incremental autoregressive decode: per-session block
 //!   KV cache with running centroids and streaming MoBA routing, parity
 //!   locked against the prefill kernels.
@@ -51,6 +57,7 @@ pub mod backward;
 pub mod centroid;
 pub mod decode;
 pub mod dense;
+pub mod dtype;
 pub mod flash_moba;
 pub mod gemm;
 pub mod kconv;
@@ -65,6 +72,7 @@ pub mod varlen;
 
 pub use backend::{AttentionBackend, BackendRegistry};
 pub use decode::{DecodeSession, KvCache};
+pub use dtype::KvDtype;
 pub use paged::{PagePool, PoolStats};
 pub use plan::{HeadMode, HeadPlan, RoutePlan};
 pub use stats::StageStats;

@@ -32,8 +32,23 @@
 //! and the per-block centroid sum accumulates in the same arrival
 //! order — so paged decode is bit-identical to the contiguous path
 //! (pinned by `rust/tests/paged_parity.rs`).
+//!
+//! **Quantized pages & byte-true budgets.** A page's K/V rows live in a
+//! [`KvBuf`] of the cache's [`KvDtype`] (f32 / f16 / bf16 / int8 with
+//! per-row scales) while the centroid `sum` always accumulates the
+//! *pre-quantization* f32 rows — routing reads only sums, so block
+//! selection is dtype-invariant. Budget accounting is **byte-true**:
+//! the pool charges each page `elem_bytes(dtype)` *units* (f32 = 4,
+//! f16/bf16 = 2, i8 = 1) against a budget of `max_pages * 4` units —
+//! i.e. `max_pages` is denominated in f32-page-equivalents, so an f16
+//! cache really does fit twice the sessions in the same budget
+//! (previously admission counted pages regardless of width). Page
+//! *counts* (`live`, `peak`, table sizes) remain dtype-independent;
+//! only admission cost is weighted.
 
 use std::sync::{Arc, Mutex, Weak};
+
+use super::dtype::{KvBuf, KvDtype, KvView};
 
 /// One page: the K/V rows and running centroid-sum metadata of one
 /// logical block of one KV head. Capacity (`cap_rows` == the pool's
@@ -45,37 +60,54 @@ pub struct PageData {
     cap_rows: usize,
     /// token rows stored so far (<= cap_rows)
     len: usize,
-    /// (len, d) row-major keys (post-kconv when the cache streams one)
-    k: Vec<f32>,
-    /// (len, d) row-major values
-    v: Vec<f32>,
+    /// (len, d) row-major keys (post-kconv when the cache streams one),
+    /// stored in the cache's [`KvDtype`]
+    k: KvBuf,
+    /// (len, d) row-major values, same dtype as `k`
+    v: KvBuf,
     /// running key sum of this page's rows, (d) — divided by `len` at
     /// read time to form the block centroid, exactly like the
-    /// contiguous store's `sums` slab
+    /// contiguous store's `sums` slab. Always f32, accumulated from the
+    /// *pre-quantization* rows, so routing never sees quantization.
     sum: Vec<f32>,
 }
 
 impl PageData {
-    fn new(cap_rows: usize, d: usize) -> Self {
+    fn new(cap_rows: usize, d: usize, dtype: KvDtype) -> Self {
         Self {
             d,
             cap_rows,
             len: 0,
-            k: Vec::with_capacity(cap_rows * d),
-            v: Vec::with_capacity(cap_rows * d),
+            k: KvBuf::with_capacity_rows(dtype, cap_rows, d),
+            v: KvBuf::with_capacity_rows(dtype, cap_rows, d),
             sum: vec![0.0; d],
         }
     }
 
     /// Capacity-preserving deep copy (the CoW split body). A derived
-    /// `Clone` would size the new vectors to `len * d` and lose the
+    /// `Clone` would size the new buffers to `len * d` and lose the
     /// reserve, breaking the no-realloc append contract.
     fn split_copy(&self) -> Self {
-        let mut k = Vec::with_capacity(self.cap_rows * self.d);
-        k.extend_from_slice(&self.k);
-        let mut v = Vec::with_capacity(self.cap_rows * self.d);
-        v.extend_from_slice(&self.v);
-        Self { d: self.d, cap_rows: self.cap_rows, len: self.len, k, v, sum: self.sum.clone() }
+        Self {
+            d: self.d,
+            cap_rows: self.cap_rows,
+            len: self.len,
+            k: self.k.split_copy(self.cap_rows, self.d),
+            v: self.v.split_copy(self.cap_rows, self.d),
+            sum: self.sum.clone(),
+        }
+    }
+
+    /// Storage dtype of this page's K/V rows.
+    pub fn dtype(&self) -> KvDtype {
+        self.k.dtype()
+    }
+
+    /// Byte-true budget weight of this page: bytes per stored element
+    /// (f32 = 4, f16/bf16 = 2, i8 = 1) — what the pool charges against
+    /// its unit budget.
+    pub fn units(&self) -> usize {
+        self.k.dtype().elem_bytes()
     }
 
     /// Token rows stored.
@@ -92,14 +124,28 @@ impl PageData {
         self.len == self.cap_rows
     }
 
-    /// Stored keys, `(len, d)` row-major.
+    /// Stored keys as raw f32, `(len, d)` row-major — the legacy f32
+    /// accessor; panics on a quantized page (read [`PageData::k_view`]
+    /// instead).
     pub fn k(&self) -> &[f32] {
-        &self.k
+        self.k.as_f32()
     }
 
-    /// Stored values, `(len, d)` row-major.
+    /// Stored values as raw f32, `(len, d)` row-major (f32 pages only).
     pub fn v(&self) -> &[f32] {
-        &self.v
+        self.v.as_f32()
+    }
+
+    /// Dtype-erased view of the stored keys — what the decode kernels
+    /// attend through (dequantization happens inside the simd/gemm
+    /// kernels, never as a materialized copy).
+    pub fn k_view(&self) -> KvView<'_> {
+        self.k.view_rows(0, self.len, self.d)
+    }
+
+    /// Dtype-erased view of the stored values.
+    pub fn v_view(&self) -> KvView<'_> {
+        self.v.view_rows(0, self.len, self.d)
     }
 
     /// Running key sum over this page's rows, `(d)`.
@@ -108,7 +154,9 @@ impl PageData {
     }
 
     /// Append one `(d)` key/value row, accumulating the centroid sum in
-    /// arrival order (the same f32 additions as the contiguous store).
+    /// arrival order (the same f32 additions as the contiguous store —
+    /// the sum reads the caller's full-precision row, *then* the row is
+    /// quantized into the store).
     pub fn append_row(&mut self, kr: &[f32], vr: &[f32]) {
         assert_eq!(kr.len(), self.d);
         assert_eq!(vr.len(), self.d);
@@ -116,8 +164,8 @@ impl PageData {
         for (s, &x) in self.sum.iter_mut().zip(kr) {
             *s += x;
         }
-        self.k.extend_from_slice(kr);
-        self.v.extend_from_slice(vr);
+        self.k.append_row(kr);
+        self.v.append_row(vr);
         self.len += 1;
     }
 }
@@ -129,6 +177,11 @@ struct PoolState {
     live: usize,
     /// high-water mark of `live`
     peak: usize,
+    /// byte-true budget charge of the live pages: each page counts its
+    /// `elem_bytes(dtype)` (f32 = 4) — see [`PagePool::would_fit_units`]
+    live_units: usize,
+    /// high-water mark of `live_units`
+    peak_units: usize,
     /// pages ever materialized (fresh allocs + CoW splits)
     allocated: u64,
     /// pages returned (last handle dropped)
@@ -149,13 +202,16 @@ struct PoolShared {
 }
 
 impl PoolShared {
-    /// Register one materialized page; returns its id.
-    fn note_alloc(&self, splits: u64) -> u64 {
+    /// Register one materialized page of `units` budget weight;
+    /// returns its id.
+    fn note_alloc(&self, splits: u64, units: usize) -> u64 {
         let mut st = self.state.lock().unwrap();
         st.allocated += 1;
         st.cow_splits += splits;
         st.live += 1;
         st.peak = st.peak.max(st.live);
+        st.live_units += units;
+        st.peak_units = st.peak_units.max(st.live_units);
         let id = st.next_id;
         st.next_id += 1;
         id
@@ -167,6 +223,9 @@ impl PoolShared {
 pub struct PoolStats {
     pub live: usize,
     pub peak: usize,
+    /// dtype-weighted budget charge of the live pages (f32 page = 4)
+    pub live_units: usize,
+    pub peak_units: usize,
     pub allocated: u64,
     pub freed: u64,
     pub cow_splits: u64,
@@ -208,25 +267,53 @@ impl PagePool {
         self.shared.max_pages
     }
 
-    /// Materialize a fresh page with `(d)`-wide rows. Never fails: the
-    /// budget is enforced by admission control, not allocation — a
-    /// decode step that was admitted must be able to finish.
+    /// Materialize a fresh f32 page with `(d)`-wide rows (the legacy
+    /// entry point — see [`PagePool::alloc_dtype`]).
     pub fn alloc(&self, d: usize) -> PageHandle {
+        self.alloc_dtype(d, KvDtype::F32)
+    }
+
+    /// Materialize a fresh page with `(d)`-wide rows stored as `dtype`.
+    /// Never fails: the budget is enforced by admission control, not
+    /// allocation — a decode step that was admitted must be able to
+    /// finish. The page is charged `elem_bytes(dtype)` units against
+    /// the byte-true budget.
+    pub fn alloc_dtype(&self, d: usize, dtype: KvDtype) -> PageHandle {
         assert!(d >= 1);
-        let id = self.shared.note_alloc(0);
+        let id = self.shared.note_alloc(0, dtype.elem_bytes());
         PageHandle {
             id,
             pool: Arc::downgrade(&self.shared),
-            data: Some(Arc::new(PageData::new(self.shared.page_tokens, d))),
+            data: Some(Arc::new(PageData::new(self.shared.page_tokens, d, dtype))),
         }
     }
 
-    /// Would `extra` more live pages still fit under the budget?
+    /// Would `extra` more live **f32** pages still fit under the
+    /// budget? Compat wrapper over [`PagePool::would_fit_units`] for
+    /// dtype-oblivious callers (charges the full 4 units per page).
     pub fn would_fit(&self, extra: usize) -> bool {
+        self.would_fit_units(extra * KvDtype::F32.elem_bytes())
+    }
+
+    /// Would `units` more budget units still fit? The budget is
+    /// byte-true: `max_pages` f32-page-equivalents = `max_pages * 4`
+    /// units, and each live page charges its `elem_bytes(dtype)` —
+    /// so halving the storage width really doubles admission capacity.
+    pub fn would_fit_units(&self, units: usize) -> bool {
         match self.shared.max_pages {
             None => true,
-            Some(m) => self.shared.state.lock().unwrap().live + extra <= m,
+            Some(m) => {
+                self.shared.state.lock().unwrap().live_units + units
+                    <= m * KvDtype::F32.elem_bytes()
+            }
         }
+    }
+
+    /// Dtype-weighted budget charge of `pages` pages stored as `dtype`
+    /// — the admission cost the coordinator passes to
+    /// [`PagePool::would_fit_units`].
+    pub fn units_for(pages: usize, dtype: KvDtype) -> usize {
+        pages * dtype.elem_bytes()
     }
 
     /// Record `n` page-table entries satisfied by sharing existing
@@ -241,6 +328,8 @@ impl PagePool {
         PoolStats {
             live: st.live,
             peak: st.peak,
+            live_units: st.live_units,
+            peak_units: st.peak_units,
             allocated: st.allocated,
             freed: st.freed,
             cow_splits: st.cow_splits,
@@ -251,6 +340,11 @@ impl PagePool {
     /// Pages currently held by at least one handle.
     pub fn live_pages(&self) -> usize {
         self.shared.state.lock().unwrap().live
+    }
+
+    /// Dtype-weighted budget units currently charged (f32 page = 4).
+    pub fn live_units(&self) -> usize {
+        self.shared.state.lock().unwrap().live_units
     }
 
     /// Pages ever materialized (fresh allocs + CoW splits).
@@ -324,8 +418,9 @@ impl PageHandle {
         let shared = Arc::get_mut(self.data.as_mut().expect("live handle")).is_none();
         if shared {
             let copy = Arc::new(self.data.as_ref().expect("live handle").split_copy());
+            let units = copy.units();
             if let Some(pool) = self.pool.upgrade() {
-                self.id = pool.note_alloc(1);
+                self.id = pool.note_alloc(1, units);
                 // replace our entry under the lock-free Arc swap; the
                 // refcount on the original drops by one, the sibling
                 // keeps it live
@@ -362,6 +457,7 @@ impl Drop for PageHandle {
             if Arc::strong_count(&arc) == 1 {
                 st.live -= 1;
                 st.freed += 1;
+                st.live_units -= arc.units();
             }
             drop(arc);
         }
@@ -512,5 +608,83 @@ mod tests {
         let _p = alias.alloc(4);
         assert_eq!(pool.live_pages(), 1);
         assert!(!pool.same_pool(&PagePool::new(8, None)));
+    }
+
+    /// A quantized page keeps its centroid sum in f32, accumulated from
+    /// the pre-quantization rows — bitwise equal to an f32 page fed the
+    /// same rows — while the stored K/V really is half width.
+    #[test]
+    fn quantized_pages_keep_f32_centroid_sums() {
+        let pool = PagePool::new(4, None);
+        let rows = [[1.5f32, -2.25, 0.125], [0.75, 3.0, -1.0]];
+        let mut f32p = pool.alloc(3);
+        let mut f16p = pool.alloc_dtype(3, KvDtype::F16);
+        for r in &rows {
+            f32p.make_mut().append_row(r, r);
+            f16p.make_mut().append_row(r, r);
+        }
+        assert_eq!(f16p.data().dtype(), KvDtype::F16);
+        assert_eq!(f16p.data().len(), 2);
+        for (a, b) in f32p.data().sum().iter().zip(f16p.data().sum()) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // these rows are f16-exact, so the view reads them back intact
+        let deq = f16p.data().k_view().dequant_to_vec(3);
+        assert_eq!(deq, f32p.data().k());
+        assert_eq!(f16p.data().units(), 2);
+        assert_eq!(f32p.data().units(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "as_f32 on a i8 store")]
+    fn raw_f32_accessor_panics_on_quantized_page() {
+        let pool = PagePool::new(4, None);
+        let h = pool.alloc_dtype(2, KvDtype::I8);
+        let _ = h.data().k();
+    }
+
+    /// The byte-true accounting satellite, pool level: under the same
+    /// `max_pages` (f32-equivalent) budget, an f16 cache admits exactly
+    /// twice the pages an f32 cache does, and int8 four times.
+    #[test]
+    fn f16_pages_admit_twice_as_many_under_the_same_budget() {
+        let budget = 4; // 4 f32-page-equivalents = 16 units
+        let admit = |dtype: KvDtype| {
+            let pool = PagePool::new(8, Some(budget));
+            let mut held = Vec::new();
+            while pool.would_fit_units(PagePool::units_for(1, dtype)) {
+                held.push(pool.alloc_dtype(2, dtype));
+            }
+            held.len()
+        };
+        assert_eq!(admit(KvDtype::F32), 4);
+        assert_eq!(admit(KvDtype::F16), 8);
+        assert_eq!(admit(KvDtype::Bf16), 8);
+        assert_eq!(admit(KvDtype::I8), 16);
+    }
+
+    /// Unit accounting survives the full page lifecycle: alloc, CoW
+    /// split, and drop all keep `live_units` == sum of live pages'
+    /// weights (and the f32 compat `would_fit` still counts 4 each).
+    #[test]
+    fn unit_accounting_tracks_alloc_split_and_drop() {
+        let pool = PagePool::new(4, Some(10));
+        let mut a = pool.alloc_dtype(2, KvDtype::F16);
+        a.make_mut().append_row(&[1.0, 2.0], &[3.0, 4.0]);
+        let b = a.clone(); // shared: no new page, no new units
+        assert_eq!(pool.live_units(), 2);
+        a.make_mut().append_row(&[5.0, 6.0], &[7.0, 8.0]); // CoW split
+        assert_eq!(pool.live_pages(), 2);
+        assert_eq!(pool.live_units(), 4);
+        assert_eq!(pool.stats().peak_units, 4);
+        let c = pool.alloc(2); // f32 compat path charges 4
+        assert_eq!(pool.live_units(), 8);
+        assert!(pool.would_fit(8)); // 8 + 8*4 > 40? no: 8+32=40 <= 40
+        assert!(!pool.would_fit(9));
+        drop(c);
+        drop(a);
+        drop(b);
+        assert_eq!(pool.live_units(), 0);
+        assert_eq!(pool.live_pages(), 0);
     }
 }

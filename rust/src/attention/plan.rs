@@ -32,6 +32,7 @@
 //! probe entirely — nothing compares below `-inf`, so uniform plans
 //! never take the fallback branch.
 
+use super::dtype::KvDtype;
 use crate::util::json::Json;
 
 /// How one KV head attends: routed MoBA top-k, or full dense causal.
@@ -77,6 +78,12 @@ pub struct RoutePlan {
     /// Runtime dense-fallback threshold on the observed routing score
     /// margin. `-inf` (the default) disables the probe.
     pub fallback_margin: f32,
+    /// KV-cache storage dtype for sessions decoding under this plan.
+    /// `None` defers to the deployment default (`MOBA_KV_DTYPE` env,
+    /// then `serve.kv_dtype` config, then f32). Routing is f32
+    /// regardless — the dtype only changes how cached K/V rows are
+    /// stored and read, never which blocks are selected.
+    pub kv_dtype: Option<KvDtype>,
 }
 
 impl RoutePlan {
@@ -86,6 +93,7 @@ impl RoutePlan {
         RoutePlan {
             heads: vec![HeadPlan::routed(block, topk); h_kv.max(1)],
             fallback_margin: f32::NEG_INFINITY,
+            kv_dtype: None,
         }
     }
 
@@ -154,6 +162,7 @@ impl RoutePlan {
     //   {
     //     "n_kv_heads": 2,
     //     "fallback_margin": 0.05,          // omitted when disabled
+    //     "kv_dtype": "f16",                // omitted when deferred
     //     "heads": [
     //       {"block": 32, "topk": 4, "mode": "routed"},
     //       {"block": 64, "topk": 0, "mode": "dense"}
@@ -183,6 +192,10 @@ impl RoutePlan {
         // -inf is not representable in JSON; absence means "disabled"
         if self.fallback_enabled() {
             pairs.push(("fallback_margin", Json::from(self.fallback_margin as f64)));
+        }
+        // absence means "defer to the deployment default"
+        if let Some(dt) = self.kv_dtype {
+            pairs.push(("kv_dtype", Json::from(dt.as_str())));
         }
         pairs.push(("heads", Json::Arr(heads)));
         Json::obj(pairs)
@@ -222,7 +235,19 @@ impl RoutePlan {
             .and_then(|x| x.as_f64())
             .map(|x| x as f32)
             .unwrap_or(f32::NEG_INFINITY);
-        Ok(RoutePlan { heads, fallback_margin })
+        let kv_dtype = match j.get("kv_dtype") {
+            None => None,
+            Some(x) => {
+                let s = x
+                    .as_str()
+                    .ok_or_else(|| "route plan: \"kv_dtype\" must be a string".to_string())?;
+                Some(
+                    KvDtype::parse(s)
+                        .ok_or_else(|| format!("route plan: unknown kv_dtype {s:?}"))?,
+                )
+            }
+        };
+        Ok(RoutePlan { heads, fallback_margin, kv_dtype })
     }
 
     /// Parse a plan from JSON text (a plan file's contents).
@@ -254,7 +279,11 @@ mod tests {
         q.heads[0] = HeadPlan::dense(64);
         assert_eq!(q.is_uniform(), None);
         // all-dense single head: not uniform either (uniform == routed)
-        let r = RoutePlan { heads: vec![HeadPlan::dense(16)], fallback_margin: f32::NEG_INFINITY };
+        let r = RoutePlan {
+            heads: vec![HeadPlan::dense(16)],
+            fallback_margin: f32::NEG_INFINITY,
+            kv_dtype: None,
+        };
         assert_eq!(r.is_uniform(), None);
     }
 
@@ -270,7 +299,8 @@ mod tests {
         let mut r = RoutePlan::uniform(2, 64, 8);
         r.heads[1] = HeadPlan::dense(64);
         assert!(r.validate(128).is_ok());
-        let empty = RoutePlan { heads: vec![], fallback_margin: f32::NEG_INFINITY };
+        let empty =
+            RoutePlan { heads: vec![], fallback_margin: f32::NEG_INFINITY, kv_dtype: None };
         assert!(empty.validate(128).is_err());
     }
 
@@ -290,7 +320,8 @@ mod tests {
         assert!(z.validate(0).is_err());
         z = RoutePlan::uniform(1, 32, 0);
         assert!(z.validate(0).is_err());
-        let empty = RoutePlan { heads: vec![], fallback_margin: f32::NEG_INFINITY };
+        let empty =
+            RoutePlan { heads: vec![], fallback_margin: f32::NEG_INFINITY, kv_dtype: None };
         assert!(empty.validate(0).is_err());
     }
 
@@ -299,10 +330,35 @@ mod tests {
         let p = RoutePlan {
             heads: vec![HeadPlan::routed(32, 4), HeadPlan::dense(64)],
             fallback_margin: 0.125,
+            kv_dtype: None,
         };
         let text = p.to_json().to_string_pretty();
         let q = RoutePlan::parse(&text).unwrap();
         assert_eq!(p, q);
+    }
+
+    /// `kv_dtype` round-trips through the plan file when set and is
+    /// omitted (deferring to the deployment default) when `None`.
+    #[test]
+    fn json_roundtrip_kv_dtype() {
+        for dt in KvDtype::ALL {
+            let mut p = RoutePlan::uniform(2, 32, 4);
+            p.kv_dtype = Some(dt);
+            let j = p.to_json();
+            assert_eq!(j.get("kv_dtype").and_then(|x| x.as_str()), Some(dt.as_str()));
+            assert_eq!(RoutePlan::from_json(&j).unwrap(), p);
+        }
+        let p = RoutePlan::uniform(2, 32, 4);
+        assert!(p.to_json().get("kv_dtype").is_none());
+        assert_eq!(RoutePlan::from_json(&p.to_json()).unwrap().kv_dtype, None);
+    }
+
+    #[test]
+    fn json_rejects_unknown_kv_dtype() {
+        let bad = r#"{"kv_dtype": "f8", "heads": [{"block": 16, "topk": 2}]}"#;
+        assert!(RoutePlan::parse(bad).unwrap_err().contains("kv_dtype"));
+        let not_str = r#"{"kv_dtype": 16, "heads": [{"block": 16, "topk": 2}]}"#;
+        assert!(RoutePlan::parse(not_str).unwrap_err().contains("kv_dtype"));
     }
 
     #[test]

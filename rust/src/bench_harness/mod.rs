@@ -18,6 +18,10 @@
 //!   tokens/s of one `forward_decode_batch` launch over B sessions vs
 //!   the sequential per-session loop, B ∈ {1, 4, 16, 64}; CI floors
 //!   the B=16-vs-B=1 aggregate speedup.
+//! * [`kvdtype`] — quantized-KV decode sweep: routed flash_moba decode
+//!   with the cache stored at f32/f16/bf16/i8, identical inputs and
+//!   (asserted) identical routed blocks; CI floors the f16-vs-f32
+//!   per-token speedup — the fused in-tile dequant regression gate.
 //! * [`serve_soak`] — paged-KV serving soak: fork-heavy session
 //!   families through the coordinator, unbounded pool vs a tight page
 //!   budget; CI floors the fork `prefix_hit_rate` and the bitwise
@@ -32,6 +36,7 @@
 pub mod decode;
 pub mod decode_batch;
 pub mod figures;
+pub mod kvdtype;
 pub mod report;
 pub mod serve_soak;
 pub mod smallblock;

@@ -389,7 +389,7 @@ pub fn run_table_parity_mixed(cfg: &AppConfig, quick: bool) -> Result<f64> {
     let heads: Vec<HeadPlan> = (0..h_kv)
         .map(|i| if i % 2 == 0 { HeadPlan::routed(32, 4) } else { HeadPlan::dense(64) })
         .collect();
-    let plan = RoutePlan { heads, fallback_margin: f32::NEG_INFINITY };
+    let plan = RoutePlan { heads, fallback_margin: f32::NEG_INFINITY, kv_dtype: None };
     let uniform = RoutePlan::uniform(h_kv, cfg.bench.block, cfg.bench.topk.max(1));
     let shape = AttnShape::new(h, h_kv, n, d, cfg.bench.block, cfg.bench.topk.max(1));
     let (q, k, v) = qkv_packed(0xD15C0, h, h_kv, n, d);

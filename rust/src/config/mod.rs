@@ -120,6 +120,13 @@ pub struct ServeParams {
     /// allocation never fails). 0 (the default) = unbounded, which also
     /// disables swap logging and preemption entirely
     pub max_pages: usize,
+    /// KV-cache storage dtype for decode sessions on the CPU substrate:
+    /// `"f32"` (default), `"f16"`, `"bf16"`, or `"i8"`. Quantization is
+    /// storage-only — routing centroids stay f32, so block selection is
+    /// identical across dtypes. Overridden by the `MOBA_KV_DTYPE` env
+    /// var and by a plan file's `kv_dtype`; an unrecognized string
+    /// falls back to f32
+    pub kv_dtype: String,
 }
 
 impl Default for ServeParams {
@@ -136,6 +143,7 @@ impl Default for ServeParams {
             fallback_margin: f64::NEG_INFINITY,
             page_tokens: 0,
             max_pages: 0,
+            kv_dtype: "f32".into(),
         }
     }
 }
@@ -306,6 +314,9 @@ impl AppConfig {
             ov_f64(s, "fallback_margin", &mut self.serve.fallback_margin);
             ov_usize(s, "page_tokens", &mut self.serve.page_tokens);
             ov_usize(s, "max_pages", &mut self.serve.max_pages);
+            if let Some(x) = s.get("kv_dtype").and_then(|x| x.as_str()) {
+                self.serve.kv_dtype = x.to_string();
+            }
         }
         if let Some(a) = j.get("autotune") {
             ov_usize(a, "d", &mut self.autotune.d);
@@ -445,6 +456,24 @@ mod tests {
         c.apply(&j);
         assert_eq!(c.serve.page_tokens, 256);
         assert_eq!(c.serve.max_pages, 1024);
+    }
+
+    #[test]
+    fn kv_dtype_override() {
+        // default stores f32; a serve-table string overrides it
+        let d = AppConfig::default();
+        assert_eq!(d.serve.kv_dtype, "f32");
+        let j = Json::parse(r#"{"serve": {"kv_dtype": "f16"}}"#).unwrap();
+        let mut c = AppConfig::default();
+        c.apply(&j);
+        assert_eq!(c.serve.kv_dtype, "f16");
+        // the string is validated at session creation, not here: apply
+        // stores whatever was configured and the router falls back to
+        // f32 on an unparseable value
+        let j = Json::parse(r#"{"serve": {"kv_dtype": "f8"}}"#).unwrap();
+        let mut c = AppConfig::default();
+        c.apply(&j);
+        assert_eq!(c.serve.kv_dtype, "f8");
     }
 
     #[test]

@@ -182,6 +182,7 @@ impl Batcher {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::attention::KvDtype;
     use crate::coordinator::request::{AttnKind, AttnRequest, DecodeStep};
 
     fn req(id: u64, n: usize) -> AttnRequest {
@@ -207,6 +208,7 @@ mod tests {
             k: vec![0.0; d],
             v: vec![0.0; d],
             table_pages: 0,
+            kv_dtype: KvDtype::F32,
         }
     }
 
@@ -325,6 +327,29 @@ mod tests {
         // the table term is bounded by pages, not context: even here it
         // is a rounding error next to one prefill resend of that context
         assert!((48 * 8) < 6144 * d * 4 / 100);
+    }
+
+    /// Byte-true accounting across KV dtypes: the new token's K/V rows
+    /// travel at the session's storage width (the worker quantizes on
+    /// append), while the query row stays f32 — so an f16 step moves
+    /// d·4 + 2·d·2 bytes, not 3·d·4.
+    #[test]
+    fn decode_lane_payload_is_dtype_aware() {
+        let d = 64;
+        let mut b = Batcher::new(2, Duration::from_secs(100), 100);
+        let t = Instant::now();
+        b.push(step(1, 1, d), "decode:flash_moba", 1, t).unwrap();
+        b.push(
+            DecodeStep { kv_dtype: KvDtype::F16, ..step(2, 2, d) },
+            "decode:flash_moba",
+            1,
+            t,
+        )
+        .unwrap();
+        let batch = b.poll(t).unwrap();
+        let f32_rows = (3 * d * 4) as u64;
+        let f16_rows = (d * 4 + 2 * d * 2) as u64;
+        assert_eq!(batch.payload_bytes, f32_rows + f16_rows);
     }
 
     /// The starvation scenario the poll-order fix closes: a capacity-1

@@ -22,7 +22,10 @@
 //!   continuous-batching admission rule: prefills are admitted into
 //!   running decode waves while their page cost fits the pool budget,
 //!   else coldest sessions are preempted (evict + swap-log replay on
-//!   next touch) and the work is parked FIFO.
+//!   next touch) and the work is parked FIFO. Page costs are charged in
+//!   byte-true units (page entries × the session's KV dtype width), so
+//!   an f16 pool admits ~2× the sessions of f32 under the same
+//!   `max_pages` budget.
 //! * [`metrics`] — counters + latency histogram (incl. session/decode
 //!   and paging counters).
 //! * [`server`] — the event loop tying it together; in-process

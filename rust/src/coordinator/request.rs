@@ -3,6 +3,7 @@
 use std::time::Instant;
 
 use crate::attention::plan::RoutePlan;
+use crate::attention::KvDtype;
 
 /// Which attention kernel family to serve.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -102,6 +103,10 @@ pub struct DecodeStep {
     /// so queue-cost accounting sees the per-step table walk a paged
     /// read incurs, not just the token rows.
     pub table_pages: usize,
+    /// Storage dtype of the session's KV cache, stamped by the worker.
+    /// The step's k/v rows quantize to this width on append, so payload
+    /// accounting charges their stored width, not blanket f32.
+    pub kv_dtype: KvDtype,
 }
 
 impl DecodeStep {
@@ -116,14 +121,18 @@ impl DecodeStep {
             && self.v.len() == h_kv * d
     }
 
-    /// Bytes this step moves through the queue, layout-aware: the
-    /// O((h + 2·h_kv)·d) token rows plus 8 bytes per page-table entry
-    /// (a u64 page id each) for paged sessions. The table term is what
+    /// Bytes this step moves through the queue, layout- and
+    /// dtype-aware: the query row stays f32 (4 bytes/elem), the k/v
+    /// rows are charged at the cache's stored width
+    /// (`kv_dtype.elem_bytes()`), plus 8 bytes per page-table entry (a
+    /// u64 page id each) for paged sessions. The table term is what
     /// admission budgeting would undercount if payload accounting only
     /// saw the rows; it grows with context as O(n / page_tokens), still
     /// never O(n·d).
     pub fn payload_bytes(&self) -> u64 {
-        (self.q.len() + self.k.len() + self.v.len()) as u64 * 4 + self.table_pages as u64 * 8
+        self.q.len() as u64 * 4
+            + (self.k.len() + self.v.len()) as u64 * self.kv_dtype.elem_bytes() as u64
+            + self.table_pages as u64 * 8
     }
 }
 
@@ -251,6 +260,7 @@ mod tests {
             plan: Some(RoutePlan {
                 heads: vec![HeadPlan::routed(8, 2), HeadPlan::dense(16)],
                 fallback_margin: f32::NEG_INFINITY,
+                kv_dtype: None,
             }),
         };
         assert!(req.validate());
@@ -277,6 +287,7 @@ mod tests {
             k: vec![0.0; 4],
             v: vec![0.0; 4],
             table_pages: 0,
+            kv_dtype: KvDtype::F32,
         };
         assert!(step.validate(1, 1, 4));
         assert!(!step.validate(1, 1, 8));
@@ -296,6 +307,7 @@ mod tests {
             k: vec![0.0; 2 * d],
             v: vec![0.0; 2 * d],
             table_pages: 0,
+            kv_dtype: KvDtype::F32,
         };
         assert!(gqa.validate(4, 2, d));
         assert!(!gqa.validate(4, 4, d));
@@ -326,6 +338,7 @@ mod tests {
             k: vec![0.0; h_kv * d],
             v: vec![0.0; h_kv * d],
             table_pages: 0,
+            kv_dtype: KvDtype::F32,
         });
         assert_eq!(prefill.payload_bytes(), ((h + 2 * h_kv) * n * d * 4) as u64);
         assert_eq!(decode.payload_bytes(), ((h + 2 * h_kv) * d * 4) as u64);
@@ -349,10 +362,41 @@ mod tests {
             k: vec![0.0; h_kv * d],
             v: vec![0.0; h_kv * d],
             table_pages: 0,
+            kv_dtype: KvDtype::F32,
         };
         assert_eq!(step.payload_bytes(), rows);
         step.table_pages = 48; // e.g. 2 KV heads × 24 blocks resident
         assert_eq!(step.payload_bytes(), rows + 48 * 8);
         assert_eq!(WorkItem::from(step).payload_bytes(), rows + 48 * 8);
+    }
+
+    /// The dtype half of the accounting fix: k/v rows are charged at
+    /// their stored width (the query row stays f32), so an f16
+    /// session's steps cost half the k/v bytes of f32 and an i8
+    /// session's a quarter — byte-true admission, not blanket f32.
+    #[test]
+    fn decode_payload_accounting_is_dtype_aware() {
+        let d = 64;
+        let (h, h_kv) = (4, 2);
+        let step = |dt: KvDtype| DecodeStep {
+            id: 4,
+            session: 1,
+            q: vec![0.0; h * d],
+            k: vec![0.0; h_kv * d],
+            v: vec![0.0; h_kv * d],
+            table_pages: 16,
+            kv_dtype: dt,
+        };
+        let q_bytes = (h * d * 4) as u64;
+        let kv_elems = (2 * h_kv * d) as u64;
+        for dt in KvDtype::ALL {
+            assert_eq!(
+                step(dt).payload_bytes(),
+                q_bytes + kv_elems * dt.elem_bytes() as u64 + 16 * 8,
+                "{}",
+                dt.as_str()
+            );
+        }
+        assert_eq!(step(KvDtype::F16).payload_bytes() + kv_elems * 2, step(KvDtype::F32).payload_bytes());
     }
 }

@@ -22,6 +22,7 @@ use super::request::AttnKind;
 use crate::attention::backend::AttentionBackend;
 use crate::attention::backend::BackendRegistry;
 use crate::attention::plan::RoutePlan;
+use crate::attention::KvDtype;
 use crate::config::ServeParams;
 use crate::runtime::Manifest;
 use crate::Result;
@@ -200,6 +201,20 @@ pub fn effective_plan(
     plan
 }
 
+/// The KV-cache storage dtype a decode session is created with.
+/// Precedence, most specific first: the serving plan's `kv_dtype`
+/// (when the plan file pins one), the `MOBA_KV_DTYPE` environment
+/// override, the `serve.kv_dtype` config field, then f32. An
+/// unparseable config string falls through to f32 rather than failing
+/// session creation — the config loader accepts arbitrary strings, so
+/// the parse is the gate.
+pub fn effective_dtype(plan_dtype: Option<KvDtype>, serve: &ServeParams) -> KvDtype {
+    plan_dtype
+        .or_else(KvDtype::from_env)
+        .or_else(|| KvDtype::parse(&serve.kv_dtype))
+        .unwrap_or(KvDtype::F32)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -341,6 +356,27 @@ mod tests {
         let mut own = RoutePlan::uniform(1, 64, 4);
         own.fallback_margin = 0.5;
         assert_eq!(effective_plan(&Some(own), &serve, 1).fallback_margin, 0.5);
+    }
+
+    /// Dtype precedence: a plan-pinned dtype always wins; below it the
+    /// env override, then the config string, then f32. (Written to hold
+    /// under CI's `MOBA_KV_DTYPE` matrix legs: with the env set, the
+    /// env value is the expected sub-plan default.)
+    #[test]
+    fn effective_dtype_precedence() {
+        let serve = ServeParams::default();
+        // plan-pinned dtype beats everything, env included
+        for dt in KvDtype::ALL {
+            assert_eq!(effective_dtype(Some(dt), &serve), dt);
+        }
+        // no plan dtype: env (when set) > config > f32
+        let env = KvDtype::from_env();
+        assert_eq!(effective_dtype(None, &serve), env.unwrap_or(KvDtype::F32));
+        let cfg = ServeParams { kv_dtype: "f16".into(), ..ServeParams::default() };
+        assert_eq!(effective_dtype(None, &cfg), env.unwrap_or(KvDtype::F16));
+        // an unparseable config string falls through to f32
+        let junk = ServeParams { kv_dtype: "f8".into(), ..ServeParams::default() };
+        assert_eq!(effective_dtype(None, &junk), env.unwrap_or(KvDtype::F32));
     }
 
     #[test]

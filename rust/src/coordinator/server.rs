@@ -86,7 +86,7 @@ use super::metrics::Metrics;
 use super::request::{
     AttnKind, AttnRequest, AttnResponse, DecodeStep, QueueStamp, WorkItem,
 };
-use super::router::{effective_plan, load_route_plan, Router};
+use super::router::{effective_dtype, effective_plan, load_route_plan, Router};
 use super::scheduler::PageScheduler;
 #[allow(unused_imports)]
 use crate::attention::backend::AttentionBackend;
@@ -94,7 +94,7 @@ use crate::attention::backend::BackendRegistry;
 use crate::attention::decode::DecodeSession;
 use crate::attention::paged::PagePool;
 use crate::attention::plan::RoutePlan;
-use crate::attention::{packed_rows, AttnShape};
+use crate::attention::{packed_rows, AttnShape, KvDtype};
 use crate::config::ServeParams;
 use crate::runtime::{Runtime, Tensor};
 use crate::util::pool::{partition, ExecCtx};
@@ -313,9 +313,10 @@ impl Coordinator {
         v: Vec<f32>,
     ) -> Result<Ticket> {
         let id = self.next_decode_id.fetch_add(1, Ordering::Relaxed);
-        // table_pages is stamped by the worker at enqueue time — only it
-        // knows the session's current page-table size
-        let step = DecodeStep { id, session, q, k, v, table_pages: 0 };
+        // table_pages and kv_dtype are stamped by the worker at enqueue
+        // time — only it knows the session's current page-table size and
+        // cache dtype
+        let step = DecodeStep { id, session, q, k, v, table_pages: 0, kv_dtype: KvDtype::F32 };
         if step.q.is_empty() || step.k.is_empty() || step.k.len() != step.v.len() {
             return Err(anyhow!(
                 "decode step {id}: q and k must be non-empty and k/v equal-length"
@@ -511,8 +512,10 @@ impl PagingCtl {
     }
 }
 
-/// Make room for `cost` pages: preempt coldest-first victims until the
-/// budget fits. Protected (never evicted): the session being admitted
+/// Make room for `cost` budget units (1 unit = one byte per page
+/// element; an f32 page costs 4, f16 2, i8 1 — see
+/// [`PagePool::would_fit_units`]): preempt coldest-first victims until
+/// the budget fits. Protected (never evicted): the session being admitted
 /// and sessions with steps in the batcher (those steps execute against
 /// the live cache). A session with *parked* work is fair game — its
 /// restore cost is recomputed when its FIFO turn comes, so evicting it
@@ -528,7 +531,7 @@ fn try_admit(
     ctl: &mut PagingCtl,
     metrics: &Metrics,
 ) -> bool {
-    while !ctl.pool.would_fit(cost) {
+    while !ctl.pool.would_fit_units(cost) {
         let victim = ctl.scheduler.victim(|vid| {
             vid == admitting
                 || ctl.state.get(&vid).map_or(true, |st| st.queued_steps > 0)
@@ -557,9 +560,10 @@ fn park_work(ctl: &mut PagingCtl, sid: u64, work: SessionWork, metrics: &Metrics
     }
 }
 
-/// Stamp an admitted step's page-table size and hand it to the batcher's
-/// decode lane. The stamp is what makes queue payload accounting
-/// layout-aware ([`DecodeStep::payload_bytes`]).
+/// Stamp an admitted step's page-table size and cache dtype, then hand
+/// it to the batcher's decode lane. The stamps are what make queue
+/// payload accounting layout- and dtype-aware
+/// ([`DecodeStep::payload_bytes`]).
 fn enqueue_step(
     mut step: DecodeStep,
     sessions: &Sessions,
@@ -576,6 +580,7 @@ fn enqueue_step(
         return;
     };
     step.table_pages = sess.total_pages();
+    step.kv_dtype = sess.dtype();
     let lane = format!("decode:{target}");
     if batcher.push(step, &lane, 1, Instant::now()).is_err() {
         metrics.rejected.fetch_add(1, Ordering::Relaxed);
@@ -604,7 +609,7 @@ fn admit_step(
         .is_some_and(|st| st.evicted || !st.parked.is_empty());
     let cost = sessions
         .get(&sid)
-        .map_or(0, |(_, sess)| sess.cache().append_page_cost(1));
+        .map_or(0, |(_, sess)| sess.cache().append_page_cost_units(1));
     if blocked || !try_admit(cost, sid, sessions, ctl, metrics) {
         park_work(ctl, sid, SessionWork::Step(step), metrics);
         return;
@@ -672,22 +677,27 @@ fn drain_admissions(
         // preempted) plus every parked append. `footprint` is the
         // session's total page need — resident pages included — the
         // can-this-ever-fit bound even with every other session evicted
+        // costs are in budget *units* (pages × the session's per-element
+        // byte width), so an f16 session's replay charges half an f32's
         let (cost, footprint, evicted) = {
             let (_, sess) = sessions.get(&sid).expect("checked above");
             let st = ctl.state.entry(sid).or_default();
             let parked_tokens: usize = st.parked.iter().map(|w| w.tokens()).sum();
             let roww = (sess.h_kv() * sess.d()).max(1);
+            let dtype = sess.dtype();
             if st.evicted {
                 let log_tokens = st.log_k.len() / roww;
                 let need = sess.cache().pages_for(log_tokens + parked_tokens);
-                (need, need, true)
+                let units = PagePool::units_for(need, dtype);
+                (units, units, true)
             } else {
-                let need = sess.cache().append_page_cost(parked_tokens);
-                (need, sess.total_pages() + need, false)
+                let need = sess.cache().append_page_cost_units(parked_tokens);
+                (need, PagePool::units_for(sess.total_pages(), dtype) + need, false)
             }
         };
         if let Some(m) = ctl.pool.max_pages() {
-            if footprint > m {
+            let budget = PagePool::units_for(m, KvDtype::F32);
+            if footprint > budget {
                 // can never fit, not even with every other session
                 // evicted: fail the parked work loudly instead of
                 // livelocking the queue (a live session holding the
@@ -696,7 +706,8 @@ fn drain_admissions(
                 for work in st.parked.drain(..) {
                     let err = || {
                         anyhow!(
-                            "session {sid} needs {footprint} pages; the pool budget is {m}"
+                            "session {sid} needs {footprint} page-budget units; \
+                             the pool budget is {budget}"
                         )
                     };
                     match work {
@@ -936,10 +947,15 @@ fn worker_loop(
                                         // page_tokens was derived to
                                         // cover every serving block, so
                                         // this can never trip the
-                                        // pool's block-size assert
+                                        // pool's block-size assert.
+                                        // dtype precedence: plan file >
+                                        // MOBA_KV_DTYPE env > serve
+                                        // config > f32
+                                        let dtype = effective_dtype(plan.kv_dtype, &params);
                                         Ok(DecodeSession::with_plan_paged(
                                             spec.h, spec.h_kv, spec.d, plan, &ctl.pool,
-                                        ))
+                                        )
+                                        .with_dtype(dtype))
                                     }
                                 }
                                 // dense decode ignores routing; the block
@@ -951,7 +967,8 @@ fn worker_loop(
                                     params.moba_block.max(1),
                                     0,
                                     &ctl.pool,
-                                )),
+                                )
+                                .with_dtype(effective_dtype(None, &params))),
                             };
                             sess.map(|sess| {
                                 let id = next_session;
@@ -1018,7 +1035,7 @@ fn worker_loop(
                                 k.len()
                             ))
                         } else {
-                            Ok(sess.cache().append_page_cost(n))
+                            Ok(sess.cache().append_page_cost_units(n))
                         }
                     }
                 };
@@ -1686,6 +1703,7 @@ mod tests {
         let plan = RoutePlan {
             heads: vec![HeadPlan::routed(16, 2), HeadPlan::dense(32)],
             fallback_margin: f32::NEG_INFINITY,
+            kv_dtype: None,
         };
         let req = moba_req(3, 2, 2, 64, 8, Some(plan.clone()));
         let (o, _) = run_cpu_request(&registry, &None, &params, &ctx, "flash_moba", &req)

@@ -13,8 +13,8 @@ use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 use flash_moba::bench_harness::{
-    decode as decode_bench, decode_batch as decode_batch_bench, figures, report, serve_soak,
-    smallblock, snr_harness, tables,
+    decode as decode_bench, decode_batch as decode_batch_bench, figures, kvdtype, report,
+    serve_soak, smallblock, snr_harness, tables,
 };
 use flash_moba::config::AppConfig;
 use flash_moba::util::json::Json;
@@ -40,7 +40,7 @@ COMMANDS:
                                table1..table6, fig2, fig3, fig4, snr,
                                parity, parity-gqa, parity-mixed, decode,
                                decode-batch, serve-soak, smallblock,
-                               ablate-tiles, all
+                               kvdtype, ablate-tiles, all
                                (--quick, --steps N)
                                (smallblock sweeps block 16/32/64 at
                                fixed N, flash_moba vs dense, through
@@ -56,6 +56,10 @@ COMMANDS:
                                unbounded pool vs a tight page budget;
                                CI floors the fork prefix_hit_rate and
                                the pressured leg's bitwise parity_ok)
+                               (kvdtype sweeps routed decode with the
+                               KV cache stored at f32/f16/bf16/i8 on
+                               identical inputs; its f16-vs-f32
+                               per-token speedup is floor-gated in CI)
                                (parity/parity-gqa/decode/decode-batch/
                                serve-soak/fig3/fig4/snr/ablate-tiles
                                need no
@@ -92,6 +96,16 @@ ENVIRONMENT:
   MOBA_THREADS                 worker threads for the attention substrate
                                (default: all cores; outputs are
                                bit-identical at any setting)
+  MOBA_KV_DTYPE                KV-cache storage dtype for decode sessions
+                               (f32|f16|bf16|i8; default f32). Overrides
+                               serve.kv_dtype; a plan file's kv_dtype
+                               wins over both. Routing stays f32, so the
+                               selected blocks are dtype-independent
+  MOBA_SIMD                    instruction set for the attention
+                               microkernels (auto|scalar|avx2|neon;
+                               default auto). Every choice is
+                               bit-identical — scalar is the reference
+                               the dispatched ISAs are tested against
 ";
 
 fn main() -> Result<()> {
@@ -277,6 +291,9 @@ fn bench(cfg: &AppConfig, target: &str, quick: bool) -> Result<()> {
             // prefix_hit_rate and the pressured leg's bitwise parity
             "serve-soak" => serve_soak::run_serve_soak(cfg, quick),
             "smallblock" => smallblock::run_smallblock(cfg, quick),
+            // quantized-KV decode sweep: f16/bf16/i8 vs the f32 cache;
+            // floors the f16-vs-f32 per-token speedup
+            "kvdtype" => kvdtype::run_kvdtype(cfg, quick),
             "ablate-tiles" => {
                 none(figures::run_tile_ablation(cfg, if quick { 2048 } else { 8192 }))
             }
@@ -298,8 +315,8 @@ fn bench(cfg: &AppConfig, target: &str, quick: bool) -> Result<()> {
     if target == "all" {
         for t in [
             "parity", "parity-gqa", "parity-mixed", "decode", "decode-batch", "serve-soak",
-            "smallblock", "snr", "fig3", "fig4", "ablate-tiles", "table1", "table3", "table5",
-            "fig2", "table2", "table4", "table6",
+            "smallblock", "kvdtype", "snr", "fig3", "fig4", "ablate-tiles", "table1", "table3",
+            "table5", "fig2", "table2", "table4", "table6",
         ] {
             println!("\n######## bench {t} ########");
             run_and_emit(cfg, t)?;

@@ -222,6 +222,7 @@ pub fn autotune(cfg: &AutotuneConfig) -> AutotuneOutcome {
     let plan = RoutePlan {
         heads: rows.iter().map(|r| r.plan).collect(),
         fallback_margin: cfg.fallback_margin as f32,
+        kv_dtype: None,
     };
     debug_assert!(plan.validate(cfg.n).is_ok());
     AutotuneOutcome { plan, rows }

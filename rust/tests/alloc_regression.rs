@@ -18,7 +18,12 @@
 //!   heap allocations — routing and attention read per-block page
 //!   slices through the same accessors as the contiguous store, so
 //!   the layout swap costs nothing on the hot path (pages are only
-//!   allocated on append, outside the measured window).
+//!   allocated on append, outside the measured window), and
+//! * the same steady-state step over a **quantized** cache (f16 and
+//!   i8, contiguous and paged) performs zero heap allocations — the
+//!   fused kernels dequantize inside their register tiles, so a
+//!   narrower storage width never buys its bandwidth back with a
+//!   materialized f32 staging copy.
 //!
 //! Parallel contexts spawn scoped threads and box per-range tasks, so
 //! the guarantee is pinned on the serial path — the per-worker arenas
@@ -32,7 +37,7 @@ use flash_moba::attention::backend::{AttentionBackend, BackendRegistry};
 use flash_moba::attention::decode::DecodeSession;
 use flash_moba::attention::paged::PagePool;
 use flash_moba::attention::testutil::qkv_packed;
-use flash_moba::attention::{packed_rows, AttnShape, ExecCtx};
+use flash_moba::attention::{packed_rows, AttnShape, ExecCtx, KvDtype};
 
 struct CountingAlloc;
 
@@ -175,6 +180,54 @@ fn steady_state_prefill_and_decode_are_allocation_free() {
         }
         let grew = allocs() - before;
         assert_eq!(grew, 0, "{label}: steady-state step allocated {grew} times");
+    }
+
+    // ---- quantized cache: dequant is in-tile, not a staging copy ----
+    // an f16 (and i8) session's steady-state step must stay at zero
+    // allocations in both layouts: the fused kernels dequantize inside
+    // their register tiles, so narrowing the storage width must never
+    // introduce a materialized f32 staging buffer on the hot path
+    for dtype in [KvDtype::F16, KvDtype::I8] {
+        let mut qsess =
+            DecodeSession::new(shape.h, shape.h_kv, shape.d, shape.block, shape.topk)
+                .with_dtype(dtype);
+        let qpool = PagePool::new(shape.block, None);
+        let mut qpsess = DecodeSession::new_paged(
+            shape.h, shape.h_kv, shape.d, shape.block, shape.topk, &qpool,
+        )
+        .with_dtype(dtype);
+        for t in 0..shape.n {
+            let (kt, vt) = (
+                packed_rows(&k, shape.h_kv, shape.n, shape.d, t),
+                packed_rows(&v, shape.h_kv, shape.n, shape.d, t),
+            );
+            qsess.append(&kt, &vt);
+            qpsess.append(&kt, &vt);
+        }
+        for (label, sess) in [("contig", &mut qsess), ("paged", &mut qpsess)] {
+            for routed in [true, false] {
+                for _ in 0..3 {
+                    if routed {
+                        sess.decode_routed_into(&qrow, &mut out);
+                    } else {
+                        sess.decode_dense_into(&qrow, &mut out);
+                    }
+                }
+                let before = allocs();
+                for _ in 0..8 {
+                    if routed {
+                        sess.decode_routed_into(&qrow, &mut out);
+                    } else {
+                        sess.decode_dense_into(&qrow, &mut out);
+                    }
+                }
+                let grew = allocs() - before;
+                assert_eq!(
+                    grew, 0,
+                    "{label} {dtype:?} routed={routed}: steady-state step allocated {grew} times"
+                );
+            }
+        }
     }
 
     // ---- batched cross-session decode -------------------------------

@@ -599,6 +599,7 @@ fn mixed_plan() -> RoutePlan {
     RoutePlan {
         heads: vec![HeadPlan::routed(32, 2), HeadPlan::dense(64)],
         fallback_margin: f32::NEG_INFINITY,
+        kv_dtype: None,
     }
 }
 

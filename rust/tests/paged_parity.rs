@@ -18,7 +18,7 @@ use flash_moba::attention::decode::DecodeSession;
 use flash_moba::attention::paged::PagePool;
 use flash_moba::attention::plan::{HeadPlan, RoutePlan};
 use flash_moba::attention::testutil::{qkv_packed, Rng};
-use flash_moba::attention::{packed_rows, AttnShape, ExecCtx};
+use flash_moba::attention::{packed_rows, AttnShape, ExecCtx, KvDtype};
 
 /// Bitwise comparison with a step/shape label in the failure message.
 fn assert_bits(a: &[f32], b: &[f32], label: &str) {
@@ -114,6 +114,7 @@ fn mixed_plan_paged_decode_matches_contiguous() {
     let plan = RoutePlan {
         heads: vec![HeadPlan::routed(8, 3), HeadPlan::dense(16)],
         fallback_margin: f32::NEG_INFINITY,
+        kv_dtype: None,
     };
     let shape = AttnShape::new(h, h_kv, n, d, 8, 3);
     let (q, k, v) = qkv_packed(0x417ED, h, h_kv, n, d);
@@ -331,6 +332,88 @@ fn evicted_session_resumes_bitwise_after_replay() {
             &format!("post-restore step {t}"),
         );
     }
+}
+
+/// The KV-dtype axis of the same contract: at every storage dtype
+/// (f32, f16, bf16, i8), paged decode stays bit-identical to the
+/// contiguous session with the same dtype. Quantization happens on
+/// append and dequantization inside the fused kernels' register tiles,
+/// in both layouts through the same `KvView` accessors — so the
+/// layout swap is invisible at any storage width, not just f32.
+#[test]
+fn paged_parity_holds_at_every_kv_dtype() {
+    let shapes = [
+        AttnShape::single(100, 8, 16, 2),   // ragged tail
+        AttnShape::new(4, 2, 90, 8, 16, 3), // GQA + ragged
+    ];
+    let registry = BackendRegistry::with_defaults();
+    let ctx = ExecCtx::with_threads(3);
+    for dtype in KvDtype::ALL {
+        for (i, shape) in shapes.iter().enumerate() {
+            let (q, k, v) = qkv_packed(0xD7 + i as u64, shape.h, shape.h_kv, shape.n, shape.d);
+            for b in registry.iter() {
+                if !b.supports(shape) {
+                    continue;
+                }
+                let pool = PagePool::new(shape.block, None);
+                let contig =
+                    DecodeSession::new(shape.h, shape.h_kv, shape.d, shape.block, shape.topk)
+                        .with_dtype(dtype);
+                let paged = DecodeSession::new_paged(
+                    shape.h, shape.h_kv, shape.d, shape.block, shape.topk, &pool,
+                )
+                .with_dtype(dtype);
+                assert_pair_parity(
+                    b,
+                    &ctx,
+                    contig,
+                    paged,
+                    shape,
+                    &q,
+                    &k,
+                    &v,
+                    &format!("{} dtype={} {shape:?}", b.name(), dtype.as_str()),
+                );
+                assert_eq!(pool.live_pages(), 0, "pages leaked after session drop");
+            }
+        }
+    }
+}
+
+/// The byte-true paging-accounting regression: under the same
+/// `max_pages` budget (denominated in f32-page units), an f16 pool
+/// admits exactly twice the sessions of an f32 pool, and an i8 pool
+/// four times — because admission charges pages at the session's
+/// stored bytes per element, not a blanket 4.
+#[test]
+fn quantized_pools_admit_proportionally_more_sessions() {
+    let (h, h_kv, n, d, block, topk) = (2usize, 2usize, 32usize, 8usize, 16usize, 2usize);
+    let budget_pages = 16usize; // 16 f32 pages = 64 byte-units
+    let count_admitted = |dtype: KvDtype| -> usize {
+        let pool = PagePool::new(block, Some(budget_pages));
+        let mut live: Vec<DecodeSession> = Vec::new();
+        loop {
+            // one session's footprint: h_kv page-table entries per
+            // full-or-partial block, charged at the dtype's width
+            let need_pages = h_kv * n.div_ceil(block);
+            if !pool.would_fit_units(PagePool::units_for(need_pages, dtype)) {
+                break;
+            }
+            let mut s =
+                DecodeSession::new_paged(h, h_kv, d, block, topk, &pool).with_dtype(dtype);
+            let (_q, k, v) = qkv_packed(0xAD417 + live.len() as u64, h, h_kv, n, d);
+            for t in 0..n {
+                s.append(&packed_rows(&k, h_kv, n, d, t), &packed_rows(&v, h_kv, n, d, t));
+            }
+            live.push(s); // keep pages live so the next admission sees them
+        }
+        live.len()
+    };
+    let f32_sessions = count_admitted(KvDtype::F32);
+    assert!(f32_sessions > 0, "budget must admit at least one f32 session");
+    assert_eq!(count_admitted(KvDtype::F16), 2 * f32_sessions);
+    assert_eq!(count_admitted(KvDtype::Bf16), 2 * f32_sessions);
+    assert_eq!(count_admitted(KvDtype::I8), 4 * f32_sessions);
 }
 
 /// Randomized closure over the property: random GQA layouts, ragged

@@ -18,10 +18,11 @@ use flash_moba::attention::flash_moba::{
 };
 use flash_moba::attention::moba_naive::{moba_naive_forward, moba_reference};
 use flash_moba::attention::plan::{HeadPlan, RoutePlan};
+use flash_moba::attention::KvDtype;
 use flash_moba::attention::testutil::{max_abs_diff, qkv, qkv_packed, repeat_heads, Rng};
 use flash_moba::attention::topk::{naive_topk, same_selection, tiled_topk};
 use flash_moba::attention::varlen::build_varlen;
-use flash_moba::attention::{AttnShape, ExecCtx};
+use flash_moba::attention::{packed_rows, AttnShape, ExecCtx};
 use flash_moba::coordinator::{AttnKind, AttnRequest, Batcher, DecodeStep};
 use flash_moba::util::json::Json;
 
@@ -431,6 +432,130 @@ fn prop_kv_cache_invariants() {
     }
 }
 
+/// Quantized KV storage tracks the f32 cache within each dtype's error
+/// bound at every decode step, over random GQA layouts and ragged
+/// shapes: f16 (11 significand bits) within 2e-2 relative, bf16 (8
+/// bits) within 1e-1, i8 (per-row scales) within 2e-1 — normalized by
+/// the step's max |o_f32|.
+#[test]
+fn prop_quantized_decode_tracks_f32_within_bound() {
+    let registry = BackendRegistry::with_defaults();
+    let flash = registry.get("flash_moba").unwrap();
+    let ctx = ExecCtx::serial();
+    let bounds = [(KvDtype::F16, 2e-2f32), (KvDtype::Bf16, 1e-1), (KvDtype::I8, 2e-1)];
+    for seed in 0..CASES / 2 {
+        let mut rng = Rng::new(15_000 + seed);
+        let shape = rand_mh_shape(&mut rng);
+        let AttnShape { h, h_kv, n, d, block, topk } = shape;
+        let (q, k, v) = qkv_packed(700 + seed, h, h_kv, n, d);
+        let mut base_sess = DecodeSession::new(h, h_kv, d, block, topk);
+        let mut quant: Vec<(KvDtype, f32, DecodeSession)> = bounds
+            .iter()
+            .map(|&(dt, bound)| {
+                (dt, bound, DecodeSession::new(h, h_kv, d, block, topk).with_dtype(dt))
+            })
+            .collect();
+        for t in 0..n {
+            let (kt, vt) = (packed_rows(&k, h_kv, n, d, t), packed_rows(&v, h_kv, n, d, t));
+            let qt = packed_rows(&q, h, n, d, t);
+            base_sess.append(&kt, &vt);
+            let base = flash.forward_decode(&ctx, &mut base_sess, &qt);
+            let scale = base.iter().fold(0.0f32, |m, x| m.max(x.abs())).max(1e-6);
+            for (dt, bound, sess) in quant.iter_mut() {
+                sess.append(&kt, &vt);
+                let o = flash.forward_decode(&ctx, sess, &qt);
+                let err =
+                    o.iter().zip(&base).map(|(a, b)| (a - b).abs()).fold(0.0f32, f32::max);
+                assert!(
+                    err / scale <= *bound,
+                    "seed={seed} t={t} dtype={}: rel err {:.3e} over bound {bound:.0e}",
+                    dt.as_str(),
+                    err / scale
+                );
+            }
+        }
+    }
+}
+
+/// Block routing is invariant across KV storage dtypes — exactly, not
+/// within tolerance. Centroid key-sums accumulate the f32 rows before
+/// quantization, so the routed index lists are the same Vec at every
+/// dtype, for random streams, heads and topk (incl. topk=0, where only
+/// the own block survives).
+#[test]
+fn prop_routing_is_invariant_across_kv_dtypes() {
+    for seed in 0..CASES {
+        let mut rng = Rng::new(16_000 + seed);
+        let h_kv = 1 + rng.below(3);
+        let d = [4usize, 8, 16][rng.below(3)];
+        let block = [4usize, 8, 16][rng.below(3)];
+        let mut caches: Vec<KvCache> = KvDtype::ALL
+            .iter()
+            .map(|&dt| KvCache::new(h_kv, d, block).with_dtype(dt))
+            .collect();
+        let total = 1 + rng.below(100);
+        for _ in 0..total {
+            let kt = rng.normal_vec(h_kv * d);
+            let vt = rng.normal_vec(h_kv * d);
+            for c in caches.iter_mut() {
+                c.append(&kt, &vt);
+            }
+            if rng.uniform() < 0.4 {
+                let q = rng.normal_vec(d);
+                let topk = rng.below(5);
+                let head = rng.below(h_kv);
+                let expect = caches[0].route(&q, head, topk);
+                for c in &caches[1..] {
+                    assert_eq!(
+                        c.route(&q, head, topk),
+                        expect,
+                        "seed={seed} dtype={}",
+                        c.dtype().as_str()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Per-dtype bit determinism: at every KV dtype, two sessions fed the
+/// same stream decode to the same bits — including across worker
+/// counts (the MOBA_THREADS axis; the SIMD dispatch axis is pinned by
+/// the kernel-level scalar-equality tests plus CI's MOBA_SIMD=scalar
+/// leg).
+#[test]
+fn prop_decode_is_bit_deterministic_at_every_kv_dtype() {
+    let registry = BackendRegistry::with_defaults();
+    let flash = registry.get("flash_moba").unwrap();
+    for seed in 0..CASES / 4 {
+        let mut rng = Rng::new(17_000 + seed);
+        let shape = rand_mh_shape(&mut rng);
+        let AttnShape { h, h_kv, n, d, block, topk } = shape;
+        let (q, k, v) = qkv_packed(800 + seed, h, h_kv, n, d);
+        let threads = 2 + rng.below(5);
+        for dtype in KvDtype::ALL {
+            let mut a = DecodeSession::new(h, h_kv, d, block, topk).with_dtype(dtype);
+            let mut b = DecodeSession::new(h, h_kv, d, block, topk).with_dtype(dtype);
+            for t in 0..n {
+                let (kt, vt) = (packed_rows(&k, h_kv, n, d, t), packed_rows(&v, h_kv, n, d, t));
+                a.append(&kt, &vt);
+                b.append(&kt, &vt);
+            }
+            let qt = packed_rows(&q, h, n, d, n - 1);
+            let oa = flash.forward_decode(&ExecCtx::serial(), &mut a, &qt);
+            let ob = flash.forward_decode(&ExecCtx::with_threads(threads), &mut b, &qt);
+            for (i, (x, y)) in oa.iter().zip(&ob).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "seed={seed} dtype={} threads={threads} element {i}",
+                    dtype.as_str()
+                );
+            }
+        }
+    }
+}
+
 /// Batcher under random arrival times: poll never returns more than
 /// max_batch, nothing is held past max_wait once polled, and len()
 /// stays equal to enqueued-minus-flushed throughout.
@@ -459,6 +584,7 @@ fn prop_batcher_random_arrival_deadlines() {
                         k: vec![0.0; 4],
                         v: vec![0.0; 4],
                         table_pages: 0,
+                        kv_dtype: KvDtype::F32,
                     };
                     b.push(step, lane, 1, now).is_ok()
                 } else {
@@ -690,7 +816,7 @@ fn prop_mixed_plan_equals_per_head_splice() {
                 }
             })
             .collect();
-        let plan = RoutePlan { heads, fallback_margin: f32::NEG_INFINITY };
+        let plan = RoutePlan { heads, fallback_margin: f32::NEG_INFINITY, kv_dtype: None };
         assert!(plan.validate(n).is_ok(), "seed={seed}");
         let rep = plan.head(0);
         let shape = AttnShape::new(h, h_kv, n, d, rep.block, rep.topk.max(1));
@@ -756,7 +882,10 @@ fn prop_route_plan_json_roundtrip() {
         // dyadic margins survive the decimal round-trip exactly
         let fallback_margin =
             if rng.uniform() < 0.5 { f32::NEG_INFINITY } else { rng.below(8) as f32 * 0.25 };
-        let plan = RoutePlan { heads, fallback_margin };
+        // half the plans defer the dtype (omitted key), half pin one
+        let kv_dtype =
+            if rng.uniform() < 0.5 { None } else { Some(KvDtype::ALL[rng.below(4)]) };
+        let plan = RoutePlan { heads, fallback_margin, kv_dtype };
         for text in [plan.to_json().to_string(), plan.to_json().to_string_pretty()] {
             let back = RoutePlan::parse(&text).unwrap_or_else(|e| panic!("seed={seed}: {e}"));
             assert_eq!(back, plan, "seed={seed} text={text}");
