@@ -54,6 +54,8 @@ fn main() -> flash_moba::Result<()> {
             q: rng.normal_vec(h * n * d),
             k: rng.normal_vec(h_kv * n * d),
             v: rng.normal_vec(h_kv * n * d),
+            plan: None,
+            deadline: None,
         };
         tickets.push(coord.submit_async(req)?);
     }

@@ -198,10 +198,19 @@ pub fn quantize_roundtrip(dtype: KvDtype, x: f32, i8_amax: f32) -> f32 {
         KvDtype::F16 => f16_to_f32(f32_to_f16(x)),
         KvDtype::Bf16 => bf16_to_f32(f32_to_bf16(x)),
         KvDtype::I8 => {
+            // mirrors the append path's non-finite saturation: Inf
+            // clips to ±127 steps, NaN stores 0 (and `i8_amax` is the
+            // row's max FINITE magnitude, matching storage)
             if i8_amax == 0.0 {
                 0.0
-            } else {
+            } else if x.is_finite() {
                 ((x * (127.0 / i8_amax)).round() as i8) as f32 * (i8_amax / 127.0)
+            } else if x == f32::INFINITY {
+                127.0 * (i8_amax / 127.0)
+            } else if x == f32::NEG_INFINITY {
+                -127.0 * (i8_amax / 127.0)
+            } else {
+                0.0
             }
         }
     }
@@ -303,16 +312,47 @@ impl KvBuf {
             KvBuf::F16(b) => b.extend(row.iter().map(|&x| f32_to_f16(x))),
             KvBuf::Bf16(b) => b.extend(row.iter().map(|&x| f32_to_bf16(x))),
             KvBuf::I8 { q, scales } => {
+                // the scale comes from FINITE magnitudes only: an Inf
+                // element would otherwise drive `amax = Inf`, storing
+                // `scale = Inf` and dequantizing the whole row to
+                // NaN/Inf. Non-finite elements saturate to the clip
+                // range instead (Inf -> ±127 steps, NaN -> 0) — the
+                // serving stack rejects such rows up front, so this is
+                // defense in depth for direct cache users.
                 let mut amax = 0.0f32;
                 for &x in row.iter() {
-                    amax = amax.max(x.abs());
+                    let a = x.abs();
+                    if a.is_finite() {
+                        amax = amax.max(a);
+                    }
                 }
                 if amax == 0.0 {
-                    q.extend(std::iter::repeat(0i8).take(row.len()));
+                    // all-zero or all-non-finite: NaN stores 0, ±Inf
+                    // saturates to ±127 of a zero scale (still 0.0 on
+                    // dequant — nothing finite to scale against)
+                    q.extend(row.iter().map(|&x| {
+                        if x == f32::INFINITY {
+                            127i8
+                        } else if x == f32::NEG_INFINITY {
+                            -127i8
+                        } else {
+                            0i8
+                        }
+                    }));
                     scales.push(0.0);
                 } else {
                     let inv = 127.0 / amax;
-                    q.extend(row.iter().map(|&x| (x * inv).round() as i8));
+                    q.extend(row.iter().map(|&x| {
+                        if x.is_finite() {
+                            (x * inv).round() as i8
+                        } else if x == f32::INFINITY {
+                            127
+                        } else if x == f32::NEG_INFINITY {
+                            -127
+                        } else {
+                            0 // NaN
+                        }
+                    }));
                     scales.push(amax / 127.0);
                 }
             }
@@ -540,6 +580,42 @@ mod tests {
         let mut z = KvBuf::new(KvDtype::I8);
         z.append_row(&[0.0; 4]);
         assert_eq!(z.view_rows(0, 1, 4).dequant_to_vec(4), vec![0.0; 4]);
+    }
+
+    /// Non-finite rows must never poison the i8 scale: an Inf element
+    /// used to drive `amax = Inf` (storing `scale = Inf`, dequantizing
+    /// the whole row to NaN), and a NaN slipped through `f32::max` as
+    /// if absent. Now the scale comes from finite magnitudes only and
+    /// non-finite elements saturate: Inf -> +clip, -Inf -> -clip,
+    /// NaN -> 0 — every dequantized value stays finite.
+    #[test]
+    fn i8_non_finite_rows_saturate_instead_of_nan_scales() {
+        // mixed row: finite values set the scale, Inf/NaN saturate
+        let row = [1.0f32, f32::INFINITY, -2.0, f32::NAN, f32::NEG_INFINITY, 0.5];
+        let d = row.len();
+        let mut buf = KvBuf::new(KvDtype::I8);
+        buf.append_row(&row);
+        let back = buf.view_rows(0, 1, d).dequant_to_vec(d);
+        assert!(back.iter().all(|x| x.is_finite()), "non-finite dequant: {back:?}");
+        let scale = 2.0 / 127.0; // amax over finite elements = 2.0
+        assert!((back[0] - 1.0).abs() <= scale, "{back:?}");
+        assert_eq!(back[1], 127.0 * scale); // +Inf clips to +amax
+        assert!((back[2] + 2.0).abs() <= scale);
+        assert_eq!(back[3], 0.0); // NaN stores 0
+        assert_eq!(back[4], -127.0 * scale); // -Inf clips to -amax
+        // the roundtrip reference mirrors storage bit-for-bit
+        for (c, &x) in row.iter().enumerate() {
+            assert_eq!(
+                back[c].to_bits(),
+                quantize_roundtrip(KvDtype::I8, x, 2.0).to_bits(),
+                "c={c}"
+            );
+        }
+        // an all-non-finite row stores a zero scale, not Inf/NaN
+        let mut buf = KvBuf::new(KvDtype::I8);
+        buf.append_row(&[f32::INFINITY, f32::NAN, f32::NEG_INFINITY]);
+        let back = buf.view_rows(0, 1, 3).dequant_to_vec(3);
+        assert_eq!(back, vec![0.0; 3], "zero scale dequantizes to zero");
     }
 
     /// Append/view bookkeeping across all dtypes: row counts, reserved

@@ -26,6 +26,11 @@
 //!   families through the coordinator, unbounded pool vs a tight page
 //!   budget; CI floors the fork `prefix_hit_rate` and the bitwise
 //!   `parity_ok` of the pressured leg.
+//! * [`chaos_soak`] — the chaos-parity gate: identical traffic with
+//!   and without an active fault plan (injected kernel panics, page
+//!   denials, corrupted inputs, wave stalls); CI floors
+//!   `chaos_parity_ok` (non-faulted sessions bitwise identical) and
+//!   `no_worker_deaths` (the worker survives and keeps serving).
 //! * [`smallblock`] — flash_moba vs dense across block ∈ {16, 32, 64}
 //!   at fixed N (the paper's small-block regime), through the
 //!   zero-allocation `forward_into` path; CI floors the B=32 speedup.
@@ -33,6 +38,7 @@
 //!   plus paper-scale retrieval curves (the Tables 3–4 shape at 64K).
 //! * [`report`] — aligned-table printing + JSON result persistence.
 
+pub mod chaos_soak;
 pub mod decode;
 pub mod decode_batch;
 pub mod figures;

@@ -127,6 +127,24 @@ pub struct ServeParams {
     /// var and by a plan file's `kv_dtype`; an unrecognized string
     /// falls back to f32
     pub kv_dtype: String,
+    /// fault-injection plan spec (`"seed:spec"`, the
+    /// [`crate::util::faults::FaultPlan`] grammar) armed for this
+    /// coordinator; `None` (the default) disables injection entirely.
+    /// The `MOBA_FAULTS` env var overrides this field. An unparseable
+    /// spec fails coordinator startup loudly
+    pub fault_plan: Option<String>,
+    /// graceful degradation under pool saturation: when the page pool
+    /// is at budget and eviction cannot free anything, `true` admits
+    /// *new* sessions with their KV dtype degraded to i8 (quarter
+    /// footprint; outputs change, so it is opt-in), `false` (the
+    /// default) rejects them with a typed `PoolSaturated` error.
+    /// Either way: never a panic
+    pub degrade_under_pressure: bool,
+    /// bounded deterministic retries after a transient admission
+    /// denial (pool pressure or an injected `alloc_deny` fault) before
+    /// the work parks FIFO; each retry is counted in
+    /// `Metrics::retries`
+    pub admit_retries: usize,
 }
 
 impl Default for ServeParams {
@@ -144,6 +162,9 @@ impl Default for ServeParams {
             page_tokens: 0,
             max_pages: 0,
             kv_dtype: "f32".into(),
+            fault_plan: None,
+            degrade_under_pressure: false,
+            admit_retries: 3,
         }
     }
 }
@@ -317,6 +338,13 @@ impl AppConfig {
             if let Some(x) = s.get("kv_dtype").and_then(|x| x.as_str()) {
                 self.serve.kv_dtype = x.to_string();
             }
+            if let Some(x) = s.get("fault_plan").and_then(|x| x.as_str()) {
+                self.serve.fault_plan = Some(x.to_string());
+            }
+            if let Some(x) = s.get("degrade_under_pressure").and_then(|x| x.as_bool()) {
+                self.serve.degrade_under_pressure = x;
+            }
+            ov_usize(s, "admit_retries", &mut self.serve.admit_retries);
         }
         if let Some(a) = j.get("autotune") {
             ov_usize(a, "d", &mut self.autotune.d);
@@ -474,6 +502,29 @@ mod tests {
         let mut c = AppConfig::default();
         c.apply(&j);
         assert_eq!(c.serve.kv_dtype, "f8");
+    }
+
+    /// Fault-tolerance knobs: off by default (no plan armed, no
+    /// degraded admission, 3 bounded retries), each overridable from
+    /// the serve table. The fault spec itself is validated at
+    /// coordinator startup, not here — apply stores the string.
+    #[test]
+    fn fault_tolerance_overrides() {
+        let d = AppConfig::default();
+        assert_eq!(d.serve.fault_plan, None);
+        assert!(!d.serve.degrade_under_pressure);
+        assert_eq!(d.serve.admit_retries, 3);
+        let j = Json::parse(
+            r#"{"serve": {"fault_plan": "42:kernel_panic=0.1",
+                          "degrade_under_pressure": true,
+                          "admit_retries": 5}}"#,
+        )
+        .unwrap();
+        let mut c = AppConfig::default();
+        c.apply(&j);
+        assert_eq!(c.serve.fault_plan.as_deref(), Some("42:kernel_panic=0.1"));
+        assert!(c.serve.degrade_under_pressure);
+        assert_eq!(c.serve.admit_retries, 5);
     }
 
     #[test]

@@ -14,7 +14,10 @@
 //! regression suite pins.
 //!
 //! Pure data structure (no tasks/timers inside) so invariants are
-//! proptest-able; the server drives it with `poll(now)`.
+//! proptest-able; the server drives it with `poll(now)` and sheds
+//! per-item deadline expiries with `shed_expired(now)` (the items come
+//! back to the server, which answers each with a typed error — the
+//! batcher itself never drops work silently).
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
@@ -95,15 +98,16 @@ impl Batcher {
         if self.len >= self.capacity {
             return Err(item);
         }
-        let lane = match self.lanes.iter_mut().find(|l| l.artifact == artifact) {
-            Some(l) => l,
+        let lane = match self.lanes.iter().position(|l| l.artifact == artifact) {
+            Some(i) => &mut self.lanes[i],
             None => {
                 self.lanes.push(Lane {
                     artifact: artifact.to_string(),
                     kernel_n,
                     q: VecDeque::new(),
                 });
-                self.lanes.last_mut().unwrap()
+                let last = self.lanes.len() - 1;
+                &mut self.lanes[last]
             }
         };
         lane.q.push_back((item, now));
@@ -149,6 +153,33 @@ impl Batcher {
         })
     }
 
+    /// Remove and return every queued item whose *work deadline* (the
+    /// optional per-item [`WorkItem::deadline`], not the lane's
+    /// max-wait flush deadline) has passed at `now`. The server calls
+    /// this each loop turn and answers the shed items with a typed
+    /// `DeadlineExceeded` error — expired work is never executed
+    /// stale, and never silently dropped. FIFO order within a lane is
+    /// preserved for the survivors; the shed items are returned in
+    /// lane order then queue order so the server's error responses are
+    /// deterministic.
+    pub fn shed_expired(&mut self, now: Instant) -> Vec<(WorkItem, Instant)> {
+        let mut shed = Vec::new();
+        for lane in &mut self.lanes {
+            if lane.q.iter().any(|(i, _)| i.expired(now)) {
+                let kept = std::mem::take(&mut lane.q);
+                for (item, t) in kept {
+                    if item.expired(now) {
+                        shed.push((item, t));
+                    } else {
+                        lane.q.push_back((item, t));
+                    }
+                }
+            }
+        }
+        self.len -= shed.len();
+        shed
+    }
+
     /// Drain everything (shutdown), deadline ignored.
     pub fn flush_all(&mut self) -> Vec<Batch> {
         let mut out = Vec::new();
@@ -180,6 +211,7 @@ impl Batcher {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // test assertions on known-Some/Ok values
 mod tests {
     use super::*;
     use crate::attention::KvDtype;
@@ -197,6 +229,7 @@ mod tests {
             k: vec![0.0; n * 2],
             v: vec![0.0; n * 2],
             plan: None,
+            deadline: None,
         }
     }
 
@@ -209,6 +242,7 @@ mod tests {
             v: vec![0.0; d],
             table_pages: 0,
             kv_dtype: KvDtype::F32,
+            deadline: None,
         }
     }
 
@@ -396,6 +430,33 @@ mod tests {
         assert_eq!(b.poll(now).unwrap().artifact, "b");
         assert_eq!(b.poll(now).unwrap().artifact, "a");
         assert!(b.poll(now).is_none());
+    }
+
+    /// Per-item deadline shedding: expired items come back out (for a
+    /// typed error response), survivors keep FIFO order, and items
+    /// without deadlines are never shed no matter how long they wait.
+    #[test]
+    fn shed_expired_removes_only_expired_items_and_keeps_fifo() {
+        let mut b = Batcher::new(8, Duration::from_secs(100), 100);
+        let t = Instant::now();
+        let dl = t + Duration::from_millis(10);
+        b.push(req(1, 4), "a", 8, t).unwrap(); // no deadline
+        b.push(AttnRequest { deadline: Some(dl), ..req(2, 4) }, "a", 8, t).unwrap();
+        b.push(DecodeStep { deadline: Some(dl), ..step(3, 1, 4) }, "decode:x", 1, t).unwrap();
+        b.push(step(4, 1, 4), "decode:x", 1, t).unwrap();
+        // nothing expired yet
+        assert!(b.shed_expired(t).is_empty());
+        assert_eq!(b.len(), 4);
+        // past the work deadline: exactly ids 2 and 3 shed
+        let shed = b.shed_expired(dl);
+        let ids: Vec<u64> = shed.iter().map(|(i, _)| i.id()).collect();
+        assert_eq!(ids, vec![2, 3]);
+        assert_eq!(b.len(), 2);
+        // survivors flush in FIFO order, untouched
+        let batches = b.flush_all();
+        let left: Vec<u64> =
+            batches.iter().flat_map(|x| x.items.iter().map(|(i, _)| i.id())).collect();
+        assert_eq!(left, vec![1, 4]);
     }
 
     #[test]

@@ -1,0 +1,154 @@
+//! Typed serving errors.
+//!
+//! Every failure the coordinator can hand back crosses a channel as
+//! `anyhow::Error`, but the *classifiable* ones — the failures a
+//! client would branch on (retry? re-create the session? shed load?)
+//! — carry a [`ServeError`] at the root so callers can
+//! `err.downcast_ref::<ServeError>()` and match, instead of parsing
+//! message strings. Config/startup errors and internal invariant
+//! violations stay plain `anyhow` context chains.
+//!
+//! The variants map one-to-one onto the failure-handling state machine
+//! documented in `docs/ARCHITECTURE.md` ("Failure handling"):
+//! quarantine ([`ServeError::KernelPanic`] then
+//! [`ServeError::SessionPoisoned`]), deadline shedding, bounded
+//! admission, and graceful-degradation rejection.
+
+use std::fmt;
+
+/// A classifiable serving failure. See the module docs; the
+/// `Display` text is stable enough to log but clients should match on
+/// the variant, not the string.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// A kernel launch panicked. The panic was caught at the wave
+    /// barrier, the worker survived, and (for decode) the session was
+    /// quarantined — subsequent steps get [`ServeError::SessionPoisoned`].
+    KernelPanic {
+        /// the decode session at fault, `None` for a prefill request
+        session: Option<u64>,
+        /// the caught panic payload (best-effort stringification)
+        detail: String,
+    },
+    /// The session was quarantined by an earlier caught panic; it
+    /// answers (rather than silently vanishing) until freed.
+    SessionPoisoned { session: u64 },
+    /// The session id was never created or has been freed.
+    SessionUnknown { session: u64 },
+    /// The work item's deadline expired before execution; it was shed
+    /// without touching the session's cache.
+    DeadlineExceeded { id: u64 },
+    /// The admission queue is at capacity; retry later.
+    QueueFull { id: u64 },
+    /// The session's page footprint exceeds the pool's total budget —
+    /// no amount of eviction can ever admit it.
+    AdmissionImpossible { session: u64, needed: usize, budget: usize },
+    /// The page pool is saturated, no evictable victim exists, and
+    /// degraded admission is not enabled (`serve.degrade_under_pressure`).
+    PoolSaturated { session: u64 },
+    /// The request carried invalid payloads (shape mismatch or
+    /// non-finite q/k/v values).
+    InvalidInput { id: u64, what: String },
+    /// The coordinator is shutting down; queued work is drained with
+    /// this error rather than dropped.
+    Shutdown,
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::KernelPanic { session: Some(sid), detail } => {
+                write!(f, "kernel launch panicked for session {sid} (quarantined): {detail}")
+            }
+            ServeError::KernelPanic { session: None, detail } => {
+                write!(f, "kernel launch panicked for a prefill request: {detail}")
+            }
+            ServeError::SessionPoisoned { session } => {
+                write!(f, "session {session} is quarantined by an earlier caught panic; free it and re-create")
+            }
+            ServeError::SessionUnknown { session } => {
+                write!(f, "unknown decode session {session} (never created, or already freed)")
+            }
+            ServeError::DeadlineExceeded { id } => {
+                write!(f, "work item {id} shed: its deadline expired before execution")
+            }
+            ServeError::QueueFull { id } => {
+                write!(f, "work item {id} rejected: admission queue full")
+            }
+            ServeError::AdmissionImpossible { session, needed, budget } => write!(
+                f,
+                "session {session} needs {needed} page-budget units; the pool budget is {budget} \
+                 — it can never be admitted"
+            ),
+            ServeError::PoolSaturated { session } => write!(
+                f,
+                "session {session} rejected: page pool saturated with no evictable victim \
+                 (enable serve.degrade_under_pressure to admit degraded)"
+            ),
+            ServeError::InvalidInput { id, what } => {
+                write!(f, "invalid input in work item {id}: {what}")
+            }
+            ServeError::Shutdown => write!(f, "coordinator shut down"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+impl ServeError {
+    /// Best-effort stringification of a caught panic payload (`&str`
+    /// and `String` payloads cover every in-tree `panic!`).
+    pub fn panic_detail(payload: &(dyn std::any::Any + Send)) -> String {
+        if let Some(s) = payload.downcast_ref::<&str>() {
+            (*s).to_string()
+        } else if let Some(s) = payload.downcast_ref::<String>() {
+            s.clone()
+        } else {
+            "non-string panic payload".to_string()
+        }
+    }
+
+    /// Extract the `ServeError` at the root of an `anyhow` chain, if
+    /// one is there.
+    pub fn of(err: &anyhow::Error) -> Option<&ServeError> {
+        err.downcast_ref::<ServeError>()
+    }
+}
+
+#[cfg(test)]
+#[allow(clippy::unwrap_used)] // test assertions on known-Some/Ok values
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrips_through_anyhow_downcast() {
+        let err: anyhow::Error = ServeError::SessionPoisoned { session: 7 }.into();
+        match ServeError::of(&err) {
+            Some(ServeError::SessionPoisoned { session }) => assert_eq!(*session, 7),
+            other => panic!("wrong downcast: {other:?}"),
+        }
+        // a plain anyhow error is not a ServeError
+        assert!(ServeError::of(&anyhow::anyhow!("plain")).is_none());
+    }
+
+    #[test]
+    fn display_is_actionable() {
+        let e = ServeError::AdmissionImpossible { session: 3, needed: 100, budget: 64 };
+        let s = e.to_string();
+        assert!(s.contains("100 page-budget units"), "{s}");
+        assert!(s.contains("64"), "{s}");
+        assert!(
+            ServeError::KernelPanic { session: Some(1), detail: "boom".into() }
+                .to_string()
+                .contains("quarantined")
+        );
+    }
+
+    #[test]
+    fn panic_detail_reads_str_and_string_payloads() {
+        let p = std::panic::catch_unwind(|| panic!("static str")).unwrap_err();
+        assert_eq!(ServeError::panic_detail(p.as_ref()), "static str");
+        let p = std::panic::catch_unwind(|| panic!("formatted {}", 42)).unwrap_err();
+        assert_eq!(ServeError::panic_detail(p.as_ref()), "formatted 42");
+    }
+}

@@ -54,6 +54,18 @@ pub struct Metrics {
     /// admissions that could not proceed (no evictable victim) and were
     /// parked FIFO instead
     pub admits_deferred: AtomicU64,
+    /// kernel-launch panics caught at a `catch_unwind` barrier (the
+    /// worker survived every one of these)
+    pub panics_caught: AtomicU64,
+    /// decode sessions quarantined after a caught panic: the session
+    /// table answers their later steps with `ServeError::SessionPoisoned`
+    /// until the client frees them
+    pub sessions_poisoned: AtomicU64,
+    /// work items shed because their deadline expired before execution
+    pub deadline_sheds: AtomicU64,
+    /// bounded deterministic admission retries after a transient denial
+    /// (pool pressure or an injected `alloc_deny` fault)
+    pub retries: AtomicU64,
     hist: Mutex<Histo>,
 }
 
@@ -70,7 +82,9 @@ impl Metrics {
     }
 
     pub fn record_latency(&self, seconds: f64) {
-        let mut h = self.hist.lock().unwrap();
+        // poison-tolerant: the histogram is plain counters, always
+        // consistent, so a panicking recorder must not wedge metrics
+        let mut h = self.hist.lock().unwrap_or_else(|p| p.into_inner());
         let b = BUCKETS.iter().position(|&ub| seconds <= ub).unwrap_or(BUCKETS.len() - 1);
         h.counts[b] += 1;
         h.sum += seconds;
@@ -78,7 +92,7 @@ impl Metrics {
     }
 
     pub fn mean_latency_s(&self) -> f64 {
-        let h = self.hist.lock().unwrap();
+        let h = self.hist.lock().unwrap_or_else(|p| p.into_inner());
         if h.n == 0 {
             0.0
         } else {
@@ -88,7 +102,7 @@ impl Metrics {
 
     /// Approximate quantile from the histogram (upper bucket bound).
     pub fn latency_quantile_s(&self, q: f64) -> f64 {
-        let h = self.hist.lock().unwrap();
+        let h = self.hist.lock().unwrap_or_else(|p| p.into_inner());
         if h.n == 0 {
             return 0.0;
         }
@@ -149,6 +163,7 @@ impl Metrics {
             "req={} resp={} rejected={} batches={} occupancy={:.2} \
              sessions={} decode_steps={} decode_batches={} fallback_heads={} \
              pages={}/{} prefix_hit={:.2} cow_splits={} preempt={} restore={} deferred={} \
+             panics_caught={} poisoned={} deadline_sheds={} retries={} \
              mean_lat={:.2}ms p95<={:.1}ms",
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
@@ -166,6 +181,10 @@ impl Metrics {
             self.preemptions.load(Ordering::Relaxed),
             self.restores.load(Ordering::Relaxed),
             self.admits_deferred.load(Ordering::Relaxed),
+            self.panics_caught.load(Ordering::Relaxed),
+            self.sessions_poisoned.load(Ordering::Relaxed),
+            self.deadline_sheds.load(Ordering::Relaxed),
+            self.retries.load(Ordering::Relaxed),
             self.mean_latency_s() * 1e3,
             self.latency_quantile_s(0.95) * 1e3,
         )
@@ -173,6 +192,7 @@ impl Metrics {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // test assertions on known-Some/Ok values
 mod tests {
     use super::*;
 
@@ -252,5 +272,39 @@ mod tests {
         assert!(s.contains("preempt=3"), "{s}");
         assert!(s.contains("restore=2"), "{s}");
         assert!(s.contains("deferred=1"), "{s}");
+    }
+
+    #[test]
+    fn fault_tolerance_counters_in_summary() {
+        let m = Metrics::new();
+        let s = m.summary();
+        assert!(s.contains("panics_caught=0"), "{s}");
+        assert!(s.contains("poisoned=0"), "{s}");
+        m.panics_caught.fetch_add(2, Ordering::Relaxed);
+        m.sessions_poisoned.fetch_add(1, Ordering::Relaxed);
+        m.deadline_sheds.fetch_add(3, Ordering::Relaxed);
+        m.retries.fetch_add(7, Ordering::Relaxed);
+        let s = m.summary();
+        assert!(s.contains("panics_caught=2"), "{s}");
+        assert!(s.contains("poisoned=1"), "{s}");
+        assert!(s.contains("deadline_sheds=3"), "{s}");
+        assert!(s.contains("retries=7"), "{s}");
+    }
+
+    /// Poison tolerance: a panic while holding the histogram lock must
+    /// not wedge later recording or reads.
+    #[test]
+    fn histogram_survives_a_poisoned_lock() {
+        let m = std::sync::Arc::new(Metrics::new());
+        m.record_latency(1e-3);
+        let m2 = m.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.hist.lock().unwrap();
+            panic!("poison the histogram lock");
+        })
+        .join();
+        m.record_latency(2e-3);
+        assert!(m.mean_latency_s() > 0.0);
+        assert!(m.latency_quantile_s(0.5) > 0.0);
     }
 }

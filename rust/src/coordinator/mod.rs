@@ -7,7 +7,9 @@
 //!   multi-head `(h, n, d)` / `(h_kv, n, d)` tensors, plus decode steps
 //!   and the [`request::WorkItem`] the batcher queues. One request is
 //!   one kernel launch: the substrate kernels iterate heads internally,
-//!   so the coordinator has no head loop.
+//!   so the coordinator has no head loop. Requests and steps carry an
+//!   optional deadline; expired work is shed loudly, never executed
+//!   stale.
 //! * [`router`] — routes a request to the smallest compiled artifact
 //!   that fits its sequence length (dense vs MoBA kernels); advertises
 //!   the serving model's head layout (`n_heads` / `n_kv_heads`, plumbed
@@ -26,14 +28,27 @@
 //!   byte-true units (page entries × the session's KV dtype width), so
 //!   an f16 pool admits ~2× the sessions of f32 under the same
 //!   `max_pages` budget.
-//! * [`metrics`] — counters + latency histogram (incl. session/decode
-//!   and paging counters).
+//! * [`metrics`] — counters + latency histogram (incl. session/decode,
+//!   paging, and fault-tolerance counters).
+//! * [`error`] — typed [`error::ServeError`]s: the classifiable
+//!   failures (quarantine, deadline shed, saturation rejection) a
+//!   client can downcast and branch on.
 //! * [`server`] — the event loop tying it together; in-process
 //!   `submit()` prefill API plus the decode session API
 //!   (`session_create` / `decode` / `session_free`) used by examples,
-//!   benches and tests.
+//!   benches and tests. Every kernel launch runs under a
+//!   `catch_unwind` barrier: a panicking launch poisons only its own
+//!   session (quarantine), never a sibling in the wave and never the
+//!   worker thread. See `docs/ARCHITECTURE.md` "Failure handling".
+//!
+//! The coordinator is the layer that must never die, so `unwrap()` is
+//! denied module-wide: recoverable failures carry typed errors, true
+//! invariants use `expect` with the invariant spelled out, and the few
+//! justified exceptions are explicit `#[allow]`s.
+#![deny(clippy::unwrap_used)]
 
 pub mod batcher;
+pub mod error;
 pub mod metrics;
 pub mod request;
 pub mod router;
@@ -41,6 +56,7 @@ pub mod scheduler;
 pub mod server;
 
 pub use batcher::{Batch, Batcher};
+pub use error::ServeError;
 pub use metrics::Metrics;
 pub use request::{AttnKind, AttnRequest, AttnResponse, DecodeStep, WorkItem};
 pub use router::Router;

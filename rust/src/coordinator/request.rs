@@ -50,13 +50,30 @@ pub struct AttnRequest {
     /// a plan file is loaded). `Moba` requests only — ignored by
     /// `Dense` ones.
     pub plan: Option<RoutePlan>,
+    /// Optional deadline: work still queued or parked when this instant
+    /// passes is shed with a typed `DeadlineExceeded` error instead of
+    /// executing stale. `None` (the default) never expires.
+    pub deadline: Option<Instant>,
+}
+
+/// Every payload value is a real number — a single NaN or Inf row
+/// would silently corrupt the softmax (and, for i8 caches, the
+/// per-row quantization scale), so it is rejected at validation.
+fn all_finite(xs: &[f32]) -> bool {
+    xs.iter().all(|x| x.is_finite())
 }
 
 impl AttnRequest {
     /// The single-head constructor most callers want.
     #[allow(clippy::too_many_arguments)]
     pub fn single(id: u64, kind: AttnKind, n: usize, d: usize, q: Vec<f32>, k: Vec<f32>, v: Vec<f32>) -> Self {
-        Self { id, kind, h: 1, h_kv: 1, n, d, q, k, v, plan: None }
+        Self { id, kind, h: 1, h_kv: 1, n, d, q, k, v, plan: None, deadline: None }
+    }
+
+    /// All q/k/v values finite (no NaN/Inf). O(payload) — on the order
+    /// of the memcpy the request already paid to build its vectors.
+    pub fn payloads_finite(&self) -> bool {
+        all_finite(&self.q) && all_finite(&self.k) && all_finite(&self.v)
     }
 
     pub fn validate(&self) -> bool {
@@ -73,6 +90,7 @@ impl AttnRequest {
             && self.q.len() == self.h * self.n * self.d
             && self.k.len() == self.h_kv * self.n * self.d
             && self.v.len() == self.h_kv * self.n * self.d
+            && self.payloads_finite()
     }
 
     /// Tensor payload bytes this request carries: O((h + 2·h_kv)·n·d).
@@ -107,11 +125,21 @@ pub struct DecodeStep {
     /// The step's k/v rows quantize to this width on append, so payload
     /// accounting charges their stored width, not blanket f32.
     pub kv_dtype: KvDtype,
+    /// Optional deadline; see [`AttnRequest::deadline`]. A shed decode
+    /// step never touches the session's cache (no append), so the
+    /// session stays consistent — it simply has one fewer token.
+    pub deadline: Option<Instant>,
 }
 
 impl DecodeStep {
+    /// All q/k/v values finite (no NaN/Inf); a non-finite row would
+    /// corrupt the cache append (i8 scale) and the softmax.
+    pub fn payloads_finite(&self) -> bool {
+        all_finite(&self.q) && all_finite(&self.k) && all_finite(&self.v)
+    }
+
     /// All rows present and matching the session's head layout: q is
-    /// `(h, d)`, k/v are `(h_kv, d)`.
+    /// `(h, d)`, k/v are `(h_kv, d)` — and every value finite.
     pub fn validate(&self, h: usize, h_kv: usize, d: usize) -> bool {
         d > 0
             && h >= 1
@@ -119,6 +147,7 @@ impl DecodeStep {
             && self.q.len() == h * d
             && self.k.len() == h_kv * d
             && self.v.len() == h_kv * d
+            && self.payloads_finite()
     }
 
     /// Bytes this step moves through the queue, layout- and
@@ -160,6 +189,19 @@ impl WorkItem {
             WorkItem::Prefill(r) => r.payload_bytes(),
             WorkItem::Decode(s) => s.payload_bytes(),
         }
+    }
+
+    /// The carried work's deadline, if it has one.
+    pub fn deadline(&self) -> Option<Instant> {
+        match self {
+            WorkItem::Prefill(r) => r.deadline,
+            WorkItem::Decode(s) => s.deadline,
+        }
+    }
+
+    /// Whether this item's deadline has passed at `now`.
+    pub fn expired(&self, now: Instant) -> bool {
+        self.deadline().is_some_and(|dl| now >= dl)
     }
 }
 
@@ -203,6 +245,7 @@ impl QueueStamp {
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // test assertions on known-Some/Ok values
 mod tests {
     use super::*;
 
@@ -231,6 +274,7 @@ mod tests {
             k: vec![0.0; 2 * n * d],
             v: vec![0.0; 2 * n * d],
             plan: None,
+            deadline: None,
         };
         assert!(gqa.validate());
         // k/v sized for h instead of h_kv
@@ -262,6 +306,7 @@ mod tests {
                 fallback_margin: f32::NEG_INFINITY,
                 kv_dtype: None,
             }),
+            deadline: None,
         };
         assert!(req.validate());
         // plan must cover exactly h_kv heads
@@ -288,6 +333,7 @@ mod tests {
             v: vec![0.0; 4],
             table_pages: 0,
             kv_dtype: KvDtype::F32,
+            deadline: None,
         };
         assert!(step.validate(1, 1, 4));
         assert!(!step.validate(1, 1, 8));
@@ -308,6 +354,7 @@ mod tests {
             v: vec![0.0; 2 * d],
             table_pages: 0,
             kv_dtype: KvDtype::F32,
+            deadline: None,
         };
         assert!(gqa.validate(4, 2, d));
         assert!(!gqa.validate(4, 4, d));
@@ -330,6 +377,7 @@ mod tests {
             k: vec![0.0; h_kv * n * d],
             v: vec![0.0; h_kv * n * d],
             plan: None,
+            deadline: None,
         });
         let decode = WorkItem::from(DecodeStep {
             id: 2,
@@ -339,6 +387,7 @@ mod tests {
             v: vec![0.0; h_kv * d],
             table_pages: 0,
             kv_dtype: KvDtype::F32,
+            deadline: None,
         });
         assert_eq!(prefill.payload_bytes(), ((h + 2 * h_kv) * n * d * 4) as u64);
         assert_eq!(decode.payload_bytes(), ((h + 2 * h_kv) * d * 4) as u64);
@@ -363,6 +412,7 @@ mod tests {
             v: vec![0.0; h_kv * d],
             table_pages: 0,
             kv_dtype: KvDtype::F32,
+            deadline: None,
         };
         assert_eq!(step.payload_bytes(), rows);
         step.table_pages = 48; // e.g. 2 KV heads × 24 blocks resident
@@ -386,6 +436,7 @@ mod tests {
             v: vec![0.0; h_kv * d],
             table_pages: 16,
             kv_dtype: dt,
+            deadline: None,
         };
         let q_bytes = (h * d * 4) as u64;
         let kv_elems = (2 * h_kv * d) as u64;
@@ -398,5 +449,70 @@ mod tests {
             );
         }
         assert_eq!(step(KvDtype::F16).payload_bytes() + kv_elems * 2, step(KvDtype::F32).payload_bytes());
+    }
+
+    /// Non-finite payloads are rejected at validation: one NaN (or
+    /// Inf) anywhere in q/k/v fails the request / step, even though
+    /// every length matches. Guards the corrupted-input path end to
+    /// end (a NaN row would otherwise corrupt softmax outputs and i8
+    /// quantization scales silently).
+    #[test]
+    fn validate_rejects_non_finite_payloads() {
+        let ok = AttnRequest::single(1, AttnKind::Moba, 4, 2, vec![0.5; 8], vec![0.5; 8], vec![0.5; 8]);
+        assert!(ok.validate() && ok.payloads_finite());
+        for bad_val in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let mut bad = ok.clone();
+            bad.k[3] = bad_val;
+            assert!(!bad.payloads_finite());
+            assert!(!bad.validate(), "accepted k[3]={bad_val}");
+            let mut bad_q = ok.clone();
+            bad_q.q[0] = bad_val;
+            assert!(!bad_q.validate());
+        }
+        let step = DecodeStep {
+            id: 1,
+            session: 7,
+            q: vec![0.5; 4],
+            k: vec![0.5; 4],
+            v: vec![0.5; 4],
+            table_pages: 0,
+            kv_dtype: KvDtype::F32,
+            deadline: None,
+        };
+        assert!(step.validate(1, 1, 4));
+        let mut bad = step.clone();
+        bad.v[2] = f32::NAN;
+        assert!(!bad.validate(1, 1, 4));
+        let mut bad = step;
+        bad.k[0] = f32::INFINITY;
+        assert!(!bad.validate(1, 1, 4));
+    }
+
+    /// Deadline plumbing: `None` never expires; a set deadline flips
+    /// `expired` exactly at the instant, for both item kinds.
+    #[test]
+    fn work_item_deadline_expiry() {
+        let t0 = Instant::now();
+        let later = t0 + std::time::Duration::from_secs(3600);
+        let req = AttnRequest::single(1, AttnKind::Dense, 2, 2, vec![0.0; 4], vec![0.0; 4], vec![0.0; 4]);
+        assert_eq!(req.deadline, None);
+        let item = WorkItem::from(req.clone());
+        assert!(!item.expired(later), "None deadline must never expire");
+        let item = WorkItem::from(AttnRequest { deadline: Some(later), ..req });
+        assert_eq!(item.deadline(), Some(later));
+        assert!(!item.expired(t0));
+        assert!(item.expired(later));
+        let step = DecodeStep {
+            id: 2,
+            session: 1,
+            q: vec![0.0; 2],
+            k: vec![0.0; 2],
+            v: vec![0.0; 2],
+            table_pages: 0,
+            kv_dtype: KvDtype::F32,
+            deadline: Some(t0),
+        };
+        let item = WorkItem::from(step);
+        assert!(item.expired(t0) && item.expired(later));
     }
 }

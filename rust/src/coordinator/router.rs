@@ -150,7 +150,10 @@ impl Router {
             .find(|(cap, _)| *cap >= n)
             .map(|(cap, name)| (*cap, name.as_str()))
             .ok_or_else(|| {
-                anyhow!("request n={n} exceeds largest compiled kernel ({})", list.last().unwrap().0)
+                // the table entry exists (checked above), so the list is
+                // non-empty; map_or keeps the error path panic-free anyway
+                let largest = list.last().map_or(0, |(cap, _)| *cap);
+                anyhow!("request n={n} exceeds largest compiled kernel ({largest})")
             })
     }
 
@@ -216,6 +219,7 @@ pub fn effective_dtype(plan_dtype: Option<KvDtype>, serve: &ServeParams) -> KvDt
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // test assertions on known-Some/Ok values
 mod tests {
     use super::*;
     use crate::runtime::{Manifest, VariantSpec};

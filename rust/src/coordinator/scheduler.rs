@@ -105,6 +105,15 @@ impl PageScheduler {
             .min_by_key(|(&sid, r)| (r.last_touch, sid))
             .map(|(&sid, r)| (sid, r.pages))
     }
+
+    /// Whether eviction could free *any* pages right now: some
+    /// unprotected resident session holds a non-empty table. The
+    /// graceful-degradation gate: when this is false and the pool is
+    /// at budget, admitting more work can only succeed degraded (or
+    /// not at all) — preemption has nothing left to take.
+    pub fn has_evictable(&self, protected: impl Fn(u64) -> bool) -> bool {
+        self.resident.iter().any(|(&sid, r)| r.pages > 0 && !protected(sid))
+    }
 }
 
 #[cfg(test)]
@@ -171,5 +180,21 @@ mod tests {
         s.touch(42);
         assert!(s.is_empty());
         assert_eq!(s.victim(|_| false), None);
+    }
+
+    /// `has_evictable` mirrors `victim` but also discounts
+    /// zero-page residents (evicting them frees nothing, so they
+    /// cannot unsaturate a full pool).
+    #[test]
+    fn has_evictable_tracks_protection_and_page_counts() {
+        let mut s = PageScheduler::new();
+        assert!(!s.has_evictable(|_| false));
+        s.note_resident(1, 0); // resident but holds no pages
+        assert!(!s.has_evictable(|_| false));
+        s.note_resident(2, 4);
+        assert!(s.has_evictable(|_| false));
+        assert!(!s.has_evictable(|sid| sid == 2));
+        s.remove(2);
+        assert!(!s.has_evictable(|_| false));
     }
 }

@@ -71,8 +71,30 @@
 //!   whose observed routing margin collapses below the configured
 //!   threshold degrade to dense per request/step (counted by
 //!   `Metrics::fallback_heads`).
+//!
+//! **Failure handling** (see `docs/ARCHITECTURE.md` for the full state
+//! machine): every kernel launch runs under a `catch_unwind` barrier,
+//! so a panicking kernel fails its own request with a typed
+//! [`ServeError::KernelPanic`] instead of killing the worker. A decode
+//! wave that panics is re-run one session at a time to attribute blame
+//! — innocent wave-mates get exactly the bits they would have gotten
+//! alone (the batching contract), while the faulty session is
+//! *quarantined*: its cache is dropped (pages returned) but its id
+//! keeps answering with [`ServeError::SessionPoisoned`] until freed.
+//! Requests and decode steps may carry a deadline; expired work is shed
+//! loudly ([`ServeError::DeadlineExceeded`]) at arrival, in the queue,
+//! and at the execution gate. Transient admission denials retry with a
+//! bounded deterministic backoff before parking, and a saturated pool
+//! with nothing evictable either admits new sessions degraded to an i8
+//! cache (`serve.degrade_under_pressure`) or rejects them with
+//! [`ServeError::PoolSaturated`] — never a panic, never a silent hang.
+//! Deterministic fault injection ([`crate::util::faults::FaultPlan`],
+//! armed via `MOBA_FAULTS` or `ServeParams.fault_plan`) exercises all
+//! of these paths; the `chaos-soak` bench pins that non-faulted
+//! traffic stays bitwise identical under an armed plan.
 
 use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
@@ -82,6 +104,7 @@ use std::time::{Duration, Instant};
 use anyhow::anyhow;
 
 use super::batcher::{Batch, Batcher};
+use super::error::ServeError;
 use super::metrics::Metrics;
 use super::request::{
     AttnKind, AttnRequest, AttnResponse, DecodeStep, QueueStamp, WorkItem,
@@ -97,6 +120,7 @@ use crate::attention::plan::RoutePlan;
 use crate::attention::{packed_rows, AttnShape, KvDtype};
 use crate::config::ServeParams;
 use crate::runtime::{Runtime, Tensor};
+use crate::util::faults::{FaultPlan, FaultPoint};
 use crate::util::pool::{partition, ExecCtx};
 use crate::Result;
 
@@ -208,6 +232,17 @@ impl Coordinator {
                         return;
                     }
                 };
+                // resolve the fault plan (MOBA_FAULTS wins over the
+                // config spec) before acking boot: an unparseable plan
+                // is a loud startup error, never a silently-disarmed
+                // chaos run
+                let faults = match FaultPlan::resolve(params.fault_plan.as_deref()) {
+                    Ok(f) => f,
+                    Err(e) => {
+                        let _ = boot_tx.send(Err(e));
+                        return;
+                    }
+                };
                 let (exec, router) = match Runtime::load(&dir) {
                     Ok(rt) => match Router::from_manifest(rt.manifest()) {
                         Ok(r) => (Exec::Pjrt(rt), r),
@@ -232,9 +267,9 @@ impl Coordinator {
                     }
                 };
                 let _ = boot_tx.send(Ok(()));
-                worker_loop(exec, router, serve_plan, params, rx, m2)
+                worker_loop(exec, router, serve_plan, faults, params, rx, m2)
             })
-            .expect("spawn coordinator");
+            .map_err(|e| anyhow!("failed to spawn the coordinator worker thread: {e}"))?;
         boot_rx
             .recv()
             .map_err(|_| anyhow!("coordinator worker died during startup"))??;
@@ -250,8 +285,18 @@ impl Coordinator {
         &self.metrics
     }
 
-    /// Submit without blocking; returns a ticket to wait on.
+    /// Submit without blocking; returns a ticket to wait on. A request
+    /// may carry an optional `deadline` ([`AttnRequest::deadline`]);
+    /// work still queued past it is shed with a typed
+    /// [`ServeError::DeadlineExceeded`] instead of executing late.
     pub fn submit_async(&self, req: AttnRequest) -> Result<Ticket> {
+        if !req.payloads_finite() {
+            return Err(ServeError::InvalidInput {
+                id: req.id,
+                what: "q/k/v contain non-finite (NaN/Inf) values".into(),
+            }
+            .into());
+        }
         if !req.validate() {
             return Err(anyhow!("invalid request {}: shape mismatch", req.id));
         }
@@ -312,11 +357,28 @@ impl Coordinator {
         k: Vec<f32>,
         v: Vec<f32>,
     ) -> Result<Ticket> {
+        self.decode_deadline_async(session, q, k, v, None)
+    }
+
+    /// [`Coordinator::decode_async`] with an optional deadline: a step
+    /// still queued (or parked behind admission) when `deadline`
+    /// passes is shed with a typed [`ServeError::DeadlineExceeded`]
+    /// *before* it appends to the session's cache — a shed step leaves
+    /// the session exactly as if it was never submitted.
+    pub fn decode_deadline_async(
+        &self,
+        session: u64,
+        q: Vec<f32>,
+        k: Vec<f32>,
+        v: Vec<f32>,
+        deadline: Option<Instant>,
+    ) -> Result<Ticket> {
         let id = self.next_decode_id.fetch_add(1, Ordering::Relaxed);
         // table_pages and kv_dtype are stamped by the worker at enqueue
         // time — only it knows the session's current page-table size and
         // cache dtype
-        let step = DecodeStep { id, session, q, k, v, table_pages: 0, kv_dtype: KvDtype::F32 };
+        let step =
+            DecodeStep { id, session, q, k, v, table_pages: 0, kv_dtype: KvDtype::F32, deadline };
         if step.q.is_empty() || step.k.is_empty() || step.k.len() != step.v.len() {
             return Err(anyhow!(
                 "decode step {id}: q and k must be non-empty and k/v equal-length"
@@ -466,6 +528,11 @@ struct SessState {
     log_v: Vec<f32>,
     /// work parked behind admission, drained strictly in order
     parked: VecDeque<SessionWork>,
+    /// injected-denial attempt ordinal for the admission FIFO head:
+    /// each loop turn the head is denied bumps this, so
+    /// [`FaultPlan::fires_attempt`]'s bound guarantees the park always
+    /// clears; reset on successful admission
+    deny_attempts: u32,
 }
 
 /// The worker's continuous-batching machinery: the shared page pool, the
@@ -551,6 +618,153 @@ fn try_admit(
     true
 }
 
+/// [`try_admit`] behind a bounded, deterministic retry loop. Injected
+/// allocation denials ([`FaultPoint::AllocDeny`] — the transient
+/// failure class) cost a retry with a short deterministic backoff
+/// (the schedule depends only on the attempt index) before the work
+/// parks; genuine budget exhaustion parks immediately — within one
+/// loop turn nothing can free pages, so spinning on a real denial is
+/// pure waste. Every retry is counted in `Metrics::retries`.
+fn try_admit_with_retry(
+    cost: usize,
+    admitting: u64,
+    sessions: &mut Sessions,
+    ctl: &mut PagingCtl,
+    metrics: &Metrics,
+    faults: &FaultPlan,
+    retries: usize,
+) -> bool {
+    for attempt in 0..=(retries as u32) {
+        if attempt > 0 {
+            metrics.retries.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(Duration::from_micros(20u64 << attempt.min(8)));
+        }
+        if faults.fires_attempt(FaultPoint::AllocDeny, admitting, attempt) {
+            continue; // injected transient denial: costs one retry
+        }
+        return try_admit(cost, admitting, sessions, ctl, metrics);
+    }
+    false
+}
+
+/// Quarantine a session after a caught kernel panic: its cache is
+/// already gone (dropped by the caller, pages returned to the pool),
+/// its scheduler/admission bookkeeping is cleared, its parked work is
+/// answered with typed errors, and its id is remembered so later
+/// steps, forks and prefills get [`ServeError::SessionPoisoned`]
+/// instead of a silent "unknown session". `session_free` clears the
+/// quarantine record.
+fn quarantine_session(
+    sid: u64,
+    detail: String,
+    ctl: &mut PagingCtl,
+    pending: &mut Pending,
+    poisoned: &mut HashMap<u64, String>,
+    metrics: &Metrics,
+) {
+    ctl.scheduler.remove(sid);
+    ctl.admit_fifo.retain(|&s| s != sid);
+    if let Some(mut st) = ctl.state.remove(&sid) {
+        for work in st.parked.drain(..) {
+            metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            match work {
+                SessionWork::Step(s) => respond(
+                    pending,
+                    s.id,
+                    Err(ServeError::SessionPoisoned { session: sid }.into()),
+                ),
+                SessionWork::Prefill { tx, .. } => {
+                    let _ = tx.send(Err(ServeError::SessionPoisoned { session: sid }.into()));
+                }
+            }
+        }
+    }
+    poisoned.insert(sid, detail);
+    metrics.sessions_poisoned.fetch_add(1, Ordering::Relaxed);
+}
+
+/// The graceful-degradation gate for `session_create`: when the pool
+/// is saturated and preemption has nothing left to take, a session
+/// created at `want` could never append — park-forever disguised as
+/// success. Admit it with an i8-degraded cache (1/4 the budget units
+/// of f32) when `serve.degrade_under_pressure` allows and that
+/// actually helps, otherwise reject with a typed
+/// [`ServeError::PoolSaturated`]. With an unbounded pool, or whenever
+/// a first append could be admitted normally, `want` passes through
+/// untouched.
+fn admit_dtype_under_pressure(
+    want: KvDtype,
+    would_be: u64,
+    ctl: &PagingCtl,
+    params: &ServeParams,
+    metrics: &Metrics,
+) -> Result<KvDtype> {
+    if ctl.pool.max_pages().is_none() || ctl.pool.would_fit_units(PagePool::units_for(1, want)) {
+        return Ok(want);
+    }
+    let evictable = ctl
+        .scheduler
+        .has_evictable(|vid| ctl.state.get(&vid).map_or(true, |st| st.queued_steps > 0));
+    if evictable {
+        return Ok(want); // admission can preempt its way to pages
+    }
+    let degraded = KvDtype::I8;
+    if params.degrade_under_pressure
+        && ctl.pool.would_fit_units(PagePool::units_for(1, degraded))
+    {
+        Ok(degraded)
+    } else {
+        metrics.rejected.fetch_add(1, Ordering::Relaxed);
+        Err(ServeError::PoolSaturated { session: would_be }.into())
+    }
+}
+
+/// Shed expired parked *steps* loudly (parked prefills carry no
+/// deadline). The batcher's own queues are shed by
+/// [`Batcher::shed_expired`]; this is its mirror for work waiting on
+/// page-budget admission. A shed step never appended, so the session
+/// is exactly as if the step was never submitted.
+fn shed_expired_parked(
+    ctl: &mut PagingCtl,
+    pending: &mut Pending,
+    metrics: &Metrics,
+    now: Instant,
+) {
+    for st in ctl.state.values_mut() {
+        let expired =
+            |w: &SessionWork| matches!(w, SessionWork::Step(s) if s.deadline.is_some_and(|dl| now >= dl));
+        if !st.parked.iter().any(expired) {
+            continue;
+        }
+        let kept = std::mem::take(&mut st.parked);
+        for work in kept {
+            if let SessionWork::Step(s) = &work {
+                if s.deadline.is_some_and(|dl| now >= dl) {
+                    metrics.deadline_sheds.fetch_add(1, Ordering::Relaxed);
+                    respond(pending, s.id, Err(ServeError::DeadlineExceeded { id: s.id }.into()));
+                    continue;
+                }
+            }
+            st.parked.push_back(work);
+        }
+    }
+}
+
+/// The earliest deadline across parked decode steps, if any. Parked
+/// work is shed by [`shed_expired_parked`] on loop turns, so the
+/// worker's idle wait must not outlive the nearest parked deadline —
+/// with no traffic in flight there is no envelope to wake it.
+fn earliest_parked_deadline(ctl: &PagingCtl) -> Option<Instant> {
+    ctl.state
+        .values()
+        .flat_map(|st| st.parked.iter())
+        .filter_map(|w| match w {
+            SessionWork::Step(s) => s.deadline,
+            SessionWork::Prefill { .. } => None,
+        })
+        .min()
+}
+
 /// Park work for `sid` behind admission, keeping strict arrival order.
 fn park_work(ctl: &mut PagingCtl, sid: u64, work: SessionWork, metrics: &Metrics) {
     ctl.state.entry(sid).or_default().parked.push_back(work);
@@ -584,7 +798,7 @@ fn enqueue_step(
     let lane = format!("decode:{target}");
     if batcher.push(step, &lane, 1, Instant::now()).is_err() {
         metrics.rejected.fetch_add(1, Ordering::Relaxed);
-        respond(pending, id, Err(anyhow!("queue full")));
+        respond(pending, id, Err(ServeError::QueueFull { id }.into()));
         return;
     }
     ctl.state.entry(sid).or_default().queued_steps += 1;
@@ -593,7 +807,9 @@ fn enqueue_step(
 
 /// Route a validated decode step through admission: park it if the
 /// session is preempted or already has parked work (order!), otherwise
-/// make room for its append and enqueue it.
+/// make room for its append (retrying transient denials with a
+/// bounded deterministic backoff) and enqueue it.
+#[allow(clippy::too_many_arguments)]
 fn admit_step(
     step: DecodeStep,
     sessions: &mut Sessions,
@@ -601,6 +817,8 @@ fn admit_step(
     batcher: &mut Batcher,
     pending: &mut Pending,
     metrics: &Metrics,
+    faults: &FaultPlan,
+    retries: usize,
 ) {
     let sid = step.session;
     let blocked = ctl
@@ -610,7 +828,7 @@ fn admit_step(
     let cost = sessions
         .get(&sid)
         .map_or(0, |(_, sess)| sess.cache().append_page_cost_units(1));
-    if blocked || !try_admit(cost, sid, sessions, ctl, metrics) {
+    if blocked || !try_admit_with_retry(cost, sid, sessions, ctl, metrics, faults, retries) {
         park_work(ctl, sid, SessionWork::Step(step), metrics);
         return;
     }
@@ -667,6 +885,7 @@ fn drain_admissions(
     batcher: &mut Batcher,
     pending: &mut Pending,
     metrics: &Metrics,
+    faults: &FaultPlan,
 ) {
     while let Some(&sid) = ctl.admit_fifo.front() {
         if !sessions.contains_key(&sid) {
@@ -704,11 +923,13 @@ fn drain_admissions(
                 // whole budget is its own unevictable blocker)
                 let st = ctl.state.entry(sid).or_default();
                 for work in st.parked.drain(..) {
-                    let err = || {
-                        anyhow!(
-                            "session {sid} needs {footprint} page-budget units; \
-                             the pool budget is {budget}"
-                        )
+                    let err = || -> anyhow::Error {
+                        ServeError::AdmissionImpossible {
+                            session: sid,
+                            needed: footprint,
+                            budget,
+                        }
+                        .into()
                     };
                     match work {
                         SessionWork::Step(s) => {
@@ -725,9 +946,22 @@ fn drain_admissions(
                 continue;
             }
         }
+        // injected allocation denial against the FIFO head: count a
+        // retry and leave the head parked — the next loop turn retries
+        // with a bumped attempt ordinal (a backoff paced by the loop
+        // itself), and fires_attempt's bound guarantees it clears
+        {
+            let st = ctl.state.entry(sid).or_default();
+            if faults.fires_attempt(FaultPoint::AllocDeny, sid, st.deny_attempts) {
+                st.deny_attempts += 1;
+                metrics.retries.fetch_add(1, Ordering::Relaxed);
+                break;
+            }
+        }
         if !try_admit(cost, sid, sessions, ctl, metrics) {
             break; // strict FIFO: the head blocks until pages free up
         }
+        ctl.state.entry(sid).or_default().deny_attempts = 0;
         if evicted {
             let (_, sess) = sessions.get_mut(&sid).expect("checked above");
             let st = ctl.state.get_mut(&sid).expect("entry ensured above");
@@ -758,7 +992,7 @@ fn drain_admissions(
                 Next::Empty | Next::Blocked => break,
                 Next::Step => {
                     let Some(SessionWork::Step(step)) =
-                        ctl.state.get_mut(&sid).unwrap().parked.pop_front()
+                        ctl.state.get_mut(&sid).expect("entry ensured above").parked.pop_front()
                     else {
                         unreachable!("peeked a step")
                     };
@@ -766,7 +1000,7 @@ fn drain_admissions(
                 }
                 Next::PrefillReady => {
                     let Some(SessionWork::Prefill { n, k, v, tx }) =
-                        ctl.state.get_mut(&sid).unwrap().parked.pop_front()
+                        ctl.state.get_mut(&sid).expect("entry ensured above").parked.pop_front()
                     else {
                         unreachable!("peeked a prefill")
                     };
@@ -793,6 +1027,7 @@ fn worker_loop(
     exec: Exec,
     router: Router,
     serve_plan: Option<RoutePlan>,
+    faults: FaultPlan,
     params: ServeParams,
     rx: Receiver<Envelope>,
     metrics: Arc<Metrics>,
@@ -804,6 +1039,12 @@ fn worker_loop(
         Batcher::new(params.max_batch.min(router.pack_limit()).max(1), max_wait, params.queue_capacity);
     let mut pending: Pending = Vec::new();
     let mut sessions: Sessions = HashMap::new();
+    // quarantined sessions: id -> the caught panic detail. A poisoned
+    // session's cache is gone (pages returned) but its id answers
+    // every subsequent step/fork/prefill with a typed
+    // `SessionPoisoned` until `session_free` clears the record — a
+    // crashed session must fail loudly, never vanish
+    let mut poisoned: HashMap<u64, String> = HashMap::new();
     let mut next_session: u64 = 1;
     // the paged-KV machinery: shared pool, LRU residency, parked work
     let mut ctl = PagingCtl::new(&params, &serve_plan);
@@ -820,8 +1061,22 @@ fn worker_loop(
     let serial_lanes: Vec<ExecCtx> = (0..ctx.threads()).map(|_| ExecCtx::serial()).collect();
 
     loop {
-        // wait for work or the earliest batch deadline
-        let msg = match batcher.next_deadline() {
+        // wait for work or the earliest wake-up: a batch flush
+        // deadline, an expired parked-step deadline (sheds happen on
+        // loop turns), or — with an alloc_deny fault armed — the paced
+        // retry of an injected-denied admission head. The last two
+        // clear on loop *turns*, never on envelopes, so blocking
+        // forever on `recv` would strand parked work (and deadlock a
+        // client waiting on its ticket).
+        let mut wake = batcher.next_deadline();
+        if let Some(dl) = earliest_parked_deadline(&ctl) {
+            wake = Some(wake.map_or(dl, |w| w.min(dl)));
+        }
+        if !ctl.admit_fifo.is_empty() && faults.armed(FaultPoint::AllocDeny) {
+            let pace = Instant::now() + Duration::from_millis(1);
+            wake = Some(wake.map_or(pace, |w| w.min(pace)));
+        }
+        let msg = match wake {
             None => match rx.recv() {
                 Ok(m) => Some(m),
                 Err(_) => break, // all senders gone
@@ -843,11 +1098,17 @@ fn worker_loop(
         let mut shutdown = false;
         match msg {
             Some(Envelope::Req(req, otx)) => {
+                // dead on arrival: shed rather than burn a launch on
+                // an answer nobody is waiting for
+                if req.deadline.is_some_and(|dl| Instant::now() >= dl) {
+                    metrics.deadline_sheds.fetch_add(1, Ordering::Relaxed);
+                    let _ = otx.send(Err(ServeError::DeadlineExceeded { id: req.id }.into()));
+                }
                 // PJRT kernels compute a fixed (H, N, d): the head
                 // dimension is the request-packing axis, so only
                 // single-head requests with the kernel head dim are
                 // accepted there. (The CPU substrate serves any layout.)
-                if !router.cpu_substrate && (req.h != 1 || req.h_kv != 1) {
+                else if !router.cpu_substrate && (req.h != 1 || req.h_kv != 1) {
                     metrics.rejected.fetch_add(1, Ordering::Relaxed);
                     let _ = otx.send(Err(anyhow!(
                         "request {} has h={} h_kv={}: the compiled kernels pack \
@@ -871,7 +1132,8 @@ fn worker_loop(
                             pending.push((req.id, otx));
                             if let Err(rej) = batcher.push(req, &artifact, cap, Instant::now()) {
                                 metrics.rejected.fetch_add(1, Ordering::Relaxed);
-                                respond(&mut pending, rej.id(), Err(anyhow!("queue full")));
+                                let id = rej.id();
+                                respond(&mut pending, id, Err(ServeError::QueueFull { id }.into()));
                             }
                         }
                         Err(e) => {
@@ -881,39 +1143,68 @@ fn worker_loop(
                     }
                 }
             }
-            Some(Envelope::Decode(step, otx)) => {
+            Some(Envelope::Decode(mut step, otx)) => {
                 let sid = step.session;
-                match sessions.get(&sid) {
-                    None => {
-                        metrics.rejected.fetch_add(1, Ordering::Relaxed);
-                        let _ = otx.send(Err(anyhow!("decode step for unknown session {sid}")));
+                // deterministic corrupted-input injection: poison one
+                // K element *before* validation, so the corruption is
+                // caught by the same finite check that guards real
+                // traffic (never by the kernel)
+                if faults.fires(FaultPoint::CorruptInput, sid) {
+                    if let Some(x) = step.k.first_mut() {
+                        *x = f32::NAN;
                     }
-                    Some((_, sess)) if !step.validate(sess.h(), sess.h_kv(), sess.d()) => {
-                        metrics.rejected.fetch_add(1, Ordering::Relaxed);
-                        let _ = otx.send(Err(anyhow!(
-                            "decode step {}: rows must match the session head layout \
-                             h={} h_kv={} d={}",
-                            step.id,
-                            sess.h(),
-                            sess.h_kv(),
-                            sess.d()
-                        )));
-                    }
-                    Some(_) => {
-                        // through the page-budget admission path: the
-                        // step lands in its target's decode lane (one
-                        // lane per backend: steps batch with each
-                        // other, never with prefill) unless admission
-                        // parks it first
-                        pending.push((step.id, otx));
-                        admit_step(
-                            step,
-                            &mut sessions,
-                            &mut ctl,
-                            &mut batcher,
-                            &mut pending,
-                            &metrics,
-                        );
+                }
+                if step.deadline.is_some_and(|dl| Instant::now() >= dl) {
+                    metrics.deadline_sheds.fetch_add(1, Ordering::Relaxed);
+                    let _ = otx.send(Err(ServeError::DeadlineExceeded { id: step.id }.into()));
+                } else if poisoned.contains_key(&sid) {
+                    metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                    let _ = otx.send(Err(ServeError::SessionPoisoned { session: sid }.into()));
+                } else {
+                    match sessions.get(&sid) {
+                        None => {
+                            metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                            let _ =
+                                otx.send(Err(ServeError::SessionUnknown { session: sid }.into()));
+                        }
+                        Some(_) if !step.payloads_finite() => {
+                            metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                            let _ = otx.send(Err(ServeError::InvalidInput {
+                                id: step.id,
+                                what: "decode step q/k/v contain non-finite (NaN/Inf) values"
+                                    .into(),
+                            }
+                            .into()));
+                        }
+                        Some((_, sess)) if !step.validate(sess.h(), sess.h_kv(), sess.d()) => {
+                            metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                            let _ = otx.send(Err(anyhow!(
+                                "decode step {}: rows must match the session head layout \
+                                 h={} h_kv={} d={}",
+                                step.id,
+                                sess.h(),
+                                sess.h_kv(),
+                                sess.d()
+                            )));
+                        }
+                        Some(_) => {
+                            // through the page-budget admission path:
+                            // the step lands in its target's decode
+                            // lane (one lane per backend: steps batch
+                            // with each other, never with prefill)
+                            // unless admission parks it first
+                            pending.push((step.id, otx));
+                            admit_step(
+                                step,
+                                &mut sessions,
+                                &mut ctl,
+                                &mut batcher,
+                                &mut pending,
+                                &metrics,
+                                &faults,
+                                params.admit_retries,
+                            );
+                        }
                     }
                 }
             }
@@ -950,25 +1241,44 @@ fn worker_loop(
                                         // pool's block-size assert.
                                         // dtype precedence: plan file >
                                         // MOBA_KV_DTYPE env > serve
-                                        // config > f32
-                                        let dtype = effective_dtype(plan.kv_dtype, &params);
-                                        Ok(DecodeSession::with_plan_paged(
-                                            spec.h, spec.h_kv, spec.d, plan, &ctl.pool,
+                                        // config > f32, then through
+                                        // the saturation gate (degrade
+                                        // to i8 or reject typed)
+                                        admit_dtype_under_pressure(
+                                            effective_dtype(plan.kv_dtype, &params),
+                                            next_session,
+                                            &ctl,
+                                            &params,
+                                            &metrics,
                                         )
-                                        .with_dtype(dtype))
+                                        .map(|dtype| {
+                                            DecodeSession::with_plan_paged(
+                                                spec.h, spec.h_kv, spec.d, plan, &ctl.pool,
+                                            )
+                                            .with_dtype(dtype)
+                                        })
                                     }
                                 }
                                 // dense decode ignores routing; the block
                                 // size only shapes cache bookkeeping
-                                AttnKind::Dense => Ok(DecodeSession::new_paged(
-                                    spec.h,
-                                    spec.h_kv,
-                                    spec.d,
-                                    params.moba_block.max(1),
-                                    0,
-                                    &ctl.pool,
+                                AttnKind::Dense => admit_dtype_under_pressure(
+                                    effective_dtype(None, &params),
+                                    next_session,
+                                    &ctl,
+                                    &params,
+                                    &metrics,
                                 )
-                                .with_dtype(effective_dtype(None, &params))),
+                                .map(|dtype| {
+                                    DecodeSession::new_paged(
+                                        spec.h,
+                                        spec.h_kv,
+                                        spec.d,
+                                        params.moba_block.max(1),
+                                        0,
+                                        &ctl.pool,
+                                    )
+                                    .with_dtype(dtype)
+                                }),
                             };
                             sess.map(|sess| {
                                 let id = next_session;
@@ -986,9 +1296,15 @@ fn worker_loop(
             }
             Some(Envelope::SessionFork(parent, otx)) => {
                 let result = match sessions.get(&parent) {
+                    None if poisoned.contains_key(&parent) => {
+                        // a quarantined cache is gone: forking it
+                        // would silently resurrect lost state
+                        metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                        Err(ServeError::SessionPoisoned { session: parent }.into())
+                    }
                     None => {
                         metrics.rejected.fetch_add(1, Ordering::Relaxed);
-                        Err(anyhow!("session_fork of unknown session {parent}"))
+                        Err(ServeError::SessionUnknown { session: parent }.into())
                     }
                     Some((target, sess)) => {
                         // the child is a point-in-time CoW share of the
@@ -1022,7 +1338,10 @@ fn worker_loop(
             Some(Envelope::SessionPrefill { session, n, k, v, tx }) => {
                 // phase 1 — validate and cost under a shared borrow
                 let decision = match sessions.get(&session) {
-                    None => Err(anyhow!("session_prefill for unknown session {session}")),
+                    None if poisoned.contains_key(&session) => {
+                        Err(ServeError::SessionPoisoned { session }.into())
+                    }
+                    None => Err(ServeError::SessionUnknown { session }.into()),
                     Some((_, sess)) => {
                         let roww = sess.h_kv() * sess.d();
                         if k.len() != n * roww {
@@ -1034,6 +1353,18 @@ fn worker_loop(
                                 n * roww,
                                 k.len()
                             ))
+                        } else if !(k.iter().all(|x| x.is_finite())
+                            && v.iter().all(|x| x.is_finite()))
+                        {
+                            // reject before any token lands: a NaN/Inf
+                            // row would poison the quantization scale
+                            // and every subsequent attend
+                            Err(ServeError::InvalidInput {
+                                id: session,
+                                what: "session_prefill k/v contain non-finite (NaN/Inf) values"
+                                    .into(),
+                            }
+                            .into())
                         } else {
                             Ok(sess.cache().append_page_cost_units(n))
                         }
@@ -1052,7 +1383,16 @@ fn worker_loop(
                         let blocked = ctl.state.get(&session).is_some_and(|st| {
                             st.evicted || !st.parked.is_empty() || st.queued_steps > 0
                         });
-                        if blocked || !try_admit(cost, session, &mut sessions, &mut ctl, &metrics)
+                        if blocked
+                            || !try_admit_with_retry(
+                                cost,
+                                session,
+                                &mut sessions,
+                                &mut ctl,
+                                &metrics,
+                                &faults,
+                                params.admit_retries,
+                            )
                         {
                             park_work(
                                 &mut ctl,
@@ -1099,7 +1439,14 @@ fn worker_loop(
                         metrics.sessions_freed.fetch_add(1, Ordering::Relaxed);
                         Ok(())
                     }
-                    None => Err(anyhow!("unknown decode session {id}")),
+                    // freeing a quarantined session clears the record:
+                    // the id stops answering (it is truly gone now,
+                    // by explicit client request)
+                    None if poisoned.remove(&id).is_some() => {
+                        metrics.sessions_freed.fetch_add(1, Ordering::Relaxed);
+                        Ok(())
+                    }
+                    None => Err(ServeError::SessionUnknown { session: id }.into()),
                 };
                 let _ = otx.send(result);
             }
@@ -1107,8 +1454,26 @@ fn worker_loop(
             None => {} // deadline wake-up
         }
 
-        // execute everything ready (all lanes on shutdown)
+        // deadline shedding, every loop turn: expired queued work
+        // leaves loudly before batch assembly, expired parked steps
+        // before their admission retry (work already inside a flushed
+        // batch is shed at the execution gate instead)
         let now = Instant::now();
+        for (item, _) in batcher.shed_expired(now) {
+            metrics.deadline_sheds.fetch_add(1, Ordering::Relaxed);
+            if let WorkItem::Decode(step) = &item {
+                // the shed step never executes, so its preemption
+                // protection ends here
+                if let Some(st) = ctl.state.get_mut(&step.session) {
+                    st.queued_steps = st.queued_steps.saturating_sub(1);
+                }
+            }
+            let id = item.id();
+            respond(&mut pending, id, Err(ServeError::DeadlineExceeded { id }.into()));
+        }
+        shed_expired_parked(&mut ctl, &mut pending, &metrics, now);
+
+        // execute everything ready (all lanes on shutdown)
         let batches: Vec<Batch> = if shutdown {
             batcher.flush_all()
         } else {
@@ -1126,6 +1491,8 @@ fn worker_loop(
                 &mut pending,
                 &mut sessions,
                 &mut ctl,
+                &mut poisoned,
+                &faults,
                 &metrics,
             );
         }
@@ -1133,7 +1500,7 @@ fn worker_loop(
         // pages or drained queued steps) and publish the pool gauges —
         // every state change that can unblock admission happens inside
         // a loop turn, so running this here can never miss a wake-up
-        drain_admissions(&mut sessions, &mut ctl, &mut batcher, &mut pending, &metrics);
+        drain_admissions(&mut sessions, &mut ctl, &mut batcher, &mut pending, &metrics, &faults);
         ctl.sync_metrics(&metrics);
         if shutdown {
             // parked prefills carry their own reply channel; parked
@@ -1141,12 +1508,12 @@ fn worker_loop(
             for st in ctl.state.values_mut() {
                 for work in st.parked.drain(..) {
                     if let SessionWork::Prefill { tx, .. } = work {
-                        let _ = tx.send(Err(anyhow!("coordinator shut down")));
+                        let _ = tx.send(Err(ServeError::Shutdown.into()));
                     }
                 }
             }
             for (_, otx) in pending.drain(..) {
-                let _ = otx.send(Err(anyhow!("coordinator shut down")));
+                let _ = otx.send(Err(ServeError::Shutdown.into()));
             }
             break;
         }
@@ -1173,13 +1540,15 @@ fn run_batch(
     pending: &mut Pending,
     sessions: &mut Sessions,
     ctl: &mut PagingCtl,
+    poisoned: &mut HashMap<u64, String>,
+    faults: &FaultPlan,
     metrics: &Metrics,
 ) {
     match exec {
         Exec::Pjrt(runtime) => run_batch_pjrt(runtime, router, batch, pending, metrics),
         Exec::Cpu(registry) => run_batch_cpu(
             registry, serve_plan, params, ctx, serial_lanes, batch, pending, sessions, ctl,
-            metrics,
+            poisoned, faults, metrics,
         ),
     }
 }
@@ -1214,6 +1583,8 @@ fn run_batch_cpu(
     pending: &mut Pending,
     sessions: &mut Sessions,
     ctl: &mut PagingCtl,
+    poisoned: &mut HashMap<u64, String>,
+    faults: &FaultPlan,
     metrics: &Metrics,
 ) {
     let occupancy = batch.items.len();
@@ -1246,13 +1617,15 @@ fn run_batch_cpu(
                     Box::new(move || {
                         range
                             .map(|j| {
-                                run_cpu_request(
+                                run_cpu_request_isolated(
                                     registry,
                                     serve_plan,
                                     params,
                                     lane,
                                     artifact,
                                     prefills_ref[j],
+                                    faults,
+                                    metrics,
                                 )
                             })
                             .collect::<Vec<_>>()
@@ -1263,7 +1636,18 @@ fn run_batch_cpu(
     } else {
         prefills
             .iter()
-            .map(|&req| run_cpu_request(registry, serve_plan, params, ctx, &batch.artifact, req))
+            .map(|&req| {
+                run_cpu_request_isolated(
+                    registry,
+                    serve_plan,
+                    params,
+                    ctx,
+                    &batch.artifact,
+                    req,
+                    faults,
+                    metrics,
+                )
+            })
             .collect()
     };
 
@@ -1278,8 +1662,17 @@ fn run_batch_cpu(
             WorkItem::Prefill(_) => None,
         })
         .collect();
-    let decode_results =
-        run_cpu_decode_batch(registry, ctx, sessions, ctl, &decode_steps, metrics);
+    let decode_results = run_cpu_decode_batch(
+        registry,
+        ctx,
+        sessions,
+        ctl,
+        poisoned,
+        pending,
+        &decode_steps,
+        faults,
+        metrics,
+    );
 
     // phase 2: respond in item order
     let mut prefill_iter = prefill_results.into_iter();
@@ -1353,16 +1746,31 @@ fn run_batch_cpu(
 /// bit-identical to the old one-step-at-a-time loop. Returns one
 /// `(packed (h, d) output row, context length after the append)`
 /// result per step, in step order.
+///
+/// **Crash isolation**: the wave launch runs under a `catch_unwind`
+/// barrier. On a caught panic the wave is re-run one session at a
+/// time, each under its own barrier — the appends already landed
+/// before the first launch and the attend is a pure read of them, so
+/// innocent wave-mates compute exactly the bits a solo launch gives
+/// (which the batching contract pins equal to the batched bits), while
+/// the panicking session is quarantined via [`quarantine_session`].
+#[allow(clippy::too_many_arguments)]
 fn run_cpu_decode_batch(
     registry: &BackendRegistry,
     ctx: &ExecCtx,
     sessions: &mut Sessions,
     ctl: &mut PagingCtl,
+    poisoned: &mut HashMap<u64, String>,
+    pending: &mut Pending,
     steps: &[&DecodeStep],
+    faults: &FaultPlan,
     metrics: &Metrics,
 ) -> Vec<Result<(Vec<f32>, usize)>> {
+    let now = Instant::now();
     let mut results: Vec<Option<Result<(Vec<f32>, usize)>>> =
         steps.iter().map(|_| None).collect();
+    // sessions this call quarantined: answered typed, never reinserted
+    let mut to_poison: Vec<(u64, String)> = Vec::new();
     // wave workspace, reused across the batch's waves
     let mut wave: Vec<usize> = Vec::new();
     let mut meta: Vec<(u64, String)> = Vec::new();
@@ -1383,6 +1791,23 @@ fn run_cpu_decode_batch(
             // a pipelined second step reads as "freed")
             if meta.iter().any(|(id, _)| *id == step.session) {
                 break;
+            }
+            // the execution gate's deadline check: a step can expire
+            // between flush and launch; shed it before it appends
+            if step.deadline.is_some_and(|dl| now >= dl) {
+                metrics.deadline_sheds.fetch_add(1, Ordering::Relaxed);
+                results[i] = Some(Err(ServeError::DeadlineExceeded { id: step.id }.into()));
+                i += 1;
+                continue;
+            }
+            // quarantined earlier in this very batch (or a prior one):
+            // answer typed, never "was freed"
+            if poisoned.contains_key(&step.session) || to_poison.iter().any(|(p, _)| *p == step.session) {
+                metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                results[i] =
+                    Some(Err(ServeError::SessionPoisoned { session: step.session }.into()));
+                i += 1;
+                continue;
             }
             let Some((target, _)) = sessions.get(&step.session) else {
                 // freed mid-queue: answer inline (nothing to mutate)
@@ -1423,20 +1848,92 @@ fn run_cpu_decode_batch(
                     }
                     q.extend_from_slice(&steps[slot].q);
                 }
-                backend.forward_decode_batch_into(ctx, &mut wave_sessions, &q, &mut o);
-                metrics.decode_batches.fetch_add(1, Ordering::Relaxed);
-                let mut off = 0;
-                for (sess, &slot) in wave_sessions.iter().zip(&wave) {
-                    let e = sess.h() * sess.d();
-                    // the response row is handed to the client, so it is
-                    // a fresh Vec; the launch's working buffers are the
-                    // sessions' persistent scratch
-                    results[slot] = Some(Ok((o[off..off + e].to_vec(), sess.len())));
-                    off += e;
-                    metrics.decode_steps.fetch_add(1, Ordering::Relaxed);
-                    metrics
-                        .decode_payload_bytes
-                        .fetch_add(steps[slot].payload_bytes(), Ordering::Relaxed);
+                // injected wave stall: latency-only chaos, exercises
+                // deadline shedding without touching any arithmetic
+                faults.maybe_stall(meta[0].0);
+                // the crash barrier: a panicking launch (real or
+                // injected) is caught at the wave boundary; the
+                // worker thread survives. AssertUnwindSafe is sound
+                // here because the appends above are the only durable
+                // state change (already complete), the attend only
+                // reads the caches, and a scratch slot poisoned by
+                // the unwind is rebuilt fresh on next acquire
+                // (`ExecCtx::scratch`).
+                let launch = catch_unwind(AssertUnwindSafe(|| {
+                    for (sid, _) in &meta {
+                        faults.maybe_panic(FaultPoint::KernelPanic, *sid, "batched decode launch");
+                    }
+                    backend.forward_decode_batch_into(ctx, &mut wave_sessions, &q, &mut o);
+                }));
+                match launch {
+                    Ok(()) => {
+                        metrics.decode_batches.fetch_add(1, Ordering::Relaxed);
+                        let mut off = 0;
+                        for (sess, &slot) in wave_sessions.iter().zip(&wave) {
+                            let e = sess.h() * sess.d();
+                            // the response row is handed to the client, so it is
+                            // a fresh Vec; the launch's working buffers are the
+                            // sessions' persistent scratch
+                            results[slot] = Some(Ok((o[off..off + e].to_vec(), sess.len())));
+                            off += e;
+                            metrics.decode_steps.fetch_add(1, Ordering::Relaxed);
+                            metrics
+                                .decode_payload_bytes
+                                .fetch_add(steps[slot].payload_bytes(), Ordering::Relaxed);
+                        }
+                    }
+                    Err(_) => {
+                        metrics.panics_caught.fetch_add(1, Ordering::Relaxed);
+                        // blame attribution: re-run each wave slot as
+                        // its own single-session launch under its own
+                        // barrier. The appends already landed above
+                        // and a batched attend is bit-identical to
+                        // the same attends one session at a time (the
+                        // batching contract), so innocent sessions
+                        // get exactly the bits they would have gotten
+                        // had the faulty session never shared their
+                        // wave — and the panicker is identified, not
+                        // guessed.
+                        for (idx, &slot) in wave.iter().enumerate() {
+                            let sid = meta[idx].0;
+                            let mut solo_o = Vec::new();
+                            let sess = &mut wave_sessions[idx];
+                            let solo = catch_unwind(AssertUnwindSafe(|| {
+                                faults.maybe_panic(
+                                    FaultPoint::KernelPanic,
+                                    sid,
+                                    "isolated decode launch",
+                                );
+                                backend.forward_decode_batch_into(
+                                    ctx,
+                                    std::slice::from_mut(sess),
+                                    &steps[slot].q,
+                                    &mut solo_o,
+                                );
+                            }));
+                            match solo {
+                                Ok(()) => {
+                                    results[slot] =
+                                        Some(Ok((solo_o, wave_sessions[idx].len())));
+                                    metrics.decode_steps.fetch_add(1, Ordering::Relaxed);
+                                    metrics.decode_payload_bytes.fetch_add(
+                                        steps[slot].payload_bytes(),
+                                        Ordering::Relaxed,
+                                    );
+                                }
+                                Err(payload) => {
+                                    metrics.panics_caught.fetch_add(1, Ordering::Relaxed);
+                                    let detail = ServeError::panic_detail(payload.as_ref());
+                                    results[slot] = Some(Err(ServeError::KernelPanic {
+                                        session: Some(sid),
+                                        detail: detail.clone(),
+                                    }
+                                    .into()));
+                                    to_poison.push((sid, detail));
+                                }
+                            }
+                        }
+                    }
                 }
             }
             None => {
@@ -1450,11 +1947,22 @@ fn run_cpu_decode_batch(
         // return the stepped sessions to the table under their ids,
         // refreshing their LRU residency (they just grew and were
         // touched; a session with queued steps is preemption-protected,
-        // so every wave session is guaranteed resident)
+        // so every wave session is guaranteed resident). A session
+        // this wave quarantined is NOT reinserted — dropping its cache
+        // here returns its pages to the pool
         for ((id, target), sess) in meta.drain(..).zip(wave_sessions.drain(..)) {
+            if to_poison.iter().any(|(p, _)| *p == id) {
+                drop(sess);
+                continue;
+            }
             ctl.scheduler.note_resident(id, sess.total_pages());
             sessions.insert(id, (target, sess));
         }
+    }
+    // quarantine bookkeeping for every session that panicked above:
+    // parked work answered typed, id remembered as poisoned
+    for (sid, detail) in to_poison {
+        quarantine_session(sid, detail, ctl, pending, poisoned, metrics);
     }
     // every step handed to this function leaves the batcher here —
     // executed, failed, or freed-mid-queue — so its queued_steps
@@ -1465,6 +1973,46 @@ fn run_cpu_decode_batch(
         }
     }
     results.into_iter().map(|r| r.expect("every decode step resolved")).collect()
+}
+
+/// [`run_cpu_request`] behind the crash barrier: the launch runs under
+/// `catch_unwind`, so a panicking kernel (or an injected
+/// `kernel_panic` fault keyed by the request id) fails this one
+/// request with a typed [`ServeError::KernelPanic`] instead of
+/// killing the worker — and, on the fan-out path, the whole wave. A
+/// panic can poison the lane's scratch-slot mutex; `ExecCtx::scratch`
+/// rebuilds a poisoned slot fresh, so the next request on the lane
+/// starts from a clean (if cold) arena. Expired deadlines are shed
+/// here too — the last gate before compute.
+#[allow(clippy::too_many_arguments)]
+fn run_cpu_request_isolated(
+    registry: &BackendRegistry,
+    serve_plan: &Option<RoutePlan>,
+    params: &ServeParams,
+    ctx: &ExecCtx,
+    routed: &str,
+    req: &AttnRequest,
+    faults: &FaultPlan,
+    metrics: &Metrics,
+) -> Result<(Vec<f32>, u32)> {
+    if req.deadline.is_some_and(|dl| Instant::now() >= dl) {
+        metrics.deadline_sheds.fetch_add(1, Ordering::Relaxed);
+        return Err(ServeError::DeadlineExceeded { id: req.id }.into());
+    }
+    match catch_unwind(AssertUnwindSafe(|| {
+        faults.maybe_panic(FaultPoint::KernelPanic, req.id, "prefill kernel launch");
+        run_cpu_request(registry, serve_plan, params, ctx, routed, req)
+    })) {
+        Ok(r) => r,
+        Err(payload) => {
+            metrics.panics_caught.fetch_add(1, Ordering::Relaxed);
+            Err(ServeError::KernelPanic {
+                session: None,
+                detail: ServeError::panic_detail(payload.as_ref()),
+            }
+            .into())
+        }
+    }
 }
 
 /// Pick the backend for one request and execute it under its routing
@@ -1653,6 +2201,7 @@ fn run_batch_pjrt(
 }
 
 #[cfg(test)]
+#[allow(clippy::unwrap_used)] // test assertions on known-Some/Ok values
 mod tests {
     use super::*;
     use crate::attention::plan::HeadPlan;
@@ -1667,7 +2216,73 @@ mod tests {
         plan: Option<RoutePlan>,
     ) -> AttnRequest {
         let (q, k, v) = qkv_packed(0xC0FFEE ^ id, h, h_kv, n, d);
-        AttnRequest { id, kind: AttnKind::Moba, h, h_kv, n, d, q, k, v, plan }
+        AttnRequest { id, kind: AttnKind::Moba, h, h_kv, n, d, q, k, v, plan, deadline: None }
+    }
+
+    /// An injected kernel panic is caught at the launch barrier: the
+    /// faulted request gets a typed `KernelPanic`, the thread (and its
+    /// scratch arenas) survive, and the next request on the SAME
+    /// context serves bits identical to a context that never saw a
+    /// panic — the chaos-parity contract in miniature.
+    #[test]
+    fn isolated_prefill_catches_injected_panics_and_recovers() {
+        let registry = BackendRegistry::with_defaults();
+        let params = ServeParams::default();
+        let ctx = ExecCtx::serial();
+        let metrics = Metrics::new();
+        let faults = FaultPlan::parse("7:kernel_panic@5").unwrap();
+
+        let req = moba_req(5, 2, 2, 64, 8, None);
+        let err = run_cpu_request_isolated(
+            &registry, &None, &params, &ctx, "flash_moba", &req, &faults, &metrics,
+        )
+        .expect_err("injected panic must surface as an error");
+        match ServeError::of(&err) {
+            Some(ServeError::KernelPanic { session: None, detail }) => {
+                assert!(detail.contains("injected fault"), "{detail}");
+            }
+            other => panic!("wrong error class: {other:?}"),
+        }
+        assert_eq!(metrics.panics_caught.load(Ordering::Relaxed), 1);
+
+        // a non-targeted request on the same ctx still serves (any
+        // scratch slot poisoned by the unwind was rebuilt fresh) ...
+        let req = moba_req(6, 2, 2, 64, 8, None);
+        let (o, _) = run_cpu_request_isolated(
+            &registry, &None, &params, &ctx, "flash_moba", &req, &faults, &metrics,
+        )
+        .expect("sibling request serves after the caught panic");
+        assert_eq!(o.len(), 2 * 64 * 8);
+        // ... bit-identical to a context that never saw the panic
+        let ctx2 = ExecCtx::serial();
+        let (o2, _) =
+            run_cpu_request(&registry, &None, &params, &ctx2, "flash_moba", &req).unwrap();
+        assert!(
+            o.iter().zip(&o2).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "post-panic output diverged from the fault-free run"
+        );
+    }
+
+    /// Expired deadlines are shed at the execution gate with a typed
+    /// error, before any compute.
+    #[test]
+    fn expired_prefill_is_shed_at_the_execution_gate() {
+        let registry = BackendRegistry::with_defaults();
+        let params = ServeParams::default();
+        let ctx = ExecCtx::serial();
+        let metrics = Metrics::new();
+        let faults = FaultPlan::disabled();
+        let mut req = moba_req(9, 2, 2, 64, 8, None);
+        req.deadline = Some(Instant::now() - Duration::from_millis(1));
+        let err = run_cpu_request_isolated(
+            &registry, &None, &params, &ctx, "flash_moba", &req, &faults, &metrics,
+        )
+        .expect_err("expired work must shed");
+        assert!(matches!(
+            ServeError::of(&err),
+            Some(ServeError::DeadlineExceeded { id: 9 })
+        ));
+        assert_eq!(metrics.deadline_sheds.load(Ordering::Relaxed), 1);
     }
 
     /// A client-supplied plan that doesn't fit its request is a loud

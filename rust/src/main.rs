@@ -13,8 +13,8 @@ use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 use flash_moba::bench_harness::{
-    decode as decode_bench, decode_batch as decode_batch_bench, figures, kvdtype, report,
-    serve_soak, smallblock, snr_harness, tables,
+    chaos_soak, decode as decode_bench, decode_batch as decode_batch_bench, figures, kvdtype,
+    report, serve_soak, smallblock, snr_harness, tables,
 };
 use flash_moba::config::AppConfig;
 use flash_moba::util::json::Json;
@@ -39,8 +39,8 @@ COMMANDS:
   bench <target>               regenerate a paper table/figure:
                                table1..table6, fig2, fig3, fig4, snr,
                                parity, parity-gqa, parity-mixed, decode,
-                               decode-batch, serve-soak, smallblock,
-                               kvdtype, ablate-tiles, all
+                               decode-batch, serve-soak, chaos-soak,
+                               smallblock, kvdtype, ablate-tiles, all
                                (--quick, --steps N)
                                (smallblock sweeps block 16/32/64 at
                                fixed N, flash_moba vs dense, through
@@ -56,12 +56,21 @@ COMMANDS:
                                unbounded pool vs a tight page budget;
                                CI floors the fork prefix_hit_rate and
                                the pressured leg's bitwise parity_ok)
+                               (chaos-soak replays identical traffic
+                               with and without an active fault plan —
+                               injected kernel panics, page denials,
+                               corrupted inputs, wave stalls — at
+                               MOBA_THREADS 1 and 4; CI floors
+                               chaos_parity_ok, the bitwise parity of
+                               every non-faulted session, and
+                               no_worker_deaths)
                                (kvdtype sweeps routed decode with the
                                KV cache stored at f32/f16/bf16/i8 on
                                identical inputs; its f16-vs-f32
                                per-token speedup is floor-gated in CI)
                                (parity/parity-gqa/decode/decode-batch/
-                               serve-soak/fig3/fig4/snr/ablate-tiles
+                               serve-soak/chaos-soak/fig3/fig4/snr/
+                               ablate-tiles
                                need no
                                artifacts: they run the CPU substrate
                                through the
@@ -106,6 +115,16 @@ ENVIRONMENT:
                                default auto). Every choice is
                                bit-identical — scalar is the reference
                                the dispatched ISAs are tested against
+  MOBA_FAULTS                  deterministic fault injection for the
+                               serving coordinator, seed:spec — e.g.
+                               7:kernel_panic@3,alloc_deny=0.25 keys
+                               session 3's launches to panic and
+                               denies a quarter of page admissions.
+                               Points: kernel_panic, alloc_deny,
+                               wave_stall, corrupt_input; @k1|k2 keys
+                               exact ids, =rate hashes. Overrides
+                               serve.fault_plan; unset = disabled
+                               (zero-cost, bit-identical serving)
 ";
 
 fn main() -> Result<()> {
@@ -290,6 +309,9 @@ fn bench(cfg: &AppConfig, target: &str, quick: bool) -> Result<()> {
             // paged serving soak: fork sharing + page pressure; floors
             // prefix_hit_rate and the pressured leg's bitwise parity
             "serve-soak" => serve_soak::run_serve_soak(cfg, quick),
+            // chaos parity: identical traffic with/without an active
+            // fault plan; floors chaos_parity_ok and no_worker_deaths
+            "chaos-soak" => chaos_soak::run_chaos_soak(cfg, quick),
             "smallblock" => smallblock::run_smallblock(cfg, quick),
             // quantized-KV decode sweep: f16/bf16/i8 vs the f32 cache;
             // floors the f16-vs-f32 per-token speedup
@@ -315,8 +337,8 @@ fn bench(cfg: &AppConfig, target: &str, quick: bool) -> Result<()> {
     if target == "all" {
         for t in [
             "parity", "parity-gqa", "parity-mixed", "decode", "decode-batch", "serve-soak",
-            "smallblock", "kvdtype", "snr", "fig3", "fig4", "ablate-tiles", "table1", "table3",
-            "table5", "fig2", "table2", "table4", "table6",
+            "chaos-soak", "smallblock", "kvdtype", "snr", "fig3", "fig4", "ablate-tiles", "table1",
+            "table3", "table5", "fig2", "table2", "table4", "table6",
         ] {
             println!("\n######## bench {t} ########");
             run_and_emit(cfg, t)?;
@@ -455,6 +477,7 @@ fn serve_demo(cfg: &AppConfig, requests: usize) -> Result<()> {
             k: rng.normal_vec(n * d),
             v: rng.normal_vec(n * d),
             plan: None,
+            deadline: None,
         };
         tickets.push(coord.submit_async(req)?);
     }

@@ -1,0 +1,394 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! A [`FaultPlan`] decides, per injection point, whether a fault fires
+//! for a given *logical key* (a session id, request id, or admission
+//! attempt ordinal). Decisions are a pure function of
+//! `(seed, point, key)` — thread identity, wall time, and iteration
+//! order never enter — so an injected fault lands on the same logical
+//! work at `MOBA_THREADS=1` and `MOBA_THREADS=64`, and a chaos run is
+//! replayable bit-for-bit. This is the same stance the rest of the
+//! repo takes on scheduling (logical LRU clocks, fixed reduction
+//! orders; see `docs/ARCHITECTURE.md`).
+//!
+//! The plan is disabled by default ([`FaultPlan::disabled`]): every
+//! predicate is a branch on an empty trigger table, no allocation, no
+//! syscalls — the zero-alloc and bit-determinism contracts of the
+//! serving stack are unchanged when no plan is armed. A plan is armed
+//! via the `MOBA_FAULTS=seed:spec` environment variable or
+//! `ServeParams.fault_plan`; the env var wins when both are set.
+//!
+//! # Spec grammar
+//!
+//! ```text
+//! MOBA_FAULTS=<seed>:<entry>[,<entry>...]
+//! entry := <point>=<rate>        probabilistic: fires when
+//!                                hash(seed, point, key) < rate
+//!        | <point>@<k1>|<k2>...  exact: fires only for the listed keys
+//! point := kernel_panic | alloc_deny | wave_stall | corrupt_input
+//! ```
+//!
+//! Examples: `MOBA_FAULTS=42:kernel_panic=0.05,alloc_deny=0.25`,
+//! `MOBA_FAULTS=7:kernel_panic@2|9` (panic the launches keyed 2 and 9).
+//!
+//! # Injection points
+//!
+//! * `kernel_panic` — the coordinator panics immediately before a
+//!   kernel launch whose key (request id for prefill, session id for
+//!   decode) fires. Exercises the `catch_unwind` isolation and session
+//!   quarantine paths.
+//! * `alloc_deny` — page-pool admission is denied even though the
+//!   budget would fit, keyed by `(session, attempt)`. Denials are
+//!   bounded: attempts at or beyond [`MAX_DENY_ATTEMPTS`] never fire,
+//!   so injected denial delays work (park + deterministic retry) but
+//!   can never wedge it.
+//! * `wave_stall` — a short artificial sleep before a decode wave
+//!   launch. Perturbs timing without touching arithmetic, so outputs
+//!   must stay bitwise identical (the chaos-parity contract).
+//! * `corrupt_input` — a decode step's K row has its first element
+//!   replaced with NaN before validation. Exercises the non-finite
+//!   input rejection path end to end.
+
+use anyhow::anyhow;
+
+use crate::Result;
+
+/// Injected alloc denials stop firing at this attempt ordinal, so a
+/// denied admission always clears after a bounded number of
+/// deterministic retries (liveness under any plan).
+pub const MAX_DENY_ATTEMPTS: u32 = 8;
+
+/// The places a [`FaultPlan`] can inject a fault.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultPoint {
+    /// Panic immediately before a kernel launch.
+    KernelPanic,
+    /// Deny a page-pool admission that would otherwise fit.
+    AllocDeny,
+    /// Sleep briefly before a decode wave launch.
+    WaveStall,
+    /// Poison a decode step's K row with NaN before validation.
+    CorruptInput,
+}
+
+impl FaultPoint {
+    /// Every injection point, for exhaustive sweeps in tests.
+    pub const ALL: [FaultPoint; 4] = [
+        FaultPoint::KernelPanic,
+        FaultPoint::AllocDeny,
+        FaultPoint::WaveStall,
+        FaultPoint::CorruptInput,
+    ];
+
+    fn name(self) -> &'static str {
+        match self {
+            FaultPoint::KernelPanic => "kernel_panic",
+            FaultPoint::AllocDeny => "alloc_deny",
+            FaultPoint::WaveStall => "wave_stall",
+            FaultPoint::CorruptInput => "corrupt_input",
+        }
+    }
+
+    fn index(self) -> usize {
+        match self {
+            FaultPoint::KernelPanic => 0,
+            FaultPoint::AllocDeny => 1,
+            FaultPoint::WaveStall => 2,
+            FaultPoint::CorruptInput => 3,
+        }
+    }
+}
+
+/// How one injection point decides whether to fire.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+enum Trigger {
+    /// Never fires (the disabled state).
+    #[default]
+    Never,
+    /// Fires when the keyed hash lands under this threshold (a rate in
+    /// [0, 1] mapped onto `[0, 2^53)` so the comparison is integral
+    /// and platform-independent).
+    Rate(u64),
+    /// Fires only for these exact keys.
+    Keys(Vec<u64>),
+}
+
+/// A seeded, thread-deterministic fault plan. `Default`/[`disabled`]
+/// is the armed-off state: every predicate returns `false` without
+/// allocating. See the module docs for the spec grammar.
+///
+/// [`disabled`]: FaultPlan::disabled
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct FaultPlan {
+    seed: u64,
+    triggers: [Trigger; 4],
+}
+
+/// splitmix64 finalizer: the repo's standard cheap bit mixer.
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+/// `2^53`: the rate-threshold scale. A rate of 1.0 maps to exactly
+/// `2^53`, which every 53-bit hash value is strictly below.
+const RATE_ONE: u64 = 1 << 53;
+
+impl FaultPlan {
+    /// The armed-off plan: no point ever fires.
+    pub fn disabled() -> Self {
+        Self::default()
+    }
+
+    /// Parse a `seed:spec` string (see the module docs for the
+    /// grammar). An empty spec after the seed is an error — arming a
+    /// plan that can never fire is always a typo.
+    pub fn parse(s: &str) -> Result<Self> {
+        let (seed_s, spec) = s
+            .split_once(':')
+            .ok_or_else(|| anyhow!("fault plan {s:?}: expected seed:spec"))?;
+        let seed: u64 = seed_s
+            .trim()
+            .parse()
+            .map_err(|_| anyhow!("fault plan {s:?}: seed {seed_s:?} is not a u64"))?;
+        let mut plan = FaultPlan { seed, triggers: Default::default() };
+        let mut any = false;
+        for entry in spec.split(',') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            let (point, trigger) = if let Some((name, rate)) = entry.split_once('=') {
+                let rate: f64 = rate
+                    .trim()
+                    .parse()
+                    .map_err(|_| anyhow!("fault plan entry {entry:?}: bad rate"))?;
+                if !(0.0..=1.0).contains(&rate) {
+                    return Err(anyhow!("fault plan entry {entry:?}: rate must be in [0, 1]"));
+                }
+                (name.trim(), Trigger::Rate((rate * RATE_ONE as f64) as u64))
+            } else if let Some((name, keys)) = entry.split_once('@') {
+                let keys = keys
+                    .split('|')
+                    .map(|k| {
+                        k.trim()
+                            .parse::<u64>()
+                            .map_err(|_| anyhow!("fault plan entry {entry:?}: bad key {k:?}"))
+                    })
+                    .collect::<Result<Vec<u64>>>()?;
+                (name.trim(), Trigger::Keys(keys))
+            } else {
+                return Err(anyhow!(
+                    "fault plan entry {entry:?}: expected point=rate or point@k1|k2"
+                ));
+            };
+            let point = FaultPoint::ALL
+                .into_iter()
+                .find(|p| p.name() == point)
+                .ok_or_else(|| {
+                    anyhow!(
+                        "fault plan entry {entry:?}: unknown point {point:?} \
+                         (kernel_panic | alloc_deny | wave_stall | corrupt_input)"
+                    )
+                })?;
+            plan.triggers[point.index()] = trigger;
+            any = true;
+        }
+        if !any {
+            return Err(anyhow!("fault plan {s:?}: no injection points"));
+        }
+        Ok(plan)
+    }
+
+    /// The plan named by `MOBA_FAULTS`, if set. A set-but-unparseable
+    /// value is a loud startup error, never a silent no-op.
+    pub fn from_env() -> Result<Option<Self>> {
+        match std::env::var("MOBA_FAULTS") {
+            Ok(s) if !s.trim().is_empty() => Ok(Some(Self::parse(&s)?)),
+            _ => Ok(None),
+        }
+    }
+
+    /// Resolve the active plan for a coordinator: `MOBA_FAULTS` wins,
+    /// then `ServeParams.fault_plan`, then disabled.
+    pub fn resolve(config_spec: Option<&str>) -> Result<Self> {
+        if let Some(p) = Self::from_env()? {
+            return Ok(p);
+        }
+        match config_spec {
+            Some(s) => Self::parse(s),
+            None => Ok(Self::disabled()),
+        }
+    }
+
+    /// Whether any injection point can fire.
+    pub fn is_enabled(&self) -> bool {
+        self.triggers.iter().any(|t| *t != Trigger::Never)
+    }
+
+    /// Whether `point` has a trigger armed at all (for any key). The
+    /// coordinator uses this to switch its idle wait from "block for
+    /// the next envelope" to a short poll: injected allocation denials
+    /// clear on loop *turns* (the attempt ordinal), not on envelopes,
+    /// so blocking forever would strand the parked work they pace.
+    pub fn armed(&self, point: FaultPoint) -> bool {
+        self.triggers[point.index()] != Trigger::Never
+    }
+
+    /// Pure injection predicate: does `point` fire for `key`?
+    /// Deterministic across threads, processes, and platforms.
+    pub fn fires(&self, point: FaultPoint, key: u64) -> bool {
+        match &self.triggers[point.index()] {
+            Trigger::Never => false,
+            Trigger::Rate(threshold) => {
+                let h = mix(self.seed ^ mix((point.index() as u64 + 1) ^ mix(key)));
+                (h >> 11) < *threshold
+            }
+            Trigger::Keys(keys) => keys.contains(&key),
+        }
+    }
+
+    /// Attempt-aware variant for `alloc_deny`: the same key stops
+    /// firing at [`MAX_DENY_ATTEMPTS`], bounding how long an injected
+    /// denial can hold work parked. Exact-key triggers deny every
+    /// attempt below the bound; rate triggers rehash per attempt.
+    pub fn fires_attempt(&self, point: FaultPoint, key: u64, attempt: u32) -> bool {
+        if attempt >= MAX_DENY_ATTEMPTS {
+            return false;
+        }
+        match &self.triggers[point.index()] {
+            Trigger::Never => false,
+            Trigger::Rate(threshold) => {
+                let k = mix(key ^ ((attempt as u64 + 1) << 48));
+                let h = mix(self.seed ^ mix((point.index() as u64 + 1) ^ k));
+                (h >> 11) < *threshold
+            }
+            Trigger::Keys(keys) => keys.contains(&key),
+        }
+    }
+
+    /// Panic (to be caught by the launch's `catch_unwind` barrier) if
+    /// `point` fires for `key`. The message carries a recognizable
+    /// prefix so caught panics are attributable in logs and tests.
+    pub fn maybe_panic(&self, point: FaultPoint, key: u64, what: &str) {
+        if self.fires(point, key) {
+            panic!("injected fault [{}] in {what} (key {key})", point.name());
+        }
+    }
+
+    /// Sleep briefly if a `wave_stall` fires for `key`. Timing-only:
+    /// never touches data, so outputs must stay bitwise identical.
+    pub fn maybe_stall(&self, key: u64) {
+        if self.fires(FaultPoint::WaveStall, key) {
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_plan_never_fires() {
+        let p = FaultPlan::disabled();
+        assert!(!p.is_enabled());
+        for point in FaultPoint::ALL {
+            for key in 0..64 {
+                assert!(!p.fires(point, key));
+                assert!(!p.fires_attempt(point, key, 0));
+            }
+        }
+    }
+
+    #[test]
+    fn parse_rate_and_key_entries() {
+        let p = FaultPlan::parse("42:kernel_panic=0.5,alloc_deny@3|7").unwrap();
+        assert!(p.is_enabled());
+        // exact keys fire exactly
+        assert!(p.fires(FaultPoint::AllocDeny, 3));
+        assert!(p.fires(FaultPoint::AllocDeny, 7));
+        assert!(!p.fires(FaultPoint::AllocDeny, 4));
+        // unlisted points never fire
+        assert!(!p.fires(FaultPoint::WaveStall, 3));
+        // rate 0.5 fires for roughly half the keys
+        let hits = (0..1000).filter(|&k| p.fires(FaultPoint::KernelPanic, k)).count();
+        assert!((350..650).contains(&hits), "rate 0.5 hit {hits}/1000");
+    }
+
+    #[test]
+    fn rate_zero_never_rate_one_always() {
+        let never = FaultPlan::parse("1:kernel_panic=0.0").unwrap();
+        let always = FaultPlan::parse("1:kernel_panic=1.0").unwrap();
+        for k in 0..256 {
+            assert!(!never.fires(FaultPoint::KernelPanic, k));
+            assert!(always.fires(FaultPoint::KernelPanic, k));
+        }
+    }
+
+    #[test]
+    fn decisions_depend_on_seed_not_call_order() {
+        let a = FaultPlan::parse("1:kernel_panic=0.3").unwrap();
+        let b = FaultPlan::parse("2:kernel_panic=0.3").unwrap();
+        let fwd: Vec<bool> = (0..512).map(|k| a.fires(FaultPoint::KernelPanic, k)).collect();
+        let rev: Vec<bool> =
+            (0..512).rev().map(|k| a.fires(FaultPoint::KernelPanic, k)).collect();
+        assert_eq!(fwd, rev.into_iter().rev().collect::<Vec<_>>());
+        let other: Vec<bool> = (0..512).map(|k| b.fires(FaultPoint::KernelPanic, k)).collect();
+        assert_ne!(fwd, other, "seed must matter");
+    }
+
+    #[test]
+    fn alloc_denials_are_bounded() {
+        let p = FaultPlan::parse("9:alloc_deny@5").unwrap();
+        for attempt in 0..MAX_DENY_ATTEMPTS {
+            assert!(p.fires_attempt(FaultPoint::AllocDeny, 5, attempt));
+        }
+        assert!(!p.fires_attempt(FaultPoint::AllocDeny, 5, MAX_DENY_ATTEMPTS));
+        assert!(!p.fires_attempt(FaultPoint::AllocDeny, 6, 0));
+    }
+
+    #[test]
+    fn bad_specs_are_loud() {
+        for bad in [
+            "no-seed-sep",
+            "x:kernel_panic=0.5",     // non-numeric seed
+            "1:kernel_panic=1.5",     // rate out of range
+            "1:kernel_panic=abc",     // non-numeric rate
+            "1:warp_drive=0.5",       // unknown point
+            "1:kernel_panic@x",       // non-numeric key
+            "1:kernel_panic",         // entry with no trigger
+            "1:",                     // armed but empty
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn maybe_panic_fires_only_for_cursed_keys() {
+        let p = FaultPlan::parse("3:kernel_panic@2").unwrap();
+        p.maybe_panic(FaultPoint::KernelPanic, 1, "launch"); // no-op
+        let err = std::panic::catch_unwind(|| {
+            p.maybe_panic(FaultPoint::KernelPanic, 2, "launch");
+        })
+        .unwrap_err();
+        let msg = err.downcast_ref::<String>().cloned().unwrap_or_default();
+        assert!(msg.contains("injected fault [kernel_panic]"), "{msg}");
+    }
+
+    #[test]
+    fn resolve_prefers_env_then_config() {
+        // the test environment does not set MOBA_FAULTS, so the config
+        // spec (or disabled) is the expected resolution
+        if std::env::var("MOBA_FAULTS").is_err() {
+            assert!(!FaultPlan::resolve(None).unwrap().is_enabled());
+            let p = FaultPlan::resolve(Some("4:wave_stall=1.0")).unwrap();
+            assert!(p.is_enabled());
+            assert!(FaultPlan::resolve(Some("garbage")).is_err());
+        } else {
+            // under a CI chaos leg the env plan must win and parse
+            assert!(FaultPlan::resolve(Some("4:wave_stall=1.0")).unwrap().is_enabled());
+        }
+    }
+}

@@ -11,9 +11,13 @@
 //!   backend (`MOBA_THREADS` workers, bit-identical to serial).
 //! * [`scratch`] — reusable buffer arena (one per `ExecCtx` worker
 //!   slot): the zero-allocation kernel runtime's freelists.
+//! * [`faults`] — seeded, thread-deterministic fault injection
+//!   ([`faults::FaultPlan`], armed via `MOBA_FAULTS=seed:spec`): the
+//!   chaos layer the serving stack's crash isolation is tested with.
 
 pub mod bench;
 pub mod cli;
+pub mod faults;
 pub mod json;
 pub mod pool;
 pub mod scratch;

@@ -309,10 +309,22 @@ impl ExecCtx {
     /// held by a *concurrent* call on the same context, a private
     /// throwaway arena is returned instead of blocking — correctness
     /// is unaffected, that call just pays its allocations.
+    ///
+    /// A slot poisoned by a panicking worker (a kernel that died while
+    /// holding the guard may have taken buffers it never gave back) is
+    /// **rebuilt fresh and unpoisoned**, not propagated: the next
+    /// caller gets an empty arena that re-warms, never a half-mutated
+    /// freelist or an eternally-poisoned lock.
     pub fn scratch(&self, slot: usize) -> ScratchHandle<'_> {
-        match self.scratch[slot % self.scratch.len()].try_lock() {
+        let m = &self.scratch[slot % self.scratch.len()];
+        match m.try_lock() {
             Ok(g) => ScratchHandle::Pooled(g),
-            Err(TryLockError::Poisoned(p)) => ScratchHandle::Pooled(p.into_inner()),
+            Err(TryLockError::Poisoned(p)) => {
+                let mut g = p.into_inner();
+                *g = Scratch::new();
+                m.clear_poison();
+                ScratchHandle::Pooled(g)
+            }
             Err(TryLockError::WouldBlock) => ScratchHandle::Local(Box::default()),
         }
     }
@@ -325,10 +337,20 @@ impl ExecCtx {
     /// every later call). Callers must not already hold this slot's
     /// handle on the same thread (the in-tree kernels never do — give
     /// sites run after every kernel handle is dropped).
+    ///
+    /// Poisoned slots are rebuilt fresh and unpoisoned, same as
+    /// [`ExecCtx::scratch`] — a give-back into an arena a panic left
+    /// inconsistent would preserve the corruption forever.
     pub fn scratch_wait(&self, slot: usize) -> MutexGuard<'_, Scratch> {
-        match self.scratch[slot % self.scratch.len()].lock() {
+        let m = &self.scratch[slot % self.scratch.len()];
+        match m.lock() {
             Ok(g) => g,
-            Err(p) => p.into_inner(),
+            Err(p) => {
+                let mut g = p.into_inner();
+                *g = Scratch::new();
+                m.clear_poison();
+                g
+            }
         }
     }
 }
@@ -537,5 +559,60 @@ mod tests {
         assert_eq!(again.len(), 16);
         assert_eq!(s.grown_bytes(), grown, "pooled buffer was lost");
         s.give_f32(again);
+    }
+
+    /// The crash-isolation contract for arenas: a panic while holding
+    /// a scratch guard poisons the slot's mutex, and the next caller
+    /// must get a fresh, working, *pooled* arena — not a propagated
+    /// poison, not a permanently-degraded Local fallback, and not the
+    /// half-mutated freelist the panicking kernel left behind (here: a
+    /// taken buffer that was never given back).
+    #[test]
+    fn poisoned_scratch_slot_is_rebuilt_fresh() {
+        let ctx = ExecCtx::with_threads(1);
+        let boom = catch_unwind(AssertUnwindSafe(|| {
+            let mut s = ctx.scratch_wait(0);
+            let _leaked = s.take_f32(64, 0.0); // never given back
+            panic!("kernel died mid-forward");
+        }));
+        assert!(boom.is_err());
+        // scratch(): pooled handle, rebuilt (no leaked growth visible)
+        {
+            let mut s = ctx.scratch(0);
+            assert!(s.is_pooled(), "poison degraded the slot to Local");
+            if let ScratchHandle::Pooled(g) = &s {
+                assert_eq!(g.grown_bytes(), 0, "arena was not rebuilt fresh");
+            }
+            let v = s.take_f32(8, 1.0);
+            assert_eq!(v.len(), 8);
+            s.give_f32(v);
+        }
+        // the slot is unpoisoned for every later acquisition, and the
+        // pool serves steady-state again (give-backs are retained)
+        let grown = {
+            let mut s = ctx.scratch_wait(0);
+            let v = s.take_f32(8, 2.0);
+            s.give_f32(v);
+            s.grown_bytes()
+        };
+        let mut s = ctx.scratch_wait(0);
+        let v = s.take_f32(8, 3.0);
+        assert_eq!(s.grown_bytes(), grown, "steady state lost after poison recovery");
+        s.give_f32(v);
+    }
+
+    /// Same recovery through `scratch_wait` when the *waiting* path
+    /// meets the poison first.
+    #[test]
+    fn poisoned_slot_recovery_via_scratch_wait() {
+        let ctx = ExecCtx::with_threads(2);
+        let _ = catch_unwind(AssertUnwindSafe(|| {
+            let _g = ctx.scratch_wait(1);
+            panic!("boom");
+        }));
+        let mut g = ctx.scratch_wait(1);
+        assert_eq!(g.grown_bytes(), 0);
+        let v = g.take_f32(4, 0.0);
+        g.give_f32(v);
     }
 }

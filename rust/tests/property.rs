@@ -585,6 +585,7 @@ fn prop_batcher_random_arrival_deadlines() {
                         v: vec![0.0; 4],
                         table_pages: 0,
                         kv_dtype: KvDtype::F32,
+                        deadline: None,
                     };
                     b.push(step, lane, 1, now).is_ok()
                 } else {
@@ -995,6 +996,56 @@ fn prop_decode_batch_bitwise_equals_sequential_loop() {
                     "seed={seed} session={i}"
                 );
             }
+        }
+    }
+}
+
+/// A `FaultPlan`'s predicates are pure functions of
+/// (seed, point, key, attempt): evaluating the whole truth table from
+/// concurrent threads, in any interleaving, reproduces the serial
+/// evaluation exactly. This is what makes injected chaos replayable —
+/// the same plan curses the same launches at any `MOBA_THREADS`.
+#[test]
+fn prop_fault_plan_is_deterministic_across_threads() {
+    use flash_moba::util::faults::{FaultPlan, FaultPoint};
+    use std::sync::Arc;
+
+    let mut rng = Rng::new(0xFA01);
+    for case in 0..CASES {
+        // a mixed plan: two rate triggers, one keyed, one unset —
+        // regenerated per case with a fresh seed and fresh keys
+        let seed = rng.next_u64();
+        let keys = (rng.next_u64() % 97, rng.next_u64() % 97);
+        let spec = format!(
+            "{seed}:kernel_panic=0.2,alloc_deny=0.5,wave_stall@{}|{}",
+            keys.0, keys.1
+        );
+        let plan = Arc::new(FaultPlan::parse(&spec).unwrap());
+        let table = |p: &FaultPlan| -> Vec<bool> {
+            let mut t = Vec::new();
+            for point in FaultPoint::ALL {
+                for key in 0..97u64 {
+                    t.push(p.fires(point, key));
+                    for attempt in 0..10 {
+                        t.push(p.fires_attempt(point, key, attempt));
+                    }
+                }
+            }
+            t
+        };
+        let serial = table(&plan);
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let plan = Arc::clone(&plan);
+                std::thread::spawn(move || table(&plan))
+            })
+            .collect();
+        for h in handles {
+            assert_eq!(
+                h.join().unwrap(),
+                serial,
+                "case {case}: fault predicates diverged across threads (spec {spec})"
+            );
         }
     }
 }
